@@ -1,0 +1,52 @@
+//! Quickstart: optimize a model for an edge device and compare the three
+//! deployment arms — the 60-second tour of the public API.
+//!
+//! ```bash
+//! cargo run --release --offline --example quickstart
+//! ```
+
+use xenos::graph::models;
+use xenos::hw::presets;
+use xenos::opt::{self, OptLevel};
+use xenos::sim::run_level;
+use xenos::util::human_time;
+
+fn main() {
+    // 1. Pick a model from the zoo and a device preset.
+    let model = models::mobilenet();
+    let device = presets::tms320c6678();
+    println!(
+        "model {}: {} nodes, {:.0} MMACs",
+        model.name,
+        model.len(),
+        model.total_macs() as f64 / 1e6
+    );
+
+    // 2. Run the automatic dataflow-centric optimization (paper §4.4).
+    let optimized = opt::auto(&model, &device);
+    println!(
+        "auto-optimized in {} — {} CBR fusions, {} operator links, peak {} DSP units",
+        human_time(optimized.elapsed.as_secs_f64()),
+        optimized.fused,
+        optimized.links.len(),
+        optimized.plan.peak_units()
+    );
+    for link in optimized.links.iter().take(5) {
+        println!("   link [{:<26}] {} -> {}", link.pattern, link.producer, link.consumer);
+    }
+
+    // 3. Simulate the three Fig.-7 arms.
+    println!("\ninference time on {} (simulated):", device.name);
+    for level in [OptLevel::Vanilla, OptLevel::HoOnly, OptLevel::Full] {
+        let (_, report) = run_level(&model, &device, level);
+        println!("   {:<14} {}", level.label(), human_time(report.total_s));
+    }
+
+    // 4. Numerical guarantee: the optimized graph computes the same thing.
+    let base = xenos::ops::Interpreter::new(&model).run_synthetic(42);
+    let opt_out = xenos::ops::Interpreter::new(&optimized.graph).run_synthetic(42);
+    let diff = base[0].max_abs_diff(&opt_out[0]);
+    println!("\nmax |vanilla - optimized| on random input: {diff:e} (must be 0)");
+    assert_eq!(diff, 0.0);
+    println!("quickstart OK");
+}

@@ -1,0 +1,92 @@
+//! End-to-end serving driver — the session's required E2E validation.
+//!
+//! Loads the **real AOT-compiled model** (`artifacts/linked.hlo.txt`, the
+//! Pallas linked-kernel variant lowered by `python/compile/aot.py`),
+//! then:
+//!
+//! 1. runs the paper's §2.1 three-stage pipeline (acquisition →
+//!    preprocess → inference) and reports the inference share;
+//! 2. serves a batched request workload through the coordinator
+//!    (router → dynamic batcher → PJRT workers) for BOTH model variants,
+//!    reporting latency percentiles and throughput;
+//! 3. cross-checks the two variants' outputs on the same inputs.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --offline --example serve_pipeline
+//! ```
+//!
+//! Results are recorded in EXPERIMENTS.md §End-to-end.
+
+use std::sync::Arc;
+
+use xenos::runtime::{Engine, PjrtRuntime};
+use xenos::serve::{self, Coordinator, PipelineConfig, ServeConfig};
+use xenos::util::human_time;
+
+fn main() -> anyhow::Result<()> {
+    let dir = std::path::PathBuf::from(
+        std::env::args().nth(1).unwrap_or_else(|| "artifacts".to_string()),
+    );
+
+    // --- stage report: the §2.1 pipeline -------------------------------
+    let rt = Arc::new(PjrtRuntime::load_dir(&dir)?);
+    println!("loaded artifacts: {:?}", rt.variants());
+    let engine = Engine::pjrt(rt.clone(), "linked")?;
+    let pipe = serve::run_pipeline(&engine, PipelineConfig { frames: 64, src_hw: 32, seed: 9 })?;
+    println!(
+        "pipeline over {} frames: acquire {} | preprocess {} | inference {} ({:.0}% of total)",
+        pipe.frames,
+        human_time(pipe.acquire_s),
+        human_time(pipe.preprocess_s),
+        human_time(pipe.inference_s),
+        pipe.inference_share() * 100.0
+    );
+
+    // --- cross-check: linked vs vanilla artifacts -----------------------
+    let shape = rt.artifact("linked").unwrap().inputs[0].clone();
+    let mut rng = xenos::util::rng::Rng::new(7);
+    let x = xenos::ops::Tensor::new(
+        xenos::graph::TensorDesc::plain(shape.clone()),
+        rng.vec_uniform(shape.numel()),
+    );
+    let a = rt.execute("vanilla", std::slice::from_ref(&x))?;
+    let b = rt.execute("linked", std::slice::from_ref(&x))?;
+    let diff = a[0].max_abs_diff(&b[0]);
+    println!("linked-vs-vanilla artifact max diff: {diff:.2e} (tolerance 1e-4)");
+    assert!(diff < 1e-4);
+    drop(engine);
+    drop(rt);
+
+    // --- batched serving workload for both variants ---------------------
+    for variant in ["vanilla", "linked"] {
+        let cfg = ServeConfig {
+            workers: 2,
+            batcher: serve::BatcherConfig {
+                max_batch: 8,
+                max_wait: std::time::Duration::from_millis(1),
+            },
+        };
+        let dir2 = dir.clone();
+        let report = Coordinator::new(cfg).run(
+            move |_w| {
+                let rt = Arc::new(PjrtRuntime::load_dir(&dir2)?);
+                Engine::pjrt(rt, variant)
+            },
+            // ~150 req/s open-loop arrivals: below the 2-worker capacity so
+            // latency reflects service time, not a saturated queue.
+            serve::coordinator::synthetic_requests(vec![shape.clone()], 256, 150.0, 11),
+        )?;
+        println!(
+            "[{variant:<7}] served {:>4} reqs, {:>8.1} req/s | latency p50 {} p90 {} p99 {} | exec p50 {} | mean batch {:.2}",
+            report.served,
+            report.throughput,
+            human_time(report.latency.p50),
+            human_time(report.latency.p90),
+            human_time(report.latency.p99),
+            human_time(report.exec.p50),
+            report.batch_size.mean
+        );
+    }
+    println!("serve_pipeline OK");
+    Ok(())
+}

@@ -1,0 +1,81 @@
+"""AOT lowering: JAX -> HLO **text** artifacts for the Rust runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProtos with 64-bit instruction ids that the xla_extension 0.5.1
+bundled with the ``xla`` crate rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/gen_hlo.py and README.md.
+
+Usage::
+
+    python -m compile.aot --outdir ../artifacts
+
+Writes one ``<variant>.hlo.txt`` per entry in ``model.VARIANTS`` plus a
+``manifest.txt`` describing each artifact's inputs (parsed by the Rust
+runtime)::
+
+    variant=linked inputs=1x16x16x32:f32 outputs=1x10:f32
+"""
+
+import argparse
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Convert a jax lowering to XLA HLO text via stablehlo."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def shape_tag(s) -> str:
+    """``1x16x16x32:f32`` style tag for the manifest."""
+    dims = "x".join(str(d) for d in s.shape)
+    return f"{dims}:{s.dtype}"
+
+
+def lower_variant(name: str):
+    """Lower one model variant; returns (hlo_text, manifest_line)."""
+    fn, specs = model.VARIANTS[name]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    outs = jax.eval_shape(fn, *specs)
+    ins = ",".join(shape_tag(s) for s in specs)
+    out_tags = ",".join(shape_tag(s) for s in outs)
+    manifest = f"variant={name} inputs={ins} outputs={out_tags}"
+    return text, manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--outdir", default="../artifacts")
+    ap.add_argument(
+        "--variants",
+        default=",".join(model.VARIANTS),
+        help="comma-separated subset of variants to lower",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.outdir, exist_ok=True)
+
+    manifest_lines = []
+    for name in args.variants.split(","):
+        text, manifest = lower_variant(name)
+        path = os.path.join(args.outdir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest_lines.append(manifest)
+        print(f"wrote {path} ({len(text)} chars)")
+    with open(os.path.join(args.outdir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"wrote {os.path.join(args.outdir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

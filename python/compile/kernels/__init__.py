@@ -1,0 +1,5 @@
+"""L1 Pallas kernels for the Xenos reproduction (build-time only)."""
+
+from .cbr import cbr
+from .cbra import cbra
+from .matmul_split import fc_split

@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: fused pointwise Conv + Bn + ReLU (the paper's ``x.cbr``).
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper splits
+operator parameters into each DSP unit's private L2 (§4.2.2, K-dim first).
+On TPU the analogue is the grid/BlockSpec schedule below: the kernel is
+gridded over **output-channel blocks**, so each grid step holds only a
+``[Cin, BLOCK_C]`` weight tile in VMEM — the private-memory residency the
+DOS split buys on the DSP — while the input tile streams once per step.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls, and interpret-mode lowers to plain HLO the Rust runtime can
+execute (see /opt/xla-example/README.md).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output channels per grid step — the VMEM-resident weight tile width.
+BLOCK_C = 32
+
+
+def _cbr_kernel(x_ref, w_ref, scale_ref, shift_ref, o_ref):
+    """One grid step: all pixels x one output-channel block."""
+    x = x_ref[...]  # [P, Cin] pixels-major (linked HWC order)
+    w = w_ref[...]  # [Cin, BLOCK_C]
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    y = y * scale_ref[...] + shift_ref[...]
+    o_ref[...] = jnp.maximum(y, 0.0).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def cbr(x, w, scale, shift):
+    """Fused pointwise Conv+Bn+ReLU.
+
+    Args:
+      x: ``[N, H, W, Cin]`` NHWC feature map.
+      w: ``[Cin, Cout]``; ``Cout`` must be a multiple of ``BLOCK_C`` or
+        smaller than it.
+      scale, shift: ``[Cout]`` folded Bn affine.
+
+    Returns:
+      ``[N, H, W, Cout]``.
+    """
+    n, h, wd, cin = x.shape
+    cout = w.shape[1]
+    block_c = min(BLOCK_C, cout)
+    assert cout % block_c == 0, f"Cout {cout} not a multiple of {block_c}"
+    pixels = n * h * wd
+
+    # Pixels-major view: the linked (HWC) read order — sequential streams.
+    x2 = x.reshape(pixels, cin)
+
+    out = pl.pallas_call(
+        _cbr_kernel,
+        grid=(cout // block_c,),
+        in_specs=[
+            # The whole pixel block is re-streamed per channel block...
+            pl.BlockSpec((pixels, cin), lambda j: (0, 0)),
+            # ...while only a BLOCK_C-wide weight tile is resident.
+            pl.BlockSpec((cin, block_c), lambda j: (0, j)),
+            pl.BlockSpec((block_c,), lambda j: (j,)),
+            pl.BlockSpec((block_c,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((pixels, block_c), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((pixels, cout), x.dtype),
+        interpret=True,
+    )(x2, w, scale, shift)
+    return out.reshape(n, h, wd, cout)

@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: linked CBR + AvgPool2x2 (the paper's ``x.cbra``).
+
+This is the **vertical optimization** (operator linking, paper §4.1)
+re-thought for the TPU memory system: instead of materializing the full
+conv output to HBM and re-reading it in pooling-window order (the
+layout-mismatched dataflow of Figure 2), the kernel computes the conv on a
+block of pooling windows and reduces each window *while it is still in
+VMEM*. The pre-pool feature map never exists in HBM — the strongest
+possible form of "the producer writes in the order the consumer reads".
+
+The grid is (window-row blocks × output-channel blocks): channel blocks
+keep the weight tile VMEM-resident (the DOS split, as in ``cbr.py``), and
+window-row blocks bound the activation tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output channels per grid step.
+BLOCK_C = 32
+# Pooling-window rows per grid step.
+BLOCK_WR = 4
+
+
+def _cbra_kernel(x_ref, w_ref, scale_ref, shift_ref, o_ref):
+    """One grid step: BLOCK_WR window-rows × one output-channel block.
+
+    ``x_ref`` arrives as ``[WR, 2, W, Cin]`` — window-row-major with the
+    2 in-window rows adjacent (the linked layout). The kernel convolves,
+    applies Bn+ReLU, and reduces each 2x2 window in-register.
+    """
+    x = x_ref[...]  # [WR, 2, W, Cin]
+    wr, two, wd, cin = x.shape
+    w = w_ref[...]  # [Cin, BC]
+    y = jnp.dot(x.reshape(wr * two * wd, cin), w,
+                preferred_element_type=jnp.float32)
+    y = y * scale_ref[...] + shift_ref[...]
+    y = jnp.maximum(y, 0.0)
+    # Reduce each 2x2 pooling window while resident.
+    y = y.reshape(wr, two, wd // 2, 2, -1)
+    o_ref[...] = y.mean(axis=(1, 3)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def cbra(x, w, scale, shift):
+    """Linked pointwise Conv+Bn+ReLU+AvgPool2x2.
+
+    Args:
+      x: ``[N, H, W, Cin]`` with even ``H``/``W``; ``N`` must be 1 (edge
+        inference batch, as in the paper's pipeline).
+      w: ``[Cin, Cout]``.
+      scale, shift: ``[Cout]``.
+
+    Returns:
+      ``[N, H/2, W/2, Cout]``.
+    """
+    n, h, wd, cin = x.shape
+    assert n == 1, "edge inference kernel: batch 1"
+    assert h % 2 == 0 and wd % 2 == 0
+    cout = w.shape[1]
+    block_c = min(BLOCK_C, cout)
+    assert cout % block_c == 0
+    wrows = h // 2
+    # Largest window-row block <= BLOCK_WR that tiles wrows exactly.
+    block_wr = max(d for d in range(1, min(BLOCK_WR, wrows) + 1) if wrows % d == 0)
+
+    # Window-row-major view: [wrows, 2, W, Cin] — in-window rows adjacent.
+    x4 = x.reshape(wrows, 2, wd, cin)
+
+    out = pl.pallas_call(
+        _cbra_kernel,
+        grid=(wrows // block_wr, cout // block_c),
+        in_specs=[
+            pl.BlockSpec((block_wr, 2, wd, cin), lambda i, j: (i, 0, 0, 0)),
+            pl.BlockSpec((cin, block_c), lambda i, j: (0, j)),
+            pl.BlockSpec((block_c,), lambda i, j: (j,)),
+            pl.BlockSpec((block_c,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec(
+            (block_wr, wd // 2, block_c), lambda i, j: (i, 0, j)
+        ),
+        out_shape=jax.ShapeDtypeStruct((wrows, wd // 2, cout), x.dtype),
+        interpret=True,
+    )(x4, w, scale, shift)
+    return out.reshape(1, wrows, wd // 2, cout)

@@ -1,0 +1,51 @@
+"""L1 Pallas kernel: K-split fully-connected layer (the paper's §4.2.2
+operator-parameter split, Equation 1).
+
+The weight matrix is split along the output dimension into chunks sized to
+stay VMEM-resident (the private-L2 analogue); the grid walks the chunks and
+each step computes ``y_i = W_i x + B_i``. The outputs are "automatically
+joined together afterwards, without performing any data layout
+transformation operators" — here literally, by the output BlockSpec.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Output features per grid step (one W_i/B_i chunk).
+BLOCK_N = 128
+
+
+def _fc_kernel(x_ref, w_ref, b_ref, o_ref):
+    x = x_ref[...]  # [M, K]
+    w = w_ref[...]  # [K, BLOCK_N]
+    o_ref[...] = (
+        jnp.dot(x, w, preferred_element_type=jnp.float32) + b_ref[...]
+    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def fc_split(x, w, b):
+    """K-split fully-connected: ``x [M,K] @ w [K,N] + b [N]``.
+
+    ``N`` must be a multiple of ``BLOCK_N`` or smaller than it.
+    """
+    m, k = x.shape
+    n = w.shape[1]
+    block_n = min(BLOCK_N, n)
+    assert n % block_n == 0, f"N {n} not a multiple of {block_n}"
+
+    return pl.pallas_call(
+        _fc_kernel,
+        grid=(n // block_n,),
+        in_specs=[
+            pl.BlockSpec((m, k), lambda j: (0, 0)),
+            pl.BlockSpec((k, block_n), lambda j: (0, j)),
+            pl.BlockSpec((block_n,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((m, block_n), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, w, b)

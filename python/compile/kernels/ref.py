@@ -1,0 +1,53 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every kernel in this package is validated against these references by
+``python/tests/test_kernel.py`` (exact shapes) and by hypothesis sweeps
+(randomized shapes/dtypes). The references are deliberately written with
+plain ``jnp`` ops so they lower to stock XLA HLO — they double as the
+*vanilla* (unlinked, materializing) variant of the model in ``model.py``.
+"""
+
+import jax.numpy as jnp
+
+
+def cbr_ref(x, w, scale, shift):
+    """Pointwise Conv + BatchNorm + ReLU reference.
+
+    Args:
+      x: ``[N, H, W, Cin]`` input feature map (NHWC).
+      w: ``[Cin, Cout]`` pointwise kernel.
+      scale: ``[Cout]`` folded Bn scale.
+      shift: ``[Cout]`` folded Bn shift.
+
+    Returns:
+      ``[N, H, W, Cout]``.
+    """
+    y = jnp.einsum("nhwc,cd->nhwd", x, w)
+    y = y * scale + shift
+    return jnp.maximum(y, 0.0)
+
+
+def avgpool2x2_ref(x):
+    """Non-overlapping 2x2 average pooling on NHWC."""
+    n, h, w, c = x.shape
+    assert h % 2 == 0 and w % 2 == 0, "avgpool2x2 needs even H/W"
+    x = x.reshape(n, h // 2, 2, w // 2, 2, c)
+    return x.mean(axis=(2, 4))
+
+
+def cbra_ref(x, w, scale, shift):
+    """Linked CBR + AvgPool2x2 reference: the *unlinked* dataflow, which
+    materializes the full pre-pool map before reducing it."""
+    return avgpool2x2_ref(cbr_ref(x, w, scale, shift))
+
+
+def fc_ref(x, w, b):
+    """Fully-connected reference: ``x [M, K] @ w [K, N] + b [N]``."""
+    return x @ w + b
+
+
+def softmax_ref(x):
+    """Numerically stable softmax over the last axis."""
+    m = jnp.max(x, axis=-1, keepdims=True)
+    e = jnp.exp(x - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)

@@ -1,0 +1,99 @@
+"""L2 JAX model: a MobileNet-head inference block in two dataflow variants.
+
+This is the compute the Rust serving engine executes through PJRT. It is
+the paper's Figure 5 example made concrete — ``CBR -> CBR(+AvgPool) ->
+FC -> softmax`` — built twice:
+
+* ``model_vanilla``: plain jnp ops, materializing every intermediate (the
+  unlinked dataflow a generic compiler emits).
+* ``model_linked``: the L1 Pallas kernels — fused CBR, *linked* CBRA (the
+  pre-pool map never reaches HBM) and the K-split FC.
+
+Both variants bake the same deterministically generated parameters as
+constants, so the Rust runtime can assert their outputs are identical and
+benchmark the dataflow difference with everything else equal.
+
+Shapes (edge-typical): input ``[1, 16, 16, 32]`` NHWC -> logits ``[1, 10]``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import cbr, cbra, fc_split
+from .kernels import ref
+
+# Model dimensions.
+IN_H = IN_W = 16
+IN_C = 32
+MID_C = 64
+OUT_C = 64
+FC_IN = (IN_H // 2) * (IN_W // 2) * OUT_C  # 4096
+CLASSES = 10
+
+INPUT_SHAPE = (1, IN_H, IN_W, IN_C)
+
+# Deterministic parameters (seeded; both variants share them).
+_PARAM_SEED = 20230
+
+
+def make_params():
+    """Generate the model's parameters deterministically."""
+    rng = np.random.RandomState(_PARAM_SEED)
+
+    def glorot(shape, fan_in):
+        return (rng.uniform(-1, 1, size=shape) / np.sqrt(fan_in)).astype(
+            np.float32
+        )
+
+    return {
+        "w1": glorot((IN_C, MID_C), IN_C),
+        "s1": rng.uniform(0.5, 1.5, MID_C).astype(np.float32),
+        "b1": rng.uniform(-0.1, 0.1, MID_C).astype(np.float32),
+        "w2": glorot((MID_C, OUT_C), MID_C),
+        "s2": rng.uniform(0.5, 1.5, OUT_C).astype(np.float32),
+        "b2": rng.uniform(-0.1, 0.1, OUT_C).astype(np.float32),
+        "wf": glorot((FC_IN, CLASSES), FC_IN),
+        "bf": rng.uniform(-0.05, 0.05, CLASSES).astype(np.float32),
+    }
+
+
+_P = {k: jnp.asarray(v) for k, v in make_params().items()}
+
+
+def model_vanilla(x):
+    """Unlinked dataflow: every op standalone, intermediates materialized."""
+    y = ref.cbr_ref(x, _P["w1"], _P["s1"], _P["b1"])
+    y = ref.cbr_ref(y, _P["w2"], _P["s2"], _P["b2"])
+    y = ref.avgpool2x2_ref(y)
+    y = y.reshape(1, FC_IN)
+    y = ref.fc_ref(y, _P["wf"], _P["bf"])
+    return (ref.softmax_ref(y),)
+
+
+def model_linked(x):
+    """Xenos dataflow: fused CBR, linked CBRA, K-split FC (L1 kernels)."""
+    y = cbr(x, _P["w1"], _P["s1"], _P["b1"])
+    y = cbra(y, _P["w2"], _P["s2"], _P["b2"])
+    y = y.reshape(1, FC_IN)
+    y = fc_split(y, _P["wf"], _P["bf"])
+    return (ref.softmax_ref(y),)
+
+
+def smoke_fn(x, y):
+    """Tiny matmul artifact used by the Rust runtime smoke tests (mirrors
+    /opt/xla-example: ``matmul(x, y) + 2`` over f32[2,2])."""
+    return (jnp.matmul(x, y) + 2.0,)
+
+
+VARIANTS = {
+    "vanilla": (model_vanilla, [jax.ShapeDtypeStruct(INPUT_SHAPE, jnp.float32)]),
+    "linked": (model_linked, [jax.ShapeDtypeStruct(INPUT_SHAPE, jnp.float32)]),
+    "smoke": (
+        smoke_fn,
+        [
+            jax.ShapeDtypeStruct((2, 2), jnp.float32),
+            jax.ShapeDtypeStruct((2, 2), jnp.float32),
+        ],
+    ),
+}

@@ -1,0 +1,128 @@
+"""L1 kernel correctness: Pallas kernels vs the pure-jnp oracle.
+
+The CORE correctness signal of the build-time layer — run by
+``make test`` before anything is lowered.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import cbr, cbra, fc_split
+from compile.kernels import ref
+
+
+def rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+@pytest.fixture
+def keys():
+    k = jax.random.PRNGKey(7)
+    return jax.random.split(k, 4)
+
+
+class TestCbr:
+    def test_matches_ref(self, keys):
+        x = rand(keys[0], (1, 8, 8, 16))
+        w = rand(keys[1], (16, 64), scale=0.25)
+        s = rand(keys[2], (64,), scale=0.1) + 1.0
+        b = rand(keys[3], (64,), scale=0.1)
+        np.testing.assert_allclose(
+            cbr(x, w, s, b), ref.cbr_ref(x, w, s, b), rtol=1e-5, atol=1e-5
+        )
+
+    def test_relu_clamps_negative(self, keys):
+        x = rand(keys[0], (1, 4, 4, 8))
+        w = rand(keys[1], (8, 32), scale=0.5)
+        s = jnp.ones(32)
+        b = jnp.full((32,), -100.0)  # force everything negative
+        out = cbr(x, w, s, b)
+        assert float(jnp.max(out)) == 0.0
+
+    def test_single_channel_block(self, keys):
+        # Cout smaller than BLOCK_C exercises the clamped block path.
+        x = rand(keys[0], (1, 4, 4, 8))
+        w = rand(keys[1], (8, 16), scale=0.5)
+        s = jnp.ones(16)
+        b = jnp.zeros(16)
+        np.testing.assert_allclose(
+            cbr(x, w, s, b), ref.cbr_ref(x, w, s, b), rtol=1e-5, atol=1e-5
+        )
+
+    def test_wide_channels(self, keys):
+        x = rand(keys[0], (1, 4, 4, 32))
+        w = rand(keys[1], (32, 128), scale=0.2)
+        s = jnp.ones(128) * 0.9
+        b = jnp.zeros(128)
+        np.testing.assert_allclose(
+            cbr(x, w, s, b), ref.cbr_ref(x, w, s, b), rtol=1e-5, atol=1e-5
+        )
+
+
+class TestCbra:
+    def test_matches_ref(self, keys):
+        x = rand(keys[0], (1, 8, 8, 16))
+        w = rand(keys[1], (16, 32), scale=0.25)
+        s = rand(keys[2], (32,), scale=0.1) + 1.0
+        b = rand(keys[3], (32,), scale=0.1)
+        np.testing.assert_allclose(
+            cbra(x, w, s, b), ref.cbra_ref(x, w, s, b), rtol=1e-5, atol=1e-5
+        )
+
+    def test_output_is_half_resolution(self, keys):
+        x = rand(keys[0], (1, 16, 16, 8))
+        w = rand(keys[1], (8, 32), scale=0.5)
+        out = cbra(x, w, jnp.ones(32), jnp.zeros(32))
+        assert out.shape == (1, 8, 8, 32)
+
+    def test_constant_input_pools_to_same(self, keys):
+        # A constant map stays constant through 1x1 conv + avg pool.
+        x = jnp.ones((1, 8, 8, 4))
+        w = rand(keys[1], (4, 32), scale=0.5)
+        out = cbra(x, w, jnp.ones(32), jnp.zeros(32))
+        expect = ref.cbr_ref(x, w, jnp.ones(32), jnp.zeros(32))[0, 0, 0]
+        np.testing.assert_allclose(out[0, 2, 3], expect, rtol=1e-5, atol=1e-6)
+
+    def test_linked_equals_unlinked_dataflow(self, keys):
+        # The reproduction's core semantic claim, at the kernel level:
+        # the linked dataflow computes exactly the unlinked result.
+        x = rand(keys[0], (1, 12, 12, 24))
+        w = rand(keys[1], (24, 32), scale=0.3)
+        s = rand(keys[2], (32,), scale=0.05) + 1.0
+        b = rand(keys[3], (32,), scale=0.05)
+        linked = cbra(x, w, s, b)
+        unlinked = ref.avgpool2x2_ref(ref.cbr_ref(x, w, s, b))
+        np.testing.assert_allclose(linked, unlinked, rtol=1e-5, atol=1e-5)
+
+
+class TestFcSplit:
+    def test_matches_ref(self, keys):
+        x = rand(keys[0], (4, 64))
+        w = rand(keys[1], (64, 256), scale=0.2)
+        b = rand(keys[2], (256,), scale=0.1)
+        np.testing.assert_allclose(
+            fc_split(x, w, b), ref.fc_ref(x, w, b), rtol=1e-5, atol=1e-5
+        )
+
+    def test_split_chunks_join_seamlessly(self, keys):
+        # Paper Eq. 1: y1/y2 computed on separate chunks join with no
+        # transformation. Compare against an explicit two-chunk compute.
+        x = rand(keys[0], (1, 32))
+        w = rand(keys[1], (32, 256), scale=0.2)
+        b = rand(keys[2], (256,), scale=0.1)
+        y = fc_split(x, w, b)
+        y1 = ref.fc_ref(x, w[:, :128], b[:128])
+        y2 = ref.fc_ref(x, w[:, 128:], b[128:])
+        np.testing.assert_allclose(
+            y, jnp.concatenate([y1, y2], axis=1), rtol=1e-5, atol=1e-5
+        )
+
+    def test_small_n(self, keys):
+        x = rand(keys[0], (2, 16))
+        w = rand(keys[1], (16, 10), scale=0.3)
+        b = jnp.zeros(10)
+        np.testing.assert_allclose(
+            fc_split(x, w, b), ref.fc_ref(x, w, b), rtol=1e-5, atol=1e-5
+        )

@@ -1,0 +1,88 @@
+"""Hypothesis sweeps over the Pallas kernels' shapes and dtypes.
+
+Randomized shape/dtype coverage against the pure-jnp oracle, per the
+session's L1 testing requirement.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import cbr, cbra, fc_split
+from compile.kernels import ref
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+dtypes = st.sampled_from([jnp.float32, jnp.bfloat16])
+
+
+def tol_for(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=1e-4, atol=1e-4
+    )
+
+
+def make(key, shape, dtype):
+    return (jax.random.normal(key, shape) * 0.3).astype(dtype)
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.integers(2, 10).map(lambda v: 2 * v),
+    w=st.integers(2, 10).map(lambda v: 2 * v),
+    cin=st.sampled_from([4, 8, 16, 48]),
+    cout_blocks=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+    dtype=dtypes,
+)
+def test_cbr_shapes(h, w, cin, cout_blocks, seed, dtype):
+    cout = 32 * cout_blocks
+    k = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = make(k[0], (1, h, w, cin), dtype)
+    wt = make(k[1], (cin, cout), dtype)
+    s = (jax.random.uniform(k[2], (cout,)) + 0.5).astype(dtype)
+    b = make(k[3], (cout,), dtype)
+    got = np.asarray(cbr(x, wt, s, b), dtype=np.float32)
+    want = np.asarray(ref.cbr_ref(x, wt, s, b), dtype=np.float32)
+    np.testing.assert_allclose(got, want, **tol_for(dtype))
+
+
+@settings(**SETTINGS)
+@given(
+    h=st.integers(1, 8).map(lambda v: 2 * v),
+    w=st.integers(1, 8).map(lambda v: 2 * v),
+    cin=st.sampled_from([4, 16, 32]),
+    cout_blocks=st.integers(1, 3),
+    seed=st.integers(0, 2**31 - 1),
+    dtype=dtypes,
+)
+def test_cbra_shapes(h, w, cin, cout_blocks, seed, dtype):
+    cout = 32 * cout_blocks
+    k = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = make(k[0], (1, h, w, cin), dtype)
+    wt = make(k[1], (cin, cout), dtype)
+    s = (jax.random.uniform(k[2], (cout,)) + 0.5).astype(dtype)
+    b = make(k[3], (cout,), dtype)
+    got = np.asarray(cbra(x, wt, s, b), dtype=np.float32)
+    want = np.asarray(ref.cbra_ref(x, wt, s, b), dtype=np.float32)
+    np.testing.assert_allclose(got, want, **tol_for(dtype))
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.integers(1, 8),
+    kdim=st.sampled_from([8, 32, 64, 200]),
+    n_blocks=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+    dtype=dtypes,
+)
+def test_fc_split_shapes(m, kdim, n_blocks, seed, dtype):
+    n = 128 * n_blocks
+    k = jax.random.split(jax.random.PRNGKey(seed), 3)
+    x = make(k[0], (m, kdim), dtype)
+    wt = make(k[1], (kdim, n), dtype)
+    b = make(k[2], (n,), dtype)
+    got = np.asarray(fc_split(x, wt, b), dtype=np.float32)
+    want = np.asarray(ref.fc_ref(x, wt, b), dtype=np.float32)
+    np.testing.assert_allclose(got, want, **tol_for(dtype))

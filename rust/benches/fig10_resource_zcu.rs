@@ -1,0 +1,18 @@
+//! Bench target for paper Figure 10: ZCU102 FPGA resource cost
+//! (DSP/LUT/FF) for MobileNet and SqueezeNet across the ablation arms.
+
+use xenos::graph::models;
+use xenos::hw::presets;
+use xenos::opt::OptLevel;
+use xenos::sim::run_level;
+use xenos::util::bench::bench;
+
+fn main() {
+    xenos::exp::run("fig10").expect("registered").print();
+
+    let d = presets::zcu102();
+    let g = models::squeezenet();
+    bench("simulate squeezenet on zcu102 (full)", 2, 20, || {
+        run_level(&g, &d, OptLevel::Full).1.fpga.dsp
+    });
+}

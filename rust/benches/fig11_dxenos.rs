@@ -1,0 +1,25 @@
+//! Bench target for paper Figure 11: d-Xenos distributed inference — the
+//! scheme×sync table plus the cost of Algorithm 1's profiling enumeration
+//! and of the real ring all-reduce collective.
+
+use xenos::dist::{enumerate_schemes, ring, SyncMode};
+use xenos::graph::models;
+use xenos::hw::presets;
+use xenos::util::bench::bench;
+use xenos::util::rng::Rng;
+
+fn main() {
+    xenos::exp::run("fig11").expect("registered").print();
+
+    let d = presets::tms320c6678();
+    let g = models::resnet101();
+    bench("algorithm-1 scheme enumeration (resnet101, p=4)", 1, 10, || {
+        enumerate_schemes(&g, &d, 4, SyncMode::Ring).0
+    });
+
+    let mut rng = Rng::new(1);
+    let inputs: Vec<Vec<f32>> = (0..4).map(|_| rng.vec_uniform(1 << 18)).collect();
+    bench("ring all-reduce 4x1M floats (real exchange)", 1, 10, || {
+        ring::ring_allreduce_exec(inputs.clone()).len()
+    });
+}

@@ -1,0 +1,28 @@
+//! Bench target for paper Figure 7 (a) and (b): regenerates both inference-
+//! time ablation tables and times the simulation path itself.
+//!
+//! ```bash
+//! cargo bench --offline --bench fig7_inference_time
+//! ```
+
+use xenos::graph::models;
+use xenos::hw::presets;
+use xenos::opt::OptLevel;
+use xenos::sim::run_level;
+use xenos::util::bench::bench;
+
+fn main() {
+    xenos::exp::run("fig7a").expect("registered").print();
+    xenos::exp::run("fig7b").expect("registered").print();
+
+    // Perf tracking: full optimize+simulate loop per device.
+    let g = models::mobilenet();
+    for d in [presets::tms320c6678(), presets::zcu102()] {
+        bench(
+            &format!("optimize+simulate mobilenet on {}", d.name),
+            2,
+            20,
+            || run_level(&g, &d, OptLevel::Full).1.total_s,
+        );
+    }
+}

@@ -1,0 +1,20 @@
+//! Bench target for paper Figure 8: Xenos vs TVM vs PyTorch-GPU, plus the
+//! wall-clock cost of the TVM-like enumeration itself.
+
+use xenos::baselines::tvm_like;
+use xenos::graph::models;
+use xenos::hw::presets;
+use xenos::util::bench::bench;
+
+fn main() {
+    xenos::exp::run("fig8").expect("registered").print();
+
+    let d = presets::zcu102();
+    let g = models::resnet18();
+    bench("tvm-like enumeration+autotune resnet18", 1, 10, || {
+        tvm_like(&g, &d).candidates_evaluated
+    });
+    bench("xenos auto-optimize resnet18", 1, 10, || {
+        xenos::opt::auto(&g, &d).fused
+    });
+}

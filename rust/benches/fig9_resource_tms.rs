@@ -1,0 +1,17 @@
+//! Bench target for paper Figure 9: MobileNet memory-resource traces on
+//! the TMS320C6678 (Vanilla vs Xenos) and the trace-generation cost.
+
+use xenos::graph::models;
+use xenos::hw::presets;
+use xenos::opt::OptLevel;
+use xenos::sim::{run_level, trace};
+use xenos::util::bench::bench;
+
+fn main() {
+    xenos::exp::run("fig9").expect("registered").print();
+
+    let g = models::mobilenet();
+    let d = presets::tms320c6678();
+    let (_, report) = run_level(&g, &d, OptLevel::Vanilla);
+    bench("resample 16-bin trace", 5, 100, || trace::resample(&report.trace, 16).len());
+}

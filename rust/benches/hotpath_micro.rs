@@ -1,0 +1,129 @@
+//! Hot-path microbenchmarks for the performance pass (EXPERIMENTS.md §Perf):
+//! the L3 paths that dominate end-to-end runs — the numeric operator
+//! library (serving fallback), the cache simulator, the cost model, the
+//! optimizer passes, and the serving batcher loop.
+
+use std::sync::Arc;
+
+use xenos::graph::{models, ConvAttrs, DataLayout, GraphBuilder, Shape};
+use xenos::hw::presets;
+use xenos::ops::{conv, matmul, Interpreter, Tensor};
+use xenos::opt;
+use xenos::serve::{Batcher, BatcherConfig, Coordinator, ServeConfig};
+use xenos::sim::cache::{pointwise_consumer_trace, CacheSim};
+use xenos::sim::cost::node_cost;
+use xenos::util::bench::bench;
+use xenos::util::rng::Rng;
+
+fn main() {
+    let mut rng = Rng::new(77);
+
+    // --- ops: conv kernels (interpreter hot loop) -----------------------
+    let x = Tensor::fm(1, 64, 56, 56, rng.vec_uniform(64 * 56 * 56));
+    let a3 = ConvAttrs::std(64, 64, 3, 1, 1);
+    let w3 = rng.vec_uniform(a3.weight_count() as usize);
+    bench("ops::conv2d 3x3 64->64 @56", 1, 8, || conv::conv2d(&x, &a3, &w3, &[]).data.len());
+
+    let a1 = ConvAttrs::std(64, 128, 1, 1, 0);
+    let w1 = rng.vec_uniform(a1.weight_count() as usize);
+    bench("ops::conv2d 1x1 64->128 @56", 1, 8, || conv::conv2d(&x, &a1, &w1, &[]).data.len());
+
+    let adw = ConvAttrs::depthwise(64, 3, 1, 1);
+    let wdw = rng.vec_uniform(adw.weight_count() as usize);
+    bench("ops::conv2d dw3x3 64 @56", 2, 10, || conv::conv2d(&x, &adw, &wdw, &[]).data.len());
+
+    // --- ops: matmul ----------------------------------------------------
+    let ma = Tensor::mat(128, 512, rng.vec_uniform(128 * 512));
+    let mb = Tensor::mat(512, 512, rng.vec_uniform(512 * 512));
+    bench("ops::matmul 128x512x512", 2, 20, || matmul::matmul(&ma, &mb).data.len());
+
+    // --- full interpreter on the AOT-equivalent block --------------------
+    let small = {
+        let mut b = GraphBuilder::new("block");
+        let x = b.input("x", Shape::nchw(1, 32, 16, 16));
+        let c1 = b.conv_bn_relu("c1", x, 64, 1, 1, 0);
+        let c2 = b.conv_bn_relu("c2", c1, 64, 1, 1, 0);
+        let p = b.avgpool("p", c2, 2, 2);
+        let f = b.fc("fc", p, 10);
+        let s = b.softmax("sm", f);
+        b.output(s);
+        b.finish()
+    };
+    let interp = Interpreter::new(&small);
+    let inputs = xenos::ops::interp::synthetic_inputs(&small, 3);
+    bench("interp: serve-block forward", 2, 50, || interp.run(&inputs).len());
+
+    // --- cache simulator --------------------------------------------------
+    let trace = pointwise_consumer_trace(DataLayout::Chw, 64, 112, 112);
+    bench("cache-sim 800K strided accesses", 1, 10, || {
+        let mut c = CacheSim::new(32 * 1024, 64, 4);
+        c.run(trace.iter().copied());
+        c.misses
+    });
+
+    // --- optimizer + cost model -------------------------------------------
+    let g = models::resnet101();
+    let d = presets::tms320c6678();
+    bench("opt::auto resnet101 (418 nodes)", 1, 10, || opt::auto(&g, &d).fused);
+    let o = opt::auto(&g, &d);
+    bench("cost-model full resnet101 sweep", 2, 50, || {
+        o.graph
+            .nodes
+            .iter()
+            .map(|n| node_cost(&o.graph, n, o.plan.node(n.id), &d).total_s)
+            .sum::<f64>()
+    });
+
+    // --- serving: batcher + coordinator round trip -------------------------
+    let serve_graph = Arc::new({
+        let mut b = GraphBuilder::new("tiny");
+        let x = b.input("x", Shape::nchw(1, 4, 8, 8));
+        let r = b.relu("r", x);
+        b.output(r);
+        b.finish()
+    });
+    bench("coordinator: 128 requests through 2 workers", 1, 10, || {
+        let sg = serve_graph.clone();
+        Coordinator::new(ServeConfig {
+            workers: 2,
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: std::time::Duration::from_micros(200),
+            },
+        })
+        .run(
+            move |_| Ok(xenos::runtime::Engine::interp(sg.clone())),
+            xenos::serve::coordinator::synthetic_requests(
+                vec![Shape::nchw(1, 4, 8, 8)],
+                128,
+                0.0,
+                5,
+            ),
+        )
+        .map(|r| r.served)
+        .expect("serve")
+    });
+
+    // --- batcher in isolation ----------------------------------------------
+    bench("batcher: form 64 batches of 8", 2, 20, || {
+        let (tx, rx) = std::sync::mpsc::channel();
+        for id in 0..512u64 {
+            tx.send(xenos::serve::Request {
+                id,
+                inputs: vec![],
+                submitted: std::time::Instant::now(),
+            })
+            .expect("send");
+        }
+        drop(tx);
+        let b = Batcher::new(BatcherConfig {
+            max_batch: 8,
+            max_wait: std::time::Duration::from_micros(100),
+        });
+        let mut n = 0;
+        while let Some(batch) = b.next_batch(&rx) {
+            n += batch.len();
+        }
+        n
+    });
+}

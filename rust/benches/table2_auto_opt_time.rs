@@ -1,0 +1,16 @@
+//! Bench target for paper Table 2: the wall-clock cost of the automatic
+//! optimization across all seven benchmarks, per-model.
+
+use xenos::graph::models;
+use xenos::hw::presets;
+use xenos::util::bench::bench;
+
+fn main() {
+    xenos::exp::run("table2").expect("registered").print();
+
+    let d = presets::tms320c6678();
+    for name in models::PAPER_BENCHMARKS {
+        let g = models::by_name(name).expect("zoo model");
+        bench(&format!("auto-optimize {name}"), 2, 15, || xenos::opt::auto(&g, &d).fused);
+    }
+}

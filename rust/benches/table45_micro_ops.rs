@@ -1,0 +1,19 @@
+//! Bench target for paper Tables 4/5: operator micro-benchmarks (linking
+//! via the trace-driven cache simulator, split via the cost model), plus
+//! the cache simulator's own throughput.
+
+use xenos::graph::DataLayout;
+use xenos::sim::cache::{pool_consumer_trace, CacheSim};
+use xenos::util::bench::bench;
+
+fn main() {
+    xenos::exp::run("table45").expect("registered").print();
+
+    let trace = pool_consumer_trace(DataLayout::Chw, 64, 112, 112, 2);
+    println!("cache-sim trace: {} accesses", trace.len());
+    bench("cache-sim replay 800K accesses", 1, 10, || {
+        let mut c = CacheSim::new(32 * 1024, 64, 4);
+        c.run(trace.iter().copied());
+        c.misses
+    });
+}

@@ -1,0 +1,10 @@
+//! Comparison baselines (paper §7.1): the TVM-like operator-centric
+//! compiler and the PyTorch-GPU roofline point used in Fig. 8. (The
+//! Vanilla and HO-only ablation arms live in `opt` as [`crate::opt::OptLevel`]
+//! variants since they share Xenos' own machinery.)
+
+pub mod gpu;
+pub mod tvm_like;
+
+pub use gpu::gpu_inference_time;
+pub use tvm_like::{tvm_inference_time, tvm_like, TvmLikeResult};

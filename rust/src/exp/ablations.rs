@@ -1,0 +1,182 @@
+//! Design-choice ablations (beyond the paper's own figures).
+//!
+//! 1. **DOS dimension priority** — the paper asserts `outC`-first is right
+//!    on a shared-memory device (§4.2.1). We ablate: outC-first (Xenos) vs
+//!    inH-first vs outC-only, on both devices.
+//! 2. **Dynamic-batching policy** — serving throughput vs `max_batch`,
+//!    justifying the coordinator's default.
+
+use super::ExpResult;
+use crate::graph::models;
+use crate::hw::{presets, DeviceModel};
+use crate::opt::plan::{ExecutionPlan, OptLevel, PartitionDim};
+use crate::opt::{dos, fusion, linking};
+use crate::sim::Simulator;
+use crate::util::table::Table;
+
+/// Alternative DOS: inH-first priority (halo-paying), falling back to outC.
+fn plan_inh_first(g: &crate::graph::Graph, device: &DeviceModel) -> ExecutionPlan {
+    let nodes = g
+        .nodes
+        .iter()
+        .map(|n| {
+            let mut p = dos::plan_node_dos(g, n, device, true);
+            if let Some(a) = n.op.conv_attrs().copied() {
+                let oh = n.out.shape.h().max(1);
+                let ways_h = device.dsp_units.min(oh).max(1);
+                let rem = device.dsp_units / ways_h;
+                let ways_c = rem.min(a.out_c).max(1);
+                p.units = ways_h * ways_c;
+                p.partition = vec![(PartitionDim::InH, ways_h), (PartitionDim::OutC, ways_c)];
+                // Every row cut replicates (k-1) input rows.
+                if a.kh > 1 {
+                    let row = (n.out.shape.w() * a.stride * a.in_c * 4) as u64;
+                    p.halo_bytes += (ways_h as u64 - 1) * (a.kh as u64 - 1) * row;
+                }
+                // Kernels no longer distribute cleanly into private L2:
+                // each unit needs the full kernel set of its channel share.
+                let per_unit = n.op.param_count() * 4 / ways_c.max(1) as u64;
+                p.params_fit_l2 = per_unit <= device.l2.capacity / 2;
+            }
+            p
+        })
+        .collect();
+    ExecutionPlan { level: OptLevel::Full, device: device.name.clone(), nodes }
+}
+
+/// Alternative DOS: outC only, never spilling to spatial dims.
+fn plan_outc_only(g: &crate::graph::Graph, device: &DeviceModel) -> ExecutionPlan {
+    let nodes = g
+        .nodes
+        .iter()
+        .map(|n| {
+            let mut p = dos::plan_node_dos(g, n, device, true);
+            if let Some(a) = n.op.conv_attrs() {
+                let ways_c = device.dsp_units.min(a.out_c).max(1);
+                p.units = ways_c;
+                p.partition = vec![(PartitionDim::OutC, ways_c)];
+                p.halo_bytes = 0;
+                p.balance = 1.0f64.min(a.out_c as f64 / ways_c as f64);
+            }
+            p
+        })
+        .collect();
+    ExecutionPlan { level: OptLevel::Full, device: device.name.clone(), nodes }
+}
+
+/// DOS-priority ablation rows: (device, xenos_ms, inh_first_ms, outc_only_ms).
+pub fn dos_priority_rows() -> Vec<(String, f64, f64, f64)> {
+    let g = models::mobilenet();
+    let (fused, _) = fusion::fuse_cbr(&g);
+    let linked = linking::link(&fused).graph;
+    [presets::tms320c6678(), presets::zcu102()]
+        .into_iter()
+        .map(|d| {
+            let sim = Simulator::new(d.clone());
+            let xenos = dos::plan_graph(&linked, &d, OptLevel::Full);
+            let t_x = sim.simulate(&linked, &xenos).total_s;
+            let t_h = sim.simulate(&linked, &plan_inh_first(&linked, &d)).total_s;
+            let t_c = sim.simulate(&linked, &plan_outc_only(&linked, &d)).total_s;
+            (d.name.clone(), t_x * 1e3, t_h * 1e3, t_c * 1e3)
+        })
+        .collect()
+}
+
+/// Serving-throughput vs `max_batch` ablation (interp engine).
+pub fn batch_sweep_rows() -> Vec<(usize, f64, f64)> {
+    use crate::runtime::Engine;
+    use crate::serve::{BatcherConfig, Coordinator, ServeConfig};
+    use std::sync::Arc;
+
+    let graph = Arc::new({
+        let mut b = crate::graph::GraphBuilder::new("ablate_serve");
+        let x = b.input("x", crate::graph::Shape::nchw(1, 8, 16, 16));
+        let c = b.conv_bn_relu("c", x, 16, 3, 1, 1);
+        let gp = b.global_pool("gp", c);
+        let f = b.fc("fc", gp, 10);
+        b.output(f);
+        b.finish()
+    });
+    [1usize, 4, 8, 16]
+        .into_iter()
+        .map(|max_batch| {
+            let g = graph.clone();
+            let report = Coordinator::new(ServeConfig {
+                workers: 2,
+                batcher: BatcherConfig {
+                    max_batch,
+                    max_wait: std::time::Duration::from_micros(300),
+                },
+            })
+            .run(
+                move |_| Ok(Engine::interp(g.clone())),
+                crate::serve::coordinator::synthetic_requests(
+                    vec![crate::graph::Shape::nchw(1, 8, 16, 16)],
+                    128,
+                    0.0,
+                    9,
+                ),
+            )
+            .expect("serve");
+            (max_batch, report.throughput, report.latency.p99 * 1e3)
+        })
+        .collect()
+}
+
+/// Run both ablations.
+pub fn run() -> ExpResult {
+    let mut dos_t = Table::new(vec!["device", "Xenos outC-first (ms)", "inH-first (ms)", "outC-only (ms)"]);
+    for (dev, x, h, c) in dos_priority_rows() {
+        dos_t.row(vec![
+            dev,
+            format!("{x:.2}"),
+            format!("{h:.2}"),
+            format!("{c:.2}"),
+        ]);
+    }
+    let mut batch_t = Table::new(vec!["max_batch", "throughput (req/s)", "p99 (ms)"]);
+    for (b, tput, p99) in batch_sweep_rows() {
+        batch_t.row(vec![b.to_string(), format!("{tput:.0}"), format!("{p99:.2}")]);
+    }
+    ExpResult {
+        id: "ablations".to_string(),
+        title: "design-choice ablations (DOS priority, batching policy)".to_string(),
+        tables: vec![
+            ("DOS partition-dimension priority (MobileNet)".to_string(), dos_t),
+            ("dynamic batching sweep".to_string(), batch_t),
+        ],
+        takeaways: vec![
+            "outC-first wins on both devices: inH-first pays halo replication + breaks L2 kernel residency; outC-only strands units on narrow layers (ZCU102)".to_string(),
+            "batching beyond the worker count mainly trades tail latency for scheduler amortization at this model size".to_string(),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn xenos_priority_is_never_worse() {
+        for (dev, x, h, c) in dos_priority_rows() {
+            assert!(x <= h * 1.02, "{dev}: outC-first {x} vs inH-first {h}");
+            assert!(x <= c * 1.02, "{dev}: outC-first {x} vs outC-only {c}");
+        }
+    }
+
+    #[test]
+    fn outc_only_hurts_on_wide_fpga() {
+        // With 2048 units and layers below 2048 channels, refusing the
+        // spatial spill must cost time on the ZCU102.
+        let rows = dos_priority_rows();
+        let zcu = rows.iter().find(|r| r.0 == "zcu102").unwrap();
+        assert!(zcu.3 > zcu.1 * 1.1, "outC-only {} vs xenos {}", zcu.3, zcu.1);
+    }
+
+    #[test]
+    fn batch_sweep_serves_everything() {
+        for (b, tput, p99) in batch_sweep_rows() {
+            assert!(tput > 0.0 && p99 > 0.0, "batch {b}");
+        }
+    }
+}

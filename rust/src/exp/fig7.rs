@@ -1,0 +1,133 @@
+//! Figure 7 — inference-time ablation: Vanilla vs HO vs full Xenos on the
+//! two testbeds, across the seven benchmark models.
+
+use super::ExpResult;
+use crate::graph::models;
+use crate::hw::{presets, DeviceModel};
+use crate::opt::OptLevel;
+use crate::sim::run_level;
+use crate::util::table::Table;
+
+/// Per-model ablation row.
+pub struct Fig7Row {
+    /// Model name.
+    pub model: String,
+    /// Vanilla time, seconds.
+    pub vanilla_s: f64,
+    /// HO-only time, seconds.
+    pub ho_s: f64,
+    /// Full Xenos time, seconds.
+    pub full_s: f64,
+}
+
+impl Fig7Row {
+    /// HO's reduction vs Vanilla (paper's first delta).
+    pub fn ho_cut(&self) -> f64 {
+        1.0 - self.ho_s / self.vanilla_s
+    }
+
+    /// VO's further reduction vs HO (paper's second delta).
+    pub fn vo_cut(&self) -> f64 {
+        1.0 - self.full_s / self.ho_s
+    }
+}
+
+/// Compute the ablation for one device across all benchmarks.
+pub fn rows(device: &DeviceModel) -> Vec<Fig7Row> {
+    models::PAPER_BENCHMARKS
+        .iter()
+        .map(|name| {
+            let g = models::by_name(name).expect("zoo model");
+            let (_, v) = run_level(&g, device, OptLevel::Vanilla);
+            let (_, h) = run_level(&g, device, OptLevel::HoOnly);
+            let (_, f) = run_level(&g, device, OptLevel::Full);
+            Fig7Row {
+                model: name.to_string(),
+                vanilla_s: v.total_s,
+                ho_s: h.total_s,
+                full_s: f.total_s,
+            }
+        })
+        .collect()
+}
+
+fn render(device: &DeviceModel, fig_id: &str, paper_ho: &str, paper_vo: &str) -> ExpResult {
+    let rows = rows(device);
+    let mut t = Table::new(vec![
+        "model",
+        "Vanilla (ms)",
+        "HO (ms)",
+        "Xenos HO+VO (ms)",
+        "HO cut %",
+        "VO cut %",
+    ]);
+    for r in &rows {
+        t.row(vec![
+            r.model.clone(),
+            format!("{:.2}", r.vanilla_s * 1e3),
+            format!("{:.2}", r.ho_s * 1e3),
+            format!("{:.2}", r.full_s * 1e3),
+            format!("{:.1}", r.ho_cut() * 100.0),
+            format!("{:.1}", r.vo_cut() * 100.0),
+        ]);
+    }
+    let ho_min = rows.iter().map(Fig7Row::ho_cut).fold(f64::INFINITY, f64::min);
+    let ho_max = rows.iter().map(Fig7Row::ho_cut).fold(0.0, f64::max);
+    let vo_min = rows.iter().map(Fig7Row::vo_cut).fold(f64::INFINITY, f64::min);
+    let vo_max = rows.iter().map(Fig7Row::vo_cut).fold(0.0, f64::max);
+    ExpResult {
+        id: fig_id.to_string(),
+        title: format!("inference time comparison on {}", device.name),
+        tables: vec![("Vanilla / HO / HO+VO".to_string(), t)],
+        takeaways: vec![
+            format!(
+                "measured HO cut {:.1}%-{:.1}% (paper: {paper_ho})",
+                ho_min * 100.0,
+                ho_max * 100.0
+            ),
+            format!(
+                "measured further VO cut {:.1}%-{:.1}% (paper: {paper_vo})",
+                vo_min * 100.0,
+                vo_max * 100.0
+            ),
+        ],
+    }
+}
+
+/// Fig. 7(a): TMS320C6678.
+pub fn run_tms() -> ExpResult {
+    render(&presets::tms320c6678(), "fig7a", "17.9%-43.9%", "30.3%-84.9%")
+}
+
+/// Fig. 7(b): ZCU102.
+pub fn run_zcu() -> ExpResult {
+    render(&presets::zcu102(), "fig7b", "80.4%-96.2%", "21.2%-83.3%")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig7a_orderings_hold_for_every_model() {
+        for r in rows(&presets::tms320c6678()) {
+            assert!(r.vanilla_s > r.ho_s * 0.999, "{}: vanilla >= ho", r.model);
+            assert!(r.ho_s >= r.full_s, "{}: ho >= full", r.model);
+        }
+    }
+
+    #[test]
+    fn fig7b_ho_cut_is_large_on_fpga() {
+        let rows = rows(&presets::zcu102());
+        // CNN benchmarks must show the dramatic HO gains of Fig 7(b).
+        for r in rows.iter().filter(|r| r.model != "lstm") {
+            assert!(r.ho_cut() > 0.5, "{}: {}", r.model, r.ho_cut());
+        }
+    }
+
+    #[test]
+    fn renders_seven_rows() {
+        let res = run_tms();
+        assert_eq!(res.tables[0].1.len(), 7);
+    }
+}

@@ -1,0 +1,136 @@
+//! Figure 8 — Xenos (ZCU102) vs TVM (ZCU102) vs PyTorch (RTX 3090).
+
+use super::ExpResult;
+use crate::baselines::{gpu_inference_time, tvm_inference_time, tvm_like};
+use crate::graph::models;
+use crate::hw::presets;
+use crate::opt::OptLevel;
+use crate::sim::run_level;
+use crate::util::table::Table;
+
+/// One comparison row.
+pub struct Fig8Row {
+    /// Model name.
+    pub model: String,
+    /// Full-Xenos time on ZCU102, seconds.
+    pub xenos_s: f64,
+    /// TVM time on ZCU102, seconds (None = unsupported, paper footnote 6).
+    pub tvm_s: Option<f64>,
+    /// PyTorch/RTX3090 roofline time, seconds.
+    pub gpu_s: f64,
+}
+
+/// Compute all rows.
+pub fn rows() -> Vec<Fig8Row> {
+    let zcu = presets::zcu102();
+    let gpu = presets::rtx3090();
+    models::PAPER_BENCHMARKS
+        .iter()
+        .map(|name| {
+            let g = models::by_name(name).expect("zoo model");
+            let (_, x) = run_level(&g, &zcu, OptLevel::Full);
+            let t = tvm_like(&g, &zcu);
+            let tvm_s = t.supported.then(|| tvm_inference_time(&t));
+            Fig8Row {
+                model: name.to_string(),
+                xenos_s: x.total_s,
+                tvm_s,
+                gpu_s: gpu_inference_time(&g, &gpu),
+            }
+        })
+        .collect()
+}
+
+/// Run the Fig. 8 experiment.
+pub fn run() -> ExpResult {
+    let rows = rows();
+    let mut t = Table::new(vec![
+        "model",
+        "Xenos/ZCU102 (ms)",
+        "TVM/ZCU102 (ms)",
+        "PyTorch/RTX3090 (ms)",
+        "Xenos vs TVM",
+        "Xenos vs GPU",
+    ]);
+    let mut tvm_speedups = Vec::new();
+    let mut gpu_speedups = Vec::new();
+    for r in &rows {
+        let tvm_cell = match r.tvm_s {
+            Some(v) => format!("{:.2}", v * 1e3),
+            None => "unsupported".to_string(),
+        };
+        let tvm_ratio = match r.tvm_s {
+            Some(v) => {
+                tvm_speedups.push(v / r.xenos_s);
+                format!("{:.2}x", v / r.xenos_s)
+            }
+            None => "-".to_string(),
+        };
+        gpu_speedups.push(r.gpu_s / r.xenos_s);
+        t.row(vec![
+            r.model.clone(),
+            format!("{:.2}", r.xenos_s * 1e3),
+            tvm_cell,
+            format!("{:.2}", r.gpu_s * 1e3),
+            tvm_ratio,
+            format!("{:.2}x", r.gpu_s / r.xenos_s),
+        ]);
+    }
+    let fmin = |v: &[f64]| v.iter().fold(f64::INFINITY, |a, &b| a.min(b));
+    let fmax = |v: &[f64]| v.iter().fold(0.0f64, |a, &b| a.max(b));
+    ExpResult {
+        id: "fig8".to_string(),
+        title: "inference time vs TVM and PyTorch-GPU".to_string(),
+        tables: vec![("Xenos vs baselines".to_string(), t)],
+        takeaways: vec![
+            format!(
+                "Xenos vs TVM: {:.2}x-{:.2}x (paper: 3.22x-17.92x; LSTM/Bert unsupported by the Vitis flow)",
+                fmin(&tvm_speedups),
+                fmax(&tvm_speedups)
+            ),
+            format!(
+                "Xenos vs GPU: {:.2}x-{:.2}x (paper: 1.02x-1.87x)",
+                fmin(&gpu_speedups),
+                fmax(&gpu_speedups)
+            ),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lstm_and_bert_unsupported_by_tvm() {
+        for r in rows() {
+            match r.model.as_str() {
+                "lstm" | "bert_s" => assert!(r.tvm_s.is_none(), "{}", r.model),
+                _ => assert!(r.tvm_s.is_some(), "{}", r.model),
+            }
+        }
+    }
+
+    #[test]
+    fn xenos_beats_tvm_on_all_supported_models() {
+        for r in rows() {
+            if let Some(tvm) = r.tvm_s {
+                assert!(tvm > r.xenos_s, "{}: tvm {} vs xenos {}", r.model, tvm, r.xenos_s);
+            }
+        }
+    }
+
+    #[test]
+    fn gpu_comparison_within_shape_band() {
+        // Paper band is 1.02-1.87x; we assert the same order of magnitude
+        // (Xenos competitive to moderately faster).
+        for r in rows() {
+            let ratio = r.gpu_s / r.xenos_s;
+            assert!(
+                ratio > 0.6 && ratio < 4.5,
+                "{}: gpu/xenos {ratio}",
+                r.model
+            );
+        }
+    }
+}

@@ -1,0 +1,88 @@
+//! Experiment drivers — one per table/figure of the paper's evaluation
+//! (§7). Each driver returns the rendered tables so the CLI, the benches
+//! and the tests share one implementation; EXPERIMENTS.md quotes their
+//! output verbatim.
+//!
+//! | id | paper artifact | driver |
+//! |----|----------------|--------|
+//! | `table2` | Table 2: automatic optimization time | [`table2::run`] |
+//! | `table45` | Tables 4/5: operator micro-speedups | [`table45::run`] |
+//! | `fig7a` | Fig. 7(a): inference time on TMS320C6678 | [`fig7::run_tms`] |
+//! | `fig7b` | Fig. 7(b): inference time on ZCU102 | [`fig7::run_zcu`] |
+//! | `fig8` | Fig. 8: Xenos vs TVM vs GPU | [`fig8::run`] |
+//! | `fig9` | Fig. 9: resource traces on TMS320C6678 | [`fig9::run`] |
+//! | `fig10` | Fig. 10: FPGA resource cost | [`fig10::run`] |
+//! | `fig11` | Fig. 11: d-Xenos | [`fig11::run`] |
+
+pub mod ablations;
+pub mod fig10;
+pub mod fig11;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod table2;
+pub mod table45;
+
+use crate::util::table::Table;
+
+/// A named, rendered experiment result.
+pub struct ExpResult {
+    /// Experiment id (`fig7a`, `table2`, …).
+    pub id: String,
+    /// Headline describing the paper artifact.
+    pub title: String,
+    /// Rendered tables (most experiments emit one; fig9/10 emit several).
+    pub tables: Vec<(String, Table)>,
+    /// One-line takeaways checked against the paper's claims.
+    pub takeaways: Vec<String>,
+}
+
+impl ExpResult {
+    /// Print to stdout in the canonical format.
+    pub fn print(&self) {
+        println!("== {} — {} ==", self.id, self.title);
+        for (caption, t) in &self.tables {
+            println!("\n-- {caption} --");
+            t.print();
+        }
+        if !self.takeaways.is_empty() {
+            println!();
+            for t in &self.takeaways {
+                println!("  * {t}");
+            }
+        }
+        println!();
+    }
+}
+
+/// All experiment ids, in paper order.
+pub const ALL_EXPERIMENTS: [&str; 9] = [
+    "table2", "table45", "fig7a", "fig7b", "fig8", "fig9", "fig10", "fig11", "ablations",
+];
+
+/// Run one experiment by id.
+pub fn run(id: &str) -> Option<ExpResult> {
+    match id {
+        "table2" => Some(table2::run()),
+        "table45" => Some(table45::run()),
+        "fig7a" => Some(fig7::run_tms()),
+        "fig7b" => Some(fig7::run_zcu()),
+        "fig8" => Some(fig8::run()),
+        "fig9" => Some(fig9::run()),
+        "fig10" => Some(fig10::run()),
+        "fig11" => Some(fig11::run()),
+        "ablations" => Some(ablations::run()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn registry_covers_all_ids() {
+        for id in super::ALL_EXPERIMENTS {
+            assert!(super::run(id).is_some(), "missing driver for {id}");
+        }
+        assert!(super::run("fig99").is_none());
+    }
+}

@@ -1,0 +1,161 @@
+//! Tables 4/5 — micro-benchmarks on typical operators (TMS320C6678):
+//! operator-linking speedups measured with the trace-driven cache
+//! simulator, operator-split speedups with the cost model.
+//!
+//! Paper numbers: CBR-MaxPool (224×224×24 / 3×3×3×224) linking 3.3×;
+//! CBR-AvgPool (7×7×1024 / 1×1×1024×1024) linking 2.3×; FullyConnected
+//! (1536→1000) split 2.25×; CBR (112×112×32 / 1×1×32×64) split 2.6×.
+
+use super::ExpResult;
+use crate::graph::{DataLayout, GraphBuilder, Shape};
+use crate::hw::presets;
+use crate::opt::dos;
+use crate::sim::cache::{pool_consumer_trace, CacheSim};
+use crate::sim::cost::node_cost;
+use crate::util::table::Table;
+
+/// L1D model of the C66x core used for the locality micro-benchmarks.
+const L1D_BYTES: usize = 32 * 1024;
+const L1D_LINE: usize = 64;
+const L1D_ASSOC: usize = 4;
+/// Cycles per L1D hit / per miss (SRAM fill) on the C66x.
+const HIT_CYCLES: f64 = 1.0;
+const MISS_CYCLES: f64 = 12.0;
+
+/// Linking micro-benchmark: replay the pooling consumer's read trace over
+/// the producer's output feature map in both layouts; speedup from the
+/// cache-level access-time model.
+pub fn linking_speedup(c: usize, h: usize, w: usize, k: usize) -> f64 {
+    let mut vanilla = CacheSim::new(L1D_BYTES, L1D_LINE, L1D_ASSOC);
+    vanilla.run(pool_consumer_trace(DataLayout::Chw, c, h, w, k));
+    let mut linked = CacheSim::new(L1D_BYTES, L1D_LINE, L1D_ASSOC);
+    linked.run(pool_consumer_trace(
+        DataLayout::Linked { ph: k as u8, pw: k as u8 },
+        c,
+        h,
+        w,
+        k,
+    ));
+    let time = |sim: &CacheSim| {
+        sim.accesses as f64 * HIT_CYCLES + sim.misses as f64 * MISS_CYCLES
+    };
+    time(&vanilla) / time(&linked)
+}
+
+/// Split micro-benchmark: cost-model time of a single operator under the
+/// Vanilla plan vs the DOS plan on the TMS320C6678.
+pub fn split_speedup_conv(in_c: usize, out_c: usize, k: usize, hw: usize) -> f64 {
+    let mut b = GraphBuilder::new("micro");
+    let x = b.input("x", Shape::nchw(1, in_c, hw, hw));
+    let cid = b.conv("c", x, out_c, k, 1, k / 2);
+    b.output(cid);
+    let mut g = b.finish();
+    // Micro-benchmark isolates the *split* effect: the input is DMA-staged
+    // in the operator's preferred order (locality is Table 4's linking
+    // rows, measured separately).
+    g.node_mut(x).out.layout = DataLayout::Hwc;
+    let d = presets::tms320c6678();
+    let vanilla = dos::plan_node_vanilla(g.node(cid), &d);
+    let split = dos::plan_node_dos(&g, g.node(cid), &d, false);
+    node_cost(&g, g.node(cid), &vanilla, &d).total_s
+        / node_cost(&g, g.node(cid), &split, &d).total_s
+}
+
+/// Split micro-benchmark for a fully-connected operator.
+pub fn split_speedup_fc(k: usize, n: usize) -> f64 {
+    let mut b = GraphBuilder::new("micro");
+    let x = b.input("x", Shape::nchw(1, k, 1, 1));
+    let f = b.fc("fc", x, n);
+    b.output(f);
+    let g = b.finish();
+    let d = presets::tms320c6678();
+    let vanilla = dos::plan_node_vanilla(g.node(f), &d);
+    let split = dos::plan_node_dos(&g, g.node(f), &d, false);
+    node_cost(&g, g.node(f), &vanilla, &d).total_s
+        / node_cost(&g, g.node(f), &split, &d).total_s
+}
+
+/// Run the Table 4/5 experiment.
+pub fn run() -> ExpResult {
+    let rows: Vec<(String, String, f64, &str)> = vec![
+        (
+            "CBR-MaxPooling 224x224x24 / 3x3x3x224".to_string(),
+            "Operator Linking".to_string(),
+            linking_speedup(24, 224, 224, 2),
+            "3.3x",
+        ),
+        (
+            "CBR-AvgPooling 7x7x1024 / 1x1x1024x1024".to_string(),
+            "Operator Linking".to_string(),
+            // 8x8 window grid: the nearest even-sized map to the paper's 7x7.
+            linking_speedup(1024, 8, 8, 2),
+            "2.3x",
+        ),
+        (
+            "FullyConnected 1x1x1536 / 1x1x1536x1000".to_string(),
+            "Operator Split".to_string(),
+            split_speedup_fc(1536, 1000),
+            "2.25x",
+        ),
+        (
+            "CBR 112x112x32 / 1x1x32x64".to_string(),
+            "Operator Split".to_string(),
+            split_speedup_conv(32, 64, 1, 112),
+            "2.6x",
+        ),
+    ];
+    let mut t = Table::new(vec!["operator", "Xenos optimization", "speedup", "paper"]);
+    for (op, opt, s, paper) in &rows {
+        t.row(vec![op.clone(), opt.clone(), format!("{:.2}x", s), paper.to_string()]);
+    }
+    ExpResult {
+        id: "table45".to_string(),
+        title: "micro-benchmark speedups for typical operators (TMS320C6678)".to_string(),
+        tables: vec![("Tables 4 & 5".to_string(), t)],
+        takeaways: vec![
+            "linking speedups measured by replaying real address traces through a set-associative L1D model".to_string(),
+            "split speedups from the L2-residency cost model (Vanilla plan vs DOS plan)".to_string(),
+        ],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linking_speedups_in_paper_band() {
+        // Paper: 3.3x and 2.3x. Assert the 1.5x-6x shape band.
+        let big = linking_speedup(24, 224, 224, 2);
+        assert!(big > 1.5 && big < 6.0, "CBR-MaxPool {big}");
+        let deep = linking_speedup(1024, 8, 8, 2);
+        assert!(deep > 1.5 && deep < 6.0, "CBR-AvgPool {deep}");
+    }
+
+    #[test]
+    fn split_speedups_in_paper_band() {
+        // Paper: 2.25x and 2.6x. Assert the 1.3x-5x shape band (the CBR
+        // case lands lower than the paper's because our Vanilla arm still
+        // spreads over all 8 cores; see EXPERIMENTS.md).
+        let fc = split_speedup_fc(1536, 1000);
+        assert!(fc > 1.5 && fc < 5.0, "FC {fc}");
+        let cbr = split_speedup_conv(32, 64, 1, 112);
+        assert!(cbr > 1.3 && cbr < 5.0, "CBR {cbr}");
+    }
+
+    #[test]
+    fn unsplit_controls_are_baseline() {
+        // Table 5's control rows: without the optimization, speedup is 1x
+        // by construction (same plan over itself).
+        let mut b = GraphBuilder::new("micro");
+        let x = b.input("x", Shape::nchw(1, 32, 112, 112));
+        let c = b.conv("c", x, 64, 1, 1, 0);
+        b.output(c);
+        let g = b.finish();
+        let d = presets::tms320c6678();
+        let v = dos::plan_node_vanilla(g.node(c), &d);
+        let t1 = node_cost(&g, g.node(c), &v, &d).total_s;
+        let t2 = node_cost(&g, g.node(c), &v, &d).total_s;
+        assert!((t1 / t2 - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,351 @@
+//! Fluent graph construction with shape inference.
+//!
+//! The model zoo (`graph::models`) is written entirely against this builder;
+//! every method infers the output descriptor so model definitions read like
+//! framework code.
+
+use super::op::{ConvAttrs, MatMulAttrs, OpKind, PoolAttrs, PoolKind};
+use super::tensor::{DataLayout, Shape, TensorDesc};
+use super::{Graph, NodeId};
+
+/// Builder over an append-only [`Graph`].
+#[derive(Debug)]
+pub struct GraphBuilder {
+    g: Graph,
+}
+
+impl GraphBuilder {
+    /// Start a new graph.
+    pub fn new(name: &str) -> Self {
+        GraphBuilder { g: Graph::new(name) }
+    }
+
+    /// Output descriptor of an existing node.
+    pub fn desc(&self, id: NodeId) -> &TensorDesc {
+        &self.g.node(id).out
+    }
+
+    /// Add an input placeholder.
+    pub fn input(&mut self, name: &str, shape: Shape) -> NodeId {
+        let layout =
+            if shape.is_fm() { DataLayout::Chw } else { DataLayout::RowMajor };
+        let out = TensorDesc { shape, dtype: super::tensor::DType::F32, layout };
+        self.g.push(name, OpKind::Input, vec![], out)
+    }
+
+    /// Standard convolution: `out_c` filters of `k`×`k`, stride `s`, pad `p`.
+    pub fn conv(&mut self, name: &str, x: NodeId, out_c: usize, k: usize, s: usize, p: usize) -> NodeId {
+        let d = self.desc(x).clone();
+        let a = ConvAttrs::std(d.shape.c(), out_c, k, s, p);
+        self.conv_attrs(name, x, a)
+    }
+
+    /// Depthwise convolution.
+    pub fn dwconv(&mut self, name: &str, x: NodeId, k: usize, s: usize, p: usize) -> NodeId {
+        let d = self.desc(x).clone();
+        let a = ConvAttrs::depthwise(d.shape.c(), k, s, p);
+        self.conv_attrs(name, x, a)
+    }
+
+    /// Grouped convolution.
+    pub fn gconv(&mut self, name: &str, x: NodeId, out_c: usize, k: usize, s: usize, p: usize, groups: usize) -> NodeId {
+        let d = self.desc(x).clone();
+        let mut a = ConvAttrs::std(d.shape.c(), out_c, k, s, p);
+        a.groups = groups;
+        self.conv_attrs(name, x, a)
+    }
+
+    /// Convolution from explicit attributes.
+    pub fn conv_attrs(&mut self, name: &str, x: NodeId, a: ConvAttrs) -> NodeId {
+        let d = self.desc(x).clone();
+        assert_eq!(d.shape.c(), a.in_c, "conv {} in_c mismatch", name);
+        assert_eq!(a.in_c % a.groups, 0, "conv {} groups must divide in_c", name);
+        assert_eq!(a.out_c % a.groups, 0, "conv {} groups must divide out_c", name);
+        let (oh, ow) = a.out_hw(d.shape.h(), d.shape.w());
+        let out = TensorDesc::fm(d.shape.n(), a.out_c, oh, ow);
+        self.g.push(name, OpKind::Conv(a), vec![x], out)
+    }
+
+    /// Batch normalization (inference: per-channel affine).
+    pub fn bn(&mut self, name: &str, x: NodeId) -> NodeId {
+        let out = self.desc(x).clone();
+        self.g.push(name, OpKind::BatchNorm, vec![x], out)
+    }
+
+    /// Per-channel bias.
+    pub fn bias(&mut self, name: &str, x: NodeId) -> NodeId {
+        let out = self.desc(x).clone();
+        self.g.push(name, OpKind::Bias, vec![x], out)
+    }
+
+    /// ReLU.
+    pub fn relu(&mut self, name: &str, x: NodeId) -> NodeId {
+        let out = self.desc(x).clone();
+        self.g.push(name, OpKind::Relu, vec![x], out)
+    }
+
+    /// Sigmoid.
+    pub fn sigmoid(&mut self, name: &str, x: NodeId) -> NodeId {
+        let out = self.desc(x).clone();
+        self.g.push(name, OpKind::Sigmoid, vec![x], out)
+    }
+
+    /// Tanh.
+    pub fn tanh(&mut self, name: &str, x: NodeId) -> NodeId {
+        let out = self.desc(x).clone();
+        self.g.push(name, OpKind::Tanh, vec![x], out)
+    }
+
+    /// GELU.
+    pub fn gelu(&mut self, name: &str, x: NodeId) -> NodeId {
+        let out = self.desc(x).clone();
+        self.g.push(name, OpKind::Gelu, vec![x], out)
+    }
+
+    /// Softmax over the last axis.
+    pub fn softmax(&mut self, name: &str, x: NodeId) -> NodeId {
+        let out = self.desc(x).clone();
+        self.g.push(name, OpKind::Softmax, vec![x], out)
+    }
+
+    /// Layer normalization over the last axis.
+    pub fn layernorm(&mut self, name: &str, x: NodeId) -> NodeId {
+        let out = self.desc(x).clone();
+        self.g.push(name, OpKind::LayerNorm, vec![x], out)
+    }
+
+    /// Element-wise addition.
+    pub fn add(&mut self, name: &str, a: NodeId, b: NodeId) -> NodeId {
+        let da = self.desc(a).clone();
+        assert_eq!(da.shape, self.desc(b).shape, "add {} shape mismatch", name);
+        self.g.push(name, OpKind::Add, vec![a, b], da)
+    }
+
+    /// Element-wise multiplication.
+    pub fn mul(&mut self, name: &str, a: NodeId, b: NodeId) -> NodeId {
+        let da = self.desc(a).clone();
+        assert_eq!(da.shape, self.desc(b).shape, "mul {} shape mismatch", name);
+        self.g.push(name, OpKind::Mul, vec![a, b], da)
+    }
+
+    /// Element-wise multiply-accumulate `a*b + c`.
+    pub fn mac(&mut self, name: &str, a: NodeId, b: NodeId, c: NodeId) -> NodeId {
+        let da = self.desc(a).clone();
+        assert_eq!(da.shape, self.desc(b).shape, "mac {} shape mismatch", name);
+        assert_eq!(da.shape, self.desc(c).shape, "mac {} shape mismatch", name);
+        self.g.push(name, OpKind::Mac, vec![a, b, c], da)
+    }
+
+    /// Pooling.
+    pub fn pool(&mut self, name: &str, x: NodeId, p: PoolAttrs) -> NodeId {
+        let d = self.desc(x).clone();
+        let out = match p.kind {
+            PoolKind::Global => TensorDesc::fm(d.shape.n(), d.shape.c(), 1, 1),
+            _ => {
+                let oh = (d.shape.h() - p.k) / p.stride + 1;
+                let ow = (d.shape.w() - p.k) / p.stride + 1;
+                TensorDesc::fm(d.shape.n(), d.shape.c(), oh, ow)
+            }
+        };
+        self.g.push(name, OpKind::Pool(p), vec![x], out)
+    }
+
+    /// Max pool shorthand.
+    pub fn maxpool(&mut self, name: &str, x: NodeId, k: usize, s: usize) -> NodeId {
+        self.pool(name, x, PoolAttrs::max(k, s))
+    }
+
+    /// Avg pool shorthand.
+    pub fn avgpool(&mut self, name: &str, x: NodeId, k: usize, s: usize) -> NodeId {
+        self.pool(name, x, PoolAttrs::avg(k, s))
+    }
+
+    /// Global average pool shorthand.
+    pub fn global_pool(&mut self, name: &str, x: NodeId) -> NodeId {
+        self.pool(name, x, PoolAttrs::global())
+    }
+
+    /// Fully-connected / weighted matmul. Input may be a feature map (then it
+    /// is logically flattened) or a matrix `[rows, k]`.
+    pub fn fc(&mut self, name: &str, x: NodeId, n: usize) -> NodeId {
+        let d = self.desc(x).clone();
+        let (rows, k) = match d.shape.rank() {
+            4 => (d.shape.n(), d.shape.c() * d.shape.h() * d.shape.w()),
+            2 => (d.shape.dims[0], d.shape.dims[1]),
+            1 => (1, d.shape.dims[0]),
+            r => panic!("fc {}: unsupported rank {}", name, r),
+        };
+        let attrs = MatMulAttrs { k, n, weighted: true, bias: true };
+        let out = TensorDesc::plain(Shape::mat(rows, n));
+        self.g.push(name, OpKind::MatMul(attrs), vec![x], out)
+    }
+
+    /// Activation×activation matmul: `a [m,k] × b [k,n]`.
+    pub fn matmul(&mut self, name: &str, a: NodeId, b: NodeId) -> NodeId {
+        let da = self.desc(a).clone();
+        let db = self.desc(b).clone();
+        assert_eq!(da.shape.rank(), 2, "matmul {} lhs must be 2-D", name);
+        assert_eq!(db.shape.rank(), 2, "matmul {} rhs must be 2-D", name);
+        assert_eq!(da.shape.dims[1], db.shape.dims[0], "matmul {} inner dim", name);
+        let attrs = MatMulAttrs {
+            k: da.shape.dims[1],
+            n: db.shape.dims[1],
+            weighted: false,
+            bias: false,
+        };
+        let out = TensorDesc::plain(Shape::mat(da.shape.dims[0], db.shape.dims[1]));
+        self.g.push(name, OpKind::MatMul(attrs), vec![a, b], out)
+    }
+
+    /// Channel concatenation.
+    pub fn concat(&mut self, name: &str, xs: &[NodeId]) -> NodeId {
+        assert!(!xs.is_empty());
+        let d0 = self.desc(xs[0]).clone();
+        let mut c = 0;
+        for &x in xs {
+            let d = self.desc(x);
+            assert_eq!(d.shape.h(), d0.shape.h(), "concat {} H mismatch", name);
+            assert_eq!(d.shape.w(), d0.shape.w(), "concat {} W mismatch", name);
+            c += d.shape.c();
+        }
+        let out = TensorDesc::fm(d0.shape.n(), c, d0.shape.h(), d0.shape.w());
+        self.g.push(name, OpKind::Concat, xs.to_vec(), out)
+    }
+
+    /// Channel slice `[begin, end)`.
+    pub fn slice_c(&mut self, name: &str, x: NodeId, begin: usize, end: usize) -> NodeId {
+        let d = self.desc(x).clone();
+        if d.shape.is_fm() {
+            assert!(end <= d.shape.c() && begin < end, "slice {} bounds", name);
+            let out = TensorDesc::fm(d.shape.n(), end - begin, d.shape.h(), d.shape.w());
+            self.g.push(name, OpKind::Slice { begin, end }, vec![x], out)
+        } else {
+            assert_eq!(d.shape.rank(), 2, "slice {} needs fm or matrix", name);
+            assert!(end <= d.shape.dims[1] && begin < end, "slice {} bounds", name);
+            let out = TensorDesc::plain(Shape::mat(d.shape.dims[0], end - begin));
+            self.g.push(name, OpKind::Slice { begin, end }, vec![x], out)
+        }
+    }
+
+    /// 2-D transpose.
+    pub fn transpose(&mut self, name: &str, x: NodeId) -> NodeId {
+        let d = self.desc(x).clone();
+        assert_eq!(d.shape.rank(), 2, "transpose {} needs a matrix", name);
+        let out = TensorDesc::plain(Shape::mat(d.shape.dims[1], d.shape.dims[0]));
+        self.g.push(name, OpKind::Transpose, vec![x], out)
+    }
+
+    /// ShuffleNet channel shuffle.
+    pub fn channel_shuffle(&mut self, name: &str, x: NodeId, groups: usize) -> NodeId {
+        let d = self.desc(x).clone();
+        assert_eq!(d.shape.c() % groups, 0, "shuffle {} groups", name);
+        self.g.push(name, OpKind::ChannelShuffle { groups }, vec![x], d)
+    }
+
+    /// Nearest-neighbour upsample.
+    pub fn upsample(&mut self, name: &str, x: NodeId, factor: usize) -> NodeId {
+        let d = self.desc(x).clone();
+        let out = TensorDesc::fm(d.shape.n(), d.shape.c(), d.shape.h() * factor, d.shape.w() * factor);
+        self.g.push(name, OpKind::Upsample { factor }, vec![x], out)
+    }
+
+    /// Conv→Bn→Relu convenience (the pre-fusion idiom the optimizer folds).
+    pub fn conv_bn_relu(&mut self, name: &str, x: NodeId, out_c: usize, k: usize, s: usize, p: usize) -> NodeId {
+        let c = self.conv(&format!("{name}/conv"), x, out_c, k, s, p);
+        let b = self.bn(&format!("{name}/bn"), c);
+        self.relu(&format!("{name}/relu"), b)
+    }
+
+    /// Depthwise Conv→Bn→Relu convenience.
+    pub fn dw_bn_relu(&mut self, name: &str, x: NodeId, k: usize, s: usize, p: usize) -> NodeId {
+        let c = self.dwconv(&format!("{name}/dw"), x, k, s, p);
+        let b = self.bn(&format!("{name}/bn"), c);
+        self.relu(&format!("{name}/relu"), b)
+    }
+
+    /// Mark a node as a graph output.
+    pub fn output(&mut self, id: NodeId) {
+        self.g.outputs.push(id);
+    }
+
+    /// Finish and validate.
+    pub fn finish(self) -> Graph {
+        self.g.validate().expect("builder produced invalid graph");
+        self.g
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shape_inference() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", Shape::nchw(1, 3, 224, 224));
+        let c = b.conv("c", x, 32, 3, 2, 1);
+        assert_eq!(b.desc(c).shape, Shape::nchw(1, 32, 112, 112));
+    }
+
+    #[test]
+    fn pool_and_global_pool_shapes() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", Shape::nchw(1, 8, 14, 14));
+        let p = b.avgpool("p", x, 2, 2);
+        assert_eq!(b.desc(p).shape, Shape::nchw(1, 8, 7, 7));
+        let gp = b.global_pool("g", p);
+        assert_eq!(b.desc(gp).shape, Shape::nchw(1, 8, 1, 1));
+    }
+
+    #[test]
+    fn fc_flattens_feature_map() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", Shape::nchw(1, 1024, 1, 1));
+        let f = b.fc("fc", x, 1000);
+        assert_eq!(b.desc(f).shape, Shape::mat(1, 1000));
+    }
+
+    #[test]
+    fn concat_sums_channels() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", Shape::nchw(1, 16, 8, 8));
+        let a = b.conv("a", x, 8, 1, 1, 0);
+        let c = b.conv("c", x, 24, 3, 1, 1);
+        let cat = b.concat("cat", &[a, c]);
+        assert_eq!(b.desc(cat).shape.c(), 32);
+    }
+
+    #[test]
+    fn matmul_shapes() {
+        let mut b = GraphBuilder::new("t");
+        let q = b.input("q", Shape::mat(128, 64));
+        let kt = b.input("kt", Shape::mat(64, 128));
+        let s = b.matmul("s", q, kt);
+        assert_eq!(b.desc(s).shape, Shape::mat(128, 128));
+    }
+
+    #[test]
+    #[should_panic(expected = "in_c mismatch")]
+    fn conv_rejects_wrong_channels() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", Shape::nchw(1, 3, 8, 8));
+        let a = ConvAttrs::std(4, 8, 3, 1, 1);
+        b.conv_attrs("bad", x, a);
+    }
+
+    #[test]
+    fn slice_channels() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", Shape::nchw(1, 32, 8, 8));
+        let s = b.slice_c("s", x, 8, 24);
+        assert_eq!(b.desc(s).shape.c(), 16);
+    }
+
+    #[test]
+    fn upsample_scales_hw() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", Shape::nchw(1, 4, 7, 7));
+        let u = b.upsample("u", x, 2);
+        assert_eq!(b.desc(u).shape, Shape::nchw(1, 4, 14, 14));
+    }
+}

@@ -1,0 +1,236 @@
+//! Computation-graph intermediate representation.
+//!
+//! A [`Graph`] is a DAG of [`Node`]s, each holding an [`op::OpKind`], its
+//! input edges and an inferred output [`tensor::TensorDesc`]. The IR is
+//! deliberately close to the paper's: feature maps are 4-D NCHW tensors whose
+//! *physical layout* ([`tensor::DataLayout`]) is first-class metadata — the
+//! vertical (operator-linking) optimization works purely by rewriting this
+//! metadata so a producer writes in the exact order its consumer reads
+//! (paper §4.1), without introducing new operator kinds (paper §6.1).
+
+pub mod builder;
+pub mod models;
+pub mod op;
+pub mod tensor;
+
+pub use builder::GraphBuilder;
+pub use op::{ConvAttrs, MatMulAttrs, OpKind, PoolAttrs, PoolKind};
+pub use tensor::{DataLayout, DType, Shape, TensorDesc};
+
+/// Index of a node within its graph.
+pub type NodeId = usize;
+
+/// A single operator instance in the graph.
+#[derive(Debug, Clone)]
+pub struct Node {
+    /// Position in `Graph::nodes` (stable; graphs are append-only).
+    pub id: NodeId,
+    /// Human-readable name, e.g. `"conv1"`, `"fire2/squeeze1x1"`.
+    pub name: String,
+    /// The operator.
+    pub op: OpKind,
+    /// Producer nodes feeding this node, in operand order.
+    pub inputs: Vec<NodeId>,
+    /// Inferred output descriptor (shape + dtype + physical layout).
+    pub out: TensorDesc,
+    /// Names of the original nodes this node was fused/linked from (empty
+    /// for un-fused nodes). Parameter synthesis keys off these so optimized
+    /// graphs materialize the same weights as their vanilla counterparts.
+    pub fused_from: Vec<String>,
+}
+
+impl Node {
+    /// Multiply-accumulate count of this node (0 for data-movement ops).
+    pub fn macs(&self) -> u64 {
+        self.op.macs(&self.out)
+    }
+
+    /// Bytes of trainable/const parameters attached to this node.
+    pub fn param_bytes(&self) -> u64 {
+        self.op.param_count() * self.out.dtype.size_bytes() as u64
+    }
+}
+
+/// A computation graph: append-only node list in topological order.
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    /// Nodes in topological order (builders only reference earlier nodes).
+    pub nodes: Vec<Node>,
+    /// Graph outputs.
+    pub outputs: Vec<NodeId>,
+    /// Model name, e.g. `"mobilenet"`.
+    pub name: String,
+}
+
+impl Graph {
+    /// Create an empty graph with a name.
+    pub fn new(name: &str) -> Self {
+        Graph { nodes: Vec::new(), outputs: Vec::new(), name: name.to_string() }
+    }
+
+    /// Append a node; `inputs` must reference existing nodes.
+    pub fn push(&mut self, name: &str, op: OpKind, inputs: Vec<NodeId>, out: TensorDesc) -> NodeId {
+        for &i in &inputs {
+            assert!(i < self.nodes.len(), "input {} out of range", i);
+        }
+        let id = self.nodes.len();
+        self.nodes.push(Node {
+            id,
+            name: name.to_string(),
+            op,
+            inputs,
+            out,
+            fused_from: Vec::new(),
+        });
+        id
+    }
+
+    /// Node lookup.
+    pub fn node(&self, id: NodeId) -> &Node {
+        &self.nodes[id]
+    }
+
+    /// Mutable node lookup.
+    pub fn node_mut(&mut self, id: NodeId) -> &mut Node {
+        &mut self.nodes[id]
+    }
+
+    /// Number of nodes.
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// True if the graph has no nodes.
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    /// Consumers of each node (adjacency reversed), indexed by `NodeId`.
+    pub fn consumers(&self) -> Vec<Vec<NodeId>> {
+        let mut cons = vec![Vec::new(); self.nodes.len()];
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                cons[i].push(n.id);
+            }
+        }
+        cons
+    }
+
+    /// Total MAC count of the whole graph.
+    pub fn total_macs(&self) -> u64 {
+        self.nodes.iter().map(Node::macs).sum()
+    }
+
+    /// Total parameter bytes of the whole graph.
+    pub fn total_param_bytes(&self) -> u64 {
+        self.nodes.iter().map(Node::param_bytes).sum()
+    }
+
+    /// Input nodes (OpKind::Input) in order.
+    pub fn input_ids(&self) -> Vec<NodeId> {
+        self.nodes
+            .iter()
+            .filter(|n| matches!(n.op, OpKind::Input))
+            .map(|n| n.id)
+            .collect()
+    }
+
+    /// Validate structural invariants: topological input ordering, outputs in
+    /// range, non-empty outputs for non-empty graphs.
+    pub fn validate(&self) -> Result<(), String> {
+        for n in &self.nodes {
+            for &i in &n.inputs {
+                if i >= n.id {
+                    return Err(format!(
+                        "node {} '{}' references non-earlier input {}",
+                        n.id, n.name, i
+                    ));
+                }
+            }
+            if matches!(n.op, OpKind::Input) && !n.inputs.is_empty() {
+                return Err(format!("input node {} has inputs", n.id));
+            }
+        }
+        for &o in &self.outputs {
+            if o >= self.nodes.len() {
+                return Err(format!("output {} out of range", o));
+            }
+        }
+        if !self.is_empty() && self.outputs.is_empty() {
+            return Err("graph has nodes but no outputs".to_string());
+        }
+        Ok(())
+    }
+
+    /// One-line-per-node dump for debugging and `xenos inspect`.
+    pub fn dump(&self) -> String {
+        let mut s = format!("graph {} ({} nodes, {:.1} MMACs, {} params)\n",
+            self.name,
+            self.nodes.len(),
+            self.total_macs() as f64 / 1e6,
+            crate::util::human_bytes(self.total_param_bytes()));
+        for n in &self.nodes {
+            s.push_str(&format!(
+                "  [{:>3}] {:<28} {:<18} in={:?} out={}\n",
+                n.id,
+                n.name,
+                n.op.kind_name(),
+                n.inputs,
+                n.out
+            ));
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> Graph {
+        let mut b = GraphBuilder::new("tiny");
+        let x = b.input("x", Shape::nchw(1, 3, 8, 8));
+        let c = b.conv("c1", x, 4, 3, 1, 1);
+        let r = b.relu("r1", c);
+        b.output(r);
+        b.finish()
+    }
+
+    #[test]
+    fn build_and_validate() {
+        let g = tiny();
+        assert_eq!(g.len(), 3);
+        assert!(g.validate().is_ok());
+        assert_eq!(g.outputs.len(), 1);
+    }
+
+    #[test]
+    fn consumers_reversed_edges() {
+        let g = tiny();
+        let cons = g.consumers();
+        assert_eq!(cons[0], vec![1]); // input -> conv
+        assert_eq!(cons[1], vec![2]); // conv -> relu
+        assert!(cons[2].is_empty());
+    }
+
+    #[test]
+    fn macs_of_conv() {
+        let g = tiny();
+        // conv: out 1x4x8x8, kernel 3x3x3 => 8*8*4 * 3*3*3 = 6912 MACs
+        assert_eq!(g.node(1).macs(), 6912);
+    }
+
+    #[test]
+    fn validate_rejects_forward_edge() {
+        let mut g = tiny();
+        g.nodes[0].inputs = vec![2];
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn dump_contains_names() {
+        let d = tiny().dump();
+        assert!(d.contains("c1"));
+        assert!(d.contains("Conv"));
+    }
+}

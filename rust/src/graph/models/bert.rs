@@ -1,0 +1,112 @@
+//! Bert-S (small: 4 layers × 256 hidden, seq 128) and a scaled Bert-L
+//! (8 × 512) for the d-Xenos experiment. Attention's activation×activation
+//! matmuls exercise the unweighted `x.matmul` path and the
+//! `MatmulX -> MatmulY` linking pattern.
+
+use crate::graph::{Graph, GraphBuilder, NodeId, Shape};
+
+/// Transformer encoder configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct BertConfig {
+    pub layers: usize,
+    pub hidden: usize,
+    pub ffn: usize,
+    pub seq: usize,
+}
+
+/// Bert-S configuration (paper's "Bert-S").
+pub const BERT_S: BertConfig = BertConfig { layers: 4, hidden: 256, ffn: 1024, seq: 128 };
+/// Bert-L configuration, scaled to stay simulable while remaining ~16× the
+/// compute of Bert-S (the paper's Bert-L is 340M params; the d-Xenos
+/// experiment only needs "a model too big for one device").
+pub const BERT_L: BertConfig = BertConfig { layers: 8, hidden: 512, ffn: 2048, seq: 256 };
+
+/// One encoder layer: self-attention + FFN with residuals and layernorms.
+fn encoder_layer(b: &mut GraphBuilder, name: &str, x: NodeId, cfg: &BertConfig) -> NodeId {
+    // Self-attention (single fused head — head split does not change the
+    // dataflow classes the optimizer sees).
+    let q = b.fc(&format!("{name}/q"), x, cfg.hidden);
+    let k = b.fc(&format!("{name}/k"), x, cfg.hidden);
+    let v = b.fc(&format!("{name}/v"), x, cfg.hidden);
+    let kt = b.transpose(&format!("{name}/k_t"), k);
+    let scores = b.matmul(&format!("{name}/scores"), q, kt); // [seq, seq]
+    let probs = b.softmax(&format!("{name}/attn_softmax"), scores);
+    let ctx = b.matmul(&format!("{name}/ctx"), probs, v); // [seq, hidden]
+    let proj = b.fc(&format!("{name}/attn_proj"), ctx, cfg.hidden);
+    let res1 = b.add(&format!("{name}/attn_res"), proj, x);
+    let ln1 = b.layernorm(&format!("{name}/ln1"), res1);
+
+    // FFN.
+    let f1 = b.fc(&format!("{name}/ffn1"), ln1, cfg.ffn);
+    let act = b.gelu(&format!("{name}/gelu"), f1);
+    let f2 = b.fc(&format!("{name}/ffn2"), act, cfg.hidden);
+    let res2 = b.add(&format!("{name}/ffn_res"), f2, ln1);
+    b.layernorm(&format!("{name}/ln2"), res2)
+}
+
+/// Build a Bert encoder graph from a config.
+pub fn bert(name: &str, cfg: BertConfig) -> Graph {
+    let mut b = GraphBuilder::new(name);
+    // Pre-embedded input: [seq, hidden] (embedding lookup is on the
+    // preprocessing device in the paper's pipeline, §2.1).
+    let mut y = b.input("embeddings", Shape::mat(cfg.seq, cfg.hidden));
+    for l in 0..cfg.layers {
+        y = encoder_layer(&mut b, &format!("layer{l}"), y, &cfg);
+    }
+    // Classifier over the first token: slice column-wise then classify.
+    let logits = b.fc("classifier", y, 2);
+    let probs = b.softmax("softmax", logits);
+    b.output(probs);
+    b.finish()
+}
+
+/// Bert-S — the paper's benchmark.
+pub fn bert_s() -> Graph {
+    bert("bert_s", BERT_S)
+}
+
+/// Bert-L (scaled) — d-Xenos workload.
+pub fn bert_l() -> Graph {
+    bert("bert_l", BERT_L)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    #[test]
+    fn bert_s_layer_count() {
+        let g = bert_s();
+        let lns = g.nodes.iter().filter(|n| matches!(n.op, OpKind::LayerNorm)).count();
+        assert_eq!(lns, 2 * BERT_S.layers);
+    }
+
+    #[test]
+    fn attention_score_shape() {
+        let g = bert_s();
+        let s = g.nodes.iter().find(|n| n.name == "layer0/scores").unwrap();
+        assert_eq!(s.out.shape, Shape::mat(BERT_S.seq, BERT_S.seq));
+    }
+
+    #[test]
+    fn unweighted_matmuls_have_two_inputs() {
+        let g = bert_s();
+        for n in &g.nodes {
+            if let OpKind::MatMul(m) = &n.op {
+                if !m.weighted {
+                    assert_eq!(n.inputs.len(), 2, "{}", n.name);
+                } else {
+                    assert_eq!(n.inputs.len(), 1, "{}", n.name);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bert_macs_scale_with_config() {
+        let s = bert_s().total_macs() as f64;
+        let l = bert_l().total_macs() as f64;
+        assert!(l / s > 8.0, "bert_l/bert_s = {}", l / s);
+    }
+}

@@ -1,0 +1,100 @@
+//! CentreNet (CenterNet-style detector, ResNet-18 backbone + upsampling
+//! decoder + three dense heads). The decoder's upsample→conv chains and the
+//! multi-output heads exercise the optimizer on non-classification graphs.
+
+use crate::graph::{Graph, GraphBuilder, NodeId, Shape};
+
+fn basic_block(b: &mut GraphBuilder, name: &str, x: NodeId, out_c: usize, stride: usize) -> NodeId {
+    let c1 = b.conv_bn_relu(&format!("{name}/conv1"), x, out_c, 3, stride, 1);
+    let c2 = b.conv(&format!("{name}/conv2"), c1, out_c, 3, 1, 1);
+    let bn2 = b.bn(&format!("{name}/bn2"), c2);
+    let shortcut = if stride != 1 || b.desc(x).shape.c() != out_c {
+        let sc = b.conv(&format!("{name}/downsample"), x, out_c, 1, stride, 0);
+        b.bn(&format!("{name}/downsample_bn"), sc)
+    } else {
+        x
+    };
+    let add = b.add(&format!("{name}/add"), bn2, shortcut);
+    b.relu(&format!("{name}/relu_out"), add)
+}
+
+/// One decoder stage: nearest ×2 upsample + 3×3 conv (the deconvolution
+/// substitute commonly used in edge deployments of CenterNet).
+fn up_stage(b: &mut GraphBuilder, name: &str, x: NodeId, out_c: usize) -> NodeId {
+    let up = b.upsample(&format!("{name}/up2x"), x, 2);
+    b.conv_bn_relu(&format!("{name}/conv"), up, out_c, 3, 1, 1)
+}
+
+/// A detection head: 3×3 conv → ReLU → 1×1 conv to `out_c` maps.
+fn head(b: &mut GraphBuilder, name: &str, x: NodeId, out_c: usize) -> NodeId {
+    let h = b.conv_bn_relu(&format!("{name}/conv3x3"), x, 64, 3, 1, 1);
+    b.conv(&format!("{name}/conv1x1"), h, out_c, 1, 1, 0)
+}
+
+/// Build CentreNet: 256×256 input, ResNet-18 trunk, 3 up stages, 3 heads
+/// (heatmap 20 classes, width/height 2, offset 2).
+pub fn centrenet() -> Graph {
+    let mut b = GraphBuilder::new("centrenet");
+    let x = b.input("input", Shape::nchw(1, 3, 256, 256));
+
+    // Backbone (ResNet-18 plan, 256 input => /32 = 8).
+    let c1 = b.conv_bn_relu("conv1", x, 64, 7, 2, 3); // @128
+    let mut y = b.maxpool("maxpool1", c1, 2, 2); // @64
+    let plan: [(usize, usize, usize); 4] =
+        [(64, 2, 1), (128, 2, 2), (256, 2, 2), (512, 2, 2)];
+    for (si, &(c, reps, first_stride)) in plan.iter().enumerate() {
+        for r in 0..reps {
+            let stride = if r == 0 { first_stride } else { 1 };
+            y = basic_block(&mut b, &format!("layer{}/block{}", si + 1, r + 1), y, c, stride);
+        }
+    }
+    // y @8x8x512. Decoder to @64x64x64.
+    let u1 = up_stage(&mut b, "up1", y, 256); // @16
+    let u2 = up_stage(&mut b, "up2", u1, 128); // @32
+    let u3 = up_stage(&mut b, "up3", u2, 64); // @64
+
+    let hm = head(&mut b, "heatmap", u3, 20);
+    let hm_act = b.sigmoid("heatmap/sigmoid", hm);
+    let wh = head(&mut b, "wh", u3, 2);
+    let off = head(&mut b, "offset", u3, 2);
+
+    b.output(hm_act);
+    b.output(wh);
+    b.output(off);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn three_outputs() {
+        let g = centrenet();
+        assert_eq!(g.outputs.len(), 3);
+    }
+
+    #[test]
+    fn head_resolutions() {
+        let g = centrenet();
+        let hm = g.node(g.outputs[0]);
+        assert_eq!(hm.out.shape.c(), 20);
+        assert_eq!(hm.out.shape.h(), 64);
+        let wh = g.node(g.outputs[1]);
+        assert_eq!(wh.out.shape.c(), 2);
+    }
+
+    #[test]
+    fn decoder_upsamples_to_64() {
+        let g = centrenet();
+        let u3 = g.nodes.iter().find(|n| n.name == "up3/conv/relu").unwrap();
+        assert_eq!(u3.out.shape.h(), 64);
+        assert_eq!(u3.out.shape.c(), 64);
+    }
+
+    #[test]
+    fn heavier_than_resnet18() {
+        // 256x256 input + decoder keeps CentreNet among the heaviest CNNs.
+        assert!(centrenet().total_macs() > super::super::resnet18().total_macs());
+    }
+}

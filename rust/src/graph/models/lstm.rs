@@ -1,0 +1,101 @@
+//! Unrolled single-layer LSTM (T=16, input 128, hidden 256) + classifier.
+//! Exercises the `MatmulX -> MatmulY` linking pattern (paper Table 1) and the
+//! element-wise `x.mac` operator on the recurrent cell update.
+
+use crate::graph::{Graph, GraphBuilder, NodeId, Shape};
+
+/// Sequence length of the unrolled graph.
+pub const SEQ_LEN: usize = 16;
+/// Input feature size per step.
+pub const INPUT: usize = 128;
+/// Hidden state size.
+pub const HIDDEN: usize = 256;
+
+/// One gate: `act(Wx·x + Wh·h)`; activation applied by the caller.
+fn gate(b: &mut GraphBuilder, name: &str, x: NodeId, h: NodeId) -> NodeId {
+    let wx = b.fc(&format!("{name}/wx"), x, HIDDEN);
+    let wh = b.fc(&format!("{name}/wh"), h, HIDDEN);
+    b.add(&format!("{name}/add"), wx, wh)
+}
+
+/// Build the unrolled LSTM graph.
+///
+/// Input is `[INPUT, SEQ_LEN]` (features × time) so each timestep is a
+/// channel slice followed by a transpose — all data-movement ops the
+/// dataflow optimizer can absorb.
+pub fn lstm() -> Graph {
+    let mut b = GraphBuilder::new("lstm");
+    let x_all = b.input("input", Shape::mat(INPUT, SEQ_LEN));
+
+    // Initial hidden/cell states as zero inputs.
+    let mut h = b.input("h0", Shape::mat(1, HIDDEN));
+    let mut c = b.input("c0", Shape::mat(1, HIDDEN));
+
+    for t in 0..SEQ_LEN {
+        let name = format!("step{t}");
+        let xt_col = b.slice_c(&format!("{name}/x_col"), x_all, t, t + 1); // [INPUT,1]
+        let xt = b.transpose(&format!("{name}/x"), xt_col); // [1,INPUT]
+
+        let i_pre = gate(&mut b, &format!("{name}/i"), xt, h);
+        let i = b.sigmoid(&format!("{name}/i/sig"), i_pre);
+        let f_pre = gate(&mut b, &format!("{name}/f"), xt, h);
+        let f = b.sigmoid(&format!("{name}/f/sig"), f_pre);
+        let o_pre = gate(&mut b, &format!("{name}/o"), xt, h);
+        let o = b.sigmoid(&format!("{name}/o/sig"), o_pre);
+        let g_pre = gate(&mut b, &format!("{name}/g"), xt, h);
+        let g = b.tanh(&format!("{name}/g/tanh"), g_pre);
+
+        // c = f*c + i*g  — expressed with the x.mac operator.
+        let ig = b.mul(&format!("{name}/ig"), i, g);
+        c = b.mac(&format!("{name}/c"), f, c, ig);
+        // h = o * tanh(c)
+        let ct = b.tanh(&format!("{name}/ct"), c);
+        h = b.mul(&format!("{name}/h"), o, ct);
+    }
+
+    let logits = b.fc("classifier", h, 10);
+    let probs = b.softmax("softmax", logits);
+    b.output(probs);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    #[test]
+    fn has_seq_len_mac_updates() {
+        let g = lstm();
+        let macs = g.nodes.iter().filter(|n| matches!(n.op, OpKind::Mac)).count();
+        assert_eq!(macs, SEQ_LEN);
+    }
+
+    #[test]
+    fn has_8_matmuls_per_step() {
+        let g = lstm();
+        let mms = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, OpKind::MatMul(_)) && n.name.starts_with("step"))
+            .count();
+        assert_eq!(mms, 8 * SEQ_LEN);
+    }
+
+    #[test]
+    fn hidden_shape_threads_through() {
+        let g = lstm();
+        let last_h = g.nodes.iter().rfind(|n| n.name.ends_with("/h")).unwrap();
+        assert_eq!(last_h.out.shape, Shape::mat(1, HIDDEN));
+    }
+
+    #[test]
+    fn macs_dominated_by_recurrent_matmuls() {
+        let g = lstm();
+        // 8 matmuls/step: 4x(128->256) + 4x(256->256) = 4*(128+256)*256 MACs.
+        let per_step = 4 * (INPUT + HIDDEN) * HIDDEN;
+        let expected = (SEQ_LEN * per_step) as u64;
+        let total = g.total_macs();
+        assert!(total >= expected && total < expected * 2, "{total} vs {expected}");
+    }
+}

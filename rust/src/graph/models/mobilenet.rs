@@ -1,0 +1,93 @@
+//! MobileNetV1 (1.0×, 224) — the paper's flagship benchmark (Figures 5, 9,
+//! 10, 11 all use it). Depthwise-separable blocks are exactly the structure
+//! whose dw→pw layout mismatch motivates operator linking (paper §2.2).
+
+use crate::graph::{Graph, GraphBuilder, Shape};
+
+/// Build MobileNetV1: stem conv + 13 depthwise-separable blocks + classifier.
+pub fn mobilenet() -> Graph {
+    let mut b = GraphBuilder::new("mobilenet");
+    let x = b.input("input", Shape::nchw(1, 3, 224, 224));
+
+    // Stem: conv 3x3 s2 -> 32 channels @112.
+    let mut y = b.conv_bn_relu("conv1", x, 32, 3, 2, 1);
+
+    // (out_c, stride) per depthwise-separable block.
+    let blocks: [(usize, usize); 13] = [
+        (64, 1),
+        (128, 2),
+        (128, 1),
+        (256, 2),
+        (256, 1),
+        (512, 2),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (512, 1),
+        (1024, 2),
+        (1024, 1),
+    ];
+    for (i, &(out_c, stride)) in blocks.iter().enumerate() {
+        let name = format!("ds{}", i + 2);
+        // Depthwise 3x3 (writes CHW) ...
+        let dw = b.dw_bn_relu(&format!("{name}/dwise"), y, 3, stride, 1);
+        // ... followed by pointwise 1x1 (reads HWC): the paper's Figure 2
+        // locality-mismatch pair.
+        y = b.conv_bn_relu(&format!("{name}/pwise"), dw, out_c, 1, 1, 0);
+    }
+
+    // Head: the paper's Figure 5 example links the last CBR with AvgPooling.
+    let pool = b.avgpool("avgpool7", y, 7, 7);
+    let logits = b.fc("fc", pool, 1000);
+    let probs = b.softmax("softmax", logits);
+    b.output(probs);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    #[test]
+    fn structure() {
+        let g = mobilenet();
+        // 1 input + stem(3) + 13 blocks * 6 + pool + fc + softmax = 84
+        assert_eq!(g.len(), 1 + 3 + 13 * 6 + 3);
+        assert_eq!(g.outputs.len(), 1);
+    }
+
+    #[test]
+    fn final_spatial_size_is_7() {
+        let g = mobilenet();
+        // node before avgpool7 is the last pwise relu @ 7x7x1024
+        let pool_in = g
+            .nodes
+            .iter()
+            .find(|n| n.name == "avgpool7")
+            .map(|n| g.node(n.inputs[0]).out.shape.clone())
+            .unwrap();
+        assert_eq!(pool_in.c(), 1024);
+        assert_eq!(pool_in.h(), 7);
+    }
+
+    #[test]
+    fn has_13_depthwise_convs() {
+        let g = mobilenet();
+        let n_dw = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(&n.op, OpKind::Conv(a) if a.is_depthwise()))
+            .count();
+        assert_eq!(n_dw, 13);
+    }
+
+    #[test]
+    fn param_count_ballpark() {
+        // MobileNetV1 has ~4.2M params.
+        let g = mobilenet();
+        let m = g.total_param_bytes() as f64 / 4.0 / 1e6;
+        assert!(m > 3.0 && m < 6.0, "params {m}M");
+    }
+}

@@ -1,0 +1,114 @@
+//! Model zoo — the paper's seven benchmarks (§7.1) plus the larger models
+//! used in the d-Xenos experiment (§7.6).
+//!
+//! | name | paper role |
+//! |------|-----------|
+//! | `mobilenet` | Fig. 7/8/9/10/11, Table 2 |
+//! | `squeezenet` | Fig. 7/8/10, Table 2 |
+//! | `shufflenet` | Fig. 7/8, Table 2 |
+//! | `resnet18` | Fig. 7/8/11, Table 2 |
+//! | `centrenet` | Fig. 7/8, Table 2 |
+//! | `lstm` | Fig. 7/8, Table 2 |
+//! | `bert_s` | Fig. 7/8/11, Table 2 |
+//! | `resnet101` | d-Xenos workload (§5) |
+//! | `bert_l` | d-Xenos workload (§5, scaled to fit simulation) |
+
+mod bert;
+mod centrenet;
+mod lstm;
+mod mobilenet;
+mod resnet;
+mod shufflenet;
+mod squeezenet;
+
+pub use bert::{bert_l, bert_s};
+pub use centrenet::centrenet;
+pub use lstm::lstm;
+pub use mobilenet::mobilenet;
+pub use resnet::{resnet101, resnet18};
+pub use shufflenet::shufflenet;
+pub use squeezenet::squeezenet;
+
+use crate::graph::Graph;
+
+/// The seven benchmark model names, in the paper's order.
+pub const PAPER_BENCHMARKS: [&str; 7] = [
+    "mobilenet",
+    "squeezenet",
+    "shufflenet",
+    "resnet18",
+    "centrenet",
+    "lstm",
+    "bert_s",
+];
+
+/// Build a model by name. Returns `None` for unknown names.
+pub fn by_name(name: &str) -> Option<Graph> {
+    match name {
+        "mobilenet" => Some(mobilenet()),
+        "squeezenet" => Some(squeezenet()),
+        "shufflenet" => Some(shufflenet()),
+        "resnet18" => Some(resnet18()),
+        "resnet101" => Some(resnet101()),
+        "centrenet" => Some(centrenet()),
+        "lstm" => Some(lstm()),
+        "bert_s" => Some(bert_s()),
+        "bert_l" => Some(bert_l()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_benchmarks_build_and_validate() {
+        for name in PAPER_BENCHMARKS {
+            let g = by_name(name).unwrap_or_else(|| panic!("missing model {name}"));
+            g.validate().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(!g.outputs.is_empty(), "{name} must have outputs");
+            assert!(g.total_macs() > 0, "{name} must do work");
+        }
+    }
+
+    #[test]
+    fn dxenos_models_build() {
+        for name in ["resnet101", "bert_l"] {
+            let g = by_name(name).unwrap();
+            g.validate().unwrap();
+        }
+    }
+
+    #[test]
+    fn unknown_model_is_none() {
+        assert!(by_name("alexnet").is_none());
+    }
+
+    #[test]
+    fn mobilenet_macs_in_expected_ballpark() {
+        // MobileNetV1-1.0-224 is ~569 MMACs in the literature; our graph
+        // (2x2 pooling stem variants aside) must land within 2x.
+        let g = mobilenet();
+        let mm = g.total_macs() as f64 / 1e6;
+        assert!(mm > 300.0 && mm < 1200.0, "mobilenet MMACs {mm}");
+    }
+
+    #[test]
+    fn resnet18_params_in_expected_ballpark() {
+        // ResNet-18 has ~11.7M params.
+        let g = resnet18();
+        let p = g.total_param_bytes() as f64 / 4.0 / 1e6;
+        assert!(p > 8.0 && p < 16.0, "resnet18 Mparams {p}");
+    }
+
+    #[test]
+    fn resnet101_bigger_than_resnet18() {
+        assert!(resnet101().total_macs() > 3 * resnet18().total_macs());
+    }
+
+    #[test]
+    fn bert_l_bigger_than_bert_s() {
+        assert!(bert_l().total_macs() > 3 * bert_s().total_macs());
+    }
+}

@@ -1,0 +1,122 @@
+//! ResNet-18 (basic blocks) and ResNet-101 (bottleneck blocks). The shortcut
+//! connection is one of the paper's Table 1 linking patterns
+//! (`ConvX -> {... -> ConvY, ConvZ}`); ResNet-101 is the large d-Xenos
+//! workload (§5: "ResNet-101 (60.2M) ... can hardly be used for
+//! single-device inference").
+
+use crate::graph::{Graph, GraphBuilder, NodeId, Shape};
+
+/// Basic residual block (two 3×3 convs).
+fn basic_block(b: &mut GraphBuilder, name: &str, x: NodeId, out_c: usize, stride: usize) -> NodeId {
+    let c1 = b.conv_bn_relu(&format!("{name}/conv1"), x, out_c, 3, stride, 1);
+    let c2 = b.conv(&format!("{name}/conv2"), c1, out_c, 3, 1, 1);
+    let bn2 = b.bn(&format!("{name}/bn2"), c2);
+    let shortcut = if stride != 1 || b.desc(x).shape.c() != out_c {
+        let sc = b.conv(&format!("{name}/downsample"), x, out_c, 1, stride, 0);
+        b.bn(&format!("{name}/downsample_bn"), sc)
+    } else {
+        x
+    };
+    let add = b.add(&format!("{name}/add"), bn2, shortcut);
+    b.relu(&format!("{name}/relu_out"), add)
+}
+
+/// Bottleneck residual block (1×1 reduce, 3×3, 1×1 expand ×4).
+fn bottleneck(b: &mut GraphBuilder, name: &str, x: NodeId, mid_c: usize, stride: usize) -> NodeId {
+    let out_c = mid_c * 4;
+    let c1 = b.conv_bn_relu(&format!("{name}/conv1"), x, mid_c, 1, 1, 0);
+    let c2 = b.conv_bn_relu(&format!("{name}/conv2"), c1, mid_c, 3, stride, 1);
+    let c3 = b.conv(&format!("{name}/conv3"), c2, out_c, 1, 1, 0);
+    let bn3 = b.bn(&format!("{name}/bn3"), c3);
+    let shortcut = if stride != 1 || b.desc(x).shape.c() != out_c {
+        let sc = b.conv(&format!("{name}/downsample"), x, out_c, 1, stride, 0);
+        b.bn(&format!("{name}/downsample_bn"), sc)
+    } else {
+        x
+    };
+    let add = b.add(&format!("{name}/add"), bn3, shortcut);
+    b.relu(&format!("{name}/relu_out"), add)
+}
+
+fn stem(b: &mut GraphBuilder) -> NodeId {
+    let x = b.input("input", Shape::nchw(1, 3, 224, 224));
+    let c1 = b.conv_bn_relu("conv1", x, 64, 7, 2, 3); // @112
+    b.maxpool("maxpool1", c1, 2, 2) // @56
+}
+
+fn classifier(b: &mut GraphBuilder, y: NodeId, classes: usize) -> NodeId {
+    let gp = b.global_pool("globalpool", y);
+    let logits = b.fc("fc", gp, classes);
+    b.softmax("softmax", logits)
+}
+
+/// Build ResNet-18.
+pub fn resnet18() -> Graph {
+    let mut b = GraphBuilder::new("resnet18");
+    let mut y = stem(&mut b);
+    let plan: [(usize, usize, usize); 4] =
+        [(64, 2, 1), (128, 2, 2), (256, 2, 2), (512, 2, 2)];
+    for (si, &(c, reps, first_stride)) in plan.iter().enumerate() {
+        for r in 0..reps {
+            let stride = if r == 0 { first_stride } else { 1 };
+            y = basic_block(&mut b, &format!("layer{}/block{}", si + 1, r + 1), y, c, stride);
+        }
+    }
+    let out = classifier(&mut b, y, 1000);
+    b.output(out);
+    b.finish()
+}
+
+/// Build ResNet-101 (bottleneck plan 3-4-23-3).
+pub fn resnet101() -> Graph {
+    let mut b = GraphBuilder::new("resnet101");
+    let mut y = stem(&mut b);
+    let plan: [(usize, usize, usize); 4] =
+        [(64, 3, 1), (128, 4, 2), (256, 23, 2), (512, 3, 2)];
+    for (si, &(c, reps, first_stride)) in plan.iter().enumerate() {
+        for r in 0..reps {
+            let stride = if r == 0 { first_stride } else { 1 };
+            y = bottleneck(&mut b, &format!("layer{}/block{}", si + 1, r + 1), y, c, stride);
+        }
+    }
+    let out = classifier(&mut b, y, 1000);
+    b.output(out);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    #[test]
+    fn resnet18_has_8_blocks_and_shortcut_adds() {
+        let g = resnet18();
+        let adds = g.nodes.iter().filter(|n| matches!(n.op, OpKind::Add)).count();
+        assert_eq!(adds, 8);
+    }
+
+    #[test]
+    fn resnet18_final_channels() {
+        let g = resnet18();
+        let gp = g.nodes.iter().find(|n| n.name == "globalpool").unwrap();
+        assert_eq!(g.node(gp.inputs[0]).out.shape.c(), 512);
+        assert_eq!(g.node(gp.inputs[0]).out.shape.h(), 7);
+    }
+
+    #[test]
+    fn resnet101_has_33_bottlenecks() {
+        let g = resnet101();
+        let adds = g.nodes.iter().filter(|n| matches!(n.op, OpKind::Add)).count();
+        assert_eq!(adds, 3 + 4 + 23 + 3);
+    }
+
+    #[test]
+    fn resnet101_params_ballpark() {
+        // Paper: ResNet-101 is 60.2M params (incl. classifier); conv trunk
+        // ~42M + fc 2M; our bn-folded count should be 30-70M range.
+        let g = resnet101();
+        let m = g.total_param_bytes() as f64 / 4.0 / 1e6;
+        assert!(m > 30.0 && m < 70.0, "resnet101 Mparams {m}");
+    }
+}

@@ -1,0 +1,106 @@
+//! ShuffleNetV1 (groups = 4, 1.0×) — grouped pointwise convs with channel
+//! shuffle. The shuffle is a pure data-movement op: exactly the kind of
+//! layout transformation the dataflow-centric optimizer absorbs into the
+//! producer's write order instead of executing as a standalone pass.
+
+use crate::graph::{Graph, GraphBuilder, NodeId, Shape};
+
+const GROUPS: usize = 4;
+
+/// Stride-1 shuffle unit: gconv1x1 → shuffle → dw3x3 → gconv1x1, residual add.
+fn unit_s1(b: &mut GraphBuilder, name: &str, x: NodeId, out_c: usize) -> NodeId {
+    let mid = out_c / 4;
+    let g1 = b.gconv(&format!("{name}/gconv1"), x, mid, 1, 1, 0, GROUPS);
+    let bn1 = b.bn(&format!("{name}/bn1"), g1);
+    let r1 = b.relu(&format!("{name}/relu1"), bn1);
+    let sh = b.channel_shuffle(&format!("{name}/shuffle"), r1, GROUPS);
+    let dw = b.dwconv(&format!("{name}/dw3x3"), sh, 3, 1, 1);
+    let bn2 = b.bn(&format!("{name}/bn2"), dw);
+    let g2 = b.gconv(&format!("{name}/gconv2"), bn2, out_c, 1, 1, 0, GROUPS);
+    let bn3 = b.bn(&format!("{name}/bn3"), g2);
+    let add = b.add(&format!("{name}/add"), bn3, x);
+    b.relu(&format!("{name}/relu_out"), add)
+}
+
+/// Stride-2 shuffle unit: main path stride-2, shortcut 2x2 avgpool, concat.
+fn unit_s2(b: &mut GraphBuilder, name: &str, x: NodeId, out_c: usize) -> NodeId {
+    let in_c = b.desc(x).shape.c();
+    let branch_c = out_c - in_c; // concat restores out_c
+    // Bottleneck width, rounded up so groups divide it (first stage-2 unit
+    // has a non-multiple branch width: 272-24=248 -> mid 64).
+    let mid = crate::util::ceil_div(branch_c / 4, GROUPS) * GROUPS;
+    let g1 = b.gconv(&format!("{name}/gconv1"), x, mid, 1, 1, 0, GROUPS);
+    let bn1 = b.bn(&format!("{name}/bn1"), g1);
+    let r1 = b.relu(&format!("{name}/relu1"), bn1);
+    let sh = b.channel_shuffle(&format!("{name}/shuffle"), r1, GROUPS);
+    let dw = b.dwconv(&format!("{name}/dw3x3"), sh, 3, 2, 1);
+    let bn2 = b.bn(&format!("{name}/bn2"), dw);
+    let g2 = b.gconv(&format!("{name}/gconv2"), bn2, branch_c, 1, 1, 0, GROUPS);
+    let bn3 = b.bn(&format!("{name}/bn3"), g2);
+    let short = b.avgpool(&format!("{name}/shortcut_pool"), x, 2, 2);
+    let cat = b.concat(&format!("{name}/concat"), &[short, bn3]);
+    b.relu(&format!("{name}/relu_out"), cat)
+}
+
+/// Build ShuffleNetV1 g=4: stem, 3 stages (4/8/4 units), classifier.
+pub fn shufflenet() -> Graph {
+    let mut b = GraphBuilder::new("shufflenet");
+    let x = b.input("input", Shape::nchw(1, 3, 224, 224));
+
+    // Stem: conv 3x3 s2 -> 24 @112, maxpool 2x2 -> @56.
+    let stem = b.conv_bn_relu("conv1", x, 24, 3, 2, 1);
+    let mut y = b.maxpool("maxpool1", stem, 2, 2);
+
+    // Stage channel plan for g=4: 272 / 544 / 1088.
+    let stages: [(usize, usize); 3] = [(272, 4), (544, 8), (1088, 4)];
+    for (si, &(out_c, reps)) in stages.iter().enumerate() {
+        let sname = format!("stage{}", si + 2);
+        y = unit_s2(&mut b, &format!("{sname}/u1"), y, out_c);
+        for r in 1..reps {
+            y = unit_s1(&mut b, &format!("{sname}/u{}", r + 1), y, out_c);
+        }
+    }
+
+    let gp = b.global_pool("globalpool", y);
+    let logits = b.fc("fc", gp, 1000);
+    let probs = b.softmax("softmax", logits);
+    b.output(probs);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    #[test]
+    fn has_16_shuffle_units() {
+        let g = shufflenet();
+        let shuffles = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.op, OpKind::ChannelShuffle { .. }))
+            .count();
+        assert_eq!(shuffles, 16);
+    }
+
+    #[test]
+    fn stage_output_channels() {
+        let g = shufflenet();
+        let last = g.nodes.iter().filter(|n| n.name.starts_with("stage4")).last().unwrap();
+        assert_eq!(last.out.shape.c(), 1088);
+        assert_eq!(last.out.shape.h(), 7);
+    }
+
+    #[test]
+    fn grouped_convs_have_groups() {
+        let g = shufflenet();
+        let gc = g
+            .nodes
+            .iter()
+            .find(|n| n.name == "stage2/u1/gconv1")
+            .and_then(|n| n.op.conv_attrs().copied())
+            .unwrap();
+        assert_eq!(gc.groups, GROUPS);
+    }
+}

@@ -1,0 +1,77 @@
+//! SqueezeNet v1.0 — fire modules (squeeze 1×1 → expand 1×1 ∥ 3×3 → concat).
+//! The concat of two differently-shaped producers makes it the paper's
+//! Figure 10 anomaly case: its expand branches parallelize trivially, so HLS
+//! already saturates DSP slices and HO adds little on ZCU102 (§7.5.2).
+
+use crate::graph::{Graph, GraphBuilder, NodeId, Shape};
+
+/// One fire module: squeeze to `s` channels, expand to `e1` (1×1) + `e3`
+/// (3×3), concatenated.
+fn fire(b: &mut GraphBuilder, name: &str, x: NodeId, s: usize, e1: usize, e3: usize) -> NodeId {
+    let sq = b.conv_bn_relu(&format!("{name}/squeeze1x1"), x, s, 1, 1, 0);
+    let ex1 = b.conv_bn_relu(&format!("{name}/expand1x1"), sq, e1, 1, 1, 0);
+    let ex3 = b.conv_bn_relu(&format!("{name}/expand3x3"), sq, e3, 3, 1, 1);
+    b.concat(&format!("{name}/concat"), &[ex1, ex3])
+}
+
+/// Build SqueezeNet v1.0 (1000-class).
+pub fn squeezenet() -> Graph {
+    let mut b = GraphBuilder::new("squeezenet");
+    let x = b.input("input", Shape::nchw(1, 3, 224, 224));
+
+    // Stem: 7x7 s2 pad3 -> 96 @112, maxpool 2x2 -> @56.
+    let stem = b.conv_bn_relu("conv1", x, 96, 7, 2, 3);
+    let p1 = b.maxpool("maxpool1", stem, 2, 2);
+
+    let f2 = fire(&mut b, "fire2", p1, 16, 64, 64);
+    let f3 = fire(&mut b, "fire3", f2, 16, 64, 64);
+    let f4 = fire(&mut b, "fire4", f3, 32, 128, 128);
+    let p4 = b.maxpool("maxpool4", f4, 2, 2); // @28
+
+    let f5 = fire(&mut b, "fire5", p4, 32, 128, 128);
+    let f6 = fire(&mut b, "fire6", f5, 48, 192, 192);
+    let f7 = fire(&mut b, "fire7", f6, 48, 192, 192);
+    let f8 = fire(&mut b, "fire8", f7, 64, 256, 256);
+    let p8 = b.maxpool("maxpool8", f8, 2, 2); // @14
+
+    let f9 = fire(&mut b, "fire9", p8, 64, 256, 256);
+
+    // Head: conv10 1x1 -> 1000, global average pool, softmax.
+    let c10 = b.conv_bn_relu("conv10", f9, 1000, 1, 1, 0);
+    let gp = b.global_pool("globalpool", c10);
+    let logits = b.fc("flatten_fc", gp, 1000);
+    let probs = b.softmax("softmax", logits);
+    b.output(probs);
+    b.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::OpKind;
+
+    #[test]
+    fn has_eight_fire_modules() {
+        let g = squeezenet();
+        let concats = g.nodes.iter().filter(|n| matches!(n.op, OpKind::Concat)).count();
+        assert_eq!(concats, 8);
+    }
+
+    #[test]
+    fn fire_concat_channels() {
+        let g = squeezenet();
+        let f2 = g.nodes.iter().find(|n| n.name == "fire2/concat").unwrap();
+        assert_eq!(f2.out.shape.c(), 128);
+        let f8 = g.nodes.iter().find(|n| n.name == "fire8/concat").unwrap();
+        assert_eq!(f8.out.shape.c(), 512);
+    }
+
+    #[test]
+    fn macs_ballpark() {
+        // SqueezeNet v1.0 ~ 0.8 GMACs at 224 (ours differs slightly from the
+        // torchvision variant in the stem pooling) — within 3x band.
+        let g = squeezenet();
+        let mm = g.total_macs() as f64 / 1e6;
+        assert!(mm > 300.0 && mm < 3000.0, "squeezenet MMACs {mm}");
+    }
+}

@@ -1,0 +1,416 @@
+//! Operator definitions — the Xenos operator library surface (paper Table 3).
+//!
+//! Each operator knows its arithmetic cost ([`OpKind::macs`]), parameter
+//! volume ([`OpKind::param_count`]) and — the dataflow-centric part — the
+//! layout it *naturally writes* and the layout it *prefers to read*
+//! ([`OpKind::natural_write`], [`OpKind::preferred_read`]). The vertical
+//! optimizer links a producer/consumer pair by setting the producer's output
+//! layout to the consumer's preferred read order; the simulator prices the
+//! match/mismatch.
+
+use super::tensor::{DataLayout, TensorDesc};
+
+/// Convolution attributes (also used by the fused/linked variants).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ConvAttrs {
+    /// Input channels.
+    pub in_c: usize,
+    /// Output channels.
+    pub out_c: usize,
+    /// Kernel height.
+    pub kh: usize,
+    /// Kernel width.
+    pub kw: usize,
+    /// Stride (same in both spatial dims).
+    pub stride: usize,
+    /// Symmetric zero padding.
+    pub pad: usize,
+    /// Convolution groups; `groups == in_c == out_c` is depthwise.
+    pub groups: usize,
+}
+
+impl ConvAttrs {
+    /// Standard (dense) convolution.
+    pub fn std(in_c: usize, out_c: usize, k: usize, stride: usize, pad: usize) -> Self {
+        ConvAttrs { in_c, out_c, kh: k, kw: k, stride, pad, groups: 1 }
+    }
+
+    /// Depthwise convolution.
+    pub fn depthwise(c: usize, k: usize, stride: usize, pad: usize) -> Self {
+        ConvAttrs { in_c: c, out_c: c, kh: k, kw: k, stride, pad, groups: c }
+    }
+
+    /// True if this is a depthwise convolution.
+    pub fn is_depthwise(&self) -> bool {
+        self.groups == self.in_c && self.groups == self.out_c && self.groups > 1
+    }
+
+    /// True if this is a pointwise (1×1, dense) convolution.
+    pub fn is_pointwise(&self) -> bool {
+        self.kh == 1 && self.kw == 1 && self.groups == 1
+    }
+
+    /// Output spatial size given input spatial size.
+    pub fn out_hw(&self, h: usize, w: usize) -> (usize, usize) {
+        (
+            (h + 2 * self.pad - self.kh) / self.stride + 1,
+            (w + 2 * self.pad - self.kw) / self.stride + 1,
+        )
+    }
+
+    /// Weight element count (`out_c × in_c/groups × kh × kw`).
+    pub fn weight_count(&self) -> u64 {
+        (self.out_c * (self.in_c / self.groups) * self.kh * self.kw) as u64
+    }
+}
+
+/// Pooling kind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolKind {
+    Max,
+    Avg,
+    /// Global average pooling (output 1×1).
+    Global,
+}
+
+/// Pooling attributes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PoolAttrs {
+    pub kind: PoolKind,
+    /// Window size (ignored for Global).
+    pub k: usize,
+    /// Stride (ignored for Global).
+    pub stride: usize,
+}
+
+impl PoolAttrs {
+    /// `k`×`k` max pooling with stride `s`.
+    pub fn max(k: usize, s: usize) -> Self {
+        PoolAttrs { kind: PoolKind::Max, k, stride: s }
+    }
+
+    /// `k`×`k` average pooling with stride `s`.
+    pub fn avg(k: usize, s: usize) -> Self {
+        PoolAttrs { kind: PoolKind::Avg, k, stride: s }
+    }
+
+    /// Global average pooling.
+    pub fn global() -> Self {
+        PoolAttrs { kind: PoolKind::Global, k: 0, stride: 0 }
+    }
+}
+
+/// Matrix-multiply attributes. If `weighted`, the right operand is a
+/// `k × n` parameter; otherwise the node takes two activation inputs
+/// (attention-style batched matmul).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MatMulAttrs {
+    /// Contraction size.
+    pub k: usize,
+    /// Output feature size.
+    pub n: usize,
+    /// Whether the right operand is a trained parameter.
+    pub weighted: bool,
+    /// Whether a bias vector of length `n` is added.
+    pub bias: bool,
+}
+
+/// The operator set (paper Table 3 plus the model-zoo needs).
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpKind {
+    /// Graph input placeholder.
+    Input,
+    /// Convolution (standard / grouped / depthwise via `groups`).
+    Conv(ConvAttrs),
+    /// Pooling (max / avg / global) — `x.gampool`.
+    Pool(PoolAttrs),
+    /// (Batched) matrix multiplication / fully-connected — `x.matmul`.
+    MatMul(MatMulAttrs),
+    /// Batch normalization (inference form: per-channel scale+shift).
+    BatchNorm,
+    /// Per-channel bias addition.
+    Bias,
+    /// ReLU activation.
+    Relu,
+    /// Sigmoid activation (LSTM gates).
+    Sigmoid,
+    /// Tanh activation (LSTM cell).
+    Tanh,
+    /// GELU activation (Bert FFN).
+    Gelu,
+    /// Softmax over the last axis (attention / classifier head).
+    Softmax,
+    /// Layer normalization over the last axis (Bert).
+    LayerNorm,
+    /// Element-wise addition — `x.add`.
+    Add,
+    /// Element-wise multiplication — `x.mul`.
+    Mul,
+    /// Multiply-accumulate: `a*b + c` element-wise — `x.mac`.
+    Mac,
+    /// Channel-axis concatenation — `x.concat`.
+    Concat,
+    /// Channel slice `[begin, end)` — the consumer half of `x.split`.
+    Slice { begin: usize, end: usize },
+    /// 2-D transpose — `x.transpose`.
+    Transpose,
+    /// ShuffleNet channel shuffle with `groups`.
+    ChannelShuffle { groups: usize },
+    /// Nearest-neighbour spatial upsampling ×`factor` (CentreNet decoder).
+    Upsample { factor: usize },
+    /// Fused Conv+Bn+Relu — `x.cbr` (operator fusion, paper §3).
+    Cbr(ConvAttrs),
+    /// Linked CBR→AvgPool — `x.cbra` (operator linking, paper §4.1).
+    Cbra(ConvAttrs, PoolAttrs),
+    /// Linked CBR→MaxPool — `x.cbrm`.
+    Cbrm(ConvAttrs, PoolAttrs),
+}
+
+impl OpKind {
+    /// Short kind name for dumps.
+    pub fn kind_name(&self) -> &'static str {
+        match self {
+            OpKind::Input => "Input",
+            OpKind::Conv(a) if a.is_depthwise() => "DwConv",
+            OpKind::Conv(_) => "Conv",
+            OpKind::Pool(p) => match p.kind {
+                PoolKind::Max => "MaxPool",
+                PoolKind::Avg => "AvgPool",
+                PoolKind::Global => "GlobalPool",
+            },
+            OpKind::MatMul(_) => "MatMul",
+            OpKind::BatchNorm => "BatchNorm",
+            OpKind::Bias => "Bias",
+            OpKind::Relu => "Relu",
+            OpKind::Sigmoid => "Sigmoid",
+            OpKind::Tanh => "Tanh",
+            OpKind::Gelu => "Gelu",
+            OpKind::Softmax => "Softmax",
+            OpKind::LayerNorm => "LayerNorm",
+            OpKind::Add => "Add",
+            OpKind::Mul => "Mul",
+            OpKind::Mac => "Mac",
+            OpKind::Concat => "Concat",
+            OpKind::Slice { .. } => "Slice",
+            OpKind::Transpose => "Transpose",
+            OpKind::ChannelShuffle { .. } => "ChannelShuffle",
+            OpKind::Upsample { .. } => "Upsample",
+            OpKind::Cbr(_) => "CBR",
+            OpKind::Cbra(..) => "CBRA",
+            OpKind::Cbrm(..) => "CBRM",
+        }
+    }
+
+    /// The convolution attributes if this op carries one.
+    pub fn conv_attrs(&self) -> Option<&ConvAttrs> {
+        match self {
+            OpKind::Conv(a) | OpKind::Cbr(a) | OpKind::Cbra(a, _) | OpKind::Cbrm(a, _) => Some(a),
+            _ => None,
+        }
+    }
+
+    /// Multiply-accumulate count given the node's *output* descriptor.
+    /// Window reductions (pooling) and normalizations are counted as one
+    /// MAC-equivalent per element touched, which is how the DSP cost model
+    /// prices them.
+    pub fn macs(&self, out: &TensorDesc) -> u64 {
+        let onumel = out.shape.numel() as u64;
+        match self {
+            OpKind::Input => 0,
+            OpKind::Conv(a) | OpKind::Cbr(a) => {
+                onumel * (a.kh * a.kw * (a.in_c / a.groups)) as u64
+            }
+            OpKind::Cbra(a, p) | OpKind::Cbrm(a, p) => {
+                // Output is post-pool; conv MACs are over the pre-pool map
+                // (pool window k×k, stride == k in the linked patterns we
+                // emit) plus the pooling reduction itself.
+                let pool_elems = (p.k * p.k).max(1) as u64;
+                let conv_out = onumel * pool_elems;
+                conv_out * (a.kh * a.kw * (a.in_c / a.groups)) as u64 + conv_out
+            }
+            OpKind::Pool(p) => match p.kind {
+                PoolKind::Global => 0, // priced via input traversal below
+                _ => onumel * (p.k * p.k) as u64,
+            },
+            OpKind::MatMul(m) => {
+                // out numel = rows × n  =>  macs = rows × k × n.
+                let rows = onumel / m.n as u64;
+                rows * (m.k * m.n) as u64
+            }
+            OpKind::BatchNorm | OpKind::Bias => onumel,
+            OpKind::Relu | OpKind::Sigmoid | OpKind::Tanh | OpKind::Gelu => onumel,
+            OpKind::Softmax | OpKind::LayerNorm => 3 * onumel,
+            OpKind::Add | OpKind::Mul => onumel,
+            OpKind::Mac => 2 * onumel,
+            OpKind::Concat
+            | OpKind::Slice { .. }
+            | OpKind::Transpose
+            | OpKind::ChannelShuffle { .. }
+            | OpKind::Upsample { .. } => 0,
+        }
+    }
+
+    /// Trainable/const parameter element count. `out_c` is taken from the
+    /// conv attrs; Bn/Bias infer from attrs-free context so they carry their
+    /// channel count implicitly via the output descriptor at call sites that
+    /// need exact numbers — here we return what is attributable to the op
+    /// definition itself.
+    pub fn param_count(&self) -> u64 {
+        match self {
+            OpKind::Conv(a) => a.weight_count() + a.out_c as u64,
+            OpKind::Cbr(a) | OpKind::Cbra(a, _) | OpKind::Cbrm(a, _) => {
+                // folded conv weights + folded bn scale/shift
+                a.weight_count() + 2 * a.out_c as u64
+            }
+            OpKind::MatMul(m) if m.weighted => {
+                (m.k * m.n) as u64 + if m.bias { m.n as u64 } else { 0 }
+            }
+            _ => 0,
+        }
+    }
+
+    /// The layout this operator naturally writes its output in, before any
+    /// dataflow optimization (paper §2.2: channel-parallel convs emit CHW
+    /// planes "one by one").
+    pub fn natural_write(&self, out: &TensorDesc) -> DataLayout {
+        if !out.shape.is_fm() {
+            return DataLayout::RowMajor;
+        }
+        match self {
+            OpKind::Conv(a) if a.is_depthwise() => DataLayout::Chw,
+            OpKind::Conv(_) | OpKind::Cbr(_) => DataLayout::Chw,
+            OpKind::Cbra(..) | OpKind::Cbrm(..) => DataLayout::Chw,
+            OpKind::Pool(_) => DataLayout::Chw,
+            _ => DataLayout::Chw,
+        }
+    }
+
+    /// The layout this operator would *like* operand `idx` in — the access
+    /// order of its inner loops, given the operand's descriptor. `None`
+    /// means layout-agnostic (pure element-wise / copies).
+    ///
+    /// This is the dataflow metadata the vertical optimizer consults: a
+    /// producer is *linked* by rewriting its output layout to the consumer's
+    /// preference, and the simulator prices any remaining mismatch.
+    pub fn read_pref(&self, idx: usize, input: &TensorDesc) -> Option<DataLayout> {
+        match self {
+            // Dense convs gather every input channel per output pixel
+            // (channel-first, the paper's Figure 2 pointwise example);
+            // depthwise convs walk channel planes independently.
+            OpKind::Conv(a) | OpKind::Cbr(a) | OpKind::Cbra(a, _) | OpKind::Cbrm(a, _) => {
+                if a.is_depthwise() {
+                    Some(DataLayout::Chw)
+                } else {
+                    Some(DataLayout::Hwc)
+                }
+            }
+            // Pooling walks k×k windows per channel — the zigzag order of
+            // the paper's Figure 4.
+            OpKind::Pool(p) => match p.kind {
+                PoolKind::Global => Some(DataLayout::Chw),
+                _ => Some(DataLayout::Linked { ph: p.k as u8, pw: p.k as u8 }),
+            },
+            // FC flattens every channel of each pixel (feature-map input);
+            // for matrix operands the left side streams rows while the
+            // right side is walked column-wise per output element.
+            OpKind::MatMul(m) => {
+                if input.shape.is_fm() {
+                    Some(DataLayout::Hwc)
+                } else if !m.weighted && idx == 1 {
+                    Some(DataLayout::ColMajor)
+                } else {
+                    Some(DataLayout::RowMajor)
+                }
+            }
+            // A transpose that receives its input already column-major
+            // degenerates into a sequential copy.
+            OpKind::Transpose => Some(DataLayout::ColMajor),
+            // Element-wise and shape ops take whatever comes.
+            _ => None,
+        }
+    }
+
+    /// True for ops that the DOS pass can split along the output-channel
+    /// dimension without extra reduction (paper §4.2.2: K-dim split is free).
+    pub fn splittable_out_c(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Conv(_) | OpKind::Cbr(_) | OpKind::Cbra(..) | OpKind::Cbrm(..)
+        ) || matches!(self, OpKind::MatMul(m) if m.weighted)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::tensor::Shape;
+
+    #[test]
+    fn conv_attrs_shapes() {
+        let a = ConvAttrs::std(3, 32, 3, 2, 1);
+        assert_eq!(a.out_hw(224, 224), (112, 112));
+        assert_eq!(a.weight_count(), 32 * 3 * 3 * 3);
+        assert!(!a.is_depthwise());
+        let d = ConvAttrs::depthwise(32, 3, 1, 1);
+        assert!(d.is_depthwise());
+        assert_eq!(d.weight_count(), 32 * 9);
+    }
+
+    #[test]
+    fn macs_conv_vs_depthwise() {
+        let out = TensorDesc::fm(1, 32, 112, 112);
+        let dense = OpKind::Conv(ConvAttrs::std(3, 32, 3, 2, 1));
+        let dw = OpKind::Conv(ConvAttrs::depthwise(32, 3, 1, 1));
+        assert_eq!(dense.macs(&out), (32 * 112 * 112) as u64 * 27);
+        assert_eq!(dw.macs(&out), (32 * 112 * 112) as u64 * 9);
+    }
+
+    #[test]
+    fn macs_matmul() {
+        let out = TensorDesc::plain(Shape::mat(4, 1000));
+        let m = OpKind::MatMul(MatMulAttrs { k: 1536, n: 1000, weighted: true, bias: true });
+        assert_eq!(m.macs(&out), 4 * 1536 * 1000);
+        assert_eq!(m.param_count(), 1536 * 1000 + 1000);
+    }
+
+    #[test]
+    fn read_pref_patterns() {
+        let fm = TensorDesc::fm(1, 64, 14, 14);
+        let pw = OpKind::Conv(ConvAttrs::std(64, 128, 1, 1, 0));
+        assert_eq!(pw.read_pref(0, &fm), Some(DataLayout::Hwc));
+        let dw = OpKind::Conv(ConvAttrs::depthwise(64, 3, 1, 1));
+        assert_eq!(dw.read_pref(0, &fm), Some(DataLayout::Chw));
+        let pool = OpKind::Pool(PoolAttrs::avg(2, 2));
+        assert_eq!(pool.read_pref(0, &fm), Some(DataLayout::Linked { ph: 2, pw: 2 }));
+        assert_eq!(OpKind::Relu.read_pref(0, &fm), None);
+    }
+
+    #[test]
+    fn matmul_read_pref_by_operand() {
+        let m2 = TensorDesc::plain(Shape::mat(8, 8));
+        let bmm = OpKind::MatMul(MatMulAttrs { k: 8, n: 8, weighted: false, bias: false });
+        assert_eq!(bmm.read_pref(0, &m2), Some(DataLayout::RowMajor));
+        assert_eq!(bmm.read_pref(1, &m2), Some(DataLayout::ColMajor));
+        let fm = TensorDesc::fm(1, 2, 2, 2);
+        let fc = OpKind::MatMul(MatMulAttrs { k: 8, n: 4, weighted: true, bias: true });
+        assert_eq!(fc.read_pref(0, &fm), Some(DataLayout::Hwc));
+    }
+
+    #[test]
+    fn cbra_macs_cover_prepool_map() {
+        // CBRA out 7x7 after 2x2 pool => conv computed on 14x14.
+        let out = TensorDesc::fm(1, 1024, 7, 7);
+        let a = ConvAttrs::std(1024, 1024, 1, 1, 0);
+        let op = OpKind::Cbra(a, PoolAttrs::avg(2, 2));
+        let conv_out = (1024 * 14 * 14) as u64;
+        assert_eq!(op.macs(&out), conv_out * 1024 + conv_out);
+    }
+
+    #[test]
+    fn splittable_flags() {
+        assert!(OpKind::Conv(ConvAttrs::std(3, 8, 3, 1, 1)).splittable_out_c());
+        assert!(!OpKind::Relu.splittable_out_c());
+        assert!(!OpKind::MatMul(MatMulAttrs { k: 8, n: 8, weighted: false, bias: false })
+            .splittable_out_c());
+    }
+}

@@ -1,0 +1,238 @@
+//! Tensor descriptors: shapes, dtypes and — central to the paper — the
+//! *physical data layout* of feature maps in shared memory.
+//!
+//! The paper's vertical optimization (operator linking, §4.1) is entirely a
+//! layout transformation: the producer writes its output feature map in the
+//! order the consumer will read it. We therefore model layout as first-class
+//! metadata on every tensor edge; the optimizer rewrites it, the simulator
+//! prices it, and the numeric interpreter is layout-agnostic (it computes on
+//! logical NCHW values, since linking is semantics-preserving by design).
+
+use std::fmt;
+
+/// Element type of a tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    /// 32-bit IEEE float (the only type executed numerically).
+    F32,
+    /// 16-bit float (modeled for capacity/bandwidth only).
+    F16,
+    /// 8-bit integer (modeled for capacity/bandwidth only).
+    I8,
+}
+
+impl DType {
+    /// Size of one element in bytes.
+    pub fn size_bytes(self) -> usize {
+        match self {
+            DType::F32 => 4,
+            DType::F16 => 2,
+            DType::I8 => 1,
+        }
+    }
+}
+
+/// A logical tensor shape. Feature maps use NCHW; matrices use `[rows, cols]`;
+/// vectors `[n]`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Shape {
+    pub dims: Vec<usize>,
+}
+
+impl Shape {
+    /// Arbitrary-rank shape.
+    pub fn new(dims: Vec<usize>) -> Self {
+        Shape { dims }
+    }
+
+    /// 4-D NCHW feature-map shape.
+    pub fn nchw(n: usize, c: usize, h: usize, w: usize) -> Self {
+        Shape { dims: vec![n, c, h, w] }
+    }
+
+    /// 2-D matrix shape.
+    pub fn mat(rows: usize, cols: usize) -> Self {
+        Shape { dims: vec![rows, cols] }
+    }
+
+    /// 1-D vector shape.
+    pub fn vec1(n: usize) -> Self {
+        Shape { dims: vec![n] }
+    }
+
+    /// Number of elements.
+    pub fn numel(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    /// Rank.
+    pub fn rank(&self) -> usize {
+        self.dims.len()
+    }
+
+    /// Batch dim (N) of an NCHW shape.
+    pub fn n(&self) -> usize {
+        assert_eq!(self.rank(), 4, "n() on non-4D shape {self}");
+        self.dims[0]
+    }
+
+    /// Channel dim (C) of an NCHW shape.
+    pub fn c(&self) -> usize {
+        assert_eq!(self.rank(), 4, "c() on non-4D shape {self}");
+        self.dims[1]
+    }
+
+    /// Height (H) of an NCHW shape.
+    pub fn h(&self) -> usize {
+        assert_eq!(self.rank(), 4, "h() on non-4D shape {self}");
+        self.dims[2]
+    }
+
+    /// Width (W) of an NCHW shape.
+    pub fn w(&self) -> usize {
+        assert_eq!(self.rank(), 4, "w() on non-4D shape {self}");
+        self.dims[3]
+    }
+
+    /// True if this is a 4-D feature map.
+    pub fn is_fm(&self) -> bool {
+        self.rank() == 4
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let parts: Vec<String> = self.dims.iter().map(|d| d.to_string()).collect();
+        write!(f, "[{}]", parts.join("x"))
+    }
+}
+
+/// Physical layout of a feature map in shared memory.
+///
+/// This is the lever the vertical optimization pulls. The paper's Figure 2
+/// example: a depthwise conv *writes* `Fm` width-first per channel
+/// ([`DataLayout::Chw`]) while the following pointwise conv *reads* it
+/// channel-first per pixel ([`DataLayout::Hwc`]) — a mismatch that turns
+/// every read into a compulsory cache miss. Operator linking rewrites the
+/// producer's output layout to match the consumer's access order.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DataLayout {
+    /// Channel planes one after another, each row-major ("matrices one by
+    /// one" in the paper's Figure 4). The default write order of
+    /// channel-parallel conv.
+    Chw,
+    /// Pixel-major: all channels of a pixel contiguous. The read order of a
+    /// pointwise (1×1) conv and of fully-connected layers.
+    Hwc,
+    /// Pool-window-linked zigzag order (paper Figure 4 right): channels
+    /// innermost, then the `ph`×`pw` pooling window, then windows row-major.
+    /// Produced by linked operators (CBRA/CBRM) so the pooling consumer
+    /// streams sequentially.
+    Linked {
+        /// Pooling-window height the layout is tiled for.
+        ph: u8,
+        /// Pooling-window width the layout is tiled for.
+        pw: u8,
+    },
+    /// Non-feature-map tensors (matrices, vectors): plain row-major.
+    RowMajor,
+    /// Column-major matrix layout — what the right-hand operand of a matmul
+    /// (and the input of a transpose) streams sequentially. Linking a
+    /// `MatmulX -> MatmulY` pair (paper Table 1) writes the producer's
+    /// output in this order.
+    ColMajor,
+}
+
+impl DataLayout {
+    /// Short human-readable tag.
+    pub fn tag(self) -> String {
+        match self {
+            DataLayout::Chw => "chw".to_string(),
+            DataLayout::Hwc => "hwc".to_string(),
+            DataLayout::Linked { ph, pw } => format!("lnk{}x{}", ph, pw),
+            DataLayout::RowMajor => "rm".to_string(),
+            DataLayout::ColMajor => "cm".to_string(),
+        }
+    }
+}
+
+/// Full descriptor of a tensor edge: logical shape, element type, physical
+/// layout.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorDesc {
+    pub shape: Shape,
+    pub dtype: DType,
+    pub layout: DataLayout,
+}
+
+impl TensorDesc {
+    /// F32 feature map with default CHW layout.
+    pub fn fm(n: usize, c: usize, h: usize, w: usize) -> Self {
+        TensorDesc { shape: Shape::nchw(n, c, h, w), dtype: DType::F32, layout: DataLayout::Chw }
+    }
+
+    /// F32 row-major tensor of arbitrary shape.
+    pub fn plain(shape: Shape) -> Self {
+        TensorDesc { shape, dtype: DType::F32, layout: DataLayout::RowMajor }
+    }
+
+    /// Size in bytes.
+    pub fn bytes(&self) -> u64 {
+        (self.shape.numel() * self.dtype.size_bytes()) as u64
+    }
+
+    /// Copy with a different layout.
+    pub fn with_layout(&self, layout: DataLayout) -> Self {
+        TensorDesc { layout, ..self.clone() }
+    }
+}
+
+impl fmt::Display for TensorDesc {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{:?}:{}", self.shape, self.dtype, self.layout.tag())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_accessors() {
+        let s = Shape::nchw(1, 32, 112, 112);
+        assert_eq!(s.n(), 1);
+        assert_eq!(s.c(), 32);
+        assert_eq!(s.h(), 112);
+        assert_eq!(s.w(), 112);
+        assert_eq!(s.numel(), 32 * 112 * 112);
+        assert!(s.is_fm());
+    }
+
+    #[test]
+    fn desc_bytes() {
+        let d = TensorDesc::fm(1, 2, 4, 4);
+        assert_eq!(d.bytes(), 2 * 4 * 4 * 4);
+        let h = TensorDesc { dtype: DType::F16, ..d.clone() };
+        assert_eq!(h.bytes(), 2 * 4 * 4 * 2);
+    }
+
+    #[test]
+    fn layout_tags() {
+        assert_eq!(DataLayout::Chw.tag(), "chw");
+        assert_eq!(DataLayout::Linked { ph: 2, pw: 2 }.tag(), "lnk2x2");
+    }
+
+    #[test]
+    fn with_layout_preserves_shape() {
+        let d = TensorDesc::fm(1, 8, 7, 7);
+        let l = d.with_layout(DataLayout::Hwc);
+        assert_eq!(l.shape, d.shape);
+        assert_eq!(l.layout, DataLayout::Hwc);
+    }
+
+    #[test]
+    fn display_is_compact() {
+        let d = TensorDesc::fm(1, 3, 8, 8);
+        assert_eq!(format!("{}", d), "[1x3x8x8]:F32:chw");
+    }
+}

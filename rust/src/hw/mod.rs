@@ -1,0 +1,163 @@
+//! Edge-device hardware models.
+//!
+//! The paper's testbeds (TI TMS320C6678 multi-core DSP and Xilinx ZCU102
+//! FPGA) are not available in this environment, so we model them: a
+//! [`DeviceModel`] captures exactly the resources the paper's two
+//! optimizations interact with — DSP units and their private L2, the shared
+//! on-chip memory, external DDR, cache-line size, and (for the FPGA) the
+//! LUT/FF fabric whose HLS-generated data mappers damp the layout-mismatch
+//! penalty (paper §7.2 reason (1)).
+
+pub mod presets;
+
+pub use presets::by_name;
+
+/// One level of the memory hierarchy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MemLevel {
+    /// Capacity in bytes.
+    pub capacity: u64,
+    /// Sustained bandwidth in bytes/second (per accessing unit for private
+    /// levels, aggregate for shared levels).
+    pub bandwidth: f64,
+    /// Access latency in seconds (used as the per-miss penalty).
+    pub latency: f64,
+    /// Transfer granularity (cache line / burst) in bytes.
+    pub line: usize,
+}
+
+impl MemLevel {
+    /// Time to move `bytes` sequentially (bandwidth-bound).
+    pub fn stream_time(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.bandwidth
+    }
+
+    /// Time to move `bytes` with one miss per `line` touched but only
+    /// `useful_per_line` bytes consumed — the strided/mismatched pattern.
+    pub fn strided_time(&self, useful_bytes: u64, useful_per_line: usize) -> f64 {
+        let lines = crate::util::ceil_div(useful_bytes as usize, useful_per_line.max(1)) as f64;
+        lines * (self.line as f64 / self.bandwidth + self.latency)
+    }
+}
+
+/// Inter-device link (SRIO in the paper's testbed, Ethernet otherwise).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkModel {
+    /// Bandwidth in bytes/second.
+    pub bandwidth: f64,
+    /// Per-message latency in seconds.
+    pub latency: f64,
+}
+
+impl LinkModel {
+    /// Time to transfer `bytes` in one message.
+    pub fn transfer_time(&self, bytes: u64) -> f64 {
+        self.latency + bytes as f64 / self.bandwidth
+    }
+}
+
+/// FPGA fabric resources (ZCU102-style devices).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FpgaResources {
+    /// DSP slices available.
+    pub dsp_slices: usize,
+    /// Look-up tables available.
+    pub luts: usize,
+    /// Flip-flops available.
+    pub ffs: usize,
+}
+
+/// A complete edge-device model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DeviceModel {
+    /// Preset name, e.g. `"tms320c6678"`.
+    pub name: String,
+    /// Number of independently schedulable DSP units (cores on the C6678,
+    /// effective HLS compute lanes on the ZCU102).
+    pub dsp_units: usize,
+    /// MACs per unit per cycle (f32).
+    pub macs_per_unit_cycle: f64,
+    /// Core clock in Hz.
+    pub clock_hz: f64,
+    /// Private per-unit L2 memory.
+    pub l2: MemLevel,
+    /// Shared on-chip memory (MSMC SRAM / BRAM+URAM pool).
+    pub shared: MemLevel,
+    /// External DDR.
+    pub ddr: MemLevel,
+    /// True if the fabric synthesizes LUT-based data mappers that hide most
+    /// of the layout-mismatch penalty (paper: ZCU102 yes, C6678 no).
+    pub lut_data_mapper: bool,
+    /// Default parallelism a hardware-oblivious (vanilla) deployment
+    /// achieves on this device — the paper's Vanilla baseline neither
+    /// balances nor scales its partition to the unit count.
+    pub vanilla_units: usize,
+    /// FPGA fabric (None for DSP devices).
+    pub fpga: Option<FpgaResources>,
+    /// Inter-device link for d-Xenos clusters.
+    pub link: LinkModel,
+    /// Fixed per-operator launch/sync overhead in seconds.
+    pub op_overhead: f64,
+}
+
+impl DeviceModel {
+    /// Peak MAC throughput of `units` units, in MACs/second.
+    pub fn peak_macs(&self, units: usize) -> f64 {
+        units as f64 * self.macs_per_unit_cycle * self.clock_hz
+    }
+
+    /// Useful f32 elements per cache line of the shared memory.
+    pub fn elems_per_line(&self) -> usize {
+        self.shared.line / 4
+    }
+
+    /// The mismatch read-amplification factor: how much slower a
+    /// layout-mismatched (strided) read is vs a sequential one. With a LUT
+    /// data mapper most of the penalty is hidden.
+    pub fn mismatch_factor(&self) -> f64 {
+        let raw = self.elems_per_line() as f64;
+        if self.lut_data_mapper {
+            // HLS data-mapping logic rebuilds locality at LUT cost; only a
+            // small residual penalty remains.
+            1.0 + (raw - 1.0) * 0.08
+        } else {
+            raw
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lvl() -> MemLevel {
+        MemLevel { capacity: 1 << 20, bandwidth: 1e9, latency: 50e-9, line: 64 }
+    }
+
+    #[test]
+    fn stream_time_is_bandwidth_bound() {
+        assert!((lvl().stream_time(1_000_000_000) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn strided_slower_than_stream() {
+        let l = lvl();
+        let bytes = 1 << 16;
+        assert!(l.strided_time(bytes, 4) > 4.0 * l.stream_time(bytes));
+    }
+
+    #[test]
+    fn link_transfer_includes_latency() {
+        let lk = LinkModel { bandwidth: 1e9, latency: 10e-6 };
+        let t = lk.transfer_time(1_000_000);
+        assert!((t - (10e-6 + 1e-3)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn mismatch_factor_shapes() {
+        let mut d = presets::tms320c6678();
+        assert!(d.mismatch_factor() > 8.0, "DSP device pays the full penalty");
+        d.lut_data_mapper = true;
+        assert!(d.mismatch_factor() < 3.0, "LUT mapper hides most of it");
+    }
+}

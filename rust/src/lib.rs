@@ -1,0 +1,51 @@
+//! # Xenos — dataflow-centric optimization for edge-device model inference
+//!
+//! Reproduction of *"Xenos: Dataflow-Centric Optimization to Accelerate Model
+//! Inference on Edge Devices"* (2023) as a three-layer Rust + JAX + Pallas
+//! stack:
+//!
+//! * **Layer 3 (this crate)** — the Xenos system itself: computation-graph IR,
+//!   the dataflow-centric optimizer (operator *linking* for vertical dataflow
+//!   optimization and *DSP-aware operator split* for horizontal optimization),
+//!   an edge-device simulator (memory hierarchy + DSP units), the serving
+//!   coordinator, and the distributed d-Xenos runtime.
+//! * **Layer 2 (python/compile/model.py)** — JAX model definitions lowered
+//!   once ahead-of-time to HLO text artifacts.
+//! * **Layer 1 (python/compile/kernels/)** — Pallas kernels implementing the
+//!   linked/fused operators, lowered inside the L2 graph.
+//!
+//! Python never runs on the request path: the Rust binary loads the
+//! AOT-compiled artifacts through PJRT (`runtime::pjrt`) and serves requests
+//! with the coordinator in `serve`.
+//!
+//! ## Crate map
+//!
+//! | module | paper section | role |
+//! |--------|---------------|------|
+//! | [`graph`] | §3 | computation-graph IR, tensors, layouts, model zoo |
+//! | [`ops`] | §6.1 | numeric operator library (CPU reference execution) |
+//! | [`hw`] | §2.3 | edge-device hardware models (TMS320C6678, ZCU102, …) |
+//! | [`sim`] | §7 | memory-hierarchy + DSP-unit simulator and cost model |
+//! | [`opt`] | §4 | the Xenos optimizer: fusion, operator linking (VO), DOS (HO) |
+//! | [`baselines`] | §7.1 | Vanilla / HO-only / TVM-like / GPU baselines |
+//! | [`runtime`] | §6 | PJRT artifact loading + the Xenos inference engine |
+//! | [`serve`] | §2.1 | request router, dynamic batcher, DSP scheduler |
+//! | [`dist`] | §5 | d-Xenos: ring all-reduce & PS sync, partition search |
+//! | [`exp`] | §7 | experiment drivers reproducing every table & figure |
+
+pub mod baselines;
+pub mod dist;
+pub mod exp;
+pub mod graph;
+pub mod hw;
+pub mod ops;
+pub mod opt;
+pub mod runtime;
+pub mod serve;
+pub mod sim;
+pub mod testkit;
+pub mod util;
+
+pub use graph::{Graph, NodeId};
+pub use hw::DeviceModel;
+pub use opt::{optimize, OptimizeOptions};

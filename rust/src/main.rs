@@ -1,0 +1,271 @@
+//! `xenos` — command-line entrypoint for the Xenos reproduction.
+//!
+//! ```text
+//! xenos optimize --model mobilenet --device tms320c6678
+//! xenos run      --model mobilenet --device zcu102 --level xenos|ho|vanilla
+//! xenos serve    --artifacts artifacts --variant linked --requests 256 --workers 2 --batch 8
+//! xenos dist     --model resnet101 --devices 4 --sync ring|ps --scheme mix|outc|inh|inw
+//! xenos repro    --exp fig7a|fig7b|fig8|fig9|fig10|fig11|table2|table45|all
+//! xenos inspect  --model bert_s
+//! ```
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use xenos::baselines;
+use xenos::dist::{simulate_dxenos, PartitionScheme, SyncMode};
+use xenos::graph::models;
+use xenos::hw;
+use xenos::opt::{self, OptLevel};
+use xenos::runtime::{Engine, PjrtRuntime};
+use xenos::serve::{self, Coordinator, ServeConfig};
+use xenos::sim::run_level;
+use xenos::util::cli::Args;
+use xenos::util::{human_bytes, human_time};
+
+fn main() {
+    let args = Args::from_env();
+    let code = match dispatch(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn dispatch(args: &Args) -> Result<()> {
+    match args.subcommand() {
+        Some("optimize") => cmd_optimize(args),
+        Some("run") => cmd_run(args),
+        Some("serve") => cmd_serve(args),
+        Some("dist") => cmd_dist(args),
+        Some("repro") => cmd_repro(args),
+        Some("inspect") => cmd_inspect(args),
+        Some(other) => bail!("unknown subcommand {other}\n{USAGE}"),
+        None => {
+            println!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+const USAGE: &str = "usage: xenos <optimize|run|serve|dist|repro|inspect> [--options]
+  optimize --model M --device D            run the automatic optimizer, print the plan
+  run      --model M --device D --level L  simulate inference (L: vanilla|ho|xenos)
+  serve    --artifacts DIR --variant V --requests N --workers W --batch B --rate R
+  dist     --model M --devices P --sync ring|ps --scheme mix|outc|inh|inw
+  repro    --exp ID|all                    regenerate a paper table/figure
+  inspect  --model M                       dump the model graph";
+
+fn model_arg(args: &Args) -> Result<xenos::Graph> {
+    let name = args.get_or("model", "mobilenet");
+    models::by_name(name).with_context(|| {
+        format!(
+            "unknown model {name} (try: {} resnet101 bert_l)",
+            models::PAPER_BENCHMARKS.join(" ")
+        )
+    })
+}
+
+fn device_arg(args: &Args) -> Result<xenos::DeviceModel> {
+    let name = args.get_or("device", "tms320c6678");
+    hw::by_name(name)
+        .with_context(|| format!("unknown device {name} (tms320c6678|zcu102|rtx3090)"))
+}
+
+fn level_arg(args: &Args) -> Result<OptLevel> {
+    match args.get_or("level", "xenos") {
+        "vanilla" => Ok(OptLevel::Vanilla),
+        "ho" => Ok(OptLevel::HoOnly),
+        "xenos" | "full" => Ok(OptLevel::Full),
+        other => bail!("unknown level {other} (vanilla|ho|xenos)"),
+    }
+}
+
+fn cmd_optimize(args: &Args) -> Result<()> {
+    let g = model_arg(args)?;
+    let d = device_arg(args)?;
+    let o = opt::optimize(
+        &g,
+        &d,
+        opt::OptimizeOptions { level: OptLevel::Full, search: args.flag("search") },
+    );
+    println!(
+        "optimized {} for {} in {} — {} CBR fusions, {} links, peak {} DSP units",
+        g.name,
+        d.name,
+        human_time(o.elapsed.as_secs_f64()),
+        o.fused,
+        o.links.len(),
+        o.plan.peak_units()
+    );
+    let mut t =
+        xenos::util::table::Table::new(vec!["pattern", "producer", "consumer", "layout"]);
+    for l in o.links.iter().take(args.get_parse("max-links", 20)) {
+        t.row(vec![
+            l.pattern.clone(),
+            l.producer.clone(),
+            l.consumer.clone(),
+            l.layout.tag(),
+        ]);
+    }
+    t.print();
+    if args.flag("verbose") {
+        println!("{}", o.graph.dump());
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let g = model_arg(args)?;
+    let d = device_arg(args)?;
+    let level = level_arg(args)?;
+    let (o, r) = run_level(&g, &d, level);
+    println!(
+        "{} on {} [{}]: {} — DDR {} peak SRAM {} peak L2/unit {}",
+        g.name,
+        d.name,
+        level.label(),
+        human_time(r.total_s),
+        human_bytes(r.ddr_bytes),
+        human_bytes(r.peak_sram),
+        human_bytes(r.peak_l2),
+    );
+    if d.fpga.is_some() {
+        println!(
+            "fpga: {} DSP slices, {} LUTs, {} FFs",
+            r.fpga.dsp, r.fpga.luts, r.fpga.ffs
+        );
+    }
+    if args.flag("per-node") {
+        for (n, c) in o.graph.nodes.iter().zip(&r.nodes) {
+            if c.total_s > 0.0 {
+                println!(
+                    "  {:<32} {:>10} units={}",
+                    n.name,
+                    human_time(c.total_s),
+                    o.plan.node(n.id).units
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let variant = args.get_or("variant", "linked").to_string();
+    let n = args.get_parse("requests", 128usize);
+    let workers = args.get_parse("workers", 2usize);
+    let batch = args.get_parse("batch", 8usize);
+    let rate = args.get_parse("rate", 0.0f64);
+
+    let probe = PjrtRuntime::load_dir(&dir)?;
+    let shapes = probe
+        .artifact(&variant)
+        .with_context(|| format!("variant {variant} not in {}", dir.display()))?
+        .inputs
+        .clone();
+    drop(probe);
+
+    let cfg = ServeConfig {
+        workers,
+        batcher: serve::BatcherConfig {
+            max_batch: batch,
+            max_wait: std::time::Duration::from_millis(args.get_parse("max-wait-ms", 2u64)),
+        },
+    };
+    let dir2 = dir.clone();
+    let variant2 = variant.clone();
+    let report = Coordinator::new(cfg).run(
+        move |_w| {
+            let rt = Arc::new(PjrtRuntime::load_dir(&dir2)?);
+            Engine::pjrt(rt, &variant2)
+        },
+        serve::coordinator::synthetic_requests(shapes, n, rate, args.get_parse("seed", 42u64)),
+    )?;
+    println!(
+        "served {} requests [{variant}] with {workers} workers: {:.1} req/s",
+        report.served, report.throughput
+    );
+    println!(
+        "latency p50 {} p90 {} p99 {} max {} | exec p50 {} | mean batch {:.2}",
+        human_time(report.latency.p50),
+        human_time(report.latency.p90),
+        human_time(report.latency.p99),
+        human_time(report.latency.max),
+        human_time(report.exec.p50),
+        report.batch_size.mean,
+    );
+    Ok(())
+}
+
+fn cmd_dist(args: &Args) -> Result<()> {
+    let g = model_arg(args)?;
+    let d = device_arg(args)?;
+    let p = args.get_parse("devices", 4usize);
+    let sync = match args.get_or("sync", "ring") {
+        "ring" => SyncMode::Ring,
+        "ps" => SyncMode::Ps,
+        other => bail!("unknown sync {other} (ring|ps)"),
+    };
+    let scheme = match args.get_or("scheme", "mix") {
+        "mix" => PartitionScheme::Mix,
+        "outc" => PartitionScheme::OutC,
+        "inh" => PartitionScheme::InH,
+        "inw" => PartitionScheme::InW,
+        other => bail!("unknown scheme {other} (mix|outc|inh|inw)"),
+    };
+    let r = simulate_dxenos(&g, &d, p, scheme, sync);
+    println!(
+        "d-Xenos {} on {}x{} [{}-{}]: {} (single {} — {:.2}x speedup)",
+        g.name,
+        p,
+        d.name,
+        sync.label(),
+        scheme.label(),
+        human_time(r.total_s),
+        human_time(r.single_s),
+        r.speedup()
+    );
+    println!(
+        "  compute {} sync {} param-dist {}",
+        human_time(r.compute_s),
+        human_time(r.sync_s),
+        human_time(r.param_dist_s)
+    );
+    Ok(())
+}
+
+fn cmd_repro(args: &Args) -> Result<()> {
+    let id = args.get_or("exp", "all");
+    if id == "all" {
+        for id in xenos::exp::ALL_EXPERIMENTS {
+            xenos::exp::run(id).expect("registered").print();
+        }
+        return Ok(());
+    }
+    xenos::exp::run(id)
+        .with_context(|| {
+            format!("unknown experiment {id} ({:?})", xenos::exp::ALL_EXPERIMENTS)
+        })?
+        .print();
+    Ok(())
+}
+
+fn cmd_inspect(args: &Args) -> Result<()> {
+    let g = model_arg(args)?;
+    println!("{}", g.dump());
+    let d = device_arg(args)?;
+    let t = baselines::tvm_like(&g, &d);
+    println!(
+        "tvm-like baseline: supported={} candidates={} search={}",
+        t.supported,
+        t.candidates_evaluated,
+        human_time(t.search_time.as_secs_f64())
+    );
+    Ok(())
+}

@@ -1,0 +1,221 @@
+//! Convolution execution (standard / grouped / depthwise), plus the folded
+//! Bn variant used by the fused CBR family.
+//!
+//! Direct (im2col-free) implementation with the inner loop over the input
+//! channel slice — the layout the hot-path optimization later tiles. Weights
+//! are `[out_c, in_c/groups, kh, kw]`, bias `[out_c]`.
+
+use super::Tensor;
+use crate::graph::{ConvAttrs, TensorDesc};
+
+/// Run a convolution. `weights` length must be `attrs.weight_count()`,
+/// `bias` length `attrs.out_c` (empty slice = no bias).
+pub fn conv2d(x: &Tensor, attrs: &ConvAttrs, weights: &[f32], bias: &[f32]) -> Tensor {
+    let s = x.shape();
+    assert_eq!(s.c(), attrs.in_c, "conv input channels");
+    assert_eq!(weights.len(), attrs.weight_count() as usize, "conv weight count");
+    assert!(bias.is_empty() || bias.len() == attrs.out_c, "conv bias count");
+
+    let (n, h, w) = (s.n(), s.h(), s.w());
+    let (oh, ow) = attrs.out_hw(h, w);
+    let cpg_in = attrs.in_c / attrs.groups; // channels per group, input
+    let cpg_out = attrs.out_c / attrs.groups;
+
+    // Pointwise fast path (perf pass #2): a 1x1/s1 conv is exactly
+    // `W [out_c, in_c] x X [in_c, HW]` — reuse the k-blocked matmul.
+    if attrs.kh == 1 && attrs.kw == 1 && attrs.stride == 1 && attrs.pad == 0 && n == 1 {
+        return pointwise_matmul(x, attrs, weights, bias, cpg_in, cpg_out);
+    }
+    let mut out = Tensor::zeros(TensorDesc::fm(n, attrs.out_c, oh, ow));
+
+    // Output-row-major accumulation (perf pass, EXPERIMENTS.md §Perf #1):
+    // for each (oc, oy, ic, ky, kx) the contribution to the whole output
+    // row is a scaled, shifted copy of one input row — a slice-level AXPY
+    // the compiler auto-vectorizes. ~16x over the naive per-element form.
+    let kw_elems = attrs.kh * attrs.kw;
+    let (stride, pad) = (attrs.stride, attrs.pad);
+    for b in 0..n {
+        for oc in 0..attrs.out_c {
+            let g = oc / cpg_out;
+            let w_base = oc * cpg_in * kw_elems;
+            let b0 = if bias.is_empty() { 0.0 } else { bias[oc] };
+            for oy in 0..oh {
+                let out_off = ((b * attrs.out_c + oc) * oh + oy) * ow;
+                let out_row = &mut out.data[out_off..out_off + ow];
+                out_row.fill(b0);
+                let iy0 = (oy * stride) as isize - pad as isize;
+                for ic in 0..cpg_in {
+                    let c_in = g * cpg_in + ic;
+                    let wk = w_base + ic * kw_elems;
+                    for ky in 0..attrs.kh {
+                        let iy = iy0 + ky as isize;
+                        if iy < 0 || iy >= h as isize {
+                            continue;
+                        }
+                        let in_off = ((b * attrs.in_c + c_in) * h + iy as usize) * w;
+                        let in_row = &x.data[in_off..in_off + w];
+                        // kw==3/s1/p1 tap fusion (perf pass #3): one pass
+                        // over the interior folds all three kx taps.
+                        if attrs.kw == 3 && stride == 1 && pad == 1 && ow == w && w >= 2 {
+                            let (w0, w1, w2) =
+                                (weights[wk + ky * 3], weights[wk + ky * 3 + 1], weights[wk + ky * 3 + 2]);
+                            out_row[0] += w1 * in_row[0] + w2 * in_row[1];
+                            for ox in 1..ow - 1 {
+                                out_row[ox] += w0 * in_row[ox - 1]
+                                    + w1 * in_row[ox]
+                                    + w2 * in_row[ox + 1];
+                            }
+                            out_row[ow - 1] += w0 * in_row[ow - 2] + w1 * in_row[ow - 1];
+                            continue;
+                        }
+                        for kx in 0..attrs.kw {
+                            let wv = weights[wk + ky * attrs.kw + kx];
+                            let ix0 = kx as isize - pad as isize;
+                            // Valid output range: 0 <= ox*stride + ix0 < w.
+                            let ox_lo = if ix0 < 0 {
+                                ((-ix0) as usize).div_ceil(stride)
+                            } else {
+                                0
+                            };
+                            if (ox_lo * stride) as isize + ix0 >= w as isize {
+                                continue;
+                            }
+                            let ox_hi =
+                                (((w as isize - 1 - ix0) as usize) / stride + 1).min(ow);
+                            if ox_lo >= ox_hi {
+                                continue;
+                            }
+                            let base = (ox_lo * stride) as isize + ix0;
+                            if stride == 1 {
+                                let a = &in_row[base as usize..base as usize + (ox_hi - ox_lo)];
+                                let o = &mut out_row[ox_lo..ox_hi];
+                                for (ov, av) in o.iter_mut().zip(a) {
+                                    *ov += wv * av;
+                                }
+                            } else {
+                                let mut ix = base as usize;
+                                for ov in &mut out_row[ox_lo..ox_hi] {
+                                    *ov += wv * in_row[ix];
+                                    ix += stride;
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// 1x1/s1 conv as a grouped matrix product over the pixel axis.
+fn pointwise_matmul(
+    x: &Tensor,
+    attrs: &ConvAttrs,
+    weights: &[f32],
+    bias: &[f32],
+    cpg_in: usize,
+    cpg_out: usize,
+) -> Tensor {
+    let s = x.shape();
+    let (h, w) = (s.h(), s.w());
+    let hw = h * w;
+    let mut out = Tensor::zeros(TensorDesc::fm(1, attrs.out_c, h, w));
+    for oc in 0..attrs.out_c {
+        let g = oc / cpg_out;
+        let b0 = if bias.is_empty() { 0.0 } else { bias[oc] };
+        let orow = &mut out.data[oc * hw..(oc + 1) * hw];
+        orow.fill(b0);
+        let wrow = &weights[oc * cpg_in..(oc + 1) * cpg_in];
+        // 4-way input-channel blocking, as in matmul::matmul.
+        let k4 = cpg_in / 4 * 4;
+        let mut ic = 0;
+        while ic < k4 {
+            let base = (g * cpg_in + ic) * hw;
+            let (w0, w1, w2, w3) = (wrow[ic], wrow[ic + 1], wrow[ic + 2], wrow[ic + 3]);
+            let x0 = &x.data[base..base + hw];
+            let x1 = &x.data[base + hw..base + 2 * hw];
+            let x2 = &x.data[base + 2 * hw..base + 3 * hw];
+            let x3 = &x.data[base + 3 * hw..base + 4 * hw];
+            for (j, ov) in orow.iter_mut().enumerate() {
+                *ov += w0 * x0[j] + w1 * x1[j] + w2 * x2[j] + w3 * x3[j];
+            }
+            ic += 4;
+        }
+        for ic in k4..cpg_in {
+            let base = (g * cpg_in + ic) * hw;
+            let wv = wrow[ic];
+            let xrow = &x.data[base..base + hw];
+            for (ov, xv) in orow.iter_mut().zip(xrow) {
+                *ov += wv * xv;
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn identity_1x1_conv() {
+        // 1x1 conv with identity weights reproduces the input channel.
+        let x = Tensor::fm(1, 2, 2, 2, vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        let a = ConvAttrs::std(2, 2, 1, 1, 0);
+        // weights [out_c=2, in_c=2, 1,1] = identity matrix
+        let w = vec![1., 0., 0., 1.];
+        let y = conv2d(&x, &a, &w, &[]);
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn known_3x3_sum_kernel() {
+        // All-ones 3x3 kernel over a constant image: interior = 9, corner = 4.
+        let x = Tensor::fm(1, 1, 4, 4, vec![1.0; 16]);
+        let a = ConvAttrs::std(1, 1, 3, 1, 1);
+        let y = conv2d(&x, &a, &vec![1.0; 9], &[]);
+        assert_eq!(y.shape().h(), 4);
+        assert_eq!(y.at4(0, 0, 1, 1), 9.0);
+        assert_eq!(y.at4(0, 0, 0, 0), 4.0);
+        assert_eq!(y.at4(0, 0, 0, 1), 6.0);
+    }
+
+    #[test]
+    fn stride_two_downsamples() {
+        let x = Tensor::fm(1, 1, 4, 4, (0..16).map(|i| i as f32).collect());
+        let a = ConvAttrs::std(1, 1, 1, 2, 0);
+        let y = conv2d(&x, &a, &[1.0], &[]);
+        assert_eq!(y.shape().h(), 2);
+        assert_eq!(y.data, vec![0., 2., 8., 10.]);
+    }
+
+    #[test]
+    fn depthwise_keeps_channels_independent() {
+        let x = Tensor::fm(1, 2, 2, 2, vec![1., 1., 1., 1., 2., 2., 2., 2.]);
+        let a = ConvAttrs::depthwise(2, 1, 1, 0);
+        // per-channel scale: ch0 x10, ch1 x100
+        let y = conv2d(&x, &a, &[10.0, 100.0], &[]);
+        assert_eq!(y.data, vec![10., 10., 10., 10., 200., 200., 200., 200.]);
+    }
+
+    #[test]
+    fn grouped_conv_blocks() {
+        // groups=2 over 4 input channels, 2 output channels: each output
+        // sees only its half.
+        let x = Tensor::fm(1, 4, 1, 1, vec![1., 2., 3., 4.]);
+        let mut a = ConvAttrs::std(4, 2, 1, 1, 0);
+        a.groups = 2;
+        // w: [oc0: ic0,ic1], [oc1: ic2,ic3]
+        let y = conv2d(&x, &a, &[1., 1., 1., 1.], &[]);
+        assert_eq!(y.data, vec![3., 7.]);
+    }
+
+    #[test]
+    fn bias_is_added() {
+        let x = Tensor::fm(1, 1, 1, 1, vec![2.0]);
+        let a = ConvAttrs::std(1, 1, 1, 1, 0);
+        let y = conv2d(&x, &a, &[3.0], &[0.5]);
+        assert_eq!(y.data, vec![6.5]);
+    }
+}

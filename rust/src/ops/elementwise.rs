@@ -1,0 +1,188 @@
+//! Element-wise and normalization operators: activations, arithmetic,
+//! inference-form BatchNorm, Softmax, LayerNorm.
+
+use super::Tensor;
+
+/// ReLU.
+pub fn relu(x: &Tensor) -> Tensor {
+    map(x, |v| v.max(0.0))
+}
+
+/// Sigmoid.
+pub fn sigmoid(x: &Tensor) -> Tensor {
+    map(x, |v| 1.0 / (1.0 + (-v).exp()))
+}
+
+/// Tanh.
+pub fn tanh(x: &Tensor) -> Tensor {
+    map(x, f32::tanh)
+}
+
+/// GELU (tanh approximation, as used by Bert).
+pub fn gelu(x: &Tensor) -> Tensor {
+    map(x, |v| {
+        0.5 * v * (1.0 + (0.797_884_6 * (v + 0.044_715 * v * v * v)).tanh())
+    })
+}
+
+/// Element-wise sum.
+pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
+    zip(a, b, |x, y| x + y)
+}
+
+/// Element-wise product.
+pub fn mul(a: &Tensor, b: &Tensor) -> Tensor {
+    zip(a, b, |x, y| x * y)
+}
+
+/// Element-wise multiply-accumulate `a*b + c` (the paper's `x.mac`).
+pub fn mac(a: &Tensor, b: &Tensor, c: &Tensor) -> Tensor {
+    assert_eq!(a.shape(), b.shape());
+    assert_eq!(a.shape(), c.shape());
+    let data = a
+        .data
+        .iter()
+        .zip(&b.data)
+        .zip(&c.data)
+        .map(|((x, y), z)| x * y + z)
+        .collect();
+    Tensor::new(a.desc.clone(), data)
+}
+
+/// Inference BatchNorm: per-channel `scale * x + shift` on a feature map.
+pub fn batchnorm(x: &Tensor, scale: &[f32], shift: &[f32]) -> Tensor {
+    let s = x.shape();
+    assert!(s.is_fm(), "batchnorm needs a feature map");
+    assert_eq!(scale.len(), s.c());
+    assert_eq!(shift.len(), s.c());
+    let (n, c, h, w) = (s.n(), s.c(), s.h(), s.w());
+    let hw = h * w;
+    let mut out = x.clone();
+    for b in 0..n {
+        for ch in 0..c {
+            let base = (b * c + ch) * hw;
+            for i in 0..hw {
+                out.data[base + i] = out.data[base + i] * scale[ch] + shift[ch];
+            }
+        }
+    }
+    out
+}
+
+/// Per-channel bias on a feature map.
+pub fn bias_fm(x: &Tensor, bias: &[f32]) -> Tensor {
+    let ones = vec![1.0; bias.len()];
+    batchnorm(x, &ones, bias)
+}
+
+/// Softmax over the last axis.
+pub fn softmax(x: &Tensor) -> Tensor {
+    let dims = &x.shape().dims;
+    let last = *dims.last().expect("softmax on scalar");
+    let rows = x.shape().numel() / last;
+    let mut out = x.clone();
+    for r in 0..rows {
+        let row = &mut out.data[r * last..(r + 1) * last];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            sum += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= sum;
+        }
+    }
+    out
+}
+
+/// LayerNorm over the last axis (unit gain, zero bias — the graph models the
+/// affine as folded).
+pub fn layernorm(x: &Tensor) -> Tensor {
+    let dims = &x.shape().dims;
+    let last = *dims.last().expect("layernorm on scalar");
+    let rows = x.shape().numel() / last;
+    let mut out = x.clone();
+    for r in 0..rows {
+        let row = &mut out.data[r * last..(r + 1) * last];
+        let mean = row.iter().sum::<f32>() / last as f32;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / last as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for v in row.iter_mut() {
+            *v = (*v - mean) * inv;
+        }
+    }
+    out
+}
+
+fn map(x: &Tensor, f: impl Fn(f32) -> f32) -> Tensor {
+    Tensor::new(x.desc.clone(), x.data.iter().map(|&v| f(v)).collect())
+}
+
+fn zip(a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32) -> Tensor {
+    assert_eq!(a.shape(), b.shape(), "elementwise shape mismatch");
+    let data = a.data.iter().zip(&b.data).map(|(&x, &y)| f(x, y)).collect();
+    Tensor::new(a.desc.clone(), data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn relu_clamps() {
+        let x = Tensor::mat(1, 4, vec![-1., 0., 2., -3.]);
+        assert_eq!(relu(&x).data, vec![0., 0., 2., 0.]);
+    }
+
+    #[test]
+    fn sigmoid_at_zero_is_half() {
+        let x = Tensor::mat(1, 1, vec![0.0]);
+        assert!((sigmoid(&x).data[0] - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gelu_known_values() {
+        let x = Tensor::mat(1, 3, vec![0.0, 1.0, -1.0]);
+        let y = gelu(&x);
+        assert!((y.data[0]).abs() < 1e-6);
+        assert!((y.data[1] - 0.8412).abs() < 1e-3);
+        assert!((y.data[2] + 0.1588).abs() < 1e-3);
+    }
+
+    #[test]
+    fn mac_combines() {
+        let a = Tensor::mat(1, 2, vec![2., 3.]);
+        let b = Tensor::mat(1, 2, vec![10., 10.]);
+        let c = Tensor::mat(1, 2, vec![1., -1.]);
+        assert_eq!(mac(&a, &b, &c).data, vec![21., 29.]);
+    }
+
+    #[test]
+    fn batchnorm_per_channel() {
+        let x = Tensor::fm(1, 2, 1, 2, vec![1., 2., 3., 4.]);
+        let y = batchnorm(&x, &[2.0, 10.0], &[0.5, 0.0]);
+        assert_eq!(y.data, vec![2.5, 4.5, 30., 40.]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let x = Tensor::mat(2, 3, vec![1., 2., 3., 0., 0., 0.]);
+        let y = softmax(&x);
+        let r0: f32 = y.data[..3].iter().sum();
+        let r1: f32 = y.data[3..].iter().sum();
+        assert!((r0 - 1.0).abs() < 1e-6);
+        assert!((r1 - 1.0).abs() < 1e-6);
+        assert!((y.data[3] - 1.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let x = Tensor::mat(1, 4, vec![1., 2., 3., 4.]);
+        let y = layernorm(&x);
+        let mean: f32 = y.data.iter().sum::<f32>() / 4.0;
+        let var: f32 = y.data.iter().map(|v| v * v).sum::<f32>() / 4.0;
+        assert!(mean.abs() < 1e-5);
+        assert!((var - 1.0).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,245 @@
+//! Graph interpreter — executes a computation graph on concrete tensors.
+//!
+//! Used by the equivalence tests (vanilla vs optimized graphs must produce
+//! identical outputs), by the serving engine as the execution backend for
+//! models without AOT artifacts, and by the examples.
+
+use super::params::ParamStore;
+use super::{conv, elementwise as ew, matmul, pool, shape_ops, Tensor};
+use crate::graph::{Graph, NodeId, OpKind};
+
+/// Interpreter bound to a graph and its (deterministic) parameters.
+pub struct Interpreter<'g> {
+    graph: &'g Graph,
+    params: ParamStore,
+}
+
+impl<'g> Interpreter<'g> {
+    /// Create an interpreter, synthesizing parameters for the graph.
+    pub fn new(graph: &'g Graph) -> Self {
+        Interpreter { graph, params: ParamStore::for_graph(graph) }
+    }
+
+    /// Create an interpreter with an externally provided parameter store.
+    pub fn with_params(graph: &'g Graph, params: ParamStore) -> Self {
+        Interpreter { graph, params }
+    }
+
+    /// Parameter store accessor (used by the PJRT runtime to feed the same
+    /// weights to AOT artifacts).
+    pub fn params(&self) -> &ParamStore {
+        &self.params
+    }
+
+    /// Run the graph on the given inputs (one tensor per `OpKind::Input`
+    /// node, in graph order). Returns the output tensors in `outputs` order.
+    pub fn run(&self, inputs: &[Tensor]) -> Vec<Tensor> {
+        let input_ids = self.graph.input_ids();
+        assert_eq!(
+            inputs.len(),
+            input_ids.len(),
+            "graph {} expects {} inputs",
+            self.graph.name,
+            input_ids.len()
+        );
+
+        // Remaining-use refcount for memory reclamation.
+        let mut uses: Vec<usize> = vec![0; self.graph.len()];
+        for n in &self.graph.nodes {
+            for &i in &n.inputs {
+                uses[i] += 1;
+            }
+        }
+        for &o in &self.graph.outputs {
+            uses[o] += 1;
+        }
+
+        // Dense value slots (perf pass: HashMap per-node overhead removed).
+        let mut values: Vec<Option<Tensor>> = (0..self.graph.len()).map(|_| None).collect();
+        let mut next_input = 0usize;
+        for n in &self.graph.nodes {
+            let out = if matches!(n.op, OpKind::Input) {
+                let t = inputs[next_input].clone();
+                assert_eq!(
+                    t.shape(),
+                    &n.out.shape,
+                    "input {} shape mismatch for node {}",
+                    next_input,
+                    n.name
+                );
+                next_input += 1;
+                t
+            } else {
+                let args: Vec<&Tensor> = n
+                    .inputs
+                    .iter()
+                    .map(|&i| values[i].as_ref().expect("input value should be live"))
+                    .collect();
+                self.exec(n.id, &n.op, &args)
+            };
+            values[n.id] = Some(out);
+            // Release inputs whose last consumer has run.
+            for &i in &n.inputs {
+                uses[i] -= 1;
+                if uses[i] == 0 && !self.graph.outputs.contains(&i) {
+                    values[i] = None;
+                }
+            }
+        }
+        self.graph
+            .outputs
+            .iter()
+            .map(|&o| values[o].clone().expect("output computed"))
+            .collect()
+    }
+
+    fn exec(&self, id: NodeId, op: &OpKind, args: &[&Tensor]) -> Tensor {
+        let p = self.params.get_ref(id);
+        match op {
+            OpKind::Input => unreachable!("inputs handled by run()"),
+            OpKind::Conv(a) => conv::conv2d(args[0], a, &p.w, &p.bias),
+            OpKind::Cbr(a) => {
+                let c = conv::conv2d(args[0], a, &p.w, &p.bias);
+                let b = ew::batchnorm(&c, &p.scale, &p.shift);
+                ew::relu(&b)
+            }
+            OpKind::Cbra(a, pl) | OpKind::Cbrm(a, pl) => {
+                let c = conv::conv2d(args[0], a, &p.w, &p.bias);
+                let b = ew::batchnorm(&c, &p.scale, &p.shift);
+                let r = ew::relu(&b);
+                pool::pool(&r, pl)
+            }
+            OpKind::Pool(a) => pool::pool(args[0], a),
+            OpKind::MatMul(m) => {
+                if m.weighted {
+                    matmul::fc(args[0], m.k, m.n, &p.w, &p.bias)
+                } else {
+                    matmul::matmul(args[0], args[1])
+                }
+            }
+            OpKind::BatchNorm => ew::batchnorm(args[0], &p.scale, &p.shift),
+            OpKind::Bias => ew::bias_fm(args[0], &p.bias),
+            OpKind::Relu => ew::relu(args[0]),
+            OpKind::Sigmoid => ew::sigmoid(args[0]),
+            OpKind::Tanh => ew::tanh(args[0]),
+            OpKind::Gelu => ew::gelu(args[0]),
+            OpKind::Softmax => ew::softmax(args[0]),
+            OpKind::LayerNorm => ew::layernorm(args[0]),
+            OpKind::Add => ew::add(args[0], args[1]),
+            OpKind::Mul => ew::mul(args[0], args[1]),
+            OpKind::Mac => ew::mac(args[0], args[1], args[2]),
+            OpKind::Concat => shape_ops::concat_c(args),
+            OpKind::Slice { begin, end } => shape_ops::slice_c(args[0], *begin, *end),
+            OpKind::Transpose => shape_ops::transpose(args[0]),
+            OpKind::ChannelShuffle { groups } => shape_ops::channel_shuffle(args[0], *groups),
+            OpKind::Upsample { factor } => shape_ops::upsample(args[0], *factor),
+        }
+    }
+
+    /// Convenience: run on deterministic synthetic inputs from `seed`.
+    pub fn run_synthetic(&self, seed: u64) -> Vec<Tensor> {
+        let inputs = synthetic_inputs(self.graph, seed);
+        self.run(&inputs)
+    }
+}
+
+/// Deterministic synthetic inputs for a graph.
+pub fn synthetic_inputs(graph: &Graph, seed: u64) -> Vec<Tensor> {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    graph
+        .input_ids()
+        .iter()
+        .map(|&id| {
+            let desc = graph.node(id).out.clone();
+            let n = desc.shape.numel();
+            Tensor::new(desc, rng.vec_uniform(n))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, Shape};
+
+    fn small_cnn() -> Graph {
+        let mut b = GraphBuilder::new("small_cnn");
+        let x = b.input("x", Shape::nchw(1, 3, 16, 16));
+        let c1 = b.conv_bn_relu("c1", x, 8, 3, 1, 1);
+        let p1 = b.avgpool("p1", c1, 2, 2);
+        let c2 = b.conv_bn_relu("c2", p1, 16, 3, 2, 1);
+        let gp = b.global_pool("gp", c2);
+        let fc = b.fc("fc", gp, 10);
+        let sm = b.softmax("sm", fc);
+        b.output(sm);
+        b.finish()
+    }
+
+    #[test]
+    fn runs_small_cnn_to_valid_distribution() {
+        let g = small_cnn();
+        let it = Interpreter::new(&g);
+        let out = it.run_synthetic(42);
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].shape(), &Shape::mat(1, 10));
+        let sum: f32 = out[0].data.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-5, "softmax must sum to 1, got {sum}");
+        assert!(out[0].data.iter().all(|v| *v >= 0.0));
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let g = small_cnn();
+        let a = Interpreter::new(&g).run_synthetic(7);
+        let b = Interpreter::new(&g).run_synthetic(7);
+        assert_eq!(a[0].data, b[0].data);
+    }
+
+    #[test]
+    fn different_seeds_different_outputs() {
+        let g = small_cnn();
+        let a = Interpreter::new(&g).run_synthetic(1);
+        let b = Interpreter::new(&g).run_synthetic(2);
+        assert!(a[0].max_abs_diff(&b[0]) > 0.0);
+    }
+
+    #[test]
+    fn multi_output_graph() {
+        let mut b = GraphBuilder::new("multi");
+        let x = b.input("x", Shape::nchw(1, 4, 4, 4));
+        let a = b.relu("a", x);
+        let s = b.sigmoid("s", x);
+        b.output(a);
+        b.output(s);
+        let g = b.finish();
+        let out = Interpreter::new(&g).run_synthetic(3);
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn fused_cbr_matches_unfused_chain() {
+        // Hand-build the fused node with fused_from matching the vanilla
+        // names: must produce identical numerics.
+        use crate::graph::{ConvAttrs, OpKind, TensorDesc};
+        let vanilla = {
+            let mut b = GraphBuilder::new("v");
+            let x = b.input("x", Shape::nchw(1, 3, 8, 8));
+            let y = b.conv_bn_relu("blk", x, 8, 3, 1, 1);
+            b.output(y);
+            b.finish()
+        };
+        let fused = {
+            let mut g = Graph::new("f");
+            let x = g.push("x", OpKind::Input, vec![], TensorDesc::fm(1, 3, 8, 8));
+            let a = ConvAttrs::std(3, 8, 3, 1, 1);
+            let c = g.push("blk", OpKind::Cbr(a), vec![x], TensorDesc::fm(1, 8, 8, 8));
+            g.node_mut(c).fused_from =
+                vec!["blk/conv".to_string(), "blk/bn".to_string(), "blk/relu".to_string()];
+            g.outputs.push(c);
+            g
+        };
+        let a = Interpreter::new(&vanilla).run_synthetic(5);
+        let b = Interpreter::new(&fused).run_synthetic(5);
+        assert_eq!(a[0].data, b[0].data, "fused CBR must be bit-identical");
+    }
+}

@@ -1,0 +1,102 @@
+//! Matrix multiplication / fully-connected execution.
+//!
+//! `matmul` is the generic `[m,k]×[k,n]` product; `fc` applies a weight
+//! matrix + bias to an input that may be a feature map (flattened logically,
+//! matching `GraphBuilder::fc`). The k-loop-innermost form here is the
+//! baseline the perf pass later blocks/transposes.
+
+use super::Tensor;
+use crate::graph::Shape;
+
+/// `[m,k] × [k,n] -> [m,n]`.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape().dims[0], a.shape().dims[1]);
+    let (k2, n) = (b.shape().dims[0], b.shape().dims[1]);
+    assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        // 4-way k-blocking: one pass over the output row folds four input
+        // scalars, quartering the store/reload traffic on `orow`.
+        let k4 = k / 4 * 4;
+        let mut kk = 0;
+        while kk < k4 {
+            let (a0, a1, a2, a3) = (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
+            let b0 = &b.data[kk * n..(kk + 1) * n];
+            let b1 = &b.data[(kk + 1) * n..(kk + 2) * n];
+            let b2 = &b.data[(kk + 2) * n..(kk + 3) * n];
+            let b3 = &b.data[(kk + 3) * n..(kk + 4) * n];
+            for j in 0..n {
+                orow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+            }
+            kk += 4;
+        }
+        for kk in k4..k {
+            let av = arow[kk];
+            let brow = &b.data[kk * n..(kk + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    Tensor::mat(m, n, out)
+}
+
+/// Fully-connected: flattens `x` to `[rows, k]`, multiplies by `w [k,n]`,
+/// adds bias `[n]` (empty = none).
+pub fn fc(x: &Tensor, k: usize, n: usize, w: &[f32], bias: &[f32]) -> Tensor {
+    let numel = x.shape().numel();
+    assert_eq!(numel % k, 0, "fc input {numel} not divisible by k {k}");
+    let rows = numel / k;
+    assert_eq!(w.len(), k * n, "fc weight size");
+    assert!(bias.is_empty() || bias.len() == n, "fc bias size");
+    let a = Tensor::mat(rows, k, x.data.clone());
+    let wt = Tensor::new(crate::graph::TensorDesc::plain(Shape::mat(k, n)), w.to_vec());
+    let mut out = matmul(&a, &wt);
+    if !bias.is_empty() {
+        for r in 0..rows {
+            for j in 0..n {
+                out.data[r * n + j] += bias[j];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_2x2() {
+        let a = Tensor::mat(2, 2, vec![1., 2., 3., 4.]);
+        let b = Tensor::mat(2, 2, vec![5., 6., 7., 8.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data, vec![19., 22., 43., 50.]);
+    }
+
+    #[test]
+    fn matmul_rectangular() {
+        let a = Tensor::mat(1, 3, vec![1., 2., 3.]);
+        let b = Tensor::mat(3, 2, vec![1., 0., 0., 1., 1., 1.]);
+        let c = matmul(&a, &b);
+        assert_eq!(c.data, vec![4., 5.]);
+    }
+
+    #[test]
+    fn fc_flattens_and_biases() {
+        let x = Tensor::fm(1, 2, 1, 2, vec![1., 2., 3., 4.]); // flattens to [1,4]
+        let w = vec![1., 0., 1., 0., 1., 0., 1., 0.]; // [4,2]
+        let y = fc(&x, 4, 2, &w, &[0.5, -0.5]);
+        assert_eq!(y.data, vec![10.5, -0.5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "inner dims")]
+    fn matmul_checks_dims() {
+        let a = Tensor::mat(1, 2, vec![0.; 2]);
+        let b = Tensor::mat(3, 1, vec![0.; 3]);
+        matmul(&a, &b);
+    }
+}

@@ -1,0 +1,131 @@
+//! Numeric operator library — CPU reference execution of every operator in
+//! the IR (paper §6.1's operator library, in Rust instead of C/assembly).
+//!
+//! Values are held in *logical* NCHW/row-major order regardless of the
+//! physical [`DataLayout`](crate::graph::DataLayout) metadata: operator
+//! linking is semantics-preserving by construction, so numerics are
+//! layout-agnostic while the simulator prices the physical access patterns.
+//! This library is what the equivalence tests use to prove the optimizer
+//! never changes results, and what the serving engine falls back to for
+//! models without AOT artifacts.
+
+pub mod conv;
+pub mod elementwise;
+pub mod interp;
+pub mod matmul;
+pub mod params;
+pub mod pool;
+pub mod shape_ops;
+
+pub use interp::Interpreter;
+
+use crate::graph::{Shape, TensorDesc};
+
+/// A dense f32 tensor in logical row-major (NCHW for feature maps) order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub desc: TensorDesc,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    /// Construct from a descriptor and matching data.
+    pub fn new(desc: TensorDesc, data: Vec<f32>) -> Self {
+        assert_eq!(desc.shape.numel(), data.len(), "tensor data/shape mismatch");
+        Tensor { desc, data }
+    }
+
+    /// Zero-filled tensor.
+    pub fn zeros(desc: TensorDesc) -> Self {
+        let n = desc.shape.numel();
+        Tensor { desc, data: vec![0.0; n] }
+    }
+
+    /// Feature-map constructor from NCHW dims.
+    pub fn fm(n: usize, c: usize, h: usize, w: usize, data: Vec<f32>) -> Self {
+        Tensor::new(TensorDesc::fm(n, c, h, w), data)
+    }
+
+    /// Matrix constructor.
+    pub fn mat(rows: usize, cols: usize, data: Vec<f32>) -> Self {
+        Tensor::new(TensorDesc::plain(Shape::mat(rows, cols)), data)
+    }
+
+    /// Shape shorthand.
+    pub fn shape(&self) -> &Shape {
+        &self.desc.shape
+    }
+
+    /// NCHW index (single batch assumed checked by caller).
+    #[inline]
+    pub fn at4(&self, n: usize, c: usize, h: usize, w: usize) -> f32 {
+        let s = &self.desc.shape;
+        debug_assert!(n < s.n() && c < s.c() && h < s.h() && w < s.w());
+        self.data[((n * s.c() + c) * s.h() + h) * s.w() + w]
+    }
+
+    /// Matrix index.
+    #[inline]
+    pub fn at2(&self, r: usize, c: usize) -> f32 {
+        let s = &self.desc.shape;
+        debug_assert_eq!(s.rank(), 2);
+        self.data[r * s.dims[1] + c]
+    }
+
+    /// Maximum absolute difference vs another tensor (must match shape).
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape(), other.shape(), "shape mismatch in comparison");
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max)
+    }
+
+    /// Assert element-wise closeness within `tol` (absolute+relative mix).
+    pub fn assert_close(&self, other: &Tensor, tol: f32) {
+        assert_eq!(self.shape(), other.shape(), "shape mismatch");
+        for (i, (a, b)) in self.data.iter().zip(&other.data).enumerate() {
+            let scale = 1.0f32.max(a.abs()).max(b.abs());
+            assert!(
+                (a - b).abs() <= tol * scale,
+                "element {i}: {a} vs {b} (tol {tol})"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn at4_indexing_is_nchw() {
+        let t = Tensor::fm(1, 2, 2, 2, (0..8).map(|i| i as f32).collect());
+        assert_eq!(t.at4(0, 0, 0, 0), 0.0);
+        assert_eq!(t.at4(0, 0, 1, 1), 3.0);
+        assert_eq!(t.at4(0, 1, 0, 0), 4.0);
+        assert_eq!(t.at4(0, 1, 1, 1), 7.0);
+    }
+
+    #[test]
+    fn max_abs_diff_works() {
+        let a = Tensor::mat(1, 3, vec![1.0, 2.0, 3.0]);
+        let b = Tensor::mat(1, 3, vec![1.0, 2.5, 3.0]);
+        assert_eq!(a.max_abs_diff(&b), 0.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn assert_close_fails_on_big_diff() {
+        let a = Tensor::mat(1, 1, vec![1.0]);
+        let b = Tensor::mat(1, 1, vec![2.0]);
+        a.assert_close(&b, 1e-3);
+    }
+
+    #[test]
+    #[should_panic(expected = "data/shape mismatch")]
+    fn new_checks_len() {
+        Tensor::fm(1, 1, 2, 2, vec![0.0; 3]);
+    }
+}

@@ -1,0 +1,201 @@
+//! Deterministic parameter synthesis.
+//!
+//! Model parameters are generated from a hash of the *original node name*,
+//! so a vanilla graph and its optimized rewrite (whose fused nodes record
+//! the names they were fused from) materialize bit-identical weights —
+//! the foundation of the optimizer-equivalence tests.
+
+use std::collections::HashMap;
+
+use crate::graph::{Graph, Node, OpKind};
+use crate::util::rng::Rng;
+
+/// FNV-1a 64-bit hash of a string — stable across runs and platforms.
+pub fn fnv64(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// Parameters of one node.
+#[derive(Debug, Clone, Default)]
+pub struct NodeParams {
+    /// Main weights (conv kernels / matmul weights).
+    pub w: Vec<f32>,
+    /// Bias vector.
+    pub bias: Vec<f32>,
+    /// Bn scale (also used by standalone BatchNorm).
+    pub scale: Vec<f32>,
+    /// Bn shift.
+    pub shift: Vec<f32>,
+}
+
+/// Generated parameters for every parameterized node of a graph, keyed by
+/// node id.
+#[derive(Debug, Default)]
+pub struct ParamStore {
+    by_node: HashMap<usize, NodeParams>,
+}
+
+fn gen_weights(key: &str, fan_in: usize, count: usize) -> Vec<f32> {
+    let mut rng = Rng::new(fnv64(key));
+    let a = (1.0 / fan_in.max(1) as f32).sqrt();
+    (0..count).map(|_| rng.f32_range(-a, a)).collect()
+}
+
+fn gen_range(key: &str, lo: f32, hi: f32, count: usize) -> Vec<f32> {
+    let mut rng = Rng::new(fnv64(key));
+    (0..count).map(|_| rng.f32_range(lo, hi)).collect()
+}
+
+/// The name a node's parameters are keyed under: the first fused-from name
+/// if the node is a fusion product, else its own name.
+fn param_name(node: &Node, idx: usize) -> &str {
+    node.fused_from.get(idx).map(String::as_str).unwrap_or(&node.name)
+}
+
+impl ParamStore {
+    /// Generate parameters for all nodes of `g`.
+    pub fn for_graph(g: &Graph) -> ParamStore {
+        let mut store = ParamStore::default();
+        for n in &g.nodes {
+            let p = Self::gen_node(n);
+            if !(p.w.is_empty() && p.bias.is_empty() && p.scale.is_empty() && p.shift.is_empty())
+            {
+                store.by_node.insert(n.id, p);
+            }
+        }
+        store
+    }
+
+    fn gen_node(n: &Node) -> NodeParams {
+        let mut p = NodeParams::default();
+        match &n.op {
+            OpKind::Conv(a) => {
+                let name = param_name(n, 0);
+                let fan_in = a.kh * a.kw * (a.in_c / a.groups);
+                p.w = gen_weights(&format!("{name}/w"), fan_in, a.weight_count() as usize);
+                p.bias = gen_range(&format!("{name}/b"), -0.05, 0.05, a.out_c);
+            }
+            OpKind::Cbr(a) | OpKind::Cbra(a, _) | OpKind::Cbrm(a, _) => {
+                // Conv params under the conv's original name, bn params under
+                // the bn's original name — matching the unfused graph.
+                let conv_name = param_name(n, 0).to_string();
+                let bn_name = n
+                    .fused_from
+                    .get(1)
+                    .cloned()
+                    .unwrap_or_else(|| format!("{}/bn", n.name));
+                let fan_in = a.kh * a.kw * (a.in_c / a.groups);
+                p.w = gen_weights(&format!("{conv_name}/w"), fan_in, a.weight_count() as usize);
+                p.bias = gen_range(&format!("{conv_name}/b"), -0.05, 0.05, a.out_c);
+                p.scale = gen_range(&format!("{bn_name}/scale"), 0.5, 1.5, a.out_c);
+                p.shift = gen_range(&format!("{bn_name}/shift"), -0.1, 0.1, a.out_c);
+            }
+            OpKind::BatchNorm => {
+                let name = param_name(n, 0);
+                let c = if n.out.shape.is_fm() {
+                    n.out.shape.c()
+                } else {
+                    *n.out.shape.dims.last().unwrap()
+                };
+                p.scale = gen_range(&format!("{name}/scale"), 0.5, 1.5, c);
+                p.shift = gen_range(&format!("{name}/shift"), -0.1, 0.1, c);
+            }
+            OpKind::Bias => {
+                let name = param_name(n, 0);
+                let c = if n.out.shape.is_fm() {
+                    n.out.shape.c()
+                } else {
+                    *n.out.shape.dims.last().unwrap()
+                };
+                p.bias = gen_range(&format!("{name}/b"), -0.05, 0.05, c);
+            }
+            OpKind::MatMul(m) if m.weighted => {
+                let name = param_name(n, 0);
+                p.w = gen_weights(&format!("{name}/w"), m.k, m.k * m.n);
+                if m.bias {
+                    p.bias = gen_range(&format!("{name}/b"), -0.05, 0.05, m.n);
+                }
+            }
+            _ => {}
+        }
+        p
+    }
+
+    /// Parameters of a node (empty default for parameter-free ops).
+    pub fn get(&self, node_id: usize) -> NodeParams {
+        self.by_node.get(&node_id).cloned().unwrap_or_default()
+    }
+
+    /// Borrowed parameters of a node — the hot-path accessor (perf pass:
+    /// `get` clones the full weight vectors on every node execution).
+    pub fn get_ref(&self, node_id: usize) -> &NodeParams {
+        static EMPTY: NodeParams =
+            NodeParams { w: Vec::new(), bias: Vec::new(), scale: Vec::new(), shift: Vec::new() };
+        self.by_node.get(&node_id).unwrap_or(&EMPTY)
+    }
+
+    /// Total parameter bytes materialized.
+    pub fn total_bytes(&self) -> u64 {
+        self.by_node
+            .values()
+            .map(|p| 4 * (p.w.len() + p.bias.len() + p.scale.len() + p.shift.len()) as u64)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, Shape};
+
+    #[test]
+    fn fnv_is_stable() {
+        assert_eq!(fnv64("conv1/w"), fnv64("conv1/w"));
+        assert_ne!(fnv64("conv1/w"), fnv64("conv1/b"));
+    }
+
+    #[test]
+    fn conv_params_have_right_sizes() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", Shape::nchw(1, 3, 8, 8));
+        let c = b.conv("c1", x, 16, 3, 1, 1);
+        b.output(c);
+        let g = b.finish();
+        let ps = ParamStore::for_graph(&g);
+        let p = ps.get(c);
+        assert_eq!(p.w.len(), 16 * 3 * 9);
+        assert_eq!(p.bias.len(), 16);
+    }
+
+    #[test]
+    fn same_name_same_params() {
+        let build = || {
+            let mut b = GraphBuilder::new("t");
+            let x = b.input("x", Shape::nchw(1, 3, 8, 8));
+            let c = b.conv("c1", x, 4, 3, 1, 1);
+            b.output(c);
+            b.finish()
+        };
+        let p1 = ParamStore::for_graph(&build()).get(1);
+        let p2 = ParamStore::for_graph(&build()).get(1);
+        assert_eq!(p1.w, p2.w);
+        assert_eq!(p1.bias, p2.bias);
+    }
+
+    #[test]
+    fn weights_bounded_by_fan_in() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", Shape::nchw(1, 64, 8, 8));
+        let c = b.conv("c1", x, 8, 3, 1, 1);
+        b.output(c);
+        let g = b.finish();
+        let p = ParamStore::for_graph(&g).get(c);
+        let bound = (1.0f32 / (64.0 * 9.0)).sqrt();
+        assert!(p.w.iter().all(|v| v.abs() <= bound));
+    }
+}

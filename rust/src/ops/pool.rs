@@ -1,0 +1,101 @@
+//! Pooling execution: max / average / global-average.
+
+use super::Tensor;
+use crate::graph::{PoolAttrs, PoolKind, TensorDesc};
+
+/// Run a pooling operator.
+pub fn pool(x: &Tensor, attrs: &PoolAttrs) -> Tensor {
+    match attrs.kind {
+        PoolKind::Global => global_avg(x),
+        PoolKind::Max => window(x, attrs, f32::NEG_INFINITY, |acc, v| acc.max(v), |acc, _| acc),
+        PoolKind::Avg => window(x, attrs, 0.0, |acc, v| acc + v, |acc, n| acc / n as f32),
+    }
+}
+
+fn window(
+    x: &Tensor,
+    attrs: &PoolAttrs,
+    init: f32,
+    fold: impl Fn(f32, f32) -> f32,
+    finish: impl Fn(f32, usize) -> f32,
+) -> Tensor {
+    let s = x.shape();
+    let (n, c, h, w) = (s.n(), s.c(), s.h(), s.w());
+    let oh = (h - attrs.k) / attrs.stride + 1;
+    let ow = (w - attrs.k) / attrs.stride + 1;
+    let mut out = Tensor::zeros(TensorDesc::fm(n, c, oh, ow));
+    for b in 0..n {
+        for ch in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = init;
+                    for ky in 0..attrs.k {
+                        for kx in 0..attrs.k {
+                            acc = fold(
+                                acc,
+                                x.at4(b, ch, oy * attrs.stride + ky, ox * attrs.stride + kx),
+                            );
+                        }
+                    }
+                    out.data[((b * c + ch) * oh + oy) * ow + ox] =
+                        finish(acc, attrs.k * attrs.k);
+                }
+            }
+        }
+    }
+    out
+}
+
+fn global_avg(x: &Tensor) -> Tensor {
+    let s = x.shape();
+    let (n, c, h, w) = (s.n(), s.c(), s.h(), s.w());
+    let mut out = Tensor::zeros(TensorDesc::fm(n, c, 1, 1));
+    let hw = (h * w) as f32;
+    for b in 0..n {
+        for ch in 0..c {
+            let mut acc = 0.0;
+            for y in 0..h {
+                for xx in 0..w {
+                    acc += x.at4(b, ch, y, xx);
+                }
+            }
+            out.data[b * c + ch] = acc / hw;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn max_pool_2x2() {
+        let x = Tensor::fm(1, 1, 2, 2, vec![1., 5., 3., 2.]);
+        let y = pool(&x, &PoolAttrs::max(2, 2));
+        assert_eq!(y.data, vec![5.0]);
+    }
+
+    #[test]
+    fn avg_pool_2x2() {
+        let x = Tensor::fm(1, 1, 4, 4, (0..16).map(|i| i as f32).collect());
+        let y = pool(&x, &PoolAttrs::avg(2, 2));
+        // windows: [0,1,4,5]=2.5 [2,3,6,7]=4.5 [8,9,12,13]=10.5 [10,11,14,15]=12.5
+        assert_eq!(y.data, vec![2.5, 4.5, 10.5, 12.5]);
+    }
+
+    #[test]
+    fn global_pool_means_channel() {
+        let x = Tensor::fm(1, 2, 2, 2, vec![1., 2., 3., 4., 10., 10., 10., 10.]);
+        let y = pool(&x, &PoolAttrs::global());
+        assert_eq!(y.data, vec![2.5, 10.0]);
+        assert_eq!(y.shape().h(), 1);
+    }
+
+    #[test]
+    fn stride_one_overlapping_max() {
+        let x = Tensor::fm(1, 1, 3, 3, vec![1., 2., 3., 4., 5., 6., 7., 8., 9.]);
+        let y = pool(&x, &PoolAttrs::max(2, 1));
+        assert_eq!(y.data, vec![5., 6., 8., 9.]);
+    }
+}

@@ -1,0 +1,177 @@
+//! Data-movement operators: concat, slice, transpose, channel shuffle,
+//! upsample. These are exactly the ops whose *physical* cost the
+//! dataflow-centric optimizer eliminates by absorbing them into producer
+//! write order — numerically they remain plain copies.
+
+use super::Tensor;
+use crate::graph::{Shape, TensorDesc};
+
+/// Channel-axis concat of feature maps with equal N/H/W.
+pub fn concat_c(xs: &[&Tensor]) -> Tensor {
+    assert!(!xs.is_empty());
+    let s0 = xs[0].shape();
+    let (n, h, w) = (s0.n(), s0.h(), s0.w());
+    let total_c: usize = xs.iter().map(|t| t.shape().c()).sum();
+    let mut out = Tensor::zeros(TensorDesc::fm(n, total_c, h, w));
+    let hw = h * w;
+    for b in 0..n {
+        let mut c_off = 0;
+        for t in xs {
+            let tc = t.shape().c();
+            let src = &t.data[b * tc * hw..(b + 1) * tc * hw];
+            let dst = &mut out.data[(b * total_c + c_off) * hw..(b * total_c + c_off + tc) * hw];
+            dst.copy_from_slice(src);
+            c_off += tc;
+        }
+    }
+    out
+}
+
+/// Channel slice `[begin, end)` of a feature map, or column slice of a
+/// matrix (mirrors `GraphBuilder::slice_c`).
+pub fn slice_c(x: &Tensor, begin: usize, end: usize) -> Tensor {
+    let s = x.shape();
+    if s.is_fm() {
+        let (n, c, h, w) = (s.n(), s.c(), s.h(), s.w());
+        assert!(end <= c && begin < end);
+        let hw = h * w;
+        let oc = end - begin;
+        let mut out = Tensor::zeros(TensorDesc::fm(n, oc, h, w));
+        for b in 0..n {
+            let src = &x.data[(b * c + begin) * hw..(b * c + end) * hw];
+            out.data[b * oc * hw..(b + 1) * oc * hw].copy_from_slice(src);
+        }
+        out
+    } else {
+        assert_eq!(s.rank(), 2);
+        let (rows, cols) = (s.dims[0], s.dims[1]);
+        assert!(end <= cols && begin < end);
+        let oc = end - begin;
+        let mut out = Tensor::mat(rows, oc, vec![0.0; rows * oc]);
+        for r in 0..rows {
+            out.data[r * oc..(r + 1) * oc]
+                .copy_from_slice(&x.data[r * cols + begin..r * cols + end]);
+        }
+        out
+    }
+}
+
+/// 2-D transpose.
+pub fn transpose(x: &Tensor) -> Tensor {
+    let s = x.shape();
+    assert_eq!(s.rank(), 2);
+    let (rows, cols) = (s.dims[0], s.dims[1]);
+    let mut out = vec![0.0f32; rows * cols];
+    for r in 0..rows {
+        for c in 0..cols {
+            out[c * rows + r] = x.data[r * cols + c];
+        }
+    }
+    Tensor::new(TensorDesc::plain(Shape::mat(cols, rows)), out)
+}
+
+/// ShuffleNet channel shuffle: view C as `[groups, c/groups]`, transpose to
+/// `[c/groups, groups]`, flatten.
+pub fn channel_shuffle(x: &Tensor, groups: usize) -> Tensor {
+    let s = x.shape();
+    let (n, c, h, w) = (s.n(), s.c(), s.h(), s.w());
+    assert_eq!(c % groups, 0);
+    let cpg = c / groups;
+    let hw = h * w;
+    let mut out = x.clone();
+    for b in 0..n {
+        for g in 0..groups {
+            for i in 0..cpg {
+                let src_c = g * cpg + i;
+                let dst_c = i * groups + g;
+                let src = (b * c + src_c) * hw;
+                let dst = (b * c + dst_c) * hw;
+                // copy within clone: use split borrows via memcpy on indices
+                let tmp: Vec<f32> = x.data[src..src + hw].to_vec();
+                out.data[dst..dst + hw].copy_from_slice(&tmp);
+            }
+        }
+    }
+    out
+}
+
+/// Nearest-neighbour upsample by `factor`.
+pub fn upsample(x: &Tensor, factor: usize) -> Tensor {
+    let s = x.shape();
+    let (n, c, h, w) = (s.n(), s.c(), s.h(), s.w());
+    let (oh, ow) = (h * factor, w * factor);
+    let mut out = Tensor::zeros(TensorDesc::fm(n, c, oh, ow));
+    for b in 0..n {
+        for ch in 0..c {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    out.data[((b * c + ch) * oh + oy) * ow + ox] =
+                        x.at4(b, ch, oy / factor, ox / factor);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn concat_stacks_channels() {
+        let a = Tensor::fm(1, 1, 1, 2, vec![1., 2.]);
+        let b = Tensor::fm(1, 2, 1, 2, vec![3., 4., 5., 6.]);
+        let y = concat_c(&[&a, &b]);
+        assert_eq!(y.shape().c(), 3);
+        assert_eq!(y.data, vec![1., 2., 3., 4., 5., 6.]);
+    }
+
+    #[test]
+    fn slice_then_concat_roundtrips() {
+        let x = Tensor::fm(1, 4, 1, 2, (0..8).map(|i| i as f32).collect());
+        let lo = slice_c(&x, 0, 2);
+        let hi = slice_c(&x, 2, 4);
+        let y = concat_c(&[&lo, &hi]);
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn matrix_col_slice() {
+        let x = Tensor::mat(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let y = slice_c(&x, 1, 3);
+        assert_eq!(y.data, vec![2., 3., 5., 6.]);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let x = Tensor::mat(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let t = transpose(&x);
+        assert_eq!(t.shape().dims, vec![3, 2]);
+        assert_eq!(t.data, vec![1., 4., 2., 5., 3., 6.]);
+        assert_eq!(transpose(&t).data, x.data);
+    }
+
+    #[test]
+    fn shuffle_is_group_transpose() {
+        // c=4, groups=2: [a,b,c,d] -> [a,c,b,d]
+        let x = Tensor::fm(1, 4, 1, 1, vec![10., 20., 30., 40.]);
+        let y = channel_shuffle(&x, 2);
+        assert_eq!(y.data, vec![10., 30., 20., 40.]);
+    }
+
+    #[test]
+    fn shuffle_twice_with_transposed_groups_identity() {
+        let x = Tensor::fm(1, 6, 1, 1, vec![0., 1., 2., 3., 4., 5.]);
+        let y = channel_shuffle(&channel_shuffle(&x, 2), 3);
+        assert_eq!(y.data, x.data);
+    }
+
+    #[test]
+    fn upsample_repeats() {
+        let x = Tensor::fm(1, 1, 1, 2, vec![1., 2.]);
+        let y = upsample(&x, 2);
+        assert_eq!(y.shape().h(), 2);
+        assert_eq!(y.data, vec![1., 1., 2., 2., 1., 1., 2., 2.]);
+    }
+}

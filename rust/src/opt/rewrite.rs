@@ -1,0 +1,137 @@
+//! Graph-rewrite machinery shared by the fusion and linking passes: rebuild
+//! a graph while merging runs of nodes, remapping edges and preserving
+//! output markers.
+
+use std::collections::HashMap;
+
+use crate::graph::{Graph, NodeId};
+
+/// Rebuilds a graph, letting the caller absorb nodes into earlier ones.
+pub struct Rewriter {
+    /// old id -> new id
+    map: HashMap<NodeId, NodeId>,
+    out: Graph,
+}
+
+impl Rewriter {
+    /// Start rewriting `src` into a new graph with the same name.
+    pub fn new(src: &Graph) -> Rewriter {
+        Rewriter { map: HashMap::new(), out: Graph::new(&src.name) }
+    }
+
+    /// Map an old node id to its new id (must already be emitted/aliased).
+    pub fn lookup(&self, old: NodeId) -> NodeId {
+        *self.map.get(&old).unwrap_or_else(|| panic!("node {old} not yet emitted"))
+    }
+
+    /// True if `old` has been emitted or aliased.
+    pub fn emitted(&self, old: NodeId) -> bool {
+        self.map.contains_key(&old)
+    }
+
+    /// Emit a copy of an old node (op/name/out unchanged), remapping inputs.
+    pub fn copy(&mut self, src: &Graph, old: NodeId) -> NodeId {
+        let n = src.node(old);
+        let inputs: Vec<NodeId> = n.inputs.iter().map(|i| self.lookup(*i)).collect();
+        let new = self.out.push(&n.name, n.op.clone(), inputs, n.out.clone());
+        self.out.node_mut(new).fused_from = n.fused_from.clone();
+        self.map.insert(old, new);
+        new
+    }
+
+    /// Emit a brand-new node replacing `olds` (all alias to it). Inputs are
+    /// old ids.
+    pub fn emit_merged(
+        &mut self,
+        src: &Graph,
+        olds: &[NodeId],
+        name: &str,
+        op: crate::graph::OpKind,
+        old_inputs: &[NodeId],
+        out: crate::graph::TensorDesc,
+    ) -> NodeId {
+        let inputs: Vec<NodeId> = old_inputs.iter().map(|i| self.lookup(*i)).collect();
+        let new = self.out.push(name, op, inputs, out);
+        // Record provenance for deterministic parameter synthesis.
+        self.out.node_mut(new).fused_from =
+            olds.iter().flat_map(|&o| original_names(src, o)).collect();
+        for &o in olds {
+            self.map.insert(o, new);
+        }
+        new
+    }
+
+    /// Finish: remap outputs (dedup while preserving order) and validate.
+    pub fn finish(mut self, src: &Graph) -> Graph {
+        let mut seen = std::collections::HashSet::new();
+        for &o in &src.outputs {
+            let n = self.lookup(o);
+            if seen.insert(n) {
+                self.out.outputs.push(n);
+            }
+        }
+        self.out.validate().expect("rewrite produced invalid graph");
+        self.out
+    }
+}
+
+/// The original (pre-fusion) names a node stands for.
+fn original_names(src: &Graph, id: NodeId) -> Vec<String> {
+    let n = src.node(id);
+    if n.fused_from.is_empty() {
+        vec![n.name.clone()]
+    } else {
+        n.fused_from.clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, Shape};
+
+    #[test]
+    fn identity_rewrite_preserves_graph() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", Shape::nchw(1, 3, 8, 8));
+        let c = b.conv("c", x, 4, 3, 1, 1);
+        let r = b.relu("r", c);
+        b.output(r);
+        let g = b.finish();
+
+        let mut rw = Rewriter::new(&g);
+        for n in &g.nodes {
+            rw.copy(&g, n.id);
+        }
+        let g2 = rw.finish(&g);
+        assert_eq!(g2.len(), g.len());
+        assert_eq!(g2.outputs, g.outputs);
+        assert_eq!(g2.node(1).name, "c");
+    }
+
+    #[test]
+    fn merged_node_aliases_all_originals() {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", Shape::nchw(1, 3, 8, 8));
+        let c = b.conv("c", x, 4, 3, 1, 1);
+        let r = b.relu("r", c);
+        b.output(r);
+        let g = b.finish();
+
+        let mut rw = Rewriter::new(&g);
+        rw.copy(&g, 0);
+        let a = crate::graph::ConvAttrs::std(3, 4, 3, 1, 1);
+        rw.emit_merged(
+            &g,
+            &[c, r],
+            "c",
+            crate::graph::OpKind::Cbr(a),
+            &[x],
+            g.node(r).out.clone(),
+        );
+        let g2 = rw.finish(&g);
+        assert_eq!(g2.len(), 2);
+        assert_eq!(g2.outputs, vec![1]);
+        assert_eq!(g2.node(1).fused_from, vec!["c".to_string(), "r".to_string()]);
+    }
+}

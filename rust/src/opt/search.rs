@@ -1,0 +1,212 @@
+//! Cost-guided layout search — the paper's §8 future-work item
+//! ("the automatic search algorithm from TASO/PET can also be inherited by
+//! Xenos to discover more optimized schemes"), implemented as an *optional*
+//! refinement pass.
+//!
+//! The heuristic linking pass resolves each producer's layout from its
+//! consumers' declared preferences and leaves conflicted producers at their
+//! natural write order. This pass revisits exactly those decision points
+//! and scores each candidate layout with the simulator's cost model over
+//! the producer's neighbourhood (producer + all consumers) — a bounded,
+//! cost-function-driven search in the TASO/PET style, but anchored on the
+//! dataflow decision variables Xenos exposes, so the space stays linear in
+//! graph size instead of exponential in operator count.
+
+use crate::graph::{DataLayout, Graph, NodeId, OpKind};
+use crate::hw::DeviceModel;
+use crate::opt::plan::{ExecutionPlan, OptLevel};
+use crate::opt::{dos, linking::LinkRecord};
+use crate::sim::cost::node_cost;
+
+/// One search refinement applied on top of the heuristic linking.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchRecord {
+    /// Producer whose layout was changed.
+    pub producer: String,
+    /// Layout chosen by the heuristic pass.
+    pub heuristic: DataLayout,
+    /// Layout chosen by the cost-guided search.
+    pub chosen: DataLayout,
+    /// Predicted neighbourhood time before/after (seconds).
+    pub before_s: f64,
+    /// Predicted time after.
+    pub after_s: f64,
+}
+
+/// Neighbourhood cost of `producer` under the current graph layouts: the
+/// producer's own cost plus every consumer's cost.
+fn neighbourhood_cost(
+    g: &Graph,
+    plan: &ExecutionPlan,
+    device: &DeviceModel,
+    producer: NodeId,
+    consumers: &[NodeId],
+) -> f64 {
+    let mut t = node_cost(g, g.node(producer), plan.node(producer), device).total_s;
+    for &c in consumers {
+        t += node_cost(g, g.node(c), plan.node(c), device).total_s;
+    }
+    t
+}
+
+/// Candidate layouts for a feature-map producer.
+fn candidates(g: &Graph, id: NodeId) -> Vec<DataLayout> {
+    let n = g.node(id);
+    if !n.out.shape.is_fm() {
+        return vec![DataLayout::RowMajor, DataLayout::ColMajor];
+    }
+    let mut c = vec![DataLayout::Chw, DataLayout::Hwc];
+    // Window-linked layouts only make sense if some consumer pools.
+    for &cons in &g.consumers()[id] {
+        if let OpKind::Pool(p) = g.node(cons).op {
+            if p.k > 0 {
+                c.push(DataLayout::Linked { ph: p.k as u8, pw: p.k as u8 });
+            }
+        }
+    }
+    c
+}
+
+/// Refine a linked graph's layout decisions with the cost model. Mutates
+/// `g` in place and returns the improvements applied.
+pub fn refine_layouts(g: &mut Graph, device: &DeviceModel) -> Vec<SearchRecord> {
+    let consumers = g.consumers();
+    let mut records = Vec::new();
+    for id in 0..g.len() {
+        if matches!(g.node(id).op, OpKind::Input) || consumers[id].is_empty() {
+            continue;
+        }
+        let current = g.node(id).out.layout;
+        let mut best = current;
+        // Plans are layout-independent; compute once per candidate set.
+        let plan = dos::plan_graph(g, device, OptLevel::Full);
+        let mut best_t = neighbourhood_cost(g, &plan, device, id, &consumers[id]);
+        let before_t = best_t;
+        for cand in candidates(g, id) {
+            if cand == current {
+                continue;
+            }
+            g.node_mut(id).out.layout = cand;
+            let plan = dos::plan_graph(g, device, OptLevel::Full);
+            let t = neighbourhood_cost(g, &plan, device, id, &consumers[id]);
+            if t < best_t {
+                best_t = t;
+                best = cand;
+            }
+        }
+        g.node_mut(id).out.layout = best;
+        if best != current {
+            records.push(SearchRecord {
+                producer: g.node(id).name.clone(),
+                heuristic: current,
+                chosen: best,
+                before_s: before_t,
+                after_s: best_t,
+            });
+        }
+    }
+    records
+}
+
+/// Convert search records into the common link-record format for display.
+pub fn as_link_records(records: &[SearchRecord]) -> Vec<LinkRecord> {
+    records
+        .iter()
+        .map(|r| LinkRecord {
+            pattern: "cost-guided refinement".to_string(),
+            producer: r.producer.clone(),
+            consumer: format!("{} -> {}", r.heuristic.tag(), r.chosen.tag()),
+            layout: r.chosen,
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, Shape};
+    use crate::hw::presets;
+    use crate::ops::Interpreter;
+    use crate::opt::{fusion, linking};
+    use crate::sim::Simulator;
+
+    /// A producer with *conflicting* consumer preferences: an avg-pool
+    /// consumer (wants `Linked{2,2}`) and a pointwise-conv consumer (wants
+    /// `Hwc`). The heuristic refuses to link (conflict → natural `Chw`,
+    /// mismatching BOTH readers); the search picks whichever single layout
+    /// satisfies the costlier reader.
+    fn conflicted_graph() -> crate::graph::Graph {
+        let mut b = GraphBuilder::new("conflict");
+        let x = b.input("x", Shape::nchw(1, 64, 28, 28));
+        let prod = b.conv("prod", x, 64, 3, 1, 1);
+        let pool = b.avgpool("pool", prod, 2, 2);
+        let pw = b.conv("pw", prod, 128, 1, 1, 0);
+        let gp1 = b.global_pool("gp1", pool);
+        let gp2 = b.global_pool("gp2", pw);
+        let cat = b.concat("cat", &[gp1, gp2]);
+        b.output(cat);
+        b.finish()
+    }
+
+    #[test]
+    fn search_resolves_conflicts_the_heuristic_skips() {
+        let d = presets::tms320c6678();
+        let (fused, _) = fusion::fuse_cbr(&conflicted_graph());
+        let mut linked = linking::link(&fused).graph;
+        // Heuristic leaves `prod` natural (conflicting prefs).
+        let prod = linked.nodes.iter().find(|n| n.name == "prod").unwrap();
+        assert_eq!(prod.out.layout, DataLayout::Chw);
+        let records = refine_layouts(&mut linked, &d);
+        assert!(
+            records.iter().any(|r| r.producer == "prod"),
+            "search should revisit the conflicted producer: {records:?}"
+        );
+        // Any single non-natural layout un-mismatches one reader.
+        let prod = linked.nodes.iter().find(|n| n.name == "prod").unwrap();
+        assert_ne!(prod.out.layout, DataLayout::Chw);
+    }
+
+    #[test]
+    fn search_never_regresses_predicted_time() {
+        let d = presets::tms320c6678();
+        for model in ["mobilenet", "squeezenet", "shufflenet"] {
+            let g = crate::graph::models::by_name(model).unwrap();
+            let (fused, _) = fusion::fuse_cbr(&g);
+            let mut linked = linking::link(&fused).graph;
+            let sim = Simulator::new(d.clone());
+            let before = sim
+                .simulate(&linked, &dos::plan_graph(&linked, &d, OptLevel::Full))
+                .total_s;
+            refine_layouts(&mut linked, &d);
+            let after = sim
+                .simulate(&linked, &dos::plan_graph(&linked, &d, OptLevel::Full))
+                .total_s;
+            assert!(
+                after <= before * 1.0001,
+                "{model}: search regressed {before} -> {after}"
+            );
+        }
+    }
+
+    #[test]
+    fn search_preserves_numerics() {
+        let d = presets::tms320c6678();
+        let g = conflicted_graph();
+        let (fused, _) = fusion::fuse_cbr(&g);
+        let mut linked = linking::link(&fused).graph;
+        refine_layouts(&mut linked, &d);
+        let a = Interpreter::new(&g).run_synthetic(33);
+        let b = Interpreter::new(&linked).run_synthetic(33);
+        assert_eq!(a[0].data, b[0].data, "layout search is metadata-only");
+    }
+
+    #[test]
+    fn improvements_report_time_deltas() {
+        let d = presets::tms320c6678();
+        let (fused, _) = fusion::fuse_cbr(&conflicted_graph());
+        let mut linked = linking::link(&fused).graph;
+        for r in refine_layouts(&mut linked, &d) {
+            assert!(r.after_s < r.before_s, "{r:?}");
+        }
+    }
+}

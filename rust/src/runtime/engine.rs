@@ -1,0 +1,133 @@
+//! The inference engine driven by the serving coordinator.
+//!
+//! Two interchangeable backends:
+//! * **Pjrt** — an AOT artifact (`vanilla`/`linked` model variants) running
+//!   through the PJRT CPU client; the production path.
+//! * **Interp** — the in-crate numeric interpreter over a zoo graph; used
+//!   for models without artifacts and for differential testing.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::pjrt::PjrtRuntime;
+use crate::graph::{Graph, Shape};
+use crate::ops::{Interpreter, Tensor};
+
+/// Which backend an engine uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// AOT artifact through PJRT.
+    Pjrt,
+    /// In-crate interpreter.
+    Interp,
+}
+
+/// An inference engine bound to one model.
+pub struct Engine {
+    inner: Inner,
+    name: String,
+}
+
+enum Inner {
+    Pjrt { rt: Arc<PjrtRuntime>, variant: String },
+    Interp { graph: Arc<Graph> },
+}
+
+/// One inference result with its service time.
+#[derive(Debug)]
+pub struct InferOutput {
+    /// Output tensors.
+    pub outputs: Vec<Tensor>,
+    /// Pure execution time, seconds.
+    pub exec_s: f64,
+}
+
+impl Engine {
+    /// Engine over an AOT artifact variant.
+    pub fn pjrt(rt: Arc<PjrtRuntime>, variant: &str) -> Result<Engine> {
+        anyhow::ensure!(
+            rt.artifact(variant).is_some(),
+            "unknown artifact variant {variant}"
+        );
+        Ok(Engine {
+            inner: Inner::Pjrt { rt, variant: variant.to_string() },
+            name: format!("pjrt:{variant}"),
+        })
+    }
+
+    /// Engine interpreting a zoo graph.
+    pub fn interp(graph: Arc<Graph>) -> Engine {
+        let name = format!("interp:{}", graph.name);
+        Engine { inner: Inner::Interp { graph }, name }
+    }
+
+    /// Engine display name.
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Backend kind.
+    pub fn kind(&self) -> EngineKind {
+        match self.inner {
+            Inner::Pjrt { .. } => EngineKind::Pjrt,
+            Inner::Interp { .. } => EngineKind::Interp,
+        }
+    }
+
+    /// Input shapes this engine expects.
+    pub fn input_shapes(&self) -> Vec<Shape> {
+        match &self.inner {
+            Inner::Pjrt { rt, variant } => {
+                rt.artifact(variant).expect("validated at construction").inputs.clone()
+            }
+            Inner::Interp { graph } => graph
+                .input_ids()
+                .iter()
+                .map(|&i| graph.node(i).out.shape.clone())
+                .collect(),
+        }
+    }
+
+    /// Run one inference.
+    pub fn infer(&self, inputs: &[Tensor]) -> Result<InferOutput> {
+        let start = Instant::now();
+        let outputs = match &self.inner {
+            Inner::Pjrt { rt, variant } => rt.execute(variant, inputs)?,
+            Inner::Interp { graph } => Interpreter::new(graph).run(inputs),
+        };
+        Ok(InferOutput { outputs, exec_s: start.elapsed().as_secs_f64() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+
+    fn tiny_graph() -> Graph {
+        let mut b = GraphBuilder::new("tiny");
+        let x = b.input("x", Shape::nchw(1, 2, 4, 4));
+        let r = b.relu("r", x);
+        b.output(r);
+        b.finish()
+    }
+
+    #[test]
+    fn interp_engine_runs() {
+        let e = Engine::interp(Arc::new(tiny_graph()));
+        assert_eq!(e.kind(), EngineKind::Interp);
+        assert_eq!(e.input_shapes(), vec![Shape::nchw(1, 2, 4, 4)]);
+        let x = Tensor::fm(1, 2, 4, 4, vec![-1.0; 32]);
+        let out = e.infer(&[x]).unwrap();
+        assert_eq!(out.outputs[0].data, vec![0.0; 32]);
+        assert!(out.exec_s >= 0.0);
+    }
+
+    #[test]
+    fn interp_engine_name() {
+        let e = Engine::interp(Arc::new(tiny_graph()));
+        assert_eq!(e.name(), "interp:tiny");
+    }
+}

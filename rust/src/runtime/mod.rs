@@ -1,0 +1,13 @@
+//! The Xenos runtime: loads AOT-compiled HLO artifacts through PJRT and
+//! executes inference — Python never runs on this path.
+//!
+//! * [`pjrt`] — the `xla`-crate bridge: HLO text → compile → execute.
+//! * [`engine`] — the inference engine the serving coordinator drives:
+//!   either a PJRT executable (AOT model variants) or the in-crate numeric
+//!   interpreter (for zoo models without artifacts).
+
+pub mod engine;
+pub mod pjrt;
+
+pub use engine::{Engine, EngineKind};
+pub use pjrt::{Artifact, PjrtRuntime};

@@ -1,0 +1,197 @@
+//! PJRT bridge: load `artifacts/*.hlo.txt` (AOT-lowered by
+//! `python/compile/aot.py`), compile them on the PJRT CPU client, and
+//! execute them with `ops::Tensor` inputs.
+//!
+//! Interchange is HLO **text**: the jax≥0.5 serialized protos carry 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::graph::{Shape, TensorDesc};
+use crate::ops::Tensor;
+
+/// One AOT artifact as described by `artifacts/manifest.txt`.
+#[derive(Debug, Clone)]
+pub struct Artifact {
+    /// Variant name (`vanilla`, `linked`, `smoke`, …).
+    pub name: String,
+    /// Path to the HLO text file.
+    pub path: PathBuf,
+    /// Input shapes, in call order.
+    pub inputs: Vec<Shape>,
+    /// Output shapes.
+    pub outputs: Vec<Shape>,
+}
+
+/// Parse one `1x16x16x32:float32` tag.
+fn parse_shape_tag(tag: &str) -> Result<Shape> {
+    let (dims, dtype) = tag
+        .split_once(':')
+        .with_context(|| format!("malformed shape tag {tag}"))?;
+    if dtype != "float32" {
+        bail!("unsupported artifact dtype {dtype}");
+    }
+    let dims: Vec<usize> = dims
+        .split('x')
+        .map(|d| d.parse().with_context(|| format!("bad dim in {tag}")))
+        .collect::<Result<_>>()?;
+    Ok(Shape::new(dims))
+}
+
+/// Parse `manifest.txt` lines of the form
+/// `variant=linked inputs=1x16x16x32:float32 outputs=1x10:float32`.
+pub fn parse_manifest(dir: &Path, text: &str) -> Result<Vec<Artifact>> {
+    let mut out = Vec::new();
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let mut name = None;
+        let mut inputs = Vec::new();
+        let mut outputs = Vec::new();
+        for field in line.split_whitespace() {
+            let (k, v) = field
+                .split_once('=')
+                .with_context(|| format!("malformed manifest field {field}"))?;
+            match k {
+                "variant" => name = Some(v.to_string()),
+                "inputs" => {
+                    inputs = v.split(',').map(parse_shape_tag).collect::<Result<_>>()?
+                }
+                "outputs" => {
+                    outputs = v.split(',').map(parse_shape_tag).collect::<Result<_>>()?
+                }
+                _ => bail!("unknown manifest key {k}"),
+            }
+        }
+        let name = name.context("manifest line missing variant=")?;
+        out.push(Artifact {
+            path: dir.join(format!("{name}.hlo.txt")),
+            name,
+            inputs,
+            outputs,
+        });
+    }
+    Ok(out)
+}
+
+/// PJRT runtime holding one compiled executable per artifact.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    artifacts: HashMap<String, Artifact>,
+}
+
+impl PjrtRuntime {
+    /// Create a CPU PJRT client and compile every artifact in `dir`.
+    pub fn load_dir(dir: impl AsRef<Path>) -> Result<PjrtRuntime> {
+        let dir = dir.as_ref();
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
+            .with_context(|| format!("reading {}/manifest.txt — run `make artifacts`", dir.display()))?;
+        let artifacts = parse_manifest(dir, &manifest)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        let mut rt = PjrtRuntime {
+            client,
+            executables: HashMap::new(),
+            artifacts: HashMap::new(),
+        };
+        for a in artifacts {
+            rt.compile_artifact(a)?;
+        }
+        Ok(rt)
+    }
+
+    fn compile_artifact(&mut self, a: Artifact) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(
+            a.path.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", a.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", a.name))?;
+        self.executables.insert(a.name.clone(), exe);
+        self.artifacts.insert(a.name.clone(), a);
+        Ok(())
+    }
+
+    /// Variant names available.
+    pub fn variants(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.keys().map(String::as_str).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Artifact metadata.
+    pub fn artifact(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.get(name)
+    }
+
+    /// Execute a variant on concrete inputs. Outputs come back as logical
+    /// row-major tensors.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let a = self
+            .artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact {name}"))?;
+        let exe = self.executables.get(name).expect("artifact implies executable");
+        if inputs.len() != a.inputs.len() {
+            bail!("{name} expects {} inputs, got {}", a.inputs.len(), inputs.len());
+        }
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (t, want) in inputs.iter().zip(&a.inputs) {
+            if t.shape() != want {
+                bail!("{name}: input shape {} != artifact {}", t.shape(), want);
+            }
+            let dims: Vec<i64> = want.dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&t.data)
+                .reshape(&dims)
+                .context("reshaping input literal")?;
+            lits.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .with_context(|| format!("executing {name}"))?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        // aot.py lowers with return_tuple=True; our variants return 1-tuples.
+        let out_lit = result.to_tuple1().context("unwrapping result tuple")?;
+        let data = out_lit.to_vec::<f32>().context("reading f32 result")?;
+        let shape = a.outputs[0].clone();
+        if data.len() != shape.numel() {
+            bail!("{name}: output numel {} != manifest {}", data.len(), shape.numel());
+        }
+        Ok(vec![Tensor::new(TensorDesc::plain(shape), data)])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest_lines() {
+        let dir = Path::new("/tmp/a");
+        let arts = parse_manifest(
+            dir,
+            "variant=smoke inputs=2x2:float32,2x2:float32 outputs=2x2:float32\n\
+             variant=linked inputs=1x16x16x32:float32 outputs=1x10:float32\n",
+        )
+        .unwrap();
+        assert_eq!(arts.len(), 2);
+        assert_eq!(arts[0].name, "smoke");
+        assert_eq!(arts[0].inputs.len(), 2);
+        assert_eq!(arts[1].inputs[0], Shape::new(vec![1, 16, 16, 32]));
+        assert_eq!(arts[1].path, dir.join("linked.hlo.txt"));
+    }
+
+    #[test]
+    fn rejects_bad_tags() {
+        assert!(parse_shape_tag("2x2").is_err());
+        assert!(parse_shape_tag("2x2:int8").is_err());
+        assert!(parse_shape_tag("2xx:float32").is_err());
+        assert!(parse_shape_tag("8:float32").is_ok());
+    }
+}

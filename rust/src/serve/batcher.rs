@@ -1,0 +1,122 @@
+//! Dynamic batching: group queued requests up to a size cap or a deadline,
+//! whichever comes first — the "batch transmission mechanism" of the
+//! paper's communication middleware (§6.2), applied to inference requests.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+use super::Request;
+
+/// Batcher policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatcherConfig {
+    /// Maximum requests per batch (≥1).
+    pub max_batch: usize,
+    /// Maximum time to hold an open batch.
+    pub max_wait: Duration,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// A formed batch.
+pub type Batch = Vec<Request>;
+
+/// Pull-based dynamic batcher over an mpsc channel.
+#[derive(Debug)]
+pub struct Batcher {
+    cfg: BatcherConfig,
+}
+
+impl Batcher {
+    /// Create a batcher with the given policy.
+    pub fn new(cfg: BatcherConfig) -> Batcher {
+        assert!(cfg.max_batch >= 1, "max_batch must be >= 1");
+        Batcher { cfg }
+    }
+
+    /// Form the next batch. Blocks for the first request, then fills until
+    /// `max_batch` or `max_wait`. Returns `None` once the channel is closed
+    /// and drained.
+    pub fn next_batch(&self, rx: &Receiver<Request>) -> Option<Batch> {
+        let first = rx.recv().ok()?;
+        let deadline = Instant::now() + self.cfg.max_wait;
+        let mut batch = vec![first];
+        while batch.len() < self.cfg.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(r) => batch.push(r),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ops::Tensor;
+    use std::sync::mpsc;
+
+    fn req(id: u64) -> Request {
+        Request { id, inputs: vec![Tensor::mat(1, 1, vec![0.0])], submitted: Instant::now() }
+    }
+
+    #[test]
+    fn fills_to_max_batch() {
+        let (tx, rx) = mpsc::channel();
+        for i in 0..10 {
+            tx.send(req(i)).unwrap();
+        }
+        let b = Batcher::new(BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(50) });
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch[0].id, 0);
+        assert_eq!(batch[3].id, 3);
+    }
+
+    #[test]
+    fn deadline_flushes_partial_batch() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(req(0)).unwrap();
+        let b = Batcher::new(BatcherConfig { max_batch: 64, max_wait: Duration::from_millis(5) });
+        let t0 = Instant::now();
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() < Duration::from_millis(200));
+    }
+
+    #[test]
+    fn closed_empty_channel_yields_none() {
+        let (tx, rx) = mpsc::channel::<Request>();
+        drop(tx);
+        let b = Batcher::new(BatcherConfig::default());
+        assert!(b.next_batch(&rx).is_none());
+    }
+
+    #[test]
+    fn drains_after_close() {
+        let (tx, rx) = mpsc::channel();
+        tx.send(req(1)).unwrap();
+        tx.send(req(2)).unwrap();
+        drop(tx);
+        let b = Batcher::new(BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(1) });
+        let batch = b.next_batch(&rx).unwrap();
+        assert_eq!(batch.len(), 2);
+        assert!(b.next_batch(&rx).is_none());
+    }
+
+    #[test]
+    #[should_panic(expected = "max_batch")]
+    fn zero_batch_rejected() {
+        Batcher::new(BatcherConfig { max_batch: 0, max_wait: Duration::from_millis(1) });
+    }
+}

@@ -1,0 +1,307 @@
+//! The request router + worker pool: batches flow round-robin to worker
+//! threads, each owning an inference [`Engine`]; responses are collected
+//! with full latency accounting.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::{Request, Response};
+use crate::runtime::Engine;
+use crate::util::stats::Summary;
+
+/// Serving configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Worker threads (each with its own engine).
+    pub workers: usize,
+    /// Batching policy.
+    pub batcher: BatcherConfig,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { workers: 2, batcher: BatcherConfig::default() }
+    }
+}
+
+/// Aggregate serving metrics.
+#[derive(Debug)]
+pub struct ServeReport {
+    /// Requests served.
+    pub served: usize,
+    /// Wall-clock duration of the run, seconds.
+    pub wall_s: f64,
+    /// Throughput, requests/second.
+    pub throughput: f64,
+    /// End-to-end latency stats (seconds).
+    pub latency: Summary,
+    /// Engine execution-time stats (seconds).
+    pub exec: Summary,
+    /// Batch-size stats.
+    pub batch_size: Summary,
+    /// All responses (outputs included), sorted by request id.
+    pub responses: Vec<Response>,
+}
+
+/// The serving coordinator.
+pub struct Coordinator {
+    cfg: ServeConfig,
+}
+
+impl Coordinator {
+    /// Create a coordinator.
+    pub fn new(cfg: ServeConfig) -> Coordinator {
+        assert!(cfg.workers >= 1);
+        Coordinator { cfg }
+    }
+
+    /// Serve every request produced by `requests` (an iterator that may
+    /// sleep to model arrivals), constructing one engine per worker via
+    /// `engine_factory` — **inside** the worker thread, because PJRT
+    /// handles are not `Send`. Returns aggregate metrics once all
+    /// responses are in.
+    pub fn run<I>(
+        &self,
+        engine_factory: impl Fn(usize) -> Result<Engine> + Send + Sync,
+        requests: I,
+    ) -> Result<ServeReport>
+    where
+        I: IntoIterator<Item = Request> + Send,
+        I::IntoIter: Send,
+    {
+        let (req_tx, req_rx) = mpsc::channel::<Request>();
+        let (resp_tx, resp_rx) = mpsc::channel::<Response>();
+        let (ready_tx, ready_rx) = mpsc::channel::<bool>();
+        let factory = &engine_factory;
+
+        let t0 = Instant::now();
+        thread::scope(|scope| -> Result<ServeReport> {
+            let mut worker_txs = Vec::new();
+            let mut handles = Vec::new();
+            for w in 0..self.cfg.workers {
+                let (btx, brx) = mpsc::channel::<super::Batch>();
+                worker_txs.push(btx);
+                let resp_tx = resp_tx.clone();
+                let ready_tx = ready_tx.clone();
+                handles.push(scope.spawn(move || -> Result<()> {
+                    // Engine construction stays thread-local (PJRT clients
+                    // and executables are !Send). Signal readiness so the
+                    // feeder doesn't time requests against compile cost.
+                    let engine = match factory(w) {
+                        Ok(e) => {
+                            let _ = ready_tx.send(true);
+                            e
+                        }
+                        Err(e) => {
+                            let _ = ready_tx.send(false);
+                            return Err(e);
+                        }
+                    };
+                    while let Ok(batch) = brx.recv() {
+                        let bsize = batch.len();
+                        for req in batch {
+                            match engine.infer(&req.inputs) {
+                                Ok(out) => {
+                                    let _ = resp_tx.send(Response {
+                                        id: req.id,
+                                        outputs: out.outputs,
+                                        latency_s: req.submitted.elapsed().as_secs_f64(),
+                                        exec_s: out.exec_s,
+                                        batch_size: bsize,
+                                        worker: w,
+                                    });
+                                }
+                                Err(e) => {
+                                    log::error!("worker {w}: inference failed: {e:#}");
+                                }
+                            }
+                        }
+                    }
+                    Ok(())
+                }));
+            }
+            drop(resp_tx);
+
+            // Dispatcher: batcher + round-robin router.
+            let batcher = Batcher::new(self.cfg.batcher);
+            let n_workers = worker_txs.len();
+            let dispatcher = scope.spawn(move || {
+                let mut rr = 0usize;
+                while let Some(batch) = batcher.next_batch(&req_rx) {
+                    // Round-robin routing across the worker pool.
+                    if worker_txs[rr % n_workers].send(batch).is_err() {
+                        break;
+                    }
+                    rr += 1;
+                }
+                // Dropping worker_txs closes the workers.
+            });
+
+            // Feed requests from the caller's iterator, once every worker
+            // finished (or failed) engine construction — request latency
+            // must not include one-time compilation.
+            let n_workers = self.cfg.workers;
+            let feeder = scope.spawn(move || {
+                for _ in 0..n_workers {
+                    let _ = ready_rx.recv();
+                }
+                let mut n = 0usize;
+                for req in requests {
+                    if req_tx.send(req).is_err() {
+                        break;
+                    }
+                    n += 1;
+                }
+                n
+            });
+
+            let submitted = feeder.join().expect("feeder panicked");
+            dispatcher.join().expect("dispatcher panicked");
+            for h in handles {
+                h.join().expect("worker panicked")?;
+            }
+
+            let mut responses: Vec<Response> = resp_rx.into_iter().collect();
+            let wall_s = t0.elapsed().as_secs_f64();
+            responses.sort_by_key(|r| r.id);
+
+            let lat: Vec<f64> = responses.iter().map(|r| r.latency_s).collect();
+            let exec: Vec<f64> = responses.iter().map(|r| r.exec_s).collect();
+            let bs: Vec<f64> = responses.iter().map(|r| r.batch_size as f64).collect();
+            anyhow::ensure!(
+                responses.len() == submitted,
+                "served {} of {} requests",
+                responses.len(),
+                submitted
+            );
+            Ok(ServeReport {
+                served: responses.len(),
+                wall_s,
+                throughput: responses.len() as f64 / wall_s.max(1e-12),
+                latency: Summary::of(&lat).unwrap_or(EMPTY),
+                exec: Summary::of(&exec).unwrap_or(EMPTY),
+                batch_size: Summary::of(&bs).unwrap_or(EMPTY),
+                responses,
+            })
+        })
+    }
+}
+
+const EMPTY: Summary = Summary {
+    n: 0,
+    mean: 0.0,
+    stddev: 0.0,
+    min: 0.0,
+    p50: 0.0,
+    p90: 0.0,
+    p99: 0.0,
+    max: 0.0,
+};
+
+/// Generate `n` synthetic requests for an engine's input shapes, with
+/// exponential inter-arrival times at `rate` req/s (0 = all at once).
+pub fn synthetic_requests(
+    shapes: Vec<crate::graph::Shape>,
+    n: usize,
+    rate: f64,
+    seed: u64,
+) -> impl Iterator<Item = Request> {
+    let mut rng = crate::util::rng::Rng::new(seed);
+    (0..n as u64).map(move |id| {
+        if rate > 0.0 {
+            let dt = rng.exp(rate);
+            thread::sleep(std::time::Duration::from_secs_f64(dt.min(0.05)));
+        }
+        let inputs = shapes
+            .iter()
+            .map(|s| {
+                let numel = s.numel();
+                crate::ops::Tensor::new(
+                    crate::graph::TensorDesc::plain(s.clone()),
+                    rng.vec_uniform(numel),
+                )
+            })
+            .collect();
+        Request { id, inputs, submitted: Instant::now() }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, Shape};
+    use std::sync::Arc;
+
+    fn engine() -> Engine {
+        let mut b = GraphBuilder::new("serve_test");
+        let x = b.input("x", Shape::nchw(1, 2, 8, 8));
+        let c = b.conv("c", x, 4, 3, 1, 1);
+        let r = b.relu("r", c);
+        b.output(r);
+        Engine::interp(Arc::new(b.finish()))
+    }
+
+    #[test]
+    fn serves_all_requests_exactly_once() {
+        let coord = Coordinator::new(ServeConfig::default());
+        let shapes = engine().input_shapes();
+        let report = coord
+            .run(|_| Ok(engine()), synthetic_requests(shapes, 40, 0.0, 1))
+            .unwrap();
+        assert_eq!(report.served, 40);
+        // ids 0..40 each exactly once
+        let ids: Vec<u64> = report.responses.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..40).collect::<Vec<_>>());
+        assert!(report.throughput > 0.0);
+    }
+
+    #[test]
+    fn batch_sizes_respect_cap() {
+        let cfg = ServeConfig {
+            workers: 1,
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: std::time::Duration::from_millis(10),
+            },
+        };
+        let coord = Coordinator::new(cfg);
+        let shapes = engine().input_shapes();
+        let report = coord
+            .run(|_| Ok(engine()), synthetic_requests(shapes, 32, 0.0, 2))
+            .unwrap();
+        assert!(report.batch_size.max <= 4.0);
+        assert!(report.batch_size.mean >= 1.0);
+    }
+
+    #[test]
+    fn multiple_workers_share_load() {
+        let cfg = ServeConfig { workers: 3, ..Default::default() };
+        let coord = Coordinator::new(cfg);
+        let shapes = engine().input_shapes();
+        let report = coord
+            .run(|_| Ok(engine()), synthetic_requests(shapes, 60, 0.0, 3))
+            .unwrap();
+        let mut seen = std::collections::HashSet::new();
+        for r in &report.responses {
+            seen.insert(r.worker);
+        }
+        assert!(seen.len() >= 2, "load should reach >1 worker: {seen:?}");
+    }
+
+    #[test]
+    fn latency_includes_queue_time() {
+        let report = Coordinator::new(ServeConfig::default())
+            .run(
+                |_| Ok(engine()),
+                synthetic_requests(engine().input_shapes(), 10, 0.0, 4),
+            )
+            .unwrap();
+        for r in &report.responses {
+            assert!(r.latency_s >= r.exec_s * 0.5, "latency must cover exec");
+        }
+    }
+}

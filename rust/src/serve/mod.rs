@@ -1,0 +1,55 @@
+//! Serving coordinator — the paper's §2.1 inference workflow as a
+//! production-shaped request loop.
+//!
+//! Architecture (Python never appears; engines execute AOT artifacts):
+//!
+//! ```text
+//!  acquisition ──> preprocess ──> router ──> dynamic batcher ──> workers
+//!  (synthetic      (normalize,    (queue,     (max_batch /        (Engine:
+//!   image source)   resize)        backpressure) max_wait)         PJRT)
+//! ```
+//!
+//! * [`batcher`] — size/deadline dynamic batching.
+//! * [`pipeline`] — the three-stage §2.1 pipeline with per-stage timing
+//!   (reproduces "the inference module takes over 60% of the overall
+//!   execution time").
+//! * [`coordinator`] — router + worker pool + metrics.
+
+pub mod batcher;
+pub mod coordinator;
+pub mod pipeline;
+
+pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use coordinator::{Coordinator, ServeConfig, ServeReport};
+pub use pipeline::{run_pipeline, PipelineConfig, PipelineReport};
+
+use crate::ops::Tensor;
+use std::time::Instant;
+
+/// One inference request.
+#[derive(Debug)]
+pub struct Request {
+    /// Caller-assigned id; responses carry it back.
+    pub id: u64,
+    /// Model inputs.
+    pub inputs: Vec<Tensor>,
+    /// Submission timestamp (latency measurement).
+    pub submitted: Instant,
+}
+
+/// One inference response.
+#[derive(Debug)]
+pub struct Response {
+    /// Request id.
+    pub id: u64,
+    /// Model outputs.
+    pub outputs: Vec<Tensor>,
+    /// End-to-end latency (submit → response), seconds.
+    pub latency_s: f64,
+    /// Pure engine execution time, seconds.
+    pub exec_s: f64,
+    /// Batch size the request was served in.
+    pub batch_size: usize,
+    /// Worker that served it.
+    pub worker: usize,
+}

@@ -1,0 +1,168 @@
+//! The paper's §2.1 three-stage inference workflow: image acquisition →
+//! preprocessing → inference, with per-stage timing.
+//!
+//! The acquisition stage synthesizes camera frames (the paper's high-speed
+//! image collector over SRIO is hardware we substitute, DESIGN.md
+//! §Substitutions); preprocessing does the resize + normalization the paper
+//! describes; inference goes through an [`Engine`]. The report verifies the
+//! paper's motivating observation: the inference module dominates
+//! (">60% of the overall execution time").
+
+use anyhow::Result;
+
+use crate::graph::Shape;
+use crate::ops::Tensor;
+use crate::runtime::Engine;
+use crate::util::rng::Rng;
+use std::time::Instant;
+
+/// Pipeline configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineConfig {
+    /// Frames to process.
+    pub frames: usize,
+    /// Source frame height/width (acquisition emits square RGB frames).
+    pub src_hw: usize,
+    /// RNG seed for frame synthesis.
+    pub seed: u64,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig { frames: 16, src_hw: 32, seed: 7 }
+    }
+}
+
+/// Per-stage timing report.
+#[derive(Debug)]
+pub struct PipelineReport {
+    /// Frames processed.
+    pub frames: usize,
+    /// Acquisition time, seconds (total).
+    pub acquire_s: f64,
+    /// Preprocess time, seconds.
+    pub preprocess_s: f64,
+    /// Inference time, seconds.
+    pub inference_s: f64,
+    /// Final outputs of the last frame.
+    pub last_output: Vec<Tensor>,
+}
+
+impl PipelineReport {
+    /// Fraction of total pipeline time spent in the inference module.
+    pub fn inference_share(&self) -> f64 {
+        let total = self.acquire_s + self.preprocess_s + self.inference_s;
+        if total <= 0.0 {
+            0.0
+        } else {
+            self.inference_s / total
+        }
+    }
+}
+
+/// Synthesize one camera frame: HWC u8-ish values in [0, 255].
+fn acquire_frame(rng: &mut Rng, hw: usize) -> Vec<f32> {
+    (0..hw * hw * 3).map(|_| (rng.next_u64() % 256) as f32).collect()
+}
+
+/// Preprocess: bilinear-ish resize (nearest for determinism) from
+/// `src_hw`² RGB to the engine's input shape, then normalize to [-1, 1],
+/// replicating channels if the model wants more than 3.
+fn preprocess(frame: &[f32], src_hw: usize, want: &Shape) -> Tensor {
+    let dims = &want.dims;
+    // Accept NHWC or NCHW-ish 4-D shapes; infer H/W/C heuristically.
+    assert_eq!(dims.len(), 4, "pipeline expects 4-D model input");
+    let (h, w, c) = (dims[1], dims[2], dims[3]); // our artifacts are NHWC
+    let mut out = vec![0.0f32; want.numel()];
+    for y in 0..h {
+        for x in 0..w {
+            let sy = y * src_hw / h;
+            let sx = x * src_hw / w;
+            for ch in 0..c {
+                let src_c = ch % 3;
+                let v = frame[(sy * src_hw + sx) * 3 + src_c];
+                out[(y * w + x) * c + ch] = v / 127.5 - 1.0;
+            }
+        }
+    }
+    Tensor::new(crate::graph::TensorDesc::plain(want.clone()), out)
+}
+
+/// Run the full pipeline.
+pub fn run_pipeline(engine: &Engine, cfg: PipelineConfig) -> Result<PipelineReport> {
+    let mut rng = Rng::new(cfg.seed);
+    let want = engine
+        .input_shapes()
+        .first()
+        .cloned()
+        .ok_or_else(|| anyhow::anyhow!("engine has no inputs"))?;
+
+    let (mut t_acq, mut t_pre, mut t_inf) = (0.0, 0.0, 0.0);
+    let mut last_output = Vec::new();
+    for _ in 0..cfg.frames {
+        let t0 = Instant::now();
+        let frame = acquire_frame(&mut rng, cfg.src_hw);
+        let t1 = Instant::now();
+        let input = preprocess(&frame, cfg.src_hw, &want);
+        let t2 = Instant::now();
+        let out = engine.infer(&[input])?;
+        let t3 = Instant::now();
+        t_acq += (t1 - t0).as_secs_f64();
+        t_pre += (t2 - t1).as_secs_f64();
+        t_inf += (t3 - t2).as_secs_f64();
+        last_output = out.outputs;
+    }
+    Ok(PipelineReport {
+        frames: cfg.frames,
+        acquire_s: t_acq,
+        preprocess_s: t_pre,
+        inference_s: t_inf,
+        last_output,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::GraphBuilder;
+    use std::sync::Arc;
+
+    fn engine() -> Engine {
+        let mut b = GraphBuilder::new("pipe_test");
+        let x = b.input("x", Shape::new(vec![1, 8, 8, 3]));
+        let s = b.sigmoid("s", x);
+        b.output(s);
+        Engine::interp(Arc::new(b.finish()))
+    }
+
+    #[test]
+    fn pipeline_processes_all_frames() {
+        let r = run_pipeline(&engine(), PipelineConfig { frames: 4, src_hw: 16, seed: 1 })
+            .unwrap();
+        assert_eq!(r.frames, 4);
+        assert!(!r.last_output.is_empty());
+        assert!(r.inference_s > 0.0);
+    }
+
+    #[test]
+    fn preprocess_normalizes_to_unit_range() {
+        let mut rng = Rng::new(2);
+        let frame = acquire_frame(&mut rng, 16);
+        let t = preprocess(&frame, 16, &Shape::new(vec![1, 8, 8, 3]));
+        assert!(t.data.iter().all(|v| (-1.0..=1.0).contains(v)));
+    }
+
+    #[test]
+    fn preprocess_replicates_channels() {
+        let frame = vec![255.0; 4 * 4 * 3];
+        let t = preprocess(&frame, 4, &Shape::new(vec![1, 2, 2, 6]));
+        assert!(t.data.iter().all(|&v| (v - 1.0).abs() < 1e-6));
+    }
+
+    #[test]
+    fn inference_share_is_fraction() {
+        let r = run_pipeline(&engine(), PipelineConfig::default()).unwrap();
+        let share = r.inference_share();
+        assert!((0.0..=1.0).contains(&share));
+    }
+}

@@ -1,0 +1,225 @@
+//! Trace-driven set-associative cache simulator.
+//!
+//! Used by the Table 4/5 micro-benchmarks: we generate the *actual* address
+//! trace a consumer operator issues against a feature map stored in a given
+//! [`DataLayout`] and count hits/misses through an L1D-sized cache — the
+//! paper's "compulsory cache misses for each data access" (§4.1) made
+//! concrete.
+
+use crate::graph::DataLayout;
+
+/// Set-associative LRU cache model.
+#[derive(Debug)]
+pub struct CacheSim {
+    sets: Vec<Vec<u64>>, // per-set tag list, most-recent last
+    assoc: usize,
+    line_bits: u32,
+    set_mask: u64,
+    /// Total accesses issued.
+    pub accesses: u64,
+    /// Misses (compulsory + capacity + conflict).
+    pub misses: u64,
+}
+
+impl CacheSim {
+    /// Build a cache of `capacity` bytes, `line` bytes per line, `assoc`
+    /// ways. Capacity/line/assoc must give a power-of-two set count.
+    pub fn new(capacity: usize, line: usize, assoc: usize) -> CacheSim {
+        assert!(line.is_power_of_two());
+        let n_sets = capacity / line / assoc;
+        assert!(n_sets.is_power_of_two(), "set count {n_sets} must be 2^k");
+        CacheSim {
+            sets: vec![Vec::with_capacity(assoc); n_sets],
+            assoc,
+            line_bits: line.trailing_zeros(),
+            set_mask: (n_sets - 1) as u64,
+            accesses: 0,
+            misses: 0,
+        }
+    }
+
+    /// Issue one byte-address access.
+    pub fn access(&mut self, addr: u64) {
+        self.accesses += 1;
+        let line = addr >> self.line_bits;
+        let set = (line & self.set_mask) as usize;
+        let ways = &mut self.sets[set];
+        if let Some(pos) = ways.iter().position(|&t| t == line) {
+            let t = ways.remove(pos);
+            ways.push(t); // refresh LRU
+        } else {
+            self.misses += 1;
+            if ways.len() == self.assoc {
+                ways.remove(0);
+            }
+            ways.push(line);
+        }
+    }
+
+    /// Run a whole trace.
+    pub fn run(&mut self, trace: impl IntoIterator<Item = u64>) {
+        for a in trace {
+            self.access(a);
+        }
+    }
+
+    /// Miss ratio.
+    pub fn miss_ratio(&self) -> f64 {
+        if self.accesses == 0 {
+            0.0
+        } else {
+            self.misses as f64 / self.accesses as f64
+        }
+    }
+}
+
+/// Byte address of feature-map element `(c, y, x)` under a physical layout.
+/// `cs`/`h`/`w` are the map dimensions; element size 4 bytes.
+pub fn fm_addr(layout: DataLayout, c: usize, y: usize, x: usize, cs: usize, h: usize, w: usize) -> u64 {
+    let idx = match layout {
+        DataLayout::Chw => (c * h + y) * w + x,
+        DataLayout::Hwc => (y * w + x) * cs + c,
+        DataLayout::Linked { ph, pw } => {
+            // Pool-window zigzag (paper Figure 4 right): windows row-major,
+            // then channels, then the ph×pw window elements — exactly the
+            // order the linked Conv1x1+Pool consumer walks.
+            let (ph, pw) = (ph as usize, pw as usize);
+            let (wy, wx) = (y / ph, x / pw);
+            let (iy, ix) = (y % ph, x % pw);
+            let windows_per_row = w / pw;
+            let win = wy * windows_per_row + wx;
+            (win * cs + c) * (ph * pw) + iy * pw + ix
+        }
+        DataLayout::RowMajor | DataLayout::ColMajor => (c * h + y) * w + x,
+    };
+    (idx * 4) as u64
+}
+
+/// The read trace of a pooling consumer over a conv output: for every pool
+/// window, every channel, every in-window element (the paper's Figure 4
+/// access order for a linked Conv1x1+Pool).
+pub fn pool_consumer_trace(
+    layout: DataLayout,
+    cs: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+) -> Vec<u64> {
+    let mut trace = Vec::with_capacity(cs * h * w);
+    for wy in 0..h / k {
+        for wx in 0..w / k {
+            for c in 0..cs {
+                for iy in 0..k {
+                    for ix in 0..k {
+                        trace.push(fm_addr(layout, c, wy * k + iy, wx * k + ix, cs, h, w));
+                    }
+                }
+            }
+        }
+    }
+    trace
+}
+
+/// The read trace of a dense (pointwise) conv consumer: for every pixel,
+/// every channel (channel-first order, paper Figure 2).
+pub fn pointwise_consumer_trace(layout: DataLayout, cs: usize, h: usize, w: usize) -> Vec<u64> {
+    let mut trace = Vec::with_capacity(cs * h * w);
+    for y in 0..h {
+        for x in 0..w {
+            for c in 0..cs {
+                trace.push(fm_addr(layout, c, y, x, cs, h, w));
+            }
+        }
+    }
+    trace
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_trace_misses_once_per_line() {
+        let mut c = CacheSim::new(32 * 1024, 64, 4);
+        c.run((0..4096u64).map(|i| i * 4));
+        // 16 KiB touched = 256 lines.
+        assert_eq!(c.misses, 256);
+    }
+
+    #[test]
+    fn strided_trace_misses_every_access_when_oversized() {
+        let mut c = CacheSim::new(32 * 1024, 64, 4);
+        // Stride = 4KiB over 16MiB: every access a distinct line, far
+        // beyond capacity, revisited once -> all misses.
+        let trace: Vec<u64> = (0..4096u64).map(|i| i * 4096).collect();
+        c.run(trace.iter().copied().chain(trace.iter().copied()));
+        assert_eq!(c.misses, 8192, "no reuse survives capacity eviction");
+    }
+
+    #[test]
+    fn repeated_small_working_set_hits() {
+        let mut c = CacheSim::new(32 * 1024, 64, 4);
+        for _ in 0..10 {
+            c.run((0..1024u64).map(|i| i * 4)); // 4KiB working set
+        }
+        assert_eq!(c.misses, 64, "only first pass misses");
+        assert!(c.miss_ratio() < 0.01);
+    }
+
+    #[test]
+    fn linked_layout_makes_pool_trace_sequential() {
+        // 2x2 pooling over 8x8x16: the Linked{2,2} layout must yield a
+        // strictly increasing (stride-4) address sequence.
+        let t = pool_consumer_trace(DataLayout::Linked { ph: 2, pw: 2 }, 16, 8, 8, 2);
+        for (i, pair) in t.windows(2).enumerate() {
+            assert_eq!(pair[1] - pair[0], 4, "non-sequential at {i}");
+        }
+    }
+
+    #[test]
+    fn hwc_layout_makes_pointwise_trace_sequential() {
+        let t = pointwise_consumer_trace(DataLayout::Hwc, 32, 4, 4);
+        for pair in t.windows(2) {
+            assert_eq!(pair[1] - pair[0], 4);
+        }
+    }
+
+    #[test]
+    fn chw_pool_trace_misses_far_more_than_linked() {
+        // The Table 4/5 mechanism: same consumer, two layouts, L1D-sized
+        // cache, big feature map.
+        let (cs, h, w, k) = (24, 224, 224, 2);
+        let mut vanilla = CacheSim::new(32 * 1024, 64, 4);
+        vanilla.run(pool_consumer_trace(DataLayout::Chw, cs, h, w, k));
+        let mut linked = CacheSim::new(32 * 1024, 64, 4);
+        linked.run(pool_consumer_trace(DataLayout::Linked { ph: 2, pw: 2 }, cs, h, w, k));
+        assert!(
+            vanilla.misses > 5 * linked.misses,
+            "{} vs {}",
+            vanilla.misses,
+            linked.misses
+        );
+    }
+
+    #[test]
+    fn fm_addr_layouts_cover_all_elements() {
+        // Every layout must be a bijection over the element set.
+        for layout in [
+            DataLayout::Chw,
+            DataLayout::Hwc,
+            DataLayout::Linked { ph: 2, pw: 2 },
+        ] {
+            let (cs, h, w) = (3, 4, 4);
+            let mut seen = std::collections::HashSet::new();
+            for c in 0..cs {
+                for y in 0..h {
+                    for x in 0..w {
+                        assert!(seen.insert(fm_addr(layout, c, y, x, cs, h, w)));
+                    }
+                }
+            }
+            assert_eq!(seen.len(), cs * h * w);
+            assert_eq!(*seen.iter().max().unwrap(), ((cs * h * w - 1) * 4) as u64);
+        }
+    }
+}

@@ -1,0 +1,286 @@
+//! Layout- and partition-aware analytic cost model.
+//!
+//! Prices one node of a planned graph on a device. The two optimizations
+//! act on exactly two terms, mirroring the paper's analysis:
+//!
+//! * **VO** controls the `fm_read` term: a producer whose output layout
+//!   matches the consumer's read order streams at full shared-memory
+//!   bandwidth; a mismatch pays the per-line miss amplification
+//!   ([`DeviceModel::mismatch_factor`]) — compulsory misses on the C6678,
+//!   mostly hidden by LUT data mappers on the ZCU102.
+//! * **HO** controls the `compute` term (units × balance) and the `param`
+//!   term (L2-resident chunks stream once and overlap with compute;
+//!   unfit parameters are re-fetched from DDR and serialize).
+
+use crate::graph::{Graph, Node, OpKind};
+use crate::hw::DeviceModel;
+use crate::opt::NodePlan;
+
+/// Cost breakdown of one node.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct NodeCost {
+    /// Arithmetic time on the assigned units.
+    pub compute_s: f64,
+    /// Feature-map read time (VO-sensitive).
+    pub fm_read_s: f64,
+    /// Feature-map write time (incl. halo replication).
+    pub fm_write_s: f64,
+    /// Parameter fetch time (HO-sensitive).
+    pub param_s: f64,
+    /// Launch/sync overhead.
+    pub overhead_s: f64,
+    /// End-to-end node time.
+    pub total_s: f64,
+    /// Bytes moved over DDR.
+    pub ddr_bytes: u64,
+    /// Bytes moved over shared on-chip memory.
+    pub shared_bytes: u64,
+    /// Per-unit L2-resident parameter working set.
+    pub l2_bytes: u64,
+    /// Shared-memory occupancy while the node runs (in + out feature maps).
+    pub sram_bytes: u64,
+    /// Whether any input edge was layout-mismatched.
+    pub mismatched: bool,
+}
+
+/// True if a producer's physical layout satisfies a consumer preference.
+pub fn layout_matches(
+    produced: crate::graph::DataLayout,
+    preferred: Option<crate::graph::DataLayout>,
+) -> bool {
+    match preferred {
+        None => true,
+        Some(p) => p == produced,
+    }
+}
+
+/// Price `node` (belonging to `g`) under `plan` on `device`.
+pub fn node_cost(g: &Graph, node: &Node, plan: &NodePlan, device: &DeviceModel) -> NodeCost {
+    let mut c = NodeCost::default();
+    if matches!(node.op, OpKind::Input) {
+        return c;
+    }
+
+    // ---- compute ---------------------------------------------------------
+    let macs = node.macs() as f64;
+    let peak = device.peak_macs(plan.units.max(1)) * plan.balance.max(1e-6);
+    c.compute_s = macs / peak;
+
+    // ---- feature-map reads (VO) -----------------------------------------
+    let mut in_bytes = 0u64;
+    for (slot, &inp) in node.inputs.iter().enumerate() {
+        let prod = g.node(inp);
+        let bytes = prod.out.bytes();
+        in_bytes += bytes;
+        let pref = node.op.read_pref(slot, &prod.out);
+        let t = device.shared.stream_time(bytes);
+        if layout_matches(prod.out.layout, pref) {
+            c.fm_read_s += t;
+        } else {
+            c.fm_read_s += t * device.mismatch_factor();
+            c.mismatched = true;
+        }
+    }
+
+    // ---- feature-map writes ---------------------------------------------
+    let out_bytes = node.out.bytes() + plan.halo_bytes;
+    c.fm_write_s = device.shared.stream_time(out_bytes);
+    c.shared_bytes = in_bytes + out_bytes;
+    c.sram_bytes = in_bytes + node.out.bytes();
+
+    // Spill: when in+out exceed shared memory the overflow moves at DDR
+    // speed instead (paper Fig. 9's early bursts; footnote 2's slicing).
+    if c.sram_bytes > device.shared.capacity {
+        let spill = c.sram_bytes - device.shared.capacity;
+        c.fm_write_s += device.ddr.stream_time(spill) - device.shared.stream_time(spill);
+        c.ddr_bytes += spill;
+    }
+
+    // ---- parameters (HO) --------------------------------------------------
+    let param_bytes = node.param_bytes();
+    if param_bytes > 0 {
+        let per_unit = param_bytes / plan.units.max(1) as u64;
+        if plan.params_fit_l2 {
+            // Chunks stream from DDR once, double-buffered.
+            c.param_s = device.ddr.stream_time(param_bytes);
+            c.ddr_bytes += param_bytes;
+            c.l2_bytes = plan
+                .param_split
+                .map(|s| s.chunk_bytes)
+                .unwrap_or(per_unit)
+                .min(device.l2.capacity);
+            if plan.param_split.map(|s| s.needs_reduction).unwrap_or(false) {
+                // Partial sums traverse shared memory once more.
+                let red = node.out.bytes();
+                c.fm_write_s += 2.0 * device.shared.stream_time(red);
+                c.shared_bytes += 2 * red;
+            }
+        } else {
+            // Unfit working set: every L2-capacity worth of weights is
+            // re-fetched from DDR as the unit walks its tiles.
+            let refetch =
+                crate::util::ceil_div(per_unit as usize, device.l2.capacity as usize).clamp(1, 8)
+                    as u64;
+            c.param_s = device.ddr.stream_time(param_bytes * refetch);
+            c.ddr_bytes += param_bytes * refetch;
+            c.l2_bytes = device.l2.capacity;
+        }
+    }
+
+    // ---- overhead & combination -------------------------------------------
+    let fanout_penalty = 1.0 + (plan.units.max(1) as f64).ln() / 8.0;
+    c.overhead_s = device.op_overhead * fanout_penalty;
+
+    let mem_s = c.fm_read_s + c.fm_write_s + c.param_s;
+    c.total_s = c.overhead_s
+        + if plan.dma_overlap && plan.params_fit_l2 {
+            // Double-buffered DMA overlaps memory with compute (§4.2.2).
+            c.compute_s.max(mem_s)
+        } else {
+            // No overlap discipline (Vanilla) or an L2-overflowing working
+            // set: compute stalls on memory.
+            c.compute_s + mem_s
+        };
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{DataLayout, GraphBuilder, Shape};
+    use crate::hw::presets;
+    use crate::opt::{dos, OptLevel};
+
+    fn dw_pw() -> crate::graph::Graph {
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", Shape::nchw(1, 64, 56, 56));
+        let dw = b.dwconv("dw", x, 3, 1, 1);
+        let pw = b.conv("pw", dw, 128, 1, 1, 0);
+        b.output(pw);
+        b.finish()
+    }
+
+    #[test]
+    fn mismatch_amplifies_read_time() {
+        let g = dw_pw();
+        let d = presets::tms320c6678();
+        let plan = dos::plan_node_dos(&g, g.node(2), &d, false);
+        // dw writes Chw (natural), pw wants Hwc -> mismatch.
+        let mismatched = node_cost(&g, g.node(2), &plan, &d);
+        assert!(mismatched.mismatched);
+
+        let mut linked = g.clone();
+        linked.node_mut(1).out.layout = DataLayout::Hwc;
+        let matched = node_cost(&linked, linked.node(2), &plan, &d);
+        assert!(!matched.mismatched);
+        assert!(
+            mismatched.fm_read_s > 5.0 * matched.fm_read_s,
+            "{} vs {}",
+            mismatched.fm_read_s,
+            matched.fm_read_s
+        );
+    }
+
+    #[test]
+    fn lut_mapper_damps_mismatch() {
+        let g = dw_pw();
+        let tms = presets::tms320c6678();
+        let zcu = presets::zcu102();
+        let p_tms = dos::plan_node_dos(&g, g.node(2), &tms, false);
+        let p_zcu = dos::plan_node_dos(&g, g.node(2), &zcu, false);
+        let c_tms = node_cost(&g, g.node(2), &p_tms, &tms);
+        let c_zcu = node_cost(&g, g.node(2), &p_zcu, &zcu);
+        // Relative penalty of the mismatch must be far larger on the DSP.
+        let rel_tms = c_tms.fm_read_s / c_tms.total_s;
+        let rel_zcu = c_zcu.fm_read_s / c_zcu.total_s;
+        assert!(rel_tms > rel_zcu, "{rel_tms} vs {rel_zcu}");
+    }
+
+    #[test]
+    fn unfit_params_serialize_and_refetch() {
+        // 1024x1024 pointwise: 4MB weights.
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", Shape::nchw(1, 1024, 7, 7));
+        let c = b.conv("c", x, 1024, 1, 1, 0);
+        b.output(c);
+        let g = b.finish();
+        let d = presets::tms320c6678();
+        let vanilla = dos::plan_node_vanilla(g.node(1), &d);
+        let ho = dos::plan_node_dos(&g, g.node(1), &d, false);
+        let cv = node_cost(&g, g.node(1), &vanilla, &d);
+        let ch = node_cost(&g, g.node(1), &ho, &d);
+        assert!(!vanilla.params_fit_l2 && ho.params_fit_l2);
+        assert!(cv.ddr_bytes > ch.ddr_bytes, "vanilla refetches weights");
+        assert!(cv.total_s > ch.total_s);
+    }
+
+    #[test]
+    fn more_units_cut_compute_time() {
+        let g = dw_pw();
+        let tms = presets::tms320c6678();
+        let zcu = presets::zcu102();
+        let p8 = dos::plan_node_dos(&g, g.node(2), &tms, false);
+        let p2k = dos::plan_node_dos(&g, g.node(2), &zcu, false);
+        let c8 = node_cost(&g, g.node(2), &p8, &tms);
+        let c2k = node_cost(&g, g.node(2), &p2k, &zcu);
+        assert!(c2k.compute_s < c8.compute_s / 10.0);
+    }
+
+    #[test]
+    fn input_nodes_are_free() {
+        let g = dw_pw();
+        let d = presets::tms320c6678();
+        let plan = crate::opt::NodePlan::serial(0);
+        let c = node_cost(&g, g.node(0), &plan, &d);
+        assert_eq!(c.total_s, 0.0);
+    }
+
+    #[test]
+    fn spill_routes_overflow_to_ddr() {
+        // CentreNet-scale maps blow the 4MB SRAM.
+        let mut b = GraphBuilder::new("t");
+        let x = b.input("x", Shape::nchw(1, 64, 256, 256));
+        let c = b.conv("c", x, 64, 3, 1, 1);
+        b.output(c);
+        let g = b.finish();
+        let d = presets::tms320c6678();
+        let plan = dos::plan_node_dos(&g, g.node(1), &d, false);
+        let cost = node_cost(&g, g.node(1), &plan, &d);
+        assert!(cost.ddr_bytes > 0, "16MB maps must spill past 4MB SRAM");
+    }
+
+    #[test]
+    fn vanilla_vs_full_ordering_on_tms() {
+        // End-to-end sanity on a MobileNet-tail-like block (4MB pointwise
+        // weights, the paper's Fig. 9 case): Vanilla > HO > Full, the
+        // Fig. 7 ordering.
+        let g = {
+            let mut b = GraphBuilder::new("t");
+            let x = b.input("x", Shape::nchw(1, 256, 56, 56));
+            let dw = b.dwconv("dw", x, 3, 1, 1);
+            // Memory-bound pointwise: linking (VO) wins here.
+            let pw1 = b.conv("pw1", dw, 256, 1, 1, 0);
+            let p = b.maxpool("pool", pw1, 2, 2);
+            let pw2 = b.conv("pw2", p, 1024, 1, 1, 0);
+            // 4MB of weights: the Vanilla deployment can't fit L2 (HO wins).
+            let pw3 = b.conv("pw3", pw2, 1024, 1, 1, 0);
+            b.output(pw3);
+            b.finish()
+        };
+        let d = presets::tms320c6678();
+        let (fused, _) = crate::opt::fusion::fuse_cbr(&g);
+        let linked = crate::opt::linking::link(&fused);
+        let total = |gr: &crate::graph::Graph, level: OptLevel| -> f64 {
+            let plan = dos::plan_graph(gr, &d, level);
+            gr.nodes
+                .iter()
+                .map(|n| node_cost(gr, n, plan.node(n.id), &d).total_s)
+                .sum()
+        };
+        let v = total(&fused, OptLevel::Vanilla);
+        let h = total(&fused, OptLevel::HoOnly);
+        let f = total(&linked.graph, OptLevel::Full);
+        assert!(v > h, "vanilla {v} > ho {h}");
+        assert!(h > f, "ho {h} > full {f}");
+    }
+}

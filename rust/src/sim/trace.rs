@@ -1,0 +1,109 @@
+//! Execution timeline and resource-usage traces (paper Figures 9 & 10).
+
+use crate::graph::NodeId;
+
+/// One node's slot in the execution timeline.
+#[derive(Debug, Clone)]
+pub struct TraceSample {
+    /// Node executed.
+    pub node: NodeId,
+    /// Node name (copied for reporting without the graph).
+    pub name: String,
+    /// Start time (s) since inference start.
+    pub t_start: f64,
+    /// End time (s).
+    pub t_end: f64,
+    /// DSP units active.
+    pub units: usize,
+    /// DDR bytes moved during this node.
+    pub ddr_bytes: u64,
+    /// Shared-memory (SRAM) occupancy during this node.
+    pub sram_bytes: u64,
+    /// Per-unit L2-resident working set.
+    pub l2_bytes: u64,
+}
+
+impl TraceSample {
+    /// DDR bandwidth demand of this node, bytes/s.
+    pub fn ddr_rate(&self) -> f64 {
+        let dt = (self.t_end - self.t_start).max(1e-12);
+        self.ddr_bytes as f64 / dt
+    }
+}
+
+/// Resample a trace into `bins` uniform time buckets for plotting: returns
+/// `(t_mid, ddr_rate, sram_bytes, l2_bytes)` rows — the Fig. 9 series.
+pub fn resample(trace: &[TraceSample], bins: usize) -> Vec<(f64, f64, u64, u64)> {
+    if trace.is_empty() || bins == 0 {
+        return Vec::new();
+    }
+    let t_total = trace.last().unwrap().t_end;
+    let dt = t_total / bins as f64;
+    let mut out = Vec::with_capacity(bins);
+    for b in 0..bins {
+        let (lo, hi) = (b as f64 * dt, (b + 1) as f64 * dt);
+        let mut ddr = 0.0f64;
+        let mut sram = 0u64;
+        let mut l2 = 0u64;
+        for s in trace {
+            let ov = (s.t_end.min(hi) - s.t_start.max(lo)).max(0.0);
+            if ov > 0.0 {
+                ddr += s.ddr_rate() * ov / dt.max(1e-12);
+                sram = sram.max(s.sram_bytes);
+                l2 = l2.max(s.l2_bytes);
+            }
+        }
+        out.push(((lo + hi) / 2.0, ddr, sram, l2));
+    }
+    out
+}
+
+/// FPGA resource cost (paper Fig. 10): DSP slices, LUTs, FFs.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FpgaCost {
+    /// DSP slices allocated.
+    pub dsp: usize,
+    /// Look-up tables.
+    pub luts: u64,
+    /// Flip-flops.
+    pub ffs: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(node: NodeId, t0: f64, t1: f64, ddr: u64) -> TraceSample {
+        TraceSample {
+            node,
+            name: format!("n{node}"),
+            t_start: t0,
+            t_end: t1,
+            units: 1,
+            ddr_bytes: ddr,
+            sram_bytes: 100,
+            l2_bytes: 10,
+        }
+    }
+
+    #[test]
+    fn ddr_rate_is_bytes_over_duration() {
+        let s = sample(0, 0.0, 2.0, 1000);
+        assert!((s.ddr_rate() - 500.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn resample_covers_whole_timeline() {
+        let trace = vec![sample(0, 0.0, 1.0, 100), sample(1, 1.0, 2.0, 300)];
+        let rows = resample(&trace, 4);
+        assert_eq!(rows.len(), 4);
+        assert!(rows[0].1 > 0.0 && rows[3].1 > 0.0);
+        // Second half carries 3x the DDR rate of the first.
+        assert!(rows[3].1 > 2.0 * rows[0].1);
+    }
+
+    #[test]
+    fn resample_empty_is_empty() {
+        assert!(resample(&[], 8).is_empty());
+    }
+}

@@ -1,0 +1,149 @@
+//! Minimal property-based testing framework.
+//!
+//! `proptest` is not available in the offline vendored dependency set, so
+//! this module provides the subset the test suites need: composable
+//! generators over the deterministic [`Rng`](crate::util::rng::Rng) and a
+//! `forall` runner that reports the failing seed/case on panic. No
+//! shrinking — failing inputs are printed verbatim and reproducible from
+//! the seed.
+
+use crate::util::rng::Rng;
+
+/// A value generator.
+pub trait Gen {
+    /// Generated type.
+    type Item;
+    /// Draw one value.
+    fn gen(&self, rng: &mut Rng) -> Self::Item;
+}
+
+/// Uniform integer range `[lo, hi]` inclusive.
+pub struct IntRange {
+    /// Lower bound (inclusive).
+    pub lo: usize,
+    /// Upper bound (inclusive).
+    pub hi: usize,
+}
+
+impl Gen for IntRange {
+    type Item = usize;
+    fn gen(&self, rng: &mut Rng) -> usize {
+        rng.usize_range(self.lo, self.hi)
+    }
+}
+
+/// Choose uniformly from a fixed slice.
+pub struct Choice<T: Clone>(pub Vec<T>);
+
+impl<T: Clone> Gen for Choice<T> {
+    type Item = T;
+    fn gen(&self, rng: &mut Rng) -> T {
+        self.0[rng.usize_below(self.0.len())].clone()
+    }
+}
+
+/// Uniform f32 in `[lo, hi)`.
+pub struct FloatRange {
+    /// Lower bound.
+    pub lo: f32,
+    /// Upper bound.
+    pub hi: f32,
+}
+
+impl Gen for FloatRange {
+    type Item = f32;
+    fn gen(&self, rng: &mut Rng) -> f32 {
+        rng.f32_range(self.lo, self.hi)
+    }
+}
+
+/// Vector of `n` draws from an inner generator.
+pub struct VecOf<G: Gen> {
+    /// Element generator.
+    pub inner: G,
+    /// Length generator bounds.
+    pub len: IntRange,
+}
+
+impl<G: Gen> Gen for VecOf<G> {
+    type Item = Vec<G::Item>;
+    fn gen(&self, rng: &mut Rng) -> Vec<G::Item> {
+        let n = self.len.gen(rng);
+        (0..n).map(|_| self.inner.gen(rng)).collect()
+    }
+}
+
+/// Functional generator from a closure.
+pub struct FnGen<T, F: Fn(&mut Rng) -> T>(pub F);
+
+impl<T, F: Fn(&mut Rng) -> T> Gen for FnGen<T, F> {
+    type Item = T;
+    fn gen(&self, rng: &mut Rng) -> T {
+        (self.0)(rng)
+    }
+}
+
+/// Run `prop` on `cases` generated inputs. On failure, panics with the
+/// case index and seed so the exact input is reproducible.
+pub fn forall<G: Gen>(seed: u64, cases: usize, gen: &G, prop: impl Fn(G::Item))
+where
+    G::Item: std::fmt::Debug + Clone,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen.gen(&mut rng);
+        let snapshot = input.clone();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(input)));
+        if let Err(e) = result {
+            eprintln!(
+                "testkit: property failed at case {case} (seed {seed}), input: {snapshot:?}"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn int_range_respects_bounds() {
+        forall(1, 500, &IntRange { lo: 3, hi: 17 }, |v| {
+            assert!((3..=17).contains(&v));
+        });
+    }
+
+    #[test]
+    fn choice_draws_members() {
+        let g = Choice(vec!["a", "b", "c"]);
+        forall(2, 200, &g, |v| assert!(["a", "b", "c"].contains(&v)));
+    }
+
+    #[test]
+    fn vec_of_bounds_length() {
+        let g = VecOf { inner: FloatRange { lo: -1.0, hi: 1.0 }, len: IntRange { lo: 1, hi: 9 } };
+        forall(3, 100, &g, |v| {
+            assert!((1..=9).contains(&v.len()));
+            assert!(v.iter().all(|x| (-1.0..1.0).contains(x)));
+        });
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_propagates_failures() {
+        forall(4, 50, &IntRange { lo: 0, hi: 100 }, |v| {
+            assert!(v < 90, "intentional failure");
+        });
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let g = IntRange { lo: 0, hi: 1000 };
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        for _ in 0..100 {
+            assert_eq!(g.gen(&mut a), g.gen(&mut b));
+        }
+    }
+}

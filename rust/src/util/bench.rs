@@ -1,0 +1,50 @@
+//! Tiny benchmarking harness (criterion is not vendored offline).
+//!
+//! Used by the `harness = false` bench targets: warms up, runs a fixed
+//! iteration budget, and prints mean/p50/p90 so `cargo bench` output is
+//! self-describing and diffable across the perf-pass iterations.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// Measure `f` for `iters` iterations after `warmup` unmeasured ones.
+/// Returns per-iteration seconds.
+pub fn measure<R>(warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> Summary {
+    for _ in 0..warmup {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    Summary::of(&samples).expect("iters >= 1")
+}
+
+/// Measure and print one benchmark line.
+pub fn bench<R>(name: &str, warmup: usize, iters: usize, f: impl FnMut() -> R) -> Summary {
+    let s = measure(warmup, iters, f);
+    println!(
+        "bench {name:<44} mean {:>12} p50 {:>12} p90 {:>12} (n={})",
+        super::human_time(s.mean),
+        super::human_time(s.p50),
+        super::human_time(s.p90),
+        s.n
+    );
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_returns_positive_times() {
+        let s = measure(1, 10, || (0..1000).sum::<u64>());
+        assert_eq!(s.n, 10);
+        assert!(s.mean > 0.0);
+        assert!(s.p50 <= s.p90 && s.p90 <= s.max);
+    }
+}

@@ -1,0 +1,105 @@
+//! Minimal command-line argument parser (clap is not vendored offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional arguments.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: positionals in order plus `--key value` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positionals: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut args = Args::default();
+        let mut iter = raw.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some(eq) = rest.find('=') {
+                    args.options.insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
+                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = iter.next().unwrap();
+                    args.options.insert(rest.to_string(), v);
+                } else {
+                    args.flags.push(rest.to_string());
+                }
+            } else {
+                args.positionals.push(a);
+            }
+        }
+        args
+    }
+
+    /// Parse from the process environment, skipping argv[0].
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    /// Value of `--key`, if present.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    /// Value of `--key` or a default.
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Parse `--key` as `T` or fall back to `default`.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    /// True if `--key` appeared as a bare flag or with a truthy value.
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+            || matches!(self.get(key), Some("1") | Some("true") | Some("yes"))
+    }
+
+    /// First positional argument (the subcommand).
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positionals.first().map(String::as_str)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn parses_key_value_both_styles() {
+        let a = parse(&["run", "--model", "mobilenet", "--device=zcu102"]);
+        assert_eq!(a.subcommand(), Some("run"));
+        assert_eq!(a.get("model"), Some("mobilenet"));
+        assert_eq!(a.get("device"), Some("zcu102"));
+    }
+
+    #[test]
+    fn parses_bare_flags() {
+        let a = parse(&["bench", "--verbose", "--n", "10"]);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.get_parse::<usize>("n", 0), 10);
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["x", "--fast"]);
+        assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn get_parse_falls_back() {
+        let a = parse(&["x", "--n", "notanumber"]);
+        assert_eq!(a.get_parse::<usize>("n", 7), 7);
+        assert_eq!(a.get_parse::<usize>("missing", 3), 3);
+    }
+}

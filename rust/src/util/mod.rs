@@ -1,0 +1,76 @@
+//! Small self-contained utilities.
+//!
+//! The offline build environment only vendors the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (clap, serde, rand, criterion) are
+//! unavailable. This module provides the minimal replacements the rest of the
+//! crate needs: a deterministic RNG, descriptive statistics, an ASCII table
+//! printer for the experiment harness, and a tiny CLI argument parser.
+
+pub mod bench;
+pub mod cli;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+/// Format a byte count with binary units, e.g. `1.50 MiB`.
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = bytes as f64;
+    let mut i = 0;
+    while v >= 1024.0 && i < UNITS.len() - 1 {
+        v /= 1024.0;
+        i += 1;
+    }
+    if i == 0 {
+        format!("{} {}", bytes, UNITS[0])
+    } else {
+        format!("{:.2} {}", v, UNITS[i])
+    }
+}
+
+/// Format a duration in seconds with an adaptive unit, e.g. `3.2 ms`.
+pub fn human_time(seconds: f64) -> String {
+    if seconds >= 1.0 {
+        format!("{:.3} s", seconds)
+    } else if seconds >= 1e-3 {
+        format!("{:.3} ms", seconds * 1e3)
+    } else if seconds >= 1e-6 {
+        format!("{:.3} us", seconds * 1e6)
+    } else {
+        format!("{:.1} ns", seconds * 1e9)
+    }
+}
+
+/// Integer ceiling division.
+#[inline]
+pub fn ceil_div(a: usize, b: usize) -> usize {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(4 * 1024 * 1024), "4.00 MiB");
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert_eq!(human_time(2.5), "2.500 s");
+        assert_eq!(human_time(0.0032), "3.200 ms");
+        assert_eq!(human_time(0.0000032), "3.200 us");
+    }
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 8), 1);
+        assert_eq!(ceil_div(0, 8), 0);
+    }
+}

@@ -1,0 +1,107 @@
+//! ASCII table rendering for the experiment harness — every reproduced paper
+//! table/figure is printed through this so EXPERIMENTS.md can quote the
+//! output verbatim.
+
+/// A simple column-aligned ASCII table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Create a table with the given column headers.
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Table { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
+    }
+
+    /// Append a row; shorter rows are padded with empty cells.
+    pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
+        let mut r: Vec<String> = cells.into_iter().map(Into::into).collect();
+        while r.len() < self.header.len() {
+            r.push(String::new());
+        }
+        self.rows.push(r);
+        self
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True if the table has no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render to a string with `|`-separated aligned columns.
+    pub fn render(&self) -> String {
+        let ncols = self.header.len().max(self.rows.iter().map(Vec::len).max().unwrap_or(0));
+        let mut widths = vec![0usize; ncols];
+        for (i, h) in self.header.iter().enumerate() {
+            widths[i] = widths[i].max(h.len());
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let sep: String = {
+            let parts: Vec<String> = widths.iter().map(|w| "-".repeat(w + 2)).collect();
+            format!("+{}+", parts.join("+"))
+        };
+        let fmt_row = |cells: &[String]| -> String {
+            let parts: Vec<String> = (0..ncols)
+                .map(|i| {
+                    let c = cells.get(i).map(String::as_str).unwrap_or("");
+                    format!(" {:<width$} ", c, width = widths[i])
+                })
+                .collect();
+            format!("|{}|", parts.join("|"))
+        };
+        let mut out = String::new();
+        out.push_str(&sep);
+        out.push('\n');
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&sep);
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out.push_str(&sep);
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        println!("{}", self.render());
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(vec!["model", "time"]);
+        t.row(vec!["mobilenet", "1.5 ms"]);
+        t.row(vec!["bert-s", "200 ms"]);
+        let s = t.render();
+        assert!(s.contains("| model     | time   |"));
+        assert!(s.contains("| mobilenet | 1.5 ms |"));
+        assert!(s.contains("| bert-s    | 200 ms |"));
+    }
+
+    #[test]
+    fn pads_short_rows() {
+        let mut t = Table::new(vec!["a", "b", "c"]);
+        t.row(vec!["1"]);
+        assert_eq!(t.len(), 1);
+        let s = t.render();
+        assert!(s.lines().count() >= 5);
+    }
+}

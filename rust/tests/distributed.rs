@@ -1,0 +1,126 @@
+//! Integration tests for d-Xenos: scheme enumeration, sync-mode contrast,
+//! scaling behaviour, and collective correctness at realistic sizes.
+
+use xenos::dist::{
+    enumerate_schemes, ps, ring, simulate_dxenos, PartitionScheme, SyncMode,
+};
+use xenos::graph::models;
+use xenos::hw::presets;
+use xenos::util::rng::Rng;
+
+#[test]
+fn fig11_full_matrix_orderings() {
+    // For every Fig-11 model: Ring-Mix >= any other ring scheme, and
+    // PS-Mix is worse than Ring-Mix (server bottleneck).
+    let d = presets::tms320c6678();
+    for name in ["mobilenet", "resnet101", "bert_l"] {
+        let g = models::by_name(name).unwrap();
+        let ring_mix = simulate_dxenos(&g, &d, 4, PartitionScheme::Mix, SyncMode::Ring);
+        let ps_mix = simulate_dxenos(&g, &d, 4, PartitionScheme::Mix, SyncMode::Ps);
+        assert!(
+            ps_mix.total_s > ring_mix.total_s,
+            "{name}: PS {} should exceed Ring {}",
+            ps_mix.total_s,
+            ring_mix.total_s
+        );
+        for scheme in [PartitionScheme::OutC, PartitionScheme::InH, PartitionScheme::InW] {
+            let r = simulate_dxenos(&g, &d, 4, scheme, SyncMode::Ring);
+            assert!(
+                ring_mix.total_s <= r.total_s * 1.0001,
+                "{name}: Mix {} should beat {scheme:?} {}",
+                ring_mix.total_s,
+                r.total_s
+            );
+        }
+    }
+}
+
+#[test]
+fn algorithm1_picks_profiled_best_on_both_sync_modes() {
+    let d = presets::tms320c6678();
+    let g = models::resnet101();
+    for sync in [SyncMode::Ring, SyncMode::Ps] {
+        let (best, reports) = enumerate_schemes(&g, &d, 4, sync);
+        let tmin = reports.iter().map(|r| r.total_s).fold(f64::INFINITY, f64::min);
+        let tbest = reports.iter().find(|r| r.scheme == best).unwrap().total_s;
+        assert!((tbest - tmin).abs() < 1e-12, "{sync:?}");
+    }
+}
+
+#[test]
+fn speedup_grows_then_saturates() {
+    let d = presets::tms320c6678();
+    let g = models::resnet101();
+    let mut prev = 0.0;
+    for p in [1, 2, 4, 8] {
+        let s = simulate_dxenos(&g, &d, p, PartitionScheme::Mix, SyncMode::Ring).speedup();
+        assert!(s >= prev * 0.98, "p={p}: speedup {s} regressed from {prev}");
+        assert!(s <= p as f64 * 1.05, "p={p}: superlinear {s}");
+        prev = s;
+    }
+}
+
+#[test]
+fn collectives_agree_at_parameter_scale() {
+    // 1M-element all-reduce (a real ResNet layer's worth of floats).
+    let mut rng = Rng::new(9);
+    let n = 1 << 20;
+    let inputs: Vec<Vec<f32>> = (0..4).map(|_| rng.vec_uniform(n)).collect();
+    let ring_out = ring::ring_allreduce_exec(inputs.clone());
+    let ps_out = ps::ps_allreduce_exec(inputs);
+    for (a, b) in ring_out[0].iter().zip(&ps_out[0]) {
+        assert!((a - b).abs() < 1e-3);
+    }
+    // All workers hold identical results.
+    for w in 1..4 {
+        assert_eq!(ring_out[0], ring_out[w]);
+    }
+}
+
+#[test]
+fn ring_time_model_consistency() {
+    // More data, more time; more latency, more time; monotone in p for
+    // fixed data until the bandwidth term saturates.
+    let link = presets::tms320c6678().link;
+    assert!(
+        ring::ring_allreduce_time(4, 2 << 20, &link)
+            > ring::ring_allreduce_time(4, 1 << 20, &link)
+    );
+    let slow = xenos::hw::LinkModel { bandwidth: link.bandwidth, latency: link.latency * 100.0 };
+    assert!(
+        ring::ring_allreduce_time(4, 1 << 20, &slow)
+            > ring::ring_allreduce_time(4, 1 << 20, &link)
+    );
+}
+
+#[test]
+fn bert_prefers_outc_over_spatial_schemes() {
+    // Matrices have no spatial dims: inW collapses to serial, so outC must
+    // win among single modes — the "no one-size-fits-all" evidence.
+    let d = presets::tms320c6678();
+    let g = models::bert_l();
+    let outc = simulate_dxenos(&g, &d, 4, PartitionScheme::OutC, SyncMode::Ring);
+    let inw = simulate_dxenos(&g, &d, 4, PartitionScheme::InW, SyncMode::Ring);
+    assert!(
+        outc.total_s < inw.total_s,
+        "outC {} should beat inW {} for transformers",
+        outc.total_s,
+        inw.total_s
+    );
+}
+
+#[test]
+fn cnn_prefers_spatial_over_outc() {
+    // Convs pay a full activation all-gather under outC but only halo
+    // exchanges under inH: the opposite preference from transformers.
+    let d = presets::tms320c6678();
+    let g = models::mobilenet();
+    let outc = simulate_dxenos(&g, &d, 4, PartitionScheme::OutC, SyncMode::Ring);
+    let inh = simulate_dxenos(&g, &d, 4, PartitionScheme::InH, SyncMode::Ring);
+    assert!(
+        inh.total_s < outc.total_s,
+        "inH {} should beat outC {} for CNNs",
+        inh.total_s,
+        outc.total_s
+    );
+}

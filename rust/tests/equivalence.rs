@@ -1,0 +1,167 @@
+//! Equivalence suite: the optimizer must never change what a graph
+//! computes. Every arm (Vanilla / HO / Full) of every test graph is
+//! interpreted on the same random inputs and compared bit-for-bit against
+//! the unoptimized graph.
+
+use xenos::graph::{models, Graph, GraphBuilder, PoolAttrs, Shape};
+use xenos::hw::presets;
+use xenos::ops::Interpreter;
+use xenos::opt::{optimize, OptLevel, OptimizeOptions};
+
+fn assert_all_levels_equal(g: &Graph, seed: u64) {
+    let d = presets::tms320c6678();
+    let base = Interpreter::new(g).run_synthetic(seed);
+    for level in [OptLevel::Vanilla, OptLevel::HoOnly, OptLevel::Full] {
+        let o = optimize(g, &d, OptimizeOptions { level, search: false });
+        o.graph.validate().expect("optimized graph valid");
+        let out = Interpreter::new(&o.graph).run_synthetic(seed);
+        assert_eq!(base.len(), out.len(), "{}: output arity {level:?}", g.name);
+        for (a, b) in base.iter().zip(&out) {
+            assert_eq!(a.data, b.data, "{}: {level:?} changed numerics", g.name);
+        }
+    }
+}
+
+#[test]
+fn ds_block_with_pooling() {
+    // The paper's Figure 5 structure: CBR -> CBR -> AvgPool chain.
+    let mut b = GraphBuilder::new("fig5_block");
+    let x = b.input("x", Shape::nchw(1, 8, 16, 16));
+    let dw = b.dw_bn_relu("ds/dw", x, 3, 1, 1);
+    let pw = b.conv_bn_relu("ds/pw", dw, 16, 1, 1, 0);
+    let p = b.avgpool("pool", pw, 2, 2);
+    let out = b.global_pool("gap", p);
+    b.output(out);
+    assert_all_levels_equal(&b.finish(), 10);
+}
+
+#[test]
+fn maxpool_linking_cbrm() {
+    let mut b = GraphBuilder::new("cbrm_block");
+    let x = b.input("x", Shape::nchw(1, 4, 12, 12));
+    let c = b.conv_bn_relu("c", x, 32, 3, 1, 1);
+    let p = b.maxpool("mp", c, 2, 2);
+    let f = b.fc("fc", p, 7);
+    b.output(f);
+    assert_all_levels_equal(&b.finish(), 11);
+}
+
+#[test]
+fn residual_shortcut_pattern() {
+    // Table 1's shortcut-connection pattern.
+    let mut b = GraphBuilder::new("shortcut");
+    let x = b.input("x", Shape::nchw(1, 8, 10, 10));
+    let c1 = b.conv_bn_relu("c1", x, 8, 3, 1, 1);
+    let c2 = b.conv("c2", c1, 8, 3, 1, 1);
+    let add = b.add("add", c2, x);
+    let r = b.relu("r", add);
+    b.output(r);
+    assert_all_levels_equal(&b.finish(), 12);
+}
+
+#[test]
+fn concat_branches_fire_module() {
+    let mut b = GraphBuilder::new("fire");
+    let x = b.input("x", Shape::nchw(1, 16, 8, 8));
+    let sq = b.conv_bn_relu("squeeze", x, 4, 1, 1, 0);
+    let e1 = b.conv_bn_relu("e1", sq, 8, 1, 1, 0);
+    let e3 = b.conv_bn_relu("e3", sq, 8, 3, 1, 1);
+    let cat = b.concat("cat", &[e1, e3]);
+    b.output(cat);
+    assert_all_levels_equal(&b.finish(), 13);
+}
+
+#[test]
+fn matmul_transpose_chain() {
+    // The MatmulX -> MatmulY linking pattern (attention shape).
+    let mut b = GraphBuilder::new("attn");
+    let q = b.input("q", Shape::mat(16, 8));
+    let k = b.input("k", Shape::mat(16, 8));
+    let v = b.input("v", Shape::mat(16, 8));
+    let kt = b.transpose("kt", k);
+    let s = b.matmul("scores", q, kt);
+    let sm = b.softmax("sm", s);
+    let ctx = b.matmul("ctx", sm, v);
+    let ln = b.layernorm("ln", ctx);
+    b.output(ln);
+    assert_all_levels_equal(&b.finish(), 14);
+}
+
+#[test]
+fn channel_shuffle_unit() {
+    let mut b = GraphBuilder::new("shuffle_unit");
+    let x = b.input("x", Shape::nchw(1, 16, 8, 8));
+    let g1 = b.gconv("g1", x, 16, 1, 1, 0, 4);
+    let sh = b.channel_shuffle("sh", g1, 4);
+    let dw = b.dwconv("dw", sh, 3, 1, 1);
+    let g2 = b.gconv("g2", dw, 16, 1, 1, 0, 4);
+    let add = b.add("add", g2, x);
+    b.output(add);
+    assert_all_levels_equal(&b.finish(), 15);
+}
+
+#[test]
+fn upsample_decoder() {
+    let mut b = GraphBuilder::new("decoder");
+    let x = b.input("x", Shape::nchw(1, 8, 4, 4));
+    let u = b.upsample("up", x, 2);
+    let c = b.conv_bn_relu("c", u, 4, 3, 1, 1);
+    let s = b.sigmoid("sig", c);
+    b.output(s);
+    assert_all_levels_equal(&b.finish(), 16);
+}
+
+#[test]
+fn lstm_cell_step() {
+    // Mac + sigmoid/tanh + slice/transpose (LSTM structure, one step).
+    let mut b = GraphBuilder::new("lstm_step");
+    let x = b.input("x", Shape::mat(8, 4));
+    let h = b.input("h", Shape::mat(1, 16));
+    let c = b.input("c", Shape::mat(1, 16));
+    let xt_col = b.slice_c("xcol", x, 0, 1);
+    let xt = b.transpose("xt", xt_col);
+    let wx = b.fc("wx", xt, 16);
+    let wh = b.fc("wh", h, 16);
+    let pre = b.add("pre", wx, wh);
+    let i = b.sigmoid("i", pre);
+    let g = b.tanh("g", pre);
+    let ig = b.mul("ig", i, g);
+    let c2 = b.mac("c2", i, c, ig);
+    let hout = b.mul("h2", i, c2);
+    b.output(hout);
+    assert_all_levels_equal(&b.finish(), 17);
+}
+
+#[test]
+fn full_lstm_model_equivalence() {
+    // The full unrolled LSTM zoo model is small enough to interpret.
+    assert_all_levels_equal(&models::lstm(), 18);
+}
+
+#[test]
+fn overlapping_pool_not_linked_but_equal() {
+    let mut b = GraphBuilder::new("overlap");
+    let x = b.input("x", Shape::nchw(1, 4, 9, 9));
+    let c = b.conv_bn_relu("c", x, 8, 1, 1, 0);
+    let p = b.pool("p", c, PoolAttrs::max(3, 1));
+    b.output(p);
+    assert_all_levels_equal(&b.finish(), 19);
+}
+
+#[test]
+#[ignore = "slow in debug; run with --release -- --ignored"]
+fn full_mobilenet_equivalence() {
+    assert_all_levels_equal(&models::mobilenet(), 20);
+}
+
+#[test]
+#[ignore = "slow in debug; run with --release -- --ignored"]
+fn full_squeezenet_equivalence() {
+    assert_all_levels_equal(&models::squeezenet(), 21);
+}
+
+#[test]
+#[ignore = "slow in debug; run with --release -- --ignored"]
+fn full_bert_s_equivalence() {
+    assert_all_levels_equal(&models::bert_s(), 22);
+}

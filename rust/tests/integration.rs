@@ -1,0 +1,119 @@
+//! Whole-system integration: every experiment driver runs, every model
+//! optimizes and simulates on every device, and the cross-cutting paper
+//! claims hold simultaneously.
+
+use xenos::graph::models;
+use xenos::hw::presets;
+use xenos::opt::OptLevel;
+use xenos::sim::run_level;
+
+#[test]
+fn all_experiments_produce_tables() {
+    for id in xenos::exp::ALL_EXPERIMENTS {
+        let r = xenos::exp::run(id).unwrap_or_else(|| panic!("missing {id}"));
+        assert_eq!(r.id, id);
+        assert!(!r.tables.is_empty(), "{id} must render tables");
+        for (caption, t) in &r.tables {
+            assert!(!t.is_empty(), "{id}/{caption} is empty");
+            assert!(t.render().contains('|'));
+        }
+    }
+}
+
+#[test]
+fn every_model_runs_on_every_device_at_every_level() {
+    for model in models::PAPER_BENCHMARKS {
+        let g = models::by_name(model).unwrap();
+        for device in [presets::tms320c6678(), presets::zcu102()] {
+            let mut last = f64::INFINITY;
+            for level in [OptLevel::Vanilla, OptLevel::HoOnly, OptLevel::Full] {
+                let (o, r) = run_level(&g, &device, level);
+                assert!(r.total_s > 0.0, "{model}/{}/{level:?}", device.name);
+                assert!(r.total_s <= last * 1.001,
+                    "{model}/{}: {level:?} slower than previous arm", device.name);
+                assert_eq!(o.plan.nodes.len(), o.graph.len());
+                o.graph.validate().unwrap();
+                last = r.total_s;
+            }
+        }
+    }
+}
+
+#[test]
+fn optimizer_is_deterministic() {
+    let d = presets::zcu102();
+    let g = models::shufflenet();
+    let a = xenos::opt::auto(&g, &d);
+    let b = xenos::opt::auto(&g, &d);
+    assert_eq!(a.fused, b.fused);
+    assert_eq!(a.links.len(), b.links.len());
+    assert_eq!(a.plan.peak_units(), b.plan.peak_units());
+    for (x, y) in a.plan.nodes.iter().zip(&b.plan.nodes) {
+        assert_eq!(x, y);
+    }
+}
+
+#[test]
+fn linked_graphs_report_table1_patterns() {
+    // The paper's Table 1 pattern families all fire somewhere in the zoo.
+    let mut seen = std::collections::HashSet::new();
+    let d = presets::tms320c6678();
+    for model in models::PAPER_BENCHMARKS {
+        let g = models::by_name(model).unwrap();
+        let o = xenos::opt::auto(&g, &d);
+        for l in &o.links {
+            seen.insert(l.pattern.clone());
+        }
+    }
+    for expected in ["ConvX -> ConvY", "ConvX -> ConvY -> ZPooling", "MatmulX -> MatmulY"] {
+        assert!(seen.contains(expected), "pattern {expected} never fired; saw {seen:?}");
+    }
+}
+
+#[test]
+fn headline_claims_hold_together() {
+    // One test that asserts the paper's abstract, end to end:
+    let tms = presets::tms320c6678();
+    let zcu = presets::zcu102();
+    let mut ho_cuts_tms = Vec::new();
+    let mut vo_cuts_tms = Vec::new();
+    let mut ho_cuts_zcu = Vec::new();
+    let mut vo_cuts_zcu = Vec::new();
+    for model in models::PAPER_BENCHMARKS {
+        let g = models::by_name(model).unwrap();
+        for (dev, hos, vos) in [
+            (&tms, &mut ho_cuts_tms, &mut vo_cuts_tms),
+            (&zcu, &mut ho_cuts_zcu, &mut vo_cuts_zcu),
+        ] {
+            let (_, v) = run_level(&g, dev, OptLevel::Vanilla);
+            let (_, h) = run_level(&g, dev, OptLevel::HoOnly);
+            let (_, f) = run_level(&g, dev, OptLevel::Full);
+            hos.push(1.0 - h.total_s / v.total_s);
+            vos.push(1.0 - f.total_s / h.total_s);
+        }
+    }
+    let max = |v: &[f64]| v.iter().fold(0.0f64, |a, &b| a.max(b));
+    // "reduce the inference time by 21.2%-84.9% and 17.9%-96.2%" — both
+    // optimizations must produce substantial reductions somewhere.
+    assert!(max(&ho_cuts_tms).max(max(&ho_cuts_zcu)) > 0.4, "HO must matter");
+    assert!(max(&vo_cuts_tms).max(max(&vo_cuts_zcu)) > 0.4, "VO must matter");
+    // The cross-device asymmetry (§7.2).
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    assert!(mean(&ho_cuts_zcu) > mean(&ho_cuts_tms), "HO stronger on the FPGA");
+    assert!(mean(&vo_cuts_tms) > mean(&vo_cuts_zcu), "VO stronger on the DSP");
+}
+
+#[test]
+fn simulated_times_are_edge_plausible() {
+    // Sanity bound: single-digit-microsecond or multi-second inferences
+    // would mean broken unit conversions somewhere.
+    for model in models::PAPER_BENCHMARKS {
+        let g = models::by_name(model).unwrap();
+        let (_, r) = run_level(&g, &presets::tms320c6678(), OptLevel::Full);
+        assert!(
+            r.total_s > 1e-4 && r.total_s < 1.0,
+            "{model}: {}s",
+            r.total_s
+        );
+    }
+}

@@ -1,0 +1,252 @@
+//! Property-based tests over the coordinator/optimizer invariants, using
+//! the in-crate `testkit` mini-framework (proptest is not vendored).
+
+use xenos::graph::{ConvAttrs, GraphBuilder, Shape};
+use xenos::hw::presets;
+use xenos::opt::dos;
+use xenos::testkit::{forall, FnGen};
+use xenos::util::rng::Rng;
+
+/// Random conv layer dims: (in_c, out_c, k, hw, stride).
+fn conv_gen() -> FnGen<(usize, usize, usize, usize, usize), impl Fn(&mut Rng) -> (usize, usize, usize, usize, usize)>
+{
+    FnGen(|rng: &mut Rng| {
+        let in_c = 1 << rng.usize_range(0, 9); // 1..512
+        let out_c = 1 << rng.usize_range(0, 10); // 1..1024
+        let k = [1, 3, 5, 7][rng.usize_below(4)];
+        let hw = rng.usize_range(k, 64);
+        let stride = rng.usize_range(1, 2);
+        (in_c, out_c, k, hw, stride)
+    })
+}
+
+#[test]
+fn dos_plan_invariants_hold_for_random_convs() {
+    for device in [presets::tms320c6678(), presets::zcu102()] {
+        forall(42, 300, &conv_gen(), |(in_c, out_c, k, hw, stride)| {
+            let mut b = GraphBuilder::new("prop");
+            let x = b.input("x", Shape::nchw(1, in_c, hw, hw));
+            let a = ConvAttrs { in_c, out_c, kh: k, kw: k, stride, pad: k / 2, groups: 1 };
+            let c = b.conv_attrs("c", x, a);
+            b.output(c);
+            let g = b.finish();
+            let p = dos::plan_node_dos(&g, g.node(c), &device, false);
+
+            // Invariant 1: never oversubscribe the device.
+            assert!(p.units >= 1 && p.units <= device.dsp_units, "units {}", p.units);
+            // Invariant 2: partition ways multiply to the unit count.
+            assert_eq!(p.ways(), p.units);
+            // Invariant 3: balance is a valid efficiency.
+            assert!(p.balance > 0.0 && p.balance <= 1.0, "balance {}", p.balance);
+            // Invariant 4: after splitting, the chunk fits the DMA budget.
+            if let Some(s) = p.param_split {
+                assert!(s.chunks >= 1);
+                assert!(
+                    s.chunk_bytes <= device.l2.capacity / 2,
+                    "chunk {} > budget",
+                    s.chunk_bytes
+                );
+                // Invariant 5: chunks cover the per-unit parameter share
+                // (no dropped weights).
+                let per_unit_oc = xenos::util::ceil_div(out_c, p.ways_outc());
+                let slice_bytes = (in_c * k * k * 4) as u64;
+                assert!(
+                    s.chunks as u64 * s.chunk_bytes + slice_bytes
+                        > per_unit_oc as u64 * slice_bytes / if s.needs_reduction { in_c as u64 } else { 1 },
+                    "chunks must cover the weight share"
+                );
+                // Invariant 6: K-splits never need a reduction.
+                if s.dim == xenos::opt::SplitDim::K {
+                    assert!(!s.needs_reduction);
+                }
+            }
+            // Invariant 7: fit flag is honest.
+            if p.params_fit_l2 {
+                let ws = p
+                    .param_split
+                    .map(|s| s.chunk_bytes)
+                    .unwrap_or_else(|| {
+                        (g.node(c).param_bytes()) / p.units.max(1) as u64
+                    });
+                assert!(ws <= device.l2.capacity, "resident set {} > L2", ws);
+            }
+        });
+    }
+}
+
+#[test]
+fn vanilla_plans_never_split() {
+    forall(43, 200, &conv_gen(), |(in_c, out_c, k, hw, stride)| {
+        let mut b = GraphBuilder::new("prop");
+        let x = b.input("x", Shape::nchw(1, in_c, hw, hw));
+        let a = ConvAttrs { in_c, out_c, kh: k, kw: k, stride, pad: k / 2, groups: 1 };
+        let c = b.conv_attrs("c", x, a);
+        b.output(c);
+        let g = b.finish();
+        let p = dos::plan_node_vanilla(g.node(c), &presets::tms320c6678());
+        assert!(p.param_split.is_none());
+        assert!(!p.dma_overlap);
+    });
+}
+
+#[test]
+fn ring_allreduce_matches_sum_for_random_sizes() {
+    let gen = FnGen(|rng: &mut Rng| {
+        let p = rng.usize_range(2, 6);
+        let n = rng.usize_range(1, 500);
+        let inputs: Vec<Vec<f32>> = (0..p).map(|_| rng.vec_uniform(n)).collect();
+        inputs
+    });
+    forall(44, 40, &gen, |inputs| {
+        let n = inputs[0].len();
+        let mut expect = vec![0.0f32; n];
+        for v in &inputs {
+            for (e, x) in expect.iter_mut().zip(v) {
+                *e += x;
+            }
+        }
+        for r in xenos::dist::ring::ring_allreduce_exec(inputs) {
+            for (a, b) in r.iter().zip(&expect) {
+                assert!((a - b).abs() < 1e-4);
+            }
+        }
+    });
+}
+
+#[test]
+fn coordinator_serves_every_request_exactly_once() {
+    use std::sync::Arc;
+    use xenos::runtime::Engine;
+    use xenos::serve::{BatcherConfig, Coordinator, ServeConfig};
+
+    let gen = FnGen(|rng: &mut Rng| {
+        (
+            rng.usize_range(1, 4),   // workers
+            rng.usize_range(1, 16),  // max_batch
+            rng.usize_range(1, 120), // requests
+            rng.next_u64(),          // seed
+        )
+    });
+    let graph = Arc::new({
+        let mut b = GraphBuilder::new("prop_serve");
+        let x = b.input("x", Shape::nchw(1, 2, 4, 4));
+        let r = b.relu("r", x);
+        b.output(r);
+        b.finish()
+    });
+    forall(45, 25, &gen, |(workers, max_batch, n, seed)| {
+        let g = graph.clone();
+        let report = Coordinator::new(ServeConfig {
+            workers,
+            batcher: BatcherConfig {
+                max_batch,
+                max_wait: std::time::Duration::from_micros(300),
+            },
+        })
+        .run(
+            move |_| Ok(Engine::interp(g.clone())),
+            xenos::serve::coordinator::synthetic_requests(
+                vec![Shape::nchw(1, 2, 4, 4)],
+                n,
+                0.0,
+                seed,
+            ),
+        )
+        .expect("serve");
+        // Exactly-once, id-complete, batch cap respected.
+        assert_eq!(report.served, n);
+        let ids: Vec<u64> = report.responses.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..n as u64).collect::<Vec<_>>());
+        assert!(report.batch_size.max <= max_batch as f64);
+        // Latency always covers execution.
+        for r in &report.responses {
+            assert!(r.latency_s + 1e-9 >= 0.0 && r.exec_s >= 0.0);
+        }
+    });
+}
+
+#[test]
+fn layout_addressing_is_bijective_for_random_fms() {
+    use xenos::graph::DataLayout;
+    use xenos::sim::cache::fm_addr;
+    let gen = FnGen(|rng: &mut Rng| {
+        let c = rng.usize_range(1, 16);
+        let ph = [1usize, 2, 4][rng.usize_below(3)];
+        let h = ph * rng.usize_range(1, 8);
+        let w = ph * rng.usize_range(1, 8);
+        (c, h, w, ph)
+    });
+    forall(46, 150, &gen, |(c, h, w, ph)| {
+        for layout in [
+            DataLayout::Chw,
+            DataLayout::Hwc,
+            DataLayout::Linked { ph: ph as u8, pw: ph as u8 },
+        ] {
+            let mut seen = std::collections::HashSet::new();
+            for ch in 0..c {
+                for y in 0..h {
+                    for x in 0..w {
+                        assert!(
+                            seen.insert(fm_addr(layout, ch, y, x, c, h, w)),
+                            "collision in {layout:?} at ({ch},{y},{x})"
+                        );
+                    }
+                }
+            }
+            assert_eq!(seen.len(), c * h * w);
+        }
+    });
+}
+
+#[test]
+fn slice_concat_roundtrip_random() {
+    use xenos::ops::{shape_ops, Tensor};
+    let gen = FnGen(|rng: &mut Rng| {
+        let c = rng.usize_range(2, 24);
+        let h = rng.usize_range(1, 8);
+        let w = rng.usize_range(1, 8);
+        let cut = rng.usize_range(1, c - 1);
+        let data = rng.vec_uniform(c * h * w);
+        (c, h, w, cut, data)
+    });
+    forall(47, 200, &gen, |(c, h, w, cut, data)| {
+        let t = Tensor::fm(1, c, h, w, data);
+        let lo = shape_ops::slice_c(&t, 0, cut);
+        let hi = shape_ops::slice_c(&t, cut, c);
+        let back = shape_ops::concat_c(&[&lo, &hi]);
+        assert_eq!(back.data, t.data);
+    });
+}
+
+#[test]
+fn linking_preserves_semantics_on_random_chains() {
+    use xenos::ops::Interpreter;
+    // Random 3-5 layer conv/pool/activation chains.
+    let gen = FnGen(|rng: &mut Rng| {
+        let layers = rng.usize_range(2, 5);
+        let ops: Vec<usize> = (0..layers).map(|_| rng.usize_below(4)).collect();
+        let c0 = 1 << rng.usize_range(1, 4);
+        let seed = rng.next_u64();
+        (ops, c0, seed)
+    });
+    forall(48, 60, &gen, |(ops, c0, seed)| {
+        let mut b = GraphBuilder::new("chain");
+        let mut cur = b.input("x", Shape::nchw(1, c0, 16, 16));
+        for (i, op) in ops.iter().enumerate() {
+            let d = b.desc(cur).clone();
+            cur = match op {
+                0 => b.conv_bn_relu(&format!("cbr{i}"), cur, d.shape.c() * 2, 1, 1, 0),
+                1 => b.dw_bn_relu(&format!("dw{i}"), cur, 3, 1, 1),
+                2 if d.shape.h() >= 4 => b.avgpool(&format!("p{i}"), cur, 2, 2),
+                _ => b.relu(&format!("r{i}"), cur),
+            };
+        }
+        b.output(cur);
+        let g = b.finish();
+        let (fused, _) = xenos::opt::fusion::fuse_cbr(&g);
+        let linked = xenos::opt::linking::link(&fused);
+        let a = Interpreter::new(&g).run_synthetic(seed);
+        let c = Interpreter::new(&linked.graph).run_synthetic(seed);
+        assert_eq!(a[0].data, c[0].data);
+    });
+}

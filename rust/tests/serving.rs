@@ -1,0 +1,124 @@
+//! Integration tests for the serving coordinator with interpreter engines
+//! (the PJRT serving path is covered in `runtime_pjrt.rs`).
+
+use std::sync::Arc;
+
+use xenos::graph::{GraphBuilder, Shape};
+use xenos::runtime::Engine;
+use xenos::serve::{self, BatcherConfig, Coordinator, PipelineConfig, ServeConfig};
+
+fn small_model() -> Arc<xenos::Graph> {
+    let mut b = GraphBuilder::new("serving_model");
+    let x = b.input("x", Shape::nchw(1, 3, 16, 16));
+    let c1 = b.conv_bn_relu("c1", x, 8, 3, 2, 1);
+    let gp = b.global_pool("gp", c1);
+    let fc = b.fc("fc", gp, 4);
+    let sm = b.softmax("sm", fc);
+    b.output(sm);
+    Arc::new(b.finish())
+}
+
+#[test]
+fn end_to_end_throughput_and_latency() {
+    let g = small_model();
+    let report = Coordinator::new(ServeConfig {
+        workers: 2,
+        batcher: BatcherConfig {
+            max_batch: 8,
+            max_wait: std::time::Duration::from_micros(500),
+        },
+    })
+    .run(
+        {
+            let g = g.clone();
+            move |_| Ok(Engine::interp(g.clone()))
+        },
+        serve::coordinator::synthetic_requests(
+            vec![Shape::nchw(1, 3, 16, 16)],
+            100,
+            0.0,
+            1,
+        ),
+    )
+    .expect("serve");
+    assert_eq!(report.served, 100);
+    assert!(report.throughput > 10.0, "throughput {}", report.throughput);
+    assert!(report.latency.p50 > 0.0 && report.latency.p50 <= report.latency.p99);
+    // Every response is a softmax distribution.
+    for r in &report.responses {
+        let sum: f32 = r.outputs[0].data.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-4);
+    }
+}
+
+#[test]
+fn paced_arrivals_do_not_drop_requests() {
+    let g = small_model();
+    let report = Coordinator::new(ServeConfig::default())
+        .run(
+            {
+                let g = g.clone();
+                move |_| Ok(Engine::interp(g.clone()))
+            },
+            serve::coordinator::synthetic_requests(
+                vec![Shape::nchw(1, 3, 16, 16)],
+                40,
+                500.0,
+                2,
+            ),
+        )
+        .expect("serve");
+    assert_eq!(report.served, 40);
+}
+
+#[test]
+fn engine_factory_error_propagates() {
+    let report = Coordinator::new(ServeConfig { workers: 1, ..Default::default() }).run(
+        |_| anyhow::bail!("boom"),
+        serve::coordinator::synthetic_requests(vec![Shape::vec1(4)], 4, 0.0, 3),
+    );
+    assert!(report.is_err());
+}
+
+#[test]
+fn pipeline_inference_dominates() {
+    // Paper §2.1: "the inference module ... typically takes over 60% of
+    // the overall execution time".
+    let g = small_model();
+    let engine = Engine::interp(g);
+    let r = serve::run_pipeline(&engine, PipelineConfig { frames: 32, src_hw: 24, seed: 4 })
+        .expect("pipeline");
+    assert!(
+        r.inference_share() > 0.6,
+        "inference share {:.2} should dominate",
+        r.inference_share()
+    );
+}
+
+#[test]
+fn single_worker_preserves_fifo() {
+    let g = small_model();
+    let report = Coordinator::new(ServeConfig {
+        workers: 1,
+        batcher: BatcherConfig {
+            max_batch: 4,
+            max_wait: std::time::Duration::from_micros(100),
+        },
+    })
+    .run(
+        {
+            let g = g.clone();
+            move |_| Ok(Engine::interp(g.clone()))
+        },
+        serve::coordinator::synthetic_requests(
+            vec![Shape::nchw(1, 3, 16, 16)],
+            32,
+            0.0,
+            5,
+        ),
+    )
+    .expect("serve");
+    // With one worker, completion order == submission order.
+    let ids: Vec<u64> = report.responses.iter().map(|r| r.id).collect();
+    assert_eq!(ids, (0..32).collect::<Vec<_>>());
+}
