@@ -65,6 +65,7 @@ fn main() -> anyhow::Result<()> {
                 max_batch: 8,
                 max_wait: std::time::Duration::from_millis(1),
             },
+            ..Default::default()
         };
         let dir2 = dir.clone();
         let report = Coordinator::new(cfg).run(

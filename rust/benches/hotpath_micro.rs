@@ -1,19 +1,28 @@
 //! Hot-path microbenchmarks for the performance pass (EXPERIMENTS.md §Perf):
 //! the L3 paths that dominate end-to-end runs — the numeric operator
-//! library (serving fallback), the cache simulator, the cost model, the
-//! optimizer passes, and the serving batcher loop.
+//! library (serving fallback), the serial-vs-parallel plan executor, the
+//! cache simulator, the cost model, the optimizer passes, and the serving
+//! batcher loop.
+//!
+//! The `exec:` section is the tentpole comparison: the same graphs run
+//! through the serial `Interpreter` and through the `ParInterpreter`
+//! (DOS split on a worker pool), with the speedup printed per pair.
 
 use std::sync::Arc;
 
 use xenos::graph::{models, ConvAttrs, DataLayout, GraphBuilder, Shape};
 use xenos::hw::presets;
-use xenos::ops::{conv, matmul, Interpreter, Tensor};
+use xenos::ops::{conv, interp::synthetic_inputs, matmul, Interpreter, ParInterpreter, Tensor};
 use xenos::opt;
 use xenos::serve::{Batcher, BatcherConfig, Coordinator, ServeConfig};
 use xenos::sim::cache::{pointwise_consumer_trace, CacheSim};
 use xenos::sim::cost::node_cost;
 use xenos::util::bench::bench;
 use xenos::util::rng::Rng;
+
+/// Executor workers used for the parallel arms (the TMS preset's unit
+/// count is 8; 4 matches the acceptance comparison and most CI hosts).
+const PAR_WORKERS: usize = 4;
 
 fn main() {
     let mut rng = Rng::new(77);
@@ -26,22 +35,82 @@ fn main() {
 
     let a1 = ConvAttrs::std(64, 128, 1, 1, 0);
     let w1 = rng.vec_uniform(a1.weight_count() as usize);
-    bench("ops::conv2d 1x1 64->128 @56", 1, 8, || conv::conv2d(&x, &a1, &w1, &[]).data.len());
+    bench("ops::conv2d 1x1 64->128 @56 (packed)", 1, 8, || {
+        conv::conv2d(&x, &a1, &w1, &[]).data.len()
+    });
 
     let adw = ConvAttrs::depthwise(64, 3, 1, 1);
     let wdw = rng.vec_uniform(adw.weight_count() as usize);
     bench("ops::conv2d dw3x3 64 @56", 2, 10, || conv::conv2d(&x, &adw, &wdw, &[]).data.len());
 
-    // --- ops: matmul ----------------------------------------------------
+    // --- ops: matmul (packed panel + register tiling) --------------------
     let ma = Tensor::mat(128, 512, rng.vec_uniform(128 * 512));
     let mb = Tensor::mat(512, 512, rng.vec_uniform(512 * 512));
-    bench("ops::matmul 128x512x512", 2, 20, || matmul::matmul(&ma, &mb).data.len());
+    bench("ops::matmul 128x512x512 (packed)", 2, 20, || matmul::matmul(&ma, &mb).data.len());
+
+    // --- tentpole: serial vs parallel plan executor ----------------------
+    let device = presets::tms320c6678();
+
+    // 3x3 conv 64->64 @56 — the acceptance-criterion op.
+    let conv_graph = Arc::new({
+        let mut b = GraphBuilder::new("conv3x3_block");
+        let cx = b.input("x", Shape::nchw(1, 64, 56, 56));
+        let c = b.conv("c", cx, 64, 3, 1, 1);
+        b.output(c);
+        b.finish()
+    });
+    let conv_inputs = synthetic_inputs(&conv_graph, 21);
+    let conv_ser = Interpreter::new(&conv_graph);
+    let s_conv_ser =
+        bench("exec: conv3x3 64->64 @56 serial", 1, 10, || conv_ser.run(&conv_inputs).len());
+    let conv_par = ParInterpreter::new(conv_graph.clone(), &device, PAR_WORKERS);
+    let s_conv_par = bench("exec: conv3x3 64->64 @56 par x4", 1, 10, || {
+        conv_par.run(&conv_inputs).len()
+    });
+    println!(
+        "  -> conv split speedup x{:.2} ({} workers effective)",
+        s_conv_ser.mean / s_conv_par.mean,
+        conv_par.workers()
+    );
+
+    // Weighted FC 2048->2048 — the packed panel under a column split.
+    let fc_graph = Arc::new({
+        let mut b = GraphBuilder::new("fc2048");
+        let fx = b.input("x", Shape::mat(8, 2048));
+        let f = b.fc("fc", fx, 2048);
+        b.output(f);
+        b.finish()
+    });
+    let fc_inputs = synthetic_inputs(&fc_graph, 22);
+    let fc_ser = Interpreter::new(&fc_graph);
+    let s_fc_ser = bench("exec: fc 8x2048x2048 serial", 1, 10, || fc_ser.run(&fc_inputs).len());
+    let fc_par = ParInterpreter::new(fc_graph.clone(), &device, PAR_WORKERS);
+    let s_fc_par =
+        bench("exec: fc 8x2048x2048 par x4", 1, 10, || fc_par.run(&fc_inputs).len());
+    println!("  -> fc split speedup x{:.2}", s_fc_ser.mean / s_fc_par.mean);
+
+    // End-to-end MobileNet inference — the acceptance-criterion model.
+    let mn = Arc::new(models::mobilenet());
+    let mn_inputs = synthetic_inputs(&mn, 5);
+    let mn_ser = Interpreter::new(&mn);
+    let s_mn_ser =
+        bench("exec: mobilenet e2e serial", 1, 5, || mn_ser.run(&mn_inputs).len());
+    let mn_par = ParInterpreter::new(mn.clone(), &device, PAR_WORKERS);
+    let s_mn_par =
+        bench("exec: mobilenet e2e par x4", 1, 5, || mn_par.run(&mn_inputs).len());
+    let (reused, allocated) = mn_par.arena_stats();
+    println!(
+        "  -> mobilenet e2e speedup x{:.2} | arena: {} buffers reused, {} allocated",
+        s_mn_ser.mean / s_mn_par.mean,
+        reused,
+        allocated
+    );
 
     // --- full interpreter on the AOT-equivalent block --------------------
     let small = {
         let mut b = GraphBuilder::new("block");
-        let x = b.input("x", Shape::nchw(1, 32, 16, 16));
-        let c1 = b.conv_bn_relu("c1", x, 64, 1, 1, 0);
+        let bx = b.input("x", Shape::nchw(1, 32, 16, 16));
+        let c1 = b.conv_bn_relu("c1", bx, 64, 1, 1, 0);
         let c2 = b.conv_bn_relu("c2", c1, 64, 1, 1, 0);
         let p = b.avgpool("p", c2, 2, 2);
         let f = b.fc("fc", p, 10);
@@ -50,7 +119,7 @@ fn main() {
         b.finish()
     };
     let interp = Interpreter::new(&small);
-    let inputs = xenos::ops::interp::synthetic_inputs(&small, 3);
+    let inputs = synthetic_inputs(&small, 3);
     bench("interp: serve-block forward", 2, 50, || interp.run(&inputs).len());
 
     // --- cache simulator --------------------------------------------------
@@ -77,8 +146,8 @@ fn main() {
     // --- serving: batcher + coordinator round trip -------------------------
     let serve_graph = Arc::new({
         let mut b = GraphBuilder::new("tiny");
-        let x = b.input("x", Shape::nchw(1, 4, 8, 8));
-        let r = b.relu("r", x);
+        let sx = b.input("x", Shape::nchw(1, 4, 8, 8));
+        let r = b.relu("r", sx);
         b.output(r);
         b.finish()
     });
@@ -90,6 +159,7 @@ fn main() {
                 max_batch: 8,
                 max_wait: std::time::Duration::from_micros(200),
             },
+            ..Default::default()
         })
         .run(
             move |_| Ok(xenos::runtime::Engine::interp(sg.clone())),

@@ -1,0 +1,337 @@
+//! d-Xenos — distributed inference across an edge-device cluster (paper §5).
+//!
+//! A model too large (or too slow) for one device is partitioned across `p`
+//! devices. Three single-mode partition schemes mirror the intra-device DOS
+//! dimensions — `outC` (kernel/channel split, needs an activation
+//! all-gather), `inH` / `inW` (spatial splits, need halo exchanges) — and
+//! the profiling-driven `Mix` scheme (the paper's Algorithm 1) picks the
+//! best mode **per operator**. Synchronization runs either over the
+//! bandwidth-optimal [`ring`] collective or through a central parameter
+//! server ([`ps`]), reproducing the paper's Fig. 11 contrast.
+//!
+//! The collectives are executed for real over in-memory buffers
+//! ([`ring::ring_allreduce_exec`], [`ps::ps_allreduce_exec`]); cluster
+//! timing is analytic on top of the per-node [`cost`](crate::sim::cost)
+//! model, like the rest of the simulator.
+
+pub mod ps;
+pub mod ring;
+
+use crate::graph::{Graph, Node, OpKind};
+use crate::hw::{DeviceModel, LinkModel};
+use crate::opt::{self, OptLevel, OptimizeOptions};
+use crate::sim::cost::node_cost;
+
+/// How a layer is partitioned across devices (paper §5's search space).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PartitionScheme {
+    /// Output-channel / output-feature split: kernels shard, activations
+    /// must be all-gathered for the consumer.
+    OutC,
+    /// Input-height split: spatial shards with (kernel-1)-row halos.
+    InH,
+    /// Input-width split: spatial shards with (kernel-1)-column halos.
+    InW,
+    /// Profiling-driven per-operator choice (Algorithm 1's output).
+    Mix,
+}
+
+impl PartitionScheme {
+    /// Display name matching the paper's Fig. 11 legends.
+    pub fn label(self) -> &'static str {
+        match self {
+            PartitionScheme::OutC => "outC",
+            PartitionScheme::InH => "inH",
+            PartitionScheme::InW => "inW",
+            PartitionScheme::Mix => "Mix",
+        }
+    }
+}
+
+/// Cross-device synchronization mode.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SyncMode {
+    /// Ring collectives (reduce-scatter / all-gather around the ring).
+    Ring,
+    /// Central parameter server: every transfer serializes on one link.
+    Ps,
+}
+
+impl SyncMode {
+    /// Display name.
+    pub fn label(self) -> &'static str {
+        match self {
+            SyncMode::Ring => "ring",
+            SyncMode::Ps => "ps",
+        }
+    }
+}
+
+/// Result of one d-Xenos cluster simulation.
+#[derive(Debug, Clone)]
+pub struct DxenosReport {
+    /// Partition scheme simulated.
+    pub scheme: PartitionScheme,
+    /// Synchronization mode simulated.
+    pub sync: SyncMode,
+    /// Cluster size.
+    pub devices: usize,
+    /// Single-device inference time (the speedup baseline), seconds.
+    pub single_s: f64,
+    /// Distributed per-inference compute time, seconds.
+    pub compute_s: f64,
+    /// Activation/halo synchronization time, seconds.
+    pub sync_s: f64,
+    /// Per-round parameter (re)distribution time — zero under Ring, where
+    /// shards are statically placed; the PS server re-streams them.
+    pub param_dist_s: f64,
+    /// End-to-end distributed inference time, seconds.
+    pub total_s: f64,
+}
+
+impl DxenosReport {
+    /// Speedup over single-device inference.
+    pub fn speedup(&self) -> f64 {
+        self.single_s / self.total_s.max(1e-12)
+    }
+}
+
+/// Time for one broadcast/all-gather-shaped collective of `bytes` under a
+/// sync mode.
+fn sync_time(sync: SyncMode, p: usize, bytes: u64, link: &LinkModel) -> f64 {
+    match sync {
+        SyncMode::Ring => ring::ring_broadcast_time(p, bytes, link),
+        SyncMode::Ps => ps::ps_broadcast_time(p, bytes, link),
+    }
+}
+
+/// One partitioning option for one node: distributed compute time plus the
+/// bytes that must move between devices afterwards.
+#[derive(Debug, Clone, Copy)]
+struct NodeOption {
+    compute_s: f64,
+    sync_bytes: u64,
+}
+
+/// The dimension a scheme would split for this node, if the scheme applies.
+fn node_option(
+    g: &Graph,
+    node: &Node,
+    base_s: f64,
+    p: usize,
+    scheme: PartitionScheme,
+) -> Option<NodeOption> {
+    let out = &node.out;
+    let pf = p as f64;
+    match scheme {
+        PartitionScheme::OutC => {
+            let dim = match &node.op {
+                OpKind::MatMul(m) if m.weighted => m.n,
+                op => op.conv_attrs().map(|a| a.out_c).unwrap_or(0),
+            };
+            if node.op.splittable_out_c() && dim >= p {
+                // Kernels shard freely; the consumer needs the full map back.
+                Some(NodeOption { compute_s: base_s / pf, sync_bytes: out.bytes() })
+            } else {
+                None
+            }
+        }
+        PartitionScheme::InH => {
+            if out.shape.is_fm() && out.shape.h() >= p {
+                Some(NodeOption { compute_s: base_s / pf, sync_bytes: halo_bytes(g, node, p, true) })
+            } else {
+                None
+            }
+        }
+        PartitionScheme::InW => {
+            if out.shape.is_fm() && out.shape.w() >= p {
+                Some(NodeOption {
+                    compute_s: base_s / pf,
+                    sync_bytes: halo_bytes(g, node, p, false),
+                })
+            } else {
+                None
+            }
+        }
+        PartitionScheme::Mix => None, // handled by the caller
+    }
+}
+
+/// Halo traffic of a spatial split: `(p-1)` cuts each replicating
+/// `(k-1)` boundary rows/columns of the input (zero for window-free ops).
+fn halo_bytes(g: &Graph, node: &Node, p: usize, by_rows: bool) -> u64 {
+    let (k, stride) = match &node.op {
+        OpKind::Pool(a) => (a.k, a.stride.max(1)),
+        op => match op.conv_attrs() {
+            Some(a) => (if by_rows { a.kh } else { a.kw }, a.stride),
+            None => return 0,
+        },
+    };
+    if k <= 1 {
+        return 0;
+    }
+    let in_c = node
+        .inputs
+        .first()
+        .map(|&i| {
+            let s = &g.node(i).out.shape;
+            if s.is_fm() {
+                s.c()
+            } else {
+                1
+            }
+        })
+        .unwrap_or(1);
+    let line = if by_rows { node.out.shape.w() } else { node.out.shape.h() };
+    ((p - 1) * (k - 1) * line * stride * in_c * 4) as u64
+}
+
+/// Simulate distributed inference of `g` over `p` copies of `device`,
+/// under one partition scheme and sync mode. The graph is first run through
+/// the full single-device Xenos optimization, so the comparison baseline is
+/// the optimized deployment, as in the paper.
+pub fn simulate_dxenos(
+    g: &Graph,
+    device: &DeviceModel,
+    p: usize,
+    scheme: PartitionScheme,
+    sync: SyncMode,
+) -> DxenosReport {
+    let o = opt::optimize(g, device, OptimizeOptions { level: OptLevel::Full, search: false });
+    let p = p.max(1);
+    let link = &device.link;
+
+    let mut single_s = 0.0;
+    let mut compute_s = 0.0;
+    let mut sync_s = 0.0;
+    for node in &o.graph.nodes {
+        if matches!(node.op, OpKind::Input) {
+            continue;
+        }
+        let base = node_cost(&o.graph, node, o.plan.node(node.id), device).total_s;
+        single_s += base;
+        if p == 1 {
+            compute_s += base;
+            continue;
+        }
+        // A node left serial computes on one device and broadcasts its
+        // output so any device can consume it.
+        let serial = NodeOption { compute_s: base, sync_bytes: node.out.bytes() };
+        let chosen = match scheme {
+            PartitionScheme::Mix => {
+                let mut best = serial;
+                let mut best_t =
+                    best.compute_s + sync_time(sync, p, best.sync_bytes, link);
+                for s in [PartitionScheme::OutC, PartitionScheme::InH, PartitionScheme::InW] {
+                    if let Some(opt) = node_option(&o.graph, node, base, p, s) {
+                        let t = opt.compute_s + sync_time(sync, p, opt.sync_bytes, link);
+                        if t < best_t {
+                            best = opt;
+                            best_t = t;
+                        }
+                    }
+                }
+                best
+            }
+            s => node_option(&o.graph, node, base, p, s).unwrap_or(serial),
+        };
+        compute_s += chosen.compute_s;
+        sync_s += sync_time(sync, p, chosen.sync_bytes, link);
+    }
+
+    // Parameter distribution: ring clusters pre-place static shards; the
+    // parameter server re-streams the working set every round (the paper's
+    // takeaway (1) — "parameter pulls dominate").
+    let param_dist_s = if p > 1 && sync == SyncMode::Ps {
+        let nodes = o.graph.len() as f64;
+        o.graph.total_param_bytes() as f64 / link.bandwidth + (p - 1) as f64 * nodes * link.latency
+    } else {
+        0.0
+    };
+
+    DxenosReport {
+        scheme,
+        sync,
+        devices: p,
+        single_s,
+        compute_s,
+        sync_s,
+        param_dist_s,
+        total_s: compute_s + sync_s + param_dist_s,
+    }
+}
+
+/// Algorithm 1: profile every partition scheme on the cluster and return
+/// the fastest along with all profiling reports.
+pub fn enumerate_schemes(
+    g: &Graph,
+    device: &DeviceModel,
+    p: usize,
+    sync: SyncMode,
+) -> (PartitionScheme, Vec<DxenosReport>) {
+    let mut reports = Vec::with_capacity(4);
+    for scheme in [
+        PartitionScheme::OutC,
+        PartitionScheme::InH,
+        PartitionScheme::InW,
+        PartitionScheme::Mix,
+    ] {
+        reports.push(simulate_dxenos(g, device, p, scheme, sync));
+    }
+    let best = reports
+        .iter()
+        .min_by(|a, b| a.total_s.partial_cmp(&b.total_s).expect("finite times"))
+        .expect("four schemes")
+        .scheme;
+    (best, reports)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::hw::presets;
+
+    #[test]
+    fn single_device_is_identity() {
+        let d = presets::tms320c6678();
+        let g = models::lstm();
+        let r = simulate_dxenos(&g, &d, 1, PartitionScheme::Mix, SyncMode::Ring);
+        assert!((r.total_s - r.single_s).abs() < 1e-12);
+        assert!((r.speedup() - 1.0).abs() < 1e-9);
+        assert_eq!(r.sync_s, 0.0);
+        assert_eq!(r.param_dist_s, 0.0);
+    }
+
+    #[test]
+    fn mix_never_loses_to_single_modes() {
+        let d = presets::tms320c6678();
+        let g = models::squeezenet();
+        let mix = simulate_dxenos(&g, &d, 4, PartitionScheme::Mix, SyncMode::Ring);
+        for s in [PartitionScheme::OutC, PartitionScheme::InH, PartitionScheme::InW] {
+            let r = simulate_dxenos(&g, &d, 4, s, SyncMode::Ring);
+            assert!(mix.total_s <= r.total_s * 1.0001, "{s:?}");
+        }
+    }
+
+    #[test]
+    fn ps_pays_for_the_server() {
+        let d = presets::tms320c6678();
+        let g = models::resnet18();
+        let ring = simulate_dxenos(&g, &d, 4, PartitionScheme::Mix, SyncMode::Ring);
+        let ps = simulate_dxenos(&g, &d, 4, PartitionScheme::Mix, SyncMode::Ps);
+        assert!(ps.total_s > ring.total_s);
+        assert!(ps.param_dist_s > 0.0 && ring.param_dist_s == 0.0);
+    }
+
+    #[test]
+    fn enumerate_returns_all_schemes() {
+        let d = presets::tms320c6678();
+        let g = models::lstm();
+        let (best, reports) = enumerate_schemes(&g, &d, 4, SyncMode::Ring);
+        assert_eq!(reports.len(), 4);
+        let tmin = reports.iter().map(|r| r.total_s).fold(f64::INFINITY, f64::min);
+        let tbest = reports.iter().find(|r| r.scheme == best).unwrap().total_s;
+        assert!((tbest - tmin).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,71 @@
+//! Parameter-server synchronization — the baseline d-Xenos compares the
+//! ring collective against (paper §5, Fig. 11's "PS" arms).
+//!
+//! Every reduction funnels through one server device: workers upload their
+//! buffers, the server accumulates in worker order and broadcasts the
+//! result. The server link serializes `p-1` full-size transfers in each
+//! direction, which is why PS sync scales so much worse than the ring.
+
+use crate::hw::LinkModel;
+
+/// Execute a parameter-server all-reduce: the server (worker 0's host in
+/// this simulation) sums all buffers in worker order and broadcasts one
+/// identical copy back to every worker.
+pub fn ps_allreduce_exec(bufs: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
+    let p = bufs.len();
+    if p <= 1 {
+        return bufs;
+    }
+    let n = bufs[0].len();
+    for b in &bufs {
+        assert_eq!(b.len(), n, "ps all-reduce buffers must match in length");
+    }
+    let mut sum = vec![0.0f32; n];
+    for b in &bufs {
+        for (s, v) in sum.iter_mut().zip(b) {
+            *s += *v;
+        }
+    }
+    vec![sum; p]
+}
+
+/// Analytic PS all-reduce time: the server receives `p-1` full buffers and
+/// sends `p-1` full buffers, serialized on its link.
+pub fn ps_allreduce_time(p: usize, bytes: u64, link: &LinkModel) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    2.0 * (p - 1) as f64 * (link.latency + bytes as f64 / link.bandwidth)
+}
+
+/// Analytic PS broadcast: the server sends the full buffer to each of the
+/// `p-1` workers in turn.
+pub fn ps_broadcast_time(p: usize, bytes: u64, link: &LinkModel) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    (p - 1) as f64 * (link.latency + bytes as f64 / link.bandwidth)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ps_allreduce_sums() {
+        let out = ps_allreduce_exec(vec![vec![1.0f32, 2.0], vec![3.0, 5.0], vec![10.0, 0.0]]);
+        assert_eq!(out.len(), 3);
+        for w in &out {
+            assert_eq!(*w, vec![14.0, 7.0]);
+        }
+    }
+
+    #[test]
+    fn ps_slower_than_ring_at_scale() {
+        let link = LinkModel { bandwidth: 1e9, latency: 1e-6 };
+        let b = 8 << 20;
+        assert!(
+            ps_allreduce_time(8, b, &link) > crate::dist::ring::ring_allreduce_time(8, b, &link)
+        );
+    }
+}

@@ -1,0 +1,124 @@
+//! Ring all-reduce: the bandwidth-optimal collective d-Xenos uses for
+//! activation/partial-sum synchronization (paper §5).
+//!
+//! Two faces, mirroring the rest of the simulator:
+//! * [`ring_allreduce_exec`] — a *real* data exchange over in-memory worker
+//!   buffers (reduce-scatter + all-gather), used by the correctness tests
+//!   and the Fig. 11 bench.
+//! * [`ring_allreduce_time`] — the analytic time model the d-Xenos
+//!   simulation prices collectives with.
+
+use crate::hw::LinkModel;
+
+/// Chunk boundaries of an `n`-element buffer split into `p` near-even
+/// chunks (chunk `c` is `[c*n/p, (c+1)*n/p)`; may be empty when `n < p`).
+fn chunk_bounds(n: usize, p: usize, c: usize) -> (usize, usize) {
+    (c * n / p, (c + 1) * n / p)
+}
+
+/// Execute a ring all-reduce over `p = inputs.len()` worker buffers.
+///
+/// Reduce-scatter: chunk `c` circulates the ring starting at worker
+/// `(c+1) % p` and is accumulated hop by hop until it is complete at its
+/// owner `c` — so each chunk's addition order is a rotation of the worker
+/// order, exactly as on a real ring. All-gather: the owner's finished chunk
+/// is copied verbatim to every worker, which is why all workers end up with
+/// **bit-identical** buffers.
+pub fn ring_allreduce_exec(mut bufs: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
+    let p = bufs.len();
+    if p <= 1 {
+        return bufs;
+    }
+    let n = bufs[0].len();
+    for b in &bufs {
+        assert_eq!(b.len(), n, "ring all-reduce buffers must match in length");
+    }
+    for c in 0..p {
+        let (s, e) = chunk_bounds(n, p, c);
+        if s == e {
+            continue;
+        }
+        // Reduce-scatter for chunk c: accumulate in ring order c, c+1, ...
+        let mut acc = bufs[c][s..e].to_vec();
+        for step in 1..p {
+            let src = (c + step) % p;
+            for (a, v) in acc.iter_mut().zip(&bufs[src][s..e]) {
+                *a += *v;
+            }
+        }
+        // All-gather: owner broadcasts its finished chunk around the ring.
+        for b in bufs.iter_mut() {
+            b[s..e].copy_from_slice(&acc);
+        }
+    }
+    bufs
+}
+
+/// Analytic ring all-reduce time for `bytes` over `p` devices: `2(p-1)`
+/// steps, each moving one `bytes/p` chunk to the next neighbour.
+pub fn ring_allreduce_time(p: usize, bytes: u64, link: &LinkModel) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    2.0 * (p - 1) as f64 * (link.latency + bytes as f64 / p as f64 / link.bandwidth)
+}
+
+/// Analytic ring broadcast/all-gather of `bytes` (each device ends with the
+/// full buffer): `p-1` pipelined chunk hops.
+pub fn ring_broadcast_time(p: usize, bytes: u64, link: &LinkModel) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    (p - 1) as f64 * (link.latency + bytes as f64 / p as f64 / link.bandwidth)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn allreduce_equals_sum() {
+        let inputs = vec![vec![1.0f32, 2.0, 3.0], vec![10.0, 20.0, 30.0]];
+        let out = ring_allreduce_exec(inputs);
+        assert_eq!(out[0], vec![11.0, 22.0, 33.0]);
+        assert_eq!(out[0], out[1]);
+    }
+
+    #[test]
+    fn workers_end_bit_identical() {
+        let mut rng = Rng::new(5);
+        let inputs: Vec<Vec<f32>> = (0..5).map(|_| rng.vec_uniform(997)).collect();
+        let out = ring_allreduce_exec(inputs);
+        for w in 1..5 {
+            assert_eq!(out[0], out[w], "worker {w} diverged");
+        }
+    }
+
+    #[test]
+    fn short_buffers_with_empty_chunks() {
+        // n < p: some ring chunks are empty; the collective must still work.
+        let inputs = vec![vec![1.0f32], vec![2.0], vec![4.0], vec![8.0]];
+        let out = ring_allreduce_exec(inputs);
+        for w in 0..4 {
+            assert_eq!(out[w], vec![15.0]);
+        }
+    }
+
+    #[test]
+    fn single_worker_is_identity() {
+        let out = ring_allreduce_exec(vec![vec![3.0f32, 4.0]]);
+        assert_eq!(out[0], vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn time_model_scales_with_bytes_and_p() {
+        let link = LinkModel { bandwidth: 1e9, latency: 1e-6 };
+        assert_eq!(ring_allreduce_time(1, 1 << 20, &link), 0.0);
+        assert!(ring_allreduce_time(4, 2 << 20, &link) > ring_allreduce_time(4, 1 << 20, &link));
+        // Latency term grows with p even for fixed bytes.
+        assert!(
+            ring_allreduce_time(8, 1024, &link) > ring_allreduce_time(2, 1024, &link)
+        );
+    }
+}

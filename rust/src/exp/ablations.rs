@@ -107,6 +107,7 @@ pub fn batch_sweep_rows() -> Vec<(usize, f64, f64)> {
                     max_batch,
                     max_wait: std::time::Duration::from_micros(300),
                 },
+                ..Default::default()
             })
             .run(
                 move |_| Ok(Engine::interp(g.clone())),

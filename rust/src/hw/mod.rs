@@ -92,6 +92,11 @@ pub struct DeviceModel {
     /// achieves on this device — the paper's Vanilla baseline neither
     /// balances nor scales its partition to the unit count.
     pub vanilla_units: usize,
+    /// Host worker threads the parallel plan executor
+    /// ([`ops::par_exec`](crate::ops::par_exec)) uses to *emulate* this
+    /// device's DSP units when executing numerically (clamped to the
+    /// machine's real parallelism at pool construction).
+    pub host_workers: usize,
     /// FPGA fabric (None for DSP devices).
     pub fpga: Option<FpgaResources>,
     /// Inter-device link for d-Xenos clusters.

@@ -43,6 +43,7 @@ pub fn tms320c6678() -> DeviceModel {
         // data") is captured by the missing DMA-overlap discipline and the
         // un-fit L2 working sets of the Vanilla plan.
         vanilla_units: 8,
+        host_workers: 8, // one executor thread per C66x core
         fpga: None,
         link: LinkModel { bandwidth: 2.5e9, latency: 2e-6 }, // SRIO x4 gen2
         op_overhead: 4e-6,
@@ -84,6 +85,7 @@ pub fn zcu102() -> DeviceModel {
         // HLS default codegen unrolls a fixed small factor — the Vanilla
         // deployment leaves most DSP slices idle (paper: HO cuts 80-96%).
         vanilla_units: 96,
+        host_workers: 16, // 2048 lanes cannot be emulated 1:1; cap sanely
         fpga: Some(FpgaResources { dsp_slices: 2520, luts: 274_080, ffs: 548_160 }),
         link: LinkModel { bandwidth: 1.25e9, latency: 10e-6 }, // 10GbE
         op_overhead: 1e-6,
@@ -115,6 +117,7 @@ pub fn rtx3090() -> DeviceModel {
         },
         lut_data_mapper: false,
         vanilla_units: 10496,
+        host_workers: 16,
         fpga: None,
         link: LinkModel { bandwidth: 8e9, latency: 5e-6 },
         // Eager PyTorch dispatch + kernel launch per operator — the cost

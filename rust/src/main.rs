@@ -56,6 +56,8 @@ const USAGE: &str = "usage: xenos <optimize|run|serve|dist|repro|inspect> [--opt
   optimize --model M --device D            run the automatic optimizer, print the plan
   run      --model M --device D --level L  simulate inference (L: vanilla|ho|xenos)
   serve    --artifacts DIR --variant V --requests N --workers W --batch B --rate R
+  serve    --model M --engine par|interp --threads T   serve a zoo model numerically
+           (par = multi-threaded DOS plan executor, one thread per DSP unit)
   dist     --model M --devices P --sync ring|ps --scheme mix|outc|inh|inw
   repro    --exp ID|all                    regenerate a paper table/figure
   inspect  --model M                       dump the model graph";
@@ -156,13 +158,64 @@ fn cmd_run(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
-    let variant = args.get_or("variant", "linked").to_string();
     let n = args.get_parse("requests", 128usize);
     let workers = args.get_parse("workers", 2usize);
     let batch = args.get_parse("batch", 8usize);
     let rate = args.get_parse("rate", 0.0f64);
 
+    // Zoo-model serving through the numeric backends (no artifacts needed):
+    // --engine par runs the DOS plan on a worker pool per engine.
+    if args.get("model").is_some() {
+        let g = Arc::new(model_arg(args)?);
+        let d = device_arg(args)?;
+        let engine = args.get_or("engine", "par").to_string();
+        // Default: divide the device's emulated units across the serving
+        // workers so `workers` engines don't oversubscribe the host.
+        let threads =
+            args.get_parse("threads", (d.host_workers / workers.max(1)).max(1));
+        let cfg = ServeConfig {
+            workers,
+            engine_threads: threads,
+            batcher: serve::BatcherConfig {
+                max_batch: batch,
+                max_wait: std::time::Duration::from_millis(args.get_parse("max-wait-ms", 2u64)),
+            },
+        };
+        let shapes: Vec<xenos::graph::Shape> = g
+            .input_ids()
+            .iter()
+            .map(|&i| g.node(i).out.shape.clone())
+            .collect();
+        let report = Coordinator::new(cfg).run(
+            // The factory consults cfg.engine_threads — the one knob that
+            // sizes the per-engine executor pools.
+            move |_w| match engine.as_str() {
+                "par" => Ok(Engine::par_interp(g.clone(), &d, cfg.engine_threads)),
+                "interp" => Ok(Engine::interp(g.clone())),
+                other => bail!("unknown engine {other} (par|interp)"),
+            },
+            serve::coordinator::synthetic_requests(shapes, n, rate, args.get_parse("seed", 42u64)),
+        )?;
+        println!(
+            "served {} requests [{}] with {workers} workers x {threads} exec threads: {:.1} req/s",
+            report.served,
+            args.get_or("engine", "par"),
+            report.throughput
+        );
+        println!(
+            "latency p50 {} p90 {} p99 {} max {} | exec p50 {} | mean batch {:.2}",
+            human_time(report.latency.p50),
+            human_time(report.latency.p90),
+            human_time(report.latency.p99),
+            human_time(report.latency.max),
+            human_time(report.exec.p50),
+            report.batch_size.mean,
+        );
+        return Ok(());
+    }
+
+    let dir = std::path::PathBuf::from(args.get_or("artifacts", "artifacts"));
+    let variant = args.get_or("variant", "linked").to_string();
     let probe = PjrtRuntime::load_dir(&dir)?;
     let shapes = probe
         .artifact(&variant)
@@ -177,6 +230,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_batch: batch,
             max_wait: std::time::Duration::from_millis(args.get_parse("max-wait-ms", 2u64)),
         },
+        ..Default::default()
     };
     let dir2 = dir.clone();
     let variant2 = variant.clone();

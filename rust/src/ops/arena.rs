@@ -1,0 +1,156 @@
+//! Buffer arena — recycles intermediate tensor allocations across
+//! inferences.
+//!
+//! The interpreter loop materializes one output buffer per node; under a
+//! serving workload those `Tensor::zeros` allocations hit the allocator
+//! thousands of times per second with an identical size distribution. A
+//! [`BufferArena`] keeps the freed `Vec<f32>` storage of dead values and
+//! hands it back (cleared and re-zeroed) to later nodes — a per-engine
+//! free list, not a global allocator.
+
+/// Maximum number of buffers the arena retains; beyond this, freed buffers
+/// drop to the allocator (bounds worst-case residency on wide graphs).
+const MAX_POOLED: usize = 64;
+
+/// A simple best-effort free list of f32 buffers.
+#[derive(Debug, Default)]
+pub struct BufferArena {
+    free: Vec<Vec<f32>>,
+    /// Buffers served from the free list.
+    pub reused: usize,
+    /// Buffers that had to be freshly allocated.
+    pub allocated: usize,
+}
+
+impl BufferArena {
+    /// Create an empty arena.
+    pub fn new() -> BufferArena {
+        BufferArena::default()
+    }
+
+    /// A zero-filled buffer of exactly `n` elements, reusing pooled
+    /// storage when some buffer's capacity suffices (best fit, so large
+    /// buffers stay available for large requests).
+    ///
+    /// The zeroing is deliberate even though most takers overwrite every
+    /// element: handing out uninitialized f32 storage would be unsound,
+    /// and the memset is a small serial fraction relative to any kernel
+    /// above the `MIN_PARALLEL_ELEMS` threshold that takes a buffer.
+    pub fn take_zeroed(&mut self, n: usize) -> Vec<f32> {
+        let pos = self
+            .free
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.capacity() >= n)
+            .min_by_key(|(_, b)| b.capacity())
+            .map(|(i, _)| i);
+        if let Some(pos) = pos {
+            let mut b = self.free.swap_remove(pos);
+            b.clear();
+            b.resize(n, 0.0);
+            self.reused += 1;
+            b
+        } else {
+            self.allocated += 1;
+            vec![0.0f32; n]
+        }
+    }
+
+    /// A buffer initialized as a copy of `src`, reusing pooled storage
+    /// when possible — no intermediate zero pass, unlike
+    /// [`BufferArena::take_zeroed`].
+    pub fn take_copy(&mut self, src: &[f32]) -> Vec<f32> {
+        let n = src.len();
+        let pos = self
+            .free
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.capacity() >= n)
+            .min_by_key(|(_, b)| b.capacity())
+            .map(|(i, _)| i);
+        if let Some(pos) = pos {
+            let mut b = self.free.swap_remove(pos);
+            b.clear();
+            b.extend_from_slice(src);
+            self.reused += 1;
+            b
+        } else {
+            self.allocated += 1;
+            src.to_vec()
+        }
+    }
+
+    /// Return a dead buffer's storage to the pool.
+    pub fn recycle(&mut self, buf: Vec<f32>) {
+        if buf.capacity() > 0 && self.free.len() < MAX_POOLED {
+            self.free.push(buf);
+        }
+    }
+
+    /// Number of buffers currently pooled.
+    pub fn pooled(&self) -> usize {
+        self.free.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recycles_storage() {
+        let mut a = BufferArena::new();
+        let b = a.take_zeroed(100);
+        assert_eq!(a.allocated, 1);
+        let ptr = b.as_ptr();
+        a.recycle(b);
+        assert_eq!(a.pooled(), 1);
+        let c = a.take_zeroed(64);
+        assert_eq!(a.reused, 1);
+        assert_eq!(c.len(), 64);
+        assert!(c.iter().all(|&v| v == 0.0));
+        assert_eq!(c.as_ptr(), ptr, "storage must be reused");
+    }
+
+    #[test]
+    fn allocates_when_too_small() {
+        let mut a = BufferArena::new();
+        let b = a.take_zeroed(8);
+        a.recycle(b);
+        let c = a.take_zeroed(1024);
+        assert_eq!(c.len(), 1024);
+        assert_eq!(a.allocated, 2);
+    }
+
+    #[test]
+    fn zeroes_recycled_contents() {
+        let mut a = BufferArena::new();
+        let mut b = a.take_zeroed(16);
+        b.iter_mut().for_each(|v| *v = 7.0);
+        a.recycle(b);
+        let c = a.take_zeroed(16);
+        assert!(c.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn take_copy_reuses_and_copies() {
+        let mut a = BufferArena::new();
+        let b = a.take_zeroed(32);
+        let ptr = b.as_ptr();
+        a.recycle(b);
+        let src: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let c = a.take_copy(&src);
+        assert_eq!(c, src);
+        assert_eq!(c.as_ptr(), ptr, "storage must be reused");
+        assert_eq!(a.reused, 1);
+    }
+
+    #[test]
+    fn pool_is_bounded() {
+        let mut a = BufferArena::new();
+        for _ in 0..(MAX_POOLED + 10) {
+            a.recycle(vec![0.0; 4]);
+        }
+        assert_eq!(a.pooled(), MAX_POOLED);
+    }
+}

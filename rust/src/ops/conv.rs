@@ -1,12 +1,25 @@
 //! Convolution execution (standard / grouped / depthwise), plus the folded
 //! Bn variant used by the fused CBR family.
 //!
-//! Direct (im2col-free) implementation with the inner loop over the input
-//! channel slice — the layout the hot-path optimization later tiles. Weights
-//! are `[out_c, in_c/groups, kh, kw]`, bias `[out_c]`.
+//! Direct (im2col-free) implementation structured as **tile kernels**: the
+//! serial entry points and the parallel executor (`ops::par_exec`) share
+//! the same `(oc, oy, ic)`-range routines, so a partitioned execution is
+//! bit-identical to the serial one by construction. Weights are
+//! `[out_c, in_c/groups, kh, kw]`, bias `[out_c]`.
+//!
+//! The 1×1/s1 fast path lowers to the packed panel kernel in
+//! `ops::matmul` (`W [out_c, in_c] × X [in_c, HW]`), per convolution
+//! group — the blocked/packed upgrade measured in EXPERIMENTS.md §Perf.
 
+use super::matmul::matmul_panel_raw;
 use super::Tensor;
 use crate::graph::{ConvAttrs, TensorDesc};
+
+/// True if `attrs` (with batch size `n`) takes the pointwise-matmul fast
+/// path. The parallel executor consults this so both paths route alike.
+pub(crate) fn is_pointwise_fast_path(attrs: &ConvAttrs, n: usize) -> bool {
+    attrs.kh == 1 && attrs.kw == 1 && attrs.stride == 1 && attrs.pad == 0 && n == 1
+}
 
 /// Run a convolution. `weights` length must be `attrs.weight_count()`,
 /// `bias` length `attrs.out_c` (empty slice = no bias).
@@ -19,85 +32,145 @@ pub fn conv2d(x: &Tensor, attrs: &ConvAttrs, weights: &[f32], bias: &[f32]) -> T
     let (n, h, w) = (s.n(), s.h(), s.w());
     let (oh, ow) = attrs.out_hw(h, w);
     let cpg_in = attrs.in_c / attrs.groups; // channels per group, input
-    let cpg_out = attrs.out_c / attrs.groups;
-
-    // Pointwise fast path (perf pass #2): a 1x1/s1 conv is exactly
-    // `W [out_c, in_c] x X [in_c, HW]` — reuse the k-blocked matmul.
-    if attrs.kh == 1 && attrs.kw == 1 && attrs.stride == 1 && attrs.pad == 0 && n == 1 {
-        return pointwise_matmul(x, attrs, weights, bias, cpg_in, cpg_out);
-    }
     let mut out = Tensor::zeros(TensorDesc::fm(n, attrs.out_c, oh, ow));
 
-    // Output-row-major accumulation (perf pass, EXPERIMENTS.md §Perf #1):
-    // for each (oc, oy, ic, ky, kx) the contribution to the whole output
-    // row is a scaled, shifted copy of one input row — a slice-level AXPY
-    // the compiler auto-vectorizes. ~16x over the naive per-element form.
+    if is_pointwise_fast_path(attrs, n) {
+        // SAFETY: single-threaded call covering the whole [out_c, hw] range.
+        unsafe {
+            pointwise_tile_raw(x, attrs, weights, bias, 0, attrs.out_c, out.data.as_mut_ptr())
+        };
+        return out;
+    }
+    for b in 0..n {
+        // SAFETY: single-threaded call covering the whole (oc, oy) range of
+        // batch `b`; every output row is written exactly once.
+        unsafe {
+            conv2d_tile_raw(
+                x,
+                attrs,
+                weights,
+                bias,
+                b,
+                0,
+                attrs.out_c,
+                0,
+                oh,
+                0,
+                cpg_in,
+                oh,
+                ow,
+                out.data.as_mut_ptr(),
+            )
+        };
+    }
+    out
+}
+
+/// Generic conv tile: computes output rows `oy0..oy1` of output channels
+/// `oc0..oc1` (batch `b`) from input-channel slice `ic0..ic1`, writing into
+/// the full `[n, out_c, oh, ow]` buffer behind `out`.
+///
+/// Output-row-major accumulation (perf pass, EXPERIMENTS.md §Perf #1):
+/// for each (oc, oy, ic, ky, kx) the contribution to the whole output row
+/// is a scaled, shifted copy of one input row — a slice-level AXPY the
+/// compiler auto-vectorizes. Rows are initialized with the bias when
+/// `ic0 == 0`, with zero otherwise (partial-sum chunks of a C-split).
+///
+/// # Safety
+/// `out` must point at a live `n*out_c*oh*ow` f32 buffer. Concurrent calls
+/// on the same buffer must use disjoint `(oc, oy)` tiles (for equal
+/// `ic0..ic1`); each call writes only its own rows.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn conv2d_tile_raw(
+    x: &Tensor,
+    attrs: &ConvAttrs,
+    weights: &[f32],
+    bias: &[f32],
+    b: usize,
+    oc0: usize,
+    oc1: usize,
+    oy0: usize,
+    oy1: usize,
+    ic0: usize,
+    ic1: usize,
+    oh: usize,
+    ow: usize,
+    out: *mut f32,
+) {
+    let s = x.shape();
+    let (h, w) = (s.h(), s.w());
+    let cpg_in = attrs.in_c / attrs.groups;
+    let cpg_out = attrs.out_c / attrs.groups;
+    debug_assert!(ic1 <= cpg_in && oc1 <= attrs.out_c && oy1 <= oh);
     let kw_elems = attrs.kh * attrs.kw;
     let (stride, pad) = (attrs.stride, attrs.pad);
-    for b in 0..n {
-        for oc in 0..attrs.out_c {
-            let g = oc / cpg_out;
-            let w_base = oc * cpg_in * kw_elems;
-            let b0 = if bias.is_empty() { 0.0 } else { bias[oc] };
-            for oy in 0..oh {
-                let out_off = ((b * attrs.out_c + oc) * oh + oy) * ow;
-                let out_row = &mut out.data[out_off..out_off + ow];
-                out_row.fill(b0);
-                let iy0 = (oy * stride) as isize - pad as isize;
-                for ic in 0..cpg_in {
-                    let c_in = g * cpg_in + ic;
-                    let wk = w_base + ic * kw_elems;
-                    for ky in 0..attrs.kh {
-                        let iy = iy0 + ky as isize;
-                        if iy < 0 || iy >= h as isize {
+    for oc in oc0..oc1 {
+        let g = oc / cpg_out;
+        let w_base = oc * cpg_in * kw_elems;
+        let b0 = if bias.is_empty() || ic0 != 0 {
+            0.0
+        } else {
+            bias[oc]
+        };
+        for oy in oy0..oy1 {
+            let out_off = ((b * attrs.out_c + oc) * oh + oy) * ow;
+            let out_row = std::slice::from_raw_parts_mut(out.add(out_off), ow);
+            out_row.fill(b0);
+            let iy0 = (oy * stride) as isize - pad as isize;
+            for ic in ic0..ic1 {
+                let c_in = g * cpg_in + ic;
+                let wk = w_base + ic * kw_elems;
+                for ky in 0..attrs.kh {
+                    let iy = iy0 + ky as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    let in_off = ((b * attrs.in_c + c_in) * h + iy as usize) * w;
+                    let in_row = &x.data[in_off..in_off + w];
+                    // kw==3/s1/p1 tap fusion (perf pass #3): one pass over
+                    // the interior folds all three kx taps.
+                    if attrs.kw == 3 && stride == 1 && pad == 1 && ow == w && w >= 2 {
+                        let (w0, w1, w2) = (
+                            weights[wk + ky * 3],
+                            weights[wk + ky * 3 + 1],
+                            weights[wk + ky * 3 + 2],
+                        );
+                        out_row[0] += w1 * in_row[0] + w2 * in_row[1];
+                        for ox in 1..ow - 1 {
+                            out_row[ox] +=
+                                w0 * in_row[ox - 1] + w1 * in_row[ox] + w2 * in_row[ox + 1];
+                        }
+                        out_row[ow - 1] += w0 * in_row[ow - 2] + w1 * in_row[ow - 1];
+                        continue;
+                    }
+                    for kx in 0..attrs.kw {
+                        let wv = weights[wk + ky * attrs.kw + kx];
+                        let ix0 = kx as isize - pad as isize;
+                        // Valid output range: 0 <= ox*stride + ix0 < w.
+                        let ox_lo = if ix0 < 0 {
+                            ((-ix0) as usize).div_ceil(stride)
+                        } else {
+                            0
+                        };
+                        if (ox_lo * stride) as isize + ix0 >= w as isize {
                             continue;
                         }
-                        let in_off = ((b * attrs.in_c + c_in) * h + iy as usize) * w;
-                        let in_row = &x.data[in_off..in_off + w];
-                        // kw==3/s1/p1 tap fusion (perf pass #3): one pass
-                        // over the interior folds all three kx taps.
-                        if attrs.kw == 3 && stride == 1 && pad == 1 && ow == w && w >= 2 {
-                            let (w0, w1, w2) =
-                                (weights[wk + ky * 3], weights[wk + ky * 3 + 1], weights[wk + ky * 3 + 2]);
-                            out_row[0] += w1 * in_row[0] + w2 * in_row[1];
-                            for ox in 1..ow - 1 {
-                                out_row[ox] += w0 * in_row[ox - 1]
-                                    + w1 * in_row[ox]
-                                    + w2 * in_row[ox + 1];
-                            }
-                            out_row[ow - 1] += w0 * in_row[ow - 2] + w1 * in_row[ow - 1];
+                        let ox_hi = (((w as isize - 1 - ix0) as usize) / stride + 1).min(ow);
+                        if ox_lo >= ox_hi {
                             continue;
                         }
-                        for kx in 0..attrs.kw {
-                            let wv = weights[wk + ky * attrs.kw + kx];
-                            let ix0 = kx as isize - pad as isize;
-                            // Valid output range: 0 <= ox*stride + ix0 < w.
-                            let ox_lo = if ix0 < 0 {
-                                ((-ix0) as usize).div_ceil(stride)
-                            } else {
-                                0
-                            };
-                            if (ox_lo * stride) as isize + ix0 >= w as isize {
-                                continue;
+                        let base = (ox_lo * stride) as isize + ix0;
+                        if stride == 1 {
+                            let a = &in_row[base as usize..base as usize + (ox_hi - ox_lo)];
+                            let o = &mut out_row[ox_lo..ox_hi];
+                            for (ov, av) in o.iter_mut().zip(a) {
+                                *ov += wv * av;
                             }
-                            let ox_hi =
-                                (((w as isize - 1 - ix0) as usize) / stride + 1).min(ow);
-                            if ox_lo >= ox_hi {
-                                continue;
-                            }
-                            let base = (ox_lo * stride) as isize + ix0;
-                            if stride == 1 {
-                                let a = &in_row[base as usize..base as usize + (ox_hi - ox_lo)];
-                                let o = &mut out_row[ox_lo..ox_hi];
-                                for (ov, av) in o.iter_mut().zip(a) {
-                                    *ov += wv * av;
-                                }
-                            } else {
-                                let mut ix = base as usize;
-                                for ov in &mut out_row[ox_lo..ox_hi] {
-                                    *ov += wv * in_row[ix];
-                                    ix += stride;
-                                }
+                        } else {
+                            let mut ix = base as usize;
+                            for ov in &mut out_row[ox_lo..ox_hi] {
+                                *ov += wv * in_row[ix];
+                                ix += stride;
                             }
                         }
                     }
@@ -105,58 +178,46 @@ pub fn conv2d(x: &Tensor, attrs: &ConvAttrs, weights: &[f32], bias: &[f32]) -> T
             }
         }
     }
-    out
 }
 
-/// 1x1/s1 conv as a grouped matrix product over the pixel axis.
-fn pointwise_matmul(
+/// 1×1/s1 conv tile as a grouped packed matrix product over the pixel
+/// axis: rows `oc0..oc1` of `W [out_c, in_c/groups] × X_g [in_c/groups,
+/// HW]`, one panel product per intersected convolution group.
+///
+/// # Safety
+/// `out` must point at a live `out_c*h*w` f32 buffer (batch 1). Concurrent
+/// calls on the same buffer must use disjoint `oc` ranges.
+pub(crate) unsafe fn pointwise_tile_raw(
     x: &Tensor,
     attrs: &ConvAttrs,
     weights: &[f32],
     bias: &[f32],
-    cpg_in: usize,
-    cpg_out: usize,
-) -> Tensor {
+    oc0: usize,
+    oc1: usize,
+    out: *mut f32,
+) {
     let s = x.shape();
-    let (h, w) = (s.h(), s.w());
-    let hw = h * w;
-    let mut out = Tensor::zeros(TensorDesc::fm(1, attrs.out_c, h, w));
-    for oc in 0..attrs.out_c {
-        let g = oc / cpg_out;
-        let b0 = if bias.is_empty() { 0.0 } else { bias[oc] };
-        let orow = &mut out.data[oc * hw..(oc + 1) * hw];
-        orow.fill(b0);
-        let wrow = &weights[oc * cpg_in..(oc + 1) * cpg_in];
-        // 4-way input-channel blocking, as in matmul::matmul.
-        let k4 = cpg_in / 4 * 4;
-        let mut ic = 0;
-        while ic < k4 {
-            let base = (g * cpg_in + ic) * hw;
-            let (w0, w1, w2, w3) = (wrow[ic], wrow[ic + 1], wrow[ic + 2], wrow[ic + 3]);
-            let x0 = &x.data[base..base + hw];
-            let x1 = &x.data[base + hw..base + 2 * hw];
-            let x2 = &x.data[base + 2 * hw..base + 3 * hw];
-            let x3 = &x.data[base + 3 * hw..base + 4 * hw];
-            for (j, ov) in orow.iter_mut().enumerate() {
-                *ov += w0 * x0[j] + w1 * x1[j] + w2 * x2[j] + w3 * x3[j];
-            }
-            ic += 4;
-        }
-        for ic in k4..cpg_in {
-            let base = (g * cpg_in + ic) * hw;
-            let wv = wrow[ic];
-            let xrow = &x.data[base..base + hw];
-            for (ov, xv) in orow.iter_mut().zip(xrow) {
-                *ov += wv * xv;
-            }
-        }
+    let hw = s.h() * s.w();
+    let cpg_in = attrs.in_c / attrs.groups;
+    let cpg_out = attrs.out_c / attrs.groups;
+    debug_assert!(oc0 <= oc1 && oc1 <= attrs.out_c);
+    let mut r0 = oc0;
+    while r0 < oc1 {
+        let g = r0 / cpg_out;
+        let r1 = ((g + 1) * cpg_out).min(oc1);
+        let a = &weights[r0 * cpg_in..r1 * cpg_in];
+        let xg = &x.data[g * cpg_in * hw..(g + 1) * cpg_in * hw];
+        let row_bias = if bias.is_empty() { &[][..] } else { &bias[r0..r1] };
+        // SAFETY: rows r0..r1 occupy the disjoint slice [r0*hw, r1*hw).
+        matmul_panel_raw(a, r1 - r0, cpg_in, xg, hw, 0, hw, &[], row_bias, out.add(r0 * hw));
+        r0 = r1;
     }
-    out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn identity_1x1_conv() {
@@ -174,7 +235,7 @@ mod tests {
         // All-ones 3x3 kernel over a constant image: interior = 9, corner = 4.
         let x = Tensor::fm(1, 1, 4, 4, vec![1.0; 16]);
         let a = ConvAttrs::std(1, 1, 3, 1, 1);
-        let y = conv2d(&x, &a, &vec![1.0; 9], &[]);
+        let y = conv2d(&x, &a, &[1.0; 9], &[]);
         assert_eq!(y.shape().h(), 4);
         assert_eq!(y.at4(0, 0, 1, 1), 9.0);
         assert_eq!(y.at4(0, 0, 0, 0), 4.0);
@@ -217,5 +278,68 @@ mod tests {
         let a = ConvAttrs::std(1, 1, 1, 1, 0);
         let y = conv2d(&x, &a, &[3.0], &[0.5]);
         assert_eq!(y.data, vec![6.5]);
+    }
+
+    #[test]
+    fn oc_oy_tiles_match_full_conv_bitwise() {
+        // The parallel executor's (oc, oy) tiling must reproduce the serial
+        // result exactly.
+        let mut rng = Rng::new(31);
+        let a = ConvAttrs::std(5, 6, 3, 1, 1);
+        let x = Tensor::fm(1, 5, 9, 9, rng.vec_uniform(5 * 9 * 9));
+        let w = rng.vec_uniform(a.weight_count() as usize);
+        let bias = rng.vec_uniform(6);
+        let full = conv2d(&x, &a, &w, &bias);
+        let (oh, ow) = (9, 9);
+        let mut tiled = vec![0.0f32; 6 * oh * ow];
+        for (oc0, oc1) in [(0usize, 2usize), (2, 5), (5, 6)] {
+            for (oy0, oy1) in [(0usize, 4usize), (4, 9)] {
+                unsafe {
+                    conv2d_tile_raw(
+                        &x, &a, &w, &bias, 0, oc0, oc1, oy0, oy1, 0, 5, oh, ow,
+                        tiled.as_mut_ptr(),
+                    )
+                };
+            }
+        }
+        assert_eq!(tiled, full.data);
+    }
+
+    #[test]
+    fn ic_partials_sum_to_full_conv() {
+        // C-split partial sums (chunk 0 carries the bias) reduce to the
+        // full convolution within float tolerance.
+        let mut rng = Rng::new(32);
+        let a = ConvAttrs::std(8, 4, 3, 1, 1);
+        let x = Tensor::fm(1, 8, 7, 7, rng.vec_uniform(8 * 7 * 7));
+        let w = rng.vec_uniform(a.weight_count() as usize);
+        let bias = rng.vec_uniform(4);
+        let full = conv2d(&x, &a, &w, &bias);
+        let numel = 4 * 7 * 7;
+        let mut p0 = vec![0.0f32; numel];
+        let mut p1 = vec![0.0f32; numel];
+        unsafe {
+            conv2d_tile_raw(&x, &a, &w, &bias, 0, 0, 4, 0, 7, 0, 5, 7, 7, p0.as_mut_ptr());
+            conv2d_tile_raw(&x, &a, &w, &bias, 0, 0, 4, 0, 7, 5, 8, 7, 7, p1.as_mut_ptr());
+        }
+        for i in 0..numel {
+            assert!((p0[i] + p1[i] - full.data[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn pointwise_oc_tiles_match_full() {
+        let mut rng = Rng::new(33);
+        let mut a = ConvAttrs::std(8, 8, 1, 1, 0);
+        a.groups = 2; // grouped pointwise (ShuffleNet-style)
+        let x = Tensor::fm(1, 8, 6, 6, rng.vec_uniform(8 * 6 * 6));
+        let w = rng.vec_uniform(a.weight_count() as usize);
+        let bias = rng.vec_uniform(8);
+        let full = conv2d(&x, &a, &w, &bias);
+        let mut tiled = vec![0.0f32; 8 * 36];
+        for (oc0, oc1) in [(0usize, 3usize), (3, 5), (5, 8)] {
+            unsafe { pointwise_tile_raw(&x, &a, &w, &bias, oc0, oc1, tiled.as_mut_ptr()) };
+        }
+        assert_eq!(tiled, full.data);
     }
 }

@@ -1,28 +1,55 @@
 //! Element-wise and normalization operators: activations, arithmetic,
 //! inference-form BatchNorm, Softmax, LayerNorm.
+//!
+//! The per-element / per-row bodies are factored out (`relu1`,
+//! `softmax_row`, …) so the parallel executor applies **the same float
+//! operations** over its chunks as the serial operators do — chunked
+//! execution is then bit-identical by construction.
 
 use super::Tensor;
 
+/// ReLU of one element.
+#[inline]
+pub(crate) fn relu1(v: f32) -> f32 {
+    v.max(0.0)
+}
+
+/// Sigmoid of one element.
+#[inline]
+pub(crate) fn sigmoid1(v: f32) -> f32 {
+    1.0 / (1.0 + (-v).exp())
+}
+
+/// Tanh of one element.
+#[inline]
+pub(crate) fn tanh1(v: f32) -> f32 {
+    v.tanh()
+}
+
+/// GELU (tanh approximation, as used by Bert) of one element.
+#[inline]
+pub(crate) fn gelu1(v: f32) -> f32 {
+    0.5 * v * (1.0 + (0.797_884_6 * (v + 0.044_715 * v * v * v)).tanh())
+}
+
 /// ReLU.
 pub fn relu(x: &Tensor) -> Tensor {
-    map(x, |v| v.max(0.0))
+    map(x, relu1)
 }
 
 /// Sigmoid.
 pub fn sigmoid(x: &Tensor) -> Tensor {
-    map(x, |v| 1.0 / (1.0 + (-v).exp()))
+    map(x, sigmoid1)
 }
 
 /// Tanh.
 pub fn tanh(x: &Tensor) -> Tensor {
-    map(x, f32::tanh)
+    map(x, tanh1)
 }
 
 /// GELU (tanh approximation, as used by Bert).
 pub fn gelu(x: &Tensor) -> Tensor {
-    map(x, |v| {
-        0.5 * v * (1.0 + (0.797_884_6 * (v + 0.044_715 * v * v * v)).tanh())
-    })
+    map(x, gelu1)
 }
 
 /// Element-wise sum.
@@ -75,6 +102,20 @@ pub fn bias_fm(x: &Tensor, bias: &[f32]) -> Tensor {
     batchnorm(x, &ones, bias)
 }
 
+/// Softmax of one row, in place.
+#[inline]
+pub(crate) fn softmax_row(row: &mut [f32]) {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0;
+    for v in row.iter_mut() {
+        *v = (*v - m).exp();
+        sum += *v;
+    }
+    for v in row.iter_mut() {
+        *v /= sum;
+    }
+}
+
 /// Softmax over the last axis.
 pub fn softmax(x: &Tensor) -> Tensor {
     let dims = &x.shape().dims;
@@ -82,18 +123,21 @@ pub fn softmax(x: &Tensor) -> Tensor {
     let rows = x.shape().numel() / last;
     let mut out = x.clone();
     for r in 0..rows {
-        let row = &mut out.data[r * last..(r + 1) * last];
-        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-        let mut sum = 0.0;
-        for v in row.iter_mut() {
-            *v = (*v - m).exp();
-            sum += *v;
-        }
-        for v in row.iter_mut() {
-            *v /= sum;
-        }
+        softmax_row(&mut out.data[r * last..(r + 1) * last]);
     }
     out
+}
+
+/// LayerNorm of one row, in place (unit gain, zero bias).
+#[inline]
+pub(crate) fn layernorm_row(row: &mut [f32]) {
+    let last = row.len();
+    let mean = row.iter().sum::<f32>() / last as f32;
+    let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / last as f32;
+    let inv = 1.0 / (var + 1e-5).sqrt();
+    for v in row.iter_mut() {
+        *v = (*v - mean) * inv;
+    }
 }
 
 /// LayerNorm over the last axis (unit gain, zero bias — the graph models the
@@ -104,13 +148,7 @@ pub fn layernorm(x: &Tensor) -> Tensor {
     let rows = x.shape().numel() / last;
     let mut out = x.clone();
     for r in 0..rows {
-        let row = &mut out.data[r * last..(r + 1) * last];
-        let mean = row.iter().sum::<f32>() / last as f32;
-        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / last as f32;
-        let inv = 1.0 / (var + 1e-5).sqrt();
-        for v in row.iter_mut() {
-            *v = (*v - mean) * inv;
-        }
+        layernorm_row(&mut out.data[r * last..(r + 1) * last]);
     }
     out
 }

@@ -4,9 +4,128 @@
 //! identical outputs), by the serving engine as the execution backend for
 //! models without AOT artifacts, and by the examples.
 
-use super::params::ParamStore;
+use super::params::{NodeParams, ParamStore};
 use super::{conv, elementwise as ew, matmul, pool, shape_ops, Tensor};
-use crate::graph::{Graph, NodeId, OpKind};
+use crate::graph::{Graph, Node, NodeId, OpKind};
+
+/// The shared graph-walk driver: feeds inputs, executes each node through
+/// `exec`, releases values after their last use (handing dead tensors to
+/// `on_dead` for recycling) and collects the outputs. The serial
+/// [`Interpreter`] and the parallel executor
+/// ([`ParInterpreter`](super::par_exec::ParInterpreter)) both run on this
+/// single loop, so their liveness/output semantics can never diverge.
+pub(crate) fn run_graph(
+    graph: &Graph,
+    inputs: &[Tensor],
+    mut exec: impl FnMut(&Node, &[&Tensor]) -> Tensor,
+    mut on_dead: impl FnMut(Tensor),
+) -> Vec<Tensor> {
+    let input_ids = graph.input_ids();
+    assert_eq!(
+        inputs.len(),
+        input_ids.len(),
+        "graph {} expects {} inputs",
+        graph.name,
+        input_ids.len()
+    );
+
+    // Remaining-use refcount for memory reclamation.
+    let mut uses: Vec<usize> = vec![0; graph.len()];
+    for n in &graph.nodes {
+        for &i in &n.inputs {
+            uses[i] += 1;
+        }
+    }
+    for &o in &graph.outputs {
+        uses[o] += 1;
+    }
+
+    // Dense value slots (perf pass: HashMap per-node overhead removed).
+    let mut values: Vec<Option<Tensor>> = (0..graph.len()).map(|_| None).collect();
+    let mut next_input = 0usize;
+    for n in &graph.nodes {
+        let out = if matches!(n.op, OpKind::Input) {
+            let t = inputs[next_input].clone();
+            assert_eq!(
+                t.shape(),
+                &n.out.shape,
+                "input {} shape mismatch for node {}",
+                next_input,
+                n.name
+            );
+            next_input += 1;
+            t
+        } else {
+            let args: Vec<&Tensor> = n
+                .inputs
+                .iter()
+                .map(|&i| values[i].as_ref().expect("input value should be live"))
+                .collect();
+            exec(n, &args)
+        };
+        values[n.id] = Some(out);
+        // Release inputs whose last consumer has run.
+        for &i in &n.inputs {
+            uses[i] -= 1;
+            if uses[i] == 0 && !graph.outputs.contains(&i) {
+                if let Some(dead) = values[i].take() {
+                    on_dead(dead);
+                }
+            }
+        }
+    }
+    graph
+        .outputs
+        .iter()
+        .map(|&o| values[o].clone().expect("output computed"))
+        .collect()
+}
+
+/// Execute one operator on concrete inputs with the node's parameters —
+/// the single source of truth shared by the serial [`Interpreter`] and the
+/// serial fallback of the parallel executor
+/// ([`ParInterpreter`](super::par_exec::ParInterpreter)).
+pub(crate) fn exec_node(p: &NodeParams, op: &OpKind, args: &[&Tensor]) -> Tensor {
+    match op {
+        OpKind::Input => unreachable!("inputs handled by run()"),
+        OpKind::Conv(a) => conv::conv2d(args[0], a, &p.w, &p.bias),
+        OpKind::Cbr(a) => {
+            let c = conv::conv2d(args[0], a, &p.w, &p.bias);
+            let b = ew::batchnorm(&c, &p.scale, &p.shift);
+            ew::relu(&b)
+        }
+        OpKind::Cbra(a, pl) | OpKind::Cbrm(a, pl) => {
+            let c = conv::conv2d(args[0], a, &p.w, &p.bias);
+            let b = ew::batchnorm(&c, &p.scale, &p.shift);
+            let r = ew::relu(&b);
+            pool::pool(&r, pl)
+        }
+        OpKind::Pool(a) => pool::pool(args[0], a),
+        OpKind::MatMul(m) => {
+            if m.weighted {
+                matmul::fc(args[0], m.k, m.n, &p.w, &p.bias)
+            } else {
+                matmul::matmul(args[0], args[1])
+            }
+        }
+        OpKind::BatchNorm => ew::batchnorm(args[0], &p.scale, &p.shift),
+        OpKind::Bias => ew::bias_fm(args[0], &p.bias),
+        OpKind::Relu => ew::relu(args[0]),
+        OpKind::Sigmoid => ew::sigmoid(args[0]),
+        OpKind::Tanh => ew::tanh(args[0]),
+        OpKind::Gelu => ew::gelu(args[0]),
+        OpKind::Softmax => ew::softmax(args[0]),
+        OpKind::LayerNorm => ew::layernorm(args[0]),
+        OpKind::Add => ew::add(args[0], args[1]),
+        OpKind::Mul => ew::mul(args[0], args[1]),
+        OpKind::Mac => ew::mac(args[0], args[1], args[2]),
+        OpKind::Concat => shape_ops::concat_c(args),
+        OpKind::Slice { begin, end } => shape_ops::slice_c(args[0], *begin, *end),
+        OpKind::Transpose => shape_ops::transpose(args[0]),
+        OpKind::ChannelShuffle { groups } => shape_ops::channel_shuffle(args[0], *groups),
+        OpKind::Upsample { factor } => shape_ops::upsample(args[0], *factor),
+    }
+}
 
 /// Interpreter bound to a graph and its (deterministic) parameters.
 pub struct Interpreter<'g> {
@@ -34,106 +153,11 @@ impl<'g> Interpreter<'g> {
     /// Run the graph on the given inputs (one tensor per `OpKind::Input`
     /// node, in graph order). Returns the output tensors in `outputs` order.
     pub fn run(&self, inputs: &[Tensor]) -> Vec<Tensor> {
-        let input_ids = self.graph.input_ids();
-        assert_eq!(
-            inputs.len(),
-            input_ids.len(),
-            "graph {} expects {} inputs",
-            self.graph.name,
-            input_ids.len()
-        );
-
-        // Remaining-use refcount for memory reclamation.
-        let mut uses: Vec<usize> = vec![0; self.graph.len()];
-        for n in &self.graph.nodes {
-            for &i in &n.inputs {
-                uses[i] += 1;
-            }
-        }
-        for &o in &self.graph.outputs {
-            uses[o] += 1;
-        }
-
-        // Dense value slots (perf pass: HashMap per-node overhead removed).
-        let mut values: Vec<Option<Tensor>> = (0..self.graph.len()).map(|_| None).collect();
-        let mut next_input = 0usize;
-        for n in &self.graph.nodes {
-            let out = if matches!(n.op, OpKind::Input) {
-                let t = inputs[next_input].clone();
-                assert_eq!(
-                    t.shape(),
-                    &n.out.shape,
-                    "input {} shape mismatch for node {}",
-                    next_input,
-                    n.name
-                );
-                next_input += 1;
-                t
-            } else {
-                let args: Vec<&Tensor> = n
-                    .inputs
-                    .iter()
-                    .map(|&i| values[i].as_ref().expect("input value should be live"))
-                    .collect();
-                self.exec(n.id, &n.op, &args)
-            };
-            values[n.id] = Some(out);
-            // Release inputs whose last consumer has run.
-            for &i in &n.inputs {
-                uses[i] -= 1;
-                if uses[i] == 0 && !self.graph.outputs.contains(&i) {
-                    values[i] = None;
-                }
-            }
-        }
-        self.graph
-            .outputs
-            .iter()
-            .map(|&o| values[o].clone().expect("output computed"))
-            .collect()
+        run_graph(self.graph, inputs, |n, args| self.exec(n.id, &n.op, args), |_| {})
     }
 
     fn exec(&self, id: NodeId, op: &OpKind, args: &[&Tensor]) -> Tensor {
-        let p = self.params.get_ref(id);
-        match op {
-            OpKind::Input => unreachable!("inputs handled by run()"),
-            OpKind::Conv(a) => conv::conv2d(args[0], a, &p.w, &p.bias),
-            OpKind::Cbr(a) => {
-                let c = conv::conv2d(args[0], a, &p.w, &p.bias);
-                let b = ew::batchnorm(&c, &p.scale, &p.shift);
-                ew::relu(&b)
-            }
-            OpKind::Cbra(a, pl) | OpKind::Cbrm(a, pl) => {
-                let c = conv::conv2d(args[0], a, &p.w, &p.bias);
-                let b = ew::batchnorm(&c, &p.scale, &p.shift);
-                let r = ew::relu(&b);
-                pool::pool(&r, pl)
-            }
-            OpKind::Pool(a) => pool::pool(args[0], a),
-            OpKind::MatMul(m) => {
-                if m.weighted {
-                    matmul::fc(args[0], m.k, m.n, &p.w, &p.bias)
-                } else {
-                    matmul::matmul(args[0], args[1])
-                }
-            }
-            OpKind::BatchNorm => ew::batchnorm(args[0], &p.scale, &p.shift),
-            OpKind::Bias => ew::bias_fm(args[0], &p.bias),
-            OpKind::Relu => ew::relu(args[0]),
-            OpKind::Sigmoid => ew::sigmoid(args[0]),
-            OpKind::Tanh => ew::tanh(args[0]),
-            OpKind::Gelu => ew::gelu(args[0]),
-            OpKind::Softmax => ew::softmax(args[0]),
-            OpKind::LayerNorm => ew::layernorm(args[0]),
-            OpKind::Add => ew::add(args[0], args[1]),
-            OpKind::Mul => ew::mul(args[0], args[1]),
-            OpKind::Mac => ew::mac(args[0], args[1], args[2]),
-            OpKind::Concat => shape_ops::concat_c(args),
-            OpKind::Slice { begin, end } => shape_ops::slice_c(args[0], *begin, *end),
-            OpKind::Transpose => shape_ops::transpose(args[0]),
-            OpKind::ChannelShuffle { groups } => shape_ops::channel_shuffle(args[0], *groups),
-            OpKind::Upsample { factor } => shape_ops::upsample(args[0], *factor),
-        }
+        exec_node(self.params.get_ref(id), op, args)
     }
 
     /// Convenience: run on deterministic synthetic inputs from `seed`.

@@ -1,12 +1,152 @@
 //! Matrix multiplication / fully-connected execution.
 //!
+//! The core is a packed, register-tiled panel kernel
+//! ([`matmul_panel_raw`]): the right-hand operand is packed one `NR`-column
+//! panel at a time into a contiguous buffer (so the k-loop streams it
+//! sequentially regardless of `n`), and `MR`×`NR` output tiles are
+//! accumulated in registers. Per output element the accumulation runs in
+//! strictly increasing `k` order, so any row/column tiling of the same
+//! product — including the parallel executor's column splits — produces
+//! **bit-identical** results.
+//!
 //! `matmul` is the generic `[m,k]×[k,n]` product; `fc` applies a weight
-//! matrix + bias to an input that may be a feature map (flattened logically,
-//! matching `GraphBuilder::fc`). The k-loop-innermost form here is the
-//! baseline the perf pass later blocks/transposes.
+//! matrix + bias to an input that may be a feature map, multiplying
+//! directly from the borrowed input view (no flattening copy). The
+//! pointwise-conv fast path in `ops::conv` reuses the same panel kernel.
 
 use super::Tensor;
-use crate::graph::Shape;
+
+/// Register-tile width (columns per packed panel).
+pub(crate) const NR: usize = 8;
+/// Register-tile height (rows per micro-kernel step).
+const MR: usize = 4;
+
+/// Packed-panel matmul over columns `[j0, j1)` of `out = a × bmat`.
+///
+/// * `a` is `[m, k]` row-major, `bmat` is `[k, n]` row-major.
+/// * `col_bias` (len `n`, indexed by absolute column) and `row_bias`
+///   (len `m`, indexed by local row) are added when non-empty.
+/// * Writes exactly `out[i*n + j]` for all `i` and `j ∈ [j0, j1)`.
+///
+/// # Safety
+/// `out` must point at a live `m*n` f32 buffer. Concurrent calls on the
+/// same buffer must use disjoint column ranges (or operate on disjoint row
+/// blocks via offset `a`/`out` pointers) — the writes are then disjoint.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn matmul_panel_raw(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    bmat: &[f32],
+    n: usize,
+    j0: usize,
+    j1: usize,
+    col_bias: &[f32],
+    row_bias: &[f32],
+    out: *mut f32,
+) {
+    debug_assert!(a.len() >= m * k, "lhs too small");
+    debug_assert!(bmat.len() >= k * n, "rhs too small");
+    debug_assert!(j0 <= j1 && j1 <= n, "bad column range");
+    debug_assert!(col_bias.is_empty() || col_bias.len() == n);
+    debug_assert!(row_bias.is_empty() || row_bias.len() == m);
+    if m == 0 || j0 == j1 {
+        return;
+    }
+    let mut packed = vec![0.0f32; k * NR];
+    let mut jb = j0;
+    while jb < j1 {
+        let nw = NR.min(j1 - jb);
+        // Pack B[:, jb..jb+nw] contiguously so the k-loop streams it.
+        for kk in 0..k {
+            packed[kk * nw..kk * nw + nw].copy_from_slice(&bmat[kk * n + jb..kk * n + jb + nw]);
+        }
+        if nw == NR {
+            // MR x NR register tile over full-width panels.
+            let mut i = 0;
+            while i + MR <= m {
+                let mut acc = [[0.0f32; NR]; MR];
+                let a0 = &a[i * k..(i + 1) * k];
+                let a1 = &a[(i + 1) * k..(i + 2) * k];
+                let a2 = &a[(i + 2) * k..(i + 3) * k];
+                let a3 = &a[(i + 3) * k..(i + 4) * k];
+                for kk in 0..k {
+                    let pb = &packed[kk * NR..kk * NR + NR];
+                    let (v0, v1, v2, v3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
+                    for jj in 0..NR {
+                        acc[0][jj] += v0 * pb[jj];
+                        acc[1][jj] += v1 * pb[jj];
+                        acc[2][jj] += v2 * pb[jj];
+                        acc[3][jj] += v3 * pb[jj];
+                    }
+                }
+                for (r, row_acc) in acc.iter().enumerate() {
+                    store_row(row_acc, nw, out.add((i + r) * n + jb), jb, i + r, col_bias, row_bias);
+                }
+                i += MR;
+            }
+            while i < m {
+                let mut acc = [0.0f32; NR];
+                let ar = &a[i * k..(i + 1) * k];
+                for kk in 0..k {
+                    let pb = &packed[kk * NR..kk * NR + NR];
+                    let v = ar[kk];
+                    for jj in 0..NR {
+                        acc[jj] += v * pb[jj];
+                    }
+                }
+                store_row(&acc, nw, out.add(i * n + jb), jb, i, col_bias, row_bias);
+                i += 1;
+            }
+        } else {
+            // Narrow trailing panel: plain per-element accumulation (same
+            // per-element k order as the fast path).
+            for i in 0..m {
+                let ar = &a[i * k..(i + 1) * k];
+                for jj in 0..nw {
+                    let mut acc = 0.0f32;
+                    for kk in 0..k {
+                        acc += ar[kk] * packed[kk * nw + jj];
+                    }
+                    if !col_bias.is_empty() {
+                        acc += col_bias[jb + jj];
+                    }
+                    if !row_bias.is_empty() {
+                        acc += row_bias[i];
+                    }
+                    *out.add(i * n + jb + jj) = acc;
+                }
+            }
+        }
+        jb += nw;
+    }
+}
+
+/// Write one accumulated row segment with the bias terms applied.
+///
+/// # Safety
+/// `dst` must point at `nw` writable f32 slots.
+#[inline]
+unsafe fn store_row(
+    acc: &[f32; NR],
+    nw: usize,
+    dst: *mut f32,
+    jb: usize,
+    row: usize,
+    col_bias: &[f32],
+    row_bias: &[f32],
+) {
+    for (jj, &v) in acc.iter().enumerate().take(nw) {
+        let mut v = v;
+        if !col_bias.is_empty() {
+            v += col_bias[jb + jj];
+        }
+        if !row_bias.is_empty() {
+            v += row_bias[row];
+        }
+        *dst.add(jj) = v;
+    }
+}
 
 /// `[m,k] × [k,n] -> [m,n]`.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
@@ -14,59 +154,29 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     let (k2, n) = (b.shape().dims[0], b.shape().dims[1]);
     assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
     let mut out = vec![0.0f32; m * n];
-    for i in 0..m {
-        let arow = &a.data[i * k..(i + 1) * k];
-        let orow = &mut out[i * n..(i + 1) * n];
-        // 4-way k-blocking: one pass over the output row folds four input
-        // scalars, quartering the store/reload traffic on `orow`.
-        let k4 = k / 4 * 4;
-        let mut kk = 0;
-        while kk < k4 {
-            let (a0, a1, a2, a3) = (arow[kk], arow[kk + 1], arow[kk + 2], arow[kk + 3]);
-            let b0 = &b.data[kk * n..(kk + 1) * n];
-            let b1 = &b.data[(kk + 1) * n..(kk + 2) * n];
-            let b2 = &b.data[(kk + 2) * n..(kk + 3) * n];
-            let b3 = &b.data[(kk + 3) * n..(kk + 4) * n];
-            for j in 0..n {
-                orow[j] += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
-            }
-            kk += 4;
-        }
-        for kk in k4..k {
-            let av = arow[kk];
-            let brow = &b.data[kk * n..(kk + 1) * n];
-            for j in 0..n {
-                orow[j] += av * brow[j];
-            }
-        }
-    }
+    // SAFETY: `out` is exactly m*n and the single call covers all columns.
+    unsafe { matmul_panel_raw(&a.data, m, k, &b.data, n, 0, n, &[], &[], out.as_mut_ptr()) };
     Tensor::mat(m, n, out)
 }
 
-/// Fully-connected: flattens `x` to `[rows, k]`, multiplies by `w [k,n]`,
-/// adds bias `[n]` (empty = none).
+/// Fully-connected: views `x` as `[rows, k]` (no copy), multiplies by
+/// `w [k,n]`, adds bias `[n]` (empty = none).
 pub fn fc(x: &Tensor, k: usize, n: usize, w: &[f32], bias: &[f32]) -> Tensor {
     let numel = x.shape().numel();
     assert_eq!(numel % k, 0, "fc input {numel} not divisible by k {k}");
     let rows = numel / k;
     assert_eq!(w.len(), k * n, "fc weight size");
     assert!(bias.is_empty() || bias.len() == n, "fc bias size");
-    let a = Tensor::mat(rows, k, x.data.clone());
-    let wt = Tensor::new(crate::graph::TensorDesc::plain(Shape::mat(k, n)), w.to_vec());
-    let mut out = matmul(&a, &wt);
-    if !bias.is_empty() {
-        for r in 0..rows {
-            for j in 0..n {
-                out.data[r * n + j] += bias[j];
-            }
-        }
-    }
-    out
+    let mut out = vec![0.0f32; rows * n];
+    // SAFETY: `out` is exactly rows*n and the single call covers all columns.
+    unsafe { matmul_panel_raw(&x.data, rows, k, w, n, 0, n, bias, &[], out.as_mut_ptr()) };
+    Tensor::mat(rows, n, out)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
 
     #[test]
     fn matmul_2x2() {
@@ -86,7 +196,7 @@ mod tests {
 
     #[test]
     fn fc_flattens_and_biases() {
-        let x = Tensor::fm(1, 2, 1, 2, vec![1., 2., 3., 4.]); // flattens to [1,4]
+        let x = Tensor::fm(1, 2, 1, 2, vec![1., 2., 3., 4.]); // views as [1,4]
         let w = vec![1., 0., 1., 0., 1., 0., 1., 0.]; // [4,2]
         let y = fc(&x, 4, 2, &w, &[0.5, -0.5]);
         assert_eq!(y.data, vec![10.5, -0.5]);
@@ -98,5 +208,65 @@ mod tests {
         let a = Tensor::mat(1, 2, vec![0.; 2]);
         let b = Tensor::mat(3, 1, vec![0.; 3]);
         matmul(&a, &b);
+    }
+
+    #[test]
+    fn packed_kernel_matches_k_ordered_reference() {
+        // The reference accumulates in the same strictly-increasing-k order
+        // per element, so the packed kernel must match bit-for-bit.
+        let mut rng = Rng::new(21);
+        for (m, k, n) in [(1, 5, 3), (4, 8, 8), (7, 33, 19), (13, 64, 40)] {
+            let a = Tensor::mat(m, k, rng.vec_uniform(m * k));
+            let b = Tensor::mat(k, n, rng.vec_uniform(k * n));
+            let got = matmul(&a, &b);
+            let mut want = vec![0.0f32; m * n];
+            for i in 0..m {
+                for j in 0..n {
+                    let mut acc = 0.0f32;
+                    for kk in 0..k {
+                        acc += a.data[i * k + kk] * b.data[kk * n + j];
+                    }
+                    want[i * n + j] = acc;
+                }
+            }
+            assert_eq!(got.data, want, "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn column_split_panels_match_full_product() {
+        // Splitting the column range (as the parallel executor does) must
+        // be bit-identical to the single full-range call.
+        let mut rng = Rng::new(22);
+        let (m, k, n) = (9, 31, 29);
+        let a = Tensor::mat(m, k, rng.vec_uniform(m * k));
+        let b = Tensor::mat(k, n, rng.vec_uniform(k * n));
+        let bias: Vec<f32> = rng.vec_uniform(n);
+        let full = {
+            let mut out = vec![0.0f32; m * n];
+            unsafe {
+                matmul_panel_raw(&a.data, m, k, &b.data, n, 0, n, &bias, &[], out.as_mut_ptr())
+            };
+            out
+        };
+        let mut split = vec![0.0f32; m * n];
+        for (j0, j1) in [(0usize, 5usize), (5, 17), (17, 29)] {
+            unsafe {
+                matmul_panel_raw(&a.data, m, k, &b.data, n, j0, j1, &bias, &[], split.as_mut_ptr())
+            };
+        }
+        assert_eq!(full, split);
+    }
+
+    #[test]
+    fn fc_on_large_row_counts() {
+        // rows not a multiple of MR exercises the remainder path.
+        let mut rng = Rng::new(23);
+        let x = Tensor::mat(10, 12, rng.vec_uniform(120));
+        let w: Vec<f32> = rng.vec_uniform(12 * 7);
+        let y = fc(&x, 12, 7, &w, &[]);
+        let wt = Tensor::mat(12, 7, w.clone());
+        let want = matmul(&x, &wt);
+        assert_eq!(y.data, want.data);
     }
 }

@@ -9,15 +9,18 @@
 //! never changes results, and what the serving engine falls back to for
 //! models without AOT artifacts.
 
+pub mod arena;
 pub mod conv;
 pub mod elementwise;
 pub mod interp;
 pub mod matmul;
+pub mod par_exec;
 pub mod params;
 pub mod pool;
 pub mod shape_ops;
 
 pub use interp::Interpreter;
+pub use par_exec::ParInterpreter;
 
 use crate::graph::{Shape, TensorDesc};
 

@@ -1,0 +1,628 @@
+//! Parallel plan executor — runs a graph by **executing** the optimizer's
+//! [`ExecutionPlan`] instead of just pricing it.
+//!
+//! The serial [`Interpreter`](super::Interpreter) walks nodes one by one on
+//! one core; the [`ParInterpreter`] consumes the DOS plan (paper §4.2) and
+//! fans each node's `outC`/`inH` feature-map partition out across a fixed
+//! [`WorkerPool`] — one thread per configured DSP unit, clamped to the
+//! host's parallelism. Workers write disjoint output-channel/row slices of
+//! a shared output buffer; non-K parameter splits (`SplitDim::C`) run as
+//! per-chunk partial convolutions followed by a sum reduction, exactly as
+//! the paper's §4.2.2 describes for reduction-bearing splits.
+//!
+//! Determinism: every partitioned kernel applies the *same per-element
+//! float operations in the same order* as its serial counterpart (the tile
+//! routines in `ops::conv` / `ops::matmul` are shared between both paths),
+//! so for K-free splits the parallel output is **bit-identical** to the
+//! serial interpreter for any worker count — the property
+//! `tests/equivalence.rs` asserts across the model zoo. Only the partial-
+//! sum reduction path reorders additions (and is therefore equal within
+//! float tolerance, not bitwise).
+//!
+//! Intermediate buffers come from a per-engine [`BufferArena`], so steady-
+//! state inference recycles allocations instead of hitting the allocator
+//! once per node.
+
+use std::sync::{Arc, Mutex};
+
+use super::arena::BufferArena;
+use super::elementwise as ew;
+use super::interp::{exec_node, run_graph, synthetic_inputs};
+use super::params::{NodeParams, ParamStore};
+use super::{conv, matmul, pool as pooling, Tensor};
+use crate::graph::{ConvAttrs, Graph, Node, OpKind, Shape, TensorDesc};
+use crate::hw::DeviceModel;
+use crate::opt::{dos, ExecutionPlan, NodePlan, OptLevel, PartitionDim};
+use crate::runtime::pool::{ScopedJob, WorkerPool};
+
+/// Below this many MAC-equivalents a node stays on the serial path —
+/// fan-out/sync overhead dwarfs the work. One constant shared with the
+/// planner (`opt::dos`) so the two gates stay in lockstep.
+pub use crate::opt::dos::MIN_PARALLEL_ELEMS;
+
+/// Raw output pointer that may cross into worker threads. Tasks built by
+/// this module only ever write disjoint regions behind it.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+// SAFETY: the pointer is only dereferenced on disjoint ranges while the
+// owning buffer is kept alive by the blocking `WorkerPool::run` call.
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Host threads actually available.
+fn host_parallelism() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Clamp a requested worker count to `[1, available_parallelism]`.
+pub fn clamp_workers(requested: usize) -> usize {
+    requested.max(1).min(host_parallelism())
+}
+
+/// Near-even `(start, end)` chunks of `0..total`, at most `ways` of them.
+fn chunks(total: usize, ways: usize) -> Vec<(usize, usize)> {
+    if total == 0 {
+        return Vec::new();
+    }
+    let ways = ways.clamp(1, total);
+    let share = crate::util::ceil_div(total, ways);
+    let mut v = Vec::with_capacity(ways);
+    let mut s = 0;
+    while s < total {
+        let e = (s + share).min(total);
+        v.push((s, e));
+        s = e;
+    }
+    v
+}
+
+/// The parallel interpreter: a graph, its deterministic parameters, the
+/// DOS execution plan, a worker pool sized to the device's units, and a
+/// buffer arena that persists across inferences.
+pub struct ParInterpreter {
+    graph: Arc<Graph>,
+    params: ParamStore,
+    plan: ExecutionPlan,
+    pool: Option<WorkerPool>,
+    workers: usize,
+    arena: Mutex<BufferArena>,
+}
+
+impl ParInterpreter {
+    /// Build an executor for `graph` on `device`, with `workers` threads
+    /// emulating the DSP units (clamped to the host's parallelism; a
+    /// 1-worker pool degenerates to the serial path). The DOS plan is
+    /// computed with [`dos::plan_graph`] at `HoOnly` level — the graph
+    /// itself is executed as given.
+    pub fn new(graph: Arc<Graph>, device: &DeviceModel, workers: usize) -> ParInterpreter {
+        let params = ParamStore::for_graph(&graph);
+        Self::with_params(graph, params, device, workers)
+    }
+
+    /// As [`ParInterpreter::new`] with an externally provided parameter
+    /// store (for differential testing against a serial interpreter that
+    /// must see identical weights).
+    pub fn with_params(
+        graph: Arc<Graph>,
+        params: ParamStore,
+        device: &DeviceModel,
+        workers: usize,
+    ) -> ParInterpreter {
+        let workers = clamp_workers(workers);
+        let plan = dos::plan_graph(&graph, device, OptLevel::HoOnly);
+        let pool = if workers > 1 { Some(WorkerPool::new(workers)) } else { None };
+        ParInterpreter { graph, params, plan, pool, workers, arena: Mutex::new(BufferArena::new()) }
+    }
+
+    /// Effective worker count after clamping (1 = serial).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The executed graph.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// The execution plan being realized.
+    pub fn plan(&self) -> &ExecutionPlan {
+        &self.plan
+    }
+
+    /// Arena counters `(reused, allocated)` — how many intermediate
+    /// buffers were recycled vs freshly allocated so far.
+    pub fn arena_stats(&self) -> (usize, usize) {
+        let a = self.arena.lock().expect("arena lock");
+        (a.reused, a.allocated)
+    }
+
+    fn take_zeroed(&self, n: usize) -> Vec<f32> {
+        self.arena.lock().expect("arena lock").take_zeroed(n)
+    }
+
+    fn recycle(&self, buf: Vec<f32>) {
+        self.arena.lock().expect("arena lock").recycle(buf);
+    }
+
+    /// Run the graph on the given inputs (one tensor per `OpKind::Input`
+    /// node, in graph order). Returns the output tensors in `outputs`
+    /// order. Shares `Interpreter::run`'s driver loop, with dead
+    /// intermediate values recycled into the arena.
+    pub fn run(&self, inputs: &[Tensor]) -> Vec<Tensor> {
+        run_graph(
+            &self.graph,
+            inputs,
+            |n, args| self.exec(n, args),
+            |dead| self.recycle(dead.data),
+        )
+    }
+
+    /// Convenience: run on deterministic synthetic inputs from `seed`.
+    pub fn run_synthetic(&self, seed: u64) -> Vec<Tensor> {
+        self.run(&synthetic_inputs(&self.graph, seed))
+    }
+
+    /// Execute one node, parallel when the plan says so and the shape
+    /// qualifies, serial otherwise.
+    fn exec(&self, node: &Node, args: &[&Tensor]) -> Tensor {
+        let p = self.params.get_ref(node.id);
+        if self.pool.is_none() {
+            return exec_node(p, &node.op, args);
+        }
+        let nplan = self.plan.node(node.id);
+        if nplan.units <= 1 || node.macs() < MIN_PARALLEL_ELEMS as u64 {
+            return exec_node(p, &node.op, args);
+        }
+        match &node.op {
+            OpKind::Conv(a) => match self.par_conv(a, p, args[0], nplan) {
+                Some(t) => t,
+                None => exec_node(p, &node.op, args),
+            },
+            OpKind::Cbr(a) => match self.par_conv(a, p, args[0], nplan) {
+                Some(mut t) => {
+                    self.par_bn_relu(&mut t, &p.scale, &p.shift);
+                    t
+                }
+                None => exec_node(p, &node.op, args),
+            },
+            OpKind::Cbra(a, pl) | OpKind::Cbrm(a, pl) => {
+                match self.par_conv(a, p, args[0], nplan) {
+                    Some(mut t) => {
+                        self.par_bn_relu(&mut t, &p.scale, &p.shift);
+                        let out = pooling::pool(&t, pl);
+                        self.recycle(t.data);
+                        out
+                    }
+                    None => exec_node(p, &node.op, args),
+                }
+            }
+            OpKind::MatMul(m) => {
+                if m.weighted {
+                    self.par_fc(args[0], m.k, m.n, &p.w, &p.bias)
+                } else {
+                    self.par_matmul(args[0], args[1])
+                }
+            }
+            OpKind::Relu => self.par_map(args[0], ew::relu1),
+            OpKind::Sigmoid => self.par_map(args[0], ew::sigmoid1),
+            OpKind::Tanh => self.par_map(args[0], ew::tanh1),
+            OpKind::Gelu => self.par_map(args[0], ew::gelu1),
+            OpKind::Add => self.par_zip(args[0], args[1], |x, y| x + y),
+            OpKind::Mul => self.par_zip(args[0], args[1], |x, y| x * y),
+            OpKind::Mac => self.par_mac(args[0], args[1], args[2]),
+            OpKind::BatchNorm if args[0].shape().is_fm() => {
+                self.par_channel_affine(args[0], &p.scale, &p.shift)
+            }
+            OpKind::Bias if args[0].shape().is_fm() => {
+                self.par_channel_affine(args[0], &[], &p.bias)
+            }
+            OpKind::Softmax => self.par_rows(args[0], ew::softmax_row),
+            OpKind::LayerNorm => self.par_rows(args[0], ew::layernorm_row),
+            // Pooling, shape ops and anything else: serial reference path.
+            _ => exec_node(p, &node.op, args),
+        }
+    }
+
+    /// Effective (outC, inH) partition ways for a conv node: the plan's
+    /// split, re-fitted to the pool size.
+    fn conv_ways(&self, nplan: &NodePlan, out_c: usize, oh: usize) -> (usize, usize) {
+        let mut wc = 1usize;
+        let mut wh = 1usize;
+        for (dim, ways) in &nplan.partition {
+            match dim {
+                PartitionDim::OutC => wc = *ways,
+                PartitionDim::InH => wh = *ways,
+                PartitionDim::InW => {}
+            }
+        }
+        let wmax = self.workers;
+        wc = wc.clamp(1, wmax.min(out_c.max(1)));
+        wh = wh.clamp(1, (wmax / wc).max(1)).min(oh.max(1));
+        (wc, wh)
+    }
+
+    /// Parallel convolution (+bias) for a batch-1 input. Returns `None`
+    /// when the shape must take the serial path.
+    fn par_conv(
+        &self,
+        attrs: &ConvAttrs,
+        p: &NodeParams,
+        x: &Tensor,
+        nplan: &NodePlan,
+    ) -> Option<Tensor> {
+        let s = x.shape();
+        if s.n() != 1 {
+            return None;
+        }
+        let a = *attrs;
+        let (oh, ow) = a.out_hw(s.h(), s.w());
+        let needs_reduction = nplan.param_split.map(|ps| ps.needs_reduction).unwrap_or(false);
+        let pointwise = conv::is_pointwise_fast_path(&a, 1);
+        if needs_reduction {
+            if pointwise {
+                return None; // rare; the serial packed path handles it
+            }
+            return Some(self.conv_ic_reduction(&a, p, x, oh, ow));
+        }
+        let pool = self.pool.as_ref()?;
+        let numel = a.out_c * oh * ow;
+        let mut data = self.take_zeroed(numel);
+        let ptr = SendPtr(data.as_mut_ptr());
+        let w = p.w.as_slice();
+        let bias = p.bias.as_slice();
+        let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+        if pointwise {
+            for (oc0, oc1) in chunks(a.out_c, self.workers) {
+                jobs.push(Box::new(move || {
+                    // SAFETY: disjoint oc ranges of the same buffer.
+                    unsafe { conv::pointwise_tile_raw(x, &a, w, bias, oc0, oc1, ptr.0) };
+                }));
+            }
+        } else {
+            let (wc, wh) = self.conv_ways(nplan, a.out_c, oh);
+            let cpg_in = a.in_c / a.groups;
+            for (oc0, oc1) in chunks(a.out_c, wc) {
+                for (oy0, oy1) in chunks(oh, wh) {
+                    jobs.push(Box::new(move || {
+                        // SAFETY: disjoint (oc, oy) tiles of the same buffer.
+                        unsafe {
+                            conv::conv2d_tile_raw(
+                                x, &a, w, bias, 0, oc0, oc1, oy0, oy1, 0, cpg_in, oh, ow, ptr.0,
+                            )
+                        };
+                    }));
+                }
+            }
+        }
+        pool.run(jobs);
+        Some(Tensor::new(TensorDesc::fm(1, a.out_c, oh, ow), data))
+    }
+
+    /// Partial-sum convolution for a `SplitDim::C` parameter split: each
+    /// worker convolves an input-channel chunk into a private buffer
+    /// (chunk 0 carries the bias), then the partials are sum-reduced.
+    /// Float additions are reordered, so this path is tolerance-equal (not
+    /// bit-equal) to the serial one.
+    fn conv_ic_reduction(&self, a: &ConvAttrs, p: &NodeParams, x: &Tensor, oh: usize, ow: usize) -> Tensor {
+        let a = *a;
+        let cpg_in = a.in_c / a.groups;
+        let numel = a.out_c * oh * ow;
+        let ic_chunks = chunks(cpg_in, self.workers);
+        if ic_chunks.len() <= 1 {
+            return conv::conv2d(x, &a, &p.w, &p.bias);
+        }
+        let pool = self.pool.as_ref().expect("reduction path requires a pool");
+        let mut partials: Vec<Vec<f32>> = (0..ic_chunks.len()).map(|_| self.take_zeroed(numel)).collect();
+        let ptrs: Vec<SendPtr> = partials.iter_mut().map(|b| SendPtr(b.as_mut_ptr())).collect();
+        let w = p.w.as_slice();
+        let bias = p.bias.as_slice();
+        let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+        for (i, &(ic0, ic1)) in ic_chunks.iter().enumerate() {
+            let ptr = ptrs[i];
+            jobs.push(Box::new(move || {
+                // SAFETY: each job owns a whole private partial buffer.
+                unsafe {
+                    conv::conv2d_tile_raw(
+                        x, &a, w, bias, 0, 0, a.out_c, 0, oh, ic0, ic1, oh, ow, ptr.0,
+                    )
+                };
+            }));
+        }
+        pool.run(jobs);
+        let mut acc = partials.remove(0);
+        for part in partials {
+            for (av, pv) in acc.iter_mut().zip(&part) {
+                *av += *pv;
+            }
+            self.recycle(part);
+        }
+        Tensor::new(TensorDesc::fm(1, a.out_c, oh, ow), acc)
+    }
+
+    /// In-place fused Bn+ReLU over channel chunks (batch-1 feature map).
+    /// `scale`/`shift` must hold one entry per channel (the CBR family
+    /// always materializes both).
+    fn par_bn_relu(&self, t: &mut Tensor, scale: &[f32], shift: &[f32]) {
+        debug_assert_eq!(scale.len(), t.shape().c());
+        debug_assert_eq!(shift.len(), t.shape().c());
+        let (c, h, w) = (t.shape().c(), t.shape().h(), t.shape().w());
+        let hw = h * w;
+        let pool = match &self.pool {
+            Some(p) => p,
+            None => unreachable!("par_bn_relu only called on the parallel path"),
+        };
+        let ptr = SendPtr(t.data.as_mut_ptr());
+        let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+        for (c0, c1) in chunks(c, self.workers) {
+            jobs.push(Box::new(move || {
+                // SAFETY: disjoint channel ranges of the same buffer.
+                let seg = unsafe {
+                    std::slice::from_raw_parts_mut(ptr.0.add(c0 * hw), (c1 - c0) * hw)
+                };
+                for (off, v) in seg.iter_mut().enumerate() {
+                    let ch = c0 + off / hw;
+                    *v = ew::relu1(*v * scale[ch] + shift[ch]);
+                }
+            }));
+        }
+        pool.run(jobs);
+    }
+
+    /// Per-channel affine `x*scale + shift` (standalone BatchNorm / Bias on
+    /// a feature map), channel-chunked. Empty `scale` = unit gain.
+    fn par_channel_affine(&self, x: &Tensor, scale: &[f32], shift: &[f32]) -> Tensor {
+        let s = x.shape();
+        let (n, c, h, w) = (s.n(), s.c(), s.h(), s.w());
+        let hw = h * w;
+        let pool = self.pool.as_ref().expect("parallel path");
+        let mut data = self.take_zeroed(x.data.len());
+        let ptr = SendPtr(data.as_mut_ptr());
+        let src = x.data.as_slice();
+        let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+        let rows = n * c;
+        for (r0, r1) in chunks(rows, self.workers) {
+            jobs.push(Box::new(move || {
+                // SAFETY: disjoint row (batch*channel) ranges.
+                let seg = unsafe {
+                    std::slice::from_raw_parts_mut(ptr.0.add(r0 * hw), (r1 - r0) * hw)
+                };
+                for (off, v) in seg.iter_mut().enumerate() {
+                    let ch = ((r0 + off / hw) % c).min(c - 1);
+                    let g = if scale.is_empty() { 1.0 } else { scale[ch] };
+                    *v = src[r0 * hw + off] * g + shift[ch];
+                }
+            }));
+        }
+        pool.run(jobs);
+        Tensor::new(x.desc.clone(), data)
+    }
+
+    /// Weighted fully-connected with the column range split across the
+    /// pool, all segments computed by the shared packed panel kernel.
+    fn par_fc(&self, x: &Tensor, k: usize, n: usize, w: &[f32], bias: &[f32]) -> Tensor {
+        let numel = x.shape().numel();
+        assert_eq!(numel % k, 0, "fc input {numel} not divisible by k {k}");
+        let rows = numel / k;
+        assert_eq!(w.len(), k * n, "fc weight size");
+        assert!(bias.is_empty() || bias.len() == n, "fc bias size");
+        let pool = self.pool.as_ref().expect("parallel path");
+        let mut out = self.take_zeroed(rows * n);
+        let ptr = SendPtr(out.as_mut_ptr());
+        let src = x.data.as_slice();
+        let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+        for (j0, j1) in chunks(n, self.workers) {
+            jobs.push(Box::new(move || {
+                // SAFETY: disjoint column ranges of the same buffer.
+                unsafe { matmul::matmul_panel_raw(src, rows, k, w, n, j0, j1, bias, &[], ptr.0) };
+            }));
+        }
+        pool.run(jobs);
+        Tensor::new(TensorDesc::plain(Shape::mat(rows, n)), out)
+    }
+
+    /// Two-operand matmul with the column range split across the pool.
+    fn par_matmul(&self, a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.shape().dims[0], a.shape().dims[1]);
+        let (k2, n) = (b.shape().dims[0], b.shape().dims[1]);
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        let pool = self.pool.as_ref().expect("parallel path");
+        let mut out = self.take_zeroed(m * n);
+        let ptr = SendPtr(out.as_mut_ptr());
+        let (lhs, rhs) = (a.data.as_slice(), b.data.as_slice());
+        let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+        for (j0, j1) in chunks(n, self.workers) {
+            jobs.push(Box::new(move || {
+                // SAFETY: disjoint column ranges of the same buffer.
+                unsafe { matmul::matmul_panel_raw(lhs, m, k, rhs, n, j0, j1, &[], &[], ptr.0) };
+            }));
+        }
+        pool.run(jobs);
+        Tensor::new(TensorDesc::plain(Shape::mat(m, n)), out)
+    }
+
+    /// Chunked element-wise map.
+    fn par_map(&self, x: &Tensor, f: impl Fn(f32) -> f32 + Send + Sync + Copy) -> Tensor {
+        let pool = self.pool.as_ref().expect("parallel path");
+        let n = x.data.len();
+        let mut out = self.take_zeroed(n);
+        let ptr = SendPtr(out.as_mut_ptr());
+        let src = x.data.as_slice();
+        let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+        for (s, e) in chunks(n, self.workers) {
+            jobs.push(Box::new(move || {
+                // SAFETY: disjoint element ranges.
+                let seg = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(s), e - s) };
+                for (v, &xv) in seg.iter_mut().zip(&src[s..e]) {
+                    *v = f(xv);
+                }
+            }));
+        }
+        pool.run(jobs);
+        Tensor::new(x.desc.clone(), out)
+    }
+
+    /// Chunked element-wise zip of two same-shape tensors.
+    fn par_zip(&self, a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32 + Send + Sync + Copy) -> Tensor {
+        assert_eq!(a.shape(), b.shape(), "elementwise shape mismatch");
+        let pool = self.pool.as_ref().expect("parallel path");
+        let n = a.data.len();
+        let mut out = self.take_zeroed(n);
+        let ptr = SendPtr(out.as_mut_ptr());
+        let (sa, sb) = (a.data.as_slice(), b.data.as_slice());
+        let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+        for (s, e) in chunks(n, self.workers) {
+            jobs.push(Box::new(move || {
+                // SAFETY: disjoint element ranges.
+                let seg = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(s), e - s) };
+                for (i, v) in seg.iter_mut().enumerate() {
+                    *v = f(sa[s + i], sb[s + i]);
+                }
+            }));
+        }
+        pool.run(jobs);
+        Tensor::new(a.desc.clone(), out)
+    }
+
+    /// Chunked element-wise multiply-accumulate `a*b + c`.
+    fn par_mac(&self, a: &Tensor, b: &Tensor, c: &Tensor) -> Tensor {
+        assert_eq!(a.shape(), b.shape());
+        assert_eq!(a.shape(), c.shape());
+        let pool = self.pool.as_ref().expect("parallel path");
+        let n = a.data.len();
+        let mut out = self.take_zeroed(n);
+        let ptr = SendPtr(out.as_mut_ptr());
+        let (sa, sb, sc) = (a.data.as_slice(), b.data.as_slice(), c.data.as_slice());
+        let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+        for (s, e) in chunks(n, self.workers) {
+            jobs.push(Box::new(move || {
+                // SAFETY: disjoint element ranges.
+                let seg = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(s), e - s) };
+                for (i, v) in seg.iter_mut().enumerate() {
+                    *v = sa[s + i] * sb[s + i] + sc[s + i];
+                }
+            }));
+        }
+        pool.run(jobs);
+        Tensor::new(a.desc.clone(), out)
+    }
+
+    /// Row-chunked last-axis transform (Softmax / LayerNorm): copy the
+    /// input, then each worker rewrites its own row range in place with
+    /// the same per-row routine the serial operator uses.
+    fn par_rows(&self, x: &Tensor, row_fn: impl Fn(&mut [f32]) + Send + Sync + Copy) -> Tensor {
+        let dims = &x.shape().dims;
+        let last = *dims.last().expect("row op on scalar");
+        let rows = x.shape().numel() / last;
+        let pool = self.pool.as_ref().expect("parallel path");
+        let mut out = self.arena.lock().expect("arena lock").take_copy(&x.data);
+        let ptr = SendPtr(out.as_mut_ptr());
+        let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+        for (r0, r1) in chunks(rows, self.workers) {
+            jobs.push(Box::new(move || {
+                // SAFETY: disjoint row ranges.
+                let seg = unsafe {
+                    std::slice::from_raw_parts_mut(ptr.0.add(r0 * last), (r1 - r0) * last)
+                };
+                for row in seg.chunks_mut(last) {
+                    row_fn(row);
+                }
+            }));
+        }
+        pool.run(jobs);
+        Tensor::new(x.desc.clone(), out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, Shape};
+    use crate::hw::presets;
+    use crate::ops::Interpreter;
+
+    fn block_graph() -> Graph {
+        let mut b = GraphBuilder::new("par_block");
+        let x = b.input("x", Shape::nchw(1, 8, 16, 16));
+        let c1 = b.conv_bn_relu("c1", x, 32, 3, 1, 1);
+        let dw = b.dw_bn_relu("dw", c1, 3, 1, 1);
+        let pw = b.conv_bn_relu("pw", dw, 64, 1, 1, 0);
+        let pl = b.avgpool("p", pw, 2, 2);
+        let fc = b.fc("fc", pl, 10);
+        let sm = b.softmax("sm", fc);
+        b.output(sm);
+        b.finish()
+    }
+
+    fn assert_bitwise_equal(g: Graph, seed: u64) {
+        let serial = Interpreter::new(&g).run_synthetic(seed);
+        let d = presets::tms320c6678();
+        let ga = Arc::new(g);
+        for workers in [1usize, 2, 4] {
+            let par = ParInterpreter::new(ga.clone(), &d, workers);
+            let out = par.run_synthetic(seed);
+            assert_eq!(serial.len(), out.len());
+            for (a, b) in serial.iter().zip(&out) {
+                assert_eq!(a.data, b.data, "workers={workers} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn cnn_block_matches_serial_bitwise() {
+        assert_bitwise_equal(block_graph(), 11);
+    }
+
+    #[test]
+    fn elementwise_and_matmul_match_serial_bitwise() {
+        let mut b = GraphBuilder::new("ew");
+        let q = b.input("q", Shape::mat(64, 64));
+        let kk = b.input("k", Shape::mat(64, 64));
+        let s = b.matmul("s", q, kk);
+        let sm = b.softmax("sm", s);
+        let ln = b.layernorm("ln", sm);
+        let gl = b.gelu("g", ln);
+        let ad = b.add("a", gl, sm);
+        b.output(ad);
+        assert_bitwise_equal(b.finish(), 12);
+    }
+
+    #[test]
+    fn one_worker_is_serial() {
+        let g = Arc::new(block_graph());
+        let d = presets::tms320c6678();
+        let p = ParInterpreter::new(g, &d, 1);
+        assert_eq!(p.workers(), 1);
+    }
+
+    #[test]
+    fn worker_count_clamps_to_host() {
+        let g = Arc::new(block_graph());
+        let d = presets::tms320c6678();
+        let p = ParInterpreter::new(g, &d, 100_000);
+        assert!(p.workers() <= super::host_parallelism());
+        assert!(p.workers() >= 1);
+    }
+
+    #[test]
+    fn arena_recycles_across_inferences() {
+        let g = Arc::new(block_graph());
+        let d = presets::tms320c6678();
+        let p = ParInterpreter::new(g, &d, 2);
+        let _ = p.run_synthetic(1);
+        let (_, allocated_first) = p.arena_stats();
+        let _ = p.run_synthetic(2);
+        let (reused, allocated) = p.arena_stats();
+        assert!(
+            reused > 0 && allocated == allocated_first,
+            "second inference must be served from the arena ({reused} reused, \
+             {allocated} vs {allocated_first} allocated)"
+        );
+    }
+
+    #[test]
+    fn chunks_cover_range_evenly() {
+        assert_eq!(chunks(10, 3), vec![(0, 4), (4, 8), (8, 10)]);
+        assert_eq!(chunks(4, 8), vec![(0, 1), (1, 2), (2, 3), (3, 4)]);
+        assert!(chunks(0, 4).is_empty());
+    }
+}

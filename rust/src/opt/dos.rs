@@ -28,8 +28,10 @@ fn balance_of(dim: usize, ways: usize) -> f64 {
 }
 
 /// Below this output size an operator stays serial — fan-out/sync overhead
-/// dwarfs the work (tuned against the op_overhead of the presets).
-const MIN_PARALLEL_ELEMS: usize = 4096;
+/// dwarfs the work (tuned against the op_overhead of the presets). The
+/// parallel executor (`ops::par_exec`) gates on the same constant so the
+/// planner and the runtime agree about which nodes parallelize.
+pub const MIN_PARALLEL_ELEMS: usize = 4096;
 
 /// Plan one node under DOS.
 pub fn plan_node_dos(_g: &Graph, node: &Node, device: &DeviceModel, link_aware: bool) -> NodePlan {

@@ -1,10 +1,16 @@
 //! The inference engine driven by the serving coordinator.
 //!
-//! Two interchangeable backends:
+//! Three interchangeable backends:
 //! * **Pjrt** — an AOT artifact (`vanilla`/`linked` model variants) running
-//!   through the PJRT CPU client; the production path.
-//! * **Interp** — the in-crate numeric interpreter over a zoo graph; used
-//!   for models without artifacts and for differential testing.
+//!   through the PJRT CPU client; the production path (needs the `xla`
+//!   feature).
+//! * **Interp** — the serial in-crate numeric interpreter over a zoo
+//!   graph; used for models without artifacts and for differential
+//!   testing.
+//! * **ParInterp** — the parallel plan executor: the DOS
+//!   [`ExecutionPlan`](crate::opt::ExecutionPlan) realized on a worker
+//!   pool, with a per-engine buffer arena that persists across
+//!   inferences.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -13,15 +19,18 @@ use anyhow::Result;
 
 use super::pjrt::PjrtRuntime;
 use crate::graph::{Graph, Shape};
-use crate::ops::{Interpreter, Tensor};
+use crate::hw::DeviceModel;
+use crate::ops::{Interpreter, ParInterpreter, Tensor};
 
 /// Which backend an engine uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EngineKind {
     /// AOT artifact through PJRT.
     Pjrt,
-    /// In-crate interpreter.
+    /// In-crate serial interpreter.
     Interp,
+    /// Parallel plan executor (DOS split on a worker pool).
+    ParInterp,
 }
 
 /// An inference engine bound to one model.
@@ -33,6 +42,7 @@ pub struct Engine {
 enum Inner {
     Pjrt { rt: Arc<PjrtRuntime>, variant: String },
     Interp { graph: Arc<Graph> },
+    ParInterp { interp: ParInterpreter },
 }
 
 /// One inference result with its service time.
@@ -57,10 +67,18 @@ impl Engine {
         })
     }
 
-    /// Engine interpreting a zoo graph.
+    /// Engine interpreting a zoo graph serially.
     pub fn interp(graph: Arc<Graph>) -> Engine {
         let name = format!("interp:{}", graph.name);
         Engine { inner: Inner::Interp { graph }, name }
+    }
+
+    /// Engine executing a zoo graph's DOS plan on `workers` threads (one
+    /// per emulated DSP unit of `device`, clamped to the host).
+    pub fn par_interp(graph: Arc<Graph>, device: &DeviceModel, workers: usize) -> Engine {
+        let interp = ParInterpreter::new(graph, device, workers);
+        let name = format!("par-interp:{}x{}", interp.graph().name, interp.workers());
+        Engine { inner: Inner::ParInterp { interp }, name }
     }
 
     /// Engine display name.
@@ -73,6 +91,7 @@ impl Engine {
         match self.inner {
             Inner::Pjrt { .. } => EngineKind::Pjrt,
             Inner::Interp { .. } => EngineKind::Interp,
+            Inner::ParInterp { .. } => EngineKind::ParInterp,
         }
     }
 
@@ -87,6 +106,10 @@ impl Engine {
                 .iter()
                 .map(|&i| graph.node(i).out.shape.clone())
                 .collect(),
+            Inner::ParInterp { interp } => {
+                let g = interp.graph();
+                g.input_ids().iter().map(|&i| g.node(i).out.shape.clone()).collect()
+            }
         }
     }
 
@@ -96,6 +119,7 @@ impl Engine {
         let outputs = match &self.inner {
             Inner::Pjrt { rt, variant } => rt.execute(variant, inputs)?,
             Inner::Interp { graph } => Interpreter::new(graph).run(inputs),
+            Inner::ParInterp { interp } => interp.run(inputs),
         };
         Ok(InferOutput { outputs, exec_s: start.elapsed().as_secs_f64() })
     }
@@ -105,6 +129,7 @@ impl Engine {
 mod tests {
     use super::*;
     use crate::graph::GraphBuilder;
+    use crate::hw::presets;
 
     fn tiny_graph() -> Graph {
         let mut b = GraphBuilder::new("tiny");
@@ -129,5 +154,27 @@ mod tests {
     fn interp_engine_name() {
         let e = Engine::interp(Arc::new(tiny_graph()));
         assert_eq!(e.name(), "interp:tiny");
+    }
+
+    #[test]
+    fn par_interp_engine_matches_serial() {
+        let g = Arc::new({
+            let mut b = GraphBuilder::new("par_tiny");
+            let x = b.input("x", Shape::nchw(1, 4, 12, 12));
+            let c = b.conv_bn_relu("c", x, 16, 3, 1, 1);
+            let p = b.avgpool("p", c, 2, 2);
+            let f = b.fc("fc", p, 5);
+            b.output(f);
+            b.finish()
+        });
+        let d = presets::tms320c6678();
+        let serial = Engine::interp(g.clone());
+        let par = Engine::par_interp(g.clone(), &d, 4);
+        assert_eq!(par.kind(), EngineKind::ParInterp);
+        assert_eq!(par.input_shapes(), serial.input_shapes());
+        let inputs = crate::ops::interp::synthetic_inputs(&g, 9);
+        let a = serial.infer(&inputs).unwrap();
+        let b = par.infer(&inputs).unwrap();
+        assert_eq!(a.outputs[0].data, b.outputs[0].data);
     }
 }

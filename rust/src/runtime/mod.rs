@@ -1,13 +1,18 @@
 //! The Xenos runtime: loads AOT-compiled HLO artifacts through PJRT and
 //! executes inference — Python never runs on this path.
 //!
-//! * [`pjrt`] — the `xla`-crate bridge: HLO text → compile → execute.
-//! * [`engine`] — the inference engine the serving coordinator drives:
-//!   either a PJRT executable (AOT model variants) or the in-crate numeric
-//!   interpreter (for zoo models without artifacts).
+//! * [`pjrt`] — the `xla`-crate bridge: HLO text → compile → execute
+//!   (gated behind the `xla` feature; a stub otherwise).
+//! * [`pool`] — the fixed worker-thread pool behind the parallel plan
+//!   executor (one thread per configured DSP unit).
+//! * [`engine`] — the inference engine the serving coordinator drives: a
+//!   PJRT executable (AOT model variants), the serial in-crate
+//!   interpreter, or the parallel plan executor
+//!   ([`ops::par_exec`](crate::ops::par_exec)).
 
 pub mod engine;
 pub mod pjrt;
+pub mod pool;
 
 pub use engine::{Engine, EngineKind};
 pub use pjrt::{Artifact, PjrtRuntime};

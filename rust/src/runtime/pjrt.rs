@@ -5,13 +5,22 @@
 //! Interchange is HLO **text**: the jax≥0.5 serialized protos carry 64-bit
 //! instruction ids that xla_extension 0.5.1 rejects; the text parser
 //! reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The `xla` crate is only available on hosts that vendor the
+//! xla_extension toolchain, so the compile/execute half is gated behind
+//! the `xla` cargo feature. Without it, manifests still parse and
+//! [`PjrtRuntime::load_dir`] succeeds (so serving code paths type-check
+//! and artifact metadata remains inspectable), but `execute` returns an
+//! error — tests skip themselves when no artifacts are present.
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::graph::{Shape, TensorDesc};
+use crate::graph::Shape;
+#[cfg(feature = "xla")]
+use crate::graph::TensorDesc;
 use crate::ops::Tensor;
 
 /// One AOT artifact as described by `artifacts/manifest.txt`.
@@ -76,20 +85,44 @@ pub fn parse_manifest(dir: &Path, text: &str) -> Result<Vec<Artifact>> {
     Ok(out)
 }
 
-/// PJRT runtime holding one compiled executable per artifact.
+/// PJRT runtime holding one compiled executable per artifact (metadata
+/// only when built without the `xla` feature).
 pub struct PjrtRuntime {
+    #[cfg(feature = "xla")]
     client: xla::PjRtClient,
+    #[cfg(feature = "xla")]
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
     artifacts: HashMap<String, Artifact>,
 }
 
 impl PjrtRuntime {
+    /// Read `dir/manifest.txt` into the artifact table.
+    fn load_manifest(dir: &Path) -> Result<Vec<Artifact>> {
+        let manifest = std::fs::read_to_string(dir.join("manifest.txt")).with_context(|| {
+            format!("reading {}/manifest.txt — run `make artifacts`", dir.display())
+        })?;
+        parse_manifest(dir, &manifest)
+    }
+
+    /// Variant names available.
+    pub fn variants(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.artifacts.keys().map(String::as_str).collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Artifact metadata.
+    pub fn artifact(&self, name: &str) -> Option<&Artifact> {
+        self.artifacts.get(name)
+    }
+}
+
+#[cfg(feature = "xla")]
+impl PjrtRuntime {
     /// Create a CPU PJRT client and compile every artifact in `dir`.
     pub fn load_dir(dir: impl AsRef<Path>) -> Result<PjrtRuntime> {
         let dir = dir.as_ref();
-        let manifest = std::fs::read_to_string(dir.join("manifest.txt"))
-            .with_context(|| format!("reading {}/manifest.txt — run `make artifacts`", dir.display()))?;
-        let artifacts = parse_manifest(dir, &manifest)?;
+        let artifacts = Self::load_manifest(dir)?;
         let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
         let mut rt = PjrtRuntime {
             client,
@@ -115,18 +148,6 @@ impl PjrtRuntime {
         self.executables.insert(a.name.clone(), exe);
         self.artifacts.insert(a.name.clone(), a);
         Ok(())
-    }
-
-    /// Variant names available.
-    pub fn variants(&self) -> Vec<&str> {
-        let mut v: Vec<&str> = self.artifacts.keys().map(String::as_str).collect();
-        v.sort_unstable();
-        v
-    }
-
-    /// Artifact metadata.
-    pub fn artifact(&self, name: &str) -> Option<&Artifact> {
-        self.artifacts.get(name)
     }
 
     /// Execute a variant on concrete inputs. Outputs come back as logical
@@ -164,6 +185,31 @@ impl PjrtRuntime {
             bail!("{name}: output numel {} != manifest {}", data.len(), shape.numel());
         }
         Ok(vec![Tensor::new(TensorDesc::plain(shape), data)])
+    }
+}
+
+#[cfg(not(feature = "xla"))]
+impl PjrtRuntime {
+    /// Load artifact metadata from `dir`. Without the `xla` feature the
+    /// artifacts cannot be compiled or executed, only inspected.
+    pub fn load_dir(dir: impl AsRef<Path>) -> Result<PjrtRuntime> {
+        let dir = dir.as_ref();
+        let mut artifacts = HashMap::new();
+        for a in Self::load_manifest(dir)? {
+            artifacts.insert(a.name.clone(), a);
+        }
+        Ok(PjrtRuntime { artifacts })
+    }
+
+    /// Always fails: this build carries no PJRT client.
+    pub fn execute(&self, name: &str, _inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("unknown artifact {name}"))?;
+        bail!(
+            "artifact {name} cannot execute: built without the `xla` feature \
+             (rebuild with `--features xla` on a host with the xla_extension toolchain)"
+        )
     }
 }
 

@@ -1,0 +1,177 @@
+//! Fixed worker-thread pool for the parallel plan executor.
+//!
+//! One OS thread per configured "DSP unit" (clamped to the host's actual
+//! parallelism), kept alive across inferences so per-node fan-out costs a
+//! channel send, not a thread spawn. Work is submitted as *scoped* jobs:
+//! [`WorkerPool::run`] blocks until every job of the batch has finished,
+//! which is what makes lending stack-borrowed closures to the long-lived
+//! workers sound (the same discipline crossbeam's scoped threads use).
+
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::thread::JoinHandle;
+
+/// A type-erased job once its borrows have been promoted for the send.
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+/// A job borrowing from the submitting scope.
+pub type ScopedJob<'env> = Box<dyn FnOnce() + Send + 'env>;
+
+/// The pool.
+pub struct WorkerPool {
+    txs: Vec<Sender<Job>>,
+    done_rx: Receiver<bool>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn `workers >= 1` threads.
+    pub fn new(workers: usize) -> WorkerPool {
+        assert!(workers >= 1, "pool needs at least one worker");
+        let (done_tx, done_rx) = channel::<bool>();
+        let mut txs = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let (tx, rx) = channel::<Job>();
+            let done = done_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("xenos-exec-{i}"))
+                .spawn(move || {
+                    while let Ok(job) = rx.recv() {
+                        // A panicking job must still produce a completion
+                        // token, or `run` would deadlock.
+                        let ok = catch_unwind(AssertUnwindSafe(job)).is_ok();
+                        if done.send(ok).is_err() {
+                            break;
+                        }
+                    }
+                })
+                .expect("spawning executor worker");
+            txs.push(tx);
+            handles.push(handle);
+        }
+        WorkerPool { txs, done_rx, handles }
+    }
+
+    /// Number of worker threads.
+    pub fn len(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// True if the pool has no workers (never: `new` requires >= 1).
+    pub fn is_empty(&self) -> bool {
+        self.txs.is_empty()
+    }
+
+    /// Execute a batch of jobs across the workers and block until all have
+    /// completed. Panics (after draining the whole batch) if any job
+    /// panicked.
+    ///
+    /// Blocking until completion is the soundness argument for the
+    /// lifetime promotion below: no job can outlive the borrows it
+    /// captures, because `run` does not return while any job is live.
+    pub fn run<'env>(&self, jobs: Vec<ScopedJob<'env>>) {
+        let n = jobs.len();
+        for (i, job) in jobs.into_iter().enumerate() {
+            // SAFETY: the job is guaranteed finished before `run` returns,
+            // so promoting its borrows to 'static never lets them dangle.
+            let job: Job = unsafe { std::mem::transmute::<ScopedJob<'env>, Job>(job) };
+            self.txs[i % self.txs.len()].send(job).expect("executor worker alive");
+        }
+        let mut ok = true;
+        for _ in 0..n {
+            ok &= self.done_rx.recv().expect("executor worker alive");
+        }
+        assert!(ok, "a parallel executor job panicked");
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // Closing the channels ends the worker loops.
+        self.txs.clear();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn runs_all_jobs() {
+        let pool = WorkerPool::new(3);
+        let counter = AtomicUsize::new(0);
+        let jobs: Vec<ScopedJob> = (0..10)
+            .map(|_| {
+                let c = &counter;
+                Box::new(move || {
+                    c.fetch_add(1, Ordering::SeqCst);
+                }) as ScopedJob
+            })
+            .collect();
+        pool.run(jobs);
+        assert_eq!(counter.load(Ordering::SeqCst), 10);
+    }
+
+    #[test]
+    fn jobs_can_write_disjoint_borrowed_slices() {
+        let pool = WorkerPool::new(4);
+        let mut data = vec![0u64; 64];
+        let chunks: Vec<&mut [u64]> = data.chunks_mut(16).collect();
+        let jobs: Vec<ScopedJob> = chunks
+            .into_iter()
+            .enumerate()
+            .map(|(i, chunk)| {
+                Box::new(move || {
+                    for (j, v) in chunk.iter_mut().enumerate() {
+                        *v = (i * 16 + j) as u64;
+                    }
+                }) as ScopedJob
+            })
+            .collect();
+        pool.run(jobs);
+        for (i, v) in data.iter().enumerate() {
+            assert_eq!(*v, i as u64);
+        }
+    }
+
+    #[test]
+    fn pool_reusable_across_batches() {
+        let pool = WorkerPool::new(2);
+        for round in 0..5 {
+            let sum = AtomicUsize::new(0);
+            let jobs: Vec<ScopedJob> = (0..4)
+                .map(|i| {
+                    let s = &sum;
+                    Box::new(move || {
+                        s.fetch_add(round * 10 + i, Ordering::SeqCst);
+                    }) as ScopedJob
+                })
+                .collect();
+            pool.run(jobs);
+            assert_eq!(sum.load(Ordering::SeqCst), round * 40 + 6);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "parallel executor job panicked")]
+    fn panicking_job_propagates() {
+        let pool = WorkerPool::new(2);
+        let jobs: Vec<ScopedJob> = vec![
+            Box::new(|| {}) as ScopedJob,
+            Box::new(|| panic!("boom")) as ScopedJob,
+        ];
+        pool.run(jobs);
+    }
+
+    #[test]
+    fn empty_batch_is_a_noop() {
+        let pool = WorkerPool::new(1);
+        pool.run(Vec::new());
+        assert_eq!(pool.len(), 1);
+    }
+}

@@ -18,13 +18,19 @@ use crate::util::stats::Summary;
 pub struct ServeConfig {
     /// Worker threads (each with its own engine).
     pub workers: usize,
+    /// Intra-engine execution threads. The coordinator itself only
+    /// carries this; engine factories consult it when constructing
+    /// [`Engine::par_interp`](crate::runtime::Engine::par_interp)-backed
+    /// engines (one thread per emulated DSP unit, `1` = serial engines) —
+    /// see the `serve --model` path in `main.rs`.
+    pub engine_threads: usize,
     /// Batching policy.
     pub batcher: BatcherConfig,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { workers: 2, batcher: BatcherConfig::default() }
+        ServeConfig { workers: 2, engine_threads: 1, batcher: BatcherConfig::default() }
     }
 }
 
@@ -116,7 +122,7 @@ impl Coordinator {
                                     });
                                 }
                                 Err(e) => {
-                                    log::error!("worker {w}: inference failed: {e:#}");
+                                    eprintln!("worker {w}: inference failed: {e:#}");
                                 }
                             }
                         }
@@ -267,6 +273,7 @@ mod tests {
                 max_batch: 4,
                 max_wait: std::time::Duration::from_millis(10),
             },
+            ..Default::default()
         };
         let coord = Coordinator::new(cfg);
         let shapes = engine().input_shapes();

@@ -2,10 +2,18 @@
 //! computes. Every arm (Vanilla / HO / Full) of every test graph is
 //! interpreted on the same random inputs and compared bit-for-bit against
 //! the unoptimized graph.
+//!
+//! The second half is the **parallel-executor differential suite**: the
+//! `ParInterpreter` (DOS split on a worker pool) must be element-wise
+//! equal to the serial `Interpreter` across the model zoo and across
+//! worker counts 1/2/4 — bit-for-bit for K-free splits, within float
+//! tolerance for partial-sum (`SplitDim::C`) reductions.
+
+use std::sync::Arc;
 
 use xenos::graph::{models, Graph, GraphBuilder, PoolAttrs, Shape};
 use xenos::hw::presets;
-use xenos::ops::Interpreter;
+use xenos::ops::{Interpreter, ParInterpreter};
 use xenos::opt::{optimize, OptLevel, OptimizeOptions};
 
 fn assert_all_levels_equal(g: &Graph, seed: u64) {
@@ -146,6 +154,160 @@ fn overlapping_pool_not_linked_but_equal() {
     let p = b.pool("p", c, PoolAttrs::max(3, 1));
     b.output(p);
     assert_all_levels_equal(&b.finish(), 19);
+}
+
+/// Parallel executor vs serial interpreter, bit-for-bit, across worker
+/// counts. Worker count 1 doubles as the regression guard that a 1-worker
+/// pool degenerates to the serial path exactly.
+fn assert_par_matches_serial(g: &Graph, seed: u64) {
+    let d = presets::tms320c6678();
+    let base = Interpreter::new(g).run_synthetic(seed);
+    let ga = Arc::new(g.clone());
+    for workers in [1usize, 2, 4] {
+        let par = ParInterpreter::new(ga.clone(), &d, workers);
+        let out = par.run_synthetic(seed);
+        assert_eq!(base.len(), out.len(), "{}: arity (workers={workers})", g.name);
+        for (a, b) in base.iter().zip(&out) {
+            assert_eq!(
+                a.data, b.data,
+                "{}: parallel executor with {workers} workers changed numerics",
+                g.name
+            );
+        }
+    }
+}
+
+#[test]
+fn par_exec_matches_serial_conv_blocks() {
+    // Depthwise-separable block with pooling (the Figure 5 structure).
+    let mut b = GraphBuilder::new("par_ds_block");
+    let x = b.input("x", Shape::nchw(1, 8, 16, 16));
+    let dw = b.dw_bn_relu("ds/dw", x, 3, 1, 1);
+    let pw = b.conv_bn_relu("ds/pw", dw, 16, 1, 1, 0);
+    let p = b.avgpool("pool", pw, 2, 2);
+    let c = b.conv("head", p, 8, 3, 2, 1);
+    let gp = b.global_pool("gap", c);
+    let fc = b.fc("fc", gp, 10);
+    let sm = b.softmax("sm", fc);
+    b.output(sm);
+    assert_par_matches_serial(&b.finish(), 40);
+}
+
+#[test]
+fn par_exec_matches_serial_branchy_blocks() {
+    // Fire module (concat) + shuffle unit (grouped pointwise + shortcut).
+    let mut b = GraphBuilder::new("par_branchy");
+    let x = b.input("x", Shape::nchw(1, 16, 8, 8));
+    let sq = b.conv_bn_relu("squeeze", x, 4, 1, 1, 0);
+    let e1 = b.conv_bn_relu("e1", sq, 8, 1, 1, 0);
+    let e3 = b.conv_bn_relu("e3", sq, 8, 3, 1, 1);
+    let cat = b.concat("cat", &[e1, e3]);
+    let g1 = b.gconv("g1", cat, 16, 1, 1, 0, 4);
+    let sh = b.channel_shuffle("sh", g1, 4);
+    let dw = b.dwconv("dw", sh, 3, 1, 1);
+    let add = b.add("add", dw, cat);
+    b.output(add);
+    assert_par_matches_serial(&b.finish(), 41);
+}
+
+#[test]
+fn par_exec_matches_serial_attention_chain() {
+    // Two-operand matmul + softmax/layernorm/gelu row ops at a size that
+    // crosses the parallelization threshold.
+    let mut b = GraphBuilder::new("par_attn");
+    let q = b.input("q", Shape::mat(64, 64));
+    let k = b.input("k", Shape::mat(64, 64));
+    let s = b.matmul("scores", q, k);
+    let sm = b.softmax("sm", s);
+    let ln = b.layernorm("ln", sm);
+    let gl = b.gelu("gelu", ln);
+    let ad = b.add("add", gl, sm);
+    let fc = b.fc("fc", ad, 32);
+    b.output(fc);
+    assert_par_matches_serial(&b.finish(), 42);
+}
+
+#[test]
+fn par_exec_matches_serial_lstm_zoo_model() {
+    assert_par_matches_serial(&models::lstm(), 43);
+}
+
+#[test]
+fn par_exec_matches_serial_on_fully_optimized_graph() {
+    // Run the optimizer at Full level (CBR fusion + linking: the graph now
+    // contains Cbr/Cbra fused nodes) and check the parallel executor on
+    // the rewritten graph too.
+    let mut b = GraphBuilder::new("par_opt");
+    let x = b.input("x", Shape::nchw(1, 8, 16, 16));
+    let c1 = b.conv_bn_relu("c1", x, 16, 3, 1, 1);
+    let p = b.avgpool("p", c1, 2, 2);
+    let c2 = b.conv_bn_relu("c2", p, 32, 1, 1, 0);
+    let mp = b.maxpool("mp", c2, 2, 2);
+    let fc = b.fc("fc", mp, 10);
+    b.output(fc);
+    let g = b.finish();
+    let d = presets::tms320c6678();
+    let o = optimize(&g, &d, OptimizeOptions { level: OptLevel::Full, search: false });
+    assert_par_matches_serial(&o.graph, 44);
+}
+
+#[test]
+fn one_worker_pool_is_reported_and_huge_requests_clamp() {
+    let g = Arc::new(models::lstm());
+    let d = presets::tms320c6678();
+    let one = ParInterpreter::new(g.clone(), &d, 1);
+    assert_eq!(one.workers(), 1, "explicit 1-worker pool must stay serial");
+    let huge = ParInterpreter::new(g, &d, 1 << 20);
+    let host = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    assert!(
+        huge.workers() >= 1 && huge.workers() <= host,
+        "worker pool must clamp to available_parallelism ({host}), got {}",
+        huge.workers()
+    );
+}
+
+#[test]
+fn par_exec_c_split_reduction_is_tolerance_equal() {
+    // One kernel slice (in_c*kh*kw*4 bytes) exceeds half the private L2 of
+    // the TMS preset, forcing a SplitDim::C parameter split with a
+    // partial-sum reduction — the one path where the parallel executor is
+    // tolerance-equal instead of bit-equal.
+    let mut b = GraphBuilder::new("par_csplit");
+    let x = b.input("x", Shape::nchw(1, 8192, 6, 6));
+    let c = b.conv("c", x, 4, 3, 1, 1);
+    b.output(c);
+    let g = b.finish();
+    let d = presets::tms320c6678();
+    let ga = Arc::new(g.clone());
+    let par = ParInterpreter::new(ga, &d, 4);
+    let split = par.plan().node(1).param_split.expect("plan must split params");
+    assert!(split.needs_reduction, "C-split must be a reduction split");
+    let base = Interpreter::new(&g).run_synthetic(45);
+    let out = par.run_synthetic(45);
+    // 73k-term dot products summed in two different orders: allow the
+    // reduction a few ulp-random-walks of slack.
+    base[0].assert_close(&out[0], 1e-3);
+}
+
+#[test]
+#[ignore = "slow in debug; run with --release -- --ignored"]
+fn par_exec_full_zoo_differential() {
+    // The full differential matrix: every zoo model, serial vs parallel,
+    // worker counts 1/2/4.
+    for name in [
+        "mobilenet",
+        "squeezenet",
+        "shufflenet",
+        "resnet18",
+        "resnet101",
+        "centrenet",
+        "lstm",
+        "bert_s",
+        "bert_l",
+    ] {
+        let g = models::by_name(name).unwrap_or_else(|| panic!("missing model {name}"));
+        assert_par_matches_serial(&g, 46);
+    }
 }
 
 #[test]

@@ -142,6 +142,7 @@ fn coordinator_serves_every_request_exactly_once() {
                 max_batch,
                 max_wait: std::time::Duration::from_micros(300),
             },
+            ..Default::default()
         })
         .run(
             move |_| Ok(Engine::interp(g.clone())),

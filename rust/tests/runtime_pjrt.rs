@@ -80,6 +80,7 @@ fn pjrt_engine_serves_through_coordinator() {
     let coord = xenos::serve::Coordinator::new(xenos::serve::ServeConfig {
         workers: 1, // one PJRT client per worker; keep the test light
         batcher: xenos::serve::BatcherConfig::default(),
+        ..Default::default()
     });
     let dir2 = dir.clone();
     let report = coord

@@ -27,6 +27,7 @@ fn end_to_end_throughput_and_latency() {
             max_batch: 8,
             max_wait: std::time::Duration::from_micros(500),
         },
+        ..Default::default()
     })
     .run(
         {
@@ -104,6 +105,7 @@ fn single_worker_preserves_fifo() {
             max_batch: 4,
             max_wait: std::time::Duration::from_micros(100),
         },
+        ..Default::default()
     })
     .run(
         {
