@@ -1,10 +1,17 @@
 //! Bench target for paper Figure 11: d-Xenos distributed inference — the
-//! scheme×sync table plus the cost of Algorithm 1's profiling enumeration
-//! and of the real ring all-reduce collective.
+//! analytic scheme×sync table, the cost of Algorithm 1's profiling
+//! enumeration, the real ring all-reduce collective, and (new with the
+//! `dist::exec` runtime) measured end-to-end distributed inference over
+//! `LocalTransport` shard workers at p ∈ {1, 2, 4}, printed next to the
+//! simulator's predictions for EXPERIMENTS.md.
 
-use xenos::dist::{enumerate_schemes, ring, SyncMode};
+use std::sync::Arc;
+
+use xenos::dist::exec::ClusterDriver;
+use xenos::dist::{enumerate_schemes, ring, simulate_dxenos, PartitionScheme, SyncMode};
 use xenos::graph::models;
 use xenos::hw::presets;
+use xenos::ops::interp::synthetic_inputs;
 use xenos::util::bench::bench;
 use xenos::util::rng::Rng;
 
@@ -22,4 +29,30 @@ fn main() {
     bench("ring all-reduce 4x1M floats (real exchange)", 1, 10, || {
         ring::ring_allreduce_exec(inputs.clone()).len()
     });
+
+    // Real distributed execution vs the analytic prediction, MobileNet on
+    // in-process shard workers. Absolute times are host times (threads on
+    // one machine, not an SRIO cluster); the per-p scaling shape is the
+    // comparable quantity.
+    let mobilenet = Arc::new(models::mobilenet());
+    let feed = synthetic_inputs(&mobilenet, 7);
+    for p in [1usize, 2, 4] {
+        let sim = simulate_dxenos(&mobilenet, &d, p, PartitionScheme::Mix, SyncMode::Ring);
+        println!(
+            "analytic mobilenet ring-Mix p={p}: {:.2}x predicted speedup",
+            sim.speedup()
+        );
+        let driver = ClusterDriver::local(
+            mobilenet.clone(),
+            &d,
+            p,
+            PartitionScheme::Mix,
+            SyncMode::Ring,
+            1,
+        )
+        .expect("cluster spins up");
+        bench(&format!("dist-exec mobilenet ring-Mix p={p} (real)"), 1, 5, || {
+            driver.infer(&feed).expect("cluster inference").len()
+        });
+    }
 }

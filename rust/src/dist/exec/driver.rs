@@ -1,0 +1,374 @@
+//! The cluster driver: loads a model, cuts it with the d-Xenos
+//! partitioner, distributes shard weights, and drives distributed
+//! inference end-to-end.
+//!
+//! Two backends behind one [`ClusterDriver`]:
+//!
+//! * **Local** — `p` shard-worker threads over a [`LocalTransport`] mesh.
+//!   This is the engine behind `serve --engine cluster` and the
+//!   differential test harness.
+//! * **Tcp** — `p` remote `xenos dist-worker` processes. The driver ships
+//!   each worker a [`JobSpec`] plus its parameter shard over the control
+//!   link; workers build the same graph/plan deterministically, mesh up
+//!   over [`TcpTransport`], and stream results back.
+
+use std::net::{TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use super::plan::{plan_cluster, ClusterPlan};
+use super::shard::ShardParams;
+use super::transport::{accept_peers, LocalTransport, TcpTransport};
+use super::wire::{self, JobSpec};
+use super::worker::ShardWorker;
+use crate::dist::{PartitionScheme, SyncMode};
+use crate::graph::{models, Graph, Shape};
+use crate::hw::{self, DeviceModel};
+use crate::ops::params::ParamStore;
+use crate::ops::Tensor;
+
+/// How long `infer` waits for a cluster round trip.
+const INFER_TIMEOUT: Duration = Duration::from_secs(300);
+
+/// A handle on a running cluster; `infer` runs one distributed inference.
+pub struct ClusterDriver {
+    graph: Arc<Graph>,
+    scheme: PartitionScheme,
+    sync: SyncMode,
+    world: usize,
+    backend: Backend,
+}
+
+enum Backend {
+    Local(LocalCluster),
+    Tcp(TcpCluster),
+}
+
+impl ClusterDriver {
+    /// Spin up a local cluster: `p` shard workers as threads over an
+    /// in-process transport mesh, each holding its extracted weight shard.
+    pub fn local(
+        graph: Arc<Graph>,
+        device: &DeviceModel,
+        p: usize,
+        scheme: PartitionScheme,
+        sync: SyncMode,
+        threads: usize,
+    ) -> Result<ClusterDriver> {
+        let p = p.max(1);
+        let plan = plan_cluster(&graph, device, p, scheme, sync);
+        let master = ParamStore::for_graph(&graph);
+        let backend = Backend::Local(LocalCluster::spawn(&graph, &plan, &master, threads)?);
+        Ok(ClusterDriver { graph, scheme, sync, world: p, backend })
+    }
+
+    /// Connect to remote `xenos dist-worker` processes at `hosts` (rank
+    /// order), ship each its job spec + weight shard, and return once the
+    /// mesh is standing.
+    pub fn tcp(
+        hosts: &[String],
+        model: &str,
+        device_name: &str,
+        scheme: PartitionScheme,
+        sync: SyncMode,
+        threads: usize,
+    ) -> Result<ClusterDriver> {
+        anyhow::ensure!(!hosts.is_empty(), "need at least one worker host");
+        let graph = Arc::new(
+            models::by_name(model).with_context(|| format!("unknown model {model}"))?,
+        );
+        let device = hw::by_name(device_name)
+            .with_context(|| format!("unknown device {device_name}"))?;
+        let p = hosts.len();
+        let plan = plan_cluster(&graph, &device, p, scheme, sync);
+        let master = ParamStore::for_graph(&graph);
+        let mut ctrls = Vec::with_capacity(p);
+        for (rank, host) in hosts.iter().enumerate() {
+            let mut sock = TcpStream::connect(host)
+                .with_context(|| format!("connecting to worker {rank} at {host}"))?;
+            sock.set_nodelay(true)?;
+            let spec = JobSpec {
+                model: model.to_string(),
+                device: device_name.to_string(),
+                rank,
+                world: p,
+                threads,
+                scheme,
+                sync,
+                peers: hosts.to_vec(),
+            };
+            wire::write_frame(&mut sock, wire::CTRL_SPEC, &wire::encode_spec(&spec))?;
+            let shard = ShardParams::extract(&graph, &plan, &master, rank);
+            wire::write_frame(&mut sock, wire::CTRL_PARAMS, &wire::encode_params(shard.nodes()))?;
+            ctrls.push(sock);
+        }
+        let backend = Backend::Tcp(TcpCluster { ctrls: Mutex::new(ctrls) });
+        Ok(ClusterDriver { graph, scheme, sync, world: p, backend })
+    }
+
+    /// Cluster size.
+    pub fn world(&self) -> usize {
+        self.world
+    }
+
+    /// The model graph being served.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// Input shapes of the model.
+    pub fn input_shapes(&self) -> Vec<Shape> {
+        self.graph
+            .input_ids()
+            .iter()
+            .map(|&i| self.graph.node(i).out.shape.clone())
+            .collect()
+    }
+
+    /// Display label, e.g. `cluster:mobilenet x4 ring-Mix`.
+    pub fn label(&self) -> String {
+        let kind = match self.backend {
+            Backend::Local(_) => "cluster",
+            Backend::Tcp(_) => "tcp-cluster",
+        };
+        format!(
+            "{kind}:{} x{} {}-{}",
+            self.graph.name,
+            self.world,
+            self.sync.label(),
+            self.scheme.label()
+        )
+    }
+
+    /// Run one distributed inference across the cluster.
+    pub fn infer(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        match &self.backend {
+            Backend::Local(c) => c.infer(inputs),
+            Backend::Tcp(c) => c.infer(inputs),
+        }
+    }
+}
+
+/// One shard round's result as reported by rank 0.
+type RoundResult = Result<Vec<Tensor>, String>;
+
+/// Local backend: worker threads + job/result channels. The channel pair
+/// sits behind one mutex held for a whole round (submit + result), so
+/// concurrent `infer` callers are serialized — interleaved submissions
+/// would let ranks pair collectives from different requests.
+struct LocalCluster {
+    round: Mutex<LocalRound>,
+    handles: Vec<JoinHandle<()>>,
+}
+
+struct LocalRound {
+    job_txs: Vec<Sender<Vec<Tensor>>>,
+    out_rx: Receiver<RoundResult>,
+}
+
+impl LocalCluster {
+    fn spawn(
+        graph: &Arc<Graph>,
+        plan: &ClusterPlan,
+        master: &ParamStore,
+        threads: usize,
+    ) -> Result<LocalCluster> {
+        let p = plan.world;
+        let mesh = LocalTransport::mesh(p);
+        let (out_tx, out_rx) = channel::<RoundResult>();
+        let mut job_txs = Vec::with_capacity(p);
+        let mut handles = Vec::with_capacity(p);
+        for (rank, transport) in mesh.into_iter().enumerate() {
+            let (job_tx, job_rx) = channel::<Vec<Tensor>>();
+            let shard = ShardParams::extract(graph, plan, master, rank);
+            let worker =
+                ShardWorker::new(graph.clone(), plan.clone(), shard, Box::new(transport), threads);
+            let out_tx = out_tx.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("xenos-shard-{rank}"))
+                .spawn(move || {
+                    while let Ok(inputs) = job_rx.recv() {
+                        let res = catch_unwind(AssertUnwindSafe(|| worker.run(&inputs)));
+                        if rank == 0 {
+                            let _ = out_tx.send(res.map_err(panic_message));
+                        } else if let Err(e) = res {
+                            eprintln!("shard worker {rank}: {}", panic_message(e));
+                        }
+                    }
+                })
+                .context("spawning shard worker thread")?;
+            job_txs.push(job_tx);
+            handles.push(handle);
+        }
+        Ok(LocalCluster { round: Mutex::new(LocalRound { job_txs, out_rx }), handles })
+    }
+
+    fn infer(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let round = self.round.lock().unwrap_or_else(|p| p.into_inner());
+        // A previous round that timed out may have left its late result
+        // queued; drop stale results so rounds stay paired.
+        while round.out_rx.try_recv().is_ok() {}
+        for tx in &round.job_txs {
+            if tx.send(inputs.to_vec()).is_err() {
+                bail!("cluster worker thread is gone");
+            }
+        }
+        match round.out_rx.recv_timeout(INFER_TIMEOUT) {
+            Ok(Ok(outs)) => Ok(outs),
+            Ok(Err(msg)) => bail!("cluster inference failed: {msg}"),
+            Err(e) => bail!("cluster inference stalled: {e}"),
+        }
+    }
+}
+
+impl Drop for LocalCluster {
+    fn drop(&mut self) {
+        // Recover from poisoning: the channels must close or join() hangs.
+        let mut round = self.round.lock().unwrap_or_else(|p| p.into_inner());
+        round.job_txs.clear(); // closes the job channels; workers exit
+        drop(round);
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn panic_message(e: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = e.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = e.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked".to_string()
+    }
+}
+
+/// TCP backend: one control socket per worker, all behind one mutex held
+/// for a whole round so concurrent `infer` callers cannot interleave
+/// submissions across the cluster (workers process rounds in lockstep).
+struct TcpCluster {
+    ctrls: Mutex<Vec<TcpStream>>,
+}
+
+impl TcpCluster {
+    fn infer(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let mut ctrls = self.ctrls.lock().unwrap_or_else(|p| p.into_inner());
+        let payload = wire::encode_tensors(inputs);
+        for (rank, sock) in ctrls.iter_mut().enumerate() {
+            wire::write_frame(sock, wire::CTRL_INPUT, &payload)
+                .with_context(|| format!("sending inputs to worker {rank}"))?;
+        }
+        let outputs = {
+            let (tag, payload) = wire::read_frame(&mut ctrls[0]).context("reading outputs")?;
+            match tag {
+                wire::CTRL_OUTPUT => wire::decode_tensors(&payload)?,
+                wire::CTRL_ERR => bail!("worker 0 failed: {}", String::from_utf8_lossy(&payload)),
+                other => bail!("unexpected frame {other:#x} from worker 0"),
+            }
+        };
+        for (rank, sock) in ctrls.iter_mut().enumerate().skip(1) {
+            let (tag, payload) = wire::read_frame(sock)
+                .with_context(|| format!("reading ack from worker {rank}"))?;
+            match tag {
+                wire::CTRL_DONE => {}
+                wire::CTRL_ERR => {
+                    bail!("worker {rank} failed: {}", String::from_utf8_lossy(&payload))
+                }
+                other => bail!("unexpected frame {other:#x} from worker {rank}"),
+            }
+        }
+        Ok(outputs)
+    }
+}
+
+impl Drop for TcpCluster {
+    fn drop(&mut self) {
+        let mut ctrls = self.ctrls.lock().unwrap_or_else(|p| p.into_inner());
+        for sock in ctrls.iter_mut() {
+            let _ = wire::write_frame(sock, wire::CTRL_SHUTDOWN, &[]);
+        }
+    }
+}
+
+/// Worker-process server: serve cluster jobs on `listener`. Each session
+/// is one driver connection — spec + params, then inference rounds until
+/// shutdown/EOF. `sessions` bounds how many sessions to serve (`None` =
+/// loop forever); tests pass `Some(1)`.
+pub fn serve_listener(listener: &TcpListener, sessions: Option<usize>) -> Result<()> {
+    let mut served = 0usize;
+    loop {
+        if let Some(n) = sessions {
+            if served >= n {
+                return Ok(());
+            }
+        }
+        let (mut ctrl, peer) = listener.accept().context("accepting driver connection")?;
+        ctrl.set_nodelay(true)?;
+        let (tag, payload) = wire::read_frame(&mut ctrl).context("reading job spec")?;
+        if tag != wire::CTRL_SPEC {
+            bail!("driver at {peer} sent frame {tag:#x} before the job spec");
+        }
+        let spec = wire::decode_spec(&payload)?;
+        if let Err(e) = serve_session(listener, &mut ctrl, &spec) {
+            // Tell the driver before giving up on the session.
+            let msg = format!("{e:#}");
+            let _ = wire::write_frame(&mut ctrl, wire::CTRL_ERR, msg.as_bytes());
+            eprintln!("dist-worker session failed: {msg}");
+        }
+        served += 1;
+    }
+}
+
+fn serve_session(listener: &TcpListener, ctrl: &mut TcpStream, spec: &JobSpec) -> Result<()> {
+    let (tag, payload) = wire::read_frame(ctrl).context("reading shard parameters")?;
+    anyhow::ensure!(tag == wire::CTRL_PARAMS, "expected params frame, got {tag:#x}");
+    let params = ShardParams::from_nodes(wire::decode_params(&payload)?);
+
+    let graph = Arc::new(
+        models::by_name(&spec.model)
+            .with_context(|| format!("unknown model {}", spec.model))?,
+    );
+    let device = hw::by_name(&spec.device)
+        .with_context(|| format!("unknown device {}", spec.device))?;
+    let plan = plan_cluster(&graph, &device, spec.world, spec.scheme, spec.sync);
+
+    // Stand up the peer mesh: accept from higher ranks, dial lower ranks.
+    let inbound = accept_peers(listener, spec.rank, spec.world)?;
+    let transport = TcpTransport::new(spec.rank, spec.world, &spec.peers, inbound)?;
+    let worker = ShardWorker::new(graph, plan, params, Box::new(transport), spec.threads);
+
+    loop {
+        let (tag, payload) = match wire::read_frame(ctrl) {
+            Ok(f) => f,
+            Err(_) => return Ok(()), // driver hung up
+        };
+        match tag {
+            wire::CTRL_INPUT => {
+                let inputs = wire::decode_tensors(&payload)?;
+                let res = catch_unwind(AssertUnwindSafe(|| worker.run(&inputs)));
+                match res {
+                    Ok(outputs) => {
+                        if spec.rank == 0 {
+                            let out = wire::encode_tensors(&outputs);
+                            wire::write_frame(ctrl, wire::CTRL_OUTPUT, &out)?;
+                        } else {
+                            wire::write_frame(ctrl, wire::CTRL_DONE, &[])?;
+                        }
+                    }
+                    Err(e) => {
+                        let msg = panic_message(e);
+                        wire::write_frame(ctrl, wire::CTRL_ERR, msg.as_bytes())?;
+                        bail!("inference failed: {msg}");
+                    }
+                }
+            }
+            wire::CTRL_SHUTDOWN => return Ok(()),
+            other => bail!("unexpected control frame {other:#x}"),
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! d-Xenos **execution** — the distributed runtime behind the `dist`
+//! simulator (paper §5, executed for real).
+//!
+//! | module | role |
+//! |--------|------|
+//! | [`transport`] | `Transport` trait; in-process + TCP meshes |
+//! | [`wire`] | frame format + control protocol serialization |
+//! | [`plan`] | per-operator cluster cut (`ClusterPlan`) |
+//! | [`shard`] | shard-weight extraction (`ShardParams`) |
+//! | [`worker`] | `ShardWorker`: one rank's engine slice |
+//! | [`driver`] | `ClusterDriver`: local threads or TCP workers |
+//!
+//! The correctness contract: for every scheme and cluster size, cluster
+//! output is element-wise identical to the single-device serial
+//! interpreter — sharded kernels share the serial code paths, OutC
+//! reassembly and spatial gathers are verbatim copies, and halo exchanges
+//! only move data that one rank computed and another reads.
+
+pub mod driver;
+pub mod plan;
+pub mod shard;
+pub mod transport;
+pub mod wire;
+pub mod worker;
+
+pub use driver::{serve_listener, ClusterDriver};
+pub use plan::{plan_cluster, ClusterPlan, LayerScheme};
+pub use shard::ShardParams;
+pub use transport::{LocalTransport, TcpTransport, Transport};
+pub use wire::JobSpec;
+pub use worker::ShardWorker;

@@ -1,0 +1,245 @@
+//! Cluster cuts: which execution mode each operator runs under on a
+//! `p`-device cluster, chosen by the same cost model the d-Xenos simulator
+//! prices (`dist::simulate_dxenos`), restricted to modes the runtime can
+//! execute for the operator's kind.
+
+use crate::dist::{PartitionScheme, SyncMode};
+use crate::graph::{Graph, Node, OpKind};
+use crate::hw::DeviceModel;
+use crate::opt::{dos, OptLevel};
+use crate::sim::cost::node_cost;
+
+/// Per-operator execution mode on the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerScheme {
+    /// Every rank computes the full operator — no communication. The
+    /// runtime's counterpart of the simulator's "serial + broadcast" arm
+    /// (replicating a cheap op is how a real cluster avoids the broadcast).
+    Replicated,
+    /// Output-channel / output-feature shard; sync is an activation
+    /// all-gather reassembling the full output on every rank.
+    OutC,
+    /// Input-height shard: the activation stays row-sharded; consumers pull
+    /// boundary halo rows from neighbouring ranks.
+    InH,
+    /// Input-width shard: column-sharded with column halos.
+    InW,
+}
+
+/// A whole-graph cluster cut.
+#[derive(Debug, Clone)]
+pub struct ClusterPlan {
+    /// Cluster size.
+    pub world: usize,
+    /// Synchronization mode the collectives route through.
+    pub sync: SyncMode,
+    /// Per-node execution mode, indexed by `NodeId`.
+    pub schemes: Vec<LayerScheme>,
+}
+
+impl ClusterPlan {
+    /// Number of sharded (non-replicated) operators.
+    pub fn sharded_count(&self) -> usize {
+        self.schemes.iter().filter(|s| **s != LayerScheme::Replicated).count()
+    }
+}
+
+/// How many independent outC slices a node offers (0 = not outC-shardable).
+/// Grouped convolutions shard on group boundaries so each shard's input
+/// channel slice stays contiguous.
+fn outc_capacity(node: &Node) -> usize {
+    match &node.op {
+        OpKind::Conv(a) | OpKind::Cbr(a) | OpKind::Cbra(a, _) | OpKind::Cbrm(a, _) => {
+            if node.out.shape.n() != 1 {
+                return 0;
+            }
+            if a.groups > 1 {
+                a.groups
+            } else {
+                a.out_c
+            }
+        }
+        OpKind::MatMul(m) if m.weighted => m.n,
+        _ => 0,
+    }
+}
+
+/// True when the runtime can execute `node` as a spatial (row or column)
+/// shard: batch-1 feature-map output with at least two rows/columns, an
+/// operator kind the shard executor implements, and feature-map inputs.
+fn spatial_ok(g: &Graph, node: &Node, by_rows: bool) -> bool {
+    let out = &node.out.shape;
+    if !out.is_fm() || out.n() != 1 {
+        return false;
+    }
+    let extent = if by_rows { out.h() } else { out.w() };
+    if extent < 2 {
+        return false;
+    }
+    let kind_ok = matches!(
+        node.op,
+        OpKind::Conv(_)
+            | OpKind::Cbr(_)
+            | OpKind::Cbra(..)
+            | OpKind::Cbrm(..)
+            | OpKind::Pool(_)
+            | OpKind::Relu
+            | OpKind::Sigmoid
+            | OpKind::Tanh
+            | OpKind::Gelu
+            | OpKind::Add
+            | OpKind::Mul
+            | OpKind::Mac
+            | OpKind::BatchNorm
+            | OpKind::Bias
+            | OpKind::Upsample { .. }
+            | OpKind::Concat
+            | OpKind::Slice { .. }
+            | OpKind::ChannelShuffle { .. }
+    );
+    kind_ok && node.inputs.iter().all(|&i| g.node(i).out.shape.is_fm())
+}
+
+/// True when the runtime can execute `node` under `scheme`.
+pub(crate) fn applicable(g: &Graph, node: &Node, scheme: LayerScheme) -> bool {
+    match scheme {
+        LayerScheme::Replicated => true,
+        LayerScheme::OutC => outc_capacity(node) >= 2,
+        LayerScheme::InH => spatial_ok(g, node, true),
+        LayerScheme::InW => spatial_ok(g, node, false),
+    }
+}
+
+/// Cut `g` for a `p`-device cluster of `device`s. Single-mode schemes
+/// apply their mode to every operator that supports it (the paper's
+/// Fig. 11 single-mode arms); `Mix` picks the cheapest applicable mode per
+/// operator with the analytic cost model (Algorithm 1).
+pub fn plan_cluster(
+    g: &Graph,
+    device: &DeviceModel,
+    p: usize,
+    scheme: PartitionScheme,
+    sync: SyncMode,
+) -> ClusterPlan {
+    let p = p.max(1);
+    if p == 1 {
+        return ClusterPlan {
+            world: 1,
+            sync,
+            schemes: vec![LayerScheme::Replicated; g.len()],
+        };
+    }
+    let dplan = dos::plan_graph(g, device, OptLevel::HoOnly);
+    let link = &device.link;
+    let schemes = g
+        .nodes
+        .iter()
+        .map(|node| {
+            if matches!(node.op, OpKind::Input) {
+                return LayerScheme::Replicated;
+            }
+            let candidates: &[LayerScheme] = match scheme {
+                PartitionScheme::OutC => &[LayerScheme::OutC],
+                PartitionScheme::InH => &[LayerScheme::InH],
+                PartitionScheme::InW => &[LayerScheme::InW],
+                PartitionScheme::Mix => {
+                    &[LayerScheme::OutC, LayerScheme::InH, LayerScheme::InW]
+                }
+            };
+            let base = node_cost(g, node, dplan.node(node.id), device).total_s;
+            let mut best = LayerScheme::Replicated;
+            let mut best_t = base;
+            for &c in candidates {
+                if !applicable(g, node, c) {
+                    continue;
+                }
+                let sync_bytes = match c {
+                    LayerScheme::OutC => node.out.bytes(),
+                    LayerScheme::InH => crate::dist::halo_bytes(g, node, p, true),
+                    LayerScheme::InW => crate::dist::halo_bytes(g, node, p, false),
+                    LayerScheme::Replicated => unreachable!(),
+                };
+                let t = base / p as f64 + crate::dist::sync_time(sync, p, sync_bytes, link);
+                let wins = match scheme {
+                    // Single-mode arms shard whenever they can, profitable
+                    // or not — that contrast is the point of Fig. 11.
+                    PartitionScheme::Mix => t < best_t,
+                    _ => true,
+                };
+                if wins {
+                    best = c;
+                    best_t = t;
+                }
+            }
+            best
+        })
+        .collect();
+    ClusterPlan { world: p, sync, schemes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::models;
+    use crate::hw::presets;
+
+    #[test]
+    fn single_device_plan_is_all_replicated() {
+        let g = models::lstm();
+        let d = presets::tms320c6678();
+        let plan = plan_cluster(&g, &d, 1, PartitionScheme::Mix, SyncMode::Ring);
+        assert_eq!(plan.world, 1);
+        assert_eq!(plan.sharded_count(), 0);
+    }
+
+    #[test]
+    fn outc_scheme_shards_convs_and_fcs() {
+        let g = models::mobilenet();
+        let d = presets::tms320c6678();
+        let plan = plan_cluster(&g, &d, 4, PartitionScheme::OutC, SyncMode::Ring);
+        for (n, s) in g.nodes.iter().zip(&plan.schemes) {
+            if n.op.conv_attrs().is_some() {
+                assert_eq!(*s, LayerScheme::OutC, "conv {} must shard", n.name);
+            }
+        }
+        assert!(plan.sharded_count() > 10);
+    }
+
+    #[test]
+    fn inh_scheme_never_assigns_columns() {
+        let g = models::resnet18();
+        let d = presets::tms320c6678();
+        let plan = plan_cluster(&g, &d, 2, PartitionScheme::InH, SyncMode::Ring);
+        assert!(plan.schemes.iter().all(|s| *s != LayerScheme::InW && *s != LayerScheme::OutC));
+        assert!(plan.sharded_count() > 10);
+    }
+
+    #[test]
+    fn mix_prefers_cheap_halos_for_big_convs() {
+        // On a CNN the Mix cut should shard the bulk of the compute.
+        let g = models::mobilenet();
+        let d = presets::tms320c6678();
+        let plan = plan_cluster(&g, &d, 4, PartitionScheme::Mix, SyncMode::Ring);
+        let sharded_macs: u64 = g
+            .nodes
+            .iter()
+            .zip(&plan.schemes)
+            .filter(|(_, s)| **s != LayerScheme::Replicated)
+            .map(|(n, _)| n.macs())
+            .sum();
+        assert!(
+            sharded_macs * 2 > g.total_macs(),
+            "Mix should shard most MACs ({sharded_macs} of {})",
+            g.total_macs()
+        );
+    }
+
+    #[test]
+    fn matrices_are_not_spatially_sharded() {
+        let g = models::bert_s();
+        let d = presets::tms320c6678();
+        let plan = plan_cluster(&g, &d, 4, PartitionScheme::InH, SyncMode::Ring);
+        // Bert is matrices end to end: nothing is row-shardable.
+        assert_eq!(plan.sharded_count(), 0);
+    }
+}

@@ -1,0 +1,209 @@
+//! Shard-weight extraction: the parameter slice one rank actually holds.
+//!
+//! OutC-sharded operators keep only their output-channel (or FC-column)
+//! slice of the weights — the paper's §5 observation that kernels
+//! distribute freely under an output split. Replicated and spatially
+//! sharded operators need the full parameters (spatial shards reuse every
+//! kernel on their row/column slab). The driver extracts one `ShardParams`
+//! per rank from a master [`ParamStore`] and, in TCP mode, streams it over
+//! the control link — that is the "distribute shard weights" step of
+//! `ClusterDriver`.
+
+use super::plan::{ClusterPlan, LayerScheme};
+use crate::graph::{ConvAttrs, Graph, NodeId, OpKind};
+use crate::ops::params::{NodeParams, ParamStore};
+use crate::opt::{even_share, shard_slices, PartitionDim};
+
+/// Per-rank parameters, indexed by `NodeId` (parameter-free nodes hold the
+/// empty default).
+#[derive(Debug, Default)]
+pub struct ShardParams {
+    by_node: Vec<NodeParams>,
+}
+
+/// The output-channel range rank `r` of `p` owns for a conv-family node —
+/// group-aligned for grouped/depthwise convolutions.
+pub(crate) fn conv_channel_share(a: &ConvAttrs, p: usize, r: usize) -> (usize, usize) {
+    if a.groups > 1 {
+        let (g0, g1) = even_share(a.groups, p, r);
+        (g0 * a.out_c_per_group(), g1 * a.out_c_per_group())
+    } else {
+        even_share(a.out_c, p, r)
+    }
+}
+
+impl ShardParams {
+    /// Extract rank `rank`'s shard of `master` under `plan`.
+    pub fn extract(g: &Graph, plan: &ClusterPlan, master: &ParamStore, rank: usize) -> ShardParams {
+        let p = plan.world;
+        let by_node = g
+            .nodes
+            .iter()
+            .map(|node| {
+                let full = master.get_ref(node.id);
+                if plan.schemes[node.id] != LayerScheme::OutC {
+                    return full.clone();
+                }
+                match &node.op {
+                    OpKind::Conv(a) | OpKind::Cbr(a) | OpKind::Cbra(a, _) | OpKind::Cbrm(a, _) => {
+                        let (c0, c1) = conv_channel_share(a, p, rank);
+                        let row = a.in_c_per_group() * a.kh * a.kw;
+                        NodeParams {
+                            w: full.w[c0 * row..c1 * row].to_vec(),
+                            bias: slice_or_empty(&full.bias, c0, c1),
+                            scale: slice_or_empty(&full.scale, c0, c1),
+                            shift: slice_or_empty(&full.shift, c0, c1),
+                        }
+                    }
+                    OpKind::MatMul(m) if m.weighted => {
+                        let slice = shard_slices(PartitionDim::OutC, m.n, p)[rank];
+                        let (j0, j1) = (slice.start, slice.end);
+                        // Column slice of the row-major [k, n] weight.
+                        let mut w = Vec::with_capacity(m.k * (j1 - j0));
+                        for kk in 0..m.k {
+                            w.extend_from_slice(&full.w[kk * m.n + j0..kk * m.n + j1]);
+                        }
+                        NodeParams {
+                            w,
+                            bias: slice_or_empty(&full.bias, j0, j1),
+                            scale: Vec::new(),
+                            shift: Vec::new(),
+                        }
+                    }
+                    other => unreachable!("outC scheme on unshardable op {other:?}"),
+                }
+            })
+            .collect();
+        ShardParams { by_node }
+    }
+
+    /// Wrap an already-materialized per-node parameter vector (the TCP
+    /// worker path, after `wire::decode_params`).
+    pub(crate) fn from_nodes(by_node: Vec<NodeParams>) -> ShardParams {
+        ShardParams { by_node }
+    }
+
+    /// Parameters of one node.
+    pub fn get(&self, id: NodeId) -> &NodeParams {
+        &self.by_node[id]
+    }
+
+    /// The serialized form (`wire::encode_params` input).
+    pub(crate) fn nodes(&self) -> &[NodeParams] {
+        &self.by_node
+    }
+
+    /// Total parameter bytes this shard holds.
+    pub fn total_bytes(&self) -> u64 {
+        self.by_node
+            .iter()
+            .map(|p| 4 * (p.w.len() + p.bias.len() + p.scale.len() + p.shift.len()) as u64)
+            .sum()
+    }
+}
+
+fn slice_or_empty(v: &[f32], lo: usize, hi: usize) -> Vec<f32> {
+    if v.is_empty() {
+        Vec::new()
+    } else {
+        v[lo..hi].to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::exec::plan::plan_cluster;
+    use crate::dist::{PartitionScheme, SyncMode};
+    use crate::graph::{GraphBuilder, Shape};
+    use crate::hw::presets;
+
+    fn conv_fc_graph() -> Graph {
+        let mut b = GraphBuilder::new("shard_t");
+        let x = b.input("x", Shape::nchw(1, 8, 16, 16));
+        let c = b.conv_bn_relu("c", x, 32, 3, 1, 1);
+        let g = b.global_pool("gp", c);
+        let f = b.fc("fc", g, 10);
+        b.output(f);
+        b.finish()
+    }
+
+    // conv_fc_graph node ids: 0 input, 1 conv, 2 bn, 3 relu, 4 gp, 5 fc.
+    const CONV: usize = 1;
+    const FC: usize = 5;
+
+    #[test]
+    fn outc_shards_partition_the_weights_exactly() {
+        let g = conv_fc_graph();
+        let d = presets::tms320c6678();
+        let plan = plan_cluster(&g, &d, 4, PartitionScheme::OutC, SyncMode::Ring);
+        let master = ParamStore::for_graph(&g);
+        let mut conv_w = Vec::new();
+        let mut fc_cols = vec![0usize; 4];
+        for rank in 0..4 {
+            let sp = ShardParams::extract(&g, &plan, &master, rank);
+            conv_w.extend_from_slice(&sp.get(CONV).w);
+            fc_cols[rank] = sp.get(FC).bias.len();
+            assert!(sp.total_bytes() < master.total_bytes());
+        }
+        // Conv weight rows reassemble to the master weights in rank order.
+        assert_eq!(conv_w, master.get_ref(CONV).w);
+        assert_eq!(fc_cols.iter().sum::<usize>(), 10);
+    }
+
+    #[test]
+    fn fc_column_slices_pick_the_right_columns() {
+        let g = conv_fc_graph();
+        let d = presets::tms320c6678();
+        let plan = plan_cluster(&g, &d, 2, PartitionScheme::OutC, SyncMode::Ring);
+        let master = ParamStore::for_graph(&g);
+        let full = master.get_ref(FC);
+        let k = 32; // global pool leaves 32 features
+        let sp1 = ShardParams::extract(&g, &plan, &master, 1);
+        let (j0, j1) = crate::opt::even_share(10, 2, 1);
+        let nw = j1 - j0;
+        assert_eq!(sp1.get(FC).w.len(), k * nw);
+        for kk in 0..k {
+            assert_eq!(
+                &sp1.get(FC).w[kk * nw..(kk + 1) * nw],
+                &full.w[kk * 10 + j0..kk * 10 + j1]
+            );
+        }
+    }
+
+    #[test]
+    fn replicated_nodes_keep_full_params() {
+        let g = conv_fc_graph();
+        let d = presets::tms320c6678();
+        let plan = plan_cluster(&g, &d, 2, PartitionScheme::InW, SyncMode::Ring);
+        let master = ParamStore::for_graph(&g);
+        let sp = ShardParams::extract(&g, &plan, &master, 1);
+        // fc is not spatially shardable -> replicated -> full weights.
+        assert_eq!(sp.get(FC).w, master.get_ref(FC).w);
+    }
+
+    #[test]
+    fn grouped_convs_shard_on_group_boundaries() {
+        let mut b = GraphBuilder::new("gshard");
+        let x = b.input("x", Shape::nchw(1, 16, 8, 8));
+        let c = b.gconv("g", x, 16, 1, 1, 0, 4);
+        b.output(c);
+        let g = b.finish();
+        let d = presets::tms320c6678();
+        let plan = plan_cluster(&g, &d, 3, PartitionScheme::OutC, SyncMode::Ring);
+        let master = ParamStore::for_graph(&g);
+        let a = match &g.node(1).op {
+            OpKind::Conv(a) => *a,
+            _ => unreachable!(),
+        };
+        let mut total = 0;
+        for rank in 0..3 {
+            let (c0, c1) = conv_channel_share(&a, 3, rank);
+            assert_eq!(c0 % a.out_c_per_group(), 0, "group-aligned start");
+            total += c1 - c0;
+            let sp = ShardParams::extract(&g, &plan, &master, rank);
+            assert_eq!(sp.get(1).w.len(), (c1 - c0) * a.in_c_per_group() * a.kh * a.kw);
+        }
+        assert_eq!(total, a.out_c);
+    }
+}

@@ -1,0 +1,317 @@
+//! Pluggable point-to-point transports for the d-Xenos cluster runtime.
+//!
+//! A [`Transport`] moves tagged f32 buffers between ranks; everything above
+//! it (the [`ring`](crate::dist::ring) / [`ps`](crate::dist::ps)
+//! collectives, halo exchanges, shard workers) is transport-agnostic.
+//! Two implementations:
+//!
+//! * [`LocalTransport`] — in-process mailboxes shared by shard threads; the
+//!   differential test backend and the engine behind `--engine cluster`.
+//! * [`TcpTransport`] — a full socket mesh over `std::net` with
+//!   length-prefixed frames, one reader thread per peer demultiplexing into
+//!   the same mailbox structure; true multi-process clusters
+//!   (`xenos dist-worker` / `xenos dist-run`).
+//!
+//! Matching: `recv(from, tag)` pairs with the `from` rank's sends of the
+//! same tag in FIFO order, so repeated tag use across inference rounds is
+//! safe as long as every send is matched by exactly one recv (all the
+//! collectives in this crate are matched by construction). Transport
+//! failures (peer death, 60 s silence on an expected message) panic with
+//! context; drivers catch worker panics at the thread/process boundary.
+
+use std::collections::{HashMap, VecDeque};
+use std::net::{TcpListener, TcpStream};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use super::wire;
+
+/// How long a `recv` waits without any mailbox activity before declaring
+/// the cluster wedged.
+const RECV_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Point-to-point message passing between the `world()` ranks of one
+/// cluster job.
+pub trait Transport: Send {
+    /// This endpoint's rank in `[0, world)`.
+    fn rank(&self) -> usize;
+    /// Cluster size.
+    fn world(&self) -> usize;
+    /// Send `data` to rank `to` under `tag`. Never blocks on the receiver.
+    fn send(&self, to: usize, tag: u64, data: &[f32]);
+    /// Receive the next `tag`-tagged buffer from rank `from` (FIFO per
+    /// `(from, tag)` pair), blocking until it arrives.
+    fn recv(&self, from: usize, tag: u64) -> Vec<f32>;
+}
+
+/// `(from, tag)`-keyed FIFO queues.
+type Queues = HashMap<(usize, u64), VecDeque<Vec<f32>>>;
+
+/// Tagged per-rank inbox with a condvar for blocking receives.
+pub(crate) struct Mailbox {
+    slots: Mutex<Queues>,
+    ready: Condvar,
+}
+
+impl Mailbox {
+    pub(crate) fn new() -> Mailbox {
+        Mailbox { slots: Mutex::new(HashMap::new()), ready: Condvar::new() }
+    }
+
+    pub(crate) fn put(&self, from: usize, tag: u64, data: Vec<f32>) {
+        let mut slots = self.slots.lock().expect("mailbox lock");
+        slots.entry((from, tag)).or_default().push_back(data);
+        self.ready.notify_all();
+    }
+
+    pub(crate) fn take(&self, from: usize, tag: u64) -> Vec<f32> {
+        let mut slots = self.slots.lock().expect("mailbox lock");
+        loop {
+            if let Some(q) = slots.get_mut(&(from, tag)) {
+                if let Some(d) = q.pop_front() {
+                    return d;
+                }
+            }
+            let (guard, timeout) =
+                self.ready.wait_timeout(slots, RECV_TIMEOUT).expect("mailbox lock");
+            slots = guard;
+            if timeout.timed_out() {
+                panic!("transport recv timed out waiting for rank {from} tag {tag:#x}");
+            }
+        }
+    }
+}
+
+/// In-process transport: all ranks share one vector of mailboxes.
+pub struct LocalTransport {
+    rank: usize,
+    boxes: Arc<Vec<Mailbox>>,
+}
+
+impl LocalTransport {
+    /// A fully-connected mesh of `world` endpoints (hand one per thread).
+    pub fn mesh(world: usize) -> Vec<LocalTransport> {
+        let boxes: Arc<Vec<Mailbox>> = Arc::new((0..world).map(|_| Mailbox::new()).collect());
+        (0..world).map(|rank| LocalTransport { rank, boxes: boxes.clone() }).collect()
+    }
+}
+
+impl Transport for LocalTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.boxes.len()
+    }
+
+    fn send(&self, to: usize, tag: u64, data: &[f32]) {
+        self.boxes[to].put(self.rank, tag, data.to_vec());
+    }
+
+    fn recv(&self, from: usize, tag: u64) -> Vec<f32> {
+        self.boxes[self.rank].take(from, tag)
+    }
+}
+
+/// Run one buffer-transforming collective over a scratch `LocalTransport`
+/// mesh, one thread per buffer — how the historical in-memory collective
+/// entry points (`ring_allreduce_exec`, `ps_allreduce_exec`) now execute:
+/// the in-memory path is literally the `LocalTransport` special case of the
+/// transport collectives.
+pub(crate) fn run_over_local_mesh(
+    bufs: Vec<Vec<f32>>,
+    f: impl Fn(&dyn Transport, &mut Vec<f32>) + Send + Sync,
+) -> Vec<Vec<f32>> {
+    let mesh = LocalTransport::mesh(bufs.len());
+    std::thread::scope(|scope| {
+        let f = &f;
+        let handles: Vec<_> = bufs
+            .into_iter()
+            .zip(mesh)
+            .map(|(mut data, t)| {
+                scope.spawn(move || {
+                    f(&t, &mut data);
+                    data
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("collective worker panicked")).collect()
+    })
+}
+
+/// TCP mesh transport: one socket per peer pair, length-prefixed frames
+/// (`[tag u64][len u32][payload]`, little-endian), a reader thread per
+/// inbound half feeding the shared mailbox.
+pub struct TcpTransport {
+    rank: usize,
+    world: usize,
+    mailbox: Arc<Mailbox>,
+    writers: Vec<Option<Mutex<TcpStream>>>,
+}
+
+impl TcpTransport {
+    /// Build the mesh for `rank` of `world`. `outbound[q]` must hold the
+    /// listen address of every rank `q < rank` (this rank initiates those
+    /// connections, identifying itself with a hello frame); `inbound` holds
+    /// the already-accepted sockets from every rank `> rank`, keyed by the
+    /// rank their hello frame declared.
+    pub fn new(
+        rank: usize,
+        world: usize,
+        outbound: &[String],
+        inbound: Vec<(usize, TcpStream)>,
+    ) -> std::io::Result<TcpTransport> {
+        let mailbox = Arc::new(Mailbox::new());
+        let mut writers: Vec<Option<Mutex<TcpStream>>> = (0..world).map(|_| None).collect();
+        let mut sockets: Vec<(usize, TcpStream)> = Vec::new();
+        for q in 0..rank {
+            let stream = connect_retry(&outbound[q])?;
+            stream.set_nodelay(true)?;
+            let mut hello = stream.try_clone()?;
+            wire::write_frame(&mut hello, wire::PEER_HELLO, &(rank as u32).to_le_bytes())?;
+            sockets.push((q, stream));
+        }
+        for (q, stream) in inbound {
+            assert!(q > rank && q < world, "inbound peer rank {q} out of range");
+            stream.set_nodelay(true)?;
+            sockets.push((q, stream));
+        }
+        for (q, stream) in sockets {
+            let reader = stream.try_clone()?;
+            spawn_reader(q, reader, mailbox.clone());
+            writers[q] = Some(Mutex::new(stream));
+        }
+        Ok(TcpTransport { rank, world, mailbox, writers })
+    }
+}
+
+/// Connect with a short retry window so a peer that is still binding its
+/// listener does not fail the whole mesh.
+fn connect_retry(addr: &str) -> std::io::Result<TcpStream> {
+    let mut last = None;
+    for _ in 0..25 {
+        match TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                last = Some(e);
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    }
+    Err(last.expect("at least one connect attempt"))
+}
+
+/// Reader half: frames from `peer` flow into the mailbox until EOF.
+fn spawn_reader(peer: usize, mut stream: TcpStream, mailbox: Arc<Mailbox>) {
+    std::thread::Builder::new()
+        .name(format!("xenos-tp-rx-{peer}"))
+        .spawn(move || {
+            loop {
+                match wire::read_frame(&mut stream) {
+                    Ok((tag, payload)) => mailbox.put(peer, tag, wire::bytes_to_f32s(&payload)),
+                    Err(_) => break, // peer closed; pending recvs will time out
+                }
+            }
+        })
+        .expect("spawning transport reader");
+}
+
+impl Transport for TcpTransport {
+    fn rank(&self) -> usize {
+        self.rank
+    }
+
+    fn world(&self) -> usize {
+        self.world
+    }
+
+    fn send(&self, to: usize, tag: u64, data: &[f32]) {
+        let w = self.writers[to]
+            .as_ref()
+            .unwrap_or_else(|| panic!("no link from rank {} to rank {to}", self.rank));
+        let mut stream = w.lock().expect("transport writer lock");
+        wire::write_frame(&mut *stream, tag, &wire::f32s_to_bytes(data))
+            .unwrap_or_else(|e| panic!("send to rank {to} failed: {e}"));
+    }
+
+    fn recv(&self, from: usize, tag: u64) -> Vec<f32> {
+        self.mailbox.take(from, tag)
+    }
+}
+
+/// Accept loop helper for worker processes: keep accepting on `listener`
+/// until the hello of every expected inbound peer (ranks `> rank`, i.e.
+/// `world - 1 - rank` of them) has arrived. Non-hello first frames are a
+/// protocol error.
+pub(crate) fn accept_peers(
+    listener: &TcpListener,
+    rank: usize,
+    world: usize,
+) -> std::io::Result<Vec<(usize, TcpStream)>> {
+    let expected = world - 1 - rank;
+    let mut peers = Vec::with_capacity(expected);
+    while peers.len() < expected {
+        let (mut sock, _) = listener.accept()?;
+        let (tag, payload) = wire::read_frame(&mut sock)?;
+        if tag != wire::PEER_HELLO || payload.len() != 4 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("expected peer hello, got frame tag {tag:#x}"),
+            ));
+        }
+        let q = u32::from_le_bytes(payload[..4].try_into().unwrap()) as usize;
+        peers.push((q, sock));
+    }
+    Ok(peers)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn local_mesh_routes_by_rank_and_tag() {
+        let mesh = LocalTransport::mesh(3);
+        mesh[0].send(2, 7, &[1.0, 2.0]);
+        mesh[1].send(2, 7, &[3.0]);
+        mesh[0].send(2, 9, &[4.0]);
+        assert_eq!(mesh[2].recv(0, 9), vec![4.0]);
+        assert_eq!(mesh[2].recv(0, 7), vec![1.0, 2.0]);
+        assert_eq!(mesh[2].recv(1, 7), vec![3.0]);
+    }
+
+    #[test]
+    fn local_fifo_per_tag() {
+        let mesh = LocalTransport::mesh(2);
+        mesh[0].send(1, 1, &[1.0]);
+        mesh[0].send(1, 1, &[2.0]);
+        assert_eq!(mesh[1].recv(0, 1), vec![1.0]);
+        assert_eq!(mesh[1].recv(0, 1), vec![2.0]);
+    }
+
+    #[test]
+    fn local_empty_payloads_flow() {
+        let mesh = LocalTransport::mesh(2);
+        mesh[1].send(0, 5, &[]);
+        assert!(mesh[0].recv(1, 5).is_empty());
+    }
+
+    #[test]
+    fn tcp_pair_round_trips_frames() {
+        // Two ranks over loopback: rank 1 initiates to rank 0.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t1 = std::thread::spawn(move || {
+            let t = TcpTransport::new(1, 2, &[addr], Vec::new()).unwrap();
+            t.send(0, 11, &[1.5, -2.5]);
+            t.recv(0, 12)
+        });
+        let inbound = accept_peers(&listener, 0, 2).unwrap();
+        assert_eq!(inbound[0].0, 1);
+        let t0 = TcpTransport::new(0, 2, &[], inbound).unwrap();
+        assert_eq!(t0.recv(1, 11), vec![1.5, -2.5]);
+        t0.send(1, 12, &[9.0]);
+        assert_eq!(t1.join().unwrap(), vec![9.0]);
+    }
+}

@@ -1,0 +1,377 @@
+//! Wire format of the d-Xenos cluster protocol.
+//!
+//! Everything on a socket is a **frame**: `[tag u64][len u32][payload]`
+//! (little-endian). Peer links carry raw f32 payloads under collective
+//! tags; the driver↔worker control link carries the structured payloads
+//! below (job spec, shard parameters, input/output tensors) under the
+//! `CTRL_*` tags. Serialization is hand-rolled — the offline build vendors
+//! no serde.
+
+use std::io::{Read, Write};
+
+use anyhow::{bail, Context, Result};
+
+use crate::dist::{PartitionScheme, SyncMode};
+use crate::graph::{Shape, TensorDesc};
+use crate::ops::params::NodeParams;
+use crate::ops::Tensor;
+
+/// Peer handshake: payload = initiating rank (u32).
+pub(crate) const PEER_HELLO: u64 = 0xFFFF_0001;
+/// Driver → worker: job spec.
+pub(crate) const CTRL_SPEC: u64 = 0xFFFF_0010;
+/// Driver → worker: this rank's shard parameters.
+pub(crate) const CTRL_PARAMS: u64 = 0xFFFF_0011;
+/// Driver → worker: one inference's input tensors.
+pub(crate) const CTRL_INPUT: u64 = 0xFFFF_0012;
+/// Worker (rank 0) → driver: output tensors.
+pub(crate) const CTRL_OUTPUT: u64 = 0xFFFF_0013;
+/// Worker (rank > 0) → driver: inference finished.
+pub(crate) const CTRL_DONE: u64 = 0xFFFF_0014;
+/// Worker → driver: job failed; payload = UTF-8 message.
+pub(crate) const CTRL_ERR: u64 = 0xFFFF_0015;
+/// Driver → worker: session over.
+pub(crate) const CTRL_SHUTDOWN: u64 = 0xFFFF_0016;
+
+/// Largest frame either side will accept: comfortably above the biggest
+/// legitimate payload (a full resnet101 parameter shard, ~180 MB) while
+/// keeping a garbage length header from demanding a 4 GiB allocation.
+pub(crate) const MAX_FRAME_BYTES: usize = 512 << 20;
+
+/// Write one frame.
+pub(crate) fn write_frame(w: &mut impl Write, tag: u64, payload: &[u8]) -> std::io::Result<()> {
+    assert!(payload.len() <= MAX_FRAME_BYTES, "frame payload over the wire limit");
+    w.write_all(&tag.to_le_bytes())?;
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one frame (blocking). Rejects frames whose declared length exceeds
+/// [`MAX_FRAME_BYTES`] before allocating anything.
+pub(crate) fn read_frame(r: &mut impl Read) -> std::io::Result<(u64, Vec<u8>)> {
+    let mut head = [0u8; 12];
+    r.read_exact(&mut head)?;
+    let tag = u64::from_le_bytes(head[..8].try_into().unwrap());
+    let len = u32::from_le_bytes(head[8..].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds the {MAX_FRAME_BYTES}-byte limit"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    r.read_exact(&mut payload)?;
+    Ok((tag, payload))
+}
+
+/// f32 slice → little-endian bytes.
+pub(crate) fn f32s_to_bytes(data: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(data.len() * 4);
+    for v in data {
+        out.extend_from_slice(&v.to_le_bytes());
+    }
+    out
+}
+
+/// Little-endian bytes → f32s. A misaligned length means a corrupt peer
+/// frame; failing loudly here beats a short buffer detonating inside a
+/// collective far from the cause.
+pub(crate) fn bytes_to_f32s(bytes: &[u8]) -> Vec<f32> {
+    assert_eq!(bytes.len() % 4, 0, "payload not f32-aligned: corrupt peer frame");
+    bytes
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
+}
+
+/// Append-only encoder.
+#[derive(Default)]
+pub(crate) struct Enc {
+    pub(crate) buf: Vec<u8>,
+}
+
+impl Enc {
+    pub(crate) fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub(crate) fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub(crate) fn f32s(&mut self, v: &[f32]) {
+        self.u32(v.len() as u32);
+        self.buf.extend_from_slice(&f32s_to_bytes(v));
+    }
+}
+
+/// Cursor decoder with bounds checking.
+pub(crate) struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub(crate) fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated payload: need {n} bytes at {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub(crate) fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn str(&mut self) -> Result<String> {
+        let n = self.u32()? as usize;
+        String::from_utf8(self.bytes(n)?.to_vec()).context("non-UTF8 string")
+    }
+
+    pub(crate) fn f32s(&mut self) -> Result<Vec<f32>> {
+        let n = self.u32()? as usize;
+        Ok(bytes_to_f32s(self.bytes(n * 4)?))
+    }
+}
+
+/// One cluster job as shipped to a worker: everything a rank needs to
+/// deterministically rebuild the same graph and cluster plan the driver
+/// cut (parameters travel separately under [`CTRL_PARAMS`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobSpec {
+    /// Zoo model name.
+    pub model: String,
+    /// Device preset name (drives the Mix cost model).
+    pub device: String,
+    /// This worker's rank.
+    pub rank: usize,
+    /// Cluster size.
+    pub world: usize,
+    /// Intra-shard executor threads.
+    pub threads: usize,
+    /// Partition scheme.
+    pub scheme: PartitionScheme,
+    /// Synchronization mode.
+    pub sync: SyncMode,
+    /// Listen addresses of all ranks, in rank order.
+    pub peers: Vec<String>,
+}
+
+pub(crate) fn scheme_to_u8(s: PartitionScheme) -> u8 {
+    match s {
+        PartitionScheme::OutC => 0,
+        PartitionScheme::InH => 1,
+        PartitionScheme::InW => 2,
+        PartitionScheme::Mix => 3,
+    }
+}
+
+pub(crate) fn scheme_from_u8(v: u8) -> Result<PartitionScheme> {
+    Ok(match v {
+        0 => PartitionScheme::OutC,
+        1 => PartitionScheme::InH,
+        2 => PartitionScheme::InW,
+        3 => PartitionScheme::Mix,
+        other => bail!("unknown partition scheme code {other}"),
+    })
+}
+
+pub(crate) fn sync_to_u8(s: SyncMode) -> u8 {
+    match s {
+        SyncMode::Ring => 0,
+        SyncMode::Ps => 1,
+    }
+}
+
+pub(crate) fn sync_from_u8(v: u8) -> Result<SyncMode> {
+    Ok(match v {
+        0 => SyncMode::Ring,
+        1 => SyncMode::Ps,
+        other => bail!("unknown sync mode code {other}"),
+    })
+}
+
+pub(crate) fn encode_spec(spec: &JobSpec) -> Vec<u8> {
+    let mut e = Enc::default();
+    e.str(&spec.model);
+    e.str(&spec.device);
+    e.u32(spec.rank as u32);
+    e.u32(spec.world as u32);
+    e.u32(spec.threads as u32);
+    e.u32(scheme_to_u8(spec.scheme) as u32);
+    e.u32(sync_to_u8(spec.sync) as u32);
+    e.u32(spec.peers.len() as u32);
+    for p in &spec.peers {
+        e.str(p);
+    }
+    e.buf
+}
+
+pub(crate) fn decode_spec(payload: &[u8]) -> Result<JobSpec> {
+    let mut d = Dec::new(payload);
+    let model = d.str()?;
+    let device = d.str()?;
+    let rank = d.u32()? as usize;
+    let world = d.u32()? as usize;
+    let threads = d.u32()? as usize;
+    let scheme = scheme_from_u8(d.u32()? as u8)?;
+    let sync = sync_from_u8(d.u32()? as u8)?;
+    let n = d.u32()? as usize;
+    let mut peers = Vec::with_capacity(n);
+    for _ in 0..n {
+        peers.push(d.str()?);
+    }
+    Ok(JobSpec { model, device, rank, world, threads, scheme, sync, peers })
+}
+
+/// Serialize per-node parameter shards (`by_node` indexed by `NodeId`).
+pub(crate) fn encode_params(by_node: &[NodeParams]) -> Vec<u8> {
+    let mut e = Enc::default();
+    e.u32(by_node.len() as u32);
+    for p in by_node {
+        e.f32s(&p.w);
+        e.f32s(&p.bias);
+        e.f32s(&p.scale);
+        e.f32s(&p.shift);
+    }
+    e.buf
+}
+
+pub(crate) fn decode_params(payload: &[u8]) -> Result<Vec<NodeParams>> {
+    let mut d = Dec::new(payload);
+    let n = d.u32()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        out.push(NodeParams {
+            w: d.f32s()?,
+            bias: d.f32s()?,
+            scale: d.f32s()?,
+            shift: d.f32s()?,
+        });
+    }
+    Ok(out)
+}
+
+/// Serialize tensors (shape dims + data; 4-D shapes decode as feature
+/// maps, everything else as plain row-major — the zoo convention).
+pub(crate) fn encode_tensors(ts: &[Tensor]) -> Vec<u8> {
+    let mut e = Enc::default();
+    e.u32(ts.len() as u32);
+    for t in ts {
+        let dims = &t.shape().dims;
+        e.u32(dims.len() as u32);
+        for &d in dims {
+            e.u32(d as u32);
+        }
+        e.f32s(&t.data);
+    }
+    e.buf
+}
+
+pub(crate) fn decode_tensors(payload: &[u8]) -> Result<Vec<Tensor>> {
+    let mut d = Dec::new(payload);
+    let n = d.u32()? as usize;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let rank = d.u32()? as usize;
+        let mut dims = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            dims.push(d.u32()? as usize);
+        }
+        let data = d.f32s()?;
+        let shape = Shape::new(dims);
+        let desc = if shape.is_fm() {
+            TensorDesc::fm(shape.dims[0], shape.dims[1], shape.dims[2], shape.dims[3])
+        } else {
+            TensorDesc::plain(shape)
+        };
+        if desc.shape.numel() != data.len() {
+            bail!("tensor payload length {} does not match shape", data.len());
+        }
+        out.push(Tensor::new(desc, data));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frames_round_trip() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, CTRL_INPUT, &[1, 2, 3]).unwrap();
+        write_frame(&mut buf, CTRL_DONE, &[]).unwrap();
+        let mut cursor = &buf[..];
+        assert_eq!(read_frame(&mut cursor).unwrap(), (CTRL_INPUT, vec![1, 2, 3]));
+        assert_eq!(read_frame(&mut cursor).unwrap(), (CTRL_DONE, vec![]));
+    }
+
+    #[test]
+    fn f32_bytes_round_trip() {
+        let v = vec![0.0f32, -1.5, f32::MAX, 1e-30];
+        assert_eq!(bytes_to_f32s(&f32s_to_bytes(&v)), v);
+    }
+
+    #[test]
+    fn spec_round_trips() {
+        let spec = JobSpec {
+            model: "mobilenet".into(),
+            device: "tms320c6678".into(),
+            rank: 1,
+            world: 4,
+            threads: 2,
+            scheme: PartitionScheme::Mix,
+            sync: SyncMode::Ps,
+            peers: vec!["127.0.0.1:7001".into(), "127.0.0.1:7002".into()],
+        };
+        assert_eq!(decode_spec(&encode_spec(&spec)).unwrap(), spec);
+    }
+
+    #[test]
+    fn params_round_trip() {
+        let ps = vec![
+            NodeParams::default(),
+            NodeParams { w: vec![1.0, 2.0], bias: vec![3.0], scale: vec![], shift: vec![0.5] },
+        ];
+        let got = decode_params(&encode_params(&ps)).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[1].w, vec![1.0, 2.0]);
+        assert_eq!(got[1].shift, vec![0.5]);
+    }
+
+    #[test]
+    fn tensors_round_trip() {
+        let ts = vec![
+            Tensor::fm(1, 2, 3, 3, (0..18).map(|i| i as f32).collect()),
+            Tensor::mat(2, 2, vec![1.0, 2.0, 3.0, 4.0]),
+        ];
+        let got = decode_tensors(&encode_tensors(&ts)).unwrap();
+        assert_eq!(got[0].shape(), ts[0].shape());
+        assert_eq!(got[0].data, ts[0].data);
+        assert_eq!(got[1].data, ts[1].data);
+    }
+
+    #[test]
+    fn truncated_payload_is_an_error() {
+        let enc = encode_spec(&JobSpec {
+            model: "m".into(),
+            device: "d".into(),
+            rank: 0,
+            world: 1,
+            threads: 1,
+            scheme: PartitionScheme::OutC,
+            sync: SyncMode::Ring,
+            peers: vec![],
+        });
+        assert!(decode_spec(&enc[..enc.len() - 2]).is_err());
+    }
+}

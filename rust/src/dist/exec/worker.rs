@@ -1,0 +1,815 @@
+//! The shard worker: one rank's engine in a d-Xenos cluster.
+//!
+//! A `ShardWorker` owns one engine slice — the shared serial kernels, or a
+//! local [`WorkerPool`] when `threads > 1` — plus a [`Transport`] endpoint,
+//! and executes its slice of every layer of a [`ClusterPlan`]:
+//!
+//! * **Replicated** layers run in full on every rank (no traffic — the
+//!   runtime's answer to the simulator's serial-plus-broadcast arm).
+//! * **OutC** layers compute an output-channel (FC-column) slice from
+//!   shard-local weights, then reassemble the full activation with a
+//!   ring/PS **all-gather**.
+//! * **InH/InW** layers compute a row/column slab; the activation stays
+//!   sharded and downstream consumers pull boundary **halo** rows/columns
+//!   point-to-point from the owning ranks. Consumers that need the whole
+//!   tensor (FC heads, global pooling, graph outputs) trigger a full
+//!   spatial all-gather.
+//!
+//! Every sharded kernel runs the same per-element float expressions in the
+//! same order as the serial [`Interpreter`](crate::ops::Interpreter) (the
+//! region kernels in `ops::conv` / `ops::pool` are shared), so cluster
+//! output is **bit-identical** to single-device output for every scheme —
+//! the property `tests/cluster.rs` asserts across models, schemes and
+//! cluster sizes.
+
+use std::sync::Arc;
+
+use super::plan::{ClusterPlan, LayerScheme};
+use super::shard::{conv_channel_share, ShardParams};
+use super::transport::Transport;
+use crate::dist::{ps, ring, SyncMode};
+use crate::graph::{ConvAttrs, Graph, Node, NodeId, OpKind, PoolAttrs, TensorDesc};
+use crate::ops::interp::exec_node;
+use crate::ops::params::NodeParams;
+use crate::ops::{conv, elementwise as ew, matmul, pool as pooling, Tensor};
+use crate::opt::even_share;
+use crate::runtime::pool::{ScopedJob, WorkerPool};
+
+/// Spatial shard axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Axis {
+    Rows,
+    Cols,
+}
+
+/// One value's distribution state on this rank. `Sharded` buffers are
+/// full-size; the rank's own slab (`even_share` of the axis extent) is
+/// authoritative and halo regions are filled on demand.
+enum ShardVal {
+    Full(Tensor),
+    Sharded(Tensor, Axis),
+}
+
+impl ShardVal {
+    fn tensor(&self) -> &Tensor {
+        match self {
+            ShardVal::Full(t) | ShardVal::Sharded(t, _) => t,
+        }
+    }
+}
+
+/// Output region of one sharded kernel launch.
+#[derive(Debug, Clone, Copy)]
+struct Rect {
+    y0: usize,
+    y1: usize,
+    x0: usize,
+    x1: usize,
+}
+
+/// Raw output pointer crossing into the local worker pool; jobs write
+/// disjoint regions only (same discipline as `ops::par_exec`).
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+// SAFETY: only dereferenced on disjoint regions while the owning buffer is
+// kept alive by the blocking `WorkerPool::run` call.
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Tag bases; each collective instance consumes a sub-range, spaced so no
+/// two instances overlap (node ids and spatial extents are far below 2^16).
+const TAG_GATHER: u64 = 1 << 60;
+const TAG_OUTC: u64 = 2 << 60;
+const TAG_HALO: u64 = 3 << 60;
+
+fn gather_tag(id: NodeId) -> u64 {
+    TAG_GATHER + (id as u64) * 1024
+}
+
+fn outc_tag(id: NodeId) -> u64 {
+    TAG_OUTC + (id as u64) * 1024
+}
+
+fn halo_tag(value: NodeId, consumer: NodeId, lo: usize) -> u64 {
+    TAG_HALO | ((value as u64) << 32) | ((consumer as u64) << 16) | lo as u64
+}
+
+/// NCHW dims of a batch-1 feature map.
+fn fm_dims(t: &Tensor) -> (usize, usize, usize) {
+    let s = t.shape();
+    (s.c(), s.h(), s.w())
+}
+
+/// The worker.
+pub struct ShardWorker {
+    graph: Arc<Graph>,
+    plan: ClusterPlan,
+    params: ShardParams,
+    transport: Box<dyn Transport>,
+    pool: Option<WorkerPool>,
+}
+
+impl ShardWorker {
+    /// Build a worker for one rank. `threads > 1` backs the shard's own
+    /// kernels with a local worker pool (the `ParInterpreter`-style engine);
+    /// `threads == 1` is the serial engine.
+    pub fn new(
+        graph: Arc<Graph>,
+        plan: ClusterPlan,
+        params: ShardParams,
+        transport: Box<dyn Transport>,
+        threads: usize,
+    ) -> ShardWorker {
+        assert_eq!(plan.schemes.len(), graph.len(), "plan does not match graph");
+        assert_eq!(plan.world, transport.world(), "plan does not match transport world");
+        let threads = crate::ops::par_exec::clamp_workers(threads);
+        let pool = if threads > 1 { Some(WorkerPool::new(threads)) } else { None };
+        ShardWorker { graph, plan, params, transport, pool }
+    }
+
+    /// This worker's rank.
+    pub fn rank(&self) -> usize {
+        self.transport.rank()
+    }
+
+    /// Cluster size.
+    pub fn world(&self) -> usize {
+        self.transport.world()
+    }
+
+    /// Run one distributed inference. Every rank must call `run` with the
+    /// same inputs; all ranks return the full outputs (rank 0's copy is the
+    /// one drivers report).
+    pub fn run(&self, inputs: &[Tensor]) -> Vec<Tensor> {
+        let g = &*self.graph;
+        let input_ids = g.input_ids();
+        assert_eq!(
+            inputs.len(),
+            input_ids.len(),
+            "graph {} expects {} inputs",
+            g.name,
+            input_ids.len()
+        );
+
+        let mut uses: Vec<usize> = vec![0; g.len()];
+        for n in &g.nodes {
+            for &i in &n.inputs {
+                uses[i] += 1;
+            }
+        }
+        for &o in &g.outputs {
+            uses[o] += 1;
+        }
+
+        let mut vals: Vec<Option<ShardVal>> = (0..g.len()).map(|_| None).collect();
+        let mut next_input = 0usize;
+        for node in &g.nodes {
+            let out = if matches!(node.op, OpKind::Input) {
+                let t = inputs[next_input].clone();
+                assert_eq!(t.shape(), &node.out.shape, "input {} shape mismatch", next_input);
+                next_input += 1;
+                ShardVal::Full(t)
+            } else {
+                match self.plan.schemes[node.id] {
+                    LayerScheme::Replicated => {
+                        for &i in &node.inputs {
+                            self.ensure_full(&mut vals, i);
+                        }
+                        let args = arg_refs(&vals, node);
+                        ShardVal::Full(exec_node(self.params.get(node.id), &node.op, &args))
+                    }
+                    LayerScheme::OutC => {
+                        for &i in &node.inputs {
+                            self.ensure_full(&mut vals, i);
+                        }
+                        let args = arg_refs(&vals, node);
+                        ShardVal::Full(self.exec_outc(node, &args))
+                    }
+                    LayerScheme::InH => {
+                        self.prepare_spatial_inputs(&mut vals, node, Axis::Rows);
+                        let args = arg_refs(&vals, node);
+                        ShardVal::Sharded(self.exec_spatial(node, &args, Axis::Rows), Axis::Rows)
+                    }
+                    LayerScheme::InW => {
+                        self.prepare_spatial_inputs(&mut vals, node, Axis::Cols);
+                        let args = arg_refs(&vals, node);
+                        ShardVal::Sharded(self.exec_spatial(node, &args, Axis::Cols), Axis::Cols)
+                    }
+                }
+            };
+            vals[node.id] = Some(out);
+            for &i in &node.inputs {
+                uses[i] -= 1;
+                if uses[i] == 0 && !g.outputs.contains(&i) {
+                    vals[i] = None;
+                }
+            }
+        }
+        for &o in &g.outputs {
+            self.ensure_full(&mut vals, o);
+        }
+        g.outputs
+            .iter()
+            .map(|&o| vals[o].as_ref().expect("output computed").tensor().clone())
+            .collect()
+    }
+
+    /// Dispatch an all-gather of one block per rank through the plan's
+    /// sync mode.
+    fn all_gather(&self, mine: Vec<f32>, base_tag: u64) -> Vec<Vec<f32>> {
+        match self.plan.sync {
+            SyncMode::Ring => ring::ring_all_gather_tp(&*self.transport, mine, base_tag),
+            SyncMode::Ps => ps::ps_all_gather_tp(&*self.transport, mine, base_tag),
+        }
+    }
+
+    /// Reassemble a sharded value into a full tensor on every rank.
+    fn ensure_full(&self, vals: &mut [Option<ShardVal>], id: NodeId) {
+        if matches!(vals[id], Some(ShardVal::Full(_))) {
+            return;
+        }
+        let (mut t, axis) = match vals[id].take().expect("value live") {
+            ShardVal::Full(_) => unreachable!("checked above"),
+            ShardVal::Sharded(t, axis) => (t, axis),
+        };
+        let (_, h, w) = fm_dims(&t);
+        let extent = match axis {
+            Axis::Rows => h,
+            Axis::Cols => w,
+        };
+        let p = self.world();
+        let me = self.rank();
+        let (mlo, mhi) = even_share(extent, p, me);
+        let mine = pack_rect(&t, axis_rect(&t, axis, mlo, mhi));
+        let blocks = self.all_gather(mine, gather_tag(id));
+        for (q, block) in blocks.iter().enumerate() {
+            if q == me {
+                continue;
+            }
+            let (qlo, qhi) = even_share(extent, p, q);
+            unpack_rect(&mut t, axis_rect(&t, axis, qlo, qhi), block);
+        }
+        vals[id] = Some(ShardVal::Full(t));
+    }
+
+    /// Bring every input of a spatial node in reach: same-axis sharded
+    /// inputs get their halo regions via point-to-point exchange; anything
+    /// else sharded is gathered to full.
+    fn prepare_spatial_inputs(&self, vals: &mut [Option<ShardVal>], node: &Node, axis: Axis) {
+        for &i in &node.inputs {
+            let same_axis = match vals[i].as_ref().expect("value live") {
+                ShardVal::Full(_) => None,
+                ShardVal::Sharded(_, a) => Some(*a == axis),
+            };
+            match same_axis {
+                None => {}
+                Some(true) => self.exchange_halo(vals, i, node, axis),
+                Some(false) => self.ensure_full(vals, i),
+            }
+        }
+    }
+
+    /// Halo exchange for one sharded input of one spatial consumer: every
+    /// rank serves the slab segments it owns to the ranks whose needed
+    /// range extends past their own slab. All ranks iterate the same
+    /// deterministic (sender, receiver) schedule, so sends and receives
+    /// are matched pairwise with no barrier.
+    fn exchange_halo(
+        &self,
+        vals: &mut [Option<ShardVal>],
+        value_id: NodeId,
+        consumer: &Node,
+        axis: Axis,
+    ) {
+        let p = self.world();
+        let me = self.rank();
+        let t = match vals[value_id].as_mut().expect("value live") {
+            ShardVal::Sharded(t, _) => t,
+            ShardVal::Full(_) => unreachable!("halo exchange on full value"),
+        };
+        let (_, h, w) = fm_dims(t);
+        let in_extent = match axis {
+            Axis::Rows => h,
+            Axis::Cols => w,
+        };
+        let out_shape = &consumer.out.shape;
+        let out_extent = match axis {
+            Axis::Rows => out_shape.h(),
+            Axis::Cols => out_shape.w(),
+        };
+        let need = |d: usize| {
+            let (olo, ohi) = even_share(out_extent, p, d);
+            needed_range(consumer, olo, ohi, in_extent, axis)
+        };
+        for s in 0..p {
+            let (slo, shi) = even_share(in_extent, p, s);
+            for d in 0..p {
+                if s == d {
+                    continue;
+                }
+                let (dlo, dhi) = even_share(in_extent, p, d);
+                let (nlo, nhi) = need(d);
+                // Needed minus owned: at most a segment below and above.
+                for (a, b) in [(nlo, nhi.min(dlo)), (nlo.max(dhi), nhi)] {
+                    let lo = a.max(slo);
+                    let hi = b.min(shi);
+                    if lo >= hi {
+                        continue;
+                    }
+                    let tag = halo_tag(value_id, consumer.id, lo);
+                    if s == me {
+                        let block = pack_rect(t, axis_rect(t, axis, lo, hi));
+                        self.transport.send(d, tag, &block);
+                    } else if d == me {
+                        let block = self.transport.recv(s, tag);
+                        unpack_rect(t, axis_rect(t, axis, lo, hi), &block);
+                    }
+                }
+            }
+        }
+    }
+
+    /// OutC-sharded execution: compute this rank's output-channel/column
+    /// slice from shard-local weights, then all-gather the slices into the
+    /// full activation.
+    fn exec_outc(&self, node: &Node, args: &[&Tensor]) -> Tensor {
+        let p = self.world();
+        let me = self.rank();
+        let prm = self.params.get(node.id);
+        match &node.op {
+            OpKind::Conv(a) | OpKind::Cbr(a) | OpKind::Cbra(a, _) | OpKind::Cbrm(a, _) => {
+                let (c0, c1) = conv_channel_share(a, p, me);
+                let mine = if c0 >= c1 {
+                    Vec::new()
+                } else {
+                    self.conv_family_slice(node, a, prm, args[0], c0, c1).data
+                };
+                let blocks = self.all_gather(mine, outc_tag(node.id));
+                let mut out = Tensor::zeros(node.out.clone());
+                let (_, oh, ow) = fm_dims(&out);
+                let ohw = oh * ow;
+                for (q, block) in blocks.iter().enumerate() {
+                    let (q0, q1) = conv_channel_share(a, p, q);
+                    debug_assert_eq!(block.len(), (q1 - q0) * ohw, "channel block size");
+                    out.data[q0 * ohw..q1 * ohw].copy_from_slice(block);
+                }
+                out
+            }
+            OpKind::MatMul(m) if m.weighted => {
+                let (j0, j1) = even_share(m.n, p, me);
+                let rows = args[0].shape().numel() / m.k;
+                let mine = if j0 >= j1 {
+                    Vec::new()
+                } else {
+                    matmul::fc(args[0], m.k, j1 - j0, &prm.w, &prm.bias).data
+                };
+                let blocks = self.all_gather(mine, outc_tag(node.id));
+                let mut out = Tensor::zeros(node.out.clone());
+                for (q, block) in blocks.iter().enumerate() {
+                    let (q0, q1) = even_share(m.n, p, q);
+                    let nw = q1 - q0;
+                    for r in 0..rows {
+                        out.data[r * m.n + q0..r * m.n + q1]
+                            .copy_from_slice(&block[r * nw..(r + 1) * nw]);
+                    }
+                }
+                out
+            }
+            other => unreachable!("outC scheme on unshardable op {other:?}"),
+        }
+    }
+
+    /// The conv-family channel slice `[c0, c1)` as its own tensor, computed
+    /// from shard-local (sliced) parameters. Grouped convs slice their
+    /// input channels too; dense convs read the full input.
+    fn conv_family_slice(
+        &self,
+        node: &Node,
+        a: &ConvAttrs,
+        prm: &NodeParams,
+        x: &Tensor,
+        c0: usize,
+        c1: usize,
+    ) -> Tensor {
+        let sliced_input;
+        let (sub, xin): (ConvAttrs, &Tensor) = if a.groups > 1 {
+            let g0 = c0 / a.out_c_per_group();
+            let g1 = c1 / a.out_c_per_group();
+            sliced_input =
+                crate::ops::shape_ops::slice_c(x, g0 * a.in_c_per_group(), g1 * a.in_c_per_group());
+            (a.group_slice(g0, g1), &sliced_input)
+        } else {
+            (a.out_c_slice(c0, c1), x)
+        };
+        let s = xin.shape();
+        let (oh, ow) = sub.out_hw(s.h(), s.w());
+        let mut t = Tensor::zeros(TensorDesc::fm(1, sub.out_c, oh, ow));
+        self.conv_region(
+            xin,
+            &sub,
+            &prm.w,
+            &prm.bias,
+            0,
+            sub.out_c,
+            Rect { y0: 0, y1: oh, x0: 0, x1: ow },
+            oh,
+            ow,
+            t.data.as_mut_ptr(),
+        );
+        let full = Rect { y0: 0, y1: oh, x0: 0, x1: ow };
+        match &node.op {
+            OpKind::Conv(_) => t,
+            OpKind::Cbr(_) => {
+                affine_relu_rect(&mut t, &prm.scale, &prm.shift, full);
+                t
+            }
+            OpKind::Cbra(_, pl) | OpKind::Cbrm(_, pl) => {
+                affine_relu_rect(&mut t, &prm.scale, &prm.shift, full);
+                pooling::pool(&t, pl)
+            }
+            other => unreachable!("conv family only, got {other:?}"),
+        }
+    }
+
+    /// Spatially-sharded execution: compute this rank's row/column slab of
+    /// the output into a full-size buffer (the slab stays sharded; no
+    /// communication here).
+    fn exec_spatial(&self, node: &Node, args: &[&Tensor], axis: Axis) -> Tensor {
+        let mut out = Tensor::zeros(node.out.clone());
+        let (c, oh, ow) = fm_dims(&out);
+        let extent = match axis {
+            Axis::Rows => oh,
+            Axis::Cols => ow,
+        };
+        let (lo, hi) = even_share(extent, self.world(), self.rank());
+        if lo >= hi {
+            return out;
+        }
+        let r = match axis {
+            Axis::Rows => Rect { y0: lo, y1: hi, x0: 0, x1: ow },
+            Axis::Cols => Rect { y0: 0, y1: oh, x0: lo, x1: hi },
+        };
+        let prm = self.params.get(node.id);
+        match &node.op {
+            OpKind::Conv(a) => {
+                let ptr = out.data.as_mut_ptr();
+                self.conv_region(args[0], a, &prm.w, &prm.bias, 0, a.out_c, r, oh, ow, ptr);
+            }
+            OpKind::Cbr(a) => {
+                let ptr = out.data.as_mut_ptr();
+                self.conv_region(args[0], a, &prm.w, &prm.bias, 0, a.out_c, r, oh, ow, ptr);
+                affine_relu_rect(&mut out, &prm.scale, &prm.shift, r);
+            }
+            OpKind::Cbra(a, pl) | OpKind::Cbrm(a, pl) => {
+                let s = args[0].shape();
+                let (ph, pw) = a.out_hw(s.h(), s.w());
+                let pr = match axis {
+                    Axis::Rows => {
+                        let (plo, phi) = pool_in_range(pl, lo, hi, ph);
+                        Rect { y0: plo, y1: phi, x0: 0, x1: pw }
+                    }
+                    Axis::Cols => {
+                        let (plo, phi) = pool_in_range(pl, lo, hi, pw);
+                        Rect { y0: 0, y1: ph, x0: plo, x1: phi }
+                    }
+                };
+                let mut pre = Tensor::zeros(TensorDesc::fm(1, a.out_c, ph, pw));
+                let pre_ptr = pre.data.as_mut_ptr();
+                self.conv_region(args[0], a, &prm.w, &prm.bias, 0, a.out_c, pr, ph, pw, pre_ptr);
+                affine_relu_rect(&mut pre, &prm.scale, &prm.shift, pr);
+                let ptr = out.data.as_mut_ptr();
+                // SAFETY: single-threaded call on a buffer this rank owns.
+                unsafe {
+                    pooling::pool_tile_raw(&pre, pl, 0, 0, c, r.y0, r.y1, r.x0, r.x1, oh, ow, ptr)
+                };
+            }
+            OpKind::Pool(pl) => {
+                // Global pooling is never spatially sharded (plan gate).
+                let ptr = out.data.as_mut_ptr();
+                // SAFETY: single-threaded call on a buffer this rank owns.
+                unsafe {
+                    pooling::pool_tile_raw(
+                        args[0], pl, 0, 0, c, r.y0, r.y1, r.x0, r.x1, oh, ow, ptr,
+                    )
+                };
+            }
+            OpKind::Relu => map_rect(args[0], &mut out, r, ew::relu1),
+            OpKind::Sigmoid => map_rect(args[0], &mut out, r, ew::sigmoid1),
+            OpKind::Tanh => map_rect(args[0], &mut out, r, ew::tanh1),
+            OpKind::Gelu => map_rect(args[0], &mut out, r, ew::gelu1),
+            OpKind::Add => zip_rect(args[0], args[1], &mut out, r, |a, b| a + b),
+            OpKind::Mul => zip_rect(args[0], args[1], &mut out, r, |a, b| a * b),
+            OpKind::Mac => mac_rect(args[0], args[1], args[2], &mut out, r),
+            OpKind::BatchNorm => affine_rect(args[0], &mut out, &prm.scale, &prm.shift, r),
+            OpKind::Bias => affine_rect(args[0], &mut out, &[], &prm.bias, r),
+            OpKind::Upsample { factor } => upsample_rect(args[0], &mut out, *factor, r),
+            OpKind::Concat => concat_rect(args, &mut out, r),
+            OpKind::Slice { begin, .. } => slice_rect(args[0], &mut out, *begin, r),
+            OpKind::ChannelShuffle { groups } => shuffle_rect(args[0], &mut out, *groups, r),
+            other => unreachable!("spatial scheme on unshardable op {other:?}"),
+        }
+        out
+    }
+
+    /// Convolution over one output region, chunked across the local worker
+    /// pool when this shard owns one. Chunk boundaries never change the
+    /// per-element arithmetic (`conv2d_region_raw` routes exactly like the
+    /// serial path), so pooled and serial shards are bit-identical.
+    #[allow(clippy::too_many_arguments)]
+    fn conv_region(
+        &self,
+        x: &Tensor,
+        a: &ConvAttrs,
+        w: &[f32],
+        bias: &[f32],
+        c0: usize,
+        c1: usize,
+        r: Rect,
+        oh: usize,
+        ow: usize,
+        out: *mut f32,
+    ) {
+        if c0 >= c1 || r.y0 >= r.y1 || r.x0 >= r.x1 {
+            return;
+        }
+        match &self.pool {
+            Some(pool) => {
+                let ptr = SendPtr(out);
+                let ways = pool.len();
+                let a2 = *a;
+                let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+                if r.y1 - r.y0 >= c1 - c0 {
+                    for (s, e) in split_range(r.y0, r.y1, ways) {
+                        jobs.push(Box::new(move || {
+                            // SAFETY: disjoint row sub-regions.
+                            unsafe {
+                                conv::conv2d_region_raw(
+                                    x, &a2, w, bias, c0, c1, s, e, r.x0, r.x1, oh, ow, ptr.0,
+                                )
+                            };
+                        }));
+                    }
+                } else {
+                    for (s, e) in split_range(c0, c1, ways) {
+                        jobs.push(Box::new(move || {
+                            // SAFETY: disjoint channel sub-regions.
+                            unsafe {
+                                conv::conv2d_region_raw(
+                                    x, &a2, w, bias, s, e, r.y0, r.y1, r.x0, r.x1, oh, ow, ptr.0,
+                                )
+                            };
+                        }));
+                    }
+                }
+                pool.run(jobs);
+            }
+            None => {
+                // SAFETY: single-threaded call covering the region once.
+                unsafe {
+                    conv::conv2d_region_raw(
+                        x, a, w, bias, c0, c1, r.y0, r.y1, r.x0, r.x1, oh, ow, out,
+                    )
+                };
+            }
+        }
+    }
+}
+
+/// Immutable argument views (all inputs must be prepared).
+fn arg_refs<'a>(vals: &'a [Option<ShardVal>], node: &Node) -> Vec<&'a Tensor> {
+    node.inputs
+        .iter()
+        .map(|&i| vals[i].as_ref().expect("input value live").tensor())
+        .collect()
+}
+
+/// The full-width rect of an axis range on a feature map.
+fn axis_rect(t: &Tensor, axis: Axis, lo: usize, hi: usize) -> Rect {
+    let (_, h, w) = fm_dims(t);
+    match axis {
+        Axis::Rows => Rect { y0: lo, y1: hi, x0: 0, x1: w },
+        Axis::Cols => Rect { y0: 0, y1: h, x0: lo, x1: hi },
+    }
+}
+
+/// Near-even split of `[lo, hi)` into at most `ways` non-empty chunks.
+fn split_range(lo: usize, hi: usize, ways: usize) -> Vec<(usize, usize)> {
+    let total = hi - lo;
+    (0..ways)
+        .map(|i| even_share(total, ways, i))
+        .filter(|(s, e)| s < e)
+        .map(|(s, e)| (lo + s, lo + e))
+        .collect()
+}
+
+/// Input range (along `axis`) a consumer needs to produce its output range
+/// `[lo, hi)`, clamped to the input extent.
+fn needed_range(node: &Node, lo: usize, hi: usize, in_extent: usize, axis: Axis) -> (usize, usize) {
+    if lo >= hi {
+        return (0, 0);
+    }
+    match &node.op {
+        OpKind::Conv(a) | OpKind::Cbr(a) => conv_in_range(a, lo, hi, in_extent, axis),
+        OpKind::Cbra(a, pl) | OpKind::Cbrm(a, pl) => {
+            let pre_extent = conv_out_extent(a, in_extent, axis);
+            let (p0, p1) = pool_in_range(pl, lo, hi, pre_extent);
+            conv_in_range(a, p0, p1, in_extent, axis)
+        }
+        OpKind::Pool(pl) => pool_in_range(pl, lo, hi, in_extent),
+        OpKind::Upsample { factor } => (lo / factor, ((hi - 1) / factor + 1).min(in_extent)),
+        // Spatially aligned ops read exactly their own range.
+        _ => (lo, hi.min(in_extent)),
+    }
+}
+
+/// Conv output extent along one axis for a given input extent.
+fn conv_out_extent(a: &ConvAttrs, in_extent: usize, axis: Axis) -> usize {
+    let k = match axis {
+        Axis::Rows => a.kh,
+        Axis::Cols => a.kw,
+    };
+    (in_extent + 2 * a.pad - k) / a.stride + 1
+}
+
+/// Input rows/columns a conv needs for output range `[lo, hi)`.
+fn conv_in_range(a: &ConvAttrs, lo: usize, hi: usize, in_extent: usize, axis: Axis) -> (usize, usize) {
+    let k = match axis {
+        Axis::Rows => a.kh,
+        Axis::Cols => a.kw,
+    };
+    let lo_i = (lo * a.stride) as isize - a.pad as isize;
+    let hi_i = ((hi - 1) * a.stride) as isize - a.pad as isize + k as isize;
+    (lo_i.max(0) as usize, (hi_i.max(0) as usize).min(in_extent))
+}
+
+/// Input range a windowed pool needs for output range `[lo, hi)`.
+fn pool_in_range(pl: &PoolAttrs, lo: usize, hi: usize, in_extent: usize) -> (usize, usize) {
+    if lo >= hi {
+        return (0, 0);
+    }
+    (lo * pl.stride, ((hi - 1) * pl.stride + pl.k).min(in_extent))
+}
+
+/// Serialize one rect of a feature map (channel-major, row-major within).
+fn pack_rect(t: &Tensor, r: Rect) -> Vec<f32> {
+    let (c, h, w) = fm_dims(t);
+    let mut out = Vec::with_capacity(c * (r.y1 - r.y0) * (r.x1 - r.x0));
+    for ch in 0..c {
+        for y in r.y0..r.y1 {
+            let base = (ch * h + y) * w;
+            out.extend_from_slice(&t.data[base + r.x0..base + r.x1]);
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_rect`].
+fn unpack_rect(t: &mut Tensor, r: Rect, block: &[f32]) {
+    let (c, h, w) = fm_dims(t);
+    let seg = r.x1 - r.x0;
+    let mut off = 0usize;
+    for ch in 0..c {
+        for y in r.y0..r.y1 {
+            let base = (ch * h + y) * w;
+            t.data[base + r.x0..base + r.x1].copy_from_slice(&block[off..off + seg]);
+            off += seg;
+        }
+    }
+    debug_assert_eq!(off, block.len(), "halo block size mismatch");
+}
+
+/// `out[i] = f(x[i])` over one rect.
+fn map_rect(x: &Tensor, out: &mut Tensor, r: Rect, f: impl Fn(f32) -> f32) {
+    let (c, h, w) = fm_dims(x);
+    for ch in 0..c {
+        for y in r.y0..r.y1 {
+            let base = (ch * h + y) * w;
+            for i in base + r.x0..base + r.x1 {
+                out.data[i] = f(x.data[i]);
+            }
+        }
+    }
+}
+
+/// `out[i] = f(a[i], b[i])` over one rect.
+fn zip_rect(a: &Tensor, b: &Tensor, out: &mut Tensor, r: Rect, f: impl Fn(f32, f32) -> f32) {
+    let (c, h, w) = fm_dims(a);
+    for ch in 0..c {
+        for y in r.y0..r.y1 {
+            let base = (ch * h + y) * w;
+            for i in base + r.x0..base + r.x1 {
+                out.data[i] = f(a.data[i], b.data[i]);
+            }
+        }
+    }
+}
+
+/// `out[i] = a[i]*b[i] + c[i]` over one rect.
+fn mac_rect(a: &Tensor, b: &Tensor, cc: &Tensor, out: &mut Tensor, r: Rect) {
+    let (c, h, w) = fm_dims(a);
+    for ch in 0..c {
+        for y in r.y0..r.y1 {
+            let base = (ch * h + y) * w;
+            for i in base + r.x0..base + r.x1 {
+                out.data[i] = a.data[i] * b.data[i] + cc.data[i];
+            }
+        }
+    }
+}
+
+/// Per-channel `x*scale + shift` over one rect (empty scale = unit gain),
+/// matching `ew::batchnorm` / `ew::bias_fm` element-for-element.
+fn affine_rect(x: &Tensor, out: &mut Tensor, scale: &[f32], shift: &[f32], r: Rect) {
+    let (c, h, w) = fm_dims(x);
+    for ch in 0..c {
+        let g = if scale.is_empty() { 1.0 } else { scale[ch] };
+        for y in r.y0..r.y1 {
+            let base = (ch * h + y) * w;
+            for i in base + r.x0..base + r.x1 {
+                out.data[i] = x.data[i] * g + shift[ch];
+            }
+        }
+    }
+}
+
+/// Fused Bn+ReLU in place over one rect — the same per-element expression
+/// as `ew::batchnorm` followed by `ew::relu`.
+fn affine_relu_rect(t: &mut Tensor, scale: &[f32], shift: &[f32], r: Rect) {
+    let (c, h, w) = fm_dims(t);
+    for ch in 0..c {
+        for y in r.y0..r.y1 {
+            let base = (ch * h + y) * w;
+            for i in base + r.x0..base + r.x1 {
+                t.data[i] = ew::relu1(t.data[i] * scale[ch] + shift[ch]);
+            }
+        }
+    }
+}
+
+// The copy-op rect kernels below (upsample/concat/slice/shuffle) mirror
+// the per-element index mappings of `ops::shape_ops` (serial reference)
+// and `ops::par_exec`'s chunked variants. They are pure copies — no float
+// arithmetic — and both differential suites (tests/equivalence.rs,
+// tests/cluster.rs) pin all three against each other; folding them into
+// shared `*_tile_raw` kernels like `ops::pool` is a ROADMAP follow-up.
+
+/// Nearest-neighbour upsample over one rect.
+fn upsample_rect(x: &Tensor, out: &mut Tensor, factor: usize, r: Rect) {
+    let (c, oh, ow) = fm_dims(out);
+    for ch in 0..c {
+        for y in r.y0..r.y1 {
+            for xx in r.x0..r.x1 {
+                out.data[(ch * oh + y) * ow + xx] = x.at4(0, ch, y / factor, xx / factor);
+            }
+        }
+    }
+}
+
+/// Channel concat over one rect.
+fn concat_rect(args: &[&Tensor], out: &mut Tensor, r: Rect) {
+    let (_, oh, ow) = fm_dims(out);
+    let mut c_off = 0usize;
+    for t in args {
+        let (tc, th, tw) = fm_dims(t);
+        debug_assert_eq!((th, tw), (oh, ow));
+        for ch in 0..tc {
+            for y in r.y0..r.y1 {
+                let src = (ch * th + y) * tw;
+                let dst = ((c_off + ch) * oh + y) * ow;
+                out.data[dst + r.x0..dst + r.x1].copy_from_slice(&t.data[src + r.x0..src + r.x1]);
+            }
+        }
+        c_off += tc;
+    }
+}
+
+/// Channel slice `[begin, ..)` over one rect.
+fn slice_rect(x: &Tensor, out: &mut Tensor, begin: usize, r: Rect) {
+    let (oc, oh, ow) = fm_dims(out);
+    let (_, xh, xw) = fm_dims(x);
+    debug_assert_eq!((xh, xw), (oh, ow));
+    for ch in 0..oc {
+        for y in r.y0..r.y1 {
+            let src = ((begin + ch) * xh + y) * xw;
+            let dst = (ch * oh + y) * ow;
+            out.data[dst + r.x0..dst + r.x1].copy_from_slice(&x.data[src + r.x0..src + r.x1]);
+        }
+    }
+}
+
+/// ShuffleNet channel shuffle over one rect.
+fn shuffle_rect(x: &Tensor, out: &mut Tensor, groups: usize, r: Rect) {
+    let (c, h, w) = fm_dims(x);
+    let cpg = c / groups;
+    for g in 0..groups {
+        for i in 0..cpg {
+            let src_c = g * cpg + i;
+            let dst_c = i * groups + g;
+            for y in r.y0..r.y1 {
+                let src = (src_c * h + y) * w;
+                let dst = (dst_c * h + y) * w;
+                out.data[dst + r.x0..dst + r.x1].copy_from_slice(&x.data[src + r.x0..src + r.x1]);
+            }
+        }
+    }
+}

@@ -9,11 +9,22 @@
 //! bandwidth-optimal [`ring`] collective or through a central parameter
 //! server ([`ps`]), reproducing the paper's Fig. 11 contrast.
 //!
-//! The collectives are executed for real over in-memory buffers
-//! ([`ring::ring_allreduce_exec`], [`ps::ps_allreduce_exec`]); cluster
-//! timing is analytic on top of the per-node [`cost`](crate::sim::cost)
-//! model, like the rest of the simulator.
+//! Two faces share this module:
+//!
+//! * **The simulator** ([`simulate_dxenos`], [`enumerate_schemes`]) prices
+//!   cluster inference analytically on top of the per-node
+//!   [`cost`](crate::sim::cost) model, reproducing Fig. 11.
+//! * **The runtime** ([`exec`]) executes a partition plan for real: shard
+//!   workers own engine slices, the [`ring`]/[`ps`] collectives run over a
+//!   pluggable [`exec::transport::Transport`] (in-process channels or TCP),
+//!   and a [`exec::ClusterDriver`] distributes shard weights and drives
+//!   end-to-end distributed inference (`xenos dist-run` / `dist-worker`).
+//!
+//! The historical in-memory collectives ([`ring::ring_allreduce_exec`],
+//! [`ps::ps_allreduce_exec`]) are now the `LocalTransport` special case of
+//! the transport collectives.
 
+pub mod exec;
 pub mod ps;
 pub mod ring;
 
@@ -97,8 +108,8 @@ impl DxenosReport {
 }
 
 /// Time for one broadcast/all-gather-shaped collective of `bytes` under a
-/// sync mode.
-fn sync_time(sync: SyncMode, p: usize, bytes: u64, link: &LinkModel) -> f64 {
+/// sync mode. Shared with the runtime's Mix partitioner (`exec::plan`).
+pub(crate) fn sync_time(sync: SyncMode, p: usize, bytes: u64, link: &LinkModel) -> f64 {
     match sync {
         SyncMode::Ring => ring::ring_broadcast_time(p, bytes, link),
         SyncMode::Ps => ps::ps_broadcast_time(p, bytes, link),
@@ -159,7 +170,8 @@ fn node_option(
 
 /// Halo traffic of a spatial split: `(p-1)` cuts each replicating
 /// `(k-1)` boundary rows/columns of the input (zero for window-free ops).
-fn halo_bytes(g: &Graph, node: &Node, p: usize, by_rows: bool) -> u64 {
+/// Shared with the runtime's Mix partitioner (`exec::plan`).
+pub(crate) fn halo_bytes(g: &Graph, node: &Node, p: usize, by_rows: bool) -> u64 {
     let (k, stride) = match &node.op {
         OpKind::Pool(a) => (a.k, a.stride.max(1)),
         op => match op.conv_attrs() {

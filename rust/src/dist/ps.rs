@@ -1,16 +1,83 @@
 //! Parameter-server synchronization — the baseline d-Xenos compares the
 //! ring collective against (paper §5, Fig. 11's "PS" arms).
 //!
-//! Every reduction funnels through one server device: workers upload their
-//! buffers, the server accumulates in worker order and broadcasts the
-//! result. The server link serializes `p-1` full-size transfers in each
-//! direction, which is why PS sync scales so much worse than the ring.
+//! Every reduction funnels through one server (rank 0's host): workers
+//! upload their buffers, the server accumulates in worker order and
+//! broadcasts the result. The server link serializes `p-1` full-size
+//! transfers in each direction, which is why PS sync scales so much worse
+//! than the ring. Like [`ring`](crate::dist::ring), the collectives run
+//! over any [`Transport`]; the in-memory entry point is the
+//! `LocalTransport` special case.
 
+use crate::dist::exec::transport::{run_over_local_mesh, Transport};
 use crate::hw::LinkModel;
 
-/// Execute a parameter-server all-reduce: the server (worker 0's host in
-/// this simulation) sums all buffers in worker order and broadcasts one
-/// identical copy back to every worker.
+/// Parameter-server all-reduce over a [`Transport`]: workers send their
+/// full buffer to rank 0, which accumulates in rank order and sends one
+/// identical copy back — all ranks end bit-identical. Tags `base_tag ..
+/// base_tag + 2p` are consumed.
+pub fn ps_allreduce_tp(t: &dyn Transport, data: &mut [f32], base_tag: u64) {
+    let p = t.world();
+    if p <= 1 {
+        return;
+    }
+    let me = t.rank();
+    if me == 0 {
+        for q in 1..p {
+            let inc = t.recv(q, base_tag + q as u64);
+            assert_eq!(inc.len(), data.len(), "ps all-reduce buffers must match in length");
+            for (d, v) in data.iter_mut().zip(&inc) {
+                *d += *v;
+            }
+        }
+        for q in 1..p {
+            t.send(q, base_tag + (p + q) as u64, data);
+        }
+    } else {
+        t.send(0, base_tag + me as u64, data);
+        let res = t.recv(0, base_tag + (p + me) as u64);
+        data.copy_from_slice(&res);
+    }
+}
+
+/// Parameter-server all-gather of one variable-size block per rank: rank 0
+/// collects every block and re-streams the full set to each worker. Every
+/// rank returns all `p` blocks in rank order. Tags `base_tag .. base_tag +
+/// 2p` are consumed.
+pub fn ps_all_gather_tp(t: &dyn Transport, mine: Vec<f32>, base_tag: u64) -> Vec<Vec<f32>> {
+    let p = t.world();
+    let me = t.rank();
+    let mut blocks: Vec<Option<Vec<f32>>> = (0..p).map(|_| None).collect();
+    if p <= 1 {
+        blocks[me] = Some(mine);
+        return blocks.into_iter().map(|b| b.expect("own block")).collect();
+    }
+    if me == 0 {
+        blocks[0] = Some(mine);
+        for q in 1..p {
+            blocks[q] = Some(t.recv(q, base_tag + q as u64));
+        }
+        for q in 1..p {
+            for (b, block) in blocks.iter().enumerate() {
+                if b != q {
+                    t.send(q, base_tag + (p + b) as u64, block.as_ref().expect("gathered"));
+                }
+            }
+        }
+    } else {
+        t.send(0, base_tag + me as u64, &mine);
+        blocks[me] = Some(mine);
+        for b in 0..p {
+            if b != me {
+                blocks[b] = Some(t.recv(0, base_tag + (p + b) as u64));
+            }
+        }
+    }
+    blocks.into_iter().map(|b| b.expect("all blocks gathered")).collect()
+}
+
+/// Execute a parameter-server all-reduce over in-memory worker buffers —
+/// the `LocalTransport` special case of [`ps_allreduce_tp`].
 pub fn ps_allreduce_exec(bufs: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
     let p = bufs.len();
     if p <= 1 {
@@ -20,13 +87,7 @@ pub fn ps_allreduce_exec(bufs: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
     for b in &bufs {
         assert_eq!(b.len(), n, "ps all-reduce buffers must match in length");
     }
-    let mut sum = vec![0.0f32; n];
-    for b in &bufs {
-        for (s, v) in sum.iter_mut().zip(b) {
-            *s += *v;
-        }
-    }
-    vec![sum; p]
+    run_over_local_mesh(bufs, |t, data| ps_allreduce_tp(t, data, 0))
 }
 
 /// Analytic PS all-reduce time: the server receives `p-1` full buffers and
@@ -50,6 +111,7 @@ pub fn ps_broadcast_time(p: usize, bytes: u64, link: &LinkModel) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dist::exec::transport::LocalTransport;
 
     #[test]
     fn ps_allreduce_sums() {
@@ -57,6 +119,24 @@ mod tests {
         assert_eq!(out.len(), 3);
         for w in &out {
             assert_eq!(*w, vec![14.0, 7.0]);
+        }
+    }
+
+    #[test]
+    fn ps_all_gather_matches_ring_semantics() {
+        let blocks = vec![vec![1.0f32], vec![2.0f32, 3.0], vec![]];
+        let mesh = LocalTransport::mesh(blocks.len());
+        let got: Vec<Vec<Vec<f32>>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = blocks
+                .clone()
+                .into_iter()
+                .zip(mesh)
+                .map(|(mine, t)| scope.spawn(move || ps_all_gather_tp(&t, mine, 0)))
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("gather worker")).collect()
+        });
+        for per_rank in &got {
+            assert_eq!(per_rank, &blocks);
         }
     }
 

@@ -1,13 +1,19 @@
-//! Ring all-reduce: the bandwidth-optimal collective d-Xenos uses for
-//! activation/partial-sum synchronization (paper §5).
+//! Ring collectives: the bandwidth-optimal synchronization d-Xenos uses
+//! for activation/partial-sum exchange (paper §5).
 //!
-//! Two faces, mirroring the rest of the simulator:
-//! * [`ring_allreduce_exec`] — a *real* data exchange over in-memory worker
-//!   buffers (reduce-scatter + all-gather), used by the correctness tests
-//!   and the Fig. 11 bench.
-//! * [`ring_allreduce_time`] — the analytic time model the d-Xenos
-//!   simulation prices collectives with.
+//! Three faces, mirroring the rest of the system:
+//! * [`ring_allreduce_tp`] / [`ring_all_gather_tp`] — the *real*
+//!   collectives, executed over any [`Transport`]: reduce-scatter +
+//!   all-gather around the ring, one chunk per hop. These are what the
+//!   cluster runtime (`dist::exec`) runs on, over in-process channels or
+//!   TCP alike.
+//! * [`ring_allreduce_exec`] — the historical in-memory entry point, now
+//!   literally the `LocalTransport` special case: it spins up a scratch
+//!   local mesh, one thread per buffer, and runs [`ring_allreduce_tp`].
+//! * [`ring_allreduce_time`] / [`ring_broadcast_time`] — the analytic time
+//!   model the d-Xenos simulation prices collectives with.
 
+use crate::dist::exec::transport::{run_over_local_mesh, Transport};
 use crate::hw::LinkModel;
 
 /// Chunk boundaries of an `n`-element buffer split into `p` near-even
@@ -16,15 +22,77 @@ fn chunk_bounds(n: usize, p: usize, c: usize) -> (usize, usize) {
     (c * n / p, (c + 1) * n / p)
 }
 
-/// Execute a ring all-reduce over `p = inputs.len()` worker buffers.
+/// Ring all-reduce over a [`Transport`]: classic reduce-scatter followed by
+/// all-gather, `2(p-1)` hops of one `n/p` chunk each. After the call every
+/// rank's `data` holds the element-wise sum of all ranks' inputs.
 ///
-/// Reduce-scatter: chunk `c` circulates the ring starting at worker
-/// `(c+1) % p` and is accumulated hop by hop until it is complete at its
-/// owner `c` — so each chunk's addition order is a rotation of the worker
-/// order, exactly as on a real ring. All-gather: the owner's finished chunk
-/// is copied verbatim to every worker, which is why all workers end up with
-/// **bit-identical** buffers.
-pub fn ring_allreduce_exec(mut bufs: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
+/// Chunk `c`'s additions run in ring order starting at its initial holder
+/// — a rotation of the rank order, exactly as on a physical ring — and the
+/// all-gather copies each finished chunk verbatim, so all ranks end
+/// **bit-identical**. Tags `base_tag .. base_tag + 2(p-1)` are consumed.
+pub fn ring_allreduce_tp(t: &dyn Transport, data: &mut [f32], base_tag: u64) {
+    let p = t.world();
+    if p <= 1 {
+        return;
+    }
+    let me = t.rank();
+    let n = data.len();
+    let right = (me + 1) % p;
+    let left = (me + p - 1) % p;
+    // Reduce-scatter: at step s every rank forwards chunk (rank - s) and
+    // folds its own value into the incoming chunk (rank - s - 1). The
+    // incoming partial is added on the left of the local value (`v + d`),
+    // preserving the hop-by-hop accumulation order of a physical ring.
+    for s in 0..p - 1 {
+        let send_c = (me + p - s) % p;
+        let recv_c = (me + 2 * p - s - 1) % p;
+        let (ss, se) = chunk_bounds(n, p, send_c);
+        t.send(right, base_tag + s as u64, &data[ss..se]);
+        let inc = t.recv(left, base_tag + s as u64);
+        let (rs, re) = chunk_bounds(n, p, recv_c);
+        for (d, v) in data[rs..re].iter_mut().zip(&inc) {
+            *d = *v + *d;
+        }
+    }
+    // All-gather: circulate the finished chunks, overwriting.
+    for s in 0..p - 1 {
+        let send_c = (me + 1 + p - s) % p;
+        let recv_c = (me + p - s) % p;
+        let (ss, se) = chunk_bounds(n, p, send_c);
+        t.send(right, base_tag + (p + s) as u64, &data[ss..se]);
+        let inc = t.recv(left, base_tag + (p + s) as u64);
+        let (rs, re) = chunk_bounds(n, p, recv_c);
+        data[rs..re].copy_from_slice(&inc);
+    }
+}
+
+/// Ring all-gather of one variable-size block per rank (empty allowed):
+/// blocks circulate `p-1` hops; every rank returns all `p` blocks in rank
+/// order, each a verbatim copy of its owner's. Tags `base_tag .. base_tag
+/// + (p-1)` are consumed.
+pub fn ring_all_gather_tp(t: &dyn Transport, mine: Vec<f32>, base_tag: u64) -> Vec<Vec<f32>> {
+    let p = t.world();
+    let me = t.rank();
+    let mut blocks: Vec<Option<Vec<f32>>> = (0..p).map(|_| None).collect();
+    blocks[me] = Some(mine);
+    if p > 1 {
+        let right = (me + 1) % p;
+        let left = (me + p - 1) % p;
+        for s in 0..p - 1 {
+            let send_b = (me + p - s) % p;
+            let recv_b = (me + 2 * p - s - 1) % p;
+            let out = blocks[send_b].as_ref().expect("block in flight");
+            t.send(right, base_tag + s as u64, out);
+            blocks[recv_b] = Some(t.recv(left, base_tag + s as u64));
+        }
+    }
+    blocks.into_iter().map(|b| b.expect("all blocks gathered")).collect()
+}
+
+/// Execute a ring all-reduce over `p = inputs.len()` worker buffers —
+/// the in-memory face: a scratch `LocalTransport` mesh with one thread per
+/// worker running [`ring_allreduce_tp`]. All workers end bit-identical.
+pub fn ring_allreduce_exec(bufs: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
     let p = bufs.len();
     if p <= 1 {
         return bufs;
@@ -33,25 +101,7 @@ pub fn ring_allreduce_exec(mut bufs: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
     for b in &bufs {
         assert_eq!(b.len(), n, "ring all-reduce buffers must match in length");
     }
-    for c in 0..p {
-        let (s, e) = chunk_bounds(n, p, c);
-        if s == e {
-            continue;
-        }
-        // Reduce-scatter for chunk c: accumulate in ring order c, c+1, ...
-        let mut acc = bufs[c][s..e].to_vec();
-        for step in 1..p {
-            let src = (c + step) % p;
-            for (a, v) in acc.iter_mut().zip(&bufs[src][s..e]) {
-                *a += *v;
-            }
-        }
-        // All-gather: owner broadcasts its finished chunk around the ring.
-        for b in bufs.iter_mut() {
-            b[s..e].copy_from_slice(&acc);
-        }
-    }
-    bufs
+    run_over_local_mesh(bufs, |t, data| ring_allreduce_tp(t, data, 0))
 }
 
 /// Analytic ring all-reduce time for `bytes` over `p` devices: `2(p-1)`
@@ -75,6 +125,7 @@ pub fn ring_broadcast_time(p: usize, bytes: u64, link: &LinkModel) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::dist::exec::transport::LocalTransport;
     use crate::util::rng::Rng;
 
     #[test]
@@ -109,6 +160,28 @@ mod tests {
     fn single_worker_is_identity() {
         let out = ring_allreduce_exec(vec![vec![3.0f32, 4.0]]);
         assert_eq!(out[0], vec![3.0, 4.0]);
+    }
+
+    #[test]
+    fn all_gather_collects_every_block_in_rank_order() {
+        // Variable block sizes, including an empty one.
+        let blocks = vec![vec![1.0f32, 2.0], vec![], vec![3.0f32], vec![4.0f32, 5.0, 6.0]];
+        let got = run_all_gather(blocks.clone());
+        for (rank, per_rank) in got.iter().enumerate() {
+            assert_eq!(per_rank, &blocks, "rank {rank} gathered wrong blocks");
+        }
+    }
+
+    fn run_all_gather(blocks: Vec<Vec<f32>>) -> Vec<Vec<Vec<f32>>> {
+        let mesh = LocalTransport::mesh(blocks.len());
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = blocks
+                .into_iter()
+                .zip(mesh)
+                .map(|(mine, t)| scope.spawn(move || ring_all_gather_tp(&t, mine, 0)))
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("gather worker")).collect()
+        })
     }
 
     #[test]

@@ -62,6 +62,41 @@ impl ConvAttrs {
     pub fn weight_count(&self) -> u64 {
         (self.out_c * (self.in_c / self.groups) * self.kh * self.kw) as u64
     }
+
+    /// Output channels per convolution group.
+    pub fn out_c_per_group(&self) -> usize {
+        self.out_c / self.groups
+    }
+
+    /// Input channels per convolution group.
+    pub fn in_c_per_group(&self) -> usize {
+        self.in_c / self.groups
+    }
+
+    /// Sub-convolution covering output channels `[c0, c1)` of a dense
+    /// (`groups == 1`) convolution — the shard a d-Xenos device computes
+    /// under an outC partition. The shard reads the full input and only the
+    /// weight rows `[c0, c1)`.
+    pub fn out_c_slice(&self, c0: usize, c1: usize) -> ConvAttrs {
+        assert_eq!(self.groups, 1, "out_c_slice requires a dense conv");
+        assert!(c0 <= c1 && c1 <= self.out_c);
+        ConvAttrs { out_c: c1 - c0, ..*self }
+    }
+
+    /// Sub-convolution covering groups `[g0, g1)` of a grouped/depthwise
+    /// convolution: output channels `[g0, g1) × out_c_per_group`, input
+    /// channels `[g0, g1) × in_c_per_group`. Grouped convs shard on group
+    /// boundaries so each shard's input-channel slice stays contiguous.
+    pub fn group_slice(&self, g0: usize, g1: usize) -> ConvAttrs {
+        assert!(self.groups > 1, "group_slice requires a grouped conv");
+        assert!(g0 <= g1 && g1 <= self.groups);
+        ConvAttrs {
+            in_c: (g1 - g0) * self.in_c_per_group(),
+            out_c: (g1 - g0) * self.out_c_per_group(),
+            groups: g1 - g0,
+            ..*self
+        }
+    }
 }
 
 /// Pooling kind.
@@ -404,6 +439,28 @@ mod tests {
         let op = OpKind::Cbra(a, PoolAttrs::avg(2, 2));
         let conv_out = (1024 * 14 * 14) as u64;
         assert_eq!(op.macs(&out), conv_out * 1024 + conv_out);
+    }
+
+    #[test]
+    fn shard_attr_slices() {
+        let a = ConvAttrs::std(16, 32, 3, 1, 1);
+        let s = a.out_c_slice(8, 20);
+        assert_eq!(s.out_c, 12);
+        assert_eq!(s.in_c, 16);
+        assert_eq!(s.weight_count(), 12 * 16 * 9);
+        let g = {
+            let mut g = ConvAttrs::std(16, 16, 1, 1, 0);
+            g.groups = 4;
+            g
+        };
+        let gs = g.group_slice(1, 3);
+        assert_eq!(gs.groups, 2);
+        assert_eq!(gs.in_c, 8);
+        assert_eq!(gs.out_c, 8);
+        let dw = ConvAttrs::depthwise(32, 3, 1, 1);
+        let ds = dw.group_slice(0, 16);
+        assert!(ds.is_depthwise());
+        assert_eq!(ds.out_c, 16);
     }
 
     #[test]

@@ -30,7 +30,7 @@
 //! | [`baselines`] | §7.1 | Vanilla / HO-only / TVM-like / GPU baselines |
 //! | [`runtime`] | §6 | PJRT artifact loading + the Xenos inference engine |
 //! | [`serve`] | §2.1 | request router, dynamic batcher, DSP scheduler |
-//! | [`dist`] | §5 | d-Xenos: ring all-reduce & PS sync, partition search |
+//! | [`dist`] | §5 | d-Xenos: partition search/simulator + the real distributed runtime ([`dist::exec`]: transports, shard workers, cluster driver) |
 //! | [`exp`] | §7 | experiment drivers reproducing every table & figure |
 
 pub mod baselines;

@@ -1,19 +1,23 @@
 //! `xenos` — command-line entrypoint for the Xenos reproduction.
 //!
 //! ```text
-//! xenos optimize --model mobilenet --device tms320c6678
-//! xenos run      --model mobilenet --device zcu102 --level xenos|ho|vanilla
-//! xenos serve    --artifacts artifacts --variant linked --requests 256 --workers 2 --batch 8
-//! xenos dist     --model resnet101 --devices 4 --sync ring|ps --scheme mix|outc|inh|inw
-//! xenos repro    --exp fig7a|fig7b|fig8|fig9|fig10|fig11|table2|table45|all
-//! xenos inspect  --model bert_s
+//! xenos optimize    --model mobilenet --device tms320c6678
+//! xenos run         --model mobilenet --device zcu102 --level xenos|ho|vanilla
+//! xenos serve       --artifacts artifacts --variant linked --requests 256 --workers 2 --batch 8
+//! xenos dist        --model resnet101 --devices 4 --sync ring|ps --scheme mix|outc|inh|inw
+//! xenos dist-worker --listen 127.0.0.1:7001
+//! xenos dist-run    --hosts 127.0.0.1:7001,127.0.0.1:7002 --model mobilenet --scheme mix
+//! xenos repro       --exp fig7a|fig7b|fig8|fig9|fig10|fig11|table2|table45|all
+//! xenos inspect     --model bert_s
 //! ```
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
 use xenos::baselines;
+use xenos::dist::exec::{serve_listener, ClusterDriver};
 use xenos::dist::{simulate_dxenos, PartitionScheme, SyncMode};
 use xenos::graph::models;
 use xenos::hw;
@@ -42,6 +46,8 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("run") => cmd_run(args),
         Some("serve") => cmd_serve(args),
         Some("dist") => cmd_dist(args),
+        Some("dist-worker") => cmd_dist_worker(args),
+        Some("dist-run") => cmd_dist_run(args),
         Some("repro") => cmd_repro(args),
         Some("inspect") => cmd_inspect(args),
         Some(other) => bail!("unknown subcommand {other}\n{USAGE}"),
@@ -52,13 +58,18 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: xenos <optimize|run|serve|dist|repro|inspect> [--options]
+const USAGE: &str = "usage: xenos <optimize|run|serve|dist|dist-worker|dist-run|repro|inspect>
   optimize --model M --device D            run the automatic optimizer, print the plan
   run      --model M --device D --level L  simulate inference (L: vanilla|ho|xenos)
   serve    --artifacts DIR --variant V --requests N --workers W --batch B --rate R
-  serve    --model M --engine par|interp --threads T   serve a zoo model numerically
-           (par = multi-threaded DOS plan executor, one thread per DSP unit)
-  dist     --model M --devices P --sync ring|ps --scheme mix|outc|inh|inw
+  serve    --model M --engine par|interp|cluster --threads T   serve a zoo model numerically
+           (par = multi-threaded DOS plan executor; cluster = d-Xenos shard workers,
+            size with --cluster-devices P)
+  dist     --model M --devices P --sync ring|ps --scheme mix|outc|inh|inw   (simulator)
+  dist-worker --listen ADDR                run one d-Xenos shard worker (TCP)
+  dist-run --hosts A,B,... --model M --scheme S --sync ring|ps [-p P] [--verify]
+           execute distributed inference on remote workers; --local [-p P] runs
+           the same plan on in-process shard threads instead
   repro    --exp ID|all                    regenerate a paper table/figure
   inspect  --model M                       dump the model graph";
 
@@ -186,13 +197,27 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .iter()
             .map(|&i| g.node(i).out.shape.clone())
             .collect();
+        let cluster_p = args.get_parse("cluster-devices", 2usize);
+        let scheme = scheme_arg(args)?;
+        let sync = sync_arg(args)?;
         let report = Coordinator::new(cfg).run(
             // The factory consults cfg.engine_threads — the one knob that
             // sizes the per-engine executor pools.
             move |_w| match engine.as_str() {
                 "par" => Ok(Engine::par_interp(g.clone(), &d, cfg.engine_threads)),
                 "interp" => Ok(Engine::interp(g.clone())),
-                other => bail!("unknown engine {other} (par|interp)"),
+                "cluster" => {
+                    let driver = ClusterDriver::local(
+                        g.clone(),
+                        &d,
+                        cluster_p,
+                        scheme,
+                        sync,
+                        cfg.engine_threads,
+                    )?;
+                    Ok(Engine::cluster(driver))
+                }
+                other => bail!("unknown engine {other} (par|interp|cluster)"),
             },
             serve::coordinator::synthetic_requests(shapes, n, rate, args.get_parse("seed", 42u64)),
         )?;
@@ -202,15 +227,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             args.get_or("engine", "par"),
             report.throughput
         );
-        println!(
-            "latency p50 {} p90 {} p99 {} max {} | exec p50 {} | mean batch {:.2}",
-            human_time(report.latency.p50),
-            human_time(report.latency.p90),
-            human_time(report.latency.p99),
-            human_time(report.latency.max),
-            human_time(report.exec.p50),
-            report.batch_size.mean,
-        );
+        print_serve_stats(&report);
         return Ok(());
     }
 
@@ -245,34 +262,50 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "served {} requests [{variant}] with {workers} workers: {:.1} req/s",
         report.served, report.throughput
     );
+    print_serve_stats(&report);
+    Ok(())
+}
+
+fn print_serve_stats(report: &xenos::serve::ServeReport) {
     println!(
-        "latency p50 {} p90 {} p99 {} max {} | exec p50 {} | mean batch {:.2}",
+        "latency mean {} p50 {} p90 {} p95 {} p99 {} max {} | exec p50 {} | mean batch {:.2}",
+        human_time(report.latency.mean),
         human_time(report.latency.p50),
         human_time(report.latency.p90),
+        human_time(report.latency.p95),
         human_time(report.latency.p99),
         human_time(report.latency.max),
         human_time(report.exec.p50),
         report.batch_size.mean,
     );
-    Ok(())
+    let shares: Vec<String> = report.per_worker.iter().map(|n| n.to_string()).collect();
+    println!("per-worker requests: [{}]", shares.join(", "));
+}
+
+fn sync_arg(args: &Args) -> Result<SyncMode> {
+    match args.get_or("sync", "ring") {
+        "ring" => Ok(SyncMode::Ring),
+        "ps" => Ok(SyncMode::Ps),
+        other => bail!("unknown sync {other} (ring|ps)"),
+    }
+}
+
+fn scheme_arg(args: &Args) -> Result<PartitionScheme> {
+    match args.get_or("scheme", "mix") {
+        "mix" => Ok(PartitionScheme::Mix),
+        "outc" => Ok(PartitionScheme::OutC),
+        "inh" => Ok(PartitionScheme::InH),
+        "inw" => Ok(PartitionScheme::InW),
+        other => bail!("unknown scheme {other} (mix|outc|inh|inw)"),
+    }
 }
 
 fn cmd_dist(args: &Args) -> Result<()> {
     let g = model_arg(args)?;
     let d = device_arg(args)?;
     let p = args.get_parse("devices", 4usize);
-    let sync = match args.get_or("sync", "ring") {
-        "ring" => SyncMode::Ring,
-        "ps" => SyncMode::Ps,
-        other => bail!("unknown sync {other} (ring|ps)"),
-    };
-    let scheme = match args.get_or("scheme", "mix") {
-        "mix" => PartitionScheme::Mix,
-        "outc" => PartitionScheme::OutC,
-        "inh" => PartitionScheme::InH,
-        "inw" => PartitionScheme::InW,
-        other => bail!("unknown scheme {other} (mix|outc|inh|inw)"),
-    };
+    let sync = sync_arg(args)?;
+    let scheme = scheme_arg(args)?;
     let r = simulate_dxenos(&g, &d, p, scheme, sync);
     println!(
         "d-Xenos {} on {}x{} [{}-{}]: {} (single {} — {:.2}x speedup)",
@@ -291,6 +324,81 @@ fn cmd_dist(args: &Args) -> Result<()> {
         human_time(r.sync_s),
         human_time(r.param_dist_s)
     );
+    Ok(())
+}
+
+fn cmd_dist_worker(args: &Args) -> Result<()> {
+    let addr = args.get_or("listen", "127.0.0.1:7001");
+    let listener = std::net::TcpListener::bind(addr)
+        .with_context(|| format!("binding dist-worker listener on {addr}"))?;
+    println!("dist-worker listening on {}", listener.local_addr()?);
+    serve_listener(&listener, None)
+}
+
+fn cmd_dist_run(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "mobilenet").to_string();
+    let device = args.get_or("device", "tms320c6678").to_string();
+    let scheme = scheme_arg(args)?;
+    let sync = sync_arg(args)?;
+    let threads = args.get_parse("threads", 1usize);
+    let seed = args.get_parse("seed", 42u64);
+
+    let driver = if args.flag("local") || args.get("hosts").is_none() {
+        let p = args.get_parse("p", 2usize);
+        let g = Arc::new(
+            models::by_name(&model).with_context(|| format!("unknown model {model}"))?,
+        );
+        let d = hw::by_name(&device).with_context(|| format!("unknown device {device}"))?;
+        ClusterDriver::local(g, &d, p, scheme, sync, threads)?
+    } else {
+        let mut hosts: Vec<String> = args
+            .get("hosts")
+            .unwrap_or_default()
+            .split(',')
+            .filter(|h| !h.is_empty())
+            .map(str::to_string)
+            .collect();
+        let p = args.get_parse("p", hosts.len());
+        anyhow::ensure!(
+            p >= 1 && p <= hosts.len(),
+            "-p {p} needs between 1 and {} hosts",
+            hosts.len()
+        );
+        hosts.truncate(p);
+        ClusterDriver::tcp(&hosts, &model, &device, scheme, sync, threads)?
+    };
+
+    let inputs = xenos::ops::interp::synthetic_inputs(driver.graph(), seed);
+    // Warm-up round (connection setup, first-touch allocation), then the
+    // timed round.
+    let _ = driver.infer(&inputs)?;
+    let t0 = Instant::now();
+    let outputs = driver.infer(&inputs)?;
+    let dist_s = t0.elapsed().as_secs_f64();
+    println!(
+        "{} -> {} outputs in {}",
+        driver.label(),
+        outputs.len(),
+        human_time(dist_s)
+    );
+
+    // Differential check against the single-device serial interpreter.
+    let reference = {
+        let g = models::by_name(&model).expect("model resolved above");
+        let t1 = Instant::now();
+        let outs = xenos::ops::Interpreter::new(&g).run(&inputs);
+        (outs, t1.elapsed().as_secs_f64())
+    };
+    println!("single-device serial: {}", human_time(reference.1));
+    let mut max_diff = 0.0f32;
+    for (a, b) in reference.0.iter().zip(&outputs) {
+        max_diff = max_diff.max(a.max_abs_diff(b));
+    }
+    println!("max |cluster - serial| = {max_diff:e}");
+    if args.flag("verify") {
+        anyhow::ensure!(max_diff == 0.0, "cluster output diverged from serial interpreter");
+        println!("verified: cluster output is element-wise identical");
+    }
     Ok(())
 }
 

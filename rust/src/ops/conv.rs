@@ -37,13 +37,23 @@ pub fn conv2d(x: &Tensor, attrs: &ConvAttrs, weights: &[f32], bias: &[f32]) -> T
     if is_pointwise_fast_path(attrs, n) {
         // SAFETY: single-threaded call covering the whole [out_c, hw] range.
         unsafe {
-            pointwise_tile_raw(x, attrs, weights, bias, 0, attrs.out_c, out.data.as_mut_ptr())
+            pointwise_tile_raw(
+                x,
+                attrs,
+                weights,
+                bias,
+                0,
+                attrs.out_c,
+                0,
+                oh * ow,
+                out.data.as_mut_ptr(),
+            )
         };
         return out;
     }
     for b in 0..n {
-        // SAFETY: single-threaded call covering the whole (oc, oy) range of
-        // batch `b`; every output row is written exactly once.
+        // SAFETY: single-threaded call covering the whole (oc, oy, ox) range
+        // of batch `b`; every output row is written exactly once.
         unsafe {
             conv2d_tile_raw(
                 x,
@@ -56,6 +66,8 @@ pub fn conv2d(x: &Tensor, attrs: &ConvAttrs, weights: &[f32], bias: &[f32]) -> T
                 0,
                 oh,
                 0,
+                ow,
+                0,
                 cpg_in,
                 oh,
                 ow,
@@ -66,20 +78,78 @@ pub fn conv2d(x: &Tensor, attrs: &ConvAttrs, weights: &[f32], bias: &[f32]) -> T
     out
 }
 
-/// Generic conv tile: computes output rows `oy0..oy1` of output channels
-/// `oc0..oc1` (batch `b`) from input-channel slice `ic0..ic1`, writing into
-/// the full `[n, out_c, oh, ow]` buffer behind `out`.
+/// Compute one output **region** `oc ∈ [oc0,oc1) × oy ∈ [oy0,oy1) × ox ∈
+/// [ox0,ox1)` of a batch-1 convolution into the full-size `[out_c, oh, ow]`
+/// buffer behind `out`, routing exactly as [`conv2d`] does — 1×1/s1 convs
+/// through the packed panel kernel (the region is a column range of the
+/// `W × X` product), everything else through [`conv2d_tile_raw`] — so every
+/// element a region computes is bit-identical to the serial result. This is
+/// the shard kernel of the d-Xenos cluster runtime (`dist::exec`): an outC
+/// shard passes a channel range, an inH shard a row range, an inW shard a
+/// column range.
+///
+/// # Safety
+/// `out` must point at a live `out_c*oh*ow` f32 buffer. Concurrent calls on
+/// the same buffer must target disjoint regions. Input pixels the region
+/// reads (rows/columns within kernel reach) must be initialized.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn conv2d_region_raw(
+    x: &Tensor,
+    attrs: &ConvAttrs,
+    weights: &[f32],
+    bias: &[f32],
+    oc0: usize,
+    oc1: usize,
+    oy0: usize,
+    oy1: usize,
+    ox0: usize,
+    ox1: usize,
+    oh: usize,
+    ow: usize,
+    out: *mut f32,
+) {
+    if oc0 >= oc1 || oy0 >= oy1 || ox0 >= ox1 {
+        return;
+    }
+    if is_pointwise_fast_path(attrs, x.shape().n()) {
+        if ox0 == 0 && ox1 == ow {
+            // Whole rows: one contiguous column range of the HW axis.
+            pointwise_tile_raw(x, attrs, weights, bias, oc0, oc1, oy0 * ow, oy1 * ow, out);
+        } else {
+            // Column shard: one panel range per output row.
+            for oy in oy0..oy1 {
+                pointwise_tile_raw(
+                    x, attrs, weights, bias, oc0, oc1, oy * ow + ox0, oy * ow + ox1, out,
+                );
+            }
+        }
+        return;
+    }
+    let cpg_in = attrs.in_c / attrs.groups;
+    conv2d_tile_raw(
+        x, attrs, weights, bias, 0, oc0, oc1, oy0, oy1, ox0, ox1, 0, cpg_in, oh, ow, out,
+    );
+}
+
+/// Generic conv tile: computes output rows `oy0..oy1`, output columns
+/// `tx0..tx1`, of output channels `oc0..oc1` (batch `b`) from input-channel
+/// slice `ic0..ic1`, writing into the full `[n, out_c, oh, ow]` buffer
+/// behind `out`.
 ///
 /// Output-row-major accumulation (perf pass, EXPERIMENTS.md §Perf #1):
 /// for each (oc, oy, ic, ky, kx) the contribution to the whole output row
 /// is a scaled, shifted copy of one input row — a slice-level AXPY the
 /// compiler auto-vectorizes. Rows are initialized with the bias when
 /// `ic0 == 0`, with zero otherwise (partial-sum chunks of a C-split).
+/// Restricting the column range never changes the arithmetic applied to an
+/// element that is in range (the per-element expressions and their `kx`
+/// order are shared with the full-width pass), so any (oc, oy, ox) tiling
+/// of the same convolution is bit-identical to the serial result.
 ///
 /// # Safety
 /// `out` must point at a live `n*out_c*oh*ow` f32 buffer. Concurrent calls
-/// on the same buffer must use disjoint `(oc, oy)` tiles (for equal
-/// `ic0..ic1`); each call writes only its own rows.
+/// on the same buffer must use disjoint `(oc, oy, ox)` tiles (for equal
+/// `ic0..ic1`); each call writes only its own region.
 #[allow(clippy::too_many_arguments)]
 pub(crate) unsafe fn conv2d_tile_raw(
     x: &Tensor,
@@ -91,6 +161,8 @@ pub(crate) unsafe fn conv2d_tile_raw(
     oc1: usize,
     oy0: usize,
     oy1: usize,
+    tx0: usize,
+    tx1: usize,
     ic0: usize,
     ic1: usize,
     oh: usize,
@@ -101,7 +173,10 @@ pub(crate) unsafe fn conv2d_tile_raw(
     let (h, w) = (s.h(), s.w());
     let cpg_in = attrs.in_c / attrs.groups;
     let cpg_out = attrs.out_c / attrs.groups;
-    debug_assert!(ic1 <= cpg_in && oc1 <= attrs.out_c && oy1 <= oh);
+    debug_assert!(ic1 <= cpg_in && oc1 <= attrs.out_c && oy1 <= oh && tx1 <= ow);
+    if tx0 >= tx1 {
+        return;
+    }
     let kw_elems = attrs.kh * attrs.kw;
     let (stride, pad) = (attrs.stride, attrs.pad);
     for oc in oc0..oc1 {
@@ -115,7 +190,7 @@ pub(crate) unsafe fn conv2d_tile_raw(
         for oy in oy0..oy1 {
             let out_off = ((b * attrs.out_c + oc) * oh + oy) * ow;
             let out_row = std::slice::from_raw_parts_mut(out.add(out_off), ow);
-            out_row.fill(b0);
+            out_row[tx0..tx1].fill(b0);
             let iy0 = (oy * stride) as isize - pad as isize;
             for ic in ic0..ic1 {
                 let c_in = g * cpg_in + ic;
@@ -128,34 +203,42 @@ pub(crate) unsafe fn conv2d_tile_raw(
                     let in_off = ((b * attrs.in_c + c_in) * h + iy as usize) * w;
                     let in_row = &x.data[in_off..in_off + w];
                     // kw==3/s1/p1 tap fusion (perf pass #3): one pass over
-                    // the interior folds all three kx taps.
+                    // the interior folds all three kx taps. The clipped
+                    // column range keeps the exact per-element expressions.
                     if attrs.kw == 3 && stride == 1 && pad == 1 && ow == w && w >= 2 {
                         let (w0, w1, w2) = (
                             weights[wk + ky * 3],
                             weights[wk + ky * 3 + 1],
                             weights[wk + ky * 3 + 2],
                         );
-                        out_row[0] += w1 * in_row[0] + w2 * in_row[1];
-                        for ox in 1..ow - 1 {
+                        if tx0 == 0 {
+                            out_row[0] += w1 * in_row[0] + w2 * in_row[1];
+                        }
+                        for ox in tx0.max(1)..tx1.min(ow - 1) {
                             out_row[ox] +=
                                 w0 * in_row[ox - 1] + w1 * in_row[ox] + w2 * in_row[ox + 1];
                         }
-                        out_row[ow - 1] += w0 * in_row[ow - 2] + w1 * in_row[ow - 1];
+                        if tx1 == ow {
+                            out_row[ow - 1] += w0 * in_row[ow - 2] + w1 * in_row[ow - 1];
+                        }
                         continue;
                     }
                     for kx in 0..attrs.kw {
                         let wv = weights[wk + ky * attrs.kw + kx];
                         let ix0 = kx as isize - pad as isize;
-                        // Valid output range: 0 <= ox*stride + ix0 < w.
+                        // Valid output range: 0 <= ox*stride + ix0 < w,
+                        // intersected with the tile's column range.
                         let ox_lo = if ix0 < 0 {
                             ((-ix0) as usize).div_ceil(stride)
                         } else {
                             0
-                        };
+                        }
+                        .max(tx0);
                         if (ox_lo * stride) as isize + ix0 >= w as isize {
                             continue;
                         }
-                        let ox_hi = (((w as isize - 1 - ix0) as usize) / stride + 1).min(ow);
+                        let ox_hi =
+                            (((w as isize - 1 - ix0) as usize) / stride + 1).min(tx1);
                         if ox_lo >= ox_hi {
                             continue;
                         }
@@ -181,12 +264,16 @@ pub(crate) unsafe fn conv2d_tile_raw(
 }
 
 /// 1×1/s1 conv tile as a grouped packed matrix product over the pixel
-/// axis: rows `oc0..oc1` of `W [out_c, in_c/groups] × X_g [in_c/groups,
-/// HW]`, one panel product per intersected convolution group.
+/// axis: rows `oc0..oc1`, pixel columns `[j0, j1)` of `W [out_c,
+/// in_c/groups] × X_g [in_c/groups, HW]`, one panel product per intersected
+/// convolution group. The per-element `k` order is independent of the
+/// column range, so any (oc, pixel) tiling is bit-identical to the full
+/// product.
 ///
 /// # Safety
 /// `out` must point at a live `out_c*h*w` f32 buffer (batch 1). Concurrent
-/// calls on the same buffer must use disjoint `oc` ranges.
+/// calls on the same buffer must use disjoint `(oc, pixel)` regions.
+#[allow(clippy::too_many_arguments)]
 pub(crate) unsafe fn pointwise_tile_raw(
     x: &Tensor,
     attrs: &ConvAttrs,
@@ -194,6 +281,8 @@ pub(crate) unsafe fn pointwise_tile_raw(
     bias: &[f32],
     oc0: usize,
     oc1: usize,
+    j0: usize,
+    j1: usize,
     out: *mut f32,
 ) {
     let s = x.shape();
@@ -201,6 +290,7 @@ pub(crate) unsafe fn pointwise_tile_raw(
     let cpg_in = attrs.in_c / attrs.groups;
     let cpg_out = attrs.out_c / attrs.groups;
     debug_assert!(oc0 <= oc1 && oc1 <= attrs.out_c);
+    debug_assert!(j0 <= j1 && j1 <= hw);
     let mut r0 = oc0;
     while r0 < oc1 {
         let g = r0 / cpg_out;
@@ -208,8 +298,9 @@ pub(crate) unsafe fn pointwise_tile_raw(
         let a = &weights[r0 * cpg_in..r1 * cpg_in];
         let xg = &x.data[g * cpg_in * hw..(g + 1) * cpg_in * hw];
         let row_bias = if bias.is_empty() { &[][..] } else { &bias[r0..r1] };
-        // SAFETY: rows r0..r1 occupy the disjoint slice [r0*hw, r1*hw).
-        matmul_panel_raw(a, r1 - r0, cpg_in, xg, hw, 0, hw, &[], row_bias, out.add(r0 * hw));
+        // SAFETY: rows r0..r1 write only columns [j0, j1) of the disjoint
+        // slice [r0*hw, r1*hw).
+        matmul_panel_raw(a, r1 - r0, cpg_in, xg, hw, j0, j1, &[], row_bias, out.add(r0 * hw));
         r0 = r1;
     }
 }
@@ -296,13 +387,77 @@ mod tests {
             for (oy0, oy1) in [(0usize, 4usize), (4, 9)] {
                 unsafe {
                     conv2d_tile_raw(
-                        &x, &a, &w, &bias, 0, oc0, oc1, oy0, oy1, 0, 5, oh, ow,
+                        &x, &a, &w, &bias, 0, oc0, oc1, oy0, oy1, 0, ow, 0, 5, oh, ow,
                         tiled.as_mut_ptr(),
                     )
                 };
             }
         }
         assert_eq!(tiled, full.data);
+    }
+
+    #[test]
+    fn ox_column_tiles_match_full_conv_bitwise() {
+        // Column (inW-shard) tiling must reproduce the serial result
+        // exactly, including through the kw==3 tap-fusion fast path.
+        let mut rng = Rng::new(34);
+        for (a, h, w) in [
+            (ConvAttrs::std(4, 6, 3, 1, 1), 9usize, 9usize), // tap-fusion path
+            (ConvAttrs::std(4, 6, 3, 2, 1), 9, 9),           // strided generic
+            (ConvAttrs::depthwise(4, 3, 1, 1), 8, 10),       // depthwise
+        ] {
+            let x = Tensor::fm(1, a.in_c, h, w, rng.vec_uniform(a.in_c * h * w));
+            let wts = rng.vec_uniform(a.weight_count() as usize);
+            let bias = rng.vec_uniform(a.out_c);
+            let full = conv2d(&x, &a, &wts, &bias);
+            let (oh, ow) = a.out_hw(h, w);
+            let cpg = a.in_c / a.groups;
+            let mut tiled = vec![0.0f32; a.out_c * oh * ow];
+            let cut = ow / 2;
+            for (tx0, tx1) in [(0usize, cut), (cut, ow)] {
+                unsafe {
+                    conv2d_tile_raw(
+                        &x, &a, &wts, &bias, 0, 0, a.out_c, 0, oh, tx0, tx1, 0, cpg, oh, ow,
+                        tiled.as_mut_ptr(),
+                    )
+                };
+            }
+            assert_eq!(tiled, full.data, "k{}x{} s{}", a.kh, a.kw, a.stride);
+        }
+    }
+
+    #[test]
+    fn region_router_matches_serial_for_all_shard_shapes() {
+        let mut rng = Rng::new(35);
+        for a in [
+            ConvAttrs::std(5, 8, 3, 1, 1),  // dense generic
+            ConvAttrs::std(8, 8, 1, 1, 0),  // pointwise panel path
+            ConvAttrs::depthwise(8, 3, 1, 1),
+        ] {
+            let (h, w) = (8usize, 8usize);
+            let x = Tensor::fm(1, a.in_c, h, w, rng.vec_uniform(a.in_c * h * w));
+            let wts = rng.vec_uniform(a.weight_count() as usize);
+            let bias = rng.vec_uniform(a.out_c);
+            let full = conv2d(&x, &a, &wts, &bias);
+            let (oh, ow) = a.out_hw(h, w);
+            // outC region split, inH split, inW split: each reassembles.
+            for splits in [
+                vec![(0, 3, 0, oh, 0, ow), (3, a.out_c, 0, oh, 0, ow)],
+                vec![(0, a.out_c, 0, 3, 0, ow), (0, a.out_c, 3, oh, 0, ow)],
+                vec![(0, a.out_c, 0, oh, 0, 5), (0, a.out_c, 0, oh, 5, ow)],
+            ] {
+                let mut got = vec![0.0f32; a.out_c * oh * ow];
+                for (c0, c1, y0, y1, x0, x1) in splits {
+                    unsafe {
+                        conv2d_region_raw(
+                            &x, &a, &wts, &bias, c0, c1, y0, y1, x0, x1, oh, ow,
+                            got.as_mut_ptr(),
+                        )
+                    };
+                }
+                assert_eq!(got, full.data, "attrs {a:?}");
+            }
+        }
     }
 
     #[test]
@@ -319,8 +474,8 @@ mod tests {
         let mut p0 = vec![0.0f32; numel];
         let mut p1 = vec![0.0f32; numel];
         unsafe {
-            conv2d_tile_raw(&x, &a, &w, &bias, 0, 0, 4, 0, 7, 0, 5, 7, 7, p0.as_mut_ptr());
-            conv2d_tile_raw(&x, &a, &w, &bias, 0, 0, 4, 0, 7, 5, 8, 7, 7, p1.as_mut_ptr());
+            conv2d_tile_raw(&x, &a, &w, &bias, 0, 0, 4, 0, 7, 0, 7, 0, 5, 7, 7, p0.as_mut_ptr());
+            conv2d_tile_raw(&x, &a, &w, &bias, 0, 0, 4, 0, 7, 0, 7, 5, 8, 7, 7, p1.as_mut_ptr());
         }
         for i in 0..numel {
             assert!((p0[i] + p1[i] - full.data[i]).abs() < 1e-4);
@@ -338,7 +493,7 @@ mod tests {
         let full = conv2d(&x, &a, &w, &bias);
         let mut tiled = vec![0.0f32; 8 * 36];
         for (oc0, oc1) in [(0usize, 3usize), (3, 5), (5, 8)] {
-            unsafe { pointwise_tile_raw(&x, &a, &w, &bias, oc0, oc1, tiled.as_mut_ptr()) };
+            unsafe { pointwise_tile_raw(&x, &a, &w, &bias, oc0, oc1, 0, 36, tiled.as_mut_ptr()) };
         }
         assert_eq!(tiled, full.data);
     }

@@ -30,7 +30,7 @@ use super::elementwise as ew;
 use super::interp::{exec_node, run_graph, synthetic_inputs};
 use super::params::{NodeParams, ParamStore};
 use super::{conv, matmul, pool as pooling, Tensor};
-use crate::graph::{ConvAttrs, Graph, Node, OpKind, Shape, TensorDesc};
+use crate::graph::{ConvAttrs, Graph, Node, OpKind, PoolAttrs, PoolKind, Shape, TensorDesc};
 use crate::hw::DeviceModel;
 use crate::opt::{dos, ExecutionPlan, NodePlan, OptLevel, PartitionDim};
 use crate::runtime::pool::{ScopedJob, WorkerPool};
@@ -169,6 +169,43 @@ impl ParInterpreter {
         if self.pool.is_none() {
             return exec_node(p, &node.op, args);
         }
+        // Pooling and shape/data-movement ops carry no MACs (or a units==1
+        // DMA-driven plan), so the compute gate below would leave them
+        // serial inside an otherwise parallel pass — ROADMAP follow-up (a):
+        // big maps chunk across the pool's copy bandwidth instead.
+        let fm1 = |t: &Tensor| t.shape().is_fm() && t.shape().n() == 1;
+        match &node.op {
+            OpKind::Pool(a)
+                if fm1(args[0]) && args[0].shape().numel() >= MIN_PARALLEL_ELEMS =>
+            {
+                return self.par_pool(args[0], a);
+            }
+            OpKind::Upsample { factor }
+                if fm1(args[0]) && node.out.shape.numel() >= MIN_PARALLEL_ELEMS =>
+            {
+                return self.par_upsample(args[0], *factor);
+            }
+            OpKind::Concat
+                if args.iter().all(|t| fm1(t))
+                    && node.out.shape.numel() >= MIN_PARALLEL_ELEMS =>
+            {
+                return self.par_concat(args);
+            }
+            OpKind::Slice { begin, end }
+                if fm1(args[0]) && node.out.shape.numel() >= MIN_PARALLEL_ELEMS =>
+            {
+                return self.par_slice(args[0], *begin, *end);
+            }
+            OpKind::ChannelShuffle { groups }
+                if fm1(args[0]) && node.out.shape.numel() >= MIN_PARALLEL_ELEMS =>
+            {
+                return self.par_shuffle(args[0], *groups);
+            }
+            OpKind::Transpose if node.out.shape.numel() >= MIN_PARALLEL_ELEMS => {
+                return self.par_transpose(args[0]);
+            }
+            _ => {}
+        }
         let nplan = self.plan.node(node.id);
         if nplan.units <= 1 || node.macs() < MIN_PARALLEL_ELEMS as u64 {
             return exec_node(p, &node.op, args);
@@ -218,7 +255,7 @@ impl ParInterpreter {
             }
             OpKind::Softmax => self.par_rows(args[0], ew::softmax_row),
             OpKind::LayerNorm => self.par_rows(args[0], ew::layernorm_row),
-            // Pooling, shape ops and anything else: serial reference path.
+            // Small pools/shape ops and anything else: serial reference path.
             _ => exec_node(p, &node.op, args),
         }
     }
@@ -272,10 +309,11 @@ impl ParInterpreter {
         let bias = p.bias.as_slice();
         let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
         if pointwise {
+            let hw = oh * ow;
             for (oc0, oc1) in chunks(a.out_c, self.workers) {
                 jobs.push(Box::new(move || {
                     // SAFETY: disjoint oc ranges of the same buffer.
-                    unsafe { conv::pointwise_tile_raw(x, &a, w, bias, oc0, oc1, ptr.0) };
+                    unsafe { conv::pointwise_tile_raw(x, &a, w, bias, oc0, oc1, 0, hw, ptr.0) };
                 }));
             }
         } else {
@@ -287,7 +325,8 @@ impl ParInterpreter {
                         // SAFETY: disjoint (oc, oy) tiles of the same buffer.
                         unsafe {
                             conv::conv2d_tile_raw(
-                                x, &a, w, bias, 0, oc0, oc1, oy0, oy1, 0, cpg_in, oh, ow, ptr.0,
+                                x, &a, w, bias, 0, oc0, oc1, oy0, oy1, 0, ow, 0, cpg_in, oh,
+                                ow, ptr.0,
                             )
                         };
                     }));
@@ -323,7 +362,7 @@ impl ParInterpreter {
                 // SAFETY: each job owns a whole private partial buffer.
                 unsafe {
                     conv::conv2d_tile_raw(
-                        x, &a, w, bias, 0, 0, a.out_c, 0, oh, ic0, ic1, oh, ow, ptr.0,
+                        x, &a, w, bias, 0, 0, a.out_c, 0, oh, 0, ow, ic0, ic1, oh, ow, ptr.0,
                     )
                 };
             }));
@@ -531,6 +570,169 @@ impl ParInterpreter {
         pool.run(jobs);
         Tensor::new(x.desc.clone(), out)
     }
+
+    /// Channel-chunked pooling (max/avg/global) through the shared tile
+    /// kernels — channels are independent, so any chunking is bit-exact.
+    fn par_pool(&self, x: &Tensor, attrs: &PoolAttrs) -> Tensor {
+        let pool = self.pool.as_ref().expect("parallel path");
+        let s = x.shape();
+        let (c, h, w) = (s.c(), s.h(), s.w());
+        let a = *attrs;
+        if a.kind == PoolKind::Global {
+            let mut data = self.take_zeroed(c);
+            let ptr = SendPtr(data.as_mut_ptr());
+            let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+            for (c0, c1) in chunks(c, self.workers) {
+                jobs.push(Box::new(move || {
+                    // SAFETY: disjoint channel ranges of the same buffer.
+                    unsafe { pooling::global_tile_raw(x, 0, c0, c1, ptr.0) };
+                }));
+            }
+            pool.run(jobs);
+            return Tensor::new(TensorDesc::fm(1, c, 1, 1), data);
+        }
+        let oh = (h - a.k) / a.stride + 1;
+        let ow = (w - a.k) / a.stride + 1;
+        let mut data = self.take_zeroed(c * oh * ow);
+        let ptr = SendPtr(data.as_mut_ptr());
+        let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+        for (c0, c1) in chunks(c, self.workers) {
+            jobs.push(Box::new(move || {
+                // SAFETY: disjoint channel ranges of the same buffer.
+                unsafe { pooling::pool_tile_raw(x, &a, 0, c0, c1, 0, oh, 0, ow, oh, ow, ptr.0) };
+            }));
+        }
+        pool.run(jobs);
+        Tensor::new(TensorDesc::fm(1, c, oh, ow), data)
+    }
+
+    /// Channel-chunked nearest-neighbour upsample.
+    fn par_upsample(&self, x: &Tensor, factor: usize) -> Tensor {
+        let pool = self.pool.as_ref().expect("parallel path");
+        let s = x.shape();
+        let (c, h, w) = (s.c(), s.h(), s.w());
+        let (oh, ow) = (h * factor, w * factor);
+        let mut data = self.take_zeroed(c * oh * ow);
+        let ptr = SendPtr(data.as_mut_ptr());
+        let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+        for (c0, c1) in chunks(c, self.workers) {
+            jobs.push(Box::new(move || {
+                // SAFETY: disjoint channel ranges of the same buffer.
+                let seg = unsafe {
+                    std::slice::from_raw_parts_mut(ptr.0.add(c0 * oh * ow), (c1 - c0) * oh * ow)
+                };
+                for (idx, v) in seg.iter_mut().enumerate() {
+                    let ch = c0 + idx / (oh * ow);
+                    let rem = idx % (oh * ow);
+                    *v = x.at4(0, ch, rem / ow / factor, rem % ow / factor);
+                }
+            }));
+        }
+        pool.run(jobs);
+        Tensor::new(TensorDesc::fm(1, c, oh, ow), data)
+    }
+
+    /// Concat with one contiguous channel-block copy job per input.
+    fn par_concat(&self, args: &[&Tensor]) -> Tensor {
+        let pool = self.pool.as_ref().expect("parallel path");
+        let s0 = args[0].shape();
+        let (h, w) = (s0.h(), s0.w());
+        let hw = h * w;
+        let total_c: usize = args.iter().map(|t| t.shape().c()).sum();
+        let mut data = self.take_zeroed(total_c * hw);
+        let ptr = SendPtr(data.as_mut_ptr());
+        let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+        let mut c_off = 0usize;
+        for t in args {
+            let tc = t.shape().c();
+            let dst = c_off * hw;
+            let src: &[f32] = &t.data;
+            jobs.push(Box::new(move || {
+                // SAFETY: disjoint destination channel blocks.
+                let seg = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(dst), tc * hw) };
+                seg.copy_from_slice(src);
+            }));
+            c_off += tc;
+        }
+        pool.run(jobs);
+        Tensor::new(TensorDesc::fm(1, total_c, h, w), data)
+    }
+
+    /// Channel-chunked slice copy.
+    fn par_slice(&self, x: &Tensor, begin: usize, end: usize) -> Tensor {
+        let pool = self.pool.as_ref().expect("parallel path");
+        let s = x.shape();
+        let hw = s.h() * s.w();
+        let oc = end - begin;
+        let mut data = self.take_zeroed(oc * hw);
+        let ptr = SendPtr(data.as_mut_ptr());
+        let src: &[f32] = &x.data;
+        let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+        for (c0, c1) in chunks(oc, self.workers) {
+            jobs.push(Box::new(move || {
+                // SAFETY: disjoint destination channel ranges.
+                let seg =
+                    unsafe { std::slice::from_raw_parts_mut(ptr.0.add(c0 * hw), (c1 - c0) * hw) };
+                seg.copy_from_slice(&src[(begin + c0) * hw..(begin + c1) * hw]);
+            }));
+        }
+        pool.run(jobs);
+        Tensor::new(TensorDesc::fm(1, oc, s.h(), s.w()), data)
+    }
+
+    /// Destination-chunked channel shuffle.
+    fn par_shuffle(&self, x: &Tensor, groups: usize) -> Tensor {
+        let pool = self.pool.as_ref().expect("parallel path");
+        let s = x.shape();
+        let (c, h, w) = (s.c(), s.h(), s.w());
+        let cpg = c / groups;
+        let hw = h * w;
+        let mut data = self.take_zeroed(c * hw);
+        let ptr = SendPtr(data.as_mut_ptr());
+        let src: &[f32] = &x.data;
+        let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+        for (d0, d1) in chunks(c, self.workers) {
+            jobs.push(Box::new(move || {
+                // SAFETY: disjoint destination channel ranges.
+                let seg =
+                    unsafe { std::slice::from_raw_parts_mut(ptr.0.add(d0 * hw), (d1 - d0) * hw) };
+                for (i, plane) in seg.chunks_mut(hw).enumerate() {
+                    let dst_c = d0 + i;
+                    // dst_c = i*groups + g  <=>  src_c = g*cpg + i.
+                    let src_c = (dst_c % groups) * cpg + dst_c / groups;
+                    plane.copy_from_slice(&src[src_c * hw..(src_c + 1) * hw]);
+                }
+            }));
+        }
+        pool.run(jobs);
+        Tensor::new(x.desc.clone(), data)
+    }
+
+    /// Output-row-chunked 2-D transpose.
+    fn par_transpose(&self, x: &Tensor) -> Tensor {
+        let pool = self.pool.as_ref().expect("parallel path");
+        let (rows, cols) = (x.shape().dims[0], x.shape().dims[1]);
+        let mut data = self.take_zeroed(rows * cols);
+        let ptr = SendPtr(data.as_mut_ptr());
+        let src: &[f32] = &x.data;
+        let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+        for (r0, r1) in chunks(cols, self.workers) {
+            jobs.push(Box::new(move || {
+                // SAFETY: disjoint output row ranges (output is [cols, rows]).
+                let seg = unsafe {
+                    std::slice::from_raw_parts_mut(ptr.0.add(r0 * rows), (r1 - r0) * rows)
+                };
+                for (i, orow) in seg.chunks_mut(rows).enumerate() {
+                    let ocol = r0 + i;
+                    for (j, v) in orow.iter_mut().enumerate() {
+                        *v = src[j * cols + ocol];
+                    }
+                }
+            }));
+        }
+        pool.run(jobs);
+        Tensor::new(TensorDesc::plain(Shape::mat(cols, rows)), data)
+    }
 }
 
 #[cfg(test)]
@@ -584,6 +786,34 @@ mod tests {
         let ad = b.add("a", gl, sm);
         b.output(ad);
         assert_bitwise_equal(b.finish(), 12);
+    }
+
+    #[test]
+    fn pool_and_shape_ops_match_serial_bitwise() {
+        // Every newly parallelized pool/shape path at sizes above the
+        // parallelization threshold (ROADMAP follow-up (a)).
+        let mut b = GraphBuilder::new("par_shape");
+        let x = b.input("x", Shape::nchw(1, 16, 32, 32));
+        let mp = b.maxpool("mp", x, 2, 2);
+        let ap = b.avgpool("ap", mp, 2, 1);
+        let up = b.upsample("up", ap, 2);
+        let sh = b.channel_shuffle("sh", up, 4);
+        let lo = b.slice_c("lo", sh, 0, 8);
+        let hi = b.slice_c("hi", sh, 8, 16);
+        let cat = b.concat("cat", &[lo, hi]);
+        let gp = b.global_pool("gp", cat);
+        b.output(gp);
+        b.output(cat);
+        assert_bitwise_equal(b.finish(), 13);
+    }
+
+    #[test]
+    fn transpose_matches_serial_bitwise() {
+        let mut b = GraphBuilder::new("par_tr");
+        let x = b.input("x", Shape::mat(96, 80));
+        let t = b.transpose("t", x);
+        b.output(t);
+        assert_bitwise_equal(b.finish(), 14);
     }
 
     #[test]

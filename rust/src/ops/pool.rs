@@ -1,68 +1,120 @@
 //! Pooling execution: max / average / global-average.
+//!
+//! Structured as **tile kernels** like `ops::conv`: the serial entry point
+//! ([`pool`]), the parallel executor's channel-chunked pooling and the
+//! d-Xenos cluster runtime's row/column shards all run the same
+//! per-element fold ([`pool_tile_raw`], [`global_tile_raw`]), so any
+//! (channel, row, column) tiling of a pooling operator is bit-identical to
+//! the serial result.
 
 use super::Tensor;
 use crate::graph::{PoolAttrs, PoolKind, TensorDesc};
 
 /// Run a pooling operator.
 pub fn pool(x: &Tensor, attrs: &PoolAttrs) -> Tensor {
-    match attrs.kind {
-        PoolKind::Global => global_avg(x),
-        PoolKind::Max => window(x, attrs, f32::NEG_INFINITY, |acc, v| acc.max(v), |acc, _| acc),
-        PoolKind::Avg => window(x, attrs, 0.0, |acc, v| acc + v, |acc, n| acc / n as f32),
-    }
-}
-
-fn window(
-    x: &Tensor,
-    attrs: &PoolAttrs,
-    init: f32,
-    fold: impl Fn(f32, f32) -> f32,
-    finish: impl Fn(f32, usize) -> f32,
-) -> Tensor {
     let s = x.shape();
-    let (n, c, h, w) = (s.n(), s.c(), s.h(), s.w());
+    let (n, c) = (s.n(), s.c());
+    if attrs.kind == PoolKind::Global {
+        let mut out = Tensor::zeros(TensorDesc::fm(n, c, 1, 1));
+        for b in 0..n {
+            // SAFETY: single-threaded call covering every channel of `b`.
+            unsafe { global_tile_raw(x, b, 0, c, out.data.as_mut_ptr()) };
+        }
+        return out;
+    }
+    let (h, w) = (s.h(), s.w());
     let oh = (h - attrs.k) / attrs.stride + 1;
     let ow = (w - attrs.k) / attrs.stride + 1;
     let mut out = Tensor::zeros(TensorDesc::fm(n, c, oh, ow));
     for b in 0..n {
-        for ch in 0..c {
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    let mut acc = init;
-                    for ky in 0..attrs.k {
-                        for kx in 0..attrs.k {
-                            acc = fold(
-                                acc,
-                                x.at4(b, ch, oy * attrs.stride + ky, ox * attrs.stride + kx),
-                            );
-                        }
-                    }
-                    out.data[((b * c + ch) * oh + oy) * ow + ox] =
-                        finish(acc, attrs.k * attrs.k);
-                }
-            }
-        }
+        // SAFETY: single-threaded call covering the whole region of `b`.
+        unsafe { pool_tile_raw(x, attrs, b, 0, c, 0, oh, 0, ow, oh, ow, out.data.as_mut_ptr()) };
     }
     out
 }
 
-fn global_avg(x: &Tensor) -> Tensor {
-    let s = x.shape();
-    let (n, c, h, w) = (s.n(), s.c(), s.h(), s.w());
-    let mut out = Tensor::zeros(TensorDesc::fm(n, c, 1, 1));
-    let hw = (h * w) as f32;
-    for b in 0..n {
-        for ch in 0..c {
-            let mut acc = 0.0;
-            for y in 0..h {
-                for xx in 0..w {
-                    acc += x.at4(b, ch, y, xx);
-                }
+/// Windowed (max/avg) pooling tile: channels `[c0, c1)`, output rows
+/// `[oy0, oy1)`, output columns `[ox0, ox1)` of batch `b`, written into
+/// the full `[n, c, oh, ow]` buffer behind `out`. Every element applies the
+/// same ky-outer/kx-inner fold as the serial pass.
+///
+/// # Safety
+/// `out` must point at a live `n*c*oh*ow` f32 buffer; concurrent calls must
+/// target disjoint regions.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn pool_tile_raw(
+    x: &Tensor,
+    attrs: &PoolAttrs,
+    b: usize,
+    c0: usize,
+    c1: usize,
+    oy0: usize,
+    oy1: usize,
+    ox0: usize,
+    ox1: usize,
+    oh: usize,
+    ow: usize,
+    out: *mut f32,
+) {
+    debug_assert!(attrs.kind != PoolKind::Global, "global pooling has its own tile");
+    let c = x.shape().c();
+    let window = attrs.k * attrs.k;
+    for ch in c0..c1 {
+        for oy in oy0..oy1 {
+            for ox in ox0..ox1 {
+                let v = match attrs.kind {
+                    PoolKind::Max => {
+                        let mut acc = f32::NEG_INFINITY;
+                        for ky in 0..attrs.k {
+                            for kx in 0..attrs.k {
+                                acc = acc.max(x.at4(
+                                    b,
+                                    ch,
+                                    oy * attrs.stride + ky,
+                                    ox * attrs.stride + kx,
+                                ));
+                            }
+                        }
+                        acc
+                    }
+                    PoolKind::Avg => {
+                        let mut acc = 0.0f32;
+                        for ky in 0..attrs.k {
+                            for kx in 0..attrs.k {
+                                acc += x.at4(b, ch, oy * attrs.stride + ky, ox * attrs.stride + kx);
+                            }
+                        }
+                        acc / window as f32
+                    }
+                    PoolKind::Global => unreachable!(),
+                };
+                *out.add(((b * c + ch) * oh + oy) * ow + ox) = v;
             }
-            out.data[b * c + ch] = acc / hw;
         }
     }
-    out
+}
+
+/// Global-average tile: channels `[c0, c1)` of batch `b` reduced to one
+/// mean each, written into the `[n, c, 1, 1]` buffer behind `out`.
+/// Accumulation runs row-major over the channel plane, exactly as the
+/// serial pass.
+///
+/// # Safety
+/// `out` must point at a live `n*c` f32 buffer; concurrent calls must use
+/// disjoint channel ranges.
+pub(crate) unsafe fn global_tile_raw(x: &Tensor, b: usize, c0: usize, c1: usize, out: *mut f32) {
+    let s = x.shape();
+    let (c, h, w) = (s.c(), s.h(), s.w());
+    let hw = (h * w) as f32;
+    for ch in c0..c1 {
+        let mut acc = 0.0f32;
+        for y in 0..h {
+            for xx in 0..w {
+                acc += x.at4(b, ch, y, xx);
+            }
+        }
+        *out.add(b * c + ch) = acc / hw;
+    }
 }
 
 #[cfg(test)]
@@ -97,5 +149,50 @@ mod tests {
         let x = Tensor::fm(1, 1, 3, 3, vec![1., 2., 3., 4., 5., 6., 7., 8., 9.]);
         let y = pool(&x, &PoolAttrs::max(2, 1));
         assert_eq!(y.data, vec![5., 6., 8., 9.]);
+    }
+
+    #[test]
+    fn pool_tiles_match_full_bitwise() {
+        // Channel, row, and column tilings must each reproduce the serial
+        // result exactly — the guarantee both the parallel executor and the
+        // cluster shards rely on.
+        let mut rng = crate::util::rng::Rng::new(36);
+        let x = Tensor::fm(1, 4, 8, 8, rng.vec_uniform(4 * 8 * 8));
+        for attrs in [PoolAttrs::max(2, 2), PoolAttrs::avg(2, 2), PoolAttrs::max(3, 1)] {
+            let full = pool(&x, &attrs);
+            let (oh, ow) = (full.shape().h(), full.shape().w());
+            for (cr, yr, xr) in [
+                (vec![(0usize, 2usize), (2, 4)], vec![(0, oh)], vec![(0, ow)]),
+                (vec![(0, 4)], vec![(0usize, 1usize), (1, oh)], vec![(0, ow)]),
+                (vec![(0, 4)], vec![(0, oh)], vec![(0usize, 2usize), (2, ow)]),
+            ] {
+                let mut got = vec![0.0f32; 4 * oh * ow];
+                for &(c0, c1) in &cr {
+                    for &(y0, y1) in &yr {
+                        for &(x0, x1) in &xr {
+                            unsafe {
+                                pool_tile_raw(
+                                    &x, &attrs, 0, c0, c1, y0, y1, x0, x1, oh, ow,
+                                    got.as_mut_ptr(),
+                                )
+                            };
+                        }
+                    }
+                }
+                assert_eq!(got, full.data, "{attrs:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn global_tiles_match_full_bitwise() {
+        let mut rng = crate::util::rng::Rng::new(37);
+        let x = Tensor::fm(1, 6, 5, 7, rng.vec_uniform(6 * 5 * 7));
+        let full = pool(&x, &PoolAttrs::global());
+        let mut got = vec![0.0f32; 6];
+        for (c0, c1) in [(0usize, 2usize), (2, 5), (5, 6)] {
+            unsafe { global_tile_raw(&x, 0, c0, c1, got.as_mut_ptr()) };
+        }
+        assert_eq!(got, full.data);
     }
 }

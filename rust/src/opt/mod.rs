@@ -19,7 +19,10 @@ pub mod rewrite;
 pub mod search;
 
 pub use linking::LinkRecord;
-pub use plan::{ExecutionPlan, NodePlan, OptLevel, ParamSplit, PartitionDim, SplitDim};
+pub use plan::{
+    even_share, shard_slices, ExecutionPlan, NodePlan, OptLevel, ParamSplit, PartitionDim,
+    ShardSlice, SplitDim,
+};
 
 use std::time::{Duration, Instant};
 

@@ -56,6 +56,57 @@ pub enum SplitDim {
     S,
 }
 
+/// Contiguous near-even share `idx` of `0..total` split `ways` ways: the
+/// first `total % ways` shares get one extra element. Shares beyond `total`
+/// come back empty. This is the single chunking rule every shard consumer
+/// (the d-Xenos cluster runtime, shard-weight extraction, halo bookkeeping)
+/// uses, so producers and consumers always agree on slice boundaries.
+pub fn even_share(total: usize, ways: usize, idx: usize) -> (usize, usize) {
+    let ways = ways.max(1);
+    if idx >= ways {
+        return (total, total);
+    }
+    let base = total / ways;
+    let rem = total % ways;
+    let start = idx * base + idx.min(rem);
+    let end = start + base + usize::from(idx < rem);
+    (start, end)
+}
+
+/// One rank's slice of a partitioned dimension. The d-Xenos shard-weight
+/// extraction (`dist::exec::shard`) materializes these to cut parameter
+/// tensors; workers re-derive the same boundaries from [`even_share`], so
+/// the slice itself never needs to travel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSlice {
+    /// Shard rank the slice belongs to.
+    pub rank: usize,
+    /// Partitioned dimension.
+    pub dim: PartitionDim,
+    /// Slice start (inclusive).
+    pub start: usize,
+    /// Slice end (exclusive).
+    pub end: usize,
+}
+
+impl ShardSlice {
+    /// True when the slice carries no work (more ranks than elements).
+    pub fn is_empty(&self) -> bool {
+        self.start >= self.end
+    }
+}
+
+/// All `ways` slices of `0..total` along `dim`, in rank order — what a
+/// `p`-way distributed partition of one node serializes to.
+pub fn shard_slices(dim: PartitionDim, total: usize, ways: usize) -> Vec<ShardSlice> {
+    (0..ways.max(1))
+        .map(|rank| {
+            let (start, end) = even_share(total, ways, rank);
+            ShardSlice { rank, dim, start, end }
+        })
+        .collect()
+}
+
 /// How a node's parameters are split into L2-resident chunks.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ParamSplit {
@@ -161,6 +212,35 @@ mod tests {
     fn labels_match_paper() {
         assert_eq!(OptLevel::Vanilla.label(), "Vanilla");
         assert_eq!(OptLevel::Full.label(), "Xenos(HO+VO)");
+    }
+
+    #[test]
+    fn even_share_partitions_exactly() {
+        for (total, ways) in [(10, 3), (4, 8), (0, 4), (16, 4), (7, 7)] {
+            let mut covered = 0;
+            for idx in 0..ways {
+                let (s, e) = even_share(total, ways, idx);
+                assert_eq!(s, covered, "total={total} ways={ways} idx={idx}");
+                assert!(e >= s && e <= total);
+                covered = e;
+            }
+            assert_eq!(covered, total);
+        }
+        // Shares differ by at most one element.
+        let sizes: Vec<usize> =
+            (0..3).map(|i| { let (s, e) = even_share(10, 3, i); e - s }).collect();
+        assert_eq!(sizes, vec![4, 3, 3]);
+    }
+
+    #[test]
+    fn shard_slices_round_trip() {
+        let slices = shard_slices(PartitionDim::OutC, 10, 4);
+        assert_eq!(slices.len(), 4);
+        assert_eq!(slices[0].start, 0);
+        assert_eq!(slices[3].end, 10);
+        assert!(slices.iter().all(|s| !s.is_empty()));
+        let empty = shard_slices(PartitionDim::InH, 2, 4);
+        assert!(empty[3].is_empty());
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! The inference engine driven by the serving coordinator.
 //!
-//! Three interchangeable backends:
+//! Four interchangeable backends:
 //! * **Pjrt** — an AOT artifact (`vanilla`/`linked` model variants) running
 //!   through the PJRT CPU client; the production path (needs the `xla`
 //!   feature).
@@ -11,6 +11,9 @@
 //!   [`ExecutionPlan`](crate::opt::ExecutionPlan) realized on a worker
 //!   pool, with a per-engine buffer arena that persists across
 //!   inferences.
+//! * **Cluster** — the d-Xenos distributed backend: a
+//!   [`ClusterDriver`](crate::dist::exec::ClusterDriver) spreading each
+//!   inference across shard workers (in-process or remote TCP).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -18,6 +21,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use super::pjrt::PjrtRuntime;
+use crate::dist::exec::ClusterDriver;
 use crate::graph::{Graph, Shape};
 use crate::hw::DeviceModel;
 use crate::ops::{Interpreter, ParInterpreter, Tensor};
@@ -31,6 +35,8 @@ pub enum EngineKind {
     Interp,
     /// Parallel plan executor (DOS split on a worker pool).
     ParInterp,
+    /// d-Xenos distributed cluster backend.
+    Cluster,
 }
 
 /// An inference engine bound to one model.
@@ -43,6 +49,7 @@ enum Inner {
     Pjrt { rt: Arc<PjrtRuntime>, variant: String },
     Interp { graph: Arc<Graph> },
     ParInterp { interp: ParInterpreter },
+    Cluster { driver: ClusterDriver },
 }
 
 /// One inference result with its service time.
@@ -81,6 +88,13 @@ impl Engine {
         Engine { inner: Inner::ParInterp { interp }, name }
     }
 
+    /// Engine over a running d-Xenos cluster (local shard threads or
+    /// remote TCP workers — the driver abstracts both).
+    pub fn cluster(driver: ClusterDriver) -> Engine {
+        let name = driver.label();
+        Engine { inner: Inner::Cluster { driver }, name }
+    }
+
     /// Engine display name.
     pub fn name(&self) -> &str {
         &self.name
@@ -92,6 +106,7 @@ impl Engine {
             Inner::Pjrt { .. } => EngineKind::Pjrt,
             Inner::Interp { .. } => EngineKind::Interp,
             Inner::ParInterp { .. } => EngineKind::ParInterp,
+            Inner::Cluster { .. } => EngineKind::Cluster,
         }
     }
 
@@ -110,6 +125,7 @@ impl Engine {
                 let g = interp.graph();
                 g.input_ids().iter().map(|&i| g.node(i).out.shape.clone()).collect()
             }
+            Inner::Cluster { driver } => driver.input_shapes(),
         }
     }
 
@@ -120,6 +136,7 @@ impl Engine {
             Inner::Pjrt { rt, variant } => rt.execute(variant, inputs)?,
             Inner::Interp { graph } => Interpreter::new(graph).run(inputs),
             Inner::ParInterp { interp } => interp.run(inputs),
+            Inner::Cluster { driver } => driver.infer(inputs)?,
         };
         Ok(InferOutput { outputs, exec_s: start.elapsed().as_secs_f64() })
     }
@@ -154,6 +171,32 @@ mod tests {
     fn interp_engine_name() {
         let e = Engine::interp(Arc::new(tiny_graph()));
         assert_eq!(e.name(), "interp:tiny");
+    }
+
+    #[test]
+    fn cluster_engine_matches_serial() {
+        use crate::dist::{exec::ClusterDriver, PartitionScheme, SyncMode};
+        let g = Arc::new({
+            let mut b = GraphBuilder::new("cluster_tiny");
+            let x = b.input("x", Shape::nchw(1, 4, 12, 12));
+            let c = b.conv_bn_relu("c", x, 16, 3, 1, 1);
+            let p = b.avgpool("p", c, 2, 2);
+            let f = b.fc("fc", p, 5);
+            b.output(f);
+            b.finish()
+        });
+        let d = presets::tms320c6678();
+        let serial = Engine::interp(g.clone());
+        let driver =
+            ClusterDriver::local(g.clone(), &d, 2, PartitionScheme::Mix, SyncMode::Ring, 1)
+                .unwrap();
+        let cluster = Engine::cluster(driver);
+        assert_eq!(cluster.kind(), EngineKind::Cluster);
+        assert_eq!(cluster.input_shapes(), serial.input_shapes());
+        let inputs = crate::ops::interp::synthetic_inputs(&g, 77);
+        let a = serial.infer(&inputs).unwrap();
+        let b = cluster.infer(&inputs).unwrap();
+        assert_eq!(a.outputs[0].data, b.outputs[0].data);
     }
 
     #[test]

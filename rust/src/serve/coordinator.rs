@@ -49,7 +49,11 @@ pub struct ServeReport {
     pub exec: Summary,
     /// Batch-size stats.
     pub batch_size: Summary,
-    /// All responses (outputs included), sorted by request id.
+    /// Requests served by each worker (index = worker id).
+    pub per_worker: Vec<usize>,
+    /// All responses (outputs included), sorted by request id — ids are
+    /// unique, so the ordering is deterministic regardless of how the
+    /// worker pool interleaved completions.
     pub responses: Vec<Response>,
 }
 
@@ -173,8 +177,14 @@ impl Coordinator {
 
             let mut responses: Vec<Response> = resp_rx.into_iter().collect();
             let wall_s = t0.elapsed().as_secs_f64();
+            // Request ids are unique, so this total order is deterministic
+            // under any multi-worker completion interleaving.
             responses.sort_by_key(|r| r.id);
 
+            let mut per_worker = vec![0usize; self.cfg.workers];
+            for r in &responses {
+                per_worker[r.worker] += 1;
+            }
             let lat: Vec<f64> = responses.iter().map(|r| r.latency_s).collect();
             let exec: Vec<f64> = responses.iter().map(|r| r.exec_s).collect();
             let bs: Vec<f64> = responses.iter().map(|r| r.batch_size as f64).collect();
@@ -191,6 +201,7 @@ impl Coordinator {
                 latency: Summary::of(&lat).unwrap_or(EMPTY),
                 exec: Summary::of(&exec).unwrap_or(EMPTY),
                 batch_size: Summary::of(&bs).unwrap_or(EMPTY),
+                per_worker,
                 responses,
             })
         })
@@ -204,6 +215,7 @@ const EMPTY: Summary = Summary {
     min: 0.0,
     p50: 0.0,
     p90: 0.0,
+    p95: 0.0,
     p99: 0.0,
     max: 0.0,
 };
@@ -297,6 +309,39 @@ mod tests {
             seen.insert(r.worker);
         }
         assert!(seen.len() >= 2, "load should reach >1 worker: {seen:?}");
+    }
+
+    #[test]
+    fn response_order_is_deterministic_and_workers_accounted() {
+        let cfg = ServeConfig { workers: 3, ..Default::default() };
+        let ids_of = |seed: u64| -> (Vec<u64>, Vec<usize>) {
+            let coord = Coordinator::new(cfg);
+            let shapes = engine().input_shapes();
+            let report = coord
+                .run(|_| Ok(engine()), synthetic_requests(shapes, 48, 0.0, seed))
+                .unwrap();
+            (report.responses.iter().map(|r| r.id).collect(), report.per_worker)
+        };
+        let (ids_a, pw_a) = ids_of(7);
+        let (ids_b, pw_b) = ids_of(7);
+        // Ordering never depends on which worker finished first.
+        assert_eq!(ids_a, ids_b);
+        assert_eq!(ids_a, (0..48).collect::<Vec<_>>());
+        assert_eq!(pw_a.len(), 3);
+        assert_eq!(pw_a.iter().sum::<usize>(), 48);
+        assert_eq!(pw_b.iter().sum::<usize>(), 48);
+    }
+
+    #[test]
+    fn latency_percentiles_are_ordered() {
+        let coord = Coordinator::new(ServeConfig::default());
+        let shapes = engine().input_shapes();
+        let report = coord
+            .run(|_| Ok(engine()), synthetic_requests(shapes, 30, 0.0, 9))
+            .unwrap();
+        let l = &report.latency;
+        assert!(l.min <= l.p50 && l.p50 <= l.p90);
+        assert!(l.p90 <= l.p95 && l.p95 <= l.p99 && l.p99 <= l.max);
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Minimal command-line argument parser (clap is not vendored offline).
 //!
-//! Supports `--flag`, `--key value`, `--key=value`, and positional arguments.
+//! Supports `--flag`, `--key value`, `--key=value`, short `-k value`
+//! options, and positional arguments.
 
 use std::collections::BTreeMap;
 
@@ -18,10 +19,10 @@ impl Args {
         let mut args = Args::default();
         let mut iter = raw.into_iter().peekable();
         while let Some(a) = iter.next() {
-            if let Some(rest) = a.strip_prefix("--") {
+            if let Some(rest) = option_body(&a) {
                 if let Some(eq) = rest.find('=') {
                     args.options.insert(rest[..eq].to_string(), rest[eq + 1..].to_string());
-                } else if iter.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                } else if iter.peek().map(|n| option_body(n).is_none()).unwrap_or(false) {
                     let v = iter.next().unwrap();
                     args.options.insert(rest.to_string(), v);
                 } else {
@@ -66,6 +67,25 @@ impl Args {
     }
 }
 
+/// The key-ish part of an option-shaped argument: `--key[=v]` long form,
+/// or single-char `-k[=v]` short form (`xenos dist-run -p 2`). Anything
+/// else — positionals, negative numbers like `-5` — is `None`, so a value
+/// starting with `-` still parses as the preceding option's value.
+fn option_body(a: &str) -> Option<&str> {
+    if let Some(rest) = a.strip_prefix("--") {
+        return Some(rest);
+    }
+    let rest = a.strip_prefix('-')?;
+    let mut chars = rest.chars();
+    let first = chars.next()?;
+    let short = !first.is_ascii_digit() && matches!(chars.next(), None | Some('='));
+    if short {
+        Some(rest)
+    } else {
+        None
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -94,6 +114,23 @@ mod tests {
     fn trailing_flag_without_value() {
         let a = parse(&["x", "--fast"]);
         assert!(a.flag("fast"));
+    }
+
+    #[test]
+    fn short_options_parse_like_long() {
+        let a = parse(&["dist-run", "-p", "2", "--model", "mobilenet"]);
+        assert_eq!(a.get_parse::<usize>("p", 0), 2);
+        assert_eq!(a.get("model"), Some("mobilenet"));
+        assert_eq!(a.subcommand(), Some("dist-run"));
+        let b = parse(&["dist-run", "-p=4"]);
+        assert_eq!(b.get_parse::<usize>("p", 0), 4);
+    }
+
+    #[test]
+    fn negative_values_and_multichar_dashes_stay_values_or_positionals() {
+        let a = parse(&["x", "--offset", "-5", "-abc"]);
+        assert_eq!(a.get("offset"), Some("-5"));
+        assert_eq!(a.positionals, vec!["x".to_string(), "-abc".to_string()]);
     }
 
     #[test]

@@ -10,6 +10,7 @@ pub struct Summary {
     pub min: f64,
     pub p50: f64,
     pub p90: f64,
+    pub p95: f64,
     pub p99: f64,
     pub max: f64,
 }
@@ -36,6 +37,7 @@ impl Summary {
             min: sorted[0],
             p50: percentile_sorted(&sorted, 50.0),
             p90: percentile_sorted(&sorted, 90.0),
+            p95: percentile_sorted(&sorted, 95.0),
             p99: percentile_sorted(&sorted, 99.0),
             max: sorted[n - 1],
         })
@@ -81,6 +83,8 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert!((s.p50 - 3.0).abs() < 1e-12);
+        assert!((s.p95 - 4.8).abs() < 1e-12);
+        assert!(s.p90 <= s.p95 && s.p95 <= s.p99);
         assert!((s.stddev - (2.5f64).sqrt()).abs() < 1e-12);
     }
 

@@ -19,6 +19,58 @@ fn small_model() -> Arc<xenos::Graph> {
 }
 
 #[test]
+fn coordinator_engine_matrix_agrees_across_workers_and_engines() {
+    // workers {1,2} × engine {interp, par(2 threads)} over a zoo model:
+    // every request answered exactly once, responses in deterministic
+    // (request-id) order, outputs identical across all four cells.
+    use xenos::graph::models;
+    use xenos::hw::presets;
+    let g = Arc::new(models::lstm());
+    let d = presets::tms320c6678();
+    let shapes: Vec<Shape> =
+        g.input_ids().iter().map(|&i| g.node(i).out.shape.clone()).collect();
+    let n = 12usize;
+    let mut reference: Option<Vec<Vec<f32>>> = None;
+    for workers in [1usize, 2] {
+        for engine_kind in ["interp", "par"] {
+            let cfg = ServeConfig {
+                workers,
+                engine_threads: 2,
+                batcher: BatcherConfig {
+                    max_batch: 4,
+                    max_wait: std::time::Duration::from_micros(200),
+                },
+            };
+            let g2 = g.clone();
+            let d2 = d.clone();
+            let report = Coordinator::new(cfg)
+                .run(
+                    move |_| {
+                        Ok(match engine_kind {
+                            "interp" => Engine::interp(g2.clone()),
+                            _ => Engine::par_interp(g2.clone(), &d2, 2),
+                        })
+                    },
+                    serve::coordinator::synthetic_requests(shapes.clone(), n, 0.0, 11),
+                )
+                .expect("serve");
+            assert_eq!(report.served, n, "workers={workers} engine={engine_kind}");
+            assert_eq!(report.per_worker.iter().sum::<usize>(), n);
+            let ids: Vec<u64> = report.responses.iter().map(|r| r.id).collect();
+            assert_eq!(ids, (0..n as u64).collect::<Vec<_>>());
+            let outs: Vec<Vec<f32>> =
+                report.responses.iter().map(|r| r.outputs[0].data.clone()).collect();
+            match &reference {
+                None => reference = Some(outs),
+                Some(want) => {
+                    assert_eq!(want, &outs, "workers={workers} engine={engine_kind} diverged")
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn end_to_end_throughput_and_latency() {
     let g = small_model();
     let report = Coordinator::new(ServeConfig {
