@@ -31,6 +31,7 @@ use crate::graph::{models, Graph, Shape};
 use crate::hw::{self, DeviceModel};
 use crate::ops::params::ParamStore;
 use crate::ops::Tensor;
+use crate::quant::{CalibTable, Precision, QuantRun};
 
 /// How long `infer` waits for a cluster round trip.
 const INFER_TIMEOUT: Duration = Duration::from_secs(300);
@@ -40,6 +41,7 @@ pub struct ClusterDriver {
     graph: Arc<Graph>,
     scheme: PartitionScheme,
     sync: SyncMode,
+    precision: Precision,
     world: usize,
     backend: Backend,
 }
@@ -50,7 +52,7 @@ enum Backend {
 }
 
 impl ClusterDriver {
-    /// Spin up a local cluster: `p` shard workers as threads over an
+    /// Spin up an f32 local cluster: `p` shard workers as threads over an
     /// in-process transport mesh, each holding its extracted weight shard.
     pub fn local(
         graph: Arc<Graph>,
@@ -60,11 +62,43 @@ impl ClusterDriver {
         sync: SyncMode,
         threads: usize,
     ) -> Result<ClusterDriver> {
+        Self::local_with(graph, device, p, scheme, sync, threads, None)
+    }
+
+    /// Spin up an INT8 local cluster: shard workers execute the quantized
+    /// precision plan and exchange i8 activation payloads. Output is
+    /// bit-identical to the single-device
+    /// [`QuantEngine`](crate::quant::QuantEngine) over the same table.
+    pub fn local_q8(
+        graph: Arc<Graph>,
+        device: &DeviceModel,
+        p: usize,
+        scheme: PartitionScheme,
+        sync: SyncMode,
+        threads: usize,
+        calib: &CalibTable,
+    ) -> Result<ClusterDriver> {
+        calib.matches(&graph)?;
+        Self::local_with(graph, device, p, scheme, sync, threads, Some(calib))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn local_with(
+        graph: Arc<Graph>,
+        device: &DeviceModel,
+        p: usize,
+        scheme: PartitionScheme,
+        sync: SyncMode,
+        threads: usize,
+        calib: Option<&CalibTable>,
+    ) -> Result<ClusterDriver> {
         let p = p.max(1);
         let plan = plan_cluster(&graph, device, p, scheme, sync);
         let master = ParamStore::for_graph(&graph);
-        let backend = Backend::Local(LocalCluster::spawn(&graph, &plan, &master, threads)?);
-        Ok(ClusterDriver { graph, scheme, sync, world: p, backend })
+        let precision = if calib.is_some() { Precision::Int8 } else { Precision::F32 };
+        let backend =
+            Backend::Local(LocalCluster::spawn(&graph, &plan, &master, threads, calib)?);
+        Ok(ClusterDriver { graph, scheme, sync, precision, world: p, backend })
     }
 
     /// Connect to remote `xenos dist-worker` processes at `hosts` (rank
@@ -78,15 +112,46 @@ impl ClusterDriver {
         sync: SyncMode,
         threads: usize,
     ) -> Result<ClusterDriver> {
+        Self::tcp_with(hosts, model, device_name, scheme, sync, threads, None)
+    }
+
+    /// As [`ClusterDriver::tcp`] at INT8: the calibration table is shipped
+    /// to every worker ([`wire::CTRL_CALIB`]) and peer links carry
+    /// quantized activation frames.
+    pub fn tcp_q8(
+        hosts: &[String],
+        model: &str,
+        device_name: &str,
+        scheme: PartitionScheme,
+        sync: SyncMode,
+        threads: usize,
+        calib: &CalibTable,
+    ) -> Result<ClusterDriver> {
+        Self::tcp_with(hosts, model, device_name, scheme, sync, threads, Some(calib))
+    }
+
+    fn tcp_with(
+        hosts: &[String],
+        model: &str,
+        device_name: &str,
+        scheme: PartitionScheme,
+        sync: SyncMode,
+        threads: usize,
+        calib: Option<&CalibTable>,
+    ) -> Result<ClusterDriver> {
         anyhow::ensure!(!hosts.is_empty(), "need at least one worker host");
         let graph = Arc::new(
             models::by_name(model).with_context(|| format!("unknown model {model}"))?,
         );
+        if let Some(c) = calib {
+            c.matches(&graph)?;
+        }
         let device = hw::by_name(device_name)
             .with_context(|| format!("unknown device {device_name}"))?;
         let p = hosts.len();
         let plan = plan_cluster(&graph, &device, p, scheme, sync);
         let master = ParamStore::for_graph(&graph);
+        let precision = if calib.is_some() { Precision::Int8 } else { Precision::F32 };
         let mut ctrls = Vec::with_capacity(p);
         for (rank, host) in hosts.iter().enumerate() {
             let mut sock = TcpStream::connect(host)
@@ -100,15 +165,19 @@ impl ClusterDriver {
                 threads,
                 scheme,
                 sync,
+                precision,
                 peers: hosts.to_vec(),
             };
             wire::write_frame(&mut sock, wire::CTRL_SPEC, &wire::encode_spec(&spec))?;
             let shard = ShardParams::extract(&graph, &plan, &master, rank);
             wire::write_frame(&mut sock, wire::CTRL_PARAMS, &wire::encode_params(shard.nodes()))?;
+            if let Some(c) = calib {
+                wire::write_frame(&mut sock, wire::CTRL_CALIB, &c.encode())?;
+            }
             ctrls.push(sock);
         }
         let backend = Backend::Tcp(TcpCluster { ctrls: Mutex::new(ctrls) });
-        Ok(ClusterDriver { graph, scheme, sync, world: p, backend })
+        Ok(ClusterDriver { graph, scheme, sync, precision, world: p, backend })
     }
 
     /// Cluster size.
@@ -130,14 +199,24 @@ impl ClusterDriver {
             .collect()
     }
 
-    /// Display label, e.g. `cluster:mobilenet x4 ring-Mix`.
+    /// Numeric precision the cluster executes at.
+    pub fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    /// Display label, e.g. `cluster:mobilenet x4 ring-Mix` (INT8 clusters
+    /// append `-int8`).
     pub fn label(&self) -> String {
         let kind = match self.backend {
             Backend::Local(_) => "cluster",
             Backend::Tcp(_) => "tcp-cluster",
         };
+        let prec = match self.precision {
+            Precision::F32 => String::new(),
+            Precision::Int8 => "-int8".to_string(),
+        };
         format!(
-            "{kind}:{} x{} {}-{}",
+            "{kind}:{} x{} {}-{}{prec}",
             self.graph.name,
             self.world,
             self.sync.label(),
@@ -177,6 +256,7 @@ impl LocalCluster {
         plan: &ClusterPlan,
         master: &ParamStore,
         threads: usize,
+        calib: Option<&CalibTable>,
     ) -> Result<LocalCluster> {
         let p = plan.world;
         let mesh = LocalTransport::mesh(p);
@@ -186,8 +266,18 @@ impl LocalCluster {
         for (rank, transport) in mesh.into_iter().enumerate() {
             let (job_tx, job_rx) = channel::<Vec<Tensor>>();
             let shard = ShardParams::extract(graph, plan, master, rank);
-            let worker =
-                ShardWorker::new(graph.clone(), plan.clone(), shard, Box::new(transport), threads);
+            // The rank quantizes its own shard; per-channel weight scales
+            // make this identical to slicing the master's quantization.
+            let quant =
+                calib.map(|c| Arc::new(QuantRun::build(graph, c, |id| shard.get(id))));
+            let worker = ShardWorker::with_quant(
+                graph.clone(),
+                plan.clone(),
+                shard,
+                Box::new(transport),
+                threads,
+                quant,
+            );
             let out_tx = out_tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("xenos-shard-{rank}"))
@@ -337,10 +427,23 @@ fn serve_session(listener: &TcpListener, ctrl: &mut TcpStream, spec: &JobSpec) -
         .with_context(|| format!("unknown device {}", spec.device))?;
     let plan = plan_cluster(&graph, &device, spec.world, spec.scheme, spec.sync);
 
+    // INT8 jobs ship their calibration table right after the parameters;
+    // the worker rebuilds the same quantized run from its own shard.
+    let quant = if spec.precision == Precision::Int8 {
+        let (tag, payload) = wire::read_frame(ctrl).context("reading calibration table")?;
+        anyhow::ensure!(tag == wire::CTRL_CALIB, "expected calib frame, got {tag:#x}");
+        let calib = CalibTable::decode(&payload)?;
+        calib.matches(&graph)?;
+        Some(Arc::new(QuantRun::build(&graph, &calib, |id| params.get(id))))
+    } else {
+        None
+    };
+
     // Stand up the peer mesh: accept from higher ranks, dial lower ranks.
     let inbound = accept_peers(listener, spec.rank, spec.world)?;
     let transport = TcpTransport::new(spec.rank, spec.world, &spec.peers, inbound)?;
-    let worker = ShardWorker::new(graph, plan, params, Box::new(transport), spec.threads);
+    let worker =
+        ShardWorker::with_quant(graph, plan, params, Box::new(transport), spec.threads, quant);
 
     loop {
         let (tag, payload) = match wire::read_frame(ctrl) {

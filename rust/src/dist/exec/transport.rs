@@ -32,6 +32,12 @@ const RECV_TIMEOUT: Duration = Duration::from_secs(60);
 
 /// Point-to-point message passing between the `world()` ranks of one
 /// cluster job.
+///
+/// Two payload flavors share the mailbox: f32 buffers (the default) and
+/// raw bytes (quantized i8 activations, sent under
+/// [`wire::TAG_Q8`]-flagged tags). A send of one flavor must be received
+/// with the matching call — a mismatch is a protocol bug and panics with
+/// context rather than silently reinterpreting bits.
 pub trait Transport: Send {
     /// This endpoint's rank in `[0, world)`.
     fn rank(&self) -> usize;
@@ -42,10 +48,41 @@ pub trait Transport: Send {
     /// Receive the next `tag`-tagged buffer from rank `from` (FIFO per
     /// `(from, tag)` pair), blocking until it arrives.
     fn recv(&self, from: usize, tag: u64) -> Vec<f32>;
+    /// Send a raw byte payload (quantized activations; `tag` must carry
+    /// [`wire::TAG_Q8`] so TCP readers demultiplex the flavor).
+    fn send_bytes(&self, to: usize, tag: u64, data: &[u8]);
+    /// Receive a raw byte payload.
+    fn recv_bytes(&self, from: usize, tag: u64) -> Vec<u8>;
+}
+
+/// One queued message: f32 buffer or raw (quantized) bytes.
+pub(crate) enum Payload {
+    F32(Vec<f32>),
+    Bytes(Vec<u8>),
+}
+
+impl Payload {
+    fn into_f32(self, from: usize, tag: u64) -> Vec<f32> {
+        match self {
+            Payload::F32(v) => v,
+            Payload::Bytes(_) => {
+                panic!("recv(f32) from rank {from} tag {tag:#x} found a byte payload")
+            }
+        }
+    }
+
+    fn into_bytes(self, from: usize, tag: u64) -> Vec<u8> {
+        match self {
+            Payload::Bytes(v) => v,
+            Payload::F32(_) => {
+                panic!("recv_bytes from rank {from} tag {tag:#x} found an f32 payload")
+            }
+        }
+    }
 }
 
 /// `(from, tag)`-keyed FIFO queues.
-type Queues = HashMap<(usize, u64), VecDeque<Vec<f32>>>;
+type Queues = HashMap<(usize, u64), VecDeque<Payload>>;
 
 /// Tagged per-rank inbox with a condvar for blocking receives.
 pub(crate) struct Mailbox {
@@ -58,13 +95,13 @@ impl Mailbox {
         Mailbox { slots: Mutex::new(HashMap::new()), ready: Condvar::new() }
     }
 
-    pub(crate) fn put(&self, from: usize, tag: u64, data: Vec<f32>) {
+    pub(crate) fn put(&self, from: usize, tag: u64, data: Payload) {
         let mut slots = self.slots.lock().expect("mailbox lock");
         slots.entry((from, tag)).or_default().push_back(data);
         self.ready.notify_all();
     }
 
-    pub(crate) fn take(&self, from: usize, tag: u64) -> Vec<f32> {
+    pub(crate) fn take(&self, from: usize, tag: u64) -> Payload {
         let mut slots = self.slots.lock().expect("mailbox lock");
         loop {
             if let Some(q) = slots.get_mut(&(from, tag)) {
@@ -106,11 +143,19 @@ impl Transport for LocalTransport {
     }
 
     fn send(&self, to: usize, tag: u64, data: &[f32]) {
-        self.boxes[to].put(self.rank, tag, data.to_vec());
+        self.boxes[to].put(self.rank, tag, Payload::F32(data.to_vec()));
     }
 
     fn recv(&self, from: usize, tag: u64) -> Vec<f32> {
-        self.boxes[self.rank].take(from, tag)
+        self.boxes[self.rank].take(from, tag).into_f32(from, tag)
+    }
+
+    fn send_bytes(&self, to: usize, tag: u64, data: &[u8]) {
+        self.boxes[to].put(self.rank, tag, Payload::Bytes(data.to_vec()));
+    }
+
+    fn recv_bytes(&self, from: usize, tag: u64) -> Vec<u8> {
+        self.boxes[self.rank].take(from, tag).into_bytes(from, tag)
     }
 }
 
@@ -202,14 +247,24 @@ fn connect_retry(addr: &str) -> std::io::Result<TcpStream> {
     Err(last.expect("at least one connect attempt"))
 }
 
-/// Reader half: frames from `peer` flow into the mailbox until EOF.
+/// Reader half: frames from `peer` flow into the mailbox until EOF. The
+/// frame kind is demultiplexed from the tag: [`wire::TAG_Q8`]-flagged
+/// frames carry raw i8 payloads (1 byte per element on the wire — the
+/// quantized-activation traffic cut), everything else decodes as f32.
 fn spawn_reader(peer: usize, mut stream: TcpStream, mailbox: Arc<Mailbox>) {
     std::thread::Builder::new()
         .name(format!("xenos-tp-rx-{peer}"))
         .spawn(move || {
             loop {
                 match wire::read_frame(&mut stream) {
-                    Ok((tag, payload)) => mailbox.put(peer, tag, wire::bytes_to_f32s(&payload)),
+                    Ok((tag, payload)) => {
+                        let p = if tag & wire::TAG_Q8 != 0 {
+                            Payload::Bytes(payload)
+                        } else {
+                            Payload::F32(wire::bytes_to_f32s(&payload))
+                        };
+                        mailbox.put(peer, tag, p);
+                    }
                     Err(_) => break, // peer closed; pending recvs will time out
                 }
             }
@@ -236,7 +291,20 @@ impl Transport for TcpTransport {
     }
 
     fn recv(&self, from: usize, tag: u64) -> Vec<f32> {
-        self.mailbox.take(from, tag)
+        self.mailbox.take(from, tag).into_f32(from, tag)
+    }
+
+    fn send_bytes(&self, to: usize, tag: u64, data: &[u8]) {
+        let w = self.writers[to]
+            .as_ref()
+            .unwrap_or_else(|| panic!("no link from rank {} to rank {to}", self.rank));
+        let mut stream = w.lock().expect("transport writer lock");
+        wire::write_frame(&mut *stream, tag, data)
+            .unwrap_or_else(|e| panic!("send_bytes to rank {to} failed: {e}"));
+    }
+
+    fn recv_bytes(&self, from: usize, tag: u64) -> Vec<u8> {
+        self.mailbox.take(from, tag).into_bytes(from, tag)
     }
 }
 
@@ -295,6 +363,37 @@ mod tests {
         let mesh = LocalTransport::mesh(2);
         mesh[1].send(0, 5, &[]);
         assert!(mesh[0].recv(1, 5).is_empty());
+    }
+
+    #[test]
+    fn local_byte_payloads_flow() {
+        let mesh = LocalTransport::mesh(2);
+        mesh[0].send_bytes(1, wire::TAG_Q8 | 3, &[1u8, 255, 0]);
+        assert_eq!(mesh[1].recv_bytes(0, wire::TAG_Q8 | 3), vec![1u8, 255, 0]);
+    }
+
+    #[test]
+    #[should_panic(expected = "byte payload")]
+    fn flavor_mismatch_panics_loudly() {
+        let mesh = LocalTransport::mesh(2);
+        mesh[0].send_bytes(1, wire::TAG_Q8 | 4, &[7u8]);
+        let _ = mesh[1].recv(0, wire::TAG_Q8 | 4);
+    }
+
+    #[test]
+    fn tcp_q8_frames_round_trip_one_byte_per_element() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t1 = std::thread::spawn(move || {
+            let t = TcpTransport::new(1, 2, &[addr], Vec::new()).unwrap();
+            t.send_bytes(0, wire::TAG_Q8 | 21, &[0u8, 127, 129, 255]);
+            t.recv_bytes(0, wire::TAG_Q8 | 22)
+        });
+        let inbound = accept_peers(&listener, 0, 2).unwrap();
+        let t0 = TcpTransport::new(0, 2, &[], inbound).unwrap();
+        assert_eq!(t0.recv_bytes(1, wire::TAG_Q8 | 21), vec![0u8, 127, 129, 255]);
+        t0.send_bytes(1, wire::TAG_Q8 | 22, &[42u8]);
+        assert_eq!(t1.join().unwrap(), vec![42u8]);
     }
 
     #[test]

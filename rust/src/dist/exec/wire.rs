@@ -15,6 +15,7 @@ use crate::dist::{PartitionScheme, SyncMode};
 use crate::graph::{Shape, TensorDesc};
 use crate::ops::params::NodeParams;
 use crate::ops::Tensor;
+use crate::quant::Precision;
 
 /// Peer handshake: payload = initiating rank (u32).
 pub(crate) const PEER_HELLO: u64 = 0xFFFF_0001;
@@ -32,6 +33,14 @@ pub(crate) const CTRL_DONE: u64 = 0xFFFF_0014;
 pub(crate) const CTRL_ERR: u64 = 0xFFFF_0015;
 /// Driver → worker: session over.
 pub(crate) const CTRL_SHUTDOWN: u64 = 0xFFFF_0016;
+/// Driver → worker: serialized calibration table (INT8 jobs only).
+pub(crate) const CTRL_CALIB: u64 = 0xFFFF_0017;
+
+/// Frame-kind flag for peer-link tags: the payload is raw i8 (quantized
+/// activations), **one byte per element on the wire** — the quantized
+/// halo/all-gather format, a 4× cut over f32 frames. Transports
+/// demultiplex on this bit; control tags never carry it.
+pub const TAG_Q8: u64 = 1 << 63;
 
 /// Largest frame either side will accept: comfortably above the biggest
 /// legitimate payload (a full resnet101 parameter shard, ~180 MB) while
@@ -161,6 +170,9 @@ pub struct JobSpec {
     pub scheme: PartitionScheme,
     /// Synchronization mode.
     pub sync: SyncMode,
+    /// Numeric precision (INT8 jobs additionally receive a
+    /// [`CTRL_CALIB`] frame and exchange [`TAG_Q8`] activation payloads).
+    pub precision: Precision,
     /// Listen addresses of all ranks, in rank order.
     pub peers: Vec<String>,
 }
@@ -199,6 +211,21 @@ pub(crate) fn sync_from_u8(v: u8) -> Result<SyncMode> {
     })
 }
 
+pub(crate) fn precision_to_u8(p: Precision) -> u8 {
+    match p {
+        Precision::F32 => 0,
+        Precision::Int8 => 1,
+    }
+}
+
+pub(crate) fn precision_from_u8(v: u8) -> Result<Precision> {
+    Ok(match v {
+        0 => Precision::F32,
+        1 => Precision::Int8,
+        other => bail!("unknown precision code {other}"),
+    })
+}
+
 pub(crate) fn encode_spec(spec: &JobSpec) -> Vec<u8> {
     let mut e = Enc::default();
     e.str(&spec.model);
@@ -208,6 +235,7 @@ pub(crate) fn encode_spec(spec: &JobSpec) -> Vec<u8> {
     e.u32(spec.threads as u32);
     e.u32(scheme_to_u8(spec.scheme) as u32);
     e.u32(sync_to_u8(spec.sync) as u32);
+    e.u32(precision_to_u8(spec.precision) as u32);
     e.u32(spec.peers.len() as u32);
     for p in &spec.peers {
         e.str(p);
@@ -224,12 +252,13 @@ pub(crate) fn decode_spec(payload: &[u8]) -> Result<JobSpec> {
     let threads = d.u32()? as usize;
     let scheme = scheme_from_u8(d.u32()? as u8)?;
     let sync = sync_from_u8(d.u32()? as u8)?;
+    let precision = precision_from_u8(d.u32()? as u8)?;
     let n = d.u32()? as usize;
     let mut peers = Vec::with_capacity(n);
     for _ in 0..n {
         peers.push(d.str()?);
     }
-    Ok(JobSpec { model, device, rank, world, threads, scheme, sync, peers })
+    Ok(JobSpec { model, device, rank, world, threads, scheme, sync, precision, peers })
 }
 
 /// Serialize per-node parameter shards (`by_node` indexed by `NodeId`).
@@ -331,6 +360,7 @@ mod tests {
             threads: 2,
             scheme: PartitionScheme::Mix,
             sync: SyncMode::Ps,
+            precision: Precision::Int8,
             peers: vec!["127.0.0.1:7001".into(), "127.0.0.1:7002".into()],
         };
         assert_eq!(decode_spec(&encode_spec(&spec)).unwrap(), spec);
@@ -370,6 +400,7 @@ mod tests {
             threads: 1,
             scheme: PartitionScheme::OutC,
             sync: SyncMode::Ring,
+            precision: Precision::F32,
             peers: vec![],
         });
         assert!(decode_spec(&enc[..enc.len() - 2]).is_err());

@@ -17,22 +17,35 @@
 //!
 //! Every sharded kernel runs the same per-element float expressions in the
 //! same order as the serial [`Interpreter`](crate::ops::Interpreter) (the
-//! region kernels in `ops::conv` / `ops::pool` are shared), so cluster
-//! output is **bit-identical** to single-device output for every scheme —
-//! the property `tests/cluster.rs` asserts across models, schemes and
-//! cluster sizes.
+//! region kernels in `ops::conv` / `ops::pool` / `ops::shape_ops` are
+//! shared), so cluster output is **bit-identical** to single-device output
+//! for every scheme — the property `tests/cluster.rs` asserts across
+//! models, schemes and cluster sizes.
+//!
+//! **INT8 mode** (`with_quant`): the worker executes the precision plan of
+//! [`crate::opt::quant`] with the integer kernels in `quant::kernels`,
+//! and — because every quantized activation is snapped onto its i8 grid —
+//! ships halo and all-gather payloads as **raw i8 bytes**
+//! ([`wire::TAG_Q8`] frames, 1 byte per element, a 4× activation-traffic
+//! cut) with zero additional error: quantize(snap(x)) recovers the exact
+//! i8 code, and integer accumulation makes every shard bit-identical to
+//! the single-device [`QuantEngine`](crate::quant::QuantEngine).
 
 use std::sync::Arc;
 
 use super::plan::{ClusterPlan, LayerScheme};
 use super::shard::{conv_channel_share, ShardParams};
 use super::transport::Transport;
+use super::wire;
 use crate::dist::{ps, ring, SyncMode};
 use crate::graph::{ConvAttrs, Graph, Node, NodeId, OpKind, PoolAttrs, TensorDesc};
 use crate::ops::interp::exec_node;
 use crate::ops::params::NodeParams;
-use crate::ops::{conv, elementwise as ew, matmul, pool as pooling, Tensor};
+use crate::ops::{conv, elementwise as ew, matmul, pool as pooling, shape_ops, Tensor};
 use crate::opt::even_share;
+use crate::opt::quant::QuantKind;
+use crate::quant::exec::{qexec_node, QuantRun};
+use crate::quant::{dequant1, kernels as qkernels, quant1, quantize_slice, snap_slice};
 use crate::runtime::pool::{ScopedJob, WorkerPool};
 
 /// Spatial shard axis.
@@ -78,6 +91,7 @@ unsafe impl Sync for SendPtr {}
 
 /// Tag bases; each collective instance consumes a sub-range, spaced so no
 /// two instances overlap (node ids and spatial extents are far below 2^16).
+/// INT8 payload tags additionally carry [`wire::TAG_Q8`] (bit 63).
 const TAG_GATHER: u64 = 1 << 60;
 const TAG_OUTC: u64 = 2 << 60;
 const TAG_HALO: u64 = 3 << 60;
@@ -107,12 +121,13 @@ pub struct ShardWorker {
     params: ShardParams,
     transport: Box<dyn Transport>,
     pool: Option<WorkerPool>,
+    quant: Option<Arc<QuantRun>>,
 }
 
 impl ShardWorker {
-    /// Build a worker for one rank. `threads > 1` backs the shard's own
-    /// kernels with a local worker pool (the `ParInterpreter`-style engine);
-    /// `threads == 1` is the serial engine.
+    /// Build an f32 worker for one rank. `threads > 1` backs the shard's
+    /// own kernels with a local worker pool (the `ParInterpreter`-style
+    /// engine); `threads == 1` is the serial engine.
     pub fn new(
         graph: Arc<Graph>,
         plan: ClusterPlan,
@@ -120,11 +135,31 @@ impl ShardWorker {
         transport: Box<dyn Transport>,
         threads: usize,
     ) -> ShardWorker {
+        Self::with_quant(graph, plan, params, transport, threads, None)
+    }
+
+    /// As [`ShardWorker::new`], optionally in INT8 mode: `quant` carries
+    /// the precision plan, activation scales, and this rank's quantized
+    /// weight shard.
+    pub fn with_quant(
+        graph: Arc<Graph>,
+        plan: ClusterPlan,
+        params: ShardParams,
+        transport: Box<dyn Transport>,
+        threads: usize,
+        quant: Option<Arc<QuantRun>>,
+    ) -> ShardWorker {
         assert_eq!(plan.schemes.len(), graph.len(), "plan does not match graph");
         assert_eq!(plan.world, transport.world(), "plan does not match transport world");
         let threads = crate::ops::par_exec::clamp_workers(threads);
-        let pool = if threads > 1 { Some(WorkerPool::new(threads)) } else { None };
-        ShardWorker { graph, plan, params, transport, pool }
+        // The quantized shard kernels run serial per rank for now (ROADMAP
+        // follow-up (d)); don't spawn a pool that would sit idle.
+        let pool = if threads > 1 && quant.is_none() {
+            Some(WorkerPool::new(threads))
+        } else {
+            None
+        };
+        ShardWorker { graph, plan, params, transport, pool, quant }
     }
 
     /// This worker's rank.
@@ -165,8 +200,13 @@ impl ShardWorker {
         let mut next_input = 0usize;
         for node in &g.nodes {
             let out = if matches!(node.op, OpKind::Input) {
-                let t = inputs[next_input].clone();
+                let mut t = inputs[next_input].clone();
                 assert_eq!(t.shape(), &node.out.shape, "input {} shape mismatch", next_input);
+                if let Some(qrun) = &self.quant {
+                    // The inserted graph-edge quantize: every rank snaps
+                    // identically from the same scale table.
+                    snap_slice(&mut t.data, qrun.scales[node.id]);
+                }
                 next_input += 1;
                 ShardVal::Full(t)
             } else {
@@ -176,7 +216,12 @@ impl ShardWorker {
                             self.ensure_full(&mut vals, i);
                         }
                         let args = arg_refs(&vals, node);
-                        ShardVal::Full(exec_node(self.params.get(node.id), &node.op, &args))
+                        let prm = self.params.get(node.id);
+                        let t = match &self.quant {
+                            Some(qrun) => qexec_node(qrun, prm, node, &args),
+                            None => exec_node(prm, &node.op, &args),
+                        };
+                        ShardVal::Full(t)
                     }
                     LayerScheme::OutC => {
                         for &i in &node.inputs {
@@ -214,7 +259,7 @@ impl ShardWorker {
             .collect()
     }
 
-    /// Dispatch an all-gather of one block per rank through the plan's
+    /// Dispatch an all-gather of one f32 block per rank through the plan's
     /// sync mode.
     fn all_gather(&self, mine: Vec<f32>, base_tag: u64) -> Vec<Vec<f32>> {
         match self.plan.sync {
@@ -223,7 +268,18 @@ impl ShardWorker {
         }
     }
 
-    /// Reassemble a sharded value into a full tensor on every rank.
+    /// Dispatch an all-gather of one i8 byte block per rank (quantized
+    /// activation payloads; `base_tag` must carry [`wire::TAG_Q8`]).
+    fn all_gather_bytes(&self, mine: Vec<u8>, base_tag: u64) -> Vec<Vec<u8>> {
+        match self.plan.sync {
+            SyncMode::Ring => ring::ring_all_gather_bytes_tp(&*self.transport, mine, base_tag),
+            SyncMode::Ps => ps::ps_all_gather_bytes_tp(&*self.transport, mine, base_tag),
+        }
+    }
+
+    /// Reassemble a sharded value into a full tensor on every rank. In
+    /// INT8 mode the blocks travel as raw i8 at the value's grid scale —
+    /// exact, because sharded values are grid-snapped.
     fn ensure_full(&self, vals: &mut [Option<ShardVal>], id: NodeId) {
         if matches!(vals[id], Some(ShardVal::Full(_))) {
             return;
@@ -240,14 +296,30 @@ impl ShardWorker {
         let p = self.world();
         let me = self.rank();
         let (mlo, mhi) = even_share(extent, p, me);
-        let mine = pack_rect(&t, axis_rect(&t, axis, mlo, mhi));
-        let blocks = self.all_gather(mine, gather_tag(id));
-        for (q, block) in blocks.iter().enumerate() {
-            if q == me {
-                continue;
+        match &self.quant {
+            Some(qrun) => {
+                let s = qrun.scales[id];
+                let mine = pack_rect_q8(&t, axis_rect(&t, axis, mlo, mhi), s);
+                let blocks = self.all_gather_bytes(mine, gather_tag(id) | wire::TAG_Q8);
+                for (q, block) in blocks.iter().enumerate() {
+                    if q == me {
+                        continue;
+                    }
+                    let (qlo, qhi) = even_share(extent, p, q);
+                    unpack_rect_q8(&mut t, axis_rect(&t, axis, qlo, qhi), block, s);
+                }
             }
-            let (qlo, qhi) = even_share(extent, p, q);
-            unpack_rect(&mut t, axis_rect(&t, axis, qlo, qhi), block);
+            None => {
+                let mine = pack_rect(&t, axis_rect(&t, axis, mlo, mhi));
+                let blocks = self.all_gather(mine, gather_tag(id));
+                for (q, block) in blocks.iter().enumerate() {
+                    if q == me {
+                        continue;
+                    }
+                    let (qlo, qhi) = even_share(extent, p, q);
+                    unpack_rect(&mut t, axis_rect(&t, axis, qlo, qhi), block);
+                }
+            }
         }
         vals[id] = Some(ShardVal::Full(t));
     }
@@ -273,7 +345,9 @@ impl ShardWorker {
     /// rank serves the slab segments it owns to the ranks whose needed
     /// range extends past their own slab. All ranks iterate the same
     /// deterministic (sender, receiver) schedule, so sends and receives
-    /// are matched pairwise with no barrier.
+    /// are matched pairwise with no barrier. INT8 runs ship the halo
+    /// blocks as raw i8 ([`wire::TAG_Q8`] frames) — exact on grid-snapped
+    /// values.
     fn exchange_halo(
         &self,
         vals: &mut [Option<ShardVal>],
@@ -283,6 +357,7 @@ impl ShardWorker {
     ) {
         let p = self.world();
         let me = self.rank();
+        let qscale = self.quant.as_ref().map(|qrun| qrun.scales[value_id]);
         let t = match vals[value_id].as_mut().expect("value live") {
             ShardVal::Sharded(t, _) => t,
             ShardVal::Full(_) => unreachable!("halo exchange on full value"),
@@ -317,12 +392,26 @@ impl ShardWorker {
                         continue;
                     }
                     let tag = halo_tag(value_id, consumer.id, lo);
-                    if s == me {
-                        let block = pack_rect(t, axis_rect(t, axis, lo, hi));
-                        self.transport.send(d, tag, &block);
-                    } else if d == me {
-                        let block = self.transport.recv(s, tag);
-                        unpack_rect(t, axis_rect(t, axis, lo, hi), &block);
+                    match qscale {
+                        Some(scale) => {
+                            let tag = tag | wire::TAG_Q8;
+                            if s == me {
+                                let block = pack_rect_q8(t, axis_rect(t, axis, lo, hi), scale);
+                                self.transport.send_bytes(d, tag, &block);
+                            } else if d == me {
+                                let block = self.transport.recv_bytes(s, tag);
+                                unpack_rect_q8(t, axis_rect(t, axis, lo, hi), &block, scale);
+                            }
+                        }
+                        None => {
+                            if s == me {
+                                let block = pack_rect(t, axis_rect(t, axis, lo, hi));
+                                self.transport.send(d, tag, &block);
+                            } else if d == me {
+                                let block = self.transport.recv(s, tag);
+                                unpack_rect(t, axis_rect(t, axis, lo, hi), &block);
+                            }
+                        }
                     }
                 }
             }
@@ -333,6 +422,9 @@ impl ShardWorker {
     /// slice from shard-local weights, then all-gather the slices into the
     /// full activation.
     fn exec_outc(&self, node: &Node, args: &[&Tensor]) -> Tensor {
+        if let Some(qrun) = &self.quant {
+            return self.exec_outc_q8(node, args, qrun.as_ref());
+        }
         let p = self.world();
         let me = self.rank();
         let prm = self.params.get(node.id);
@@ -371,6 +463,78 @@ impl ShardWorker {
                     for r in 0..rows {
                         out.data[r * m.n + q0..r * m.n + q1]
                             .copy_from_slice(&block[r * nw..(r + 1) * nw]);
+                    }
+                }
+                out
+            }
+            other => unreachable!("outC scheme on unshardable op {other:?}"),
+        }
+    }
+
+    /// INT8 OutC execution: integer-kernel slice from the rank's
+    /// quantized weight shard, grid-snap, then an i8 all-gather — each
+    /// block decodes with the node's scale, so reassembly equals the
+    /// single-device snapped output bit-for-bit.
+    fn exec_outc_q8(&self, node: &Node, args: &[&Tensor], qrun: &QuantRun) -> Tensor {
+        let p = self.world();
+        let me = self.rank();
+        let prm = self.params.get(node.id);
+        let out_scale = qrun.scales[node.id];
+        match &node.op {
+            OpKind::Conv(a) | OpKind::Cbr(a) | OpKind::Cbra(a, _) | OpKind::Cbrm(a, _) => {
+                let (c0, c1) = conv_channel_share(a, p, me);
+                let mine = if c0 >= c1 {
+                    Vec::new()
+                } else {
+                    // No snap needed before the wire: quantizing IS the
+                    // snap (`quant1(snap1(v, s), s) == quant1(v, s)`), and
+                    // the full tensor is rebuilt from the gathered blocks.
+                    let slice = self.conv_family_slice_q8(node, a, prm, args[0], c0, c1, qrun);
+                    quantize_bytes(&slice.data, out_scale)
+                };
+                let blocks = self.all_gather_bytes(mine, outc_tag(node.id) | wire::TAG_Q8);
+                let mut out = Tensor::zeros(node.out.clone());
+                let (_, oh, ow) = fm_dims(&out);
+                let ohw = oh * ow;
+                for (q, block) in blocks.iter().enumerate() {
+                    let (q0, q1) = conv_channel_share(a, p, q);
+                    debug_assert_eq!(block.len(), (q1 - q0) * ohw, "channel block size");
+                    dequantize_into(&mut out.data[q0 * ohw..q1 * ohw], block, out_scale);
+                }
+                out
+            }
+            OpKind::MatMul(m) if m.weighted => {
+                let (j0, j1) = even_share(m.n, p, me);
+                let rows = args[0].shape().numel() / m.k;
+                let mine = if j0 >= j1 {
+                    Vec::new()
+                } else {
+                    let sx = qrun.scales[node.inputs[0]];
+                    let qa = quantize_slice(&args[0].data, sx);
+                    let data = qkernels::fc_q8(
+                        &qa,
+                        rows,
+                        m.k,
+                        j1 - j0,
+                        qrun.qweights(node.id),
+                        &prm.bias,
+                        sx,
+                    );
+                    // Quantizing is the snap; the gathered blocks rebuild
+                    // the full output.
+                    quantize_bytes(&data, out_scale)
+                };
+                let blocks = self.all_gather_bytes(mine, outc_tag(node.id) | wire::TAG_Q8);
+                let mut out = Tensor::zeros(node.out.clone());
+                for (q, block) in blocks.iter().enumerate() {
+                    let (q0, q1) = even_share(m.n, p, q);
+                    let nw = q1 - q0;
+                    for r in 0..rows {
+                        dequantize_into(
+                            &mut out.data[r * m.n + q0..r * m.n + q1],
+                            &block[r * nw..(r + 1) * nw],
+                            out_scale,
+                        );
                     }
                 }
                 out
@@ -431,12 +595,79 @@ impl ShardWorker {
         }
     }
 
+    /// INT8 counterpart of [`ShardWorker::conv_family_slice`]: the same
+    /// slice through the quantized region kernel with the rank's i8
+    /// weight shard (per-channel weight scales make the local shard equal
+    /// to a slice of the master's quantization).
+    #[allow(clippy::too_many_arguments)]
+    fn conv_family_slice_q8(
+        &self,
+        node: &Node,
+        a: &ConvAttrs,
+        prm: &NodeParams,
+        x: &Tensor,
+        c0: usize,
+        c1: usize,
+        qrun: &QuantRun,
+    ) -> Tensor {
+        let sliced_input;
+        let (sub, xin): (ConvAttrs, &Tensor) = if a.groups > 1 {
+            let g0 = c0 / a.out_c_per_group();
+            let g1 = c1 / a.out_c_per_group();
+            sliced_input =
+                crate::ops::shape_ops::slice_c(x, g0 * a.in_c_per_group(), g1 * a.in_c_per_group());
+            (a.group_slice(g0, g1), &sliced_input)
+        } else {
+            (a.out_c_slice(c0, c1), x)
+        };
+        let sx = qrun.scales[node.inputs[0]];
+        let s = xin.shape();
+        let qx = quantize_slice(&xin.data, sx);
+        let (oh, ow) = sub.out_hw(s.h(), s.w());
+        let mut t = Tensor::zeros(TensorDesc::fm(1, sub.out_c, oh, ow));
+        // SAFETY: single-threaded call covering the whole slice once.
+        unsafe {
+            qkernels::conv2d_region_raw_q8(
+                &qx,
+                sub.in_c,
+                s.h(),
+                s.w(),
+                &sub,
+                qrun.qweights(node.id),
+                &prm.bias,
+                sx,
+                0,
+                sub.out_c,
+                0,
+                oh,
+                0,
+                ow,
+                oh,
+                ow,
+                t.data.as_mut_ptr(),
+            )
+        };
+        let full = Rect { y0: 0, y1: oh, x0: 0, x1: ow };
+        match &node.op {
+            OpKind::Conv(_) => t,
+            OpKind::Cbr(_) => {
+                affine_relu_rect(&mut t, &prm.scale, &prm.shift, full);
+                t
+            }
+            OpKind::Cbra(_, pl) | OpKind::Cbrm(_, pl) => {
+                affine_relu_rect(&mut t, &prm.scale, &prm.shift, full);
+                pooling::pool(&t, pl)
+            }
+            other => unreachable!("conv family only, got {other:?}"),
+        }
+    }
+
     /// Spatially-sharded execution: compute this rank's row/column slab of
     /// the output into a full-size buffer (the slab stays sharded; no
     /// communication here).
     fn exec_spatial(&self, node: &Node, args: &[&Tensor], axis: Axis) -> Tensor {
         let mut out = Tensor::zeros(node.out.clone());
-        let (c, oh, ow) = fm_dims(&out);
+        let (_, oh, ow) = fm_dims(&out);
         let extent = match axis {
             Axis::Rows => oh,
             Axis::Cols => ow,
@@ -450,6 +681,30 @@ impl ShardWorker {
             Axis::Cols => Rect { y0: 0, y1: oh, x0: lo, x1: hi },
         };
         let prm = self.params.get(node.id);
+        match &self.quant {
+            Some(qrun) => {
+                self.exec_spatial_q8(node, args, axis, lo, hi, r, &mut out, prm, qrun.as_ref())
+            }
+            None => self.spatial_rect_op(node, args, prm, axis, lo, hi, r, &mut out),
+        }
+        out
+    }
+
+    /// One spatial node's rect, f32 kernels — shared between the f32 path
+    /// and the non-integer operators of the INT8 path.
+    #[allow(clippy::too_many_arguments)]
+    fn spatial_rect_op(
+        &self,
+        node: &Node,
+        args: &[&Tensor],
+        prm: &NodeParams,
+        axis: Axis,
+        lo: usize,
+        hi: usize,
+        r: Rect,
+        out: &mut Tensor,
+    ) {
+        let (c, oh, ow) = fm_dims(out);
         match &node.op {
             OpKind::Conv(a) => {
                 let ptr = out.data.as_mut_ptr();
@@ -458,21 +713,12 @@ impl ShardWorker {
             OpKind::Cbr(a) => {
                 let ptr = out.data.as_mut_ptr();
                 self.conv_region(args[0], a, &prm.w, &prm.bias, 0, a.out_c, r, oh, ow, ptr);
-                affine_relu_rect(&mut out, &prm.scale, &prm.shift, r);
+                affine_relu_rect(out, &prm.scale, &prm.shift, r);
             }
             OpKind::Cbra(a, pl) | OpKind::Cbrm(a, pl) => {
                 let s = args[0].shape();
                 let (ph, pw) = a.out_hw(s.h(), s.w());
-                let pr = match axis {
-                    Axis::Rows => {
-                        let (plo, phi) = pool_in_range(pl, lo, hi, ph);
-                        Rect { y0: plo, y1: phi, x0: 0, x1: pw }
-                    }
-                    Axis::Cols => {
-                        let (plo, phi) = pool_in_range(pl, lo, hi, pw);
-                        Rect { y0: 0, y1: ph, x0: plo, x1: phi }
-                    }
-                };
+                let pr = pre_pool_rect(pl, axis, lo, hi, ph, pw);
                 let mut pre = Tensor::zeros(TensorDesc::fm(1, a.out_c, ph, pw));
                 let pre_ptr = pre.data.as_mut_ptr();
                 self.conv_region(args[0], a, &prm.w, &prm.bias, 0, a.out_c, pr, ph, pw, pre_ptr);
@@ -493,22 +739,158 @@ impl ShardWorker {
                     )
                 };
             }
-            OpKind::Relu => map_rect(args[0], &mut out, r, ew::relu1),
-            OpKind::Sigmoid => map_rect(args[0], &mut out, r, ew::sigmoid1),
-            OpKind::Tanh => map_rect(args[0], &mut out, r, ew::tanh1),
-            OpKind::Gelu => map_rect(args[0], &mut out, r, ew::gelu1),
-            OpKind::Add => zip_rect(args[0], args[1], &mut out, r, |a, b| a + b),
-            OpKind::Mul => zip_rect(args[0], args[1], &mut out, r, |a, b| a * b),
-            OpKind::Mac => mac_rect(args[0], args[1], args[2], &mut out, r),
-            OpKind::BatchNorm => affine_rect(args[0], &mut out, &prm.scale, &prm.shift, r),
-            OpKind::Bias => affine_rect(args[0], &mut out, &[], &prm.bias, r),
-            OpKind::Upsample { factor } => upsample_rect(args[0], &mut out, *factor, r),
-            OpKind::Concat => concat_rect(args, &mut out, r),
-            OpKind::Slice { begin, .. } => slice_rect(args[0], &mut out, *begin, r),
-            OpKind::ChannelShuffle { groups } => shuffle_rect(args[0], &mut out, *groups, r),
+            OpKind::Relu => map_rect(args[0], out, r, ew::relu1),
+            OpKind::Sigmoid => map_rect(args[0], out, r, ew::sigmoid1),
+            OpKind::Tanh => map_rect(args[0], out, r, ew::tanh1),
+            OpKind::Gelu => map_rect(args[0], out, r, ew::gelu1),
+            OpKind::Add => zip_rect(args[0], args[1], out, r, |a, b| a + b),
+            OpKind::Mul => zip_rect(args[0], args[1], out, r, |a, b| a * b),
+            OpKind::Mac => mac_rect(args[0], args[1], args[2], out, r),
+            OpKind::BatchNorm => affine_rect(args[0], out, &prm.scale, &prm.shift, r),
+            OpKind::Bias => affine_rect(args[0], out, &[], &prm.bias, r),
+            // Copy ops run the shared tile kernels from `ops::shape_ops` —
+            // one kernel surface for serial, chunked and sharded execution.
+            OpKind::Upsample { factor } => {
+                let ptr = out.data.as_mut_ptr();
+                // SAFETY: single-threaded call on a buffer this rank owns.
+                unsafe {
+                    shape_ops::upsample_tile_raw(
+                        args[0], *factor, 0, 0, c, r.y0, r.y1, r.x0, r.x1, oh, ow, ptr,
+                    )
+                };
+            }
+            OpKind::Concat => {
+                let ptr = out.data.as_mut_ptr();
+                let mut c_off = 0usize;
+                for t in args {
+                    // SAFETY: sources write disjoint destination channels.
+                    unsafe {
+                        shape_ops::concat_src_tile_raw(t, c_off, c, 0, r.y0, r.y1, r.x0, r.x1, ptr)
+                    };
+                    c_off += t.shape().c();
+                }
+            }
+            OpKind::Slice { begin, .. } => {
+                let ptr = out.data.as_mut_ptr();
+                // SAFETY: single-threaded call on a buffer this rank owns.
+                unsafe {
+                    shape_ops::slice_tile_raw(
+                        args[0], *begin, c, 0, 0, c, r.y0, r.y1, r.x0, r.x1, ptr,
+                    )
+                };
+            }
+            OpKind::ChannelShuffle { groups } => {
+                let ptr = out.data.as_mut_ptr();
+                // SAFETY: single-threaded call on a buffer this rank owns.
+                unsafe {
+                    shape_ops::shuffle_tile_raw(
+                        args[0], *groups, 0, 0, c, r.y0, r.y1, r.x0, r.x1, ptr,
+                    )
+                };
+            }
             other => unreachable!("spatial scheme on unshardable op {other:?}"),
         }
-        out
+    }
+
+    /// INT8 spatial execution: conv-family rects through the quantized
+    /// region kernel; every other operator through the shared f32 rect
+    /// kernels followed by the plan's snap (requant boundaries snap onto
+    /// the node's grid, pass-through operators stay on their producer's).
+    #[allow(clippy::too_many_arguments)]
+    fn exec_spatial_q8(
+        &self,
+        node: &Node,
+        args: &[&Tensor],
+        axis: Axis,
+        lo: usize,
+        hi: usize,
+        r: Rect,
+        out: &mut Tensor,
+        prm: &NodeParams,
+        qrun: &QuantRun,
+    ) {
+        let (c, oh, ow) = fm_dims(out);
+        let out_scale = qrun.scales[node.id];
+        match &node.op {
+            OpKind::Conv(a) | OpKind::Cbr(a) => {
+                let sx = qrun.scales[node.inputs[0]];
+                let s = args[0].shape();
+                let qx = quantize_slice(&args[0].data, sx);
+                let ptr = out.data.as_mut_ptr();
+                // SAFETY: single-threaded call on a buffer this rank owns.
+                unsafe {
+                    qkernels::conv2d_region_raw_q8(
+                        &qx,
+                        a.in_c,
+                        s.h(),
+                        s.w(),
+                        a,
+                        qrun.qweights(node.id),
+                        &prm.bias,
+                        sx,
+                        0,
+                        a.out_c,
+                        r.y0,
+                        r.y1,
+                        r.x0,
+                        r.x1,
+                        oh,
+                        ow,
+                        ptr,
+                    )
+                };
+                if matches!(node.op, OpKind::Cbr(_)) {
+                    affine_relu_rect(out, &prm.scale, &prm.shift, r);
+                }
+                snap_rect(out, r, out_scale);
+            }
+            OpKind::Cbra(a, pl) | OpKind::Cbrm(a, pl) => {
+                let sx = qrun.scales[node.inputs[0]];
+                let s = args[0].shape();
+                let qx = quantize_slice(&args[0].data, sx);
+                let (ph, pw) = a.out_hw(s.h(), s.w());
+                let pr = pre_pool_rect(pl, axis, lo, hi, ph, pw);
+                let mut pre = Tensor::zeros(TensorDesc::fm(1, a.out_c, ph, pw));
+                let pre_ptr = pre.data.as_mut_ptr();
+                // SAFETY: single-threaded call on a buffer this rank owns.
+                unsafe {
+                    qkernels::conv2d_region_raw_q8(
+                        &qx,
+                        a.in_c,
+                        s.h(),
+                        s.w(),
+                        a,
+                        qrun.qweights(node.id),
+                        &prm.bias,
+                        sx,
+                        0,
+                        a.out_c,
+                        pr.y0,
+                        pr.y1,
+                        pr.x0,
+                        pr.x1,
+                        ph,
+                        pw,
+                        pre_ptr,
+                    )
+                };
+                affine_relu_rect(&mut pre, &prm.scale, &prm.shift, pr);
+                let ptr = out.data.as_mut_ptr();
+                // SAFETY: single-threaded call on a buffer this rank owns.
+                unsafe {
+                    pooling::pool_tile_raw(&pre, pl, 0, 0, c, r.y0, r.y1, r.x0, r.x1, oh, ow, ptr)
+                };
+                snap_rect(out, r, out_scale);
+            }
+            _ => {
+                self.spatial_rect_op(node, args, prm, axis, lo, hi, r, out);
+                match qrun.plan.kinds[node.id] {
+                    QuantKind::Requant => snap_rect(out, r, out_scale),
+                    QuantKind::Passthrough => {}
+                    QuantKind::IntDot => unreachable!("spatial IntDot handled above"),
+                }
+            }
+        }
     }
 
     /// Convolution over one output region, chunked across the local worker
@@ -592,6 +974,21 @@ fn axis_rect(t: &Tensor, axis: Axis, lo: usize, hi: usize) -> Rect {
     }
 }
 
+/// Pre-pool rect of a linked CBR(A|M)'s conv map for output range
+/// `[lo, hi)` along `axis`.
+fn pre_pool_rect(pl: &PoolAttrs, axis: Axis, lo: usize, hi: usize, ph: usize, pw: usize) -> Rect {
+    match axis {
+        Axis::Rows => {
+            let (plo, phi) = pool_in_range(pl, lo, hi, ph);
+            Rect { y0: plo, y1: phi, x0: 0, x1: pw }
+        }
+        Axis::Cols => {
+            let (plo, phi) = pool_in_range(pl, lo, hi, pw);
+            Rect { y0: 0, y1: ph, x0: plo, x1: phi }
+        }
+    }
+}
+
 /// Near-even split of `[lo, hi)` into at most `ways` non-empty chunks.
 fn split_range(lo: usize, hi: usize, ways: usize) -> Vec<(usize, usize)> {
     let total = hi - lo;
@@ -632,7 +1029,13 @@ fn conv_out_extent(a: &ConvAttrs, in_extent: usize, axis: Axis) -> usize {
 }
 
 /// Input rows/columns a conv needs for output range `[lo, hi)`.
-fn conv_in_range(a: &ConvAttrs, lo: usize, hi: usize, in_extent: usize, axis: Axis) -> (usize, usize) {
+fn conv_in_range(
+    a: &ConvAttrs,
+    lo: usize,
+    hi: usize,
+    in_extent: usize,
+    axis: Axis,
+) -> (usize, usize) {
     let k = match axis {
         Axis::Rows => a.kh,
         Axis::Cols => a.kw,
@@ -676,6 +1079,64 @@ fn unpack_rect(t: &mut Tensor, r: Rect, block: &[f32]) {
         }
     }
     debug_assert_eq!(off, block.len(), "halo block size mismatch");
+}
+
+/// Serialize one rect as quantized i8 bytes at `scale` (same traversal
+/// order as [`pack_rect`]). Exact on grid-snapped values: one byte per
+/// element replaces four on the wire.
+fn pack_rect_q8(t: &Tensor, r: Rect, scale: f32) -> Vec<u8> {
+    let (c, h, w) = fm_dims(t);
+    let mut out = Vec::with_capacity(c * (r.y1 - r.y0) * (r.x1 - r.x0));
+    for ch in 0..c {
+        for y in r.y0..r.y1 {
+            let base = (ch * h + y) * w;
+            for &v in &t.data[base + r.x0..base + r.x1] {
+                out.push(quant1(v, scale) as u8);
+            }
+        }
+    }
+    out
+}
+
+/// Inverse of [`pack_rect_q8`].
+fn unpack_rect_q8(t: &mut Tensor, r: Rect, block: &[u8], scale: f32) {
+    let (c, h, w) = fm_dims(t);
+    let seg = r.x1 - r.x0;
+    let mut off = 0usize;
+    for ch in 0..c {
+        for y in r.y0..r.y1 {
+            let base = (ch * h + y) * w;
+            dequantize_into(&mut t.data[base + r.x0..base + r.x1], &block[off..off + seg], scale);
+            off += seg;
+        }
+    }
+    debug_assert_eq!(off, block.len(), "halo block size mismatch");
+}
+
+/// Quantize a (grid-snapped) f32 slice to i8 bytes — exact by the snap
+/// invariant.
+fn quantize_bytes(data: &[f32], scale: f32) -> Vec<u8> {
+    data.iter().map(|&v| quant1(v, scale) as u8).collect()
+}
+
+/// Decode i8 bytes into an f32 destination slice.
+fn dequantize_into(dst: &mut [f32], block: &[u8], scale: f32) {
+    debug_assert_eq!(dst.len(), block.len(), "q8 block size mismatch");
+    for (d, &b) in dst.iter_mut().zip(block) {
+        *d = dequant1(b as i8, scale);
+    }
+}
+
+/// Snap one rect onto the i8 grid of `scale` — the cluster-side twin of
+/// `quant::snap_slice`, applied only to the region this rank owns.
+fn snap_rect(t: &mut Tensor, r: Rect, scale: f32) {
+    let (c, h, w) = fm_dims(t);
+    for ch in 0..c {
+        for y in r.y0..r.y1 {
+            let base = (ch * h + y) * w;
+            snap_slice(&mut t.data[base + r.x0..base + r.x1], scale);
+        }
+    }
 }
 
 /// `out[i] = f(x[i])` over one rect.
@@ -733,7 +1194,8 @@ fn affine_rect(x: &Tensor, out: &mut Tensor, scale: &[f32], shift: &[f32], r: Re
 }
 
 /// Fused Bn+ReLU in place over one rect — the same per-element expression
-/// as `ew::batchnorm` followed by `ew::relu`.
+/// as `ew::batchnorm` followed by `ew::relu` (and as
+/// `quant::exec::bn_relu_inplace` on the single-device INT8 path).
 fn affine_relu_rect(t: &mut Tensor, scale: &[f32], shift: &[f32], r: Rect) {
     let (c, h, w) = fm_dims(t);
     for ch in 0..c {
@@ -741,74 +1203,6 @@ fn affine_relu_rect(t: &mut Tensor, scale: &[f32], shift: &[f32], r: Rect) {
             let base = (ch * h + y) * w;
             for i in base + r.x0..base + r.x1 {
                 t.data[i] = ew::relu1(t.data[i] * scale[ch] + shift[ch]);
-            }
-        }
-    }
-}
-
-// The copy-op rect kernels below (upsample/concat/slice/shuffle) mirror
-// the per-element index mappings of `ops::shape_ops` (serial reference)
-// and `ops::par_exec`'s chunked variants. They are pure copies — no float
-// arithmetic — and both differential suites (tests/equivalence.rs,
-// tests/cluster.rs) pin all three against each other; folding them into
-// shared `*_tile_raw` kernels like `ops::pool` is a ROADMAP follow-up.
-
-/// Nearest-neighbour upsample over one rect.
-fn upsample_rect(x: &Tensor, out: &mut Tensor, factor: usize, r: Rect) {
-    let (c, oh, ow) = fm_dims(out);
-    for ch in 0..c {
-        for y in r.y0..r.y1 {
-            for xx in r.x0..r.x1 {
-                out.data[(ch * oh + y) * ow + xx] = x.at4(0, ch, y / factor, xx / factor);
-            }
-        }
-    }
-}
-
-/// Channel concat over one rect.
-fn concat_rect(args: &[&Tensor], out: &mut Tensor, r: Rect) {
-    let (_, oh, ow) = fm_dims(out);
-    let mut c_off = 0usize;
-    for t in args {
-        let (tc, th, tw) = fm_dims(t);
-        debug_assert_eq!((th, tw), (oh, ow));
-        for ch in 0..tc {
-            for y in r.y0..r.y1 {
-                let src = (ch * th + y) * tw;
-                let dst = ((c_off + ch) * oh + y) * ow;
-                out.data[dst + r.x0..dst + r.x1].copy_from_slice(&t.data[src + r.x0..src + r.x1]);
-            }
-        }
-        c_off += tc;
-    }
-}
-
-/// Channel slice `[begin, ..)` over one rect.
-fn slice_rect(x: &Tensor, out: &mut Tensor, begin: usize, r: Rect) {
-    let (oc, oh, ow) = fm_dims(out);
-    let (_, xh, xw) = fm_dims(x);
-    debug_assert_eq!((xh, xw), (oh, ow));
-    for ch in 0..oc {
-        for y in r.y0..r.y1 {
-            let src = ((begin + ch) * xh + y) * xw;
-            let dst = (ch * oh + y) * ow;
-            out.data[dst + r.x0..dst + r.x1].copy_from_slice(&x.data[src + r.x0..src + r.x1]);
-        }
-    }
-}
-
-/// ShuffleNet channel shuffle over one rect.
-fn shuffle_rect(x: &Tensor, out: &mut Tensor, groups: usize, r: Rect) {
-    let (c, h, w) = fm_dims(x);
-    let cpg = c / groups;
-    for g in 0..groups {
-        for i in 0..cpg {
-            let src_c = g * cpg + i;
-            let dst_c = i * groups + g;
-            for y in r.y0..r.y1 {
-                let src = (src_c * h + y) * w;
-                let dst = (dst_c * h + y) * w;
-                out.data[dst + r.x0..dst + r.x1].copy_from_slice(&x.data[src + r.x0..src + r.x1]);
             }
         }
     }

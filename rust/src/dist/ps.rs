@@ -76,6 +76,41 @@ pub fn ps_all_gather_tp(t: &dyn Transport, mine: Vec<f32>, base_tag: u64) -> Vec
     blocks.into_iter().map(|b| b.expect("all blocks gathered")).collect()
 }
 
+/// Parameter-server all-gather of one variable-size **byte** block per
+/// rank — the quantized-activation (i8 payload) face of
+/// [`ps_all_gather_tp`], identical schedule at one byte per element.
+pub fn ps_all_gather_bytes_tp(t: &dyn Transport, mine: Vec<u8>, base_tag: u64) -> Vec<Vec<u8>> {
+    let p = t.world();
+    let me = t.rank();
+    let mut blocks: Vec<Option<Vec<u8>>> = (0..p).map(|_| None).collect();
+    if p <= 1 {
+        blocks[me] = Some(mine);
+        return blocks.into_iter().map(|b| b.expect("own block")).collect();
+    }
+    if me == 0 {
+        blocks[0] = Some(mine);
+        for q in 1..p {
+            blocks[q] = Some(t.recv_bytes(q, base_tag + q as u64));
+        }
+        for q in 1..p {
+            for (b, block) in blocks.iter().enumerate() {
+                if b != q {
+                    t.send_bytes(q, base_tag + (p + b) as u64, block.as_ref().expect("gathered"));
+                }
+            }
+        }
+    } else {
+        t.send_bytes(0, base_tag + me as u64, &mine);
+        blocks[me] = Some(mine);
+        for b in 0..p {
+            if b != me {
+                blocks[b] = Some(t.recv_bytes(0, base_tag + (p + b) as u64));
+            }
+        }
+    }
+    blocks.into_iter().map(|b| b.expect("all blocks gathered")).collect()
+}
+
 /// Execute a parameter-server all-reduce over in-memory worker buffers —
 /// the `LocalTransport` special case of [`ps_allreduce_tp`].
 pub fn ps_allreduce_exec(bufs: Vec<Vec<f32>>) -> Vec<Vec<f32>> {

@@ -89,6 +89,30 @@ pub fn ring_all_gather_tp(t: &dyn Transport, mine: Vec<f32>, base_tag: u64) -> V
     blocks.into_iter().map(|b| b.expect("all blocks gathered")).collect()
 }
 
+/// Ring all-gather of one variable-size **byte** block per rank — the
+/// quantized-activation (i8 payload) face of [`ring_all_gather_tp`],
+/// identical hop schedule, moving one byte per element instead of four.
+/// `base_tag` must carry [`crate::dist::exec::wire::TAG_Q8`] so TCP
+/// readers demultiplex the frame kind.
+pub fn ring_all_gather_bytes_tp(t: &dyn Transport, mine: Vec<u8>, base_tag: u64) -> Vec<Vec<u8>> {
+    let p = t.world();
+    let me = t.rank();
+    let mut blocks: Vec<Option<Vec<u8>>> = (0..p).map(|_| None).collect();
+    blocks[me] = Some(mine);
+    if p > 1 {
+        let right = (me + 1) % p;
+        let left = (me + p - 1) % p;
+        for s in 0..p - 1 {
+            let send_b = (me + p - s) % p;
+            let recv_b = (me + 2 * p - s - 1) % p;
+            let out = blocks[send_b].as_ref().expect("block in flight");
+            t.send_bytes(right, base_tag + s as u64, out);
+            blocks[recv_b] = Some(t.recv_bytes(left, base_tag + s as u64));
+        }
+    }
+    blocks.into_iter().map(|b| b.expect("all blocks gathered")).collect()
+}
+
 /// Execute a ring all-reduce over `p = inputs.len()` worker buffers —
 /// the in-memory face: a scratch `LocalTransport` mesh with one thread per
 /// worker running [`ring_allreduce_tp`]. All workers end bit-identical.

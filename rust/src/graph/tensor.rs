@@ -17,7 +17,11 @@ pub enum DType {
     F32,
     /// 16-bit float (modeled for capacity/bandwidth only).
     F16,
-    /// 8-bit integer (modeled for capacity/bandwidth only).
+    /// 8-bit integer — executed numerically by the `quant` subsystem
+    /// ([`QTensor`](crate::quant::QTensor) carries the i8 payload and its
+    /// decode scales); the precision-planning rewrite (`opt::quant`) marks
+    /// quantized activation edges with this dtype so byte accounting and
+    /// the d-Xenos wire see real 1-byte elements.
     I8,
 }
 

@@ -26,7 +26,8 @@
 //! | [`ops`] | §6.1 | numeric operator library (CPU reference execution) |
 //! | [`hw`] | §2.3 | edge-device hardware models (TMS320C6678, ZCU102, …) |
 //! | [`sim`] | §7 | memory-hierarchy + DSP-unit simulator and cost model |
-//! | [`opt`] | §4 | the Xenos optimizer: fusion, operator linking (VO), DOS (HO) |
+//! | [`opt`] | §4 | the Xenos optimizer: fusion, operator linking (VO), DOS (HO), precision planning |
+//! | [`quant`] | §6.1 | INT8 subsystem: calibration, integer kernels, quantized engines |
 //! | [`baselines`] | §7.1 | Vanilla / HO-only / TVM-like / GPU baselines |
 //! | [`runtime`] | §6 | PJRT artifact loading + the Xenos inference engine |
 //! | [`serve`] | §2.1 | request router, dynamic batcher, DSP scheduler |
@@ -40,6 +41,7 @@ pub mod graph;
 pub mod hw;
 pub mod ops;
 pub mod opt;
+pub mod quant;
 pub mod runtime;
 pub mod serve;
 pub mod sim;

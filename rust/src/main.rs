@@ -4,6 +4,8 @@
 //! xenos optimize    --model mobilenet --device tms320c6678
 //! xenos run         --model mobilenet --device zcu102 --level xenos|ho|vanilla
 //! xenos serve       --artifacts artifacts --variant linked --requests 256 --workers 2 --batch 8
+//! xenos serve       --model mobilenet --engine par --precision int8
+//! xenos quantize    --model mobilenet --calib 8 --out mobilenet.qcal
 //! xenos dist        --model resnet101 --devices 4 --sync ring|ps --scheme mix|outc|inh|inw
 //! xenos dist-worker --listen 127.0.0.1:7001
 //! xenos dist-run    --hosts 127.0.0.1:7001,127.0.0.1:7002 --model mobilenet --scheme mix
@@ -21,7 +23,9 @@ use xenos::dist::exec::{serve_listener, ClusterDriver};
 use xenos::dist::{simulate_dxenos, PartitionScheme, SyncMode};
 use xenos::graph::models;
 use xenos::hw;
+use xenos::ops::params::ParamStore;
 use xenos::opt::{self, OptLevel};
+use xenos::quant::{CalibTable, Precision, QuantEngine};
 use xenos::runtime::{Engine, PjrtRuntime};
 use xenos::serve::{self, Coordinator, ServeConfig};
 use xenos::sim::run_level;
@@ -45,6 +49,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("optimize") => cmd_optimize(args),
         Some("run") => cmd_run(args),
         Some("serve") => cmd_serve(args),
+        Some("quantize") => cmd_quantize(args),
         Some("dist") => cmd_dist(args),
         Some("dist-worker") => cmd_dist_worker(args),
         Some("dist-run") => cmd_dist_run(args),
@@ -58,18 +63,22 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: xenos <optimize|run|serve|dist|dist-worker|dist-run|repro|inspect>
+const USAGE: &str = "usage: xenos <optimize|run|serve|quantize|dist|dist-worker|dist-run|repro|inspect>
   optimize --model M --device D            run the automatic optimizer, print the plan
   run      --model M --device D --level L  simulate inference (L: vanilla|ho|xenos)
   serve    --artifacts DIR --variant V --requests N --workers W --batch B --rate R
   serve    --model M --engine par|interp|cluster --threads T   serve a zoo model numerically
            (par = multi-threaded DOS plan executor; cluster = d-Xenos shard workers,
-            size with --cluster-devices P)
+            size with --cluster-devices P; --precision f32|int8 picks the numeric
+            path — int8 calibrates with --calib N sets or loads --calib-file F)
+  quantize --model M --calib N [--out F]   calibrate INT8 scales, write the table,
+           print the precision plan and the int8-vs-f32 error on a probe input
   dist     --model M --devices P --sync ring|ps --scheme mix|outc|inh|inw   (simulator)
   dist-worker --listen ADDR                run one d-Xenos shard worker (TCP)
   dist-run --hosts A,B,... --model M --scheme S --sync ring|ps [-p P] [--verify]
            execute distributed inference on remote workers; --local [-p P] runs
-           the same plan on in-process shard threads instead
+           the same plan on in-process shard threads instead; --precision int8
+           runs the quantized plan with i8 halo/all-gather payloads
   repro    --exp ID|all                    regenerate a paper table/figure
   inspect  --model M                       dump the model graph";
 
@@ -175,11 +184,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let rate = args.get_parse("rate", 0.0f64);
 
     // Zoo-model serving through the numeric backends (no artifacts needed):
-    // --engine par runs the DOS plan on a worker pool per engine.
+    // --engine par runs the DOS plan on a worker pool per engine;
+    // --precision int8 swaps in the quantized engines (calibrated once,
+    // shared by every serving worker).
     if args.get("model").is_some() {
         let g = Arc::new(model_arg(args)?);
         let d = device_arg(args)?;
         let engine = args.get_or("engine", "par").to_string();
+        let precision = precision_arg(args)?;
         // Default: divide the device's emulated units across the serving
         // workers so `workers` engines don't oversubscribe the host.
         let threads =
@@ -187,6 +199,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let cfg = ServeConfig {
             workers,
             engine_threads: threads,
+            precision,
             batcher: serve::BatcherConfig {
                 max_batch: batch,
                 max_wait: std::time::Duration::from_millis(args.get_parse("max-wait-ms", 2u64)),
@@ -200,13 +213,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let cluster_p = args.get_parse("cluster-devices", 2usize);
         let scheme = scheme_arg(args)?;
         let sync = sync_arg(args)?;
+        let calib: Option<Arc<CalibTable>> = match precision {
+            Precision::Int8 => Some(Arc::new(calib_arg(args, &g)?)),
+            Precision::F32 => None,
+        };
         let report = Coordinator::new(cfg).run(
-            // The factory consults cfg.engine_threads — the one knob that
-            // sizes the per-engine executor pools.
-            move |_w| match engine.as_str() {
-                "par" => Ok(Engine::par_interp(g.clone(), &d, cfg.engine_threads)),
-                "interp" => Ok(Engine::interp(g.clone())),
-                "cluster" => {
+            // The factory consults cfg.engine_threads and cfg.precision —
+            // the knobs that size and type the per-engine executors.
+            move |_w| match (cfg.precision, engine.as_str()) {
+                (Precision::F32, "par") => {
+                    Ok(Engine::par_interp(g.clone(), &d, cfg.engine_threads))
+                }
+                (Precision::F32, "interp") => Ok(Engine::interp(g.clone())),
+                (Precision::F32, "cluster") => {
                     let driver = ClusterDriver::local(
                         g.clone(),
                         &d,
@@ -217,14 +236,35 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     )?;
                     Ok(Engine::cluster(driver))
                 }
-                other => bail!("unknown engine {other} (par|interp|cluster)"),
+                (Precision::Int8, "interp") => {
+                    Engine::quant(g.clone(), calib.as_deref().expect("calibrated"), 1)
+                }
+                (Precision::Int8, "par") => Engine::quant(
+                    g.clone(),
+                    calib.as_deref().expect("calibrated"),
+                    cfg.engine_threads,
+                ),
+                (Precision::Int8, "cluster") => {
+                    let driver = ClusterDriver::local_q8(
+                        g.clone(),
+                        &d,
+                        cluster_p,
+                        scheme,
+                        sync,
+                        cfg.engine_threads,
+                        calib.as_deref().expect("calibrated"),
+                    )?;
+                    Ok(Engine::cluster(driver))
+                }
+                (_, other) => bail!("unknown engine {other} (par|interp|cluster)"),
             },
             serve::coordinator::synthetic_requests(shapes, n, rate, args.get_parse("seed", 42u64)),
         )?;
         println!(
-            "served {} requests [{}] with {workers} workers x {threads} exec threads: {:.1} req/s",
+            "served {} requests [{}/{}] with {workers} workers x {threads} exec threads: {:.1} req/s",
             report.served,
             args.get_or("engine", "par"),
+            precision.label(),
             report.throughput
         );
         print_serve_stats(&report);
@@ -300,6 +340,84 @@ fn scheme_arg(args: &Args) -> Result<PartitionScheme> {
     }
 }
 
+fn precision_arg(args: &Args) -> Result<Precision> {
+    let s = args.get_or("precision", "f32");
+    Precision::parse(s).with_context(|| format!("unknown precision {s} (f32|int8)"))
+}
+
+/// The calibration table for an INT8 run: `--calib-file F` loads a saved
+/// table (validated against the graph), otherwise `--calib N` synthetic
+/// input sets (default 8) are collected on the spot.
+fn calib_arg(args: &Args, g: &xenos::Graph) -> Result<CalibTable> {
+    if let Some(path) = args.get("calib-file") {
+        let table = CalibTable::load(std::path::Path::new(path))?;
+        table.matches(g)?;
+        return Ok(table);
+    }
+    let n = args.get_parse("calib", 8usize);
+    let seed = args.get_parse("calib-seed", 42u64);
+    let params = ParamStore::for_graph(g);
+    Ok(CalibTable::synthetic(g, &params, n, seed))
+}
+
+fn cmd_quantize(args: &Args) -> Result<()> {
+    let g = Arc::new(model_arg(args)?);
+    let n = args.get_parse("calib", 8usize);
+    let seed = args.get_parse("calib-seed", 42u64);
+    let t0 = Instant::now();
+    let params = ParamStore::for_graph(&g);
+    let calib = CalibTable::synthetic(&g, &params, n, seed);
+    let calib_s = t0.elapsed().as_secs_f64();
+
+    let plan = opt::quant::plan_quant(&g);
+    let annotated = opt::quant::annotate_quant(&g);
+    let f32_bytes = opt::quant::activation_bytes(&g);
+    let i8_bytes = opt::quant::activation_bytes(&annotated);
+    println!(
+        "{}: calibrated {} nodes from {n} input sets in {} — {} int8 kernels, \
+         {} folded q/dq pairs, {} requant boundaries",
+        g.name,
+        g.len(),
+        human_time(calib_s),
+        plan.int_nodes(),
+        plan.folded(),
+        plan.boundaries(),
+    );
+    println!(
+        "activation traffic: {} f32 -> {} int8 ({:.1}x)",
+        human_bytes(f32_bytes),
+        human_bytes(i8_bytes),
+        f32_bytes as f64 / i8_bytes.max(1) as f64
+    );
+
+    // Probe accuracy: quantized vs f32 on one held-out synthetic input.
+    let engine = QuantEngine::new(g.clone(), &calib, 1)?;
+    let inputs = xenos::ops::interp::synthetic_inputs(&g, seed + n as u64);
+    let t1 = Instant::now();
+    let qo = engine.run(&inputs);
+    let int8_s = t1.elapsed().as_secs_f64();
+    let t2 = Instant::now();
+    let fo = xenos::ops::Interpreter::new(&g).run(&inputs);
+    let f32_s = t2.elapsed().as_secs_f64();
+    let mut max_err = 0.0f32;
+    for (a, b) in fo.iter().zip(&qo) {
+        max_err = max_err.max(a.max_abs_diff(b));
+    }
+    println!(
+        "probe input: max |int8 - f32| = {max_err:e} (int8 {} vs f32 {})",
+        human_time(int8_s),
+        human_time(f32_s)
+    );
+
+    let out = args
+        .get("out")
+        .map(str::to_string)
+        .unwrap_or_else(|| format!("{}.qcal", g.name));
+    calib.save(std::path::Path::new(&out))?;
+    println!("calibration table written to {out}");
+    Ok(())
+}
+
 fn cmd_dist(args: &Args) -> Result<()> {
     let g = model_arg(args)?;
     let d = device_arg(args)?;
@@ -342,14 +460,22 @@ fn cmd_dist_run(args: &Args) -> Result<()> {
     let sync = sync_arg(args)?;
     let threads = args.get_parse("threads", 1usize);
     let seed = args.get_parse("seed", 42u64);
+    let precision = precision_arg(args)?;
+    let graph = Arc::new(
+        models::by_name(&model).with_context(|| format!("unknown model {model}"))?,
+    );
+    let calib = match precision {
+        Precision::Int8 => Some(calib_arg(args, &graph)?),
+        Precision::F32 => None,
+    };
 
     let driver = if args.flag("local") || args.get("hosts").is_none() {
         let p = args.get_parse("p", 2usize);
-        let g = Arc::new(
-            models::by_name(&model).with_context(|| format!("unknown model {model}"))?,
-        );
         let d = hw::by_name(&device).with_context(|| format!("unknown device {device}"))?;
-        ClusterDriver::local(g, &d, p, scheme, sync, threads)?
+        match &calib {
+            Some(c) => ClusterDriver::local_q8(graph.clone(), &d, p, scheme, sync, threads, c)?,
+            None => ClusterDriver::local(graph.clone(), &d, p, scheme, sync, threads)?,
+        }
     } else {
         let mut hosts: Vec<String> = args
             .get("hosts")
@@ -365,7 +491,10 @@ fn cmd_dist_run(args: &Args) -> Result<()> {
             hosts.len()
         );
         hosts.truncate(p);
-        ClusterDriver::tcp(&hosts, &model, &device, scheme, sync, threads)?
+        match &calib {
+            Some(c) => ClusterDriver::tcp_q8(&hosts, &model, &device, scheme, sync, threads, c)?,
+            None => ClusterDriver::tcp(&hosts, &model, &device, scheme, sync, threads)?,
+        }
     };
 
     let inputs = xenos::ops::interp::synthetic_inputs(driver.graph(), seed);
@@ -382,21 +511,29 @@ fn cmd_dist_run(args: &Args) -> Result<()> {
         human_time(dist_s)
     );
 
-    // Differential check against the single-device serial interpreter.
+    // Differential check against the single-device reference at the same
+    // precision (quantized clusters are bit-exact vs the single-device
+    // quantized engine, exactly like f32 clusters vs the interpreter).
     let reference = {
-        let g = models::by_name(&model).expect("model resolved above");
         let t1 = Instant::now();
-        let outs = xenos::ops::Interpreter::new(&g).run(&inputs);
+        let outs = match &calib {
+            Some(c) => QuantEngine::new(graph.clone(), c, 1)?.run(&inputs),
+            None => xenos::ops::Interpreter::new(&graph).run(&inputs),
+        };
         (outs, t1.elapsed().as_secs_f64())
     };
-    println!("single-device serial: {}", human_time(reference.1));
+    println!(
+        "single-device {} reference: {}",
+        precision.label(),
+        human_time(reference.1)
+    );
     let mut max_diff = 0.0f32;
     for (a, b) in reference.0.iter().zip(&outputs) {
         max_diff = max_diff.max(a.max_abs_diff(b));
     }
-    println!("max |cluster - serial| = {max_diff:e}");
+    println!("max |cluster - single-device| = {max_diff:e}");
     if args.flag("verify") {
-        anyhow::ensure!(max_diff == 0.0, "cluster output diverged from serial interpreter");
+        anyhow::ensure!(max_diff == 0.0, "cluster output diverged from the single-device engine");
         println!("verified: cluster output is element-wise identical");
     }
     Ok(())

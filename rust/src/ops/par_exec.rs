@@ -29,7 +29,7 @@ use super::arena::BufferArena;
 use super::elementwise as ew;
 use super::interp::{exec_node, run_graph, synthetic_inputs};
 use super::params::{NodeParams, ParamStore};
-use super::{conv, matmul, pool as pooling, Tensor};
+use super::{conv, matmul, pool as pooling, shape_ops, Tensor};
 use crate::graph::{ConvAttrs, Graph, Node, OpKind, PoolAttrs, PoolKind, Shape, TensorDesc};
 use crate::hw::DeviceModel;
 use crate::opt::{dos, ExecutionPlan, NodePlan, OptLevel, PartitionDim};
@@ -59,8 +59,10 @@ pub fn clamp_workers(requested: usize) -> usize {
     requested.max(1).min(host_parallelism())
 }
 
-/// Near-even `(start, end)` chunks of `0..total`, at most `ways` of them.
-fn chunks(total: usize, ways: usize) -> Vec<(usize, usize)> {
+/// Near-even `(start, end)` chunks of `0..total`, at most `ways` of them
+/// (shared with the INT8 engine so f32 and quantized worker-pool chunk
+/// boundaries can never drift apart).
+pub(crate) fn chunks(total: usize, ways: usize) -> Vec<(usize, usize)> {
     if total == 0 {
         return Vec::new();
     }
@@ -342,7 +344,14 @@ impl ParInterpreter {
     /// (chunk 0 carries the bias), then the partials are sum-reduced.
     /// Float additions are reordered, so this path is tolerance-equal (not
     /// bit-equal) to the serial one.
-    fn conv_ic_reduction(&self, a: &ConvAttrs, p: &NodeParams, x: &Tensor, oh: usize, ow: usize) -> Tensor {
+    fn conv_ic_reduction(
+        &self,
+        a: &ConvAttrs,
+        p: &NodeParams,
+        x: &Tensor,
+        oh: usize,
+        ow: usize,
+    ) -> Tensor {
         let a = *a;
         let cpg_in = a.in_c / a.groups;
         let numel = a.out_c * oh * ow;
@@ -351,7 +360,8 @@ impl ParInterpreter {
             return conv::conv2d(x, &a, &p.w, &p.bias);
         }
         let pool = self.pool.as_ref().expect("reduction path requires a pool");
-        let mut partials: Vec<Vec<f32>> = (0..ic_chunks.len()).map(|_| self.take_zeroed(numel)).collect();
+        let mut partials: Vec<Vec<f32>> =
+            (0..ic_chunks.len()).map(|_| self.take_zeroed(numel)).collect();
         let ptrs: Vec<SendPtr> = partials.iter_mut().map(|b| SendPtr(b.as_mut_ptr())).collect();
         let w = p.w.as_slice();
         let bias = p.bias.as_slice();
@@ -501,7 +511,12 @@ impl ParInterpreter {
     }
 
     /// Chunked element-wise zip of two same-shape tensors.
-    fn par_zip(&self, a: &Tensor, b: &Tensor, f: impl Fn(f32, f32) -> f32 + Send + Sync + Copy) -> Tensor {
+    fn par_zip(
+        &self,
+        a: &Tensor,
+        b: &Tensor,
+        f: impl Fn(f32, f32) -> f32 + Send + Sync + Copy,
+    ) -> Tensor {
         assert_eq!(a.shape(), b.shape(), "elementwise shape mismatch");
         let pool = self.pool.as_ref().expect("parallel path");
         let n = a.data.len();
@@ -606,7 +621,8 @@ impl ParInterpreter {
         Tensor::new(TensorDesc::fm(1, c, oh, ow), data)
     }
 
-    /// Channel-chunked nearest-neighbour upsample.
+    /// Channel-chunked nearest-neighbour upsample through the shared
+    /// tile kernel (`ops::shape_ops`).
     fn par_upsample(&self, x: &Tensor, factor: usize) -> Tensor {
         let pool = self.pool.as_ref().expect("parallel path");
         let s = x.shape();
@@ -618,90 +634,71 @@ impl ParInterpreter {
         for (c0, c1) in chunks(c, self.workers) {
             jobs.push(Box::new(move || {
                 // SAFETY: disjoint channel ranges of the same buffer.
-                let seg = unsafe {
-                    std::slice::from_raw_parts_mut(ptr.0.add(c0 * oh * ow), (c1 - c0) * oh * ow)
+                unsafe {
+                    shape_ops::upsample_tile_raw(
+                        x, factor, 0, c0, c1, 0, oh, 0, ow, oh, ow, ptr.0,
+                    )
                 };
-                for (idx, v) in seg.iter_mut().enumerate() {
-                    let ch = c0 + idx / (oh * ow);
-                    let rem = idx % (oh * ow);
-                    *v = x.at4(0, ch, rem / ow / factor, rem % ow / factor);
-                }
             }));
         }
         pool.run(jobs);
         Tensor::new(TensorDesc::fm(1, c, oh, ow), data)
     }
 
-    /// Concat with one contiguous channel-block copy job per input.
+    /// Concat with one shared-kernel copy job per input (destination
+    /// channel blocks are disjoint by construction).
     fn par_concat(&self, args: &[&Tensor]) -> Tensor {
         let pool = self.pool.as_ref().expect("parallel path");
         let s0 = args[0].shape();
         let (h, w) = (s0.h(), s0.w());
-        let hw = h * w;
         let total_c: usize = args.iter().map(|t| t.shape().c()).sum();
-        let mut data = self.take_zeroed(total_c * hw);
+        let mut data = self.take_zeroed(total_c * h * w);
         let ptr = SendPtr(data.as_mut_ptr());
         let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
         let mut c_off = 0usize;
         for t in args {
-            let tc = t.shape().c();
-            let dst = c_off * hw;
-            let src: &[f32] = &t.data;
+            let off = c_off;
             jobs.push(Box::new(move || {
                 // SAFETY: disjoint destination channel blocks.
-                let seg = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(dst), tc * hw) };
-                seg.copy_from_slice(src);
+                unsafe { shape_ops::concat_src_tile_raw(t, off, total_c, 0, 0, h, 0, w, ptr.0) };
             }));
-            c_off += tc;
+            c_off += t.shape().c();
         }
         pool.run(jobs);
         Tensor::new(TensorDesc::fm(1, total_c, h, w), data)
     }
 
-    /// Channel-chunked slice copy.
+    /// Channel-chunked slice copy through the shared tile kernel.
     fn par_slice(&self, x: &Tensor, begin: usize, end: usize) -> Tensor {
         let pool = self.pool.as_ref().expect("parallel path");
         let s = x.shape();
-        let hw = s.h() * s.w();
+        let (h, w) = (s.h(), s.w());
         let oc = end - begin;
-        let mut data = self.take_zeroed(oc * hw);
+        let mut data = self.take_zeroed(oc * h * w);
         let ptr = SendPtr(data.as_mut_ptr());
-        let src: &[f32] = &x.data;
         let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
         for (c0, c1) in chunks(oc, self.workers) {
             jobs.push(Box::new(move || {
                 // SAFETY: disjoint destination channel ranges.
-                let seg =
-                    unsafe { std::slice::from_raw_parts_mut(ptr.0.add(c0 * hw), (c1 - c0) * hw) };
-                seg.copy_from_slice(&src[(begin + c0) * hw..(begin + c1) * hw]);
+                unsafe { shape_ops::slice_tile_raw(x, begin, oc, 0, c0, c1, 0, h, 0, w, ptr.0) };
             }));
         }
         pool.run(jobs);
-        Tensor::new(TensorDesc::fm(1, oc, s.h(), s.w()), data)
+        Tensor::new(TensorDesc::fm(1, oc, h, w), data)
     }
 
-    /// Destination-chunked channel shuffle.
+    /// Destination-chunked channel shuffle through the shared tile kernel.
     fn par_shuffle(&self, x: &Tensor, groups: usize) -> Tensor {
         let pool = self.pool.as_ref().expect("parallel path");
         let s = x.shape();
         let (c, h, w) = (s.c(), s.h(), s.w());
-        let cpg = c / groups;
-        let hw = h * w;
-        let mut data = self.take_zeroed(c * hw);
+        let mut data = self.take_zeroed(c * h * w);
         let ptr = SendPtr(data.as_mut_ptr());
-        let src: &[f32] = &x.data;
         let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
         for (d0, d1) in chunks(c, self.workers) {
             jobs.push(Box::new(move || {
                 // SAFETY: disjoint destination channel ranges.
-                let seg =
-                    unsafe { std::slice::from_raw_parts_mut(ptr.0.add(d0 * hw), (d1 - d0) * hw) };
-                for (i, plane) in seg.chunks_mut(hw).enumerate() {
-                    let dst_c = d0 + i;
-                    // dst_c = i*groups + g  <=>  src_c = g*cpg + i.
-                    let src_c = (dst_c % groups) * cpg + dst_c / groups;
-                    plane.copy_from_slice(&src[src_c * hw..(src_c + 1) * hw]);
-                }
+                unsafe { shape_ops::shuffle_tile_raw(x, groups, 0, d0, d1, 0, h, 0, w, ptr.0) };
             }));
         }
         pool.run(jobs);

@@ -2,9 +2,163 @@
 //! upsample. These are exactly the ops whose *physical* cost the
 //! dataflow-centric optimizer eliminates by absorbing them into producer
 //! write order — numerically they remain plain copies.
+//!
+//! Structured as **tile kernels** like `ops::pool`: the serial entry
+//! points, the parallel executor's channel-chunked copies
+//! (`ops::par_exec`) and the d-Xenos cluster runtime's row/column shards
+//! (`dist::exec::worker`) all run the same per-element index mapping
+//! through one `*_tile_raw` routine per operator, so any (channel, row,
+//! column) tiling of a copy op is bit-identical to the serial result by
+//! construction — and the quantized engines reuse the same single
+//! copy-kernel surface.
 
 use super::Tensor;
 use crate::graph::{Shape, TensorDesc};
+
+/// Copy one source of a channel concat into its destination block:
+/// all `t` channels at destination offset `c_off`, rows `[oy0, oy1)`,
+/// columns `[ox0, ox1)` of batch `b`, written into the full
+/// `[n, total_c, h, w]` buffer behind `out`.
+///
+/// # Safety
+/// `out` must point at a live `n*total_c*h*w` f32 buffer; concurrent
+/// calls must target disjoint regions (distinct sources always do —
+/// their destination channel blocks are disjoint).
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn concat_src_tile_raw(
+    t: &Tensor,
+    c_off: usize,
+    total_c: usize,
+    b: usize,
+    oy0: usize,
+    oy1: usize,
+    ox0: usize,
+    ox1: usize,
+    out: *mut f32,
+) {
+    let s = t.shape();
+    let (tc, h, w) = (s.c(), s.h(), s.w());
+    if ox0 >= ox1 {
+        return;
+    }
+    for ch in 0..tc {
+        for y in oy0..oy1 {
+            let src = ((b * tc + ch) * h + y) * w;
+            let dst = ((b * total_c + c_off + ch) * h + y) * w;
+            let seg = std::slice::from_raw_parts_mut(out.add(dst + ox0), ox1 - ox0);
+            seg.copy_from_slice(&t.data[src + ox0..src + ox1]);
+        }
+    }
+}
+
+/// Channel-slice tile: output channels `[c0, c1)` (of `oc = end - begin`
+/// total) copied from input channels `begin + c`, rows `[oy0, oy1)`,
+/// columns `[ox0, ox1)` of batch `b`, into the full `[n, oc, h, w]`
+/// buffer behind `out`.
+///
+/// # Safety
+/// `out` must point at a live `n*oc*h*w` f32 buffer; concurrent calls
+/// must target disjoint regions.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn slice_tile_raw(
+    x: &Tensor,
+    begin: usize,
+    oc: usize,
+    b: usize,
+    c0: usize,
+    c1: usize,
+    oy0: usize,
+    oy1: usize,
+    ox0: usize,
+    ox1: usize,
+    out: *mut f32,
+) {
+    let s = x.shape();
+    let (c, h, w) = (s.c(), s.h(), s.w());
+    debug_assert!(begin + c1 <= c && c1 <= oc);
+    if ox0 >= ox1 {
+        return;
+    }
+    for ch in c0..c1 {
+        for y in oy0..oy1 {
+            let src = ((b * c + begin + ch) * h + y) * w;
+            let dst = ((b * oc + ch) * h + y) * w;
+            let seg = std::slice::from_raw_parts_mut(out.add(dst + ox0), ox1 - ox0);
+            seg.copy_from_slice(&x.data[src + ox0..src + ox1]);
+        }
+    }
+}
+
+/// Channel-shuffle tile: destination channels `[d0, d1)` (the ShuffleNet
+/// group transpose `dst = i*groups + g  <=>  src = g*cpg + i`), rows
+/// `[oy0, oy1)`, columns `[ox0, ox1)` of batch `b`, into the full
+/// `[n, c, h, w]` buffer behind `out`.
+///
+/// # Safety
+/// `out` must point at a live `n*c*h*w` f32 buffer; concurrent calls
+/// must target disjoint destination regions.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn shuffle_tile_raw(
+    x: &Tensor,
+    groups: usize,
+    b: usize,
+    d0: usize,
+    d1: usize,
+    oy0: usize,
+    oy1: usize,
+    ox0: usize,
+    ox1: usize,
+    out: *mut f32,
+) {
+    let s = x.shape();
+    let (c, h, w) = (s.c(), s.h(), s.w());
+    let cpg = c / groups;
+    if ox0 >= ox1 {
+        return;
+    }
+    for dst_c in d0..d1 {
+        let src_c = (dst_c % groups) * cpg + dst_c / groups;
+        for y in oy0..oy1 {
+            let src = ((b * c + src_c) * h + y) * w;
+            let dst = ((b * c + dst_c) * h + y) * w;
+            let seg = std::slice::from_raw_parts_mut(out.add(dst + ox0), ox1 - ox0);
+            seg.copy_from_slice(&x.data[src + ox0..src + ox1]);
+        }
+    }
+}
+
+/// Nearest-neighbour upsample tile: channels `[c0, c1)`, output rows
+/// `[oy0, oy1)`, output columns `[ox0, ox1)` of batch `b`, into the full
+/// `[n, c, oh, ow]` buffer behind `out`.
+///
+/// # Safety
+/// `out` must point at a live `n*c*oh*ow` f32 buffer; concurrent calls
+/// must target disjoint regions.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn upsample_tile_raw(
+    x: &Tensor,
+    factor: usize,
+    b: usize,
+    c0: usize,
+    c1: usize,
+    oy0: usize,
+    oy1: usize,
+    ox0: usize,
+    ox1: usize,
+    oh: usize,
+    ow: usize,
+    out: *mut f32,
+) {
+    let c = x.shape().c();
+    for ch in c0..c1 {
+        for oy in oy0..oy1 {
+            for ox in ox0..ox1 {
+                *out.add(((b * c + ch) * oh + oy) * ow + ox) =
+                    x.at4(b, ch, oy / factor, ox / factor);
+            }
+        }
+    }
+}
 
 /// Channel-axis concat of feature maps with equal N/H/W.
 pub fn concat_c(xs: &[&Tensor]) -> Tensor {
@@ -13,15 +167,14 @@ pub fn concat_c(xs: &[&Tensor]) -> Tensor {
     let (n, h, w) = (s0.n(), s0.h(), s0.w());
     let total_c: usize = xs.iter().map(|t| t.shape().c()).sum();
     let mut out = Tensor::zeros(TensorDesc::fm(n, total_c, h, w));
-    let hw = h * w;
     for b in 0..n {
         let mut c_off = 0;
         for t in xs {
-            let tc = t.shape().c();
-            let src = &t.data[b * tc * hw..(b + 1) * tc * hw];
-            let dst = &mut out.data[(b * total_c + c_off) * hw..(b * total_c + c_off + tc) * hw];
-            dst.copy_from_slice(src);
-            c_off += tc;
+            // SAFETY: single-threaded call; sources cover disjoint blocks.
+            unsafe {
+                concat_src_tile_raw(t, c_off, total_c, b, 0, h, 0, w, out.data.as_mut_ptr())
+            };
+            c_off += t.shape().c();
         }
     }
     out
@@ -34,12 +187,13 @@ pub fn slice_c(x: &Tensor, begin: usize, end: usize) -> Tensor {
     if s.is_fm() {
         let (n, c, h, w) = (s.n(), s.c(), s.h(), s.w());
         assert!(end <= c && begin < end);
-        let hw = h * w;
         let oc = end - begin;
         let mut out = Tensor::zeros(TensorDesc::fm(n, oc, h, w));
         for b in 0..n {
-            let src = &x.data[(b * c + begin) * hw..(b * c + end) * hw];
-            out.data[b * oc * hw..(b + 1) * oc * hw].copy_from_slice(src);
+            // SAFETY: single-threaded call covering the whole range of `b`.
+            unsafe {
+                slice_tile_raw(x, begin, oc, b, 0, oc, 0, h, 0, w, out.data.as_mut_ptr())
+            };
         }
         out
     } else {
@@ -76,21 +230,10 @@ pub fn channel_shuffle(x: &Tensor, groups: usize) -> Tensor {
     let s = x.shape();
     let (n, c, h, w) = (s.n(), s.c(), s.h(), s.w());
     assert_eq!(c % groups, 0);
-    let cpg = c / groups;
-    let hw = h * w;
-    let mut out = x.clone();
+    let mut out = Tensor::zeros(x.desc.clone());
     for b in 0..n {
-        for g in 0..groups {
-            for i in 0..cpg {
-                let src_c = g * cpg + i;
-                let dst_c = i * groups + g;
-                let src = (b * c + src_c) * hw;
-                let dst = (b * c + dst_c) * hw;
-                // copy within clone: use split borrows via memcpy on indices
-                let tmp: Vec<f32> = x.data[src..src + hw].to_vec();
-                out.data[dst..dst + hw].copy_from_slice(&tmp);
-            }
-        }
+        // SAFETY: single-threaded call covering every destination channel.
+        unsafe { shuffle_tile_raw(x, groups, b, 0, c, 0, h, 0, w, out.data.as_mut_ptr()) };
     }
     out
 }
@@ -102,14 +245,10 @@ pub fn upsample(x: &Tensor, factor: usize) -> Tensor {
     let (oh, ow) = (h * factor, w * factor);
     let mut out = Tensor::zeros(TensorDesc::fm(n, c, oh, ow));
     for b in 0..n {
-        for ch in 0..c {
-            for oy in 0..oh {
-                for ox in 0..ow {
-                    out.data[((b * c + ch) * oh + oy) * ow + ox] =
-                        x.at4(b, ch, oy / factor, ox / factor);
-                }
-            }
-        }
+        // SAFETY: single-threaded call covering the whole region of `b`.
+        unsafe {
+            upsample_tile_raw(x, factor, b, 0, c, 0, oh, 0, ow, oh, ow, out.data.as_mut_ptr())
+        };
     }
     out
 }
@@ -173,5 +312,63 @@ mod tests {
         let y = upsample(&x, 2);
         assert_eq!(y.shape().h(), 2);
         assert_eq!(y.data, vec![1., 1., 2., 2., 1., 1., 2., 2.]);
+    }
+
+    #[test]
+    fn copy_op_tiles_match_full_bitwise() {
+        // Channel, row and column tilings of every copy-op kernel must
+        // reproduce the serial result exactly — the guarantee the parallel
+        // executor and the cluster shards (and the quant path) rely on.
+        let mut rng = crate::util::rng::Rng::new(38);
+        let x = Tensor::fm(1, 8, 6, 6, rng.vec_uniform(8 * 6 * 6));
+        let tilings: Vec<(Vec<(usize, usize)>, Vec<(usize, usize)>, Vec<(usize, usize)>)> = vec![
+            (vec![(0, 3), (3, 8)], vec![(0, 6)], vec![(0, 6)]),
+            (vec![(0, 8)], vec![(0, 2), (2, 6)], vec![(0, 6)]),
+            (vec![(0, 8)], vec![(0, 6)], vec![(0, 4), (4, 6)]),
+        ];
+        // Upsample ×2.
+        let want_up = upsample(&x, 2);
+        for (cr, yr, xr) in &tilings {
+            let mut got = vec![0.0f32; 8 * 12 * 12];
+            for &(c0, c1) in cr {
+                for &(y0, y1) in yr {
+                    for &(x0, x1) in xr {
+                        // Scale the spatial ranges to the upsampled extents.
+                        unsafe {
+                            upsample_tile_raw(
+                                &x, 2, 0, c0, c1, y0 * 2, y1 * 2, x0 * 2, x1 * 2, 12, 12,
+                                got.as_mut_ptr(),
+                            )
+                        };
+                    }
+                }
+            }
+            assert_eq!(got, want_up.data);
+        }
+        // Slice [2, 7).
+        let want_sl = slice_c(&x, 2, 7);
+        let mut got = vec![0.0f32; 5 * 36];
+        for (c0, c1) in [(0usize, 2usize), (2, 5)] {
+            unsafe { slice_tile_raw(&x, 2, 5, 0, c0, c1, 0, 6, 0, 6, got.as_mut_ptr()) };
+        }
+        assert_eq!(got, want_sl.data);
+        // Shuffle groups=4.
+        let want_sh = channel_shuffle(&x, 4);
+        let mut got = vec![0.0f32; 8 * 36];
+        for (d0, d1) in [(0usize, 5usize), (5, 8)] {
+            unsafe { shuffle_tile_raw(&x, 4, 0, d0, d1, 0, 6, 0, 6, got.as_mut_ptr()) };
+        }
+        assert_eq!(got, want_sh.data);
+        // Concat with row-range tiling.
+        let y = Tensor::fm(1, 3, 6, 6, rng.vec_uniform(3 * 6 * 6));
+        let want_cc = concat_c(&[&x, &y]);
+        let mut got = vec![0.0f32; 11 * 36];
+        for (y0, y1) in [(0usize, 3usize), (3, 6)] {
+            unsafe {
+                concat_src_tile_raw(&x, 0, 11, 0, y0, y1, 0, 6, got.as_mut_ptr());
+                concat_src_tile_raw(&y, 8, 11, 0, y0, y1, 0, 6, got.as_mut_ptr());
+            }
+        }
+        assert_eq!(got, want_cc.data);
     }
 }

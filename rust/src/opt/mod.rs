@@ -7,6 +7,9 @@
 //!    metadata rewrite (§4.1). Applied only at [`OptLevel::Full`].
 //! 3. [`dos`] — horizontal optimization: DSP-aware operator split producing
 //!    the [`plan::ExecutionPlan`] (§4.2).
+//! 4. [`quant`] — precision planning for INT8 execution: per-node
+//!    quantize/dequantize boundaries with pass-through folding, expressed
+//!    (like linking) as edge metadata rather than new operator kinds.
 //!
 //! The Fig. 7 ablation arms share the fused graph so the measured deltas
 //! isolate HO and VO exactly as the paper's baselines do.
@@ -15,6 +18,7 @@ pub mod dos;
 pub mod fusion;
 pub mod linking;
 pub mod plan;
+pub mod quant;
 pub mod rewrite;
 pub mod search;
 

@@ -1,0 +1,193 @@
+//! Precision planning — the graph rewrite behind INT8 execution.
+//!
+//! Like operator linking (§4.1), quantization is expressed as **edge
+//! metadata, not new operator kinds**: the pass assigns every node a
+//! [`QuantKind`] and the engines realize the implied quantize/dequantize
+//! boundaries (the annotated graph records them as [`DType::I8`] edges,
+//! which the simulator and the wire protocol already price at one byte
+//! per element).
+//!
+//! The folding rule mirrors classic q/dq elimination: a *pass-through*
+//! operator (pure selection/copy — ReLU, max-pool, slice, shuffle,
+//! upsample, transpose, concat-of-like-scales is deliberately excluded)
+//! maps i8-grid values to i8-grid values on the **same** grid, so the
+//! dequantize→(op)→quantize pair around it cancels exactly and the
+//! operator runs inside the quantized region with zero extra error.
+//! Everything else either runs on the integer kernels ([`QuantKind::
+//! IntDot`]) or computes in f32 and *re-quantizes* its output onto its
+//! own calibrated grid ([`QuantKind::Requant`]).
+
+use crate::graph::{DType, Graph, NodeId, OpKind, PoolKind};
+
+/// How one node executes under INT8 precision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantKind {
+    /// Integer kernel (i8 × i8 → i32): conv family and matmul. Output is
+    /// requantized onto the node's calibrated grid.
+    IntDot,
+    /// Pure selection/copy that preserves the input's i8 grid — the
+    /// folded q/dq case; no requantization, no extra error.
+    Passthrough,
+    /// f32 arithmetic, output snapped onto the node's calibrated grid (a
+    /// quantize boundary). Graph inputs are Requant: that is the inserted
+    /// quantize node at the graph's edge.
+    Requant,
+}
+
+/// A whole-graph precision assignment.
+#[derive(Debug, Clone)]
+pub struct QuantPlan {
+    /// Per-node execution kind, indexed by `NodeId`.
+    pub kinds: Vec<QuantKind>,
+    /// For every node, the node whose activation grid its output lives
+    /// on: itself for `IntDot`/`Requant`, the transitive producer for
+    /// `Passthrough` chains. Engines read activation scales through this
+    /// indirection so folded operators stay exactly on their producer's
+    /// grid.
+    pub grid_of: Vec<NodeId>,
+}
+
+impl QuantPlan {
+    /// Number of integer-kernel nodes.
+    pub fn int_nodes(&self) -> usize {
+        self.kinds.iter().filter(|k| **k == QuantKind::IntDot).count()
+    }
+
+    /// Number of folded quantize/dequantize pairs (pass-through nodes).
+    pub fn folded(&self) -> usize {
+        self.kinds.iter().filter(|k| **k == QuantKind::Passthrough).count()
+    }
+
+    /// Number of requantization boundaries.
+    pub fn boundaries(&self) -> usize {
+        self.kinds.iter().filter(|k| **k == QuantKind::Requant).count()
+    }
+}
+
+/// True for operators that map i8-grid values to the same i8 grid:
+/// selections and copies with a single data input. Average pooling and
+/// all arithmetic are excluded (their outputs leave the grid), as is
+/// concat (its inputs generally live on different grids).
+fn passthrough(op: &OpKind) -> bool {
+    matches!(
+        op,
+        OpKind::Relu
+            | OpKind::Slice { .. }
+            | OpKind::ChannelShuffle { .. }
+            | OpKind::Upsample { .. }
+            | OpKind::Transpose
+    ) || matches!(op, OpKind::Pool(p) if p.kind == PoolKind::Max)
+}
+
+/// Assign a precision kind to every node of `g` and fold pass-through
+/// chains onto their producers' grids.
+pub fn plan_quant(g: &Graph) -> QuantPlan {
+    let mut kinds = Vec::with_capacity(g.len());
+    let mut grid_of: Vec<NodeId> = Vec::with_capacity(g.len());
+    for n in &g.nodes {
+        let kind = match &n.op {
+            OpKind::Conv(_) | OpKind::Cbr(_) | OpKind::Cbra(..) | OpKind::Cbrm(..) => {
+                QuantKind::IntDot
+            }
+            OpKind::MatMul(_) => QuantKind::IntDot,
+            op if passthrough(op) => QuantKind::Passthrough,
+            _ => QuantKind::Requant,
+        };
+        // Topological order: producers are already resolved.
+        let grid = if kind == QuantKind::Passthrough {
+            grid_of[n.inputs[0]]
+        } else {
+            n.id
+        };
+        kinds.push(kind);
+        grid_of.push(grid);
+    }
+    QuantPlan { kinds, grid_of }
+}
+
+/// The annotated-graph rewrite: a copy of `g` whose activation edges
+/// carry [`DType::I8`]. Every [`QuantKind`] keeps its output on an i8
+/// grid (IntDot/Requant snap, Passthrough inherits), so every edge is
+/// annotated. This is what `xenos quantize` reports and what byte-level
+/// accounting (simulator, halo/all-gather traffic) prices — the numeric
+/// engines consult the [`QuantPlan`] directly.
+pub fn annotate_quant(g: &Graph) -> Graph {
+    let mut out = g.clone();
+    for n in out.nodes.iter_mut() {
+        n.out.dtype = DType::I8;
+    }
+    out
+}
+
+/// Activation bytes of a graph (sum over non-input edges) — used to
+/// report the f32 → i8 traffic cut.
+pub fn activation_bytes(g: &Graph) -> u64 {
+    g.nodes
+        .iter()
+        .filter(|n| !matches!(n.op, OpKind::Input))
+        .map(|n| n.out.bytes())
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, Shape};
+
+    fn mixed_graph() -> Graph {
+        let mut b = GraphBuilder::new("qplan_t");
+        let x = b.input("x", Shape::nchw(1, 4, 8, 8));
+        let c = b.conv("c", x, 8, 3, 1, 1);
+        let bn = b.bn("bn", c);
+        let r = b.relu("r", bn);
+        let mp = b.maxpool("mp", r, 2, 2);
+        let ap = b.avgpool("ap", mp, 2, 2);
+        let f = b.fc("fc", ap, 5);
+        let sm = b.softmax("sm", f);
+        b.output(sm);
+        b.finish()
+    }
+
+    #[test]
+    fn kinds_follow_operator_classes() {
+        let g = mixed_graph();
+        let p = plan_quant(&g);
+        let kind_of = |name: &str| {
+            let n = g.nodes.iter().find(|n| n.name == name).unwrap();
+            p.kinds[n.id]
+        };
+        assert_eq!(kind_of("x"), QuantKind::Requant); // inserted input quantize
+        assert_eq!(kind_of("c"), QuantKind::IntDot);
+        assert_eq!(kind_of("bn"), QuantKind::Requant);
+        assert_eq!(kind_of("r"), QuantKind::Passthrough);
+        assert_eq!(kind_of("mp"), QuantKind::Passthrough);
+        assert_eq!(kind_of("ap"), QuantKind::Requant);
+        assert_eq!(kind_of("fc"), QuantKind::IntDot);
+        assert_eq!(kind_of("sm"), QuantKind::Requant);
+        assert_eq!(p.int_nodes(), 2);
+        assert_eq!(p.folded(), 2);
+    }
+
+    #[test]
+    fn passthrough_chains_fold_to_the_producer_grid() {
+        let g = mixed_graph();
+        let p = plan_quant(&g);
+        let id_of = |name: &str| g.nodes.iter().find(|n| n.name == name).unwrap().id;
+        // relu and maxpool both live on bn's grid (the q/dq pairs folded).
+        assert_eq!(p.grid_of[id_of("r")], id_of("bn"));
+        assert_eq!(p.grid_of[id_of("mp")], id_of("bn"));
+        // Boundary nodes own their grid.
+        assert_eq!(p.grid_of[id_of("ap")], id_of("ap"));
+        assert_eq!(p.grid_of[id_of("c")], id_of("c"));
+    }
+
+    #[test]
+    fn annotate_marks_edges_i8_and_quarters_traffic() {
+        let g = mixed_graph();
+        let q = annotate_quant(&g);
+        assert!(q.nodes.iter().all(|n| n.out.dtype == DType::I8));
+        let f32_bytes = activation_bytes(&g);
+        let i8_bytes = activation_bytes(&q);
+        assert_eq!(f32_bytes, 4 * i8_bytes);
+    }
+}

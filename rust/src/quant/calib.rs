@@ -1,0 +1,282 @@
+//! Calibration: per-channel activation ranges collected from
+//! representative f32 runs, serialized alongside the model.
+//!
+//! The table drives *static* quantization — every engine reads its
+//! activation scales from here instead of inspecting live data, which is
+//! what makes serial, worker-pool and cluster execution quantize (and thus
+//! compute) bit-identically. Collection itself is deterministic: the same
+//! calibration inputs produce a byte-identical table
+//! (`tests/quant.rs::calibration_is_deterministic`).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::scale_for;
+use crate::graph::{Graph, NodeId, OpKind};
+use crate::ops::interp::{run_graph, synthetic_inputs};
+use crate::ops::params::ParamStore;
+use crate::ops::Tensor;
+
+/// Per-channel symmetric activation ranges for every node of one model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CalibTable {
+    /// Zoo model name the table was collected for.
+    pub model: String,
+    /// Per node (indexed by `NodeId`): max-abs per channel for feature
+    /// maps, a single per-tensor entry otherwise.
+    pub per_channel: Vec<Vec<f32>>,
+}
+
+/// Max-abs per channel of one activation (one entry for non-FM tensors).
+fn channel_ranges(t: &Tensor) -> Vec<f32> {
+    let s = t.shape();
+    if s.is_fm() {
+        let (n, c, h, w) = (s.n(), s.c(), s.h(), s.w());
+        let hw = h * w;
+        let mut m = vec![0.0f32; c];
+        for b in 0..n {
+            for (ch, mc) in m.iter_mut().enumerate() {
+                let base = (b * c + ch) * hw;
+                for &v in &t.data[base..base + hw] {
+                    *mc = mc.max(v.abs());
+                }
+            }
+        }
+        m
+    } else {
+        vec![t.data.iter().fold(0.0f32, |m, v| m.max(v.abs()))]
+    }
+}
+
+fn fold_max(into: &mut Vec<f32>, ranges: Vec<f32>) {
+    if into.is_empty() {
+        *into = ranges;
+    } else {
+        for (a, b) in into.iter_mut().zip(ranges) {
+            *a = a.max(b);
+        }
+    }
+}
+
+impl CalibTable {
+    /// Collect a table by running every calibration input set through the
+    /// serial interpreter and folding per-channel max-abs across runs.
+    pub fn collect(g: &Graph, params: &ParamStore, calib_inputs: &[Vec<Tensor>]) -> CalibTable {
+        assert!(!calib_inputs.is_empty(), "calibration needs at least one input set");
+        let mut per_channel: Vec<Vec<f32>> = vec![Vec::new(); g.len()];
+        let input_ids = g.input_ids();
+        for inputs in calib_inputs {
+            for (&id, t) in input_ids.iter().zip(inputs) {
+                fold_max(&mut per_channel[id], channel_ranges(t));
+            }
+            let _ = run_graph(
+                g,
+                inputs,
+                |n, args| {
+                    let out = crate::ops::interp::exec_node(params.get_ref(n.id), &n.op, args);
+                    fold_max(&mut per_channel[n.id], channel_ranges(&out));
+                    out
+                },
+                |_| {},
+            );
+        }
+        // Nodes never executed (there are none today; inputs are recorded
+        // above) would keep an empty range and decode to unit scales.
+        CalibTable { model: g.name.clone(), per_channel }
+    }
+
+    /// Collect from `n` deterministic synthetic input sets (seeds
+    /// `seed..seed+n`) — the in-repo stand-in for a representative
+    /// dataset, matching how parameters and test inputs are synthesized.
+    pub fn synthetic(g: &Graph, params: &ParamStore, n: usize, seed: u64) -> CalibTable {
+        let sets: Vec<Vec<Tensor>> =
+            (0..n.max(1) as u64).map(|i| synthetic_inputs(g, seed + i)).collect();
+        Self::collect(g, params, &sets)
+    }
+
+    /// The per-tensor symmetric activation scale of one node: its widest
+    /// channel range on the i8 grid.
+    pub fn act_scale(&self, id: NodeId) -> f32 {
+        let m = self.per_channel[id].iter().fold(0.0f32, |a, v| a.max(*v));
+        scale_for(m)
+    }
+
+    /// Serialize (little-endian, self-describing header).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        out.extend_from_slice(MAGIC);
+        push_u32(&mut out, self.model.len() as u32);
+        out.extend_from_slice(self.model.as_bytes());
+        push_u32(&mut out, self.per_channel.len() as u32);
+        for ranges in &self.per_channel {
+            push_u32(&mut out, ranges.len() as u32);
+            for &v in ranges {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        out
+    }
+
+    /// Decode a serialized table.
+    pub fn decode(bytes: &[u8]) -> Result<CalibTable> {
+        let mut cur = Cursor { buf: bytes, pos: 0 };
+        let magic = cur.take(MAGIC.len())?;
+        if magic != MAGIC {
+            bail!("not a calibration table (bad magic)");
+        }
+        let mlen = cur.u32()? as usize;
+        let model = String::from_utf8(cur.take(mlen)?.to_vec())
+            .context("calibration model name is not UTF-8")?;
+        let nodes = cur.u32()? as usize;
+        let mut per_channel = Vec::with_capacity(nodes);
+        for _ in 0..nodes {
+            let c = cur.u32()? as usize;
+            let mut ranges = Vec::with_capacity(c);
+            for _ in 0..c {
+                ranges.push(f32::from_le_bytes(cur.take(4)?.try_into().unwrap()));
+            }
+            per_channel.push(ranges);
+        }
+        Ok(CalibTable { model, per_channel })
+    }
+
+    /// Write the serialized table to a file.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::write(path, self.encode())
+            .with_context(|| format!("writing calibration table {}", path.display()))
+    }
+
+    /// Load a table from a file.
+    pub fn load(path: &Path) -> Result<CalibTable> {
+        let bytes = std::fs::read(path)
+            .with_context(|| format!("reading calibration table {}", path.display()))?;
+        Self::decode(&bytes)
+    }
+
+    /// Sanity-check the table against a graph before use.
+    pub fn matches(&self, g: &Graph) -> Result<()> {
+        anyhow::ensure!(
+            self.model == g.name,
+            "calibration table is for model {}, graph is {}",
+            self.model,
+            g.name
+        );
+        anyhow::ensure!(
+            self.per_channel.len() == g.len(),
+            "calibration table covers {} nodes, graph {} has {}",
+            self.per_channel.len(),
+            g.name,
+            g.len()
+        );
+        for n in &g.nodes {
+            if n.out.shape.is_fm() && !matches!(n.op, OpKind::Input) {
+                let want = n.out.shape.c();
+                let got = self.per_channel[n.id].len();
+                anyhow::ensure!(
+                    got == want,
+                    "node {} expects {want} channel ranges, table has {got}",
+                    n.name
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+const MAGIC: &[u8] = b"XQC1";
+
+fn push_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            bail!("truncated calibration table: need {n} bytes at {}", self.pos);
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, Shape};
+
+    fn small() -> Graph {
+        let mut b = GraphBuilder::new("calib_t");
+        let x = b.input("x", Shape::nchw(1, 2, 6, 6));
+        let c = b.conv("c", x, 4, 3, 1, 1);
+        let r = b.relu("r", c);
+        b.output(r);
+        b.finish()
+    }
+
+    #[test]
+    fn collect_covers_every_node_per_channel() {
+        let g = small();
+        let p = ParamStore::for_graph(&g);
+        let t = CalibTable::synthetic(&g, &p, 3, 7);
+        assert_eq!(t.per_channel.len(), g.len());
+        assert_eq!(t.per_channel[0].len(), 2); // input channels
+        assert_eq!(t.per_channel[1].len(), 4); // conv out channels
+        assert_eq!(t.per_channel[2].len(), 4);
+        assert!(t.act_scale(1) > 0.0);
+        t.matches(&g).unwrap();
+    }
+
+    #[test]
+    fn relu_ranges_never_exceed_producer() {
+        let g = small();
+        let p = ParamStore::for_graph(&g);
+        let t = CalibTable::synthetic(&g, &p, 2, 3);
+        for (a, b) in t.per_channel[2].iter().zip(&t.per_channel[1]) {
+            assert!(a <= b, "relu range above its input");
+        }
+    }
+
+    #[test]
+    fn encode_decode_roundtrips() {
+        let g = small();
+        let p = ParamStore::for_graph(&g);
+        let t = CalibTable::synthetic(&g, &p, 2, 9);
+        let back = CalibTable::decode(&t.encode()).unwrap();
+        assert_eq!(back, t);
+    }
+
+    #[test]
+    fn decode_rejects_garbage_and_truncation() {
+        assert!(CalibTable::decode(b"nope").is_err());
+        let g = small();
+        let p = ParamStore::for_graph(&g);
+        let bytes = CalibTable::synthetic(&g, &p, 1, 1).encode();
+        assert!(CalibTable::decode(&bytes[..bytes.len() - 3]).is_err());
+    }
+
+    #[test]
+    fn mismatched_graph_is_rejected() {
+        let g = small();
+        let p = ParamStore::for_graph(&g);
+        let t = CalibTable::synthetic(&g, &p, 1, 1);
+        let other = {
+            let mut b = GraphBuilder::new("other");
+            let x = b.input("x", Shape::nchw(1, 2, 6, 6));
+            let c = b.conv("c", x, 8, 3, 1, 1);
+            b.output(c);
+            b.finish()
+        };
+        assert!(t.matches(&other).is_err());
+    }
+}

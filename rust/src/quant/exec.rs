@@ -1,0 +1,485 @@
+//! Quantized execution: the per-node INT8 executor shared by every
+//! engine, and [`QuantEngine`] — the single-host engine behind
+//! `serve --precision int8 --engine interp|par`.
+//!
+//! [`qexec_node`] is the quantized counterpart of `ops::interp::
+//! exec_node`: the single source of truth for what one operator computes
+//! under INT8. The serial engine, the worker-pool engine and the d-Xenos
+//! shard worker's replicated path all call it (or chunk the same tile
+//! kernels it calls), so quantized output is bit-identical across all of
+//! them — integer accumulation makes the chunking argument exact rather
+//! than order-dependent.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use super::calib::CalibTable;
+use super::kernels;
+use super::{quantize_slice, snap_slice, QWeights};
+use crate::graph::{ConvAttrs, Graph, Node, NodeId, OpKind};
+use crate::ops::elementwise as ew;
+use crate::ops::interp::{exec_node, run_graph, synthetic_inputs};
+use crate::ops::par_exec::chunks;
+use crate::ops::params::{NodeParams, ParamStore};
+use crate::ops::Tensor;
+use crate::opt::dos::MIN_PARALLEL_ELEMS;
+use crate::opt::quant::{plan_quant, QuantKind, QuantPlan};
+use crate::runtime::pool::{ScopedJob, WorkerPool};
+
+/// Everything an engine needs to execute one model at INT8: the precision
+/// plan, the resolved per-node activation scales, and the quantized
+/// weights. Built once per engine (or per cluster rank, from that rank's
+/// weight shard — per-channel weight scales make shard-local quantization
+/// identical to slicing the master's).
+pub struct QuantRun {
+    /// The precision assignment.
+    pub plan: QuantPlan,
+    /// Per-node activation scale, resolved through the plan's grid
+    /// indirection (pass-through nodes carry their producer's scale).
+    pub scales: Vec<f32>,
+    /// Per-node quantized weights (empty for nodes without an integer
+    /// kernel).
+    qw: Vec<QWeights>,
+}
+
+impl QuantRun {
+    /// Build a run from a calibration table and a per-node parameter
+    /// accessor (`ParamStore::get_ref` for a full model,
+    /// `ShardParams::get` for one rank's shard).
+    pub fn build<'a>(
+        g: &Graph,
+        calib: &CalibTable,
+        params: impl Fn(NodeId) -> &'a NodeParams,
+    ) -> QuantRun {
+        let plan = plan_quant(g);
+        let mut scales = Vec::with_capacity(g.len());
+        let mut qw = Vec::with_capacity(g.len());
+        for n in &g.nodes {
+            scales.push(calib.act_scale(plan.grid_of[n.id]));
+            let prm = params(n.id);
+            let w = match (&n.op, plan.kinds[n.id]) {
+                (OpKind::Conv(a), QuantKind::IntDot)
+                | (OpKind::Cbr(a), QuantKind::IntDot)
+                | (OpKind::Cbra(a, _), QuantKind::IntDot)
+                | (OpKind::Cbrm(a, _), QuantKind::IntDot) => {
+                    let row = a.in_c_per_group() * a.kh * a.kw;
+                    if prm.w.is_empty() {
+                        QWeights::default()
+                    } else {
+                        QWeights::per_row(&prm.w, prm.w.len() / row, row)
+                    }
+                }
+                (OpKind::MatMul(m), QuantKind::IntDot) if m.weighted => {
+                    if prm.w.is_empty() {
+                        QWeights::default()
+                    } else {
+                        QWeights::per_col(&prm.w, m.k, prm.w.len() / m.k)
+                    }
+                }
+                _ => QWeights::default(),
+            };
+            qw.push(w);
+        }
+        QuantRun { plan, scales, qw }
+    }
+
+    /// Quantized weights of one node.
+    pub(crate) fn qweights(&self, id: NodeId) -> &QWeights {
+        &self.qw[id]
+    }
+}
+
+/// Fused Bn+ReLU in place over a batch-1 feature map — the same
+/// per-element expression as `ew::batchnorm` followed by `ew::relu` (and
+/// as the cluster worker's `affine_relu_rect`), so every engine's CBR
+/// epilogue is element-for-element identical.
+pub(crate) fn bn_relu_inplace(t: &mut Tensor, scale: &[f32], shift: &[f32]) {
+    let s = t.shape();
+    let (n, c, h, w) = (s.n(), s.c(), s.h(), s.w());
+    let hw = h * w;
+    for b in 0..n {
+        for ch in 0..c {
+            let base = (b * c + ch) * hw;
+            for v in &mut t.data[base..base + hw] {
+                *v = ew::relu1(*v * scale[ch] + shift[ch]);
+            }
+        }
+    }
+}
+
+/// Quantized convolution (+bias) of one conv-family node: quantize the
+/// (grid-snapped) input exactly, run the integer kernel, requantize.
+fn conv_int(run: &QuantRun, prm: &NodeParams, a: &ConvAttrs, node: &Node, x: &Tensor) -> Tensor {
+    let sx = run.scales[node.inputs[0]];
+    let s = x.shape();
+    let qx = quantize_slice(&x.data, sx);
+    kernels::conv2d_q8(
+        &qx,
+        s.n(),
+        a.in_c,
+        s.h(),
+        s.w(),
+        a,
+        run.qweights(node.id),
+        &prm.bias,
+        sx,
+    )
+}
+
+/// Execute one node at INT8 on concrete inputs — the quantized
+/// counterpart of `exec_node`, shared by the serial engine, the parallel
+/// engine's fallback and the cluster worker's replicated path.
+pub(crate) fn qexec_node(
+    run: &QuantRun,
+    prm: &NodeParams,
+    node: &Node,
+    args: &[&Tensor],
+) -> Tensor {
+    let out_scale = run.scales[node.id];
+    match run.plan.kinds[node.id] {
+        QuantKind::Passthrough => exec_node(prm, &node.op, args),
+        QuantKind::Requant => {
+            let mut t = exec_node(prm, &node.op, args);
+            snap_slice(&mut t.data, out_scale);
+            t
+        }
+        QuantKind::IntDot => {
+            let mut t = match &node.op {
+                OpKind::Conv(a) => conv_int(run, prm, a, node, args[0]),
+                OpKind::Cbr(a) => {
+                    let mut c = conv_int(run, prm, a, node, args[0]);
+                    bn_relu_inplace(&mut c, &prm.scale, &prm.shift);
+                    c
+                }
+                OpKind::Cbra(a, pl) | OpKind::Cbrm(a, pl) => {
+                    let mut c = conv_int(run, prm, a, node, args[0]);
+                    bn_relu_inplace(&mut c, &prm.scale, &prm.shift);
+                    crate::ops::pool::pool(&c, pl)
+                }
+                OpKind::MatMul(m) if m.weighted => {
+                    let sx = run.scales[node.inputs[0]];
+                    let rows = args[0].shape().numel() / m.k;
+                    let qa = quantize_slice(&args[0].data, sx);
+                    let data =
+                        kernels::fc_q8(&qa, rows, m.k, m.n, run.qweights(node.id), &prm.bias, sx);
+                    Tensor::new(node.out.clone(), data)
+                }
+                OpKind::MatMul(_) => {
+                    let (sa, sb) = (run.scales[node.inputs[0]], run.scales[node.inputs[1]]);
+                    let (m2, k) = (args[0].shape().dims[0], args[0].shape().dims[1]);
+                    let n2 = args[1].shape().dims[1];
+                    let qa = quantize_slice(&args[0].data, sa);
+                    let qb = quantize_slice(&args[1].data, sb);
+                    let data = kernels::matmul_q8(&qa, m2, k, &qb, n2, sa, sb);
+                    Tensor::new(node.out.clone(), data)
+                }
+                other => unreachable!("IntDot on non-dot op {other:?}"),
+            };
+            snap_slice(&mut t.data, out_scale);
+            t
+        }
+    }
+}
+
+/// Raw output pointer crossing into the worker pool; jobs write disjoint
+/// regions only (same discipline as `ops::par_exec`).
+#[derive(Clone, Copy)]
+struct SendPtr(*mut f32);
+// SAFETY: only dereferenced on disjoint regions while the owning buffer
+// is kept alive by the blocking `WorkerPool::run` call.
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// The INT8 engine: serial when `workers == 1`, worker-pool-chunked
+/// integer kernels otherwise. Chunking never changes a single output bit
+/// (exact integer accumulation), so `serve --precision int8` answers
+/// identically for `--engine interp` and `--engine par` at any thread
+/// count.
+pub struct QuantEngine {
+    graph: Arc<Graph>,
+    params: ParamStore,
+    run: QuantRun,
+    pool: Option<WorkerPool>,
+    workers: usize,
+}
+
+impl QuantEngine {
+    /// Build an engine for `graph` using `calib` for activation scales.
+    pub fn new(graph: Arc<Graph>, calib: &CalibTable, workers: usize) -> Result<QuantEngine> {
+        calib.matches(&graph)?;
+        let params = ParamStore::for_graph(&graph);
+        let run = QuantRun::build(&graph, calib, |id| params.get_ref(id));
+        let workers = crate::ops::par_exec::clamp_workers(workers);
+        let pool = if workers > 1 { Some(WorkerPool::new(workers)) } else { None };
+        Ok(QuantEngine { graph, params, run, pool, workers })
+    }
+
+    /// The executed graph.
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    /// Effective worker count after clamping (1 = serial).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// The precision plan in effect.
+    pub fn plan(&self) -> &QuantPlan {
+        &self.run.plan
+    }
+
+    /// Run one quantized inference. Inputs are snapped onto their
+    /// calibrated grids at the graph edge (the inserted quantize node).
+    pub fn run(&self, inputs: &[Tensor]) -> Vec<Tensor> {
+        let ids = self.graph.input_ids();
+        assert_eq!(inputs.len(), ids.len(), "graph {} input arity", self.graph.name);
+        let snapped: Vec<Tensor> = inputs
+            .iter()
+            .zip(&ids)
+            .map(|(t, &id)| {
+                let mut t = t.clone();
+                snap_slice(&mut t.data, self.run.scales[id]);
+                t
+            })
+            .collect();
+        run_graph(&self.graph, &snapped, |n, args| self.exec(n, args), |_| {})
+    }
+
+    /// Convenience: run on deterministic synthetic inputs from `seed`.
+    pub fn run_synthetic(&self, seed: u64) -> Vec<Tensor> {
+        self.run(&synthetic_inputs(&self.graph, seed))
+    }
+
+    fn exec(&self, node: &Node, args: &[&Tensor]) -> Tensor {
+        let prm = self.params.get_ref(node.id);
+        if self.pool.is_some()
+            && self.run.plan.kinds[node.id] == QuantKind::IntDot
+            && node.macs() >= MIN_PARALLEL_ELEMS as u64
+        {
+            if let Some(t) = self.exec_intdot_par(node, prm, args) {
+                return t;
+            }
+        }
+        qexec_node(&self.run, prm, node, args)
+    }
+
+    /// Pool-chunked integer kernels for the dot-product family. Returns
+    /// `None` for shapes that must take the serial path.
+    fn exec_intdot_par(&self, node: &Node, prm: &NodeParams, args: &[&Tensor]) -> Option<Tensor> {
+        let out_scale = self.run.scales[node.id];
+        let mut t = match &node.op {
+            OpKind::Conv(a) => self.par_conv_int(node, prm, a, args[0])?,
+            OpKind::Cbr(a) => {
+                let mut c = self.par_conv_int(node, prm, a, args[0])?;
+                bn_relu_inplace(&mut c, &prm.scale, &prm.shift);
+                c
+            }
+            OpKind::Cbra(a, pl) | OpKind::Cbrm(a, pl) => {
+                let mut c = self.par_conv_int(node, prm, a, args[0])?;
+                bn_relu_inplace(&mut c, &prm.scale, &prm.shift);
+                crate::ops::pool::pool(&c, pl)
+            }
+            OpKind::MatMul(m) if m.weighted => {
+                let sx = self.run.scales[node.inputs[0]];
+                let rows = args[0].shape().numel() / m.k;
+                let qa = quantize_slice(&args[0].data, sx);
+                let qw = self.run.qweights(node.id);
+                let pool = self.pool.as_ref()?;
+                let mut out = vec![0.0f32; rows * m.n];
+                let ptr = SendPtr(out.as_mut_ptr());
+                let (k, n) = (m.k, m.n);
+                let sx_one = [sx];
+                let qa_ref: &[i8] = &qa;
+                let bias: &[f32] = &prm.bias;
+                let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+                for (j0, j1) in chunks(n, self.workers) {
+                    jobs.push(Box::new(move || {
+                        // SAFETY: disjoint column ranges of the same buffer.
+                        unsafe {
+                            kernels::matmul_panel_raw_q8(
+                                qa_ref, rows, k, &qw.q, n, j0, j1, &sx_one, &qw.scale, &[],
+                                bias, ptr.0,
+                            )
+                        };
+                    }));
+                }
+                pool.run(jobs);
+                Tensor::new(node.out.clone(), out)
+            }
+            OpKind::MatMul(_) => {
+                let (sa, sb) = (self.run.scales[node.inputs[0]], self.run.scales[node.inputs[1]]);
+                let (m2, k) = (args[0].shape().dims[0], args[0].shape().dims[1]);
+                let n2 = args[1].shape().dims[1];
+                let qa = quantize_slice(&args[0].data, sa);
+                let qb = quantize_slice(&args[1].data, sb);
+                let pool = self.pool.as_ref()?;
+                let mut out = vec![0.0f32; m2 * n2];
+                let ptr = SendPtr(out.as_mut_ptr());
+                let (qa_ref, qb_ref): (&[i8], &[i8]) = (&qa, &qb);
+                let (sa_one, sb_one) = ([sa], [sb]);
+                let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+                for (j0, j1) in chunks(n2, self.workers) {
+                    jobs.push(Box::new(move || {
+                        // SAFETY: disjoint column ranges of the same buffer.
+                        unsafe {
+                            kernels::matmul_panel_raw_q8(
+                                qa_ref, m2, k, qb_ref, n2, j0, j1, &sa_one, &sb_one, &[], &[],
+                                ptr.0,
+                            )
+                        };
+                    }));
+                }
+                pool.run(jobs);
+                Tensor::new(node.out.clone(), out)
+            }
+            _ => return None,
+        };
+        snap_slice(&mut t.data, out_scale);
+        Some(t)
+    }
+
+    /// Pool-chunked quantized convolution (batch 1): output channels
+    /// split across the workers, every chunk through the shared q8 tile
+    /// kernels.
+    fn par_conv_int(
+        &self,
+        node: &Node,
+        prm: &NodeParams,
+        a: &ConvAttrs,
+        x: &Tensor,
+    ) -> Option<Tensor> {
+        let s = x.shape();
+        if s.n() != 1 {
+            return None;
+        }
+        let pool = self.pool.as_ref()?;
+        let sx = self.run.scales[node.inputs[0]];
+        let qx = quantize_slice(&x.data, sx);
+        let (h, w) = (s.h(), s.w());
+        let (oh, ow) = a.out_hw(h, w);
+        let qw = self.run.qweights(node.id);
+        let mut out = Tensor::zeros(crate::graph::TensorDesc::fm(1, a.out_c, oh, ow));
+        let ptr = SendPtr(out.data.as_mut_ptr());
+        let a2 = *a;
+        let qx_ref: &[i8] = &qx;
+        let bias: &[f32] = &prm.bias;
+        let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+        for (oc0, oc1) in chunks(a.out_c, self.workers) {
+            jobs.push(Box::new(move || {
+                // SAFETY: disjoint output-channel regions of the same buffer.
+                unsafe {
+                    kernels::conv2d_region_raw_q8(
+                        qx_ref, a2.in_c, h, w, &a2, qw, bias, sx, oc0, oc1, 0, oh, 0, ow, oh,
+                        ow, ptr.0,
+                    )
+                };
+            }));
+        }
+        pool.run(jobs);
+        Some(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, Shape};
+
+    fn cnn() -> Graph {
+        let mut b = GraphBuilder::new("qexec_cnn");
+        let x = b.input("x", Shape::nchw(1, 4, 16, 16));
+        let c1 = b.conv_bn_relu("c1", x, 16, 3, 1, 1);
+        let dw = b.dw_bn_relu("dw", c1, 3, 1, 1);
+        let pw = b.conv_bn_relu("pw", dw, 32, 1, 1, 0);
+        let p = b.avgpool("p", pw, 2, 2);
+        let gp = b.global_pool("gp", p);
+        let fc = b.fc("fc", gp, 10);
+        let sm = b.softmax("sm", fc);
+        b.output(sm);
+        b.finish()
+    }
+
+    fn calib_for(g: &Graph) -> CalibTable {
+        let p = ParamStore::for_graph(g);
+        CalibTable::synthetic(g, &p, 4, 100)
+    }
+
+    #[test]
+    fn parallel_engine_is_bit_identical_to_serial() {
+        let g = Arc::new(cnn());
+        let calib = calib_for(&g);
+        let serial = QuantEngine::new(g.clone(), &calib, 1).unwrap();
+        let want = serial.run_synthetic(5);
+        for workers in [2usize, 4] {
+            let par = QuantEngine::new(g.clone(), &calib, workers).unwrap();
+            let got = par.run_synthetic(5);
+            assert_eq!(want.len(), got.len());
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.data, b.data, "workers={workers} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn quantized_output_tracks_f32_within_tolerance() {
+        let g = Arc::new(cnn());
+        let calib = calib_for(&g);
+        let q = QuantEngine::new(g.clone(), &calib, 1).unwrap();
+        let f = crate::ops::Interpreter::new(&g);
+        let inputs = synthetic_inputs(&g, 6);
+        let qo = q.run(&inputs);
+        let fo = f.run(&inputs);
+        // Softmax output: absolute tolerance on a [0, 1] distribution.
+        let diff = fo[0].max_abs_diff(&qo[0]);
+        assert!(diff < 0.15, "int8 drifted {diff} from f32");
+        let sum: f32 = qo[0].data.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-3, "snapped softmax sums to {sum}");
+    }
+
+    #[test]
+    fn outputs_lie_on_their_grids() {
+        let g = Arc::new(cnn());
+        let calib = calib_for(&g);
+        let q = QuantEngine::new(g.clone(), &calib, 1).unwrap();
+        let out = q.run_synthetic(8);
+        // The output node is Requant: every value must be k * scale.
+        let scale = q.run.scales[*g.outputs.first().unwrap()];
+        for &v in &out[0].data {
+            let k = (v / scale).round();
+            assert!((v - k * scale).abs() < 1e-6, "{v} off the {scale} grid");
+        }
+    }
+
+    #[test]
+    fn mismatched_calibration_is_rejected() {
+        let g = Arc::new(cnn());
+        let other = {
+            let mut b = GraphBuilder::new("other");
+            let x = b.input("x", Shape::nchw(1, 3, 8, 8));
+            let c = b.conv("c", x, 4, 3, 1, 1);
+            b.output(c);
+            Arc::new(b.finish())
+        };
+        let calib = calib_for(&other);
+        assert!(QuantEngine::new(g, &calib, 1).is_err());
+    }
+
+    #[test]
+    fn matmul_attention_block_quantizes() {
+        let mut b = GraphBuilder::new("qattn");
+        let q = b.input("q", Shape::mat(16, 32));
+        let k = b.input("k", Shape::mat(32, 16));
+        let s = b.matmul("s", q, k);
+        let sm = b.softmax("sm", s);
+        b.output(sm);
+        let g = Arc::new(b.finish());
+        let calib = calib_for(&g);
+        let qe = QuantEngine::new(g.clone(), &calib, 2).unwrap();
+        let fe = crate::ops::Interpreter::new(&g);
+        let inputs = synthetic_inputs(&g, 3);
+        let diff = fe.run(&inputs)[0].max_abs_diff(&qe.run(&inputs)[0]);
+        assert!(diff < 0.2, "attention int8 drifted {diff}");
+    }
+}

@@ -1,0 +1,678 @@
+//! INT8 tile kernels with i32 accumulation, mirroring the f32 kernels in
+//! `ops::conv` / `ops::matmul` tile-for-tile so the parallel executor's
+//! (oc, oy) chunking, the pointwise fast path and the d-Xenos region
+//! shards route identically at both precisions.
+//!
+//! Correctness note that makes quantized execution *easier* to
+//! distribute than f32: the per-element reduction is an exact integer sum
+//! (`i8 × i8 → i32`; worst case `127·127·k` stays far below `i32::MAX`
+//! for every shape in the zoo), so **any** tiling or chunk order yields a
+//! bit-identical accumulator, and the single `acc → f32` requantization
+//! step is per-element. Parallel and sharded runs therefore match the
+//! serial kernel without the careful shared-loop-order argument the f32
+//! path needs.
+
+use super::QWeights;
+use crate::graph::{ConvAttrs, TensorDesc};
+use crate::ops::conv::is_pointwise_fast_path;
+use crate::ops::Tensor;
+
+/// Register-tile width of the packed i8 panel (matches the f32 kernel).
+const NR: usize = 8;
+/// Register-tile height.
+const MR: usize = 4;
+
+/// Scale lookup that treats a length-1 slice as uniform.
+#[inline]
+fn sc(scales: &[f32], i: usize) -> f32 {
+    if scales.len() == 1 {
+        scales[0]
+    } else {
+        scales[i]
+    }
+}
+
+/// Generic quantized conv tile: output channels `oc0..oc1`, rows
+/// `oy0..oy1`, columns `tx0..tx1` of batch `b`, written (requantized to
+/// f32) into the full `[n, out_c, oh, ow]` buffer behind `out`.
+///
+/// `qx` is the i8 input `[n, in_c, h, w]` at per-tensor scale `sx`; `qw`
+/// the i8 weights in f32 layout with per-output-channel scales `sw`;
+/// `bias` the f32 bias (empty = none). Each output element is
+/// `acc_i32 · sx · sw[oc] + bias[oc]`.
+///
+/// # Safety
+/// `out` must point at a live `n*out_c*oh*ow` f32 buffer. Concurrent
+/// calls on the same buffer must target disjoint `(oc, oy, ox)` tiles.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn conv2d_tile_raw_q8(
+    qx: &[i8],
+    in_c: usize,
+    h: usize,
+    w: usize,
+    attrs: &ConvAttrs,
+    qw: &[i8],
+    sw: &[f32],
+    bias: &[f32],
+    sx: f32,
+    b: usize,
+    oc0: usize,
+    oc1: usize,
+    oy0: usize,
+    oy1: usize,
+    tx0: usize,
+    tx1: usize,
+    oh: usize,
+    ow: usize,
+    out: *mut f32,
+) {
+    debug_assert_eq!(in_c, attrs.in_c, "q8 conv input channels");
+    let cpg_in = attrs.in_c / attrs.groups;
+    let cpg_out = attrs.out_c / attrs.groups;
+    debug_assert!(oc1 <= attrs.out_c && oy1 <= oh && tx1 <= ow);
+    debug_assert!(qw.len() >= attrs.out_c * cpg_in * attrs.kh * attrs.kw);
+    if oc0 >= oc1 || oy0 >= oy1 || tx0 >= tx1 {
+        return;
+    }
+    let kw_elems = attrs.kh * attrs.kw;
+    let (stride, pad) = (attrs.stride, attrs.pad);
+    let mut acc = vec![0i32; ow];
+    for oc in oc0..oc1 {
+        let g = oc / cpg_out;
+        let w_base = oc * cpg_in * kw_elems;
+        let b0 = if bias.is_empty() { 0.0 } else { bias[oc] };
+        let dq = sx * sw[oc];
+        for oy in oy0..oy1 {
+            acc[tx0..tx1].fill(0);
+            let iy0 = (oy * stride) as isize - pad as isize;
+            for ic in 0..cpg_in {
+                let c_in = g * cpg_in + ic;
+                let wk = w_base + ic * kw_elems;
+                for ky in 0..attrs.kh {
+                    let iy = iy0 + ky as isize;
+                    if iy < 0 || iy >= h as isize {
+                        continue;
+                    }
+                    let in_off = ((b * in_c + c_in) * h + iy as usize) * w;
+                    let in_row = &qx[in_off..in_off + w];
+                    for kx in 0..attrs.kw {
+                        let wv = qw[wk + ky * attrs.kw + kx] as i32;
+                        if wv == 0 {
+                            continue;
+                        }
+                        let ix0 = kx as isize - pad as isize;
+                        let ox_lo = if ix0 < 0 {
+                            ((-ix0) as usize).div_ceil(stride)
+                        } else {
+                            0
+                        }
+                        .max(tx0);
+                        if (ox_lo * stride) as isize + ix0 >= w as isize {
+                            continue;
+                        }
+                        let ox_hi = (((w as isize - 1 - ix0) as usize) / stride + 1).min(tx1);
+                        if ox_lo >= ox_hi {
+                            continue;
+                        }
+                        let base = (ox_lo * stride) as isize + ix0;
+                        let mut ix = base as usize;
+                        for av in &mut acc[ox_lo..ox_hi] {
+                            *av += wv * in_row[ix] as i32;
+                            ix += stride;
+                        }
+                    }
+                }
+            }
+            let out_off = ((b * attrs.out_c + oc) * oh + oy) * ow;
+            let out_row = std::slice::from_raw_parts_mut(out.add(out_off), ow);
+            for ox in tx0..tx1 {
+                out_row[ox] = acc[ox] as f32 * dq + b0;
+            }
+        }
+    }
+}
+
+/// Packed-panel i8 matmul over columns `[j0, j1)`:
+/// `out[i, j] = acc_i32(i, j) · row_scale(i) · col_scale(j) + row_bias[i]
+/// + col_bias[j]`, with `a` `[m, k]` and `bmat` `[k, n]` row-major i8.
+/// `row_scale`/`col_scale` are per-row/column, or uniform when length 1;
+/// the bias slices may be empty.
+///
+/// # Safety
+/// `out` must point at a live `m*n` f32 buffer. Concurrent calls on the
+/// same buffer must use disjoint column ranges (or disjoint row blocks
+/// via offset `a`/`out` pointers).
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn matmul_panel_raw_q8(
+    a: &[i8],
+    m: usize,
+    k: usize,
+    bmat: &[i8],
+    n: usize,
+    j0: usize,
+    j1: usize,
+    row_scale: &[f32],
+    col_scale: &[f32],
+    row_bias: &[f32],
+    col_bias: &[f32],
+    out: *mut f32,
+) {
+    debug_assert!(a.len() >= m * k, "q8 lhs too small");
+    debug_assert!(bmat.len() >= k * n, "q8 rhs too small");
+    debug_assert!(j0 <= j1 && j1 <= n, "bad q8 column range");
+    if m == 0 || j0 == j1 {
+        return;
+    }
+    let mut packed = vec![0i8; k * NR];
+    let mut jb = j0;
+    while jb < j1 {
+        let nw = NR.min(j1 - jb);
+        for kk in 0..k {
+            packed[kk * nw..kk * nw + nw].copy_from_slice(&bmat[kk * n + jb..kk * n + jb + nw]);
+        }
+        let mut i = 0;
+        while i + MR <= m {
+            let mut acc = [[0i32; NR]; MR];
+            let a0 = &a[i * k..(i + 1) * k];
+            let a1 = &a[(i + 1) * k..(i + 2) * k];
+            let a2 = &a[(i + 2) * k..(i + 3) * k];
+            let a3 = &a[(i + 3) * k..(i + 4) * k];
+            for kk in 0..k {
+                let pb = &packed[kk * nw..kk * nw + nw];
+                let (v0, v1, v2, v3) =
+                    (a0[kk] as i32, a1[kk] as i32, a2[kk] as i32, a3[kk] as i32);
+                for (jj, &bv) in pb.iter().enumerate() {
+                    let bv = bv as i32;
+                    acc[0][jj] += v0 * bv;
+                    acc[1][jj] += v1 * bv;
+                    acc[2][jj] += v2 * bv;
+                    acc[3][jj] += v3 * bv;
+                }
+            }
+            for (r, row_acc) in acc.iter().enumerate() {
+                store_row_q8(
+                    row_acc,
+                    nw,
+                    out.add((i + r) * n + jb),
+                    jb,
+                    i + r,
+                    row_scale,
+                    col_scale,
+                    row_bias,
+                    col_bias,
+                );
+            }
+            i += MR;
+        }
+        while i < m {
+            let mut acc = [0i32; NR];
+            let ar = &a[i * k..(i + 1) * k];
+            for kk in 0..k {
+                let pb = &packed[kk * nw..kk * nw + nw];
+                let v = ar[kk] as i32;
+                for (jj, &bv) in pb.iter().enumerate() {
+                    acc[jj] += v * bv as i32;
+                }
+            }
+            store_row_q8(
+                &acc,
+                nw,
+                out.add(i * n + jb),
+                jb,
+                i,
+                row_scale,
+                col_scale,
+                row_bias,
+                col_bias,
+            );
+            i += 1;
+        }
+        jb += nw;
+    }
+}
+
+/// Requantize one accumulated row segment to f32 with scales and biases.
+///
+/// # Safety
+/// `dst` must point at `nw` writable f32 slots.
+#[allow(clippy::too_many_arguments)]
+#[inline]
+unsafe fn store_row_q8(
+    acc: &[i32; NR],
+    nw: usize,
+    dst: *mut f32,
+    jb: usize,
+    row: usize,
+    row_scale: &[f32],
+    col_scale: &[f32],
+    row_bias: &[f32],
+    col_bias: &[f32],
+) {
+    let rs = sc(row_scale, row);
+    for (jj, &v) in acc.iter().enumerate().take(nw) {
+        let mut y = v as f32 * rs * sc(col_scale, jb + jj);
+        if !row_bias.is_empty() {
+            y += row_bias[row];
+        }
+        if !col_bias.is_empty() {
+            y += col_bias[jb + jj];
+        }
+        *dst.add(jj) = y;
+    }
+}
+
+/// Quantized 1×1/s1 conv tile as a grouped packed i8 panel product:
+/// weight rows `oc0..oc1` × pixel columns `[j0, j1)`, one panel product
+/// per intersected convolution group (mirrors `ops::conv::
+/// pointwise_tile_raw`).
+///
+/// # Safety
+/// `out` must point at a live `out_c*hw` f32 buffer (batch 1); concurrent
+/// calls must use disjoint `(oc, pixel)` regions.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn pointwise_tile_raw_q8(
+    qx: &[i8],
+    hw: usize,
+    attrs: &ConvAttrs,
+    qw: &[i8],
+    sw: &[f32],
+    bias: &[f32],
+    sx: f32,
+    oc0: usize,
+    oc1: usize,
+    j0: usize,
+    j1: usize,
+    out: *mut f32,
+) {
+    let cpg_in = attrs.in_c / attrs.groups;
+    let cpg_out = attrs.out_c / attrs.groups;
+    debug_assert!(oc0 <= oc1 && oc1 <= attrs.out_c);
+    debug_assert!(j0 <= j1 && j1 <= hw);
+    let sx_one = [sx];
+    let mut r0 = oc0;
+    while r0 < oc1 {
+        let g = r0 / cpg_out;
+        let r1 = ((g + 1) * cpg_out).min(oc1);
+        let a = &qw[r0 * cpg_in..r1 * cpg_in];
+        let xg = &qx[g * cpg_in * hw..(g + 1) * cpg_in * hw];
+        let row_bias = if bias.is_empty() { &[][..] } else { &bias[r0..r1] };
+        // SAFETY: rows r0..r1 write only columns [j0, j1) of the disjoint
+        // slice [r0*hw, r1*hw).
+        matmul_panel_raw_q8(
+            a,
+            r1 - r0,
+            cpg_in,
+            xg,
+            hw,
+            j0,
+            j1,
+            &sw[r0..r1],
+            &sx_one,
+            row_bias,
+            &[],
+            out.add(r0 * hw),
+        );
+        r0 = r1;
+    }
+}
+
+/// Quantized counterpart of `ops::conv::conv2d_region_raw`: one output
+/// region of a batch-1 quantized convolution, routed exactly as the
+/// serial entry — 1×1/s1 through the packed i8 panel, everything else
+/// through the generic q8 tile.
+///
+/// # Safety
+/// As [`conv2d_tile_raw_q8`]; concurrent calls must target disjoint
+/// regions.
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn conv2d_region_raw_q8(
+    qx: &[i8],
+    in_c: usize,
+    h: usize,
+    w: usize,
+    attrs: &ConvAttrs,
+    qw: &QWeights,
+    bias: &[f32],
+    sx: f32,
+    oc0: usize,
+    oc1: usize,
+    oy0: usize,
+    oy1: usize,
+    ox0: usize,
+    ox1: usize,
+    oh: usize,
+    ow: usize,
+    out: *mut f32,
+) {
+    if oc0 >= oc1 || oy0 >= oy1 || ox0 >= ox1 {
+        return;
+    }
+    if is_pointwise_fast_path(attrs, 1) {
+        let hw = h * w;
+        if ox0 == 0 && ox1 == ow {
+            pointwise_tile_raw_q8(
+                qx, hw, attrs, &qw.q, &qw.scale, bias, sx, oc0, oc1, oy0 * ow, oy1 * ow, out,
+            );
+        } else {
+            for oy in oy0..oy1 {
+                pointwise_tile_raw_q8(
+                    qx,
+                    hw,
+                    attrs,
+                    &qw.q,
+                    &qw.scale,
+                    bias,
+                    sx,
+                    oc0,
+                    oc1,
+                    oy * ow + ox0,
+                    oy * ow + ox1,
+                    out,
+                );
+            }
+        }
+        return;
+    }
+    conv2d_tile_raw_q8(
+        qx, in_c, h, w, attrs, &qw.q, &qw.scale, bias, sx, 0, oc0, oc1, oy0, oy1, ox0, ox1, oh,
+        ow, out,
+    );
+}
+
+/// Serial quantized convolution entry: quantized input `qx` (`[n, in_c,
+/// h, w]` at scale `sx`), quantized weights, f32 bias — returns the
+/// requantized f32 output. Routes like `ops::conv::conv2d`.
+pub(crate) fn conv2d_q8(
+    qx: &[i8],
+    n: usize,
+    in_c: usize,
+    h: usize,
+    w: usize,
+    attrs: &ConvAttrs,
+    qw: &QWeights,
+    bias: &[f32],
+    sx: f32,
+) -> Tensor {
+    let (oh, ow) = attrs.out_hw(h, w);
+    let mut out = Tensor::zeros(TensorDesc::fm(n, attrs.out_c, oh, ow));
+    if is_pointwise_fast_path(attrs, n) {
+        // SAFETY: single-threaded call covering the whole [out_c, hw] range.
+        unsafe {
+            pointwise_tile_raw_q8(
+                qx,
+                oh * ow,
+                attrs,
+                &qw.q,
+                &qw.scale,
+                bias,
+                sx,
+                0,
+                attrs.out_c,
+                0,
+                oh * ow,
+                out.data.as_mut_ptr(),
+            )
+        };
+        return out;
+    }
+    for b in 0..n {
+        // SAFETY: single-threaded call covering the whole range of `b`.
+        unsafe {
+            conv2d_tile_raw_q8(
+                qx,
+                in_c,
+                h,
+                w,
+                attrs,
+                &qw.q,
+                &qw.scale,
+                bias,
+                sx,
+                b,
+                0,
+                attrs.out_c,
+                0,
+                oh,
+                0,
+                ow,
+                oh,
+                ow,
+                out.data.as_mut_ptr(),
+            )
+        };
+    }
+    out
+}
+
+/// Serial quantized FC: `[rows, k] × [k, n]` with per-column weight
+/// scales and f32 bias.
+pub(crate) fn fc_q8(
+    qa: &[i8],
+    rows: usize,
+    k: usize,
+    n: usize,
+    qw: &QWeights,
+    bias: &[f32],
+    sx: f32,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; rows * n];
+    let sx_one = [sx];
+    // SAFETY: `out` is exactly rows*n and the single call covers all columns.
+    unsafe {
+        matmul_panel_raw_q8(
+            qa,
+            rows,
+            k,
+            &qw.q,
+            n,
+            0,
+            n,
+            &sx_one,
+            &qw.scale,
+            &[],
+            bias,
+            out.as_mut_ptr(),
+        )
+    };
+    out
+}
+
+/// Serial quantized activation×activation matmul (`[m, k] × [k, n]`),
+/// uniform scales.
+pub(crate) fn matmul_q8(
+    qa: &[i8],
+    m: usize,
+    k: usize,
+    qb: &[i8],
+    n: usize,
+    sa: f32,
+    sb: f32,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n];
+    let (sa_one, sb_one) = ([sa], [sb]);
+    // SAFETY: `out` is exactly m*n and the single call covers all columns.
+    unsafe {
+        matmul_panel_raw_q8(qa, m, k, qb, n, 0, n, &sa_one, &sb_one, &[], &[], out.as_mut_ptr())
+    };
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{quantize_slice, scale_for};
+    use crate::util::rng::Rng;
+
+    /// i64 reference for the q8 conv (no tiling, no panel packing).
+    #[allow(clippy::too_many_arguments)]
+    fn conv_ref(
+        qx: &[i8],
+        in_c: usize,
+        h: usize,
+        w: usize,
+        a: &ConvAttrs,
+        qw: &[i8],
+        sw: &[f32],
+        bias: &[f32],
+        sx: f32,
+    ) -> Vec<f32> {
+        let (oh, ow) = a.out_hw(h, w);
+        let cpg_in = a.in_c / a.groups;
+        let cpg_out = a.out_c / a.groups;
+        let mut out = vec![0.0f32; a.out_c * oh * ow];
+        for oc in 0..a.out_c {
+            let g = oc / cpg_out;
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc: i64 = 0;
+                    for ic in 0..cpg_in {
+                        for ky in 0..a.kh {
+                            for kx in 0..a.kw {
+                                let iy = (oy * a.stride + ky) as isize - a.pad as isize;
+                                let ix = (ox * a.stride + kx) as isize - a.pad as isize;
+                                if iy < 0 || iy >= h as isize || ix < 0 || ix >= w as isize {
+                                    continue;
+                                }
+                                let xv = qx
+                                    [((g * cpg_in + ic) * h + iy as usize) * w + ix as usize]
+                                    as i64;
+                                let wv = qw[(oc * cpg_in + ic) * a.kh * a.kw + ky * a.kw + kx]
+                                    as i64;
+                                acc += xv * wv;
+                            }
+                        }
+                    }
+                    let b0 = if bias.is_empty() { 0.0 } else { bias[oc] };
+                    out[(oc * oh + oy) * ow + ox] = acc as i32 as f32 * (sx * sw[oc]) + b0;
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn q8_conv_matches_integer_reference() {
+        let mut rng = Rng::new(50);
+        for a in [
+            ConvAttrs::std(3, 5, 3, 1, 1),
+            ConvAttrs::std(4, 6, 3, 2, 1),
+            ConvAttrs::depthwise(4, 3, 1, 1),
+            ConvAttrs::std(4, 4, 1, 1, 0),
+        ] {
+            let (h, w) = (7usize, 9usize);
+            let x = rng.vec_uniform(a.in_c * h * w);
+            let sx = scale_for(1.0);
+            let qx = quantize_slice(&x, sx);
+            let wts = rng.vec_uniform(a.weight_count() as usize);
+            let qw = QWeights::per_row(&wts, a.out_c, a.in_c / a.groups * a.kh * a.kw);
+            let bias = rng.vec_uniform(a.out_c);
+            let got = conv2d_q8(&qx, 1, a.in_c, h, w, &a, &qw, &bias, sx);
+            let want = conv_ref(&qx, a.in_c, h, w, &a, &qw.q, &qw.scale, &bias, sx);
+            assert_eq!(got.data, want, "attrs {a:?}");
+        }
+    }
+
+    #[test]
+    fn q8_region_tiles_match_full_bitwise() {
+        let mut rng = Rng::new(51);
+        for a in [
+            ConvAttrs::std(4, 6, 3, 1, 1),
+            ConvAttrs::std(6, 6, 1, 1, 0), // pointwise panel path
+            ConvAttrs::depthwise(6, 3, 1, 1),
+        ] {
+            let (h, w) = (8usize, 8usize);
+            let x = rng.vec_uniform(a.in_c * h * w);
+            let sx = scale_for(1.0);
+            let qx = quantize_slice(&x, sx);
+            let wts = rng.vec_uniform(a.weight_count() as usize);
+            let qw = QWeights::per_row(&wts, a.out_c, a.in_c / a.groups * a.kh * a.kw);
+            let bias = rng.vec_uniform(a.out_c);
+            let full = conv2d_q8(&qx, 1, a.in_c, h, w, &a, &qw, &bias, sx);
+            let (oh, ow) = a.out_hw(h, w);
+            for splits in [
+                vec![(0, 2, 0, oh, 0, ow), (2, a.out_c, 0, oh, 0, ow)],
+                vec![(0, a.out_c, 0, 3, 0, ow), (0, a.out_c, 3, oh, 0, ow)],
+                vec![(0, a.out_c, 0, oh, 0, 5), (0, a.out_c, 0, oh, 5, ow)],
+            ] {
+                let mut got = vec![0.0f32; a.out_c * oh * ow];
+                for (c0, c1, y0, y1, x0, x1) in splits {
+                    unsafe {
+                        conv2d_region_raw_q8(
+                            &qx, a.in_c, h, w, &a, &qw, &bias, sx, c0, c1, y0, y1, x0, x1, oh,
+                            ow, got.as_mut_ptr(),
+                        )
+                    };
+                }
+                assert_eq!(got, full.data, "attrs {a:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn q8_matmul_matches_integer_reference_and_column_splits() {
+        let mut rng = Rng::new(52);
+        let (m, k, n) = (7usize, 33usize, 19usize);
+        let a: Vec<i8> = quantize_slice(&rng.vec_uniform(m * k), scale_for(1.0));
+        let b: Vec<i8> = quantize_slice(&rng.vec_uniform(k * n), scale_for(1.0));
+        let (sa, sb) = (0.013f32, 0.02f32);
+        let full = matmul_q8(&a, m, k, &b, n, sa, sb);
+        // Integer reference.
+        for i in 0..m {
+            for j in 0..n {
+                let mut acc: i64 = 0;
+                for kk in 0..k {
+                    acc += a[i * k + kk] as i64 * b[kk * n + j] as i64;
+                }
+                assert_eq!(full[i * n + j], acc as i32 as f32 * sa * sb);
+            }
+        }
+        // Column splits are bit-identical.
+        let mut split = vec![0.0f32; m * n];
+        let (sa_one, sb_one) = ([sa], [sb]);
+        for (j0, j1) in [(0usize, 5usize), (5, 12), (12, 19)] {
+            unsafe {
+                matmul_panel_raw_q8(
+                    &a, m, k, &b, n, j0, j1, &sa_one, &sb_one, &[], &[], split.as_mut_ptr(),
+                )
+            };
+        }
+        assert_eq!(full, split);
+    }
+
+    #[test]
+    fn q8_fc_applies_per_column_scales_and_bias() {
+        let mut rng = Rng::new(53);
+        let (rows, k, n) = (3usize, 10usize, 6usize);
+        let x = rng.vec_uniform(rows * k);
+        let sx = scale_for(1.0);
+        let qa = quantize_slice(&x, sx);
+        let w = rng.vec_uniform(k * n);
+        let qw = QWeights::per_col(&w, k, n);
+        let bias = rng.vec_uniform(n);
+        let got = fc_q8(&qa, rows, k, n, &qw, &bias, sx);
+        for i in 0..rows {
+            for j in 0..n {
+                let mut acc: i64 = 0;
+                for kk in 0..k {
+                    acc += qa[i * k + kk] as i64 * qw.q[kk * n + j] as i64;
+                }
+                let want = acc as i32 as f32 * sx * qw.scale[j] + bias[j];
+                assert_eq!(got[i * n + j], want, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn saturated_inputs_cannot_overflow_i32() {
+        // Adversarial case: every operand saturated at ±127 over the
+        // largest reduction in the zoo (2048·3·3) stays far below i32::MAX,
+        // and the kernel reproduces the exact integer sum.
+        let k = 2048 * 9;
+        let qa = vec![127i8; k];
+        let qb = vec![-127i8; k]; // [k, 1]
+        let got = matmul_q8(&qa, 1, k, &qb, 1, 1.0, 1.0);
+        let want = -(127i64 * 127 * k as i64);
+        assert!(want.abs() < i32::MAX as i64);
+        assert_eq!(got[0], want as i32 as f32);
+    }
+}

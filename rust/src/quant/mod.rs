@@ -1,0 +1,292 @@
+//! INT8 quantized inference — the fixed-point execution path the paper's
+//! DSP targets natively favor (multi-core C66x DSPs run 8/16-bit MACs at a
+//! multiple of their f32 rate).
+//!
+//! Design, mirroring the crate's determinism discipline:
+//!
+//! * **Static symmetric quantization.** A calibration pass ([`calib`])
+//!   runs representative f32 inputs through the serial interpreter and
+//!   records per-channel activation ranges; engines derive one symmetric
+//!   per-tensor scale per activation and per-output-channel scales per
+//!   weight tensor. No scale is ever computed from live data, so every
+//!   engine — serial, parallel, cluster shard — quantizes identically.
+//! * **Grid-snapped activations.** Every quantized node's f32 output is
+//!   *snapped* to its i8 grid (`dequant(quant(x))`): the value that flows
+//!   along an edge is exactly representable as `q * scale` with `q ∈
+//!   [-127, 127]`. Re-quantizing a snapped value recovers `q` exactly, so
+//!   the d-Xenos runtime ships raw i8 halo/all-gather payloads
+//!   (`dist::exec`) with **zero additional error** — a 4× cut in
+//!   activation traffic, the DEFER observation applied to this runtime.
+//! * **Integer accumulation.** The kernels in [`kernels`] accumulate
+//!   `i8 × i8` products in `i32`. Integer sums are exact under any
+//!   evaluation order, so every (oc, oy, ox) tiling — worker-pool chunks,
+//!   cluster shards — is bit-identical to the serial result *by
+//!   arithmetic*, an even stronger guarantee than the f32 kernels'
+//!   shared-loop-order argument.
+//!
+//! Precision is planned per node by [`crate::opt::quant`] (which
+//! quantize/dequantize boundaries exist and which fold away), executed by
+//! [`exec::QuantEngine`] on one host and by the quantized mode of
+//! [`crate::dist::exec::ShardWorker`] on a cluster.
+
+pub mod calib;
+pub mod exec;
+pub mod kernels;
+
+pub use calib::CalibTable;
+pub use exec::{QuantEngine, QuantRun};
+
+use crate::graph::{DType, TensorDesc};
+use crate::ops::Tensor;
+
+/// Numeric precision an engine executes at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Precision {
+    /// 32-bit float — the reference path.
+    F32,
+    /// Symmetric INT8 with i32 accumulation.
+    Int8,
+}
+
+impl Precision {
+    /// Parse a CLI spelling (`f32` | `int8`).
+    pub fn parse(s: &str) -> Option<Precision> {
+        match s {
+            "f32" | "fp32" => Some(Precision::F32),
+            "int8" | "i8" | "q8" => Some(Precision::Int8),
+            _ => None,
+        }
+    }
+
+    /// CLI/report label.
+    pub fn label(self) -> &'static str {
+        match self {
+            Precision::F32 => "f32",
+            Precision::Int8 => "int8",
+        }
+    }
+}
+
+/// The symmetric scale covering `[-max_abs, max_abs]` on the i8 grid.
+/// A degenerate (never-activated) range maps to scale 1 so quantization
+/// stays total.
+#[inline]
+pub fn scale_for(max_abs: f32) -> f32 {
+    if max_abs > 0.0 && max_abs.is_finite() {
+        max_abs / 127.0
+    } else {
+        1.0
+    }
+}
+
+/// Quantize one value: round-to-nearest (ties away from zero), saturated
+/// to `[-127, 127]` — the symmetric range, so negation stays exact.
+#[inline]
+pub fn quant1(v: f32, scale: f32) -> i8 {
+    (v / scale).round().clamp(-127.0, 127.0) as i8
+}
+
+/// Dequantize one value.
+#[inline]
+pub fn dequant1(q: i8, scale: f32) -> f32 {
+    q as f32 * scale
+}
+
+/// Snap one value onto the i8 grid of `scale`. Snapped values round-trip:
+/// `quant1(snap1(v, s), s)` recovers the same `q` exactly, which is what
+/// makes i8 activation payloads lossless.
+#[inline]
+pub fn snap1(v: f32, scale: f32) -> f32 {
+    dequant1(quant1(v, scale), scale)
+}
+
+/// Quantize a slice with one scale.
+pub fn quantize_slice(x: &[f32], scale: f32) -> Vec<i8> {
+    x.iter().map(|&v| quant1(v, scale)).collect()
+}
+
+/// Dequantize a slice with one scale.
+pub fn dequantize_slice(q: &[i8], scale: f32) -> Vec<f32> {
+    q.iter().map(|&v| dequant1(v, scale)).collect()
+}
+
+/// Snap a slice in place.
+pub fn snap_slice(x: &mut [f32], scale: f32) {
+    for v in x.iter_mut() {
+        *v = snap1(*v, scale);
+    }
+}
+
+/// An i8 tensor: quantized payload plus the scales that decode it.
+///
+/// `scale` holds one entry for per-tensor quantization (activations) or
+/// one entry per output channel (conv/FC weights); `desc.dtype` is
+/// [`DType::I8`], so byte accounting through the simulator and the wire
+/// sees the real 1-byte elements.
+#[derive(Debug, Clone, PartialEq)]
+pub struct QTensor {
+    pub desc: TensorDesc,
+    pub data: Vec<i8>,
+    /// Per-tensor (len 1) or per-channel decode scales.
+    pub scale: Vec<f32>,
+}
+
+impl QTensor {
+    /// Quantize a float tensor with one per-tensor scale.
+    pub fn quantize(x: &Tensor, scale: f32) -> QTensor {
+        let mut desc = x.desc.clone();
+        desc.dtype = DType::I8;
+        QTensor { desc, data: quantize_slice(&x.data, scale), scale: vec![scale] }
+    }
+
+    /// Decode back to f32 (per-tensor scale only).
+    pub fn dequantize(&self) -> Tensor {
+        assert_eq!(self.scale.len(), 1, "per-channel QTensor needs a channel-aware decoder");
+        let mut desc = self.desc.clone();
+        desc.dtype = DType::F32;
+        Tensor::new(desc, dequantize_slice(&self.data, self.scale[0]))
+    }
+
+    /// Payload bytes (1 per element).
+    pub fn bytes(&self) -> u64 {
+        self.data.len() as u64
+    }
+}
+
+/// Per-node quantized weights: i8 rows with one scale per output
+/// channel (conv) or output column (FC). Per-channel scales make weight
+/// shards self-contained — slicing the quantized rows equals quantizing
+/// the sliced rows, which is why every d-Xenos rank can quantize its own
+/// shard and still match the master bit-for-bit.
+#[derive(Debug, Clone, Default)]
+pub struct QWeights {
+    /// Quantized weights, same element order as the f32 original.
+    pub q: Vec<i8>,
+    /// One scale per output channel/column.
+    pub scale: Vec<f32>,
+}
+
+impl QWeights {
+    /// Quantize conv-style weights `[rows, row_len]` (row = one output
+    /// channel) with one symmetric scale per row.
+    pub fn per_row(w: &[f32], rows: usize, row_len: usize) -> QWeights {
+        assert_eq!(w.len(), rows * row_len, "weight shape mismatch");
+        let mut q = Vec::with_capacity(w.len());
+        let mut scale = Vec::with_capacity(rows);
+        for r in 0..rows {
+            let row = &w[r * row_len..(r + 1) * row_len];
+            let s = scale_for(row.iter().fold(0.0f32, |m, v| m.max(v.abs())));
+            scale.push(s);
+            q.extend(row.iter().map(|&v| quant1(v, s)));
+        }
+        QWeights { q, scale }
+    }
+
+    /// Quantize FC-style weights `[k, n]` (row-major) with one symmetric
+    /// scale per output *column*.
+    pub fn per_col(w: &[f32], k: usize, n: usize) -> QWeights {
+        assert_eq!(w.len(), k * n, "weight shape mismatch");
+        let mut scale = vec![0.0f32; n];
+        for kk in 0..k {
+            for j in 0..n {
+                scale[j] = scale[j].max(w[kk * n + j].abs());
+            }
+        }
+        for s in scale.iter_mut() {
+            *s = scale_for(*s);
+        }
+        let mut q = Vec::with_capacity(w.len());
+        for kk in 0..k {
+            for j in 0..n {
+                q.push(quant1(w[kk * n + j], scale[j]));
+            }
+        }
+        QWeights { q, scale }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Shape;
+
+    #[test]
+    fn quantize_roundtrip_error_is_half_step() {
+        let s = scale_for(2.0);
+        for v in [-2.0f32, -1.3, -0.01, 0.0, 0.5, 1.999, 2.0] {
+            let err = (snap1(v, s) - v).abs();
+            assert!(err <= s / 2.0 + 1e-7, "v={v} err={err}");
+        }
+    }
+
+    #[test]
+    fn quantize_saturates_symmetrically() {
+        let s = scale_for(1.0);
+        assert_eq!(quant1(10.0, s), 127);
+        assert_eq!(quant1(-10.0, s), -127);
+        assert_eq!(quant1(1.0, s), 127);
+        assert_eq!(quant1(-1.0, s), -127);
+    }
+
+    #[test]
+    fn snapped_values_requantize_exactly() {
+        let s = scale_for(3.7);
+        for q in -127i32..=127 {
+            let v = dequant1(q as i8, s);
+            assert_eq!(quant1(v, s), q as i8, "q={q}");
+        }
+    }
+
+    #[test]
+    fn degenerate_range_has_unit_scale() {
+        assert_eq!(scale_for(0.0), 1.0);
+        assert_eq!(scale_for(f32::NAN), 1.0);
+    }
+
+    #[test]
+    fn qtensor_roundtrip_shapes_and_dtype() {
+        let x = Tensor::new(
+            TensorDesc::plain(Shape::mat(2, 3)),
+            vec![0.5, -0.25, 1.0, -1.0, 0.0, 0.75],
+        );
+        let q = QTensor::quantize(&x, scale_for(1.0));
+        assert_eq!(q.desc.dtype, DType::I8);
+        assert_eq!(q.bytes(), 6);
+        let y = q.dequantize();
+        assert_eq!(y.shape(), x.shape());
+        assert!(x.max_abs_diff(&y) <= scale_for(1.0) / 2.0 + 1e-7);
+    }
+
+    #[test]
+    fn per_row_weight_scales_cover_each_row() {
+        let w = vec![1.0, -2.0, 0.5, 0.25]; // rows [1,-2], [0.5,0.25]
+        let qw = QWeights::per_row(&w, 2, 2);
+        assert_eq!(qw.scale.len(), 2);
+        assert!((qw.scale[0] - 2.0 / 127.0).abs() < 1e-9);
+        assert_eq!(qw.q[1], -127);
+        assert_eq!(qw.q[2], 127); // 0.5 at scale 0.5/127
+    }
+
+    #[test]
+    fn per_col_matches_column_slicing() {
+        // Quantizing a column slice equals slicing the quantized matrix —
+        // the property FC weight shards rely on.
+        let (k, n) = (3usize, 4usize);
+        let mut rng = crate::util::rng::Rng::new(40);
+        let w = rng.vec_uniform(k * n);
+        let full = QWeights::per_col(&w, k, n);
+        let (j0, j1) = (1usize, 3usize);
+        let mut sliced = Vec::new();
+        for kk in 0..k {
+            sliced.extend_from_slice(&w[kk * n + j0..kk * n + j1]);
+        }
+        let sub = QWeights::per_col(&sliced, k, j1 - j0);
+        assert_eq!(sub.scale, full.scale[j0..j1]);
+        for kk in 0..k {
+            assert_eq!(
+                &sub.q[kk * (j1 - j0)..(kk + 1) * (j1 - j0)],
+                &full.q[kk * n + j0..kk * n + j1]
+            );
+        }
+    }
+}

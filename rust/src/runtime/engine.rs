@@ -14,6 +14,10 @@
 //! * **Cluster** — the d-Xenos distributed backend: a
 //!   [`ClusterDriver`](crate::dist::exec::ClusterDriver) spreading each
 //!   inference across shard workers (in-process or remote TCP).
+//! * **Quant** — the INT8 engine ([`QuantEngine`]): calibrated symmetric
+//!   quantization with integer kernels, serial or worker-pool-chunked
+//!   (`serve --precision int8 --engine interp|par`; the cluster engine
+//!   goes quantized through [`ClusterDriver::local_q8`]).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -25,6 +29,7 @@ use crate::dist::exec::ClusterDriver;
 use crate::graph::{Graph, Shape};
 use crate::hw::DeviceModel;
 use crate::ops::{Interpreter, ParInterpreter, Tensor};
+use crate::quant::{CalibTable, QuantEngine};
 
 /// Which backend an engine uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -37,6 +42,8 @@ pub enum EngineKind {
     ParInterp,
     /// d-Xenos distributed cluster backend.
     Cluster,
+    /// INT8 quantized engine (serial or worker-pool).
+    Quant,
 }
 
 /// An inference engine bound to one model.
@@ -50,6 +57,7 @@ enum Inner {
     Interp { graph: Arc<Graph> },
     ParInterp { interp: ParInterpreter },
     Cluster { driver: ClusterDriver },
+    Quant { engine: QuantEngine },
 }
 
 /// One inference result with its service time.
@@ -95,6 +103,15 @@ impl Engine {
         Engine { inner: Inner::Cluster { driver }, name }
     }
 
+    /// INT8 engine over a zoo graph: `threads == 1` is the serial
+    /// quantized interpreter, `threads > 1` chunks the integer kernels
+    /// over a worker pool (bit-identical either way).
+    pub fn quant(graph: Arc<Graph>, calib: &CalibTable, threads: usize) -> Result<Engine> {
+        let engine = QuantEngine::new(graph, calib, threads)?;
+        let name = format!("quant-int8:{}x{}", engine.graph().name, engine.workers());
+        Ok(Engine { inner: Inner::Quant { engine }, name })
+    }
+
     /// Engine display name.
     pub fn name(&self) -> &str {
         &self.name
@@ -107,6 +124,7 @@ impl Engine {
             Inner::Interp { .. } => EngineKind::Interp,
             Inner::ParInterp { .. } => EngineKind::ParInterp,
             Inner::Cluster { .. } => EngineKind::Cluster,
+            Inner::Quant { .. } => EngineKind::Quant,
         }
     }
 
@@ -126,6 +144,10 @@ impl Engine {
                 g.input_ids().iter().map(|&i| g.node(i).out.shape.clone()).collect()
             }
             Inner::Cluster { driver } => driver.input_shapes(),
+            Inner::Quant { engine } => {
+                let g = engine.graph();
+                g.input_ids().iter().map(|&i| g.node(i).out.shape.clone()).collect()
+            }
         }
     }
 
@@ -137,6 +159,7 @@ impl Engine {
             Inner::Interp { graph } => Interpreter::new(graph).run(inputs),
             Inner::ParInterp { interp } => interp.run(inputs),
             Inner::Cluster { driver } => driver.infer(inputs)?,
+            Inner::Quant { engine } => engine.run(inputs),
         };
         Ok(InferOutput { outputs, exec_s: start.elapsed().as_secs_f64() })
     }
@@ -197,6 +220,43 @@ mod tests {
         let a = serial.infer(&inputs).unwrap();
         let b = cluster.infer(&inputs).unwrap();
         assert_eq!(a.outputs[0].data, b.outputs[0].data);
+    }
+
+    #[test]
+    fn quant_engine_matches_quant_cluster_bitwise() {
+        use crate::dist::{exec::ClusterDriver, PartitionScheme, SyncMode};
+        use crate::ops::params::ParamStore;
+        use crate::quant::CalibTable;
+        let g = Arc::new({
+            let mut b = GraphBuilder::new("quant_tiny");
+            let x = b.input("x", Shape::nchw(1, 4, 12, 12));
+            let c = b.conv_bn_relu("c", x, 16, 3, 1, 1);
+            let p = b.avgpool("p", c, 2, 2);
+            let f = b.fc("fc", p, 5);
+            b.output(f);
+            b.finish()
+        });
+        let params = ParamStore::for_graph(&g);
+        let calib = CalibTable::synthetic(&g, &params, 3, 7);
+        let d = presets::tms320c6678();
+        let single = Engine::quant(g.clone(), &calib, 2).unwrap();
+        assert_eq!(single.kind(), EngineKind::Quant);
+        let driver = ClusterDriver::local_q8(
+            g.clone(),
+            &d,
+            2,
+            PartitionScheme::Mix,
+            SyncMode::Ring,
+            1,
+            &calib,
+        )
+        .unwrap();
+        assert!(driver.label().ends_with("-int8"));
+        let cluster = Engine::cluster(driver);
+        let inputs = crate::ops::interp::synthetic_inputs(&g, 21);
+        let a = single.infer(&inputs).unwrap();
+        let b = cluster.infer(&inputs).unwrap();
+        assert_eq!(a.outputs[0].data, b.outputs[0].data, "quant cluster diverged");
     }
 
     #[test]

@@ -10,6 +10,7 @@ use anyhow::Result;
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::{Request, Response};
+use crate::quant::Precision;
 use crate::runtime::Engine;
 use crate::util::stats::Summary;
 
@@ -24,13 +25,23 @@ pub struct ServeConfig {
     /// engines (one thread per emulated DSP unit, `1` = serial engines) —
     /// see the `serve --model` path in `main.rs`.
     pub engine_threads: usize,
+    /// Numeric precision the engines execute at. Like `engine_threads`,
+    /// the coordinator only carries it — engine factories consult it to
+    /// build [`Engine::quant`](crate::runtime::Engine::quant) /
+    /// INT8-cluster engines (`serve --precision int8`).
+    pub precision: Precision,
     /// Batching policy.
     pub batcher: BatcherConfig,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { workers: 2, engine_threads: 1, batcher: BatcherConfig::default() }
+        ServeConfig {
+            workers: 2,
+            engine_threads: 1,
+            precision: Precision::F32,
+            batcher: BatcherConfig::default(),
+        }
     }
 }
 

@@ -94,6 +94,25 @@ mod tests {
     }
 
     #[test]
+    fn p95_and_p99_exact_on_known_distribution() {
+        // 0..=100 uniformly: rank(p) lands on an integer index, so the
+        // tail percentiles are exact sample values — the contract the
+        // ServeReport latency tails rely on.
+        let samples: Vec<f64> = (0..=100).map(|i| i as f64).collect();
+        let s = Summary::of(&samples).unwrap();
+        assert!((s.p50 - 50.0).abs() < 1e-9);
+        assert!((s.p90 - 90.0).abs() < 1e-9);
+        assert!((s.p95 - 95.0).abs() < 1e-9);
+        assert!((s.p99 - 99.0).abs() < 1e-9);
+        assert_eq!(s.max, 100.0);
+        // A heavy-tailed sample separates p95 from p99.
+        let mut heavy: Vec<f64> = vec![1.0; 97];
+        heavy.extend([10.0, 100.0, 1000.0]);
+        let h = Summary::of(&heavy).unwrap();
+        assert!(h.p99 > h.p95, "p99 {} must exceed p95 {}", h.p99, h.p95);
+    }
+
+    #[test]
     fn percentile_interpolates() {
         let sorted = [10.0, 20.0, 30.0, 40.0];
         assert!((percentile_sorted(&sorted, 0.0) - 10.0).abs() < 1e-12);

@@ -1,0 +1,443 @@
+//! Differential suite for the INT8 quantization subsystem (`quant`):
+//!
+//! * **Engine bit-exactness** — the serial [`QuantEngine`], the
+//!   worker-pool engine and the quantized d-Xenos cluster must produce
+//!   element-wise *identical* outputs for every scheme, sync mode and
+//!   cluster size (exact integer accumulation + grid-snapped i8
+//!   activation payloads make this equality exact, not approximate).
+//! * **Accuracy envelope** — quantized output must track the f32
+//!   interpreter within a generous documented tolerance on every zoo
+//!   model (`xenos quantize --model M` prints the measured error).
+//! * **Calibration determinism** — the same calibration set yields a
+//!   byte-identical serialized table.
+//! * **Saturation guard** — adversarial inputs at and beyond the ±range
+//!   boundary saturate to ±127 without overflow, identically on every
+//!   engine.
+//! * **Wire format** — INT8 runs ship halo and all-gather payloads as
+//!   `TAG_Q8` byte frames, one byte per element (asserted at the
+//!   transport level with a recording wrapper).
+
+use std::sync::{Arc, Mutex};
+
+use xenos::dist::exec::wire::TAG_Q8;
+use xenos::dist::exec::{
+    plan_cluster, ClusterDriver, LocalTransport, ShardParams, ShardWorker, Transport,
+};
+use xenos::dist::{PartitionScheme, SyncMode};
+use xenos::graph::{models, Graph, GraphBuilder, Shape};
+use xenos::hw::presets;
+use xenos::ops::interp::synthetic_inputs;
+use xenos::ops::params::ParamStore;
+use xenos::ops::{Interpreter, Tensor};
+use xenos::quant::{quantize_slice, scale_for, CalibTable, QuantEngine, QuantRun};
+use xenos::runtime::Engine;
+use xenos::serve::{self, BatcherConfig, Coordinator, ServeConfig};
+
+/// Small CNN covering dense/pointwise/depthwise convs, both pool kinds,
+/// shuffle/slice/concat/upsample, global pooling, FC and softmax — every
+/// copy-op and conv path the quantized kernels implement.
+fn small_cnn() -> Graph {
+    let mut b = GraphBuilder::new("quant_cnn");
+    let x = b.input("x", Shape::nchw(1, 4, 16, 16));
+    let c1 = b.conv_bn_relu("c1", x, 16, 3, 1, 1);
+    let dw = b.dw_bn_relu("dw", c1, 3, 1, 1);
+    let pw = b.conv_bn_relu("pw", dw, 32, 1, 1, 0);
+    let mp = b.maxpool("mp", pw, 2, 2);
+    let sh = b.channel_shuffle("sh", mp, 4);
+    let lo = b.slice_c("lo", sh, 0, 16);
+    let hi = b.slice_c("hi", sh, 16, 32);
+    let cat = b.concat("cat", &[lo, hi]);
+    let up = b.upsample("up", cat, 2);
+    let ap = b.avgpool("ap", up, 2, 2);
+    let gp = b.global_pool("gp", ap);
+    let fc = b.fc("fc", gp, 10);
+    let sm = b.softmax("sm", fc);
+    b.output(sm);
+    b.finish()
+}
+
+fn calib_for(g: &Graph) -> CalibTable {
+    let params = ParamStore::for_graph(g);
+    CalibTable::synthetic(g, &params, 4, 1000)
+}
+
+/// Quantized single-device (serial + pooled) and cluster outputs must be
+/// bit-identical across every scheme/size/sync combination.
+fn assert_quant_engines_bit_identical(g: &Graph, seed: u64) {
+    let ga = Arc::new(g.clone());
+    let calib = calib_for(g);
+    let inputs = synthetic_inputs(g, seed);
+    let want = QuantEngine::new(ga.clone(), &calib, 1).expect("quant engine").run(&inputs);
+    for workers in [2usize, 4] {
+        let engine = QuantEngine::new(ga.clone(), &calib, workers).expect("quant engine");
+        let got = engine.run(&inputs);
+        for (a, b) in want.iter().zip(&got) {
+            assert_eq!(a.data, b.data, "{}: quant x{workers} diverged", g.name);
+        }
+    }
+    let d = presets::tms320c6678();
+    for scheme in [
+        PartitionScheme::Mix,
+        PartitionScheme::OutC,
+        PartitionScheme::InH,
+        PartitionScheme::InW,
+    ] {
+        for p in [2usize, 3] {
+            for sync in [SyncMode::Ring, SyncMode::Ps] {
+                let driver =
+                    ClusterDriver::local_q8(ga.clone(), &d, p, scheme, sync, 1, &calib)
+                        .expect("quant cluster spins up");
+                let got = driver.infer(&inputs).expect("quant cluster inference");
+                assert_eq!(want.len(), got.len());
+                for (a, b) in want.iter().zip(&got) {
+                    assert_eq!(
+                        a.data, b.data,
+                        "{}: {scheme:?} p={p} {sync:?} diverged from single-device quant",
+                        g.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn quant_engines_bit_identical_on_cnn() {
+    assert_quant_engines_bit_identical(&small_cnn(), 60);
+}
+
+#[test]
+fn quant_engines_bit_identical_on_fused_graph() {
+    // The fused CBR family takes the dedicated IntDot epilogues.
+    let (fused, n) = xenos::opt::fusion::fuse_cbr(&small_cnn());
+    assert!(n > 0, "fusion must produce CBR nodes");
+    assert_quant_engines_bit_identical(&fused, 61);
+}
+
+#[test]
+fn quant_engines_bit_identical_on_fully_optimized_graph() {
+    // The full Xenos pipeline (fusion + linking) emits CBRA/CBRM linked
+    // operators — the remaining IntDot epilogue (conv → bn/relu → pool).
+    let g = small_cnn();
+    let d = presets::tms320c6678();
+    let o = xenos::opt::optimize(
+        &g,
+        &d,
+        xenos::opt::OptimizeOptions { level: xenos::opt::OptLevel::Full, search: false },
+    );
+    assert_quant_engines_bit_identical(&o.graph, 67);
+}
+
+#[test]
+fn quant_tracks_f32_within_documented_envelope() {
+    // Loose envelope: |int8 - f32| <= 0.25 + 0.25 * ||f32||_inf per
+    // model. The measured per-model errors are recorded in EXPERIMENTS.md
+    // (regenerate with `xenos quantize --model M`).
+    for name in models::PAPER_BENCHMARKS {
+        let g = models::by_name(name).expect("zoo model");
+        let calib = calib_for(&g);
+        let ga = Arc::new(g.clone());
+        let q = QuantEngine::new(ga, &calib, 2).expect("quant engine");
+        let inputs = synthetic_inputs(&g, 62);
+        let fo = Interpreter::new(&g).run(&inputs);
+        let qo = q.run(&inputs);
+        assert_eq!(fo.len(), qo.len(), "{name}: output arity");
+        for (a, b) in fo.iter().zip(&qo) {
+            assert!(b.data.iter().all(|v| v.is_finite()), "{name}: non-finite int8 output");
+            let fmax = a.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));
+            let bound = 0.25 + 0.25 * fmax;
+            let diff = a.max_abs_diff(b);
+            assert!(diff <= bound, "{name}: int8 drifted {diff} (bound {bound})");
+        }
+    }
+}
+
+#[test]
+fn calibration_is_deterministic() {
+    // Same calibration set -> byte-identical serialized scales.
+    let g = small_cnn();
+    let params = ParamStore::for_graph(&g);
+    let a = CalibTable::synthetic(&g, &params, 3, 7).encode();
+    let b = CalibTable::synthetic(&g, &params, 3, 7).encode();
+    assert_eq!(a, b, "calibration must be reproducible byte-for-byte");
+    // A different calibration set must (generically) differ.
+    let c = CalibTable::synthetic(&g, &params, 3, 8).encode();
+    assert_ne!(a, c, "different calibration inputs should move the ranges");
+    // And the file round-trip preserves the bytes.
+    let table = CalibTable::decode(&a).unwrap();
+    assert_eq!(table.encode(), a);
+}
+
+#[test]
+fn saturation_guard_on_adversarial_inputs() {
+    // Inputs at exactly the calibrated boundary hit q = ±127; inputs far
+    // beyond it must saturate (not wrap) and every engine must agree.
+    let s = scale_for(1.0);
+    assert_eq!(quantize_slice(&[1.0, -1.0, 2.0, -2.0, 1e30, -1e30], s), vec![
+        127, -127, 127, -127, 127, -127
+    ]);
+
+    let mut b = GraphBuilder::new("sat_cnn");
+    let x = b.input("x", Shape::nchw(1, 4, 8, 8));
+    let c = b.conv_bn_relu("c", x, 8, 3, 1, 1);
+    let gp = b.global_pool("gp", c);
+    let f = b.fc("fc", gp, 4);
+    b.output(f);
+    let g = Arc::new(b.finish());
+    let calib = calib_for(&g);
+
+    // Adversarial input: every value at a ±range boundary or far outside.
+    let shape = Shape::nchw(1, 4, 8, 8);
+    let n = shape.numel();
+    let data: Vec<f32> = (0..n)
+        .map(|i| match i % 4 {
+            0 => 1.0,
+            1 => -1.0,
+            2 => 1e6,
+            _ => -1e6,
+        })
+        .collect();
+    let adversarial = vec![Tensor::new(xenos::graph::TensorDesc::plain(shape), data)];
+    let serial = QuantEngine::new(g.clone(), &calib, 1).unwrap().run(&adversarial);
+    assert!(
+        serial[0].data.iter().all(|v| v.is_finite()),
+        "saturated inputs must not overflow the integer kernels"
+    );
+    let pooled = QuantEngine::new(g.clone(), &calib, 4).unwrap().run(&adversarial);
+    assert_eq!(serial[0].data, pooled[0].data, "saturation must chunk identically");
+    let d = presets::tms320c6678();
+    let driver =
+        ClusterDriver::local_q8(g, &d, 2, PartitionScheme::Mix, SyncMode::Ring, 1, &calib)
+            .unwrap();
+    let cluster = driver.infer(&adversarial).unwrap();
+    assert_eq!(serial[0].data, cluster[0].data, "saturation must shard identically");
+}
+
+/// A transport wrapper that records every peer-link send (tag, payload
+/// length in elements/bytes, and whether it was a byte frame).
+struct Recording {
+    inner: LocalTransport,
+    log: Arc<Mutex<Vec<(u64, usize, bool)>>>,
+}
+
+impl Transport for Recording {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn world(&self) -> usize {
+        self.inner.world()
+    }
+
+    fn send(&self, to: usize, tag: u64, data: &[f32]) {
+        self.log.lock().unwrap().push((tag, data.len(), false));
+        self.inner.send(to, tag, data);
+    }
+
+    fn recv(&self, from: usize, tag: u64) -> Vec<f32> {
+        self.inner.recv(from, tag)
+    }
+
+    fn send_bytes(&self, to: usize, tag: u64, data: &[u8]) {
+        self.log.lock().unwrap().push((tag, data.len(), true));
+        self.inner.send_bytes(to, tag, data);
+    }
+
+    fn recv_bytes(&self, from: usize, tag: u64) -> Vec<u8> {
+        self.inner.recv_bytes(from, tag)
+    }
+}
+
+/// Two ranks, InH scheme over a conv→relu→conv chain: the second conv
+/// pulls halo rows, the replicated head forces a spatial all-gather. In
+/// INT8 mode every peer-link payload must be a `TAG_Q8` byte frame — one
+/// byte per element — and the run must still match the single-device
+/// quantized engine bit-for-bit.
+#[test]
+fn int8_halo_and_gather_frames_carry_i8_payloads() {
+    let mut b = GraphBuilder::new("halo_q8");
+    let x = b.input("x", Shape::nchw(1, 3, 12, 12));
+    let c1 = b.conv("c1", x, 8, 3, 1, 1);
+    let r = b.relu("r", c1);
+    let c2 = b.conv("c2", r, 8, 3, 1, 1);
+    let gp = b.global_pool("gp", c2);
+    let f = b.fc("fc", gp, 4);
+    b.output(f);
+    let g = Arc::new(b.finish());
+
+    let d = presets::tms320c6678();
+    let p = 2usize;
+    let plan = plan_cluster(&g, &d, p, PartitionScheme::InH, SyncMode::Ring);
+    let master = ParamStore::for_graph(&g);
+    let calib = calib_for(&g);
+    let inputs = synthetic_inputs(&g, 63);
+    let want = QuantEngine::new(g.clone(), &calib, 1).unwrap().run(&inputs);
+
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let mut workers = Vec::new();
+    for (rank, t) in LocalTransport::mesh(p).into_iter().enumerate() {
+        let shard = ShardParams::extract(&g, &plan, &master, rank);
+        let quant = Arc::new(QuantRun::build(&g, &calib, |id| shard.get(id)));
+        let transport = Recording { inner: t, log: log.clone() };
+        workers.push(ShardWorker::with_quant(
+            g.clone(),
+            plan.clone(),
+            shard,
+            Box::new(transport),
+            1,
+            Some(quant),
+        ));
+    }
+    let outs: Vec<Vec<Tensor>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = workers
+            .into_iter()
+            .map(|w| {
+                let inputs = inputs.clone();
+                scope.spawn(move || w.run(&inputs))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("rank")).collect()
+    });
+    for (rank, got) in outs.iter().enumerate() {
+        assert_eq!(got[0].data, want[0].data, "rank {rank} diverged from quant engine");
+    }
+
+    let log = log.lock().unwrap();
+    assert!(!log.is_empty(), "the run must exchange activations");
+    for &(tag, len, is_bytes) in log.iter() {
+        assert!(is_bytes, "int8 run sent an f32 frame under tag {tag:#x}");
+        assert!(tag & TAG_Q8 != 0, "byte frame without the TAG_Q8 kind: {tag:#x}");
+        assert!(len > 0, "empty activation frame under tag {tag:#x}");
+    }
+    // Halo frames (c2 pulling boundary rows of r's slab): one byte per
+    // element — a 12-wide, 8-channel row is 96 bytes, not 384.
+    const TAG_HALO: u64 = 3 << 60;
+    let halo: Vec<_> =
+        log.iter().filter(|(tag, _, _)| tag & (3 << 60) == TAG_HALO).collect();
+    assert!(!halo.is_empty(), "InH conv chain must exchange halos");
+    for (_, len, _) in &halo {
+        assert_eq!(*len % (8 * 12) as usize, 0, "halo frame is whole i8 rows");
+    }
+}
+
+/// The f32 control: the same cluster without quantization ships f32
+/// frames only (no TAG_Q8).
+#[test]
+fn f32_runs_do_not_use_q8_frames() {
+    let mut b = GraphBuilder::new("halo_f32");
+    let x = b.input("x", Shape::nchw(1, 3, 12, 12));
+    let c1 = b.conv("c1", x, 8, 3, 1, 1);
+    let r = b.relu("r", c1);
+    let c2 = b.conv("c2", r, 8, 3, 1, 1);
+    let gp = b.global_pool("gp", c2);
+    b.output(gp);
+    let g = Arc::new(b.finish());
+    let d = presets::tms320c6678();
+    let p = 2usize;
+    let plan = plan_cluster(&g, &d, p, PartitionScheme::InH, SyncMode::Ring);
+    let master = ParamStore::for_graph(&g);
+    let inputs = synthetic_inputs(&g, 64);
+    let log = Arc::new(Mutex::new(Vec::new()));
+    let mut workers = Vec::new();
+    for (rank, t) in LocalTransport::mesh(p).into_iter().enumerate() {
+        let shard = ShardParams::extract(&g, &plan, &master, rank);
+        let transport = Recording { inner: t, log: log.clone() };
+        workers.push(ShardWorker::new(g.clone(), plan.clone(), shard, Box::new(transport), 1));
+    }
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = workers
+            .into_iter()
+            .map(|w| {
+                let inputs = inputs.clone();
+                scope.spawn(move || w.run(&inputs))
+            })
+            .collect();
+        for h in handles {
+            h.join().expect("rank");
+        }
+    });
+    let log = log.lock().unwrap();
+    assert!(!log.is_empty());
+    for &(tag, _, is_bytes) in log.iter() {
+        assert!(!is_bytes && tag & TAG_Q8 == 0, "f32 run leaked a q8 frame: {tag:#x}");
+    }
+}
+
+/// `serve --precision int8` end to end: interp, par and cluster engines
+/// behind the coordinator answer every request with identical outputs.
+#[test]
+fn serve_precision_int8_matrix_agrees_across_engines() {
+    let g = Arc::new(small_cnn());
+    let d = presets::tms320c6678();
+    let calib = Arc::new(calib_for(&g));
+    let shapes: Vec<Shape> =
+        g.input_ids().iter().map(|&i| g.node(i).out.shape.clone()).collect();
+    let n = 10usize;
+    let mut reference: Option<Vec<Vec<f32>>> = None;
+    for engine_kind in ["interp", "par", "cluster"] {
+        let cfg = ServeConfig {
+            workers: 2,
+            engine_threads: 2,
+            precision: xenos::quant::Precision::Int8,
+            batcher: BatcherConfig {
+                max_batch: 4,
+                max_wait: std::time::Duration::from_micros(200),
+            },
+        };
+        let g2 = g.clone();
+        let d2 = d.clone();
+        let calib2 = calib.clone();
+        let report = Coordinator::new(cfg)
+            .run(
+                move |_| match engine_kind {
+                    "interp" => Engine::quant(g2.clone(), &calib2, 1),
+                    "par" => Engine::quant(g2.clone(), &calib2, 2),
+                    _ => {
+                        let driver = ClusterDriver::local_q8(
+                            g2.clone(),
+                            &d2,
+                            2,
+                            PartitionScheme::Mix,
+                            SyncMode::Ring,
+                            1,
+                            &calib2,
+                        )?;
+                        Ok(Engine::cluster(driver))
+                    }
+                },
+                serve::coordinator::synthetic_requests(shapes.clone(), n, 0.0, 65),
+            )
+            .expect("int8 serve");
+        assert_eq!(report.served, n, "engine={engine_kind}");
+        let outs: Vec<Vec<f32>> =
+            report.responses.iter().map(|r| r.outputs[0].data.clone()).collect();
+        match &reference {
+            None => reference = Some(outs),
+            Some(want) => assert_eq!(want, &outs, "engine={engine_kind} diverged"),
+        }
+    }
+}
+
+/// Zoo acceptance matrix (heavier; run with --ignored in the quant-diff
+/// CI job locally): quantized cluster bit-exact vs quantized single
+/// device on real models.
+#[test]
+#[ignore]
+fn zoo_quant_cluster_acceptance() {
+    let d = presets::tms320c6678();
+    for name in ["mobilenet", "resnet18", "shufflenet"] {
+        let g = Arc::new(models::by_name(name).expect("zoo model"));
+        let calib = calib_for(&g);
+        let inputs = synthetic_inputs(&g, 66);
+        let want = QuantEngine::new(g.clone(), &calib, 1).unwrap().run(&inputs);
+        for scheme in [PartitionScheme::Mix, PartitionScheme::OutC] {
+            let driver =
+                ClusterDriver::local_q8(g.clone(), &d, 4, scheme, SyncMode::Ring, 1, &calib)
+                    .unwrap();
+            let got = driver.infer(&inputs).unwrap();
+            for (a, b) in want.iter().zip(&got) {
+                assert_eq!(a.data, b.data, "{name}: {scheme:?} diverged");
+            }
+        }
+    }
+}

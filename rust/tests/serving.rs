@@ -40,6 +40,7 @@ fn coordinator_engine_matrix_agrees_across_workers_and_engines() {
                     max_batch: 4,
                     max_wait: std::time::Duration::from_micros(200),
                 },
+                ..Default::default()
             };
             let g2 = g.clone();
             let d2 = d.clone();
