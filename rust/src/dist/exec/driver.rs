@@ -267,9 +267,16 @@ impl LocalCluster {
             let (job_tx, job_rx) = channel::<Vec<Tensor>>();
             let shard = ShardParams::extract(graph, plan, master, rank);
             // The rank quantizes its own shard; per-channel weight scales
-            // make this identical to slicing the master's quantization.
-            let quant =
-                calib.map(|c| Arc::new(QuantRun::build(graph, c, |id| shard.get(id))));
+            // (and the row offset anchoring the per-channel grids) make
+            // this identical to slicing the master's quantization.
+            let quant = calib.map(|c| {
+                Arc::new(QuantRun::build_with_offsets(
+                    graph,
+                    c,
+                    |id| shard.get(id),
+                    |id| super::shard::quant_row_offset(graph, plan, rank, id),
+                ))
+            });
             let worker = ShardWorker::with_quant(
                 graph.clone(),
                 plan.clone(),
@@ -434,7 +441,12 @@ fn serve_session(listener: &TcpListener, ctrl: &mut TcpStream, spec: &JobSpec) -
         anyhow::ensure!(tag == wire::CTRL_CALIB, "expected calib frame, got {tag:#x}");
         let calib = CalibTable::decode(&payload)?;
         calib.matches(&graph)?;
-        Some(Arc::new(QuantRun::build(&graph, &calib, |id| params.get(id))))
+        Some(Arc::new(QuantRun::build_with_offsets(
+            &graph,
+            &calib,
+            |id| params.get(id),
+            |id| super::shard::quant_row_offset(&graph, &plan, spec.rank, id),
+        )))
     } else {
         None
     };

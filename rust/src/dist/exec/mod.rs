@@ -25,7 +25,7 @@ pub mod worker;
 
 pub use driver::{serve_listener, ClusterDriver};
 pub use plan::{plan_cluster, ClusterPlan, LayerScheme};
-pub use shard::ShardParams;
-pub use transport::{LocalTransport, TcpTransport, Transport};
+pub use shard::{quant_row_offset, ShardParams};
+pub use transport::{LocalTransport, TcpTransport, Transport, WireScalar};
 pub use wire::JobSpec;
 pub use worker::ShardWorker;

@@ -32,6 +32,23 @@ pub(crate) fn conv_channel_share(a: &ConvAttrs, p: usize, r: usize) -> (usize, u
     }
 }
 
+/// Global output channel of a rank's local weight row 0 for one node —
+/// the row offset [`QuantRun::build_with_offsets`](crate::quant::QuantRun)
+/// needs to anchor per-channel activation grids and the input-grid weight
+/// fold on OutC-sharded conv nodes (0 for replicated/spatial nodes and
+/// for FC columns, whose fold is row-uniform).
+pub fn quant_row_offset(g: &Graph, plan: &ClusterPlan, rank: usize, id: NodeId) -> usize {
+    if plan.schemes[id] != LayerScheme::OutC {
+        return 0;
+    }
+    match &g.node(id).op {
+        OpKind::Conv(a) | OpKind::Cbr(a) | OpKind::Cbra(a, _) | OpKind::Cbrm(a, _) => {
+            conv_channel_share(a, plan.world, rank).0
+        }
+        _ => 0,
+    }
+}
+
 impl ShardParams {
     /// Extract rank `rank`'s shard of `master` under `plan`.
     pub fn extract(g: &Graph, plan: &ClusterPlan, master: &ParamStore, rank: usize) -> ShardParams {

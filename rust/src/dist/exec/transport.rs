@@ -55,6 +55,38 @@ pub trait Transport: Send {
     fn recv_bytes(&self, from: usize, tag: u64) -> Vec<u8>;
 }
 
+/// One payload scalar flavor the collectives can move: f32 frames or raw
+/// i8 code frames (under [`wire::TAG_Q8`]-flagged tags). This is what
+/// deduplicates the former f32/byte twin implementations of the ring/PS
+/// all-gathers behind one payload-generic implementation — the hop
+/// schedules live once, the scalar flavor routes here.
+pub trait WireScalar: Sized + Send {
+    /// Send one block to `to` under `tag`.
+    fn send_block(t: &dyn Transport, to: usize, tag: u64, data: &[Self]);
+    /// Receive one block from `from` under `tag`.
+    fn recv_block(t: &dyn Transport, from: usize, tag: u64) -> Vec<Self>;
+}
+
+impl WireScalar for f32 {
+    fn send_block(t: &dyn Transport, to: usize, tag: u64, data: &[f32]) {
+        t.send(to, tag, data);
+    }
+
+    fn recv_block(t: &dyn Transport, from: usize, tag: u64) -> Vec<f32> {
+        t.recv(from, tag)
+    }
+}
+
+impl WireScalar for i8 {
+    fn send_block(t: &dyn Transport, to: usize, tag: u64, data: &[i8]) {
+        t.send_bytes(to, tag, wire::i8s_as_bytes(data));
+    }
+
+    fn recv_block(t: &dyn Transport, from: usize, tag: u64) -> Vec<i8> {
+        wire::bytes_into_i8s(t.recv_bytes(from, tag))
+    }
+}
+
 /// One queued message: f32 buffer or raw (quantized) bytes.
 pub(crate) enum Payload {
     F32(Vec<f32>),
@@ -394,6 +426,75 @@ mod tests {
         assert_eq!(t0.recv_bytes(1, wire::TAG_Q8 | 21), vec![0u8, 127, 129, 255]);
         t0.send_bytes(1, wire::TAG_Q8 | 22, &[42u8]);
         assert_eq!(t1.join().unwrap(), vec![42u8]);
+    }
+
+    #[test]
+    fn oversized_frame_is_rejected_not_buffered() {
+        // A garbage length header above MAX_FRAME_BYTES must error out of
+        // read_frame before any allocation — not hang or OOM a reader.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            use std::io::Write;
+            let mut frame = Vec::new();
+            frame.extend_from_slice(&42u64.to_le_bytes());
+            frame.extend_from_slice(&(u32::MAX).to_le_bytes()); // 4 GiB claim
+            s.write_all(&frame).unwrap();
+            // Keep the socket open so a hang (instead of an error) would
+            // actually hang the reader.
+            std::thread::sleep(Duration::from_millis(200));
+        });
+        let (mut sock, _) = listener.accept().unwrap();
+        let err = wire::read_frame(&mut sock).expect_err("oversized frame must error");
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        writer.join().unwrap();
+    }
+
+    #[test]
+    fn truncated_length_prefix_errors_out() {
+        // A peer dying mid-header must surface as an error from the frame
+        // reader (EOF), never as a blocked reader thread.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            use std::io::Write;
+            s.write_all(&[1u8, 2, 3]).unwrap(); // 3 of the 12 header bytes
+            // drop: closes the socket mid-prefix
+        });
+        let (mut sock, _) = listener.accept().unwrap();
+        assert!(wire::read_frame(&mut sock).is_err(), "truncated prefix must error");
+        writer.join().unwrap();
+    }
+
+    #[test]
+    fn unknown_hello_tag_is_a_protocol_error() {
+        // accept_peers must reject a first frame that is not a PEER_HELLO
+        // instead of treating arbitrary tags as peers.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            wire::write_frame(&mut s, 0xDEAD_BEEF, &[0, 0, 0, 1]).unwrap();
+            std::thread::sleep(Duration::from_millis(200));
+        });
+        let err = accept_peers(&listener, 0, 2).expect_err("unknown tag must error");
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        writer.join().unwrap();
+    }
+
+    #[test]
+    fn wire_scalar_moves_i8_codes_and_f32_uniformly() {
+        // The payload-generic face the deduplicated collectives use.
+        let mesh = LocalTransport::mesh(2);
+        <i8 as WireScalar>::send_block(&mesh[0], 1, wire::TAG_Q8 | 9, &[-128i8, -1, 0, 127]);
+        assert_eq!(
+            <i8 as WireScalar>::recv_block(&mesh[1], 0, wire::TAG_Q8 | 9),
+            vec![-128i8, -1, 0, 127]
+        );
+        <f32 as WireScalar>::send_block(&mesh[1], 0, 4, &[1.5, -2.0]);
+        assert_eq!(<f32 as WireScalar>::recv_block(&mesh[0], 1, 4), vec![1.5, -2.0]);
     }
 
     #[test]

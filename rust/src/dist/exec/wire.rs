@@ -74,6 +74,22 @@ pub(crate) fn read_frame(r: &mut impl Read) -> std::io::Result<(u64, Vec<u8>)> {
     Ok((tag, payload))
 }
 
+/// View i8 activation codes as raw wire bytes (identical layout,
+/// zero-copy) — the send half of the [`TAG_Q8`] frame format.
+pub(crate) fn i8s_as_bytes(v: &[i8]) -> &[u8] {
+    // SAFETY: i8 and u8 have identical size and alignment.
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len()) }
+}
+
+/// Reinterpret received wire bytes as i8 activation codes, reusing the
+/// allocation (zero-copy).
+pub(crate) fn bytes_into_i8s(v: Vec<u8>) -> Vec<i8> {
+    let mut v = std::mem::ManuallyDrop::new(v);
+    // SAFETY: identical size/alignment; ownership of the allocation is
+    // transferred exactly once.
+    unsafe { Vec::from_raw_parts(v.as_mut_ptr() as *mut i8, v.len(), v.capacity()) }
+}
+
 /// f32 slice → little-endian bytes.
 pub(crate) fn f32s_to_bytes(data: &[f32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(data.len() * 4);

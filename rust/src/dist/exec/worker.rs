@@ -23,30 +23,34 @@
 //! models, schemes and cluster sizes.
 //!
 //! **INT8 mode** (`with_quant`): the worker executes the precision plan of
-//! [`crate::opt::quant`] with the integer kernels in `quant::kernels`,
-//! and — because every quantized activation is snapped onto its i8 grid —
-//! ships halo and all-gather payloads as **raw i8 bytes**
+//! [`crate::opt::quant`] with an **i8-resident** dataflow — every value is
+//! a [`QTensor`] of codes. Integer layers consume codes and emit codes
+//! through the fused fixed-point requantize epilogue (chunked across the
+//! local worker pool like the f32 kernels); f32 is materialized only for
+//! f32-computed operators, and then only over the slab + halo rows the
+//! rank actually reads. Halo and all-gather payloads are the raw codes
 //! ([`wire::TAG_Q8`] frames, 1 byte per element, a 4× activation-traffic
-//! cut) with zero additional error: quantize(snap(x)) recovers the exact
-//! i8 code, and integer accumulation makes every shard bit-identical to
-//! the single-device [`QuantEngine`](crate::quant::QuantEngine).
+//! cut) — there is no quantize step at the wire at all, and no i8→f32→i8
+//! round-trip between adjacent integer layers. Integer accumulation plus
+//! the per-element epilogue make every shard bit-identical to the
+//! single-device [`QuantEngine`](crate::quant::QuantEngine).
 
 use std::sync::Arc;
 
 use super::plan::{ClusterPlan, LayerScheme};
 use super::shard::{conv_channel_share, ShardParams};
-use super::transport::Transport;
+use super::transport::{Transport, WireScalar};
 use super::wire;
 use crate::dist::{ps, ring, SyncMode};
-use crate::graph::{ConvAttrs, Graph, Node, NodeId, OpKind, PoolAttrs, TensorDesc};
+use crate::graph::{ConvAttrs, DType, Graph, Node, NodeId, OpKind, PoolAttrs, Shape, TensorDesc};
 use crate::ops::interp::exec_node;
 use crate::ops::params::NodeParams;
 use crate::ops::{conv, elementwise as ew, matmul, pool as pooling, shape_ops, Tensor};
 use crate::opt::even_share;
-use crate::opt::quant::QuantKind;
 use crate::quant::exec::{qexec_node, QuantRun};
-use crate::quant::{dequant1, kernels as qkernels, quant1, quantize_slice, snap_slice};
-use crate::runtime::pool::{ScopedJob, WorkerPool};
+use crate::quant::kernels::{self as qkernels, Epilogue, FixedQ8};
+use crate::quant::{dequant1, grid_scale, quant1, QTensor};
+use crate::runtime::pool::{ScopedJob, SendPtr, WorkerPool};
 
 /// Spatial shard axis.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -55,18 +59,29 @@ enum Axis {
     Cols,
 }
 
-/// One value's distribution state on this rank. `Sharded` buffers are
+/// One value's distribution state on this rank. Sharded buffers are
 /// full-size; the rank's own slab (`even_share` of the axis extent) is
-/// authoritative and halo regions are filled on demand.
+/// authoritative and halo regions are filled on demand. INT8 runs hold
+/// every value as i8 codes (`QFull`/`QSharded`).
 enum ShardVal {
     Full(Tensor),
     Sharded(Tensor, Axis),
+    QFull(QTensor),
+    QSharded(QTensor, Axis),
 }
 
 impl ShardVal {
-    fn tensor(&self) -> &Tensor {
+    fn f32(&self) -> &Tensor {
         match self {
             ShardVal::Full(t) | ShardVal::Sharded(t, _) => t,
+            _ => unreachable!("f32 value expected on an i8-resident path"),
+        }
+    }
+
+    fn q(&self) -> &QTensor {
+        match self {
+            ShardVal::QFull(q) | ShardVal::QSharded(q, _) => q,
+            _ => unreachable!("i8 value expected on an f32 path"),
         }
     }
 }
@@ -79,15 +94,6 @@ struct Rect {
     x0: usize,
     x1: usize,
 }
-
-/// Raw output pointer crossing into the local worker pool; jobs write
-/// disjoint regions only (same discipline as `ops::par_exec`).
-#[derive(Clone, Copy)]
-struct SendPtr(*mut f32);
-// SAFETY: only dereferenced on disjoint regions while the owning buffer is
-// kept alive by the blocking `WorkerPool::run` call.
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
 
 /// Tag bases; each collective instance consumes a sub-range, spaced so no
 /// two instances overlap (node ids and spatial extents are far below 2^16).
@@ -108,10 +114,14 @@ fn halo_tag(value: NodeId, consumer: NodeId, lo: usize) -> u64 {
     TAG_HALO | ((value as u64) << 32) | ((consumer as u64) << 16) | lo as u64
 }
 
+/// NCHW (c, h, w) dims of a batch-1 feature-map shape.
+fn fm_of(s: &Shape) -> (usize, usize, usize) {
+    (s.c(), s.h(), s.w())
+}
+
 /// NCHW dims of a batch-1 feature map.
 fn fm_dims(t: &Tensor) -> (usize, usize, usize) {
-    let s = t.shape();
-    (s.c(), s.h(), s.w())
+    fm_of(t.shape())
 }
 
 /// The worker.
@@ -139,8 +149,10 @@ impl ShardWorker {
     }
 
     /// As [`ShardWorker::new`], optionally in INT8 mode: `quant` carries
-    /// the precision plan, activation scales, and this rank's quantized
-    /// weight shard.
+    /// the precision plan, activation grids, and this rank's quantized
+    /// weight shard. Quantized shard kernels chunk across the same local
+    /// pool as the f32 ones (integer accumulation makes any chunking
+    /// bit-exact).
     pub fn with_quant(
         graph: Arc<Graph>,
         plan: ClusterPlan,
@@ -152,13 +164,7 @@ impl ShardWorker {
         assert_eq!(plan.schemes.len(), graph.len(), "plan does not match graph");
         assert_eq!(plan.world, transport.world(), "plan does not match transport world");
         let threads = crate::ops::par_exec::clamp_workers(threads);
-        // The quantized shard kernels run serial per rank for now (ROADMAP
-        // follow-up (d)); don't spawn a pool that would sit idle.
-        let pool = if threads > 1 && quant.is_none() {
-            Some(WorkerPool::new(threads))
-        } else {
-            None
-        };
+        let pool = if threads > 1 { Some(WorkerPool::new(threads)) } else { None };
         ShardWorker { graph, plan, params, transport, pool, quant }
     }
 
@@ -200,46 +206,50 @@ impl ShardWorker {
         let mut next_input = 0usize;
         for node in &g.nodes {
             let out = if matches!(node.op, OpKind::Input) {
-                let mut t = inputs[next_input].clone();
+                let t = inputs[next_input].clone();
                 assert_eq!(t.shape(), &node.out.shape, "input {} shape mismatch", next_input);
-                if let Some(qrun) = &self.quant {
-                    // The inserted graph-edge quantize: every rank snaps
-                    // identically from the same scale table.
-                    snap_slice(&mut t.data, qrun.scales[node.id]);
-                }
                 next_input += 1;
-                ShardVal::Full(t)
+                match &self.quant {
+                    // The inserted graph-edge quantize: every rank encodes
+                    // identically from the same calibrated grid.
+                    Some(qrun) => ShardVal::QFull(QTensor::quantize_with(&t, qrun.grid(node.id))),
+                    None => ShardVal::Full(t),
+                }
             } else {
                 match self.plan.schemes[node.id] {
                     LayerScheme::Replicated => {
                         for &i in &node.inputs {
                             self.ensure_full(&mut vals, i);
                         }
-                        let args = arg_refs(&vals, node);
                         let prm = self.params.get(node.id);
-                        let t = match &self.quant {
-                            Some(qrun) => qexec_node(qrun, prm, node, &args),
-                            None => exec_node(prm, &node.op, &args),
-                        };
-                        ShardVal::Full(t)
+                        match &self.quant {
+                            Some(qrun) => {
+                                let args = q_refs(&vals, node);
+                                ShardVal::QFull(qexec_node(qrun, prm, node, &args))
+                            }
+                            None => {
+                                let args = arg_refs(&vals, node);
+                                ShardVal::Full(exec_node(prm, &node.op, &args))
+                            }
+                        }
                     }
                     LayerScheme::OutC => {
                         for &i in &node.inputs {
                             self.ensure_full(&mut vals, i);
                         }
-                        let args = arg_refs(&vals, node);
-                        ShardVal::Full(self.exec_outc(node, &args))
+                        match &self.quant {
+                            Some(qrun) => {
+                                let args = q_refs(&vals, node);
+                                ShardVal::QFull(self.exec_outc_q8(node, &args, qrun))
+                            }
+                            None => {
+                                let args = arg_refs(&vals, node);
+                                ShardVal::Full(self.exec_outc(node, &args))
+                            }
+                        }
                     }
-                    LayerScheme::InH => {
-                        self.prepare_spatial_inputs(&mut vals, node, Axis::Rows);
-                        let args = arg_refs(&vals, node);
-                        ShardVal::Sharded(self.exec_spatial(node, &args, Axis::Rows), Axis::Rows)
-                    }
-                    LayerScheme::InW => {
-                        self.prepare_spatial_inputs(&mut vals, node, Axis::Cols);
-                        let args = arg_refs(&vals, node);
-                        ShardVal::Sharded(self.exec_spatial(node, &args, Axis::Cols), Axis::Cols)
-                    }
+                    LayerScheme::InH => self.exec_spatial_dispatch(&mut vals, node, Axis::Rows),
+                    LayerScheme::InW => self.exec_spatial_dispatch(&mut vals, node, Axis::Cols),
                 }
             };
             vals[node.id] = Some(out);
@@ -255,73 +265,88 @@ impl ShardWorker {
         }
         g.outputs
             .iter()
-            .map(|&o| vals[o].as_ref().expect("output computed").tensor().clone())
+            .map(|&o| match vals[o].as_ref().expect("output computed") {
+                ShardVal::Full(t) => t.clone(),
+                ShardVal::QFull(q) => q.dequantize(),
+                _ => unreachable!("outputs are gathered to full"),
+            })
             .collect()
     }
 
-    /// Dispatch an all-gather of one f32 block per rank through the plan's
-    /// sync mode.
-    fn all_gather(&self, mine: Vec<f32>, base_tag: u64) -> Vec<Vec<f32>> {
+    /// Prepare inputs and execute one spatially-sharded node.
+    fn exec_spatial_dispatch(
+        &self,
+        vals: &mut [Option<ShardVal>],
+        node: &Node,
+        axis: Axis,
+    ) -> ShardVal {
+        self.prepare_spatial_inputs(vals, node, axis);
+        match &self.quant {
+            Some(qrun) => ShardVal::QSharded(self.exec_spatial_q8(vals, node, axis, qrun), axis),
+            None => {
+                let args = arg_refs(vals, node);
+                ShardVal::Sharded(self.exec_spatial_f32(node, &args, axis), axis)
+            }
+        }
+    }
+
+    /// Dispatch an all-gather of one block per rank through the plan's
+    /// sync mode — payload-generic: f32 activations or raw i8 codes
+    /// (quantized runs; `base_tag` must carry [`wire::TAG_Q8`]).
+    fn all_gather<P: WireScalar>(&self, mine: Vec<P>, base_tag: u64) -> Vec<Vec<P>> {
         match self.plan.sync {
             SyncMode::Ring => ring::ring_all_gather_tp(&*self.transport, mine, base_tag),
             SyncMode::Ps => ps::ps_all_gather_tp(&*self.transport, mine, base_tag),
         }
     }
 
-    /// Dispatch an all-gather of one i8 byte block per rank (quantized
-    /// activation payloads; `base_tag` must carry [`wire::TAG_Q8`]).
-    fn all_gather_bytes(&self, mine: Vec<u8>, base_tag: u64) -> Vec<Vec<u8>> {
-        match self.plan.sync {
-            SyncMode::Ring => ring::ring_all_gather_bytes_tp(&*self.transport, mine, base_tag),
-            SyncMode::Ps => ps::ps_all_gather_bytes_tp(&*self.transport, mine, base_tag),
-        }
-    }
-
     /// Reassemble a sharded value into a full tensor on every rank. In
-    /// INT8 mode the blocks travel as raw i8 at the value's grid scale —
-    /// exact, because sharded values are grid-snapped.
+    /// INT8 mode the blocks are the raw codes — no quantize step at all.
     fn ensure_full(&self, vals: &mut [Option<ShardVal>], id: NodeId) {
-        if matches!(vals[id], Some(ShardVal::Full(_))) {
+        if matches!(vals[id], Some(ShardVal::Full(_)) | Some(ShardVal::QFull(_))) {
             return;
         }
-        let (mut t, axis) = match vals[id].take().expect("value live") {
-            ShardVal::Full(_) => unreachable!("checked above"),
-            ShardVal::Sharded(t, axis) => (t, axis),
-        };
-        let (_, h, w) = fm_dims(&t);
-        let extent = match axis {
-            Axis::Rows => h,
-            Axis::Cols => w,
-        };
         let p = self.world();
         let me = self.rank();
-        let (mlo, mhi) = even_share(extent, p, me);
-        match &self.quant {
-            Some(qrun) => {
-                let s = qrun.scales[id];
-                let mine = pack_rect_q8(&t, axis_rect(&t, axis, mlo, mhi), s);
-                let blocks = self.all_gather_bytes(mine, gather_tag(id) | wire::TAG_Q8);
-                for (q, block) in blocks.iter().enumerate() {
-                    if q == me {
-                        continue;
-                    }
-                    let (qlo, qhi) = even_share(extent, p, q);
-                    unpack_rect_q8(&mut t, axis_rect(&t, axis, qlo, qhi), block, s);
-                }
-            }
-            None => {
-                let mine = pack_rect(&t, axis_rect(&t, axis, mlo, mhi));
+        match vals[id].take().expect("value live") {
+            ShardVal::Sharded(mut t, axis) => {
+                let (_, h, w) = fm_dims(&t);
+                let extent = match axis {
+                    Axis::Rows => h,
+                    Axis::Cols => w,
+                };
+                let (mlo, mhi) = even_share(extent, p, me);
+                let mine = pack_rect(&t, axis_rect(h, w, axis, mlo, mhi));
                 let blocks = self.all_gather(mine, gather_tag(id));
                 for (q, block) in blocks.iter().enumerate() {
                     if q == me {
                         continue;
                     }
                     let (qlo, qhi) = even_share(extent, p, q);
-                    unpack_rect(&mut t, axis_rect(&t, axis, qlo, qhi), block);
+                    unpack_rect(&mut t, axis_rect(h, w, axis, qlo, qhi), block);
                 }
+                vals[id] = Some(ShardVal::Full(t));
             }
+            ShardVal::QSharded(mut q, axis) => {
+                let (_, h, w) = fm_of(q.shape());
+                let extent = match axis {
+                    Axis::Rows => h,
+                    Axis::Cols => w,
+                };
+                let (mlo, mhi) = even_share(extent, p, me);
+                let mine = pack_rect_i8(&q, axis_rect(h, w, axis, mlo, mhi));
+                let blocks = self.all_gather(mine, gather_tag(id) | wire::TAG_Q8);
+                for (qr, block) in blocks.iter().enumerate() {
+                    if qr == me {
+                        continue;
+                    }
+                    let (qlo, qhi) = even_share(extent, p, qr);
+                    unpack_rect_i8(&mut q, axis_rect(h, w, axis, qlo, qhi), block);
+                }
+                vals[id] = Some(ShardVal::QFull(q));
+            }
+            _ => unreachable!("checked above"),
         }
-        vals[id] = Some(ShardVal::Full(t));
     }
 
     /// Bring every input of a spatial node in reach: same-axis sharded
@@ -330,8 +355,8 @@ impl ShardWorker {
     fn prepare_spatial_inputs(&self, vals: &mut [Option<ShardVal>], node: &Node, axis: Axis) {
         for &i in &node.inputs {
             let same_axis = match vals[i].as_ref().expect("value live") {
-                ShardVal::Full(_) => None,
-                ShardVal::Sharded(_, a) => Some(*a == axis),
+                ShardVal::Full(_) | ShardVal::QFull(_) => None,
+                ShardVal::Sharded(_, a) | ShardVal::QSharded(_, a) => Some(*a == axis),
             };
             match same_axis {
                 None => {}
@@ -346,8 +371,8 @@ impl ShardWorker {
     /// range extends past their own slab. All ranks iterate the same
     /// deterministic (sender, receiver) schedule, so sends and receives
     /// are matched pairwise with no barrier. INT8 runs ship the halo
-    /// blocks as raw i8 ([`wire::TAG_Q8`] frames) — exact on grid-snapped
-    /// values.
+    /// blocks as the raw codes ([`wire::TAG_Q8`] frames) — exact by
+    /// construction, no quantize at the wire.
     fn exchange_halo(
         &self,
         vals: &mut [Option<ShardVal>],
@@ -357,12 +382,17 @@ impl ShardWorker {
     ) {
         let p = self.world();
         let me = self.rank();
-        let qscale = self.quant.as_ref().map(|qrun| qrun.scales[value_id]);
-        let t = match vals[value_id].as_mut().expect("value live") {
-            ShardVal::Sharded(t, _) => t,
-            ShardVal::Full(_) => unreachable!("halo exchange on full value"),
+        let (h, w) = match vals[value_id].as_ref().expect("value live") {
+            ShardVal::Sharded(t, _) => {
+                let (_, h, w) = fm_dims(t);
+                (h, w)
+            }
+            ShardVal::QSharded(q, _) => {
+                let (_, h, w) = fm_of(q.shape());
+                (h, w)
+            }
+            _ => unreachable!("halo exchange on full value"),
         };
-        let (_, h, w) = fm_dims(t);
         let in_extent = match axis {
             Axis::Rows => h,
             Axis::Cols => w,
@@ -392,39 +422,38 @@ impl ShardWorker {
                         continue;
                     }
                     let tag = halo_tag(value_id, consumer.id, lo);
-                    match qscale {
-                        Some(scale) => {
-                            let tag = tag | wire::TAG_Q8;
+                    match vals[value_id].as_mut().expect("value live") {
+                        ShardVal::Sharded(t, _) => {
                             if s == me {
-                                let block = pack_rect_q8(t, axis_rect(t, axis, lo, hi), scale);
-                                self.transport.send_bytes(d, tag, &block);
-                            } else if d == me {
-                                let block = self.transport.recv_bytes(s, tag);
-                                unpack_rect_q8(t, axis_rect(t, axis, lo, hi), &block, scale);
-                            }
-                        }
-                        None => {
-                            if s == me {
-                                let block = pack_rect(t, axis_rect(t, axis, lo, hi));
+                                let block = pack_rect(t, axis_rect(h, w, axis, lo, hi));
                                 self.transport.send(d, tag, &block);
                             } else if d == me {
                                 let block = self.transport.recv(s, tag);
-                                unpack_rect(t, axis_rect(t, axis, lo, hi), &block);
+                                unpack_rect(t, axis_rect(h, w, axis, lo, hi), &block);
                             }
                         }
+                        ShardVal::QSharded(q, _) => {
+                            let tag = tag | wire::TAG_Q8;
+                            if s == me {
+                                let block = pack_rect_i8(q, axis_rect(h, w, axis, lo, hi));
+                                self.transport.send_bytes(d, tag, wire::i8s_as_bytes(&block));
+                            } else if d == me {
+                                let block =
+                                    wire::bytes_into_i8s(self.transport.recv_bytes(s, tag));
+                                unpack_rect_i8(q, axis_rect(h, w, axis, lo, hi), &block);
+                            }
+                        }
+                        _ => unreachable!("halo exchange on full value"),
                     }
                 }
             }
         }
     }
 
-    /// OutC-sharded execution: compute this rank's output-channel/column
-    /// slice from shard-local weights, then all-gather the slices into the
-    /// full activation.
+    /// OutC-sharded f32 execution: compute this rank's output-channel/
+    /// column slice from shard-local weights, then all-gather the slices
+    /// into the full activation.
     fn exec_outc(&self, node: &Node, args: &[&Tensor]) -> Tensor {
-        if let Some(qrun) = &self.quant {
-            return self.exec_outc_q8(node, args, qrun.as_ref());
-        }
         let p = self.world();
         let me = self.rank();
         let prm = self.params.get(node.id);
@@ -472,69 +501,58 @@ impl ShardWorker {
     }
 
     /// INT8 OutC execution: integer-kernel slice from the rank's
-    /// quantized weight shard, grid-snap, then an i8 all-gather — each
-    /// block decodes with the node's scale, so reassembly equals the
-    /// single-device snapped output bit-for-bit.
-    fn exec_outc_q8(&self, node: &Node, args: &[&Tensor], qrun: &QuantRun) -> Tensor {
+    /// quantized weight shard straight to codes, then an i8 all-gather of
+    /// the code blocks — reassembly equals the single-device output
+    /// bit-for-bit, with no quantize step anywhere near the wire.
+    fn exec_outc_q8(&self, node: &Node, args: &[&QTensor], qrun: &QuantRun) -> QTensor {
         let p = self.world();
         let me = self.rank();
         let prm = self.params.get(node.id);
-        let out_scale = qrun.scales[node.id];
+        let grid = qrun.grid(node.id).to_vec();
         match &node.op {
             OpKind::Conv(a) | OpKind::Cbr(a) | OpKind::Cbra(a, _) | OpKind::Cbrm(a, _) => {
                 let (c0, c1) = conv_channel_share(a, p, me);
-                let mine = if c0 >= c1 {
+                let mine: Vec<i8> = if c0 >= c1 {
                     Vec::new()
                 } else {
-                    // No snap needed before the wire: quantizing IS the
-                    // snap (`quant1(snap1(v, s), s) == quant1(v, s)`), and
-                    // the full tensor is rebuilt from the gathered blocks.
-                    let slice = self.conv_family_slice_q8(node, a, prm, args[0], c0, c1, qrun);
-                    quantize_bytes(&slice.data, out_scale)
+                    self.conv_family_slice_q8(node, a, prm, args[0], c0, c1, qrun)
                 };
-                let blocks = self.all_gather_bytes(mine, outc_tag(node.id) | wire::TAG_Q8);
-                let mut out = Tensor::zeros(node.out.clone());
-                let (_, oh, ow) = fm_dims(&out);
+                let blocks = self.all_gather(mine, outc_tag(node.id) | wire::TAG_Q8);
+                let mut out = QTensor::zeros(node.out.clone(), grid);
+                let (_, oh, ow) = fm_of(out.shape());
                 let ohw = oh * ow;
                 for (q, block) in blocks.iter().enumerate() {
                     let (q0, q1) = conv_channel_share(a, p, q);
                     debug_assert_eq!(block.len(), (q1 - q0) * ohw, "channel block size");
-                    dequantize_into(&mut out.data[q0 * ohw..q1 * ohw], block, out_scale);
+                    out.data[q0 * ohw..q1 * ohw].copy_from_slice(block);
                 }
                 out
             }
             OpKind::MatMul(m) if m.weighted => {
                 let (j0, j1) = even_share(m.n, p, me);
                 let rows = args[0].shape().numel() / m.k;
-                let mine = if j0 >= j1 {
+                let mine: Vec<i8> = if j0 >= j1 {
                     Vec::new()
                 } else {
-                    let sx = qrun.scales[node.inputs[0]];
-                    let qa = quantize_slice(&args[0].data, sx);
-                    let data = qkernels::fc_q8(
+                    let qa = qrun.intdot_codes(node.inputs[0], args[0]);
+                    let rq = qrun.requant(node.id).expect("fc requant plan");
+                    self.fc_cols_q8(
                         &qa,
                         rows,
                         m.k,
                         j1 - j0,
-                        qrun.qweights(node.id),
-                        &prm.bias,
-                        sx,
-                    );
-                    // Quantizing is the snap; the gathered blocks rebuild
-                    // the full output.
-                    quantize_bytes(&data, out_scale)
+                        &qrun.qweights(node.id).q,
+                        &rq.epilogue(),
+                    )
                 };
-                let blocks = self.all_gather_bytes(mine, outc_tag(node.id) | wire::TAG_Q8);
-                let mut out = Tensor::zeros(node.out.clone());
+                let blocks = self.all_gather(mine, outc_tag(node.id) | wire::TAG_Q8);
+                let mut out = QTensor::zeros(node.out.clone(), grid);
                 for (q, block) in blocks.iter().enumerate() {
                     let (q0, q1) = even_share(m.n, p, q);
                     let nw = q1 - q0;
                     for r in 0..rows {
-                        dequantize_into(
-                            &mut out.data[r * m.n + q0..r * m.n + q1],
-                            &block[r * nw..(r + 1) * nw],
-                            out_scale,
-                        );
+                        out.data[r * m.n + q0..r * m.n + q1]
+                            .copy_from_slice(&block[r * nw..(r + 1) * nw]);
                     }
                 }
                 out
@@ -597,75 +615,89 @@ impl ShardWorker {
 
     /// INT8 counterpart of [`ShardWorker::conv_family_slice`]: the same
     /// slice through the quantized region kernel with the rank's i8
-    /// weight shard (per-channel weight scales make the local shard equal
-    /// to a slice of the master's quantization).
+    /// weight shard, returned as codes. Conv/CBR emit codes straight from
+    /// the fused epilogue (this rank's requant plan is already sliced to
+    /// its rows); the pooling links go through f32 for the pool stage and
+    /// quantize onto their slice of the output grid.
     #[allow(clippy::too_many_arguments)]
     fn conv_family_slice_q8(
         &self,
         node: &Node,
         a: &ConvAttrs,
         prm: &NodeParams,
-        x: &Tensor,
+        x: &QTensor,
         c0: usize,
         c1: usize,
         qrun: &QuantRun,
-    ) -> Tensor {
-        let sliced_input;
-        let (sub, xin): (ConvAttrs, &Tensor) = if a.groups > 1 {
+    ) -> Vec<i8> {
+        let (_, h, w) = fm_of(x.shape());
+        let hw = h * w;
+        let qx_full = qrun.intdot_codes(node.inputs[0], x);
+        let (sub, qx): (ConvAttrs, &[i8]) = if a.groups > 1 {
             let g0 = c0 / a.out_c_per_group();
             let g1 = c1 / a.out_c_per_group();
-            sliced_input =
-                crate::ops::shape_ops::slice_c(x, g0 * a.in_c_per_group(), g1 * a.in_c_per_group());
-            (a.group_slice(g0, g1), &sliced_input)
-        } else {
-            (a.out_c_slice(c0, c1), x)
-        };
-        let sx = qrun.scales[node.inputs[0]];
-        let s = xin.shape();
-        let qx = quantize_slice(&xin.data, sx);
-        let (oh, ow) = sub.out_hw(s.h(), s.w());
-        let mut t = Tensor::zeros(TensorDesc::fm(1, sub.out_c, oh, ow));
-        // SAFETY: single-threaded call covering the whole slice once.
-        unsafe {
-            qkernels::conv2d_region_raw_q8(
-                &qx,
-                sub.in_c,
-                s.h(),
-                s.w(),
-                &sub,
-                qrun.qweights(node.id),
-                &prm.bias,
-                sx,
-                0,
-                sub.out_c,
-                0,
-                oh,
-                0,
-                ow,
-                oh,
-                ow,
-                t.data.as_mut_ptr(),
+            (
+                a.group_slice(g0, g1),
+                &qx_full[g0 * a.in_c_per_group() * hw..g1 * a.in_c_per_group() * hw],
             )
+        } else {
+            (a.out_c_slice(c0, c1), &qx_full[..])
         };
+        let (oh, ow) = sub.out_hw(h, w);
         let full = Rect { y0: 0, y1: oh, x0: 0, x1: ow };
         match &node.op {
-            OpKind::Conv(_) => t,
-            OpKind::Cbr(_) => {
-                affine_relu_rect(&mut t, &prm.scale, &prm.shift, full);
-                t
+            OpKind::Conv(_) | OpKind::Cbr(_) => {
+                let rq = qrun.requant(node.id).expect("conv requant plan");
+                let ep = rq.epilogue();
+                let mut out = vec![0i8; sub.out_c * oh * ow];
+                self.conv_region_q8(
+                    qx,
+                    h,
+                    w,
+                    &sub,
+                    &qrun.qweights(node.id).q,
+                    &ep,
+                    0,
+                    sub.out_c,
+                    full,
+                    oh,
+                    ow,
+                    out.as_mut_ptr(),
+                );
+                out
             }
             OpKind::Cbra(_, pl) | OpKind::Cbrm(_, pl) => {
+                let qw = qrun.qweights(node.id);
+                let ep = qrun.pool_link_epilogue(node.id, &prm.bias);
+                let mut t = Tensor::zeros(TensorDesc::fm(1, sub.out_c, oh, ow));
+                self.conv_region_q8(
+                    qx,
+                    h,
+                    w,
+                    &sub,
+                    &qw.q,
+                    &ep,
+                    0,
+                    sub.out_c,
+                    full,
+                    oh,
+                    ow,
+                    t.data.as_mut_ptr(),
+                );
                 affine_relu_rect(&mut t, &prm.scale, &prm.shift, full);
-                pooling::pool(&t, pl)
+                let pooled = pooling::pool(&t, pl);
+                let g = qrun.grid(node.id);
+                let gslice = if g.len() == 1 { g.to_vec() } else { g[c0..c1].to_vec() };
+                QTensor::quantize_with(&pooled, &gslice).data
             }
             other => unreachable!("conv family only, got {other:?}"),
         }
     }
 
-    /// Spatially-sharded execution: compute this rank's row/column slab of
-    /// the output into a full-size buffer (the slab stays sharded; no
-    /// communication here).
-    fn exec_spatial(&self, node: &Node, args: &[&Tensor], axis: Axis) -> Tensor {
+    /// Spatially-sharded f32 execution: compute this rank's row/column
+    /// slab of the output into a full-size buffer (the slab stays
+    /// sharded; no communication here).
+    fn exec_spatial_f32(&self, node: &Node, args: &[&Tensor], axis: Axis) -> Tensor {
         let mut out = Tensor::zeros(node.out.clone());
         let (_, oh, ow) = fm_dims(&out);
         let extent = match axis {
@@ -681,11 +713,106 @@ impl ShardWorker {
             Axis::Cols => Rect { y0: 0, y1: oh, x0: lo, x1: hi },
         };
         let prm = self.params.get(node.id);
-        match &self.quant {
-            Some(qrun) => {
-                self.exec_spatial_q8(node, args, axis, lo, hi, r, &mut out, prm, qrun.as_ref())
+        self.spatial_rect_op(node, args, prm, axis, lo, hi, r, &mut out);
+        out
+    }
+
+    /// INT8 spatially-sharded execution: integer conv rects emit codes
+    /// straight from the fused epilogue; every other operator computes
+    /// f32 over **only the slab + halo ranges it reads** (no full-map
+    /// dequantize/quantize per rank) and quantizes its own rect back
+    /// onto the node's grid — exact for pass-through operators (grid
+    /// preserved), the calibrated boundary for requant operators.
+    fn exec_spatial_q8(
+        &self,
+        vals: &[Option<ShardVal>],
+        node: &Node,
+        axis: Axis,
+        qrun: &QuantRun,
+    ) -> QTensor {
+        let mut out = QTensor::zeros(node.out.clone(), qrun.grid(node.id).to_vec());
+        let (c, oh, ow) = fm_of(out.shape());
+        let extent = match axis {
+            Axis::Rows => oh,
+            Axis::Cols => ow,
+        };
+        let (lo, hi) = even_share(extent, self.world(), self.rank());
+        if lo >= hi {
+            return out;
+        }
+        let r = match axis {
+            Axis::Rows => Rect { y0: lo, y1: hi, x0: 0, x1: ow },
+            Axis::Cols => Rect { y0: 0, y1: oh, x0: lo, x1: hi },
+        };
+        let prm = self.params.get(node.id);
+        match &node.op {
+            OpKind::Conv(a) | OpKind::Cbr(a) => {
+                let x = vals[node.inputs[0]].as_ref().expect("input value live").q();
+                let qx = qrun.intdot_codes(node.inputs[0], x);
+                let (_, h, w) = fm_of(x.shape());
+                let rq = qrun.requant(node.id).expect("conv requant plan");
+                let ep = rq.epilogue();
+                self.conv_region_q8(
+                    &qx,
+                    h,
+                    w,
+                    a,
+                    &qrun.qweights(node.id).q,
+                    &ep,
+                    0,
+                    a.out_c,
+                    r,
+                    oh,
+                    ow,
+                    out.data.as_mut_ptr(),
+                );
             }
-            None => self.spatial_rect_op(node, args, prm, axis, lo, hi, r, &mut out),
+            OpKind::Cbra(a, pl) | OpKind::Cbrm(a, pl) => {
+                let x = vals[node.inputs[0]].as_ref().expect("input value live").q();
+                let qx = qrun.intdot_codes(node.inputs[0], x);
+                let (_, h, w) = fm_of(x.shape());
+                let (ph, pw) = a.out_hw(h, w);
+                let pr = pre_pool_rect(pl, axis, lo, hi, ph, pw);
+                let qw = qrun.qweights(node.id);
+                let ep = qrun.pool_link_epilogue(node.id, &prm.bias);
+                let mut pre = Tensor::zeros(TensorDesc::fm(1, a.out_c, ph, pw));
+                self.conv_region_q8(
+                    &qx,
+                    h,
+                    w,
+                    a,
+                    &qw.q,
+                    &ep,
+                    0,
+                    a.out_c,
+                    pr,
+                    ph,
+                    pw,
+                    pre.data.as_mut_ptr(),
+                );
+                affine_relu_rect(&mut pre, &prm.scale, &prm.shift, pr);
+                let mut fout = Tensor::zeros(node.out.clone());
+                let ptr = fout.data.as_mut_ptr();
+                // SAFETY: single-threaded call on a buffer this rank owns.
+                unsafe {
+                    pooling::pool_tile_raw(&pre, pl, 0, 0, c, r.y0, r.y1, r.x0, r.x1, oh, ow, ptr)
+                };
+                quantize_rect(&fout, &mut out, r);
+            }
+            _ => {
+                // f32-computed spatial op: materialize only the ranges the
+                // rect reads, run the shared f32 rect kernels, quantize
+                // the rank's own rect.
+                let f32_args: Vec<Tensor> = node
+                    .inputs
+                    .iter()
+                    .map(|&i| materialize_spatial_arg(vals, i, node, axis, lo, hi))
+                    .collect();
+                let refs: Vec<&Tensor> = f32_args.iter().collect();
+                let mut fout = Tensor::zeros(node.out.clone());
+                self.spatial_rect_op(node, &refs, prm, axis, lo, hi, r, &mut fout);
+                quantize_rect(&fout, &mut out, r);
+            }
         }
         out
     }
@@ -792,107 +919,6 @@ impl ShardWorker {
         }
     }
 
-    /// INT8 spatial execution: conv-family rects through the quantized
-    /// region kernel; every other operator through the shared f32 rect
-    /// kernels followed by the plan's snap (requant boundaries snap onto
-    /// the node's grid, pass-through operators stay on their producer's).
-    #[allow(clippy::too_many_arguments)]
-    fn exec_spatial_q8(
-        &self,
-        node: &Node,
-        args: &[&Tensor],
-        axis: Axis,
-        lo: usize,
-        hi: usize,
-        r: Rect,
-        out: &mut Tensor,
-        prm: &NodeParams,
-        qrun: &QuantRun,
-    ) {
-        let (c, oh, ow) = fm_dims(out);
-        let out_scale = qrun.scales[node.id];
-        match &node.op {
-            OpKind::Conv(a) | OpKind::Cbr(a) => {
-                let sx = qrun.scales[node.inputs[0]];
-                let s = args[0].shape();
-                let qx = quantize_slice(&args[0].data, sx);
-                let ptr = out.data.as_mut_ptr();
-                // SAFETY: single-threaded call on a buffer this rank owns.
-                unsafe {
-                    qkernels::conv2d_region_raw_q8(
-                        &qx,
-                        a.in_c,
-                        s.h(),
-                        s.w(),
-                        a,
-                        qrun.qweights(node.id),
-                        &prm.bias,
-                        sx,
-                        0,
-                        a.out_c,
-                        r.y0,
-                        r.y1,
-                        r.x0,
-                        r.x1,
-                        oh,
-                        ow,
-                        ptr,
-                    )
-                };
-                if matches!(node.op, OpKind::Cbr(_)) {
-                    affine_relu_rect(out, &prm.scale, &prm.shift, r);
-                }
-                snap_rect(out, r, out_scale);
-            }
-            OpKind::Cbra(a, pl) | OpKind::Cbrm(a, pl) => {
-                let sx = qrun.scales[node.inputs[0]];
-                let s = args[0].shape();
-                let qx = quantize_slice(&args[0].data, sx);
-                let (ph, pw) = a.out_hw(s.h(), s.w());
-                let pr = pre_pool_rect(pl, axis, lo, hi, ph, pw);
-                let mut pre = Tensor::zeros(TensorDesc::fm(1, a.out_c, ph, pw));
-                let pre_ptr = pre.data.as_mut_ptr();
-                // SAFETY: single-threaded call on a buffer this rank owns.
-                unsafe {
-                    qkernels::conv2d_region_raw_q8(
-                        &qx,
-                        a.in_c,
-                        s.h(),
-                        s.w(),
-                        a,
-                        qrun.qweights(node.id),
-                        &prm.bias,
-                        sx,
-                        0,
-                        a.out_c,
-                        pr.y0,
-                        pr.y1,
-                        pr.x0,
-                        pr.x1,
-                        ph,
-                        pw,
-                        pre_ptr,
-                    )
-                };
-                affine_relu_rect(&mut pre, &prm.scale, &prm.shift, pr);
-                let ptr = out.data.as_mut_ptr();
-                // SAFETY: single-threaded call on a buffer this rank owns.
-                unsafe {
-                    pooling::pool_tile_raw(&pre, pl, 0, 0, c, r.y0, r.y1, r.x0, r.x1, oh, ow, ptr)
-                };
-                snap_rect(out, r, out_scale);
-            }
-            _ => {
-                self.spatial_rect_op(node, args, prm, axis, lo, hi, r, out);
-                match qrun.plan.kinds[node.id] {
-                    QuantKind::Requant => snap_rect(out, r, out_scale),
-                    QuantKind::Passthrough => {}
-                    QuantKind::IntDot => unreachable!("spatial IntDot handled above"),
-                }
-            }
-        }
-    }
-
     /// Convolution over one output region, chunked across the local worker
     /// pool when this shard owns one. Chunk boundaries never change the
     /// per-element arithmetic (`conv2d_region_raw` routes exactly like the
@@ -955,19 +981,158 @@ impl ShardWorker {
             }
         }
     }
+
+    /// Quantized convolution over one output region, chunked across the
+    /// local worker pool exactly like [`ShardWorker::conv_region`] —
+    /// ROADMAP follow-up (d): quantized shard kernels no longer run
+    /// serial per rank. Integer accumulation + the per-element epilogue
+    /// make every chunking bit-identical.
+    #[allow(clippy::too_many_arguments)]
+    fn conv_region_q8<E: Epilogue>(
+        &self,
+        qx: &[i8],
+        h: usize,
+        w: usize,
+        a: &ConvAttrs,
+        qw: &[i8],
+        ep: &E,
+        c0: usize,
+        c1: usize,
+        r: Rect,
+        oh: usize,
+        ow: usize,
+        out: *mut E::Out,
+    ) {
+        if c0 >= c1 || r.y0 >= r.y1 || r.x0 >= r.x1 {
+            return;
+        }
+        match &self.pool {
+            Some(pool) => {
+                let ptr = SendPtr(out);
+                let ways = pool.len();
+                let a2 = *a;
+                let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+                if r.y1 - r.y0 >= c1 - c0 {
+                    for (s, e) in split_range(r.y0, r.y1, ways) {
+                        jobs.push(Box::new(move || {
+                            // SAFETY: disjoint row sub-regions.
+                            unsafe {
+                                qkernels::conv2d_region_raw_q8(
+                                    qx, a2.in_c, h, w, &a2, qw, ep, c0, c1, s, e, r.x0, r.x1, oh,
+                                    ow, ptr.0,
+                                )
+                            };
+                        }));
+                    }
+                } else {
+                    for (s, e) in split_range(c0, c1, ways) {
+                        jobs.push(Box::new(move || {
+                            // SAFETY: disjoint channel sub-regions.
+                            unsafe {
+                                qkernels::conv2d_region_raw_q8(
+                                    qx, a2.in_c, h, w, &a2, qw, ep, s, e, r.y0, r.y1, r.x0, r.x1,
+                                    oh, ow, ptr.0,
+                                )
+                            };
+                        }));
+                    }
+                }
+                pool.run(jobs);
+            }
+            None => {
+                // SAFETY: single-threaded call covering the region once.
+                unsafe {
+                    qkernels::conv2d_region_raw_q8(
+                        qx, a.in_c, h, w, a, qw, ep, c0, c1, r.y0, r.y1, r.x0, r.x1, oh, ow, out,
+                    )
+                };
+            }
+        }
+    }
+
+    /// Quantized FC columns `[0, n)` to codes, column-chunked across the
+    /// local pool when present (follow-up (d) for the FC shards).
+    fn fc_cols_q8(
+        &self,
+        qa: &[i8],
+        rows: usize,
+        k: usize,
+        n: usize,
+        qw: &[i8],
+        ep: &FixedQ8<'_>,
+    ) -> Vec<i8> {
+        let mut out = vec![0i8; rows * n];
+        match &self.pool {
+            Some(pool) => {
+                let ptr = SendPtr(out.as_mut_ptr());
+                let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+                for (j0, j1) in split_range(0, n, pool.len()) {
+                    jobs.push(Box::new(move || {
+                        // SAFETY: disjoint column ranges of the same buffer.
+                        unsafe {
+                            qkernels::matmul_panel_raw_q8(qa, rows, k, qw, n, j0, j1, ep, ptr.0)
+                        };
+                    }));
+                }
+                pool.run(jobs);
+            }
+            None => {
+                // SAFETY: single call covering all columns.
+                unsafe {
+                    qkernels::matmul_panel_raw_q8(qa, rows, k, qw, n, 0, n, ep, out.as_mut_ptr())
+                };
+            }
+        }
+        out
+    }
 }
 
-/// Immutable argument views (all inputs must be prepared).
+/// Immutable f32 argument views (all inputs must be prepared).
 fn arg_refs<'a>(vals: &'a [Option<ShardVal>], node: &Node) -> Vec<&'a Tensor> {
     node.inputs
         .iter()
-        .map(|&i| vals[i].as_ref().expect("input value live").tensor())
+        .map(|&i| vals[i].as_ref().expect("input value live").f32())
         .collect()
 }
 
-/// The full-width rect of an axis range on a feature map.
-fn axis_rect(t: &Tensor, axis: Axis, lo: usize, hi: usize) -> Rect {
-    let (_, h, w) = fm_dims(t);
+/// Immutable i8 argument views (all inputs must be prepared).
+fn q_refs<'a>(vals: &'a [Option<ShardVal>], node: &Node) -> Vec<&'a QTensor> {
+    node.inputs
+        .iter()
+        .map(|&i| vals[i].as_ref().expect("input value live").q())
+        .collect()
+}
+
+/// f32 view of one input of a spatial f32-computed node under INT8: full
+/// values decode whole; same-axis sharded values decode **only** the
+/// rows/columns the consumer's slab actually reads (slab + halo — the
+/// ROADMAP (f) fix: no full-map work per rank).
+fn materialize_spatial_arg(
+    vals: &[Option<ShardVal>],
+    id: NodeId,
+    consumer: &Node,
+    axis: Axis,
+    out_lo: usize,
+    out_hi: usize,
+) -> Tensor {
+    match vals[id].as_ref().expect("input value live") {
+        ShardVal::QFull(q) => q.dequantize(),
+        ShardVal::QSharded(q, a) => {
+            debug_assert_eq!(*a, axis, "cross-axis inputs are gathered to full");
+            let (_, h, w) = fm_of(q.shape());
+            let in_extent = match axis {
+                Axis::Rows => h,
+                Axis::Cols => w,
+            };
+            let (nlo, nhi) = needed_range(consumer, out_lo, out_hi, in_extent, axis);
+            dequantize_axis_range(q, axis, nlo, nhi)
+        }
+        ShardVal::Full(t) | ShardVal::Sharded(t, _) => t.clone(),
+    }
+}
+
+/// The full-width rect of an axis range on an `h × w` feature map.
+fn axis_rect(h: usize, w: usize, axis: Axis, lo: usize, hi: usize) -> Rect {
     match axis {
         Axis::Rows => Rect { y0: lo, y1: hi, x0: 0, x1: w },
         Axis::Cols => Rect { y0: 0, y1: h, x0: lo, x1: hi },
@@ -1081,60 +1246,67 @@ fn unpack_rect(t: &mut Tensor, r: Rect, block: &[f32]) {
     debug_assert_eq!(off, block.len(), "halo block size mismatch");
 }
 
-/// Serialize one rect as quantized i8 bytes at `scale` (same traversal
-/// order as [`pack_rect`]). Exact on grid-snapped values: one byte per
-/// element replaces four on the wire.
-fn pack_rect_q8(t: &Tensor, r: Rect, scale: f32) -> Vec<u8> {
-    let (c, h, w) = fm_dims(t);
+/// Serialize one rect of an i8 code buffer (same traversal order as
+/// [`pack_rect`], one byte per element on the wire — and **no** quantize:
+/// the codes are the value).
+fn pack_rect_i8(q: &QTensor, r: Rect) -> Vec<i8> {
+    let (c, h, w) = fm_of(q.shape());
     let mut out = Vec::with_capacity(c * (r.y1 - r.y0) * (r.x1 - r.x0));
     for ch in 0..c {
         for y in r.y0..r.y1 {
             let base = (ch * h + y) * w;
-            for &v in &t.data[base + r.x0..base + r.x1] {
-                out.push(quant1(v, scale) as u8);
-            }
+            out.extend_from_slice(&q.data[base + r.x0..base + r.x1]);
         }
     }
     out
 }
 
-/// Inverse of [`pack_rect_q8`].
-fn unpack_rect_q8(t: &mut Tensor, r: Rect, block: &[u8], scale: f32) {
-    let (c, h, w) = fm_dims(t);
+/// Inverse of [`pack_rect_i8`].
+fn unpack_rect_i8(q: &mut QTensor, r: Rect, block: &[i8]) {
+    let (c, h, w) = fm_of(q.shape());
     let seg = r.x1 - r.x0;
     let mut off = 0usize;
     for ch in 0..c {
         for y in r.y0..r.y1 {
             let base = (ch * h + y) * w;
-            dequantize_into(&mut t.data[base + r.x0..base + r.x1], &block[off..off + seg], scale);
+            q.data[base + r.x0..base + r.x1].copy_from_slice(&block[off..off + seg]);
             off += seg;
         }
     }
     debug_assert_eq!(off, block.len(), "halo block size mismatch");
 }
 
-/// Quantize a (grid-snapped) f32 slice to i8 bytes — exact by the snap
-/// invariant.
-fn quantize_bytes(data: &[f32], scale: f32) -> Vec<u8> {
-    data.iter().map(|&v| quant1(v, scale) as u8).collect()
-}
-
-/// Decode i8 bytes into an f32 destination slice.
-fn dequantize_into(dst: &mut [f32], block: &[u8], scale: f32) {
-    debug_assert_eq!(dst.len(), block.len(), "q8 block size mismatch");
-    for (d, &b) in dst.iter_mut().zip(block) {
-        *d = dequant1(b as i8, scale);
-    }
-}
-
-/// Snap one rect onto the i8 grid of `scale` — the cluster-side twin of
-/// `quant::snap_slice`, applied only to the region this rank owns.
-fn snap_rect(t: &mut Tensor, r: Rect, scale: f32) {
-    let (c, h, w) = fm_dims(t);
+/// Decode one axis range `[lo, hi)` of a code buffer into a fresh f32
+/// tensor (everything outside the range stays zero and is never read).
+fn dequantize_axis_range(q: &QTensor, axis: Axis, lo: usize, hi: usize) -> Tensor {
+    let mut desc = q.desc.clone();
+    desc.dtype = DType::F32;
+    let mut t = Tensor::zeros(desc);
+    let (c, h, w) = fm_of(q.shape());
+    let r = axis_rect(h, w, axis, lo, hi);
     for ch in 0..c {
+        let s = grid_scale(&q.scale, ch);
         for y in r.y0..r.y1 {
             let base = (ch * h + y) * w;
-            snap_slice(&mut t.data[base + r.x0..base + r.x1], scale);
+            for x in r.x0..r.x1 {
+                t.data[base + x] = dequant1(q.data[base + x], s);
+            }
+        }
+    }
+    t
+}
+
+/// Quantize one rect of an f32 buffer into the code buffer's grid — the
+/// rank's own slab after an f32-computed spatial operator.
+fn quantize_rect(src: &Tensor, dst: &mut QTensor, r: Rect) {
+    let (c, h, w) = fm_dims(src);
+    for ch in 0..c {
+        let s = grid_scale(&dst.scale, ch);
+        for y in r.y0..r.y1 {
+            let base = (ch * h + y) * w;
+            for x in r.x0..r.x1 {
+                dst.data[base + x] = quant1(src.data[base + x], s);
+            }
         }
     }
 }

@@ -9,7 +9,7 @@
 //! over any [`Transport`]; the in-memory entry point is the
 //! `LocalTransport` special case.
 
-use crate::dist::exec::transport::{run_over_local_mesh, Transport};
+use crate::dist::exec::transport::{run_over_local_mesh, Transport, WireScalar};
 use crate::hw::LinkModel;
 
 /// Parameter-server all-reduce over a [`Transport`]: workers send their
@@ -44,10 +44,18 @@ pub fn ps_allreduce_tp(t: &dyn Transport, data: &mut [f32], base_tag: u64) {
 /// collects every block and re-streams the full set to each worker. Every
 /// rank returns all `p` blocks in rank order. Tags `base_tag .. base_tag +
 /// 2p` are consumed.
-pub fn ps_all_gather_tp(t: &dyn Transport, mine: Vec<f32>, base_tag: u64) -> Vec<Vec<f32>> {
+///
+/// Generic over the payload scalar ([`WireScalar`]): f32 activations and
+/// raw i8 codes (quantized runs, `TAG_Q8`-flagged tags) share this one
+/// schedule — the former f32/byte twins are gone.
+pub fn ps_all_gather_tp<P: WireScalar>(
+    t: &dyn Transport,
+    mine: Vec<P>,
+    base_tag: u64,
+) -> Vec<Vec<P>> {
     let p = t.world();
     let me = t.rank();
-    let mut blocks: Vec<Option<Vec<f32>>> = (0..p).map(|_| None).collect();
+    let mut blocks: Vec<Option<Vec<P>>> = (0..p).map(|_| None).collect();
     if p <= 1 {
         blocks[me] = Some(mine);
         return blocks.into_iter().map(|b| b.expect("own block")).collect();
@@ -55,56 +63,26 @@ pub fn ps_all_gather_tp(t: &dyn Transport, mine: Vec<f32>, base_tag: u64) -> Vec
     if me == 0 {
         blocks[0] = Some(mine);
         for q in 1..p {
-            blocks[q] = Some(t.recv(q, base_tag + q as u64));
+            blocks[q] = Some(P::recv_block(t, q, base_tag + q as u64));
         }
         for q in 1..p {
             for (b, block) in blocks.iter().enumerate() {
                 if b != q {
-                    t.send(q, base_tag + (p + b) as u64, block.as_ref().expect("gathered"));
+                    P::send_block(
+                        t,
+                        q,
+                        base_tag + (p + b) as u64,
+                        block.as_ref().expect("gathered"),
+                    );
                 }
             }
         }
     } else {
-        t.send(0, base_tag + me as u64, &mine);
+        P::send_block(t, 0, base_tag + me as u64, &mine);
         blocks[me] = Some(mine);
         for b in 0..p {
             if b != me {
-                blocks[b] = Some(t.recv(0, base_tag + (p + b) as u64));
-            }
-        }
-    }
-    blocks.into_iter().map(|b| b.expect("all blocks gathered")).collect()
-}
-
-/// Parameter-server all-gather of one variable-size **byte** block per
-/// rank — the quantized-activation (i8 payload) face of
-/// [`ps_all_gather_tp`], identical schedule at one byte per element.
-pub fn ps_all_gather_bytes_tp(t: &dyn Transport, mine: Vec<u8>, base_tag: u64) -> Vec<Vec<u8>> {
-    let p = t.world();
-    let me = t.rank();
-    let mut blocks: Vec<Option<Vec<u8>>> = (0..p).map(|_| None).collect();
-    if p <= 1 {
-        blocks[me] = Some(mine);
-        return blocks.into_iter().map(|b| b.expect("own block")).collect();
-    }
-    if me == 0 {
-        blocks[0] = Some(mine);
-        for q in 1..p {
-            blocks[q] = Some(t.recv_bytes(q, base_tag + q as u64));
-        }
-        for q in 1..p {
-            for (b, block) in blocks.iter().enumerate() {
-                if b != q {
-                    t.send_bytes(q, base_tag + (p + b) as u64, block.as_ref().expect("gathered"));
-                }
-            }
-        }
-    } else {
-        t.send_bytes(0, base_tag + me as u64, &mine);
-        blocks[me] = Some(mine);
-        for b in 0..p {
-            if b != me {
-                blocks[b] = Some(t.recv_bytes(0, base_tag + (p + b) as u64));
+                blocks[b] = Some(P::recv_block(t, 0, base_tag + (p + b) as u64));
             }
         }
     }
@@ -162,6 +140,24 @@ mod tests {
         let blocks = vec![vec![1.0f32], vec![2.0f32, 3.0], vec![]];
         let mesh = LocalTransport::mesh(blocks.len());
         let got: Vec<Vec<Vec<f32>>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = blocks
+                .clone()
+                .into_iter()
+                .zip(mesh)
+                .map(|(mine, t)| scope.spawn(move || ps_all_gather_tp(&t, mine, 0)))
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("gather worker")).collect()
+        });
+        for per_rank in &got {
+            assert_eq!(per_rank, &blocks);
+        }
+    }
+
+    #[test]
+    fn ps_all_gather_is_payload_generic_over_i8_codes() {
+        let blocks = vec![vec![5i8, -5], vec![], vec![127i8]];
+        let mesh = LocalTransport::mesh(blocks.len());
+        let got: Vec<Vec<Vec<i8>>> = std::thread::scope(|scope| {
             let handles: Vec<_> = blocks
                 .clone()
                 .into_iter()

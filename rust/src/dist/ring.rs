@@ -13,7 +13,7 @@
 //! * [`ring_allreduce_time`] / [`ring_broadcast_time`] — the analytic time
 //!   model the d-Xenos simulation prices collectives with.
 
-use crate::dist::exec::transport::{run_over_local_mesh, Transport};
+use crate::dist::exec::transport::{run_over_local_mesh, Transport, WireScalar};
 use crate::hw::LinkModel;
 
 /// Chunk boundaries of an `n`-element buffer split into `p` near-even
@@ -70,10 +70,20 @@ pub fn ring_allreduce_tp(t: &dyn Transport, data: &mut [f32], base_tag: u64) {
 /// blocks circulate `p-1` hops; every rank returns all `p` blocks in rank
 /// order, each a verbatim copy of its owner's. Tags `base_tag .. base_tag
 /// + (p-1)` are consumed.
-pub fn ring_all_gather_tp(t: &dyn Transport, mine: Vec<f32>, base_tag: u64) -> Vec<Vec<f32>> {
+///
+/// Generic over the payload scalar ([`WireScalar`]): f32 activations and
+/// raw i8 codes (quantized runs; `base_tag` must carry
+/// [`crate::dist::exec::wire::TAG_Q8`] so TCP readers demultiplex the
+/// frame kind) share this one hop schedule — the former f32/byte twin
+/// implementations had already drifted once and are gone.
+pub fn ring_all_gather_tp<P: WireScalar>(
+    t: &dyn Transport,
+    mine: Vec<P>,
+    base_tag: u64,
+) -> Vec<Vec<P>> {
     let p = t.world();
     let me = t.rank();
-    let mut blocks: Vec<Option<Vec<f32>>> = (0..p).map(|_| None).collect();
+    let mut blocks: Vec<Option<Vec<P>>> = (0..p).map(|_| None).collect();
     blocks[me] = Some(mine);
     if p > 1 {
         let right = (me + 1) % p;
@@ -82,32 +92,8 @@ pub fn ring_all_gather_tp(t: &dyn Transport, mine: Vec<f32>, base_tag: u64) -> V
             let send_b = (me + p - s) % p;
             let recv_b = (me + 2 * p - s - 1) % p;
             let out = blocks[send_b].as_ref().expect("block in flight");
-            t.send(right, base_tag + s as u64, out);
-            blocks[recv_b] = Some(t.recv(left, base_tag + s as u64));
-        }
-    }
-    blocks.into_iter().map(|b| b.expect("all blocks gathered")).collect()
-}
-
-/// Ring all-gather of one variable-size **byte** block per rank — the
-/// quantized-activation (i8 payload) face of [`ring_all_gather_tp`],
-/// identical hop schedule, moving one byte per element instead of four.
-/// `base_tag` must carry [`crate::dist::exec::wire::TAG_Q8`] so TCP
-/// readers demultiplex the frame kind.
-pub fn ring_all_gather_bytes_tp(t: &dyn Transport, mine: Vec<u8>, base_tag: u64) -> Vec<Vec<u8>> {
-    let p = t.world();
-    let me = t.rank();
-    let mut blocks: Vec<Option<Vec<u8>>> = (0..p).map(|_| None).collect();
-    blocks[me] = Some(mine);
-    if p > 1 {
-        let right = (me + 1) % p;
-        let left = (me + p - 1) % p;
-        for s in 0..p - 1 {
-            let send_b = (me + p - s) % p;
-            let recv_b = (me + 2 * p - s - 1) % p;
-            let out = blocks[send_b].as_ref().expect("block in flight");
-            t.send_bytes(right, base_tag + s as u64, out);
-            blocks[recv_b] = Some(t.recv_bytes(left, base_tag + s as u64));
+            P::send_block(t, right, base_tag + s as u64, out);
+            blocks[recv_b] = Some(P::recv_block(t, left, base_tag + s as u64));
         }
     }
     blocks.into_iter().map(|b| b.expect("all blocks gathered")).collect()
@@ -196,7 +182,18 @@ mod tests {
         }
     }
 
-    fn run_all_gather(blocks: Vec<Vec<f32>>) -> Vec<Vec<Vec<f32>>> {
+    #[test]
+    fn all_gather_is_payload_generic_over_i8_codes() {
+        // The i8 instantiation runs the *same* hop schedule (satellite of
+        // the twin-implementation dedup): codes gather verbatim.
+        let blocks = vec![vec![1i8, -2], vec![], vec![127i8, -127, 0]];
+        let got = run_all_gather(blocks.clone());
+        for (rank, per_rank) in got.iter().enumerate() {
+            assert_eq!(per_rank, &blocks, "rank {rank} gathered wrong i8 blocks");
+        }
+    }
+
+    fn run_all_gather<P: WireScalar + 'static>(blocks: Vec<Vec<P>>) -> Vec<Vec<Vec<P>>> {
         let mesh = LocalTransport::mesh(blocks.len());
         std::thread::scope(|scope| {
             let handles: Vec<_> = blocks

@@ -384,6 +384,12 @@ fn cmd_quantize(args: &Args) -> Result<()> {
         plan.boundaries(),
     );
     println!(
+        "integer dataflow: {} i8-resident edges, {} dequantize boundaries \
+         (f32 materialized only there)",
+        plan.resident_edges(&g),
+        plan.dequant_boundaries(&g),
+    );
+    println!(
         "activation traffic: {} f32 -> {} int8 ({:.1}x)",
         human_bytes(f32_bytes),
         human_bytes(i8_bytes),

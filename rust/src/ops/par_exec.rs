@@ -33,21 +33,12 @@ use super::{conv, matmul, pool as pooling, shape_ops, Tensor};
 use crate::graph::{ConvAttrs, Graph, Node, OpKind, PoolAttrs, PoolKind, Shape, TensorDesc};
 use crate::hw::DeviceModel;
 use crate::opt::{dos, ExecutionPlan, NodePlan, OptLevel, PartitionDim};
-use crate::runtime::pool::{ScopedJob, WorkerPool};
+use crate::runtime::pool::{ScopedJob, SendPtr, WorkerPool};
 
 /// Below this many MAC-equivalents a node stays on the serial path —
 /// fan-out/sync overhead dwarfs the work. One constant shared with the
 /// planner (`opt::dos`) so the two gates stay in lockstep.
 pub use crate::opt::dos::MIN_PARALLEL_ELEMS;
-
-/// Raw output pointer that may cross into worker threads. Tasks built by
-/// this module only ever write disjoint regions behind it.
-#[derive(Clone, Copy)]
-struct SendPtr(*mut f32);
-// SAFETY: the pointer is only dereferenced on disjoint ranges while the
-// owning buffer is kept alive by the blocking `WorkerPool::run` call.
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
 
 /// Host threads actually available.
 fn host_parallelism() -> usize {

@@ -16,6 +16,16 @@
 //! Everything else either runs on the integer kernels ([`QuantKind::
 //! IntDot`]) or computes in f32 and *re-quantizes* its output onto its
 //! own calibrated grid ([`QuantKind::Requant`]).
+//!
+//! The plan additionally marks **dequantize boundaries**
+//! ([`QuantPlan::needs_f32`]): activations are i8-resident everywhere
+//! (codes + grid travel between operators as
+//! [`QTensor`](crate::quant::QTensor)s), and f32 is materialized only on
+//! edges into f32-computed consumers and at graph outputs. An edge
+//! between two adjacent `IntDot` nodes is consumed as raw codes — the
+//! i8→f32→i8 snap round-trip the engines used to pay per edge is gone
+//! (the tentpole of the end-to-end integer dataflow work; the engines'
+//! `snap_roundtrips` counter pins it at zero).
 
 use crate::graph::{DType, Graph, NodeId, OpKind, PoolKind};
 
@@ -45,6 +55,17 @@ pub struct QuantPlan {
     /// indirection so folded operators stay exactly on their producer's
     /// grid.
     pub grid_of: Vec<NodeId>,
+    /// Per-node **dequantize-boundary** annotation: `true` when the
+    /// node's output is additionally materialized as f32 at runtime —
+    /// because it is a graph output, or because some consumer computes in
+    /// f32 (`Requant`/`Passthrough` kinds). This is planning metadata
+    /// (reporting via [`QuantPlan::dequant_boundaries`], `xenos
+    /// quantize`); the engines realize the same boundaries by consumer
+    /// kind. Every activation is i8-resident (a
+    /// [`crate::quant::QTensor`] of codes); edges between adjacent
+    /// `IntDot` nodes have `needs_f32 = false` on the producer and are
+    /// consumed as raw codes with **no** i8→f32→i8 round-trip.
+    pub needs_f32: Vec<bool>,
 }
 
 impl QuantPlan {
@@ -61,6 +82,29 @@ impl QuantPlan {
     /// Number of requantization boundaries.
     pub fn boundaries(&self) -> usize {
         self.kinds.iter().filter(|k| **k == QuantKind::Requant).count()
+    }
+
+    /// Number of graph edges consumed directly as i8 codes (edges into
+    /// `IntDot` consumers) — the integer-resident dataflow the engines
+    /// execute with zero f32 materialization.
+    pub fn resident_edges(&self, g: &Graph) -> usize {
+        g.nodes
+            .iter()
+            .filter(|n| self.kinds[n.id] == QuantKind::IntDot)
+            .map(|n| n.inputs.len())
+            .sum()
+    }
+
+    /// Number of dequantize boundaries the engines realize: edges into
+    /// f32-computed consumers plus graph outputs.
+    pub fn dequant_boundaries(&self, g: &Graph) -> usize {
+        let edges: usize = g
+            .nodes
+            .iter()
+            .filter(|n| self.kinds[n.id] != QuantKind::IntDot)
+            .map(|n| n.inputs.len())
+            .sum();
+        edges + g.outputs.len()
     }
 }
 
@@ -102,7 +146,21 @@ pub fn plan_quant(g: &Graph) -> QuantPlan {
         kinds.push(kind);
         grid_of.push(grid);
     }
-    QuantPlan { kinds, grid_of }
+    // Dequantize boundaries: a node's codes must additionally decode to
+    // f32 when an f32-computed consumer (anything but IntDot) reads them
+    // or when the node is a graph output. IntDot consumers read raw codes.
+    let mut needs_f32 = vec![false; g.len()];
+    for n in &g.nodes {
+        if kinds[n.id] != QuantKind::IntDot {
+            for &i in &n.inputs {
+                needs_f32[i] = true;
+            }
+        }
+    }
+    for &o in &g.outputs {
+        needs_f32[o] = true;
+    }
+    QuantPlan { kinds, grid_of, needs_f32 }
 }
 
 /// The annotated-graph rewrite: a copy of `g` whose activation edges
@@ -179,6 +237,33 @@ mod tests {
         // Boundary nodes own their grid.
         assert_eq!(p.grid_of[id_of("ap")], id_of("ap"));
         assert_eq!(p.grid_of[id_of("c")], id_of("c"));
+    }
+
+    #[test]
+    fn intdot_chains_are_i8_resident_and_boundaries_are_marked() {
+        // conv -> conv adjacency (the MobileNet-style hot path): the
+        // producer edge is i8-resident — no f32 materialization.
+        let mut b = GraphBuilder::new("qplan_chain");
+        let x = b.input("x", Shape::nchw(1, 4, 8, 8));
+        let c1 = b.conv("c1", x, 8, 3, 1, 1);
+        let c2 = b.conv("c2", c1, 8, 1, 1, 0);
+        let sm = b.softmax("sm", c2);
+        b.output(sm);
+        let g = b.finish();
+        let p = plan_quant(&g);
+        let id_of = |name: &str| g.nodes.iter().find(|n| n.name == name).unwrap().id;
+        // c1 feeds only the IntDot c2: codes-only edge.
+        assert!(!p.needs_f32[id_of("c1")], "IntDot->IntDot edge must stay i8");
+        // x feeds IntDot c1: also codes-only.
+        assert!(!p.needs_f32[id_of("x")]);
+        // c2 feeds the f32-computed softmax: a dequantize boundary.
+        assert!(p.needs_f32[id_of("c2")]);
+        // The graph output is always a boundary.
+        assert!(p.needs_f32[id_of("sm")]);
+        // Edge accounting: x->c1, c1->c2 resident; c2->sm + output = 2
+        // boundaries.
+        assert_eq!(p.resident_edges(&g), 2);
+        assert_eq!(p.dequant_boundaries(&g), 2);
     }
 
     #[test]

@@ -7,87 +7,374 @@
 //! under INT8. The serial engine, the worker-pool engine and the d-Xenos
 //! shard worker's replicated path all call it (or chunk the same tile
 //! kernels it calls), so quantized output is bit-identical across all of
-//! them — integer accumulation makes the chunking argument exact rather
-//! than order-dependent.
+//! them — integer accumulation and the per-element fixed-point epilogue
+//! make the chunking argument exact rather than order-dependent.
+//!
+//! **Integer-resident dataflow.** Activations travel between nodes as
+//! [`QTensor`]s — i8 codes plus their grid. `IntDot` nodes consume codes
+//! directly and emit codes through the fused requantize epilogue
+//! ([`RequantPlan`]); f32 is materialized only at dequantize boundaries
+//! (f32-computed operators, graph outputs). The engine counts any forced
+//! i8→f32→i8 round-trip on an integer edge in
+//! [`QuantRun::snap_roundtrips`]; the differential tests pin it at zero.
 
+use std::borrow::Cow;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use anyhow::Result;
 
 use super::calib::CalibTable;
-use super::kernels;
-use super::{quantize_slice, snap_slice, QWeights};
-use crate::graph::{ConvAttrs, Graph, Node, NodeId, OpKind};
+use super::kernels::{self, DeqF32, Epilogue, FixedQ8, UNIT};
+use super::{fix_bias, fix_multiplier, grid_scale, scale_for, QTensor, QWeights};
+use crate::graph::{ConvAttrs, Graph, Node, NodeId, OpKind, Shape, TensorDesc};
 use crate::ops::elementwise as ew;
-use crate::ops::interp::{exec_node, run_graph, synthetic_inputs};
+use crate::ops::interp::{exec_node, synthetic_inputs};
 use crate::ops::par_exec::chunks;
 use crate::ops::params::{NodeParams, ParamStore};
 use crate::ops::Tensor;
 use crate::opt::dos::MIN_PARALLEL_ELEMS;
 use crate::opt::quant::{plan_quant, QuantKind, QuantPlan};
-use crate::runtime::pool::{ScopedJob, WorkerPool};
+use crate::runtime::pool::{ScopedJob, SendPtr, WorkerPool};
+
+/// The precomputed fixed-point requantize epilogue of one `IntDot` node:
+/// per-output-channel (or per-FC-column) multiplier, shift and bias on
+/// the node's activation grid, with a fused ReLU realized as a zero
+/// clamp. Folds input grid × weight scale × (optional BatchNorm affine)
+/// ÷ output grid, so the kernel goes i32 accumulator → i8 code in pure
+/// integer arithmetic.
+pub(crate) struct RequantPlan {
+    mult: Vec<i32>,
+    shift: Vec<u8>,
+    bias: Vec<i64>,
+    lo: i8,
+    by_col: bool,
+}
+
+impl RequantPlan {
+    fn from_affine(eff: impl Iterator<Item = (f32, f32)>, lo: i8, by_col: bool) -> RequantPlan {
+        let mut mult = Vec::new();
+        let mut shift = Vec::new();
+        let mut bias = Vec::new();
+        for (es, eb) in eff {
+            let (m, s) = fix_multiplier(es);
+            mult.push(m);
+            shift.push(s);
+            bias.push(fix_bias(eb, s));
+        }
+        RequantPlan { mult, shift, bias, lo, by_col }
+    }
+
+    /// The kernel epilogue view.
+    pub(crate) fn epilogue(&self) -> FixedQ8<'_> {
+        FixedQ8 {
+            mult: &self.mult,
+            shift: &self.shift,
+            bias: &self.bias,
+            lo: self.lo,
+            by_col: self.by_col,
+        }
+    }
+}
 
 /// Everything an engine needs to execute one model at INT8: the precision
-/// plan, the resolved per-node activation scales, and the quantized
-/// weights. Built once per engine (or per cluster rank, from that rank's
-/// weight shard — per-channel weight scales make shard-local quantization
-/// identical to slicing the master's).
+/// plan, the resolved per-node activation grids, the (input-grid-folded)
+/// quantized weights and the fixed-point requantize plans. Built once per
+/// engine (or per cluster rank, from that rank's weight shard —
+/// per-channel weight scales make shard-local quantization identical to
+/// slicing the master's).
 pub struct QuantRun {
     /// The precision assignment.
     pub plan: QuantPlan,
-    /// Per-node activation scale, resolved through the plan's grid
-    /// indirection (pass-through nodes carry their producer's scale).
-    pub scales: Vec<f32>,
+    /// Per-node activation grid: one scale (per-tensor) or one per
+    /// feature-map channel. Pass-through nodes carry their producer's
+    /// grid, remapped through channel-reordering ops.
+    grids: Vec<Vec<f32>>,
     /// Per-node quantized weights (empty for nodes without an integer
-    /// kernel).
+    /// kernel). Input activation grids are folded into the weights before
+    /// quantization, so `QWeights::scale` is the complete accumulator
+    /// dequantization factor.
     qw: Vec<QWeights>,
+    /// Per-node fixed-point requantize epilogues (IntDot nodes whose
+    /// output is produced directly as codes; the pooled CBRA/CBRM links
+    /// requantize after their f32 pool stage instead).
+    rq: Vec<Option<RequantPlan>>,
+    /// Forced i8→f32→i8 round-trips on integer edges — zero by
+    /// construction; counted so the integer-dataflow tests can pin it.
+    snap_roundtrips: AtomicU64,
+}
+
+/// Per-channel activation grid of one node from its calibrated ranges.
+/// Feature maps with real spatial extent get one scale per channel
+/// (dead-in-calibration channels inherit the tensor-wide scale so live
+/// values still decode finely); single-pixel maps and non-fm tensors get
+/// a per-tensor scale — a 1×1 "channel" is a single calibration sample,
+/// far too tail-sensitive to pin a grid on.
+fn calibrated_grid(calib: &CalibTable, n: &Node) -> Vec<f32> {
+    let ranges = &calib.per_channel[n.id];
+    let tensor_max = ranges.iter().fold(0.0f32, |m, v| m.max(*v));
+    let s = &n.out.shape;
+    if s.is_fm() && s.h() * s.w() > 1 && ranges.len() == s.c() && ranges.len() > 1 {
+        ranges
+            .iter()
+            .map(|&r| {
+                if r > 0.0 && r.is_finite() {
+                    scale_for(r)
+                } else {
+                    scale_for(tensor_max)
+                }
+            })
+            .collect()
+    } else {
+        vec![scale_for(tensor_max)]
+    }
+}
+
+/// The grid a pass-through node's output lives on: its producer's,
+/// remapped through channel-reordering selections.
+fn derive_grid(op: &OpKind, src: &[f32]) -> Vec<f32> {
+    if src.len() == 1 {
+        return src.to_vec();
+    }
+    match op {
+        OpKind::Slice { begin, end } => src[*begin..*end].to_vec(),
+        OpKind::ChannelShuffle { groups } => {
+            let c = src.len();
+            let cpg = c / groups;
+            // Same channel permutation as `shape_ops::shuffle_tile_raw`.
+            (0..c).map(|dst| src[(dst % groups) * cpg + dst / groups]).collect()
+        }
+        OpKind::Relu | OpKind::Upsample { .. } | OpKind::Pool(_) => src.to_vec(),
+        // Channel-axis-destroying pass-throughs (cannot occur on feature
+        // maps today): fall back to the coarsest scale.
+        _ => vec![src.iter().fold(0.0f32, |m, v| m.max(*v))],
+    }
+}
+
+/// Fold a per-input-channel activation grid into conv weights before
+/// quantization: `w'[oc, ic, k] = w[oc, ic, k] · grid[ic]`, so the
+/// accumulator's dequantization factor collapses to the (folded) weight
+/// scale alone. `off` is the global output channel of local row 0 —
+/// OutC-sharded ranks fold with their slice's group mapping.
+fn fold_conv_weights(
+    w: &[f32],
+    rows: usize,
+    a: &ConvAttrs,
+    off: usize,
+    in_grid: &[f32],
+) -> Vec<f32> {
+    if in_grid.len() == 1 {
+        let s = in_grid[0];
+        return w.iter().map(|&v| v * s).collect();
+    }
+    debug_assert_eq!(in_grid.len(), a.in_c, "input grid does not match conv channels");
+    let cpg_in = a.in_c_per_group();
+    let cpg_out = a.out_c_per_group();
+    let k = a.kh * a.kw;
+    let mut out = Vec::with_capacity(w.len());
+    for r in 0..rows {
+        let g = (off + r) / cpg_out;
+        for ic in 0..cpg_in {
+            let s = in_grid[g * cpg_in + ic];
+            let base = (r * cpg_in + ic) * k;
+            out.extend(w[base..base + k].iter().map(|&v| v * s));
+        }
+    }
+    out
+}
+
+/// Fold a (flattened feature-map) activation grid into FC weights:
+/// element `kk` of the contraction axis belongs to channel `kk / (h·w)`
+/// of the producer.
+fn fold_fc_weights(w: &[f32], k: usize, n: usize, in_shape: &Shape, in_grid: &[f32]) -> Vec<f32> {
+    if in_grid.len() == 1 {
+        let s = in_grid[0];
+        return w.iter().map(|&v| v * s).collect();
+    }
+    let hw = (in_shape.h() * in_shape.w()).max(1);
+    let mut out = Vec::with_capacity(w.len());
+    for kk in 0..k {
+        let s = in_grid[(kk / hw).min(in_grid.len() - 1)];
+        out.extend(w[kk * n..(kk + 1) * n].iter().map(|&v| v * s));
+    }
+    out
 }
 
 impl QuantRun {
-    /// Build a run from a calibration table and a per-node parameter
-    /// accessor (`ParamStore::get_ref` for a full model,
-    /// `ShardParams::get` for one rank's shard).
+    /// Build a run for a full (master) model from a calibration table and
+    /// a per-node parameter accessor.
     pub fn build<'a>(
         g: &Graph,
         calib: &CalibTable,
         params: impl Fn(NodeId) -> &'a NodeParams,
     ) -> QuantRun {
+        Self::build_with_offsets(g, calib, params, |_| 0)
+    }
+
+    /// As [`QuantRun::build`], for a weight shard: `row_offset` maps a
+    /// node to the global output channel its local weight row 0
+    /// corresponds to (0 for full/replicated nodes, the rank's channel
+    /// share start for OutC-sharded conv nodes). The offset anchors both
+    /// the per-channel input-grid fold and the output-grid slice, which
+    /// is what keeps shard-local quantization identical to slicing the
+    /// master's.
+    pub fn build_with_offsets<'a>(
+        g: &Graph,
+        calib: &CalibTable,
+        params: impl Fn(NodeId) -> &'a NodeParams,
+        row_offset: impl Fn(NodeId) -> usize,
+    ) -> QuantRun {
         let plan = plan_quant(g);
-        let mut scales = Vec::with_capacity(g.len());
-        let mut qw = Vec::with_capacity(g.len());
+        // Activation grids first (topological: producers resolved).
+        let mut grids: Vec<Vec<f32>> = Vec::with_capacity(g.len());
         for n in &g.nodes {
-            scales.push(calib.act_scale(plan.grid_of[n.id]));
+            let grid = if plan.kinds[n.id] == QuantKind::Passthrough {
+                derive_grid(&n.op, &grids[n.inputs[0]])
+            } else {
+                calibrated_grid(calib, n)
+            };
+            grids.push(grid);
+        }
+        // Quantized weights (input grid folded in) + requantize plans.
+        let mut qw: Vec<QWeights> = Vec::with_capacity(g.len());
+        let mut rq: Vec<Option<RequantPlan>> = Vec::with_capacity(g.len());
+        for n in &g.nodes {
             let prm = params(n.id);
-            let w = match (&n.op, plan.kinds[n.id]) {
+            let (w, r) = match (&n.op, plan.kinds[n.id]) {
                 (OpKind::Conv(a), QuantKind::IntDot)
                 | (OpKind::Cbr(a), QuantKind::IntDot)
                 | (OpKind::Cbra(a, _), QuantKind::IntDot)
                 | (OpKind::Cbrm(a, _), QuantKind::IntDot) => {
                     let row = a.in_c_per_group() * a.kh * a.kw;
                     if prm.w.is_empty() {
-                        QWeights::default()
+                        (QWeights::default(), None)
                     } else {
-                        QWeights::per_row(&prm.w, prm.w.len() / row, row)
+                        let rows = prm.w.len() / row;
+                        let off = row_offset(n.id);
+                        let folded = fold_conv_weights(&prm.w, rows, a, off, &grids[n.inputs[0]]);
+                        let w = QWeights::per_row(&folded, rows, row);
+                        let r = conv_requant(&n.op, prm, &w, off, &grids[n.id]);
+                        (w, r)
                     }
                 }
                 (OpKind::MatMul(m), QuantKind::IntDot) if m.weighted => {
                     if prm.w.is_empty() {
-                        QWeights::default()
+                        (QWeights::default(), None)
                     } else {
-                        QWeights::per_col(&prm.w, m.k, prm.w.len() / m.k)
+                        let cols = prm.w.len() / m.k;
+                        let in_shape = &g.node(n.inputs[0]).out.shape;
+                        let folded =
+                            fold_fc_weights(&prm.w, m.k, cols, in_shape, &grids[n.inputs[0]]);
+                        let w = QWeights::per_col(&folded, m.k, cols);
+                        let s_out = grids[n.id][0];
+                        let r = RequantPlan::from_affine(
+                            (0..cols).map(|j| {
+                                let b = if prm.bias.is_empty() { 0.0 } else { prm.bias[j] };
+                                (w.scale[j] / s_out, b / s_out)
+                            }),
+                            -127,
+                            true,
+                        );
+                        (w, Some(r))
                     }
                 }
-                _ => QWeights::default(),
+                (OpKind::MatMul(_), QuantKind::IntDot) => {
+                    // Activation × activation: uniform fixed-point requant
+                    // from the two (per-tensor) input grids.
+                    let sa = grids[n.inputs[0]][0];
+                    let sb = grids[n.inputs[1]][0];
+                    let s_out = grids[n.id][0];
+                    let r =
+                        RequantPlan::from_affine(std::iter::once((sa * sb / s_out, 0.0)), -127, false);
+                    (QWeights::default(), Some(r))
+                }
+                _ => (QWeights::default(), None),
             };
             qw.push(w);
+            rq.push(r);
         }
-        QuantRun { plan, scales, qw }
+        QuantRun { plan, grids, qw, rq, snap_roundtrips: AtomicU64::new(0) }
+    }
+
+    /// The activation grid of one node's output (len 1 = per-tensor).
+    pub fn grid(&self, id: NodeId) -> &[f32] {
+        &self.grids[id]
     }
 
     /// Quantized weights of one node.
     pub(crate) fn qweights(&self, id: NodeId) -> &QWeights {
         &self.qw[id]
     }
+
+    /// Fixed-point requantize plan of one node, if it emits codes
+    /// directly from the kernel.
+    pub(crate) fn requant(&self, id: NodeId) -> Option<&RequantPlan> {
+        self.rq[id].as_ref()
+    }
+
+    /// The f32 dequantize epilogue of a pooled CBRA/CBRM link: the folded
+    /// weight scale on the row (output-channel) axis, unit columns, conv
+    /// bias on the rows. Single-sourced so every engine's pooled-link
+    /// convention stays identical.
+    pub(crate) fn pool_link_epilogue<'a>(&'a self, id: NodeId, bias: &'a [f32]) -> DeqF32<'a> {
+        DeqF32 {
+            row_scale: &self.qw[id].scale,
+            col_scale: &UNIT,
+            row_bias: bias,
+            col_bias: &[],
+        }
+    }
+
+    /// Forced i8→f32→i8 round-trips on integer edges so far — zero on
+    /// every supported graph (the end-to-end integer dataflow property).
+    pub fn snap_roundtrips(&self) -> u64 {
+        self.snap_roundtrips.load(Ordering::Relaxed)
+    }
+
+    /// Borrow one IntDot argument's codes. Arguments arrive i8-resident
+    /// on the expected grid by construction; a grid mismatch forces a
+    /// dequantize→requantize round-trip, which is counted.
+    pub(crate) fn intdot_codes<'t>(&self, expect: NodeId, t: &'t QTensor) -> Cow<'t, [i8]> {
+        if t.scale == self.grids[expect] {
+            Cow::Borrowed(&t.data[..])
+        } else {
+            self.snap_roundtrips.fetch_add(1, Ordering::Relaxed);
+            let f = t.dequantize();
+            Cow::Owned(QTensor::quantize_with(&f, &self.grids[expect]).data)
+        }
+    }
+}
+
+/// The fixed-point requantize plan of a Conv/CBR node: fold the folded
+/// weight scale, the (optional) BatchNorm affine and the output grid
+/// into one per-output-channel multiplier. `off` is the global output
+/// channel of local row 0 (shards).
+fn conv_requant(
+    op: &OpKind,
+    prm: &NodeParams,
+    w: &QWeights,
+    off: usize,
+    out_grid: &[f32],
+) -> Option<RequantPlan> {
+    let (fuse_bn, lo) = match op {
+        OpKind::Conv(_) => (false, -127i8),
+        OpKind::Cbr(_) => (true, 0i8),
+        // CBRA/CBRM pool in f32 between the affine and the requantize —
+        // they take the DeqF32 epilogue and quantize after the pool.
+        _ => return None,
+    };
+    let rows = w.scale.len();
+    let eff = (0..rows).map(|r| {
+        let s_out = grid_scale(out_grid, off + r);
+        let (bs, bsh) = if fuse_bn && !prm.scale.is_empty() {
+            (prm.scale[r], prm.shift[r])
+        } else {
+            (1.0, 0.0)
+        };
+        let b0 = if prm.bias.is_empty() { 0.0 } else { prm.bias[r] };
+        (w.scale[r] * bs / s_out, (b0 * bs + bsh) / s_out)
+    });
+    Some(RequantPlan::from_affine(eff, lo, false))
 }
 
 /// Fused Bn+ReLU in place over a batch-1 feature map — the same
@@ -108,94 +395,92 @@ pub(crate) fn bn_relu_inplace(t: &mut Tensor, scale: &[f32], shift: &[f32]) {
     }
 }
 
-/// Quantized convolution (+bias) of one conv-family node: quantize the
-/// (grid-snapped) input exactly, run the integer kernel, requantize.
-fn conv_int(run: &QuantRun, prm: &NodeParams, a: &ConvAttrs, node: &Node, x: &Tensor) -> Tensor {
-    let sx = run.scales[node.inputs[0]];
-    let s = x.shape();
-    let qx = quantize_slice(&x.data, sx);
-    kernels::conv2d_q8(
-        &qx,
-        s.n(),
-        a.in_c,
-        s.h(),
-        s.w(),
-        a,
-        run.qweights(node.id),
-        &prm.bias,
-        sx,
-    )
-}
-
-/// Execute one node at INT8 on concrete inputs — the quantized
+/// Execute one node at INT8 on i8-resident inputs — the quantized
 /// counterpart of `exec_node`, shared by the serial engine, the parallel
-/// engine's fallback and the cluster worker's replicated path.
+/// engine's fallback and the cluster worker's replicated path. IntDot
+/// nodes consume and produce codes; f32-computed nodes materialize f32
+/// transiently and requantize onto their grid.
 pub(crate) fn qexec_node(
     run: &QuantRun,
     prm: &NodeParams,
     node: &Node,
-    args: &[&Tensor],
-) -> Tensor {
-    let out_scale = run.scales[node.id];
+    args: &[&QTensor],
+) -> QTensor {
     match run.plan.kinds[node.id] {
-        QuantKind::Passthrough => exec_node(prm, &node.op, args),
-        QuantKind::Requant => {
-            let mut t = exec_node(prm, &node.op, args);
-            snap_slice(&mut t.data, out_scale);
-            t
+        QuantKind::Passthrough | QuantKind::Requant => {
+            let f32_args: Vec<Tensor> = args.iter().map(|q| q.dequantize()).collect();
+            let refs: Vec<&Tensor> = f32_args.iter().collect();
+            let t = exec_node(prm, &node.op, &refs);
+            QTensor::quantize_with(&t, run.grid(node.id))
         }
-        QuantKind::IntDot => {
-            let mut t = match &node.op {
-                OpKind::Conv(a) => conv_int(run, prm, a, node, args[0]),
-                OpKind::Cbr(a) => {
-                    let mut c = conv_int(run, prm, a, node, args[0]);
-                    bn_relu_inplace(&mut c, &prm.scale, &prm.shift);
-                    c
-                }
-                OpKind::Cbra(a, pl) | OpKind::Cbrm(a, pl) => {
-                    let mut c = conv_int(run, prm, a, node, args[0]);
-                    bn_relu_inplace(&mut c, &prm.scale, &prm.shift);
-                    crate::ops::pool::pool(&c, pl)
-                }
-                OpKind::MatMul(m) if m.weighted => {
-                    let sx = run.scales[node.inputs[0]];
-                    let rows = args[0].shape().numel() / m.k;
-                    let qa = quantize_slice(&args[0].data, sx);
-                    let data =
-                        kernels::fc_q8(&qa, rows, m.k, m.n, run.qweights(node.id), &prm.bias, sx);
-                    Tensor::new(node.out.clone(), data)
-                }
-                OpKind::MatMul(_) => {
-                    let (sa, sb) = (run.scales[node.inputs[0]], run.scales[node.inputs[1]]);
-                    let (m2, k) = (args[0].shape().dims[0], args[0].shape().dims[1]);
-                    let n2 = args[1].shape().dims[1];
-                    let qa = quantize_slice(&args[0].data, sa);
-                    let qb = quantize_slice(&args[1].data, sb);
-                    let data = kernels::matmul_q8(&qa, m2, k, &qb, n2, sa, sb);
-                    Tensor::new(node.out.clone(), data)
-                }
-                other => unreachable!("IntDot on non-dot op {other:?}"),
-            };
-            snap_slice(&mut t.data, out_scale);
-            t
-        }
+        QuantKind::IntDot => intdot_serial(run, prm, node, args),
     }
 }
 
-/// Raw output pointer crossing into the worker pool; jobs write disjoint
-/// regions only (same discipline as `ops::par_exec`).
-#[derive(Clone, Copy)]
-struct SendPtr(*mut f32);
-// SAFETY: only dereferenced on disjoint regions while the owning buffer
-// is kept alive by the blocking `WorkerPool::run` call.
-unsafe impl Send for SendPtr {}
-unsafe impl Sync for SendPtr {}
+/// Serial IntDot execution: codes in, codes out.
+fn intdot_serial(run: &QuantRun, prm: &NodeParams, node: &Node, args: &[&QTensor]) -> QTensor {
+    let grid = run.grid(node.id).to_vec();
+    match &node.op {
+        OpKind::Conv(a) | OpKind::Cbr(a) => {
+            let qx = run.intdot_codes(node.inputs[0], args[0]);
+            let s = args[0].shape();
+            let rq = run.requant(node.id).expect("conv requant plan");
+            let data = kernels::conv2d_q8(
+                &qx,
+                s.n(),
+                a.in_c,
+                s.h(),
+                s.w(),
+                a,
+                &run.qweights(node.id).q,
+                &rq.epilogue(),
+            );
+            QTensor::from_codes(node.out.clone(), data, grid)
+        }
+        OpKind::Cbra(a, pl) | OpKind::Cbrm(a, pl) => {
+            let qx = run.intdot_codes(node.inputs[0], args[0]);
+            let s = args[0].shape();
+            let qw = run.qweights(node.id);
+            let ep = run.pool_link_epilogue(node.id, &prm.bias);
+            let data = kernels::conv2d_q8(&qx, s.n(), a.in_c, s.h(), s.w(), a, &qw.q, &ep);
+            let (oh, ow) = a.out_hw(s.h(), s.w());
+            let mut c = Tensor::new(TensorDesc::fm(s.n(), a.out_c, oh, ow), data);
+            bn_relu_inplace(&mut c, &prm.scale, &prm.shift);
+            let p = crate::ops::pool::pool(&c, pl);
+            QTensor::quantize_with(&p, &grid)
+        }
+        OpKind::MatMul(m) if m.weighted => {
+            let qa = run.intdot_codes(node.inputs[0], args[0]);
+            let rows = args[0].shape().numel() / m.k;
+            let rq = run.requant(node.id).expect("fc requant plan");
+            let data = kernels::fc_q8(
+                &qa,
+                rows,
+                m.k,
+                m.n,
+                &run.qweights(node.id).q,
+                &rq.epilogue(),
+            );
+            QTensor::from_codes(node.out.clone(), data, grid)
+        }
+        OpKind::MatMul(_) => {
+            let qa = run.intdot_codes(node.inputs[0], args[0]);
+            let qb = run.intdot_codes(node.inputs[1], args[1]);
+            let (m2, k) = (args[0].shape().dims[0], args[0].shape().dims[1]);
+            let n2 = args[1].shape().dims[1];
+            let rq = run.requant(node.id).expect("matmul requant plan");
+            let data = kernels::matmul_q8(&qa, m2, k, &qb, n2, &rq.epilogue());
+            QTensor::from_codes(node.out.clone(), data, grid)
+        }
+        other => unreachable!("IntDot on non-dot op {other:?}"),
+    }
+}
 
 /// The INT8 engine: serial when `workers == 1`, worker-pool-chunked
 /// integer kernels otherwise. Chunking never changes a single output bit
-/// (exact integer accumulation), so `serve --precision int8` answers
-/// identically for `--engine interp` and `--engine par` at any thread
-/// count.
+/// (exact integer accumulation + per-element epilogue), so `serve
+/// --precision int8` answers identically for `--engine interp` and
+/// `--engine par` at any thread count.
 pub struct QuantEngine {
     graph: Arc<Graph>,
     params: ParamStore,
@@ -230,21 +515,59 @@ impl QuantEngine {
         &self.run.plan
     }
 
-    /// Run one quantized inference. Inputs are snapped onto their
-    /// calibrated grids at the graph edge (the inserted quantize node).
+    /// Forced i8→f32→i8 round-trips on integer edges since construction
+    /// — stays zero (the end-to-end integer dataflow property).
+    pub fn snap_roundtrips(&self) -> u64 {
+        self.run.snap_roundtrips()
+    }
+
+    /// Run one quantized inference. Inputs are quantized onto their
+    /// calibrated grids at the graph edge (the inserted quantize node);
+    /// every intermediate value stays i8-resident and outputs decode to
+    /// f32 at the end.
     pub fn run(&self, inputs: &[Tensor]) -> Vec<Tensor> {
-        let ids = self.graph.input_ids();
-        assert_eq!(inputs.len(), ids.len(), "graph {} input arity", self.graph.name);
-        let snapped: Vec<Tensor> = inputs
+        let g = &*self.graph;
+        let input_ids = g.input_ids();
+        assert_eq!(inputs.len(), input_ids.len(), "graph {} input arity", g.name);
+        // The same liveness walk as `ops::interp::run_graph`, over
+        // i8-resident values.
+        let mut uses: Vec<usize> = vec![0; g.len()];
+        for n in &g.nodes {
+            for &i in &n.inputs {
+                uses[i] += 1;
+            }
+        }
+        for &o in &g.outputs {
+            uses[o] += 1;
+        }
+        let mut vals: Vec<Option<QTensor>> = (0..g.len()).map(|_| None).collect();
+        let mut next_input = 0usize;
+        for n in &g.nodes {
+            let out = if matches!(n.op, OpKind::Input) {
+                let t = &inputs[next_input];
+                assert_eq!(t.shape(), &n.out.shape, "input {next_input} shape mismatch");
+                next_input += 1;
+                QTensor::quantize_with(t, self.run.grid(n.id))
+            } else {
+                let args: Vec<&QTensor> = n
+                    .inputs
+                    .iter()
+                    .map(|&i| vals[i].as_ref().expect("input value live"))
+                    .collect();
+                self.exec(n, &args)
+            };
+            vals[n.id] = Some(out);
+            for &i in &n.inputs {
+                uses[i] -= 1;
+                if uses[i] == 0 && !g.outputs.contains(&i) {
+                    vals[i] = None;
+                }
+            }
+        }
+        g.outputs
             .iter()
-            .zip(&ids)
-            .map(|(t, &id)| {
-                let mut t = t.clone();
-                snap_slice(&mut t.data, self.run.scales[id]);
-                t
-            })
-            .collect();
-        run_graph(&self.graph, &snapped, |n, args| self.exec(n, args), |_| {})
+            .map(|&o| vals[o].as_ref().expect("output computed").dequantize())
+            .collect()
     }
 
     /// Convenience: run on deterministic synthetic inputs from `seed`.
@@ -252,7 +575,7 @@ impl QuantEngine {
         self.run(&synthetic_inputs(&self.graph, seed))
     }
 
-    fn exec(&self, node: &Node, args: &[&Tensor]) -> Tensor {
+    fn exec(&self, node: &Node, args: &[&QTensor]) -> QTensor {
         let prm = self.params.get_ref(node.id);
         if self.pool.is_some()
             && self.run.plan.kinds[node.id] == QuantKind::IntDot
@@ -265,120 +588,138 @@ impl QuantEngine {
         qexec_node(&self.run, prm, node, args)
     }
 
-    /// Pool-chunked integer kernels for the dot-product family. Returns
-    /// `None` for shapes that must take the serial path.
-    fn exec_intdot_par(&self, node: &Node, prm: &NodeParams, args: &[&Tensor]) -> Option<Tensor> {
-        let out_scale = self.run.scales[node.id];
-        let mut t = match &node.op {
-            OpKind::Conv(a) => self.par_conv_int(node, prm, a, args[0])?,
-            OpKind::Cbr(a) => {
-                let mut c = self.par_conv_int(node, prm, a, args[0])?;
-                bn_relu_inplace(&mut c, &prm.scale, &prm.shift);
-                c
-            }
-            OpKind::Cbra(a, pl) | OpKind::Cbrm(a, pl) => {
-                let mut c = self.par_conv_int(node, prm, a, args[0])?;
-                bn_relu_inplace(&mut c, &prm.scale, &prm.shift);
-                crate::ops::pool::pool(&c, pl)
-            }
-            OpKind::MatMul(m) if m.weighted => {
-                let sx = self.run.scales[node.inputs[0]];
-                let rows = args[0].shape().numel() / m.k;
-                let qa = quantize_slice(&args[0].data, sx);
-                let qw = self.run.qweights(node.id);
-                let pool = self.pool.as_ref()?;
-                let mut out = vec![0.0f32; rows * m.n];
-                let ptr = SendPtr(out.as_mut_ptr());
-                let (k, n) = (m.k, m.n);
-                let sx_one = [sx];
-                let qa_ref: &[i8] = &qa;
-                let bias: &[f32] = &prm.bias;
-                let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
-                for (j0, j1) in chunks(n, self.workers) {
-                    jobs.push(Box::new(move || {
-                        // SAFETY: disjoint column ranges of the same buffer.
-                        unsafe {
-                            kernels::matmul_panel_raw_q8(
-                                qa_ref, rows, k, &qw.q, n, j0, j1, &sx_one, &qw.scale, &[],
-                                bias, ptr.0,
-                            )
-                        };
-                    }));
-                }
-                pool.run(jobs);
-                Tensor::new(node.out.clone(), out)
-            }
-            OpKind::MatMul(_) => {
-                let (sa, sb) = (self.run.scales[node.inputs[0]], self.run.scales[node.inputs[1]]);
-                let (m2, k) = (args[0].shape().dims[0], args[0].shape().dims[1]);
-                let n2 = args[1].shape().dims[1];
-                let qa = quantize_slice(&args[0].data, sa);
-                let qb = quantize_slice(&args[1].data, sb);
-                let pool = self.pool.as_ref()?;
-                let mut out = vec![0.0f32; m2 * n2];
-                let ptr = SendPtr(out.as_mut_ptr());
-                let (qa_ref, qb_ref): (&[i8], &[i8]) = (&qa, &qb);
-                let (sa_one, sb_one) = ([sa], [sb]);
-                let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
-                for (j0, j1) in chunks(n2, self.workers) {
-                    jobs.push(Box::new(move || {
-                        // SAFETY: disjoint column ranges of the same buffer.
-                        unsafe {
-                            kernels::matmul_panel_raw_q8(
-                                qa_ref, m2, k, qb_ref, n2, j0, j1, &sa_one, &sb_one, &[], &[],
-                                ptr.0,
-                            )
-                        };
-                    }));
-                }
-                pool.run(jobs);
-                Tensor::new(node.out.clone(), out)
-            }
-            _ => return None,
-        };
-        snap_slice(&mut t.data, out_scale);
-        Some(t)
-    }
-
-    /// Pool-chunked quantized convolution (batch 1): output channels
-    /// split across the workers, every chunk through the shared q8 tile
-    /// kernels.
-    fn par_conv_int(
+    /// Chunk one conv over the pool through the shared q8 region kernel
+    /// with an arbitrary epilogue. Chunk boundaries never change a bit.
+    #[allow(clippy::too_many_arguments)]
+    fn par_conv_regions<E: Epilogue>(
         &self,
-        node: &Node,
-        prm: &NodeParams,
         a: &ConvAttrs,
-        x: &Tensor,
-    ) -> Option<Tensor> {
-        let s = x.shape();
-        if s.n() != 1 {
-            return None;
-        }
-        let pool = self.pool.as_ref()?;
-        let sx = self.run.scales[node.inputs[0]];
-        let qx = quantize_slice(&x.data, sx);
-        let (h, w) = (s.h(), s.w());
-        let (oh, ow) = a.out_hw(h, w);
-        let qw = self.run.qweights(node.id);
-        let mut out = Tensor::zeros(crate::graph::TensorDesc::fm(1, a.out_c, oh, ow));
-        let ptr = SendPtr(out.data.as_mut_ptr());
+        qx: &[i8],
+        h: usize,
+        w: usize,
+        qwq: &[i8],
+        ep: &E,
+        out: *mut E::Out,
+        oh: usize,
+        ow: usize,
+    ) {
+        let pool = self.pool.as_ref().expect("parallel path");
+        let ptr = SendPtr(out);
         let a2 = *a;
-        let qx_ref: &[i8] = &qx;
-        let bias: &[f32] = &prm.bias;
         let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
         for (oc0, oc1) in chunks(a.out_c, self.workers) {
             jobs.push(Box::new(move || {
                 // SAFETY: disjoint output-channel regions of the same buffer.
                 unsafe {
                     kernels::conv2d_region_raw_q8(
-                        qx_ref, a2.in_c, h, w, &a2, qw, bias, sx, oc0, oc1, 0, oh, 0, ow, oh,
-                        ow, ptr.0,
+                        qx, a2.in_c, h, w, &a2, qwq, ep, oc0, oc1, 0, oh, 0, ow, oh, ow, ptr.0,
                     )
                 };
             }));
         }
         pool.run(jobs);
-        Some(out)
+    }
+
+    /// Pool-chunked integer kernels for the dot-product family. Returns
+    /// `None` for shapes that must take the serial path.
+    fn exec_intdot_par(&self, node: &Node, prm: &NodeParams, args: &[&QTensor]) -> Option<QTensor> {
+        self.pool.as_ref()?;
+        match &node.op {
+            OpKind::Conv(a) | OpKind::Cbr(a) => {
+                let s = args[0].shape();
+                if s.n() != 1 {
+                    return None;
+                }
+                let qx = self.run.intdot_codes(node.inputs[0], args[0]);
+                let (h, w) = (s.h(), s.w());
+                let (oh, ow) = a.out_hw(h, w);
+                let rq = self.run.requant(node.id)?;
+                let mut out = QTensor::zeros(node.out.clone(), self.run.grid(node.id).to_vec());
+                let ep = rq.epilogue();
+                self.par_conv_regions(
+                    a,
+                    &qx,
+                    h,
+                    w,
+                    &self.run.qweights(node.id).q,
+                    &ep,
+                    out.data.as_mut_ptr(),
+                    oh,
+                    ow,
+                );
+                Some(out)
+            }
+            OpKind::Cbra(a, pl) | OpKind::Cbrm(a, pl) => {
+                let s = args[0].shape();
+                if s.n() != 1 {
+                    return None;
+                }
+                let qx = self.run.intdot_codes(node.inputs[0], args[0]);
+                let (h, w) = (s.h(), s.w());
+                let (oh, ow) = a.out_hw(h, w);
+                let qw = self.run.qweights(node.id);
+                let ep = self.run.pool_link_epilogue(node.id, &prm.bias);
+                let mut c = Tensor::zeros(TensorDesc::fm(1, a.out_c, oh, ow));
+                self.par_conv_regions(a, &qx, h, w, &qw.q, &ep, c.data.as_mut_ptr(), oh, ow);
+                bn_relu_inplace(&mut c, &prm.scale, &prm.shift);
+                let p = crate::ops::pool::pool(&c, pl);
+                Some(QTensor::quantize_with(&p, self.run.grid(node.id)))
+            }
+            OpKind::MatMul(m) if m.weighted => {
+                let pool = self.pool.as_ref()?;
+                let qa = self.run.intdot_codes(node.inputs[0], args[0]);
+                let rows = args[0].shape().numel() / m.k;
+                let rq = self.run.requant(node.id)?;
+                let qw = self.run.qweights(node.id);
+                let mut out = QTensor::zeros(node.out.clone(), self.run.grid(node.id).to_vec());
+                let ptr = SendPtr(out.data.as_mut_ptr());
+                let ep = rq.epilogue();
+                let ep_ref = &ep;
+                let (k, n) = (m.k, m.n);
+                let qa_ref: &[i8] = &qa;
+                let qwq: &[i8] = &qw.q;
+                let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+                for (j0, j1) in chunks(n, self.workers) {
+                    jobs.push(Box::new(move || {
+                        // SAFETY: disjoint column ranges of the same buffer.
+                        unsafe {
+                            kernels::matmul_panel_raw_q8(
+                                qa_ref, rows, k, qwq, n, j0, j1, ep_ref, ptr.0,
+                            )
+                        };
+                    }));
+                }
+                pool.run(jobs);
+                Some(out)
+            }
+            OpKind::MatMul(_) => {
+                let pool = self.pool.as_ref()?;
+                let qa = self.run.intdot_codes(node.inputs[0], args[0]);
+                let qb = self.run.intdot_codes(node.inputs[1], args[1]);
+                let (m2, k) = (args[0].shape().dims[0], args[0].shape().dims[1]);
+                let n2 = args[1].shape().dims[1];
+                let rq = self.run.requant(node.id)?;
+                let mut out = QTensor::zeros(node.out.clone(), self.run.grid(node.id).to_vec());
+                let ptr = SendPtr(out.data.as_mut_ptr());
+                let ep = rq.epilogue();
+                let ep_ref = &ep;
+                let (qa_ref, qb_ref): (&[i8], &[i8]) = (&qa, &qb);
+                let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+                for (j0, j1) in chunks(n2, self.workers) {
+                    jobs.push(Box::new(move || {
+                        // SAFETY: disjoint column ranges of the same buffer.
+                        unsafe {
+                            kernels::matmul_panel_raw_q8(
+                                qa_ref, m2, k, qb_ref, n2, j0, j1, ep_ref, ptr.0,
+                            )
+                        };
+                    }));
+                }
+                pool.run(jobs);
+                Some(out)
+            }
+            _ => None,
+        }
     }
 }
 
@@ -435,7 +776,7 @@ mod tests {
         let diff = fo[0].max_abs_diff(&qo[0]);
         assert!(diff < 0.15, "int8 drifted {diff} from f32");
         let sum: f32 = qo[0].data.iter().sum();
-        assert!((sum - 1.0).abs() < 1e-3, "snapped softmax sums to {sum}");
+        assert!((sum - 1.0).abs() < 1e-3, "quantized softmax sums to {sum}");
     }
 
     #[test]
@@ -444,12 +785,61 @@ mod tests {
         let calib = calib_for(&g);
         let q = QuantEngine::new(g.clone(), &calib, 1).unwrap();
         let out = q.run_synthetic(8);
-        // The output node is Requant: every value must be k * scale.
-        let scale = q.run.scales[*g.outputs.first().unwrap()];
+        // The output node is Requant on a per-tensor grid (softmax over a
+        // matrix): every value must be k * scale.
+        let grid = q.run.grid(*g.outputs.first().unwrap());
+        assert_eq!(grid.len(), 1, "softmax output grid is per-tensor");
+        let scale = grid[0];
         for &v in &out[0].data {
             let k = (v / scale).round();
             assert!((v - k * scale).abs() < 1e-6, "{v} off the {scale} grid");
         }
+    }
+
+    #[test]
+    fn intdot_chains_run_with_zero_snap_roundtrips() {
+        // Fused CBR family (the MobileNet-style hot path): conv -> dw ->
+        // pw are adjacent IntDot nodes; their edges must carry codes
+        // only. Both the serial and the pooled engine pin the counter at
+        // zero while agreeing bit-for-bit.
+        let (fused, nf) = crate::opt::fusion::fuse_cbr(&cnn());
+        assert!(nf > 0, "fusion must produce CBR nodes");
+        let g = Arc::new(fused);
+        let calib = calib_for(&g);
+        let mut want: Option<Vec<Tensor>> = None;
+        for workers in [1usize, 4] {
+            let e = QuantEngine::new(g.clone(), &calib, workers).unwrap();
+            let got = e.run_synthetic(9);
+            assert_eq!(
+                e.snap_roundtrips(),
+                0,
+                "workers={workers}: integer edge materialized f32"
+            );
+            match &want {
+                None => want = Some(got),
+                Some(w) => {
+                    for (a, b) in w.iter().zip(&got) {
+                        assert_eq!(a.data, b.data, "workers={workers} diverged");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn per_channel_grids_cover_feature_maps_only() {
+        let g = cnn();
+        let calib = calib_for(&g);
+        let params = ParamStore::for_graph(&g);
+        let run = QuantRun::build(&g, &calib, |id| params.get_ref(id));
+        let id_of = |name: &str| g.nodes.iter().find(|n| n.name == name).unwrap().id;
+        // A conv feature map gets one scale per channel...
+        assert_eq!(run.grid(id_of("c1/conv")).len(), 16);
+        // ...and its ReLU (pass-through) inherits that grid verbatim.
+        assert_eq!(run.grid(id_of("c1/relu")), run.grid(id_of("c1/bn")));
+        // The 1x1 global-pool output and the FC matrix stay per-tensor.
+        assert_eq!(run.grid(id_of("gp")).len(), 1);
+        assert_eq!(run.grid(id_of("fc")).len(), 1);
     }
 
     #[test]

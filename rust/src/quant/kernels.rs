@@ -3,19 +3,30 @@
 //! (oc, oy) chunking, the pointwise fast path and the d-Xenos region
 //! shards route identically at both precisions.
 //!
+//! Every kernel is generic over its **epilogue** — how a finished i32
+//! accumulator segment becomes output elements:
+//!
+//! * [`FixedQ8`] — the fused requantize epilogue: per-output-channel
+//!   fixed-point multiplier+shift (+ bias, + optional fused ReLU as a
+//!   zero clamp) straight to i8 codes. This is the integer-resident hot
+//!   path: `IntDot → IntDot` edges never materialize f32.
+//! * [`DeqF32`] — dequantize to f32 with per-row/column scales and
+//!   biases; used where a float stage follows before requantization
+//!   (the linked CBRA/CBRM operators pool in f32) and at dequantize
+//!   boundaries.
+//!
 //! Correctness note that makes quantized execution *easier* to
 //! distribute than f32: the per-element reduction is an exact integer sum
 //! (`i8 × i8 → i32`; worst case `127·127·k` stays far below `i32::MAX`
-//! for every shape in the zoo), so **any** tiling or chunk order yields a
-//! bit-identical accumulator, and the single `acc → f32` requantization
-//! step is per-element. Parallel and sharded runs therefore match the
+//! for every shape in the zoo), and both epilogues are pure per-element
+//! functions of the accumulator, so **any** tiling or chunk order yields
+//! bit-identical output. Parallel and sharded runs therefore match the
 //! serial kernel without the careful shared-loop-order argument the f32
 //! path needs.
 
-use super::QWeights;
-use crate::graph::{ConvAttrs, TensorDesc};
+use super::fix_requant1;
+use crate::graph::ConvAttrs;
 use crate::ops::conv::is_pointwise_fast_path;
-use crate::ops::Tensor;
 
 /// Register-tile width of the packed i8 panel (matches the f32 kernel).
 const NR: usize = 8;
@@ -32,29 +43,121 @@ fn sc(scales: &[f32], i: usize) -> f32 {
     }
 }
 
+/// How one finished i32 accumulator segment becomes output elements.
+/// `store` writes `acc.len()` elements for output row `r` (output channel
+/// for convs, lhs row for matmuls), columns `c0..c0+acc.len()`, starting
+/// at `dst`.
+pub(crate) trait Epilogue: Sync {
+    type Out: Copy + Default;
+    /// # Safety
+    /// `dst` must point at `acc.len()` writable `Out` slots.
+    unsafe fn store(&self, r: usize, c0: usize, acc: &[i32], dst: *mut Self::Out);
+}
+
+/// Dequantizing f32 epilogue: `out = acc · row_scale(r) · col_scale(c) +
+/// row_bias[r] + col_bias[c]`. Scales are per-row/column or uniform when
+/// length 1; the bias slices may be empty.
+pub(crate) struct DeqF32<'a> {
+    pub row_scale: &'a [f32],
+    pub col_scale: &'a [f32],
+    pub row_bias: &'a [f32],
+    pub col_bias: &'a [f32],
+}
+
+/// The uniform unit column scale for epilogues whose full dequant factor
+/// lives on the row axis (convolutions with folded input grids).
+pub(crate) const UNIT: [f32; 1] = [1.0];
+
+impl Epilogue for DeqF32<'_> {
+    type Out = f32;
+
+    #[inline]
+    unsafe fn store(&self, r: usize, c0: usize, acc: &[i32], dst: *mut f32) {
+        let rs = sc(self.row_scale, r);
+        for (i, &v) in acc.iter().enumerate() {
+            let mut y = v as f32 * rs * sc(self.col_scale, c0 + i);
+            if !self.row_bias.is_empty() {
+                y += self.row_bias[r];
+            }
+            if !self.col_bias.is_empty() {
+                y += self.col_bias[c0 + i];
+            }
+            *dst.add(i) = y;
+        }
+    }
+}
+
+/// The fused fixed-point requantize epilogue: `code = clamp(round(acc ·
+/// mult·2^-shift + bias·2^-shift), lo, 127)`, per output channel
+/// (`by_col = false`, conv rows) or per output column (`by_col = true`,
+/// FC columns). Length-1 parameter slices are uniform. `lo = 0` fuses a
+/// ReLU into the clamp.
+pub(crate) struct FixedQ8<'a> {
+    pub mult: &'a [i32],
+    pub shift: &'a [u8],
+    pub bias: &'a [i64],
+    pub lo: i8,
+    pub by_col: bool,
+}
+
+impl Epilogue for FixedQ8<'_> {
+    type Out = i8;
+
+    #[inline]
+    unsafe fn store(&self, r: usize, c0: usize, acc: &[i32], dst: *mut i8) {
+        if self.by_col {
+            for (i, &v) in acc.iter().enumerate() {
+                let k = if self.mult.len() == 1 { 0 } else { c0 + i };
+                *dst.add(i) =
+                    fix_requant1(v, self.mult[k], self.shift[k], self.bias[k], self.lo);
+            }
+        } else {
+            let k = if self.mult.len() == 1 { 0 } else { r };
+            let (m, s, b) = (self.mult[k], self.shift[k], self.bias[k]);
+            for (i, &v) in acc.iter().enumerate() {
+                *dst.add(i) = fix_requant1(v, m, s, b, self.lo);
+            }
+        }
+    }
+}
+
+/// Row-offset adapter: presents an inner epilogue with `r0` added to
+/// every row index. The pointwise conv routes weight-row blocks through
+/// the packed panel kernel with block-local row numbers; this keeps the
+/// epilogue's per-output-channel indexing global.
+struct OffsetRows<'a, E: Epilogue> {
+    ep: &'a E,
+    r0: usize,
+}
+
+impl<E: Epilogue> Epilogue for OffsetRows<'_, E> {
+    type Out = E::Out;
+
+    #[inline]
+    unsafe fn store(&self, r: usize, c0: usize, acc: &[i32], dst: *mut E::Out) {
+        self.ep.store(self.r0 + r, c0, acc, dst);
+    }
+}
+
 /// Generic quantized conv tile: output channels `oc0..oc1`, rows
-/// `oy0..oy1`, columns `tx0..tx1` of batch `b`, written (requantized to
-/// f32) into the full `[n, out_c, oh, ow]` buffer behind `out`.
+/// `oy0..oy1`, columns `tx0..tx1` of batch `b`, written through the
+/// epilogue into the full `[n, out_c, oh, ow]` buffer behind `out`.
 ///
-/// `qx` is the i8 input `[n, in_c, h, w]` at per-tensor scale `sx`; `qw`
-/// the i8 weights in f32 layout with per-output-channel scales `sw`;
-/// `bias` the f32 bias (empty = none). Each output element is
-/// `acc_i32 · sx · sw[oc] + bias[oc]`.
+/// `qx` is the i8 input `[n, in_c, h, w]`; `qw` the i8 weights in f32
+/// layout. The epilogue's row index is the output channel.
 ///
 /// # Safety
-/// `out` must point at a live `n*out_c*oh*ow` f32 buffer. Concurrent
-/// calls on the same buffer must target disjoint `(oc, oy, ox)` tiles.
+/// `out` must point at a live `n*out_c*oh*ow` buffer. Concurrent calls
+/// on the same buffer must target disjoint `(oc, oy, ox)` tiles.
 #[allow(clippy::too_many_arguments)]
-pub(crate) unsafe fn conv2d_tile_raw_q8(
+pub(crate) unsafe fn conv2d_tile_raw_q8<E: Epilogue>(
     qx: &[i8],
     in_c: usize,
     h: usize,
     w: usize,
     attrs: &ConvAttrs,
     qw: &[i8],
-    sw: &[f32],
-    bias: &[f32],
-    sx: f32,
+    ep: &E,
     b: usize,
     oc0: usize,
     oc1: usize,
@@ -64,7 +167,7 @@ pub(crate) unsafe fn conv2d_tile_raw_q8(
     tx1: usize,
     oh: usize,
     ow: usize,
-    out: *mut f32,
+    out: *mut E::Out,
 ) {
     debug_assert_eq!(in_c, attrs.in_c, "q8 conv input channels");
     let cpg_in = attrs.in_c / attrs.groups;
@@ -80,8 +183,6 @@ pub(crate) unsafe fn conv2d_tile_raw_q8(
     for oc in oc0..oc1 {
         let g = oc / cpg_out;
         let w_base = oc * cpg_in * kw_elems;
-        let b0 = if bias.is_empty() { 0.0 } else { bias[oc] };
-        let dq = sx * sw[oc];
         for oy in oy0..oy1 {
             acc[tx0..tx1].fill(0);
             let iy0 = (oy * stride) as isize - pad as isize;
@@ -124,26 +225,21 @@ pub(crate) unsafe fn conv2d_tile_raw_q8(
                 }
             }
             let out_off = ((b * attrs.out_c + oc) * oh + oy) * ow;
-            let out_row = std::slice::from_raw_parts_mut(out.add(out_off), ow);
-            for ox in tx0..tx1 {
-                out_row[ox] = acc[ox] as f32 * dq + b0;
-            }
+            ep.store(oc, tx0, &acc[tx0..tx1], out.add(out_off + tx0));
         }
     }
 }
 
-/// Packed-panel i8 matmul over columns `[j0, j1)`:
-/// `out[i, j] = acc_i32(i, j) · row_scale(i) · col_scale(j) + row_bias[i]
-/// + col_bias[j]`, with `a` `[m, k]` and `bmat` `[k, n]` row-major i8.
-/// `row_scale`/`col_scale` are per-row/column, or uniform when length 1;
-/// the bias slices may be empty.
+/// Packed-panel i8 matmul over columns `[j0, j1)` of `a [m, k] × bmat
+/// [k, n]` (both row-major i8), accumulators finished through the
+/// epilogue (row index = lhs row, column index = rhs column).
 ///
 /// # Safety
-/// `out` must point at a live `m*n` f32 buffer. Concurrent calls on the
+/// `out` must point at a live `m*n` buffer. Concurrent calls on the
 /// same buffer must use disjoint column ranges (or disjoint row blocks
 /// via offset `a`/`out` pointers).
 #[allow(clippy::too_many_arguments)]
-pub(crate) unsafe fn matmul_panel_raw_q8(
+pub(crate) unsafe fn matmul_panel_raw_q8<E: Epilogue>(
     a: &[i8],
     m: usize,
     k: usize,
@@ -151,11 +247,8 @@ pub(crate) unsafe fn matmul_panel_raw_q8(
     n: usize,
     j0: usize,
     j1: usize,
-    row_scale: &[f32],
-    col_scale: &[f32],
-    row_bias: &[f32],
-    col_bias: &[f32],
-    out: *mut f32,
+    ep: &E,
+    out: *mut E::Out,
 ) {
     debug_assert!(a.len() >= m * k, "q8 lhs too small");
     debug_assert!(bmat.len() >= k * n, "q8 rhs too small");
@@ -190,17 +283,7 @@ pub(crate) unsafe fn matmul_panel_raw_q8(
                 }
             }
             for (r, row_acc) in acc.iter().enumerate() {
-                store_row_q8(
-                    row_acc,
-                    nw,
-                    out.add((i + r) * n + jb),
-                    jb,
-                    i + r,
-                    row_scale,
-                    col_scale,
-                    row_bias,
-                    col_bias,
-                );
+                ep.store(i + r, jb, &row_acc[..nw], out.add((i + r) * n + jb));
             }
             i += MR;
         }
@@ -214,104 +297,49 @@ pub(crate) unsafe fn matmul_panel_raw_q8(
                     acc[jj] += v * bv as i32;
                 }
             }
-            store_row_q8(
-                &acc,
-                nw,
-                out.add(i * n + jb),
-                jb,
-                i,
-                row_scale,
-                col_scale,
-                row_bias,
-                col_bias,
-            );
+            ep.store(i, jb, &acc[..nw], out.add(i * n + jb));
             i += 1;
         }
         jb += nw;
     }
 }
 
-/// Requantize one accumulated row segment to f32 with scales and biases.
-///
-/// # Safety
-/// `dst` must point at `nw` writable f32 slots.
-#[allow(clippy::too_many_arguments)]
-#[inline]
-unsafe fn store_row_q8(
-    acc: &[i32; NR],
-    nw: usize,
-    dst: *mut f32,
-    jb: usize,
-    row: usize,
-    row_scale: &[f32],
-    col_scale: &[f32],
-    row_bias: &[f32],
-    col_bias: &[f32],
-) {
-    let rs = sc(row_scale, row);
-    for (jj, &v) in acc.iter().enumerate().take(nw) {
-        let mut y = v as f32 * rs * sc(col_scale, jb + jj);
-        if !row_bias.is_empty() {
-            y += row_bias[row];
-        }
-        if !col_bias.is_empty() {
-            y += col_bias[jb + jj];
-        }
-        *dst.add(jj) = y;
-    }
-}
-
 /// Quantized 1×1/s1 conv tile as a grouped packed i8 panel product:
 /// weight rows `oc0..oc1` × pixel columns `[j0, j1)`, one panel product
 /// per intersected convolution group (mirrors `ops::conv::
-/// pointwise_tile_raw`).
+/// pointwise_tile_raw`). The epilogue sees **global** output-channel row
+/// indices.
 ///
 /// # Safety
-/// `out` must point at a live `out_c*hw` f32 buffer (batch 1); concurrent
+/// `out` must point at a live `out_c*hw` buffer (batch 1); concurrent
 /// calls must use disjoint `(oc, pixel)` regions.
 #[allow(clippy::too_many_arguments)]
-pub(crate) unsafe fn pointwise_tile_raw_q8(
+pub(crate) unsafe fn pointwise_tile_raw_q8<E: Epilogue>(
     qx: &[i8],
     hw: usize,
     attrs: &ConvAttrs,
     qw: &[i8],
-    sw: &[f32],
-    bias: &[f32],
-    sx: f32,
+    ep: &E,
     oc0: usize,
     oc1: usize,
     j0: usize,
     j1: usize,
-    out: *mut f32,
+    out: *mut E::Out,
 ) {
     let cpg_in = attrs.in_c / attrs.groups;
     let cpg_out = attrs.out_c / attrs.groups;
     debug_assert!(oc0 <= oc1 && oc1 <= attrs.out_c);
     debug_assert!(j0 <= j1 && j1 <= hw);
-    let sx_one = [sx];
     let mut r0 = oc0;
     while r0 < oc1 {
         let g = r0 / cpg_out;
         let r1 = ((g + 1) * cpg_out).min(oc1);
         let a = &qw[r0 * cpg_in..r1 * cpg_in];
         let xg = &qx[g * cpg_in * hw..(g + 1) * cpg_in * hw];
-        let row_bias = if bias.is_empty() { &[][..] } else { &bias[r0..r1] };
+        let off = OffsetRows { ep, r0 };
         // SAFETY: rows r0..r1 write only columns [j0, j1) of the disjoint
         // slice [r0*hw, r1*hw).
-        matmul_panel_raw_q8(
-            a,
-            r1 - r0,
-            cpg_in,
-            xg,
-            hw,
-            j0,
-            j1,
-            &sw[r0..r1],
-            &sx_one,
-            row_bias,
-            &[],
-            out.add(r0 * hw),
-        );
+        matmul_panel_raw_q8(a, r1 - r0, cpg_in, xg, hw, j0, j1, &off, out.add(r0 * hw));
         r0 = r1;
     }
 }
@@ -325,15 +353,14 @@ pub(crate) unsafe fn pointwise_tile_raw_q8(
 /// As [`conv2d_tile_raw_q8`]; concurrent calls must target disjoint
 /// regions.
 #[allow(clippy::too_many_arguments)]
-pub(crate) unsafe fn conv2d_region_raw_q8(
+pub(crate) unsafe fn conv2d_region_raw_q8<E: Epilogue>(
     qx: &[i8],
     in_c: usize,
     h: usize,
     w: usize,
     attrs: &ConvAttrs,
-    qw: &QWeights,
-    bias: &[f32],
-    sx: f32,
+    qw: &[i8],
+    ep: &E,
     oc0: usize,
     oc1: usize,
     oy0: usize,
@@ -342,7 +369,7 @@ pub(crate) unsafe fn conv2d_region_raw_q8(
     ox1: usize,
     oh: usize,
     ow: usize,
-    out: *mut f32,
+    out: *mut E::Out,
 ) {
     if oc0 >= oc1 || oy0 >= oy1 || ox0 >= ox1 {
         return;
@@ -350,19 +377,15 @@ pub(crate) unsafe fn conv2d_region_raw_q8(
     if is_pointwise_fast_path(attrs, 1) {
         let hw = h * w;
         if ox0 == 0 && ox1 == ow {
-            pointwise_tile_raw_q8(
-                qx, hw, attrs, &qw.q, &qw.scale, bias, sx, oc0, oc1, oy0 * ow, oy1 * ow, out,
-            );
+            pointwise_tile_raw_q8(qx, hw, attrs, qw, ep, oc0, oc1, oy0 * ow, oy1 * ow, out);
         } else {
             for oy in oy0..oy1 {
                 pointwise_tile_raw_q8(
                     qx,
                     hw,
                     attrs,
-                    &qw.q,
-                    &qw.scale,
-                    bias,
-                    sx,
+                    qw,
+                    ep,
                     oc0,
                     oc1,
                     oy * ow + ox0,
@@ -374,27 +397,25 @@ pub(crate) unsafe fn conv2d_region_raw_q8(
         return;
     }
     conv2d_tile_raw_q8(
-        qx, in_c, h, w, attrs, &qw.q, &qw.scale, bias, sx, 0, oc0, oc1, oy0, oy1, ox0, ox1, oh,
-        ow, out,
+        qx, in_c, h, w, attrs, qw, ep, 0, oc0, oc1, oy0, oy1, ox0, ox1, oh, ow, out,
     );
 }
 
-/// Serial quantized convolution entry: quantized input `qx` (`[n, in_c,
-/// h, w]` at scale `sx`), quantized weights, f32 bias — returns the
-/// requantized f32 output. Routes like `ops::conv::conv2d`.
-pub(crate) fn conv2d_q8(
+/// Serial quantized convolution entry: i8 input `[n, in_c, h, w]`, i8
+/// weights, output elements produced by the epilogue (i8 codes for
+/// [`FixedQ8`], f32 for [`DeqF32`]). Routes like `ops::conv::conv2d`.
+pub(crate) fn conv2d_q8<E: Epilogue>(
     qx: &[i8],
     n: usize,
     in_c: usize,
     h: usize,
     w: usize,
     attrs: &ConvAttrs,
-    qw: &QWeights,
-    bias: &[f32],
-    sx: f32,
-) -> Tensor {
+    qw: &[i8],
+    ep: &E,
+) -> Vec<E::Out> {
     let (oh, ow) = attrs.out_hw(h, w);
-    let mut out = Tensor::zeros(TensorDesc::fm(n, attrs.out_c, oh, ow));
+    let mut out = vec![E::Out::default(); n * attrs.out_c * oh * ow];
     if is_pointwise_fast_path(attrs, n) {
         // SAFETY: single-threaded call covering the whole [out_c, hw] range.
         unsafe {
@@ -402,15 +423,13 @@ pub(crate) fn conv2d_q8(
                 qx,
                 oh * ow,
                 attrs,
-                &qw.q,
-                &qw.scale,
-                bias,
-                sx,
+                qw,
+                ep,
                 0,
                 attrs.out_c,
                 0,
                 oh * ow,
-                out.data.as_mut_ptr(),
+                out.as_mut_ptr(),
             )
         };
         return out;
@@ -424,10 +443,8 @@ pub(crate) fn conv2d_q8(
                 h,
                 w,
                 attrs,
-                &qw.q,
-                &qw.scale,
-                bias,
-                sx,
+                qw,
+                ep,
                 b,
                 0,
                 attrs.out_c,
@@ -437,89 +454,80 @@ pub(crate) fn conv2d_q8(
                 ow,
                 oh,
                 ow,
-                out.data.as_mut_ptr(),
+                out.as_mut_ptr(),
             )
         };
     }
     out
 }
 
-/// Serial quantized FC: `[rows, k] × [k, n]` with per-column weight
-/// scales and f32 bias.
-pub(crate) fn fc_q8(
+/// Serial quantized FC: `[rows, k] × [k, n]` through the epilogue
+/// (column index = output feature).
+pub(crate) fn fc_q8<E: Epilogue>(
     qa: &[i8],
     rows: usize,
     k: usize,
     n: usize,
-    qw: &QWeights,
-    bias: &[f32],
-    sx: f32,
-) -> Vec<f32> {
-    let mut out = vec![0.0f32; rows * n];
-    let sx_one = [sx];
+    qw: &[i8],
+    ep: &E,
+) -> Vec<E::Out> {
+    let mut out = vec![E::Out::default(); rows * n];
     // SAFETY: `out` is exactly rows*n and the single call covers all columns.
-    unsafe {
-        matmul_panel_raw_q8(
-            qa,
-            rows,
-            k,
-            &qw.q,
-            n,
-            0,
-            n,
-            &sx_one,
-            &qw.scale,
-            &[],
-            bias,
-            out.as_mut_ptr(),
-        )
-    };
+    unsafe { matmul_panel_raw_q8(qa, rows, k, qw, n, 0, n, ep, out.as_mut_ptr()) };
     out
 }
 
-/// Serial quantized activation×activation matmul (`[m, k] × [k, n]`),
-/// uniform scales.
-pub(crate) fn matmul_q8(
+/// Serial quantized activation×activation matmul (`[m, k] × [k, n]`).
+pub(crate) fn matmul_q8<E: Epilogue>(
     qa: &[i8],
     m: usize,
     k: usize,
     qb: &[i8],
     n: usize,
-    sa: f32,
-    sb: f32,
-) -> Vec<f32> {
-    let mut out = vec![0.0f32; m * n];
-    let (sa_one, sb_one) = ([sa], [sb]);
+    ep: &E,
+) -> Vec<E::Out> {
+    let mut out = vec![E::Out::default(); m * n];
     // SAFETY: `out` is exactly m*n and the single call covers all columns.
-    unsafe {
-        matmul_panel_raw_q8(qa, m, k, qb, n, 0, n, &sa_one, &sb_one, &[], &[], out.as_mut_ptr())
-    };
+    unsafe { matmul_panel_raw_q8(qa, m, k, qb, n, 0, n, ep, out.as_mut_ptr()) };
     out
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::quant::{quantize_slice, scale_for};
+    use crate::quant::{fix_bias, fix_multiplier, quantize_slice, scale_for, QWeights};
     use crate::util::rng::Rng;
 
-    /// i64 reference for the q8 conv (no tiling, no panel packing).
+    /// i64 reference for the q8 conv accumulator, dequantized like the
+    /// f32 epilogue (no tiling, no panel packing).
     #[allow(clippy::too_many_arguments)]
     fn conv_ref(
         qx: &[i8],
-        in_c: usize,
         h: usize,
         w: usize,
         a: &ConvAttrs,
         qw: &[i8],
-        sw: &[f32],
+        dq: &[f32],
         bias: &[f32],
-        sx: f32,
     ) -> Vec<f32> {
+        let acc = conv_acc_ref(qx, h, w, a, qw);
+        let (oh, ow) = a.out_hw(h, w);
+        let mut out = vec![0.0f32; a.out_c * oh * ow];
+        for oc in 0..a.out_c {
+            let b0 = if bias.is_empty() { 0.0 } else { bias[oc] };
+            for i in 0..oh * ow {
+                out[oc * oh * ow + i] = acc[oc * oh * ow + i] as f32 * dq[oc] * 1.0 + b0;
+            }
+        }
+        out
+    }
+
+    /// Exact integer accumulators of a batch-1 q8 conv.
+    fn conv_acc_ref(qx: &[i8], h: usize, w: usize, a: &ConvAttrs, qw: &[i8]) -> Vec<i32> {
         let (oh, ow) = a.out_hw(h, w);
         let cpg_in = a.in_c / a.groups;
         let cpg_out = a.out_c / a.groups;
-        let mut out = vec![0.0f32; a.out_c * oh * ow];
+        let mut out = vec![0i32; a.out_c * oh * ow];
         for oc in 0..a.out_c {
             let g = oc / cpg_out;
             for oy in 0..oh {
@@ -542,12 +550,15 @@ mod tests {
                             }
                         }
                     }
-                    let b0 = if bias.is_empty() { 0.0 } else { bias[oc] };
-                    out[(oc * oh + oy) * ow + ox] = acc as i32 as f32 * (sx * sw[oc]) + b0;
+                    out[(oc * oh + oy) * ow + ox] = acc as i32;
                 }
             }
         }
         out
+    }
+
+    fn dq_of(qw: &QWeights, sx: f32) -> Vec<f32> {
+        qw.scale.iter().map(|&s| sx * s).collect()
     }
 
     #[test]
@@ -566,9 +577,11 @@ mod tests {
             let wts = rng.vec_uniform(a.weight_count() as usize);
             let qw = QWeights::per_row(&wts, a.out_c, a.in_c / a.groups * a.kh * a.kw);
             let bias = rng.vec_uniform(a.out_c);
-            let got = conv2d_q8(&qx, 1, a.in_c, h, w, &a, &qw, &bias, sx);
-            let want = conv_ref(&qx, a.in_c, h, w, &a, &qw.q, &qw.scale, &bias, sx);
-            assert_eq!(got.data, want, "attrs {a:?}");
+            let dq = dq_of(&qw, sx);
+            let ep = DeqF32 { row_scale: &dq, col_scale: &UNIT, row_bias: &bias, col_bias: &[] };
+            let got = conv2d_q8(&qx, 1, a.in_c, h, w, &a, &qw.q, &ep);
+            let want = conv_ref(&qx, h, w, &a, &qw.q, &dq, &bias);
+            assert_eq!(got, want, "attrs {a:?}");
         }
     }
 
@@ -587,7 +600,9 @@ mod tests {
             let wts = rng.vec_uniform(a.weight_count() as usize);
             let qw = QWeights::per_row(&wts, a.out_c, a.in_c / a.groups * a.kh * a.kw);
             let bias = rng.vec_uniform(a.out_c);
-            let full = conv2d_q8(&qx, 1, a.in_c, h, w, &a, &qw, &bias, sx);
+            let dq = dq_of(&qw, sx);
+            let ep = DeqF32 { row_scale: &dq, col_scale: &UNIT, row_bias: &bias, col_bias: &[] };
+            let full = conv2d_q8(&qx, 1, a.in_c, h, w, &a, &qw.q, &ep);
             let (oh, ow) = a.out_hw(h, w);
             for splits in [
                 vec![(0, 2, 0, oh, 0, ow), (2, a.out_c, 0, oh, 0, ow)],
@@ -598,12 +613,78 @@ mod tests {
                 for (c0, c1, y0, y1, x0, x1) in splits {
                     unsafe {
                         conv2d_region_raw_q8(
-                            &qx, a.in_c, h, w, &a, &qw, &bias, sx, c0, c1, y0, y1, x0, x1, oh,
-                            ow, got.as_mut_ptr(),
+                            &qx, a.in_c, h, w, &a, &qw.q, &ep, c0, c1, y0, y1, x0, x1, oh, ow,
+                            got.as_mut_ptr(),
                         )
                     };
                 }
-                assert_eq!(got, full.data, "attrs {a:?}");
+                assert_eq!(got, full, "attrs {a:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn fixed_epilogue_matches_scalar_reference_and_splits() {
+        // The fused i8 epilogue reproduces fix_requant1 per element, for
+        // every conv route (tile, pointwise panel, depthwise), and any
+        // region split is bit-identical — the property that makes the
+        // integer-resident path shardable.
+        let mut rng = Rng::new(54);
+        for a in [
+            ConvAttrs::std(4, 6, 3, 1, 1),
+            ConvAttrs::std(6, 8, 1, 1, 0),
+            ConvAttrs::depthwise(6, 3, 1, 1),
+        ] {
+            let (h, w) = (8usize, 8usize);
+            let x = rng.vec_uniform(a.in_c * h * w);
+            let sx = scale_for(1.0);
+            let qx = quantize_slice(&x, sx);
+            let wts = rng.vec_uniform(a.weight_count() as usize);
+            let qw = QWeights::per_row(&wts, a.out_c, a.in_c / a.groups * a.kh * a.kw);
+            let bias = rng.vec_uniform(a.out_c);
+            let s_out = scale_for(2.0);
+            // Per-channel fixed-point plan: code = round(acc·sx·sw/s_out +
+            // bias/s_out), fused ReLU on odd channels.
+            let mut mult = Vec::new();
+            let mut shift = Vec::new();
+            let mut bfx = Vec::new();
+            for oc in 0..a.out_c {
+                let (m, s) = fix_multiplier(sx * qw.scale[oc] / s_out);
+                mult.push(m);
+                shift.push(s);
+                bfx.push(fix_bias(bias[oc] / s_out, s));
+            }
+            for lo in [-127i8, 0] {
+                let ep =
+                    FixedQ8 { mult: &mult, shift: &shift, bias: &bfx, lo, by_col: false };
+                let got = conv2d_q8(&qx, 1, a.in_c, h, w, &a, &qw.q, &ep);
+                let acc = conv_acc_ref(&qx, h, w, &a, &qw.q);
+                let (oh, ow) = a.out_hw(h, w);
+                for oc in 0..a.out_c {
+                    for i in 0..oh * ow {
+                        let want = fix_requant1(
+                            acc[oc * oh * ow + i],
+                            mult[oc],
+                            shift[oc],
+                            bfx[oc],
+                            lo,
+                        );
+                        assert_eq!(got[oc * oh * ow + i], want, "attrs {a:?} oc={oc} i={i}");
+                    }
+                }
+                // Region splits over the i8 output are bit-identical.
+                let mut split = vec![0i8; a.out_c * oh * ow];
+                for (c0, c1, y0, y1) in
+                    [(0, 2, 0, oh), (2, a.out_c, 0, 3), (2, a.out_c, 3, oh)]
+                {
+                    unsafe {
+                        conv2d_region_raw_q8(
+                            &qx, a.in_c, h, w, &a, &qw.q, &ep, c0, c1, y0, y1, 0, ow, oh, ow,
+                            split.as_mut_ptr(),
+                        )
+                    };
+                }
+                assert_eq!(split, got, "attrs {a:?} lo={lo}");
             }
         }
     }
@@ -615,7 +696,10 @@ mod tests {
         let a: Vec<i8> = quantize_slice(&rng.vec_uniform(m * k), scale_for(1.0));
         let b: Vec<i8> = quantize_slice(&rng.vec_uniform(k * n), scale_for(1.0));
         let (sa, sb) = (0.013f32, 0.02f32);
-        let full = matmul_q8(&a, m, k, &b, n, sa, sb);
+        let rs = [sa];
+        let cs = [sb];
+        let ep = DeqF32 { row_scale: &rs, col_scale: &cs, row_bias: &[], col_bias: &[] };
+        let full = matmul_q8(&a, m, k, &b, n, &ep);
         // Integer reference.
         for i in 0..m {
             for j in 0..n {
@@ -628,13 +712,8 @@ mod tests {
         }
         // Column splits are bit-identical.
         let mut split = vec![0.0f32; m * n];
-        let (sa_one, sb_one) = ([sa], [sb]);
         for (j0, j1) in [(0usize, 5usize), (5, 12), (12, 19)] {
-            unsafe {
-                matmul_panel_raw_q8(
-                    &a, m, k, &b, n, j0, j1, &sa_one, &sb_one, &[], &[], split.as_mut_ptr(),
-                )
-            };
+            unsafe { matmul_panel_raw_q8(&a, m, k, &b, n, j0, j1, &ep, split.as_mut_ptr()) };
         }
         assert_eq!(full, split);
     }
@@ -649,17 +728,58 @@ mod tests {
         let w = rng.vec_uniform(k * n);
         let qw = QWeights::per_col(&w, k, n);
         let bias = rng.vec_uniform(n);
-        let got = fc_q8(&qa, rows, k, n, &qw, &bias, sx);
+        let dq: Vec<f32> = qw.scale.iter().map(|&s| sx * s).collect();
+        let rs = [1.0f32];
+        let ep = DeqF32 { row_scale: &rs, col_scale: &dq, row_bias: &[], col_bias: &bias };
+        let got = fc_q8(&qa, rows, k, n, &qw.q, &ep);
         for i in 0..rows {
             for j in 0..n {
                 let mut acc: i64 = 0;
                 for kk in 0..k {
                     acc += qa[i * k + kk] as i64 * qw.q[kk * n + j] as i64;
                 }
-                let want = acc as i32 as f32 * sx * qw.scale[j] + bias[j];
+                let want = acc as i32 as f32 * 1.0 * dq[j] + bias[j];
                 assert_eq!(got[i * n + j], want, "({i},{j})");
             }
         }
+    }
+
+    #[test]
+    fn fc_fixed_epilogue_indexes_per_column() {
+        // by_col epilogues pick multiplier j for output column j — the FC
+        // layout — and column splits stay bit-identical.
+        let mut rng = Rng::new(55);
+        let (rows, k, n) = (4usize, 12usize, 7usize);
+        let qa = quantize_slice(&rng.vec_uniform(rows * k), scale_for(1.0));
+        let w = rng.vec_uniform(k * n);
+        let qw = QWeights::per_col(&w, k, n);
+        let s_out = scale_for(3.0);
+        let mut mult = Vec::new();
+        let mut shift = Vec::new();
+        let mut bfx = Vec::new();
+        for j in 0..n {
+            let (m, s) = fix_multiplier(qw.scale[j] / s_out);
+            mult.push(m);
+            shift.push(s);
+            bfx.push(fix_bias(0.1 * j as f32, s));
+        }
+        let ep = FixedQ8 { mult: &mult, shift: &shift, bias: &bfx, lo: -127, by_col: true };
+        let full = fc_q8(&qa, rows, k, n, &qw.q, &ep);
+        for i in 0..rows {
+            for j in 0..n {
+                let mut acc: i64 = 0;
+                for kk in 0..k {
+                    acc += qa[i * k + kk] as i64 * qw.q[kk * n + j] as i64;
+                }
+                let want = fix_requant1(acc as i32, mult[j], shift[j], bfx[j], -127);
+                assert_eq!(full[i * n + j], want, "({i},{j})");
+            }
+        }
+        let mut split = vec![0i8; rows * n];
+        for (j0, j1) in [(0usize, 3usize), (3, 7)] {
+            unsafe { matmul_panel_raw_q8(&qa, rows, k, &qw.q, n, j0, j1, &ep, split.as_mut_ptr()) };
+        }
+        assert_eq!(split, full);
     }
 
     #[test]
@@ -670,7 +790,8 @@ mod tests {
         let k = 2048 * 9;
         let qa = vec![127i8; k];
         let qb = vec![-127i8; k]; // [k, 1]
-        let got = matmul_q8(&qa, 1, k, &qb, 1, 1.0, 1.0);
+        let ep = DeqF32 { row_scale: &UNIT, col_scale: &UNIT, row_bias: &[], col_bias: &[] };
+        let got = matmul_q8(&qa, 1, k, &qb, 1, &ep);
         let want = -(127i64 * 127 * k as i64);
         assert!(want.abs() < i32::MAX as i64);
         assert_eq!(got[0], want as i32 as f32);

@@ -6,26 +6,29 @@
 //!
 //! * **Static symmetric quantization.** A calibration pass ([`calib`])
 //!   runs representative f32 inputs through the serial interpreter and
-//!   records per-channel activation ranges; engines derive one symmetric
-//!   per-tensor scale per activation and per-output-channel scales per
-//!   weight tensor. No scale is ever computed from live data, so every
-//!   engine — serial, parallel, cluster shard — quantizes identically.
-//! * **Grid-snapped activations.** Every quantized node's f32 output is
-//!   *snapped* to its i8 grid (`dequant(quant(x))`): the value that flows
-//!   along an edge is exactly representable as `q * scale` with `q ∈
-//!   [-127, 127]`. Re-quantizing a snapped value recovers `q` exactly, so
-//!   the d-Xenos runtime ships raw i8 halo/all-gather payloads
-//!   (`dist::exec`) with **zero additional error** — a 4× cut in
-//!   activation traffic, the DEFER observation applied to this runtime.
-//! * **Integer accumulation.** The kernels in [`kernels`] accumulate
-//!   `i8 × i8` products in `i32`. Integer sums are exact under any
-//!   evaluation order, so every (oc, oy, ox) tiling — worker-pool chunks,
-//!   cluster shards — is bit-identical to the serial result *by
+//!   records per-channel activation ranges; engines derive symmetric
+//!   per-channel activation grids for feature maps (per-tensor for
+//!   everything else) and per-output-channel scales per weight tensor. No
+//!   scale is ever computed from live data, so every engine — serial,
+//!   parallel, cluster shard — quantizes identically.
+//! * **i8-resident activations.** Quantized values flow between operators
+//!   as [`QTensor`]s — raw i8 codes plus their decode grid. Integer
+//!   operators ([`crate::opt::quant::QuantKind::IntDot`]) consume and
+//!   produce codes directly through the fused requantize epilogue in
+//!   [`kernels`]; f32 is materialized only at dequantize boundaries
+//!   (graph outputs and f32-computed operators). There is **no**
+//!   i8→f32→i8 round-trip on an `IntDot → IntDot` edge — the
+//!   [`exec::QuantRun`] counter `snap_roundtrips` pins this at zero.
+//! * **Integer accumulation + fixed-point requantization.** The kernels
+//!   in [`kernels`] accumulate `i8 × i8` products in `i32` and requantize
+//!   with a per-output-channel fixed-point multiplier+shift
+//!   ([`fix_requant1`]), so every (oc, oy, ox) tiling — worker-pool
+//!   chunks, cluster shards — is bit-identical to the serial result *by
 //!   arithmetic*, an even stronger guarantee than the f32 kernels'
 //!   shared-loop-order argument.
 //!
-//! Precision is planned per node by [`crate::opt::quant`] (which
-//! quantize/dequantize boundaries exist and which fold away), executed by
+//! Precision is planned per node by [`crate::opt::quant`] (which edges
+//! stay i8-resident and which get dequantize boundaries), executed by
 //! [`exec::QuantEngine`] on one host and by the quantized mode of
 //! [`crate::dist::exec::ShardWorker`] on a cluster.
 
@@ -79,8 +82,15 @@ pub fn scale_for(max_abs: f32) -> f32 {
     }
 }
 
-/// Quantize one value: round-to-nearest (ties away from zero), saturated
-/// to `[-127, 127]` — the symmetric range, so negation stays exact.
+/// Quantize one value, saturated to `[-127, 127]` — the symmetric range,
+/// so negation stays exact.
+///
+/// **Rounding mode (pinned):** round-to-nearest with **ties away from
+/// zero** — `f32::round` semantics, so `+0.5·scale → +1` and
+/// `-0.5·scale → -1`. Every other quantization site in the system (the
+/// fixed-point kernel epilogue [`fix_requant1`], the cluster workers'
+/// grid packing) reproduces exactly this mode; the boundary-value tests
+/// below and in `kernels` pin it so the paths can never drift.
 #[inline]
 pub fn quant1(v: f32, scale: f32) -> i8 {
     (v / scale).round().clamp(-127.0, 127.0) as i8
@@ -117,10 +127,94 @@ pub fn snap_slice(x: &mut [f32], scale: f32) {
     }
 }
 
-/// An i8 tensor: quantized payload plus the scales that decode it.
+/// Scale lookup on an activation grid / per-channel scale vector: a
+/// length-1 vector is uniform (per-tensor), anything longer indexes per
+/// channel.
+#[inline]
+pub fn grid_scale(grid: &[f32], ch: usize) -> f32 {
+    if grid.len() == 1 {
+        grid[0]
+    } else {
+        grid[ch]
+    }
+}
+
+// ---------------------------------------------------------------------
+// Fixed-point requantization — the integer twin of `quant1`.
+//
+// An i32 accumulator becomes an i8 code through `q = clamp(round((acc *
+// eff_scale) + eff_bias))` where `eff_scale`/`eff_bias` fold the input
+// grid, the per-channel weight scale, any fused BatchNorm affine and the
+// output grid. The kernels evaluate this in pure integer arithmetic:
+// `eff_scale ≈ mult · 2^-shift` (i32 mantissa) and `eff_bias ≈ bias_fx ·
+// 2^-shift` (i64), with [`fix_round`] reproducing `quant1`'s
+// ties-away-from-zero rounding. Per-element and integer-exact, so every
+// tiling/chunking/sharding of a kernel yields bit-identical codes.
+// ---------------------------------------------------------------------
+
+/// Largest shift [`fix_multiplier`] emits. Bounded so `acc·mult +
+/// bias_fx` stays comfortably inside i64 (`|acc·mult| < 2^62`,
+/// `|bias_fx| ≤ 2^61`).
+pub(crate) const FIX_SHIFT_MAX: u8 = 46;
+
+/// Decompose `scale` as `mult · 2^-shift` with `mult: i32` (sign carried
+/// by `mult`) and `shift ∈ [1, FIX_SHIFT_MAX]`, maximizing mantissa
+/// precision. Degenerate scales (0, non-finite) map to `(0, 1)`.
+pub(crate) fn fix_multiplier(scale: f32) -> (i32, u8) {
+    if scale == 0.0 || !scale.is_finite() {
+        return (0, 1);
+    }
+    let a = scale.abs() as f64;
+    let mut m = a;
+    let mut e = 0i32;
+    while m < 0.5 {
+        m *= 2.0;
+        e -= 1;
+    }
+    while m >= 1.0 {
+        m /= 2.0;
+        e += 1;
+    }
+    // a = m · 2^e with m ∈ [0.5, 1); mult = a · 2^shift ∈ [2^30, 2^31].
+    let shift = (31 - e).clamp(1, FIX_SHIFT_MAX as i32);
+    let mult = (a * (1u64 << shift) as f64).round().min(i32::MAX as f64) as i32;
+    (if scale < 0.0 { -mult } else { mult }, shift as u8)
+}
+
+/// The fixed-point image of an f32 bias term at `2^-shift` precision,
+/// saturated to ±2^61 so the kernel epilogue's i64 sum cannot overflow.
+pub(crate) fn fix_bias(bias: f32, shift: u8) -> i64 {
+    let lim = (1i64 << 61) as f64;
+    (bias as f64 * (1u64 << shift) as f64).round().clamp(-lim, lim) as i64
+}
+
+/// Round `v · 2^-shift` to the nearest integer, **ties away from zero**
+/// — the integer twin of `f32::round` as used by [`quant1`]. `shift`
+/// must be ≥ 1.
+#[inline]
+pub(crate) fn fix_round(v: i64, shift: u8) -> i64 {
+    let half = 1i64 << (shift - 1);
+    if v >= 0 {
+        (v + half) >> shift
+    } else {
+        -((-v + half) >> shift)
+    }
+}
+
+/// Requantize one i32 accumulator to an i8 code: `clamp(round(acc·mult·
+/// 2^-shift + bias·2^-shift), lo, 127)`. `lo = 0` realizes a fused ReLU
+/// (clamping at zero *is* ReLU on a symmetric grid), `lo = -127`
+/// otherwise.
+#[inline]
+pub(crate) fn fix_requant1(acc: i32, mult: i32, shift: u8, bias: i64, lo: i8) -> i8 {
+    let v = acc as i64 * mult as i64 + bias;
+    fix_round(v, shift).clamp(lo as i64, 127) as i8
+}
+
+/// An i8 tensor: quantized payload plus the grid that decodes it.
 ///
-/// `scale` holds one entry for per-tensor quantization (activations) or
-/// one entry per output channel (conv/FC weights); `desc.dtype` is
+/// `scale` holds one entry for per-tensor quantization or one entry per
+/// channel (feature-map activations, conv/FC weights); `desc.dtype` is
 /// [`DType::I8`], so byte accounting through the simulator and the wire
 /// sees the real 1-byte elements.
 #[derive(Debug, Clone, PartialEq)]
@@ -134,17 +228,77 @@ pub struct QTensor {
 impl QTensor {
     /// Quantize a float tensor with one per-tensor scale.
     pub fn quantize(x: &Tensor, scale: f32) -> QTensor {
-        let mut desc = x.desc.clone();
-        desc.dtype = DType::I8;
-        QTensor { desc, data: quantize_slice(&x.data, scale), scale: vec![scale] }
+        Self::quantize_with(x, &[scale])
     }
 
-    /// Decode back to f32 (per-tensor scale only).
+    /// Quantize a float tensor onto a grid: per-channel when `grid` has
+    /// one entry per feature-map channel, per-tensor when it has one.
+    pub fn quantize_with(x: &Tensor, grid: &[f32]) -> QTensor {
+        let mut desc = x.desc.clone();
+        desc.dtype = DType::I8;
+        let data = if grid.len() == 1 {
+            quantize_slice(&x.data, grid[0])
+        } else {
+            let s = x.shape();
+            assert!(s.is_fm(), "per-channel grid on a non-feature-map tensor");
+            let (n, c, h, w) = (s.n(), s.c(), s.h(), s.w());
+            assert_eq!(grid.len(), c, "grid length does not match channels");
+            let hw = h * w;
+            let mut out = Vec::with_capacity(x.data.len());
+            for b in 0..n {
+                for (ch, &sc) in grid.iter().enumerate() {
+                    let base = (b * c + ch) * hw;
+                    out.extend(x.data[base..base + hw].iter().map(|&v| quant1(v, sc)));
+                }
+            }
+            out
+        };
+        QTensor { desc, data, scale: grid.to_vec() }
+    }
+
+    /// An all-zero code buffer on `grid` with the f32 `desc`'s shape —
+    /// the starting point for kernels that fill disjoint regions.
+    pub fn zeros(desc: TensorDesc, grid: Vec<f32>) -> QTensor {
+        let mut desc = desc;
+        desc.dtype = DType::I8;
+        let n = desc.shape.numel();
+        QTensor { desc, data: vec![0i8; n], scale: grid }
+    }
+
+    /// Wrap raw codes produced by a kernel epilogue.
+    pub fn from_codes(desc: TensorDesc, data: Vec<i8>, grid: Vec<f32>) -> QTensor {
+        let mut desc = desc;
+        desc.dtype = DType::I8;
+        debug_assert_eq!(desc.shape.numel(), data.len(), "code buffer size mismatch");
+        QTensor { desc, data, scale: grid }
+    }
+
+    /// Decode back to f32 (per-tensor or per-channel grid).
     pub fn dequantize(&self) -> Tensor {
-        assert_eq!(self.scale.len(), 1, "per-channel QTensor needs a channel-aware decoder");
         let mut desc = self.desc.clone();
         desc.dtype = DType::F32;
-        Tensor::new(desc, dequantize_slice(&self.data, self.scale[0]))
+        let data = if self.scale.len() == 1 {
+            dequantize_slice(&self.data, self.scale[0])
+        } else {
+            let s = &self.desc.shape;
+            let (n, c, h, w) = (s.n(), s.c(), s.h(), s.w());
+            debug_assert_eq!(self.scale.len(), c, "grid length does not match channels");
+            let hw = h * w;
+            let mut out = Vec::with_capacity(self.data.len());
+            for b in 0..n {
+                for (ch, &sc) in self.scale.iter().enumerate() {
+                    let base = (b * c + ch) * hw;
+                    out.extend(self.data[base..base + hw].iter().map(|&q| dequant1(q, sc)));
+                }
+            }
+            out
+        };
+        Tensor::new(desc, data)
+    }
+
+    /// The decoded shape (same as the f32 tensor's).
+    pub fn shape(&self) -> &crate::graph::Shape {
+        &self.desc.shape
     }
 
     /// Payload bytes (1 per element).
@@ -162,7 +316,9 @@ impl QTensor {
 pub struct QWeights {
     /// Quantized weights, same element order as the f32 original.
     pub q: Vec<i8>,
-    /// One scale per output channel/column.
+    /// One scale per output channel/column. When the weights were folded
+    /// with the input activation grid (see [`exec::QuantRun`]), this is
+    /// the **complete** dequantization factor of an i32 accumulator.
     pub scale: Vec<f32>,
 }
 
@@ -229,6 +385,78 @@ mod tests {
     }
 
     #[test]
+    fn rounding_mode_is_ties_away_from_zero() {
+        // The pinned mode: exact half-step inputs round away from zero.
+        // (f32 `round`, not round-half-even — a drift here would silently
+        // desynchronize the fixed-point kernel epilogue from `quant1`.)
+        let s = 1.0f32; // ±0.5·scale inputs are exactly representable
+        assert_eq!(quant1(0.5, s), 1);
+        assert_eq!(quant1(-0.5, s), -1);
+        assert_eq!(quant1(1.5, s), 2);
+        assert_eq!(quant1(-1.5, s), -2);
+        assert_eq!(quant1(0.25, s), 0);
+        assert_eq!(quant1(-0.25, s), 0);
+        // And at a non-unit scale with exactly representable half steps.
+        let s = 0.25f32;
+        assert_eq!(quant1(0.125, s), 1);
+        assert_eq!(quant1(-0.125, s), -1);
+    }
+
+    #[test]
+    fn fix_round_matches_f32_round_ties() {
+        // fix_round(v, s) rounds v·2^-s with the same ties-away rule:
+        // value k + 0.5 rounds to k+1 for k ≥ 0 and to k for k ≤ -1
+        // (away from zero in both cases).
+        for shift in [1u8, 4, 17, 31] {
+            let one = 1i64 << shift;
+            for k in -5i64..=5 {
+                let tie = k * one + one / 2; // value = k + 0.5 exactly
+                let want = if k >= 0 { k + 1 } else { k };
+                assert_eq!(fix_round(tie, shift), want, "tie shift={shift} k={k}");
+                // Just below / above the tie round to the nearest integer.
+                assert_eq!(fix_round(tie - 1, shift), k, "below tie k={k}");
+                assert_eq!(fix_round(tie + 1, shift), k + 1, "above tie k={k}");
+            }
+        }
+    }
+
+    #[test]
+    fn fix_requant_tracks_f32_requant_within_one_code() {
+        // The fixed-point epilogue reproduces clamp(round(acc·es + eb))
+        // to within one code of the f64 reference over a dense sweep
+        // (exact agreement away from representation boundaries).
+        let mut rng = crate::util::rng::Rng::new(77);
+        for _ in 0..200 {
+            let es = (rng.vec_uniform(1)[0]) * 0.01; // eff scales, ± and tiny
+            let eb = rng.vec_uniform(1)[0] * 3.0;
+            let (mult, shift) = fix_multiplier(es);
+            let bias = fix_bias(eb, shift);
+            for acc in [-300_000i32, -1234, -1, 0, 1, 999, 250_000] {
+                let got = fix_requant1(acc, mult, shift, bias, -127);
+                let want = (acc as f64 * es as f64 + eb as f64)
+                    .round()
+                    .clamp(-127.0, 127.0) as i32;
+                assert!(
+                    (got as i32 - want).abs() <= 1,
+                    "acc={acc} es={es} eb={eb}: fixed {got} vs f64 {want}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fix_multiplier_handles_degenerate_and_negative_scales() {
+        assert_eq!(fix_multiplier(0.0), (0, 1));
+        assert_eq!(fix_multiplier(f32::NAN), (0, 1));
+        let (m, s) = fix_multiplier(-0.125);
+        assert!(m < 0, "sign carried by the mantissa");
+        let back = m as f64 / (1u64 << s) as f64;
+        assert!((back + 0.125).abs() < 1e-9, "decomposition inverts: {back}");
+        // relu clamp: lo = 0 suppresses negatives entirely.
+        assert_eq!(fix_requant1(100, m, s, 0, 0), 0);
+    }
+
+    #[test]
     fn snapped_values_requantize_exactly() {
         let s = scale_for(3.7);
         for q in -127i32..=127 {
@@ -255,6 +483,27 @@ mod tests {
         let y = q.dequantize();
         assert_eq!(y.shape(), x.shape());
         assert!(x.max_abs_diff(&y) <= scale_for(1.0) / 2.0 + 1e-7);
+    }
+
+    #[test]
+    fn per_channel_qtensor_roundtrips_each_channel_on_its_grid() {
+        let x = Tensor::fm(1, 2, 2, 2, vec![0.5, -0.25, 1.0, -1.0, 4.0, -2.0, 8.0, 0.0]);
+        let grid = vec![scale_for(1.0), scale_for(8.0)];
+        let q = QTensor::quantize_with(&x, &grid);
+        assert_eq!(q.scale, grid);
+        let y = q.dequantize();
+        for ch in 0..2 {
+            for i in 0..4 {
+                let idx = ch * 4 + i;
+                assert!(
+                    (y.data[idx] - x.data[idx]).abs() <= grid[ch] / 2.0 + 1e-6,
+                    "ch={ch} i={i}"
+                );
+            }
+        }
+        // Snapped values recover their codes exactly, per channel.
+        let q2 = QTensor::quantize_with(&y, &grid);
+        assert_eq!(q.data, q2.data);
     }
 
     #[test]

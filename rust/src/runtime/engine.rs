@@ -15,9 +15,12 @@
 //!   [`ClusterDriver`](crate::dist::exec::ClusterDriver) spreading each
 //!   inference across shard workers (in-process or remote TCP).
 //! * **Quant** — the INT8 engine ([`QuantEngine`]): calibrated symmetric
-//!   quantization with integer kernels, serial or worker-pool-chunked
-//!   (`serve --precision int8 --engine interp|par`; the cluster engine
-//!   goes quantized through [`ClusterDriver::local_q8`]).
+//!   quantization with integer kernels and an i8-resident dataflow
+//!   (activations flow between operators as codes; the fused fixed-point
+//!   requantize epilogue means no f32 materialization between adjacent
+//!   integer layers), serial or worker-pool-chunked (`serve --precision
+//!   int8 --engine interp|par`; the cluster engine goes quantized through
+//!   [`ClusterDriver::local_q8`]).
 
 use std::sync::Arc;
 use std::time::Instant;

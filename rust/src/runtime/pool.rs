@@ -17,6 +17,17 @@ type Job = Box<dyn FnOnce() + Send + 'static>;
 /// A job borrowing from the submitting scope.
 pub type ScopedJob<'env> = Box<dyn FnOnce() + Send + 'env>;
 
+/// Raw output pointer crossing into pool jobs — shared by every engine
+/// that fans kernels out over a [`WorkerPool`] (the parallel plan
+/// executor, the INT8 engine, the d-Xenos shard workers). Jobs must write
+/// **disjoint** regions only.
+#[derive(Clone, Copy)]
+pub(crate) struct SendPtr<T>(pub(crate) *mut T);
+// SAFETY: only dereferenced on disjoint regions while the owning buffer is
+// kept alive by the blocking `WorkerPool::run` call.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
 /// The pool.
 pub struct WorkerPool {
     txs: Vec<Sender<Job>>,

@@ -21,7 +21,8 @@ use std::sync::{Arc, Mutex};
 
 use xenos::dist::exec::wire::TAG_Q8;
 use xenos::dist::exec::{
-    plan_cluster, ClusterDriver, LocalTransport, ShardParams, ShardWorker, Transport,
+    plan_cluster, quant_row_offset, ClusterDriver, LocalTransport, ShardParams, ShardWorker,
+    Transport,
 };
 use xenos::dist::{PartitionScheme, SyncMode};
 use xenos::graph::{models, Graph, GraphBuilder, Shape};
@@ -84,17 +85,22 @@ fn assert_quant_engines_bit_identical(g: &Graph, seed: u64) {
     ] {
         for p in [2usize, 3] {
             for sync in [SyncMode::Ring, SyncMode::Ps] {
-                let driver =
-                    ClusterDriver::local_q8(ga.clone(), &d, p, scheme, sync, 1, &calib)
-                        .expect("quant cluster spins up");
-                let got = driver.infer(&inputs).expect("quant cluster inference");
-                assert_eq!(want.len(), got.len());
-                for (a, b) in want.iter().zip(&got) {
-                    assert_eq!(
-                        a.data, b.data,
-                        "{}: {scheme:?} p={p} {sync:?} diverged from single-device quant",
-                        g.name
-                    );
+                // threads > 1 exercises the worker-pool-chunked quantized
+                // shard kernels (ROADMAP follow-up (d)) — still bit-exact.
+                for threads in [1usize, 2] {
+                    let driver =
+                        ClusterDriver::local_q8(ga.clone(), &d, p, scheme, sync, threads, &calib)
+                            .expect("quant cluster spins up");
+                    let got = driver.infer(&inputs).expect("quant cluster inference");
+                    assert_eq!(want.len(), got.len());
+                    for (a, b) in want.iter().zip(&got) {
+                        assert_eq!(
+                            a.data, b.data,
+                            "{}: {scheme:?} p={p} {sync:?} t={threads} diverged from \
+                             single-device quant",
+                            g.name
+                        );
+                    }
                 }
             }
         }
@@ -126,6 +132,78 @@ fn quant_engines_bit_identical_on_fully_optimized_graph() {
         xenos::opt::OptimizeOptions { level: xenos::opt::OptLevel::Full, search: false },
     );
     assert_quant_engines_bit_identical(&o.graph, 67);
+}
+
+/// The tentpole acceptance property: on a fused MobileNet-style chain
+/// every `IntDot → IntDot` edge stays i8-resident — **zero** snap
+/// round-trips — on the serial engine, the worker-pool engine and every
+/// cluster rank, while all of them agree bit-for-bit.
+#[test]
+fn integer_dataflow_has_zero_snap_roundtrips_across_engines() {
+    let (fused, nf) = xenos::opt::fusion::fuse_cbr(&small_cnn());
+    assert!(nf > 0, "fusion must produce CBR nodes");
+    let g = Arc::new(fused);
+    let calib = calib_for(&g);
+    let inputs = synthetic_inputs(&g, 70);
+
+    let serial = QuantEngine::new(g.clone(), &calib, 1).expect("quant engine");
+    let want = serial.run(&inputs);
+    assert_eq!(serial.snap_roundtrips(), 0, "serial engine round-tripped an integer edge");
+    let pooled = QuantEngine::new(g.clone(), &calib, 4).expect("quant engine");
+    let got = pooled.run(&inputs);
+    assert_eq!(pooled.snap_roundtrips(), 0, "pooled engine round-tripped an integer edge");
+    for (a, b) in want.iter().zip(&got) {
+        assert_eq!(a.data, b.data, "pooled engine diverged");
+    }
+
+    // Cluster ranks, built by hand so each rank's QuantRun is inspectable
+    // (threads = 2 also exercises the chunked quantized shard kernels).
+    let d = presets::tms320c6678();
+    let p = 2usize;
+    for scheme in [PartitionScheme::Mix, PartitionScheme::OutC, PartitionScheme::InH] {
+        let plan = plan_cluster(&g, &d, p, scheme, SyncMode::Ring);
+        let master = ParamStore::for_graph(&g);
+        let mut workers = Vec::new();
+        let mut runs = Vec::new();
+        for (rank, t) in LocalTransport::mesh(p).into_iter().enumerate() {
+            let shard = ShardParams::extract(&g, &plan, &master, rank);
+            let quant = Arc::new(QuantRun::build_with_offsets(
+                &g,
+                &calib,
+                |id| shard.get(id),
+                |id| quant_row_offset(&g, &plan, rank, id),
+            ));
+            runs.push(quant.clone());
+            workers.push(ShardWorker::with_quant(
+                g.clone(),
+                plan.clone(),
+                shard,
+                Box::new(t),
+                2,
+                Some(quant),
+            ));
+        }
+        let outs: Vec<Vec<Tensor>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = workers
+                .into_iter()
+                .map(|w| {
+                    let inputs = inputs.clone();
+                    scope.spawn(move || w.run(&inputs))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("rank")).collect()
+        });
+        for (rank, got) in outs.iter().enumerate() {
+            assert_eq!(got[0].data, want[0].data, "{scheme:?}: rank {rank} diverged");
+        }
+        for (rank, run) in runs.iter().enumerate() {
+            assert_eq!(
+                run.snap_roundtrips(),
+                0,
+                "{scheme:?}: rank {rank} round-tripped an integer edge"
+            );
+        }
+    }
 }
 
 #[test]
