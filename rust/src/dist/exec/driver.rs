@@ -21,11 +21,11 @@ use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
-use super::plan::{plan_cluster, ClusterPlan};
+use super::plan::{plan_cluster_opts, ClusterPlan};
 use super::shard::ShardParams;
 use super::transport::{accept_peers, LocalTransport, TcpTransport};
 use super::wire::{self, JobSpec};
-use super::worker::ShardWorker;
+use super::worker::{ShardWorker, SyncSnapshot, SyncStats};
 use crate::dist::{PartitionScheme, SyncMode};
 use crate::graph::{models, Graph, Shape};
 use crate::hw::{self, DeviceModel};
@@ -39,6 +39,7 @@ const INFER_TIMEOUT: Duration = Duration::from_secs(300);
 /// A handle on a running cluster; `infer` runs one distributed inference.
 pub struct ClusterDriver {
     graph: Arc<Graph>,
+    plan: ClusterPlan,
     scheme: PartitionScheme,
     sync: SyncMode,
     precision: Precision,
@@ -62,7 +63,7 @@ impl ClusterDriver {
         sync: SyncMode,
         threads: usize,
     ) -> Result<ClusterDriver> {
-        Self::local_with(graph, device, p, scheme, sync, threads, None)
+        Self::local_opts(graph, device, p, scheme, sync, threads, None, true)
     }
 
     /// Spin up an INT8 local cluster: shard workers execute the quantized
@@ -78,12 +79,15 @@ impl ClusterDriver {
         threads: usize,
         calib: &CalibTable,
     ) -> Result<ClusterDriver> {
-        calib.matches(&graph)?;
-        Self::local_with(graph, device, p, scheme, sync, threads, Some(calib))
+        Self::local_opts(graph, device, p, scheme, sync, threads, Some(calib), true)
     }
 
+    /// The fully-parameterized local constructor: optional calibration
+    /// (INT8 when present) and the shard-resident dataflow knob —
+    /// `resident = false` reproduces the eager-gather plan (the
+    /// `dist-run --no-resident` baseline).
     #[allow(clippy::too_many_arguments)]
-    fn local_with(
+    pub fn local_opts(
         graph: Arc<Graph>,
         device: &DeviceModel,
         p: usize,
@@ -91,14 +95,18 @@ impl ClusterDriver {
         sync: SyncMode,
         threads: usize,
         calib: Option<&CalibTable>,
+        resident: bool,
     ) -> Result<ClusterDriver> {
+        if let Some(c) = calib {
+            c.matches(&graph)?;
+        }
         let p = p.max(1);
-        let plan = plan_cluster(&graph, device, p, scheme, sync);
-        let master = ParamStore::for_graph(&graph);
         let precision = if calib.is_some() { Precision::Int8 } else { Precision::F32 };
+        let plan = plan_cluster_opts(&graph, device, p, scheme, sync, precision, resident);
+        let master = ParamStore::for_graph(&graph);
         let backend =
             Backend::Local(LocalCluster::spawn(&graph, &plan, &master, threads, calib)?);
-        Ok(ClusterDriver { graph, scheme, sync, precision, world: p, backend })
+        Ok(ClusterDriver { graph, plan, scheme, sync, precision, world: p, backend })
     }
 
     /// Connect to remote `xenos dist-worker` processes at `hosts` (rank
@@ -112,7 +120,7 @@ impl ClusterDriver {
         sync: SyncMode,
         threads: usize,
     ) -> Result<ClusterDriver> {
-        Self::tcp_with(hosts, model, device_name, scheme, sync, threads, None)
+        Self::tcp_opts(hosts, model, device_name, scheme, sync, threads, None, true)
     }
 
     /// As [`ClusterDriver::tcp`] at INT8: the calibration table is shipped
@@ -127,10 +135,14 @@ impl ClusterDriver {
         threads: usize,
         calib: &CalibTable,
     ) -> Result<ClusterDriver> {
-        Self::tcp_with(hosts, model, device_name, scheme, sync, threads, Some(calib))
+        Self::tcp_opts(hosts, model, device_name, scheme, sync, threads, Some(calib), true)
     }
 
-    fn tcp_with(
+    /// The fully-parameterized TCP constructor — see
+    /// [`ClusterDriver::local_opts`]. The `resident` knob travels in the
+    /// [`JobSpec`] so every worker cuts the identical plan.
+    #[allow(clippy::too_many_arguments)]
+    pub fn tcp_opts(
         hosts: &[String],
         model: &str,
         device_name: &str,
@@ -138,6 +150,7 @@ impl ClusterDriver {
         sync: SyncMode,
         threads: usize,
         calib: Option<&CalibTable>,
+        resident: bool,
     ) -> Result<ClusterDriver> {
         anyhow::ensure!(!hosts.is_empty(), "need at least one worker host");
         let graph = Arc::new(
@@ -149,9 +162,9 @@ impl ClusterDriver {
         let device = hw::by_name(device_name)
             .with_context(|| format!("unknown device {device_name}"))?;
         let p = hosts.len();
-        let plan = plan_cluster(&graph, &device, p, scheme, sync);
-        let master = ParamStore::for_graph(&graph);
         let precision = if calib.is_some() { Precision::Int8 } else { Precision::F32 };
+        let plan = plan_cluster_opts(&graph, &device, p, scheme, sync, precision, resident);
+        let master = ParamStore::for_graph(&graph);
         let mut ctrls = Vec::with_capacity(p);
         for (rank, host) in hosts.iter().enumerate() {
             let mut sock = TcpStream::connect(host)
@@ -166,6 +179,7 @@ impl ClusterDriver {
                 scheme,
                 sync,
                 precision,
+                resident,
                 peers: hosts.to_vec(),
             };
             wire::write_frame(&mut sock, wire::CTRL_SPEC, &wire::encode_spec(&spec))?;
@@ -177,7 +191,7 @@ impl ClusterDriver {
             ctrls.push(sock);
         }
         let backend = Backend::Tcp(TcpCluster { ctrls: Mutex::new(ctrls) });
-        Ok(ClusterDriver { graph, scheme, sync, precision, world: p, backend })
+        Ok(ClusterDriver { graph, plan, scheme, sync, precision, world: p, backend })
     }
 
     /// Cluster size.
@@ -188,6 +202,20 @@ impl ClusterDriver {
     /// The model graph being served.
     pub fn graph(&self) -> &Graph {
         &self.graph
+    }
+
+    /// The cluster plan in effect (schemes + residency decisions).
+    pub fn plan(&self) -> &ClusterPlan {
+        &self.plan
+    }
+
+    /// Rank 0's measured synchronization counters (local clusters only;
+    /// TCP workers keep their counters in their own processes).
+    pub fn sync_stats(&self) -> Option<SyncSnapshot> {
+        match &self.backend {
+            Backend::Local(c) => c.stats.first().map(|s| s.snapshot()),
+            Backend::Tcp(_) => None,
+        }
     }
 
     /// Input shapes of the model.
@@ -243,6 +271,9 @@ type RoundResult = Result<Vec<Tensor>, String>;
 struct LocalCluster {
     round: Mutex<LocalRound>,
     handles: Vec<JoinHandle<()>>,
+    /// Per-rank sync counters, cloned out before the workers moved into
+    /// their threads (rank order).
+    stats: Vec<Arc<SyncStats>>,
 }
 
 struct LocalRound {
@@ -263,6 +294,7 @@ impl LocalCluster {
         let (out_tx, out_rx) = channel::<RoundResult>();
         let mut job_txs = Vec::with_capacity(p);
         let mut handles = Vec::with_capacity(p);
+        let mut stats = Vec::with_capacity(p);
         for (rank, transport) in mesh.into_iter().enumerate() {
             let (job_tx, job_rx) = channel::<Vec<Tensor>>();
             let shard = ShardParams::extract(graph, plan, master, rank);
@@ -285,6 +317,7 @@ impl LocalCluster {
                 threads,
                 quant,
             );
+            stats.push(worker.stats());
             let out_tx = out_tx.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("xenos-shard-{rank}"))
@@ -302,7 +335,7 @@ impl LocalCluster {
             job_txs.push(job_tx);
             handles.push(handle);
         }
-        Ok(LocalCluster { round: Mutex::new(LocalRound { job_txs, out_rx }), handles })
+        Ok(LocalCluster { round: Mutex::new(LocalRound { job_txs, out_rx }), handles, stats })
     }
 
     fn infer(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
@@ -432,7 +465,17 @@ fn serve_session(listener: &TcpListener, ctrl: &mut TcpStream, spec: &JobSpec) -
     );
     let device = hw::by_name(&spec.device)
         .with_context(|| format!("unknown device {}", spec.device))?;
-    let plan = plan_cluster(&graph, &device, spec.world, spec.scheme, spec.sync);
+    // The same deterministic cut the driver made: scheme, precision and
+    // residency knob all travel in the spec.
+    let plan = plan_cluster_opts(
+        &graph,
+        &device,
+        spec.world,
+        spec.scheme,
+        spec.sync,
+        spec.precision,
+        spec.resident,
+    );
 
     // INT8 jobs ship their calibration table right after the parameters;
     // the worker rebuilds the same quantized run from its own shard.

@@ -5,16 +5,22 @@
 //! |--------|------|
 //! | [`transport`] | `Transport` trait; in-process + TCP meshes |
 //! | [`wire`] | frame format + control protocol serialization |
-//! | [`plan`] | per-operator cluster cut (`ClusterPlan`) |
+//! | [`plan`] | per-operator cluster cut + per-value residency (`ClusterPlan`) |
 //! | [`shard`] | shard-weight extraction (`ShardParams`) |
 //! | [`worker`] | `ShardWorker`: one rank's engine slice |
 //! | [`driver`] | `ClusterDriver`: local threads or TCP workers |
 //!
-//! The correctness contract: for every scheme and cluster size, cluster
-//! output is element-wise identical to the single-device serial
-//! interpreter — sharded kernels share the serial code paths, OutC
-//! reassembly and spatial gathers are verbatim copies, and halo exchanges
-//! only move data that one rank computed and another reads.
+//! The correctness contract: for every scheme, sync mode, precision and
+//! cluster size — with or without the shard-resident activation dataflow
+//! — cluster output is element-wise identical to the single-device
+//! reference engine. Sharded kernels share the serial code paths, OutC
+//! reassembly and spatial gathers are verbatim copies, halo exchanges
+//! only move data that one rank computed and another reads, and the
+//! resident-dataflow rewrites are bit-preserving by construction:
+//! aligned consumers read exactly the bytes they would have read from
+//! the gathered copy, and the INT8 partial-sum route reduces exact `i32`
+//! accumulators ([`wire::TAG_I32`] frames), whose addition is
+//! associative.
 
 pub mod driver;
 pub mod plan;
@@ -24,8 +30,11 @@ pub mod wire;
 pub mod worker;
 
 pub use driver::{serve_listener, ClusterDriver};
-pub use plan::{plan_cluster, ClusterPlan, LayerScheme};
+pub use plan::{
+    outc_slices, plan_cluster, plan_cluster_opts, ClusterPlan, LayerScheme, Residency,
+    SyncAccounting,
+};
 pub use shard::{quant_row_offset, ShardParams};
 pub use transport::{LocalTransport, TcpTransport, Transport, WireScalar};
 pub use wire::JobSpec;
-pub use worker::ShardWorker;
+pub use worker::{ShardWorker, SyncSnapshot, SyncStats};

@@ -2,12 +2,32 @@
 //! `p`-device cluster, chosen by the same cost model the d-Xenos simulator
 //! prices (`dist::simulate_dxenos`), restricted to modes the runtime can
 //! execute for the operator's kind.
+//!
+//! Beyond the per-operator [`LayerScheme`], the plan carries the
+//! **inter-layer dataflow decision** this module's second half computes:
+//! per-value [`Residency`]. An OutC-sharded operator's activation either
+//! reassembles on every rank with an all-gather ([`Residency::Gathered`],
+//! the classic mode) or stays **shard-resident**
+//! ([`Residency::ResidentOutC`]): each rank keeps only its own
+//! output-channel slice, per-element operators carry the slices forward,
+//! channel-aligned grouped/depthwise consumers read their slice with zero
+//! traffic, and (INT8 only) dense consumers reduce partial sums with an
+//! exact i32 reduce-scatter instead of gather + recompute. The decision is
+//! made by a sync-traffic cost model (`decide_residency`) that accounts
+//! wire bytes at the plan's [`Precision`] — f32 activations at 4 B/elem,
+//! i8 codes at 1 B/elem, i32 partial sums at 4 B/elem — so `Mix` cuts and
+//! residency choices both trade f32-vs-int8 traffic per layer.
+//! [`ClusterPlan::accounting`] reports the resulting traffic against the
+//! all-gathered baseline.
 
-use crate::dist::{PartitionScheme, SyncMode};
-use crate::graph::{Graph, Node, OpKind};
+use crate::dist::{halo_bytes, PartitionScheme, SyncMode};
+use crate::graph::{Graph, Node, NodeId, OpKind};
 use crate::hw::DeviceModel;
 use crate::opt::{dos, OptLevel};
+use crate::quant::Precision;
 use crate::sim::cost::node_cost;
+
+use super::shard::conv_channel_share;
 
 /// Per-operator execution mode on the cluster.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -26,6 +46,25 @@ pub enum LayerScheme {
     InW,
 }
 
+/// How one node's output activation is distributed across the cluster
+/// after it is produced (the per-edge dataflow decision of the paper's
+/// dataflow-centric thesis, applied *between* ranks).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Residency {
+    /// The full activation is reassembled on every rank (OutC layers
+    /// all-gather eagerly; everything else is replicated or spatially
+    /// sharded as before).
+    Gathered,
+    /// The value stays output-channel sharded: rank `r`'s authoritative
+    /// channel range is `slices[r]` of a full-size (zero-padded) buffer.
+    /// No all-gather is issued when the value is produced; consumers
+    /// either read their own slice (channel-aligned grouped/depthwise
+    /// convs, per-element operators that carry the slices forward), run
+    /// an exact i32 partial-sum reduce-scatter (INT8 dense convs), or
+    /// force a lazy gather (anything else — the re-gather fallback).
+    ResidentOutC(Vec<(usize, usize)>),
+}
+
 /// A whole-graph cluster cut.
 #[derive(Debug, Clone)]
 pub struct ClusterPlan {
@@ -33,15 +72,164 @@ pub struct ClusterPlan {
     pub world: usize,
     /// Synchronization mode the collectives route through.
     pub sync: SyncMode,
+    /// Numeric precision the plan's byte accounting (and the partial-sum
+    /// eligibility rule) assumed. Int8 prices activations at 1 B/elem.
+    pub precision: Precision,
     /// Per-node execution mode, indexed by `NodeId`.
     pub schemes: Vec<LayerScheme>,
+    /// Per-node activation residency, indexed by `NodeId`.
+    pub residency: Vec<Residency>,
+    /// Per-node flag: this (dense, OutC, INT8) convolution consumes its
+    /// shard-resident input by computing i32 partial sums over its own
+    /// input-channel slice and reduce-scattering them, instead of
+    /// gathering the input. Ranks hold **full** (unsliced) weights for
+    /// these nodes.
+    pub partial: Vec<bool>,
 }
 
 impl ClusterPlan {
+    /// An all-gathered plan around hand-built `schemes` — the residency
+    /// baseline, and the constructor tests use for bespoke cuts.
+    pub fn gathered(world: usize, sync: SyncMode, schemes: Vec<LayerScheme>) -> ClusterPlan {
+        let n = schemes.len();
+        ClusterPlan {
+            world,
+            sync,
+            precision: Precision::F32,
+            schemes,
+            residency: vec![Residency::Gathered; n],
+            partial: vec![false; n],
+        }
+    }
+
     /// Number of sharded (non-replicated) operators.
     pub fn sharded_count(&self) -> usize {
         self.schemes.iter().filter(|s| **s != LayerScheme::Replicated).count()
     }
+
+    /// Number of values planned shard-resident.
+    pub fn resident_count(&self) -> usize {
+        self.residency.iter().filter(|r| **r != Residency::Gathered).count()
+    }
+
+    /// True when some consumer of `id` (or the graph output contract)
+    /// still needs the full value on every rank — the lazy re-gather the
+    /// runtime performs on first such use.
+    pub(crate) fn needs_full(&self, g: &Graph, id: NodeId) -> bool {
+        let slices = match &self.residency[id] {
+            Residency::ResidentOutC(s) => s,
+            Residency::Gathered => return true,
+        };
+        if g.outputs.contains(&id) {
+            return true;
+        }
+        g.nodes.iter().any(|n| {
+            n.inputs.contains(&id)
+                && !self.partial[n.id]
+                && !aligned_resident_consumer(self.world, slices, &self.schemes, id, n)
+                && self.residency[n.id] == Residency::Gathered
+        })
+    }
+
+    /// Static synchronization-traffic accounting of this plan: OutC
+    /// all-gathers (issued and skipped), partial-sum reduce-scatters and
+    /// spatial halo estimates, in wire bytes at the plan's precision —
+    /// next to the bytes the same cut would move with every value
+    /// [`Residency::Gathered`] (the pre-residency baseline).
+    pub fn accounting(&self, g: &Graph) -> SyncAccounting {
+        let mut acc = SyncAccounting::default();
+        if self.world <= 1 {
+            return acc;
+        }
+        for node in &g.nodes {
+            match self.schemes[node.id] {
+                LayerScheme::OutC => {
+                    acc.outc_values += 1;
+                    let bytes = wire_bytes(node.out.bytes(), self.precision);
+                    acc.gathered_bytes += bytes;
+                    match &self.residency[node.id] {
+                        Residency::Gathered => {
+                            acc.all_gathers += 1;
+                            acc.sync_bytes += bytes;
+                        }
+                        Residency::ResidentOutC(_) => {
+                            acc.resident_values += 1;
+                            if self.needs_full(g, node.id) {
+                                // The chain is interrupted: the gather
+                                // still happens, just lazily.
+                                acc.all_gathers += 1;
+                                acc.sync_bytes += bytes;
+                            } else {
+                                acc.gathers_skipped += 1;
+                            }
+                        }
+                    }
+                }
+                LayerScheme::InH | LayerScheme::InW => {
+                    let by_rows = self.schemes[node.id] == LayerScheme::InH;
+                    let hb =
+                        wire_bytes(halo_bytes(g, node, self.world, by_rows), self.precision);
+                    acc.sync_bytes += hb;
+                    acc.gathered_bytes += hb;
+                    // A spatially-sharded value consumed by anything but a
+                    // same-axis spatial consumer — or exposed as a graph
+                    // output — is lazily gathered to full exactly once,
+                    // identically under both dataflows.
+                    let gathers = g.outputs.contains(&node.id)
+                        || g.nodes.iter().any(|c| {
+                            c.inputs.contains(&node.id)
+                                && self.schemes[c.id] != self.schemes[node.id]
+                        });
+                    if gathers {
+                        let bytes = wire_bytes(node.out.bytes(), self.precision);
+                        acc.all_gathers += 1;
+                        acc.sync_bytes += bytes;
+                        acc.gathered_bytes += bytes;
+                    }
+                }
+                LayerScheme::Replicated => {
+                    if self.residency[node.id] != Residency::Gathered {
+                        acc.resident_values += 1;
+                        // An interrupted chain (hand-built plans only: the
+                        // cost model never emits one) lazily re-gathers
+                        // the chain value — a cost residency introduces,
+                        // absent from the all-gathered baseline where
+                        // replicated values are already full everywhere.
+                        if self.needs_full(g, node.id) {
+                            acc.all_gathers += 1;
+                            acc.sync_bytes += wire_bytes(node.out.bytes(), self.precision);
+                        }
+                    }
+                }
+            }
+            if self.partial[node.id] {
+                acc.reduce_scatters += 1;
+                acc.sync_bytes += node.out.shape.numel() as u64 * 4; // i32
+            }
+        }
+        acc
+    }
+}
+
+/// Plan-level synchronization traffic summary ([`ClusterPlan::accounting`]).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SyncAccounting {
+    /// OutC-sharded operators in the cut.
+    pub outc_values: usize,
+    /// Values planned shard-resident (OutC producers and the per-element
+    /// chain nodes that carry their slices forward).
+    pub resident_values: usize,
+    /// All-gathers the plan issues (eager + forced lazy re-gathers).
+    pub all_gathers: usize,
+    /// All-gathers residency eliminates outright.
+    pub gathers_skipped: usize,
+    /// Partial-sum i32 reduce-scatters.
+    pub reduce_scatters: usize,
+    /// Wire bytes one inference synchronizes under this plan.
+    pub sync_bytes: u64,
+    /// Wire bytes the same cut would synchronize with every value
+    /// gathered (the pre-residency baseline).
+    pub gathered_bytes: u64,
 }
 
 /// How many independent outC slices a node offers (0 = not outC-shardable).
@@ -110,10 +298,22 @@ pub(crate) fn applicable(g: &Graph, node: &Node, scheme: LayerScheme) -> bool {
     }
 }
 
-/// Cut `g` for a `p`-device cluster of `device`s. Single-mode schemes
-/// apply their mode to every operator that supports it (the paper's
-/// Fig. 11 single-mode arms); `Mix` picks the cheapest applicable mode per
-/// operator with the analytic cost model (Algorithm 1).
+/// Wire bytes of an f32-sized payload at a precision: INT8 clusters ship
+/// activations as 1-byte codes (the [`crate::dist::exec::wire::TAG_Q8`]
+/// frame format), so every byte figure the cost model compares — OutC
+/// gathers, spatial halos — shrinks 4×. This is the quantized byte
+/// accounting folded into the DOS-style cluster cost model (ROADMAP quant
+/// follow-up (e)): at Int8, `Mix` trades i8 sync traffic against compute,
+/// not the f32 figure.
+pub(crate) fn wire_bytes(f32_bytes: u64, precision: Precision) -> u64 {
+    match precision {
+        Precision::F32 => f32_bytes,
+        Precision::Int8 => f32_bytes / 4,
+    }
+}
+
+/// Cut `g` for a `p`-device cluster of `device`s at f32 with residency
+/// enabled — see [`plan_cluster_opts`] for the knobs.
 pub fn plan_cluster(
     g: &Graph,
     device: &DeviceModel,
@@ -121,17 +321,37 @@ pub fn plan_cluster(
     scheme: PartitionScheme,
     sync: SyncMode,
 ) -> ClusterPlan {
+    plan_cluster_opts(g, device, p, scheme, sync, Precision::F32, true)
+}
+
+/// Cut `g` for a `p`-device cluster of `device`s. Single-mode schemes
+/// apply their mode to every operator that supports it (the paper's
+/// Fig. 11 single-mode arms); `Mix` picks the cheapest applicable mode per
+/// operator with the analytic cost model (Algorithm 1), pricing sync
+/// traffic in wire bytes at `precision`. When `resident` is set (the
+/// default entry [`plan_cluster`]), a second pass keeps OutC activations
+/// shard-resident wherever the sync-byte model says the chain is cheaper
+/// than gathering (`decide_residency`); `resident = false` reproduces
+/// the eager-gather dataflow (the `--no-resident` baseline).
+pub fn plan_cluster_opts(
+    g: &Graph,
+    device: &DeviceModel,
+    p: usize,
+    scheme: PartitionScheme,
+    sync: SyncMode,
+    precision: Precision,
+    resident: bool,
+) -> ClusterPlan {
     let p = p.max(1);
     if p == 1 {
-        return ClusterPlan {
-            world: 1,
-            sync,
-            schemes: vec![LayerScheme::Replicated; g.len()],
-        };
+        let mut plan =
+            ClusterPlan::gathered(1, sync, vec![LayerScheme::Replicated; g.len()]);
+        plan.precision = precision;
+        return plan;
     }
     let dplan = dos::plan_graph(g, device, OptLevel::HoOnly);
     let link = &device.link;
-    let schemes = g
+    let schemes: Vec<LayerScheme> = g
         .nodes
         .iter()
         .map(|node| {
@@ -155,10 +375,11 @@ pub fn plan_cluster(
                 }
                 let sync_bytes = match c {
                     LayerScheme::OutC => node.out.bytes(),
-                    LayerScheme::InH => crate::dist::halo_bytes(g, node, p, true),
-                    LayerScheme::InW => crate::dist::halo_bytes(g, node, p, false),
+                    LayerScheme::InH => halo_bytes(g, node, p, true),
+                    LayerScheme::InW => halo_bytes(g, node, p, false),
                     LayerScheme::Replicated => unreachable!(),
                 };
+                let sync_bytes = wire_bytes(sync_bytes, precision);
                 let t = base / p as f64 + crate::dist::sync_time(sync, p, sync_bytes, link);
                 let wins = match scheme {
                     // Single-mode arms shard whenever they can, profitable
@@ -174,7 +395,257 @@ pub fn plan_cluster(
             best
         })
         .collect();
-    ClusterPlan { world: p, sync, schemes }
+    let (residency, partial) = if resident {
+        decide_residency(g, &schemes, p, precision)
+    } else {
+        (vec![Residency::Gathered; g.len()], vec![false; g.len()])
+    };
+    ClusterPlan { world: p, sync, precision, schemes, residency, partial }
+}
+
+/// The per-rank output-channel slices an OutC-sharded node's value shards
+/// into — group-aligned for grouped/depthwise convolutions. `None` for
+/// operators whose outputs the runtime cannot keep channel-resident
+/// (matrices: an FC/matmul output is column-interleaved per row, and no
+/// consumer in the zoo reads column slices of it in place).
+pub fn outc_slices(node: &Node, world: usize) -> Option<Vec<(usize, usize)>> {
+    match &node.op {
+        OpKind::Conv(a) | OpKind::Cbr(a) | OpKind::Cbra(a, _) | OpKind::Cbrm(a, _)
+            if node.out.shape.is_fm() =>
+        {
+            Some((0..world).map(|r| conv_channel_share(a, world, r)).collect())
+        }
+        _ => None,
+    }
+}
+
+/// Per-element / per-channel operators that carry a channel-resident
+/// value forward: output channel `i` depends only on input channel `i`
+/// (same channel count), so a full-size buffer that is valid on the
+/// rank's channel slice stays valid on exactly that slice. Outside the
+/// slice the buffer holds don't-care values (zeros from the producer,
+/// `f(0)` after an activation) that no consumer ever reads — aligned
+/// consumers read their slice, and the lazy re-gather ships only valid
+/// slices. Channel-reordering selections (slice, shuffle, concat) and
+/// cross-element reductions (softmax, layernorm) are deliberately
+/// excluded.
+fn carries_residency(op: &OpKind) -> bool {
+    matches!(
+        op,
+        OpKind::Relu
+            | OpKind::Sigmoid
+            | OpKind::Tanh
+            | OpKind::Gelu
+            | OpKind::BatchNorm
+            | OpKind::Bias
+            | OpKind::Add
+            | OpKind::Mul
+            | OpKind::Mac
+            | OpKind::Pool(_)
+            | OpKind::Upsample { .. }
+    )
+}
+
+/// True when `consumer` can read a value resident on `slices` without any
+/// communication: an OutC-sharded grouped/depthwise convolution whose
+/// per-rank input-channel need is contained in the rank's resident slice
+/// (group boundaries line up with the producer's channel split — the
+/// MobileNet `pw → dw` case).
+pub(crate) fn aligned_resident_consumer(
+    world: usize,
+    slices: &[(usize, usize)],
+    schemes: &[LayerScheme],
+    producer: NodeId,
+    consumer: &Node,
+) -> bool {
+    if schemes[consumer.id] != LayerScheme::OutC {
+        return false;
+    }
+    if consumer.inputs.len() != 1 || consumer.inputs[0] != producer {
+        return false;
+    }
+    let a = match consumer.op.conv_attrs() {
+        Some(a) if a.groups > 1 => a,
+        _ => return false,
+    };
+    (0..world).all(|r| {
+        let (c0, c1) = conv_channel_share(a, world, r);
+        let g0 = c0 / a.out_c_per_group();
+        let g1 = c1 / a.out_c_per_group();
+        let (n0, n1) = (g0 * a.in_c_per_group(), g1 * a.in_c_per_group());
+        let (p0, p1) = slices[r];
+        n0 >= n1 || (n0 >= p0 && n1 <= p1)
+    })
+}
+
+/// True when `consumer` can take the partial-sum route for a resident
+/// input: a dense (ungrouped) OutC conv/CBR at INT8. The i32 reduction is
+/// exact, so the rewrite is bit-preserving; the f32 equivalent would
+/// re-associate the input-channel sum and is therefore never planned.
+fn partial_capable(consumer: &Node, schemes: &[LayerScheme], precision: Precision) -> bool {
+    if precision != Precision::Int8 || schemes[consumer.id] != LayerScheme::OutC {
+        return false;
+    }
+    matches!(&consumer.op, OpKind::Conv(a) | OpKind::Cbr(a) if a.groups == 1)
+        && consumer.inputs.len() == 1
+}
+
+/// The residency pass: keep OutC activations shard-resident wherever the
+/// sync-byte model says the consuming chain is strictly cheaper than the
+/// eager all-gather.
+///
+/// Three steps over the DAG:
+/// 1. **Propose** (forward): every OutC conv-family value gets its own
+///    channel slices; per-element operators ([`carries_residency`])
+///    inherit their producers' slices when all resident-capable inputs
+///    agree.
+/// 2. **Viability** (reverse): a proposed value survives only if *every*
+///    consumer can use it without a full copy — an aligned grouped
+///    consumer, a partial-sum-capable dense INT8 conv, or a viable chain
+///    node with the same slices — and it is not a graph output. A mixed
+///    fan-out (some consumer needs the full value) keeps the gather: the
+///    bytes would move anyway, and eagerly gathering is never worse.
+/// 3. **Decide** (forward): an OutC source goes resident when the summed
+///    i32 reduce-scatter bytes of the partial consumers reachable through
+///    its chain are strictly below its own gather bytes (zero-consumer
+///    chains trivially win); chain nodes inherit the decision from the
+///    inputs that actually went resident.
+pub(crate) fn decide_residency(
+    g: &Graph,
+    schemes: &[LayerScheme],
+    world: usize,
+    precision: Precision,
+) -> (Vec<Residency>, Vec<bool>) {
+    let n = g.len();
+    let mut residency = vec![Residency::Gathered; n];
+    let mut partial = vec![false; n];
+    if world <= 1 {
+        return (residency, partial);
+    }
+    let mut consumers: Vec<Vec<NodeId>> = vec![Vec::new(); n];
+    for node in &g.nodes {
+        for &i in &node.inputs {
+            if !consumers[i].contains(&node.id) {
+                consumers[i].push(node.id);
+            }
+        }
+    }
+
+    // 1. Propose slices (forward, topological).
+    let mut slices_of: Vec<Option<Vec<(usize, usize)>>> = Vec::with_capacity(n);
+    for node in &g.nodes {
+        let proposed = if schemes[node.id] == LayerScheme::OutC {
+            outc_slices(node, world)
+        } else if schemes[node.id] == LayerScheme::Replicated
+            && carries_residency(&node.op)
+            && node.out.shape.is_fm()
+            && !node.inputs.is_empty()
+        {
+            // Inherit when every resident-capable input agrees; inputs
+            // without a proposal are simply gathered to full at runtime.
+            let mut inherited: Option<Vec<(usize, usize)>> = None;
+            let mut ok = true;
+            for &i in &node.inputs {
+                if let Some(s) = &slices_of[i] {
+                    match &inherited {
+                        None => inherited = Some(s.clone()),
+                        Some(prev) if prev == s => {}
+                        Some(_) => {
+                            ok = false;
+                            break;
+                        }
+                    }
+                }
+            }
+            if ok {
+                inherited
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        slices_of.push(proposed);
+    }
+
+    // 2. Viability (reverse topological).
+    let mut viable = vec![false; n];
+    for node in g.nodes.iter().rev() {
+        let slices = match &slices_of[node.id] {
+            Some(s) => s,
+            None => continue,
+        };
+        if g.outputs.contains(&node.id) {
+            continue;
+        }
+        viable[node.id] = consumers[node.id].iter().all(|&c| {
+            let cn = g.node(c);
+            aligned_resident_consumer(world, slices, schemes, node.id, cn)
+                || partial_capable(cn, schemes, precision)
+                // Chain nodes only: an OutC consumer with coincidentally
+                // equal slices (e.g. a dense same-width conv) still needs
+                // the full tensor — accepting it would plan a "skipped"
+                // gather the runtime performs lazily anyway.
+                || (schemes[c] == LayerScheme::Replicated
+                    && viable[c]
+                    && slices_of[c].as_ref() == Some(slices))
+        });
+    }
+
+    // 3. Decide (forward topological).
+    for node in &g.nodes {
+        if !viable[node.id] {
+            continue;
+        }
+        let slices = slices_of[node.id].as_ref().expect("viable implies slices");
+        let is_source = schemes[node.id] == LayerScheme::OutC;
+        if is_source {
+            // Sum the reduce-scatter bytes of every partial consumer
+            // reachable through this value's chain.
+            let mut rs_bytes = 0u64;
+            let mut stack = vec![node.id];
+            let mut seen = vec![false; n];
+            seen[node.id] = true;
+            while let Some(v) = stack.pop() {
+                for &c in &consumers[v] {
+                    if seen[c] {
+                        continue;
+                    }
+                    seen[c] = true;
+                    let cn = g.node(c);
+                    // partial_capable (dense) and aligned (grouped) are
+                    // mutually exclusive, so no alignment re-check here.
+                    if partial_capable(cn, schemes, precision) {
+                        rs_bytes += cn.out.shape.numel() as u64 * 4; // i32
+                    } else if schemes[c] == LayerScheme::Replicated
+                        && viable[c]
+                        && slices_of[c] == slices_of[v]
+                    {
+                        stack.push(c);
+                    }
+                }
+            }
+            if rs_bytes >= wire_bytes(node.out.bytes(), precision) {
+                continue; // reducing the partials costs more than gathering
+            }
+        } else {
+            // Chain node: resident only if a producing input actually is.
+            let inherits = node.inputs.iter().any(|&i| {
+                slices_of[i].as_ref() == Some(slices)
+                    && residency[i] != Residency::Gathered
+            });
+            if !inherits {
+                continue;
+            }
+        }
+        residency[node.id] = Residency::ResidentOutC(slices.clone());
+        for &c in &consumers[node.id] {
+            if partial_capable(g.node(c), schemes, precision) {
+                partial[c] = true;
+            }
+        }
+    }
+    (residency, partial)
 }
 
 #[cfg(test)]
@@ -241,5 +712,205 @@ mod tests {
         let plan = plan_cluster(&g, &d, 4, PartitionScheme::InH, SyncMode::Ring);
         // Bert is matrices end to end: nothing is row-shardable.
         assert_eq!(plan.sharded_count(), 0);
+    }
+
+    use crate::graph::{GraphBuilder, Shape};
+
+    fn id_of(g: &Graph, name: &str) -> NodeId {
+        g.nodes.iter().find(|n| n.name == name).unwrap_or_else(|| panic!("node {name}")).id
+    }
+
+    /// pw → bn → relu → dw: the MobileNet hot pattern. The pointwise
+    /// conv's activation must stay resident (its all-gather skipped), the
+    /// per-element chain must carry the slices, and the depthwise conv
+    /// must consume them aligned.
+    fn pw_dw_graph() -> Graph {
+        let mut b = GraphBuilder::new("resid_pwdw");
+        let x = b.input("x", Shape::nchw(1, 8, 8, 8));
+        let c = b.conv_bn_relu("c", x, 16, 1, 1, 0);
+        let dw = b.dwconv("dw", c, 3, 1, 1);
+        b.output(dw);
+        b.finish()
+    }
+
+    #[test]
+    fn aligned_chain_goes_resident_and_skips_the_gather() {
+        let g = pw_dw_graph();
+        let d = presets::tms320c6678();
+        let plan = plan_cluster(&g, &d, 4, PartitionScheme::OutC, SyncMode::Ring);
+        for name in ["c/conv", "c/bn", "c/relu"] {
+            assert!(
+                matches!(plan.residency[id_of(&g, name)], Residency::ResidentOutC(_)),
+                "{name} must be resident"
+            );
+        }
+        // The depthwise output feeds the graph output: it must gather.
+        assert_eq!(plan.residency[id_of(&g, "dw")], Residency::Gathered);
+        assert!(plan.partial.iter().all(|p| !p), "no partial consumers at f32");
+        let acc = plan.accounting(&g);
+        assert_eq!(acc.gathers_skipped, 1, "the pw gather is gone");
+        assert!(acc.sync_bytes < acc.gathered_bytes, "{acc:?}");
+        // The saving is exactly the pw activation (16×8×8 f32).
+        assert_eq!(acc.gathered_bytes - acc.sync_bytes, 16 * 8 * 8 * 4);
+    }
+
+    #[test]
+    fn chain_interrupted_by_a_full_consumer_stays_gathered() {
+        // conv → softmax: softmax cannot carry residency, so the value
+        // must be planned gathered — bytes equal, no skip.
+        let mut b = GraphBuilder::new("resid_interrupt");
+        let x = b.input("x", Shape::nchw(1, 4, 8, 8));
+        let c = b.conv("c", x, 16, 3, 1, 1);
+        let sm = b.softmax("sm", c);
+        b.output(sm);
+        let g = b.finish();
+        let d = presets::tms320c6678();
+        let plan = plan_cluster(&g, &d, 2, PartitionScheme::OutC, SyncMode::Ring);
+        assert_eq!(plan.residency[id_of(&g, "c")], Residency::Gathered);
+        let acc = plan.accounting(&g);
+        assert_eq!(acc.gathers_skipped, 0);
+        assert_eq!(acc.sync_bytes, acc.gathered_bytes);
+    }
+
+    /// 64 → 8-channel 1×1 bottleneck: at INT8 the i32 reduce-scatter of
+    /// the 8-channel output (8·hw·4 B) is cheaper than gathering the
+    /// 64-channel input (64·hw·1 B), so the planner keeps the input
+    /// resident and marks the bottleneck partial-sum. Widening the
+    /// bottleneck to 32 channels (32·hw·4 ≥ 64·hw) flips the decision —
+    /// the model picks residency exactly when sync bytes drop.
+    #[test]
+    fn int8_bottleneck_picks_partial_sum_only_when_bytes_drop() {
+        let d = presets::tms320c6678();
+        for (narrow, expect_partial) in [(8usize, true), (32usize, false)] {
+            let mut b = GraphBuilder::new("resid_bneck");
+            let x = b.input("x", Shape::nchw(1, 4, 8, 8));
+            let c1 = b.conv("c1", x, 64, 3, 1, 1);
+            let c2 = b.conv("c2", c1, narrow, 1, 1, 0);
+            let sm = b.softmax("sm", c2);
+            b.output(sm);
+            let g = b.finish();
+            let plan = plan_cluster_opts(
+                &g,
+                &d,
+                2,
+                PartitionScheme::OutC,
+                SyncMode::Ring,
+                Precision::Int8,
+                true,
+            );
+            let c1_id = id_of(&g, "c1");
+            let c2_id = id_of(&g, "c2");
+            assert_eq!(
+                plan.partial[c2_id], expect_partial,
+                "narrow={narrow}: partial flag"
+            );
+            assert_eq!(
+                matches!(plan.residency[c1_id], Residency::ResidentOutC(_)),
+                expect_partial,
+                "narrow={narrow}: residency"
+            );
+            let acc = plan.accounting(&g);
+            if expect_partial {
+                assert!(acc.sync_bytes < acc.gathered_bytes, "{acc:?}");
+                assert_eq!(acc.reduce_scatters, 1);
+            } else {
+                assert_eq!(acc.sync_bytes, acc.gathered_bytes);
+            }
+            // f32 never takes the partial-sum route (it would re-associate
+            // the reduction and break bit-exactness).
+            let f32_plan = plan_cluster(&g, &d, 2, PartitionScheme::OutC, SyncMode::Ring);
+            assert!(f32_plan.partial.iter().all(|p| !p));
+            assert_eq!(f32_plan.residency[c1_id], Residency::Gathered);
+        }
+    }
+
+    /// A dense OutC consumer with coincidentally equal slices (same-width
+    /// conv→conv) must NOT be treated as a chain carrier: it needs the
+    /// full tensor, so the producer stays gathered even when the
+    /// consumer's own value is viable through a depthwise tail.
+    #[test]
+    fn equal_slice_dense_consumer_does_not_fake_a_chain() {
+        let mut b = GraphBuilder::new("resid_equal_slices");
+        let x = b.input("x", Shape::nchw(1, 4, 8, 8));
+        let c1 = b.conv("c1", x, 8, 3, 1, 1);
+        let c2 = b.conv("c2", c1, 8, 3, 1, 1);
+        let r = b.relu("r", c2);
+        let dw = b.dwconv("dw", r, 3, 1, 1);
+        let sm = b.softmax("sm", dw);
+        b.output(sm);
+        let g = b.finish();
+        let d = presets::tms320c6678();
+        let plan = plan_cluster(&g, &d, 2, PartitionScheme::OutC, SyncMode::Ring);
+        // c2's value is legitimately resident (relu → dw tail)...
+        assert!(matches!(plan.residency[id_of(&g, "c2")], Residency::ResidentOutC(_)));
+        // ...but c1's is not: its dense consumer needs the full tensor.
+        assert_eq!(plan.residency[id_of(&g, "c1")], Residency::Gathered);
+        let acc = plan.accounting(&g);
+        assert_eq!(acc.gathers_skipped, 1, "{acc:?}");
+    }
+
+    #[test]
+    fn mobilenet_outc_skips_a_gather_per_separable_block() {
+        let g = models::mobilenet();
+        let d = presets::tms320c6678();
+        let plan = plan_cluster(&g, &d, 4, PartitionScheme::OutC, SyncMode::Ring);
+        let acc = plan.accounting(&g);
+        assert!(
+            acc.gathers_skipped >= 10,
+            "every pw→dw edge should drop its gather: {acc:?}"
+        );
+        assert!(acc.sync_bytes < acc.gathered_bytes, "{acc:?}");
+        // Disabling residency reproduces the eager baseline bytes.
+        let base = plan_cluster_opts(
+            &g,
+            &d,
+            4,
+            PartitionScheme::OutC,
+            SyncMode::Ring,
+            Precision::F32,
+            false,
+        );
+        let bacc = base.accounting(&g);
+        assert_eq!(bacc.gathers_skipped, 0);
+        assert_eq!(bacc.sync_bytes, bacc.gathered_bytes);
+        assert_eq!(bacc.gathered_bytes, acc.gathered_bytes);
+    }
+
+    #[test]
+    fn single_mode_plans_keep_residency_metadata_consistent() {
+        // Every residency entry must carry world-many slices and every
+        // partial node must be a dense OutC conv with a resident input.
+        let g = models::squeezenet();
+        let d = presets::tms320c6678();
+        for p in [2usize, 4] {
+            for precision in [Precision::F32, Precision::Int8] {
+                let plan = plan_cluster_opts(
+                    &g,
+                    &d,
+                    p,
+                    PartitionScheme::Mix,
+                    SyncMode::Ring,
+                    precision,
+                    true,
+                );
+                for (id, r) in plan.residency.iter().enumerate() {
+                    if let Residency::ResidentOutC(slices) = r {
+                        assert_eq!(slices.len(), p, "node {id} slice arity");
+                    }
+                }
+                for (id, &part) in plan.partial.iter().enumerate() {
+                    if part {
+                        let node = g.node(id);
+                        assert_eq!(plan.schemes[id], LayerScheme::OutC);
+                        let a = node.op.conv_attrs().expect("partial is conv-family");
+                        assert_eq!(a.groups, 1, "partial is dense");
+                        assert!(matches!(
+                            plan.residency[node.inputs[0]],
+                            Residency::ResidentOutC(_)
+                        ));
+                    }
+                }
+            }
+        }
     }
 }

@@ -35,10 +35,11 @@ pub(crate) fn conv_channel_share(a: &ConvAttrs, p: usize, r: usize) -> (usize, u
 /// Global output channel of a rank's local weight row 0 for one node —
 /// the row offset [`QuantRun::build_with_offsets`](crate::quant::QuantRun)
 /// needs to anchor per-channel activation grids and the input-grid weight
-/// fold on OutC-sharded conv nodes (0 for replicated/spatial nodes and
-/// for FC columns, whose fold is row-uniform).
+/// fold on OutC-sharded conv nodes (0 for replicated/spatial nodes, for
+/// FC columns — whose fold is row-uniform — and for partial-sum nodes,
+/// which hold the full unsliced weights).
 pub fn quant_row_offset(g: &Graph, plan: &ClusterPlan, rank: usize, id: NodeId) -> usize {
-    if plan.schemes[id] != LayerScheme::OutC {
+    if plan.schemes[id] != LayerScheme::OutC || plan.partial[id] {
         return 0;
     }
     match &g.node(id).op {
@@ -58,7 +59,11 @@ impl ShardParams {
             .iter()
             .map(|node| {
                 let full = master.get_ref(node.id);
-                if plan.schemes[node.id] != LayerScheme::OutC {
+                // Partial-sum consumers keep the full weights: each rank
+                // slices the quantized codes by *input* channel at
+                // execution, and the master-identical per-row weight
+                // scales are what keep the reduced accumulators exact.
+                if plan.schemes[node.id] != LayerScheme::OutC || plan.partial[node.id] {
                     return full.clone();
                 }
                 match &node.op {

@@ -55,11 +55,12 @@ pub trait Transport: Send {
     fn recv_bytes(&self, from: usize, tag: u64) -> Vec<u8>;
 }
 
-/// One payload scalar flavor the collectives can move: f32 frames or raw
-/// i8 code frames (under [`wire::TAG_Q8`]-flagged tags). This is what
-/// deduplicates the former f32/byte twin implementations of the ring/PS
-/// all-gathers behind one payload-generic implementation — the hop
-/// schedules live once, the scalar flavor routes here.
+/// One payload scalar flavor the collectives can move: f32 frames, raw
+/// i8 code frames (under [`wire::TAG_Q8`]-flagged tags) or i32
+/// partial-sum frames (under [`wire::TAG_I32`]-flagged tags). This is
+/// what deduplicates the former f32/byte twin implementations of the
+/// ring/PS collectives behind one payload-generic implementation — the
+/// hop schedules live once, the scalar flavor routes here.
 pub trait WireScalar: Sized + Send {
     /// Send one block to `to` under `tag`.
     fn send_block(t: &dyn Transport, to: usize, tag: u64, data: &[Self]);
@@ -84,6 +85,16 @@ impl WireScalar for i8 {
 
     fn recv_block(t: &dyn Transport, from: usize, tag: u64) -> Vec<i8> {
         wire::bytes_into_i8s(t.recv_bytes(from, tag))
+    }
+}
+
+impl WireScalar for i32 {
+    fn send_block(t: &dyn Transport, to: usize, tag: u64, data: &[i32]) {
+        t.send_bytes(to, tag, &wire::i32s_to_bytes(data));
+    }
+
+    fn recv_block(t: &dyn Transport, from: usize, tag: u64) -> Vec<i32> {
+        wire::bytes_to_i32s(&t.recv_bytes(from, tag))
     }
 }
 
@@ -280,9 +291,11 @@ fn connect_retry(addr: &str) -> std::io::Result<TcpStream> {
 }
 
 /// Reader half: frames from `peer` flow into the mailbox until EOF. The
-/// frame kind is demultiplexed from the tag: [`wire::TAG_Q8`]-flagged
-/// frames carry raw i8 payloads (1 byte per element on the wire — the
-/// quantized-activation traffic cut), everything else decodes as f32.
+/// frame kind is demultiplexed from the tag: [`wire::TAG_Q8`]- and
+/// [`wire::TAG_I32`]-flagged frames carry raw byte payloads (i8 codes at
+/// 1 byte per element — the quantized-activation traffic cut — and i32
+/// partial-sum accumulators respectively), everything else decodes as
+/// f32.
 fn spawn_reader(peer: usize, mut stream: TcpStream, mailbox: Arc<Mailbox>) {
     std::thread::Builder::new()
         .name(format!("xenos-tp-rx-{peer}"))
@@ -290,7 +303,7 @@ fn spawn_reader(peer: usize, mut stream: TcpStream, mailbox: Arc<Mailbox>) {
             loop {
                 match wire::read_frame(&mut stream) {
                     Ok((tag, payload)) => {
-                        let p = if tag & wire::TAG_Q8 != 0 {
+                        let p = if tag & (wire::TAG_Q8 | wire::TAG_I32) != 0 {
                             Payload::Bytes(payload)
                         } else {
                             Payload::F32(wire::bytes_to_f32s(&payload))
@@ -482,6 +495,32 @@ mod tests {
         let err = accept_peers(&listener, 0, 2).expect_err("unknown tag must error");
         assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
         writer.join().unwrap();
+    }
+
+    #[test]
+    fn i32_partials_round_trip_over_tcp() {
+        // TAG_I32 frames must route to the byte mailbox flavor and decode
+        // back to the exact accumulators.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t1 = std::thread::spawn(move || {
+            let t = TcpTransport::new(1, 2, &[addr], Vec::new()).unwrap();
+            <i32 as WireScalar>::send_block(
+                &t,
+                0,
+                wire::TAG_I32 | 31,
+                &[i32::MIN, -1, 0, 1, i32::MAX],
+            );
+            <i32 as WireScalar>::recv_block(&t, 0, wire::TAG_I32 | 32)
+        });
+        let inbound = accept_peers(&listener, 0, 2).unwrap();
+        let t0 = TcpTransport::new(0, 2, &[], inbound).unwrap();
+        assert_eq!(
+            <i32 as WireScalar>::recv_block(&t0, 1, wire::TAG_I32 | 31),
+            vec![i32::MIN, -1, 0, 1, i32::MAX]
+        );
+        <i32 as WireScalar>::send_block(&t0, 1, wire::TAG_I32 | 32, &[42]);
+        assert_eq!(t1.join().unwrap(), vec![42]);
     }
 
     #[test]

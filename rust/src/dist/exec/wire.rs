@@ -18,29 +18,36 @@ use crate::ops::Tensor;
 use crate::quant::Precision;
 
 /// Peer handshake: payload = initiating rank (u32).
-pub(crate) const PEER_HELLO: u64 = 0xFFFF_0001;
+pub const PEER_HELLO: u64 = 0xFFFF_0001;
 /// Driver → worker: job spec.
-pub(crate) const CTRL_SPEC: u64 = 0xFFFF_0010;
+pub const CTRL_SPEC: u64 = 0xFFFF_0010;
 /// Driver → worker: this rank's shard parameters.
-pub(crate) const CTRL_PARAMS: u64 = 0xFFFF_0011;
+pub const CTRL_PARAMS: u64 = 0xFFFF_0011;
 /// Driver → worker: one inference's input tensors.
-pub(crate) const CTRL_INPUT: u64 = 0xFFFF_0012;
+pub const CTRL_INPUT: u64 = 0xFFFF_0012;
 /// Worker (rank 0) → driver: output tensors.
-pub(crate) const CTRL_OUTPUT: u64 = 0xFFFF_0013;
+pub const CTRL_OUTPUT: u64 = 0xFFFF_0013;
 /// Worker (rank > 0) → driver: inference finished.
-pub(crate) const CTRL_DONE: u64 = 0xFFFF_0014;
+pub const CTRL_DONE: u64 = 0xFFFF_0014;
 /// Worker → driver: job failed; payload = UTF-8 message.
-pub(crate) const CTRL_ERR: u64 = 0xFFFF_0015;
+pub const CTRL_ERR: u64 = 0xFFFF_0015;
 /// Driver → worker: session over.
-pub(crate) const CTRL_SHUTDOWN: u64 = 0xFFFF_0016;
+pub const CTRL_SHUTDOWN: u64 = 0xFFFF_0016;
 /// Driver → worker: serialized calibration table (INT8 jobs only).
-pub(crate) const CTRL_CALIB: u64 = 0xFFFF_0017;
+pub const CTRL_CALIB: u64 = 0xFFFF_0017;
 
 /// Frame-kind flag for peer-link tags: the payload is raw i8 (quantized
 /// activations), **one byte per element on the wire** — the quantized
 /// halo/all-gather format, a 4× cut over f32 frames. Transports
 /// demultiplex on this bit; control tags never carry it.
 pub const TAG_Q8: u64 = 1 << 63;
+
+/// Frame-kind flag for peer-link tags: the payload is little-endian i32
+/// (4 bytes per element) — the exact partial-sum accumulators the
+/// shard-resident dataflow reduce-scatters between dense INT8 layers.
+/// Like [`TAG_Q8`], the flag routes TCP frames to the raw-byte mailbox
+/// flavor; control tags never carry it.
+pub const TAG_I32: u64 = 1 << 62;
 
 /// Largest frame either side will accept: comfortably above the biggest
 /// legitimate payload (a full resnet101 parameter shard, ~180 MB) while
@@ -88,6 +95,26 @@ pub(crate) fn bytes_into_i8s(v: Vec<u8>) -> Vec<i8> {
     // SAFETY: identical size/alignment; ownership of the allocation is
     // transferred exactly once.
     unsafe { Vec::from_raw_parts(v.as_mut_ptr() as *mut i8, v.len(), v.capacity()) }
+}
+
+/// i32 slice → little-endian wire bytes — the send half of the
+/// [`TAG_I32`] frame format (partial-sum reduce-scatter payloads).
+pub(crate) fn i32s_to_bytes(v: &[i32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 4);
+    for x in v {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Little-endian wire bytes → i32s. A misaligned length means a corrupt
+/// peer frame; fail loudly at the decode site.
+pub(crate) fn bytes_to_i32s(bytes: &[u8]) -> Vec<i32> {
+    assert_eq!(bytes.len() % 4, 0, "payload not i32-aligned: corrupt peer frame");
+    bytes
+        .chunks_exact(4)
+        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+        .collect()
 }
 
 /// f32 slice → little-endian bytes.
@@ -189,6 +216,11 @@ pub struct JobSpec {
     /// Numeric precision (INT8 jobs additionally receive a
     /// [`CTRL_CALIB`] frame and exchange [`TAG_Q8`] activation payloads).
     pub precision: Precision,
+    /// Shard-resident activation dataflow knob: when set (the default),
+    /// the plan keeps profitable OutC activations resident instead of
+    /// all-gathering them. Ships in the spec so every rank cuts the
+    /// identical plan.
+    pub resident: bool,
     /// Listen addresses of all ranks, in rank order.
     pub peers: Vec<String>,
 }
@@ -252,6 +284,7 @@ pub(crate) fn encode_spec(spec: &JobSpec) -> Vec<u8> {
     e.u32(scheme_to_u8(spec.scheme) as u32);
     e.u32(sync_to_u8(spec.sync) as u32);
     e.u32(precision_to_u8(spec.precision) as u32);
+    e.u32(u32::from(spec.resident));
     e.u32(spec.peers.len() as u32);
     for p in &spec.peers {
         e.str(p);
@@ -269,12 +302,13 @@ pub(crate) fn decode_spec(payload: &[u8]) -> Result<JobSpec> {
     let scheme = scheme_from_u8(d.u32()? as u8)?;
     let sync = sync_from_u8(d.u32()? as u8)?;
     let precision = precision_from_u8(d.u32()? as u8)?;
+    let resident = d.u32()? != 0;
     let n = d.u32()? as usize;
     let mut peers = Vec::with_capacity(n);
     for _ in 0..n {
         peers.push(d.str()?);
     }
-    Ok(JobSpec { model, device, rank, world, threads, scheme, sync, precision, peers })
+    Ok(JobSpec { model, device, rank, world, threads, scheme, sync, precision, resident, peers })
 }
 
 /// Serialize per-node parameter shards (`by_node` indexed by `NodeId`).
@@ -377,6 +411,7 @@ mod tests {
             scheme: PartitionScheme::Mix,
             sync: SyncMode::Ps,
             precision: Precision::Int8,
+            resident: false,
             peers: vec!["127.0.0.1:7001".into(), "127.0.0.1:7002".into()],
         };
         assert_eq!(decode_spec(&encode_spec(&spec)).unwrap(), spec);
@@ -417,6 +452,7 @@ mod tests {
             scheme: PartitionScheme::OutC,
             sync: SyncMode::Ring,
             precision: Precision::F32,
+            resident: true,
             peers: vec![],
         });
         assert!(decode_spec(&enc[..enc.len() - 2]).is_err());

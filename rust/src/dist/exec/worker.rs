@@ -8,7 +8,14 @@
 //!   runtime's answer to the simulator's serial-plus-broadcast arm).
 //! * **OutC** layers compute an output-channel (FC-column) slice from
 //!   shard-local weights, then reassemble the full activation with a
-//!   ring/PS **all-gather**.
+//!   ring/PS **all-gather** — *unless* the plan keeps the value
+//!   **shard-resident** ([`Residency::ResidentOutC`]): the slice stays
+//!   put, per-element `Replicated` operators carry the channel slices
+//!   forward (they compute over the full-size zero-padded buffer),
+//!   channel-aligned grouped/depthwise consumers read their own slice
+//!   with zero traffic, dense INT8 consumers reduce exact i32 partial
+//!   sums with a ring/PS **reduce-scatter** (`ClusterPlan::partial`),
+//!   and any other consumer forces the **lazy re-gather** fallback.
 //! * **InH/InW** layers compute a row/column slab; the activation stays
 //!   sharded and downstream consumers pull boundary **halo** rows/columns
 //!   point-to-point from the owning ranks. Consumers that need the whole
@@ -35,9 +42,10 @@
 //! the per-element epilogue make every shard bit-identical to the
 //! single-device [`QuantEngine`](crate::quant::QuantEngine).
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
-use super::plan::{ClusterPlan, LayerScheme};
+use super::plan::{aligned_resident_consumer, ClusterPlan, LayerScheme, Residency};
 use super::shard::{conv_channel_share, ShardParams};
 use super::transport::{Transport, WireScalar};
 use super::wire;
@@ -60,30 +68,91 @@ enum Axis {
 }
 
 /// One value's distribution state on this rank. Sharded buffers are
-/// full-size; the rank's own slab (`even_share` of the axis extent) is
-/// authoritative and halo regions are filled on demand. INT8 runs hold
-/// every value as i8 codes (`QFull`/`QSharded`).
+/// full-size; the rank's own slab (`even_share` of the axis extent for
+/// spatial shards, the plan's [`Residency`] channel slice for
+/// channel-resident values) is authoritative, everything else is
+/// zero-filled until a halo exchange or lazy gather fills it. INT8 runs
+/// hold every value as i8 codes (`QFull`/`QSharded`/`QCSharded`).
 enum ShardVal {
     Full(Tensor),
     Sharded(Tensor, Axis),
+    /// Channel-resident (shard-resident OutC dataflow): valid only on
+    /// this rank's `Residency::ResidentOutC` channel slice.
+    CSharded(Tensor),
     QFull(QTensor),
     QSharded(QTensor, Axis),
+    /// INT8 channel-resident codes.
+    QCSharded(QTensor),
 }
 
 impl ShardVal {
     fn f32(&self) -> &Tensor {
         match self {
-            ShardVal::Full(t) | ShardVal::Sharded(t, _) => t,
+            ShardVal::Full(t) | ShardVal::Sharded(t, _) | ShardVal::CSharded(t) => t,
             _ => unreachable!("f32 value expected on an i8-resident path"),
         }
     }
 
     fn q(&self) -> &QTensor {
         match self {
-            ShardVal::QFull(q) | ShardVal::QSharded(q, _) => q,
+            ShardVal::QFull(q) | ShardVal::QSharded(q, _) | ShardVal::QCSharded(q) => q,
             _ => unreachable!("i8 value expected on an f32 path"),
         }
     }
+
+    /// True for channel-resident values (either precision).
+    fn channel_resident(&self) -> bool {
+        matches!(self, ShardVal::CSharded(_) | ShardVal::QCSharded(_))
+    }
+}
+
+/// Synchronization counters one rank accumulates while executing — the
+/// measured counterpart of the plan's static
+/// [`SyncAccounting`](super::plan::SyncAccounting). All-gathers and
+/// reduce-scatters count the full logical payload of the collective
+/// (matching the planner's per-value accounting, not per-hop traffic);
+/// halo exchanges count the bytes **this rank sends** (halo traffic is
+/// inherently asymmetric across ranks).
+#[derive(Debug, Default)]
+pub struct SyncStats {
+    /// All-gathers issued (eager OutC reassembly + lazy re-gathers).
+    pub all_gathers: AtomicU64,
+    /// All-gathers skipped because the value stayed shard-resident.
+    pub gathers_skipped: AtomicU64,
+    /// Partial-sum i32 reduce-scatters.
+    pub reduce_scatters: AtomicU64,
+    /// Halo exchanges performed.
+    pub halo_exchanges: AtomicU64,
+    /// Logical bytes synchronized.
+    pub sync_bytes: AtomicU64,
+}
+
+impl SyncStats {
+    /// A plain-value copy of the counters.
+    pub fn snapshot(&self) -> SyncSnapshot {
+        SyncSnapshot {
+            all_gathers: self.all_gathers.load(Ordering::Relaxed),
+            gathers_skipped: self.gathers_skipped.load(Ordering::Relaxed),
+            reduce_scatters: self.reduce_scatters.load(Ordering::Relaxed),
+            halo_exchanges: self.halo_exchanges.load(Ordering::Relaxed),
+            sync_bytes: self.sync_bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Plain-value view of [`SyncStats`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SyncSnapshot {
+    /// All-gathers issued.
+    pub all_gathers: u64,
+    /// All-gathers skipped (shard-resident values).
+    pub gathers_skipped: u64,
+    /// Partial-sum reduce-scatters.
+    pub reduce_scatters: u64,
+    /// Halo exchanges.
+    pub halo_exchanges: u64,
+    /// Logical bytes synchronized.
+    pub sync_bytes: u64,
 }
 
 /// Output region of one sharded kernel launch.
@@ -132,6 +201,26 @@ pub struct ShardWorker {
     transport: Box<dyn Transport>,
     pool: Option<WorkerPool>,
     quant: Option<Arc<QuantRun>>,
+    /// Per-node input-channel slice of the full quantized weight codes
+    /// for partial-sum nodes (`ClusterPlan::partial`) — static per plan,
+    /// so it is cut once here instead of on every inference round.
+    partial_w: Vec<Option<Vec<i8>>>,
+    stats: Arc<SyncStats>,
+}
+
+/// This rank's input-channel range for a partial-sum consumer: the
+/// producer's residency slices, or an even share when a hand-built plan
+/// left the producer gathered (a full value is valid on any share).
+fn partial_in_slice(
+    plan: &ClusterPlan,
+    a: &ConvAttrs,
+    input_id: NodeId,
+    me: usize,
+) -> (usize, usize) {
+    match &plan.residency[input_id] {
+        Residency::ResidentOutC(slices) => slices[me],
+        Residency::Gathered => even_share(a.in_c, plan.world, me),
+    }
 }
 
 impl ShardWorker {
@@ -165,12 +254,54 @@ impl ShardWorker {
         assert_eq!(plan.world, transport.world(), "plan does not match transport world");
         let threads = crate::ops::par_exec::clamp_workers(threads);
         let pool = if threads > 1 { Some(WorkerPool::new(threads)) } else { None };
-        ShardWorker { graph, plan, params, transport, pool, quant }
+        let me = transport.rank();
+        let partial_w: Vec<Option<Vec<i8>>> = match &quant {
+            Some(qrun) => (0..graph.len())
+                .map(|id| {
+                    if !plan.partial[id] {
+                        return None;
+                    }
+                    let node = graph.node(id);
+                    let a = node.op.conv_attrs().expect("partial node is conv-family");
+                    let (c0, c1) = partial_in_slice(&plan, a, node.inputs[0], me);
+                    let k = a.kh * a.kw;
+                    let qw = &qrun.qweights(id).q;
+                    debug_assert_eq!(
+                        qw.len(),
+                        a.out_c * a.in_c * k,
+                        "partial nodes hold full weights"
+                    );
+                    // Contiguous columns [c0, c1) of every kernel row.
+                    let mut wsl = Vec::with_capacity(a.out_c * (c1 - c0) * k);
+                    for r in 0..a.out_c {
+                        wsl.extend_from_slice(&qw[(r * a.in_c + c0) * k..(r * a.in_c + c1) * k]);
+                    }
+                    Some(wsl)
+                })
+                .collect(),
+            None => vec![None; graph.len()],
+        };
+        ShardWorker {
+            graph,
+            plan,
+            params,
+            transport,
+            pool,
+            quant,
+            partial_w,
+            stats: Arc::new(SyncStats::default()),
+        }
     }
 
     /// This worker's rank.
     pub fn rank(&self) -> usize {
         self.transport.rank()
+    }
+
+    /// The rank's synchronization counters (shared; drivers keep a clone
+    /// so stats survive the worker moving into its thread).
+    pub fn stats(&self) -> Arc<SyncStats> {
+        self.stats.clone()
     }
 
     /// Cluster size.
@@ -218,33 +349,63 @@ impl ShardWorker {
             } else {
                 match self.plan.schemes[node.id] {
                     LayerScheme::Replicated => {
+                        // Per-element operators planned resident carry
+                        // their producers' channel slices forward: they
+                        // compute over the full-size buffers, so no
+                        // gather is needed anywhere along the chain.
+                        // Outside the valid slice the result is garbage
+                        // (e.g. sigmoid(0)), but nothing ever reads it:
+                        // consumers read their slice, and the lazy
+                        // re-gather ships only valid slices.
+                        let resident_out =
+                            matches!(self.plan.residency[node.id], Residency::ResidentOutC(_));
                         for &i in &node.inputs {
-                            self.ensure_full(&mut vals, i);
+                            let keep = resident_out
+                                && vals[i].as_ref().expect("value live").channel_resident();
+                            if !keep {
+                                self.ensure_full(&mut vals, i);
+                            }
                         }
                         let prm = self.params.get(node.id);
                         match &self.quant {
                             Some(qrun) => {
                                 let args = q_refs(&vals, node);
-                                ShardVal::QFull(qexec_node(qrun, prm, node, &args))
+                                let out = qexec_node(qrun, prm, node, &args);
+                                if resident_out {
+                                    ShardVal::QCSharded(out)
+                                } else {
+                                    ShardVal::QFull(out)
+                                }
                             }
                             None => {
                                 let args = arg_refs(&vals, node);
-                                ShardVal::Full(exec_node(prm, &node.op, &args))
+                                let out = exec_node(prm, &node.op, &args);
+                                if resident_out {
+                                    ShardVal::CSharded(out)
+                                } else {
+                                    ShardVal::Full(out)
+                                }
                             }
                         }
                     }
                     LayerScheme::OutC => {
-                        for &i in &node.inputs {
-                            self.ensure_full(&mut vals, i);
-                        }
-                        match &self.quant {
-                            Some(qrun) => {
-                                let args = q_refs(&vals, node);
-                                ShardVal::QFull(self.exec_outc_q8(node, &args, qrun))
-                            }
-                            None => {
-                                let args = arg_refs(&vals, node);
-                                ShardVal::Full(self.exec_outc(node, &args))
+                        if self.plan.partial[node.id] {
+                            let qrun = self
+                                .quant
+                                .as_ref()
+                                .expect("partial-sum consumers exist only in INT8 plans");
+                            self.exec_outc_partial_q8(&vals, node, qrun)
+                        } else {
+                            self.prepare_outc_inputs(&mut vals, node);
+                            match &self.quant {
+                                Some(qrun) => {
+                                    let args = q_refs(&vals, node);
+                                    self.exec_outc_q8(node, &args, qrun)
+                                }
+                                None => {
+                                    let args = arg_refs(&vals, node);
+                                    self.exec_outc(node, &args)
+                                }
                             }
                         }
                     }
@@ -300,8 +461,38 @@ impl ShardWorker {
         }
     }
 
+    /// Prepare the inputs of an OutC node: channel-resident inputs this
+    /// node can consume aligned (its per-rank input-channel need sits
+    /// inside the rank's resident slice) are left in place — the skipped
+    /// all-gather — and everything else sharded is gathered to full.
+    fn prepare_outc_inputs(&self, vals: &mut [Option<ShardVal>], node: &Node) {
+        for &i in &node.inputs {
+            let aligned = match vals[i].as_ref().expect("value live") {
+                ShardVal::CSharded(_) | ShardVal::QCSharded(_) => {
+                    match &self.plan.residency[i] {
+                        Residency::ResidentOutC(slices) => aligned_resident_consumer(
+                            self.plan.world,
+                            slices,
+                            &self.plan.schemes,
+                            i,
+                            node,
+                        ),
+                        Residency::Gathered => false,
+                    }
+                }
+                _ => false,
+            };
+            if !aligned {
+                self.ensure_full(vals, i);
+            }
+        }
+    }
+
     /// Reassemble a sharded value into a full tensor on every rank. In
     /// INT8 mode the blocks are the raw codes — no quantize step at all.
+    /// Channel-resident values gather their per-rank channel slices (the
+    /// forced lazy re-gather when a resident chain meets a consumer that
+    /// needs the whole tensor).
     fn ensure_full(&self, vals: &mut [Option<ShardVal>], id: NodeId) {
         if matches!(vals[id], Some(ShardVal::Full(_)) | Some(ShardVal::QFull(_))) {
             return;
@@ -315,6 +506,7 @@ impl ShardWorker {
                     Axis::Rows => h,
                     Axis::Cols => w,
                 };
+                self.count_gather(t.data.len() as u64 * 4);
                 let (mlo, mhi) = even_share(extent, p, me);
                 let mine = pack_rect(&t, axis_rect(h, w, axis, mlo, mhi));
                 let blocks = self.all_gather(mine, gather_tag(id));
@@ -333,6 +525,7 @@ impl ShardWorker {
                     Axis::Rows => h,
                     Axis::Cols => w,
                 };
+                self.count_gather(q.data.len() as u64);
                 let (mlo, mhi) = even_share(extent, p, me);
                 let mine = pack_rect_i8(&q, axis_rect(h, w, axis, mlo, mhi));
                 let blocks = self.all_gather(mine, gather_tag(id) | wire::TAG_Q8);
@@ -345,8 +538,61 @@ impl ShardWorker {
                 }
                 vals[id] = Some(ShardVal::QFull(q));
             }
+            ShardVal::CSharded(mut t) => {
+                let (_, h, w) = fm_dims(&t);
+                self.count_gather(t.data.len() as u64 * 4);
+                self.gather_channel_slices(&mut t.data, h * w, id, gather_tag(id));
+                vals[id] = Some(ShardVal::Full(t));
+            }
+            ShardVal::QCSharded(mut q) => {
+                let (_, h, w) = fm_of(q.shape());
+                self.count_gather(q.data.len() as u64);
+                self.gather_channel_slices(&mut q.data, h * w, id, gather_tag(id) | wire::TAG_Q8);
+                vals[id] = Some(ShardVal::QFull(q));
+            }
             _ => unreachable!("checked above"),
         }
+    }
+
+    /// The lazy channel re-gather shared by both precisions: all-gather
+    /// every rank's resident slice of a channel-major buffer and fill the
+    /// peers' slices in place (payload-generic, like the collectives —
+    /// the f32/i8 twins live once).
+    fn gather_channel_slices<P: WireScalar + Copy>(
+        &self,
+        data: &mut [P],
+        hw: usize,
+        id: NodeId,
+        tag: u64,
+    ) {
+        let me = self.rank();
+        let slices = self.resident_slices(id);
+        let (c0, c1) = slices[me];
+        let mine = data[c0 * hw..c1 * hw].to_vec();
+        let blocks = self.all_gather(mine, tag);
+        for (q, block) in blocks.iter().enumerate() {
+            if q == me {
+                continue;
+            }
+            let (q0, q1) = slices[q];
+            data[q0 * hw..q1 * hw].copy_from_slice(block);
+        }
+    }
+
+    /// The plan's resident channel slices of a value (must be resident).
+    fn resident_slices(&self, id: NodeId) -> &[(usize, usize)] {
+        match &self.plan.residency[id] {
+            Residency::ResidentOutC(s) => s,
+            Residency::Gathered => {
+                unreachable!("channel-resident value without a residency plan")
+            }
+        }
+    }
+
+    /// Record one all-gather of `bytes` logical payload.
+    fn count_gather(&self, bytes: u64) {
+        self.stats.all_gathers.fetch_add(1, Ordering::Relaxed);
+        self.stats.sync_bytes.fetch_add(bytes, Ordering::Relaxed);
     }
 
     /// Bring every input of a spatial node in reach: same-axis sharded
@@ -357,6 +603,9 @@ impl ShardWorker {
             let same_axis = match vals[i].as_ref().expect("value live") {
                 ShardVal::Full(_) | ShardVal::QFull(_) => None,
                 ShardVal::Sharded(_, a) | ShardVal::QSharded(_, a) => Some(*a == axis),
+                // A spatial consumer interrupts a resident chain: force
+                // the lazy channel re-gather.
+                ShardVal::CSharded(_) | ShardVal::QCSharded(_) => Some(false),
             };
             match same_axis {
                 None => {}
@@ -406,6 +655,7 @@ impl ShardWorker {
             let (olo, ohi) = even_share(out_extent, p, d);
             needed_range(consumer, olo, ohi, in_extent, axis)
         };
+        self.stats.halo_exchanges.fetch_add(1, Ordering::Relaxed);
         for s in 0..p {
             let (slo, shi) = even_share(in_extent, p, s);
             for d in 0..p {
@@ -426,6 +676,9 @@ impl ShardWorker {
                         ShardVal::Sharded(t, _) => {
                             if s == me {
                                 let block = pack_rect(t, axis_rect(h, w, axis, lo, hi));
+                                self.stats
+                                    .sync_bytes
+                                    .fetch_add(block.len() as u64 * 4, Ordering::Relaxed);
                                 self.transport.send(d, tag, &block);
                             } else if d == me {
                                 let block = self.transport.recv(s, tag);
@@ -436,6 +689,9 @@ impl ShardWorker {
                             let tag = tag | wire::TAG_Q8;
                             if s == me {
                                 let block = pack_rect_i8(q, axis_rect(h, w, axis, lo, hi));
+                                self.stats
+                                    .sync_bytes
+                                    .fetch_add(block.len() as u64, Ordering::Relaxed);
                                 self.transport.send_bytes(d, tag, wire::i8s_as_bytes(&block));
                             } else if d == me {
                                 let block =
@@ -451,9 +707,11 @@ impl ShardWorker {
     }
 
     /// OutC-sharded f32 execution: compute this rank's output-channel/
-    /// column slice from shard-local weights, then all-gather the slices
-    /// into the full activation.
-    fn exec_outc(&self, node: &Node, args: &[&Tensor]) -> Tensor {
+    /// column slice from shard-local weights, then either keep the slice
+    /// shard-resident (the plan's [`Residency::ResidentOutC`] decision —
+    /// the skipped all-gather) or all-gather the slices into the full
+    /// activation.
+    fn exec_outc(&self, node: &Node, args: &[&Tensor]) -> ShardVal {
         let p = self.world();
         let me = self.rank();
         let prm = self.params.get(node.id);
@@ -465,16 +723,22 @@ impl ShardWorker {
                 } else {
                     self.conv_family_slice(node, a, prm, args[0], c0, c1).data
                 };
-                let blocks = self.all_gather(mine, outc_tag(node.id));
                 let mut out = Tensor::zeros(node.out.clone());
                 let (_, oh, ow) = fm_dims(&out);
                 let ohw = oh * ow;
+                if matches!(self.plan.residency[node.id], Residency::ResidentOutC(_)) {
+                    self.stats.gathers_skipped.fetch_add(1, Ordering::Relaxed);
+                    out.data[c0 * ohw..c1 * ohw].copy_from_slice(&mine);
+                    return ShardVal::CSharded(out);
+                }
+                self.count_gather(out.data.len() as u64 * 4);
+                let blocks = self.all_gather(mine, outc_tag(node.id));
                 for (q, block) in blocks.iter().enumerate() {
                     let (q0, q1) = conv_channel_share(a, p, q);
                     debug_assert_eq!(block.len(), (q1 - q0) * ohw, "channel block size");
                     out.data[q0 * ohw..q1 * ohw].copy_from_slice(block);
                 }
-                out
+                ShardVal::Full(out)
             }
             OpKind::MatMul(m) if m.weighted => {
                 let (j0, j1) = even_share(m.n, p, me);
@@ -484,8 +748,11 @@ impl ShardWorker {
                 } else {
                     matmul::fc(args[0], m.k, j1 - j0, &prm.w, &prm.bias).data
                 };
-                let blocks = self.all_gather(mine, outc_tag(node.id));
+                // Matrix outputs are column-interleaved per row: they
+                // never stay resident (see `plan::outc_slices`).
                 let mut out = Tensor::zeros(node.out.clone());
+                self.count_gather(out.data.len() as u64 * 4);
+                let blocks = self.all_gather(mine, outc_tag(node.id));
                 for (q, block) in blocks.iter().enumerate() {
                     let (q0, q1) = even_share(m.n, p, q);
                     let nw = q1 - q0;
@@ -494,17 +761,19 @@ impl ShardWorker {
                             .copy_from_slice(&block[r * nw..(r + 1) * nw]);
                     }
                 }
-                out
+                ShardVal::Full(out)
             }
             other => unreachable!("outC scheme on unshardable op {other:?}"),
         }
     }
 
     /// INT8 OutC execution: integer-kernel slice from the rank's
-    /// quantized weight shard straight to codes, then an i8 all-gather of
-    /// the code blocks — reassembly equals the single-device output
-    /// bit-for-bit, with no quantize step anywhere near the wire.
-    fn exec_outc_q8(&self, node: &Node, args: &[&QTensor], qrun: &QuantRun) -> QTensor {
+    /// quantized weight shard straight to codes, then either keep the
+    /// code slice shard-resident (the skipped all-gather) or an i8
+    /// all-gather of the code blocks — reassembly equals the
+    /// single-device output bit-for-bit, with no quantize step anywhere
+    /// near the wire.
+    fn exec_outc_q8(&self, node: &Node, args: &[&QTensor], qrun: &QuantRun) -> ShardVal {
         let p = self.world();
         let me = self.rank();
         let prm = self.params.get(node.id);
@@ -517,16 +786,22 @@ impl ShardWorker {
                 } else {
                     self.conv_family_slice_q8(node, a, prm, args[0], c0, c1, qrun)
                 };
-                let blocks = self.all_gather(mine, outc_tag(node.id) | wire::TAG_Q8);
                 let mut out = QTensor::zeros(node.out.clone(), grid);
                 let (_, oh, ow) = fm_of(out.shape());
                 let ohw = oh * ow;
+                if matches!(self.plan.residency[node.id], Residency::ResidentOutC(_)) {
+                    self.stats.gathers_skipped.fetch_add(1, Ordering::Relaxed);
+                    out.data[c0 * ohw..c1 * ohw].copy_from_slice(&mine);
+                    return ShardVal::QCSharded(out);
+                }
+                self.count_gather(out.data.len() as u64);
+                let blocks = self.all_gather(mine, outc_tag(node.id) | wire::TAG_Q8);
                 for (q, block) in blocks.iter().enumerate() {
                     let (q0, q1) = conv_channel_share(a, p, q);
                     debug_assert_eq!(block.len(), (q1 - q0) * ohw, "channel block size");
                     out.data[q0 * ohw..q1 * ohw].copy_from_slice(block);
                 }
-                out
+                ShardVal::QFull(out)
             }
             OpKind::MatMul(m) if m.weighted => {
                 let (j0, j1) = even_share(m.n, p, me);
@@ -545,8 +820,9 @@ impl ShardWorker {
                         &rq.epilogue(),
                     )
                 };
-                let blocks = self.all_gather(mine, outc_tag(node.id) | wire::TAG_Q8);
                 let mut out = QTensor::zeros(node.out.clone(), grid);
+                self.count_gather(out.data.len() as u64);
+                let blocks = self.all_gather(mine, outc_tag(node.id) | wire::TAG_Q8);
                 for (q, block) in blocks.iter().enumerate() {
                     let (q0, q1) = even_share(m.n, p, q);
                     let nw = q1 - q0;
@@ -555,10 +831,113 @@ impl ShardWorker {
                             .copy_from_slice(&block[r * nw..(r + 1) * nw]);
                     }
                 }
-                out
+                ShardVal::QFull(out)
             }
             other => unreachable!("outC scheme on unshardable op {other:?}"),
         }
+    }
+
+    /// Partial-sum execution of a dense INT8 conv/CBR whose input stays
+    /// shard-resident (`ClusterPlan::partial`): this rank computes exact
+    /// i32 accumulator partials over **its own input-channel slice**
+    /// (full unsliced weights, input-channel-sliced codes), the ranks
+    /// reduce-scatter the partials onto their output-channel shares —
+    /// `i32` addition is associative, so the reduced accumulator equals
+    /// the serial kernel's bit-for-bit — and the rank finishes its share
+    /// through the node's fixed-point requantize epilogue. The output is
+    /// born shard-resident; it all-gathers only if the plan kept the
+    /// node's own value [`Residency::Gathered`].
+    fn exec_outc_partial_q8(
+        &self,
+        vals: &[Option<ShardVal>],
+        node: &Node,
+        qrun: &QuantRun,
+    ) -> ShardVal {
+        let p = self.world();
+        let me = self.rank();
+        let input_id = node.inputs[0];
+        let a = match &node.op {
+            OpKind::Conv(a) | OpKind::Cbr(a) => a,
+            other => unreachable!("partial-sum on unsupported op {other:?}"),
+        };
+        debug_assert_eq!(a.groups, 1, "partial-sum consumes dense convs only");
+        let x = vals[input_id].as_ref().expect("input value live").q();
+        let (_, h, w) = fm_of(x.shape());
+        let hw = h * w;
+        let (oh, ow) = a.out_hw(h, w);
+        let ohw = oh * ow;
+        let (c0, c1) = partial_in_slice(&self.plan, a, input_id, me);
+        let mut acc = vec![0i32; a.out_c * ohw];
+        if c0 < c1 {
+            let qx_full = qrun.intdot_codes(input_id, x);
+            // This rank's input-channel slice of the full
+            // (input-grid-folded) weight codes, cut once at construction.
+            let wsl = self.partial_w[node.id].as_ref().expect("partial weight slice");
+            debug_assert_eq!(wsl.len(), a.out_c * (c1 - c0) * a.kh * a.kw);
+            let sub = ConvAttrs { in_c: c1 - c0, ..*a };
+            // Chunked across the local pool like every other conv path —
+            // RawAcc stores per-element accumulators, so any chunking is
+            // bit-identical.
+            self.conv_region_q8(
+                &qx_full[c0 * hw..c1 * hw],
+                h,
+                w,
+                &sub,
+                wsl,
+                &qkernels::RawAcc,
+                0,
+                a.out_c,
+                Rect { y0: 0, y1: oh, x0: 0, x1: ow },
+                oh,
+                ow,
+                acc.as_mut_ptr(),
+            );
+        }
+        // Exact i32 reduce-scatter onto the per-rank output-channel
+        // shares, through the plan's sync mode.
+        let blocks: Vec<(usize, usize)> = (0..p)
+            .map(|r| {
+                let (b0, b1) = conv_channel_share(a, p, r);
+                (b0 * ohw, b1 * ohw)
+            })
+            .collect();
+        let tag = outc_tag(node.id) | wire::TAG_I32;
+        match self.plan.sync {
+            SyncMode::Ring => {
+                ring::ring_reduce_scatter_tp(&*self.transport, &mut acc, &blocks, tag)
+            }
+            SyncMode::Ps => ps::ps_reduce_scatter_tp(&*self.transport, &mut acc, &blocks, tag),
+        }
+        self.stats.reduce_scatters.fetch_add(1, Ordering::Relaxed);
+        self.stats.sync_bytes.fetch_add(acc.len() as u64 * 4, Ordering::Relaxed);
+        // Requantize this rank's fully-reduced share through the node's
+        // per-channel fixed-point epilogue — the same per-element
+        // function the fused kernel applies.
+        let (m0, m1) = conv_channel_share(a, p, me);
+        let mut out = QTensor::zeros(node.out.clone(), qrun.grid(node.id).to_vec());
+        let rq = qrun.requant(node.id).expect("partial-sum conv requant plan");
+        let ep = rq.epilogue();
+        for oc in m0..m1 {
+            // SAFETY: writes `ohw` slots of this rank's own rows.
+            unsafe {
+                ep.store(oc, 0, &acc[oc * ohw..(oc + 1) * ohw], out.data[oc * ohw..].as_mut_ptr())
+            };
+        }
+        if matches!(self.plan.residency[node.id], Residency::ResidentOutC(_)) {
+            self.stats.gathers_skipped.fetch_add(1, Ordering::Relaxed);
+            return ShardVal::QCSharded(out);
+        }
+        self.count_gather(out.data.len() as u64);
+        let mine = out.data[m0 * ohw..m1 * ohw].to_vec();
+        let blocks = self.all_gather(mine, outc_tag(node.id) | wire::TAG_Q8);
+        for (q, block) in blocks.iter().enumerate() {
+            if q == me {
+                continue;
+            }
+            let (q0, q1) = conv_channel_share(a, p, q);
+            out.data[q0 * ohw..q1 * ohw].copy_from_slice(block);
+        }
+        ShardVal::QFull(out)
     }
 
     /// The conv-family channel slice `[c0, c1)` as its own tensor, computed
@@ -1128,6 +1507,9 @@ fn materialize_spatial_arg(
             dequantize_axis_range(q, axis, nlo, nhi)
         }
         ShardVal::Full(t) | ShardVal::Sharded(t, _) => t.clone(),
+        ShardVal::CSharded(_) | ShardVal::QCSharded(_) => {
+            unreachable!("channel-resident inputs are gathered before spatial consumption")
+        }
     }
 }
 

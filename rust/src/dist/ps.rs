@@ -89,6 +89,49 @@ pub fn ps_all_gather_tp<P: WireScalar>(
     blocks.into_iter().map(|b| b.expect("all blocks gathered")).collect()
 }
 
+/// Parameter-server reduce-scatter with per-rank block boundaries: every
+/// worker uploads its full partial buffer, the server accumulates in rank
+/// order and returns each rank **only its own block** — after the call
+/// rank `r` holds the complete sum over `data[blocks[r].0 ..
+/// blocks[r].1]` (other regions are stale and must not be read). The PS
+/// face of [`crate::dist::ring::ring_reduce_scatter_tp`]: same contract,
+/// server-serialized traffic. Tags `base_tag .. base_tag + 2p` are
+/// consumed.
+pub fn ps_reduce_scatter_tp<P>(
+    t: &dyn Transport,
+    data: &mut [P],
+    blocks: &[(usize, usize)],
+    base_tag: u64,
+) where
+    P: WireScalar + Copy + std::ops::AddAssign,
+{
+    let p = t.world();
+    assert_eq!(blocks.len(), p, "one block per rank");
+    if p <= 1 {
+        return;
+    }
+    let me = t.rank();
+    if me == 0 {
+        for q in 1..p {
+            let inc = P::recv_block(t, q, base_tag + q as u64);
+            assert_eq!(inc.len(), data.len(), "ps reduce-scatter buffers must match");
+            for (d, v) in data.iter_mut().zip(&inc) {
+                *d += *v;
+            }
+        }
+        for q in 1..p {
+            let (s, e) = blocks[q];
+            P::send_block(t, q, base_tag + (p + q) as u64, &data[s..e]);
+        }
+    } else {
+        P::send_block(t, 0, base_tag + me as u64, data);
+        let res = P::recv_block(t, 0, base_tag + (p + me) as u64);
+        let (s, e) = blocks[me];
+        debug_assert_eq!(res.len(), e - s, "ps reduce-scatter block size");
+        data[s..e].copy_from_slice(&res);
+    }
+}
+
 /// Execute a parameter-server all-reduce over in-memory worker buffers —
 /// the `LocalTransport` special case of [`ps_allreduce_tp`].
 pub fn ps_allreduce_exec(bufs: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
@@ -168,6 +211,37 @@ mod tests {
         });
         for per_rank in &got {
             assert_eq!(per_rank, &blocks);
+        }
+    }
+
+    #[test]
+    fn ps_reduce_scatter_matches_ring_contract() {
+        let p = 3usize;
+        let n = 7usize;
+        let blocks = vec![(0usize, 2usize), (2, 2), (2, 7)];
+        let bufs: Vec<Vec<i32>> =
+            (0..p).map(|r| (0..n).map(|i| (r * 10 + i) as i32).collect()).collect();
+        let mesh = LocalTransport::mesh(p);
+        let got: Vec<Vec<i32>> = std::thread::scope(|scope| {
+            let blocks = &blocks;
+            let handles: Vec<_> = bufs
+                .into_iter()
+                .zip(mesh)
+                .map(|(mut data, t)| {
+                    scope.spawn(move || {
+                        ps_reduce_scatter_tp(&t, &mut data, blocks, 0);
+                        data
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("rs worker")).collect()
+        });
+        for (r, out) in got.iter().enumerate() {
+            let (b0, b1) = blocks[r];
+            for i in b0..b1 {
+                let want: i32 = (0..p).map(|q| (q * 10 + i) as i32).sum();
+                assert_eq!(out[i], want, "rank {r} element {i}");
+            }
         }
     }
 

@@ -99,6 +99,53 @@ pub fn ring_all_gather_tp<P: WireScalar>(
     blocks.into_iter().map(|b| b.expect("all blocks gathered")).collect()
 }
 
+/// Ring reduce-scatter with per-rank block boundaries: every rank starts
+/// with a full-size partial buffer; after `p-1` hops rank `r` holds the
+/// **complete** sum over `data[blocks[r].0 .. blocks[r].1]` (every other
+/// region is left in a partially-reduced state and must not be read).
+/// Blocks may be uneven or empty — the shard-resident partial-sum path
+/// passes output-channel shares, not flat `n/p` chunks. Tags `base_tag ..
+/// base_tag + (p-1)` are consumed.
+///
+/// The reduction is `+=` in ring-hop order. For the integer payloads the
+/// cluster runtime ships (`i32` partial accumulators under
+/// [`crate::dist::exec::wire::TAG_I32`]) the sum is exact and
+/// association-free, which is what makes the partial-sum dataflow
+/// bit-preserving; an f32 instantiation would be association-dependent
+/// and is deliberately never planned.
+pub fn ring_reduce_scatter_tp<P>(
+    t: &dyn Transport,
+    data: &mut [P],
+    blocks: &[(usize, usize)],
+    base_tag: u64,
+) where
+    P: WireScalar + Copy + std::ops::AddAssign,
+{
+    let p = t.world();
+    assert_eq!(blocks.len(), p, "one block per rank");
+    if p <= 1 {
+        return;
+    }
+    let me = t.rank();
+    let right = (me + 1) % p;
+    let left = (me + p - 1) % p;
+    // Step s: send block (me-1-s), receive and fold block (me-2-s); the
+    // accumulating block travels the ring and lands complete on its
+    // owner: rank r finishes holding block r.
+    for s in 0..p - 1 {
+        let send_b = (me + 2 * p - 1 - s) % p;
+        let recv_b = (me + 2 * p - 2 - s) % p;
+        let (ss, se) = blocks[send_b];
+        P::send_block(t, right, base_tag + s as u64, &data[ss..se]);
+        let inc = P::recv_block(t, left, base_tag + s as u64);
+        let (rs, re) = blocks[recv_b];
+        debug_assert_eq!(inc.len(), re - rs, "reduce-scatter block size");
+        for (d, v) in data[rs..re].iter_mut().zip(&inc) {
+            *d += *v;
+        }
+    }
+}
+
 /// Execute a ring all-reduce over `p = inputs.len()` worker buffers —
 /// the in-memory face: a scratch `LocalTransport` mesh with one thread per
 /// worker running [`ring_allreduce_tp`]. All workers end bit-identical.
@@ -203,6 +250,47 @@ mod tests {
                 .collect();
             handles.into_iter().map(|h| h.join().expect("gather worker")).collect()
         })
+    }
+
+    #[test]
+    fn reduce_scatter_sums_exactly_onto_owner_blocks() {
+        // Uneven per-rank blocks (one empty): every rank must end with the
+        // exact i32 sum over its own block.
+        let p = 4usize;
+        let n = 11usize;
+        let blocks = vec![(0usize, 3usize), (3, 3), (3, 8), (8, 11)];
+        let bufs: Vec<Vec<i32>> =
+            (0..p).map(|r| (0..n).map(|i| (r * 100 + i) as i32).collect()).collect();
+        let mesh = LocalTransport::mesh(p);
+        let got: Vec<Vec<i32>> = std::thread::scope(|scope| {
+            let blocks = &blocks;
+            let handles: Vec<_> = bufs
+                .into_iter()
+                .zip(mesh)
+                .map(|(mut data, t)| {
+                    scope.spawn(move || {
+                        ring_reduce_scatter_tp(&t, &mut data, blocks, 0);
+                        data
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("rs worker")).collect()
+        });
+        for (r, out) in got.iter().enumerate() {
+            let (b0, b1) = blocks[r];
+            for i in b0..b1 {
+                let want: i32 = (0..p).map(|q| (q * 100 + i) as i32).sum();
+                assert_eq!(out[i], want, "rank {r} element {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_scatter_single_rank_is_identity() {
+        let mesh = LocalTransport::mesh(1);
+        let mut data = vec![7i32, -3];
+        ring_reduce_scatter_tp(&mesh[0], &mut data, &[(0, 2)], 0);
+        assert_eq!(data, vec![7, -3]);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 //! Each operator knows its arithmetic cost ([`OpKind::macs`]), parameter
 //! volume ([`OpKind::param_count`]) and — the dataflow-centric part — the
 //! layout it *naturally writes* and the layout it *prefers to read*
-//! ([`OpKind::natural_write`], [`OpKind::preferred_read`]). The vertical
+//! ([`OpKind::natural_write`], [`OpKind::read_pref`]). The vertical
 //! optimizer links a producer/consumer pair by setting the producer's output
 //! layout to the consumer's preferred read order; the simulator prices the
 //! match/mismatch.

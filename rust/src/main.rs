@@ -78,7 +78,9 @@ const USAGE: &str = "usage: xenos <optimize|run|serve|quantize|dist|dist-worker|
   dist-run --hosts A,B,... --model M --scheme S --sync ring|ps [-p P] [--verify]
            execute distributed inference on remote workers; --local [-p P] runs
            the same plan on in-process shard threads instead; --precision int8
-           runs the quantized plan with i8 halo/all-gather payloads
+           runs the quantized plan with i8 halo/all-gather payloads;
+           --no-resident disables the shard-resident outC dataflow (eager
+           all-gathers — the comparison baseline; reports sync bytes both ways)
   repro    --exp ID|all                    regenerate a paper table/figure
   inspect  --model M                       dump the model graph";
 
@@ -475,13 +477,20 @@ fn cmd_dist_run(args: &Args) -> Result<()> {
         Precision::F32 => None,
     };
 
+    let resident = !args.flag("no-resident");
     let driver = if args.flag("local") || args.get("hosts").is_none() {
         let p = args.get_parse("p", 2usize);
         let d = hw::by_name(&device).with_context(|| format!("unknown device {device}"))?;
-        match &calib {
-            Some(c) => ClusterDriver::local_q8(graph.clone(), &d, p, scheme, sync, threads, c)?,
-            None => ClusterDriver::local(graph.clone(), &d, p, scheme, sync, threads)?,
-        }
+        ClusterDriver::local_opts(
+            graph.clone(),
+            &d,
+            p,
+            scheme,
+            sync,
+            threads,
+            calib.as_ref(),
+            resident,
+        )?
     } else {
         let mut hosts: Vec<String> = args
             .get("hosts")
@@ -497,11 +506,37 @@ fn cmd_dist_run(args: &Args) -> Result<()> {
             hosts.len()
         );
         hosts.truncate(p);
-        match &calib {
-            Some(c) => ClusterDriver::tcp_q8(&hosts, &model, &device, scheme, sync, threads, c)?,
-            None => ClusterDriver::tcp(&hosts, &model, &device, scheme, sync, threads)?,
-        }
+        ClusterDriver::tcp_opts(
+            &hosts,
+            &model,
+            &device,
+            scheme,
+            sync,
+            threads,
+            calib.as_ref(),
+            resident,
+        )?
     };
+
+    // The inter-layer dataflow decision: how much activation traffic the
+    // shard-resident plan removes relative to the eager all-gather
+    // baseline (PR 4 behavior ≡ --no-resident).
+    let acct = driver.plan().accounting(driver.graph());
+    println!(
+        "residency: {} resident values ({} of {} outC all-gathers skipped) — \
+         {} all-gathers, {} reduce-scatters",
+        acct.resident_values,
+        acct.gathers_skipped,
+        acct.outc_values,
+        acct.all_gathers,
+        acct.reduce_scatters,
+    );
+    println!(
+        "plan sync bytes/inference: {} resident vs {} gathered ({:.2}x)",
+        human_bytes(acct.sync_bytes),
+        human_bytes(acct.gathered_bytes),
+        acct.gathered_bytes as f64 / acct.sync_bytes.max(1) as f64,
+    );
 
     let inputs = xenos::ops::interp::synthetic_inputs(driver.graph(), seed);
     // Warm-up round (connection setup, first-touch allocation), then the
@@ -516,6 +551,17 @@ fn cmd_dist_run(args: &Args) -> Result<()> {
         outputs.len(),
         human_time(dist_s)
     );
+    if let Some(s) = driver.sync_stats() {
+        println!(
+            "rank-0 measured (2 rounds): {} all-gathers ({} skipped), {} reduce-scatters, \
+             {} halo exchanges, {} synchronized",
+            s.all_gathers,
+            s.gathers_skipped,
+            s.reduce_scatters,
+            s.halo_exchanges,
+            human_bytes(s.sync_bytes),
+        );
+    }
 
     // Differential check against the single-device reference at the same
     // precision (quantized clusters are bit-exact vs the single-device

@@ -1,7 +1,7 @@
 //! Matrix multiplication / fully-connected execution.
 //!
 //! The core is a packed, register-tiled panel kernel
-//! ([`matmul_panel_raw`]): the right-hand operand is packed one `NR`-column
+//! (`matmul_panel_raw`): the right-hand operand is packed one `NR`-column
 //! panel at a time into a contiguous buffer (so the k-loop streams it
 //! sequentially regardless of `n`), and `MR`×`NR` output tiles are
 //! accumulated in registers. Per output element the accumulation runs in

@@ -22,6 +22,16 @@
 //! Intermediate buffers come from a per-engine [`BufferArena`], so steady-
 //! state inference recycles allocations instead of hitting the allocator
 //! once per node.
+//!
+//! **The shared-kernel contract** (what the code cannot show): every
+//! executor in the system — this one, the serial interpreter, and each
+//! d-Xenos shard ([`crate::dist::exec::ShardWorker`]) — must reach the
+//! same tile routines with the same `(region, loop-order)` convention, so
+//! the differential suites can assert bitwise equality instead of
+//! tolerances. Adding a kernel variant that re-associates a float
+//! reduction (anything K/C-split-shaped) moves that code path from the
+//! bit-exact class to the tolerance class and must be gated the way
+//! `SplitDim::C` is here.
 
 use std::sync::{Arc, Mutex};
 

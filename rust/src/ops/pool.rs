@@ -3,7 +3,7 @@
 //! Structured as **tile kernels** like `ops::conv`: the serial entry point
 //! ([`pool`]), the parallel executor's channel-chunked pooling and the
 //! d-Xenos cluster runtime's row/column shards all run the same
-//! per-element fold ([`pool_tile_raw`], [`global_tile_raw`]), so any
+//! per-element fold (`pool_tile_raw`, `global_tile_raw`), so any
 //! (channel, row, column) tiling of a pooling operator is bit-identical to
 //! the serial result.
 

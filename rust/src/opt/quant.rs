@@ -17,6 +17,16 @@
 //! IntDot`]) or computes in f32 and *re-quantizes* its output onto its
 //! own calibrated grid ([`QuantKind::Requant`]).
 //!
+//! **Grid-snapping semantics** (the invariant the engines rely on): a
+//! value "on a grid" means every element is exactly `k·scale` for an
+//! `i8` code `k ∈ [-127, 127]`, with the scale resolved per channel
+//! through `grid_of`. Snapped values survive quantize→dequantize
+//! round-trips losslessly, which is what makes i8 wire payloads and
+//! shard-local requantization exact; the rounding mode that defines `k`
+//! is pinned crate-wide in [`crate::quant::quant1`] (ties away from
+//! zero) and reproduced by the fixed-point kernel epilogue
+//! ([`crate::quant::fix_requant1`]).
+//!
 //! The plan additionally marks **dequantize boundaries**
 //! ([`QuantPlan::needs_f32`]): activations are i8-resident everywhere
 //! (codes + grid travel between operators as

@@ -2,7 +2,7 @@
 //! engine, and [`QuantEngine`] — the single-host engine behind
 //! `serve --precision int8 --engine interp|par`.
 //!
-//! [`qexec_node`] is the quantized counterpart of `ops::interp::
+//! `qexec_node` is the quantized counterpart of `ops::interp::
 //! exec_node`: the single source of truth for what one operator computes
 //! under INT8. The serial engine, the worker-pool engine and the d-Xenos
 //! shard worker's replicated path all call it (or chunk the same tile
@@ -13,7 +13,7 @@
 //! **Integer-resident dataflow.** Activations travel between nodes as
 //! [`QTensor`]s — i8 codes plus their grid. `IntDot` nodes consume codes
 //! directly and emit codes through the fused requantize epilogue
-//! ([`RequantPlan`]); f32 is materialized only at dequantize boundaries
+//! (`RequantPlan`); f32 is materialized only at dequantize boundaries
 //! (f32-computed operators, graph outputs). The engine counts any forced
 //! i8→f32→i8 round-trip on an integer edge in
 //! [`QuantRun::snap_roundtrips`]; the differential tests pin it at zero.

@@ -6,11 +6,11 @@
 //! Every kernel is generic over its **epilogue** — how a finished i32
 //! accumulator segment becomes output elements:
 //!
-//! * [`FixedQ8`] — the fused requantize epilogue: per-output-channel
+//! * `FixedQ8` — the fused requantize epilogue: per-output-channel
 //!   fixed-point multiplier+shift (+ bias, + optional fused ReLU as a
 //!   zero clamp) straight to i8 codes. This is the integer-resident hot
 //!   path: `IntDot → IntDot` edges never materialize f32.
-//! * [`DeqF32`] — dequantize to f32 with per-row/column scales and
+//! * `DeqF32` — dequantize to f32 with per-row/column scales and
 //!   biases; used where a float stage follows before requantization
 //!   (the linked CBRA/CBRM operators pool in f32) and at dequantize
 //!   boundaries.
@@ -118,6 +118,22 @@ impl Epilogue for FixedQ8<'_> {
                 *dst.add(i) = fix_requant1(v, m, s, b, self.lo);
             }
         }
+    }
+}
+
+/// Raw-accumulator epilogue: stores the exact i32 accumulators untouched.
+/// The shard-resident partial-sum path runs the conv kernels with this
+/// epilogue so per-rank input-channel partials can be reduce-scattered
+/// exactly (`i32` addition is associative) before the owning rank applies
+/// the real [`FixedQ8`] epilogue to the complete sum.
+pub(crate) struct RawAcc;
+
+impl Epilogue for RawAcc {
+    type Out = i32;
+
+    #[inline]
+    unsafe fn store(&self, _r: usize, _c0: usize, acc: &[i32], dst: *mut i32) {
+        std::ptr::copy_nonoverlapping(acc.as_ptr(), dst, acc.len());
     }
 }
 

@@ -206,7 +206,7 @@ pub(crate) fn fix_round(v: i64, shift: u8) -> i64 {
 /// (clamping at zero *is* ReLU on a symmetric grid), `lo = -127`
 /// otherwise.
 #[inline]
-pub(crate) fn fix_requant1(acc: i32, mult: i32, shift: u8, bias: i64, lo: i8) -> i8 {
+pub fn fix_requant1(acc: i32, mult: i32, shift: u8, bias: i64, lo: i8) -> i8 {
     let v = acc as i64 * mult as i64 + bias;
     fix_round(v, shift).clamp(lo as i64, 127) as i8
 }

@@ -496,6 +496,48 @@ fn serve_precision_int8_matrix_agrees_across_engines() {
     }
 }
 
+/// The shard-resident partial-sum path: a 64 → 8-channel 1×1 bottleneck
+/// where the planner keeps the wide activation resident and the narrow
+/// dense conv consumes it by reduce-scattering exact i32 partial sums
+/// (8·hw·4 B) instead of gathering the 64·hw·1 B input. Must be planned
+/// (`ClusterPlan::partial`), must run at least one reduce-scatter, and
+/// must stay bit-identical to the single-device quantized engine across
+/// cluster sizes and sync modes.
+#[test]
+fn int8_partial_sum_bottleneck_is_bit_exact() {
+    let mut b = GraphBuilder::new("quant_bneck");
+    let x = b.input("x", Shape::nchw(1, 4, 8, 8));
+    let c1 = b.conv("c1", x, 64, 3, 1, 1);
+    let c2 = b.conv("c2", c1, 8, 1, 1, 0);
+    let sm = b.softmax("sm", c2);
+    b.output(sm);
+    let g = Arc::new(b.finish());
+    let calib = calib_for(&g);
+    let inputs = synthetic_inputs(&g, 73);
+    let want = QuantEngine::new(g.clone(), &calib, 1).unwrap().run(&inputs);
+    let d = presets::tms320c6678();
+    for p in [2usize, 3] {
+        for sync in [SyncMode::Ring, SyncMode::Ps] {
+            let driver =
+                ClusterDriver::local_q8(g.clone(), &d, p, PartitionScheme::OutC, sync, 1, &calib)
+                    .unwrap();
+            assert!(
+                driver.plan().partial.iter().any(|&f| f),
+                "p={p} {sync:?}: the bottleneck must be planned partial-sum"
+            );
+            let acct = driver.plan().accounting(&g);
+            assert!(acct.reduce_scatters >= 1, "p={p} {sync:?}: {acct:?}");
+            assert!(acct.sync_bytes < acct.gathered_bytes, "p={p} {sync:?}: {acct:?}");
+            let got = driver.infer(&inputs).unwrap();
+            for (a, o) in want.iter().zip(&got) {
+                assert_eq!(a.data, o.data, "p={p} {sync:?}: partial-sum diverged");
+            }
+            let stats = driver.sync_stats().unwrap();
+            assert!(stats.reduce_scatters >= 1, "p={p} {sync:?}: {stats:?}");
+        }
+    }
+}
+
 /// Zoo acceptance matrix (heavier; run with --ignored in the quant-diff
 /// CI job locally): quantized cluster bit-exact vs quantized single
 /// device on real models.
