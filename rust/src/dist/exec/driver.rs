@@ -11,45 +11,194 @@
 //!   each worker a [`JobSpec`] plus its parameter shard over the control
 //!   link; workers build the same graph/plan deterministically, mesh up
 //!   over [`TcpTransport`], and stream results back.
+//!
+//! # Failure model
+//!
+//! Shard rounds fail with typed [`TransportError`]s instead of panics
+//! (dead peer, missed deadline, truncated frame, received abort). The
+//! driver classifies the failure's culprit rank and **re-plans over the
+//! survivors**: it re-runs the partitioner for `p-1` ranks, re-extracts
+//! every shard's weights from the master [`ParamStore`], stands up a
+//! fresh mesh, and retries the round. Because shard execution is
+//! bit-identical to the single-device engines at any world size, the
+//! retried result equals the original plan's result bit-for-bit. When
+//! fewer than two ranks survive, the driver falls back to the
+//! single-device engine ([`Interpreter`](crate::ops::Interpreter) /
+//! [`QuantEngine`](crate::quant::QuantEngine)). [`ClusterDriver::fault_stats`]
+//! reports failures detected, aborts observed, re-plans, retries, and
+//! single-device fallbacks.
 
 use std::net::{TcpListener, TcpStream};
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use super::fault::{FaultScript, FaultyTransport};
 use super::plan::{plan_cluster_opts, ClusterPlan};
 use super::shard::ShardParams;
-use super::transport::{accept_peers, LocalTransport, TcpTransport};
+use super::transport::{
+    accept_peers, LocalTransport, MeshHandle, TcpOptions, TcpTransport, Transport, TransportError,
+    DEFAULT_HEARTBEAT, DEFAULT_RECV_TIMEOUT,
+};
 use super::wire::{self, JobSpec};
 use super::worker::{ShardWorker, SyncSnapshot, SyncStats};
 use crate::dist::{PartitionScheme, SyncMode};
 use crate::graph::{models, Graph, Shape};
 use crate::hw::{self, DeviceModel};
 use crate::ops::params::ParamStore;
-use crate::ops::Tensor;
-use crate::quant::{CalibTable, Precision, QuantRun};
+use crate::ops::{Interpreter, Tensor};
+use crate::quant::{CalibTable, Precision, QuantEngine, QuantRun};
 
-/// How long `infer` waits for a cluster round trip.
-const INFER_TIMEOUT: Duration = Duration::from_secs(300);
+/// Default overall deadline for one cluster round trip.
+const DEFAULT_INFER_TIMEOUT: Duration = Duration::from_secs(300);
 
-/// A handle on a running cluster; `infer` runs one distributed inference.
+/// Cluster tunables beyond the partitioning knobs: execution threads, the
+/// shard-resident dataflow switch, failure-detection deadlines, and an
+/// optional fault-injection script (local clusters; test harnesses).
+#[derive(Debug, Clone)]
+pub struct ClusterOptions {
+    /// Intra-shard executor threads per rank.
+    pub threads: usize,
+    /// Shard-resident activation dataflow (`false` reproduces the
+    /// eager-gather baseline).
+    pub resident: bool,
+    /// Per-recv deadline on peer links.
+    pub recv_timeout: Duration,
+    /// Overall deadline for one inference round trip.
+    pub infer_timeout: Duration,
+    /// Peer-link heartbeat interval (TCP meshes); `None` disables
+    /// heartbeats and liveness-based death detection.
+    pub heartbeat: Option<Duration>,
+    /// Scripted faults applied to the *initial* cluster build (local
+    /// backends only); rebuilt survivor meshes always get clean
+    /// transports, so a scripted kill is observed exactly once.
+    pub fault: Option<FaultScript>,
+}
+
+impl Default for ClusterOptions {
+    fn default() -> ClusterOptions {
+        ClusterOptions {
+            threads: 1,
+            resident: true,
+            recv_timeout: DEFAULT_RECV_TIMEOUT,
+            infer_timeout: DEFAULT_INFER_TIMEOUT,
+            heartbeat: Some(DEFAULT_HEARTBEAT),
+            fault: None,
+        }
+    }
+}
+
+/// Fault-handling counters the driver accumulates across its lifetime.
+#[derive(Debug, Default)]
+struct FaultStats {
+    failures: AtomicU64,
+    aborts: AtomicU64,
+    replans: AtomicU64,
+    retries: AtomicU64,
+    fallbacks: AtomicU64,
+}
+
+/// Plain-value view of the driver's fault-handling counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultSnapshot {
+    /// Round failures the driver detected (one per failed round).
+    pub failures: u64,
+    /// Abort notifications ranks observed (peers unblocked by a broadcast
+    /// rather than detecting the failure themselves).
+    pub aborts: u64,
+    /// Survivor re-plans performed.
+    pub replans: u64,
+    /// Rounds retried after a re-plan.
+    pub retries: u64,
+    /// Falls back to the single-device engine (fewer than two survivors).
+    pub fallbacks: u64,
+}
+
+/// A handle on a running cluster; `infer` runs one distributed inference,
+/// transparently re-planning over survivors when a rank fails.
 pub struct ClusterDriver {
     graph: Arc<Graph>,
-    plan: ClusterPlan,
     scheme: PartitionScheme,
     sync: SyncMode,
     precision: Precision,
+    calib: Option<CalibTable>,
+    opts: ClusterOptions,
+    kind: DriverKind,
+    master: Arc<ParamStore>,
+    state: Mutex<DriverState>,
+    faults: Arc<FaultStats>,
+}
+
+/// What the driver needs to rebuild its backend from scratch.
+enum DriverKind {
+    Local { device: DeviceModel },
+    Tcp { model: String, device_name: String },
+}
+
+/// The mutable half of the driver: current world size, plan, backend and
+/// (TCP) surviving worker hosts. All behind one mutex so concurrent
+/// `infer` callers serialize — interleaved rounds would let ranks pair
+/// collectives from different requests.
+struct DriverState {
     world: usize,
+    plan: ClusterPlan,
     backend: Backend,
+    /// Surviving worker addresses, rank order (TCP backends only).
+    hosts: Vec<String>,
 }
 
 enum Backend {
     Local(LocalCluster),
     Tcp(TcpCluster),
+    /// Single-device fallback once fewer than two ranks survive.
+    Single(SingleEngine),
+    /// Mid-rebuild placeholder; observed only if a re-plan itself failed.
+    Dead,
+}
+
+/// The engine the driver falls back to with one rank left.
+enum SingleEngine {
+    F32,
+    Int8(QuantEngine),
+}
+
+/// One round's failure as classified by a backend: the rank the driver
+/// should drop (when identifiable) plus the failure message.
+struct RoundFailure {
+    culprit: Option<usize>,
+    message: String,
+}
+
+/// How a worker thread's round ended: a typed transport failure or a
+/// caught panic (both recoverable at the driver).
+enum WorkerFailure {
+    Transport(TransportError),
+    Panic(String),
+}
+
+fn round_failure(rank: usize, wf: WorkerFailure) -> RoundFailure {
+    match wf {
+        WorkerFailure::Transport(e) => RoundFailure {
+            // A protocol error has no inherent culprit; blame the link the
+            // reporting rank was reading (dropping either end of a corrupt
+            // link re-plans to a correct cluster).
+            culprit: e.culprit().or(if e.is_abort() { None } else { Some(rank) }),
+            message: e.to_string(),
+        },
+        WorkerFailure::Panic(msg) => RoundFailure {
+            culprit: Some(rank),
+            message: format!("rank {rank} panicked: {msg}"),
+        },
+    }
+}
+
+fn lock_recover<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
 }
 
 impl ClusterDriver {
@@ -82,10 +231,9 @@ impl ClusterDriver {
         Self::local_opts(graph, device, p, scheme, sync, threads, Some(calib), true)
     }
 
-    /// The fully-parameterized local constructor: optional calibration
-    /// (INT8 when present) and the shard-resident dataflow knob —
-    /// `resident = false` reproduces the eager-gather plan (the
-    /// `dist-run --no-resident` baseline).
+    /// Historical local constructor: optional calibration (INT8 when
+    /// present) and the shard-resident dataflow knob. See
+    /// [`ClusterDriver::local_with`] for the full option set.
     #[allow(clippy::too_many_arguments)]
     pub fn local_opts(
         graph: Arc<Graph>,
@@ -97,16 +245,51 @@ impl ClusterDriver {
         calib: Option<&CalibTable>,
         resident: bool,
     ) -> Result<ClusterDriver> {
+        let opts = ClusterOptions { threads, resident, ..ClusterOptions::default() };
+        Self::local_with(graph, device, p, scheme, sync, opts, calib)
+    }
+
+    /// The fully-parameterized local constructor: [`ClusterOptions`]
+    /// carries threads, the resident knob, failure deadlines and an
+    /// optional [`FaultScript`].
+    pub fn local_with(
+        graph: Arc<Graph>,
+        device: &DeviceModel,
+        p: usize,
+        scheme: PartitionScheme,
+        sync: SyncMode,
+        opts: ClusterOptions,
+        calib: Option<&CalibTable>,
+    ) -> Result<ClusterDriver> {
         if let Some(c) = calib {
             c.matches(&graph)?;
         }
         let p = p.max(1);
         let precision = if calib.is_some() { Precision::Int8 } else { Precision::F32 };
-        let plan = plan_cluster_opts(&graph, device, p, scheme, sync, precision, resident);
-        let master = ParamStore::for_graph(&graph);
-        let backend =
-            Backend::Local(LocalCluster::spawn(&graph, &plan, &master, threads, calib)?);
-        Ok(ClusterDriver { graph, plan, scheme, sync, precision, world: p, backend })
+        let plan = plan_cluster_opts(&graph, device, p, scheme, sync, precision, opts.resident);
+        let master = Arc::new(ParamStore::for_graph(&graph));
+        let faults = Arc::new(FaultStats::default());
+        let backend = Backend::Local(LocalCluster::spawn(
+            &graph,
+            &plan,
+            &master,
+            &opts,
+            calib,
+            opts.fault.as_ref(),
+            faults.clone(),
+        )?);
+        Ok(ClusterDriver {
+            graph,
+            scheme,
+            sync,
+            precision,
+            calib: calib.cloned(),
+            opts,
+            kind: DriverKind::Local { device: device.clone() },
+            master,
+            state: Mutex::new(DriverState { world: p, plan, backend, hosts: Vec::new() }),
+            faults,
+        })
     }
 
     /// Connect to remote `xenos dist-worker` processes at `hosts` (rank
@@ -138,9 +321,9 @@ impl ClusterDriver {
         Self::tcp_opts(hosts, model, device_name, scheme, sync, threads, Some(calib), true)
     }
 
-    /// The fully-parameterized TCP constructor — see
-    /// [`ClusterDriver::local_opts`]. The `resident` knob travels in the
-    /// [`JobSpec`] so every worker cuts the identical plan.
+    /// Historical TCP constructor — see [`ClusterDriver::tcp_with`]. The
+    /// `resident` knob travels in the [`JobSpec`] so every worker cuts the
+    /// identical plan.
     #[allow(clippy::too_many_arguments)]
     pub fn tcp_opts(
         hosts: &[String],
@@ -151,6 +334,24 @@ impl ClusterDriver {
         threads: usize,
         calib: Option<&CalibTable>,
         resident: bool,
+    ) -> Result<ClusterDriver> {
+        let opts = ClusterOptions { threads, resident, ..ClusterOptions::default() };
+        Self::tcp_with(hosts, model, device_name, scheme, sync, opts, calib)
+    }
+
+    /// The fully-parameterized TCP constructor: [`ClusterOptions`]
+    /// deadlines and heartbeat interval ship to every worker in the
+    /// [`JobSpec`], so the whole mesh shares one failure-detection
+    /// configuration. Fault scripts are a local-backend test facility and
+    /// are ignored here.
+    pub fn tcp_with(
+        hosts: &[String],
+        model: &str,
+        device_name: &str,
+        scheme: PartitionScheme,
+        sync: SyncMode,
+        opts: ClusterOptions,
+        calib: Option<&CalibTable>,
     ) -> Result<ClusterDriver> {
         anyhow::ensure!(!hosts.is_empty(), "need at least one worker host");
         let graph = Arc::new(
@@ -163,40 +364,47 @@ impl ClusterDriver {
             .with_context(|| format!("unknown device {device_name}"))?;
         let p = hosts.len();
         let precision = if calib.is_some() { Precision::Int8 } else { Precision::F32 };
-        let plan = plan_cluster_opts(&graph, &device, p, scheme, sync, precision, resident);
-        let master = ParamStore::for_graph(&graph);
-        let mut ctrls = Vec::with_capacity(p);
-        for (rank, host) in hosts.iter().enumerate() {
-            let mut sock = TcpStream::connect(host)
-                .with_context(|| format!("connecting to worker {rank} at {host}"))?;
-            sock.set_nodelay(true)?;
-            let spec = JobSpec {
+        let plan = plan_cluster_opts(&graph, &device, p, scheme, sync, precision, opts.resident);
+        let master = Arc::new(ParamStore::for_graph(&graph));
+        let cluster = dial_workers(
+            hosts,
+            model,
+            device_name,
+            &graph,
+            &plan,
+            &master,
+            calib,
+            &opts,
+            scheme,
+            sync,
+            precision,
+        )?;
+        Ok(ClusterDriver {
+            graph,
+            scheme,
+            sync,
+            precision,
+            calib: calib.cloned(),
+            opts,
+            kind: DriverKind::Tcp {
                 model: model.to_string(),
-                device: device_name.to_string(),
-                rank,
+                device_name: device_name.to_string(),
+            },
+            master,
+            state: Mutex::new(DriverState {
                 world: p,
-                threads,
-                scheme,
-                sync,
-                precision,
-                resident,
-                peers: hosts.to_vec(),
-            };
-            wire::write_frame(&mut sock, wire::CTRL_SPEC, &wire::encode_spec(&spec))?;
-            let shard = ShardParams::extract(&graph, &plan, &master, rank);
-            wire::write_frame(&mut sock, wire::CTRL_PARAMS, &wire::encode_params(shard.nodes()))?;
-            if let Some(c) = calib {
-                wire::write_frame(&mut sock, wire::CTRL_CALIB, &c.encode())?;
-            }
-            ctrls.push(sock);
-        }
-        let backend = Backend::Tcp(TcpCluster { ctrls: Mutex::new(ctrls) });
-        Ok(ClusterDriver { graph, plan, scheme, sync, precision, world: p, backend })
+                plan,
+                backend: Backend::Tcp(cluster),
+                hosts: hosts.to_vec(),
+            }),
+            faults: Arc::new(FaultStats::default()),
+        })
     }
 
-    /// Cluster size.
+    /// Current cluster size (shrinks when the driver re-plans over
+    /// survivors; `1` after the single-device fallback).
     pub fn world(&self) -> usize {
-        self.world
+        lock_recover(&self.state).world
     }
 
     /// The model graph being served.
@@ -204,17 +412,31 @@ impl ClusterDriver {
         &self.graph
     }
 
-    /// The cluster plan in effect (schemes + residency decisions).
-    pub fn plan(&self) -> &ClusterPlan {
-        &self.plan
+    /// The cluster plan currently in effect (schemes + residency
+    /// decisions). Returns an owned copy: the plan is replaced wholesale
+    /// when the driver re-plans over survivors.
+    pub fn plan(&self) -> ClusterPlan {
+        lock_recover(&self.state).plan.clone()
     }
 
     /// Rank 0's measured synchronization counters (local clusters only;
     /// TCP workers keep their counters in their own processes).
     pub fn sync_stats(&self) -> Option<SyncSnapshot> {
-        match &self.backend {
+        match &lock_recover(&self.state).backend {
             Backend::Local(c) => c.stats.first().map(|s| s.snapshot()),
-            Backend::Tcp(_) => None,
+            _ => None,
+        }
+    }
+
+    /// The driver's fault-handling counters: failures detected, aborts
+    /// observed by ranks, re-plans, retries, single-device fallbacks.
+    pub fn fault_stats(&self) -> FaultSnapshot {
+        FaultSnapshot {
+            failures: self.faults.failures.load(Ordering::Relaxed),
+            aborts: self.faults.aborts.load(Ordering::Relaxed),
+            replans: self.faults.replans.load(Ordering::Relaxed),
+            retries: self.faults.retries.load(Ordering::Relaxed),
+            fallbacks: self.faults.fallbacks.load(Ordering::Relaxed),
         }
     }
 
@@ -235,9 +457,11 @@ impl ClusterDriver {
     /// Display label, e.g. `cluster:mobilenet x4 ring-Mix` (INT8 clusters
     /// append `-int8`).
     pub fn label(&self) -> String {
-        let kind = match self.backend {
+        let state = lock_recover(&self.state);
+        let kind = match state.backend {
             Backend::Local(_) => "cluster",
             Backend::Tcp(_) => "tcp-cluster",
+            Backend::Single(_) | Backend::Dead => "cluster-fallback",
         };
         let prec = match self.precision {
             Precision::F32 => String::new(),
@@ -246,23 +470,159 @@ impl ClusterDriver {
         format!(
             "{kind}:{} x{} {}-{}{prec}",
             self.graph.name,
-            self.world,
+            state.world,
             self.sync.label(),
             self.scheme.label()
         )
     }
 
     /// Run one distributed inference across the cluster.
+    ///
+    /// On a rank failure (dead peer, missed deadline, truncated frame,
+    /// worker panic) the driver re-plans over the survivors and retries
+    /// the round; with fewer than two survivors it falls back to the
+    /// single-device engine. Every retried/fallback result is
+    /// bit-identical to the original cluster's, because all world sizes
+    /// execute the same per-element arithmetic. Errors returned here are
+    /// terminal (no identifiable culprit, or the rebuild itself failed) —
+    /// never panics crossing the API.
     pub fn infer(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        match &self.backend {
-            Backend::Local(c) => c.infer(inputs),
-            Backend::Tcp(c) => c.infer(inputs),
+        let mut state = lock_recover(&self.state);
+        loop {
+            let failure = match &state.backend {
+                Backend::Single(e) => return self.run_single(e, inputs),
+                Backend::Dead => bail!("cluster is down after a failed re-plan"),
+                Backend::Local(c) => {
+                    match c.infer(inputs, self.opts.infer_timeout, &self.faults) {
+                        Ok(v) => return Ok(v),
+                        Err(f) => f,
+                    }
+                }
+                Backend::Tcp(c) => match c.infer(inputs) {
+                    Ok(v) => return Ok(v),
+                    Err(f) => f,
+                },
+            };
+            self.faults.failures.fetch_add(1, Ordering::Relaxed);
+            let culprit = match failure.culprit {
+                Some(c) if c < state.world => c,
+                _ => bail!(
+                    "cluster inference failed with no identifiable culprit: {}",
+                    failure.message
+                ),
+            };
+            eprintln!(
+                "cluster: rank {culprit} failed ({}); re-planning over {} survivor(s)",
+                failure.message,
+                state.world - 1
+            );
+            self.rebuild(&mut state, culprit)
+                .with_context(|| format!("re-planning after rank {culprit} failed"))?;
+            self.faults.retries.fetch_add(1, Ordering::Relaxed);
         }
+    }
+
+    /// Rebuild the backend without `culprit`: re-run the planner for the
+    /// survivor count, re-extract every shard's weights from the master
+    /// store, and stand a fresh mesh up. With fewer than two survivors,
+    /// install the single-device fallback instead.
+    fn rebuild(&self, state: &mut DriverState, culprit: usize) -> Result<()> {
+        self.faults.replans.fetch_add(1, Ordering::Relaxed);
+        let survivors = state.world - 1;
+        if survivors < 2 {
+            self.faults.fallbacks.fetch_add(1, Ordering::Relaxed);
+            state.backend = Backend::Single(self.single_engine()?);
+            state.world = 1;
+            state.hosts.clear();
+            return Ok(());
+        }
+        match &self.kind {
+            DriverKind::Local { device } => {
+                let plan = plan_cluster_opts(
+                    &self.graph,
+                    device,
+                    survivors,
+                    self.scheme,
+                    self.sync,
+                    self.precision,
+                    self.opts.resident,
+                );
+                // Survivor meshes are always clean: fault scripts apply to
+                // the initial build only.
+                let cluster = LocalCluster::spawn(
+                    &self.graph,
+                    &plan,
+                    &self.master,
+                    &self.opts,
+                    self.calib.as_ref(),
+                    None,
+                    self.faults.clone(),
+                )?;
+                state.plan = plan;
+                state.world = survivors;
+                state.backend = Backend::Local(cluster);
+            }
+            DriverKind::Tcp { model, device_name } => {
+                let mut hosts = state.hosts.clone();
+                anyhow::ensure!(culprit < hosts.len(), "culprit rank {culprit} out of range");
+                hosts.remove(culprit);
+                // Close the old control links first: surviving workers
+                // accept the new session only once the failed one unwinds.
+                state.backend = Backend::Dead;
+                let device = hw::by_name(device_name)
+                    .with_context(|| format!("unknown device {device_name}"))?;
+                let plan = plan_cluster_opts(
+                    &self.graph,
+                    &device,
+                    survivors,
+                    self.scheme,
+                    self.sync,
+                    self.precision,
+                    self.opts.resident,
+                );
+                let cluster = dial_workers(
+                    &hosts,
+                    model,
+                    device_name,
+                    &self.graph,
+                    &plan,
+                    &self.master,
+                    self.calib.as_ref(),
+                    &self.opts,
+                    self.scheme,
+                    self.sync,
+                    self.precision,
+                )?;
+                state.plan = plan;
+                state.world = survivors;
+                state.hosts = hosts;
+                state.backend = Backend::Tcp(cluster);
+            }
+        }
+        Ok(())
+    }
+
+    fn single_engine(&self) -> Result<SingleEngine> {
+        Ok(match &self.calib {
+            Some(c) => {
+                SingleEngine::Int8(QuantEngine::new(self.graph.clone(), c, self.opts.threads)?)
+            }
+            None => SingleEngine::F32,
+        })
+    }
+
+    fn run_single(&self, engine: &SingleEngine, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        Ok(match engine {
+            SingleEngine::F32 => Interpreter::new(&self.graph).run(inputs),
+            SingleEngine::Int8(q) => q.run(inputs),
+        })
     }
 }
 
-/// One shard round's result as reported by rank 0.
-type RoundResult = Result<Vec<Tensor>, String>;
+/// One shard round's report: `(rank, result)`. Rank 0 always reports
+/// (its outputs are the round's result); other ranks report only
+/// failures.
+type RoundReport = (usize, Result<Vec<Tensor>, WorkerFailure>);
 
 /// Local backend: worker threads + job/result channels. The channel pair
 /// sits behind one mutex held for a whole round (submit + result), so
@@ -271,6 +631,9 @@ type RoundResult = Result<Vec<Tensor>, String>;
 struct LocalCluster {
     round: Mutex<LocalRound>,
     handles: Vec<JoinHandle<()>>,
+    /// Driver-side handle on the mesh mailboxes, for out-of-band aborts
+    /// when the round deadline lapses with workers still blocked.
+    mesh: MeshHandle,
     /// Per-rank sync counters, cloned out before the workers moved into
     /// their threads (rank order).
     stats: Vec<Arc<SyncStats>>,
@@ -278,7 +641,7 @@ struct LocalCluster {
 
 struct LocalRound {
     job_txs: Vec<Sender<Vec<Tensor>>>,
-    out_rx: Receiver<RoundResult>,
+    out_rx: Receiver<RoundReport>,
 }
 
 impl LocalCluster {
@@ -286,12 +649,14 @@ impl LocalCluster {
         graph: &Arc<Graph>,
         plan: &ClusterPlan,
         master: &ParamStore,
-        threads: usize,
+        opts: &ClusterOptions,
         calib: Option<&CalibTable>,
+        fault: Option<&FaultScript>,
+        faults: Arc<FaultStats>,
     ) -> Result<LocalCluster> {
         let p = plan.world;
-        let mesh = LocalTransport::mesh(p);
-        let (out_tx, out_rx) = channel::<RoundResult>();
+        let (mesh, handle) = LocalTransport::mesh_with_handle(p, opts.recv_timeout);
+        let (out_tx, out_rx) = channel::<RoundReport>();
         let mut job_txs = Vec::with_capacity(p);
         let mut handles = Vec::with_capacity(p);
         let mut stats = Vec::with_capacity(p);
@@ -309,25 +674,40 @@ impl LocalCluster {
                     |id| super::shard::quant_row_offset(graph, plan, rank, id),
                 ))
             });
+            let transport: Box<dyn Transport> = match fault {
+                Some(script) if script.afflicts(rank) => {
+                    Box::new(FaultyTransport::wrap(Box::new(transport), script))
+                }
+                _ => Box::new(transport),
+            };
             let worker = ShardWorker::with_quant(
                 graph.clone(),
                 plan.clone(),
                 shard,
-                Box::new(transport),
-                threads,
+                transport,
+                opts.threads,
                 quant,
             );
             stats.push(worker.stats());
             let out_tx = out_tx.clone();
+            let faults = faults.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("xenos-shard-{rank}"))
                 .spawn(move || {
                     while let Ok(inputs) = job_rx.recv() {
                         let res = catch_unwind(AssertUnwindSafe(|| worker.run(&inputs)));
-                        if rank == 0 {
-                            let _ = out_tx.send(res.map_err(panic_message));
-                        } else if let Err(e) = res {
-                            eprintln!("shard worker {rank}: {}", panic_message(e));
+                        let res: Result<Vec<Tensor>, WorkerFailure> = match res {
+                            Ok(Ok(v)) => Ok(v),
+                            Ok(Err(e)) => {
+                                if e.is_abort() {
+                                    faults.aborts.fetch_add(1, Ordering::Relaxed);
+                                }
+                                Err(WorkerFailure::Transport(e))
+                            }
+                            Err(p) => Err(WorkerFailure::Panic(panic_message(p))),
+                        };
+                        if rank == 0 || res.is_err() {
+                            let _ = out_tx.send((rank, res));
                         }
                     }
                 })
@@ -335,33 +715,92 @@ impl LocalCluster {
             job_txs.push(job_tx);
             handles.push(handle);
         }
-        Ok(LocalCluster { round: Mutex::new(LocalRound { job_txs, out_rx }), handles, stats })
+        Ok(LocalCluster {
+            round: Mutex::new(LocalRound { job_txs, out_rx }),
+            handles,
+            mesh: handle,
+            stats,
+        })
     }
 
-    fn infer(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let round = self.round.lock().unwrap_or_else(|p| p.into_inner());
-        // A previous round that timed out may have left its late result
-        // queued; drop stale results so rounds stay paired.
+    /// One round: submit to every rank, wait for rank 0's result, collect
+    /// failure reports. Rank 0 completing successfully decides the round
+    /// (all ranks compute the full outputs; rank 0's copy is
+    /// authoritative). If the overall deadline lapses, the driver aborts
+    /// the mesh so blocked workers fail fast instead of waiting out their
+    /// own recv deadlines.
+    fn infer(
+        &self,
+        inputs: &[Tensor],
+        infer_timeout: Duration,
+        faults: &FaultStats,
+    ) -> Result<Vec<Tensor>, RoundFailure> {
+        let round = lock_recover(&self.round);
+        // A previous round that failed may have left late reports queued;
+        // drop stale ones so rounds stay paired.
         while round.out_rx.try_recv().is_ok() {}
         for tx in &round.job_txs {
             if tx.send(inputs.to_vec()).is_err() {
-                bail!("cluster worker thread is gone");
+                return Err(RoundFailure {
+                    culprit: None,
+                    message: "cluster worker thread is gone".to_string(),
+                });
             }
         }
-        match round.out_rx.recv_timeout(INFER_TIMEOUT) {
-            Ok(Ok(outs)) => Ok(outs),
-            Ok(Err(msg)) => bail!("cluster inference failed: {msg}"),
-            Err(e) => bail!("cluster inference stalled: {e}"),
+        let deadline = Instant::now() + infer_timeout;
+        let mut failure: Option<RoundFailure> = None;
+        loop {
+            let wait = deadline.saturating_duration_since(Instant::now());
+            match round.out_rx.recv_timeout(wait) {
+                Ok((rank, Ok(outs))) => {
+                    if rank == 0 {
+                        return Ok(outs);
+                    }
+                }
+                Ok((rank, Err(wf))) => {
+                    let f = round_failure(rank, wf);
+                    // Keep the most informative failure (one naming a
+                    // culprit beats a culprit-free abort echo).
+                    let better = match &failure {
+                        None => true,
+                        Some(old) => old.culprit.is_none() && f.culprit.is_some(),
+                    };
+                    if better {
+                        failure = Some(f);
+                    }
+                    if rank == 0 {
+                        // Rank 0 reported: the round is over.
+                        return Err(failure.take().expect("failure recorded"));
+                    }
+                }
+                Err(RecvTimeoutError::Timeout) => {
+                    // Unblock any rank still stuck mid-collective.
+                    self.mesh.abort_all(None, "driver round deadline lapsed");
+                    faults.aborts.fetch_add(1, Ordering::Relaxed);
+                    return Err(failure.take().unwrap_or(RoundFailure {
+                        culprit: None,
+                        message: format!("cluster round exceeded {infer_timeout:?}"),
+                    }));
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    return Err(failure.take().unwrap_or(RoundFailure {
+                        culprit: None,
+                        message: "cluster worker threads are gone".to_string(),
+                    }));
+                }
+            }
         }
     }
 }
 
 impl Drop for LocalCluster {
     fn drop(&mut self) {
-        // Recover from poisoning: the channels must close or join() hangs.
-        let mut round = self.round.lock().unwrap_or_else(|p| p.into_inner());
+        let mut round = lock_recover(&self.round);
         round.job_txs.clear(); // closes the job channels; workers exit
         drop(round);
+        // Unblock any worker still waiting in a collective from a failed
+        // round so join() cannot hang on its recv deadline.
+        self.mesh.abort_all(None, "cluster shut down");
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
@@ -378,38 +817,105 @@ fn panic_message(e: Box<dyn std::any::Any + Send>) -> String {
     }
 }
 
-/// TCP backend: one control socket per worker, all behind one mutex held
-/// for a whole round so concurrent `infer` callers cannot interleave
-/// submissions across the cluster (workers process rounds in lockstep).
+/// Dial `hosts` in rank order and ship each worker its spec, parameter
+/// shard, and (INT8) calibration table — shared by the initial TCP build
+/// and survivor rebuilds.
+#[allow(clippy::too_many_arguments)]
+fn dial_workers(
+    hosts: &[String],
+    model: &str,
+    device_name: &str,
+    graph: &Arc<Graph>,
+    plan: &ClusterPlan,
+    master: &ParamStore,
+    calib: Option<&CalibTable>,
+    opts: &ClusterOptions,
+    scheme: PartitionScheme,
+    sync: SyncMode,
+    precision: Precision,
+) -> Result<TcpCluster> {
+    let p = hosts.len();
+    let mut ctrls = Vec::with_capacity(p);
+    for (rank, host) in hosts.iter().enumerate() {
+        let mut sock = TcpStream::connect(host)
+            .with_context(|| format!("connecting to worker {rank} at {host}"))?;
+        sock.set_nodelay(true)?;
+        // A bounded wait on control-link reads: a worker that dies without
+        // a word cannot hang the driver past the round deadline.
+        sock.set_read_timeout(Some(opts.infer_timeout))?;
+        let spec = JobSpec {
+            model: model.to_string(),
+            device: device_name.to_string(),
+            rank,
+            world: p,
+            threads: opts.threads,
+            scheme,
+            sync,
+            precision,
+            resident: opts.resident,
+            peers: hosts.to_vec(),
+            recv_timeout_ms: opts.recv_timeout.as_millis() as u32,
+            heartbeat_ms: opts.heartbeat.map_or(0, |h| h.as_millis() as u32),
+        };
+        wire::write_frame(&mut sock, wire::CTRL_SPEC, &wire::encode_spec(&spec))?;
+        let shard = ShardParams::extract(graph, plan, master, rank);
+        wire::write_frame(&mut sock, wire::CTRL_PARAMS, &wire::encode_params(shard.nodes()))?;
+        if let Some(c) = calib {
+            wire::write_frame(&mut sock, wire::CTRL_CALIB, &c.encode())?;
+        }
+        ctrls.push(sock);
+    }
+    Ok(TcpCluster { ctrls: Mutex::new(ctrls) })
+}
+
+/// TCP backend: one control socket per worker, all behind the driver's
+/// state mutex for a whole round so rounds cannot interleave (workers
+/// process rounds in lockstep).
 struct TcpCluster {
     ctrls: Mutex<Vec<TcpStream>>,
 }
 
 impl TcpCluster {
-    fn infer(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
-        let mut ctrls = self.ctrls.lock().unwrap_or_else(|p| p.into_inner());
+    fn infer(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, RoundFailure> {
+        let mut ctrls = lock_recover(&self.ctrls);
+        let fail = |rank: usize, message: String| RoundFailure { culprit: Some(rank), message };
         let payload = wire::encode_tensors(inputs);
         for (rank, sock) in ctrls.iter_mut().enumerate() {
-            wire::write_frame(sock, wire::CTRL_INPUT, &payload)
-                .with_context(|| format!("sending inputs to worker {rank}"))?;
+            if let Err(e) = wire::write_frame(sock, wire::CTRL_INPUT, &payload) {
+                return Err(fail(rank, format!("sending inputs to worker {rank}: {e}")));
+            }
         }
-        let outputs = {
-            let (tag, payload) = wire::read_frame(&mut ctrls[0]).context("reading outputs")?;
-            match tag {
-                wire::CTRL_OUTPUT => wire::decode_tensors(&payload)?,
-                wire::CTRL_ERR => bail!("worker 0 failed: {}", String::from_utf8_lossy(&payload)),
-                other => bail!("unexpected frame {other:#x} from worker 0"),
+        let outputs = match wire::read_frame(&mut ctrls[0]) {
+            Err(e) => return Err(fail(0, format!("reading outputs from worker 0: {e}"))),
+            Ok((wire::CTRL_OUTPUT, payload)) => match wire::decode_tensors(&payload) {
+                Ok(v) => v,
+                Err(e) => return Err(fail(0, format!("malformed outputs from worker 0: {e}"))),
+            },
+            Ok((wire::CTRL_ERR, payload)) => {
+                let (culprit, reason) = wire::decode_abort(&payload);
+                return Err(RoundFailure {
+                    culprit: culprit.or(Some(0)),
+                    message: format!("worker 0 reported: {reason}"),
+                });
+            }
+            Ok((other, _)) => {
+                return Err(fail(0, format!("unexpected frame {other:#x} from worker 0")))
             }
         };
         for (rank, sock) in ctrls.iter_mut().enumerate().skip(1) {
-            let (tag, payload) = wire::read_frame(sock)
-                .with_context(|| format!("reading ack from worker {rank}"))?;
-            match tag {
-                wire::CTRL_DONE => {}
-                wire::CTRL_ERR => {
-                    bail!("worker {rank} failed: {}", String::from_utf8_lossy(&payload))
+            match wire::read_frame(sock) {
+                Err(e) => return Err(fail(rank, format!("reading ack from worker {rank}: {e}"))),
+                Ok((wire::CTRL_DONE, _)) => {}
+                Ok((wire::CTRL_ERR, payload)) => {
+                    let (culprit, reason) = wire::decode_abort(&payload);
+                    return Err(RoundFailure {
+                        culprit: culprit.or(Some(rank)),
+                        message: format!("worker {rank} reported: {reason}"),
+                    });
                 }
-                other => bail!("unexpected frame {other:#x} from worker {rank}"),
+                Ok((other, _)) => {
+                    return Err(fail(rank, format!("unexpected frame {other:#x} from worker {rank}")))
+                }
             }
         }
         Ok(outputs)
@@ -418,7 +924,7 @@ impl TcpCluster {
 
 impl Drop for TcpCluster {
     fn drop(&mut self) {
-        let mut ctrls = self.ctrls.lock().unwrap_or_else(|p| p.into_inner());
+        let mut ctrls = lock_recover(&self.ctrls);
         for sock in ctrls.iter_mut() {
             let _ = wire::write_frame(sock, wire::CTRL_SHUTDOWN, &[]);
         }
@@ -428,7 +934,9 @@ impl Drop for TcpCluster {
 /// Worker-process server: serve cluster jobs on `listener`. Each session
 /// is one driver connection — spec + params, then inference rounds until
 /// shutdown/EOF. `sessions` bounds how many sessions to serve (`None` =
-/// loop forever); tests pass `Some(1)`.
+/// loop forever); tests pass `Some(1)`. A failed session (including a
+/// peer's death mid-round) ends cleanly and the worker accepts the next
+/// session — how survivors rejoin a re-planned cluster.
 pub fn serve_listener(listener: &TcpListener, sessions: Option<usize>) -> Result<()> {
     let mut served = 0usize;
     loop {
@@ -447,7 +955,8 @@ pub fn serve_listener(listener: &TcpListener, sessions: Option<usize>) -> Result
         if let Err(e) = serve_session(listener, &mut ctrl, &spec) {
             // Tell the driver before giving up on the session.
             let msg = format!("{e:#}");
-            let _ = wire::write_frame(&mut ctrl, wire::CTRL_ERR, msg.as_bytes());
+            let _ =
+                wire::write_frame(&mut ctrl, wire::CTRL_ERR, &wire::encode_abort(None, &msg));
             eprintln!("dist-worker session failed: {msg}");
         }
         served += 1;
@@ -494,9 +1003,16 @@ fn serve_session(listener: &TcpListener, ctrl: &mut TcpStream, spec: &JobSpec) -
         None
     };
 
-    // Stand up the peer mesh: accept from higher ranks, dial lower ranks.
+    // Stand up the peer mesh (accept from higher ranks, dial lower ranks)
+    // with the spec's failure-detection deadlines.
     let inbound = accept_peers(listener, spec.rank, spec.world)?;
-    let transport = TcpTransport::new(spec.rank, spec.world, &spec.peers, inbound)?;
+    let topts = TcpOptions {
+        recv_timeout: spec.recv_timeout(),
+        heartbeat: spec.heartbeat(),
+        ..TcpOptions::default()
+    };
+    let transport =
+        TcpTransport::with_options(spec.rank, spec.world, &spec.peers, inbound, topts)?;
     let worker =
         ShardWorker::with_quant(graph, plan, params, Box::new(transport), spec.threads, quant);
 
@@ -510,7 +1026,7 @@ fn serve_session(listener: &TcpListener, ctrl: &mut TcpStream, spec: &JobSpec) -
                 let inputs = wire::decode_tensors(&payload)?;
                 let res = catch_unwind(AssertUnwindSafe(|| worker.run(&inputs)));
                 match res {
-                    Ok(outputs) => {
+                    Ok(Ok(outputs)) => {
                         if spec.rank == 0 {
                             let out = wire::encode_tensors(&outputs);
                             wire::write_frame(ctrl, wire::CTRL_OUTPUT, &out)?;
@@ -518,10 +1034,19 @@ fn serve_session(listener: &TcpListener, ctrl: &mut TcpStream, spec: &JobSpec) -
                             wire::write_frame(ctrl, wire::CTRL_DONE, &[])?;
                         }
                     }
-                    Err(e) => {
-                        let msg = panic_message(e);
-                        wire::write_frame(ctrl, wire::CTRL_ERR, msg.as_bytes())?;
-                        bail!("inference failed: {msg}");
+                    Ok(Err(e)) => {
+                        // A typed round failure: report the culprit so the
+                        // driver can re-plan, then end the session (the
+                        // mesh is broken; the driver reconnects).
+                        let payload = wire::encode_abort(e.culprit(), &e.to_string());
+                        let _ = wire::write_frame(ctrl, wire::CTRL_ERR, &payload);
+                        bail!("inference round failed: {e}");
+                    }
+                    Err(p) => {
+                        let msg = panic_message(p);
+                        let payload = wire::encode_abort(Some(spec.rank), &msg);
+                        let _ = wire::write_frame(ctrl, wire::CTRL_ERR, &payload);
+                        bail!("inference round panicked: {msg}");
                     }
                 }
             }

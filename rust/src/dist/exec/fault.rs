@@ -1,0 +1,237 @@
+//! Deterministic fault injection for the d-Xenos cluster runtime.
+//!
+//! A [`FaultScript`] assigns scripted [`Fault`]s to ranks; the driver
+//! wraps each afflicted rank's endpoint in a [`FaultyTransport`] that
+//! counts transport operations (sends + recvs, any flavor) and fires the
+//! fault at the scripted op index. Because shard rounds issue transport
+//! ops in a deterministic order, an op index pins the fault to an exact
+//! point mid-collective — the test substrate for typed errors, abort
+//! propagation, and survivor re-planning.
+//!
+//! Faults script only the *initial* cluster build: when the driver
+//! re-plans over survivors it hands the rebuilt ranks clean transports,
+//! so a kill is observed exactly once.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::time::Duration;
+
+use super::transport::{Transport, TransportError, TransportResult};
+
+/// One scripted failure mode.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Fault {
+    /// The rank dies at transport op `at_op`: its endpoint severs every
+    /// link (peers observe EOF / a dead mailbox) and every operation from
+    /// then on fails.
+    Kill { at_op: u64 },
+    /// The rank stalls for `delay` before transport op `at_op` — a slow
+    /// link/device; peers' deadlines decide whether it is survivable.
+    Delay { at_op: u64, delay: Duration },
+    /// The payload of send op `at_op` is truncated to half its length —
+    /// a corrupt frame the receiver must reject as a protocol error.
+    Truncate { at_op: u64 },
+}
+
+/// Scripted faults, keyed by rank.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultScript {
+    faults: Vec<(usize, Fault)>,
+}
+
+impl FaultScript {
+    /// Kill `rank` at transport op `at_op`.
+    pub fn kill(rank: usize, at_op: u64) -> FaultScript {
+        FaultScript { faults: vec![(rank, Fault::Kill { at_op })] }
+    }
+
+    /// Delay `rank` by `delay` before transport op `at_op`.
+    pub fn delay(rank: usize, at_op: u64, delay: Duration) -> FaultScript {
+        FaultScript { faults: vec![(rank, Fault::Delay { at_op, delay })] }
+    }
+
+    /// Truncate `rank`'s send op `at_op`.
+    pub fn truncate(rank: usize, at_op: u64) -> FaultScript {
+        FaultScript { faults: vec![(rank, Fault::Truncate { at_op })] }
+    }
+
+    /// Add another scripted fault.
+    pub fn and(mut self, rank: usize, fault: Fault) -> FaultScript {
+        self.faults.push((rank, fault));
+        self
+    }
+
+    /// The faults scripted for one rank.
+    pub fn for_rank(&self, rank: usize) -> Vec<Fault> {
+        self.faults.iter().filter(|(r, _)| *r == rank).map(|(_, f)| f.clone()).collect()
+    }
+
+    /// True when `rank` has at least one scripted fault.
+    pub fn afflicts(&self, rank: usize) -> bool {
+        self.faults.iter().any(|(r, _)| *r == rank)
+    }
+}
+
+/// A [`Transport`] decorator that fires scripted faults at exact op
+/// indices. Transparent (zero overhead beyond one atomic increment) for
+/// every op without a scripted fault.
+pub struct FaultyTransport {
+    inner: Box<dyn Transport>,
+    faults: Vec<Fault>,
+    ops: AtomicU64,
+    killed: AtomicBool,
+}
+
+impl FaultyTransport {
+    /// Wrap `inner` with the faults `script` assigns to its rank.
+    pub fn wrap(inner: Box<dyn Transport>, script: &FaultScript) -> FaultyTransport {
+        let faults = script.for_rank(inner.rank());
+        FaultyTransport { inner, faults, ops: AtomicU64::new(0), killed: AtomicBool::new(false) }
+    }
+
+    fn death(&self) -> TransportError {
+        TransportError::PeerDead {
+            peer: self.inner.rank(),
+            detail: "fault injection: rank killed".to_string(),
+        }
+    }
+
+    /// Count one transport op and fire any fault scripted at its index;
+    /// returns the index so sends can apply payload faults.
+    fn step(&self) -> TransportResult<u64> {
+        if self.killed.load(Ordering::SeqCst) {
+            return Err(self.death());
+        }
+        let n = self.ops.fetch_add(1, Ordering::SeqCst);
+        for f in &self.faults {
+            match *f {
+                Fault::Kill { at_op } if n >= at_op => {
+                    self.killed.store(true, Ordering::SeqCst);
+                    self.inner.sever();
+                    return Err(self.death());
+                }
+                Fault::Delay { at_op, delay } if n == at_op => std::thread::sleep(delay),
+                _ => {}
+            }
+        }
+        Ok(n)
+    }
+
+    fn truncates(&self, n: u64) -> bool {
+        self.faults.iter().any(|f| matches!(f, Fault::Truncate { at_op } if *at_op == n))
+    }
+}
+
+impl Transport for FaultyTransport {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn world(&self) -> usize {
+        self.inner.world()
+    }
+
+    fn send(&self, to: usize, tag: u64, data: &[f32]) -> TransportResult<()> {
+        let n = self.step()?;
+        if self.truncates(n) {
+            return self.inner.send(to, tag, &data[..data.len() / 2]);
+        }
+        self.inner.send(to, tag, data)
+    }
+
+    fn recv(&self, from: usize, tag: u64) -> TransportResult<Vec<f32>> {
+        self.step()?;
+        self.inner.recv(from, tag)
+    }
+
+    fn send_bytes(&self, to: usize, tag: u64, data: &[u8]) -> TransportResult<()> {
+        let n = self.step()?;
+        if self.truncates(n) {
+            return self.inner.send_bytes(to, tag, &data[..data.len() / 2]);
+        }
+        self.inner.send_bytes(to, tag, data)
+    }
+
+    fn recv_bytes(&self, from: usize, tag: u64) -> TransportResult<Vec<u8>> {
+        self.step()?;
+        self.inner.recv_bytes(from, tag)
+    }
+
+    fn abort(&self, culprit: Option<usize>, reason: &str) {
+        // A dead rank stays silent: its failure must be *detected* by
+        // peers (severed links, deadlines), not announced by its ghost.
+        if !self.killed.load(Ordering::SeqCst) {
+            self.inner.abort(culprit, reason);
+        }
+    }
+
+    fn sever(&self) {
+        self.inner.sever();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dist::exec::transport::LocalTransport;
+
+    #[test]
+    fn kill_fires_at_the_scripted_op_and_severs_links() {
+        let mut mesh = LocalTransport::mesh(2).into_iter();
+        let t0 = mesh.next().unwrap();
+        let t1 = FaultyTransport::wrap(Box::new(mesh.next().unwrap()), &FaultScript::kill(1, 2));
+        t1.send(0, 1, &[1.0]).unwrap(); // op 0
+        t1.send(0, 1, &[2.0]).unwrap(); // op 1
+        match t1.send(0, 1, &[3.0]) {
+            Err(TransportError::PeerDead { peer: 1, .. }) => {}
+            other => panic!("expected scripted death, got {other:?}"),
+        }
+        // Peers observe the death; already-queued data still drains.
+        assert_eq!(t0.recv(1, 1).unwrap(), vec![1.0]);
+        assert_eq!(t0.recv(1, 1).unwrap(), vec![2.0]);
+        assert!(matches!(t0.recv(1, 1), Err(TransportError::PeerDead { peer: 1, .. })));
+        // The ghost stays dead and silent.
+        assert!(t1.recv(0, 9).is_err());
+        t1.abort(None, "should be suppressed");
+        assert_eq!(t0.recv(1, 1).unwrap_err().culprit(), Some(1));
+    }
+
+    #[test]
+    fn truncate_halves_one_scripted_send() {
+        let mut mesh = LocalTransport::mesh(2).into_iter();
+        let t0 = mesh.next().unwrap();
+        let t1 =
+            FaultyTransport::wrap(Box::new(mesh.next().unwrap()), &FaultScript::truncate(1, 1));
+        t1.send(0, 1, &[1.0, 2.0, 3.0, 4.0]).unwrap(); // op 0: intact
+        t1.send(0, 1, &[1.0, 2.0, 3.0, 4.0]).unwrap(); // op 1: truncated
+        assert_eq!(t0.recv(1, 1).unwrap().len(), 4);
+        assert_eq!(t0.recv(1, 1).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn delay_stalls_exactly_one_op() {
+        let mut mesh = LocalTransport::mesh(2).into_iter();
+        let _t0 = mesh.next().unwrap();
+        let t1 = FaultyTransport::wrap(
+            Box::new(mesh.next().unwrap()),
+            &FaultScript::delay(1, 0, Duration::from_millis(60)),
+        );
+        let start = std::time::Instant::now();
+        t1.send(0, 1, &[1.0]).unwrap();
+        assert!(start.elapsed() >= Duration::from_millis(60));
+        let start = std::time::Instant::now();
+        t1.send(0, 1, &[2.0]).unwrap();
+        assert!(start.elapsed() < Duration::from_millis(50));
+    }
+
+    #[test]
+    fn unafflicted_ranks_pass_through() {
+        let script = FaultScript::kill(2, 0);
+        assert!(!script.afflicts(0));
+        assert!(script.afflicts(2));
+        let mut mesh = LocalTransport::mesh(2).into_iter();
+        let t0 = FaultyTransport::wrap(Box::new(mesh.next().unwrap()), &script);
+        let t1 = mesh.next().unwrap();
+        t0.send(1, 1, &[1.0]).unwrap();
+        assert_eq!(t1.recv(0, 1).unwrap(), vec![1.0]);
+    }
+}

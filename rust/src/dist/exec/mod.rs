@@ -3,12 +3,13 @@
 //!
 //! | module | role |
 //! |--------|------|
-//! | [`transport`] | `Transport` trait; in-process + TCP meshes |
+//! | [`transport`] | `Transport` trait; in-process + TCP meshes; typed `TransportError`s |
 //! | [`wire`] | frame format + control protocol serialization |
 //! | [`plan`] | per-operator cluster cut + per-value residency (`ClusterPlan`) |
 //! | [`shard`] | shard-weight extraction (`ShardParams`) |
 //! | [`worker`] | `ShardWorker`: one rank's engine slice |
-//! | [`driver`] | `ClusterDriver`: local threads or TCP workers |
+//! | [`fault`] | scripted fault injection (`FaultyTransport`) |
+//! | [`driver`] | `ClusterDriver`: local threads or TCP workers; survivor re-planning |
 //!
 //! The correctness contract: for every scheme, sync mode, precision and
 //! cluster size — with or without the shard-resident activation dataflow
@@ -21,20 +22,30 @@
 //! the gathered copy, and the INT8 partial-sum route reduces exact `i32`
 //! accumulators ([`wire::TAG_I32`] frames), whose addition is
 //! associative.
+//!
+//! The robustness contract: rank failures (dead peers, missed deadlines,
+//! truncated frames, panics inside a shard) surface as typed
+//! [`TransportError`]s, never panics, and the [`ClusterDriver`] recovers
+//! by re-planning over the survivors — see `driver`'s module docs.
 
 pub mod driver;
+pub mod fault;
 pub mod plan;
 pub mod shard;
 pub mod transport;
 pub mod wire;
 pub mod worker;
 
-pub use driver::{serve_listener, ClusterDriver};
+pub use driver::{serve_listener, ClusterDriver, ClusterOptions, FaultSnapshot};
+pub use fault::{Fault, FaultScript, FaultyTransport};
 pub use plan::{
     outc_slices, plan_cluster, plan_cluster_opts, ClusterPlan, LayerScheme, Residency,
     SyncAccounting,
 };
 pub use shard::{quant_row_offset, ShardParams};
-pub use transport::{LocalTransport, TcpTransport, Transport, WireScalar};
+pub use transport::{
+    LocalTransport, TcpOptions, TcpTransport, Transport, TransportError, TransportResult,
+    WireScalar,
+};
 pub use wire::JobSpec;
 pub use worker::{ShardWorker, SyncSnapshot, SyncStats};

@@ -15,20 +15,111 @@
 //! Matching: `recv(from, tag)` pairs with the `from` rank's sends of the
 //! same tag in FIFO order, so repeated tag use across inference rounds is
 //! safe as long as every send is matched by exactly one recv (all the
-//! collectives in this crate are matched by construction). Transport
-//! failures (peer death, 60 s silence on an expected message) panic with
-//! context; drivers catch worker panics at the thread/process boundary.
+//! collectives in this crate are matched by construction).
+//!
+//! # Failure contract
+//!
+//! Transport operations return [`TransportError`] instead of panicking:
+//! a peer whose link drops (EOF, io error, missed heartbeats) surfaces as
+//! [`TransportError::PeerDead`], a recv that outlives its deadline as
+//! [`TransportError::DeadlineExceeded`], and malformed traffic as
+//! [`TransportError::Protocol`]. A rank that hits any of these broadcasts
+//! a [`wire::CTRL_ABORT`] (via [`Transport::abort`]) so peers blocked
+//! mid-collective fail fast with [`TransportError::Aborted`] instead of
+//! waiting out their own deadlines — the driver then re-plans over the
+//! survivors (see [`driver`](super::driver)).
 
 use std::collections::{HashMap, VecDeque};
-use std::net::{TcpListener, TcpStream};
-use std::sync::{Arc, Condvar, Mutex};
-use std::time::Duration;
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 use super::wire;
 
-/// How long a `recv` waits without any mailbox activity before declaring
-/// the cluster wedged.
-const RECV_TIMEOUT: Duration = Duration::from_secs(60);
+/// Default per-recv deadline when the job does not configure one.
+pub const DEFAULT_RECV_TIMEOUT: Duration = Duration::from_secs(60);
+
+/// Default heartbeat interval for TCP peer links.
+pub const DEFAULT_HEARTBEAT: Duration = Duration::from_millis(500);
+
+/// Origin rank recorded on aborts raised by the driver rather than a rank.
+pub const DRIVER_ORIGIN: usize = usize::MAX;
+
+/// A typed, recoverable transport failure. These cross the
+/// [`ShardWorker`](super::worker::ShardWorker) boundary and reach the
+/// [`ClusterDriver`](super::driver::ClusterDriver), which uses
+/// [`TransportError::culprit`] to decide which rank to drop when
+/// re-planning over survivors.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TransportError {
+    /// The peer's link is down: EOF or io error on its socket, missed
+    /// heartbeats past the liveness window, or fault-injected death.
+    PeerDead { peer: usize, detail: String },
+    /// No matching message arrived within the recv deadline.
+    DeadlineExceeded { peer: usize, tag: u64, waited: Duration },
+    /// Malformed traffic: flavor mismatch, truncated/misaligned payload,
+    /// or an unexpected frame.
+    Protocol { detail: String },
+    /// An io error sending to a peer.
+    Io { peer: usize, detail: String },
+    /// A rank (or the driver, `origin == `[`DRIVER_ORIGIN`]) broadcast a
+    /// cluster-wide abort after detecting a failure; `culprit` names the
+    /// rank it blamed, when known.
+    Aborted { origin: usize, culprit: Option<usize>, reason: String },
+}
+
+impl TransportError {
+    /// The rank this error implicates as failed, if any.
+    pub fn culprit(&self) -> Option<usize> {
+        match self {
+            TransportError::PeerDead { peer, .. }
+            | TransportError::DeadlineExceeded { peer, .. }
+            | TransportError::Io { peer, .. } => Some(*peer),
+            TransportError::Aborted { culprit, .. } => *culprit,
+            TransportError::Protocol { .. } => None,
+        }
+    }
+
+    /// True for errors caused by a peer's abort broadcast (someone else
+    /// already detected and announced the failure).
+    pub fn is_abort(&self) -> bool {
+        matches!(self, TransportError::Aborted { .. })
+    }
+}
+
+impl std::fmt::Display for TransportError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TransportError::PeerDead { peer, detail } => {
+                write!(f, "rank {peer} is dead: {detail}")
+            }
+            TransportError::DeadlineExceeded { peer, tag, waited } => {
+                write!(f, "recv from rank {peer} tag {tag:#x} exceeded {waited:?} deadline")
+            }
+            TransportError::Protocol { detail } => write!(f, "protocol error: {detail}"),
+            TransportError::Io { peer, detail } => {
+                write!(f, "io error sending to rank {peer}: {detail}")
+            }
+            TransportError::Aborted { origin, culprit, reason } => {
+                if *origin == DRIVER_ORIGIN {
+                    write!(f, "round aborted by driver: {reason}")?;
+                } else {
+                    write!(f, "round aborted by rank {origin}: {reason}")?;
+                }
+                if let Some(c) = culprit {
+                    write!(f, " (blaming rank {c})")?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+/// Shorthand for transport-fallible results.
+pub type TransportResult<T> = Result<T, TransportError>;
 
 /// Point-to-point message passing between the `world()` ranks of one
 /// cluster job.
@@ -36,23 +127,31 @@ const RECV_TIMEOUT: Duration = Duration::from_secs(60);
 /// Two payload flavors share the mailbox: f32 buffers (the default) and
 /// raw bytes (quantized i8 activations, sent under
 /// [`wire::TAG_Q8`]-flagged tags). A send of one flavor must be received
-/// with the matching call — a mismatch is a protocol bug and panics with
-/// context rather than silently reinterpreting bits.
+/// with the matching call — a mismatch is a protocol bug and surfaces as
+/// [`TransportError::Protocol`] rather than silently reinterpreting bits.
 pub trait Transport: Send {
     /// This endpoint's rank in `[0, world)`.
     fn rank(&self) -> usize;
     /// Cluster size.
     fn world(&self) -> usize;
     /// Send `data` to rank `to` under `tag`. Never blocks on the receiver.
-    fn send(&self, to: usize, tag: u64, data: &[f32]);
+    fn send(&self, to: usize, tag: u64, data: &[f32]) -> TransportResult<()>;
     /// Receive the next `tag`-tagged buffer from rank `from` (FIFO per
-    /// `(from, tag)` pair), blocking until it arrives.
-    fn recv(&self, from: usize, tag: u64) -> Vec<f32>;
+    /// `(from, tag)` pair), blocking until it arrives, the deadline
+    /// passes, or the round aborts.
+    fn recv(&self, from: usize, tag: u64) -> TransportResult<Vec<f32>>;
     /// Send a raw byte payload (quantized activations; `tag` must carry
     /// [`wire::TAG_Q8`] so TCP readers demultiplex the flavor).
-    fn send_bytes(&self, to: usize, tag: u64, data: &[u8]);
+    fn send_bytes(&self, to: usize, tag: u64, data: &[u8]) -> TransportResult<()>;
     /// Receive a raw byte payload.
-    fn recv_bytes(&self, from: usize, tag: u64) -> Vec<u8>;
+    fn recv_bytes(&self, from: usize, tag: u64) -> TransportResult<Vec<u8>>;
+    /// Broadcast a cluster-wide abort to every peer: each of their blocked
+    /// or future receives fails fast with [`TransportError::Aborted`].
+    /// Best-effort (dead links are skipped); never blocks on a peer.
+    fn abort(&self, culprit: Option<usize>, reason: &str);
+    /// Tear this endpoint down so peers observe its death (fault
+    /// injection and shutdown paths). Default: no-op.
+    fn sever(&self) {}
 }
 
 /// One payload scalar flavor the collectives can move: f32 frames, raw
@@ -63,38 +162,39 @@ pub trait Transport: Send {
 /// hop schedules live once, the scalar flavor routes here.
 pub trait WireScalar: Sized + Send {
     /// Send one block to `to` under `tag`.
-    fn send_block(t: &dyn Transport, to: usize, tag: u64, data: &[Self]);
+    fn send_block(t: &dyn Transport, to: usize, tag: u64, data: &[Self]) -> TransportResult<()>;
     /// Receive one block from `from` under `tag`.
-    fn recv_block(t: &dyn Transport, from: usize, tag: u64) -> Vec<Self>;
+    fn recv_block(t: &dyn Transport, from: usize, tag: u64) -> TransportResult<Vec<Self>>;
 }
 
 impl WireScalar for f32 {
-    fn send_block(t: &dyn Transport, to: usize, tag: u64, data: &[f32]) {
-        t.send(to, tag, data);
+    fn send_block(t: &dyn Transport, to: usize, tag: u64, data: &[f32]) -> TransportResult<()> {
+        t.send(to, tag, data)
     }
 
-    fn recv_block(t: &dyn Transport, from: usize, tag: u64) -> Vec<f32> {
+    fn recv_block(t: &dyn Transport, from: usize, tag: u64) -> TransportResult<Vec<f32>> {
         t.recv(from, tag)
     }
 }
 
 impl WireScalar for i8 {
-    fn send_block(t: &dyn Transport, to: usize, tag: u64, data: &[i8]) {
-        t.send_bytes(to, tag, wire::i8s_as_bytes(data));
+    fn send_block(t: &dyn Transport, to: usize, tag: u64, data: &[i8]) -> TransportResult<()> {
+        t.send_bytes(to, tag, wire::i8s_as_bytes(data))
     }
 
-    fn recv_block(t: &dyn Transport, from: usize, tag: u64) -> Vec<i8> {
-        wire::bytes_into_i8s(t.recv_bytes(from, tag))
+    fn recv_block(t: &dyn Transport, from: usize, tag: u64) -> TransportResult<Vec<i8>> {
+        Ok(wire::bytes_into_i8s(t.recv_bytes(from, tag)?))
     }
 }
 
 impl WireScalar for i32 {
-    fn send_block(t: &dyn Transport, to: usize, tag: u64, data: &[i32]) {
-        t.send_bytes(to, tag, &wire::i32s_to_bytes(data));
+    fn send_block(t: &dyn Transport, to: usize, tag: u64, data: &[i32]) -> TransportResult<()> {
+        t.send_bytes(to, tag, &wire::i32s_to_bytes(data))
     }
 
-    fn recv_block(t: &dyn Transport, from: usize, tag: u64) -> Vec<i32> {
-        wire::bytes_to_i32s(&t.recv_bytes(from, tag))
+    fn recv_block(t: &dyn Transport, from: usize, tag: u64) -> TransportResult<Vec<i32>> {
+        let bytes = t.recv_bytes(from, tag)?;
+        wire::bytes_to_i32s(&bytes).map_err(|detail| TransportError::Protocol { detail })
     }
 }
 
@@ -105,21 +205,21 @@ pub(crate) enum Payload {
 }
 
 impl Payload {
-    fn into_f32(self, from: usize, tag: u64) -> Vec<f32> {
+    fn into_f32(self, from: usize, tag: u64) -> TransportResult<Vec<f32>> {
         match self {
-            Payload::F32(v) => v,
-            Payload::Bytes(_) => {
-                panic!("recv(f32) from rank {from} tag {tag:#x} found a byte payload")
-            }
+            Payload::F32(v) => Ok(v),
+            Payload::Bytes(_) => Err(TransportError::Protocol {
+                detail: format!("recv(f32) from rank {from} tag {tag:#x} found a byte payload"),
+            }),
         }
     }
 
-    fn into_bytes(self, from: usize, tag: u64) -> Vec<u8> {
+    fn into_bytes(self, from: usize, tag: u64) -> TransportResult<Vec<u8>> {
         match self {
-            Payload::Bytes(v) => v,
-            Payload::F32(_) => {
-                panic!("recv_bytes from rank {from} tag {tag:#x} found an f32 payload")
-            }
+            Payload::Bytes(v) => Ok(v),
+            Payload::F32(_) => Err(TransportError::Protocol {
+                detail: format!("recv_bytes from rank {from} tag {tag:#x} found an f32 payload"),
+            }),
         }
     }
 }
@@ -127,37 +227,125 @@ impl Payload {
 /// `(from, tag)`-keyed FIFO queues.
 type Queues = HashMap<(usize, u64), VecDeque<Payload>>;
 
-/// Tagged per-rank inbox with a condvar for blocking receives.
+/// Everything a rank knows about its inbox and its peers' health.
+struct MailState {
+    queues: Queues,
+    /// Per-peer death flag + detail (EOF, io error, fault injection).
+    dead: Vec<Option<String>>,
+    /// A received cluster-wide abort: `(origin, culprit, reason)`.
+    abort: Option<(usize, Option<usize>, String)>,
+    /// Last time each peer showed any sign of life (frame or heartbeat).
+    last_seen: Vec<Instant>,
+}
+
+/// Lock a mutex, recovering the guard if a holder panicked (the
+/// recover-on-poison idiom used throughout `dist/`): mailbox state stays
+/// consistent under panics because every mutation is a single push/pop or
+/// flag store.
+fn lock_recover<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Tagged per-rank inbox with a condvar for blocking receives, peer death
+/// flags, and the abort latch.
 pub(crate) struct Mailbox {
-    slots: Mutex<Queues>,
+    state: Mutex<MailState>,
     ready: Condvar,
 }
 
 impl Mailbox {
-    pub(crate) fn new() -> Mailbox {
-        Mailbox { slots: Mutex::new(HashMap::new()), ready: Condvar::new() }
+    pub(crate) fn new(world: usize) -> Mailbox {
+        let now = Instant::now();
+        Mailbox {
+            state: Mutex::new(MailState {
+                queues: HashMap::new(),
+                dead: vec![None; world],
+                abort: None,
+                last_seen: vec![now; world],
+            }),
+            ready: Condvar::new(),
+        }
     }
 
     pub(crate) fn put(&self, from: usize, tag: u64, data: Payload) {
-        let mut slots = self.slots.lock().expect("mailbox lock");
-        slots.entry((from, tag)).or_default().push_back(data);
+        let mut st = lock_recover(&self.state);
+        st.last_seen[from] = Instant::now();
+        st.queues.entry((from, tag)).or_default().push_back(data);
         self.ready.notify_all();
     }
 
-    pub(crate) fn take(&self, from: usize, tag: u64) -> Payload {
-        let mut slots = self.slots.lock().expect("mailbox lock");
+    /// Record a heartbeat (or any other sign of life) from `from`.
+    pub(crate) fn touch(&self, from: usize) {
+        let mut st = lock_recover(&self.state);
+        st.last_seen[from] = Instant::now();
+    }
+
+    /// Mark `peer` dead; wakes every blocked receive.
+    pub(crate) fn mark_dead(&self, peer: usize, detail: &str) {
+        let mut st = lock_recover(&self.state);
+        if st.dead[peer].is_none() {
+            st.dead[peer] = Some(detail.to_string());
+        }
+        self.ready.notify_all();
+    }
+
+    /// Latch a cluster-wide abort; wakes every blocked receive. First
+    /// abort wins (later ones are echoes of the same failure).
+    pub(crate) fn set_abort(&self, origin: usize, culprit: Option<usize>, reason: &str) {
+        let mut st = lock_recover(&self.state);
+        if st.abort.is_none() {
+            st.abort = Some((origin, culprit, reason.to_string()));
+        }
+        self.ready.notify_all();
+    }
+
+    /// Pop the next `(from, tag)` message. Queued messages win over any
+    /// failure state (data that already arrived is still good); otherwise
+    /// an abort, a dead peer, a liveness lapse (when `liveness` is set —
+    /// heartbeat-carrying transports only), or the deadline ends the wait.
+    pub(crate) fn take(
+        &self,
+        from: usize,
+        tag: u64,
+        deadline: Duration,
+        liveness: Option<Duration>,
+    ) -> TransportResult<Payload> {
+        let start = Instant::now();
+        let mut st = lock_recover(&self.state);
         loop {
-            if let Some(q) = slots.get_mut(&(from, tag)) {
+            if let Some(q) = st.queues.get_mut(&(from, tag)) {
                 if let Some(d) = q.pop_front() {
-                    return d;
+                    return Ok(d);
                 }
             }
-            let (guard, timeout) =
-                self.ready.wait_timeout(slots, RECV_TIMEOUT).expect("mailbox lock");
-            slots = guard;
-            if timeout.timed_out() {
-                panic!("transport recv timed out waiting for rank {from} tag {tag:#x}");
+            if let Some((origin, culprit, reason)) = st.abort.clone() {
+                return Err(TransportError::Aborted { origin, culprit, reason });
             }
+            if let Some(detail) = st.dead[from].clone() {
+                return Err(TransportError::PeerDead { peer: from, detail });
+            }
+            if let Some(window) = liveness {
+                let silent = st.last_seen[from].elapsed();
+                if silent > window {
+                    return Err(TransportError::PeerDead {
+                        peer: from,
+                        detail: format!("no frame or heartbeat for {silent:?}"),
+                    });
+                }
+            }
+            let elapsed = start.elapsed();
+            if elapsed >= deadline {
+                return Err(TransportError::DeadlineExceeded { peer: from, tag, waited: elapsed });
+            }
+            // With a liveness window we must wake periodically to check it
+            // even when no message arrives.
+            let mut wait = deadline - elapsed;
+            if liveness.is_some() {
+                wait = wait.min(Duration::from_millis(50));
+            }
+            let (guard, _) =
+                self.ready.wait_timeout(st, wait).unwrap_or_else(|p| p.into_inner());
+            st = guard;
         }
     }
 }
@@ -166,13 +354,47 @@ impl Mailbox {
 pub struct LocalTransport {
     rank: usize,
     boxes: Arc<Vec<Mailbox>>,
+    recv_timeout: Duration,
+}
+
+/// Driver-side handle on a local mesh: lets the driver broadcast an abort
+/// into every rank's mailbox without owning an endpoint (e.g. when its own
+/// round deadline lapses and workers may still be blocked mid-collective).
+pub(crate) struct MeshHandle {
+    boxes: Arc<Vec<Mailbox>>,
+}
+
+impl MeshHandle {
+    pub(crate) fn abort_all(&self, culprit: Option<usize>, reason: &str) {
+        for b in self.boxes.iter() {
+            b.set_abort(DRIVER_ORIGIN, culprit, reason);
+        }
+    }
 }
 
 impl LocalTransport {
-    /// A fully-connected mesh of `world` endpoints (hand one per thread).
+    /// A fully-connected mesh of `world` endpoints (hand one per thread),
+    /// with the default recv deadline.
     pub fn mesh(world: usize) -> Vec<LocalTransport> {
-        let boxes: Arc<Vec<Mailbox>> = Arc::new((0..world).map(|_| Mailbox::new()).collect());
-        (0..world).map(|rank| LocalTransport { rank, boxes: boxes.clone() }).collect()
+        Self::mesh_with_timeout(world, DEFAULT_RECV_TIMEOUT)
+    }
+
+    /// A mesh with an explicit per-recv deadline.
+    pub fn mesh_with_timeout(world: usize, recv_timeout: Duration) -> Vec<LocalTransport> {
+        let boxes: Arc<Vec<Mailbox>> = Arc::new((0..world).map(|_| Mailbox::new(world)).collect());
+        (0..world)
+            .map(|rank| LocalTransport { rank, boxes: boxes.clone(), recv_timeout })
+            .collect()
+    }
+
+    /// A mesh plus a driver-side [`MeshHandle`] for out-of-band aborts.
+    pub(crate) fn mesh_with_handle(
+        world: usize,
+        recv_timeout: Duration,
+    ) -> (Vec<LocalTransport>, MeshHandle) {
+        let mesh = Self::mesh_with_timeout(world, recv_timeout);
+        let handle = MeshHandle { boxes: mesh[0].boxes.clone() };
+        (mesh, handle)
     }
 }
 
@@ -185,20 +407,36 @@ impl Transport for LocalTransport {
         self.boxes.len()
     }
 
-    fn send(&self, to: usize, tag: u64, data: &[f32]) {
+    fn send(&self, to: usize, tag: u64, data: &[f32]) -> TransportResult<()> {
         self.boxes[to].put(self.rank, tag, Payload::F32(data.to_vec()));
+        Ok(())
     }
 
-    fn recv(&self, from: usize, tag: u64) -> Vec<f32> {
-        self.boxes[self.rank].take(from, tag).into_f32(from, tag)
+    fn recv(&self, from: usize, tag: u64) -> TransportResult<Vec<f32>> {
+        self.boxes[self.rank].take(from, tag, self.recv_timeout, None)?.into_f32(from, tag)
     }
 
-    fn send_bytes(&self, to: usize, tag: u64, data: &[u8]) {
+    fn send_bytes(&self, to: usize, tag: u64, data: &[u8]) -> TransportResult<()> {
         self.boxes[to].put(self.rank, tag, Payload::Bytes(data.to_vec()));
+        Ok(())
     }
 
-    fn recv_bytes(&self, from: usize, tag: u64) -> Vec<u8> {
-        self.boxes[self.rank].take(from, tag).into_bytes(from, tag)
+    fn recv_bytes(&self, from: usize, tag: u64) -> TransportResult<Vec<u8>> {
+        self.boxes[self.rank].take(from, tag, self.recv_timeout, None)?.into_bytes(from, tag)
+    }
+
+    fn abort(&self, culprit: Option<usize>, reason: &str) {
+        for (q, b) in self.boxes.iter().enumerate() {
+            if q != self.rank {
+                b.set_abort(self.rank, culprit, reason);
+            }
+        }
+    }
+
+    fn sever(&self) {
+        for b in self.boxes.iter() {
+            b.mark_dead(self.rank, "endpoint severed");
+        }
     }
 }
 
@@ -228,33 +466,72 @@ pub(crate) fn run_over_local_mesh(
     })
 }
 
+/// Tunables for a [`TcpTransport`] endpoint.
+#[derive(Debug, Clone)]
+pub struct TcpOptions {
+    /// Per-recv deadline.
+    pub recv_timeout: Duration,
+    /// Heartbeat interval for peer links; `None` disables heartbeats (and
+    /// with them liveness-based death detection).
+    pub heartbeat: Option<Duration>,
+    /// Overall deadline for establishing each outbound peer connection.
+    pub connect_deadline: Duration,
+}
+
+impl Default for TcpOptions {
+    fn default() -> TcpOptions {
+        TcpOptions {
+            recv_timeout: DEFAULT_RECV_TIMEOUT,
+            heartbeat: Some(DEFAULT_HEARTBEAT),
+            connect_deadline: Duration::from_secs(10),
+        }
+    }
+}
+
 /// TCP mesh transport: one socket per peer pair, length-prefixed frames
 /// (`[tag u64][len u32][payload]`, little-endian), a reader thread per
-/// inbound half feeding the shared mailbox.
+/// inbound half feeding the shared mailbox, plus (when enabled) a
+/// heartbeat thread keeping every peer's liveness clock fresh.
 pub struct TcpTransport {
     rank: usize,
     world: usize,
     mailbox: Arc<Mailbox>,
-    writers: Vec<Option<Mutex<TcpStream>>>,
+    writers: Arc<Vec<Option<Mutex<TcpStream>>>>,
+    recv_timeout: Duration,
+    /// Silence window after which a peer counts as dead (heartbeats on).
+    liveness: Option<Duration>,
+    stop: Arc<AtomicBool>,
 }
 
 impl TcpTransport {
-    /// Build the mesh for `rank` of `world`. `outbound[q]` must hold the
-    /// listen address of every rank `q < rank` (this rank initiates those
-    /// connections, identifying itself with a hello frame); `inbound` holds
-    /// the already-accepted sockets from every rank `> rank`, keyed by the
-    /// rank their hello frame declared.
+    /// Build the mesh for `rank` of `world` with default options.
+    /// `outbound[q]` must hold the listen address of every rank
+    /// `q < rank` (this rank initiates those connections, identifying
+    /// itself with a hello frame); `inbound` holds the already-accepted
+    /// sockets from every rank `> rank`, keyed by the rank their hello
+    /// frame declared.
     pub fn new(
         rank: usize,
         world: usize,
         outbound: &[String],
         inbound: Vec<(usize, TcpStream)>,
     ) -> std::io::Result<TcpTransport> {
-        let mailbox = Arc::new(Mailbox::new());
+        Self::with_options(rank, world, outbound, inbound, TcpOptions::default())
+    }
+
+    /// [`TcpTransport::new`] with explicit deadlines and heartbeat config.
+    pub fn with_options(
+        rank: usize,
+        world: usize,
+        outbound: &[String],
+        inbound: Vec<(usize, TcpStream)>,
+        opts: TcpOptions,
+    ) -> std::io::Result<TcpTransport> {
+        let mailbox = Arc::new(Mailbox::new(world));
         let mut writers: Vec<Option<Mutex<TcpStream>>> = (0..world).map(|_| None).collect();
         let mut sockets: Vec<(usize, TcpStream)> = Vec::new();
         for q in 0..rank {
-            let stream = connect_retry(&outbound[q])?;
+            let stream = connect_retry(&outbound[q], opts.connect_deadline)?;
             stream.set_nodelay(true)?;
             let mut hello = stream.try_clone()?;
             wire::write_frame(&mut hello, wire::PEER_HELLO, &(rank as u32).to_le_bytes())?;
@@ -270,24 +547,57 @@ impl TcpTransport {
             spawn_reader(q, reader, mailbox.clone());
             writers[q] = Some(Mutex::new(stream));
         }
-        Ok(TcpTransport { rank, world, mailbox, writers })
+        let writers = Arc::new(writers);
+        let stop = Arc::new(AtomicBool::new(false));
+        if let Some(interval) = opts.heartbeat {
+            spawn_heartbeat(writers.clone(), stop.clone(), interval);
+        }
+        // Allow several missed beats before declaring a peer dead; the
+        // floor keeps scheduler hiccups from killing fast-beat test meshes.
+        let liveness =
+            opts.heartbeat.map(|hb| std::cmp::max(hb * 8, Duration::from_millis(250)));
+        Ok(TcpTransport {
+            rank,
+            world,
+            mailbox,
+            writers,
+            recv_timeout: opts.recv_timeout,
+            liveness,
+            stop,
+        })
     }
 }
 
-/// Connect with a short retry window so a peer that is still binding its
-/// listener does not fail the whole mesh.
-fn connect_retry(addr: &str) -> std::io::Result<TcpStream> {
-    let mut last = None;
-    for _ in 0..25 {
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+    }
+}
+
+/// Connect with exponential backoff (10 ms doubling to a 500 ms cap) until
+/// `deadline` elapses, so a peer that is still binding its listener does
+/// not fail the whole mesh. The terminal error carries the peer address
+/// and the last io error observed.
+fn connect_retry(addr: &str, deadline: Duration) -> std::io::Result<TcpStream> {
+    let start = Instant::now();
+    let mut delay = Duration::from_millis(10);
+    loop {
         match TcpStream::connect(addr) {
             Ok(s) => return Ok(s),
             Err(e) => {
-                last = Some(e);
-                std::thread::sleep(Duration::from_millis(100));
+                let elapsed = start.elapsed();
+                if elapsed >= deadline {
+                    return Err(std::io::Error::new(
+                        e.kind(),
+                        format!("connecting to peer at {addr} failed for {elapsed:?}: {e}"),
+                    ));
+                }
+                let remaining = deadline - elapsed;
+                std::thread::sleep(delay.min(remaining));
+                delay = (delay * 2).min(Duration::from_millis(500));
             }
         }
     }
-    Err(last.expect("at least one connect attempt"))
 }
 
 /// Reader half: frames from `peer` flow into the mailbox until EOF. The
@@ -295,26 +605,78 @@ fn connect_retry(addr: &str) -> std::io::Result<TcpStream> {
 /// [`wire::TAG_I32`]-flagged frames carry raw byte payloads (i8 codes at
 /// 1 byte per element — the quantized-activation traffic cut — and i32
 /// partial-sum accumulators respectively), everything else decodes as
-/// f32.
+/// f32. [`wire::CTRL_HEARTBEAT`] refreshes the peer's liveness clock;
+/// [`wire::CTRL_ABORT`] latches the cluster-wide abort. EOF or an io/
+/// decode error marks the peer dead, waking any blocked receive.
 fn spawn_reader(peer: usize, mut stream: TcpStream, mailbox: Arc<Mailbox>) {
     std::thread::Builder::new()
         .name(format!("xenos-tp-rx-{peer}"))
         .spawn(move || {
             loop {
                 match wire::read_frame(&mut stream) {
+                    Ok((wire::CTRL_HEARTBEAT, _)) => mailbox.touch(peer),
+                    Ok((wire::CTRL_ABORT, payload)) => {
+                        let (culprit, reason) = wire::decode_abort(&payload);
+                        mailbox.set_abort(peer, culprit, &reason);
+                    }
                     Ok((tag, payload)) => {
                         let p = if tag & (wire::TAG_Q8 | wire::TAG_I32) != 0 {
                             Payload::Bytes(payload)
                         } else {
-                            Payload::F32(wire::bytes_to_f32s(&payload))
+                            match wire::bytes_to_f32s(&payload) {
+                                Ok(v) => Payload::F32(v),
+                                Err(detail) => {
+                                    mailbox.mark_dead(peer, &detail);
+                                    break;
+                                }
+                            }
                         };
                         mailbox.put(peer, tag, p);
                     }
-                    Err(_) => break, // peer closed; pending recvs will time out
+                    Err(e) => {
+                        mailbox.mark_dead(peer, &format!("link down: {e}"));
+                        break;
+                    }
                 }
             }
         })
         .expect("spawning transport reader");
+}
+
+/// Heartbeat half: periodically pushes [`wire::CTRL_HEARTBEAT`] frames to
+/// every connected peer until the owning transport drops. Send failures
+/// are ignored here — the reader half observes the broken link.
+fn spawn_heartbeat(
+    writers: Arc<Vec<Option<Mutex<TcpStream>>>>,
+    stop: Arc<AtomicBool>,
+    interval: Duration,
+) {
+    std::thread::Builder::new()
+        .name("xenos-tp-hb".to_string())
+        .spawn(move || {
+            while !stop.load(Ordering::SeqCst) {
+                for w in writers.iter().flatten() {
+                    let mut stream = lock_recover(w);
+                    let _ = wire::write_frame(&mut *stream, wire::CTRL_HEARTBEAT, &[]);
+                }
+                std::thread::sleep(interval);
+            }
+        })
+        .expect("spawning heartbeat thread");
+}
+
+impl TcpTransport {
+    fn writer(&self, to: usize) -> TransportResult<&Mutex<TcpStream>> {
+        self.writers[to].as_ref().ok_or_else(|| TransportError::Protocol {
+            detail: format!("no link from rank {} to rank {to}", self.rank),
+        })
+    }
+
+    fn write_to(&self, to: usize, tag: u64, payload: &[u8]) -> TransportResult<()> {
+        let mut stream = lock_recover(self.writer(to)?);
+        wire::write_frame(&mut *stream, tag, payload)
+            .map_err(|e| TransportError::Io { peer: to, detail: e.to_string() })
+    }
 }
 
 impl Transport for TcpTransport {
@@ -326,30 +688,37 @@ impl Transport for TcpTransport {
         self.world
     }
 
-    fn send(&self, to: usize, tag: u64, data: &[f32]) {
-        let w = self.writers[to]
-            .as_ref()
-            .unwrap_or_else(|| panic!("no link from rank {} to rank {to}", self.rank));
-        let mut stream = w.lock().expect("transport writer lock");
-        wire::write_frame(&mut *stream, tag, &wire::f32s_to_bytes(data))
-            .unwrap_or_else(|e| panic!("send to rank {to} failed: {e}"));
+    fn send(&self, to: usize, tag: u64, data: &[f32]) -> TransportResult<()> {
+        self.write_to(to, tag, &wire::f32s_to_bytes(data))
     }
 
-    fn recv(&self, from: usize, tag: u64) -> Vec<f32> {
-        self.mailbox.take(from, tag).into_f32(from, tag)
+    fn recv(&self, from: usize, tag: u64) -> TransportResult<Vec<f32>> {
+        self.mailbox.take(from, tag, self.recv_timeout, self.liveness)?.into_f32(from, tag)
     }
 
-    fn send_bytes(&self, to: usize, tag: u64, data: &[u8]) {
-        let w = self.writers[to]
-            .as_ref()
-            .unwrap_or_else(|| panic!("no link from rank {} to rank {to}", self.rank));
-        let mut stream = w.lock().expect("transport writer lock");
-        wire::write_frame(&mut *stream, tag, data)
-            .unwrap_or_else(|e| panic!("send_bytes to rank {to} failed: {e}"));
+    fn send_bytes(&self, to: usize, tag: u64, data: &[u8]) -> TransportResult<()> {
+        self.write_to(to, tag, data)
     }
 
-    fn recv_bytes(&self, from: usize, tag: u64) -> Vec<u8> {
-        self.mailbox.take(from, tag).into_bytes(from, tag)
+    fn recv_bytes(&self, from: usize, tag: u64) -> TransportResult<Vec<u8>> {
+        self.mailbox.take(from, tag, self.recv_timeout, self.liveness)?.into_bytes(from, tag)
+    }
+
+    fn abort(&self, culprit: Option<usize>, reason: &str) {
+        let payload = wire::encode_abort(culprit, reason);
+        for to in 0..self.world {
+            if to != self.rank {
+                let _ = self.write_to(to, wire::CTRL_ABORT, &payload);
+            }
+        }
+    }
+
+    fn sever(&self) {
+        for w in self.writers.iter().flatten() {
+            let stream = lock_recover(w);
+            let _ = stream.shutdown(Shutdown::Both);
+        }
+        self.stop.store(true, Ordering::SeqCst);
     }
 }
 
@@ -386,43 +755,90 @@ mod tests {
     #[test]
     fn local_mesh_routes_by_rank_and_tag() {
         let mesh = LocalTransport::mesh(3);
-        mesh[0].send(2, 7, &[1.0, 2.0]);
-        mesh[1].send(2, 7, &[3.0]);
-        mesh[0].send(2, 9, &[4.0]);
-        assert_eq!(mesh[2].recv(0, 9), vec![4.0]);
-        assert_eq!(mesh[2].recv(0, 7), vec![1.0, 2.0]);
-        assert_eq!(mesh[2].recv(1, 7), vec![3.0]);
+        mesh[0].send(2, 7, &[1.0, 2.0]).unwrap();
+        mesh[1].send(2, 7, &[3.0]).unwrap();
+        mesh[0].send(2, 9, &[4.0]).unwrap();
+        assert_eq!(mesh[2].recv(0, 9).unwrap(), vec![4.0]);
+        assert_eq!(mesh[2].recv(0, 7).unwrap(), vec![1.0, 2.0]);
+        assert_eq!(mesh[2].recv(1, 7).unwrap(), vec![3.0]);
     }
 
     #[test]
     fn local_fifo_per_tag() {
         let mesh = LocalTransport::mesh(2);
-        mesh[0].send(1, 1, &[1.0]);
-        mesh[0].send(1, 1, &[2.0]);
-        assert_eq!(mesh[1].recv(0, 1), vec![1.0]);
-        assert_eq!(mesh[1].recv(0, 1), vec![2.0]);
+        mesh[0].send(1, 1, &[1.0]).unwrap();
+        mesh[0].send(1, 1, &[2.0]).unwrap();
+        assert_eq!(mesh[1].recv(0, 1).unwrap(), vec![1.0]);
+        assert_eq!(mesh[1].recv(0, 1).unwrap(), vec![2.0]);
     }
 
     #[test]
     fn local_empty_payloads_flow() {
         let mesh = LocalTransport::mesh(2);
-        mesh[1].send(0, 5, &[]);
-        assert!(mesh[0].recv(1, 5).is_empty());
+        mesh[1].send(0, 5, &[]).unwrap();
+        assert!(mesh[0].recv(1, 5).unwrap().is_empty());
     }
 
     #[test]
     fn local_byte_payloads_flow() {
         let mesh = LocalTransport::mesh(2);
-        mesh[0].send_bytes(1, wire::TAG_Q8 | 3, &[1u8, 255, 0]);
-        assert_eq!(mesh[1].recv_bytes(0, wire::TAG_Q8 | 3), vec![1u8, 255, 0]);
+        mesh[0].send_bytes(1, wire::TAG_Q8 | 3, &[1u8, 255, 0]).unwrap();
+        assert_eq!(mesh[1].recv_bytes(0, wire::TAG_Q8 | 3).unwrap(), vec![1u8, 255, 0]);
     }
 
     #[test]
-    #[should_panic(expected = "byte payload")]
-    fn flavor_mismatch_panics_loudly() {
+    fn flavor_mismatch_is_a_protocol_error() {
         let mesh = LocalTransport::mesh(2);
-        mesh[0].send_bytes(1, wire::TAG_Q8 | 4, &[7u8]);
-        let _ = mesh[1].recv(0, wire::TAG_Q8 | 4);
+        mesh[0].send_bytes(1, wire::TAG_Q8 | 4, &[7u8]).unwrap();
+        match mesh[1].recv(0, wire::TAG_Q8 | 4) {
+            Err(TransportError::Protocol { detail }) => {
+                assert!(detail.contains("byte payload"), "detail: {detail}")
+            }
+            other => panic!("expected protocol error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn local_recv_deadline_is_typed() {
+        let mesh = LocalTransport::mesh_with_timeout(2, Duration::from_millis(30));
+        match mesh[0].recv(1, 7) {
+            Err(TransportError::DeadlineExceeded { peer: 1, tag: 7, .. }) => {}
+            other => panic!("expected deadline error, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn local_abort_unblocks_peer_recv() {
+        let mut mesh = LocalTransport::mesh(2);
+        let t1 = mesh.pop().unwrap();
+        let t0 = mesh.pop().unwrap();
+        let waiter = std::thread::spawn(move || t0.recv(1, 99));
+        std::thread::sleep(Duration::from_millis(20));
+        t1.abort(Some(1), "injected failure");
+        match waiter.join().unwrap() {
+            Err(TransportError::Aborted { origin: 1, culprit: Some(1), .. }) => {}
+            other => panic!("expected abort, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn local_sever_marks_peer_dead() {
+        let mesh = LocalTransport::mesh(2);
+        mesh[1].sever();
+        match mesh[0].recv(1, 3) {
+            Err(TransportError::PeerDead { peer: 1, .. }) => {}
+            other => panic!("expected peer-dead, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn queued_messages_win_over_failure_state() {
+        // Data that already arrived must drain even after the sender dies.
+        let mesh = LocalTransport::mesh(2);
+        mesh[1].send(0, 4, &[5.0]).unwrap();
+        mesh[1].sever();
+        assert_eq!(mesh[0].recv(1, 4).unwrap(), vec![5.0]);
+        assert!(mesh[0].recv(1, 4).is_err());
     }
 
     #[test]
@@ -431,14 +847,14 @@ mod tests {
         let addr = listener.local_addr().unwrap().to_string();
         let t1 = std::thread::spawn(move || {
             let t = TcpTransport::new(1, 2, &[addr], Vec::new()).unwrap();
-            t.send_bytes(0, wire::TAG_Q8 | 21, &[0u8, 127, 129, 255]);
+            t.send_bytes(0, wire::TAG_Q8 | 21, &[0u8, 127, 129, 255]).unwrap();
             t.recv_bytes(0, wire::TAG_Q8 | 22)
         });
         let inbound = accept_peers(&listener, 0, 2).unwrap();
         let t0 = TcpTransport::new(0, 2, &[], inbound).unwrap();
-        assert_eq!(t0.recv_bytes(1, wire::TAG_Q8 | 21), vec![0u8, 127, 129, 255]);
-        t0.send_bytes(1, wire::TAG_Q8 | 22, &[42u8]);
-        assert_eq!(t1.join().unwrap(), vec![42u8]);
+        assert_eq!(t0.recv_bytes(1, wire::TAG_Q8 | 21).unwrap(), vec![0u8, 127, 129, 255]);
+        t0.send_bytes(1, wire::TAG_Q8 | 22, &[42u8]).unwrap();
+        assert_eq!(t1.join().unwrap().unwrap(), vec![42u8]);
     }
 
     #[test]
@@ -505,35 +921,38 @@ mod tests {
         let addr = listener.local_addr().unwrap().to_string();
         let t1 = std::thread::spawn(move || {
             let t = TcpTransport::new(1, 2, &[addr], Vec::new()).unwrap();
-            <i32 as WireScalar>::send_block(
-                &t,
+            <i32 as WireScalar>::send_block(&t, 0, wire::TAG_I32 | 31, &[
+                i32::MIN,
+                -1,
                 0,
-                wire::TAG_I32 | 31,
-                &[i32::MIN, -1, 0, 1, i32::MAX],
-            );
+                1,
+                i32::MAX,
+            ])
+            .unwrap();
             <i32 as WireScalar>::recv_block(&t, 0, wire::TAG_I32 | 32)
         });
         let inbound = accept_peers(&listener, 0, 2).unwrap();
         let t0 = TcpTransport::new(0, 2, &[], inbound).unwrap();
         assert_eq!(
-            <i32 as WireScalar>::recv_block(&t0, 1, wire::TAG_I32 | 31),
+            <i32 as WireScalar>::recv_block(&t0, 1, wire::TAG_I32 | 31).unwrap(),
             vec![i32::MIN, -1, 0, 1, i32::MAX]
         );
-        <i32 as WireScalar>::send_block(&t0, 1, wire::TAG_I32 | 32, &[42]);
-        assert_eq!(t1.join().unwrap(), vec![42]);
+        <i32 as WireScalar>::send_block(&t0, 1, wire::TAG_I32 | 32, &[42]).unwrap();
+        assert_eq!(t1.join().unwrap().unwrap(), vec![42]);
     }
 
     #[test]
     fn wire_scalar_moves_i8_codes_and_f32_uniformly() {
         // The payload-generic face the deduplicated collectives use.
         let mesh = LocalTransport::mesh(2);
-        <i8 as WireScalar>::send_block(&mesh[0], 1, wire::TAG_Q8 | 9, &[-128i8, -1, 0, 127]);
+        <i8 as WireScalar>::send_block(&mesh[0], 1, wire::TAG_Q8 | 9, &[-128i8, -1, 0, 127])
+            .unwrap();
         assert_eq!(
-            <i8 as WireScalar>::recv_block(&mesh[1], 0, wire::TAG_Q8 | 9),
+            <i8 as WireScalar>::recv_block(&mesh[1], 0, wire::TAG_Q8 | 9).unwrap(),
             vec![-128i8, -1, 0, 127]
         );
-        <f32 as WireScalar>::send_block(&mesh[1], 0, 4, &[1.5, -2.0]);
-        assert_eq!(<f32 as WireScalar>::recv_block(&mesh[0], 1, 4), vec![1.5, -2.0]);
+        <f32 as WireScalar>::send_block(&mesh[1], 0, 4, &[1.5, -2.0]).unwrap();
+        assert_eq!(<f32 as WireScalar>::recv_block(&mesh[0], 1, 4).unwrap(), vec![1.5, -2.0]);
     }
 
     #[test]
@@ -543,14 +962,118 @@ mod tests {
         let addr = listener.local_addr().unwrap().to_string();
         let t1 = std::thread::spawn(move || {
             let t = TcpTransport::new(1, 2, &[addr], Vec::new()).unwrap();
-            t.send(0, 11, &[1.5, -2.5]);
+            t.send(0, 11, &[1.5, -2.5]).unwrap();
             t.recv(0, 12)
         });
         let inbound = accept_peers(&listener, 0, 2).unwrap();
         assert_eq!(inbound[0].0, 1);
         let t0 = TcpTransport::new(0, 2, &[], inbound).unwrap();
-        assert_eq!(t0.recv(1, 11), vec![1.5, -2.5]);
-        t0.send(1, 12, &[9.0]);
-        assert_eq!(t1.join().unwrap(), vec![9.0]);
+        assert_eq!(t0.recv(1, 11).unwrap(), vec![1.5, -2.5]);
+        t0.send(1, 12, &[9.0]).unwrap();
+        assert_eq!(t1.join().unwrap().unwrap(), vec![9.0]);
+    }
+
+    #[test]
+    fn tcp_peer_death_mid_payload_surfaces_as_peer_dead() {
+        // A raw "peer" sends its hello, then a frame header claiming 100
+        // payload bytes, writes only 10, and dies. The reader must mark
+        // the peer dead and the blocked recv must fail fast — not hang.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            use std::io::Write;
+            wire::write_frame(&mut s, wire::PEER_HELLO, &(1u32).to_le_bytes()).unwrap();
+            let mut partial = Vec::new();
+            partial.extend_from_slice(&7u64.to_le_bytes());
+            partial.extend_from_slice(&100u32.to_le_bytes());
+            partial.extend_from_slice(&[0u8; 10]);
+            s.write_all(&partial).unwrap();
+            // drop: dies mid-payload
+        });
+        let inbound = accept_peers(&listener, 0, 2).unwrap();
+        let t0 = TcpTransport::with_options(0, 2, &[], inbound, TcpOptions {
+            recv_timeout: Duration::from_secs(10),
+            heartbeat: None,
+            connect_deadline: Duration::from_secs(2),
+        })
+        .unwrap();
+        writer.join().unwrap();
+        let start = Instant::now();
+        match t0.recv(1, 7) {
+            Err(TransportError::PeerDead { peer: 1, .. }) => {}
+            other => panic!("expected peer-dead, got {other:?}"),
+        }
+        assert!(start.elapsed() < Duration::from_secs(5), "death must beat the deadline");
+    }
+
+    #[test]
+    fn tcp_missed_heartbeats_fail_a_blocked_collective_recv() {
+        // Rank 1 connects but never beats (heartbeat disabled on its
+        // side); rank 0 runs a fast heartbeat clock and must declare the
+        // peer dead via the liveness window while blocked in a recv —
+        // the mid-collective death-detection path.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let silent = std::thread::spawn(move || {
+            let t = TcpTransport::with_options(1, 2, &[addr], Vec::new(), TcpOptions {
+                recv_timeout: Duration::from_secs(10),
+                heartbeat: None,
+                connect_deadline: Duration::from_secs(2),
+            })
+            .unwrap();
+            // Stay alive (socket open, no traffic) long enough for rank
+            // 0's liveness window to lapse.
+            std::thread::sleep(Duration::from_millis(800));
+            drop(t);
+        });
+        let inbound = accept_peers(&listener, 0, 2).unwrap();
+        let t0 = TcpTransport::with_options(0, 2, &[], inbound, TcpOptions {
+            recv_timeout: Duration::from_secs(10),
+            heartbeat: Some(Duration::from_millis(25)),
+            connect_deadline: Duration::from_secs(2),
+        })
+        .unwrap();
+        let start = Instant::now();
+        match t0.recv(1, 40) {
+            Err(TransportError::PeerDead { peer: 1, detail }) => {
+                assert!(detail.contains("heartbeat"), "detail: {detail}")
+            }
+            other => panic!("expected heartbeat death, got {other:?}"),
+        }
+        let waited = start.elapsed();
+        assert!(waited < Duration::from_secs(5), "liveness must beat the deadline: {waited:?}");
+        silent.join().unwrap();
+    }
+
+    #[test]
+    fn tcp_abort_frame_unblocks_peer() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let t1 = std::thread::spawn(move || {
+            let t = TcpTransport::new(1, 2, &[addr], Vec::new()).unwrap();
+            std::thread::sleep(Duration::from_millis(50));
+            t.abort(Some(1), "scripted failure");
+            // Keep the socket open until the peer has read the frame.
+            std::thread::sleep(Duration::from_millis(300));
+        });
+        let inbound = accept_peers(&listener, 0, 2).unwrap();
+        let t0 = TcpTransport::new(0, 2, &[], inbound).unwrap();
+        match t0.recv(1, 55) {
+            Err(TransportError::Aborted { origin: 1, culprit: Some(1), reason }) => {
+                assert_eq!(reason, "scripted failure")
+            }
+            other => panic!("expected abort, got {other:?}"),
+        }
+        t1.join().unwrap();
+    }
+
+    #[test]
+    fn connect_retry_reports_addr_and_deadline() {
+        // An unroutable connect must come back within (roughly) the
+        // deadline, with the address in the error text.
+        let err = connect_retry("127.0.0.1:1", Duration::from_millis(80))
+            .expect_err("nothing listens on port 1");
+        assert!(err.to_string().contains("127.0.0.1:1"), "err: {err}");
     }
 }

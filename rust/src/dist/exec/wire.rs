@@ -29,12 +29,21 @@ pub const CTRL_INPUT: u64 = 0xFFFF_0012;
 pub const CTRL_OUTPUT: u64 = 0xFFFF_0013;
 /// Worker (rank > 0) → driver: inference finished.
 pub const CTRL_DONE: u64 = 0xFFFF_0014;
-/// Worker → driver: job failed; payload = UTF-8 message.
+/// Worker → driver: job failed; payload = [`encode_abort`] (optional
+/// culprit rank + UTF-8 message), so the driver learns *which* rank to
+/// drop when re-planning.
 pub const CTRL_ERR: u64 = 0xFFFF_0015;
 /// Driver → worker: session over.
 pub const CTRL_SHUTDOWN: u64 = 0xFFFF_0016;
 /// Driver → worker: serialized calibration table (INT8 jobs only).
 pub const CTRL_CALIB: u64 = 0xFFFF_0017;
+/// Peer ↔ peer: liveness beat (empty payload). Refreshes the sender's
+/// last-seen clock; never enqueued as data.
+pub const CTRL_HEARTBEAT: u64 = 0xFFFF_0018;
+/// Peer ↔ peer: cluster-wide round abort; payload = [`encode_abort`].
+/// Receivers latch it so every blocked or future recv fails fast instead
+/// of waiting out its deadline.
+pub const CTRL_ABORT: u64 = 0xFFFF_0019;
 
 /// Frame-kind flag for peer-link tags: the payload is raw i8 (quantized
 /// activations), **one byte per element on the wire** — the quantized
@@ -108,13 +117,13 @@ pub(crate) fn i32s_to_bytes(v: &[i32]) -> Vec<u8> {
 }
 
 /// Little-endian wire bytes → i32s. A misaligned length means a corrupt
-/// peer frame; fail loudly at the decode site.
-pub(crate) fn bytes_to_i32s(bytes: &[u8]) -> Vec<i32> {
-    assert_eq!(bytes.len() % 4, 0, "payload not i32-aligned: corrupt peer frame");
-    bytes
-        .chunks_exact(4)
-        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
-        .collect()
+/// (e.g. truncated) peer frame; surfaced as an error at the decode site
+/// so the worker can fail its round instead of the process.
+pub(crate) fn bytes_to_i32s(bytes: &[u8]) -> Result<Vec<i32>, String> {
+    if bytes.len() % 4 != 0 {
+        return Err(format!("payload of {} bytes is not i32-aligned: corrupt frame", bytes.len()));
+    }
+    Ok(bytes.chunks_exact(4).map(|c| i32::from_le_bytes(c.try_into().unwrap())).collect())
 }
 
 /// f32 slice → little-endian bytes.
@@ -127,14 +136,39 @@ pub(crate) fn f32s_to_bytes(data: &[f32]) -> Vec<u8> {
 }
 
 /// Little-endian bytes → f32s. A misaligned length means a corrupt peer
-/// frame; failing loudly here beats a short buffer detonating inside a
-/// collective far from the cause.
-pub(crate) fn bytes_to_f32s(bytes: &[u8]) -> Vec<f32> {
-    assert_eq!(bytes.len() % 4, 0, "payload not f32-aligned: corrupt peer frame");
-    bytes
-        .chunks_exact(4)
-        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
-        .collect()
+/// frame; surfacing the error here beats a short buffer detonating inside
+/// a collective far from the cause.
+pub(crate) fn bytes_to_f32s(bytes: &[u8]) -> Result<Vec<f32>, String> {
+    if bytes.len() % 4 != 0 {
+        return Err(format!("payload of {} bytes is not f32-aligned: corrupt frame", bytes.len()));
+    }
+    Ok(bytes.chunks_exact(4).map(|c| f32::from_le_bytes(c.try_into().unwrap())).collect())
+}
+
+/// Serialize an abort/error payload: optional culprit rank + reason. Used
+/// by both [`CTRL_ABORT`] (peer links) and [`CTRL_ERR`] (control link).
+pub(crate) fn encode_abort(culprit: Option<usize>, reason: &str) -> Vec<u8> {
+    let mut e = Enc::default();
+    e.u32(match culprit {
+        Some(c) => c as u32,
+        None => u32::MAX,
+    });
+    e.str(reason);
+    e.buf
+}
+
+/// Decode an [`encode_abort`] payload; malformed payloads decode to a
+/// culprit-free placeholder rather than erroring (aborts are already the
+/// failure path).
+pub(crate) fn decode_abort(payload: &[u8]) -> (Option<usize>, String) {
+    let mut d = Dec::new(payload);
+    let culprit = match d.u32() {
+        Ok(u32::MAX) => None,
+        Ok(c) => Some(c as usize),
+        Err(_) => return (None, "malformed abort payload".to_string()),
+    };
+    let reason = d.str().unwrap_or_else(|_| "malformed abort payload".to_string());
+    (culprit, reason)
 }
 
 /// Append-only encoder.
@@ -190,7 +224,7 @@ impl<'a> Dec<'a> {
 
     pub(crate) fn f32s(&mut self) -> Result<Vec<f32>> {
         let n = self.u32()? as usize;
-        Ok(bytes_to_f32s(self.bytes(n * 4)?))
+        bytes_to_f32s(self.bytes(n * 4)?).map_err(|e| anyhow::anyhow!(e))
     }
 }
 
@@ -223,6 +257,29 @@ pub struct JobSpec {
     pub resident: bool,
     /// Listen addresses of all ranks, in rank order.
     pub peers: Vec<String>,
+    /// Per-recv deadline on peer links, in milliseconds (0 = the
+    /// transport default).
+    pub recv_timeout_ms: u32,
+    /// Peer-link heartbeat interval, in milliseconds (0 = heartbeats and
+    /// liveness-based death detection disabled).
+    pub heartbeat_ms: u32,
+}
+
+impl JobSpec {
+    /// The recv deadline this spec configures.
+    pub fn recv_timeout(&self) -> std::time::Duration {
+        if self.recv_timeout_ms == 0 {
+            super::transport::DEFAULT_RECV_TIMEOUT
+        } else {
+            std::time::Duration::from_millis(self.recv_timeout_ms as u64)
+        }
+    }
+
+    /// The heartbeat interval this spec configures, if any.
+    pub fn heartbeat(&self) -> Option<std::time::Duration> {
+        (self.heartbeat_ms > 0)
+            .then(|| std::time::Duration::from_millis(self.heartbeat_ms as u64))
+    }
 }
 
 pub(crate) fn scheme_to_u8(s: PartitionScheme) -> u8 {
@@ -289,6 +346,8 @@ pub(crate) fn encode_spec(spec: &JobSpec) -> Vec<u8> {
     for p in &spec.peers {
         e.str(p);
     }
+    e.u32(spec.recv_timeout_ms);
+    e.u32(spec.heartbeat_ms);
     e.buf
 }
 
@@ -308,7 +367,22 @@ pub(crate) fn decode_spec(payload: &[u8]) -> Result<JobSpec> {
     for _ in 0..n {
         peers.push(d.str()?);
     }
-    Ok(JobSpec { model, device, rank, world, threads, scheme, sync, precision, resident, peers })
+    let recv_timeout_ms = d.u32()?;
+    let heartbeat_ms = d.u32()?;
+    Ok(JobSpec {
+        model,
+        device,
+        rank,
+        world,
+        threads,
+        scheme,
+        sync,
+        precision,
+        resident,
+        peers,
+        recv_timeout_ms,
+        heartbeat_ms,
+    })
 }
 
 /// Serialize per-node parameter shards (`by_node` indexed by `NodeId`).
@@ -397,7 +471,26 @@ mod tests {
     #[test]
     fn f32_bytes_round_trip() {
         let v = vec![0.0f32, -1.5, f32::MAX, 1e-30];
-        assert_eq!(bytes_to_f32s(&f32s_to_bytes(&v)), v);
+        assert_eq!(bytes_to_f32s(&f32s_to_bytes(&v)).unwrap(), v);
+    }
+
+    #[test]
+    fn misaligned_scalar_payloads_are_errors_not_panics() {
+        assert!(bytes_to_f32s(&[1, 2, 3]).is_err());
+        assert!(bytes_to_i32s(&[1, 2, 3, 4, 5]).is_err());
+    }
+
+    #[test]
+    fn abort_payload_round_trips() {
+        let (c, r) = decode_abort(&encode_abort(Some(2), "rank 2 died"));
+        assert_eq!(c, Some(2));
+        assert_eq!(r, "rank 2 died");
+        let (c, r) = decode_abort(&encode_abort(None, "deadline"));
+        assert_eq!(c, None);
+        assert_eq!(r, "deadline");
+        // Malformed payloads degrade gracefully.
+        let (c, _) = decode_abort(&[1, 2]);
+        assert_eq!(c, None);
     }
 
     #[test]
@@ -413,8 +506,13 @@ mod tests {
             precision: Precision::Int8,
             resident: false,
             peers: vec!["127.0.0.1:7001".into(), "127.0.0.1:7002".into()],
+            recv_timeout_ms: 2500,
+            heartbeat_ms: 100,
         };
-        assert_eq!(decode_spec(&encode_spec(&spec)).unwrap(), spec);
+        let got = decode_spec(&encode_spec(&spec)).unwrap();
+        assert_eq!(got, spec);
+        assert_eq!(got.recv_timeout(), std::time::Duration::from_millis(2500));
+        assert_eq!(got.heartbeat(), Some(std::time::Duration::from_millis(100)));
     }
 
     #[test]
@@ -454,6 +552,8 @@ mod tests {
             precision: Precision::F32,
             resident: true,
             peers: vec![],
+            recv_timeout_ms: 0,
+            heartbeat_ms: 0,
         });
         assert!(decode_spec(&enc[..enc.len() - 2]).is_err());
     }

@@ -47,7 +47,7 @@ use std::sync::Arc;
 
 use super::plan::{aligned_resident_consumer, ClusterPlan, LayerScheme, Residency};
 use super::shard::{conv_channel_share, ShardParams};
-use super::transport::{Transport, WireScalar};
+use super::transport::{Transport, TransportError, TransportResult, WireScalar};
 use super::wire;
 use crate::dist::{ps, ring, SyncMode};
 use crate::graph::{ConvAttrs, DType, Graph, Node, NodeId, OpKind, PoolAttrs, Shape, TensorDesc};
@@ -312,7 +312,25 @@ impl ShardWorker {
     /// Run one distributed inference. Every rank must call `run` with the
     /// same inputs; all ranks return the full outputs (rank 0's copy is the
     /// one drivers report).
-    pub fn run(&self, inputs: &[Tensor]) -> Vec<Tensor> {
+    ///
+    /// Transport failures surface as typed [`TransportError`]s instead of
+    /// panics. A rank that observes a failure first (dead peer, deadline,
+    /// truncated frame) broadcasts a cluster-wide abort so no peer stays
+    /// blocked in a collective; ranks that *receive* an abort return it
+    /// without re-broadcasting.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, TransportError> {
+        match self.run_inner(inputs) {
+            Ok(v) => Ok(v),
+            Err(e) => {
+                if !e.is_abort() {
+                    self.transport.abort(e.culprit(), &e.to_string());
+                }
+                Err(e)
+            }
+        }
+    }
+
+    fn run_inner(&self, inputs: &[Tensor]) -> TransportResult<Vec<Tensor>> {
         let g = &*self.graph;
         let input_ids = g.input_ids();
         assert_eq!(
@@ -363,7 +381,7 @@ impl ShardWorker {
                             let keep = resident_out
                                 && vals[i].as_ref().expect("value live").channel_resident();
                             if !keep {
-                                self.ensure_full(&mut vals, i);
+                                self.ensure_full(&mut vals, i)?;
                             }
                         }
                         let prm = self.params.get(node.id);
@@ -394,23 +412,23 @@ impl ShardWorker {
                                 .quant
                                 .as_ref()
                                 .expect("partial-sum consumers exist only in INT8 plans");
-                            self.exec_outc_partial_q8(&vals, node, qrun)
+                            self.exec_outc_partial_q8(&vals, node, qrun)?
                         } else {
-                            self.prepare_outc_inputs(&mut vals, node);
+                            self.prepare_outc_inputs(&mut vals, node)?;
                             match &self.quant {
                                 Some(qrun) => {
                                     let args = q_refs(&vals, node);
-                                    self.exec_outc_q8(node, &args, qrun)
+                                    self.exec_outc_q8(node, &args, qrun)?
                                 }
                                 None => {
                                     let args = arg_refs(&vals, node);
-                                    self.exec_outc(node, &args)
+                                    self.exec_outc(node, &args)?
                                 }
                             }
                         }
                     }
-                    LayerScheme::InH => self.exec_spatial_dispatch(&mut vals, node, Axis::Rows),
-                    LayerScheme::InW => self.exec_spatial_dispatch(&mut vals, node, Axis::Cols),
+                    LayerScheme::InH => self.exec_spatial_dispatch(&mut vals, node, Axis::Rows)?,
+                    LayerScheme::InW => self.exec_spatial_dispatch(&mut vals, node, Axis::Cols)?,
                 }
             };
             vals[node.id] = Some(out);
@@ -422,16 +440,17 @@ impl ShardWorker {
             }
         }
         for &o in &g.outputs {
-            self.ensure_full(&mut vals, o);
+            self.ensure_full(&mut vals, o)?;
         }
-        g.outputs
+        Ok(g
+            .outputs
             .iter()
             .map(|&o| match vals[o].as_ref().expect("output computed") {
                 ShardVal::Full(t) => t.clone(),
                 ShardVal::QFull(q) => q.dequantize(),
                 _ => unreachable!("outputs are gathered to full"),
             })
-            .collect()
+            .collect())
     }
 
     /// Prepare inputs and execute one spatially-sharded node.
@@ -440,21 +459,21 @@ impl ShardWorker {
         vals: &mut [Option<ShardVal>],
         node: &Node,
         axis: Axis,
-    ) -> ShardVal {
-        self.prepare_spatial_inputs(vals, node, axis);
-        match &self.quant {
+    ) -> TransportResult<ShardVal> {
+        self.prepare_spatial_inputs(vals, node, axis)?;
+        Ok(match &self.quant {
             Some(qrun) => ShardVal::QSharded(self.exec_spatial_q8(vals, node, axis, qrun), axis),
             None => {
                 let args = arg_refs(vals, node);
                 ShardVal::Sharded(self.exec_spatial_f32(node, &args, axis), axis)
             }
-        }
+        })
     }
 
     /// Dispatch an all-gather of one block per rank through the plan's
     /// sync mode — payload-generic: f32 activations or raw i8 codes
     /// (quantized runs; `base_tag` must carry [`wire::TAG_Q8`]).
-    fn all_gather<P: WireScalar>(&self, mine: Vec<P>, base_tag: u64) -> Vec<Vec<P>> {
+    fn all_gather<P: WireScalar>(&self, mine: Vec<P>, base_tag: u64) -> TransportResult<Vec<Vec<P>>> {
         match self.plan.sync {
             SyncMode::Ring => ring::ring_all_gather_tp(&*self.transport, mine, base_tag),
             SyncMode::Ps => ps::ps_all_gather_tp(&*self.transport, mine, base_tag),
@@ -465,7 +484,7 @@ impl ShardWorker {
     /// node can consume aligned (its per-rank input-channel need sits
     /// inside the rank's resident slice) are left in place — the skipped
     /// all-gather — and everything else sharded is gathered to full.
-    fn prepare_outc_inputs(&self, vals: &mut [Option<ShardVal>], node: &Node) {
+    fn prepare_outc_inputs(&self, vals: &mut [Option<ShardVal>], node: &Node) -> TransportResult<()> {
         for &i in &node.inputs {
             let aligned = match vals[i].as_ref().expect("value live") {
                 ShardVal::CSharded(_) | ShardVal::QCSharded(_) => {
@@ -483,9 +502,10 @@ impl ShardWorker {
                 _ => false,
             };
             if !aligned {
-                self.ensure_full(vals, i);
+                self.ensure_full(vals, i)?;
             }
         }
+        Ok(())
     }
 
     /// Reassemble a sharded value into a full tensor on every rank. In
@@ -493,9 +513,9 @@ impl ShardWorker {
     /// Channel-resident values gather their per-rank channel slices (the
     /// forced lazy re-gather when a resident chain meets a consumer that
     /// needs the whole tensor).
-    fn ensure_full(&self, vals: &mut [Option<ShardVal>], id: NodeId) {
+    fn ensure_full(&self, vals: &mut [Option<ShardVal>], id: NodeId) -> TransportResult<()> {
         if matches!(vals[id], Some(ShardVal::Full(_)) | Some(ShardVal::QFull(_))) {
-            return;
+            return Ok(());
         }
         let p = self.world();
         let me = self.rank();
@@ -509,13 +529,13 @@ impl ShardWorker {
                 self.count_gather(t.data.len() as u64 * 4);
                 let (mlo, mhi) = even_share(extent, p, me);
                 let mine = pack_rect(&t, axis_rect(h, w, axis, mlo, mhi));
-                let blocks = self.all_gather(mine, gather_tag(id));
+                let blocks = self.all_gather(mine, gather_tag(id))?;
                 for (q, block) in blocks.iter().enumerate() {
                     if q == me {
                         continue;
                     }
                     let (qlo, qhi) = even_share(extent, p, q);
-                    unpack_rect(&mut t, axis_rect(h, w, axis, qlo, qhi), block);
+                    unpack_rect(&mut t, axis_rect(h, w, axis, qlo, qhi), block)?;
                 }
                 vals[id] = Some(ShardVal::Full(t));
             }
@@ -528,30 +548,31 @@ impl ShardWorker {
                 self.count_gather(q.data.len() as u64);
                 let (mlo, mhi) = even_share(extent, p, me);
                 let mine = pack_rect_i8(&q, axis_rect(h, w, axis, mlo, mhi));
-                let blocks = self.all_gather(mine, gather_tag(id) | wire::TAG_Q8);
+                let blocks = self.all_gather(mine, gather_tag(id) | wire::TAG_Q8)?;
                 for (qr, block) in blocks.iter().enumerate() {
                     if qr == me {
                         continue;
                     }
                     let (qlo, qhi) = even_share(extent, p, qr);
-                    unpack_rect_i8(&mut q, axis_rect(h, w, axis, qlo, qhi), block);
+                    unpack_rect_i8(&mut q, axis_rect(h, w, axis, qlo, qhi), block)?;
                 }
                 vals[id] = Some(ShardVal::QFull(q));
             }
             ShardVal::CSharded(mut t) => {
                 let (_, h, w) = fm_dims(&t);
                 self.count_gather(t.data.len() as u64 * 4);
-                self.gather_channel_slices(&mut t.data, h * w, id, gather_tag(id));
+                self.gather_channel_slices(&mut t.data, h * w, id, gather_tag(id))?;
                 vals[id] = Some(ShardVal::Full(t));
             }
             ShardVal::QCSharded(mut q) => {
                 let (_, h, w) = fm_of(q.shape());
                 self.count_gather(q.data.len() as u64);
-                self.gather_channel_slices(&mut q.data, h * w, id, gather_tag(id) | wire::TAG_Q8);
+                self.gather_channel_slices(&mut q.data, h * w, id, gather_tag(id) | wire::TAG_Q8)?;
                 vals[id] = Some(ShardVal::QFull(q));
             }
             _ => unreachable!("checked above"),
         }
+        Ok(())
     }
 
     /// The lazy channel re-gather shared by both precisions: all-gather
@@ -564,19 +585,21 @@ impl ShardWorker {
         hw: usize,
         id: NodeId,
         tag: u64,
-    ) {
+    ) -> TransportResult<()> {
         let me = self.rank();
         let slices = self.resident_slices(id);
         let (c0, c1) = slices[me];
         let mine = data[c0 * hw..c1 * hw].to_vec();
-        let blocks = self.all_gather(mine, tag);
+        let blocks = self.all_gather(mine, tag)?;
         for (q, block) in blocks.iter().enumerate() {
             if q == me {
                 continue;
             }
             let (q0, q1) = slices[q];
+            ring::check_block(block.len(), (q1 - q0) * hw, "resident channel slice")?;
             data[q0 * hw..q1 * hw].copy_from_slice(block);
         }
+        Ok(())
     }
 
     /// The plan's resident channel slices of a value (must be resident).
@@ -598,7 +621,12 @@ impl ShardWorker {
     /// Bring every input of a spatial node in reach: same-axis sharded
     /// inputs get their halo regions via point-to-point exchange; anything
     /// else sharded is gathered to full.
-    fn prepare_spatial_inputs(&self, vals: &mut [Option<ShardVal>], node: &Node, axis: Axis) {
+    fn prepare_spatial_inputs(
+        &self,
+        vals: &mut [Option<ShardVal>],
+        node: &Node,
+        axis: Axis,
+    ) -> TransportResult<()> {
         for &i in &node.inputs {
             let same_axis = match vals[i].as_ref().expect("value live") {
                 ShardVal::Full(_) | ShardVal::QFull(_) => None,
@@ -609,10 +637,11 @@ impl ShardWorker {
             };
             match same_axis {
                 None => {}
-                Some(true) => self.exchange_halo(vals, i, node, axis),
-                Some(false) => self.ensure_full(vals, i),
+                Some(true) => self.exchange_halo(vals, i, node, axis)?,
+                Some(false) => self.ensure_full(vals, i)?,
             }
         }
+        Ok(())
     }
 
     /// Halo exchange for one sharded input of one spatial consumer: every
@@ -628,7 +657,7 @@ impl ShardWorker {
         value_id: NodeId,
         consumer: &Node,
         axis: Axis,
-    ) {
+    ) -> TransportResult<()> {
         let p = self.world();
         let me = self.rank();
         let (h, w) = match vals[value_id].as_ref().expect("value live") {
@@ -679,10 +708,10 @@ impl ShardWorker {
                                 self.stats
                                     .sync_bytes
                                     .fetch_add(block.len() as u64 * 4, Ordering::Relaxed);
-                                self.transport.send(d, tag, &block);
+                                self.transport.send(d, tag, &block)?;
                             } else if d == me {
-                                let block = self.transport.recv(s, tag);
-                                unpack_rect(t, axis_rect(h, w, axis, lo, hi), &block);
+                                let block = self.transport.recv(s, tag)?;
+                                unpack_rect(t, axis_rect(h, w, axis, lo, hi), &block)?;
                             }
                         }
                         ShardVal::QSharded(q, _) => {
@@ -692,11 +721,11 @@ impl ShardWorker {
                                 self.stats
                                     .sync_bytes
                                     .fetch_add(block.len() as u64, Ordering::Relaxed);
-                                self.transport.send_bytes(d, tag, wire::i8s_as_bytes(&block));
+                                self.transport.send_bytes(d, tag, wire::i8s_as_bytes(&block))?;
                             } else if d == me {
                                 let block =
-                                    wire::bytes_into_i8s(self.transport.recv_bytes(s, tag));
-                                unpack_rect_i8(q, axis_rect(h, w, axis, lo, hi), &block);
+                                    wire::bytes_into_i8s(self.transport.recv_bytes(s, tag)?);
+                                unpack_rect_i8(q, axis_rect(h, w, axis, lo, hi), &block)?;
                             }
                         }
                         _ => unreachable!("halo exchange on full value"),
@@ -704,6 +733,7 @@ impl ShardWorker {
                 }
             }
         }
+        Ok(())
     }
 
     /// OutC-sharded f32 execution: compute this rank's output-channel/
@@ -711,7 +741,7 @@ impl ShardWorker {
     /// shard-resident (the plan's [`Residency::ResidentOutC`] decision —
     /// the skipped all-gather) or all-gather the slices into the full
     /// activation.
-    fn exec_outc(&self, node: &Node, args: &[&Tensor]) -> ShardVal {
+    fn exec_outc(&self, node: &Node, args: &[&Tensor]) -> TransportResult<ShardVal> {
         let p = self.world();
         let me = self.rank();
         let prm = self.params.get(node.id);
@@ -729,16 +759,16 @@ impl ShardWorker {
                 if matches!(self.plan.residency[node.id], Residency::ResidentOutC(_)) {
                     self.stats.gathers_skipped.fetch_add(1, Ordering::Relaxed);
                     out.data[c0 * ohw..c1 * ohw].copy_from_slice(&mine);
-                    return ShardVal::CSharded(out);
+                    return Ok(ShardVal::CSharded(out));
                 }
                 self.count_gather(out.data.len() as u64 * 4);
-                let blocks = self.all_gather(mine, outc_tag(node.id));
+                let blocks = self.all_gather(mine, outc_tag(node.id))?;
                 for (q, block) in blocks.iter().enumerate() {
                     let (q0, q1) = conv_channel_share(a, p, q);
-                    debug_assert_eq!(block.len(), (q1 - q0) * ohw, "channel block size");
+                    ring::check_block(block.len(), (q1 - q0) * ohw, "channel block")?;
                     out.data[q0 * ohw..q1 * ohw].copy_from_slice(block);
                 }
-                ShardVal::Full(out)
+                Ok(ShardVal::Full(out))
             }
             OpKind::MatMul(m) if m.weighted => {
                 let (j0, j1) = even_share(m.n, p, me);
@@ -752,16 +782,17 @@ impl ShardWorker {
                 // never stay resident (see `plan::outc_slices`).
                 let mut out = Tensor::zeros(node.out.clone());
                 self.count_gather(out.data.len() as u64 * 4);
-                let blocks = self.all_gather(mine, outc_tag(node.id));
+                let blocks = self.all_gather(mine, outc_tag(node.id))?;
                 for (q, block) in blocks.iter().enumerate() {
                     let (q0, q1) = even_share(m.n, p, q);
                     let nw = q1 - q0;
+                    ring::check_block(block.len(), rows * nw, "fc column block")?;
                     for r in 0..rows {
                         out.data[r * m.n + q0..r * m.n + q1]
                             .copy_from_slice(&block[r * nw..(r + 1) * nw]);
                     }
                 }
-                ShardVal::Full(out)
+                Ok(ShardVal::Full(out))
             }
             other => unreachable!("outC scheme on unshardable op {other:?}"),
         }
@@ -773,7 +804,12 @@ impl ShardWorker {
     /// all-gather of the code blocks — reassembly equals the
     /// single-device output bit-for-bit, with no quantize step anywhere
     /// near the wire.
-    fn exec_outc_q8(&self, node: &Node, args: &[&QTensor], qrun: &QuantRun) -> ShardVal {
+    fn exec_outc_q8(
+        &self,
+        node: &Node,
+        args: &[&QTensor],
+        qrun: &QuantRun,
+    ) -> TransportResult<ShardVal> {
         let p = self.world();
         let me = self.rank();
         let prm = self.params.get(node.id);
@@ -792,16 +828,16 @@ impl ShardWorker {
                 if matches!(self.plan.residency[node.id], Residency::ResidentOutC(_)) {
                     self.stats.gathers_skipped.fetch_add(1, Ordering::Relaxed);
                     out.data[c0 * ohw..c1 * ohw].copy_from_slice(&mine);
-                    return ShardVal::QCSharded(out);
+                    return Ok(ShardVal::QCSharded(out));
                 }
                 self.count_gather(out.data.len() as u64);
-                let blocks = self.all_gather(mine, outc_tag(node.id) | wire::TAG_Q8);
+                let blocks = self.all_gather(mine, outc_tag(node.id) | wire::TAG_Q8)?;
                 for (q, block) in blocks.iter().enumerate() {
                     let (q0, q1) = conv_channel_share(a, p, q);
-                    debug_assert_eq!(block.len(), (q1 - q0) * ohw, "channel block size");
+                    ring::check_block(block.len(), (q1 - q0) * ohw, "channel block")?;
                     out.data[q0 * ohw..q1 * ohw].copy_from_slice(block);
                 }
-                ShardVal::QFull(out)
+                Ok(ShardVal::QFull(out))
             }
             OpKind::MatMul(m) if m.weighted => {
                 let (j0, j1) = even_share(m.n, p, me);
@@ -822,16 +858,17 @@ impl ShardWorker {
                 };
                 let mut out = QTensor::zeros(node.out.clone(), grid);
                 self.count_gather(out.data.len() as u64);
-                let blocks = self.all_gather(mine, outc_tag(node.id) | wire::TAG_Q8);
+                let blocks = self.all_gather(mine, outc_tag(node.id) | wire::TAG_Q8)?;
                 for (q, block) in blocks.iter().enumerate() {
                     let (q0, q1) = even_share(m.n, p, q);
                     let nw = q1 - q0;
+                    ring::check_block(block.len(), rows * nw, "fc column block")?;
                     for r in 0..rows {
                         out.data[r * m.n + q0..r * m.n + q1]
                             .copy_from_slice(&block[r * nw..(r + 1) * nw]);
                     }
                 }
-                ShardVal::QFull(out)
+                Ok(ShardVal::QFull(out))
             }
             other => unreachable!("outC scheme on unshardable op {other:?}"),
         }
@@ -852,7 +889,7 @@ impl ShardWorker {
         vals: &[Option<ShardVal>],
         node: &Node,
         qrun: &QuantRun,
-    ) -> ShardVal {
+    ) -> TransportResult<ShardVal> {
         let p = self.world();
         let me = self.rank();
         let input_id = node.inputs[0];
@@ -907,7 +944,7 @@ impl ShardWorker {
                 ring::ring_reduce_scatter_tp(&*self.transport, &mut acc, &blocks, tag)
             }
             SyncMode::Ps => ps::ps_reduce_scatter_tp(&*self.transport, &mut acc, &blocks, tag),
-        }
+        }?;
         self.stats.reduce_scatters.fetch_add(1, Ordering::Relaxed);
         self.stats.sync_bytes.fetch_add(acc.len() as u64 * 4, Ordering::Relaxed);
         // Requantize this rank's fully-reduced share through the node's
@@ -925,19 +962,20 @@ impl ShardWorker {
         }
         if matches!(self.plan.residency[node.id], Residency::ResidentOutC(_)) {
             self.stats.gathers_skipped.fetch_add(1, Ordering::Relaxed);
-            return ShardVal::QCSharded(out);
+            return Ok(ShardVal::QCSharded(out));
         }
         self.count_gather(out.data.len() as u64);
         let mine = out.data[m0 * ohw..m1 * ohw].to_vec();
-        let blocks = self.all_gather(mine, outc_tag(node.id) | wire::TAG_Q8);
+        let blocks = self.all_gather(mine, outc_tag(node.id) | wire::TAG_Q8)?;
         for (q, block) in blocks.iter().enumerate() {
             if q == me {
                 continue;
             }
             let (q0, q1) = conv_channel_share(a, p, q);
+            ring::check_block(block.len(), (q1 - q0) * ohw, "partial-sum channel block")?;
             out.data[q0 * ohw..q1 * ohw].copy_from_slice(block);
         }
-        ShardVal::QFull(out)
+        Ok(ShardVal::QFull(out))
     }
 
     /// The conv-family channel slice `[c0, c1)` as its own tensor, computed
@@ -1613,10 +1651,12 @@ fn pack_rect(t: &Tensor, r: Rect) -> Vec<f32> {
     out
 }
 
-/// Inverse of [`pack_rect`].
-fn unpack_rect(t: &mut Tensor, r: Rect, block: &[f32]) {
+/// Inverse of [`pack_rect`]; a short block (truncated frame) is a typed
+/// protocol error, not a panic.
+fn unpack_rect(t: &mut Tensor, r: Rect, block: &[f32]) -> TransportResult<()> {
     let (c, h, w) = fm_dims(t);
     let seg = r.x1 - r.x0;
+    ring::check_block(block.len(), c * (r.y1 - r.y0) * seg, "rect block")?;
     let mut off = 0usize;
     for ch in 0..c {
         for y in r.y0..r.y1 {
@@ -1625,7 +1665,7 @@ fn unpack_rect(t: &mut Tensor, r: Rect, block: &[f32]) {
             off += seg;
         }
     }
-    debug_assert_eq!(off, block.len(), "halo block size mismatch");
+    Ok(())
 }
 
 /// Serialize one rect of an i8 code buffer (same traversal order as
@@ -1643,10 +1683,12 @@ fn pack_rect_i8(q: &QTensor, r: Rect) -> Vec<i8> {
     out
 }
 
-/// Inverse of [`pack_rect_i8`].
-fn unpack_rect_i8(q: &mut QTensor, r: Rect, block: &[i8]) {
+/// Inverse of [`pack_rect_i8`]; a short block (truncated frame) is a
+/// typed protocol error, not a panic.
+fn unpack_rect_i8(q: &mut QTensor, r: Rect, block: &[i8]) -> TransportResult<()> {
     let (c, h, w) = fm_of(q.shape());
     let seg = r.x1 - r.x0;
+    ring::check_block(block.len(), c * (r.y1 - r.y0) * seg, "rect block")?;
     let mut off = 0usize;
     for ch in 0..c {
         for y in r.y0..r.y1 {
@@ -1655,7 +1697,7 @@ fn unpack_rect_i8(q: &mut QTensor, r: Rect, block: &[i8]) {
             off += seg;
         }
     }
-    debug_assert_eq!(off, block.len(), "halo block size mismatch");
+    Ok(())
 }
 
 /// Decode one axis range `[lo, hi)` of a code buffer into a fresh f32

@@ -9,35 +9,38 @@
 //! over any [`Transport`]; the in-memory entry point is the
 //! `LocalTransport` special case.
 
-use crate::dist::exec::transport::{run_over_local_mesh, Transport, WireScalar};
+use crate::dist::exec::transport::{run_over_local_mesh, Transport, TransportResult, WireScalar};
+use crate::dist::ring::check_block;
 use crate::hw::LinkModel;
 
 /// Parameter-server all-reduce over a [`Transport`]: workers send their
 /// full buffer to rank 0, which accumulates in rank order and sends one
 /// identical copy back — all ranks end bit-identical. Tags `base_tag ..
 /// base_tag + 2p` are consumed.
-pub fn ps_allreduce_tp(t: &dyn Transport, data: &mut [f32], base_tag: u64) {
+pub fn ps_allreduce_tp(t: &dyn Transport, data: &mut [f32], base_tag: u64) -> TransportResult<()> {
     let p = t.world();
     if p <= 1 {
-        return;
+        return Ok(());
     }
     let me = t.rank();
     if me == 0 {
         for q in 1..p {
-            let inc = t.recv(q, base_tag + q as u64);
-            assert_eq!(inc.len(), data.len(), "ps all-reduce buffers must match in length");
+            let inc = t.recv(q, base_tag + q as u64)?;
+            check_block(inc.len(), data.len(), "ps all-reduce buffer")?;
             for (d, v) in data.iter_mut().zip(&inc) {
                 *d += *v;
             }
         }
         for q in 1..p {
-            t.send(q, base_tag + (p + q) as u64, data);
+            t.send(q, base_tag + (p + q) as u64, data)?;
         }
     } else {
-        t.send(0, base_tag + me as u64, data);
-        let res = t.recv(0, base_tag + (p + me) as u64);
+        t.send(0, base_tag + me as u64, data)?;
+        let res = t.recv(0, base_tag + (p + me) as u64)?;
+        check_block(res.len(), data.len(), "ps all-reduce result")?;
         data.copy_from_slice(&res);
     }
+    Ok(())
 }
 
 /// Parameter-server all-gather of one variable-size block per rank: rank 0
@@ -52,18 +55,18 @@ pub fn ps_all_gather_tp<P: WireScalar>(
     t: &dyn Transport,
     mine: Vec<P>,
     base_tag: u64,
-) -> Vec<Vec<P>> {
+) -> TransportResult<Vec<Vec<P>>> {
     let p = t.world();
     let me = t.rank();
     let mut blocks: Vec<Option<Vec<P>>> = (0..p).map(|_| None).collect();
     if p <= 1 {
         blocks[me] = Some(mine);
-        return blocks.into_iter().map(|b| b.expect("own block")).collect();
+        return Ok(blocks.into_iter().map(|b| b.expect("own block")).collect());
     }
     if me == 0 {
         blocks[0] = Some(mine);
         for q in 1..p {
-            blocks[q] = Some(P::recv_block(t, q, base_tag + q as u64));
+            blocks[q] = Some(P::recv_block(t, q, base_tag + q as u64)?);
         }
         for q in 1..p {
             for (b, block) in blocks.iter().enumerate() {
@@ -73,20 +76,20 @@ pub fn ps_all_gather_tp<P: WireScalar>(
                         q,
                         base_tag + (p + b) as u64,
                         block.as_ref().expect("gathered"),
-                    );
+                    )?;
                 }
             }
         }
     } else {
-        P::send_block(t, 0, base_tag + me as u64, &mine);
+        P::send_block(t, 0, base_tag + me as u64, &mine)?;
         blocks[me] = Some(mine);
         for b in 0..p {
             if b != me {
-                blocks[b] = Some(P::recv_block(t, 0, base_tag + (p + b) as u64));
+                blocks[b] = Some(P::recv_block(t, 0, base_tag + (p + b) as u64)?);
             }
         }
     }
-    blocks.into_iter().map(|b| b.expect("all blocks gathered")).collect()
+    Ok(blocks.into_iter().map(|b| b.expect("all blocks gathered")).collect())
 }
 
 /// Parameter-server reduce-scatter with per-rank block boundaries: every
@@ -102,34 +105,36 @@ pub fn ps_reduce_scatter_tp<P>(
     data: &mut [P],
     blocks: &[(usize, usize)],
     base_tag: u64,
-) where
+) -> TransportResult<()>
+where
     P: WireScalar + Copy + std::ops::AddAssign,
 {
     let p = t.world();
     assert_eq!(blocks.len(), p, "one block per rank");
     if p <= 1 {
-        return;
+        return Ok(());
     }
     let me = t.rank();
     if me == 0 {
         for q in 1..p {
-            let inc = P::recv_block(t, q, base_tag + q as u64);
-            assert_eq!(inc.len(), data.len(), "ps reduce-scatter buffers must match");
+            let inc = P::recv_block(t, q, base_tag + q as u64)?;
+            check_block(inc.len(), data.len(), "ps reduce-scatter buffer")?;
             for (d, v) in data.iter_mut().zip(&inc) {
                 *d += *v;
             }
         }
         for q in 1..p {
             let (s, e) = blocks[q];
-            P::send_block(t, q, base_tag + (p + q) as u64, &data[s..e]);
+            P::send_block(t, q, base_tag + (p + q) as u64, &data[s..e])?;
         }
     } else {
-        P::send_block(t, 0, base_tag + me as u64, data);
-        let res = P::recv_block(t, 0, base_tag + (p + me) as u64);
+        P::send_block(t, 0, base_tag + me as u64, data)?;
+        let res = P::recv_block(t, 0, base_tag + (p + me) as u64)?;
         let (s, e) = blocks[me];
-        debug_assert_eq!(res.len(), e - s, "ps reduce-scatter block size");
+        check_block(res.len(), e - s, "ps reduce-scatter block")?;
         data[s..e].copy_from_slice(&res);
     }
+    Ok(())
 }
 
 /// Execute a parameter-server all-reduce over in-memory worker buffers —
@@ -143,7 +148,9 @@ pub fn ps_allreduce_exec(bufs: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
     for b in &bufs {
         assert_eq!(b.len(), n, "ps all-reduce buffers must match in length");
     }
-    run_over_local_mesh(bufs, |t, data| ps_allreduce_tp(t, data, 0))
+    run_over_local_mesh(bufs, |t, data| {
+        ps_allreduce_tp(t, data, 0).expect("local mesh collective")
+    })
 }
 
 /// Analytic PS all-reduce time: the server receives `p-1` full buffers and
@@ -187,7 +194,9 @@ mod tests {
                 .clone()
                 .into_iter()
                 .zip(mesh)
-                .map(|(mine, t)| scope.spawn(move || ps_all_gather_tp(&t, mine, 0)))
+                .map(|(mine, t)| {
+                    scope.spawn(move || ps_all_gather_tp(&t, mine, 0).expect("gather"))
+                })
                 .collect();
             handles.into_iter().map(|h| h.join().expect("gather worker")).collect()
         });
@@ -205,7 +214,9 @@ mod tests {
                 .clone()
                 .into_iter()
                 .zip(mesh)
-                .map(|(mine, t)| scope.spawn(move || ps_all_gather_tp(&t, mine, 0)))
+                .map(|(mine, t)| {
+                    scope.spawn(move || ps_all_gather_tp(&t, mine, 0).expect("gather"))
+                })
                 .collect();
             handles.into_iter().map(|h| h.join().expect("gather worker")).collect()
         });
@@ -229,7 +240,7 @@ mod tests {
                 .zip(mesh)
                 .map(|(mut data, t)| {
                     scope.spawn(move || {
-                        ps_reduce_scatter_tp(&t, &mut data, blocks, 0);
+                        ps_reduce_scatter_tp(&t, &mut data, blocks, 0).expect("rs");
                         data
                     })
                 })

@@ -13,7 +13,9 @@
 //! * [`ring_allreduce_time`] / [`ring_broadcast_time`] — the analytic time
 //!   model the d-Xenos simulation prices collectives with.
 
-use crate::dist::exec::transport::{run_over_local_mesh, Transport, WireScalar};
+use crate::dist::exec::transport::{
+    run_over_local_mesh, Transport, TransportError, TransportResult, WireScalar,
+};
 use crate::hw::LinkModel;
 
 /// Chunk boundaries of an `n`-element buffer split into `p` near-even
@@ -30,10 +32,10 @@ fn chunk_bounds(n: usize, p: usize, c: usize) -> (usize, usize) {
 /// — a rotation of the rank order, exactly as on a physical ring — and the
 /// all-gather copies each finished chunk verbatim, so all ranks end
 /// **bit-identical**. Tags `base_tag .. base_tag + 2(p-1)` are consumed.
-pub fn ring_allreduce_tp(t: &dyn Transport, data: &mut [f32], base_tag: u64) {
+pub fn ring_allreduce_tp(t: &dyn Transport, data: &mut [f32], base_tag: u64) -> TransportResult<()> {
     let p = t.world();
     if p <= 1 {
-        return;
+        return Ok(());
     }
     let me = t.rank();
     let n = data.len();
@@ -47,9 +49,10 @@ pub fn ring_allreduce_tp(t: &dyn Transport, data: &mut [f32], base_tag: u64) {
         let send_c = (me + p - s) % p;
         let recv_c = (me + 2 * p - s - 1) % p;
         let (ss, se) = chunk_bounds(n, p, send_c);
-        t.send(right, base_tag + s as u64, &data[ss..se]);
-        let inc = t.recv(left, base_tag + s as u64);
+        t.send(right, base_tag + s as u64, &data[ss..se])?;
+        let inc = t.recv(left, base_tag + s as u64)?;
         let (rs, re) = chunk_bounds(n, p, recv_c);
+        check_block(inc.len(), re - rs, "ring all-reduce chunk")?;
         for (d, v) in data[rs..re].iter_mut().zip(&inc) {
             *d = *v + *d;
         }
@@ -59,11 +62,25 @@ pub fn ring_allreduce_tp(t: &dyn Transport, data: &mut [f32], base_tag: u64) {
         let send_c = (me + 1 + p - s) % p;
         let recv_c = (me + p - s) % p;
         let (ss, se) = chunk_bounds(n, p, send_c);
-        t.send(right, base_tag + (p + s) as u64, &data[ss..se]);
-        let inc = t.recv(left, base_tag + (p + s) as u64);
+        t.send(right, base_tag + (p + s) as u64, &data[ss..se])?;
+        let inc = t.recv(left, base_tag + (p + s) as u64)?;
         let (rs, re) = chunk_bounds(n, p, recv_c);
+        check_block(inc.len(), re - rs, "ring all-gather chunk")?;
         data[rs..re].copy_from_slice(&inc);
     }
+    Ok(())
+}
+
+/// Reject a received block whose length does not match the schedule — a
+/// truncated or corrupt frame must fail the round, not detonate in a
+/// slice copy.
+pub(crate) fn check_block(got: usize, want: usize, what: &str) -> TransportResult<()> {
+    if got != want {
+        return Err(TransportError::Protocol {
+            detail: format!("{what}: got {got} elements, expected {want} (truncated frame?)"),
+        });
+    }
+    Ok(())
 }
 
 /// Ring all-gather of one variable-size block per rank (empty allowed):
@@ -80,7 +97,7 @@ pub fn ring_all_gather_tp<P: WireScalar>(
     t: &dyn Transport,
     mine: Vec<P>,
     base_tag: u64,
-) -> Vec<Vec<P>> {
+) -> TransportResult<Vec<Vec<P>>> {
     let p = t.world();
     let me = t.rank();
     let mut blocks: Vec<Option<Vec<P>>> = (0..p).map(|_| None).collect();
@@ -92,11 +109,11 @@ pub fn ring_all_gather_tp<P: WireScalar>(
             let send_b = (me + p - s) % p;
             let recv_b = (me + 2 * p - s - 1) % p;
             let out = blocks[send_b].as_ref().expect("block in flight");
-            P::send_block(t, right, base_tag + s as u64, out);
-            blocks[recv_b] = Some(P::recv_block(t, left, base_tag + s as u64));
+            P::send_block(t, right, base_tag + s as u64, out)?;
+            blocks[recv_b] = Some(P::recv_block(t, left, base_tag + s as u64)?);
         }
     }
-    blocks.into_iter().map(|b| b.expect("all blocks gathered")).collect()
+    Ok(blocks.into_iter().map(|b| b.expect("all blocks gathered")).collect())
 }
 
 /// Ring reduce-scatter with per-rank block boundaries: every rank starts
@@ -118,13 +135,14 @@ pub fn ring_reduce_scatter_tp<P>(
     data: &mut [P],
     blocks: &[(usize, usize)],
     base_tag: u64,
-) where
+) -> TransportResult<()>
+where
     P: WireScalar + Copy + std::ops::AddAssign,
 {
     let p = t.world();
     assert_eq!(blocks.len(), p, "one block per rank");
     if p <= 1 {
-        return;
+        return Ok(());
     }
     let me = t.rank();
     let right = (me + 1) % p;
@@ -136,14 +154,15 @@ pub fn ring_reduce_scatter_tp<P>(
         let send_b = (me + 2 * p - 1 - s) % p;
         let recv_b = (me + 2 * p - 2 - s) % p;
         let (ss, se) = blocks[send_b];
-        P::send_block(t, right, base_tag + s as u64, &data[ss..se]);
-        let inc = P::recv_block(t, left, base_tag + s as u64);
+        P::send_block(t, right, base_tag + s as u64, &data[ss..se])?;
+        let inc = P::recv_block(t, left, base_tag + s as u64)?;
         let (rs, re) = blocks[recv_b];
-        debug_assert_eq!(inc.len(), re - rs, "reduce-scatter block size");
+        check_block(inc.len(), re - rs, "ring reduce-scatter block")?;
         for (d, v) in data[rs..re].iter_mut().zip(&inc) {
             *d += *v;
         }
     }
+    Ok(())
 }
 
 /// Execute a ring all-reduce over `p = inputs.len()` worker buffers —
@@ -158,7 +177,9 @@ pub fn ring_allreduce_exec(bufs: Vec<Vec<f32>>) -> Vec<Vec<f32>> {
     for b in &bufs {
         assert_eq!(b.len(), n, "ring all-reduce buffers must match in length");
     }
-    run_over_local_mesh(bufs, |t, data| ring_allreduce_tp(t, data, 0))
+    run_over_local_mesh(bufs, |t, data| {
+        ring_allreduce_tp(t, data, 0).expect("local mesh collective")
+    })
 }
 
 /// Analytic ring all-reduce time for `bytes` over `p` devices: `2(p-1)`
@@ -246,7 +267,9 @@ mod tests {
             let handles: Vec<_> = blocks
                 .into_iter()
                 .zip(mesh)
-                .map(|(mine, t)| scope.spawn(move || ring_all_gather_tp(&t, mine, 0)))
+                .map(|(mine, t)| {
+                    scope.spawn(move || ring_all_gather_tp(&t, mine, 0).expect("gather"))
+                })
                 .collect();
             handles.into_iter().map(|h| h.join().expect("gather worker")).collect()
         })
@@ -269,7 +292,7 @@ mod tests {
                 .zip(mesh)
                 .map(|(mut data, t)| {
                     scope.spawn(move || {
-                        ring_reduce_scatter_tp(&t, &mut data, blocks, 0);
+                        ring_reduce_scatter_tp(&t, &mut data, blocks, 0).expect("rs");
                         data
                     })
                 })
@@ -289,7 +312,7 @@ mod tests {
     fn reduce_scatter_single_rank_is_identity() {
         let mesh = LocalTransport::mesh(1);
         let mut data = vec![7i32, -3];
-        ring_reduce_scatter_tp(&mesh[0], &mut data, &[(0, 2)], 0);
+        ring_reduce_scatter_tp(&mesh[0], &mut data, &[(0, 2)], 0).unwrap();
         assert_eq!(data, vec![7, -3]);
     }
 

@@ -19,7 +19,7 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 use xenos::baselines;
-use xenos::dist::exec::{serve_listener, ClusterDriver};
+use xenos::dist::exec::{serve_listener, ClusterDriver, ClusterOptions, Fault, FaultScript};
 use xenos::dist::{simulate_dxenos, PartitionScheme, SyncMode};
 use xenos::graph::models;
 use xenos::hw;
@@ -80,7 +80,11 @@ const USAGE: &str = "usage: xenos <optimize|run|serve|quantize|dist|dist-worker|
            the same plan on in-process shard threads instead; --precision int8
            runs the quantized plan with i8 halo/all-gather payloads;
            --no-resident disables the shard-resident outC dataflow (eager
-           all-gathers — the comparison baseline; reports sync bytes both ways)
+           all-gathers — the comparison baseline; reports sync bytes both ways);
+           --recv-timeout-ms / --infer-timeout-ms tune failure detection;
+           --fault kill:R@N | delay:R@N:MS | trunc:R@N injects a scripted
+           fault at rank R's transport op N (--local only) to exercise the
+           survivor re-planning path; fault counters print after the run
   repro    --exp ID|all                    regenerate a paper table/figure
   inspect  --model M                       dump the model graph";
 
@@ -453,6 +457,39 @@ fn cmd_dist(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Parse a `--fault` spec: `kill:R@N`, `delay:R@N:MS`, or `trunc:R@N` —
+/// rank `R`, transport op index `N`, delay in milliseconds `MS`.
+fn fault_arg(spec: &str) -> Result<FaultScript> {
+    let parse = |s: &str, what: &str| -> Result<(usize, u64)> {
+        let (rank, op) = s
+            .split_once('@')
+            .with_context(|| format!("--fault {what} wants R@N, got {s:?}"))?;
+        Ok((rank.parse()?, op.parse()?))
+    };
+    let (kind, rest) = spec
+        .split_once(':')
+        .with_context(|| format!("--fault wants kill:R@N | delay:R@N:MS | trunc:R@N, got {spec:?}"))?;
+    match kind {
+        "kill" => {
+            let (rank, at_op) = parse(rest, "kill")?;
+            Ok(FaultScript::kill(rank, at_op))
+        }
+        "trunc" => {
+            let (rank, at_op) = parse(rest, "trunc")?;
+            Ok(FaultScript::truncate(rank, at_op))
+        }
+        "delay" => {
+            let (at, ms) = rest
+                .rsplit_once(':')
+                .with_context(|| format!("--fault delay wants delay:R@N:MS, got {spec:?}"))?;
+            let (rank, at_op) = parse(at, "delay")?;
+            let delay = std::time::Duration::from_millis(ms.parse()?);
+            Ok(FaultScript::default().and(rank, Fault::Delay { at_op, delay }))
+        }
+        other => bail!("unknown --fault kind {other:?} (kill|delay|trunc)"),
+    }
+}
+
 fn cmd_dist_worker(args: &Args) -> Result<()> {
     let addr = args.get_or("listen", "127.0.0.1:7001");
     let listener = std::net::TcpListener::bind(addr)
@@ -478,19 +515,22 @@ fn cmd_dist_run(args: &Args) -> Result<()> {
     };
 
     let resident = !args.flag("no-resident");
-    let driver = if args.flag("local") || args.get("hosts").is_none() {
+    let mut opts = ClusterOptions { threads, resident, ..ClusterOptions::default() };
+    if let Some(ms) = args.get("recv-timeout-ms") {
+        opts.recv_timeout = std::time::Duration::from_millis(ms.parse()?);
+    }
+    if let Some(ms) = args.get("infer-timeout-ms") {
+        opts.infer_timeout = std::time::Duration::from_millis(ms.parse()?);
+    }
+    let local = args.flag("local") || args.get("hosts").is_none();
+    if let Some(spec) = args.get("fault") {
+        anyhow::ensure!(local, "--fault scripts apply to --local clusters only");
+        opts.fault = Some(fault_arg(spec)?);
+    }
+    let driver = if local {
         let p = args.get_parse("p", 2usize);
         let d = hw::by_name(&device).with_context(|| format!("unknown device {device}"))?;
-        ClusterDriver::local_opts(
-            graph.clone(),
-            &d,
-            p,
-            scheme,
-            sync,
-            threads,
-            calib.as_ref(),
-            resident,
-        )?
+        ClusterDriver::local_with(graph.clone(), &d, p, scheme, sync, opts, calib.as_ref())?
     } else {
         let mut hosts: Vec<String> = args
             .get("hosts")
@@ -506,16 +546,7 @@ fn cmd_dist_run(args: &Args) -> Result<()> {
             hosts.len()
         );
         hosts.truncate(p);
-        ClusterDriver::tcp_opts(
-            &hosts,
-            &model,
-            &device,
-            scheme,
-            sync,
-            threads,
-            calib.as_ref(),
-            resident,
-        )?
+        ClusterDriver::tcp_with(&hosts, &model, &device, scheme, sync, opts, calib.as_ref())?
     };
 
     // The inter-layer dataflow decision: how much activation traffic the
@@ -560,6 +591,20 @@ fn cmd_dist_run(args: &Args) -> Result<()> {
             s.reduce_scatters,
             s.halo_exchanges,
             human_bytes(s.sync_bytes),
+        );
+    }
+    let f = driver.fault_stats();
+    if f != Default::default() {
+        println!(
+            "fault handling: {} failure(s) detected, {} abort(s) observed, \
+             {} re-plan(s), {} retry(ies), {} single-device fallback(s); \
+             finished at world={}",
+            f.failures,
+            f.aborts,
+            f.replans,
+            f.retries,
+            f.fallbacks,
+            driver.world(),
         );
     }
 

@@ -211,7 +211,7 @@ fn hand_built_cross_axis_plan_matches_serial() {
                     1,
                 );
                 let inputs = inputs.clone();
-                scope.spawn(move || worker.run(&inputs))
+                scope.spawn(move || worker.run(&inputs).expect("shard round"))
             })
             .collect();
         handles.into_iter().map(|h| h.join().expect("shard thread")).collect()
@@ -329,7 +329,7 @@ fn resident_chain_interrupted_by_spatial_op_regathers_exactly() {
             .into_iter()
             .map(|w| {
                 let inputs = inputs.clone();
-                scope.spawn(move || w.run(&inputs))
+                scope.spawn(move || w.run(&inputs).expect("shard round"))
             })
             .collect();
         handles.into_iter().map(|h| h.join().expect("shard thread")).collect()

@@ -1,0 +1,245 @@
+//! Fault-tolerance acceptance suite for the d-Xenos cluster runtime:
+//! scripted failures (killed ranks, truncated frames, stalled peers)
+//! injected into a live local cluster must surface as typed
+//! [`xenos::dist::exec::TransportError`]s — never panics — and the
+//! [`ClusterDriver`] must recover by re-planning over the survivors and
+//! retrying the round. Because sharded kernels share the serial code
+//! paths, the recovered output is **bit-identical** to the single-device
+//! reference, so every test here is a differential test: inject the
+//! fault, then assert exact equality against the `Interpreter` (f32) or
+//! `QuantEngine` (INT8).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use xenos::dist::exec::{ClusterDriver, ClusterOptions, Fault, FaultScript};
+use xenos::dist::{PartitionScheme, SyncMode};
+use xenos::graph::{Graph, GraphBuilder, Shape};
+use xenos::hw::presets;
+use xenos::ops::interp::synthetic_inputs;
+use xenos::ops::params::ParamStore;
+use xenos::ops::{Interpreter, Tensor};
+use xenos::quant::{CalibTable, QuantEngine};
+
+/// Small CNN with enough layers that every rank performs many transport
+/// ops per round — scripted fault indices land mid-inference.
+fn fault_cnn() -> Graph {
+    let mut b = GraphBuilder::new("fault_cnn");
+    let x = b.input("x", Shape::nchw(1, 4, 12, 12));
+    let c1 = b.conv_bn_relu("c1", x, 16, 3, 1, 1);
+    let dw = b.dw_bn_relu("dw", c1, 3, 1, 1);
+    let pw = b.conv_bn_relu("pw", dw, 32, 1, 1, 0);
+    let mp = b.maxpool("mp", pw, 2, 2);
+    let c2 = b.conv("c2", mp, 16, 3, 1, 1);
+    let gp = b.global_pool("gp", c2);
+    let fc = b.fc("fc", gp, 10);
+    let sm = b.softmax("sm", fc);
+    b.output(sm);
+    b.finish()
+}
+
+fn serial_reference(g: &Graph, seed: u64) -> (Vec<Tensor>, Vec<Tensor>) {
+    let inputs = synthetic_inputs(g, seed);
+    let want = Interpreter::new(g).run(&inputs);
+    (inputs, want)
+}
+
+fn assert_outputs_identical(want: &[Tensor], got: &[Tensor], what: &str) {
+    assert_eq!(want.len(), got.len(), "{what}: output arity");
+    for (a, b) in want.iter().zip(got) {
+        assert_eq!(a.shape(), b.shape(), "{what}: shape");
+        assert_eq!(a.data, b.data, "{what}: diverged from the serial reference");
+    }
+}
+
+fn faulty_opts(fault: FaultScript) -> ClusterOptions {
+    ClusterOptions {
+        recv_timeout: Duration::from_millis(500),
+        infer_timeout: Duration::from_secs(30),
+        fault: Some(fault),
+        ..ClusterOptions::default()
+    }
+}
+
+fn faulty_driver(
+    g: &Graph,
+    p: usize,
+    scheme: PartitionScheme,
+    sync: SyncMode,
+    fault: FaultScript,
+) -> ClusterDriver {
+    let d = presets::tms320c6678();
+    ClusterDriver::local_with(
+        Arc::new(g.clone()),
+        &d,
+        p,
+        scheme,
+        sync,
+        faulty_opts(fault),
+        None,
+    )
+    .expect("cluster spins up")
+}
+
+/// A rank killed mid-collective on a 3-way cluster: the driver must
+/// detect the death, re-plan over the two survivors, retry, and return
+/// the bit-exact result.
+#[test]
+fn kill_mid_inference_replans_and_matches_serial() {
+    let g = fault_cnn();
+    let (inputs, want) = serial_reference(&g, 70);
+    let driver =
+        faulty_driver(&g, 3, PartitionScheme::OutC, SyncMode::Ring, FaultScript::kill(2, 5));
+    let got = driver.infer(&inputs).expect("recovered inference");
+    assert_outputs_identical(&want, &got, "kill p=3");
+    assert_eq!(driver.world(), 2, "one rank dropped");
+    let f = driver.fault_stats();
+    assert!(f.failures >= 1, "failure detected: {f:?}");
+    assert!(f.replans >= 1, "survivor re-plan ran: {f:?}");
+    assert!(f.retries >= 1, "round retried: {f:?}");
+    assert_eq!(f.fallbacks, 0, "no single-device fallback: {f:?}");
+    // Recovered cluster stays serviceable for subsequent rounds.
+    let again = driver.infer(&inputs).expect("post-recovery inference");
+    assert_outputs_identical(&want, &again, "kill p=3 second round");
+}
+
+/// Killing rank 0 (the output-owning rank) must recover identically —
+/// survivor ranks are renumbered by the re-plan.
+#[test]
+fn kill_rank_zero_replans_and_matches_serial() {
+    let g = fault_cnn();
+    let (inputs, want) = serial_reference(&g, 71);
+    let driver =
+        faulty_driver(&g, 3, PartitionScheme::Mix, SyncMode::Ring, FaultScript::kill(0, 4));
+    let got = driver.infer(&inputs).expect("recovered inference");
+    assert_outputs_identical(&want, &got, "kill rank 0");
+    assert_eq!(driver.world(), 2, "one rank dropped");
+    assert!(driver.fault_stats().replans >= 1);
+}
+
+/// With only two ranks, losing one leaves no cluster to re-plan: the
+/// driver must fall back to the single-device engine and still answer
+/// bit-exactly.
+#[test]
+fn kill_with_two_ranks_falls_back_to_single_device() {
+    let g = fault_cnn();
+    let (inputs, want) = serial_reference(&g, 72);
+    let driver =
+        faulty_driver(&g, 2, PartitionScheme::OutC, SyncMode::Ring, FaultScript::kill(1, 3));
+    let got = driver.infer(&inputs).expect("fallback inference");
+    assert_outputs_identical(&want, &got, "fallback p=2");
+    assert_eq!(driver.world(), 1, "single survivor");
+    assert!(driver.label().starts_with("cluster-fallback"), "label: {}", driver.label());
+    let f = driver.fault_stats();
+    assert_eq!(f.fallbacks, 1, "fell back exactly once: {f:?}");
+    assert!(f.failures >= 1 && f.retries >= 1, "{f:?}");
+}
+
+/// A truncated frame mid-collective is a protocol error, not a panic:
+/// the driver drops an end of the corrupt link and the retried round —
+/// on a clean rebuilt mesh — is bit-exact.
+#[test]
+fn truncated_frame_recovers_bit_exact() {
+    let g = fault_cnn();
+    let (inputs, want) = serial_reference(&g, 73);
+    // Ring ops alternate send/recv; scripting two consecutive indices
+    // guarantees one lands on a send (truncation is a no-op on a recv).
+    let fault = FaultScript::truncate(1, 4).and(1, Fault::Truncate { at_op: 5 });
+    let driver = faulty_driver(&g, 3, PartitionScheme::OutC, SyncMode::Ring, fault);
+    let got = driver.infer(&inputs).expect("recovered inference");
+    assert_outputs_identical(&want, &got, "truncate p=3");
+    assert_eq!(driver.world(), 2, "one end of the corrupt link dropped");
+    assert!(driver.fault_stats().replans >= 1);
+}
+
+/// A slow rank inside the recv deadline is not a failure: the round
+/// completes on the original cluster with no re-planning.
+#[test]
+fn slow_rank_within_deadline_is_not_a_failure() {
+    let g = fault_cnn();
+    let (inputs, want) = serial_reference(&g, 74);
+    let fault = FaultScript::delay(1, 2, Duration::from_millis(50));
+    let driver = faulty_driver(&g, 3, PartitionScheme::OutC, SyncMode::Ring, fault);
+    let got = driver.infer(&inputs).expect("slow but healthy inference");
+    assert_outputs_identical(&want, &got, "tolerated delay");
+    assert_eq!(driver.world(), 3, "no rank dropped");
+    assert_eq!(driver.fault_stats(), Default::default(), "no counters tripped");
+}
+
+/// A rank stalled past the recv deadline is indistinguishable from a
+/// dead one: peers time out, the driver drops it and recovers.
+#[test]
+fn stalled_rank_past_deadline_is_dropped() {
+    let g = fault_cnn();
+    let (inputs, want) = serial_reference(&g, 75);
+    let fault = FaultScript::delay(1, 2, Duration::from_millis(1500));
+    let d = presets::tms320c6678();
+    let opts = ClusterOptions {
+        recv_timeout: Duration::from_millis(150),
+        infer_timeout: Duration::from_secs(30),
+        fault: Some(fault),
+        ..ClusterOptions::default()
+    };
+    let driver = ClusterDriver::local_with(
+        Arc::new(g.clone()),
+        &d,
+        3,
+        PartitionScheme::OutC,
+        SyncMode::Ring,
+        opts,
+        None,
+    )
+    .expect("cluster spins up");
+    let got = driver.infer(&inputs).expect("recovered inference");
+    assert_outputs_identical(&want, &got, "deadline-dropped rank");
+    assert_eq!(driver.world(), 2, "stalled rank dropped");
+    let f = driver.fault_stats();
+    assert!(f.failures >= 1 && f.replans >= 1, "{f:?}");
+}
+
+/// INT8 path: a kill mid-inference on a quantized cluster re-plans and
+/// the recovered output is bit-identical to the serial `QuantEngine` —
+/// re-planning re-extracts shard weights and quantized row offsets, so
+/// integer accumulation is unchanged.
+#[test]
+fn quantized_kill_replans_bit_exact() {
+    let g = fault_cnn();
+    let params = ParamStore::for_graph(&g);
+    let calib = CalibTable::synthetic(&g, &params, 4, 1000);
+    let ga = Arc::new(g.clone());
+    let inputs = synthetic_inputs(&g, 76);
+    let want = QuantEngine::new(ga.clone(), &calib, 1).expect("quant engine").run(&inputs);
+    let d = presets::tms320c6678();
+    let driver = ClusterDriver::local_with(
+        ga,
+        &d,
+        3,
+        PartitionScheme::OutC,
+        SyncMode::Ring,
+        faulty_opts(FaultScript::kill(2, 5)),
+        Some(&calib),
+    )
+    .expect("quant cluster spins up");
+    let got = driver.infer(&inputs).expect("recovered quantized inference");
+    assert_outputs_identical(&want, &got, "quantized kill p=3");
+    assert_eq!(driver.world(), 2, "one rank dropped");
+    assert!(driver.fault_stats().replans >= 1);
+}
+
+/// Multiple scripted faults across successive rounds: kill one rank on
+/// the first round (3 -> 2), then — because rebuilt meshes get clean
+/// transports — the second round runs faultlessly on the survivors.
+#[test]
+fn successive_rounds_after_recovery_stay_exact() {
+    let g = fault_cnn();
+    let (inputs, want) = serial_reference(&g, 77);
+    let driver =
+        faulty_driver(&g, 3, PartitionScheme::InH, SyncMode::Ring, FaultScript::kill(1, 6));
+    for round in 0..3 {
+        let got = driver.infer(&inputs).expect("inference");
+        assert_outputs_identical(&want, &got, &format!("round {round}"));
+    }
+    let f = driver.fault_stats();
+    assert_eq!(f.replans, 1, "fault observed exactly once: {f:?}");
+    assert_eq!(driver.world(), 2);
+}

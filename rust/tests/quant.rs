@@ -22,7 +22,7 @@ use std::sync::{Arc, Mutex};
 use xenos::dist::exec::wire::TAG_Q8;
 use xenos::dist::exec::{
     plan_cluster, quant_row_offset, ClusterDriver, LocalTransport, ShardParams, ShardWorker,
-    Transport,
+    Transport, TransportResult,
 };
 use xenos::dist::{PartitionScheme, SyncMode};
 use xenos::graph::{models, Graph, GraphBuilder, Shape};
@@ -188,7 +188,7 @@ fn integer_dataflow_has_zero_snap_roundtrips_across_engines() {
                 .into_iter()
                 .map(|w| {
                     let inputs = inputs.clone();
-                    scope.spawn(move || w.run(&inputs))
+                    scope.spawn(move || w.run(&inputs).expect("shard round"))
                 })
                 .collect();
             handles.into_iter().map(|h| h.join().expect("rank")).collect()
@@ -307,22 +307,30 @@ impl Transport for Recording {
         self.inner.world()
     }
 
-    fn send(&self, to: usize, tag: u64, data: &[f32]) {
+    fn send(&self, to: usize, tag: u64, data: &[f32]) -> TransportResult<()> {
         self.log.lock().unwrap().push((tag, data.len(), false));
-        self.inner.send(to, tag, data);
+        self.inner.send(to, tag, data)
     }
 
-    fn recv(&self, from: usize, tag: u64) -> Vec<f32> {
+    fn recv(&self, from: usize, tag: u64) -> TransportResult<Vec<f32>> {
         self.inner.recv(from, tag)
     }
 
-    fn send_bytes(&self, to: usize, tag: u64, data: &[u8]) {
+    fn send_bytes(&self, to: usize, tag: u64, data: &[u8]) -> TransportResult<()> {
         self.log.lock().unwrap().push((tag, data.len(), true));
-        self.inner.send_bytes(to, tag, data);
+        self.inner.send_bytes(to, tag, data)
     }
 
-    fn recv_bytes(&self, from: usize, tag: u64) -> Vec<u8> {
+    fn recv_bytes(&self, from: usize, tag: u64) -> TransportResult<Vec<u8>> {
         self.inner.recv_bytes(from, tag)
+    }
+
+    fn abort(&self, culprit: Option<usize>, reason: &str) {
+        self.inner.abort(culprit, reason);
+    }
+
+    fn sever(&self) {
+        self.inner.sever();
     }
 }
 
@@ -371,7 +379,7 @@ fn int8_halo_and_gather_frames_carry_i8_payloads() {
             .into_iter()
             .map(|w| {
                 let inputs = inputs.clone();
-                scope.spawn(move || w.run(&inputs))
+                scope.spawn(move || w.run(&inputs).expect("shard round"))
             })
             .collect();
         handles.into_iter().map(|h| h.join().expect("rank")).collect()
@@ -427,7 +435,7 @@ fn f32_runs_do_not_use_q8_frames() {
             .into_iter()
             .map(|w| {
                 let inputs = inputs.clone();
-                scope.spawn(move || w.run(&inputs))
+                scope.spawn(move || w.run(&inputs).expect("shard round"))
             })
             .collect();
         for h in handles {
