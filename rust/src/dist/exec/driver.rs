@@ -55,7 +55,7 @@ use crate::ops::{Interpreter, Tensor};
 use crate::quant::{CalibTable, Precision, QuantEngine, QuantRun};
 
 /// Default overall deadline for one cluster round trip.
-const DEFAULT_INFER_TIMEOUT: Duration = Duration::from_secs(300);
+pub(crate) const DEFAULT_INFER_TIMEOUT: Duration = Duration::from_secs(300);
 
 /// Cluster tunables beyond the partitioning knobs: execution threads, the
 /// shard-resident dataflow switch, failure-detection deadlines, and an
@@ -506,10 +506,25 @@ impl ClusterDriver {
             self.faults.failures.fetch_add(1, Ordering::Relaxed);
             let culprit = match failure.culprit {
                 Some(c) if c < state.world => c,
-                _ => bail!(
-                    "cluster inference failed with no identifiable culprit: {}",
-                    failure.message
-                ),
+                _ => {
+                    // No rank to drop (e.g. the driver's round deadline
+                    // lapsed with every rank still inside its own recv
+                    // deadline). The failed mesh holds a latched abort and
+                    // possibly stale frames, so stand up a fresh backend
+                    // at the same world size before surfacing the error —
+                    // one slow round must not brick a healthy cluster.
+                    if let Err(e) = self.rebuild_same(&mut state) {
+                        state.backend = Backend::Dead;
+                        return Err(e.context(format!(
+                            "rebuilding the cluster after a culprit-free failure ({})",
+                            failure.message
+                        )));
+                    }
+                    bail!(
+                        "cluster inference failed with no identifiable culprit: {}",
+                        failure.message
+                    );
+                }
             };
             eprintln!(
                 "cluster: rank {culprit} failed ({}); re-planning over {} survivor(s)",
@@ -602,6 +617,56 @@ impl ClusterDriver {
         Ok(())
     }
 
+    /// Stand up a fresh backend at the **same** world size, reusing the
+    /// current plan: the recovery for failures with no identifiable
+    /// culprit, where the old mesh is unusable (latched abort, stale
+    /// frames, possibly dead control links) but no rank deserves to be
+    /// dropped. Single-device fallbacks have no mesh to poison and are
+    /// left alone.
+    fn rebuild_same(&self, state: &mut DriverState) -> Result<()> {
+        if matches!(state.backend, Backend::Single(_) | Backend::Dead) {
+            return Ok(());
+        }
+        match &self.kind {
+            DriverKind::Local { .. } => {
+                // Clean transports: fault scripts apply to the initial
+                // build only. Replacing the backend drops the old cluster,
+                // which aborts its mesh and joins the old threads.
+                let cluster = LocalCluster::spawn(
+                    &self.graph,
+                    &state.plan,
+                    &self.master,
+                    &self.opts,
+                    self.calib.as_ref(),
+                    None,
+                    self.faults.clone(),
+                )?;
+                state.backend = Backend::Local(cluster);
+            }
+            DriverKind::Tcp { model, device_name } => {
+                let hosts = state.hosts.clone();
+                // Close the old control links first: workers wind the
+                // failed session down and accept the new one.
+                state.backend = Backend::Dead;
+                let cluster = dial_workers(
+                    &hosts,
+                    model,
+                    device_name,
+                    &self.graph,
+                    &state.plan,
+                    &self.master,
+                    self.calib.as_ref(),
+                    &self.opts,
+                    self.scheme,
+                    self.sync,
+                    self.precision,
+                )?;
+                state.backend = Backend::Tcp(cluster);
+            }
+        }
+        Ok(())
+    }
+
     fn single_engine(&self) -> Result<SingleEngine> {
         Ok(match &self.calib {
             Some(c) => {
@@ -619,10 +684,13 @@ impl ClusterDriver {
     }
 }
 
-/// One shard round's report: `(rank, result)`. Rank 0 always reports
-/// (its outputs are the round's result); other ranks report only
-/// failures.
-type RoundReport = (usize, Result<Vec<Tensor>, WorkerFailure>);
+/// One shard round's report: `(round id, rank, result)`. Rank 0 always
+/// reports (its outputs are the round's result); other ranks report only
+/// failures. The round id pairs reports with the submission they answer:
+/// a worker that was still executing a timed-out round can report late —
+/// after the driver has already moved on — and that stale report must
+/// never be taken as a later round's result.
+type RoundReport = (u64, usize, Result<Vec<Tensor>, WorkerFailure>);
 
 /// Local backend: worker threads + job/result channels. The channel pair
 /// sits behind one mutex held for a whole round (submit + result), so
@@ -640,7 +708,10 @@ struct LocalCluster {
 }
 
 struct LocalRound {
-    job_txs: Vec<Sender<Vec<Tensor>>>,
+    /// Id stamped on the next submitted round; monotonically increasing
+    /// over this cluster's lifetime so reports pair with submissions.
+    next_round: u64,
+    job_txs: Vec<Sender<(u64, Vec<Tensor>)>>,
     out_rx: Receiver<RoundReport>,
 }
 
@@ -661,7 +732,7 @@ impl LocalCluster {
         let mut handles = Vec::with_capacity(p);
         let mut stats = Vec::with_capacity(p);
         for (rank, transport) in mesh.into_iter().enumerate() {
-            let (job_tx, job_rx) = channel::<Vec<Tensor>>();
+            let (job_tx, job_rx) = channel::<(u64, Vec<Tensor>)>();
             let shard = ShardParams::extract(graph, plan, master, rank);
             // The rank quantizes its own shard; per-channel weight scales
             // (and the row offset anchoring the per-channel grids) make
@@ -694,7 +765,7 @@ impl LocalCluster {
             let handle = std::thread::Builder::new()
                 .name(format!("xenos-shard-{rank}"))
                 .spawn(move || {
-                    while let Ok(inputs) = job_rx.recv() {
+                    while let Ok((round, inputs)) = job_rx.recv() {
                         let res = catch_unwind(AssertUnwindSafe(|| worker.run(&inputs)));
                         let res: Result<Vec<Tensor>, WorkerFailure> = match res {
                             Ok(Ok(v)) => Ok(v),
@@ -707,7 +778,7 @@ impl LocalCluster {
                             Err(p) => Err(WorkerFailure::Panic(panic_message(p))),
                         };
                         if rank == 0 || res.is_err() {
-                            let _ = out_tx.send((rank, res));
+                            let _ = out_tx.send((round, rank, res));
                         }
                     }
                 })
@@ -716,7 +787,7 @@ impl LocalCluster {
             handles.push(handle);
         }
         Ok(LocalCluster {
-            round: Mutex::new(LocalRound { job_txs, out_rx }),
+            round: Mutex::new(LocalRound { next_round: 0, job_txs, out_rx }),
             handles,
             mesh: handle,
             stats,
@@ -735,12 +806,15 @@ impl LocalCluster {
         infer_timeout: Duration,
         faults: &FaultStats,
     ) -> Result<Vec<Tensor>, RoundFailure> {
-        let round = lock_recover(&self.round);
+        let mut round = lock_recover(&self.round);
+        let id = round.next_round;
+        round.next_round += 1;
         // A previous round that failed may have left late reports queued;
-        // drop stale ones so rounds stay paired.
+        // drop what already arrived (anything arriving later is filtered
+        // by its round id below).
         while round.out_rx.try_recv().is_ok() {}
         for tx in &round.job_txs {
-            if tx.send(inputs.to_vec()).is_err() {
+            if tx.send((id, inputs.to_vec())).is_err() {
                 return Err(RoundFailure {
                     culprit: None,
                     message: "cluster worker thread is gone".to_string(),
@@ -752,12 +826,17 @@ impl LocalCluster {
         loop {
             let wait = deadline.saturating_duration_since(Instant::now());
             match round.out_rx.recv_timeout(wait) {
-                Ok((rank, Ok(outs))) => {
+                // A late report from an earlier (failed) round: a worker
+                // that was still executing when that round was given up on
+                // answers eventually — its outputs belong to old inputs
+                // and must never decide this round.
+                Ok((rid, _, _)) if rid != id => {}
+                Ok((_, rank, Ok(outs))) => {
                     if rank == 0 {
                         return Ok(outs);
                     }
                 }
-                Ok((rank, Err(wf))) => {
+                Ok((_, rank, Err(wf))) => {
                     let f = round_failure(rank, wf);
                     // Keep the most informative failure (one naming a
                     // culprit beats a culprit-free abort echo).
@@ -856,6 +935,7 @@ fn dial_workers(
             peers: hosts.to_vec(),
             recv_timeout_ms: opts.recv_timeout.as_millis() as u32,
             heartbeat_ms: opts.heartbeat.map_or(0, |h| h.as_millis() as u32),
+            infer_timeout_ms: opts.infer_timeout.as_millis() as u32,
         };
         wire::write_frame(&mut sock, wire::CTRL_SPEC, &wire::encode_spec(&spec))?;
         let shard = ShardParams::extract(graph, plan, master, rank);
@@ -938,6 +1018,9 @@ impl Drop for TcpCluster {
 /// peer's death mid-round) ends cleanly and the worker accepts the next
 /// session — how survivors rejoin a re-planned cluster.
 pub fn serve_listener(listener: &TcpListener, sessions: Option<usize>) -> Result<()> {
+    // Pre-spec read deadline: a connection that never sends a job spec
+    // must be dropped, not allowed to wedge the accept loop.
+    const SPEC_TIMEOUT: Duration = Duration::from_secs(30);
     let mut served = 0usize;
     loop {
         if let Some(n) = sessions {
@@ -947,11 +1030,27 @@ pub fn serve_listener(listener: &TcpListener, sessions: Option<usize>) -> Result
         }
         let (mut ctrl, peer) = listener.accept().context("accepting driver connection")?;
         ctrl.set_nodelay(true)?;
-        let (tag, payload) = wire::read_frame(&mut ctrl).context("reading job spec")?;
-        if tag != wire::CTRL_SPEC {
-            bail!("driver at {peer} sent frame {tag:#x} before the job spec");
-        }
-        let spec = wire::decode_spec(&payload)?;
+        ctrl.set_read_timeout(Some(SPEC_TIMEOUT))?;
+        // A connection that is not a driver opening a session — a stale
+        // peer dial from a torn-down mesh, garbage, silence — is dropped
+        // and the worker keeps serving; it never counts as a session.
+        let spec = match wire::read_frame(&mut ctrl) {
+            Ok((wire::CTRL_SPEC, payload)) => match wire::decode_spec(&payload) {
+                Ok(spec) => spec,
+                Err(e) => {
+                    eprintln!("dist-worker: dropping {peer}: malformed job spec: {e:#}");
+                    continue;
+                }
+            },
+            Ok((tag, _)) => {
+                eprintln!("dist-worker: dropping {peer}: frame {tag:#x} before the job spec");
+                continue;
+            }
+            Err(e) => {
+                eprintln!("dist-worker: dropping {peer}: {e}");
+                continue;
+            }
+        };
         if let Err(e) = serve_session(listener, &mut ctrl, &spec) {
             // Tell the driver before giving up on the session.
             let msg = format!("{e:#}");
@@ -964,6 +1063,13 @@ pub fn serve_listener(listener: &TcpListener, sessions: Option<usize>) -> Result
 }
 
 fn serve_session(listener: &TcpListener, ctrl: &mut TcpStream, spec: &JobSpec) -> Result<()> {
+    // Bound every control-link read: a driver host that dies without an
+    // RST must not wedge this worker in `read_frame` forever. Peer links
+    // have heartbeats for that; the control link has this deadline — a
+    // generous multiple of the driver's round deadline, so an idle but
+    // healthy driver keeps the session.
+    ctrl.set_read_timeout(Some(spec.ctrl_deadline()))
+        .context("setting the control-link read deadline")?;
     let (tag, payload) = wire::read_frame(ctrl).context("reading shard parameters")?;
     anyhow::ensure!(tag == wire::CTRL_PARAMS, "expected params frame, got {tag:#x}");
     let params = ShardParams::from_nodes(wire::decode_params(&payload)?);

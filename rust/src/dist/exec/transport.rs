@@ -537,8 +537,21 @@ impl TcpTransport {
             wire::write_frame(&mut hello, wire::PEER_HELLO, &(rank as u32).to_le_bytes())?;
             sockets.push((q, stream));
         }
+        // Inbound ranks come off the wire (hello frames); a stale or
+        // malformed connection must fail the session, not the process.
         for (q, stream) in inbound {
-            assert!(q > rank && q < world, "inbound peer rank {q} out of range");
+            if q <= rank || q >= world {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("inbound peer rank {q} out of range for rank {rank} of {world}"),
+                ));
+            }
+            if sockets.iter().any(|(r, _)| *r == q) {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::InvalidData,
+                    format!("duplicate inbound connection for peer rank {q}"),
+                ));
+            }
             stream.set_nodelay(true)?;
             sockets.push((q, stream));
         }
@@ -724,15 +737,17 @@ impl Transport for TcpTransport {
 
 /// Accept loop helper for worker processes: keep accepting on `listener`
 /// until the hello of every expected inbound peer (ranks `> rank`, i.e.
-/// `world - 1 - rank` of them) has arrived. Non-hello first frames are a
-/// protocol error.
+/// `world - 1 - rank` of them) has arrived. Non-hello first frames and
+/// out-of-range or duplicate hello ranks (e.g. a stale dial from a
+/// previous failed session) are [`std::io::ErrorKind::InvalidData`]
+/// errors — they fail the session, never the process.
 pub(crate) fn accept_peers(
     listener: &TcpListener,
     rank: usize,
     world: usize,
 ) -> std::io::Result<Vec<(usize, TcpStream)>> {
     let expected = world - 1 - rank;
-    let mut peers = Vec::with_capacity(expected);
+    let mut peers: Vec<(usize, TcpStream)> = Vec::with_capacity(expected);
     while peers.len() < expected {
         let (mut sock, _) = listener.accept()?;
         let (tag, payload) = wire::read_frame(&mut sock)?;
@@ -743,6 +758,18 @@ pub(crate) fn accept_peers(
             ));
         }
         let q = u32::from_le_bytes(payload[..4].try_into().unwrap()) as usize;
+        if q <= rank || q >= world {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("peer hello rank {q} out of range for rank {rank} of {world}"),
+            ));
+        }
+        if peers.iter().any(|(r, _)| *r == q) {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("duplicate peer hello for rank {q}"),
+            ));
+        }
         peers.push((q, sock));
     }
     Ok(peers)
@@ -1066,6 +1093,59 @@ mod tests {
             other => panic!("expected abort, got {other:?}"),
         }
         t1.join().unwrap();
+    }
+
+    #[test]
+    fn out_of_range_hello_rank_is_invalid_data_not_a_panic() {
+        // A stale peer from a previous session announcing an impossible
+        // rank must fail the session with a typed io error.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let writer = std::thread::spawn(move || {
+            let mut s = TcpStream::connect(addr).unwrap();
+            wire::write_frame(&mut s, wire::PEER_HELLO, &(7u32).to_le_bytes()).unwrap();
+            std::thread::sleep(Duration::from_millis(200));
+        });
+        let err = accept_peers(&listener, 0, 2).expect_err("rank 7 of world 2 must error");
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        writer.join().unwrap();
+    }
+
+    #[test]
+    fn duplicate_hello_rank_is_invalid_data_not_a_panic() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let writer = std::thread::spawn(move || {
+            let socks: Vec<TcpStream> = (0..2)
+                .map(|_| {
+                    let mut s = TcpStream::connect(&addr).unwrap();
+                    wire::write_frame(&mut s, wire::PEER_HELLO, &(1u32).to_le_bytes()).unwrap();
+                    s
+                })
+                .collect();
+            // Keep both sockets open until the accept loop has seen them.
+            std::thread::sleep(Duration::from_millis(200));
+            drop(socks);
+        });
+        // World 3 at rank 0 expects hellos from ranks 1 and 2; two rank-1
+        // hellos must be rejected, not meshed.
+        let err = accept_peers(&listener, 0, 3).expect_err("duplicate rank must error");
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        writer.join().unwrap();
+    }
+
+    #[test]
+    fn transport_build_rejects_bad_inbound_rank_without_panicking() {
+        // with_options is handed pre-accepted sockets; garbage ranks must
+        // come back as io errors so serve_listener can fail the session.
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let dial = std::thread::spawn(move || TcpStream::connect(addr).unwrap());
+        let (sock, _) = listener.accept().unwrap();
+        let err = TcpTransport::new(0, 2, &[], vec![(5, sock)])
+            .expect_err("inbound rank 5 of world 2 must error");
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidData);
+        dial.join().unwrap();
     }
 
     #[test]

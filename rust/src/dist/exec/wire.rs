@@ -263,6 +263,10 @@ pub struct JobSpec {
     /// Peer-link heartbeat interval, in milliseconds (0 = heartbeats and
     /// liveness-based death detection disabled).
     pub heartbeat_ms: u32,
+    /// The driver's per-round deadline, in milliseconds (0 = the driver
+    /// default). Workers derive their control-link read deadline from it
+    /// ([`JobSpec::ctrl_deadline`]).
+    pub infer_timeout_ms: u32,
 }
 
 impl JobSpec {
@@ -279,6 +283,24 @@ impl JobSpec {
     pub fn heartbeat(&self) -> Option<std::time::Duration> {
         (self.heartbeat_ms > 0)
             .then(|| std::time::Duration::from_millis(self.heartbeat_ms as u64))
+    }
+
+    /// The driver's per-round deadline this spec configures.
+    pub fn infer_timeout(&self) -> std::time::Duration {
+        if self.infer_timeout_ms == 0 {
+            super::driver::DEFAULT_INFER_TIMEOUT
+        } else {
+            std::time::Duration::from_millis(self.infer_timeout_ms as u64)
+        }
+    }
+
+    /// Read deadline for the worker-side control link: a generous
+    /// multiple of the round deadline. Peer links have heartbeats to
+    /// detect a silent death; the control link has this bound instead, so
+    /// a driver host that dies without an RST cannot wedge the worker in
+    /// a control read forever (it times out and accepts a new session).
+    pub fn ctrl_deadline(&self) -> std::time::Duration {
+        self.infer_timeout() * 4
     }
 }
 
@@ -348,6 +370,7 @@ pub(crate) fn encode_spec(spec: &JobSpec) -> Vec<u8> {
     }
     e.u32(spec.recv_timeout_ms);
     e.u32(spec.heartbeat_ms);
+    e.u32(spec.infer_timeout_ms);
     e.buf
 }
 
@@ -369,6 +392,7 @@ pub(crate) fn decode_spec(payload: &[u8]) -> Result<JobSpec> {
     }
     let recv_timeout_ms = d.u32()?;
     let heartbeat_ms = d.u32()?;
+    let infer_timeout_ms = d.u32()?;
     Ok(JobSpec {
         model,
         device,
@@ -382,6 +406,7 @@ pub(crate) fn decode_spec(payload: &[u8]) -> Result<JobSpec> {
         peers,
         recv_timeout_ms,
         heartbeat_ms,
+        infer_timeout_ms,
     })
 }
 
@@ -508,11 +533,14 @@ mod tests {
             peers: vec!["127.0.0.1:7001".into(), "127.0.0.1:7002".into()],
             recv_timeout_ms: 2500,
             heartbeat_ms: 100,
+            infer_timeout_ms: 9000,
         };
         let got = decode_spec(&encode_spec(&spec)).unwrap();
         assert_eq!(got, spec);
         assert_eq!(got.recv_timeout(), std::time::Duration::from_millis(2500));
         assert_eq!(got.heartbeat(), Some(std::time::Duration::from_millis(100)));
+        assert_eq!(got.infer_timeout(), std::time::Duration::from_millis(9000));
+        assert_eq!(got.ctrl_deadline(), std::time::Duration::from_millis(36000));
     }
 
     #[test]
@@ -554,6 +582,7 @@ mod tests {
             peers: vec![],
             recv_timeout_ms: 0,
             heartbeat_ms: 0,
+            infer_timeout_ms: 0,
         });
         assert!(decode_spec(&enc[..enc.len() - 2]).is_err());
     }

@@ -384,6 +384,51 @@ fn tcp_loopback_smoke_round_trips_a_model() {
 }
 
 #[test]
+fn stale_peer_connection_does_not_kill_or_consume_a_worker_session() {
+    // A stray connection speaking the peer-mesh protocol — e.g. a dial
+    // left over from a torn-down session — must be dropped by
+    // serve_listener without consuming the session budget or killing the
+    // worker; a real driver session afterwards still completes.
+    use std::io::Write;
+    use std::net::TcpStream;
+
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr").to_string();
+    let server = std::thread::spawn(move || serve_listener(&listener, Some(1)));
+
+    let mut stale = TcpStream::connect(&addr).expect("stale connect");
+    // A hand-rolled PEER_HELLO frame ([tag u64][len u32][rank u32], LE) —
+    // the first thing a meshing peer, not a driver, would send.
+    let mut frame = Vec::new();
+    frame.extend_from_slice(&xenos::dist::exec::wire::PEER_HELLO.to_le_bytes());
+    frame.extend_from_slice(&4u32.to_le_bytes());
+    frame.extend_from_slice(&1u32.to_le_bytes());
+    stale.write_all(&frame).expect("stale hello");
+    drop(stale);
+    std::thread::sleep(std::time::Duration::from_millis(100));
+
+    let driver = ClusterDriver::tcp(
+        &[addr],
+        "lstm",
+        "tms320c6678",
+        PartitionScheme::OutC,
+        SyncMode::Ring,
+        1,
+    )
+    .expect("driver connects after the stale connection was dropped");
+    let g = models::lstm();
+    let inputs = synthetic_inputs(&g, 81);
+    let want = Interpreter::new(&g).run(&inputs);
+    let got = driver.infer(&inputs).expect("tcp inference");
+    assert_eq!(got.len(), want.len());
+    for (a, b) in want.iter().zip(&got) {
+        assert_eq!(a.data, b.data, "single-worker tcp cluster diverged");
+    }
+    drop(driver); // sends shutdown; the one real session ends
+    server.join().expect("worker thread").expect("worker served the real session");
+}
+
+#[test]
 #[ignore = "slow in debug; run with --release -- --ignored"]
 fn mobilenet_and_resnet_match_serial_across_schemes_and_sizes() {
     // The acceptance matrix: MobileNet + ResNet, outC/inH/mix, p ∈ {1,2,4}.

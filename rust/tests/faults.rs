@@ -243,3 +243,49 @@ fn successive_rounds_after_recovery_stay_exact() {
     assert_eq!(f.replans, 1, "fault observed exactly once: {f:?}");
     assert_eq!(driver.world(), 2);
 }
+
+/// A culprit-free failure — the driver's round deadline lapses while
+/// every rank is still blocked inside its own (longer) recv deadline —
+/// must surface as an error for that round but *not* poison the
+/// cluster: the driver rebuilds the mesh at the same world size and the
+/// next round succeeds bit-exactly.
+#[test]
+fn driver_deadline_lapse_does_not_brick_the_cluster() {
+    let g = fault_cnn();
+    let (inputs, want) = serial_reference(&g, 78);
+    // Rank 1 stalls 1.2s mid-round; the per-recv deadline (30s) never
+    // fires, so no rank can be blamed — only the driver's 200ms round
+    // deadline trips.
+    let fault = FaultScript::delay(1, 2, Duration::from_millis(1200));
+    let d = presets::tms320c6678();
+    let opts = ClusterOptions {
+        recv_timeout: Duration::from_secs(30),
+        infer_timeout: Duration::from_millis(200),
+        fault: Some(fault),
+        ..ClusterOptions::default()
+    };
+    let driver = ClusterDriver::local_with(
+        Arc::new(g.clone()),
+        &d,
+        3,
+        PartitionScheme::OutC,
+        SyncMode::Ring,
+        opts,
+        None,
+    )
+    .expect("cluster spins up");
+
+    let err = driver.infer(&inputs).expect_err("round deadline must fail this round");
+    assert!(err.to_string().contains("no identifiable culprit"), "err: {err:#}");
+    assert_eq!(driver.world(), 3, "no rank was blamed or dropped");
+
+    // The rebuilt mesh gets a clean transport (fault scripts only apply
+    // to the initial build), so subsequent rounds are exact.
+    for round in 0..2 {
+        let got = driver.infer(&inputs).expect("post-rebuild inference");
+        assert_outputs_identical(&want, &got, &format!("post-rebuild round {round}"));
+    }
+    let f = driver.fault_stats();
+    assert!(f.failures >= 1, "{f:?}");
+    assert_eq!(f.fallbacks, 0, "{f:?}");
+}
