@@ -7,6 +7,10 @@
 //! The `exec:` section is the tentpole comparison: the same graphs run
 //! through the serial `Interpreter` and through the `ParInterpreter`
 //! (DOS split on a worker pool), with the speedup printed per pair.
+//!
+//! Pass `--out BENCH_kernels.json` (after `cargo bench -- `) or set
+//! `BENCH_OUT` to also write the machine-readable suite document
+//! (schema `xenos-bench-v1`) that pins the perf trajectory per PR.
 
 use std::sync::Arc;
 
@@ -17,36 +21,48 @@ use xenos::opt;
 use xenos::serve::{Batcher, BatcherConfig, Coordinator, ServeConfig};
 use xenos::sim::cache::{pointwise_consumer_trace, CacheSim};
 use xenos::sim::cost::node_cost;
-use xenos::util::bench::bench;
+use xenos::util::bench::{bench, BenchSet};
 use xenos::util::rng::Rng;
 
 /// Executor workers used for the parallel arms (the TMS preset's unit
 /// count is 8; 4 matches the acceptance comparison and most CI hosts).
 const PAR_WORKERS: usize = 4;
 
+/// `--out PATH` (after `cargo bench -- `) or the `BENCH_OUT` env var.
+fn out_path() -> Option<String> {
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--out" {
+            return args.next();
+        }
+    }
+    std::env::var("BENCH_OUT").ok()
+}
+
 fn main() {
     let mut rng = Rng::new(77);
+    let mut set = BenchSet::new("kernels");
 
     // --- ops: conv kernels (interpreter hot loop) -----------------------
     let x = Tensor::fm(1, 64, 56, 56, rng.vec_uniform(64 * 56 * 56));
     let a3 = ConvAttrs::std(64, 64, 3, 1, 1);
     let w3 = rng.vec_uniform(a3.weight_count() as usize);
-    bench("ops::conv2d 3x3 64->64 @56", 1, 8, || conv::conv2d(&x, &a3, &w3, &[]).data.len());
+    set.bench("ops::conv2d 3x3 64->64 @56", 1, 8, || conv::conv2d(&x, &a3, &w3, &[]).data.len());
 
     let a1 = ConvAttrs::std(64, 128, 1, 1, 0);
     let w1 = rng.vec_uniform(a1.weight_count() as usize);
-    bench("ops::conv2d 1x1 64->128 @56 (packed)", 1, 8, || {
+    set.bench("ops::conv2d 1x1 64->128 @56 (packed)", 1, 8, || {
         conv::conv2d(&x, &a1, &w1, &[]).data.len()
     });
 
     let adw = ConvAttrs::depthwise(64, 3, 1, 1);
     let wdw = rng.vec_uniform(adw.weight_count() as usize);
-    bench("ops::conv2d dw3x3 64 @56", 2, 10, || conv::conv2d(&x, &adw, &wdw, &[]).data.len());
+    set.bench("ops::conv2d dw3x3 64 @56", 2, 10, || conv::conv2d(&x, &adw, &wdw, &[]).data.len());
 
     // --- ops: matmul (packed panel + register tiling) --------------------
     let ma = Tensor::mat(128, 512, rng.vec_uniform(128 * 512));
     let mb = Tensor::mat(512, 512, rng.vec_uniform(512 * 512));
-    bench("ops::matmul 128x512x512 (packed)", 2, 20, || matmul::matmul(&ma, &mb).data.len());
+    set.bench("ops::matmul 128x512x512 (packed)", 2, 20, || matmul::matmul(&ma, &mb).data.len());
 
     // --- tentpole: serial vs parallel plan executor ----------------------
     let device = presets::tms320c6678();
@@ -72,6 +88,8 @@ fn main() {
         s_conv_ser.mean / s_conv_par.mean,
         conv_par.workers()
     );
+    set.push("exec: conv3x3 64->64 @56 serial", s_conv_ser);
+    set.push("exec: conv3x3 64->64 @56 par x4", s_conv_par);
 
     // Weighted FC 2048->2048 — the packed panel under a column split.
     let fc_graph = Arc::new({
@@ -88,6 +106,8 @@ fn main() {
     let s_fc_par =
         bench("exec: fc 8x2048x2048 par x4", 1, 10, || fc_par.run(&fc_inputs).len());
     println!("  -> fc split speedup x{:.2}", s_fc_ser.mean / s_fc_par.mean);
+    set.push("exec: fc 8x2048x2048 serial", s_fc_ser);
+    set.push("exec: fc 8x2048x2048 par x4", s_fc_par);
 
     // End-to-end MobileNet inference — the acceptance-criterion model.
     let mn = Arc::new(models::mobilenet());
@@ -105,6 +125,8 @@ fn main() {
         reused,
         allocated
     );
+    set.push("exec: mobilenet e2e serial", s_mn_ser);
+    set.push("exec: mobilenet e2e par x4", s_mn_par);
 
     // --- full interpreter on the AOT-equivalent block --------------------
     let small = {
@@ -120,11 +142,11 @@ fn main() {
     };
     let interp = Interpreter::new(&small);
     let inputs = synthetic_inputs(&small, 3);
-    bench("interp: serve-block forward", 2, 50, || interp.run(&inputs).len());
+    set.bench("interp: serve-block forward", 2, 50, || interp.run(&inputs).len());
 
     // --- cache simulator --------------------------------------------------
     let trace = pointwise_consumer_trace(DataLayout::Chw, 64, 112, 112);
-    bench("cache-sim 800K strided accesses", 1, 10, || {
+    set.bench("cache-sim 800K strided accesses", 1, 10, || {
         let mut c = CacheSim::new(32 * 1024, 64, 4);
         c.run(trace.iter().copied());
         c.misses
@@ -133,9 +155,9 @@ fn main() {
     // --- optimizer + cost model -------------------------------------------
     let g = models::resnet101();
     let d = presets::tms320c6678();
-    bench("opt::auto resnet101 (418 nodes)", 1, 10, || opt::auto(&g, &d).fused);
+    set.bench("opt::auto resnet101 (418 nodes)", 1, 10, || opt::auto(&g, &d).fused);
     let o = opt::auto(&g, &d);
-    bench("cost-model full resnet101 sweep", 2, 50, || {
+    set.bench("cost-model full resnet101 sweep", 2, 50, || {
         o.graph
             .nodes
             .iter()
@@ -151,7 +173,7 @@ fn main() {
         b.output(r);
         b.finish()
     });
-    bench("coordinator: 128 requests through 2 workers", 1, 10, || {
+    set.bench("coordinator: 128 requests through 2 workers", 1, 10, || {
         let sg = serve_graph.clone();
         Coordinator::new(ServeConfig {
             workers: 2,
@@ -175,7 +197,7 @@ fn main() {
     });
 
     // --- batcher in isolation ----------------------------------------------
-    bench("batcher: form 64 batches of 8", 2, 20, || {
+    set.bench("batcher: form 64 batches of 8", 2, 20, || {
         let (tx, rx) = std::sync::mpsc::channel();
         for id in 0..512u64 {
             tx.send(xenos::serve::Request {
@@ -196,4 +218,8 @@ fn main() {
         }
         n
     });
+
+    if let Some(path) = out_path() {
+        set.write(&path).expect("writing bench document");
+    }
 }

@@ -1,0 +1,91 @@
+//! Serving load benchmark — the coordinator under a sustained synthetic
+//! request stream, reported per stage: queue wait, batch assembly, engine
+//! execution, and end-to-end latency, for the serial and the parallel
+//! zoo-model engines.
+//!
+//! Pass `--out BENCH_serve.json` (after `cargo bench -- `) or set
+//! `BENCH_OUT` to also write the machine-readable suite document
+//! (schema `xenos-bench-v1`) that pins the serving-perf trajectory per PR.
+
+use std::sync::Arc;
+
+use xenos::graph::{GraphBuilder, Shape};
+use xenos::hw::presets;
+use xenos::runtime::Engine;
+use xenos::serve::{coordinator::synthetic_requests, BatcherConfig, Coordinator, ServeConfig};
+use xenos::util::bench::BenchSet;
+use xenos::util::human_time;
+
+/// `--out PATH` (after `cargo bench -- `) or the `BENCH_OUT` env var.
+fn out_path() -> Option<String> {
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        if a == "--out" {
+            return args.next();
+        }
+    }
+    std::env::var("BENCH_OUT").ok()
+}
+
+/// The small CNN block every serving worker executes.
+fn serve_block() -> xenos::Graph {
+    let mut b = GraphBuilder::new("serve_block");
+    let x = b.input("x", Shape::nchw(1, 16, 16, 16));
+    let c1 = b.conv_bn_relu("c1", x, 32, 3, 1, 1);
+    let p = b.avgpool("p", c1, 2, 2);
+    let f = b.fc("fc", p, 10);
+    let s = b.softmax("sm", f);
+    b.output(s);
+    b.finish()
+}
+
+fn main() {
+    let mut set = BenchSet::new("serve");
+    let g = Arc::new(serve_block());
+    let shapes: Vec<Shape> =
+        g.input_ids().iter().map(|&i| g.node(i).out.shape.clone()).collect();
+
+    for (label, threads) in [("interp", 1usize), ("par x2", 2)] {
+        let cfg = ServeConfig {
+            workers: 2,
+            engine_threads: threads,
+            batcher: BatcherConfig {
+                max_batch: 8,
+                max_wait: std::time::Duration::from_millis(1),
+            },
+            ..Default::default()
+        };
+        let gg = g.clone();
+        let report = Coordinator::new(cfg)
+            .run(
+                move |_w| {
+                    Ok(if threads > 1 {
+                        let d = presets::tms320c6678();
+                        Engine::par_interp(gg.clone(), &d, threads)
+                    } else {
+                        Engine::interp(gg.clone())
+                    })
+                },
+                synthetic_requests(shapes.clone(), 256, 0.0, 9),
+            )
+            .expect("serve run");
+        println!(
+            "serve[{label}]: {} requests at {:.1} req/s — latency p50 {}, exec p50 {}, \
+             queue p50 {}, assembly p50 {}",
+            report.served,
+            report.throughput,
+            human_time(report.latency.p50),
+            human_time(report.exec.p50),
+            human_time(report.queue.p50),
+            human_time(report.assembly.p50),
+        );
+        set.push(&format!("serve[{label}]: latency"), report.latency);
+        set.push(&format!("serve[{label}]: exec"), report.exec);
+        set.push(&format!("serve[{label}]: queue"), report.queue);
+        set.push(&format!("serve[{label}]: assembly"), report.assembly);
+    }
+
+    if let Some(path) = out_path() {
+        set.write(&path).expect("writing bench document");
+    }
+}

@@ -50,6 +50,7 @@ use super::worker::{ShardWorker, SyncSnapshot, SyncStats};
 use crate::dist::{PartitionScheme, SyncMode};
 use crate::graph::{models, Graph, Shape};
 use crate::hw::{self, DeviceModel};
+use crate::obs::{metrics, trace, Json};
 use crate::ops::params::ParamStore;
 use crate::ops::{Interpreter, Tensor};
 use crate::quant::{CalibTable, Precision, QuantEngine, QuantRun};
@@ -440,6 +441,47 @@ impl ClusterDriver {
         }
     }
 
+    /// Publish the driver's counters to the global metrics registry under
+    /// the `cluster.*` naming scheme (see [`crate::obs::metrics`]):
+    /// measured sync counters (`cluster.sync.*`, local backends), planner
+    /// accounting (`cluster.plan.*`) and fault-handling counters
+    /// (`cluster.faults.*`). Call at snapshot points — end of a run,
+    /// `--metrics-out`, the profile verb.
+    pub fn publish_metrics(&self) {
+        if let Some(s) = self.sync_stats() {
+            metrics::counter_set("cluster.sync.all_gathers", s.all_gathers);
+            metrics::counter_set("cluster.sync.gathers_skipped", s.gathers_skipped);
+            metrics::counter_set("cluster.sync.reduce_scatters", s.reduce_scatters);
+            metrics::counter_set("cluster.sync.halo_exchanges", s.halo_exchanges);
+            metrics::counter_set("cluster.sync.bytes", s.sync_bytes);
+        }
+        let acc = self.plan().accounting(&self.graph);
+        metrics::counter_set("cluster.plan.all_gathers", acc.all_gathers as u64);
+        metrics::counter_set("cluster.plan.gathers_skipped", acc.gathers_skipped as u64);
+        metrics::counter_set("cluster.plan.reduce_scatters", acc.reduce_scatters as u64);
+        metrics::counter_set("cluster.plan.sync_bytes", acc.sync_bytes);
+        metrics::counter_set("cluster.plan.gathered_bytes", acc.gathered_bytes);
+        let f = self.fault_stats();
+        metrics::counter_set("cluster.faults.failures", f.failures);
+        metrics::counter_set("cluster.faults.aborts", f.aborts);
+        metrics::counter_set("cluster.faults.replans", f.replans);
+        metrics::counter_set("cluster.faults.retries", f.retries);
+        metrics::counter_set("cluster.faults.fallbacks", f.fallbacks);
+        metrics::gauge_set("cluster.world", self.world() as f64);
+    }
+
+    /// Drain the trace spans held by remote workers (TCP backends),
+    /// already shifted onto the driver's span clock via the offsets
+    /// estimated at dial time. Local backends record into this process's
+    /// recorder directly, so this returns an empty list for them —
+    /// callers combine the result with [`crate::obs::trace::drain`].
+    pub fn fetch_remote_spans(&self) -> Result<Vec<trace::SpanEvent>> {
+        match &lock_recover(&self.state).backend {
+            Backend::Tcp(c) => c.fetch_traces(),
+            _ => Ok(Vec::new()),
+        }
+    }
+
     /// Input shapes of the model.
     pub fn input_shapes(&self) -> Vec<Shape> {
         self.graph
@@ -487,6 +529,9 @@ impl ClusterDriver {
     /// terminal (no identifiable culprit, or the rebuild itself failed) —
     /// never panics crossing the API.
     pub fn infer(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        // One span per round trip (re-plan retries included): the driver's
+        // row in the merged cluster timeline.
+        let _round_sp = trace::span("round", trace::Cat::Round);
         let mut state = lock_recover(&self.state);
         loop {
             let failure = match &state.backend {
@@ -526,7 +571,7 @@ impl ClusterDriver {
                     );
                 }
             };
-            eprintln!(
+            crate::xwarn!(
                 "cluster: rank {culprit} failed ({}); re-planning over {} survivor(s)",
                 failure.message,
                 state.world - 1
@@ -932,6 +977,7 @@ fn dial_workers(
             sync,
             precision,
             resident: opts.resident,
+            trace: trace::enabled(),
             peers: hosts.to_vec(),
             recv_timeout_ms: opts.recv_timeout.as_millis() as u32,
             heartbeat_ms: opts.heartbeat.map_or(0, |h| h.as_millis() as u32),
@@ -945,7 +991,27 @@ fn dial_workers(
         }
         ctrls.push(sock);
     }
-    Ok(TcpCluster { ctrls: Mutex::new(ctrls) })
+    // Clock-offset probes run only after every spec has shipped: workers
+    // answer control frames once their peer mesh is standing, and the mesh
+    // forms only when all ranks have their specs.
+    let mut offsets_us = vec![0i64; p];
+    if trace::enabled() {
+        for (rank, sock) in ctrls.iter_mut().enumerate() {
+            let t0 = trace::now_us();
+            wire::write_frame(sock, wire::CTRL_CLOCK, &t0.to_le_bytes())
+                .with_context(|| format!("clock probe to worker {rank}"))?;
+            let (tag, payload) = wire::read_frame(sock)
+                .with_context(|| format!("clock reply from worker {rank}"))?;
+            anyhow::ensure!(tag == wire::CTRL_CLOCK, "expected clock frame, got {tag:#x}");
+            anyhow::ensure!(payload.len() == 8, "malformed clock reply from worker {rank}");
+            let theirs = u64::from_le_bytes(payload[..8].try_into().unwrap());
+            let t1 = trace::now_us();
+            // Symmetric-delay estimate: assume the worker read its clock
+            // halfway through the exchange.
+            offsets_us[rank] = theirs as i64 - ((t0 + t1) / 2) as i64;
+        }
+    }
+    Ok(TcpCluster { ctrls: Mutex::new(ctrls), offsets_us })
 }
 
 /// TCP backend: one control socket per worker, all behind the driver's
@@ -953,9 +1019,33 @@ fn dial_workers(
 /// process rounds in lockstep).
 struct TcpCluster {
     ctrls: Mutex<Vec<TcpStream>>,
+    /// Per-rank clock offsets (worker span clock minus driver span clock,
+    /// in µs), estimated over the control handshake at dial time. All
+    /// zeros when tracing was off at dial time.
+    offsets_us: Vec<i64>,
 }
 
 impl TcpCluster {
+    /// Drain every worker's recorded spans over the control link and shift
+    /// them onto the driver's span clock.
+    fn fetch_traces(&self) -> Result<Vec<trace::SpanEvent>> {
+        let mut ctrls = lock_recover(&self.ctrls);
+        let mut all = Vec::new();
+        for (rank, sock) in ctrls.iter_mut().enumerate() {
+            wire::write_frame(sock, wire::CTRL_TRACE, &[])
+                .with_context(|| format!("requesting trace from worker {rank}"))?;
+            let (tag, payload) = wire::read_frame(sock)
+                .with_context(|| format!("reading trace from worker {rank}"))?;
+            anyhow::ensure!(tag == wire::CTRL_TRACE, "expected trace frame, got {tag:#x}");
+            let text =
+                std::str::from_utf8(&payload).context("trace payload is not valid UTF-8")?;
+            let mut events = trace::events_from_json(&Json::parse(text)?)?;
+            trace::shift_ts(&mut events, -self.offsets_us[rank]);
+            all.append(&mut events);
+        }
+        Ok(all)
+    }
+
     fn infer(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, RoundFailure> {
         let mut ctrls = lock_recover(&self.ctrls);
         let fail = |rank: usize, message: String| RoundFailure { culprit: Some(rank), message };
@@ -1038,16 +1128,16 @@ pub fn serve_listener(listener: &TcpListener, sessions: Option<usize>) -> Result
             Ok((wire::CTRL_SPEC, payload)) => match wire::decode_spec(&payload) {
                 Ok(spec) => spec,
                 Err(e) => {
-                    eprintln!("dist-worker: dropping {peer}: malformed job spec: {e:#}");
+                    crate::xwarn!("dist-worker: dropping {peer}: malformed job spec: {e:#}");
                     continue;
                 }
             },
             Ok((tag, _)) => {
-                eprintln!("dist-worker: dropping {peer}: frame {tag:#x} before the job spec");
+                crate::xwarn!("dist-worker: dropping {peer}: frame {tag:#x} before the job spec");
                 continue;
             }
             Err(e) => {
-                eprintln!("dist-worker: dropping {peer}: {e}");
+                crate::xwarn!("dist-worker: dropping {peer}: {e}");
                 continue;
             }
         };
@@ -1056,7 +1146,12 @@ pub fn serve_listener(listener: &TcpListener, sessions: Option<usize>) -> Result
             let msg = format!("{e:#}");
             let _ =
                 wire::write_frame(&mut ctrl, wire::CTRL_ERR, &wire::encode_abort(None, &msg));
-            eprintln!("dist-worker session failed: {msg}");
+            crate::xerror!("dist-worker session failed: {msg}");
+        }
+        if spec.trace {
+            // Recorder state must not leak into the next session.
+            trace::set_enabled(false);
+            trace::clear();
         }
         served += 1;
     }
@@ -1070,6 +1165,12 @@ fn serve_session(listener: &TcpListener, ctrl: &mut TcpStream, spec: &JobSpec) -
     // healthy driver keeps the session.
     ctrl.set_read_timeout(Some(spec.ctrl_deadline()))
         .context("setting the control-link read deadline")?;
+    if spec.trace {
+        // The driver asked for spans: record this session, tagged with our
+        // rank's timeline lane (serve_listener resets this on exit).
+        trace::set_enabled(true);
+        trace::set_lane(spec.rank as u32);
+    }
     let (tag, payload) = wire::read_frame(ctrl).context("reading shard parameters")?;
     anyhow::ensure!(tag == wire::CTRL_PARAMS, "expected params frame, got {tag:#x}");
     let params = ShardParams::from_nodes(wire::decode_params(&payload)?);
@@ -1155,6 +1256,15 @@ fn serve_session(listener: &TcpListener, ctrl: &mut TcpStream, spec: &JobSpec) -
                         bail!("inference round panicked: {msg}");
                     }
                 }
+            }
+            wire::CTRL_CLOCK => {
+                // Clock-offset probe: answer with this process's span
+                // clock (the driver computes the offset).
+                wire::write_frame(ctrl, wire::CTRL_CLOCK, &trace::now_us().to_le_bytes())?;
+            }
+            wire::CTRL_TRACE => {
+                let doc = trace::events_to_json(&trace::drain()).to_string();
+                wire::write_frame(ctrl, wire::CTRL_TRACE, doc.as_bytes())?;
             }
             wire::CTRL_SHUTDOWN => return Ok(()),
             other => bail!("unexpected control frame {other:#x}"),

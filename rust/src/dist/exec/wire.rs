@@ -44,6 +44,17 @@ pub const CTRL_HEARTBEAT: u64 = 0xFFFF_0018;
 /// Receivers latch it so every blocked or future recv fails fast instead
 /// of waiting out its deadline.
 pub const CTRL_ABORT: u64 = 0xFFFF_0019;
+/// Driver → worker: clock-offset probe; payload = the driver's epoch
+/// timestamp in µs (u64 LE). The worker answers with its own span-clock
+/// timestamp in the same format. The driver brackets the exchange with
+/// two local readings and estimates the worker's clock offset as
+/// `worker_now - (t0 + t1) / 2` — the classic symmetric-delay estimate —
+/// so per-rank trace timelines merge onto one time axis.
+pub const CTRL_CLOCK: u64 = 0xFFFF_001A;
+/// Driver → worker: drain and return the worker's recorded trace spans;
+/// the reply payload is the UTF-8 JSON interchange form
+/// ([`crate::obs::trace::events_to_json`]).
+pub const CTRL_TRACE: u64 = 0xFFFF_001B;
 
 /// Frame-kind flag for peer-link tags: the payload is raw i8 (quantized
 /// activations), **one byte per element on the wire** — the quantized
@@ -255,6 +266,10 @@ pub struct JobSpec {
     /// all-gathering them. Ships in the spec so every rank cuts the
     /// identical plan.
     pub resident: bool,
+    /// Span recording: when set, the worker enables its trace recorder for
+    /// this session and answers [`CTRL_TRACE`] drains with its buffered
+    /// spans (the driver merges them into one cluster timeline).
+    pub trace: bool,
     /// Listen addresses of all ranks, in rank order.
     pub peers: Vec<String>,
     /// Per-recv deadline on peer links, in milliseconds (0 = the
@@ -364,6 +379,7 @@ pub(crate) fn encode_spec(spec: &JobSpec) -> Vec<u8> {
     e.u32(sync_to_u8(spec.sync) as u32);
     e.u32(precision_to_u8(spec.precision) as u32);
     e.u32(u32::from(spec.resident));
+    e.u32(u32::from(spec.trace));
     e.u32(spec.peers.len() as u32);
     for p in &spec.peers {
         e.str(p);
@@ -385,6 +401,7 @@ pub(crate) fn decode_spec(payload: &[u8]) -> Result<JobSpec> {
     let sync = sync_from_u8(d.u32()? as u8)?;
     let precision = precision_from_u8(d.u32()? as u8)?;
     let resident = d.u32()? != 0;
+    let trace = d.u32()? != 0;
     let n = d.u32()? as usize;
     let mut peers = Vec::with_capacity(n);
     for _ in 0..n {
@@ -403,6 +420,7 @@ pub(crate) fn decode_spec(payload: &[u8]) -> Result<JobSpec> {
         sync,
         precision,
         resident,
+        trace,
         peers,
         recv_timeout_ms,
         heartbeat_ms,
@@ -530,6 +548,7 @@ mod tests {
             sync: SyncMode::Ps,
             precision: Precision::Int8,
             resident: false,
+            trace: true,
             peers: vec!["127.0.0.1:7001".into(), "127.0.0.1:7002".into()],
             recv_timeout_ms: 2500,
             heartbeat_ms: 100,
@@ -579,6 +598,7 @@ mod tests {
             sync: SyncMode::Ring,
             precision: Precision::F32,
             resident: true,
+            trace: false,
             peers: vec![],
             recv_timeout_ms: 0,
             heartbeat_ms: 0,

@@ -51,6 +51,7 @@ use super::transport::{Transport, TransportError, TransportResult, WireScalar};
 use super::wire;
 use crate::dist::{ps, ring, SyncMode};
 use crate::graph::{ConvAttrs, DType, Graph, Node, NodeId, OpKind, PoolAttrs, Shape, TensorDesc};
+use crate::obs::trace;
 use crate::ops::interp::exec_node;
 use crate::ops::params::NodeParams;
 use crate::ops::{conv, elementwise as ew, matmul, pool as pooling, shape_ops, Tensor};
@@ -319,6 +320,11 @@ impl ShardWorker {
     /// blocked in a collective; ranks that *receive* an abort return it
     /// without re-broadcasting.
     pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, TransportError> {
+        if trace::enabled() {
+            // Tag this rank's spans (and those of pool jobs it submits)
+            // with its own timeline lane for the merged per-rank trace.
+            trace::set_lane(self.rank() as u32);
+        }
         match self.run_inner(inputs) {
             Ok(v) => Ok(v),
             Err(e) => {
@@ -385,6 +391,9 @@ impl ShardWorker {
                             }
                         }
                         let prm = self.params.get(node.id);
+                        // Compute span opens after the gathers above, so
+                        // compute/wait time never overlaps in the trace.
+                        let _sp = trace::span(&node.name, trace::Cat::Compute);
                         match &self.quant {
                             Some(qrun) => {
                                 let args = q_refs(&vals, node);
@@ -461,6 +470,7 @@ impl ShardWorker {
         axis: Axis,
     ) -> TransportResult<ShardVal> {
         self.prepare_spatial_inputs(vals, node, axis)?;
+        let _sp = trace::span(&node.name, trace::Cat::Compute);
         Ok(match &self.quant {
             Some(qrun) => ShardVal::QSharded(self.exec_spatial_q8(vals, node, axis, qrun), axis),
             None => {
@@ -474,6 +484,12 @@ impl ShardWorker {
     /// sync mode — payload-generic: f32 activations or raw i8 codes
     /// (quantized runs; `base_tag` must carry [`wire::TAG_Q8`]).
     fn all_gather<P: WireScalar>(&self, mine: Vec<P>, base_tag: u64) -> TransportResult<Vec<Vec<P>>> {
+        // Wait span: time blocked in the collective, tagged with the bytes
+        // this rank contributed.
+        let mut sp = trace::span("all_gather", trace::Cat::Wait);
+        if let Some(sp) = sp.as_mut() {
+            sp.add_bytes((mine.len() * std::mem::size_of::<P>()) as u64);
+        }
         match self.plan.sync {
             SyncMode::Ring => ring::ring_all_gather_tp(&*self.transport, mine, base_tag),
             SyncMode::Ps => ps::ps_all_gather_tp(&*self.transport, mine, base_tag),
@@ -685,6 +701,7 @@ impl ShardWorker {
             needed_range(consumer, olo, ohi, in_extent, axis)
         };
         self.stats.halo_exchanges.fetch_add(1, Ordering::Relaxed);
+        let mut sp = trace::span("halo", trace::Cat::Halo);
         for s in 0..p {
             let (slo, shi) = even_share(in_extent, p, s);
             for d in 0..p {
@@ -708,6 +725,9 @@ impl ShardWorker {
                                 self.stats
                                     .sync_bytes
                                     .fetch_add(block.len() as u64 * 4, Ordering::Relaxed);
+                                if let Some(sp) = sp.as_mut() {
+                                    sp.add_bytes(block.len() as u64 * 4);
+                                }
                                 self.transport.send(d, tag, &block)?;
                             } else if d == me {
                                 let block = self.transport.recv(s, tag)?;
@@ -721,6 +741,9 @@ impl ShardWorker {
                                 self.stats
                                     .sync_bytes
                                     .fetch_add(block.len() as u64, Ordering::Relaxed);
+                                if let Some(sp) = sp.as_mut() {
+                                    sp.add_bytes(block.len() as u64);
+                                }
                                 self.transport.send_bytes(d, tag, wire::i8s_as_bytes(&block))?;
                             } else if d == me {
                                 let block =
@@ -751,6 +774,7 @@ impl ShardWorker {
                 let mine = if c0 >= c1 {
                     Vec::new()
                 } else {
+                    let _sp = trace::span(&node.name, trace::Cat::Compute);
                     self.conv_family_slice(node, a, prm, args[0], c0, c1).data
                 };
                 let mut out = Tensor::zeros(node.out.clone());
@@ -776,6 +800,7 @@ impl ShardWorker {
                 let mine = if j0 >= j1 {
                     Vec::new()
                 } else {
+                    let _sp = trace::span(&node.name, trace::Cat::Compute);
                     matmul::fc(args[0], m.k, j1 - j0, &prm.w, &prm.bias).data
                 };
                 // Matrix outputs are column-interleaved per row: they
@@ -820,6 +845,7 @@ impl ShardWorker {
                 let mine: Vec<i8> = if c0 >= c1 {
                     Vec::new()
                 } else {
+                    let _sp = trace::span(&node.name, trace::Cat::Compute);
                     self.conv_family_slice_q8(node, a, prm, args[0], c0, c1, qrun)
                 };
                 let mut out = QTensor::zeros(node.out.clone(), grid);
@@ -845,6 +871,7 @@ impl ShardWorker {
                 let mine: Vec<i8> = if j0 >= j1 {
                     Vec::new()
                 } else {
+                    let _sp = trace::span(&node.name, trace::Cat::Compute);
                     let qa = qrun.intdot_codes(node.inputs[0], args[0]);
                     let rq = qrun.requant(node.id).expect("fc requant plan");
                     self.fc_cols_q8(
@@ -906,6 +933,7 @@ impl ShardWorker {
         let (c0, c1) = partial_in_slice(&self.plan, a, input_id, me);
         let mut acc = vec![0i32; a.out_c * ohw];
         if c0 < c1 {
+            let _sp = trace::span(&node.name, trace::Cat::Compute);
             let qx_full = qrun.intdot_codes(input_id, x);
             // This rank's input-channel slice of the full
             // (input-grid-folded) weight codes, cut once at construction.
@@ -939,12 +967,18 @@ impl ShardWorker {
             })
             .collect();
         let tag = outc_tag(node.id) | wire::TAG_I32;
-        match self.plan.sync {
-            SyncMode::Ring => {
-                ring::ring_reduce_scatter_tp(&*self.transport, &mut acc, &blocks, tag)
+        {
+            let mut sp = trace::span("reduce_scatter", trace::Cat::Wait);
+            if let Some(sp) = sp.as_mut() {
+                sp.add_bytes(acc.len() as u64 * 4);
             }
-            SyncMode::Ps => ps::ps_reduce_scatter_tp(&*self.transport, &mut acc, &blocks, tag),
-        }?;
+            match self.plan.sync {
+                SyncMode::Ring => {
+                    ring::ring_reduce_scatter_tp(&*self.transport, &mut acc, &blocks, tag)
+                }
+                SyncMode::Ps => ps::ps_reduce_scatter_tp(&*self.transport, &mut acc, &blocks, tag),
+            }?;
+        }
         self.stats.reduce_scatters.fetch_add(1, Ordering::Relaxed);
         self.stats.sync_bytes.fetch_add(acc.len() as u64 * 4, Ordering::Relaxed);
         // Requantize this rank's fully-reduced share through the node's

@@ -25,6 +25,7 @@
 //! | [`graph`] | §3 | computation-graph IR, tensors, layouts, model zoo |
 //! | [`ops`] | §6.1 | numeric operator library (CPU reference execution) |
 //! | [`hw`] | §2.3 | edge-device hardware models (TMS320C6678, ZCU102, …) |
+//! | [`obs`] | — | observability: span tracing, metrics registry, leveled logging, JSON |
 //! | [`sim`] | §7 | memory-hierarchy + DSP-unit simulator and cost model |
 //! | [`opt`] | §4 | the Xenos optimizer: fusion, operator linking (VO), DOS (HO), precision planning |
 //! | [`quant`] | §6.1 | INT8 subsystem: calibration, integer kernels, quantized engines |
@@ -39,6 +40,7 @@ pub mod dist;
 pub mod exp;
 pub mod graph;
 pub mod hw;
+pub mod obs;
 pub mod ops;
 pub mod opt;
 pub mod quant;

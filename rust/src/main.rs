@@ -10,6 +10,7 @@
 //! xenos dist-worker --listen 127.0.0.1:7001
 //! xenos dist-run    --hosts 127.0.0.1:7001,127.0.0.1:7002 --model mobilenet --scheme mix
 //! xenos repro       --exp fig7a|fig7b|fig8|fig9|fig10|fig11|table2|table45|all
+//! xenos profile     --model mobilenet --engine cluster --trace t.json --metrics-out m.json
 //! xenos inspect     --model bert_s
 //! ```
 
@@ -45,6 +46,11 @@ fn main() {
 }
 
 fn dispatch(args: &Args) -> Result<()> {
+    // --quiet wins over XENOS_LOG: every diagnostic goes through the
+    // leveled logger, so one switch silences them all.
+    if args.flag("quiet") {
+        xenos::obs::log::set_level(xenos::obs::log::Level::Off);
+    }
     match args.subcommand() {
         Some("optimize") => cmd_optimize(args),
         Some("run") => cmd_run(args),
@@ -53,6 +59,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("dist") => cmd_dist(args),
         Some("dist-worker") => cmd_dist_worker(args),
         Some("dist-run") => cmd_dist_run(args),
+        Some("profile") => cmd_profile(args),
         Some("repro") => cmd_repro(args),
         Some("inspect") => cmd_inspect(args),
         Some(other) => bail!("unknown subcommand {other}\n{USAGE}"),
@@ -63,7 +70,7 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: xenos <optimize|run|serve|quantize|dist|dist-worker|dist-run|repro|inspect>
+const USAGE: &str = "usage: xenos <optimize|run|serve|quantize|dist|dist-worker|dist-run|profile|repro|inspect>
   optimize --model M --device D            run the automatic optimizer, print the plan
   run      --model M --device D --level L  simulate inference (L: vanilla|ho|xenos)
   serve    --artifacts DIR --variant V --requests N --workers W --batch B --rate R
@@ -84,9 +91,19 @@ const USAGE: &str = "usage: xenos <optimize|run|serve|quantize|dist|dist-worker|
            --recv-timeout-ms / --infer-timeout-ms tune failure detection;
            --fault kill:R@N | delay:R@N:MS | trunc:R@N injects a scripted
            fault at rank R's transport op N (--local only) to exercise the
-           survivor re-planning path; fault counters print after the run
+           survivor re-planning path; fault counters print after the run;
+           --trace out.json dumps the merged per-rank timeline (remote
+           workers' clocks aligned over the control link) and
+           --metrics-out m.json snapshots the cluster counters
+  profile  --model M --engine interp|par|cluster [--iters N] [--precision f32|int8]
+           [--trace out.json] [--metrics-out m.json]   run under the span
+           recorder and print the compute/wait/halo time split; --trace
+           writes a Perfetto-loadable Chrome trace (--engine cluster merges
+           the per-rank timelines; size it with --cluster-devices P)
   repro    --exp ID|all                    regenerate a paper table/figure
-  inspect  --model M                       dump the model graph";
+  inspect  --model M                       dump the model graph
+global: --quiet silences all diagnostics; XENOS_LOG=off|error|warn|info|debug|trace
+        sets the log level (default warn)";
 
 fn model_arg(args: &Args) -> Result<xenos::Graph> {
     let name = args.get_or("model", "mobilenet");
@@ -274,6 +291,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             report.throughput
         );
         print_serve_stats(&report);
+        if let Some(path) = args.get("metrics-out") {
+            write_json(path, &xenos::obs::metrics::snapshot())?;
+        }
         return Ok(());
     }
 
@@ -309,6 +329,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         report.served, report.throughput
     );
     print_serve_stats(&report);
+    if let Some(path) = args.get("metrics-out") {
+        write_json(path, &xenos::obs::metrics::snapshot())?;
+    }
     Ok(())
 }
 
@@ -323,6 +346,12 @@ fn print_serve_stats(report: &xenos::serve::ServeReport) {
         human_time(report.latency.max),
         human_time(report.exec.p50),
         report.batch_size.mean,
+    );
+    println!(
+        "stage split p50: queue {} | assembly {} | exec {}",
+        human_time(report.queue.p50),
+        human_time(report.assembly.p50),
+        human_time(report.exec.p50),
     );
     let shares: Vec<String> = report.per_worker.iter().map(|n| n.to_string()).collect();
     println!("per-worker requests: [{}]", shares.join(", "));
@@ -527,6 +556,13 @@ fn cmd_dist_run(args: &Args) -> Result<()> {
         anyhow::ensure!(local, "--fault scripts apply to --local clusters only");
         opts.fault = Some(fault_arg(spec)?);
     }
+    if args.get("trace").is_some() {
+        // Enable before the driver dials: TCP workers get `trace: true`
+        // in their spec plus a clock-offset probe over the ctrl link;
+        // local shard threads check the flag at every round.
+        xenos::obs::trace::clear();
+        xenos::obs::trace::set_enabled(true);
+    }
     let driver = if local {
         let p = args.get_parse("p", 2usize);
         let d = hw::by_name(&device).with_context(|| format!("unknown device {device}"))?;
@@ -607,6 +643,19 @@ fn cmd_dist_run(args: &Args) -> Result<()> {
             driver.world(),
         );
     }
+    // Export the timeline before the single-device reference below runs,
+    // so its compute spans don't pollute the cluster trace.
+    if let Some(path) = args.get("trace") {
+        xenos::obs::trace::set_enabled(false);
+        let mut events = xenos::obs::trace::drain();
+        events.extend(driver.fetch_remote_spans()?);
+        events.sort_by_key(|e| (e.lane, e.tid, e.ts_us));
+        write_json(path, &xenos::obs::trace::chrome_trace(&events))?;
+    }
+    if let Some(path) = args.get("metrics-out") {
+        driver.publish_metrics();
+        write_json(path, &xenos::obs::metrics::snapshot())?;
+    }
 
     // Differential check against the single-device reference at the same
     // precision (quantized clusters are bit-exact vs the single-device
@@ -632,6 +681,123 @@ fn cmd_dist_run(args: &Args) -> Result<()> {
     if args.flag("verify") {
         anyhow::ensure!(max_diff == 0.0, "cluster output diverged from the single-device engine");
         println!("verified: cluster output is element-wise identical");
+    }
+    Ok(())
+}
+
+/// Write a JSON document to `path` (pretty-printed), creating parent
+/// directories as needed.
+fn write_json(path: &str, doc: &xenos::obs::Json) -> Result<()> {
+    if let Some(dir) = std::path::Path::new(path).parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    std::fs::write(path, doc.to_pretty()).with_context(|| format!("writing {path}"))?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    use xenos::obs::{metrics, trace};
+
+    let g = Arc::new(model_arg(args)?);
+    let d = device_arg(args)?;
+    let engine_kind = args.get_or("engine", "interp").to_string();
+    let iters = args.get_parse("iters", 3usize);
+    let seed = args.get_parse("seed", 42u64);
+    let threads = args.get_parse("threads", 4usize);
+    let cluster_p = args.get_parse("cluster-devices", 2usize);
+    let scheme = scheme_arg(args)?;
+    let sync = sync_arg(args)?;
+    let precision = precision_arg(args)?;
+    let calib = match precision {
+        Precision::Int8 => Some(calib_arg(args, &g)?),
+        Precision::F32 => None,
+    };
+
+    metrics::reset();
+    let engine = match (precision, engine_kind.as_str()) {
+        (Precision::F32, "interp") => Engine::interp(g.clone()),
+        (Precision::F32, "par") => Engine::par_interp(g.clone(), &d, threads),
+        (Precision::F32, "cluster") => Engine::cluster(ClusterDriver::local(
+            g.clone(),
+            &d,
+            cluster_p,
+            scheme,
+            sync,
+            threads,
+        )?),
+        (Precision::Int8, "interp") => {
+            Engine::quant(g.clone(), calib.as_ref().expect("calibrated"), 1)?
+        }
+        (Precision::Int8, "par") => {
+            Engine::quant(g.clone(), calib.as_ref().expect("calibrated"), threads)?
+        }
+        (Precision::Int8, "cluster") => Engine::cluster(ClusterDriver::local_q8(
+            g.clone(),
+            &d,
+            cluster_p,
+            scheme,
+            sync,
+            threads,
+            calib.as_ref().expect("calibrated"),
+        )?),
+        (_, other) => bail!("unknown engine {other} (interp|par|cluster)"),
+    };
+
+    let inputs = xenos::ops::interp::synthetic_inputs(&g, seed);
+    // Warm-up round outside the recording window (first-touch allocation,
+    // plan realization, calibration side tables).
+    engine.infer(&inputs)?;
+
+    trace::clear();
+    trace::set_enabled(true);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        engine.infer(&inputs)?;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    trace::set_enabled(false);
+
+    let mut events = trace::drain();
+    if let Some(driver) = engine.cluster_driver() {
+        events.extend(driver.fetch_remote_spans()?);
+        events.sort_by_key(|e| (e.lane, e.tid, e.ts_us));
+    }
+    engine.publish_metrics();
+    metrics::gauge_set("profile.wall_s", wall_s);
+    metrics::counter_set("profile.iters", iters as u64);
+    metrics::counter_set("profile.spans", events.len() as u64);
+
+    println!(
+        "profiled {} x{iters}: {} wall, {} spans",
+        engine.name(),
+        human_time(wall_s),
+        events.len()
+    );
+    // Per-category share can exceed 100% of wall time: categories sum
+    // exclusive time across every lane and thread.
+    for (cat, secs, bytes) in trace::breakdown(&events) {
+        metrics::gauge_set(&format!("profile.{}_s", cat.name()), secs);
+        let share = 100.0 * secs / wall_s.max(1e-12);
+        if bytes > 0 {
+            println!(
+                "  {:<8} {:>10}  {share:>6.1}%  {} on the wire",
+                cat.name(),
+                human_time(secs),
+                human_bytes(bytes)
+            );
+        } else {
+            println!("  {:<8} {:>10}  {share:>6.1}%", cat.name(), human_time(secs));
+        }
+    }
+
+    if let Some(path) = args.get("trace") {
+        write_json(path, &trace::chrome_trace(&events))?;
+    }
+    if let Some(path) = args.get("metrics-out") {
+        write_json(path, &metrics::snapshot())?;
     }
     Ok(())
 }

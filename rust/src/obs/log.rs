@@ -1,0 +1,177 @@
+//! Leveled structured logger.
+//!
+//! The level comes from the `XENOS_LOG` environment variable
+//! (`off|error|warn|info|debug|trace`, default `warn`) and can be
+//! overridden programmatically (the CLI's `--quiet` maps to `off`). Lines
+//! go to stderr as `[xenos LEVEL module::path] message`, so the d-Xenos
+//! driver/worker diagnostics and the serving-tier warnings are silenced or
+//! enabled uniformly instead of each call site owning an `eprintln!`.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Log severity, most severe first. `Off` disables all output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+#[repr(u8)]
+pub enum Level {
+    /// No output at all (`--quiet`).
+    Off = 0,
+    /// Unrecoverable failures of a request or session.
+    Error = 1,
+    /// Degraded-but-continuing conditions (rank loss, re-planning).
+    Warn = 2,
+    /// One-per-session lifecycle events.
+    Info = 3,
+    /// Per-round/per-request diagnostics.
+    Debug = 4,
+    /// Everything, including per-collective detail.
+    Trace = 5,
+}
+
+/// Stored level; `UNINIT` triggers a lazy `XENOS_LOG` parse on first use.
+static LEVEL: AtomicU8 = AtomicU8::new(UNINIT);
+const UNINIT: u8 = 0xFF;
+
+fn parse(text: &str) -> Option<Level> {
+    Some(match text.trim().to_ascii_lowercase().as_str() {
+        "off" | "none" | "0" => Level::Off,
+        "error" => Level::Error,
+        "warn" | "warning" => Level::Warn,
+        "info" => Level::Info,
+        "debug" => Level::Debug,
+        "trace" => Level::Trace,
+        _ => return None,
+    })
+}
+
+/// The active level (parses `XENOS_LOG` on first call).
+pub fn level() -> Level {
+    let raw = LEVEL.load(Ordering::Relaxed);
+    if raw != UNINIT {
+        return decode(raw);
+    }
+    let parsed = std::env::var("XENOS_LOG").ok().and_then(|v| parse(&v)).unwrap_or(Level::Warn);
+    // A concurrent first call may race; both store the same env-derived
+    // value, so last-write-wins is fine.
+    LEVEL.store(parsed as u8, Ordering::Relaxed);
+    parsed
+}
+
+fn decode(raw: u8) -> Level {
+    match raw {
+        0 => Level::Off,
+        1 => Level::Error,
+        2 => Level::Warn,
+        3 => Level::Info,
+        4 => Level::Debug,
+        _ => Level::Trace,
+    }
+}
+
+/// Override the level (wins over `XENOS_LOG`).
+pub fn set_level(l: Level) {
+    LEVEL.store(l as u8, Ordering::Relaxed);
+}
+
+/// Would a record at `l` be emitted?
+#[inline]
+pub fn enabled(l: Level) -> bool {
+    l != Level::Off && l <= level()
+}
+
+/// Emit one record. Call through the [`crate::xerror!`]/[`crate::xwarn!`]/
+/// [`crate::xinfo!`]/[`crate::xdebug!`] macros, which do the level check at
+/// the call site.
+pub fn log(l: Level, module: &str, args: std::fmt::Arguments<'_>) {
+    let tag = match l {
+        Level::Off => return,
+        Level::Error => "ERROR",
+        Level::Warn => "WARN",
+        Level::Info => "INFO",
+        Level::Debug => "DEBUG",
+        Level::Trace => "TRACE",
+    };
+    eprintln!("[xenos {tag} {module}] {args}");
+}
+
+/// Log at [`Level::Error`] — unrecoverable failure of a request/session.
+#[macro_export]
+macro_rules! xerror {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Error) {
+            $crate::obs::log::log(
+                $crate::obs::log::Level::Error,
+                module_path!(),
+                format_args!($($arg)*),
+            );
+        }
+    };
+}
+
+/// Log at [`Level::Warn`] — degraded but continuing.
+#[macro_export]
+macro_rules! xwarn {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Warn) {
+            $crate::obs::log::log(
+                $crate::obs::log::Level::Warn,
+                module_path!(),
+                format_args!($($arg)*),
+            );
+        }
+    };
+}
+
+/// Log at [`Level::Info`] — session lifecycle events.
+#[macro_export]
+macro_rules! xinfo {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Info) {
+            $crate::obs::log::log(
+                $crate::obs::log::Level::Info,
+                module_path!(),
+                format_args!($($arg)*),
+            );
+        }
+    };
+}
+
+/// Log at [`Level::Debug`] — per-round/per-request diagnostics.
+#[macro_export]
+macro_rules! xdebug {
+    ($($arg:tt)*) => {
+        if $crate::obs::log::enabled($crate::obs::log::Level::Debug) {
+            $crate::obs::log::log(
+                $crate::obs::log::Level::Debug,
+                module_path!(),
+                format_args!($($arg)*),
+            );
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn levels_order_and_gate() {
+        set_level(Level::Warn);
+        assert!(enabled(Level::Error));
+        assert!(enabled(Level::Warn));
+        assert!(!enabled(Level::Info));
+        set_level(Level::Off);
+        assert!(!enabled(Level::Error));
+        set_level(Level::Trace);
+        assert!(enabled(Level::Debug));
+        // Restore the default so other tests in the binary are unaffected.
+        set_level(Level::Warn);
+    }
+
+    #[test]
+    fn parse_accepts_the_documented_spellings() {
+        assert_eq!(parse("warn"), Some(Level::Warn));
+        assert_eq!(parse(" ERROR "), Some(Level::Error));
+        assert_eq!(parse("off"), Some(Level::Off));
+        assert_eq!(parse("verbose"), None);
+    }
+}

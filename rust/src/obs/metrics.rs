@@ -1,0 +1,159 @@
+//! Process-wide metrics registry: named counters, gauges, and histograms
+//! with one JSON-snapshot API.
+//!
+//! The hot paths keep their existing lock-free counters (`SyncStats`,
+//! `snap_roundtrips`, ...); this registry is where those are *published*
+//! at snapshot points (end of a run, `--metrics-out`, the profile verb),
+//! unifying them under one dotted naming scheme:
+//!
+//! * `cluster.sync.*` — collective/halo counts and wire bytes
+//!   ([`crate::dist::exec::SyncSnapshot`])
+//! * `cluster.plan.*` — planner accounting (gather totals/skips)
+//! * `cluster.faults.*` — fault-tolerance counters
+//! * `quant.*` — INT8 engine counters (snap round-trips)
+//! * `serve.*` — serving-tier stage histograms and throughput
+//! * `profile.*` — per-category time from the span recorder
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock};
+
+use super::json::Json;
+use crate::util::stats::Summary;
+
+/// One registered metric.
+#[derive(Debug, Clone, PartialEq)]
+enum Metric {
+    /// Monotonic count (events, bytes).
+    Counter(u64),
+    /// Last-write-wins scalar.
+    Gauge(f64),
+    /// Raw samples, summarized at snapshot time.
+    Hist(Vec<f64>),
+}
+
+static REGISTRY: OnceLock<Mutex<BTreeMap<String, Metric>>> = OnceLock::new();
+
+fn with_map<R>(f: impl FnOnce(&mut BTreeMap<String, Metric>) -> R) -> R {
+    let m = REGISTRY.get_or_init(|| Mutex::new(BTreeMap::new()));
+    f(&mut m.lock().unwrap_or_else(|p| p.into_inner()))
+}
+
+/// Add to a counter (creating it at zero).
+pub fn counter_add(name: &str, v: u64) {
+    with_map(|m| match m.entry(name.to_string()).or_insert(Metric::Counter(0)) {
+        Metric::Counter(c) => *c += v,
+        other => *other = Metric::Counter(v),
+    });
+}
+
+/// Set a counter to an absolute value — for publishing a snapshot of an
+/// externally-maintained atomic.
+pub fn counter_set(name: &str, v: u64) {
+    with_map(|m| {
+        m.insert(name.to_string(), Metric::Counter(v));
+    });
+}
+
+/// Set a gauge.
+pub fn gauge_set(name: &str, v: f64) {
+    with_map(|m| {
+        m.insert(name.to_string(), Metric::Gauge(v));
+    });
+}
+
+/// Record one histogram sample.
+pub fn observe(name: &str, v: f64) {
+    with_map(|m| match m.entry(name.to_string()).or_insert_with(|| Metric::Hist(Vec::new())) {
+        Metric::Hist(samples) => samples.push(v),
+        other => *other = Metric::Hist(vec![v]),
+    });
+}
+
+/// Record a whole histogram sample set at once.
+pub fn observe_all(name: &str, vs: &[f64]) {
+    with_map(|m| match m.entry(name.to_string()).or_insert_with(|| Metric::Hist(Vec::new())) {
+        Metric::Hist(samples) => samples.extend_from_slice(vs),
+        other => *other = Metric::Hist(vs.to_vec()),
+    });
+}
+
+/// Drop every metric (test isolation, per-run resets).
+pub fn reset() {
+    with_map(|m| m.clear());
+}
+
+/// Read one counter back (0 when absent) — the test hook for pinning
+/// published values against ground truth.
+pub fn counter_value(name: &str) -> u64 {
+    with_map(|m| match m.get(name) {
+        Some(Metric::Counter(c)) => *c,
+        _ => 0,
+    })
+}
+
+/// Snapshot the registry as one JSON object, keyed by metric name.
+/// Counters and gauges become numbers; histograms become
+/// [`Summary`] objects (see [`Summary::to_json`]).
+pub fn snapshot() -> Json {
+    with_map(|m| {
+        let pairs = m
+            .iter()
+            .map(|(k, v)| {
+                let val = match v {
+                    Metric::Counter(c) => Json::Num(*c as f64),
+                    Metric::Gauge(g) => Json::Num(*g),
+                    Metric::Hist(samples) => match Summary::of(samples) {
+                        Some(s) => s.to_json(),
+                        None => Json::Null,
+                    },
+                };
+                (k.clone(), val)
+            })
+            .collect();
+        Json::Obj(pairs)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is global; serialize tests that reset it.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn counters_gauges_histograms_snapshot() {
+        let _l = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        reset();
+        counter_add("cluster.sync.bytes", 100);
+        counter_add("cluster.sync.bytes", 28);
+        counter_set("cluster.sync.all_gathers", 7);
+        gauge_set("serve.throughput_rps", 123.5);
+        for v in [1.0, 2.0, 3.0] {
+            observe("serve.latency_s", v);
+        }
+        let snap = snapshot();
+        assert_eq!(snap.get("cluster.sync.bytes").and_then(Json::as_f64), Some(128.0));
+        assert_eq!(snap.get("cluster.sync.all_gathers").and_then(Json::as_f64), Some(7.0));
+        assert_eq!(snap.get("serve.throughput_rps").and_then(Json::as_f64), Some(123.5));
+        let lat = snap.get("serve.latency_s").unwrap();
+        assert_eq!(lat.get("n").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(lat.get("mean").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(counter_value("cluster.sync.bytes"), 128);
+        assert_eq!(counter_value("absent"), 0);
+        reset();
+        assert!(snapshot().as_obj().unwrap().is_empty());
+    }
+
+    #[test]
+    fn snapshot_keys_are_sorted() {
+        let _l = TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        reset();
+        counter_add("b.two", 2);
+        counter_add("a.one", 1);
+        let keys: Vec<String> =
+            snapshot().as_obj().unwrap().iter().map(|(k, _)| k.clone()).collect();
+        assert_eq!(keys, vec!["a.one".to_string(), "b.two".to_string()]);
+        reset();
+    }
+}

@@ -1,0 +1,20 @@
+//! Observability: span tracing, metrics, structured logging, and the JSON
+//! layer they all emit through.
+//!
+//! * [`trace`] — low-overhead span recorder (per-thread buffers, off by
+//!   default) + Chrome-trace exporter; the per-rank cluster timelines.
+//! * [`metrics`] — named counters/gauges/histograms with a JSON snapshot.
+//! * [`log`] — leveled stderr logger behind `XENOS_LOG` and the
+//!   [`crate::xerror!`]/[`crate::xwarn!`]/[`crate::xinfo!`]/
+//!   [`crate::xdebug!`] macros.
+//! * [`json`] — the hand-rolled [`json::Json`] value/writer/parser
+//!   (`BENCH_*.json`, `--metrics-out`, traces; no serde in the offline
+//!   build).
+
+pub mod json;
+pub mod log;
+pub mod metrics;
+pub mod trace;
+
+pub use json::Json;
+pub use trace::{span, Cat, SpanEvent, SpanGuard};

@@ -1,0 +1,466 @@
+//! Low-overhead span recorder with a Chrome-trace-event exporter.
+//!
+//! Recording is **off by default**: every instrumentation site costs one
+//! relaxed atomic load when disabled ([`span`] returns `None` before
+//! touching a clock or allocating). When enabled, completed spans go into
+//! per-thread buffers (registered in a global list, locked only by their
+//! owner and the drainer), timed with `Instant` against a process-wide
+//! epoch so all threads share one timeline.
+//!
+//! Spans carry a *lane* — the cluster rank, exported as the Chrome-trace
+//! `pid` — so [`chrome_trace`] renders one process row per rank with its
+//! threads below, which is exactly the merged-timeline view Perfetto
+//! shows. Remote ranks run their own epoch; the driver aligns them with
+//! [`shift_ts`] using the clock offset estimated over the ctrl handshake.
+
+use std::cell::{Cell, RefCell};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use super::json::Json;
+
+/// Span category — the compute/wait/halo split the cluster timeline is
+/// about, exported as the Chrome-trace `cat` field.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cat {
+    /// On-CPU kernel execution (per node, per pool chunk).
+    Compute,
+    /// Blocked in a collective (all-gather, reduce-scatter) — time spent
+    /// waiting on peers plus moving their bytes.
+    Wait,
+    /// Blocked in a boundary-row halo exchange.
+    Halo,
+    /// One whole cluster round (driver side).
+    Round,
+    /// A serving-pipeline stage (queue wait, batch assembly).
+    Stage,
+}
+
+impl Cat {
+    /// Stable name used in trace JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            Cat::Compute => "compute",
+            Cat::Wait => "wait",
+            Cat::Halo => "halo",
+            Cat::Round => "round",
+            Cat::Stage => "stage",
+        }
+    }
+
+    fn from_name(name: &str) -> Result<Cat> {
+        Ok(match name {
+            "compute" => Cat::Compute,
+            "wait" => Cat::Wait,
+            "halo" => Cat::Halo,
+            "round" => Cat::Round,
+            "stage" => Cat::Stage,
+            other => bail!("unknown span category '{other}'"),
+        })
+    }
+}
+
+/// One completed span.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SpanEvent {
+    /// Span name (op kind, collective, stage).
+    pub name: String,
+    /// Category (compute / wait / halo / ...).
+    pub cat: Cat,
+    /// Start, µs since the recording epoch. Signed so cross-process
+    /// clock-offset shifts cannot underflow.
+    pub ts_us: i64,
+    /// Duration in µs.
+    pub dur_us: u64,
+    /// Timeline lane (cluster rank); the Chrome-trace `pid`.
+    pub lane: u32,
+    /// Recording thread, unique per thread per process.
+    pub tid: u64,
+    /// Wire bytes attached to the span (collectives/halos); 0 = none.
+    pub bytes: u64,
+}
+
+struct ThreadBuf {
+    tid: u64,
+    events: Mutex<Vec<SpanEvent>>,
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+static BUFFERS: OnceLock<Mutex<Vec<Arc<ThreadBuf>>>> = OnceLock::new();
+
+thread_local! {
+    static CURRENT: RefCell<Option<Arc<ThreadBuf>>> = const { RefCell::new(None) };
+    static LANE: Cell<u32> = const { Cell::new(0) };
+}
+
+fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn buffers() -> &'static Mutex<Vec<Arc<ThreadBuf>>> {
+    BUFFERS.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn lock_recover<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Turn recording on or off. Enabling pins the epoch so no later span can
+/// start before it.
+pub fn set_enabled(on: bool) {
+    if on {
+        epoch();
+    }
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Is recording on? One relaxed load — the entire disabled-path cost.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Tag this thread's future spans with a timeline lane (the cluster
+/// rank). Threads default to lane 0.
+pub fn set_lane(lane: u32) {
+    LANE.with(|l| l.set(lane));
+}
+
+/// This thread's lane — captured at submit time so pool jobs can inherit
+/// the submitting shard's rank.
+pub fn lane() -> u32 {
+    LANE.with(|l| l.get())
+}
+
+/// µs since the recording epoch — the value exchanged by the clock-offset
+/// handshake.
+pub fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+/// An in-flight span; records itself on drop. Hold it in a `let` binding
+/// for the duration of the measured region.
+pub struct SpanGuard {
+    name: String,
+    cat: Cat,
+    start: Instant,
+    bytes: u64,
+}
+
+impl SpanGuard {
+    /// Attach wire bytes to the span (additive across calls).
+    pub fn add_bytes(&mut self, n: u64) {
+        self.bytes += n;
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let ep = epoch();
+        let ts_us = self.start.saturating_duration_since(ep).as_micros() as i64;
+        let dur_us = self.start.elapsed().as_micros() as u64;
+        let ev = SpanEvent {
+            name: std::mem::take(&mut self.name),
+            cat: self.cat,
+            ts_us,
+            dur_us,
+            lane: LANE.with(|l| l.get()),
+            tid: 0, // filled from the thread buffer below
+            bytes: self.bytes,
+        };
+        record(ev);
+    }
+}
+
+/// Open a span. Returns `None` (and does no other work) when recording is
+/// disabled.
+#[inline]
+pub fn span(name: &str, cat: Cat) -> Option<SpanGuard> {
+    if !enabled() {
+        return None;
+    }
+    Some(SpanGuard { name: name.to_string(), cat, start: Instant::now(), bytes: 0 })
+}
+
+fn record(mut ev: SpanEvent) {
+    CURRENT.with(|cur| {
+        let mut cur = cur.borrow_mut();
+        let buf = cur.get_or_insert_with(|| {
+            let buf = Arc::new(ThreadBuf {
+                tid: NEXT_TID.fetch_add(1, Ordering::Relaxed),
+                events: Mutex::new(Vec::new()),
+            });
+            lock_recover(buffers()).push(Arc::clone(&buf));
+            buf
+        });
+        ev.tid = buf.tid;
+        lock_recover(&buf.events).push(ev);
+    });
+}
+
+/// Take every recorded span out of every thread's buffer.
+pub fn drain() -> Vec<SpanEvent> {
+    let bufs: Vec<Arc<ThreadBuf>> = lock_recover(buffers()).clone();
+    let mut out = Vec::new();
+    for buf in bufs {
+        out.append(&mut lock_recover(&buf.events));
+    }
+    out.sort_by_key(|e| (e.lane, e.tid, e.ts_us));
+    out
+}
+
+/// Discard all recorded spans.
+pub fn clear() {
+    drop(drain());
+}
+
+/// Shift every span's start by `delta_us` — how the driver moves a remote
+/// rank's timeline onto its own clock.
+pub fn shift_ts(events: &mut [SpanEvent], delta_us: i64) {
+    for ev in events {
+        ev.ts_us += delta_us;
+    }
+}
+
+/// Serialize spans to the compact interchange form (`{"spans": [...]}`)
+/// used by the `CTRL_TRACE` wire reply and the tests.
+pub fn events_to_json(events: &[SpanEvent]) -> Json {
+    let spans = events
+        .iter()
+        .map(|e| {
+            Json::obj(vec![
+                ("name", Json::Str(e.name.clone())),
+                ("cat", Json::str(e.cat.name())),
+                ("ts_us", Json::Num(e.ts_us as f64)),
+                ("dur_us", Json::Num(e.dur_us as f64)),
+                ("lane", Json::Num(e.lane as f64)),
+                ("tid", Json::Num(e.tid as f64)),
+                ("bytes", Json::Num(e.bytes as f64)),
+            ])
+        })
+        .collect();
+    Json::obj(vec![("spans", Json::Arr(spans))])
+}
+
+/// Parse the [`events_to_json`] interchange form.
+pub fn events_from_json(v: &Json) -> Result<Vec<SpanEvent>> {
+    let Some(spans) = v.get("spans").and_then(Json::as_arr) else {
+        bail!("trace payload has no 'spans' array");
+    };
+    let field = |s: &Json, k: &str| -> Result<f64> {
+        s.get(k).and_then(Json::as_f64).ok_or_else(|| anyhow::anyhow!("span missing '{k}'"))
+    };
+    spans
+        .iter()
+        .map(|s| {
+            let name = s
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("span missing 'name'"))?;
+            Ok(SpanEvent {
+                name: name.to_string(),
+                cat: Cat::from_name(s.get("cat").and_then(Json::as_str).unwrap_or("compute"))?,
+                ts_us: field(s, "ts_us")? as i64,
+                dur_us: field(s, "dur_us")? as u64,
+                lane: field(s, "lane")? as u32,
+                tid: field(s, "tid")? as u64,
+                bytes: field(s, "bytes")? as u64,
+            })
+        })
+        .collect()
+}
+
+/// Export spans as a Chrome-trace-event document (open in Perfetto or
+/// `chrome://tracing`). One `pid` row per lane/rank, complete (`ph: "X"`)
+/// events, with wire bytes under `args`.
+pub fn chrome_trace(events: &[SpanEvent]) -> Json {
+    let mut out = Vec::new();
+    let mut lanes: Vec<u32> = events.iter().map(|e| e.lane).collect();
+    lanes.sort_unstable();
+    lanes.dedup();
+    for lane in lanes {
+        out.push(Json::obj(vec![
+            ("name", Json::str("process_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::Num(lane as f64)),
+            ("tid", Json::Num(0.0)),
+            ("args", Json::obj(vec![("name", Json::Str(format!("rank {lane}")))])),
+        ]));
+    }
+    for e in events {
+        let mut args = Vec::new();
+        if e.bytes > 0 {
+            args.push(("bytes", Json::Num(e.bytes as f64)));
+        }
+        out.push(Json::obj(vec![
+            ("name", Json::Str(e.name.clone())),
+            ("cat", Json::str(e.cat.name())),
+            ("ph", Json::str("X")),
+            ("ts", Json::Num(e.ts_us as f64)),
+            ("dur", Json::Num(e.dur_us as f64)),
+            ("pid", Json::Num(e.lane as f64)),
+            ("tid", Json::Num(e.tid as f64)),
+            ("args", Json::obj(args)),
+        ]));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(out)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+/// Sum span durations per category, in seconds — the compute/wait/halo
+/// breakdown `xenos profile` prints.
+pub fn breakdown(events: &[SpanEvent]) -> Vec<(Cat, f64, u64)> {
+    let cats = [Cat::Compute, Cat::Wait, Cat::Halo, Cat::Round, Cat::Stage];
+    cats.iter()
+        .filter_map(|&c| {
+            let (mut dur, mut bytes, mut any) = (0u64, 0u64, false);
+            for e in events.iter().filter(|e| e.cat == c) {
+                dur += e.dur_us;
+                bytes += e.bytes;
+                any = true;
+            }
+            any.then_some((c, dur as f64 / 1e6, bytes))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The recorder is global; tests in this module serialize on one lock
+    // so concurrently-run unit tests don't see each other's spans.
+    static TEST_LOCK: Mutex<()> = Mutex::new(());
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _l = lock_recover(&TEST_LOCK);
+        clear();
+        set_enabled(false);
+        assert!(span("noop", Cat::Compute).is_none());
+        assert!(drain().is_empty());
+    }
+
+    #[test]
+    fn spans_record_with_lane_and_bytes() {
+        let _l = lock_recover(&TEST_LOCK);
+        clear();
+        set_enabled(true);
+        set_lane(3);
+        {
+            let mut g = span("all_gather", Cat::Wait).unwrap();
+            g.add_bytes(1024);
+            g.add_bytes(512);
+        }
+        {
+            let _g = span("conv", Cat::Compute).unwrap();
+        }
+        set_enabled(false);
+        set_lane(0);
+        let evs = drain();
+        assert_eq!(evs.len(), 2);
+        let ag = evs.iter().find(|e| e.name == "all_gather").unwrap();
+        assert_eq!(ag.cat, Cat::Wait);
+        assert_eq!(ag.lane, 3);
+        assert_eq!(ag.bytes, 1536);
+        assert!(ag.tid > 0);
+    }
+
+    #[test]
+    fn interchange_json_round_trips() {
+        let evs = vec![
+            SpanEvent {
+                name: "halo".into(),
+                cat: Cat::Halo,
+                ts_us: 42,
+                dur_us: 7,
+                lane: 1,
+                tid: 9,
+                bytes: 256,
+            },
+            SpanEvent {
+                name: "relu".into(),
+                cat: Cat::Compute,
+                ts_us: -5,
+                dur_us: 1,
+                lane: 0,
+                tid: 2,
+                bytes: 0,
+            },
+        ];
+        let got = events_from_json(&events_to_json(&evs)).unwrap();
+        assert_eq!(got, evs);
+    }
+
+    #[test]
+    fn shift_moves_timestamps() {
+        let mut evs = vec![SpanEvent {
+            name: "x".into(),
+            cat: Cat::Round,
+            ts_us: 100,
+            dur_us: 1,
+            lane: 0,
+            tid: 1,
+            bytes: 0,
+        }];
+        shift_ts(&mut evs, -150);
+        assert_eq!(evs[0].ts_us, -50);
+    }
+
+    #[test]
+    fn chrome_trace_shape() {
+        let evs = vec![SpanEvent {
+            name: "conv".into(),
+            cat: Cat::Compute,
+            ts_us: 10,
+            dur_us: 5,
+            lane: 2,
+            tid: 4,
+            bytes: 0,
+        }];
+        let doc = chrome_trace(&evs);
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        // One process_name metadata record plus the span.
+        assert_eq!(events.len(), 2);
+        let span = &events[1];
+        assert_eq!(span.get("ph").and_then(Json::as_str), Some("X"));
+        assert_eq!(span.get("pid").and_then(Json::as_f64), Some(2.0));
+        assert_eq!(span.get("ts").and_then(Json::as_f64), Some(10.0));
+    }
+
+    #[test]
+    fn breakdown_sums_per_category() {
+        let evs = vec![
+            SpanEvent {
+                name: "a".into(),
+                cat: Cat::Compute,
+                ts_us: 0,
+                dur_us: 2_000_000,
+                lane: 0,
+                tid: 1,
+                bytes: 0,
+            },
+            SpanEvent {
+                name: "b".into(),
+                cat: Cat::Wait,
+                ts_us: 0,
+                dur_us: 500_000,
+                lane: 0,
+                tid: 1,
+                bytes: 4096,
+            },
+        ];
+        let b = breakdown(&evs);
+        assert_eq!(b.len(), 2);
+        assert_eq!(b[0].0, Cat::Compute);
+        assert!((b[0].1 - 2.0).abs() < 1e-9);
+        assert_eq!(b[1].2, 4096);
+    }
+}

@@ -7,6 +7,7 @@
 use super::params::{NodeParams, ParamStore};
 use super::{conv, elementwise as ew, matmul, pool, shape_ops, Tensor};
 use crate::graph::{Graph, Node, NodeId, OpKind};
+use crate::obs::trace;
 
 /// The shared graph-walk driver: feeds inputs, executes each node through
 /// `exec`, releases values after their last use (handing dead tensors to
@@ -61,6 +62,9 @@ pub(crate) fn run_graph(
                 .iter()
                 .map(|&i| values[i].as_ref().expect("input value should be live"))
                 .collect();
+            // Per-node compute span: one relaxed atomic load when tracing
+            // is off (see `obs::trace`), so the serial hot path is intact.
+            let _sp = trace::span(&n.name, trace::Cat::Compute);
             exec(n, &args)
         };
         values[n.id] = Some(out);

@@ -554,6 +554,9 @@ impl QuantEngine {
                     .iter()
                     .map(|&i| vals[i].as_ref().expect("input value live"))
                     .collect();
+                // Same per-node compute span as `run_graph`; free when
+                // recording is off.
+                let _sp = crate::obs::trace::span(&n.name, crate::obs::trace::Cat::Compute);
                 self.exec(n, &args)
             };
             vals[n.id] = Some(out);

@@ -154,6 +154,32 @@ impl Engine {
         }
     }
 
+    /// The d-Xenos driver behind a cluster engine — for metrics
+    /// publication and remote trace drains. `None` for other backends.
+    pub fn cluster_driver(&self) -> Option<&ClusterDriver> {
+        match &self.inner {
+            Inner::Cluster { driver } => Some(driver),
+            _ => None,
+        }
+    }
+
+    /// Publish the backend's counters to the global metrics registry (see
+    /// [`crate::obs::metrics`]): cluster engines publish `cluster.*`,
+    /// the INT8 engine publishes `quant.snap_roundtrips`. Other backends
+    /// have no counters of their own.
+    pub fn publish_metrics(&self) {
+        match &self.inner {
+            Inner::Cluster { driver } => driver.publish_metrics(),
+            Inner::Quant { engine } => {
+                crate::obs::metrics::counter_set(
+                    "quant.snap_roundtrips",
+                    engine.snap_roundtrips(),
+                );
+            }
+            _ => {}
+        }
+    }
+
     /// Run one inference.
     pub fn infer(&self, inputs: &[Tensor]) -> Result<InferOutput> {
         let start = Instant::now();

@@ -83,7 +83,22 @@ impl WorkerPool {
     /// captures, because `run` does not return while any job is live.
     pub fn run<'env>(&self, jobs: Vec<ScopedJob<'env>>) {
         let n = jobs.len();
+        // When span recording is on, wrap each job so the worker thread
+        // records one compute span per chunk — this single site covers
+        // every engine that fans out over the pool (parallel plan
+        // executor, INT8 engine, shard workers).
+        let traced = crate::obs::trace::enabled();
+        let lane = if traced { crate::obs::trace::lane() } else { 0 };
         for (i, job) in jobs.into_iter().enumerate() {
+            let job: ScopedJob<'env> = if traced {
+                Box::new(move || {
+                    crate::obs::trace::set_lane(lane);
+                    let _sp = crate::obs::trace::span("chunk", crate::obs::trace::Cat::Compute);
+                    job();
+                })
+            } else {
+                job
+            };
             // SAFETY: the job is guaranteed finished before `run` returns,
             // so promoting its borrows to 'static never lets them dangle.
             let job: Job = unsafe { std::mem::transmute::<ScopedJob<'env>, Job>(job) };

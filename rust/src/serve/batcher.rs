@@ -22,8 +22,31 @@ impl Default for BatcherConfig {
     }
 }
 
-/// A formed batch.
-pub type Batch = Vec<Request>;
+/// A formed batch: the requests plus the assembly-window timestamps, so
+/// the serving report can split queue wait from batch assembly per
+/// request.
+#[derive(Debug)]
+pub struct Batch {
+    /// Requests in arrival order.
+    pub requests: Vec<Request>,
+    /// When the first request was pulled (the batch opened).
+    pub opened: Instant,
+    /// When the batch was closed (size cap or deadline reached).
+    pub formed: Instant,
+}
+
+impl Batch {
+    /// Number of requests in the batch.
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    /// True if the batch holds no requests (the batcher never produces
+    /// one, but slicing code may).
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+}
 
 /// Pull-based dynamic batcher over an mpsc channel.
 #[derive(Debug)]
@@ -43,20 +66,21 @@ impl Batcher {
     /// and drained.
     pub fn next_batch(&self, rx: &Receiver<Request>) -> Option<Batch> {
         let first = rx.recv().ok()?;
-        let deadline = Instant::now() + self.cfg.max_wait;
-        let mut batch = vec![first];
-        while batch.len() < self.cfg.max_batch {
+        let opened = Instant::now();
+        let deadline = opened + self.cfg.max_wait;
+        let mut requests = vec![first];
+        while requests.len() < self.cfg.max_batch {
             let now = Instant::now();
             if now >= deadline {
                 break;
             }
             match rx.recv_timeout(deadline - now) {
-                Ok(r) => batch.push(r),
+                Ok(r) => requests.push(r),
                 Err(RecvTimeoutError::Timeout) => break,
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-        Some(batch)
+        Some(Batch { requests, opened, formed: Instant::now() })
     }
 }
 
@@ -79,8 +103,10 @@ mod tests {
         let b = Batcher::new(BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(50) });
         let batch = b.next_batch(&rx).unwrap();
         assert_eq!(batch.len(), 4);
-        assert_eq!(batch[0].id, 0);
-        assert_eq!(batch[3].id, 3);
+        assert_eq!(batch.requests[0].id, 0);
+        assert_eq!(batch.requests[3].id, 3);
+        assert!(batch.opened <= batch.formed);
+        assert!(!batch.is_empty());
     }
 
     #[test]

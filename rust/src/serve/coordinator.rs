@@ -10,6 +10,7 @@ use anyhow::Result;
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::{Request, Response};
+use crate::obs::{metrics, trace};
 use crate::quant::Precision;
 use crate::runtime::Engine;
 use crate::util::stats::Summary;
@@ -58,6 +59,10 @@ pub struct ServeReport {
     pub latency: Summary,
     /// Engine execution-time stats (seconds).
     pub exec: Summary,
+    /// Queue-wait stats: submission → pulled by the batcher (seconds).
+    pub queue: Summary,
+    /// Batch-assembly stats: pulled → batch formed (seconds).
+    pub assembly: Summary,
     /// Batch-size stats.
     pub batch_size: Summary,
     /// Requests served by each worker (index = worker id).
@@ -124,7 +129,22 @@ impl Coordinator {
                     };
                     while let Ok(batch) = brx.recv() {
                         let bsize = batch.len();
-                        for req in batch {
+                        let (opened, formed) = (batch.opened, batch.formed);
+                        // One Stage span per batch: the exec slice of the
+                        // serving timeline (queue/assembly are derived from
+                        // the batch timestamps, not spanned — they happen
+                        // on the dispatcher thread).
+                        let _sp = trace::span("serve_batch", trace::Cat::Stage);
+                        for req in batch.requests {
+                            // Stage split: time queued before the batcher
+                            // pulled the request, then time held while the
+                            // batch filled (a request arriving mid-window
+                            // has ~zero queue time).
+                            let queue_s =
+                                opened.saturating_duration_since(req.submitted).as_secs_f64();
+                            let assembly_s = formed
+                                .saturating_duration_since(req.submitted.max(opened))
+                                .as_secs_f64();
                             match engine.infer(&req.inputs) {
                                 Ok(out) => {
                                     let _ = resp_tx.send(Response {
@@ -132,12 +152,14 @@ impl Coordinator {
                                         outputs: out.outputs,
                                         latency_s: req.submitted.elapsed().as_secs_f64(),
                                         exec_s: out.exec_s,
+                                        queue_s,
+                                        assembly_s,
                                         batch_size: bsize,
                                         worker: w,
                                     });
                                 }
                                 Err(e) => {
-                                    eprintln!("worker {w}: inference failed: {e:#}");
+                                    crate::xerror!("worker {w}: inference failed: {e:#}");
                                 }
                             }
                         }
@@ -198,6 +220,8 @@ impl Coordinator {
             }
             let lat: Vec<f64> = responses.iter().map(|r| r.latency_s).collect();
             let exec: Vec<f64> = responses.iter().map(|r| r.exec_s).collect();
+            let queue: Vec<f64> = responses.iter().map(|r| r.queue_s).collect();
+            let assembly: Vec<f64> = responses.iter().map(|r| r.assembly_s).collect();
             let bs: Vec<f64> = responses.iter().map(|r| r.batch_size as f64).collect();
             anyhow::ensure!(
                 responses.len() == submitted,
@@ -205,12 +229,24 @@ impl Coordinator {
                 responses.len(),
                 submitted
             );
+            let throughput = responses.len() as f64 / wall_s.max(1e-12);
+            // Publish the run to the metrics registry (the `serve.*`
+            // namespace) so `--metrics-out` and the profile verb see the
+            // same numbers the report prints.
+            metrics::counter_set("serve.served", responses.len() as u64);
+            metrics::gauge_set("serve.throughput_rps", throughput);
+            metrics::observe_all("serve.latency_s", &lat);
+            metrics::observe_all("serve.exec_s", &exec);
+            metrics::observe_all("serve.queue_s", &queue);
+            metrics::observe_all("serve.assembly_s", &assembly);
             Ok(ServeReport {
                 served: responses.len(),
                 wall_s,
-                throughput: responses.len() as f64 / wall_s.max(1e-12),
+                throughput,
                 latency: Summary::of(&lat).unwrap_or(EMPTY),
                 exec: Summary::of(&exec).unwrap_or(EMPTY),
+                queue: Summary::of(&queue).unwrap_or(EMPTY),
+                assembly: Summary::of(&assembly).unwrap_or(EMPTY),
                 batch_size: Summary::of(&bs).unwrap_or(EMPTY),
                 per_worker,
                 responses,
@@ -353,6 +389,26 @@ mod tests {
         let l = &report.latency;
         assert!(l.min <= l.p50 && l.p50 <= l.p90);
         assert!(l.p90 <= l.p95 && l.p95 <= l.p99 && l.p99 <= l.max);
+    }
+
+    #[test]
+    fn stage_breakdown_is_recorded() {
+        let coord = Coordinator::new(ServeConfig::default());
+        let shapes = engine().input_shapes();
+        let report = coord
+            .run(|_| Ok(engine()), synthetic_requests(shapes, 20, 0.0, 6))
+            .unwrap();
+        assert_eq!(report.queue.n, 20);
+        assert_eq!(report.assembly.n, 20);
+        for r in &report.responses {
+            assert!(r.queue_s >= 0.0 && r.assembly_s >= 0.0);
+            // queue + assembly is submit→formed, a prefix of the
+            // end-to-end latency.
+            assert!(
+                r.queue_s + r.assembly_s <= r.latency_s + 1e-6,
+                "stages must fit inside the end-to-end latency"
+            );
+        }
     }
 
     #[test]

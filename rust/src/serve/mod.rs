@@ -48,6 +48,10 @@ pub struct Response {
     pub latency_s: f64,
     /// Pure engine execution time, seconds.
     pub exec_s: f64,
+    /// Time queued before the batcher pulled the request, seconds.
+    pub queue_s: f64,
+    /// Time held in an open batch waiting for it to form, seconds.
+    pub assembly_s: f64,
     /// Batch size the request was served in.
     pub batch_size: usize,
     /// Worker that served it.

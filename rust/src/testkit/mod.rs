@@ -95,7 +95,7 @@ where
         let snapshot = input.clone();
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(input)));
         if let Err(e) = result {
-            eprintln!(
+            crate::xerror!(
                 "testkit: property failed at case {case} (seed {seed}), input: {snapshot:?}"
             );
             std::panic::resume_unwind(e);

@@ -2,11 +2,20 @@
 //!
 //! Used by the `harness = false` bench targets: warms up, runs a fixed
 //! iteration budget, and prints mean/p50/p90 so `cargo bench` output is
-//! self-describing and diffable across the perf-pass iterations.
+//! self-describing and diffable across the perf-pass iterations. A
+//! [`BenchSet`] additionally collects the summaries and writes the
+//! machine-readable `BENCH_*.json` artifacts that pin the perf trajectory
+//! per PR (schema: [`SCHEMA`], validated by [`validate_bench_json`]).
 
 use std::time::Instant;
 
+use anyhow::{bail, Context, Result};
+
 use super::stats::Summary;
+use crate::obs::Json;
+
+/// Schema tag stamped into (and required of) every `BENCH_*.json`.
+pub const SCHEMA: &str = "xenos-bench-v1";
 
 /// Measure `f` for `iters` iterations after `warmup` unmeasured ones.
 /// Returns per-iteration seconds.
@@ -36,6 +45,103 @@ pub fn bench<R>(name: &str, warmup: usize, iters: usize, f: impl FnMut() -> R) -
     s
 }
 
+/// Collects named benchmark summaries and serializes them as a
+/// `BENCH_*.json` document.
+#[derive(Debug, Default)]
+pub struct BenchSet {
+    /// Suite name (`kernels`, `serve`).
+    pub suite: String,
+    entries: Vec<(String, Summary)>,
+}
+
+impl BenchSet {
+    /// Start an empty suite.
+    pub fn new(suite: &str) -> BenchSet {
+        BenchSet { suite: suite.to_string(), entries: Vec::new() }
+    }
+
+    /// Run [`bench`] and record its summary under `name`.
+    pub fn bench<R>(&mut self, name: &str, warmup: usize, iters: usize, f: impl FnMut() -> R) {
+        let s = bench(name, warmup, iters, f);
+        self.entries.push((name.to_string(), s));
+    }
+
+    /// Record an externally-measured summary.
+    pub fn push(&mut self, name: &str, s: Summary) {
+        self.entries.push((name.to_string(), s));
+    }
+
+    /// The `BENCH_*.json` document: schema tag, suite, and one
+    /// `{name, unit, summary}` entry per benchmark. Times are seconds.
+    pub fn to_json(&self) -> Json {
+        let entries = self
+            .entries
+            .iter()
+            .map(|(name, s)| {
+                Json::obj(vec![
+                    ("name", Json::Str(name.clone())),
+                    ("unit", Json::str("s")),
+                    ("summary", s.to_json()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::str(SCHEMA)),
+            ("suite", Json::Str(self.suite.clone())),
+            ("entries", Json::Arr(entries)),
+        ])
+    }
+
+    /// Write the pretty-printed document to `path`.
+    pub fn write(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().to_pretty())
+            .with_context(|| format!("writing {path}"))?;
+        println!("bench: wrote {path} ({} entries)", self.entries.len());
+        Ok(())
+    }
+}
+
+/// Validate a parsed `BENCH_*.json` document against the schema: correct
+/// schema tag, non-empty entries, each with a name, a unit, and a sane
+/// summary (n >= 1, ordered percentiles). Returns the entry names.
+pub fn validate_bench_json(doc: &Json) -> Result<Vec<String>> {
+    match doc.get("schema").and_then(Json::as_str) {
+        Some(s) if s == SCHEMA => {}
+        other => bail!("bad schema tag {other:?}, want {SCHEMA:?}"),
+    }
+    if doc.get("suite").and_then(Json::as_str).is_none() {
+        bail!("missing suite name");
+    }
+    let Some(entries) = doc.get("entries").and_then(Json::as_arr) else {
+        bail!("missing entries array");
+    };
+    if entries.is_empty() {
+        bail!("entries array is empty");
+    }
+    let mut names = Vec::with_capacity(entries.len());
+    for (i, e) in entries.iter().enumerate() {
+        let Some(name) = e.get("name").and_then(Json::as_str) else {
+            bail!("entry {i} has no name");
+        };
+        if e.get("unit").and_then(Json::as_str).is_none() {
+            bail!("entry '{name}' has no unit");
+        }
+        let s = e
+            .get("summary")
+            .and_then(Summary::from_json)
+            .with_context(|| format!("entry '{name}' has no well-formed summary"))?;
+        if s.n == 0 {
+            bail!("entry '{name}' has n = 0");
+        }
+        if !(s.min <= s.p50 && s.p50 <= s.p90 && s.p90 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max)
+        {
+            bail!("entry '{name}' has unordered percentiles");
+        }
+        names.push(name.to_string());
+    }
+    Ok(names)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -46,5 +152,35 @@ mod tests {
         assert_eq!(s.n, 10);
         assert!(s.mean > 0.0);
         assert!(s.p50 <= s.p90 && s.p90 <= s.max);
+    }
+
+    #[test]
+    fn bench_set_emits_schema_valid_json() {
+        let mut set = BenchSet::new("kernels");
+        set.bench("noop", 0, 5, || std::hint::black_box(1 + 1));
+        set.push("external", Summary::of(&[0.5, 0.6, 0.7]).unwrap());
+        let doc = set.to_json();
+        let names = validate_bench_json(&doc).unwrap();
+        assert_eq!(names, vec!["noop".to_string(), "external".to_string()]);
+        // The serialized text parses and still validates.
+        let reparsed = Json::parse(&doc.to_pretty()).unwrap();
+        assert_eq!(validate_bench_json(&reparsed).unwrap().len(), 2);
+    }
+
+    #[test]
+    fn validate_rejects_malformed_documents() {
+        assert!(validate_bench_json(&Json::parse("{}").unwrap()).is_err());
+        let wrong_tag = Json::obj(vec![
+            ("schema", Json::str("other")),
+            ("suite", Json::str("x")),
+            ("entries", Json::Arr(vec![])),
+        ]);
+        assert!(validate_bench_json(&wrong_tag).is_err());
+        let empty = Json::obj(vec![
+            ("schema", Json::str(SCHEMA)),
+            ("suite", Json::str("x")),
+            ("entries", Json::Arr(vec![])),
+        ]);
+        assert!(validate_bench_json(&empty).is_err());
     }
 }

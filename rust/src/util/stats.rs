@@ -16,13 +16,15 @@ pub struct Summary {
 }
 
 impl Summary {
-    /// Compute summary statistics. Returns `None` for an empty sample.
+    /// Compute summary statistics. NaN samples are dropped (a timing
+    /// pipeline dividing by a zero count must not take the whole report
+    /// down); returns `None` when no finite-orderable samples remain.
     pub fn of(samples: &[f64]) -> Option<Summary> {
-        if samples.is_empty() {
+        let mut sorted: Vec<f64> = samples.iter().copied().filter(|v| !v.is_nan()).collect();
+        if sorted.is_empty() {
             return None;
         }
-        let mut sorted: Vec<f64> = samples.to_vec();
-        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+        sorted.sort_by(|a, b| a.partial_cmp(b).expect("NaNs were filtered"));
         let n = sorted.len();
         let mean = sorted.iter().sum::<f64>() / n as f64;
         let var = if n > 1 {
@@ -40,6 +42,40 @@ impl Summary {
             p95: percentile_sorted(&sorted, 95.0),
             p99: percentile_sorted(&sorted, 99.0),
             max: sorted[n - 1],
+        })
+    }
+
+    /// JSON form (`{"n": ..., "mean": ..., "p50": ..., ...}`) — the shape
+    /// every `BENCH_*.json` and `--metrics-out` histogram uses.
+    pub fn to_json(&self) -> crate::obs::Json {
+        use crate::obs::Json;
+        Json::obj(vec![
+            ("n", Json::Num(self.n as f64)),
+            ("mean", Json::Num(self.mean)),
+            ("stddev", Json::Num(self.stddev)),
+            ("min", Json::Num(self.min)),
+            ("p50", Json::Num(self.p50)),
+            ("p90", Json::Num(self.p90)),
+            ("p95", Json::Num(self.p95)),
+            ("p99", Json::Num(self.p99)),
+            ("max", Json::Num(self.max)),
+        ])
+    }
+
+    /// Parse the [`Summary::to_json`] form (schema checks on committed
+    /// bench files).
+    pub fn from_json(v: &crate::obs::Json) -> Option<Summary> {
+        let f = |k: &str| v.get(k).and_then(crate::obs::Json::as_f64);
+        Some(Summary {
+            n: f("n")? as usize,
+            mean: f("mean")?,
+            stddev: f("stddev")?,
+            min: f("min")?,
+            p50: f("p50")?,
+            p90: f("p90")?,
+            p95: f("p95")?,
+            p99: f("p99")?,
+            max: f("max")?,
         })
     }
 }
@@ -91,6 +127,28 @@ mod tests {
     #[test]
     fn summary_empty_is_none() {
         assert!(Summary::of(&[]).is_none());
+    }
+
+    #[test]
+    fn summary_filters_nan_instead_of_panicking() {
+        // Regression: this used to hit `expect("NaN in samples")`.
+        let s = Summary::of(&[2.0, f64::NAN, 1.0, f64::NAN, 3.0]).unwrap();
+        assert_eq!(s.n, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean - 2.0).abs() < 1e-12);
+        // All-NaN degrades to None, same as empty.
+        assert!(Summary::of(&[f64::NAN, f64::NAN]).is_none());
+    }
+
+    #[test]
+    fn summary_json_round_trips() {
+        let s = Summary::of(&[1.0, 2.0, 3.0, 4.0, 5.0]).unwrap();
+        let got = Summary::from_json(&s.to_json()).unwrap();
+        assert_eq!(got, s);
+        // Reparsing the serialized text also survives.
+        let reparsed = crate::obs::Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(Summary::from_json(&reparsed).unwrap(), s);
     }
 
     #[test]

@@ -1,0 +1,244 @@
+//! Observability integration tests: the Chrome-trace export is
+//! well-formed (balanced nesting per thread), the metrics registry is
+//! pinned against the cluster's ground-truth counters, toggling the
+//! recorder never changes the numerics, and the committed `BENCH_*.json`
+//! artifacts stay schema-valid.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+
+use xenos::dist::exec::ClusterDriver;
+use xenos::dist::{PartitionScheme, SyncMode};
+use xenos::graph::{Graph, GraphBuilder, Shape};
+use xenos::hw::presets;
+use xenos::obs::{metrics, trace, Json};
+use xenos::ops::interp::synthetic_inputs;
+use xenos::runtime::Engine;
+use xenos::util::bench::validate_bench_json;
+
+/// The span recorder and the metrics registry are process-wide; every
+/// test that touches them serializes on this lock.
+fn obs_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn small_cnn() -> Graph {
+    let mut b = GraphBuilder::new("obs_cnn");
+    let x = b.input("x", Shape::nchw(1, 3, 16, 16));
+    let c1 = b.conv_bn_relu("c1", x, 8, 3, 1, 1);
+    let p = b.avgpool("p", c1, 2, 2);
+    let c2 = b.conv_bn_relu("c2", p, 16, 3, 1, 1);
+    let gp = b.global_pool("gp", c2);
+    let f = b.fc("fc", gp, 10);
+    let s = b.softmax("sm", f);
+    b.output(s);
+    b.finish()
+}
+
+/// Per `(pid, tid)`, complete (`ph: "X"`) events must be disjoint or
+/// properly nested — a span never straddles its parent's end.
+fn assert_balanced(doc: &Json) -> usize {
+    let evs = doc.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    let mut by_thread: BTreeMap<(u64, u64), Vec<(i64, i64)>> = BTreeMap::new();
+    let mut n = 0usize;
+    for e in evs {
+        if e.get("ph").and_then(Json::as_str) != Some("X") {
+            continue;
+        }
+        let num = |k: &str| {
+            e.get(k).and_then(Json::as_f64).unwrap_or_else(|| panic!("event missing {k}"))
+        };
+        let ts = num("ts") as i64;
+        by_thread
+            .entry((num("pid") as u64, num("tid") as u64))
+            .or_default()
+            .push((ts, ts + num("dur") as i64));
+        n += 1;
+    }
+    for ((pid, tid), mut spans) in by_thread {
+        spans.sort_unstable();
+        let mut stack: Vec<i64> = Vec::new(); // end times of open spans
+        for (ts, end) in spans {
+            while matches!(stack.last(), Some(&e) if e <= ts) {
+                stack.pop();
+            }
+            if let Some(&parent_end) = stack.last() {
+                assert!(
+                    end <= parent_end,
+                    "rank {pid} tid {tid}: span [{ts}, {end}] straddles its \
+                     parent (ends {parent_end})"
+                );
+            }
+            stack.push(end);
+        }
+    }
+    n
+}
+
+#[test]
+fn cluster_chrome_trace_is_wellformed() {
+    let _l = obs_lock();
+    let g = small_cnn();
+    let d = presets::tms320c6678();
+    let driver = ClusterDriver::local(
+        Arc::new(g.clone()),
+        &d,
+        2,
+        PartitionScheme::Mix,
+        SyncMode::Ring,
+        1,
+    )
+    .expect("cluster spins up");
+    let inputs = synthetic_inputs(&g, 11);
+    trace::clear();
+    trace::set_enabled(true);
+    driver.infer(&inputs).expect("traced inference");
+    trace::set_enabled(false);
+    let events = trace::drain();
+    trace::clear();
+
+    assert!(events.iter().any(|e| e.cat == trace::Cat::Round), "no round span");
+    assert!(events.iter().any(|e| e.cat == trace::Cat::Compute), "no compute spans");
+    assert!(
+        events.iter().any(|e| e.lane == 0) && events.iter().any(|e| e.lane == 1),
+        "spans must cover both ranks"
+    );
+
+    // The document survives a serialize/parse round trip and stays
+    // structurally sound (Perfetto rejects unbalanced nesting).
+    let doc = trace::chrome_trace(&events);
+    let parsed = Json::parse(&doc.to_pretty()).expect("chrome trace parses");
+    assert_eq!(
+        parsed.get("displayTimeUnit").and_then(Json::as_str),
+        Some("ms"),
+        "missing displayTimeUnit"
+    );
+    let n = assert_balanced(&parsed);
+    assert_eq!(n, events.len(), "every span must appear as one X event");
+}
+
+#[test]
+fn cluster_metrics_match_ground_truth() {
+    let _l = obs_lock();
+    let g = small_cnn();
+    let d = presets::tms320c6678();
+    let driver = ClusterDriver::local(
+        Arc::new(g.clone()),
+        &d,
+        2,
+        PartitionScheme::OutC,
+        SyncMode::Ring,
+        1,
+    )
+    .expect("cluster spins up");
+    let inputs = synthetic_inputs(&g, 17);
+    driver.infer(&inputs).expect("round 1");
+    driver.infer(&inputs).expect("round 2");
+
+    metrics::reset();
+    driver.publish_metrics();
+    let acc = driver.plan().accounting(&g);
+    let stats = driver.sync_stats().expect("local cluster stats");
+    assert!(acc.gathers_skipped >= 1, "OutC plan skipped nothing: {acc:?}");
+
+    // Planner accounting, published verbatim.
+    assert_eq!(
+        metrics::counter_value("cluster.plan.gathers_skipped"),
+        acc.gathers_skipped as u64
+    );
+    assert_eq!(metrics::counter_value("cluster.plan.all_gathers"), acc.all_gathers as u64);
+    assert_eq!(metrics::counter_value("cluster.plan.sync_bytes"), acc.sync_bytes);
+    // Measured rank-0 wire traffic, published verbatim.
+    assert_eq!(metrics::counter_value("cluster.sync.bytes"), stats.sync_bytes);
+    assert_eq!(metrics::counter_value("cluster.sync.gathers_skipped"), stats.gathers_skipped);
+    assert_eq!(metrics::counter_value("cluster.sync.all_gathers"), stats.all_gathers);
+    // Two rounds ran, so the runtime saw at least every plan-level skip.
+    assert!(
+        stats.gathers_skipped >= acc.gathers_skipped as u64,
+        "measured skips below plan: {stats:?} vs {acc:?}"
+    );
+
+    // The JSON snapshot carries the same numbers.
+    let snap = metrics::snapshot();
+    let bytes = snap.get("cluster.sync.bytes").and_then(Json::as_f64).expect("snapshot key");
+    assert_eq!(bytes as u64, stats.sync_bytes);
+    assert_eq!(snap.get("cluster.world").and_then(Json::as_f64), Some(2.0));
+    metrics::reset();
+}
+
+/// The mobilenet-sized variant of the pinning test — slow, run with
+/// `cargo test -- --ignored` when touching the sync or metrics paths.
+#[test]
+#[ignore]
+fn mobilenet_cluster_metrics_match_ground_truth() {
+    let _l = obs_lock();
+    let g = xenos::graph::models::mobilenet();
+    let d = presets::tms320c6678();
+    let driver = ClusterDriver::local(
+        Arc::new(g.clone()),
+        &d,
+        2,
+        PartitionScheme::Mix,
+        SyncMode::Ring,
+        2,
+    )
+    .expect("cluster spins up");
+    let inputs = synthetic_inputs(&g, 23);
+    driver.infer(&inputs).expect("inference");
+    metrics::reset();
+    driver.publish_metrics();
+    let acc = driver.plan().accounting(&g);
+    let stats = driver.sync_stats().expect("local cluster stats");
+    assert_eq!(
+        metrics::counter_value("cluster.plan.gathers_skipped"),
+        acc.gathers_skipped as u64
+    );
+    assert_eq!(metrics::counter_value("cluster.sync.bytes"), stats.sync_bytes);
+    metrics::reset();
+}
+
+#[test]
+fn recorder_toggle_is_bit_exact() {
+    let _l = obs_lock();
+    let g = small_cnn();
+    let inputs = synthetic_inputs(&g, 31);
+    let ga = Arc::new(g.clone());
+    let d = presets::tms320c6678();
+    let engines = vec![
+        Engine::interp(ga.clone()),
+        Engine::par_interp(ga.clone(), &d, 2),
+        Engine::cluster(
+            ClusterDriver::local(ga.clone(), &d, 2, PartitionScheme::Mix, SyncMode::Ring, 1)
+                .expect("cluster spins up"),
+        ),
+    ];
+    for e in &engines {
+        trace::set_enabled(false);
+        trace::clear();
+        let off = e.infer(&inputs).expect("untraced inference");
+        assert!(trace::drain().is_empty(), "{}: disabled recorder captured spans", e.name());
+        trace::set_enabled(true);
+        let on = e.infer(&inputs).expect("traced inference");
+        trace::set_enabled(false);
+        assert!(!trace::drain().is_empty(), "{}: enabled recorder captured nothing", e.name());
+        trace::clear();
+        assert_eq!(off.outputs.len(), on.outputs.len());
+        for (a, b) in off.outputs.iter().zip(&on.outputs) {
+            assert_eq!(a.data, b.data, "{}: tracing changed the numerics", e.name());
+        }
+    }
+}
+
+#[test]
+fn committed_bench_artifacts_are_schema_valid() {
+    for name in ["BENCH_kernels.json", "BENCH_serve.json"] {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join(name);
+        let text = std::fs::read_to_string(&path)
+            .unwrap_or_else(|e| panic!("reading {}: {e}", path.display()));
+        let doc = Json::parse(&text).unwrap_or_else(|e| panic!("{name} does not parse: {e:#}"));
+        let entries =
+            validate_bench_json(&doc).unwrap_or_else(|e| panic!("{name} is invalid: {e:#}"));
+        assert!(!entries.is_empty(), "{name} has no entries");
+    }
+}
