@@ -39,17 +39,18 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use super::fault::{FaultScript, FaultyTransport};
-use super::plan::{plan_cluster_opts, ClusterPlan};
+use super::plan::{plan_cluster_opts, plan_cluster_src, ClusterPlan};
 use super::shard::ShardParams;
 use super::transport::{
     accept_peers, LocalTransport, MeshHandle, TcpOptions, TcpTransport, Transport, TransportError,
     DEFAULT_HEARTBEAT, DEFAULT_RECV_TIMEOUT,
 };
 use super::wire::{self, JobSpec};
-use super::worker::{ShardWorker, SyncSnapshot, SyncStats};
+use super::worker::{ShardWorker, SyncSnapshot, SyncStats, TimedTransport};
 use crate::dist::{PartitionScheme, SyncMode};
 use crate::graph::{models, Graph, Shape};
 use crate::hw::{self, DeviceModel};
+use crate::obs::profile::CostSource;
 use crate::obs::{metrics, trace, Json};
 use crate::ops::params::ParamStore;
 use crate::ops::{Interpreter, Tensor};
@@ -79,6 +80,13 @@ pub struct ClusterOptions {
     /// backends only); rebuilt survivor meshes always get clean
     /// transports, so a scripted kill is observed exactly once.
     pub fault: Option<FaultScript>,
+    /// Cost source the partitioner scores candidate cuts with. Measured
+    /// profiles are a local-cluster facility: TCP workers re-derive the
+    /// plan analytically from the [`JobSpec`], so a driver planning from
+    /// measurements would disagree with its own workers.
+    pub cost: CostSource,
+    /// Proactive straggler demotion (`None` disables it — the default).
+    pub straggler: Option<StragglerOptions>,
 }
 
 impl Default for ClusterOptions {
@@ -90,6 +98,8 @@ impl Default for ClusterOptions {
             infer_timeout: DEFAULT_INFER_TIMEOUT,
             heartbeat: Some(DEFAULT_HEARTBEAT),
             fault: None,
+            cost: CostSource::Analytic,
+            straggler: None,
         }
     }
 }
@@ -120,6 +130,152 @@ pub struct FaultSnapshot {
     pub fallbacks: u64,
 }
 
+/// Tunables for proactive straggler demotion: how per-round busy-time
+/// ratios are smoothed, how slow a rank must be to count as a straggler,
+/// how long it must stay slow, and how often demoted members are probed
+/// for re-admission.
+#[derive(Debug, Clone, Copy)]
+pub struct StragglerOptions {
+    /// EWMA smoothing factor for per-round slowdown ratios (`0 < alpha
+    /// <= 1`; `1.0` trusts each round alone).
+    pub alpha: f64,
+    /// Demotion threshold: a rank whose smoothed busy-time ratio against
+    /// the per-round median stays above this factor is a straggler.
+    pub slowdown: f64,
+    /// Consecutive rounds a rank must stay past `slowdown` before the
+    /// driver demotes it.
+    pub patience: u32,
+    /// Successful rounds between re-admission probes of demoted members.
+    pub reprobe_every: u32,
+}
+
+impl Default for StragglerOptions {
+    fn default() -> StragglerOptions {
+        StragglerOptions { alpha: 0.5, slowdown: 2.0, patience: 3, reprobe_every: 8 }
+    }
+}
+
+/// Per-rank straggler scoring over busy-time deltas. Each round, every
+/// rank's busy time (round wall minus receive-blocked wait, from
+/// [`SyncStats`]) is divided by the per-round median and folded into an
+/// EWMA score; a rank whose score stays past the slowdown threshold for
+/// `patience` consecutive rounds is named for demotion. Pure state
+/// machine — no clocks, no transports — so tests drive it directly.
+#[derive(Debug, Clone)]
+pub struct StragglerTracker {
+    opts: StragglerOptions,
+    scores: Vec<f64>,
+    streaks: Vec<u32>,
+}
+
+impl StragglerTracker {
+    /// A fresh tracker for `world` ranks; every score starts at the
+    /// median (1.0).
+    pub fn new(opts: StragglerOptions, world: usize) -> StragglerTracker {
+        StragglerTracker { opts, scores: vec![1.0; world], streaks: vec![0; world] }
+    }
+
+    /// Forget all history and resize for a new world (after any rebuild:
+    /// rank indices shift, so old scores are meaningless).
+    pub fn reset(&mut self, world: usize) {
+        self.scores = vec![1.0; world];
+        self.streaks = vec![0; world];
+    }
+
+    /// Feed one round's per-rank busy-time deltas (µs). Returns the rank
+    /// to demote when one has stayed past the slowdown threshold for
+    /// `patience` consecutive rounds (the worst offender when several
+    /// qualify); its streak is cleared so one detection fires once.
+    pub fn observe(&mut self, busy_us: &[u64]) -> Option<usize> {
+        if busy_us.len() != self.scores.len() || busy_us.len() < 2 {
+            return None;
+        }
+        let mut sorted = busy_us.to_vec();
+        sorted.sort_unstable();
+        let median = sorted[sorted.len() / 2].max(1);
+        let alpha = self.opts.alpha.clamp(0.0, 1.0);
+        let mut victim: Option<usize> = None;
+        for (r, &busy) in busy_us.iter().enumerate() {
+            let ratio = busy as f64 / median as f64;
+            self.scores[r] = alpha * ratio + (1.0 - alpha) * self.scores[r];
+            if self.scores[r] > self.opts.slowdown {
+                self.streaks[r] += 1;
+            } else {
+                self.streaks[r] = 0;
+            }
+            if self.streaks[r] >= self.opts.patience {
+                let worse = match victim {
+                    None => true,
+                    Some(v) => self.scores[r] > self.scores[v],
+                };
+                if worse {
+                    victim = Some(r);
+                }
+            }
+        }
+        if let Some(v) = victim {
+            self.streaks[v] = 0;
+        }
+        victim
+    }
+
+    /// Current smoothed per-rank slowdown scores (1.0 = at the median).
+    pub fn scores(&self) -> &[f64] {
+        &self.scores
+    }
+}
+
+/// Straggler-adaptation counters the driver accumulates across its
+/// lifetime.
+#[derive(Debug, Default)]
+struct StragglerStats {
+    demotions: AtomicU64,
+    readmissions: AtomicU64,
+}
+
+/// Plain-value view of the driver's straggler-adaptation counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StragglerSnapshot {
+    /// Proactive demotions performed (straggler re-plans — distinct from
+    /// the failure-driven re-plans in [`FaultSnapshot`]).
+    pub demotions: u64,
+    /// Demoted members probed healthy and re-admitted.
+    pub readmissions: u64,
+    /// Members currently demoted and awaiting re-admission.
+    pub demoted: u64,
+}
+
+/// Mutable straggler-adaptation state, alongside the backend it watches.
+struct AdaptState {
+    tracker: StragglerTracker,
+    /// Cumulative per-rank busy-time as of the last observation (µs).
+    prev_busy: Vec<u64>,
+    /// Demoted members awaiting re-admission, oldest first: the worker
+    /// address for TCP backends, `None` for local ranks (re-spawned
+    /// in-process).
+    demoted: Vec<Option<String>>,
+    /// Successful rounds since the last re-admission probe.
+    rounds_since_probe: u32,
+}
+
+impl AdaptState {
+    fn new(opts: StragglerOptions, world: usize) -> AdaptState {
+        AdaptState {
+            tracker: StragglerTracker::new(opts, world),
+            prev_busy: vec![0; world],
+            demoted: Vec::new(),
+            rounds_since_probe: 0,
+        }
+    }
+
+    /// Reset scoring for a new world size; the demotion ledger survives.
+    fn reset(&mut self, world: usize) {
+        self.tracker.reset(world);
+        self.prev_busy = vec![0; world];
+        self.rounds_since_probe = 0;
+    }
+}
+
 /// A handle on a running cluster; `infer` runs one distributed inference,
 /// transparently re-planning over survivors when a rank fails.
 pub struct ClusterDriver {
@@ -133,6 +289,7 @@ pub struct ClusterDriver {
     master: Arc<ParamStore>,
     state: Mutex<DriverState>,
     faults: Arc<FaultStats>,
+    stragglers: StragglerStats,
 }
 
 /// What the driver needs to rebuild its backend from scratch.
@@ -151,6 +308,8 @@ struct DriverState {
     backend: Backend,
     /// Surviving worker addresses, rank order (TCP backends only).
     hosts: Vec<String>,
+    /// Straggler-adaptation state (`None` when the feature is off).
+    adapt: Option<AdaptState>,
 }
 
 enum Backend {
@@ -267,7 +426,16 @@ impl ClusterDriver {
         }
         let p = p.max(1);
         let precision = if calib.is_some() { Precision::Int8 } else { Precision::F32 };
-        let plan = plan_cluster_opts(&graph, device, p, scheme, sync, precision, opts.resident);
+        let plan = plan_cluster_src(
+            &graph,
+            device,
+            p,
+            scheme,
+            sync,
+            precision,
+            opts.resident,
+            &opts.cost,
+        );
         let master = Arc::new(ParamStore::for_graph(&graph));
         let faults = Arc::new(FaultStats::default());
         let backend = Backend::Local(LocalCluster::spawn(
@@ -279,6 +447,7 @@ impl ClusterDriver {
             opts.fault.as_ref(),
             faults.clone(),
         )?);
+        let adapt = opts.straggler.map(|s| AdaptState::new(s, p));
         Ok(ClusterDriver {
             graph,
             scheme,
@@ -288,8 +457,15 @@ impl ClusterDriver {
             opts,
             kind: DriverKind::Local { device: device.clone() },
             master,
-            state: Mutex::new(DriverState { world: p, plan, backend, hosts: Vec::new() }),
+            state: Mutex::new(DriverState {
+                world: p,
+                plan,
+                backend,
+                hosts: Vec::new(),
+                adapt,
+            }),
             faults,
+            stragglers: StragglerStats::default(),
         })
     }
 
@@ -355,6 +531,12 @@ impl ClusterDriver {
         calib: Option<&CalibTable>,
     ) -> Result<ClusterDriver> {
         anyhow::ensure!(!hosts.is_empty(), "need at least one worker host");
+        anyhow::ensure!(
+            matches!(opts.cost, CostSource::Analytic),
+            "measured costs are a local-cluster facility: TCP workers re-derive \
+             the plan analytically from the job spec, so a measured driver plan \
+             would disagree with theirs"
+        );
         let graph = Arc::new(
             models::by_name(model).with_context(|| format!("unknown model {model}"))?,
         );
@@ -380,6 +562,7 @@ impl ClusterDriver {
             sync,
             precision,
         )?;
+        let adapt = opts.straggler.map(|s| AdaptState::new(s, p));
         Ok(ClusterDriver {
             graph,
             scheme,
@@ -397,8 +580,10 @@ impl ClusterDriver {
                 plan,
                 backend: Backend::Tcp(cluster),
                 hosts: hosts.to_vec(),
+                adapt,
             }),
             faults: Arc::new(FaultStats::default()),
+            stragglers: StragglerStats::default(),
         })
     }
 
@@ -441,6 +626,20 @@ impl ClusterDriver {
         }
     }
 
+    /// The driver's straggler-adaptation counters: proactive demotions,
+    /// re-admissions, and members currently demoted.
+    pub fn straggler_stats(&self) -> StragglerSnapshot {
+        let demoted = lock_recover(&self.state)
+            .adapt
+            .as_ref()
+            .map_or(0, |a| a.demoted.len() as u64);
+        StragglerSnapshot {
+            demotions: self.stragglers.demotions.load(Ordering::Relaxed),
+            readmissions: self.stragglers.readmissions.load(Ordering::Relaxed),
+            demoted,
+        }
+    }
+
     /// Publish the driver's counters to the global metrics registry under
     /// the `cluster.*` naming scheme (see [`crate::obs::metrics`]):
     /// measured sync counters (`cluster.sync.*`, local backends), planner
@@ -467,6 +666,10 @@ impl ClusterDriver {
         metrics::counter_set("cluster.faults.replans", f.replans);
         metrics::counter_set("cluster.faults.retries", f.retries);
         metrics::counter_set("cluster.faults.fallbacks", f.fallbacks);
+        let st = self.straggler_stats();
+        metrics::counter_set("cluster.straggler.demotions", st.demotions);
+        metrics::counter_set("cluster.straggler.readmissions", st.readmissions);
+        metrics::gauge_set("cluster.straggler.demoted", st.demoted as f64);
         metrics::gauge_set("cluster.world", self.world() as f64);
     }
 
@@ -534,19 +737,21 @@ impl ClusterDriver {
         let _round_sp = trace::span("round", trace::Cat::Round);
         let mut state = lock_recover(&self.state);
         loop {
-            let failure = match &state.backend {
+            let outcome = match &state.backend {
                 Backend::Single(e) => return self.run_single(e, inputs),
                 Backend::Dead => bail!("cluster is down after a failed re-plan"),
-                Backend::Local(c) => {
-                    match c.infer(inputs, self.opts.infer_timeout, &self.faults) {
-                        Ok(v) => return Ok(v),
-                        Err(f) => f,
-                    }
+                Backend::Local(c) => c.infer(inputs, self.opts.infer_timeout, &self.faults),
+                Backend::Tcp(c) => c.infer(inputs),
+            };
+            let failure = match outcome {
+                Ok(v) => {
+                    // A healthy round: feed the straggler tracker, which
+                    // may demote a slow rank or re-admit a demoted one for
+                    // the *next* round — never this round's result.
+                    self.adapt_stragglers(&mut state);
+                    return Ok(v);
                 }
-                Backend::Tcp(c) => match c.infer(inputs) {
-                    Ok(v) => return Ok(v),
-                    Err(f) => f,
-                },
+                Err(f) => f,
             };
             self.faults.failures.fetch_add(1, Ordering::Relaxed);
             let culprit = match failure.culprit {
@@ -582,6 +787,169 @@ impl ClusterDriver {
         }
     }
 
+    /// Feed one successful round into the straggler tracker and act on
+    /// its verdict: demote a persistent straggler (re-plan over the other
+    /// ranks, exactly the survivor machinery — but *before* any deadline
+    /// trips), or probe a demoted member for re-admission. Local backends
+    /// only: remote workers keep their counters in their own processes.
+    fn adapt_stragglers(&self, state: &mut DriverState) {
+        if state.adapt.is_none() {
+            return;
+        }
+        let busy: Vec<u64> = match &state.backend {
+            Backend::Local(c) => c.stats.iter().map(|s| s.snapshot().busy_us).collect(),
+            _ => return,
+        };
+        let adapt = state.adapt.as_mut().expect("checked above");
+        if adapt.prev_busy.len() != busy.len() {
+            // Out of step with the backend (shouldn't happen: every
+            // rebuild resets us) — re-baseline rather than mis-score.
+            adapt.reset(busy.len());
+            adapt.prev_busy = busy;
+            return;
+        }
+        let deltas: Vec<u64> = busy
+            .iter()
+            .zip(&adapt.prev_busy)
+            .map(|(now, prev)| now.saturating_sub(*prev))
+            .collect();
+        adapt.prev_busy = busy;
+        let victim = adapt.tracker.observe(&deltas);
+        for (r, sc) in adapt.tracker.scores().iter().enumerate() {
+            metrics::gauge_set(&format!("cluster.straggler.score.r{r}"), *sc);
+        }
+        adapt.rounds_since_probe += 1;
+        let probe_due = !adapt.demoted.is_empty()
+            && adapt.rounds_since_probe >= adapt.tracker.opts.reprobe_every;
+        if let Some(victim) = victim {
+            if state.world <= 2 {
+                // Nothing to demote into: a 2-rank cluster would collapse
+                // to the single-device fallback. Keep scoring; a genuine
+                // failure still has the deadline path.
+                return;
+            }
+            let score = state
+                .adapt
+                .as_ref()
+                .and_then(|a| a.tracker.scores().get(victim).copied())
+                .unwrap_or(0.0);
+            let host = state.hosts.get(victim).cloned();
+            crate::xwarn!(
+                "cluster: rank {victim} is a straggler (score {score:.2}); \
+                 demoting proactively over {} peer(s)",
+                state.world - 1
+            );
+            match self.rebuild(state, victim) {
+                Ok(()) => {
+                    self.stragglers.demotions.fetch_add(1, Ordering::Relaxed);
+                    if let Some(a) = state.adapt.as_mut() {
+                        a.demoted.push(host);
+                    }
+                }
+                Err(e) => {
+                    crate::xwarn!("cluster: demoting rank {victim} failed: {e:#}");
+                }
+            }
+            return;
+        }
+        if probe_due {
+            if let Some(a) = state.adapt.as_mut() {
+                a.rounds_since_probe = 0;
+            }
+            if let Err(e) = self.readmit(state) {
+                crate::xwarn!("cluster: re-admission attempt failed (will retry): {e:#}");
+            }
+        }
+    }
+
+    /// Try to bring the oldest demoted member back: probe it for
+    /// liveness (TCP) and rebuild the cluster at `world + 1`. Local
+    /// demoted ranks are re-spawned in-process with clean transports, so
+    /// the probe is implicit. On success the re-admitted member joins the
+    /// next round; results stay bit-identical at every world size.
+    fn readmit(&self, state: &mut DriverState) -> Result<()> {
+        let member = match state.adapt.as_ref().and_then(|a| a.demoted.first()) {
+            Some(m) => m.clone(),
+            None => return Ok(()),
+        };
+        let world = state.world + 1;
+        match (&self.kind, member) {
+            (DriverKind::Local { device }, _) => {
+                let plan = plan_cluster_src(
+                    &self.graph,
+                    device,
+                    world,
+                    self.scheme,
+                    self.sync,
+                    self.precision,
+                    self.opts.resident,
+                    &self.opts.cost,
+                );
+                let cluster = LocalCluster::spawn(
+                    &self.graph,
+                    &plan,
+                    &self.master,
+                    &self.opts,
+                    self.calib.as_ref(),
+                    None,
+                    self.faults.clone(),
+                )?;
+                state.plan = plan;
+                state.world = world;
+                state.backend = Backend::Local(cluster);
+            }
+            (DriverKind::Tcp { model, device_name }, Some(host)) => {
+                // Liveness first: a still-slow or dead host must not take
+                // the healthy cluster down with a failed re-dial.
+                probe_host(&host, self.opts.recv_timeout)
+                    .with_context(|| format!("probing demoted worker at {host}"))?;
+                let mut hosts = state.hosts.clone();
+                hosts.push(host);
+                // Close the old control links first: surviving workers
+                // accept the new session only once the old one unwinds.
+                state.backend = Backend::Dead;
+                let device = hw::by_name(device_name)
+                    .with_context(|| format!("unknown device {device_name}"))?;
+                let plan = plan_cluster_opts(
+                    &self.graph,
+                    &device,
+                    world,
+                    self.scheme,
+                    self.sync,
+                    self.precision,
+                    self.opts.resident,
+                );
+                let cluster = dial_workers(
+                    &hosts,
+                    model,
+                    device_name,
+                    &self.graph,
+                    &plan,
+                    &self.master,
+                    self.calib.as_ref(),
+                    &self.opts,
+                    self.scheme,
+                    self.sync,
+                    self.precision,
+                )?;
+                state.plan = plan;
+                state.world = world;
+                state.hosts = hosts;
+                state.backend = Backend::Tcp(cluster);
+            }
+            (DriverKind::Tcp { .. }, None) => {
+                bail!("demoted member has no recorded host");
+            }
+        }
+        self.stragglers.readmissions.fetch_add(1, Ordering::Relaxed);
+        let world = state.world;
+        if let Some(a) = state.adapt.as_mut() {
+            a.demoted.remove(0);
+            a.reset(world);
+        }
+        Ok(())
+    }
+
     /// Rebuild the backend without `culprit`: re-run the planner for the
     /// survivor count, re-extract every shard's weights from the master
     /// store, and stand a fresh mesh up. With fewer than two survivors,
@@ -594,11 +962,14 @@ impl ClusterDriver {
             state.backend = Backend::Single(self.single_engine()?);
             state.world = 1;
             state.hosts.clear();
+            if let Some(a) = state.adapt.as_mut() {
+                a.reset(1);
+            }
             return Ok(());
         }
         match &self.kind {
             DriverKind::Local { device } => {
-                let plan = plan_cluster_opts(
+                let plan = plan_cluster_src(
                     &self.graph,
                     device,
                     survivors,
@@ -606,6 +977,7 @@ impl ClusterDriver {
                     self.sync,
                     self.precision,
                     self.opts.resident,
+                    &self.opts.cost,
                 );
                 // Survivor meshes are always clean: fault scripts apply to
                 // the initial build only.
@@ -659,6 +1031,11 @@ impl ClusterDriver {
                 state.backend = Backend::Tcp(cluster);
             }
         }
+        // Rank indices shifted: old straggler scores are meaningless.
+        let world = state.world;
+        if let Some(a) = state.adapt.as_mut() {
+            a.reset(world);
+        }
         Ok(())
     }
 
@@ -708,6 +1085,12 @@ impl ClusterDriver {
                 )?;
                 state.backend = Backend::Tcp(cluster);
             }
+        }
+        // The fresh mesh starts its counters at zero: reset the straggler
+        // baseline so the first post-rebuild round is not misread.
+        let world = state.world;
+        if let Some(a) = state.adapt.as_mut() {
+            a.reset(world);
         }
         Ok(())
     }
@@ -790,21 +1173,30 @@ impl LocalCluster {
                     |id| super::shard::quant_row_offset(graph, plan, rank, id),
                 ))
             });
+            // Timing sits *inside* any fault wrapper: a scripted delay
+            // then lands in the afflicted rank's busy time (wall minus
+            // wait), not in its wait — exactly how a genuinely slow
+            // device presents — while its peers' blocked receives land in
+            // their wait. That separation is the straggler signal.
+            let rstats = Arc::new(SyncStats::default());
+            let timed: Box<dyn Transport> =
+                Box::new(TimedTransport::wrap(Box::new(transport), rstats.clone()));
             let transport: Box<dyn Transport> = match fault {
                 Some(script) if script.afflicts(rank) => {
-                    Box::new(FaultyTransport::wrap(Box::new(transport), script))
+                    Box::new(FaultyTransport::wrap(timed, script))
                 }
-                _ => Box::new(transport),
+                _ => timed,
             };
-            let worker = ShardWorker::with_quant(
+            let worker = ShardWorker::with_quant_stats(
                 graph.clone(),
                 plan.clone(),
                 shard,
                 transport,
                 opts.threads,
                 quant,
+                rstats.clone(),
             );
-            stats.push(worker.stats());
+            stats.push(rstats);
             let out_tx = out_tx.clone();
             let faults = faults.clone();
             let handle = std::thread::Builder::new()
@@ -939,6 +1331,19 @@ fn panic_message(e: Box<dyn std::any::Any + Send>) -> String {
     } else {
         "worker panicked".to_string()
     }
+}
+
+/// Liveness probe for a (demoted) worker host: dial, send
+/// [`wire::CTRL_PROBE`], and expect the echo within `timeout`. The
+/// worker answers without consuming a session, so probing is free.
+fn probe_host(host: &str, timeout: Duration) -> Result<()> {
+    let mut sock = TcpStream::connect(host).with_context(|| format!("connecting to {host}"))?;
+    sock.set_nodelay(true)?;
+    sock.set_read_timeout(Some(timeout))?;
+    wire::write_frame(&mut sock, wire::CTRL_PROBE, &[])?;
+    let (tag, _) = wire::read_frame(&mut sock).context("reading probe echo")?;
+    anyhow::ensure!(tag == wire::CTRL_PROBE, "expected probe echo, got {tag:#x}");
+    Ok(())
 }
 
 /// Dial `hosts` in rank order and ship each worker its spec, parameter
@@ -1132,6 +1537,12 @@ pub fn serve_listener(listener: &TcpListener, sessions: Option<usize>) -> Result
                     continue;
                 }
             },
+            Ok((wire::CTRL_PROBE, _)) => {
+                // A liveness probe (straggler re-admission): echo and keep
+                // serving — probes never consume a session.
+                let _ = wire::write_frame(&mut ctrl, wire::CTRL_PROBE, &[]);
+                continue;
+            }
             Ok((tag, _)) => {
                 crate::xwarn!("dist-worker: dropping {peer}: frame {tag:#x} before the job spec");
                 continue;
@@ -1153,6 +1564,7 @@ pub fn serve_listener(listener: &TcpListener, sessions: Option<usize>) -> Result
             trace::set_enabled(false);
             trace::clear();
         }
+        crate::obs::log::set_rank(None);
         served += 1;
     }
 }
@@ -1171,6 +1583,9 @@ fn serve_session(listener: &TcpListener, ctrl: &mut TcpStream, spec: &JobSpec) -
         trace::set_enabled(true);
         trace::set_lane(spec.rank as u32);
     }
+    // Tag this thread's log lines with the session's rank so interleaved
+    // worker output attributes cleanly (serve_listener resets this).
+    crate::obs::log::set_rank(Some(spec.rank as u32));
     let (tag, payload) = wire::read_frame(ctrl).context("reading shard parameters")?;
     anyhow::ensure!(tag == wire::CTRL_PARAMS, "expected params frame, got {tag:#x}");
     let params = ShardParams::from_nodes(wire::decode_params(&payload)?);
@@ -1265,6 +1680,11 @@ fn serve_session(listener: &TcpListener, ctrl: &mut TcpStream, spec: &JobSpec) -
             wire::CTRL_TRACE => {
                 let doc = trace::events_to_json(&trace::drain()).to_string();
                 wire::write_frame(ctrl, wire::CTRL_TRACE, doc.as_bytes())?;
+            }
+            wire::CTRL_PROBE => {
+                // Liveness probe mid-session: echo it (the driver probes
+                // demoted members before re-admitting them).
+                wire::write_frame(ctrl, wire::CTRL_PROBE, &[])?;
             }
             wire::CTRL_SHUTDOWN => return Ok(()),
             other => bail!("unexpected control frame {other:#x}"),

@@ -36,11 +36,14 @@ pub mod transport;
 pub mod wire;
 pub mod worker;
 
-pub use driver::{serve_listener, ClusterDriver, ClusterOptions, FaultSnapshot};
+pub use driver::{
+    serve_listener, ClusterDriver, ClusterOptions, FaultSnapshot, StragglerOptions,
+    StragglerSnapshot, StragglerTracker,
+};
 pub use fault::{Fault, FaultScript, FaultyTransport};
 pub use plan::{
-    outc_slices, plan_cluster, plan_cluster_opts, ClusterPlan, LayerScheme, Residency,
-    SyncAccounting,
+    outc_slices, plan_cluster, plan_cluster_opts, plan_cluster_src, ClusterPlan, LayerScheme,
+    Residency, SyncAccounting,
 };
 pub use shard::{quant_row_offset, ShardParams};
 pub use transport::{
@@ -48,4 +51,4 @@ pub use transport::{
     WireScalar,
 };
 pub use wire::JobSpec;
-pub use worker::{ShardWorker, SyncSnapshot, SyncStats};
+pub use worker::{ShardWorker, SyncSnapshot, SyncStats, TimedTransport};

@@ -22,7 +22,8 @@
 
 use crate::dist::{halo_bytes, PartitionScheme, SyncMode};
 use crate::graph::{Graph, Node, NodeId, OpKind};
-use crate::hw::DeviceModel;
+use crate::hw::{DeviceModel, LinkModel};
+use crate::obs::profile::CostSource;
 use crate::opt::{dos, OptLevel};
 use crate::quant::Precision;
 use crate::sim::cost::node_cost;
@@ -44,6 +45,18 @@ pub enum LayerScheme {
     InH,
     /// Input-width shard: column-sharded with column halos.
     InW,
+}
+
+impl LayerScheme {
+    /// Stable lowercase label (drift reports, metrics, logs).
+    pub fn label(&self) -> &'static str {
+        match self {
+            LayerScheme::Replicated => "replicated",
+            LayerScheme::OutC => "outc",
+            LayerScheme::InH => "inh",
+            LayerScheme::InW => "inw",
+        }
+    }
 }
 
 /// How one node's output activation is distributed across the cluster
@@ -100,6 +113,32 @@ impl ClusterPlan {
             residency: vec![Residency::Gathered; n],
             partial: vec![false; n],
         }
+    }
+
+    /// The scheme label of one node (`"replicated"`/`"outc"`/...).
+    pub fn scheme_label(&self, id: NodeId) -> String {
+        self.schemes[id].label().to_string()
+    }
+
+    /// The per-device seconds this plan *predicts* for one node, given the
+    /// single-device analytic (or measured) estimate `base_s` — the exact
+    /// formula [`plan_cluster_opts`] priced the node's chosen scheme with:
+    /// `base / world + sync_time(bytes)` for sharded schemes, `base`
+    /// untouched for replicated ones. `xenos analyze` uses this as the
+    /// prediction column of the plan-vs-actual report.
+    pub fn predicted_node_s(&self, g: &Graph, node: &Node, base_s: f64, link: &LinkModel) -> f64 {
+        if self.world <= 1 {
+            return base_s;
+        }
+        let sync_bytes = match self.schemes[node.id] {
+            LayerScheme::Replicated => return base_s,
+            LayerScheme::OutC => node.out.bytes(),
+            LayerScheme::InH => halo_bytes(g, node, self.world, true),
+            LayerScheme::InW => halo_bytes(g, node, self.world, false),
+        };
+        let sync_bytes = wire_bytes(sync_bytes, self.precision);
+        base_s / self.world as f64
+            + crate::dist::sync_time(self.sync, self.world, sync_bytes, link)
     }
 
     /// Number of sharded (non-replicated) operators.
@@ -342,6 +381,24 @@ pub fn plan_cluster_opts(
     precision: Precision,
     resident: bool,
 ) -> ClusterPlan {
+    plan_cluster_src(g, device, p, scheme, sync, precision, resident, &CostSource::Analytic)
+}
+
+/// [`plan_cluster_opts`] with an explicit [`CostSource`]: per-node base
+/// costs come from measured op profiles where available (`--measured-costs`),
+/// the analytic model elsewhere. Only the *base* per-op estimate changes —
+/// sync traffic is still priced by the analytic link model.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_cluster_src(
+    g: &Graph,
+    device: &DeviceModel,
+    p: usize,
+    scheme: PartitionScheme,
+    sync: SyncMode,
+    precision: Precision,
+    resident: bool,
+    source: &CostSource,
+) -> ClusterPlan {
     let p = p.max(1);
     if p == 1 {
         let mut plan =
@@ -366,7 +423,8 @@ pub fn plan_cluster_opts(
                     &[LayerScheme::OutC, LayerScheme::InH, LayerScheme::InW]
                 }
             };
-            let base = node_cost(g, node, dplan.node(node.id), device).total_s;
+            let base =
+                source.node_total_s(node_cost(g, node, dplan.node(node.id), device).total_s, node);
             let mut best = LayerScheme::Replicated;
             let mut best_t = base;
             for &c in candidates {

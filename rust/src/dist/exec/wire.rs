@@ -55,6 +55,11 @@ pub const CTRL_CLOCK: u64 = 0xFFFF_001A;
 /// the reply payload is the UTF-8 JSON interchange form
 /// ([`crate::obs::trace::events_to_json`]).
 pub const CTRL_TRACE: u64 = 0xFFFF_001B;
+/// Driver → worker: liveness probe (empty payload, echoed back verbatim).
+/// The straggler re-admission path sends it before re-dialing a
+/// previously demoted host; an idle worker answers it both outside and
+/// inside a session without consuming its session budget.
+pub const CTRL_PROBE: u64 = 0xFFFF_001C;
 
 /// Frame-kind flag for peer-link tags: the payload is raw i8 (quantized
 /// activations), **one byte per element on the wire** — the quantized

@@ -126,6 +126,14 @@ pub struct SyncStats {
     pub halo_exchanges: AtomicU64,
     /// Logical bytes synchronized.
     pub sync_bytes: AtomicU64,
+    /// Inference rounds this rank completed.
+    pub rounds: AtomicU64,
+    /// µs of round wall time *not* spent blocked on peers — compute plus
+    /// this rank's own transport-side stalls (the straggler signal).
+    pub busy_us: AtomicU64,
+    /// µs blocked in peer receives ([`TimedTransport`]); a healthy rank
+    /// waiting out a straggler accumulates here, not in `busy_us`.
+    pub wait_us: AtomicU64,
 }
 
 impl SyncStats {
@@ -137,6 +145,9 @@ impl SyncStats {
             reduce_scatters: self.reduce_scatters.load(Ordering::Relaxed),
             halo_exchanges: self.halo_exchanges.load(Ordering::Relaxed),
             sync_bytes: self.sync_bytes.load(Ordering::Relaxed),
+            rounds: self.rounds.load(Ordering::Relaxed),
+            busy_us: self.busy_us.load(Ordering::Relaxed),
+            wait_us: self.wait_us.load(Ordering::Relaxed),
         }
     }
 }
@@ -154,6 +165,71 @@ pub struct SyncSnapshot {
     pub halo_exchanges: u64,
     /// Logical bytes synchronized.
     pub sync_bytes: u64,
+    /// Rounds completed.
+    pub rounds: u64,
+    /// µs of non-blocked round time.
+    pub busy_us: u64,
+    /// µs blocked in peer receives.
+    pub wait_us: u64,
+}
+
+/// A [`Transport`] decorator that accounts time blocked in receives into a
+/// rank's [`SyncStats::wait_us`]. Drivers install it *inside* any
+/// [`FaultyTransport`](super::fault::FaultyTransport) wrapper, so a
+/// scripted slow rank's own stalls land in its busy time (wall − wait)
+/// while its peers' blocked receives land in theirs — which is what lets
+/// the straggler scorer tell the slow rank from the ranks waiting on it.
+pub struct TimedTransport {
+    inner: Box<dyn Transport>,
+    stats: Arc<SyncStats>,
+}
+
+impl TimedTransport {
+    /// Wrap `inner`, accounting receive-blocked time into `stats`.
+    pub fn wrap(inner: Box<dyn Transport>, stats: Arc<SyncStats>) -> TimedTransport {
+        TimedTransport { inner, stats }
+    }
+
+    fn timed<T>(&self, f: impl FnOnce() -> TransportResult<T>) -> TransportResult<T> {
+        let start = std::time::Instant::now();
+        let r = f();
+        self.stats.wait_us.fetch_add(start.elapsed().as_micros() as u64, Ordering::Relaxed);
+        r
+    }
+}
+
+impl Transport for TimedTransport {
+    fn rank(&self) -> usize {
+        self.inner.rank()
+    }
+
+    fn world(&self) -> usize {
+        self.inner.world()
+    }
+
+    fn send(&self, to: usize, tag: u64, data: &[f32]) -> TransportResult<()> {
+        self.inner.send(to, tag, data)
+    }
+
+    fn recv(&self, from: usize, tag: u64) -> TransportResult<Vec<f32>> {
+        self.timed(|| self.inner.recv(from, tag))
+    }
+
+    fn send_bytes(&self, to: usize, tag: u64, data: &[u8]) -> TransportResult<()> {
+        self.inner.send_bytes(to, tag, data)
+    }
+
+    fn recv_bytes(&self, from: usize, tag: u64) -> TransportResult<Vec<u8>> {
+        self.timed(|| self.inner.recv_bytes(from, tag))
+    }
+
+    fn abort(&self, culprit: Option<usize>, reason: &str) {
+        self.inner.abort(culprit, reason)
+    }
+
+    fn sever(&self) {
+        self.inner.sever()
+    }
 }
 
 /// Output region of one sharded kernel launch.
@@ -251,6 +327,24 @@ impl ShardWorker {
         threads: usize,
         quant: Option<Arc<QuantRun>>,
     ) -> ShardWorker {
+        let stats = Arc::new(SyncStats::default());
+        Self::with_quant_stats(graph, plan, params, transport, threads, quant, stats)
+    }
+
+    /// As [`ShardWorker::with_quant`] with an externally-owned stats
+    /// block — drivers that wrap the transport in a [`TimedTransport`]
+    /// pass the same `Arc` to both so receive-wait time and the worker's
+    /// round counters land in one place.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_quant_stats(
+        graph: Arc<Graph>,
+        plan: ClusterPlan,
+        params: ShardParams,
+        transport: Box<dyn Transport>,
+        threads: usize,
+        quant: Option<Arc<QuantRun>>,
+        stats: Arc<SyncStats>,
+    ) -> ShardWorker {
         assert_eq!(plan.schemes.len(), graph.len(), "plan does not match graph");
         assert_eq!(plan.world, transport.world(), "plan does not match transport world");
         let threads = crate::ops::par_exec::clamp_workers(threads);
@@ -282,16 +376,7 @@ impl ShardWorker {
                 .collect(),
             None => vec![None; graph.len()],
         };
-        ShardWorker {
-            graph,
-            plan,
-            params,
-            transport,
-            pool,
-            quant,
-            partial_w,
-            stats: Arc::new(SyncStats::default()),
-        }
+        ShardWorker { graph, plan, params, transport, pool, quant, partial_w, stats }
     }
 
     /// This worker's rank.
@@ -325,7 +410,12 @@ impl ShardWorker {
             // with its own timeline lane for the merged per-rank trace.
             trace::set_lane(self.rank() as u32);
         }
-        match self.run_inner(inputs) {
+        // Tag this thread's log lines with the rank (satellite of the
+        // straggler telemetry: interleaved worker logs stay attributable).
+        crate::obs::log::set_rank(Some(self.rank() as u32));
+        let start = std::time::Instant::now();
+        let wait_before = self.stats.wait_us.load(Ordering::Relaxed);
+        let res = match self.run_inner(inputs) {
             Ok(v) => Ok(v),
             Err(e) => {
                 if !e.is_abort() {
@@ -333,7 +423,17 @@ impl ShardWorker {
                 }
                 Err(e)
             }
+        };
+        if res.is_ok() {
+            // Round accounting: wall time split into receive-blocked wait
+            // (accumulated by the TimedTransport while the round ran) and
+            // everything else — compute plus this rank's own stalls.
+            let wall_us = start.elapsed().as_micros() as u64;
+            let wait_us = self.stats.wait_us.load(Ordering::Relaxed).saturating_sub(wait_before);
+            self.stats.busy_us.fetch_add(wall_us.saturating_sub(wait_us), Ordering::Relaxed);
+            self.stats.rounds.fetch_add(1, Ordering::Relaxed);
         }
+        res
     }
 
     fn run_inner(&self, inputs: &[Tensor]) -> TransportResult<Vec<Tensor>> {

@@ -60,6 +60,8 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("dist-worker") => cmd_dist_worker(args),
         Some("dist-run") => cmd_dist_run(args),
         Some("profile") => cmd_profile(args),
+        Some("analyze") => cmd_analyze(args),
+        Some("bench-diff") => cmd_bench_diff(args),
         Some("repro") => cmd_repro(args),
         Some("inspect") => cmd_inspect(args),
         Some(other) => bail!("unknown subcommand {other}\n{USAGE}"),
@@ -70,8 +72,10 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: xenos <optimize|run|serve|quantize|dist|dist-worker|dist-run|profile|repro|inspect>
+const USAGE: &str = "usage: xenos <optimize|run|serve|quantize|dist|dist-worker|dist-run|profile|analyze|bench-diff|repro|inspect>
   optimize --model M --device D            run the automatic optimizer, print the plan
+           (--search refines layouts; --measured-costs [--profile-db F] scores the
+            search against profiled op times from `xenos analyze`)
   run      --model M --device D --level L  simulate inference (L: vanilla|ho|xenos)
   serve    --artifacts DIR --variant V --requests N --workers W --batch B --rate R
   serve    --model M --engine par|interp|cluster --threads T   serve a zoo model numerically
@@ -94,12 +98,29 @@ const USAGE: &str = "usage: xenos <optimize|run|serve|quantize|dist|dist-worker|
            survivor re-planning path; fault counters print after the run;
            --trace out.json dumps the merged per-rank timeline (remote
            workers' clocks aligned over the control link) and
-           --metrics-out m.json snapshots the cluster counters
+           --metrics-out m.json snapshots the cluster counters;
+           --straggler enables proactive rank demotion (EWMA busy-time
+           scoring; tune with --straggler-slowdown F --straggler-patience N
+           --straggler-alpha A --straggler-reprobe N);
+           --measured-costs [--profile-db F] plans from profiled op times
+           (--local only)
   profile  --model M --engine interp|par|cluster [--iters N] [--precision f32|int8]
            [--trace out.json] [--metrics-out m.json]   run under the span
            recorder and print the compute/wait/halo time split; --trace
            writes a Perfetto-loadable Chrome trace (--engine cluster merges
            the per-rank timelines; size it with --cluster-devices P)
+  analyze  --model M --engine interp|par|cluster [--iters N] [--top K]
+           [--report out.json]   plan-vs-actual drift: run under the span
+           recorder, join measured per-op times against the cost model's
+           predictions (and the cluster plan's split schemes with --engine
+           cluster), print the top-K drift offenders and per-rank
+           compute/wait/halo shares; measured profiles persist to
+           --profile-db F (default ~/.xenos/profiles.json; --no-save skips)
+           and feed later runs via --measured-costs
+  bench-diff --baseline BENCH.json --current NEW.json [--max-regress PCT]
+           compare two bench artifacts; exits non-zero when any benchmark's
+           mean regressed past PCT% (default 25) plus a noise floor of two
+           standard errors of each run — the CI perf gate
   repro    --exp ID|all                    regenerate a paper table/figure
   inspect  --model M                       dump the model graph
 global: --quiet silences all diagnostics; XENOS_LOG=off|error|warn|info|debug|trace
@@ -130,13 +151,41 @@ fn level_arg(args: &Args) -> Result<OptLevel> {
     }
 }
 
+/// The cost source behind `--measured-costs [--profile-db F]`: profiled
+/// op times recorded by `xenos analyze`, falling back per-op to the
+/// analytic model for uncovered signatures. Without the flag, analytic.
+fn cost_source_arg(args: &Args) -> Result<xenos::obs::profile::CostSource> {
+    use xenos::obs::profile::{default_db_path, CostSource, ProfileDb};
+    if !args.flag("measured-costs") {
+        return Ok(CostSource::Analytic);
+    }
+    let path = match args.get("profile-db") {
+        Some(p) => std::path::PathBuf::from(p),
+        None => default_db_path(),
+    };
+    let db = ProfileDb::load(&path)
+        .with_context(|| format!("loading profile db {}", path.display()))?;
+    anyhow::ensure!(
+        !db.is_empty(),
+        "--measured-costs: profile db {} is empty — run `xenos analyze` first",
+        path.display()
+    );
+    println!("measured costs: {} op signature(s) from {}", db.len(), path.display());
+    Ok(CostSource::Measured(db))
+}
+
 fn cmd_optimize(args: &Args) -> Result<()> {
     let g = model_arg(args)?;
     let d = device_arg(args)?;
-    let o = opt::optimize(
+    let source = cost_source_arg(args)?;
+    if let xenos::obs::profile::CostSource::Measured(_) = &source {
+        println!("measured-cost coverage: {}/{} nodes", source.coverage(&g), g.len());
+    }
+    let o = opt::optimize_src(
         &g,
         &d,
         opt::OptimizeOptions { level: OptLevel::Full, search: args.flag("search") },
+        &source,
     );
     println!(
         "optimized {} for {} in {} — {} CBR fusions, {} links, peak {} DSP units",
@@ -556,6 +605,27 @@ fn cmd_dist_run(args: &Args) -> Result<()> {
         anyhow::ensure!(local, "--fault scripts apply to --local clusters only");
         opts.fault = Some(fault_arg(spec)?);
     }
+    let cost = cost_source_arg(args)?;
+    if !matches!(cost, xenos::obs::profile::CostSource::Analytic) {
+        anyhow::ensure!(local, "--measured-costs applies to --local clusters only");
+    }
+    opts.cost = cost;
+    if args.flag("straggler") {
+        let mut s = xenos::dist::exec::StragglerOptions::default();
+        if let Some(v) = args.get("straggler-slowdown") {
+            s.slowdown = v.parse().context("--straggler-slowdown")?;
+        }
+        if let Some(v) = args.get("straggler-patience") {
+            s.patience = v.parse().context("--straggler-patience")?;
+        }
+        if let Some(v) = args.get("straggler-alpha") {
+            s.alpha = v.parse().context("--straggler-alpha")?;
+        }
+        if let Some(v) = args.get("straggler-reprobe") {
+            s.reprobe_every = v.parse().context("--straggler-reprobe")?;
+        }
+        opts.straggler = Some(s);
+    }
     if args.get("trace").is_some() {
         // Enable before the driver dials: TCP workers get `trace: true`
         // in their spec plus a clock-offset probe over the ctrl link;
@@ -641,6 +711,14 @@ fn cmd_dist_run(args: &Args) -> Result<()> {
             f.retries,
             f.fallbacks,
             driver.world(),
+        );
+    }
+    let st = driver.straggler_stats();
+    if st != Default::default() {
+        println!(
+            "straggler adaptation: {} demotion(s), {} re-admission(s), \
+             {} member(s) currently demoted",
+            st.demotions, st.readmissions, st.demoted,
         );
     }
     // Export the timeline before the single-device reference below runs,
@@ -799,6 +877,140 @@ fn cmd_profile(args: &Args) -> Result<()> {
     if let Some(path) = args.get("metrics-out") {
         write_json(path, &metrics::snapshot())?;
     }
+    Ok(())
+}
+
+fn cmd_analyze(args: &Args) -> Result<()> {
+    use xenos::obs::{profile, trace, DriftReport};
+
+    let g = Arc::new(model_arg(args)?);
+    let d = device_arg(args)?;
+    let engine_kind = args.get_or("engine", "interp").to_string();
+    let iters = args.get_parse("iters", 3usize).max(1);
+    let seed = args.get_parse("seed", 42u64);
+    let threads = args.get_parse("threads", 4usize);
+    let cluster_p = args.get_parse("cluster-devices", 2usize);
+    let top = args.get_parse("top", 8usize);
+    let scheme = scheme_arg(args)?;
+    let sync = sync_arg(args)?;
+    let precision = precision_arg(args)?;
+    let calib = match precision {
+        Precision::Int8 => Some(calib_arg(args, &g)?),
+        Precision::F32 => None,
+    };
+
+    let engine = match (precision, engine_kind.as_str()) {
+        (Precision::F32, "interp") => Engine::interp(g.clone()),
+        (Precision::F32, "par") => Engine::par_interp(g.clone(), &d, threads),
+        (Precision::Int8, "interp") => {
+            Engine::quant(g.clone(), calib.as_ref().expect("calibrated"), 1)?
+        }
+        (Precision::Int8, "par") => {
+            Engine::quant(g.clone(), calib.as_ref().expect("calibrated"), threads)?
+        }
+        (_, "cluster") => {
+            // The cluster plan itself can come from measured costs
+            // (--measured-costs), closing the profile → re-plan loop.
+            let opts = ClusterOptions {
+                threads,
+                cost: cost_source_arg(args)?,
+                ..ClusterOptions::default()
+            };
+            Engine::cluster(ClusterDriver::local_with(
+                g.clone(),
+                &d,
+                cluster_p,
+                scheme,
+                sync,
+                opts,
+                calib.as_ref(),
+            )?)
+        }
+        (_, other) => bail!("unknown engine {other} (interp|par|cluster)"),
+    };
+
+    let inputs = xenos::ops::interp::synthetic_inputs(&g, seed);
+    // Warm-up round outside the recording window: the measured profile
+    // must not blend first-touch allocation into steady-state op times.
+    engine.infer(&inputs)?;
+
+    trace::clear();
+    trace::set_enabled(true);
+    for _ in 0..iters {
+        engine.infer(&inputs)?;
+    }
+    trace::set_enabled(false);
+    let mut events = trace::drain();
+    if let Some(driver) = engine.cluster_driver() {
+        events.extend(driver.fetch_remote_spans()?);
+        events.sort_by_key(|e| (e.lane, e.tid, e.ts_us));
+    }
+
+    let plan = engine.cluster_driver().map(|c| c.plan());
+    let report = DriftReport::build(&g, &d, plan.as_ref(), &events, iters as u64, top);
+    print!("{}", report.render(top));
+    if let Some(path) = args.get("report") {
+        write_json(path, &report.to_json())?;
+    }
+
+    if !args.flag("no-save") {
+        let path = match args.get("profile-db") {
+            Some(p) => std::path::PathBuf::from(p),
+            None => profile::default_db_path(),
+        };
+        // Merge into whatever earlier runs recorded: the db accumulates
+        // across models, so coverage grows run over run.
+        let mut db = profile::ProfileDb::load(&path)
+            .with_context(|| format!("loading profile db {}", path.display()))?;
+        let merged = db.merge_spans(&g, &events, iters as u64);
+        db.save(&path)?;
+        println!(
+            "profile db: {} op signature(s) ({merged} compute span(s) merged) -> {}",
+            db.len(),
+            path.display()
+        );
+    }
+    Ok(())
+}
+
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    use xenos::util::table::Table;
+    let baseline = args.get("baseline").context("--baseline BENCH.json is required")?;
+    let current = args.get("current").context("--current BENCH.json is required")?;
+    let max_regress = args.get_parse("max-regress", 25.0f64);
+    let load = |path: &str| -> Result<xenos::obs::Json> {
+        let text = std::fs::read_to_string(path).with_context(|| format!("reading {path}"))?;
+        xenos::obs::Json::parse(&text).with_context(|| format!("parsing {path}"))
+    };
+    let rows = xenos::util::bench::diff_bench_json(&load(baseline)?, &load(current)?, max_regress)?;
+    let mut t = Table::new(vec!["benchmark", "baseline", "current", "delta", "verdict"]);
+    let mut regressed = 0usize;
+    for r in &rows {
+        let verdict = if r.regressed {
+            regressed += 1;
+            "REGRESSED"
+        } else {
+            "ok"
+        };
+        t.row(vec![
+            r.name.clone(),
+            human_time(r.base_s),
+            human_time(r.cur_s),
+            format!("{:+.1}%", r.delta_pct),
+            verdict.to_string(),
+        ]);
+    }
+    t.print();
+    if regressed > 0 {
+        bail!(
+            "{regressed} of {} benchmark(s) regressed past {max_regress}% (+ noise floor)",
+            rows.len()
+        );
+    }
+    println!(
+        "bench-diff: {} benchmark(s) within budget ({max_regress}% + noise floor)",
+        rows.len()
+    );
     Ok(())
 }
 

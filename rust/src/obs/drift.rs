@@ -1,0 +1,337 @@
+//! Plan-vs-actual drift analysis: the report `xenos analyze` prints.
+//!
+//! Joins three sources over one graph:
+//! * the **analytic cost model** (`sim/cost.rs`) — what the planner
+//!   *predicted* each node would cost (scaled by the cluster plan's split
+//!   scheme and sync model when one is in effect),
+//! * the **span recorder** (`obs/trace.rs`) — what each node *measured*
+//!   (per-node compute spans, joined by node name), and
+//! * the **cluster plan** — per-node split schemes and per-rank lanes,
+//!
+//! producing per-node drift rows, per-scheme and per-rank aggregates
+//! (compute/wait/halo fractions), and the top-K drift offenders. Measured
+//! time is *work* time: summed across threads and averaged per rank, so a
+//! parallel engine's per-node figure is comparable to the per-device
+//! prediction, not to wall time.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::json::Json;
+use super::trace::{Cat, SpanEvent};
+use crate::dist::exec::plan::ClusterPlan;
+use crate::graph::Graph;
+use crate::hw::DeviceModel;
+use crate::opt::{dos, OptLevel};
+use crate::sim::cost::node_cost;
+use crate::util::{human_time, table::Table};
+
+/// One node's predicted-vs-measured row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeDrift {
+    /// Node name (the span join key).
+    pub name: String,
+    /// Op signature (the profile-db join key).
+    pub signature: String,
+    /// Split scheme label (`replicated`/`outc`/`inh`/`inw`; `serial` for
+    /// single-device engines).
+    pub scheme: String,
+    /// Planner-predicted per-device seconds per inference.
+    pub predicted_s: f64,
+    /// Measured per-rank seconds per inference (span sum / iters / ranks
+    /// that computed the node).
+    pub measured_s: f64,
+    /// `measured / predicted`; `0` when the prediction is ~zero.
+    pub ratio: f64,
+}
+
+/// One scheme's aggregate across its nodes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SchemeDrift {
+    /// Scheme label.
+    pub scheme: String,
+    /// Nodes planned under the scheme.
+    pub nodes: usize,
+    /// Summed predicted seconds.
+    pub predicted_s: f64,
+    /// Summed measured seconds.
+    pub measured_s: f64,
+}
+
+/// One rank's measured time split (from span lanes).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankDrift {
+    /// Cluster rank (span lane).
+    pub rank: u32,
+    /// Compute seconds per inference.
+    pub compute_s: f64,
+    /// Collective-wait seconds per inference.
+    pub wait_s: f64,
+    /// Halo-exchange seconds per inference.
+    pub halo_s: f64,
+}
+
+impl RankDrift {
+    /// compute + wait + halo.
+    pub fn total_s(&self) -> f64 {
+        self.compute_s + self.wait_s + self.halo_s
+    }
+
+    /// `(compute, wait, halo)` shares of the rank's total, in `[0, 1]`.
+    pub fn fractions(&self) -> (f64, f64, f64) {
+        let t = self.total_s();
+        if t <= 0.0 {
+            return (0.0, 0.0, 0.0);
+        }
+        (self.compute_s / t, self.wait_s / t, self.halo_s / t)
+    }
+}
+
+/// The full plan-vs-actual report.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DriftReport {
+    /// Inferences the measurement window covered.
+    pub iters: u64,
+    /// Per-node rows, graph order.
+    pub nodes: Vec<NodeDrift>,
+    /// Per-scheme aggregates, sorted by measured time (descending).
+    pub per_scheme: Vec<SchemeDrift>,
+    /// Per-rank time splits, rank order.
+    pub per_rank: Vec<RankDrift>,
+    /// Names of the top-K drift offenders, worst absolute drift first.
+    pub offenders: Vec<String>,
+    /// Sum of per-node predictions.
+    pub predicted_total_s: f64,
+    /// Sum of per-node measurements.
+    pub measured_total_s: f64,
+}
+
+impl DriftReport {
+    /// Build the report for `iters` traced inferences of `g`. Pass the
+    /// cluster plan when the engine was a cluster (per-node predictions
+    /// are then scaled by split scheme + sync model); `None` prices every
+    /// node at the single-device analytic cost.
+    pub fn build(
+        g: &Graph,
+        device: &DeviceModel,
+        plan: Option<&ClusterPlan>,
+        events: &[SpanEvent],
+        iters: u64,
+        top_k: usize,
+    ) -> DriftReport {
+        let iters = iters.max(1);
+        // Measured: per-node compute totals and the set of lanes (ranks)
+        // that executed the node.
+        let mut measured_us: BTreeMap<&str, f64> = BTreeMap::new();
+        let mut lanes_of: BTreeMap<&str, BTreeSet<u32>> = BTreeMap::new();
+        for e in events.iter().filter(|e| e.cat == Cat::Compute) {
+            *measured_us.entry(e.name.as_str()).or_default() += e.dur_us as f64;
+            lanes_of.entry(e.name.as_str()).or_default().insert(e.lane);
+        }
+
+        let dplan = dos::plan_graph(g, device, OptLevel::HoOnly);
+        let mut nodes = Vec::new();
+        for node in &g.nodes {
+            if matches!(node.op, crate::graph::OpKind::Input) {
+                continue;
+            }
+            let base = node_cost(g, node, dplan.node(node.id), device).total_s;
+            let (predicted_s, scheme) = match plan {
+                Some(p) => {
+                    (p.predicted_node_s(g, node, base, &device.link), p.scheme_label(node.id))
+                }
+                None => (base, "serial".to_string()),
+            };
+            let ranks = lanes_of.get(node.name.as_str()).map_or(0, BTreeSet::len);
+            let measured_s = measured_us
+                .get(node.name.as_str())
+                .map_or(0.0, |us| us / 1e6 / iters as f64 / ranks.max(1) as f64);
+            let ratio = if predicted_s > 1e-12 { measured_s / predicted_s } else { 0.0 };
+            nodes.push(NodeDrift {
+                name: node.name.clone(),
+                signature: super::profile::op_signature(node),
+                scheme,
+                predicted_s,
+                measured_s,
+                ratio,
+            });
+        }
+
+        let mut schemes: BTreeMap<String, SchemeDrift> = BTreeMap::new();
+        for n in &nodes {
+            let e = schemes.entry(n.scheme.clone()).or_insert_with(|| SchemeDrift {
+                scheme: n.scheme.clone(),
+                nodes: 0,
+                predicted_s: 0.0,
+                measured_s: 0.0,
+            });
+            e.nodes += 1;
+            e.predicted_s += n.predicted_s;
+            e.measured_s += n.measured_s;
+        }
+        let mut per_scheme: Vec<SchemeDrift> = schemes.into_values().collect();
+        per_scheme.sort_by(|a, b| b.measured_s.total_cmp(&a.measured_s));
+
+        let mut ranks: BTreeMap<u32, RankDrift> = BTreeMap::new();
+        for e in events {
+            let r = ranks.entry(e.lane).or_insert_with(|| RankDrift {
+                rank: e.lane,
+                compute_s: 0.0,
+                wait_s: 0.0,
+                halo_s: 0.0,
+            });
+            let s = e.dur_us as f64 / 1e6 / iters as f64;
+            match e.cat {
+                Cat::Compute => r.compute_s += s,
+                Cat::Wait => r.wait_s += s,
+                Cat::Halo => r.halo_s += s,
+                Cat::Round | Cat::Stage => {}
+            }
+        }
+        let per_rank: Vec<RankDrift> = ranks.into_values().collect();
+
+        let mut by_drift: Vec<&NodeDrift> = nodes.iter().filter(|n| n.measured_s > 0.0).collect();
+        by_drift.sort_by(|a, b| {
+            (b.measured_s - b.predicted_s)
+                .abs()
+                .total_cmp(&(a.measured_s - a.predicted_s).abs())
+        });
+        let offenders = by_drift.iter().take(top_k).map(|n| n.name.clone()).collect();
+
+        let predicted_total_s = nodes.iter().map(|n| n.predicted_s).sum();
+        let measured_total_s = nodes.iter().map(|n| n.measured_s).sum();
+        DriftReport {
+            iters,
+            nodes,
+            per_scheme,
+            per_rank,
+            offenders,
+            predicted_total_s,
+            measured_total_s,
+        }
+    }
+
+    /// Overall measured/predicted ratio.
+    pub fn overall_ratio(&self) -> f64 {
+        if self.predicted_total_s > 1e-12 {
+            self.measured_total_s / self.predicted_total_s
+        } else {
+            0.0
+        }
+    }
+
+    /// Serialize the report (the `--report out.json` document).
+    pub fn to_json(&self) -> Json {
+        let nodes = self
+            .nodes
+            .iter()
+            .map(|n| {
+                Json::obj(vec![
+                    ("name", Json::str(&n.name)),
+                    ("sig", Json::str(&n.signature)),
+                    ("scheme", Json::str(&n.scheme)),
+                    ("predicted_s", Json::Num(n.predicted_s)),
+                    ("measured_s", Json::Num(n.measured_s)),
+                    ("ratio", Json::Num(n.ratio)),
+                ])
+            })
+            .collect();
+        let schemes = self
+            .per_scheme
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("scheme", Json::str(&s.scheme)),
+                    ("nodes", Json::Num(s.nodes as f64)),
+                    ("predicted_s", Json::Num(s.predicted_s)),
+                    ("measured_s", Json::Num(s.measured_s)),
+                ])
+            })
+            .collect();
+        let ranks = self
+            .per_rank
+            .iter()
+            .map(|r| {
+                let (c, w, h) = r.fractions();
+                Json::obj(vec![
+                    ("rank", Json::Num(r.rank as f64)),
+                    ("compute_s", Json::Num(r.compute_s)),
+                    ("wait_s", Json::Num(r.wait_s)),
+                    ("halo_s", Json::Num(r.halo_s)),
+                    ("compute_frac", Json::Num(c)),
+                    ("wait_frac", Json::Num(w)),
+                    ("halo_frac", Json::Num(h)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::str("xenos-drift-v1")),
+            ("iters", Json::Num(self.iters as f64)),
+            ("predicted_total_s", Json::Num(self.predicted_total_s)),
+            ("measured_total_s", Json::Num(self.measured_total_s)),
+            ("overall_ratio", Json::Num(self.overall_ratio())),
+            ("offenders", Json::Arr(self.offenders.iter().map(|o| Json::str(o)).collect())),
+            ("nodes", Json::Arr(nodes)),
+            ("per_scheme", Json::Arr(schemes)),
+            ("per_rank", Json::Arr(ranks)),
+        ])
+    }
+
+    /// Render the human-readable report (what `xenos analyze` prints).
+    pub fn render(&self, top_k: usize) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "plan-vs-actual over {} inference(s): predicted {} vs measured {} (x{:.2})\n",
+            self.iters,
+            human_time(self.predicted_total_s),
+            human_time(self.measured_total_s),
+            self.overall_ratio(),
+        ));
+        let mut t = Table::new(vec!["scheme", "nodes", "predicted", "measured", "ratio"]);
+        for s in &self.per_scheme {
+            let ratio = if s.predicted_s > 1e-12 { s.measured_s / s.predicted_s } else { 0.0 };
+            t.row(vec![
+                s.scheme.clone(),
+                s.nodes.to_string(),
+                human_time(s.predicted_s),
+                human_time(s.measured_s),
+                format!("x{ratio:.2}"),
+            ]);
+        }
+        out.push_str(&t.render());
+        if !self.per_rank.is_empty() {
+            let mut t = Table::new(vec!["rank", "compute", "wait", "halo", "c/w/h share"]);
+            for r in &self.per_rank {
+                let (c, w, h) = r.fractions();
+                t.row(vec![
+                    r.rank.to_string(),
+                    human_time(r.compute_s),
+                    human_time(r.wait_s),
+                    human_time(r.halo_s),
+                    format!("{:.0}%/{:.0}%/{:.0}%", 100.0 * c, 100.0 * w, 100.0 * h),
+                ]);
+            }
+            out.push_str(&t.render());
+        }
+        let offenders: BTreeSet<&str> =
+            self.offenders.iter().take(top_k).map(String::as_str).collect();
+        let mut t = Table::new(vec!["top drift", "scheme", "predicted", "measured", "ratio"]);
+        for name in &self.offenders {
+            if !offenders.contains(name.as_str()) {
+                continue;
+            }
+            if let Some(n) = self.nodes.iter().find(|n| &n.name == name) {
+                t.row(vec![
+                    n.name.clone(),
+                    n.scheme.clone(),
+                    human_time(n.predicted_s),
+                    human_time(n.measured_s),
+                    format!("x{:.2}", n.ratio),
+                ]);
+            }
+        }
+        if !t.is_empty() {
+            out.push_str(&t.render());
+        }
+        out
+    }
+}

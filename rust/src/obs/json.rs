@@ -203,6 +203,11 @@ fn write_str(s: &str, out: &mut String) {
             c if (c as u32) < 0x20 => {
                 let _ = write!(out, "\\u{:04x}", c as u32);
             }
+            // Legal in JSON but line terminators in JavaScript: escaped so
+            // chrome://tracing (which ingests the document as JS) never
+            // sees a raw one inside a span name.
+            '\u{2028}' => out.push_str("\\u2028"),
+            '\u{2029}' => out.push_str("\\u2029"),
             c => out.push(c),
         }
     }
@@ -468,6 +473,16 @@ mod tests {
     fn string_escapes_round_trip() {
         let v = Json::str("a\"b\\c\nd\te\u{1}µ✓");
         assert_eq!(Json::parse(&v.to_string()).unwrap(), v);
+    }
+
+    #[test]
+    fn js_line_terminators_are_escaped() {
+        // U+2028/U+2029 are valid unescaped JSON but break JavaScript
+        // consumers (chrome://tracing): they must leave as \u escapes.
+        let v = Json::str("a\u{2028}b\u{2029}c");
+        let text = v.to_string();
+        assert_eq!(text, "\"a\\u2028b\\u2029c\"");
+        assert_eq!(Json::parse(&text).unwrap(), v);
     }
 
     #[test]

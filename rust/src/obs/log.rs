@@ -3,11 +3,17 @@
 //! The level comes from the `XENOS_LOG` environment variable
 //! (`off|error|warn|info|debug|trace`, default `warn`) and can be
 //! overridden programmatically (the CLI's `--quiet` maps to `off`). Lines
-//! go to stderr as `[xenos LEVEL module::path] message`, so the d-Xenos
+//! go to stderr as `[xenos +UPTIME LEVEL module::path] message` — the
+//! monotonic uptime stamp orders interleaved driver/worker output — with
+//! an `rN` rank tag appended in cluster contexts
+//! (`[xenos +1.204s WARN xenos::dist r2] ...`), so the d-Xenos
 //! driver/worker diagnostics and the serving-tier warnings are silenced or
 //! enabled uniformly instead of each call site owning an `eprintln!`.
 
+use std::cell::Cell;
 use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::Instant;
 
 /// Log severity, most severe first. `Off` disables all output.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -78,19 +84,55 @@ pub fn enabled(l: Level) -> bool {
     l != Level::Off && l <= level()
 }
 
-/// Emit one record. Call through the [`crate::xerror!`]/[`crate::xwarn!`]/
-/// [`crate::xinfo!`]/[`crate::xdebug!`] macros, which do the level check at
-/// the call site.
-pub fn log(l: Level, module: &str, args: std::fmt::Arguments<'_>) {
+/// Process start, established lazily on the first record: uptime stamps
+/// are monotonic (never step with wall-clock adjustments), so interleaved
+/// driver/worker lines sort by emission order.
+static START: OnceLock<Instant> = OnceLock::new();
+
+thread_local! {
+    /// This thread's cluster rank tag, if any (shard-worker threads and
+    /// `dist-worker` sessions set it; everything else stays untagged).
+    static RANK: Cell<Option<u32>> = const { Cell::new(None) };
+}
+
+/// Tag (or untag, with `None`) this thread's log lines with a cluster
+/// rank. Shard workers set it when a round starts; `dist-worker` sessions
+/// set it for the session's lifetime.
+pub fn set_rank(rank: Option<u32>) {
+    RANK.with(|r| r.set(rank));
+}
+
+/// Seconds since the first log record, as a monotonic uptime stamp.
+fn uptime_s() -> f64 {
+    START.get_or_init(Instant::now).elapsed().as_secs_f64()
+}
+
+/// Render one record's prefix-and-message line — split from [`log`] so
+/// tests can pin the format without capturing stderr.
+fn render(l: Level, module: &str, uptime_s: f64, rank: Option<u32>, msg: &str) -> String {
     let tag = match l {
-        Level::Off => return,
+        Level::Off => "OFF",
         Level::Error => "ERROR",
         Level::Warn => "WARN",
         Level::Info => "INFO",
         Level::Debug => "DEBUG",
         Level::Trace => "TRACE",
     };
-    eprintln!("[xenos {tag} {module}] {args}");
+    match rank {
+        Some(r) => format!("[xenos +{uptime_s:.3}s {tag} {module} r{r}] {msg}"),
+        None => format!("[xenos +{uptime_s:.3}s {tag} {module}] {msg}"),
+    }
+}
+
+/// Emit one record. Call through the [`crate::xerror!`]/[`crate::xwarn!`]/
+/// [`crate::xinfo!`]/[`crate::xdebug!`] macros, which do the level check at
+/// the call site.
+pub fn log(l: Level, module: &str, args: std::fmt::Arguments<'_>) {
+    if l == Level::Off {
+        return;
+    }
+    let rank = RANK.with(|r| r.get());
+    eprintln!("{}", render(l, module, uptime_s(), rank, &args.to_string()));
 }
 
 /// Log at [`Level::Error`] — unrecoverable failure of a request/session.
@@ -173,5 +215,31 @@ mod tests {
         assert_eq!(parse(" ERROR "), Some(Level::Error));
         assert_eq!(parse("off"), Some(Level::Off));
         assert_eq!(parse("verbose"), None);
+    }
+
+    #[test]
+    fn render_pins_the_line_format() {
+        assert_eq!(
+            render(Level::Warn, "xenos::dist", 1.2041, None, "rank 2 failed"),
+            "[xenos +1.204s WARN xenos::dist] rank 2 failed"
+        );
+        assert_eq!(
+            render(Level::Info, "xenos::dist", 0.0, Some(3), "mesh up"),
+            "[xenos +0.000s INFO xenos::dist r3] mesh up"
+        );
+    }
+
+    #[test]
+    fn rank_tag_is_per_thread() {
+        set_rank(Some(7));
+        RANK.with(|r| assert_eq!(r.get(), Some(7)));
+        std::thread::spawn(|| {
+            // A fresh thread starts untagged regardless of the caller.
+            RANK.with(|r| assert_eq!(r.get(), None));
+        })
+        .join()
+        .unwrap();
+        set_rank(None);
+        RANK.with(|r| assert_eq!(r.get(), None));
     }
 }

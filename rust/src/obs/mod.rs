@@ -10,11 +10,19 @@
 //! * [`json`] — the hand-rolled [`json::Json`] value/writer/parser
 //!   (`BENCH_*.json`, `--metrics-out`, traces; no serde in the offline
 //!   build).
+//! * [`profile`] — persistent per-op measured profiles
+//!   (`~/.xenos/profiles.json`) and the [`profile::CostSource`] provider
+//!   that lets planners prefer measured over analytic costs.
+//! * [`drift`] — the plan-vs-actual report behind `xenos analyze`.
 
+pub mod drift;
 pub mod json;
 pub mod log;
 pub mod metrics;
+pub mod profile;
 pub mod trace;
 
+pub use drift::DriftReport;
 pub use json::Json;
+pub use profile::{CostSource, ProfileDb};
 pub use trace::{span, Cat, SpanEvent, SpanGuard};

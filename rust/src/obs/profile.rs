@@ -1,0 +1,338 @@
+//! Measured per-op profiles: the store that closes the telemetry loop.
+//!
+//! [`xenos analyze`](crate) joins the span recorder's per-node compute
+//! spans with the graph and folds them into a [`ProfileDb`] — one
+//! [`OpProfile`] per *op signature* (kind + work size, host-independent) —
+//! persisted as `~/.xenos/profiles.json` (schema `xenos-profiles-v1`,
+//! override with `--profile-db` / `XENOS_PROFILE_DB`). The DOS layout
+//! search and the cluster planner consume the store through
+//! [`CostSource`]: `CostSource::Measured` substitutes a measured mean for
+//! the analytic estimate wherever the profile has seen the op, and falls
+//! back to the analytic cost model everywhere else — SoftNeuro's
+//! measured-profile planning, grafted onto the existing cost model.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use super::json::Json;
+use super::trace::{Cat, SpanEvent};
+use crate::graph::{Graph, Node};
+
+/// Schema tag of the persisted profile document.
+pub const PROFILE_SCHEMA: &str = "xenos-profiles-v1";
+
+/// Stable signature of one operator instance — the join key between a
+/// measurement taken on one graph and the same-shaped op in another. Kind
+/// plus MAC count plus output element count: host-independent, layout-
+/// independent, and distinct for distinct workloads.
+pub fn op_signature(node: &Node) -> String {
+    format!(
+        "{}|macs={}|out={}",
+        node.op.kind_name(),
+        node.op.macs(&node.out),
+        node.out.shape.numel()
+    )
+}
+
+/// Accumulated measurements for one op signature.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct OpProfile {
+    /// Executions folded in.
+    pub n: u64,
+    /// Total measured seconds across those executions.
+    pub total_s: f64,
+}
+
+impl OpProfile {
+    /// Mean measured seconds per execution.
+    pub fn mean_s(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.total_s / self.n as f64
+        }
+    }
+}
+
+/// The per-host measured profile store: op signature → [`OpProfile`].
+#[derive(Debug, Clone, Default)]
+pub struct ProfileDb {
+    entries: BTreeMap<String, OpProfile>,
+}
+
+impl ProfileDb {
+    /// Fold `runs` executions totalling `total_s` seconds into the entry
+    /// for `sig`.
+    pub fn record(&mut self, sig: &str, total_s: f64, runs: u64) {
+        if runs == 0 || !total_s.is_finite() || total_s < 0.0 {
+            return;
+        }
+        let e = self.entries.entry(sig.to_string()).or_default();
+        e.n += runs;
+        e.total_s += total_s;
+    }
+
+    /// The profile for one signature, if measured.
+    pub fn get(&self, sig: &str) -> Option<OpProfile> {
+        self.entries.get(sig).copied()
+    }
+
+    /// Number of distinct op signatures measured.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing has been measured yet.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Iterate signatures and their profiles in stable (sorted) order.
+    pub fn iter(&self) -> impl Iterator<Item = (&str, OpProfile)> {
+        self.entries.iter().map(|(k, v)| (k.as_str(), *v))
+    }
+
+    /// Fold the compute spans of `iters` inferences over `g` into the
+    /// store: spans are joined to nodes by name (the recorder names
+    /// per-node compute spans after the node), summed per node, and
+    /// recorded under the node's [`op_signature`] as `iters` executions.
+    /// Returns how many nodes contributed measurements.
+    pub fn merge_spans(&mut self, g: &Graph, events: &[SpanEvent], iters: u64) -> usize {
+        if iters == 0 {
+            return 0;
+        }
+        let mut per_name: BTreeMap<&str, f64> = BTreeMap::new();
+        for e in events.iter().filter(|e| e.cat == Cat::Compute) {
+            *per_name.entry(e.name.as_str()).or_default() += e.dur_us as f64 / 1e6;
+        }
+        let mut matched = 0usize;
+        for node in &g.nodes {
+            if let Some(&total) = per_name.get(node.name.as_str()) {
+                self.record(&op_signature(node), total, iters);
+                matched += 1;
+            }
+        }
+        matched
+    }
+
+    /// Serialize to the persisted document form.
+    pub fn to_json(&self) -> Json {
+        let entries = self
+            .entries
+            .iter()
+            .map(|(sig, p)| {
+                Json::obj(vec![
+                    ("sig", Json::str(sig)),
+                    ("n", Json::Num(p.n as f64)),
+                    ("total_s", Json::Num(p.total_s)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::str(PROFILE_SCHEMA)),
+            ("entries", Json::Arr(entries)),
+        ])
+    }
+
+    /// Parse the [`ProfileDb::to_json`] document form.
+    pub fn from_json(doc: &Json) -> Result<ProfileDb> {
+        match doc.get("schema").and_then(Json::as_str) {
+            Some(PROFILE_SCHEMA) => {}
+            other => bail!("not a {PROFILE_SCHEMA} document (schema: {other:?})"),
+        }
+        let Some(entries) = doc.get("entries").and_then(Json::as_arr) else {
+            bail!("profile document has no 'entries' array");
+        };
+        let mut db = ProfileDb::default();
+        for e in entries {
+            let sig = e
+                .get("sig")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("profile entry missing 'sig'"))?;
+            let n = e.get("n").and_then(Json::as_f64).unwrap_or(0.0);
+            let total_s = e.get("total_s").and_then(Json::as_f64).unwrap_or(0.0);
+            if n < 1.0 || !total_s.is_finite() || total_s < 0.0 {
+                bail!("profile entry '{sig}' has invalid n/total_s");
+            }
+            db.record(sig, total_s, n as u64);
+        }
+        Ok(db)
+    }
+
+    /// Load a store from `path`. A missing file is an empty store (first
+    /// run on a host); a malformed one is an error.
+    pub fn load(path: &std::path::Path) -> Result<ProfileDb> {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(ProfileDb::default())
+            }
+            Err(e) => return Err(e).with_context(|| format!("reading {}", path.display())),
+        };
+        let doc = Json::parse(&text)
+            .with_context(|| format!("parsing profile db {}", path.display()))?;
+        ProfileDb::from_json(&doc)
+            .with_context(|| format!("loading profile db {}", path.display()))
+    }
+
+    /// Write the store to `path`, creating parent directories as needed.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating {}", dir.display()))?;
+            }
+        }
+        std::fs::write(path, self.to_json().to_pretty())
+            .with_context(|| format!("writing profile db {}", path.display()))
+    }
+}
+
+/// The per-host default profile-db path: `$XENOS_PROFILE_DB` when set,
+/// else `~/.xenos/profiles.json`, else `.xenos/profiles.json` relative to
+/// the working directory (no home on the host).
+pub fn default_db_path() -> PathBuf {
+    if let Ok(p) = std::env::var("XENOS_PROFILE_DB") {
+        if !p.is_empty() {
+            return PathBuf::from(p);
+        }
+    }
+    match std::env::var("HOME") {
+        Ok(h) if !h.is_empty() => PathBuf::from(h).join(".xenos").join("profiles.json"),
+        _ => PathBuf::from(".xenos").join("profiles.json"),
+    }
+}
+
+/// Where per-op time estimates come from when a planner prices a graph:
+/// the analytic cost model alone, or measured profiles with the analytic
+/// model as the fallback for ops the profile has never seen.
+#[derive(Debug, Clone, Default)]
+pub enum CostSource {
+    /// Pure analytic cost model (`sim/cost.rs`) — the historical behavior.
+    #[default]
+    Analytic,
+    /// Measured op profiles; ops absent from the store fall back to the
+    /// analytic estimate.
+    Measured(ProfileDb),
+}
+
+impl CostSource {
+    /// The total-seconds estimate for `node`, given the analytic model's
+    /// estimate `analytic_s`.
+    pub fn node_total_s(&self, analytic_s: f64, node: &Node) -> f64 {
+        match self {
+            CostSource::Analytic => analytic_s,
+            CostSource::Measured(db) => match db.get(&op_signature(node)) {
+                Some(p) if p.n > 0 => p.mean_s(),
+                _ => analytic_s,
+            },
+        }
+    }
+
+    /// How many of `g`'s nodes this source has measurements for (0 for
+    /// the analytic source).
+    pub fn coverage(&self, g: &Graph) -> usize {
+        match self {
+            CostSource::Analytic => 0,
+            CostSource::Measured(db) => {
+                g.nodes.iter().filter(|n| db.get(&op_signature(n)).is_some()).count()
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{GraphBuilder, Shape};
+
+    fn tiny() -> Graph {
+        let mut b = GraphBuilder::new("prof_tiny");
+        let x = b.input("x", Shape::nchw(1, 4, 8, 8));
+        let c = b.conv("c", x, 8, 3, 1, 1);
+        let r = b.relu("r", c);
+        b.output(r);
+        b.finish()
+    }
+
+    #[test]
+    fn record_and_mean() {
+        let mut db = ProfileDb::default();
+        db.record("a", 2.0, 4);
+        db.record("a", 2.0, 4);
+        let p = db.get("a").unwrap();
+        assert_eq!(p.n, 8);
+        assert!((p.mean_s() - 0.5).abs() < 1e-12);
+        // Garbage is ignored, not stored.
+        db.record("b", f64::NAN, 1);
+        db.record("b", -1.0, 1);
+        db.record("b", 1.0, 0);
+        assert!(db.get("b").is_none());
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut db = ProfileDb::default();
+        db.record("Conv|macs=100|out=10", 0.25, 5);
+        db.record("Relu|macs=0|out=10", 0.01, 5);
+        let doc = db.to_json();
+        let back = ProfileDb::from_json(&Json::parse(&doc.to_pretty()).unwrap()).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back.get("Conv|macs=100|out=10"), db.get("Conv|macs=100|out=10"));
+    }
+
+    #[test]
+    fn from_json_rejects_bad_entries() {
+        let doc = Json::obj(vec![
+            ("schema", Json::str(PROFILE_SCHEMA)),
+            (
+                "entries",
+                Json::Arr(vec![Json::obj(vec![
+                    ("sig", Json::str("x")),
+                    ("n", Json::Num(1.0)),
+                    ("total_s", Json::Num(-3.0)),
+                ])]),
+            ),
+        ]);
+        assert!(ProfileDb::from_json(&doc).is_err());
+        assert!(ProfileDb::from_json(&Json::obj(vec![("schema", Json::str("nope"))])).is_err());
+    }
+
+    #[test]
+    fn merge_spans_joins_by_node_name() {
+        let g = tiny();
+        let ev = |name: &str, dur_us: u64| SpanEvent {
+            name: name.to_string(),
+            cat: Cat::Compute,
+            ts_us: 0,
+            dur_us,
+            lane: 0,
+            tid: 1,
+            bytes: 0,
+        };
+        let events = vec![ev("c", 2_000_000), ev("c", 2_000_000), ev("not_a_node", 7)];
+        let mut db = ProfileDb::default();
+        let matched = db.merge_spans(&g, &events, 2);
+        assert_eq!(matched, 1);
+        let sig = op_signature(g.nodes.iter().find(|n| n.name == "c").unwrap());
+        let p = db.get(&sig).unwrap();
+        assert_eq!(p.n, 2);
+        assert!((p.mean_s() - 2.0).abs() < 1e-9, "4s over 2 iters = 2s mean");
+    }
+
+    #[test]
+    fn cost_source_prefers_measured_with_analytic_fallback() {
+        let g = tiny();
+        let conv = g.nodes.iter().find(|n| n.name == "c").unwrap();
+        let relu = g.nodes.iter().find(|n| n.name == "r").unwrap();
+        let mut db = ProfileDb::default();
+        db.record(&op_signature(conv), 10.0, 10);
+        let src = CostSource::Measured(db);
+        assert_eq!(src.node_total_s(0.5, conv), 1.0, "measured mean wins");
+        assert_eq!(src.node_total_s(0.5, relu), 0.5, "unmeasured op falls back");
+        assert_eq!(src.coverage(&g), 1);
+        assert_eq!(CostSource::Analytic.node_total_s(0.5, conv), 0.5);
+    }
+}

@@ -436,6 +436,27 @@ mod tests {
     }
 
     #[test]
+    fn chrome_trace_escapes_hostile_span_names() {
+        // Span names come from graph node names; quotes, backslashes and
+        // JS line terminators must survive serialize → parse untouched.
+        let name = "conv \"3x3\" C:\\w\u{2028}x";
+        let evs = vec![SpanEvent {
+            name: name.into(),
+            cat: Cat::Compute,
+            ts_us: 0,
+            dur_us: 1,
+            lane: 0,
+            tid: 0,
+            bytes: 0,
+        }];
+        let text = chrome_trace(&evs).to_pretty();
+        let doc = Json::parse(&text).expect("chrome trace must stay valid JSON");
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        assert_eq!(events[1].get("name").and_then(Json::as_str), Some(name));
+        assert!(!text.contains('\u{2028}'), "raw JS line terminator leaked");
+    }
+
+    #[test]
     fn breakdown_sums_per_category() {
         let evs = vec![
             SpanEvent {

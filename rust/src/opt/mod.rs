@@ -66,6 +66,20 @@ pub struct Optimized {
 
 /// Run the automatic optimization workflow on a model for a device.
 pub fn optimize(g: &Graph, device: &DeviceModel, opts: OptimizeOptions) -> Optimized {
+    optimize_src(g, device, opts, &crate::obs::profile::CostSource::Analytic)
+}
+
+/// [`optimize`] with an explicit cost source: with
+/// `CostSource::Measured` the cost-guided layout search scores candidate
+/// layouts against profiled op times (`xenos optimize --search
+/// --measured-costs`) instead of the analytic model alone. Heuristic
+/// passes (fusion, linking, DOS splits) are source-independent.
+pub fn optimize_src(
+    g: &Graph,
+    device: &DeviceModel,
+    opts: OptimizeOptions,
+    source: &crate::obs::profile::CostSource,
+) -> Optimized {
     let start = Instant::now();
     let (fused_graph, fused) = fusion::fuse_cbr(g);
     let (mut graph, mut links) = match opts.level {
@@ -76,7 +90,7 @@ pub fn optimize(g: &Graph, device: &DeviceModel, opts: OptimizeOptions) -> Optim
         _ => (fused_graph, Vec::new()),
     };
     if opts.search && opts.level == OptLevel::Full {
-        let refined = search::refine_layouts(&mut graph, device);
+        let refined = search::refine_layouts_src(&mut graph, device, source);
         links.extend(search::as_link_records(&refined));
     }
     let plan = dos::plan_graph(&graph, device, opts.level);

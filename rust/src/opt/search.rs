@@ -14,9 +14,10 @@
 
 use crate::graph::{DataLayout, Graph, NodeId, OpKind};
 use crate::hw::DeviceModel;
+use crate::obs::profile::CostSource;
 use crate::opt::plan::{ExecutionPlan, OptLevel};
 use crate::opt::{dos, linking::LinkRecord};
-use crate::sim::cost::node_cost;
+use crate::sim::cost::node_total_src;
 
 /// One search refinement applied on top of the heuristic linking.
 #[derive(Debug, Clone, PartialEq)]
@@ -41,10 +42,11 @@ fn neighbourhood_cost(
     device: &DeviceModel,
     producer: NodeId,
     consumers: &[NodeId],
+    source: &CostSource,
 ) -> f64 {
-    let mut t = node_cost(g, g.node(producer), plan.node(producer), device).total_s;
+    let mut t = node_total_src(g, g.node(producer), plan.node(producer), device, source);
     for &c in consumers {
-        t += node_cost(g, g.node(c), plan.node(c), device).total_s;
+        t += node_total_src(g, g.node(c), plan.node(c), device, source);
     }
     t
 }
@@ -70,6 +72,18 @@ fn candidates(g: &Graph, id: NodeId) -> Vec<DataLayout> {
 /// Refine a linked graph's layout decisions with the cost model. Mutates
 /// `g` in place and returns the improvements applied.
 pub fn refine_layouts(g: &mut Graph, device: &DeviceModel) -> Vec<SearchRecord> {
+    refine_layouts_src(g, device, &CostSource::Analytic)
+}
+
+/// [`refine_layouts`] scoring neighbourhoods through an explicit
+/// [`CostSource`] — with `CostSource::Measured` the search optimizes
+/// layouts against profiled op times (`--measured-costs`) instead of the
+/// analytic model alone.
+pub fn refine_layouts_src(
+    g: &mut Graph,
+    device: &DeviceModel,
+    source: &CostSource,
+) -> Vec<SearchRecord> {
     let consumers = g.consumers();
     let mut records = Vec::new();
     for id in 0..g.len() {
@@ -80,7 +94,7 @@ pub fn refine_layouts(g: &mut Graph, device: &DeviceModel) -> Vec<SearchRecord> 
         let mut best = current;
         // Plans are layout-independent; compute once per candidate set.
         let plan = dos::plan_graph(g, device, OptLevel::Full);
-        let mut best_t = neighbourhood_cost(g, &plan, device, id, &consumers[id]);
+        let mut best_t = neighbourhood_cost(g, &plan, device, id, &consumers[id], source);
         let before_t = best_t;
         for cand in candidates(g, id) {
             if cand == current {
@@ -88,7 +102,7 @@ pub fn refine_layouts(g: &mut Graph, device: &DeviceModel) -> Vec<SearchRecord> 
             }
             g.node_mut(id).out.layout = cand;
             let plan = dos::plan_graph(g, device, OptLevel::Full);
-            let t = neighbourhood_cost(g, &plan, device, id, &consumers[id]);
+            let t = neighbourhood_cost(g, &plan, device, id, &consumers[id], source);
             if t < best_t {
                 best_t = t;
                 best = cand;

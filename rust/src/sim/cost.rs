@@ -54,6 +54,21 @@ pub fn layout_matches(
     }
 }
 
+/// Price `node` through a [`CostSource`][crate::obs::profile::CostSource]:
+/// the measured per-op mean when the source's profile store has seen the
+/// op's signature, the [`node_cost`] analytic total otherwise. This is the
+/// single seam `--measured-costs` planning (DOS layout search, cluster
+/// cuts) goes through, so the substitution rule lives in one place.
+pub fn node_total_src(
+    g: &Graph,
+    node: &Node,
+    plan: &NodePlan,
+    device: &DeviceModel,
+    source: &crate::obs::profile::CostSource,
+) -> f64 {
+    source.node_total_s(node_cost(g, node, plan, device).total_s, node)
+}
+
 /// Price `node` (belonging to `g`) under `plan` on `device`.
 pub fn node_cost(g: &Graph, node: &Node, plan: &NodePlan, device: &DeviceModel) -> NodeCost {
     let mut c = NodeCost::default();

@@ -17,9 +17,23 @@ use crate::obs::Json;
 /// Schema tag stamped into (and required of) every `BENCH_*.json`.
 pub const SCHEMA: &str = "xenos-bench-v1";
 
+/// Read a `XENOS_BENCH_*` budget cap: CI shrinks the suites' fixed
+/// budgets through the environment instead of patching every bench.
+fn env_cap(var: &str, requested: usize) -> usize {
+    match std::env::var(var).ok().and_then(|v| v.trim().parse::<usize>().ok()) {
+        Some(cap) => requested.min(cap),
+        None => requested,
+    }
+}
+
 /// Measure `f` for `iters` iterations after `warmup` unmeasured ones.
-/// Returns per-iteration seconds.
+/// Returns per-iteration seconds. The budgets are capped by the
+/// `XENOS_BENCH_WARMUP` / `XENOS_BENCH_ITERS` environment variables when
+/// set (iterations never drop below 1), so CI can run the full suites on
+/// a small time budget.
 pub fn measure<R>(warmup: usize, iters: usize, mut f: impl FnMut() -> R) -> Summary {
+    let warmup = env_cap("XENOS_BENCH_WARMUP", warmup);
+    let iters = env_cap("XENOS_BENCH_ITERS", iters).max(1);
     for _ in 0..warmup {
         std::hint::black_box(f());
     }
@@ -102,9 +116,16 @@ impl BenchSet {
 }
 
 /// Validate a parsed `BENCH_*.json` document against the schema: correct
-/// schema tag, non-empty entries, each with a name, a unit, and a sane
-/// summary (n >= 1, ordered percentiles). Returns the entry names.
+/// schema tag, non-empty entries, each with a unique name, a unit, and a
+/// sane summary (n >= 1, finite non-negative durations, ordered
+/// percentiles). Returns the entry names in document order.
 pub fn validate_bench_json(doc: &Json) -> Result<Vec<String>> {
+    Ok(bench_entries(doc)?.into_iter().map(|(name, _)| name).collect())
+}
+
+/// The validation behind [`validate_bench_json`], keeping the parsed
+/// summaries — [`diff_bench_json`] compares them.
+fn bench_entries(doc: &Json) -> Result<Vec<(String, Summary)>> {
     match doc.get("schema").and_then(Json::as_str) {
         Some(s) if s == SCHEMA => {}
         other => bail!("bad schema tag {other:?}, want {SCHEMA:?}"),
@@ -118,11 +139,14 @@ pub fn validate_bench_json(doc: &Json) -> Result<Vec<String>> {
     if entries.is_empty() {
         bail!("entries array is empty");
     }
-    let mut names = Vec::with_capacity(entries.len());
+    let mut out: Vec<(String, Summary)> = Vec::with_capacity(entries.len());
     for (i, e) in entries.iter().enumerate() {
         let Some(name) = e.get("name").and_then(Json::as_str) else {
             bail!("entry {i} has no name");
         };
+        if out.iter().any(|(n, _)| n == name) {
+            bail!("duplicate bench id '{name}'");
+        }
         if e.get("unit").and_then(Json::as_str).is_none() {
             bail!("entry '{name}' has no unit");
         }
@@ -133,13 +157,84 @@ pub fn validate_bench_json(doc: &Json) -> Result<Vec<String>> {
         if s.n == 0 {
             bail!("entry '{name}' has n = 0");
         }
+        let durations = [
+            ("mean", s.mean),
+            ("min", s.min),
+            ("p50", s.p50),
+            ("p90", s.p90),
+            ("p95", s.p95),
+            ("p99", s.p99),
+            ("max", s.max),
+            ("stddev", s.stddev),
+        ];
+        for (field, v) in durations {
+            if !v.is_finite() || v < 0.0 {
+                bail!("entry '{name}' has a non-finite or negative {field} ({v})");
+            }
+        }
         if !(s.min <= s.p50 && s.p50 <= s.p90 && s.p90 <= s.p95 && s.p95 <= s.p99 && s.p99 <= s.max)
         {
             bail!("entry '{name}' has unordered percentiles");
         }
-        names.push(name.to_string());
+        out.push((name.to_string(), s));
     }
-    Ok(names)
+    Ok(out)
+}
+
+/// One benchmark's baseline-vs-current comparison from
+/// [`diff_bench_json`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct BenchComparison {
+    /// Benchmark id (shared by baseline and current).
+    pub name: String,
+    /// Baseline mean, seconds.
+    pub base_s: f64,
+    /// Current mean, seconds.
+    pub cur_s: f64,
+    /// Relative change of the mean, percent (positive = slower).
+    pub delta_pct: f64,
+    /// The slowdown this comparison tolerated, seconds: the relative
+    /// budget plus the noise floor of both runs.
+    pub allowance_s: f64,
+    /// Past the allowance — a perf regression.
+    pub regressed: bool,
+}
+
+/// Compare two `BENCH_*.json` documents: every baseline entry must still
+/// exist in `current` (a silently dropped benchmark is a coverage
+/// regression) and its current mean must stay within
+/// `base * (1 + max_regress_pct/100)` plus a noise floor of two standard
+/// errors of each run's mean — so a noisy-but-unchanged benchmark does
+/// not trip the gate, while a genuine slowdown past the budget does.
+/// Entries new in `current` are ignored (they have no baseline yet).
+pub fn diff_bench_json(
+    baseline: &Json,
+    current: &Json,
+    max_regress_pct: f64,
+) -> Result<Vec<BenchComparison>> {
+    let base = bench_entries(baseline).context("baseline document")?;
+    let cur = bench_entries(current).context("current document")?;
+    let mut out = Vec::with_capacity(base.len());
+    for (name, b) in base {
+        let Some((_, c)) = cur.iter().find(|(n, _)| *n == name) else {
+            bail!("benchmark '{name}' is in the baseline but missing from current");
+        };
+        let sem = |s: &Summary| {
+            if s.n > 0 { s.stddev / (s.n as f64).sqrt() } else { 0.0 }
+        };
+        let allowance_s = b.mean * (max_regress_pct / 100.0) + 2.0 * (sem(&b) + sem(c));
+        let delta_s = c.mean - b.mean;
+        let delta_pct = if b.mean > 0.0 { 100.0 * delta_s / b.mean } else { 0.0 };
+        out.push(BenchComparison {
+            name,
+            base_s: b.mean,
+            cur_s: c.mean,
+            delta_pct,
+            allowance_s,
+            regressed: delta_s > allowance_s,
+        });
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -147,11 +242,20 @@ mod tests {
     use super::*;
 
     #[test]
-    fn measure_returns_positive_times() {
+    fn measure_returns_positive_times_and_honors_env_caps() {
+        // One test for both behaviors: the env-cap check mutates global
+        // process state, so it must not run concurrently with another
+        // `measure` call.
         let s = measure(1, 10, || (0..1000).sum::<u64>());
         assert_eq!(s.n, 10);
         assert!(s.mean > 0.0);
         assert!(s.p50 <= s.p90 && s.p90 <= s.max);
+        std::env::set_var("XENOS_BENCH_ITERS", "3");
+        std::env::set_var("XENOS_BENCH_WARMUP", "0");
+        let s = measure(5, 100, || std::hint::black_box(1 + 1));
+        std::env::remove_var("XENOS_BENCH_ITERS");
+        std::env::remove_var("XENOS_BENCH_WARMUP");
+        assert_eq!(s.n, 3);
     }
 
     #[test]
@@ -182,5 +286,86 @@ mod tests {
             ("entries", Json::Arr(vec![])),
         ]);
         assert!(validate_bench_json(&empty).is_err());
+    }
+
+    fn doc_of(entries: Vec<(&str, Summary)>) -> Json {
+        let mut set = BenchSet::new("t");
+        for (name, s) in entries {
+            set.push(name, s);
+        }
+        set.to_json()
+    }
+
+    fn summary_ms(mean: f64, stddev: f64) -> Summary {
+        Summary {
+            n: 16,
+            mean,
+            stddev,
+            min: mean,
+            p50: mean,
+            p90: mean,
+            p95: mean,
+            p99: mean,
+            max: mean,
+        }
+    }
+
+    #[test]
+    fn validate_rejects_duplicates_nan_and_negative_durations() {
+        let s = summary_ms(0.010, 0.001);
+        let dup = doc_of(vec![("a", s), ("a", s)]);
+        let err = validate_bench_json(&dup).unwrap_err().to_string();
+        assert!(err.contains("duplicate bench id"), "{err}");
+
+        let mut neg = s;
+        neg.mean = -0.010;
+        neg.min = -0.010;
+        assert!(validate_bench_json(&doc_of(vec![("a", neg)])).is_err());
+
+        // NaN cannot travel through Json (to_pretty/parse reject it), but
+        // a hand-built document with one must still be rejected.
+        let mut nan = s;
+        nan.stddev = f64::NAN;
+        assert!(validate_bench_json(&doc_of(vec![("a", nan)])).is_err());
+    }
+
+    #[test]
+    fn diff_flags_regressions_past_budget_plus_noise() {
+        let base = doc_of(vec![("k", summary_ms(0.010, 0.0001))]);
+        // 2x slower: far past a 10% budget.
+        let slow = doc_of(vec![("k", summary_ms(0.020, 0.0001))]);
+        let d = diff_bench_json(&base, &slow, 10.0).unwrap();
+        assert_eq!(d.len(), 1);
+        assert!(d[0].regressed);
+        assert!(d[0].delta_pct > 90.0);
+        // 5% slower: inside the 10% budget.
+        let ok = doc_of(vec![("k", summary_ms(0.0105, 0.0001))]);
+        let d = diff_bench_json(&base, &ok, 10.0).unwrap();
+        assert!(!d[0].regressed);
+        // Faster never regresses.
+        let fast = doc_of(vec![("k", summary_ms(0.005, 0.0001))]);
+        assert!(!diff_bench_json(&base, &fast, 10.0).unwrap()[0].regressed);
+    }
+
+    #[test]
+    fn diff_noise_floor_tolerates_noisy_but_unchanged_runs() {
+        // 12% slower on paper, but both runs are so noisy (sem ≈ 2.5% of
+        // the mean each) that the two-sem floor absorbs it.
+        let base = doc_of(vec![("k", summary_ms(0.0100, 0.0010))]);
+        let cur = doc_of(vec![("k", summary_ms(0.0112, 0.0010))]);
+        let d = diff_bench_json(&base, &cur, 10.0).unwrap();
+        assert!(!d[0].regressed, "noise floor should absorb this: {:?}", d[0]);
+    }
+
+    #[test]
+    fn diff_rejects_dropped_benchmarks() {
+        let s = summary_ms(0.010, 0.001);
+        let base = doc_of(vec![("a", s), ("b", s)]);
+        let cur = doc_of(vec![("a", s)]);
+        let err = diff_bench_json(&base, &cur, 10.0).unwrap_err().to_string();
+        assert!(err.contains("missing from current"), "{err}");
+        // New benchmarks in current are fine.
+        let grown = doc_of(vec![("a", s), ("b", s), ("c", s)]);
+        assert_eq!(diff_bench_json(&base, &grown, 10.0).unwrap().len(), 2);
     }
 }

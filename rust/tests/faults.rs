@@ -12,7 +12,9 @@
 use std::sync::Arc;
 use std::time::Duration;
 
-use xenos::dist::exec::{ClusterDriver, ClusterOptions, Fault, FaultScript};
+use xenos::dist::exec::{
+    ClusterDriver, ClusterOptions, Fault, FaultScript, StragglerOptions, StragglerTracker,
+};
 use xenos::dist::{PartitionScheme, SyncMode};
 use xenos::graph::{Graph, GraphBuilder, Shape};
 use xenos::hw::presets;
@@ -288,4 +290,141 @@ fn driver_deadline_lapse_does_not_brick_the_cluster() {
     let f = driver.fault_stats();
     assert!(f.failures >= 1, "{f:?}");
     assert_eq!(f.fallbacks, 0, "{f:?}");
+}
+
+/// The straggler scorer is a pure state machine: a rank past the slowdown
+/// threshold builds a streak, fires only after `patience` consecutive
+/// rounds, fires once per detection, and a healthy round resets the
+/// streak.
+#[test]
+fn straggler_tracker_fires_after_patience_and_only_once() {
+    let opts = StragglerOptions { alpha: 1.0, slowdown: 2.0, patience: 3, reprobe_every: 8 };
+    let mut t = StragglerTracker::new(opts, 3);
+    assert_eq!(t.observe(&[100, 100, 1000]), None, "streak 1 of 3");
+    assert_eq!(t.observe(&[100, 100, 1000]), None, "streak 2 of 3");
+    assert_eq!(t.observe(&[100, 100, 1000]), Some(2), "patience reached");
+    assert_eq!(t.observe(&[100, 100, 1000]), None, "detection is one-shot");
+
+    let mut t = StragglerTracker::new(opts, 3);
+    t.observe(&[100, 100, 1000]);
+    t.observe(&[100, 100, 1000]);
+    assert_eq!(t.observe(&[100, 100, 100]), None, "healthy round clears the streak");
+    assert_eq!(t.observe(&[100, 100, 1000]), None, "streak rebuilds from zero");
+
+    t.reset(2);
+    assert_eq!(t.scores(), &[1.0, 1.0], "reset forgets all history");
+}
+
+/// EWMA smoothing, worst-offender selection among several qualifying
+/// stragglers, and degenerate inputs (world mismatch, tiny clusters,
+/// all-idle rounds) that must never name a victim.
+#[test]
+fn straggler_tracker_smooths_and_picks_the_worst_offender() {
+    // alpha 0.5: one 9x round lands at 0.5*9 + 0.5*1 = 5.0.
+    let opts = StragglerOptions { alpha: 0.5, slowdown: 2.0, patience: 1, reprobe_every: 8 };
+    let mut t = StragglerTracker::new(opts, 3);
+    assert_eq!(t.observe(&[100, 100, 900]), Some(2));
+    assert!((t.scores()[2] - 5.0).abs() < 1e-9, "EWMA: {:?}", t.scores());
+
+    // Two ranks past the threshold in the same round: the worse score wins.
+    let opts = StragglerOptions { alpha: 1.0, slowdown: 2.0, patience: 1, reprobe_every: 8 };
+    let mut t = StragglerTracker::new(opts, 5);
+    assert_eq!(t.observe(&[100, 100, 100, 600, 900]), Some(4), "worst offender wins");
+
+    // Degenerate rounds are ignored, never scored.
+    let mut t = StragglerTracker::new(opts, 3);
+    assert_eq!(t.observe(&[100, 100]), None, "world-size mismatch");
+    assert_eq!(t.observe(&[0, 0, 0]), None, "all-idle round");
+    let mut tiny = StragglerTracker::new(opts, 1);
+    assert_eq!(tiny.observe(&[100]), None, "nothing to compare against");
+}
+
+/// The tentpole end-to-end: a rank scripted to stall a few ms on *every*
+/// transport op is never slow enough to trip a deadline, but its busy
+/// time dwarfs its peers' round after round — the driver must demote it
+/// proactively (straggler counters move, fault counters do not), keep
+/// answering bit-exactly at the reduced world size, and after the probe
+/// interval re-admit it (local re-spawns get clean transports), restoring
+/// the original world — still bit-exact throughout.
+#[test]
+fn persistent_straggler_is_demoted_then_readmitted() {
+    let g = fault_cnn();
+    let (inputs, want) = serial_reference(&g, 79);
+    // A persistent straggler: `Fault::Delay` fires only at its exact op
+    // index, so chain one entry per index to slow every op of the first
+    // rounds (demotion lands long before the script runs out).
+    let delay = Duration::from_millis(3);
+    let mut fault = FaultScript::delay(2, 0, delay);
+    for i in 1..2000u64 {
+        fault = fault.and(2, Fault::Delay { at_op: i, delay });
+    }
+    let opts = ClusterOptions {
+        // Deadlines generous enough that the fault path can never fire:
+        // any demotion below is provably proactive.
+        recv_timeout: Duration::from_secs(10),
+        infer_timeout: Duration::from_secs(60),
+        fault: Some(fault),
+        straggler: Some(StragglerOptions {
+            alpha: 1.0,
+            slowdown: 3.0,
+            patience: 2,
+            reprobe_every: 2,
+        }),
+        ..ClusterOptions::default()
+    };
+    let d = presets::tms320c6678();
+    let driver = ClusterDriver::local_with(
+        Arc::new(g.clone()),
+        &d,
+        3,
+        PartitionScheme::OutC,
+        SyncMode::Ring,
+        opts,
+        None,
+    )
+    .expect("cluster spins up");
+
+    // Phase 1: every round is bit-exact; after `patience` rounds the
+    // scripted rank is demoted (world 3 -> 2).
+    let mut demoted = false;
+    for round in 0..6 {
+        let got = driver.infer(&inputs).expect("inference");
+        assert_outputs_identical(&want, &got, &format!("round {round}"));
+        if driver.world() == 2 {
+            demoted = true;
+            break;
+        }
+    }
+    let s = driver.straggler_stats();
+    assert!(demoted, "straggler never demoted: {s:?}");
+    assert!(s.demotions >= 1, "{s:?}");
+    assert_eq!(s.demoted, 1, "one member awaiting re-admission: {s:?}");
+    // Proactive means the failure path never ran: no deadline tripped, no
+    // failure-driven retry, no fallback.
+    let f = driver.fault_stats();
+    assert_eq!(f.failures, 0, "demotion must beat the deadline: {f:?}");
+    assert_eq!(f.retries, 0, "{f:?}");
+    assert_eq!(f.fallbacks, 0, "{f:?}");
+
+    // Phase 2: after `reprobe_every` healthy rounds the demoted rank is
+    // re-admitted with clean transports and the world is restored.
+    let mut readmitted = false;
+    for round in 0..8 {
+        let got = driver.infer(&inputs).expect("post-demotion inference");
+        assert_outputs_identical(&want, &got, &format!("post-demotion round {round}"));
+        if driver.world() == 3 {
+            readmitted = true;
+            break;
+        }
+    }
+    let s = driver.straggler_stats();
+    assert!(readmitted, "demoted rank never re-admitted: {s:?}");
+    assert!(s.readmissions >= 1, "{s:?}");
+    assert_eq!(s.demoted, 0, "ledger drained: {s:?}");
+
+    // The restored 3-rank cluster keeps answering bit-exactly.
+    let got = driver.infer(&inputs).expect("post-readmission inference");
+    assert_outputs_identical(&want, &got, "post-readmission");
+    assert_eq!(driver.world(), 3);
+    assert_eq!(driver.fault_stats().failures, 0, "still no deadline trips");
 }

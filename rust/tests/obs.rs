@@ -7,12 +7,14 @@
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
 
-use xenos::dist::exec::ClusterDriver;
+use xenos::dist::exec::{plan_cluster_opts, plan_cluster_src, ClusterDriver};
 use xenos::dist::{PartitionScheme, SyncMode};
 use xenos::graph::{Graph, GraphBuilder, Shape};
 use xenos::hw::presets;
-use xenos::obs::{metrics, trace, Json};
+use xenos::obs::profile::op_signature;
+use xenos::obs::{metrics, trace, CostSource, DriftReport, Json, ProfileDb};
 use xenos::ops::interp::synthetic_inputs;
+use xenos::quant::Precision;
 use xenos::runtime::Engine;
 use xenos::util::bench::validate_bench_json;
 
@@ -228,6 +230,160 @@ fn recorder_toggle_is_bit_exact() {
             assert_eq!(a.data, b.data, "{}: tracing changed the numerics", e.name());
         }
     }
+}
+
+/// The plan-vs-actual report, pinned on hand-authored spans: measured
+/// time is span-sum / iters / ranks-that-computed-the-node, unknown span
+/// names join no node (but still land in the per-rank split), and the
+/// per-rank compute/wait/halo fractions reconcile exactly.
+#[test]
+fn drift_report_reconciles_fabricated_spans() {
+    let g = small_cnn();
+    let d = presets::tms320c6678();
+    let ev = |name: &str, cat: trace::Cat, dur_us: u64, lane: u32| trace::SpanEvent {
+        name: name.to_string(),
+        cat,
+        ts_us: 0,
+        dur_us,
+        lane,
+        tid: 1,
+        bytes: 0,
+    };
+    // Two inferences: c1 ran 4ms total on one rank, c2 2ms on each of two
+    // ranks; one span names no node; rank 1 waited, rank 0 exchanged halos.
+    let events = vec![
+        ev("c1", trace::Cat::Compute, 4_000, 0),
+        ev("c2", trace::Cat::Compute, 2_000, 0),
+        ev("c2", trace::Cat::Compute, 2_000, 1),
+        ev("not_a_node", trace::Cat::Compute, 6_000, 0),
+        ev("allgather", trace::Cat::Wait, 1_000, 1),
+        ev("halo", trace::Cat::Halo, 500, 0),
+    ];
+    let r = DriftReport::build(&g, &d, None, &events, 2, 3);
+    assert_eq!(r.iters, 2);
+
+    let node = |name: &str| r.nodes.iter().find(|n| n.name == name).expect(name);
+    let approx = |a: f64, b: f64| (a - b).abs() < 1e-12;
+    // c1: 4000us / 1e6 / 2 iters / 1 rank.
+    assert!(approx(node("c1").measured_s, 0.002), "{:?}", node("c1"));
+    // c2: (2000+2000)us / 1e6 / 2 iters / 2 ranks.
+    assert!(approx(node("c2").measured_s, 0.001), "{:?}", node("c2"));
+    // Un-measured node: zero measured, zero ratio, positive prediction.
+    assert_eq!(node("fc").measured_s, 0.0);
+    assert_eq!(node("fc").ratio, 0.0);
+    assert!(node("fc").predicted_s > 0.0);
+    // Every row carries the single-device scheme and a profile join key.
+    assert!(r.nodes.iter().all(|n| n.scheme == "serial"), "{:?}", r.nodes);
+    let c1_node = g.nodes.iter().find(|n| n.name == "c1").unwrap();
+    assert_eq!(node("c1").signature, op_signature(c1_node));
+    assert!(approx(node("c1").ratio, node("c1").measured_s / node("c1").predicted_s));
+    // Totals: only spans that joined a node count as measured.
+    assert!(approx(r.measured_total_s, 0.003), "{}", r.measured_total_s);
+    assert!(r.predicted_total_s > 0.0);
+    assert!(approx(r.overall_ratio(), r.measured_total_s / r.predicted_total_s));
+
+    // Per-rank split covers *all* spans, joined or not.
+    assert_eq!(r.per_rank.len(), 2);
+    let r0 = &r.per_rank[0];
+    let r1 = &r.per_rank[1];
+    assert!(approx(r0.compute_s, 0.006), "{r0:?}"); // (4000+2000+6000)/1e6/2
+    assert!(approx(r0.halo_s, 0.00025), "{r0:?}");
+    assert_eq!(r0.wait_s, 0.0);
+    assert!(approx(r1.compute_s, 0.001), "{r1:?}");
+    assert!(approx(r1.wait_s, 0.0005), "{r1:?}");
+    let (c, w, h) = r0.fractions();
+    assert!(approx(c + w + h, 1.0));
+
+    // Offenders: exactly the measured nodes, worst absolute drift first.
+    assert_eq!(r.offenders.len(), 2, "{:?}", r.offenders);
+    assert!(r.offenders.iter().all(|o| o == "c1" || o == "c2"), "{:?}", r.offenders);
+
+    // The report document round-trips and the renderer names the scheme.
+    let doc = Json::parse(&r.to_json().to_pretty()).expect("report JSON parses");
+    assert_eq!(doc.get("schema").and_then(Json::as_str), Some("xenos-drift-v1"));
+    assert_eq!(doc.get("iters").and_then(Json::as_f64), Some(2.0));
+    assert!(r.render(3).contains("serial"), "{}", r.render(3));
+}
+
+/// The analyze pipeline end-to-end against the live recorder: a traced
+/// interpreter run produces one compute span per node, and the report's
+/// measured totals reconcile with the raw spans it was built from.
+#[test]
+fn drift_report_reconciles_with_the_live_recorder() {
+    let _l = obs_lock();
+    let g = small_cnn();
+    let d = presets::tms320c6678();
+    let inputs = synthetic_inputs(&g, 41);
+    let engine = Engine::interp(Arc::new(g.clone()));
+    trace::clear();
+    trace::set_enabled(true);
+    engine.infer(&inputs).expect("traced inference");
+    trace::set_enabled(false);
+    let events = trace::drain();
+    trace::clear();
+
+    let r = DriftReport::build(&g, &d, None, &events, 1, 5);
+    // Sub-µs ops can legitimately record a 0µs span; the convolutions
+    // cannot — they must carry measured time.
+    for name in ["c1", "c2"] {
+        let n = r.nodes.iter().find(|n| n.name == name).expect(name);
+        assert!(n.measured_s > 0.0, "node {name} has no measured time");
+    }
+    let span_total: f64 = events
+        .iter()
+        .filter(|e| e.cat == trace::Cat::Compute)
+        .map(|e| e.dur_us as f64 / 1e6)
+        .sum();
+    assert!(
+        (r.measured_total_s - span_total).abs() < 1e-9,
+        "report total {} != span total {span_total}",
+        r.measured_total_s
+    );
+    // The same spans feed the profile store: every node contributes.
+    let mut db = ProfileDb::default();
+    let matched = db.merge_spans(&g, &events, 1);
+    assert_eq!(matched, r.nodes.len(), "profile store and report join the same spans");
+}
+
+/// Measured profiles steer the cluster planner: under `Mix`, an op the
+/// profile knows to be expensive gets sharded, and the same op measured
+/// as nearly free stays replicated (sync traffic would dominate) — in
+/// both directions overriding whatever the analytic model would do.
+#[test]
+fn measured_costs_steer_the_mix_plan() {
+    let g = small_cnn();
+    let d = presets::tms320c6678();
+    let c2 = g.nodes.iter().find(|n| n.name == "c2").expect("c2 node");
+    let plan = |src: &CostSource| {
+        plan_cluster_src(&g, &d, 3, PartitionScheme::Mix, SyncMode::Ring, Precision::F32, true, src)
+    };
+
+    let mut slow = ProfileDb::default();
+    slow.record(&op_signature(c2), 1000.0, 10); // measured mean: 100s
+    let sharded = plan(&CostSource::Measured(slow));
+    assert_ne!(
+        sharded.scheme_label(c2.id),
+        "replicated",
+        "a 100s op must shard: compute/p beats any sync bill"
+    );
+
+    let mut fast = ProfileDb::default();
+    fast.record(&op_signature(c2), 1e-8, 10); // measured mean: 1ns
+    let replicated = plan(&CostSource::Measured(fast));
+    assert_eq!(
+        replicated.scheme_label(c2.id),
+        "replicated",
+        "a 1ns op must not shard: sync traffic dominates"
+    );
+
+    // The explicit analytic source is exactly the historical planner.
+    let a = plan(&CostSource::Analytic);
+    let b =
+        plan_cluster_opts(&g, &d, 3, PartitionScheme::Mix, SyncMode::Ring, Precision::F32, true);
+    let labels = |p: &xenos::dist::exec::ClusterPlan| {
+        g.nodes.iter().map(|n| p.scheme_label(n.id)).collect::<Vec<_>>()
+    };
+    assert_eq!(labels(&a), labels(&b));
 }
 
 #[test]
