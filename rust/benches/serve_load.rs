@@ -12,9 +12,12 @@ use std::sync::Arc;
 use xenos::graph::{GraphBuilder, Shape};
 use xenos::hw::presets;
 use xenos::runtime::Engine;
-use xenos::serve::{coordinator::synthetic_requests, BatcherConfig, Coordinator, ServeConfig};
+use xenos::serve::{
+    coordinator::synthetic_requests, BatcherConfig, Coordinator, ServeConfig, ServeReport,
+};
 use xenos::util::bench::BenchSet;
 use xenos::util::human_time;
+use xenos::util::stats::Summary;
 
 /// `--out PATH` (after `cargo bench -- `) or the `BENCH_OUT` env var.
 fn out_path() -> Option<String> {
@@ -37,6 +40,19 @@ fn serve_block() -> xenos::Graph {
     let s = b.softmax("sm", f);
     b.output(s);
     b.finish()
+}
+
+/// Per-sample amortized engine time: each response's `exec_s` covers the
+/// whole batch it was served in, so divide by its batch size. This keeps
+/// the `exec` entries comparable with pre-batching baselines, where one
+/// response was one engine call.
+fn per_sample_exec(report: &ServeReport) -> Summary {
+    let xs: Vec<f64> = report
+        .responses
+        .iter()
+        .map(|r| r.exec_s / (r.batch_size.max(1) as f64))
+        .collect();
+    Summary::of(&xs).expect("at least one response")
 }
 
 fn main() {
@@ -69,20 +85,60 @@ fn main() {
                 synthetic_requests(shapes.clone(), 256, 0.0, 9),
             )
             .expect("serve run");
+        let exec = per_sample_exec(&report);
         println!(
             "serve[{label}]: {} requests at {:.1} req/s — latency p50 {}, exec p50 {}, \
              queue p50 {}, assembly p50 {}",
             report.served,
             report.throughput,
             human_time(report.latency.p50),
-            human_time(report.exec.p50),
+            human_time(exec.p50),
             human_time(report.queue.p50),
             human_time(report.assembly.p50),
         );
         set.push(&format!("serve[{label}]: latency"), report.latency);
-        set.push(&format!("serve[{label}]: exec"), report.exec);
+        set.push(&format!("serve[{label}]: exec"), exec);
         set.push(&format!("serve[{label}]: queue"), report.queue);
         set.push(&format!("serve[{label}]: assembly"), report.assembly);
+    }
+
+    // Batch-size sweep: the same engine and request stream served at
+    // max_batch 1/4/8 — the amortization curve of true batched
+    // execution. `sample time` is the inverse throughput (wall seconds
+    // per served request, lower = faster), so the gate reads a
+    // throughput loss as a regression like any other timing entry.
+    for batch in [1usize, 4, 8] {
+        let cfg = ServeConfig {
+            workers: 2,
+            engine_threads: 1,
+            batcher: BatcherConfig {
+                max_batch: batch,
+                max_wait: std::time::Duration::from_millis(1),
+            },
+            ..Default::default()
+        };
+        let gg = g.clone();
+        let report = Coordinator::new(cfg)
+            .run(
+                move |_w| Ok(Engine::interp(gg.clone())),
+                synthetic_requests(shapes.clone(), 256, 0.0, 9),
+            )
+            .expect("serve run");
+        let exec = per_sample_exec(&report);
+        let sample_time =
+            Summary::of(&[report.wall_s / report.served.max(1) as f64]).expect("one value");
+        println!(
+            "serve[batch {batch}]: {} requests at {:.1} req/s (fill {:.2}) — \
+             per-sample latency p50 {}, per-sample exec p50 {}",
+            report.served,
+            report.throughput,
+            report.batch_fill,
+            human_time(report.latency.p50),
+            human_time(exec.p50),
+        );
+        set.push(&format!("serve[batch {batch}]: per-sample latency"), report.latency);
+        set.push(&format!("serve[batch {batch}]: per-sample exec"), exec);
+        set.push(&format!("serve[batch {batch}]: sample time"), sample_time);
     }
 
     if let Some(path) = out_path() {

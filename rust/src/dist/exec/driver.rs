@@ -732,16 +732,39 @@ impl ClusterDriver {
     /// terminal (no identifiable culprit, or the rebuild itself failed) —
     /// never panics crossing the API.
     pub fn infer(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let mut out = self.infer_batch_impl(&[inputs])?;
+        Ok(out.pop().expect("one sample"))
+    }
+
+    /// Run one distributed inference round over a whole batch: every
+    /// sample ships to the cluster in **one** round, so the mesh performs
+    /// one set of collectives (all-gathers, halo exchanges,
+    /// reduce-scatters) for the batch instead of one per sample — sync
+    /// rounds drop from `N × nodes` to `nodes`. Outputs are per-sample
+    /// (`out[sample][output_idx]`) and element-wise identical to `N`
+    /// sequential [`ClusterDriver::infer`] calls on every backend and
+    /// precision. Failure handling (survivor re-plans, single-device
+    /// fallback) is the same as [`ClusterDriver::infer`], applied to the
+    /// whole batch as one round.
+    pub fn infer_batch(&self, batch: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>> {
+        let refs: Vec<&[Tensor]> = batch.iter().map(|b| &b[..]).collect();
+        self.infer_batch_impl(&refs)
+    }
+
+    fn infer_batch_impl(&self, batch: &[&[Tensor]]) -> Result<Vec<Vec<Tensor>>> {
+        if batch.is_empty() {
+            return Ok(Vec::new());
+        }
         // One span per round trip (re-plan retries included): the driver's
         // row in the merged cluster timeline.
         let _round_sp = trace::span("round", trace::Cat::Round);
         let mut state = lock_recover(&self.state);
         loop {
             let outcome = match &state.backend {
-                Backend::Single(e) => return self.run_single(e, inputs),
+                Backend::Single(e) => return self.run_single_batch(e, batch),
                 Backend::Dead => bail!("cluster is down after a failed re-plan"),
-                Backend::Local(c) => c.infer(inputs, self.opts.infer_timeout, &self.faults),
-                Backend::Tcp(c) => c.infer(inputs),
+                Backend::Local(c) => c.infer_batch(batch, self.opts.infer_timeout, &self.faults),
+                Backend::Tcp(c) => c.infer_batch(batch),
             };
             let failure = match outcome {
                 Ok(v) => {
@@ -1104,10 +1127,15 @@ impl ClusterDriver {
         })
     }
 
-    fn run_single(&self, engine: &SingleEngine, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+    fn run_single_batch(
+        &self,
+        engine: &SingleEngine,
+        batch: &[&[Tensor]],
+    ) -> Result<Vec<Vec<Tensor>>> {
+        let owned: Vec<Vec<Tensor>> = batch.iter().map(|b| b.to_vec()).collect();
         Ok(match engine {
-            SingleEngine::F32 => Interpreter::new(&self.graph).run(inputs),
-            SingleEngine::Int8(q) => q.run(inputs),
+            SingleEngine::F32 => Interpreter::new(&self.graph).run_batch(&owned),
+            SingleEngine::Int8(q) => q.run_batch(&owned),
         })
     }
 }
@@ -1118,7 +1146,7 @@ impl ClusterDriver {
 /// a worker that was still executing a timed-out round can report late —
 /// after the driver has already moved on — and that stale report must
 /// never be taken as a later round's result.
-type RoundReport = (u64, usize, Result<Vec<Tensor>, WorkerFailure>);
+type RoundReport = (u64, usize, Result<Vec<Vec<Tensor>>, WorkerFailure>);
 
 /// Local backend: worker threads + job/result channels. The channel pair
 /// sits behind one mutex held for a whole round (submit + result), so
@@ -1139,7 +1167,7 @@ struct LocalRound {
     /// Id stamped on the next submitted round; monotonically increasing
     /// over this cluster's lifetime so reports pair with submissions.
     next_round: u64,
-    job_txs: Vec<Sender<(u64, Vec<Tensor>)>>,
+    job_txs: Vec<Sender<(u64, Vec<Vec<Tensor>>)>>,
     out_rx: Receiver<RoundReport>,
 }
 
@@ -1160,7 +1188,7 @@ impl LocalCluster {
         let mut handles = Vec::with_capacity(p);
         let mut stats = Vec::with_capacity(p);
         for (rank, transport) in mesh.into_iter().enumerate() {
-            let (job_tx, job_rx) = channel::<(u64, Vec<Tensor>)>();
+            let (job_tx, job_rx) = channel::<(u64, Vec<Vec<Tensor>>)>();
             let shard = ShardParams::extract(graph, plan, master, rank);
             // The rank quantizes its own shard; per-channel weight scales
             // (and the row offset anchoring the per-channel grids) make
@@ -1202,9 +1230,9 @@ impl LocalCluster {
             let handle = std::thread::Builder::new()
                 .name(format!("xenos-shard-{rank}"))
                 .spawn(move || {
-                    while let Ok((round, inputs)) = job_rx.recv() {
-                        let res = catch_unwind(AssertUnwindSafe(|| worker.run(&inputs)));
-                        let res: Result<Vec<Tensor>, WorkerFailure> = match res {
+                    while let Ok((round, batch)) = job_rx.recv() {
+                        let res = catch_unwind(AssertUnwindSafe(|| worker.run_batch(&batch)));
+                        let res: Result<Vec<Vec<Tensor>>, WorkerFailure> = match res {
                             Ok(Ok(v)) => Ok(v),
                             Ok(Err(e)) => {
                                 if e.is_abort() {
@@ -1237,12 +1265,12 @@ impl LocalCluster {
     /// authoritative). If the overall deadline lapses, the driver aborts
     /// the mesh so blocked workers fail fast instead of waiting out their
     /// own recv deadlines.
-    fn infer(
+    fn infer_batch(
         &self,
-        inputs: &[Tensor],
+        batch: &[&[Tensor]],
         infer_timeout: Duration,
         faults: &FaultStats,
-    ) -> Result<Vec<Tensor>, RoundFailure> {
+    ) -> Result<Vec<Vec<Tensor>>, RoundFailure> {
         let mut round = lock_recover(&self.round);
         let id = round.next_round;
         round.next_round += 1;
@@ -1251,7 +1279,8 @@ impl LocalCluster {
         // by its round id below).
         while round.out_rx.try_recv().is_ok() {}
         for tx in &round.job_txs {
-            if tx.send((id, inputs.to_vec())).is_err() {
+            let owned: Vec<Vec<Tensor>> = batch.iter().map(|b| b.to_vec()).collect();
+            if tx.send((id, owned)).is_err() {
                 return Err(RoundFailure {
                     culprit: None,
                     message: "cluster worker thread is gone".to_string(),
@@ -1451,21 +1480,48 @@ impl TcpCluster {
         Ok(all)
     }
 
-    fn infer(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, RoundFailure> {
+    /// One wire round for the whole batch. A batch of one speaks the
+    /// original `CTRL_INPUT`/`CTRL_OUTPUT` frames (byte-identical traffic
+    /// to the pre-batch protocol, so mixed-version meshes keep working
+    /// for solo rounds); larger batches ship every sample in one
+    /// `CTRL_INPUT_BATCH` frame and read one `CTRL_OUTPUT_BATCH` back —
+    /// one control round trip per batch, not per sample.
+    fn infer_batch(&self, batch: &[&[Tensor]]) -> Result<Vec<Vec<Tensor>>, RoundFailure> {
         let mut ctrls = lock_recover(&self.ctrls);
         let fail = |rank: usize, message: String| RoundFailure { culprit: Some(rank), message };
-        let payload = wire::encode_tensors(inputs);
+        let solo = batch.len() == 1;
+        let (in_tag, payload) = if solo {
+            (wire::CTRL_INPUT, wire::encode_tensors(batch[0]))
+        } else {
+            (wire::CTRL_INPUT_BATCH, wire::encode_tensor_batch(batch))
+        };
         for (rank, sock) in ctrls.iter_mut().enumerate() {
-            if let Err(e) = wire::write_frame(sock, wire::CTRL_INPUT, &payload) {
+            if let Err(e) = wire::write_frame(sock, in_tag, &payload) {
                 return Err(fail(rank, format!("sending inputs to worker {rank}: {e}")));
             }
         }
         let outputs = match wire::read_frame(&mut ctrls[0]) {
             Err(e) => return Err(fail(0, format!("reading outputs from worker 0: {e}"))),
-            Ok((wire::CTRL_OUTPUT, payload)) => match wire::decode_tensors(&payload) {
-                Ok(v) => v,
+            Ok((wire::CTRL_OUTPUT, payload)) if solo => match wire::decode_tensors(&payload) {
+                Ok(v) => vec![v],
                 Err(e) => return Err(fail(0, format!("malformed outputs from worker 0: {e}"))),
             },
+            Ok((wire::CTRL_OUTPUT_BATCH, payload)) if !solo => {
+                match wire::decode_tensor_batch(&payload) {
+                    Ok(v) if v.len() == batch.len() => v,
+                    Ok(v) => {
+                        let msg = format!(
+                            "worker 0 returned {} outputs for {} samples",
+                            v.len(),
+                            batch.len()
+                        );
+                        return Err(fail(0, msg));
+                    }
+                    Err(e) => {
+                        return Err(fail(0, format!("malformed outputs from worker 0: {e}")))
+                    }
+                }
+            }
             Ok((wire::CTRL_ERR, payload)) => {
                 let (culprit, reason) = wire::decode_abort(&payload);
                 return Err(RoundFailure {
@@ -1660,6 +1716,35 @@ fn serve_session(listener: &TcpListener, ctrl: &mut TcpStream, spec: &JobSpec) -
                         // A typed round failure: report the culprit so the
                         // driver can re-plan, then end the session (the
                         // mesh is broken; the driver reconnects).
+                        let payload = wire::encode_abort(e.culprit(), &e.to_string());
+                        let _ = wire::write_frame(ctrl, wire::CTRL_ERR, &payload);
+                        bail!("inference round failed: {e}");
+                    }
+                    Err(p) => {
+                        let msg = panic_message(p);
+                        let payload = wire::encode_abort(Some(spec.rank), &msg);
+                        let _ = wire::write_frame(ctrl, wire::CTRL_ERR, &payload);
+                        bail!("inference round panicked: {msg}");
+                    }
+                }
+            }
+            wire::CTRL_INPUT_BATCH => {
+                // A whole batch in one frame: run every sample in one
+                // shard round (one set of collectives for the batch) and
+                // answer with one batch frame.
+                let batch = wire::decode_tensor_batch(&payload)?;
+                let res = catch_unwind(AssertUnwindSafe(|| worker.run_batch(&batch)));
+                match res {
+                    Ok(Ok(outs)) => {
+                        if spec.rank == 0 {
+                            let refs: Vec<&[Tensor]> = outs.iter().map(|o| &o[..]).collect();
+                            let out = wire::encode_tensor_batch(&refs);
+                            wire::write_frame(ctrl, wire::CTRL_OUTPUT_BATCH, &out)?;
+                        } else {
+                            wire::write_frame(ctrl, wire::CTRL_DONE, &[])?;
+                        }
+                    }
+                    Ok(Err(e)) => {
                         let payload = wire::encode_abort(e.culprit(), &e.to_string());
                         let _ = wire::write_frame(ctrl, wire::CTRL_ERR, &payload);
                         bail!("inference round failed: {e}");

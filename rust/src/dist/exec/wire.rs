@@ -60,6 +60,13 @@ pub const CTRL_TRACE: u64 = 0xFFFF_001B;
 /// previously demoted host; an idle worker answers it both outside and
 /// inside a session without consuming its session budget.
 pub const CTRL_PROBE: u64 = 0xFFFF_001C;
+/// Driver → worker: one **batched** inference round's inputs — every
+/// sample of the batch in one frame ([`encode_tensor_batch`]). The worker
+/// runs the whole batch as one cluster round (one set of collectives);
+/// single-sample rounds keep the plain [`CTRL_INPUT`] frame.
+pub const CTRL_INPUT_BATCH: u64 = 0xFFFF_001D;
+/// Worker (rank 0) → driver: per-sample outputs of a batched round.
+pub const CTRL_OUTPUT_BATCH: u64 = 0xFFFF_001E;
 
 /// Frame-kind flag for peer-link tags: the payload is raw i8 (quantized
 /// activations), **one byte per element on the wire** — the quantized
@@ -502,6 +509,31 @@ pub(crate) fn decode_tensors(payload: &[u8]) -> Result<Vec<Tensor>> {
     Ok(out)
 }
 
+/// Serialize a batch of per-sample tensor lists: `u32` batch size, then
+/// each sample's [`encode_tensors`] payload length-prefixed — the
+/// [`CTRL_INPUT_BATCH`] / [`CTRL_OUTPUT_BATCH`] frame body.
+pub(crate) fn encode_tensor_batch(batch: &[&[Tensor]]) -> Vec<u8> {
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&(batch.len() as u32).to_le_bytes());
+    for sample in batch {
+        let enc = encode_tensors(sample);
+        buf.extend_from_slice(&(enc.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&enc);
+    }
+    buf
+}
+
+pub(crate) fn decode_tensor_batch(payload: &[u8]) -> Result<Vec<Vec<Tensor>>> {
+    let mut d = Dec::new(payload);
+    let nbatch = d.u32()? as usize;
+    let mut out = Vec::with_capacity(nbatch);
+    for _ in 0..nbatch {
+        let len = d.u32()? as usize;
+        out.push(decode_tensors(d.bytes(len)?)?);
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -589,6 +621,22 @@ mod tests {
         assert_eq!(got[0].shape(), ts[0].shape());
         assert_eq!(got[0].data, ts[0].data);
         assert_eq!(got[1].data, ts[1].data);
+    }
+
+    #[test]
+    fn tensor_batches_round_trip() {
+        let s0 = vec![Tensor::fm(1, 1, 2, 2, vec![1.0, 2.0, 3.0, 4.0])];
+        let s1 = vec![Tensor::fm(1, 1, 2, 2, vec![5.0, 6.0, 7.0, 8.0])];
+        let batch: Vec<&[Tensor]> = vec![&s0, &s1];
+        let got = decode_tensor_batch(&encode_tensor_batch(&batch)).unwrap();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0][0].data, s0[0].data);
+        assert_eq!(got[1][0].data, s1[0].data);
+        // Empty batches survive too (degenerate but legal).
+        assert!(decode_tensor_batch(&encode_tensor_batch(&[])).unwrap().is_empty());
+        // Truncated batch payloads are errors, not panics.
+        let enc = encode_tensor_batch(&batch);
+        assert!(decode_tensor_batch(&enc[..enc.len() - 3]).is_err());
     }
 
     #[test]

@@ -42,6 +42,7 @@
 //! the per-element epilogue make every shard bit-identical to the
 //! single-device [`QuantEngine`](crate::quant::QuantEngine).
 
+use std::borrow::Cow;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
@@ -126,7 +127,9 @@ pub struct SyncStats {
     pub halo_exchanges: AtomicU64,
     /// Logical bytes synchronized.
     pub sync_bytes: AtomicU64,
-    /// Inference rounds this rank completed.
+    /// Inference rounds this rank completed. A batched round
+    /// ([`ShardWorker::run_batch`]) counts once regardless of batch size
+    /// — the whole point of batching the collectives.
     pub rounds: AtomicU64,
     /// µs of round wall time *not* spent blocked on peers — compute plus
     /// this rank's own transport-side stalls (the straggler signal).
@@ -405,6 +408,29 @@ impl ShardWorker {
     /// blocked in a collective; ranks that *receive* an abort return it
     /// without re-broadcasting.
     pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>, TransportError> {
+        let mut out = self.run_batch_refs(&[inputs])?;
+        Ok(out.pop().expect("one sample"))
+    }
+
+    /// Run one distributed inference round over a whole batch. Every rank
+    /// must call `run_batch` with the same batch; all ranks return the
+    /// full per-sample outputs (`out[sample][output_idx]`).
+    ///
+    /// Every collective carries **all samples' blocks in one payload** —
+    /// one all-gather / halo exchange / reduce-scatter per batch instead
+    /// of per sample — so a batch of N costs the sync rounds of a single
+    /// inference while staying element-wise identical to N sequential
+    /// [`ShardWorker::run`] calls (block concatenation never reorders
+    /// per-element arithmetic).
+    pub fn run_batch(&self, batch: &[Vec<Tensor>]) -> Result<Vec<Vec<Tensor>>, TransportError> {
+        let refs: Vec<&[Tensor]> = batch.iter().map(|b| &b[..]).collect();
+        self.run_batch_refs(&refs)
+    }
+
+    fn run_batch_refs(&self, batch: &[&[Tensor]]) -> Result<Vec<Vec<Tensor>>, TransportError> {
+        if batch.is_empty() {
+            return Ok(Vec::new());
+        }
         if trace::enabled() {
             // Tag this rank's spans (and those of pool jobs it submits)
             // with its own timeline lane for the merged per-rank trace.
@@ -415,7 +441,7 @@ impl ShardWorker {
         crate::obs::log::set_rank(Some(self.rank() as u32));
         let start = std::time::Instant::now();
         let wait_before = self.stats.wait_us.load(Ordering::Relaxed);
-        let res = match self.run_inner(inputs) {
+        let res = match self.run_inner(batch) {
             Ok(v) => Ok(v),
             Err(e) => {
                 if !e.is_abort() {
@@ -436,16 +462,19 @@ impl ShardWorker {
         res
     }
 
-    fn run_inner(&self, inputs: &[Tensor]) -> TransportResult<Vec<Tensor>> {
+    fn run_inner(&self, batch: &[&[Tensor]]) -> TransportResult<Vec<Vec<Tensor>>> {
         let g = &*self.graph;
         let input_ids = g.input_ids();
-        assert_eq!(
-            inputs.len(),
-            input_ids.len(),
-            "graph {} expects {} inputs",
-            g.name,
-            input_ids.len()
-        );
+        for (s, inputs) in batch.iter().enumerate() {
+            assert_eq!(
+                inputs.len(),
+                input_ids.len(),
+                "graph {} expects {} inputs (sample {s})",
+                g.name,
+                input_ids.len()
+            );
+        }
+        let nbatch = batch.len();
 
         let mut uses: Vec<usize> = vec![0; g.len()];
         for n in &g.nodes {
@@ -457,19 +486,29 @@ impl ShardWorker {
             uses[o] += 1;
         }
 
-        let mut vals: Vec<Option<ShardVal>> = (0..g.len()).map(|_| None).collect();
+        // One `Vec<ShardVal>` per graph value — every sample of a value
+        // shares the distribution state and dies at the same node.
+        let mut vals: Vec<Option<Vec<ShardVal>>> = (0..g.len()).map(|_| None).collect();
         let mut next_input = 0usize;
         for node in &g.nodes {
-            let out = if matches!(node.op, OpKind::Input) {
-                let t = inputs[next_input].clone();
-                assert_eq!(t.shape(), &node.out.shape, "input {} shape mismatch", next_input);
+            let out: Vec<ShardVal> = if matches!(node.op, OpKind::Input) {
+                let idx = next_input;
                 next_input += 1;
-                match &self.quant {
-                    // The inserted graph-edge quantize: every rank encodes
-                    // identically from the same calibrated grid.
-                    Some(qrun) => ShardVal::QFull(QTensor::quantize_with(&t, qrun.grid(node.id))),
-                    None => ShardVal::Full(t),
-                }
+                batch
+                    .iter()
+                    .map(|inputs| {
+                        let t = inputs[idx].clone();
+                        assert_eq!(t.shape(), &node.out.shape, "input {idx} shape mismatch");
+                        match &self.quant {
+                            // The inserted graph-edge quantize: every rank
+                            // encodes identically from the calibrated grid.
+                            Some(qrun) => {
+                                ShardVal::QFull(QTensor::quantize_with(&t, qrun.grid(node.id)))
+                            }
+                            None => ShardVal::Full(t),
+                        }
+                    })
+                    .collect()
             } else {
                 match self.plan.schemes[node.id] {
                     LayerScheme::Replicated => {
@@ -485,7 +524,7 @@ impl ShardWorker {
                             matches!(self.plan.residency[node.id], Residency::ResidentOutC(_));
                         for &i in &node.inputs {
                             let keep = resident_out
-                                && vals[i].as_ref().expect("value live").channel_resident();
+                                && vals[i].as_ref().expect("value live")[0].channel_resident();
                             if !keep {
                                 self.ensure_full(&mut vals, i)?;
                             }
@@ -494,26 +533,28 @@ impl ShardWorker {
                         // Compute span opens after the gathers above, so
                         // compute/wait time never overlaps in the trace.
                         let _sp = trace::span(&node.name, trace::Cat::Compute);
-                        match &self.quant {
-                            Some(qrun) => {
-                                let args = q_refs(&vals, node);
-                                let out = qexec_node(qrun, prm, node, &args);
-                                if resident_out {
-                                    ShardVal::QCSharded(out)
-                                } else {
-                                    ShardVal::QFull(out)
+                        (0..nbatch)
+                            .map(|s| match &self.quant {
+                                Some(qrun) => {
+                                    let args = q_refs_s(&vals, node, s);
+                                    let out = qexec_node(qrun, prm, node, &args);
+                                    if resident_out {
+                                        ShardVal::QCSharded(out)
+                                    } else {
+                                        ShardVal::QFull(out)
+                                    }
                                 }
-                            }
-                            None => {
-                                let args = arg_refs(&vals, node);
-                                let out = exec_node(prm, &node.op, &args);
-                                if resident_out {
-                                    ShardVal::CSharded(out)
-                                } else {
-                                    ShardVal::Full(out)
+                                None => {
+                                    let args = arg_refs_s(&vals, node, s);
+                                    let out = exec_node(prm, &node.op, &args);
+                                    if resident_out {
+                                        ShardVal::CSharded(out)
+                                    } else {
+                                        ShardVal::Full(out)
+                                    }
                                 }
-                            }
-                        }
+                            })
+                            .collect()
                     }
                     LayerScheme::OutC => {
                         if self.plan.partial[node.id] {
@@ -525,21 +566,20 @@ impl ShardWorker {
                         } else {
                             self.prepare_outc_inputs(&mut vals, node)?;
                             match &self.quant {
-                                Some(qrun) => {
-                                    let args = q_refs(&vals, node);
-                                    self.exec_outc_q8(node, &args, qrun)?
-                                }
-                                None => {
-                                    let args = arg_refs(&vals, node);
-                                    self.exec_outc(node, &args)?
-                                }
+                                Some(qrun) => self.exec_outc_q8(&vals, node, qrun)?,
+                                None => self.exec_outc(&vals, node)?,
                             }
                         }
                     }
-                    LayerScheme::InH => self.exec_spatial_dispatch(&mut vals, node, Axis::Rows)?,
-                    LayerScheme::InW => self.exec_spatial_dispatch(&mut vals, node, Axis::Cols)?,
+                    LayerScheme::InH => {
+                        self.exec_spatial_dispatch(&mut vals, node, Axis::Rows, nbatch)?
+                    }
+                    LayerScheme::InW => {
+                        self.exec_spatial_dispatch(&mut vals, node, Axis::Cols, nbatch)?
+                    }
                 }
             };
+            debug_assert_eq!(out.len(), nbatch, "node {} batch arity", node.name);
             vals[node.id] = Some(out);
             for &i in &node.inputs {
                 uses[i] -= 1;
@@ -551,39 +591,52 @@ impl ShardWorker {
         for &o in &g.outputs {
             self.ensure_full(&mut vals, o)?;
         }
-        Ok(g
-            .outputs
-            .iter()
-            .map(|&o| match vals[o].as_ref().expect("output computed") {
-                ShardVal::Full(t) => t.clone(),
-                ShardVal::QFull(q) => q.dequantize(),
-                _ => unreachable!("outputs are gathered to full"),
+        Ok((0..nbatch)
+            .map(|s| {
+                g.outputs
+                    .iter()
+                    .map(|&o| match &vals[o].as_ref().expect("output computed")[s] {
+                        ShardVal::Full(t) => t.clone(),
+                        ShardVal::QFull(q) => q.dequantize(),
+                        _ => unreachable!("outputs are gathered to full"),
+                    })
+                    .collect()
             })
             .collect())
     }
 
-    /// Prepare inputs and execute one spatially-sharded node.
+    /// Prepare inputs (halo exchanges batched over all samples) and
+    /// execute one spatially-sharded node per sample.
     fn exec_spatial_dispatch(
         &self,
-        vals: &mut [Option<ShardVal>],
+        vals: &mut [Option<Vec<ShardVal>>],
         node: &Node,
         axis: Axis,
-    ) -> TransportResult<ShardVal> {
+        nbatch: usize,
+    ) -> TransportResult<Vec<ShardVal>> {
         self.prepare_spatial_inputs(vals, node, axis)?;
         let _sp = trace::span(&node.name, trace::Cat::Compute);
-        Ok(match &self.quant {
-            Some(qrun) => ShardVal::QSharded(self.exec_spatial_q8(vals, node, axis, qrun), axis),
-            None => {
-                let args = arg_refs(vals, node);
-                ShardVal::Sharded(self.exec_spatial_f32(node, &args, axis), axis)
-            }
-        })
+        Ok((0..nbatch)
+            .map(|s| match &self.quant {
+                Some(qrun) => {
+                    ShardVal::QSharded(self.exec_spatial_q8(vals, node, axis, qrun, s), axis)
+                }
+                None => {
+                    let args = arg_refs_s(vals, node, s);
+                    ShardVal::Sharded(self.exec_spatial_f32(node, &args, axis), axis)
+                }
+            })
+            .collect())
     }
 
     /// Dispatch an all-gather of one block per rank through the plan's
     /// sync mode — payload-generic: f32 activations or raw i8 codes
     /// (quantized runs; `base_tag` must carry [`wire::TAG_Q8`]).
-    fn all_gather<P: WireScalar>(&self, mine: Vec<P>, base_tag: u64) -> TransportResult<Vec<Vec<P>>> {
+    fn all_gather<P: WireScalar>(
+        &self,
+        mine: Vec<P>,
+        base_tag: u64,
+    ) -> TransportResult<Vec<Vec<P>>> {
         // Wait span: time blocked in the collective, tagged with the bytes
         // this rank contributed.
         let mut sp = trace::span("all_gather", trace::Cat::Wait);
@@ -600,9 +653,13 @@ impl ShardWorker {
     /// node can consume aligned (its per-rank input-channel need sits
     /// inside the rank's resident slice) are left in place — the skipped
     /// all-gather — and everything else sharded is gathered to full.
-    fn prepare_outc_inputs(&self, vals: &mut [Option<ShardVal>], node: &Node) -> TransportResult<()> {
+    fn prepare_outc_inputs(
+        &self,
+        vals: &mut [Option<Vec<ShardVal>>],
+        node: &Node,
+    ) -> TransportResult<()> {
         for &i in &node.inputs {
-            let aligned = match vals[i].as_ref().expect("value live") {
+            let aligned = match &vals[i].as_ref().expect("value live")[0] {
                 ShardVal::CSharded(_) | ShardVal::QCSharded(_) => {
                     match &self.plan.residency[i] {
                         Residency::ResidentOutC(slices) => aligned_resident_consumer(
@@ -624,96 +681,174 @@ impl ShardWorker {
         Ok(())
     }
 
-    /// Reassemble a sharded value into a full tensor on every rank. In
-    /// INT8 mode the blocks are the raw codes — no quantize step at all.
-    /// Channel-resident values gather their per-rank channel slices (the
-    /// forced lazy re-gather when a resident chain meets a consumer that
-    /// needs the whole tensor).
-    fn ensure_full(&self, vals: &mut [Option<ShardVal>], id: NodeId) -> TransportResult<()> {
-        if matches!(vals[id], Some(ShardVal::Full(_)) | Some(ShardVal::QFull(_))) {
+    /// Reassemble a sharded value into full tensors on every rank — one
+    /// collective for the whole batch: every rank concatenates its
+    /// per-sample blocks into a single payload, and receivers split the
+    /// peer blocks back per sample. In INT8 mode the blocks are the raw
+    /// codes — no quantize step at all. Channel-resident values gather
+    /// their per-rank channel slices (the forced lazy re-gather when a
+    /// resident chain meets a consumer that needs the whole tensor).
+    fn ensure_full(&self, vals: &mut [Option<Vec<ShardVal>>], id: NodeId) -> TransportResult<()> {
+        if matches!(
+            vals[id].as_ref().expect("value live").first(),
+            Some(ShardVal::Full(_) | ShardVal::QFull(_))
+        ) {
             return Ok(());
         }
         let p = self.world();
         let me = self.rank();
-        match vals[id].take().expect("value live") {
-            ShardVal::Sharded(mut t, axis) => {
-                let (_, h, w) = fm_dims(&t);
+        let samples = vals[id].take().expect("value live");
+        let nbatch = samples.len();
+        // Lockstep: every sample shares the distribution variant.
+        #[derive(Clone, Copy)]
+        enum Kind {
+            Sharded(Axis),
+            QSharded(Axis),
+            CSharded,
+            QCSharded,
+        }
+        let kind = match &samples[0] {
+            ShardVal::Sharded(_, a) => Kind::Sharded(*a),
+            ShardVal::QSharded(_, a) => Kind::QSharded(*a),
+            ShardVal::CSharded(_) => Kind::CSharded,
+            ShardVal::QCSharded(_) => Kind::QCSharded,
+            _ => unreachable!("checked above"),
+        };
+        let gathered: Vec<ShardVal> = match kind {
+            Kind::Sharded(axis) => {
+                let mut ts: Vec<Tensor> = samples
+                    .into_iter()
+                    .map(|sv| match sv {
+                        ShardVal::Sharded(t, _) => t,
+                        _ => unreachable!("batch variants stay in lockstep"),
+                    })
+                    .collect();
+                let (c, h, w) = fm_dims(&ts[0]);
                 let extent = match axis {
                     Axis::Rows => h,
                     Axis::Cols => w,
                 };
-                self.count_gather(t.data.len() as u64 * 4);
+                self.count_gather(ts.iter().map(|t| t.data.len() as u64 * 4).sum());
                 let (mlo, mhi) = even_share(extent, p, me);
-                let mine = pack_rect(&t, axis_rect(h, w, axis, mlo, mhi));
+                let mut mine = Vec::new();
+                for t in &ts {
+                    mine.extend_from_slice(&pack_rect(t, axis_rect(h, w, axis, mlo, mhi)));
+                }
                 let blocks = self.all_gather(mine, gather_tag(id))?;
                 for (q, block) in blocks.iter().enumerate() {
                     if q == me {
                         continue;
                     }
                     let (qlo, qhi) = even_share(extent, p, q);
-                    unpack_rect(&mut t, axis_rect(h, w, axis, qlo, qhi), block)?;
+                    let r = axis_rect(h, w, axis, qlo, qhi);
+                    let per = c * (r.y1 - r.y0) * (r.x1 - r.x0);
+                    ring::check_block(block.len(), per * nbatch, "batched rect block")?;
+                    for (s, t) in ts.iter_mut().enumerate() {
+                        unpack_rect(t, r, &block[s * per..(s + 1) * per])?;
+                    }
                 }
-                vals[id] = Some(ShardVal::Full(t));
+                ts.into_iter().map(ShardVal::Full).collect()
             }
-            ShardVal::QSharded(mut q, axis) => {
-                let (_, h, w) = fm_of(q.shape());
+            Kind::QSharded(axis) => {
+                let mut qs: Vec<QTensor> = samples
+                    .into_iter()
+                    .map(|sv| match sv {
+                        ShardVal::QSharded(q, _) => q,
+                        _ => unreachable!("batch variants stay in lockstep"),
+                    })
+                    .collect();
+                let (c, h, w) = fm_of(qs[0].shape());
                 let extent = match axis {
                     Axis::Rows => h,
                     Axis::Cols => w,
                 };
-                self.count_gather(q.data.len() as u64);
+                self.count_gather(qs.iter().map(|q| q.data.len() as u64).sum());
                 let (mlo, mhi) = even_share(extent, p, me);
-                let mine = pack_rect_i8(&q, axis_rect(h, w, axis, mlo, mhi));
+                let mut mine = Vec::new();
+                for q in &qs {
+                    mine.extend_from_slice(&pack_rect_i8(q, axis_rect(h, w, axis, mlo, mhi)));
+                }
                 let blocks = self.all_gather(mine, gather_tag(id) | wire::TAG_Q8)?;
                 for (qr, block) in blocks.iter().enumerate() {
                     if qr == me {
                         continue;
                     }
                     let (qlo, qhi) = even_share(extent, p, qr);
-                    unpack_rect_i8(&mut q, axis_rect(h, w, axis, qlo, qhi), block)?;
+                    let r = axis_rect(h, w, axis, qlo, qhi);
+                    let per = c * (r.y1 - r.y0) * (r.x1 - r.x0);
+                    ring::check_block(block.len(), per * nbatch, "batched rect block")?;
+                    for (s, q) in qs.iter_mut().enumerate() {
+                        unpack_rect_i8(q, r, &block[s * per..(s + 1) * per])?;
+                    }
                 }
-                vals[id] = Some(ShardVal::QFull(q));
+                qs.into_iter().map(ShardVal::QFull).collect()
             }
-            ShardVal::CSharded(mut t) => {
-                let (_, h, w) = fm_dims(&t);
-                self.count_gather(t.data.len() as u64 * 4);
-                self.gather_channel_slices(&mut t.data, h * w, id, gather_tag(id))?;
-                vals[id] = Some(ShardVal::Full(t));
+            Kind::CSharded => {
+                let mut ts: Vec<Tensor> = samples
+                    .into_iter()
+                    .map(|sv| match sv {
+                        ShardVal::CSharded(t) => t,
+                        _ => unreachable!("batch variants stay in lockstep"),
+                    })
+                    .collect();
+                let (_, h, w) = fm_dims(&ts[0]);
+                self.count_gather(ts.iter().map(|t| t.data.len() as u64 * 4).sum());
+                let mut bufs: Vec<&mut [f32]> =
+                    ts.iter_mut().map(|t| &mut t.data[..]).collect();
+                self.gather_channel_slices(&mut bufs, h * w, id, gather_tag(id))?;
+                ts.into_iter().map(ShardVal::Full).collect()
             }
-            ShardVal::QCSharded(mut q) => {
-                let (_, h, w) = fm_of(q.shape());
-                self.count_gather(q.data.len() as u64);
-                self.gather_channel_slices(&mut q.data, h * w, id, gather_tag(id) | wire::TAG_Q8)?;
-                vals[id] = Some(ShardVal::QFull(q));
+            Kind::QCSharded => {
+                let mut qs: Vec<QTensor> = samples
+                    .into_iter()
+                    .map(|sv| match sv {
+                        ShardVal::QCSharded(q) => q,
+                        _ => unreachable!("batch variants stay in lockstep"),
+                    })
+                    .collect();
+                let (_, h, w) = fm_of(qs[0].shape());
+                self.count_gather(qs.iter().map(|q| q.data.len() as u64).sum());
+                let mut bufs: Vec<&mut [i8]> =
+                    qs.iter_mut().map(|q| &mut q.data[..]).collect();
+                self.gather_channel_slices(&mut bufs, h * w, id, gather_tag(id) | wire::TAG_Q8)?;
+                qs.into_iter().map(ShardVal::QFull).collect()
             }
-            _ => unreachable!("checked above"),
-        }
+        };
+        vals[id] = Some(gathered);
         Ok(())
     }
 
     /// The lazy channel re-gather shared by both precisions: all-gather
-    /// every rank's resident slice of a channel-major buffer and fill the
-    /// peers' slices in place (payload-generic, like the collectives —
-    /// the f32/i8 twins live once).
+    /// every rank's resident slices (all samples concatenated into one
+    /// payload) of the batch's channel-major buffers and fill the peers'
+    /// slices in place per sample (payload-generic, like the collectives
+    /// — the f32/i8 twins live once).
     fn gather_channel_slices<P: WireScalar + Copy>(
         &self,
-        data: &mut [P],
+        data: &mut [&mut [P]],
         hw: usize,
         id: NodeId,
         tag: u64,
     ) -> TransportResult<()> {
         let me = self.rank();
+        let nbatch = data.len();
         let slices = self.resident_slices(id);
         let (c0, c1) = slices[me];
-        let mine = data[c0 * hw..c1 * hw].to_vec();
+        let mut mine = Vec::with_capacity(nbatch * (c1 - c0) * hw);
+        for d in data.iter() {
+            mine.extend_from_slice(&d[c0 * hw..c1 * hw]);
+        }
         let blocks = self.all_gather(mine, tag)?;
         for (q, block) in blocks.iter().enumerate() {
             if q == me {
                 continue;
             }
             let (q0, q1) = slices[q];
-            ring::check_block(block.len(), (q1 - q0) * hw, "resident channel slice")?;
-            data[q0 * hw..q1 * hw].copy_from_slice(block);
+            let per = (q1 - q0) * hw;
+            ring::check_block(block.len(), per * nbatch, "resident channel slice")?;
+            for (s, d) in data.iter_mut().enumerate() {
+                d[q0 * hw..q1 * hw].copy_from_slice(&block[s * per..(s + 1) * per]);
+            }
         }
         Ok(())
     }
@@ -739,12 +874,12 @@ impl ShardWorker {
     /// else sharded is gathered to full.
     fn prepare_spatial_inputs(
         &self,
-        vals: &mut [Option<ShardVal>],
+        vals: &mut [Option<Vec<ShardVal>>],
         node: &Node,
         axis: Axis,
     ) -> TransportResult<()> {
         for &i in &node.inputs {
-            let same_axis = match vals[i].as_ref().expect("value live") {
+            let same_axis = match &vals[i].as_ref().expect("value live")[0] {
                 ShardVal::Full(_) | ShardVal::QFull(_) => None,
                 ShardVal::Sharded(_, a) | ShardVal::QSharded(_, a) => Some(*a == axis),
                 // A spatial consumer interrupts a resident chain: force
@@ -764,29 +899,28 @@ impl ShardWorker {
     /// rank serves the slab segments it owns to the ranks whose needed
     /// range extends past their own slab. All ranks iterate the same
     /// deterministic (sender, receiver) schedule, so sends and receives
-    /// are matched pairwise with no barrier. INT8 runs ship the halo
-    /// blocks as the raw codes ([`wire::TAG_Q8`] frames) — exact by
-    /// construction, no quantize at the wire.
+    /// are matched pairwise with no barrier. Each segment ships **every
+    /// sample's rect in one frame** — one halo exchange per batch, not
+    /// per sample. INT8 runs ship the halo blocks as the raw codes
+    /// ([`wire::TAG_Q8`] frames) — exact by construction, no quantize at
+    /// the wire.
     fn exchange_halo(
         &self,
-        vals: &mut [Option<ShardVal>],
+        vals: &mut [Option<Vec<ShardVal>>],
         value_id: NodeId,
         consumer: &Node,
         axis: Axis,
     ) -> TransportResult<()> {
         let p = self.world();
         let me = self.rank();
-        let (h, w) = match vals[value_id].as_ref().expect("value live") {
-            ShardVal::Sharded(t, _) => {
-                let (_, h, w) = fm_dims(t);
-                (h, w)
-            }
-            ShardVal::QSharded(q, _) => {
-                let (_, h, w) = fm_of(q.shape());
-                (h, w)
-            }
+        let svals = vals[value_id].as_mut().expect("value live");
+        let nbatch = svals.len();
+        let (c, h, w) = match &svals[0] {
+            ShardVal::Sharded(t, _) => fm_dims(t),
+            ShardVal::QSharded(q, _) => fm_of(q.shape()),
             _ => unreachable!("halo exchange on full value"),
         };
+        let is_q = matches!(&svals[0], ShardVal::QSharded(..));
         let in_extent = match axis {
             Axis::Rows => h,
             Axis::Cols => w,
@@ -818,40 +952,55 @@ impl ShardWorker {
                         continue;
                     }
                     let tag = halo_tag(value_id, consumer.id, lo);
-                    match vals[value_id].as_mut().expect("value live") {
-                        ShardVal::Sharded(t, _) => {
-                            if s == me {
-                                let block = pack_rect(t, axis_rect(h, w, axis, lo, hi));
-                                self.stats
-                                    .sync_bytes
-                                    .fetch_add(block.len() as u64 * 4, Ordering::Relaxed);
-                                if let Some(sp) = sp.as_mut() {
-                                    sp.add_bytes(block.len() as u64 * 4);
+                    let r = axis_rect(h, w, axis, lo, hi);
+                    let per = c * (r.y1 - r.y0) * (r.x1 - r.x0);
+                    if !is_q {
+                        if s == me {
+                            let mut block = Vec::with_capacity(per * nbatch);
+                            for sv in svals.iter() {
+                                if let ShardVal::Sharded(t, _) = sv {
+                                    block.extend_from_slice(&pack_rect(t, r));
                                 }
-                                self.transport.send(d, tag, &block)?;
-                            } else if d == me {
-                                let block = self.transport.recv(s, tag)?;
-                                unpack_rect(t, axis_rect(h, w, axis, lo, hi), &block)?;
+                            }
+                            self.stats
+                                .sync_bytes
+                                .fetch_add(block.len() as u64 * 4, Ordering::Relaxed);
+                            if let Some(sp) = sp.as_mut() {
+                                sp.add_bytes(block.len() as u64 * 4);
+                            }
+                            self.transport.send(d, tag, &block)?;
+                        } else if d == me {
+                            let block = self.transport.recv(s, tag)?;
+                            ring::check_block(block.len(), per * nbatch, "batched halo block")?;
+                            for (si, sv) in svals.iter_mut().enumerate() {
+                                if let ShardVal::Sharded(t, _) = sv {
+                                    unpack_rect(t, r, &block[si * per..(si + 1) * per])?;
+                                }
                             }
                         }
-                        ShardVal::QSharded(q, _) => {
-                            let tag = tag | wire::TAG_Q8;
-                            if s == me {
-                                let block = pack_rect_i8(q, axis_rect(h, w, axis, lo, hi));
-                                self.stats
-                                    .sync_bytes
-                                    .fetch_add(block.len() as u64, Ordering::Relaxed);
-                                if let Some(sp) = sp.as_mut() {
-                                    sp.add_bytes(block.len() as u64);
+                    } else {
+                        let tag = tag | wire::TAG_Q8;
+                        if s == me {
+                            let mut block = Vec::with_capacity(per * nbatch);
+                            for sv in svals.iter() {
+                                if let ShardVal::QSharded(q, _) = sv {
+                                    block.extend_from_slice(&pack_rect_i8(q, r));
                                 }
-                                self.transport.send_bytes(d, tag, wire::i8s_as_bytes(&block))?;
-                            } else if d == me {
-                                let block =
-                                    wire::bytes_into_i8s(self.transport.recv_bytes(s, tag)?);
-                                unpack_rect_i8(q, axis_rect(h, w, axis, lo, hi), &block)?;
+                            }
+                            self.stats.sync_bytes.fetch_add(block.len() as u64, Ordering::Relaxed);
+                            if let Some(sp) = sp.as_mut() {
+                                sp.add_bytes(block.len() as u64);
+                            }
+                            self.transport.send_bytes(d, tag, wire::i8s_as_bytes(&block))?;
+                        } else if d == me {
+                            let block = wire::bytes_into_i8s(self.transport.recv_bytes(s, tag)?);
+                            ring::check_block(block.len(), per * nbatch, "batched halo block")?;
+                            for (si, sv) in svals.iter_mut().enumerate() {
+                                if let ShardVal::QSharded(q, _) = sv {
+                                    unpack_rect_i8(q, r, &block[si * per..(si + 1) * per])?;
+                                }
                             }
                         }
-                        _ => unreachable!("halo exchange on full value"),
                     }
                 }
             }
@@ -860,64 +1009,108 @@ impl ShardWorker {
     }
 
     /// OutC-sharded f32 execution: compute this rank's output-channel/
-    /// column slice from shard-local weights, then either keep the slice
-    /// shard-resident (the plan's [`Residency::ResidentOutC`] decision —
-    /// the skipped all-gather) or all-gather the slices into the full
-    /// activation.
-    fn exec_outc(&self, node: &Node, args: &[&Tensor]) -> TransportResult<ShardVal> {
+    /// column slice from shard-local weights for **every sample**, then
+    /// either keep the slices shard-resident (the plan's
+    /// [`Residency::ResidentOutC`] decision — the skipped all-gather) or
+    /// reassemble the full activations with a single batched all-gather
+    /// (all samples' slices in one payload). FC slices run through the
+    /// batched panel kernel so the shard's weight panels are packed once
+    /// per batch.
+    fn exec_outc(
+        &self,
+        vals: &[Option<Vec<ShardVal>>],
+        node: &Node,
+    ) -> TransportResult<Vec<ShardVal>> {
         let p = self.world();
         let me = self.rank();
         let prm = self.params.get(node.id);
+        let xs: Vec<&Tensor> = vals[node.inputs[0]]
+            .as_ref()
+            .expect("input value live")
+            .iter()
+            .map(|sv| sv.f32())
+            .collect();
+        let nbatch = xs.len();
         match &node.op {
             OpKind::Conv(a) | OpKind::Cbr(a) | OpKind::Cbra(a, _) | OpKind::Cbrm(a, _) => {
                 let (c0, c1) = conv_channel_share(a, p, me);
-                let mine = if c0 >= c1 {
-                    Vec::new()
-                } else {
-                    let _sp = trace::span(&node.name, trace::Cat::Compute);
-                    self.conv_family_slice(node, a, prm, args[0], c0, c1).data
-                };
-                let mut out = Tensor::zeros(node.out.clone());
-                let (_, oh, ow) = fm_dims(&out);
+                let mines: Vec<Vec<f32>> = xs
+                    .iter()
+                    .map(|x| {
+                        if c0 >= c1 {
+                            Vec::new()
+                        } else {
+                            let _sp = trace::span(&node.name, trace::Cat::Compute);
+                            self.conv_family_slice(node, a, prm, x, c0, c1).data
+                        }
+                    })
+                    .collect();
+                let mut outs: Vec<Tensor> =
+                    (0..nbatch).map(|_| Tensor::zeros(node.out.clone())).collect();
+                let (_, oh, ow) = fm_dims(&outs[0]);
                 let ohw = oh * ow;
                 if matches!(self.plan.residency[node.id], Residency::ResidentOutC(_)) {
                     self.stats.gathers_skipped.fetch_add(1, Ordering::Relaxed);
-                    out.data[c0 * ohw..c1 * ohw].copy_from_slice(&mine);
-                    return Ok(ShardVal::CSharded(out));
+                    for (out, mine) in outs.iter_mut().zip(&mines) {
+                        out.data[c0 * ohw..c1 * ohw].copy_from_slice(mine);
+                    }
+                    return Ok(outs.into_iter().map(ShardVal::CSharded).collect());
                 }
-                self.count_gather(out.data.len() as u64 * 4);
+                self.count_gather(outs.iter().map(|o| o.data.len() as u64 * 4).sum());
+                let mut mine = Vec::new();
+                for m in &mines {
+                    mine.extend_from_slice(m);
+                }
                 let blocks = self.all_gather(mine, outc_tag(node.id))?;
                 for (q, block) in blocks.iter().enumerate() {
                     let (q0, q1) = conv_channel_share(a, p, q);
-                    ring::check_block(block.len(), (q1 - q0) * ohw, "channel block")?;
-                    out.data[q0 * ohw..q1 * ohw].copy_from_slice(block);
+                    let per = (q1 - q0) * ohw;
+                    ring::check_block(block.len(), per * nbatch, "channel block")?;
+                    for (s, out) in outs.iter_mut().enumerate() {
+                        out.data[q0 * ohw..q1 * ohw]
+                            .copy_from_slice(&block[s * per..(s + 1) * per]);
+                    }
                 }
-                Ok(ShardVal::Full(out))
+                Ok(outs.into_iter().map(ShardVal::Full).collect())
             }
             OpKind::MatMul(m) if m.weighted => {
                 let (j0, j1) = even_share(m.n, p, me);
-                let rows = args[0].shape().numel() / m.k;
-                let mine = if j0 >= j1 {
-                    Vec::new()
+                let rows = xs[0].shape().numel() / m.k;
+                let mines: Vec<Vec<f32>> = if j0 >= j1 {
+                    (0..nbatch).map(|_| Vec::new()).collect()
                 } else {
                     let _sp = trace::span(&node.name, trace::Cat::Compute);
-                    matmul::fc(args[0], m.k, j1 - j0, &prm.w, &prm.bias).data
+                    // Batched panel matmul: the shard's weight panels are
+                    // packed once and swept across every sample.
+                    matmul::fc_batch(&xs, m.k, j1 - j0, &prm.w, &prm.bias)
+                        .into_iter()
+                        .map(|t| t.data)
+                        .collect()
                 };
                 // Matrix outputs are column-interleaved per row: they
                 // never stay resident (see `plan::outc_slices`).
-                let mut out = Tensor::zeros(node.out.clone());
-                self.count_gather(out.data.len() as u64 * 4);
+                let mut outs: Vec<Tensor> =
+                    (0..nbatch).map(|_| Tensor::zeros(node.out.clone())).collect();
+                self.count_gather(outs.iter().map(|o| o.data.len() as u64 * 4).sum());
+                let mut mine = Vec::new();
+                for mm in &mines {
+                    mine.extend_from_slice(mm);
+                }
                 let blocks = self.all_gather(mine, outc_tag(node.id))?;
                 for (q, block) in blocks.iter().enumerate() {
                     let (q0, q1) = even_share(m.n, p, q);
                     let nw = q1 - q0;
-                    ring::check_block(block.len(), rows * nw, "fc column block")?;
-                    for r in 0..rows {
-                        out.data[r * m.n + q0..r * m.n + q1]
-                            .copy_from_slice(&block[r * nw..(r + 1) * nw]);
+                    let per = rows * nw;
+                    ring::check_block(block.len(), per * nbatch, "fc column block")?;
+                    for (s, out) in outs.iter_mut().enumerate() {
+                        let sb = &block[s * per..(s + 1) * per];
+                        for r in 0..rows {
+                            out.data[r * m.n + q0..r * m.n + q1]
+                                .copy_from_slice(&sb[r * nw..(r + 1) * nw]);
+                        }
                     }
                 }
-                Ok(ShardVal::Full(out))
+                Ok(outs.into_iter().map(ShardVal::Full).collect())
             }
             other => unreachable!("outC scheme on unshardable op {other:?}"),
         }
@@ -931,51 +1124,79 @@ impl ShardWorker {
     /// near the wire.
     fn exec_outc_q8(
         &self,
+        vals: &[Option<Vec<ShardVal>>],
         node: &Node,
-        args: &[&QTensor],
         qrun: &QuantRun,
-    ) -> TransportResult<ShardVal> {
+    ) -> TransportResult<Vec<ShardVal>> {
         let p = self.world();
         let me = self.rank();
         let prm = self.params.get(node.id);
         let grid = qrun.grid(node.id).to_vec();
+        let xs: Vec<&QTensor> = vals[node.inputs[0]]
+            .as_ref()
+            .expect("input value live")
+            .iter()
+            .map(|sv| sv.q())
+            .collect();
+        let nbatch = xs.len();
         match &node.op {
             OpKind::Conv(a) | OpKind::Cbr(a) | OpKind::Cbra(a, _) | OpKind::Cbrm(a, _) => {
                 let (c0, c1) = conv_channel_share(a, p, me);
-                let mine: Vec<i8> = if c0 >= c1 {
-                    Vec::new()
-                } else {
-                    let _sp = trace::span(&node.name, trace::Cat::Compute);
-                    self.conv_family_slice_q8(node, a, prm, args[0], c0, c1, qrun)
-                };
-                let mut out = QTensor::zeros(node.out.clone(), grid);
-                let (_, oh, ow) = fm_of(out.shape());
+                let mines: Vec<Vec<i8>> = xs
+                    .iter()
+                    .map(|x| {
+                        if c0 >= c1 {
+                            Vec::new()
+                        } else {
+                            let _sp = trace::span(&node.name, trace::Cat::Compute);
+                            self.conv_family_slice_q8(node, a, prm, x, c0, c1, qrun)
+                        }
+                    })
+                    .collect();
+                let mut outs: Vec<QTensor> = (0..nbatch)
+                    .map(|_| QTensor::zeros(node.out.clone(), grid.clone()))
+                    .collect();
+                let (_, oh, ow) = fm_of(outs[0].shape());
                 let ohw = oh * ow;
                 if matches!(self.plan.residency[node.id], Residency::ResidentOutC(_)) {
                     self.stats.gathers_skipped.fetch_add(1, Ordering::Relaxed);
-                    out.data[c0 * ohw..c1 * ohw].copy_from_slice(&mine);
-                    return Ok(ShardVal::QCSharded(out));
+                    for (out, mine) in outs.iter_mut().zip(&mines) {
+                        out.data[c0 * ohw..c1 * ohw].copy_from_slice(mine);
+                    }
+                    return Ok(outs.into_iter().map(ShardVal::QCSharded).collect());
                 }
-                self.count_gather(out.data.len() as u64);
+                self.count_gather(outs.iter().map(|o| o.data.len() as u64).sum());
+                let mut mine = Vec::new();
+                for m in &mines {
+                    mine.extend_from_slice(m);
+                }
                 let blocks = self.all_gather(mine, outc_tag(node.id) | wire::TAG_Q8)?;
                 for (q, block) in blocks.iter().enumerate() {
                     let (q0, q1) = conv_channel_share(a, p, q);
-                    ring::check_block(block.len(), (q1 - q0) * ohw, "channel block")?;
-                    out.data[q0 * ohw..q1 * ohw].copy_from_slice(block);
+                    let per = (q1 - q0) * ohw;
+                    ring::check_block(block.len(), per * nbatch, "channel block")?;
+                    for (s, out) in outs.iter_mut().enumerate() {
+                        out.data[q0 * ohw..q1 * ohw]
+                            .copy_from_slice(&block[s * per..(s + 1) * per]);
+                    }
                 }
-                Ok(ShardVal::QFull(out))
+                Ok(outs.into_iter().map(ShardVal::QFull).collect())
             }
             OpKind::MatMul(m) if m.weighted => {
                 let (j0, j1) = even_share(m.n, p, me);
-                let rows = args[0].shape().numel() / m.k;
-                let mine: Vec<i8> = if j0 >= j1 {
-                    Vec::new()
+                let rows = xs[0].shape().numel() / m.k;
+                let mines: Vec<Vec<i8>> = if j0 >= j1 {
+                    (0..nbatch).map(|_| Vec::new()).collect()
                 } else {
                     let _sp = trace::span(&node.name, trace::Cat::Compute);
-                    let qa = qrun.intdot_codes(node.inputs[0], args[0]);
+                    let codes: Vec<Cow<'_, [i8]>> =
+                        xs.iter().map(|x| qrun.intdot_codes(node.inputs[0], x)).collect();
+                    let srcs: Vec<&[i8]> = codes.iter().map(|c| &c[..]).collect();
                     let rq = qrun.requant(node.id).expect("fc requant plan");
-                    self.fc_cols_q8(
-                        &qa,
+                    // Batched panel kernel: the shard's weight panels are
+                    // packed once and swept across every sample.
+                    self.fc_cols_q8_batch(
+                        &srcs,
                         rows,
                         m.k,
                         j1 - j0,
@@ -983,19 +1204,29 @@ impl ShardWorker {
                         &rq.epilogue(),
                     )
                 };
-                let mut out = QTensor::zeros(node.out.clone(), grid);
-                self.count_gather(out.data.len() as u64);
+                let mut outs: Vec<QTensor> = (0..nbatch)
+                    .map(|_| QTensor::zeros(node.out.clone(), grid.clone()))
+                    .collect();
+                self.count_gather(outs.iter().map(|o| o.data.len() as u64).sum());
+                let mut mine = Vec::new();
+                for mm in &mines {
+                    mine.extend_from_slice(mm);
+                }
                 let blocks = self.all_gather(mine, outc_tag(node.id) | wire::TAG_Q8)?;
                 for (q, block) in blocks.iter().enumerate() {
                     let (q0, q1) = even_share(m.n, p, q);
                     let nw = q1 - q0;
-                    ring::check_block(block.len(), rows * nw, "fc column block")?;
-                    for r in 0..rows {
-                        out.data[r * m.n + q0..r * m.n + q1]
-                            .copy_from_slice(&block[r * nw..(r + 1) * nw]);
+                    let per = rows * nw;
+                    ring::check_block(block.len(), per * nbatch, "fc column block")?;
+                    for (s, out) in outs.iter_mut().enumerate() {
+                        let sb = &block[s * per..(s + 1) * per];
+                        for r in 0..rows {
+                            out.data[r * m.n + q0..r * m.n + q1]
+                                .copy_from_slice(&sb[r * nw..(r + 1) * nw]);
+                        }
                     }
                 }
-                Ok(ShardVal::QFull(out))
+                Ok(outs.into_iter().map(ShardVal::QFull).collect())
             }
             other => unreachable!("outC scheme on unshardable op {other:?}"),
         }
@@ -1013,10 +1244,10 @@ impl ShardWorker {
     /// node's own value [`Residency::Gathered`].
     fn exec_outc_partial_q8(
         &self,
-        vals: &[Option<ShardVal>],
+        vals: &[Option<Vec<ShardVal>>],
         node: &Node,
         qrun: &QuantRun,
-    ) -> TransportResult<ShardVal> {
+    ) -> TransportResult<Vec<ShardVal>> {
         let p = self.world();
         let me = self.rank();
         let input_id = node.inputs[0];
@@ -1025,47 +1256,67 @@ impl ShardWorker {
             other => unreachable!("partial-sum on unsupported op {other:?}"),
         };
         debug_assert_eq!(a.groups, 1, "partial-sum consumes dense convs only");
-        let x = vals[input_id].as_ref().expect("input value live").q();
-        let (_, h, w) = fm_of(x.shape());
+        let xs: Vec<&QTensor> = vals[input_id]
+            .as_ref()
+            .expect("input value live")
+            .iter()
+            .map(|sv| sv.q())
+            .collect();
+        let nbatch = xs.len();
+        let (_, h, w) = fm_of(xs[0].shape());
         let hw = h * w;
         let (oh, ow) = a.out_hw(h, w);
         let ohw = oh * ow;
         let (c0, c1) = partial_in_slice(&self.plan, a, input_id, me);
-        let mut acc = vec![0i32; a.out_c * ohw];
+        let mut accs: Vec<Vec<i32>> = (0..nbatch).map(|_| vec![0i32; a.out_c * ohw]).collect();
         if c0 < c1 {
             let _sp = trace::span(&node.name, trace::Cat::Compute);
-            let qx_full = qrun.intdot_codes(input_id, x);
             // This rank's input-channel slice of the full
             // (input-grid-folded) weight codes, cut once at construction.
             let wsl = self.partial_w[node.id].as_ref().expect("partial weight slice");
             debug_assert_eq!(wsl.len(), a.out_c * (c1 - c0) * a.kh * a.kw);
             let sub = ConvAttrs { in_c: c1 - c0, ..*a };
-            // Chunked across the local pool like every other conv path —
-            // RawAcc stores per-element accumulators, so any chunking is
-            // bit-identical.
-            self.conv_region_q8(
-                &qx_full[c0 * hw..c1 * hw],
-                h,
-                w,
-                &sub,
-                wsl,
-                &qkernels::RawAcc,
-                0,
-                a.out_c,
-                Rect { y0: 0, y1: oh, x0: 0, x1: ow },
-                oh,
-                ow,
-                acc.as_mut_ptr(),
-            );
+            for (x, acc) in xs.iter().zip(accs.iter_mut()) {
+                let qx_full = qrun.intdot_codes(input_id, x);
+                // Chunked across the local pool like every other conv
+                // path — RawAcc stores per-element accumulators, so any
+                // chunking is bit-identical.
+                self.conv_region_q8(
+                    &qx_full[c0 * hw..c1 * hw],
+                    h,
+                    w,
+                    &sub,
+                    wsl,
+                    &qkernels::RawAcc,
+                    0,
+                    a.out_c,
+                    Rect { y0: 0, y1: oh, x0: 0, x1: ow },
+                    oh,
+                    ow,
+                    acc.as_mut_ptr(),
+                );
+            }
         }
         // Exact i32 reduce-scatter onto the per-rank output-channel
-        // shares, through the plan's sync mode.
-        let blocks: Vec<(usize, usize)> = (0..p)
-            .map(|r| {
-                let (b0, b1) = conv_channel_share(a, p, r);
-                (b0 * ohw, b1 * ohw)
+        // shares, through the plan's sync mode — ONE collective for the
+        // whole batch. The concatenated accumulator is laid out
+        // rank-block-major (for each rank's channel share, every sample's
+        // slice in order) so each rank's reduce-scatter block stays
+        // contiguous; with a batch of 1 this reproduces the single-sample
+        // buffer byte-for-byte.
+        let shares: Vec<(usize, usize)> = (0..p).map(|r| conv_channel_share(a, p, r)).collect();
+        let mut acc: Vec<i32> = Vec::with_capacity(nbatch * a.out_c * ohw);
+        let blocks: Vec<(usize, usize)> = shares
+            .iter()
+            .map(|&(b0, b1)| {
+                let start = acc.len();
+                for sa in &accs {
+                    acc.extend_from_slice(&sa[b0 * ohw..b1 * ohw]);
+                }
+                (start, acc.len())
             })
             .collect();
+        drop(accs);
         let tag = outc_tag(node.id) | wire::TAG_I32;
         {
             let mut sp = trace::span("reduce_scatter", trace::Cat::Wait);
@@ -1084,32 +1335,50 @@ impl ShardWorker {
         // Requantize this rank's fully-reduced share through the node's
         // per-channel fixed-point epilogue — the same per-element
         // function the fused kernel applies.
-        let (m0, m1) = conv_channel_share(a, p, me);
-        let mut out = QTensor::zeros(node.out.clone(), qrun.grid(node.id).to_vec());
+        let (m0, m1) = shares[me];
+        let seg = (m1 - m0) * ohw;
+        let my0 = blocks[me].0;
+        let mut outs: Vec<QTensor> = (0..nbatch)
+            .map(|_| QTensor::zeros(node.out.clone(), qrun.grid(node.id).to_vec()))
+            .collect();
         let rq = qrun.requant(node.id).expect("partial-sum conv requant plan");
         let ep = rq.epilogue();
-        for oc in m0..m1 {
-            // SAFETY: writes `ohw` slots of this rank's own rows.
-            unsafe {
-                ep.store(oc, 0, &acc[oc * ohw..(oc + 1) * ohw], out.data[oc * ohw..].as_mut_ptr())
-            };
+        for (s, out) in outs.iter_mut().enumerate() {
+            let my = &acc[my0 + s * seg..my0 + (s + 1) * seg];
+            for oc in m0..m1 {
+                // SAFETY: writes `ohw` slots of this rank's own rows.
+                unsafe {
+                    ep.store(
+                        oc,
+                        0,
+                        &my[(oc - m0) * ohw..(oc - m0 + 1) * ohw],
+                        out.data[oc * ohw..].as_mut_ptr(),
+                    )
+                };
+            }
         }
         if matches!(self.plan.residency[node.id], Residency::ResidentOutC(_)) {
             self.stats.gathers_skipped.fetch_add(1, Ordering::Relaxed);
-            return Ok(ShardVal::QCSharded(out));
+            return Ok(outs.into_iter().map(ShardVal::QCSharded).collect());
         }
-        self.count_gather(out.data.len() as u64);
-        let mine = out.data[m0 * ohw..m1 * ohw].to_vec();
-        let blocks = self.all_gather(mine, outc_tag(node.id) | wire::TAG_Q8)?;
-        for (q, block) in blocks.iter().enumerate() {
+        self.count_gather(outs.iter().map(|o| o.data.len() as u64).sum());
+        let mut mine = Vec::with_capacity(nbatch * seg);
+        for out in &outs {
+            mine.extend_from_slice(&out.data[m0 * ohw..m1 * ohw]);
+        }
+        let gathered = self.all_gather(mine, outc_tag(node.id) | wire::TAG_Q8)?;
+        for (q, block) in gathered.iter().enumerate() {
             if q == me {
                 continue;
             }
-            let (q0, q1) = conv_channel_share(a, p, q);
-            ring::check_block(block.len(), (q1 - q0) * ohw, "partial-sum channel block")?;
-            out.data[q0 * ohw..q1 * ohw].copy_from_slice(block);
+            let (q0, q1) = shares[q];
+            let per = (q1 - q0) * ohw;
+            ring::check_block(block.len(), per * nbatch, "partial-sum channel block")?;
+            for (s, out) in outs.iter_mut().enumerate() {
+                out.data[q0 * ohw..q1 * ohw].copy_from_slice(&block[s * per..(s + 1) * per]);
+            }
         }
-        Ok(ShardVal::QFull(out))
+        Ok(outs.into_iter().map(ShardVal::QFull).collect())
     }
 
     /// The conv-family channel slice `[c0, c1)` as its own tensor, computed
@@ -1276,10 +1545,11 @@ impl ShardWorker {
     /// preserved), the calibrated boundary for requant operators.
     fn exec_spatial_q8(
         &self,
-        vals: &[Option<ShardVal>],
+        vals: &[Option<Vec<ShardVal>>],
         node: &Node,
         axis: Axis,
         qrun: &QuantRun,
+        s: usize,
     ) -> QTensor {
         let mut out = QTensor::zeros(node.out.clone(), qrun.grid(node.id).to_vec());
         let (c, oh, ow) = fm_of(out.shape());
@@ -1298,7 +1568,7 @@ impl ShardWorker {
         let prm = self.params.get(node.id);
         match &node.op {
             OpKind::Conv(a) | OpKind::Cbr(a) => {
-                let x = vals[node.inputs[0]].as_ref().expect("input value live").q();
+                let x = vals[node.inputs[0]].as_ref().expect("input value live")[s].q();
                 let qx = qrun.intdot_codes(node.inputs[0], x);
                 let (_, h, w) = fm_of(x.shape());
                 let rq = qrun.requant(node.id).expect("conv requant plan");
@@ -1319,7 +1589,7 @@ impl ShardWorker {
                 );
             }
             OpKind::Cbra(a, pl) | OpKind::Cbrm(a, pl) => {
-                let x = vals[node.inputs[0]].as_ref().expect("input value live").q();
+                let x = vals[node.inputs[0]].as_ref().expect("input value live")[s].q();
                 let qx = qrun.intdot_codes(node.inputs[0], x);
                 let (_, h, w) = fm_of(x.shape());
                 let (ph, pw) = a.out_hw(h, w);
@@ -1357,7 +1627,7 @@ impl ShardWorker {
                 let f32_args: Vec<Tensor> = node
                     .inputs
                     .iter()
-                    .map(|&i| materialize_spatial_arg(vals, i, node, axis, lo, hi))
+                    .map(|&i| materialize_spatial_arg(vals, i, node, axis, lo, hi, s))
                     .collect();
                 let refs: Vec<&Tensor> = f32_args.iter().collect();
                 let mut fout = Tensor::zeros(node.out.clone());
@@ -1601,56 +1871,67 @@ impl ShardWorker {
         }
     }
 
-    /// Quantized FC columns `[0, n)` to codes, column-chunked across the
-    /// local pool when present (follow-up (d) for the FC shards).
-    fn fc_cols_q8(
+    /// Quantized FC columns `[0, n)` to codes for every sample of the
+    /// batch, column-chunked across the local pool when present. Each
+    /// column chunk runs the **batched** panel kernel, which packs the
+    /// chunk's weight panels once and sweeps them across all samples —
+    /// the pack amortization that makes batched FC shards cheaper than
+    /// per-sample calls.
+    fn fc_cols_q8_batch(
         &self,
-        qa: &[i8],
+        qas: &[&[i8]],
         rows: usize,
         k: usize,
         n: usize,
         qw: &[i8],
         ep: &FixedQ8<'_>,
-    ) -> Vec<i8> {
-        let mut out = vec![0i8; rows * n];
+    ) -> Vec<Vec<i8>> {
+        let mut outs: Vec<Vec<i8>> = (0..qas.len()).map(|_| vec![0i8; rows * n]).collect();
         match &self.pool {
             Some(pool) => {
-                let ptr = SendPtr(out.as_mut_ptr());
+                let ptrs: Vec<SendPtr<i8>> =
+                    outs.iter_mut().map(|o| SendPtr(o.as_mut_ptr())).collect();
                 let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
                 for (j0, j1) in split_range(0, n, pool.len()) {
+                    let qas = qas.to_vec();
+                    let ptrs = ptrs.clone();
                     jobs.push(Box::new(move || {
-                        // SAFETY: disjoint column ranges of the same buffer.
+                        let raw: Vec<*mut i8> = ptrs.iter().map(|p| p.0).collect();
+                        // SAFETY: disjoint column ranges of per-sample buffers.
                         unsafe {
-                            qkernels::matmul_panel_raw_q8(qa, rows, k, qw, n, j0, j1, ep, ptr.0)
+                            qkernels::matmul_panel_raw_q8_batch(
+                                &qas, rows, k, qw, n, j0, j1, ep, &raw,
+                            )
                         };
                     }));
                 }
                 pool.run(jobs);
             }
             None => {
-                // SAFETY: single call covering all columns.
+                let raw: Vec<*mut i8> = outs.iter_mut().map(|o| o.as_mut_ptr()).collect();
+                // SAFETY: single call covering all columns of every sample.
                 unsafe {
-                    qkernels::matmul_panel_raw_q8(qa, rows, k, qw, n, 0, n, ep, out.as_mut_ptr())
+                    qkernels::matmul_panel_raw_q8_batch(qas, rows, k, qw, n, 0, n, ep, &raw)
                 };
             }
         }
-        out
+        outs
     }
 }
 
-/// Immutable f32 argument views (all inputs must be prepared).
-fn arg_refs<'a>(vals: &'a [Option<ShardVal>], node: &Node) -> Vec<&'a Tensor> {
+/// Immutable f32 argument views for sample `s` (all inputs prepared).
+fn arg_refs_s<'a>(vals: &'a [Option<Vec<ShardVal>>], node: &Node, s: usize) -> Vec<&'a Tensor> {
     node.inputs
         .iter()
-        .map(|&i| vals[i].as_ref().expect("input value live").f32())
+        .map(|&i| vals[i].as_ref().expect("input value live")[s].f32())
         .collect()
 }
 
-/// Immutable i8 argument views (all inputs must be prepared).
-fn q_refs<'a>(vals: &'a [Option<ShardVal>], node: &Node) -> Vec<&'a QTensor> {
+/// Immutable i8 argument views for sample `s` (all inputs prepared).
+fn q_refs_s<'a>(vals: &'a [Option<Vec<ShardVal>>], node: &Node, s: usize) -> Vec<&'a QTensor> {
     node.inputs
         .iter()
-        .map(|&i| vals[i].as_ref().expect("input value live").q())
+        .map(|&i| vals[i].as_ref().expect("input value live")[s].q())
         .collect()
 }
 
@@ -1659,14 +1940,15 @@ fn q_refs<'a>(vals: &'a [Option<ShardVal>], node: &Node) -> Vec<&'a QTensor> {
 /// rows/columns the consumer's slab actually reads (slab + halo — the
 /// ROADMAP (f) fix: no full-map work per rank).
 fn materialize_spatial_arg(
-    vals: &[Option<ShardVal>],
+    vals: &[Option<Vec<ShardVal>>],
     id: NodeId,
     consumer: &Node,
     axis: Axis,
     out_lo: usize,
     out_hi: usize,
+    s: usize,
 ) -> Tensor {
-    match vals[id].as_ref().expect("input value live") {
+    match &vals[id].as_ref().expect("input value live")[s] {
         ShardVal::QFull(q) => q.dequantize(),
         ShardVal::QSharded(q, a) => {
             debug_assert_eq!(*a, axis, "cross-axis inputs are gathered to full");

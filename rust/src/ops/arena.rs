@@ -8,24 +8,44 @@
 //! hands it back (cleared and re-zeroed) to later nodes — a per-engine
 //! free list, not a global allocator.
 
-/// Maximum number of buffers the arena retains; beyond this, freed buffers
-/// drop to the allocator (bounds worst-case residency on wide graphs).
+/// Maximum number of buffers a batch-1 arena retains; beyond this, freed
+/// buffers drop to the allocator (bounds worst-case residency on wide
+/// graphs). A batch-N run frees N per-sample buffers at every release
+/// point, so [`BufferArena::reserve_batch`] scales the cap by the batch
+/// size — liveness is unchanged, only the free-list depth grows.
 const MAX_POOLED: usize = 64;
 
 /// A simple best-effort free list of f32 buffers.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct BufferArena {
     free: Vec<Vec<f32>>,
+    /// Retention cap for the free list (`MAX_POOLED` × batch size).
+    max_pooled: usize,
     /// Buffers served from the free list.
     pub reused: usize,
     /// Buffers that had to be freshly allocated.
     pub allocated: usize,
 }
 
+impl Default for BufferArena {
+    fn default() -> BufferArena {
+        BufferArena { free: Vec::new(), max_pooled: MAX_POOLED, reused: 0, allocated: 0 }
+    }
+}
+
 impl BufferArena {
     /// Create an empty arena.
     pub fn new() -> BufferArena {
         BufferArena::default()
+    }
+
+    /// Size the retention cap for batch-`n` execution: a batch holds `n`
+    /// per-sample buffers live per value, so the free list must keep
+    /// `n × MAX_POOLED` buffers for the second batch to allocate nothing
+    /// new. The cap only ever grows (a later batch-1 run still benefits
+    /// from the deeper pool).
+    pub fn reserve_batch(&mut self, n: usize) {
+        self.max_pooled = self.max_pooled.max(MAX_POOLED * n.max(1));
     }
 
     /// A zero-filled buffer of exactly `n` elements, reusing pooled
@@ -82,7 +102,7 @@ impl BufferArena {
 
     /// Return a dead buffer's storage to the pool.
     pub fn recycle(&mut self, buf: Vec<f32>) {
-        if buf.capacity() > 0 && self.free.len() < MAX_POOLED {
+        if buf.capacity() > 0 && self.free.len() < self.max_pooled {
             self.free.push(buf);
         }
     }
@@ -152,5 +172,19 @@ mod tests {
             a.recycle(vec![0.0; 4]);
         }
         assert_eq!(a.pooled(), MAX_POOLED);
+    }
+
+    #[test]
+    fn reserve_batch_deepens_the_pool() {
+        let mut a = BufferArena::new();
+        a.reserve_batch(4);
+        for _ in 0..(4 * MAX_POOLED + 10) {
+            a.recycle(vec![0.0; 4]);
+        }
+        assert_eq!(a.pooled(), 4 * MAX_POOLED);
+        // The cap never shrinks.
+        a.reserve_batch(1);
+        a.recycle(vec![0.0; 4]);
+        assert_eq!(a.pooled(), 4 * MAX_POOLED);
     }
 }

@@ -78,6 +78,25 @@ pub fn conv2d(x: &Tensor, attrs: &ConvAttrs, weights: &[f32], bias: &[f32]) -> T
     out
 }
 
+/// Batched convolution: `N` independent batch-1 samples through one
+/// validated setup. Each sample runs the exact serial [`conv2d`] kernel
+/// routing, so `conv2d_batch(&[x; N])[s]` is bit-identical to
+/// `conv2d(x_s)`. The batch win for convs is job fusion (the parallel
+/// executor enumerates batch×space chunks in one pool pass); the weight
+/// pack amortization lives in the panel-matmul entries (`ops::matmul`,
+/// `quant::kernels`), which pointwise convs reach per sample because the
+/// packed operand there is the per-sample activation, not the weights.
+pub fn conv2d_batch(
+    xs: &[&Tensor],
+    attrs: &ConvAttrs,
+    weights: &[f32],
+    bias: &[f32],
+) -> Vec<Tensor> {
+    assert_eq!(weights.len(), attrs.weight_count() as usize, "conv weight count");
+    assert!(bias.is_empty() || bias.len() == attrs.out_c, "conv bias count");
+    xs.iter().map(|x| conv2d(x, attrs, weights, bias)).collect()
+}
+
 /// Compute one output **region** `oc ∈ [oc0,oc1) × oy ∈ [oy0,oy1) × ox ∈
 /// [ox0,ox1)` of a batch-1 convolution into the full-size `[out_c, oh, ow]`
 /// buffer behind `out`, routing exactly as [`conv2d`] does — 1×1/s1 convs

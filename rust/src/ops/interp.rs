@@ -85,6 +85,93 @@ pub(crate) fn run_graph(
         .collect()
 }
 
+/// Batched twin of [`run_graph`]: walks the graph **once** for `N`
+/// independent samples held as a batch-as-list (each graph value is `N`
+/// per-sample tensors in lockstep; graph shapes stay batch-1). `exec`
+/// receives, per argument position, the `N`-tensor slice for that value
+/// and returns the `N` outputs. Refcounts, release points, and output
+/// collection are the per-value logic of `run_graph` applied to whole
+/// sample lists, so liveness is identical to a solo run — each dead
+/// sample tensor is handed to `on_dead` individually for recycling.
+/// Returns `out[sample][output_idx]`.
+pub(crate) fn run_graph_batch(
+    graph: &Graph,
+    batch: &[Vec<Tensor>],
+    mut exec: impl FnMut(&Node, &[&[Tensor]]) -> Vec<Tensor>,
+    mut on_dead: impl FnMut(Tensor),
+) -> Vec<Vec<Tensor>> {
+    let input_ids = graph.input_ids();
+    let nbatch = batch.len();
+    for (s, inputs) in batch.iter().enumerate() {
+        assert_eq!(
+            inputs.len(),
+            input_ids.len(),
+            "graph {} expects {} inputs (sample {s})",
+            graph.name,
+            input_ids.len()
+        );
+    }
+
+    let mut uses: Vec<usize> = vec![0; graph.len()];
+    for n in &graph.nodes {
+        for &i in &n.inputs {
+            uses[i] += 1;
+        }
+    }
+    for &o in &graph.outputs {
+        uses[o] += 1;
+    }
+
+    let mut values: Vec<Option<Vec<Tensor>>> = (0..graph.len()).map(|_| None).collect();
+    let mut next_input = 0usize;
+    for n in &graph.nodes {
+        let out = if matches!(n.op, OpKind::Input) {
+            let ts: Vec<Tensor> = batch.iter().map(|inputs| inputs[next_input].clone()).collect();
+            for t in &ts {
+                assert_eq!(
+                    t.shape(),
+                    &n.out.shape,
+                    "input {} shape mismatch for node {}",
+                    next_input,
+                    n.name
+                );
+            }
+            next_input += 1;
+            ts
+        } else {
+            let args: Vec<&[Tensor]> = n
+                .inputs
+                .iter()
+                .map(|&i| values[i].as_deref().expect("input value should be live"))
+                .collect();
+            let _sp = trace::span(&n.name, trace::Cat::Compute);
+            let out = exec(n, &args);
+            debug_assert_eq!(out.len(), nbatch, "node {} batch size", n.name);
+            out
+        };
+        values[n.id] = Some(out);
+        for &i in &n.inputs {
+            uses[i] -= 1;
+            if uses[i] == 0 && !graph.outputs.contains(&i) {
+                if let Some(dead) = values[i].take() {
+                    for t in dead {
+                        on_dead(t);
+                    }
+                }
+            }
+        }
+    }
+    (0..nbatch)
+        .map(|s| {
+            graph
+                .outputs
+                .iter()
+                .map(|&o| values[o].as_ref().expect("output computed")[s].clone())
+                .collect()
+        })
+        .collect()
+}
+
 /// Execute one operator on concrete inputs with the node's parameters —
 /// the single source of truth shared by the serial [`Interpreter`] and the
 /// serial fallback of the parallel executor
@@ -131,6 +218,27 @@ pub(crate) fn exec_node(p: &NodeParams, op: &OpKind, args: &[&Tensor]) -> Tensor
     }
 }
 
+/// Batched twin of [`exec_node`]: one operator on `N` samples' argument
+/// lists. Weighted matmuls route through the shared-pack batched panel
+/// kernel (`fc_batch` packs each weight panel once per batch); every
+/// other op runs the per-sample serial kernel in a loop, so each sample's
+/// arithmetic — and therefore its bits — matches a solo [`exec_node`].
+pub(crate) fn exec_node_batch(p: &NodeParams, op: &OpKind, args: &[&[Tensor]]) -> Vec<Tensor> {
+    if let OpKind::MatMul(m) = op {
+        if m.weighted {
+            let xs: Vec<&Tensor> = args[0].iter().collect();
+            return matmul::fc_batch(&xs, m.k, m.n, &p.w, &p.bias);
+        }
+    }
+    let nbatch = args.first().map_or(0, |a| a.len());
+    (0..nbatch)
+        .map(|s| {
+            let sargs: Vec<&Tensor> = args.iter().map(|a| &a[s]).collect();
+            exec_node(p, op, &sargs)
+        })
+        .collect()
+}
+
 /// Interpreter bound to a graph and its (deterministic) parameters.
 pub struct Interpreter<'g> {
     graph: &'g Graph,
@@ -162,6 +270,21 @@ impl<'g> Interpreter<'g> {
 
     fn exec(&self, id: NodeId, op: &OpKind, args: &[&Tensor]) -> Tensor {
         exec_node(self.params.get_ref(id), op, args)
+    }
+
+    /// Run the graph once for `N` independent input sets (batch-as-list).
+    /// Returns `out[sample][output_idx]`, bit-identical to `N` [`run`]
+    /// calls — the graph is walked once and weighted matmuls amortize
+    /// their weight-panel packing across the batch.
+    ///
+    /// [`run`]: Interpreter::run
+    pub fn run_batch(&self, batch: &[Vec<Tensor>]) -> Vec<Vec<Tensor>> {
+        run_graph_batch(
+            self.graph,
+            batch,
+            |n, args| exec_node_batch(self.params.get_ref(n.id), &n.op, args),
+            |_| {},
+        )
     }
 
     /// Convenience: run on deterministic synthetic inputs from `seed`.

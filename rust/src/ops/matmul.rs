@@ -45,80 +45,134 @@ pub(crate) unsafe fn matmul_panel_raw(
     row_bias: &[f32],
     out: *mut f32,
 ) {
-    debug_assert!(a.len() >= m * k, "lhs too small");
+    matmul_panel_raw_batch(&[a], m, k, bmat, n, j0, j1, col_bias, row_bias, &[out]);
+}
+
+/// Batched packed-panel matmul: the same product as [`matmul_panel_raw`]
+/// for `N` left-hand operands sharing one `bmat` — each `a_batch[s]` is an
+/// independent `[m, k]` matrix writing its own `outs[s]` buffer. The
+/// `NR`-column panel of `bmat` is packed **once** per panel and swept
+/// across all samples, amortizing the packing cost that a per-sample loop
+/// pays `N` times. Each sample's per-element accumulation runs in the
+/// identical strictly-increasing-`k` order as a solo call, so batched
+/// output is bit-identical to `N` independent calls.
+///
+/// # Safety
+/// Each `outs[s]` must point at a live `m*n` f32 buffer; buffers must be
+/// pairwise disjoint. Concurrency rules per buffer as [`matmul_panel_raw`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn matmul_panel_raw_batch(
+    a_batch: &[&[f32]],
+    m: usize,
+    k: usize,
+    bmat: &[f32],
+    n: usize,
+    j0: usize,
+    j1: usize,
+    col_bias: &[f32],
+    row_bias: &[f32],
+    outs: &[*mut f32],
+) {
+    debug_assert_eq!(a_batch.len(), outs.len(), "batch size mismatch");
+    debug_assert!(a_batch.iter().all(|a| a.len() >= m * k), "lhs too small");
     debug_assert!(bmat.len() >= k * n, "rhs too small");
     debug_assert!(j0 <= j1 && j1 <= n, "bad column range");
     debug_assert!(col_bias.is_empty() || col_bias.len() == n);
     debug_assert!(row_bias.is_empty() || row_bias.len() == m);
-    if m == 0 || j0 == j1 {
+    if m == 0 || j0 == j1 || a_batch.is_empty() {
         return;
     }
     let mut packed = vec![0.0f32; k * NR];
     let mut jb = j0;
     while jb < j1 {
         let nw = NR.min(j1 - jb);
-        // Pack B[:, jb..jb+nw] contiguously so the k-loop streams it.
+        // Pack B[:, jb..jb+nw] contiguously so the k-loop streams it —
+        // once for the whole batch.
         for kk in 0..k {
             packed[kk * nw..kk * nw + nw].copy_from_slice(&bmat[kk * n + jb..kk * n + jb + nw]);
         }
-        if nw == NR {
-            // MR x NR register tile over full-width panels.
-            let mut i = 0;
-            while i + MR <= m {
-                let mut acc = [[0.0f32; NR]; MR];
-                let a0 = &a[i * k..(i + 1) * k];
-                let a1 = &a[(i + 1) * k..(i + 2) * k];
-                let a2 = &a[(i + 2) * k..(i + 3) * k];
-                let a3 = &a[(i + 3) * k..(i + 4) * k];
-                for kk in 0..k {
-                    let pb = &packed[kk * NR..kk * NR + NR];
-                    let (v0, v1, v2, v3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
-                    for jj in 0..NR {
-                        acc[0][jj] += v0 * pb[jj];
-                        acc[1][jj] += v1 * pb[jj];
-                        acc[2][jj] += v2 * pb[jj];
-                        acc[3][jj] += v3 * pb[jj];
-                    }
-                }
-                for (r, row_acc) in acc.iter().enumerate() {
-                    store_row(row_acc, nw, out.add((i + r) * n + jb), jb, i + r, col_bias, row_bias);
-                }
-                i += MR;
-            }
-            while i < m {
-                let mut acc = [0.0f32; NR];
-                let ar = &a[i * k..(i + 1) * k];
-                for kk in 0..k {
-                    let pb = &packed[kk * NR..kk * NR + NR];
-                    let v = ar[kk];
-                    for jj in 0..NR {
-                        acc[jj] += v * pb[jj];
-                    }
-                }
-                store_row(&acc, nw, out.add(i * n + jb), jb, i, col_bias, row_bias);
-                i += 1;
-            }
-        } else {
-            // Narrow trailing panel: plain per-element accumulation (same
-            // per-element k order as the fast path).
-            for i in 0..m {
-                let ar = &a[i * k..(i + 1) * k];
-                for jj in 0..nw {
-                    let mut acc = 0.0f32;
-                    for kk in 0..k {
-                        acc += ar[kk] * packed[kk * nw + jj];
-                    }
-                    if !col_bias.is_empty() {
-                        acc += col_bias[jb + jj];
-                    }
-                    if !row_bias.is_empty() {
-                        acc += row_bias[i];
-                    }
-                    *out.add(i * n + jb + jj) = acc;
-                }
-            }
+        for (a, &out) in a_batch.iter().zip(outs) {
+            panel_rows(a, m, k, n, &packed, jb, nw, col_bias, row_bias, out);
         }
         jb += nw;
+    }
+}
+
+/// One sample's full row sweep against a pre-packed `nw`-column panel at
+/// column offset `jb` — the register-tiled core shared by the single and
+/// batched panel entries.
+///
+/// # Safety
+/// As [`matmul_panel_raw`] for the `[jb, jb+nw)` column range of `out`.
+#[allow(clippy::too_many_arguments)]
+unsafe fn panel_rows(
+    a: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    packed: &[f32],
+    jb: usize,
+    nw: usize,
+    col_bias: &[f32],
+    row_bias: &[f32],
+    out: *mut f32,
+) {
+    if nw == NR {
+        // MR x NR register tile over full-width panels.
+        let mut i = 0;
+        while i + MR <= m {
+            let mut acc = [[0.0f32; NR]; MR];
+            let a0 = &a[i * k..(i + 1) * k];
+            let a1 = &a[(i + 1) * k..(i + 2) * k];
+            let a2 = &a[(i + 2) * k..(i + 3) * k];
+            let a3 = &a[(i + 3) * k..(i + 4) * k];
+            for kk in 0..k {
+                let pb = &packed[kk * NR..kk * NR + NR];
+                let (v0, v1, v2, v3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
+                for jj in 0..NR {
+                    acc[0][jj] += v0 * pb[jj];
+                    acc[1][jj] += v1 * pb[jj];
+                    acc[2][jj] += v2 * pb[jj];
+                    acc[3][jj] += v3 * pb[jj];
+                }
+            }
+            for (r, row_acc) in acc.iter().enumerate() {
+                store_row(row_acc, nw, out.add((i + r) * n + jb), jb, i + r, col_bias, row_bias);
+            }
+            i += MR;
+        }
+        while i < m {
+            let mut acc = [0.0f32; NR];
+            let ar = &a[i * k..(i + 1) * k];
+            for kk in 0..k {
+                let pb = &packed[kk * NR..kk * NR + NR];
+                let v = ar[kk];
+                for jj in 0..NR {
+                    acc[jj] += v * pb[jj];
+                }
+            }
+            store_row(&acc, nw, out.add(i * n + jb), jb, i, col_bias, row_bias);
+            i += 1;
+        }
+    } else {
+        // Narrow trailing panel: plain per-element accumulation (same
+        // per-element k order as the fast path).
+        for i in 0..m {
+            let ar = &a[i * k..(i + 1) * k];
+            for jj in 0..nw {
+                let mut acc = 0.0f32;
+                for kk in 0..k {
+                    acc += ar[kk] * packed[kk * nw + jj];
+                }
+                if !col_bias.is_empty() {
+                    acc += col_bias[jb + jj];
+                }
+                if !row_bias.is_empty() {
+                    acc += row_bias[i];
+                }
+                *out.add(i * n + jb + jj) = acc;
+            }
+        }
     }
 }
 
@@ -171,6 +225,34 @@ pub fn fc(x: &Tensor, k: usize, n: usize, w: &[f32], bias: &[f32]) -> Tensor {
     // SAFETY: `out` is exactly rows*n and the single call covers all columns.
     unsafe { matmul_panel_raw(&x.data, rows, k, w, n, 0, n, bias, &[], out.as_mut_ptr()) };
     Tensor::mat(rows, n, out)
+}
+
+/// Batched fully-connected: `N` samples against one weight matrix, packing
+/// each `w` panel once for the whole batch (a per-sample [`fc`] loop packs
+/// it `N` times). Every sample must view as the same `[rows, k]`; outputs
+/// are bit-identical to per-sample [`fc`] calls.
+pub fn fc_batch(xs: &[&Tensor], k: usize, n: usize, w: &[f32], bias: &[f32]) -> Vec<Tensor> {
+    if xs.is_empty() {
+        return Vec::new();
+    }
+    let numel = xs[0].shape().numel();
+    assert_eq!(numel % k, 0, "fc input {numel} not divisible by k {k}");
+    let rows = numel / k;
+    assert_eq!(w.len(), k * n, "fc weight size");
+    assert!(bias.is_empty() || bias.len() == n, "fc bias size");
+    let a_batch: Vec<&[f32]> = xs
+        .iter()
+        .map(|x| {
+            assert_eq!(x.shape().numel(), numel, "fc batch shape mismatch");
+            &x.data[..]
+        })
+        .collect();
+    let mut outs: Vec<Vec<f32>> = (0..xs.len()).map(|_| vec![0.0f32; rows * n]).collect();
+    let out_ptrs: Vec<*mut f32> = outs.iter_mut().map(|o| o.as_mut_ptr()).collect();
+    // SAFETY: each out buffer is exactly rows*n, pairwise disjoint, and the
+    // single call covers all columns of each.
+    unsafe { matmul_panel_raw_batch(&a_batch, rows, k, w, n, 0, n, bias, &[], &out_ptrs) };
+    outs.into_iter().map(|o| Tensor::mat(rows, n, o)).collect()
 }
 
 #[cfg(test)]
@@ -256,6 +338,23 @@ mod tests {
             };
         }
         assert_eq!(full, split);
+    }
+
+    #[test]
+    fn batched_panels_match_per_sample_calls_bitwise() {
+        // The shared-pack batched kernel must reproduce N independent
+        // single-sample calls exactly, including remainder rows/panels.
+        let mut rng = Rng::new(24);
+        let (m, k, n) = (7, 19, 21);
+        let w: Vec<f32> = rng.vec_uniform(k * n);
+        let bias: Vec<f32> = rng.vec_uniform(n);
+        let xs: Vec<Tensor> = (0..5).map(|_| Tensor::mat(m, k, rng.vec_uniform(m * k))).collect();
+        let refs: Vec<&Tensor> = xs.iter().collect();
+        let batched = fc_batch(&refs, k, n, &w, &bias);
+        for (x, got) in xs.iter().zip(&batched) {
+            let solo = fc(x, k, n, &w, &bias);
+            assert_eq!(got.data, solo.data);
+        }
     }
 
     #[test]

@@ -37,7 +37,7 @@ use std::sync::{Arc, Mutex};
 
 use super::arena::BufferArena;
 use super::elementwise as ew;
-use super::interp::{exec_node, run_graph, synthetic_inputs};
+use super::interp::{exec_node, exec_node_batch, run_graph, run_graph_batch, synthetic_inputs};
 use super::params::{NodeParams, ParamStore};
 use super::{conv, matmul, pool as pooling, shape_ops, Tensor};
 use crate::graph::{ConvAttrs, Graph, Node, OpKind, PoolAttrs, PoolKind, Shape, TensorDesc};
@@ -163,6 +163,26 @@ impl ParInterpreter {
     /// Convenience: run on deterministic synthetic inputs from `seed`.
     pub fn run_synthetic(&self, seed: u64) -> Vec<Tensor> {
         self.run(&synthetic_inputs(&self.graph, seed))
+    }
+
+    /// Run the graph once for `N` independent input sets (batch-as-list);
+    /// returns `out[sample][output_idx]`, bit-identical to `N` [`run`]
+    /// calls. One graph walk covers the whole batch: each node's jobs for
+    /// **all** samples go to the pool in a single `run` — batch×space
+    /// chunking — so a small model at batch 8 saturates a pool that
+    /// batch-1 spatial chunking cannot, and weighted matmuls pack each
+    /// weight panel once per batch. The arena's retention cap is scaled to
+    /// the batch size so the second batch allocates nothing new.
+    ///
+    /// [`run`]: ParInterpreter::run
+    pub fn run_batch(&self, batch: &[Vec<Tensor>]) -> Vec<Vec<Tensor>> {
+        self.arena.lock().expect("arena lock").reserve_batch(batch.len());
+        run_graph_batch(
+            &self.graph,
+            batch,
+            |n, args| self.exec_batch(n, args),
+            |dead| self.recycle(dead.data),
+        )
     }
 
     /// Execute one node, parallel when the plan says so and the shape
@@ -730,6 +750,335 @@ impl ParInterpreter {
         }
         pool.run(jobs);
         Tensor::new(TensorDesc::plain(Shape::mat(cols, rows)), data)
+    }
+
+    /// Batched fallback: each sample through the single-sample [`exec`]
+    /// dispatch — bit-identical to solo runs by definition, at the cost of
+    /// one pool pass per sample for ops that parallelize.
+    ///
+    /// [`exec`]: ParInterpreter::exec
+    fn per_sample(&self, node: &Node, args: &[&[Tensor]], nbatch: usize) -> Vec<Tensor> {
+        (0..nbatch)
+            .map(|s| {
+                let sargs: Vec<&Tensor> = args.iter().map(|a| &a[s]).collect();
+                self.exec(node, &sargs)
+            })
+            .collect()
+    }
+
+    /// Execute one node for the whole batch. The hot ops (conv family,
+    /// matmul, big elementwise/row ops) submit every sample's chunk jobs
+    /// in **one** pool pass; the gate scales with the batch
+    /// (`macs × N ≥ MIN_PARALLEL_ELEMS`), so nodes too small to fan out
+    /// at batch 1 still parallelize across samples. Everything else falls
+    /// back per sample. All batched kernels reuse the solo tile routines
+    /// over the same regions, so outputs stay bit-identical to solo runs.
+    fn exec_batch(&self, node: &Node, args: &[&[Tensor]]) -> Vec<Tensor> {
+        let nbatch = args.first().map_or(0, |a| a.len());
+        let p = self.params.get_ref(node.id);
+        if nbatch == 0 {
+            // Input-only graphs aside, a node always has at least one arg;
+            // a zero-width batch has nothing to compute.
+            return Vec::new();
+        }
+        if self.pool.is_none() {
+            return exec_node_batch(p, &node.op, args);
+        }
+        if nbatch == 1 {
+            return self.per_sample(node, args, 1);
+        }
+        let big = node.macs().saturating_mul(nbatch as u64) >= MIN_PARALLEL_ELEMS as u64;
+        let nplan = self.plan.node(node.id);
+        match &node.op {
+            OpKind::Conv(a) if big => {
+                if let Some(out) = self.batch_conv(a, p, args[0], nplan, false) {
+                    return out;
+                }
+            }
+            OpKind::Cbr(a) if big => {
+                if let Some(out) = self.batch_conv(a, p, args[0], nplan, true) {
+                    return out;
+                }
+            }
+            OpKind::Cbra(a, pl) | OpKind::Cbrm(a, pl) if big => {
+                if let Some(ts) = self.batch_conv(a, p, args[0], nplan, true) {
+                    return ts
+                        .into_iter()
+                        .map(|t| {
+                            let out = pooling::pool(&t, pl);
+                            self.recycle(t.data);
+                            out
+                        })
+                        .collect();
+                }
+            }
+            OpKind::MatMul(m) if big => {
+                return if m.weighted {
+                    self.batch_fc(args[0], m.k, m.n, &p.w, &p.bias)
+                } else {
+                    self.batch_matmul(args[0], args[1])
+                };
+            }
+            OpKind::Relu if big => return self.batch_map(args[0], ew::relu1),
+            OpKind::Sigmoid if big => return self.batch_map(args[0], ew::sigmoid1),
+            OpKind::Tanh if big => return self.batch_map(args[0], ew::tanh1),
+            OpKind::Gelu if big => return self.batch_map(args[0], ew::gelu1),
+            OpKind::Add if big => return self.batch_zip(args[0], args[1], |x, y| x + y),
+            OpKind::Mul if big => return self.batch_zip(args[0], args[1], |x, y| x * y),
+            OpKind::Softmax if big => return self.batch_rows(args[0], ew::softmax_row),
+            OpKind::LayerNorm if big => return self.batch_rows(args[0], ew::layernorm_row),
+            _ => {}
+        }
+        self.per_sample(node, args, nbatch)
+    }
+
+    /// Batched convolution (+ optional fused Bn+ReLU): all samples' tile
+    /// jobs in one pool pass, per-sample tiling identical to [`par_conv`]
+    /// so each sample's bits match a solo run. Returns `None` for shapes
+    /// the solo path also refuses (non-batch-1 maps, reduction-bearing
+    /// C-splits — those fall back per sample, keeping the tolerance-class
+    /// path byte-for-byte the solo one).
+    ///
+    /// [`par_conv`]: ParInterpreter::par_conv
+    fn batch_conv(
+        &self,
+        attrs: &ConvAttrs,
+        p: &NodeParams,
+        xs: &[Tensor],
+        nplan: &NodePlan,
+        bn_relu: bool,
+    ) -> Option<Vec<Tensor>> {
+        let s = xs[0].shape();
+        if s.n() != 1 {
+            return None;
+        }
+        if nplan.param_split.map(|ps| ps.needs_reduction).unwrap_or(false) {
+            // The solo engine runs C-splits through the reordered partial-sum
+            // reduction; batched output must match *that* engine bit-for-bit,
+            // so take the per-sample fallback instead of a full-ic tile.
+            return None;
+        }
+        let a = *attrs;
+        let (oh, ow) = a.out_hw(s.h(), s.w());
+        let pool = self.pool.as_ref()?;
+        let nbatch = xs.len();
+        let numel = a.out_c * oh * ow;
+        let mut outs: Vec<Vec<f32>> = (0..nbatch).map(|_| self.take_zeroed(numel)).collect();
+        let ptrs: Vec<SendPtr<f32>> = outs.iter_mut().map(|o| SendPtr(o.as_mut_ptr())).collect();
+        let w = p.w.as_slice();
+        let bias = p.bias.as_slice();
+        // batch×space: spread the pool over samples first, then space.
+        let ways = crate::util::ceil_div(self.workers, nbatch).max(1);
+        let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+        if conv::is_pointwise_fast_path(&a, 1) {
+            let hw = oh * ow;
+            for (x, &ptr) in xs.iter().zip(&ptrs) {
+                for (oc0, oc1) in chunks(a.out_c, ways) {
+                    jobs.push(Box::new(move || {
+                        // SAFETY: disjoint (sample, oc) regions.
+                        unsafe { conv::pointwise_tile_raw(x, &a, w, bias, oc0, oc1, 0, hw, ptr.0) };
+                    }));
+                }
+            }
+        } else {
+            let cpg_in = a.in_c / a.groups;
+            for (x, &ptr) in xs.iter().zip(&ptrs) {
+                for (oc0, oc1) in chunks(a.out_c, ways) {
+                    jobs.push(Box::new(move || {
+                        // SAFETY: disjoint (sample, oc) tiles.
+                        unsafe {
+                            conv::conv2d_tile_raw(
+                                x, &a, w, bias, 0, oc0, oc1, 0, oh, 0, ow, 0, cpg_in, oh, ow,
+                                ptr.0,
+                            )
+                        };
+                    }));
+                }
+            }
+        }
+        pool.run(jobs);
+        if bn_relu {
+            let (scale, shift) = (p.scale.as_slice(), p.shift.as_slice());
+            debug_assert_eq!(scale.len(), a.out_c);
+            debug_assert_eq!(shift.len(), a.out_c);
+            let hw = oh * ow;
+            let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+            for &ptr in &ptrs {
+                for (c0, c1) in chunks(a.out_c, ways) {
+                    jobs.push(Box::new(move || {
+                        // SAFETY: disjoint (sample, channel) regions.
+                        let seg = unsafe {
+                            std::slice::from_raw_parts_mut(ptr.0.add(c0 * hw), (c1 - c0) * hw)
+                        };
+                        for (off, v) in seg.iter_mut().enumerate() {
+                            let ch = c0 + off / hw;
+                            *v = ew::relu1(*v * scale[ch] + shift[ch]);
+                        }
+                    }));
+                }
+            }
+            pool.run(jobs);
+        }
+        Some(
+            outs.into_iter()
+                .map(|o| Tensor::new(TensorDesc::fm(1, a.out_c, oh, ow), o))
+                .collect(),
+        )
+    }
+
+    /// Batched weighted FC: column chunks across the pool, each chunk
+    /// sweeping **all** samples through the shared-pack batched panel
+    /// kernel — the weight panel is packed once per (chunk, batch), not
+    /// once per (chunk, sample).
+    fn batch_fc(&self, xs: &[Tensor], k: usize, n: usize, w: &[f32], bias: &[f32]) -> Vec<Tensor> {
+        let numel = xs[0].shape().numel();
+        assert_eq!(numel % k, 0, "fc input {numel} not divisible by k {k}");
+        let rows = numel / k;
+        assert_eq!(w.len(), k * n, "fc weight size");
+        assert!(bias.is_empty() || bias.len() == n, "fc bias size");
+        let pool = self.pool.as_ref().expect("parallel path");
+        let mut outs: Vec<Vec<f32>> =
+            (0..xs.len()).map(|_| self.take_zeroed(rows * n)).collect();
+        let ptrs: Vec<SendPtr<f32>> = outs.iter_mut().map(|o| SendPtr(o.as_mut_ptr())).collect();
+        let srcs: Vec<&[f32]> = xs.iter().map(|x| x.data.as_slice()).collect();
+        let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+        for (j0, j1) in chunks(n, self.workers) {
+            let srcs = srcs.clone();
+            let ptrs = ptrs.clone();
+            jobs.push(Box::new(move || {
+                let raw: Vec<*mut f32> = ptrs.iter().map(|p| p.0).collect();
+                // SAFETY: disjoint column ranges of each sample's buffer.
+                unsafe {
+                    matmul::matmul_panel_raw_batch(&srcs, rows, k, w, n, j0, j1, bias, &[], &raw)
+                };
+            }));
+        }
+        pool.run(jobs);
+        outs.into_iter()
+            .map(|o| Tensor::new(TensorDesc::plain(Shape::mat(rows, n)), o))
+            .collect()
+    }
+
+    /// Batched two-operand matmul: per-sample right-hand sides rule out
+    /// pack sharing, so jobs are (sample × column-chunk) pairs in one
+    /// pool pass.
+    fn batch_matmul(&self, azs: &[Tensor], bzs: &[Tensor]) -> Vec<Tensor> {
+        let (m, k) = (azs[0].shape().dims[0], azs[0].shape().dims[1]);
+        let (k2, n) = (bzs[0].shape().dims[0], bzs[0].shape().dims[1]);
+        assert_eq!(k, k2, "matmul inner dims {k} vs {k2}");
+        let pool = self.pool.as_ref().expect("parallel path");
+        let nbatch = azs.len();
+        let mut outs: Vec<Vec<f32>> = (0..nbatch).map(|_| self.take_zeroed(m * n)).collect();
+        let ptrs: Vec<SendPtr<f32>> = outs.iter_mut().map(|o| SendPtr(o.as_mut_ptr())).collect();
+        let ways = crate::util::ceil_div(self.workers, nbatch).max(1);
+        let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+        for ((av, bv), &ptr) in azs.iter().zip(bzs).zip(&ptrs) {
+            let (lhs, rhs) = (av.data.as_slice(), bv.data.as_slice());
+            for (j0, j1) in chunks(n, ways) {
+                jobs.push(Box::new(move || {
+                    // SAFETY: disjoint (sample, column) regions.
+                    unsafe { matmul::matmul_panel_raw(lhs, m, k, rhs, n, j0, j1, &[], &[], ptr.0) };
+                }));
+            }
+        }
+        pool.run(jobs);
+        outs.into_iter()
+            .map(|o| Tensor::new(TensorDesc::plain(Shape::mat(m, n)), o))
+            .collect()
+    }
+
+    /// Batched element-wise map: (sample × element-chunk) jobs, one pool
+    /// pass.
+    fn batch_map(&self, xs: &[Tensor], f: impl Fn(f32) -> f32 + Send + Sync + Copy) -> Vec<Tensor> {
+        let pool = self.pool.as_ref().expect("parallel path");
+        let n = xs[0].data.len();
+        let nbatch = xs.len();
+        let mut outs: Vec<Vec<f32>> = (0..nbatch).map(|_| self.take_zeroed(n)).collect();
+        let ptrs: Vec<SendPtr<f32>> = outs.iter_mut().map(|o| SendPtr(o.as_mut_ptr())).collect();
+        let ways = crate::util::ceil_div(self.workers, nbatch).max(1);
+        let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+        for (x, &ptr) in xs.iter().zip(&ptrs) {
+            let src = x.data.as_slice();
+            for (s, e) in chunks(n, ways) {
+                jobs.push(Box::new(move || {
+                    // SAFETY: disjoint (sample, element) regions.
+                    let seg = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(s), e - s) };
+                    for (v, &xv) in seg.iter_mut().zip(&src[s..e]) {
+                        *v = f(xv);
+                    }
+                }));
+            }
+        }
+        pool.run(jobs);
+        outs.into_iter().map(|o| Tensor::new(xs[0].desc.clone(), o)).collect()
+    }
+
+    /// Batched element-wise zip: (sample × element-chunk) jobs, one pool
+    /// pass.
+    fn batch_zip(
+        &self,
+        azs: &[Tensor],
+        bzs: &[Tensor],
+        f: impl Fn(f32, f32) -> f32 + Send + Sync + Copy,
+    ) -> Vec<Tensor> {
+        assert_eq!(azs[0].shape(), bzs[0].shape(), "elementwise shape mismatch");
+        let pool = self.pool.as_ref().expect("parallel path");
+        let n = azs[0].data.len();
+        let nbatch = azs.len();
+        let mut outs: Vec<Vec<f32>> = (0..nbatch).map(|_| self.take_zeroed(n)).collect();
+        let ptrs: Vec<SendPtr<f32>> = outs.iter_mut().map(|o| SendPtr(o.as_mut_ptr())).collect();
+        let ways = crate::util::ceil_div(self.workers, nbatch).max(1);
+        let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+        for ((av, bv), &ptr) in azs.iter().zip(bzs).zip(&ptrs) {
+            let (sa, sb) = (av.data.as_slice(), bv.data.as_slice());
+            for (s, e) in chunks(n, ways) {
+                jobs.push(Box::new(move || {
+                    // SAFETY: disjoint (sample, element) regions.
+                    let seg = unsafe { std::slice::from_raw_parts_mut(ptr.0.add(s), e - s) };
+                    for (i, v) in seg.iter_mut().enumerate() {
+                        *v = f(sa[s + i], sb[s + i]);
+                    }
+                }));
+            }
+        }
+        pool.run(jobs);
+        outs.into_iter().map(|o| Tensor::new(azs[0].desc.clone(), o)).collect()
+    }
+
+    /// Batched row transform (Softmax / LayerNorm): (sample × row-chunk)
+    /// jobs, one pool pass, same per-row routines as the serial operator.
+    fn batch_rows(
+        &self,
+        xs: &[Tensor],
+        row_fn: impl Fn(&mut [f32]) + Send + Sync + Copy,
+    ) -> Vec<Tensor> {
+        let dims = &xs[0].shape().dims;
+        let last = *dims.last().expect("row op on scalar");
+        let rows = xs[0].shape().numel() / last;
+        let pool = self.pool.as_ref().expect("parallel path");
+        let nbatch = xs.len();
+        let mut outs: Vec<Vec<f32>> = {
+            let mut arena = self.arena.lock().expect("arena lock");
+            xs.iter().map(|x| arena.take_copy(&x.data)).collect()
+        };
+        let ptrs: Vec<SendPtr<f32>> = outs.iter_mut().map(|o| SendPtr(o.as_mut_ptr())).collect();
+        let ways = crate::util::ceil_div(self.workers, nbatch).max(1);
+        let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+        for &ptr in &ptrs {
+            for (r0, r1) in chunks(rows, ways) {
+                jobs.push(Box::new(move || {
+                    // SAFETY: disjoint (sample, row) regions.
+                    let seg = unsafe {
+                        std::slice::from_raw_parts_mut(ptr.0.add(r0 * last), (r1 - r0) * last)
+                    };
+                    for row in seg.chunks_mut(last) {
+                        row_fn(row);
+                    }
+                }));
+            }
+        }
+        pool.run(jobs);
+        outs.into_iter().map(|o| Tensor::new(xs[0].desc.clone(), o)).collect()
     }
 }
 

@@ -578,6 +578,102 @@ impl QuantEngine {
         self.run(&synthetic_inputs(&self.graph, seed))
     }
 
+    /// Run one batch of quantized inferences in lockstep: element-wise
+    /// identical to calling [`QuantEngine::run`] once per sample (exact
+    /// integer accumulation makes every batched tiling bit-identical to
+    /// the serial kernel), but FC weight panels are packed once per batch
+    /// instead of once per sample and the worker pool is chunked over
+    /// batch × output channels, so small nodes still fill every worker
+    /// at batch 8. Returns `out[sample][output_idx]`.
+    pub fn run_batch(&self, batch: &[Vec<Tensor>]) -> Vec<Vec<Tensor>> {
+        let g = &*self.graph;
+        let input_ids = g.input_ids();
+        for (s, inputs) in batch.iter().enumerate() {
+            assert_eq!(
+                inputs.len(),
+                input_ids.len(),
+                "graph {} input arity (sample {s})",
+                g.name
+            );
+        }
+        let nbatch = batch.len();
+        // The same liveness walk as `run`, over per-value sample vectors
+        // kept in lockstep: every sample of a value dies at the same node.
+        let mut uses: Vec<usize> = vec![0; g.len()];
+        for n in &g.nodes {
+            for &i in &n.inputs {
+                uses[i] += 1;
+            }
+        }
+        for &o in &g.outputs {
+            uses[o] += 1;
+        }
+        let mut vals: Vec<Option<Vec<QTensor>>> = (0..g.len()).map(|_| None).collect();
+        let mut next_input = 0usize;
+        for n in &g.nodes {
+            let out: Vec<QTensor> = if matches!(n.op, OpKind::Input) {
+                let idx = next_input;
+                next_input += 1;
+                batch
+                    .iter()
+                    .map(|inputs| {
+                        let t = &inputs[idx];
+                        assert_eq!(t.shape(), &n.out.shape, "input {idx} shape mismatch");
+                        QTensor::quantize_with(t, self.run.grid(n.id))
+                    })
+                    .collect()
+            } else {
+                let args: Vec<&[QTensor]> = n
+                    .inputs
+                    .iter()
+                    .map(|&i| vals[i].as_deref().expect("input value live"))
+                    .collect();
+                let _sp = crate::obs::trace::span(&n.name, crate::obs::trace::Cat::Compute);
+                self.exec_batch(n, &args)
+            };
+            debug_assert_eq!(out.len(), nbatch, "node {} batch arity", n.name);
+            vals[n.id] = Some(out);
+            for &i in &n.inputs {
+                uses[i] -= 1;
+                if uses[i] == 0 && !g.outputs.contains(&i) {
+                    vals[i] = None;
+                }
+            }
+        }
+        (0..nbatch)
+            .map(|s| {
+                g.outputs
+                    .iter()
+                    .map(|&o| vals[o].as_ref().expect("output computed")[s].dequantize())
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Execute one node for every sample of the batch. IntDot nodes big
+    /// enough in aggregate (`macs × nbatch`) take the fused pool path;
+    /// everything else runs the per-sample executor, which is already
+    /// bit-identical across engines.
+    fn exec_batch(&self, node: &Node, args: &[&[QTensor]]) -> Vec<QTensor> {
+        let nbatch = args.first().map_or(0, |a| a.len());
+        let prm = self.params.get_ref(node.id);
+        if nbatch > 1
+            && self.pool.is_some()
+            && self.run.plan.kinds[node.id] == QuantKind::IntDot
+            && node.macs().saturating_mul(nbatch as u64) >= MIN_PARALLEL_ELEMS as u64
+        {
+            if let Some(out) = self.exec_intdot_par_batch(node, prm, args) {
+                return out;
+            }
+        }
+        (0..nbatch)
+            .map(|s| {
+                let sargs: Vec<&QTensor> = args.iter().map(|a| &a[s]).collect();
+                self.exec(node, &sargs)
+            })
+            .collect()
+    }
+
     fn exec(&self, node: &Node, args: &[&QTensor]) -> QTensor {
         let prm = self.params.get_ref(node.id);
         if self.pool.is_some()
@@ -724,6 +820,152 @@ impl QuantEngine {
             _ => None,
         }
     }
+
+    /// Batched pool-chunked integer kernels: all samples' chunk jobs go
+    /// into ONE `pool.run`, with per-sample chunk counts scaled down by
+    /// the batch size (`ceil(workers / nbatch)` ways) so the pool stays
+    /// saturated without over-splitting. Integer accumulation is exact,
+    /// so the fused tiling is bit-identical to the per-sample path.
+    /// Returns `None` for shapes that must take the per-sample path.
+    fn exec_intdot_par_batch(
+        &self,
+        node: &Node,
+        prm: &NodeParams,
+        args: &[&[QTensor]],
+    ) -> Option<Vec<QTensor>> {
+        let pool = self.pool.as_ref()?;
+        let nbatch = args.first().map_or(0, |a| a.len());
+        let ways = crate::util::ceil_div(self.workers, nbatch).max(1);
+        match &node.op {
+            OpKind::Conv(a) | OpKind::Cbr(a) => {
+                let s = args[0][0].shape();
+                if s.n() != 1 {
+                    return None;
+                }
+                let rq = self.run.requant(node.id)?;
+                let (h, w) = (s.h(), s.w());
+                let (oh, ow) = a.out_hw(h, w);
+                let codes: Vec<Cow<'_, [i8]>> = args[0]
+                    .iter()
+                    .map(|q| self.run.intdot_codes(node.inputs[0], q))
+                    .collect();
+                let grid = self.run.grid(node.id).to_vec();
+                let mut outs: Vec<QTensor> =
+                    (0..nbatch).map(|_| QTensor::zeros(node.out.clone(), grid.clone())).collect();
+                let ptrs: Vec<SendPtr<i8>> =
+                    outs.iter_mut().map(|o| SendPtr(o.data.as_mut_ptr())).collect();
+                let ep = rq.epilogue();
+                let ep_ref = &ep;
+                let qwq: &[i8] = &self.run.qweights(node.id).q;
+                let a2 = *a;
+                let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+                for (si, qx) in codes.iter().enumerate() {
+                    let qx: &[i8] = qx;
+                    let ptr = ptrs[si];
+                    for (oc0, oc1) in chunks(a.out_c, ways) {
+                        jobs.push(Box::new(move || {
+                            // SAFETY: disjoint (sample, channel) regions.
+                            unsafe {
+                                kernels::conv2d_region_raw_q8(
+                                    qx, a2.in_c, h, w, &a2, qwq, ep_ref, oc0, oc1, 0, oh, 0, ow,
+                                    oh, ow, ptr.0,
+                                )
+                            };
+                        }));
+                    }
+                }
+                pool.run(jobs);
+                Some(outs)
+            }
+            OpKind::Cbra(a, pl) | OpKind::Cbrm(a, pl) => {
+                let s = args[0][0].shape();
+                if s.n() != 1 {
+                    return None;
+                }
+                let (h, w) = (s.h(), s.w());
+                let (oh, ow) = a.out_hw(h, w);
+                let qw = self.run.qweights(node.id);
+                let ep = self.run.pool_link_epilogue(node.id, &prm.bias);
+                let ep_ref = &ep;
+                let codes: Vec<Cow<'_, [i8]>> = args[0]
+                    .iter()
+                    .map(|q| self.run.intdot_codes(node.inputs[0], q))
+                    .collect();
+                let mut convs: Vec<Tensor> = (0..nbatch)
+                    .map(|_| Tensor::zeros(TensorDesc::fm(1, a.out_c, oh, ow)))
+                    .collect();
+                let ptrs: Vec<SendPtr<f32>> =
+                    convs.iter_mut().map(|c| SendPtr(c.data.as_mut_ptr())).collect();
+                let qwq: &[i8] = &qw.q;
+                let a2 = *a;
+                let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+                for (si, qx) in codes.iter().enumerate() {
+                    let qx: &[i8] = qx;
+                    let ptr = ptrs[si];
+                    for (oc0, oc1) in chunks(a.out_c, ways) {
+                        jobs.push(Box::new(move || {
+                            // SAFETY: disjoint (sample, channel) regions.
+                            unsafe {
+                                kernels::conv2d_region_raw_q8(
+                                    qx, a2.in_c, h, w, &a2, qwq, ep_ref, oc0, oc1, 0, oh, 0, ow,
+                                    oh, ow, ptr.0,
+                                )
+                            };
+                        }));
+                    }
+                }
+                pool.run(jobs);
+                Some(
+                    convs
+                        .into_iter()
+                        .map(|mut c| {
+                            bn_relu_inplace(&mut c, &prm.scale, &prm.shift);
+                            let p = crate::ops::pool::pool(&c, pl);
+                            QTensor::quantize_with(&p, self.run.grid(node.id))
+                        })
+                        .collect(),
+                )
+            }
+            OpKind::MatMul(m) if m.weighted => {
+                let rq = self.run.requant(node.id)?;
+                let rows = args[0][0].shape().numel() / m.k;
+                let codes: Vec<Cow<'_, [i8]>> = args[0]
+                    .iter()
+                    .map(|q| self.run.intdot_codes(node.inputs[0], q))
+                    .collect();
+                let srcs: Vec<&[i8]> = codes.iter().map(|c| &c[..]).collect();
+                let grid = self.run.grid(node.id).to_vec();
+                let mut outs: Vec<QTensor> =
+                    (0..nbatch).map(|_| QTensor::zeros(node.out.clone(), grid.clone())).collect();
+                let ptrs: Vec<SendPtr<i8>> =
+                    outs.iter_mut().map(|o| SendPtr(o.data.as_mut_ptr())).collect();
+                let ep = rq.epilogue();
+                let ep_ref = &ep;
+                let qwq: &[i8] = &self.run.qweights(node.id).q;
+                let (k, n) = (m.k, m.n);
+                let mut jobs: Vec<ScopedJob<'_>> = Vec::new();
+                // Column chunks across the full pool; each job sweeps the
+                // whole batch so every weight panel is packed once per
+                // batch instead of once per sample.
+                for (j0, j1) in chunks(n, self.workers) {
+                    let srcs = srcs.clone();
+                    let ptrs = ptrs.clone();
+                    jobs.push(Box::new(move || {
+                        let raw: Vec<*mut i8> = ptrs.iter().map(|p| p.0).collect();
+                        // SAFETY: disjoint column ranges per sample buffer.
+                        unsafe {
+                            kernels::matmul_panel_raw_q8_batch(
+                                &srcs, rows, k, qwq, n, j0, j1, ep_ref, &raw,
+                            )
+                        };
+                    }));
+                }
+                pool.run(jobs);
+                Some(outs)
+            }
+            _ => None,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -762,6 +1004,26 @@ mod tests {
             assert_eq!(want.len(), got.len());
             for (a, b) in want.iter().zip(&got) {
                 assert_eq!(a.data, b.data, "workers={workers} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn run_batch_is_bit_identical_to_per_sample_runs() {
+        let g = Arc::new(cnn());
+        let calib = calib_for(&g);
+        for workers in [1usize, 4] {
+            let e = QuantEngine::new(g.clone(), &calib, workers).unwrap();
+            let batch: Vec<Vec<Tensor>> =
+                (0..5u64).map(|s| synthetic_inputs(&g, 40 + s)).collect();
+            let got = e.run_batch(&batch);
+            assert_eq!(got.len(), batch.len());
+            for (s, inputs) in batch.iter().enumerate() {
+                let want = e.run(inputs);
+                assert_eq!(want.len(), got[s].len());
+                for (a, b) in want.iter().zip(&got[s]) {
+                    assert_eq!(a.data, b.data, "workers={workers} sample={s} diverged");
+                }
             }
         }
     }

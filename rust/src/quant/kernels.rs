@@ -266,57 +266,106 @@ pub(crate) unsafe fn matmul_panel_raw_q8<E: Epilogue>(
     ep: &E,
     out: *mut E::Out,
 ) {
-    debug_assert!(a.len() >= m * k, "q8 lhs too small");
+    matmul_panel_raw_q8_batch(&[a], m, k, bmat, n, j0, j1, ep, &[out]);
+}
+
+/// Batched packed-panel i8 matmul: `N` independent `[m, k]` left-hand
+/// operands against one `bmat`, each writing its own `outs[s]` buffer.
+/// Each `NR`-column panel of `bmat` is packed **once** and swept across
+/// the whole batch (a per-sample loop re-packs it `N` times); the exact
+/// integer accumulation makes batched output trivially bit-identical to
+/// `N` solo [`matmul_panel_raw_q8`] calls.
+///
+/// # Safety
+/// Each `outs[s]` must point at a live `m*n` buffer; buffers must be
+/// pairwise disjoint. Concurrency rules per buffer as
+/// [`matmul_panel_raw_q8`].
+#[allow(clippy::too_many_arguments)]
+pub(crate) unsafe fn matmul_panel_raw_q8_batch<E: Epilogue>(
+    a_batch: &[&[i8]],
+    m: usize,
+    k: usize,
+    bmat: &[i8],
+    n: usize,
+    j0: usize,
+    j1: usize,
+    ep: &E,
+    outs: &[*mut E::Out],
+) {
+    debug_assert_eq!(a_batch.len(), outs.len(), "q8 batch size mismatch");
+    debug_assert!(a_batch.iter().all(|a| a.len() >= m * k), "q8 lhs too small");
     debug_assert!(bmat.len() >= k * n, "q8 rhs too small");
     debug_assert!(j0 <= j1 && j1 <= n, "bad q8 column range");
-    if m == 0 || j0 == j1 {
+    if m == 0 || j0 == j1 || a_batch.is_empty() {
         return;
     }
     let mut packed = vec![0i8; k * NR];
     let mut jb = j0;
     while jb < j1 {
         let nw = NR.min(j1 - jb);
+        // Pack B[:, jb..jb+nw] once for the whole batch.
         for kk in 0..k {
             packed[kk * nw..kk * nw + nw].copy_from_slice(&bmat[kk * n + jb..kk * n + jb + nw]);
         }
-        let mut i = 0;
-        while i + MR <= m {
-            let mut acc = [[0i32; NR]; MR];
-            let a0 = &a[i * k..(i + 1) * k];
-            let a1 = &a[(i + 1) * k..(i + 2) * k];
-            let a2 = &a[(i + 2) * k..(i + 3) * k];
-            let a3 = &a[(i + 3) * k..(i + 4) * k];
-            for kk in 0..k {
-                let pb = &packed[kk * nw..kk * nw + nw];
-                let (v0, v1, v2, v3) =
-                    (a0[kk] as i32, a1[kk] as i32, a2[kk] as i32, a3[kk] as i32);
-                for (jj, &bv) in pb.iter().enumerate() {
-                    let bv = bv as i32;
-                    acc[0][jj] += v0 * bv;
-                    acc[1][jj] += v1 * bv;
-                    acc[2][jj] += v2 * bv;
-                    acc[3][jj] += v3 * bv;
-                }
-            }
-            for (r, row_acc) in acc.iter().enumerate() {
-                ep.store(i + r, jb, &row_acc[..nw], out.add((i + r) * n + jb));
-            }
-            i += MR;
-        }
-        while i < m {
-            let mut acc = [0i32; NR];
-            let ar = &a[i * k..(i + 1) * k];
-            for kk in 0..k {
-                let pb = &packed[kk * nw..kk * nw + nw];
-                let v = ar[kk] as i32;
-                for (jj, &bv) in pb.iter().enumerate() {
-                    acc[jj] += v * bv as i32;
-                }
-            }
-            ep.store(i, jb, &acc[..nw], out.add(i * n + jb));
-            i += 1;
+        for (a, &out) in a_batch.iter().zip(outs) {
+            panel_rows_q8(a, m, k, n, &packed, jb, nw, ep, out);
         }
         jb += nw;
+    }
+}
+
+/// One sample's row sweep against a pre-packed `nw`-column i8 panel —
+/// the register-tiled core shared by the single and batched q8 entries.
+///
+/// # Safety
+/// As [`matmul_panel_raw_q8`] for the `[jb, jb+nw)` column range of `out`.
+#[allow(clippy::too_many_arguments)]
+unsafe fn panel_rows_q8<E: Epilogue>(
+    a: &[i8],
+    m: usize,
+    k: usize,
+    n: usize,
+    packed: &[i8],
+    jb: usize,
+    nw: usize,
+    ep: &E,
+    out: *mut E::Out,
+) {
+    let mut i = 0;
+    while i + MR <= m {
+        let mut acc = [[0i32; NR]; MR];
+        let a0 = &a[i * k..(i + 1) * k];
+        let a1 = &a[(i + 1) * k..(i + 2) * k];
+        let a2 = &a[(i + 2) * k..(i + 3) * k];
+        let a3 = &a[(i + 3) * k..(i + 4) * k];
+        for kk in 0..k {
+            let pb = &packed[kk * nw..kk * nw + nw];
+            let (v0, v1, v2, v3) = (a0[kk] as i32, a1[kk] as i32, a2[kk] as i32, a3[kk] as i32);
+            for (jj, &bv) in pb.iter().enumerate() {
+                let bv = bv as i32;
+                acc[0][jj] += v0 * bv;
+                acc[1][jj] += v1 * bv;
+                acc[2][jj] += v2 * bv;
+                acc[3][jj] += v3 * bv;
+            }
+        }
+        for (r, row_acc) in acc.iter().enumerate() {
+            ep.store(i + r, jb, &row_acc[..nw], out.add((i + r) * n + jb));
+        }
+        i += MR;
+    }
+    while i < m {
+        let mut acc = [0i32; NR];
+        let ar = &a[i * k..(i + 1) * k];
+        for kk in 0..k {
+            let pb = &packed[kk * nw..kk * nw + nw];
+            let v = ar[kk] as i32;
+            for (jj, &bv) in pb.iter().enumerate() {
+                acc[jj] += v * bv as i32;
+            }
+        }
+        ep.store(i, jb, &acc[..nw], out.add(i * n + jb));
+        i += 1;
     }
 }
 
@@ -491,6 +540,26 @@ pub(crate) fn fc_q8<E: Epilogue>(
     // SAFETY: `out` is exactly rows*n and the single call covers all columns.
     unsafe { matmul_panel_raw_q8(qa, rows, k, qw, n, 0, n, ep, out.as_mut_ptr()) };
     out
+}
+
+/// Batched quantized FC: `N` samples' `[rows, k]` activations against one
+/// `[k, n]` weight matrix, packing each weight panel once for the whole
+/// batch. Bit-identical to per-sample [`fc_q8`] calls.
+pub(crate) fn fc_q8_batch<E: Epilogue>(
+    qa_batch: &[&[i8]],
+    rows: usize,
+    k: usize,
+    n: usize,
+    qw: &[i8],
+    ep: &E,
+) -> Vec<Vec<E::Out>> {
+    let mut outs: Vec<Vec<E::Out>> =
+        (0..qa_batch.len()).map(|_| vec![E::Out::default(); rows * n]).collect();
+    let out_ptrs: Vec<*mut E::Out> = outs.iter_mut().map(|o| o.as_mut_ptr()).collect();
+    // SAFETY: each out buffer is exactly rows*n and pairwise disjoint; the
+    // single call covers all columns of each.
+    unsafe { matmul_panel_raw_q8_batch(qa_batch, rows, k, qw, n, 0, n, ep, &out_ptrs) };
+    outs
 }
 
 /// Serial quantized activation×activation matmul (`[m, k] × [k, n]`).

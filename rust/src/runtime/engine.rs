@@ -72,6 +72,16 @@ pub struct InferOutput {
     pub exec_s: f64,
 }
 
+/// One batched inference result: per-sample output tensors
+/// (`outputs[sample][output_idx]`) and the whole batch's execution time.
+#[derive(Debug)]
+pub struct InferBatchOutput {
+    /// Per-sample output tensors, in submission order.
+    pub outputs: Vec<Vec<Tensor>>,
+    /// Pure execution time for the whole batch, seconds.
+    pub exec_s: f64,
+}
+
 impl Engine {
     /// Engine over an AOT artifact variant.
     pub fn pjrt(rt: Arc<PjrtRuntime>, variant: &str) -> Result<Engine> {
@@ -192,6 +202,31 @@ impl Engine {
         };
         Ok(InferOutput { outputs, exec_s: start.elapsed().as_secs_f64() })
     }
+
+    /// Run one inference over a whole batch of samples. Every backend
+    /// folds the batch through its own execution (shared weight packing,
+    /// batch×space pool chunking, one cluster sync round per batch);
+    /// outputs are element-wise identical to per-sample [`Engine::infer`]
+    /// calls. PJRT artifacts are compiled for batch 1, so that backend
+    /// loops per sample. `exec_s` is the whole batch's execution time;
+    /// divide by `batch.len()` for the per-sample amortized cost.
+    pub fn infer_batch(&self, batch: &[Vec<Tensor>]) -> Result<InferBatchOutput> {
+        let start = Instant::now();
+        let outputs = match &self.inner {
+            Inner::Pjrt { rt, variant } => {
+                let mut outs = Vec::with_capacity(batch.len());
+                for sample in batch {
+                    outs.push(rt.execute(variant, sample)?);
+                }
+                outs
+            }
+            Inner::Interp { graph } => Interpreter::new(graph).run_batch(batch),
+            Inner::ParInterp { interp } => interp.run_batch(batch),
+            Inner::Cluster { driver } => driver.infer_batch(batch)?,
+            Inner::Quant { engine } => engine.run_batch(batch),
+        };
+        Ok(InferBatchOutput { outputs, exec_s: start.elapsed().as_secs_f64() })
+    }
 }
 
 #[cfg(test)]
@@ -286,6 +321,28 @@ mod tests {
         let a = single.infer(&inputs).unwrap();
         let b = cluster.infer(&inputs).unwrap();
         assert_eq!(a.outputs[0].data, b.outputs[0].data, "quant cluster diverged");
+    }
+
+    #[test]
+    fn infer_batch_matches_per_sample_infer() {
+        let g = Arc::new({
+            let mut b = GraphBuilder::new("batch_tiny");
+            let x = b.input("x", Shape::nchw(1, 4, 12, 12));
+            let c = b.conv_bn_relu("c", x, 16, 3, 1, 1);
+            let p = b.avgpool("p", c, 2, 2);
+            let f = b.fc("fc", p, 5);
+            b.output(f);
+            b.finish()
+        });
+        let e = Engine::interp(g.clone());
+        let batch: Vec<Vec<Tensor>> =
+            (0..3).map(|s| crate::ops::interp::synthetic_inputs(&g, 50 + s)).collect();
+        let out = e.infer_batch(&batch).unwrap();
+        assert_eq!(out.outputs.len(), 3);
+        for (sample, outs) in batch.iter().zip(&out.outputs) {
+            let solo = e.infer(sample).unwrap();
+            assert_eq!(solo.outputs[0].data, outs[0].data);
+        }
     }
 
     #[test]

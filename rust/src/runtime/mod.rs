@@ -14,5 +14,5 @@ pub mod engine;
 pub mod pjrt;
 pub mod pool;
 
-pub use engine::{Engine, EngineKind};
+pub use engine::{Engine, EngineKind, InferBatchOutput, InferOutput};
 pub use pjrt::{Artifact, PjrtRuntime};

@@ -46,7 +46,9 @@ pub struct Response {
     pub outputs: Vec<Tensor>,
     /// End-to-end latency (submit → response), seconds.
     pub latency_s: f64,
-    /// Pure engine execution time, seconds.
+    /// Pure engine execution time for the **whole batch** this request
+    /// was served in, seconds (the batch is one engine call; divide by
+    /// `batch_size` for the per-sample amortized cost).
     pub exec_s: f64,
     /// Time queued before the batcher pulled the request, seconds.
     pub queue_s: f64,

@@ -1,0 +1,199 @@
+//! Differential suite for true batched execution: a batch of N samples
+//! must produce outputs **element-wise identical** to N independent
+//! single-sample runs, on every engine (serial interpreter, worker-pool
+//! plan executor, INT8 engine, local d-Xenos cluster) at both
+//! precisions — the batch dimension changes amortization, never
+//! arithmetic. The sync-amortization test pins the headline property:
+//! one cluster round (one set of collectives) per *batch*, not per
+//! *sample*.
+
+use std::sync::Arc;
+
+use xenos::dist::exec::ClusterDriver;
+use xenos::dist::{PartitionScheme, SyncMode};
+use xenos::graph::{Graph, GraphBuilder, Shape};
+use xenos::hw::presets;
+use xenos::ops::interp::synthetic_inputs;
+use xenos::ops::params::ParamStore;
+use xenos::ops::{Interpreter, ParInterpreter, Tensor};
+use xenos::quant::{CalibTable, QuantEngine};
+
+/// Small CNN covering dense/depthwise/pointwise convs, pooling, a
+/// stride-2 downsample, FC and softmax — the shapes that exercise halo
+/// exchange, OutC reassembly and partial-sum reduce-scatter.
+fn cnn() -> Graph {
+    let mut b = GraphBuilder::new("batched_cnn");
+    let x = b.input("x", Shape::nchw(1, 4, 16, 16));
+    let c1 = b.conv_bn_relu("c1", x, 16, 3, 1, 1);
+    let dw = b.dw_bn_relu("dw", c1, 3, 1, 1);
+    let pw = b.conv_bn_relu("pw", dw, 32, 1, 1, 0);
+    let mp = b.maxpool("mp", pw, 2, 2);
+    let c2 = b.conv("c2", mp, 16, 3, 2, 1);
+    let gp = b.global_pool("gp", c2);
+    let fc = b.fc("fc", gp, 10);
+    let sm = b.softmax("sm", fc);
+    b.output(sm);
+    b.finish()
+}
+
+fn batch_for(g: &Graph, n: usize, seed0: u64) -> Vec<Vec<Tensor>> {
+    (0..n).map(|s| synthetic_inputs(g, seed0 + s as u64)).collect()
+}
+
+fn assert_outputs_eq(want: &[Vec<Tensor>], got: &[Vec<Tensor>], label: &str) {
+    assert_eq!(want.len(), got.len(), "{label}: batch arity");
+    for (s, (w, g)) in want.iter().zip(got).enumerate() {
+        assert_eq!(w.len(), g.len(), "{label}: sample {s} output arity");
+        for (a, b) in w.iter().zip(g) {
+            assert_eq!(a.shape(), b.shape(), "{label}: sample {s} shape");
+            assert_eq!(a.data, b.data, "{label}: sample {s} diverged from solo run");
+        }
+    }
+}
+
+#[test]
+fn interp_batch_matches_single_runs() {
+    let g = cnn();
+    let batch = batch_for(&g, 5, 100);
+    let interp = Interpreter::new(&g);
+    let want: Vec<Vec<Tensor>> = batch.iter().map(|b| interp.run(b)).collect();
+    let got = interp.run_batch(&batch);
+    assert_outputs_eq(&want, &got, "interp");
+}
+
+#[test]
+fn par_interp_batch_matches_single_runs() {
+    let g = Arc::new(cnn());
+    let d = presets::tms320c6678();
+    let batch = batch_for(&g, 5, 200);
+    for workers in [1usize, 4] {
+        let par = ParInterpreter::new(g.clone(), &d, workers);
+        let want: Vec<Vec<Tensor>> = batch.iter().map(|b| par.run(b)).collect();
+        let got = par.run_batch(&batch);
+        assert_outputs_eq(&want, &got, &format!("par x{workers}"));
+    }
+}
+
+#[test]
+fn quant_batch_matches_single_runs() {
+    let g = Arc::new(cnn());
+    let params = ParamStore::for_graph(&g);
+    let calib = CalibTable::synthetic(&g, &params, 3, 7);
+    let batch = batch_for(&g, 5, 300);
+    for threads in [1usize, 4] {
+        let q = QuantEngine::new(g.clone(), &calib, threads).expect("quant engine");
+        let want: Vec<Vec<Tensor>> = batch.iter().map(|b| q.run(b)).collect();
+        let got = q.run_batch(&batch);
+        assert_outputs_eq(&want, &got, &format!("quant x{threads}"));
+    }
+}
+
+#[test]
+fn cluster_batch_matches_single_runs_f32() {
+    let g = Arc::new(cnn());
+    let d = presets::tms320c6678();
+    let batch = batch_for(&g, 3, 400);
+    for scheme in [
+        PartitionScheme::OutC,
+        PartitionScheme::InH,
+        PartitionScheme::InW,
+        PartitionScheme::Mix,
+    ] {
+        for sync in [SyncMode::Ring, SyncMode::Ps] {
+            let driver = ClusterDriver::local(g.clone(), &d, 2, scheme, sync, 1)
+                .expect("cluster spins up");
+            let want: Vec<Vec<Tensor>> =
+                batch.iter().map(|b| driver.infer(b).expect("solo round")).collect();
+            let got = driver.infer_batch(&batch).expect("batched round");
+            assert_outputs_eq(&want, &got, &format!("cluster {scheme:?}/{sync:?}"));
+        }
+    }
+}
+
+#[test]
+fn cluster_batch_matches_single_runs_int8() {
+    let g = Arc::new(cnn());
+    let d = presets::tms320c6678();
+    let params = ParamStore::for_graph(&g);
+    let calib = CalibTable::synthetic(&g, &params, 3, 7);
+    let batch = batch_for(&g, 3, 500);
+    for scheme in [PartitionScheme::OutC, PartitionScheme::InH, PartitionScheme::Mix] {
+        for sync in [SyncMode::Ring, SyncMode::Ps] {
+            let driver =
+                ClusterDriver::local_q8(g.clone(), &d, 2, scheme, sync, 1, &calib)
+                    .expect("int8 cluster spins up");
+            let want: Vec<Vec<Tensor>> =
+                batch.iter().map(|b| driver.infer(b).expect("solo round")).collect();
+            let got = driver.infer_batch(&batch).expect("batched round");
+            assert_outputs_eq(&want, &got, &format!("q8 cluster {scheme:?}/{sync:?}"));
+        }
+    }
+}
+
+/// The amortization headline: N samples in one batched round cost ONE
+/// round of collectives, so rank 0's sync counters after `infer_batch`
+/// of 8 are exactly 1/8 of eight sequential `infer` calls.
+#[test]
+fn batched_round_amortizes_sync_by_batch_size() {
+    const N: usize = 8;
+    let g = Arc::new(cnn());
+    let d = presets::tms320c6678();
+    let batch = batch_for(&g, N, 600);
+
+    let solo = ClusterDriver::local(g.clone(), &d, 2, PartitionScheme::Mix, SyncMode::Ring, 1)
+        .expect("cluster spins up");
+    for sample in &batch {
+        solo.infer(sample).expect("solo round");
+    }
+    let s = solo.sync_stats().expect("local stats");
+
+    let batched =
+        ClusterDriver::local(g.clone(), &d, 2, PartitionScheme::Mix, SyncMode::Ring, 1)
+            .expect("cluster spins up");
+    let out = batched.infer_batch(&batch).expect("batched round");
+    assert_eq!(out.len(), N);
+    let b = batched.sync_stats().expect("local stats");
+
+    assert_eq!(s.rounds, N as u64, "sequential baseline runs one round per sample");
+    assert_eq!(b.rounds, 1, "the whole batch is one round");
+    assert_eq!(s.all_gathers, N as u64 * b.all_gathers, "all-gathers amortize by N");
+    assert_eq!(
+        s.halo_exchanges,
+        N as u64 * b.halo_exchanges,
+        "halo exchanges amortize by N"
+    );
+    assert_eq!(
+        s.reduce_scatters,
+        N as u64 * b.reduce_scatters,
+        "reduce-scatters amortize by N"
+    );
+    // The batched round moves the same activations — just in N-sample
+    // frames — so bytes are equal, not divided.
+    assert_eq!(s.sync_bytes, b.sync_bytes, "payload bytes are batch-invariant");
+}
+
+/// Regression: consecutive batched calls reuse the (deepened) buffer
+/// arena; reuse across the batch boundary must not corrupt outputs.
+#[test]
+fn arena_reuse_across_batched_calls_stays_bit_exact() {
+    let g = Arc::new(cnn());
+    let d = presets::tms320c6678();
+    let par = ParInterpreter::new(g.clone(), &d, 4);
+    let b1 = batch_for(&g, 4, 700);
+    let b2 = batch_for(&g, 4, 800);
+    // Solo references computed first so the arena state at the time of
+    // the batched calls differs from a fresh engine — the reuse path.
+    let want1: Vec<Vec<Tensor>> = b1.iter().map(|b| par.run(b)).collect();
+    let want2: Vec<Vec<Tensor>> = b2.iter().map(|b| par.run(b)).collect();
+    let got1 = par.run_batch(&b1);
+    let got2 = par.run_batch(&b2);
+    assert_outputs_eq(&want1, &got1, "arena reuse: first batch");
+    assert_outputs_eq(&want2, &got2, "arena reuse: second batch");
+    // And interleaved solo/batched calls on the same engine agree too.
+    let solo_again = par.run(&b2[0]);
+    assert_outputs_eq(
+        &[want2[0].clone()],
+        &[solo_again],
+        "arena reuse: solo after batches",
+    );
+}
