@@ -1,7 +1,8 @@
 //! Serving load benchmark — the coordinator under a sustained synthetic
 //! request stream, reported per stage: queue wait, batch assembly, engine
 //! execution, and end-to-end latency, for the serial and the parallel
-//! zoo-model engines.
+//! zoo-model engines; plus the TCP ingest front door priced over
+//! loopback, including the load-shedding path under deliberate overload.
 //!
 //! Pass `--out BENCH_serve.json` (after `cargo bench -- `) or set
 //! `BENCH_OUT` to also write the machine-readable suite document
@@ -13,7 +14,8 @@ use xenos::graph::{GraphBuilder, Shape};
 use xenos::hw::presets;
 use xenos::runtime::Engine;
 use xenos::serve::{
-    coordinator::synthetic_requests, BatcherConfig, Coordinator, ServeConfig, ServeReport,
+    client::drive_load, coordinator::synthetic_requests, BatcherConfig, Coordinator, IngestConfig,
+    IngestServer, ModelRegistry, ServeConfig, ServeReport,
 };
 use xenos::util::bench::BenchSet;
 use xenos::util::human_time;
@@ -139,6 +141,88 @@ fn main() {
         set.push(&format!("serve[batch {batch}]: per-sample latency"), report.latency);
         set.push(&format!("serve[batch {batch}]: per-sample exec"), exec);
         set.push(&format!("serve[batch {batch}]: sample time"), sample_time);
+    }
+
+    // The same block behind the TCP front door: a full loopback
+    // round-trip (encode → admission → batch → engine → decode) priced
+    // at batch 1 and batch 8. Closed-loop lanes stay under the default
+    // admission bound, so nothing sheds here.
+    for (label, max_batch, lanes) in [("batch 1", 1usize, 2usize), ("batch 8", 8, 16)] {
+        let mut registry = ModelRegistry::new();
+        let gg = g.clone();
+        registry.register(
+            "bench",
+            shapes.clone(),
+            2,
+            BatcherConfig { max_batch, max_wait: std::time::Duration::from_millis(1) },
+            move |_w| Ok(Engine::interp(gg.clone())),
+        );
+        let mut server = IngestServer::start("127.0.0.1:0", registry, IngestConfig::default())
+            .expect("ingest server");
+        let report = drive_load(
+            &server.local_addr().to_string(),
+            "bench",
+            &shapes,
+            256,
+            lanes,
+            0,
+            std::time::Duration::from_secs(30),
+            9,
+        )
+        .expect("ingest load");
+        server.drain();
+        let latency = report.latency.expect("completed requests");
+        let sample_time =
+            Summary::of(&[report.wall_s / report.completed.max(1) as f64]).expect("one value");
+        println!(
+            "serve.ingest[{label}]: {}/{} completed at {:.1} req/s — latency p50 {}",
+            report.completed,
+            report.submitted,
+            report.completed as f64 / report.wall_s.max(1e-12),
+            human_time(latency.p50),
+        );
+        set.push(&format!("serve.ingest[{label}]: latency"), latency);
+        set.push(&format!("serve.ingest[{label}]: sample time"), sample_time);
+    }
+
+    // Queue-shed pricing: 8 closed-loop lanes against an admission bound
+    // of 4 — sustained 2× overload. `sample time` here is wall seconds
+    // per terminal decision (outputs AND busies), so a slow reject path
+    // reads as a regression even though sheds never touch an engine.
+    {
+        let mut registry = ModelRegistry::new();
+        let gg = g.clone();
+        registry.register(
+            "bench",
+            shapes.clone(),
+            1,
+            BatcherConfig { max_batch: 4, max_wait: std::time::Duration::from_millis(1) },
+            move |_w| Ok(Engine::interp(gg.clone())),
+        );
+        let cfg = IngestConfig { queue_depth: 4, ..IngestConfig::default() };
+        let mut server = IngestServer::start("127.0.0.1:0", registry, cfg).expect("ingest server");
+        let report = drive_load(
+            &server.local_addr().to_string(),
+            "bench",
+            &shapes,
+            256,
+            8,
+            0,
+            std::time::Duration::from_secs(30),
+            9,
+        )
+        .expect("ingest load");
+        server.drain();
+        let sample_time =
+            Summary::of(&[report.wall_s / report.submitted.max(1) as f64]).expect("one value");
+        println!(
+            "serve.ingest[shed 2x]: {} completed / {} shed of {} — {:.1} decisions/s",
+            report.completed,
+            report.shed,
+            report.submitted,
+            report.submitted as f64 / report.wall_s.max(1e-12),
+        );
+        set.push("serve.ingest[shed 2x]: sample time", sample_time);
     }
 
     if let Some(path) = out_path() {

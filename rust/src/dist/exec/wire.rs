@@ -205,6 +205,10 @@ impl Enc {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    pub(crate) fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
     pub(crate) fn str(&mut self, s: &str) {
         self.u32(s.len() as u32);
         self.buf.extend_from_slice(s.as_bytes());
@@ -238,6 +242,28 @@ impl<'a> Dec<'a> {
 
     pub(crate) fn u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    pub(crate) fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    /// Bytes left unread. Decoders use it to bound `with_capacity` calls
+    /// against hostile length claims: a count field can promise billions
+    /// of elements, but a payload of `remaining()` bytes cannot hold more
+    /// than `remaining() / size` of them, so pre-allocation never exceeds
+    /// what the frame could actually carry.
+    pub(crate) fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Consume and return everything left in the buffer — for payloads
+    /// whose final field is a nested, self-describing encoding (e.g. an
+    /// [`encode_tensors`] blob at the tail of an ingest request).
+    pub(crate) fn rest(&mut self) -> &'a [u8] {
+        let s = &self.buf[self.pos..];
+        self.pos = self.buf.len();
+        s
     }
 
     pub(crate) fn str(&mut self) -> Result<String> {
@@ -456,7 +482,9 @@ pub(crate) fn encode_params(by_node: &[NodeParams]) -> Vec<u8> {
 pub(crate) fn decode_params(payload: &[u8]) -> Result<Vec<NodeParams>> {
     let mut d = Dec::new(payload);
     let n = d.u32()? as usize;
-    let mut out = Vec::with_capacity(n);
+    // An empty NodeParams still costs four length prefixes, so a payload
+    // of `remaining()` bytes bounds how many the claim can deliver.
+    let mut out = Vec::with_capacity(n.min(d.remaining() / 16 + 1));
     for _ in 0..n {
         out.push(NodeParams {
             w: d.f32s()?,
@@ -487,23 +515,34 @@ pub(crate) fn encode_tensors(ts: &[Tensor]) -> Vec<u8> {
 pub(crate) fn decode_tensors(payload: &[u8]) -> Result<Vec<Tensor>> {
     let mut d = Dec::new(payload);
     let n = d.u32()? as usize;
-    let mut out = Vec::with_capacity(n);
+    // Bound pre-allocation by what the payload could actually hold (a
+    // rank-0 tensor is still 8 bytes): the ingest front door feeds this
+    // decoder untrusted sockets, where a hostile count claim must fail
+    // with a truncation error, not an allocation.
+    let mut out = Vec::with_capacity(n.min(d.remaining() / 8 + 1));
     for _ in 0..n {
         let rank = d.u32()? as usize;
-        let mut dims = Vec::with_capacity(rank);
+        let mut dims = Vec::with_capacity(rank.min(d.remaining() / 4 + 1));
         for _ in 0..rank {
             dims.push(d.u32()? as usize);
         }
         let data = d.f32s()?;
+        // Checked product: hostile dims can overflow the element count,
+        // which `Shape::numel`'s unchecked product would turn into a
+        // debug-build panic instead of a typed error.
+        let numel = match dims.iter().try_fold(1usize, |acc, &v| acc.checked_mul(v)) {
+            Some(numel) => numel,
+            None => bail!("tensor shape overflows element count"),
+        };
+        if numel != data.len() {
+            bail!("tensor payload length {} does not match shape", data.len());
+        }
         let shape = Shape::new(dims);
         let desc = if shape.is_fm() {
             TensorDesc::fm(shape.dims[0], shape.dims[1], shape.dims[2], shape.dims[3])
         } else {
             TensorDesc::plain(shape)
         };
-        if desc.shape.numel() != data.len() {
-            bail!("tensor payload length {} does not match shape", data.len());
-        }
         out.push(Tensor::new(desc, data));
     }
     Ok(out)
@@ -526,7 +565,10 @@ pub(crate) fn encode_tensor_batch(batch: &[&[Tensor]]) -> Vec<u8> {
 pub(crate) fn decode_tensor_batch(payload: &[u8]) -> Result<Vec<Vec<Tensor>>> {
     let mut d = Dec::new(payload);
     let nbatch = d.u32()? as usize;
-    let mut out = Vec::with_capacity(nbatch);
+    // Same hostile-length-claim bound as `decode_tensors`: each lane costs
+    // at least a four-byte tensor count, so `remaining() / 4` caps how many
+    // lanes the payload can really deliver.
+    let mut out = Vec::with_capacity(nbatch.min(d.remaining() / 4 + 1));
     for _ in 0..nbatch {
         let len = d.u32()? as usize;
         out.push(decode_tensors(d.bytes(len)?)?);

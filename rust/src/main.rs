@@ -5,6 +5,8 @@
 //! xenos run         --model mobilenet --device zcu102 --level xenos|ho|vanilla
 //! xenos serve       --artifacts artifacts --variant linked --requests 256 --workers 2 --batch 8
 //! xenos serve       --model mobilenet --engine par --precision int8
+//! xenos serve       --listen 127.0.0.1:7400 --model mobilenet,mn8=mobilenet:int8 --queue-depth 64
+//! xenos client      --connect 127.0.0.1:7400 --model mobilenet --requests 64 --concurrency 4
 //! xenos quantize    --model mobilenet --calib 8 --out mobilenet.qcal
 //! xenos dist        --model resnet101 --devices 4 --sync ring|ps --scheme mix|outc|inh|inw
 //! xenos dist-worker --listen 127.0.0.1:7001
@@ -55,6 +57,7 @@ fn dispatch(args: &Args) -> Result<()> {
         Some("optimize") => cmd_optimize(args),
         Some("run") => cmd_run(args),
         Some("serve") => cmd_serve(args),
+        Some("client") => cmd_client(args),
         Some("quantize") => cmd_quantize(args),
         Some("dist") => cmd_dist(args),
         Some("dist-worker") => cmd_dist_worker(args),
@@ -72,7 +75,7 @@ fn dispatch(args: &Args) -> Result<()> {
     }
 }
 
-const USAGE: &str = "usage: xenos <optimize|run|serve|quantize|dist|dist-worker|dist-run|profile|analyze|bench-diff|repro|inspect>
+const USAGE: &str = "usage: xenos <optimize|run|serve|client|quantize|dist|dist-worker|dist-run|profile|analyze|bench-diff|repro|inspect>
   optimize --model M --device D            run the automatic optimizer, print the plan
            (--search refines layouts; --measured-costs [--profile-db F] scores the
             search against profiled op times from `xenos analyze`)
@@ -82,6 +85,15 @@ const USAGE: &str = "usage: xenos <optimize|run|serve|quantize|dist|dist-worker|
            (par = multi-threaded DOS plan executor; cluster = d-Xenos shard workers,
             size with --cluster-devices P; --precision f32|int8 picks the numeric
             path — int8 calibrates with --calib N sets or loads --calib-file F)
+  serve    --listen ADDR --model name[=zoo][:precision][,...]   network front door:
+           one TCP listener, per-model engine pools (--workers W --threads T
+           --batch B --max-wait-ms MS), bounded admission (--queue-depth N,
+           overflow answered BUSY with a retry-after hint), per-request
+           deadlines, graceful drain; runs until killed
+  client   --connect HOST:PORT --model NAME [--graph ZOO] [--requests N]
+           [--concurrency C] [--deadline-ms D] [--seed S]   closed-loop load
+           driver against `serve --listen`; prints the terminal-frame tally
+           and completed-request latency percentiles
   quantize --model M --calib N [--out F]   calibrate INT8 scales, write the table,
            print the precision plan and the int8-vs-f32 error on a probe input
   dist     --model M --devices P --sync ring|ps --scheme mix|outc|inh|inw   (simulator)
@@ -255,6 +267,39 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let batch = args.get_parse("batch", 8usize);
     let rate = args.get_parse("rate", 0.0f64);
 
+    // Network front door: bind the listener, build the per-model engine
+    // pools, and serve until the process is killed (drain on clean drops).
+    if let Some(listen) = args.get("listen") {
+        let specs = args
+            .get("model")
+            .context("serve --listen needs --model name[=zoo][:precision][,...]")?;
+        let threads = args.get_parse("threads", 1usize);
+        let batcher = serve::BatcherConfig {
+            max_batch: batch,
+            max_wait: std::time::Duration::from_millis(args.get_parse("max-wait-ms", 2u64)),
+        };
+        let mut registry = serve::ModelRegistry::new();
+        for spec in specs.split(',').filter(|s| !s.is_empty()) {
+            registry.register_spec(spec, threads, workers, batcher)?;
+        }
+        let cfg = serve::IngestConfig {
+            queue_depth: args.get_parse("queue-depth", 64usize),
+            read_timeout: std::time::Duration::from_millis(
+                args.get_parse("read-timeout-ms", 30_000u64),
+            ),
+        };
+        let names = registry.names().join(", ");
+        let server = serve::IngestServer::start(listen, registry, cfg)?;
+        println!(
+            "ingest: serving [{names}] on {} ({workers} workers x {threads} threads per model, batch {batch}, queue depth {})",
+            server.local_addr(),
+            cfg.queue_depth
+        );
+        loop {
+            std::thread::park();
+        }
+    }
+
     // Zoo-model serving through the numeric backends (no artifacts needed):
     // --engine par runs the DOS plan on a worker pool per engine;
     // --precision int8 swaps in the quantized engines (calibrated once,
@@ -380,6 +425,52 @@ fn cmd_serve(args: &Args) -> Result<()> {
     print_serve_stats(&report);
     if let Some(path) = args.get("metrics-out") {
         write_json(path, &xenos::obs::metrics::snapshot())?;
+    }
+    Ok(())
+}
+
+fn cmd_client(args: &Args) -> Result<()> {
+    let addr = args.get("connect").context("client needs --connect HOST:PORT")?;
+    let model = args.get_or("model", "mobilenet").to_string();
+    // The client regenerates request inputs locally, so it needs the
+    // graph's input shapes; --graph overrides when the served name is an
+    // alias (e.g. `mn8=mobilenet:int8` serves `mn8` from the mobilenet
+    // graph).
+    let zoo = args.get_or("graph", &model);
+    let g = models::by_name(zoo)
+        .with_context(|| format!("unknown zoo model {zoo} (pass --graph for aliased names)"))?;
+    let shapes: Vec<xenos::graph::Shape> =
+        g.input_ids().iter().map(|&i| g.node(i).out.shape.clone()).collect();
+    let n = args.get_parse("requests", 16usize);
+    let lanes = args.get_parse("concurrency", 2usize);
+    let deadline_ms = args.get_parse("deadline-ms", 0u32);
+    let timeout =
+        std::time::Duration::from_millis(args.get_parse("read-timeout-ms", 30_000u64));
+    let seed = args.get_parse("seed", 42u64);
+    let report =
+        serve::client::drive_load(addr, &model, &shapes, n, lanes, deadline_ms, timeout, seed)?;
+    println!(
+        "client: {} submitted -> {} completed, {} shed, {} expired, {} errors in {:.2}s ({:.1} req/s)",
+        report.submitted,
+        report.completed,
+        report.shed,
+        report.expired,
+        report.errors,
+        report.wall_s,
+        report.completed as f64 / report.wall_s.max(1e-9)
+    );
+    if let Some(l) = &report.latency {
+        println!(
+            "latency mean {} p50 {} p90 {} p99 {} max {}",
+            human_time(l.mean),
+            human_time(l.p50),
+            human_time(l.p90),
+            human_time(l.p99),
+            human_time(l.max),
+        );
+    }
+    if report.completed == 0 {
+        bail!("no requests completed");
     }
     Ok(())
 }

@@ -12,6 +12,9 @@
 //! * `cluster.faults.*` — fault-tolerance counters
 //! * `quant.*` — INT8 engine counters (snap round-trips)
 //! * `serve.*` — serving-tier stage histograms and throughput
+//! * `serve.ingest.*` — front-door admission accounting: `accepted`,
+//!   `shed`, and `expired` counters, the live `queue_depth` gauge, and
+//!   the end-to-end `latency_s` histogram (p99 via snapshot)
 //! * `profile.*` — per-category time from the span recorder
 
 use std::collections::BTreeMap;

@@ -24,18 +24,20 @@ impl Default for BatcherConfig {
 
 /// A formed batch: the requests plus the assembly-window timestamps, so
 /// the serving report can split queue wait from batch assembly per
-/// request.
+/// request. Generic over the queued item — the in-process coordinator
+/// batches [`Request`]s, the network front door batches its own job type
+/// carrying the reply socket and deadline.
 #[derive(Debug)]
-pub struct Batch {
+pub struct Batch<T = Request> {
     /// Requests in arrival order.
-    pub requests: Vec<Request>,
+    pub requests: Vec<T>,
     /// When the first request was pulled (the batch opened).
     pub opened: Instant,
     /// When the batch was closed (size cap or deadline reached).
     pub formed: Instant,
 }
 
-impl Batch {
+impl<T> Batch<T> {
     /// Number of requests in the batch.
     pub fn len(&self) -> usize {
         self.requests.len()
@@ -64,7 +66,7 @@ impl Batcher {
     /// Form the next batch. Blocks for the first request, then fills until
     /// `max_batch` or `max_wait`. Returns `None` once the channel is closed
     /// and drained.
-    pub fn next_batch(&self, rx: &Receiver<Request>) -> Option<Batch> {
+    pub fn next_batch<T>(&self, rx: &Receiver<T>) -> Option<Batch<T>> {
         let first = rx.recv().ok()?;
         let opened = Instant::now();
         let deadline = opened + self.cfg.max_wait;

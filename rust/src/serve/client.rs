@@ -1,0 +1,264 @@
+//! Frame-level client for the serving front door, plus a multi-lane load
+//! driver — the test suite, the ingest bench, and the `xenos client` verb
+//! all speak through this module so the protocol lives in one place.
+
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::dist::exec::wire::{read_frame, write_frame};
+use crate::graph::Shape;
+use crate::ops::Tensor;
+use crate::serve::ingest::{self, ErrorCode, InferRequest};
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+
+/// The one terminal frame every request is answered with.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Terminal {
+    /// The request ran; outputs plus the batch size it was served in.
+    Output {
+        /// Echoed request id.
+        id: u64,
+        /// Batch size the request executed in.
+        batch_size: u32,
+        /// Model outputs.
+        outputs: Vec<Tensor>,
+    },
+    /// The request was shed at a full admission queue.
+    Busy {
+        /// Echoed request id.
+        id: u64,
+        /// Server's estimate of when a slot frees, milliseconds.
+        retry_after_ms: u32,
+    },
+    /// The request failed with a typed error.
+    Error {
+        /// Echoed request id (0 when the request was undecodable).
+        id: u64,
+        /// Failure class.
+        code: ErrorCode,
+        /// Human-readable detail.
+        message: String,
+    },
+}
+
+impl Terminal {
+    /// The echoed request id.
+    pub fn id(&self) -> u64 {
+        match self {
+            Terminal::Output { id, .. } | Terminal::Busy { id, .. } | Terminal::Error { id, .. } => {
+                *id
+            }
+        }
+    }
+}
+
+/// One connection to an [`crate::serve::server::IngestServer`]. Requests
+/// may be pipelined: [`send`](IngestClient::send) any number, then
+/// [`recv`](IngestClient::recv) the terminals (the server answers sheds
+/// immediately and outputs as batches complete, so terminal order is not
+/// submission order — match on [`Terminal::id`]).
+pub struct IngestClient {
+    stream: TcpStream,
+}
+
+impl IngestClient {
+    /// Connect; `read_timeout` bounds how long [`recv`](IngestClient::recv)
+    /// blocks (`None` = forever).
+    pub fn connect(addr: &str, read_timeout: Option<Duration>) -> Result<IngestClient> {
+        let stream = TcpStream::connect(addr).with_context(|| format!("connect {addr}"))?;
+        stream.set_nodelay(true).context("set_nodelay")?;
+        stream.set_read_timeout(read_timeout).context("set_read_timeout")?;
+        Ok(IngestClient { stream })
+    }
+
+    /// Send one request frame.
+    pub fn send(&mut self, req: &InferRequest) -> Result<()> {
+        write_frame(&mut self.stream, ingest::REQ_INFER, &ingest::encode_request(req))
+            .context("send request")?;
+        Ok(())
+    }
+
+    /// Receive the next terminal frame.
+    pub fn recv(&mut self) -> Result<Terminal> {
+        let (tag, payload) = read_frame(&mut self.stream).context("read terminal")?;
+        match tag {
+            ingest::RESP_OUTPUT => {
+                let (id, batch_size, outputs) = ingest::decode_output(&payload)?;
+                Ok(Terminal::Output { id, batch_size, outputs })
+            }
+            ingest::RESP_BUSY => {
+                let (id, retry_after_ms) = ingest::decode_busy(&payload)?;
+                Ok(Terminal::Busy { id, retry_after_ms })
+            }
+            ingest::RESP_ERROR => {
+                let (id, code, message) = ingest::decode_error(&payload)?;
+                Ok(Terminal::Error { id, code, message })
+            }
+            other => bail!("unexpected terminal tag {other:#x}"),
+        }
+    }
+
+    /// Send one request and block for its terminal.
+    pub fn infer(&mut self, req: &InferRequest) -> Result<Terminal> {
+        self.send(req)?;
+        self.recv()
+    }
+}
+
+/// What a [`drive_load`] run saw, lane totals merged.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    /// Requests sent.
+    pub submitted: u64,
+    /// Output terminals.
+    pub completed: u64,
+    /// Busy terminals.
+    pub shed: u64,
+    /// Expired-error terminals.
+    pub expired: u64,
+    /// Other error terminals (engine, protocol).
+    pub errors: u64,
+    /// Latency of completed requests (send → output), seconds.
+    pub latency: Option<Summary>,
+    /// Wall-clock of the whole run, seconds.
+    pub wall_s: f64,
+}
+
+/// Seeded synthetic inputs for request `id` — byte-for-byte reproducible,
+/// so differential tests can regenerate exactly what a lane sent. Descs
+/// follow the wire's reconstruction rule (rank-4 shapes become NCHW
+/// feature maps): a request built here decodes server-side to tensors
+/// identical to these, so served outputs compare bit-exact against a
+/// direct `Engine::infer` on the same values.
+pub fn synthetic_request_inputs(shapes: &[Shape], seed: u64, id: u64) -> Vec<Tensor> {
+    use crate::graph::TensorDesc;
+    let mut rng = Rng::new(seed ^ id.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    shapes
+        .iter()
+        .map(|s| {
+            let desc = if s.is_fm() {
+                TensorDesc::fm(s.dims[0], s.dims[1], s.dims[2], s.dims[3])
+            } else {
+                TensorDesc::plain(s.clone())
+            };
+            let data = rng.vec_uniform(s.numel());
+            Tensor::new(desc, data)
+        })
+        .collect()
+}
+
+/// Closed-loop load driver: `lanes` connections, one request in flight
+/// per lane, `n` requests total (lane `l` sends ids `l, l+lanes, …`).
+/// Every terminal is tallied; a lane that loses its connection reports
+/// the remainder of its ids as errors rather than under-counting.
+#[allow(clippy::too_many_arguments)]
+pub fn drive_load(
+    addr: &str,
+    model: &str,
+    shapes: &[Shape],
+    n: usize,
+    lanes: usize,
+    deadline_ms: u32,
+    read_timeout: Duration,
+    seed: u64,
+) -> Result<LoadReport> {
+    assert!(lanes >= 1, "lanes must be >= 1");
+
+    #[derive(Default)]
+    struct LaneTally {
+        completed: u64,
+        shed: u64,
+        expired: u64,
+        errors: u64,
+        latencies: Vec<f64>,
+    }
+
+    let start = Instant::now();
+    let mut tallies: Vec<Result<LaneTally>> = Vec::with_capacity(lanes);
+    std::thread::scope(|scope| {
+        let mut handles = Vec::with_capacity(lanes);
+        for lane in 0..lanes {
+            handles.push(scope.spawn(move || -> Result<LaneTally> {
+                let mut client = IngestClient::connect(addr, Some(read_timeout))?;
+                let mut t = LaneTally::default();
+                let mut id = lane as u64;
+                while (id as usize) < n {
+                    let inputs = synthetic_request_inputs(shapes, seed, id);
+                    let req =
+                        InferRequest { id, model: model.to_string(), deadline_ms, inputs };
+                    let sent = Instant::now();
+                    match client.infer(&req) {
+                        Ok(Terminal::Output { .. }) => {
+                            t.completed += 1;
+                            t.latencies.push(sent.elapsed().as_secs_f64());
+                        }
+                        Ok(Terminal::Busy { .. }) => t.shed += 1,
+                        Ok(Terminal::Error { code: ErrorCode::Expired, .. }) => t.expired += 1,
+                        Ok(Terminal::Error { .. }) => t.errors += 1,
+                        Err(_) => {
+                            // Connection lost: account every remaining id
+                            // so the report still sums to `n`.
+                            t.errors += crate::util::ceil_div(n - id as usize, lanes) as u64;
+                            break;
+                        }
+                    }
+                    id += lanes as u64;
+                }
+                Ok(t)
+            }));
+        }
+        for h in handles {
+            tallies.push(
+                h.join().unwrap_or_else(|_| Err(anyhow::anyhow!("load lane panicked"))),
+            );
+        }
+    });
+
+    let mut total = LaneTally::default();
+    for t in tallies {
+        let t = t?;
+        total.completed += t.completed;
+        total.shed += t.shed;
+        total.expired += t.expired;
+        total.errors += t.errors;
+        total.latencies.extend(t.latencies);
+    }
+    Ok(LoadReport {
+        submitted: n as u64,
+        completed: total.completed,
+        shed: total.shed,
+        expired: total.expired,
+        errors: total.errors,
+        latency: Summary::of(&total.latencies),
+        wall_s: start.elapsed().as_secs_f64(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn terminal_id_covers_all_variants() {
+        let o = Terminal::Output { id: 1, batch_size: 1, outputs: Vec::new() };
+        let b = Terminal::Busy { id: 2, retry_after_ms: 5 };
+        let e = Terminal::Error { id: 3, code: ErrorCode::Engine, message: String::new() };
+        assert_eq!(o.id(), 1);
+        assert_eq!(b.id(), 2);
+        assert_eq!(e.id(), 3);
+    }
+
+    #[test]
+    fn synthetic_inputs_deterministic() {
+        let shapes = vec![Shape::new(vec![2, 3])];
+        let a = synthetic_request_inputs(&shapes, 7, 42);
+        let b = synthetic_request_inputs(&shapes, 7, 42);
+        let c = synthetic_request_inputs(&shapes, 7, 43);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        assert_eq!(a[0].shape().dims, vec![2, 3]);
+    }
+}

@@ -196,15 +196,18 @@ impl Coordinator {
             let route_counts = outstanding.clone();
             let formed_count = batches_formed.clone();
             let dispatcher = scope.spawn(move || {
+                let mut rotation = 0usize;
                 while let Some(batch) = batcher.next_batch(&req_rx) {
                     formed_count.fetch_add(1, Ordering::Relaxed);
                     // Route to the worker with the fewest in-flight
-                    // batches (ties go to the lowest rank): a worker stuck
-                    // on a slow batch stops accumulating queue, unlike
-                    // round-robin which keeps feeding it blindly.
-                    let w = (0..n_workers)
-                        .min_by_key(|&i| route_counts[i].load(Ordering::Relaxed))
-                        .expect("at least one worker");
+                    // batches: a worker stuck on a slow batch stops
+                    // accumulating queue, unlike round-robin which keeps
+                    // feeding it blindly. Ties rotate — breaking them by
+                    // lowest rank would permanently starve higher-rank
+                    // workers at low load, where every dispatch sees all
+                    // counts at zero.
+                    let w = super::pick_least_loaded(&route_counts[..], rotation);
+                    rotation = rotation.wrapping_add(1);
                     route_counts[w].fetch_add(1, Ordering::Relaxed);
                     if worker_txs[w].send(batch).is_err() {
                         break;

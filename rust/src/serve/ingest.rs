@@ -1,0 +1,255 @@
+//! Wire format of the serving front door.
+//!
+//! Clients talk to [`crate::serve::server::IngestServer`] over the same
+//! `[tag u64][len u32][payload]` little-endian framing the cluster
+//! protocol uses ([`crate::dist::exec::wire`]), under four new tags in a
+//! range disjoint from the `CTRL_*` block. A connection carries any
+//! number of pipelined requests; every request is answered by **exactly
+//! one** terminal frame — output, error, or busy — matched by the echoed
+//! request id. Frames never interleave mid-frame, so one reader thread
+//! per connection suffices on both sides.
+//!
+//! All decoders return typed errors on malformed input — never panic,
+//! never allocate more than the payload could actually deliver — because
+//! this layer fronts untrusted sockets.
+
+use anyhow::{bail, Result};
+
+use crate::dist::exec::wire::{self, Dec, Enc};
+use crate::ops::Tensor;
+
+/// Client → server: one inference request ([`encode_request`]).
+pub const REQ_INFER: u64 = 0xFFFF_0101;
+/// Server → client: the request's outputs ([`encode_output`]).
+pub const RESP_OUTPUT: u64 = 0xFFFF_0102;
+/// Server → client: the request failed ([`encode_error`]); the code says
+/// whether the connection survives (engine/expiry errors do, protocol
+/// errors kill it).
+pub const RESP_ERROR: u64 = 0xFFFF_0103;
+/// Server → client: load-shed — the admission queue was full; payload
+/// carries a retry-after hint ([`encode_busy`]).
+pub const RESP_BUSY: u64 = 0xFFFF_0104;
+
+/// Why a request got a [`RESP_ERROR`] terminal instead of outputs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The request's deadline passed before an engine picked it up; the
+    /// work was dropped without spending an engine slot.
+    Expired,
+    /// The request named a model the registry doesn't host.
+    UnknownModel,
+    /// The engine itself failed while executing the batch.
+    Engine,
+    /// The request was malformed (undecodable payload, wrong input
+    /// shapes); the server closes the connection after answering.
+    BadRequest,
+}
+
+impl ErrorCode {
+    /// Wire representation.
+    pub fn code(self) -> u32 {
+        match self {
+            ErrorCode::Expired => 1,
+            ErrorCode::UnknownModel => 2,
+            ErrorCode::Engine => 3,
+            ErrorCode::BadRequest => 4,
+        }
+    }
+
+    /// Parse the wire representation.
+    pub fn from_code(v: u32) -> Option<ErrorCode> {
+        match v {
+            1 => Some(ErrorCode::Expired),
+            2 => Some(ErrorCode::UnknownModel),
+            3 => Some(ErrorCode::Engine),
+            4 => Some(ErrorCode::BadRequest),
+            _ => None,
+        }
+    }
+
+    /// Human-readable label (stats lines, log messages).
+    pub fn label(self) -> &'static str {
+        match self {
+            ErrorCode::Expired => "expired",
+            ErrorCode::UnknownModel => "unknown-model",
+            ErrorCode::Engine => "engine",
+            ErrorCode::BadRequest => "bad-request",
+        }
+    }
+}
+
+/// One decoded [`REQ_INFER`] payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct InferRequest {
+    /// Caller-assigned id, echoed on the terminal frame. Uniqueness is
+    /// the caller's problem; the server never inspects it beyond echoing.
+    pub id: u64,
+    /// Registry name of the model to run.
+    pub model: String,
+    /// Milliseconds the caller is willing to wait before the server may
+    /// drop the request unexecuted (`0` = no deadline). Measured from
+    /// server-side arrival, so clock skew never expires work in flight.
+    pub deadline_ms: u32,
+    /// Model inputs, one tensor per graph input.
+    pub inputs: Vec<Tensor>,
+}
+
+/// Encode a [`REQ_INFER`] payload.
+pub fn encode_request(req: &InferRequest) -> Vec<u8> {
+    let mut e = Enc { buf: Vec::new() };
+    e.u64(req.id);
+    e.str(&req.model);
+    e.u32(req.deadline_ms);
+    e.buf.extend_from_slice(&wire::encode_tensors(&req.inputs));
+    e.buf
+}
+
+/// Decode a [`REQ_INFER`] payload.
+pub fn decode_request(payload: &[u8]) -> Result<InferRequest> {
+    let mut d = Dec::new(payload);
+    let id = d.u64()?;
+    let model = d.str()?;
+    let deadline_ms = d.u32()?;
+    let inputs = wire::decode_tensors(d.rest())?;
+    Ok(InferRequest { id, model, deadline_ms, inputs })
+}
+
+/// Encode a [`RESP_OUTPUT`] payload: the echoed id, the batch size the
+/// request was served in (observability; amortized-cost math), and the
+/// output tensors.
+pub fn encode_output(id: u64, batch_size: u32, outputs: &[Tensor]) -> Vec<u8> {
+    let mut e = Enc { buf: Vec::new() };
+    e.u64(id);
+    e.u32(batch_size);
+    e.buf.extend_from_slice(&wire::encode_tensors(outputs));
+    e.buf
+}
+
+/// Decode a [`RESP_OUTPUT`] payload → `(id, batch_size, outputs)`.
+pub fn decode_output(payload: &[u8]) -> Result<(u64, u32, Vec<Tensor>)> {
+    let mut d = Dec::new(payload);
+    let id = d.u64()?;
+    let batch_size = d.u32()?;
+    let outputs = wire::decode_tensors(d.rest())?;
+    Ok((id, batch_size, outputs))
+}
+
+/// Encode a [`RESP_ERROR`] payload.
+pub fn encode_error(id: u64, code: ErrorCode, message: &str) -> Vec<u8> {
+    let mut e = Enc { buf: Vec::new() };
+    e.u64(id);
+    e.u32(code.code());
+    e.str(message);
+    e.buf
+}
+
+/// Decode a [`RESP_ERROR`] payload → `(id, code, message)`.
+pub fn decode_error(payload: &[u8]) -> Result<(u64, ErrorCode, String)> {
+    let mut d = Dec::new(payload);
+    let id = d.u64()?;
+    let raw = d.u32()?;
+    let Some(code) = ErrorCode::from_code(raw) else {
+        bail!("unknown ingest error code {raw}");
+    };
+    let message = d.str()?;
+    Ok((id, code, message))
+}
+
+/// Encode a [`RESP_BUSY`] payload: the echoed id and a retry-after hint
+/// in milliseconds (the server's estimate of when a slot frees up).
+pub fn encode_busy(id: u64, retry_after_ms: u32) -> Vec<u8> {
+    let mut e = Enc { buf: Vec::new() };
+    e.u64(id);
+    e.u32(retry_after_ms);
+    e.buf
+}
+
+/// Decode a [`RESP_BUSY`] payload → `(id, retry_after_ms)`.
+pub fn decode_busy(payload: &[u8]) -> Result<(u64, u32)> {
+    let mut d = Dec::new(payload);
+    let id = d.u64()?;
+    let retry_after_ms = d.u32()?;
+    Ok((id, retry_after_ms))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Shape, TensorDesc};
+
+    fn sample_request() -> InferRequest {
+        InferRequest {
+            id: 7,
+            model: "mobilenet".into(),
+            deadline_ms: 250,
+            inputs: vec![
+                Tensor::fm(1, 2, 2, 2, (0..8).map(|v| v as f32).collect()),
+                Tensor::new(TensorDesc::plain(Shape::new(vec![3])), vec![1.0, -2.0, 0.5]),
+            ],
+        }
+    }
+
+    #[test]
+    fn request_round_trips() {
+        let req = sample_request();
+        let back = decode_request(&encode_request(&req)).unwrap();
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn output_round_trips() {
+        let outs = vec![Tensor::mat(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0])];
+        let (id, bs, back) = decode_output(&encode_output(42, 8, &outs)).unwrap();
+        assert_eq!(id, 42);
+        assert_eq!(bs, 8);
+        assert_eq!(back, outs);
+    }
+
+    #[test]
+    fn error_round_trips() {
+        let payload = encode_error(9, ErrorCode::UnknownModel, "no such model: zeta");
+        let (id, code, msg) = decode_error(&payload).unwrap();
+        assert_eq!(id, 9);
+        assert_eq!(code, ErrorCode::UnknownModel);
+        assert_eq!(msg, "no such model: zeta");
+    }
+
+    #[test]
+    fn busy_round_trips() {
+        let (id, retry) = decode_busy(&encode_busy(3, 17)).unwrap();
+        assert_eq!(id, 3);
+        assert_eq!(retry, 17);
+    }
+
+    #[test]
+    fn truncated_request_is_typed_error() {
+        let full = encode_request(&sample_request());
+        for cut in [0, 4, 9, full.len() - 1] {
+            let err = decode_request(&full[..cut]).unwrap_err();
+            assert!(err.to_string().contains("truncated"), "cut={cut}: {err}");
+        }
+    }
+
+    #[test]
+    fn unknown_error_code_rejected() {
+        let mut e = Enc { buf: Vec::new() };
+        e.u64(1);
+        e.u32(99);
+        e.str("?");
+        assert!(decode_error(&e.buf).is_err());
+    }
+
+    #[test]
+    fn error_codes_round_trip() {
+        for code in [
+            ErrorCode::Expired,
+            ErrorCode::UnknownModel,
+            ErrorCode::Engine,
+            ErrorCode::BadRequest,
+        ] {
+            assert_eq!(ErrorCode::from_code(code.code()), Some(code));
+        }
+        assert_eq!(ErrorCode::from_code(0), None);
+        assert_eq!(ErrorCode::from_code(5), None);
+    }
+}

@@ -14,16 +14,28 @@
 //!   (reproduces "the inference module takes over 60% of the overall
 //!   execution time").
 //! * [`coordinator`] — router + worker pool + metrics.
+//! * [`ingest`] — the TCP front door's wire format (request/output/
+//!   error/busy frames).
+//! * [`server`] — the network listener: multi-model registry, bounded
+//!   admission, load shedding, deadlines, graceful drain.
+//! * [`client`] — frame-level client + load driver for tests, benches,
+//!   and the `xenos client` verb.
 
 pub mod batcher;
+pub mod client;
 pub mod coordinator;
+pub mod ingest;
 pub mod pipeline;
+pub mod server;
 
 pub use batcher::{Batch, Batcher, BatcherConfig};
+pub use client::{IngestClient, LoadReport, Terminal};
 pub use coordinator::{Coordinator, ServeConfig, ServeReport};
 pub use pipeline::{run_pipeline, PipelineConfig, PipelineReport};
+pub use server::{IngestConfig, IngestServer, IngestStats, ModelRegistry};
 
 use crate::ops::Tensor;
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::time::Instant;
 
 /// One inference request.
@@ -58,4 +70,56 @@ pub struct Response {
     pub batch_size: usize,
     /// Worker that served it.
     pub worker: usize,
+}
+
+/// Index of the least-loaded worker, breaking ties by scanning from
+/// `rotate % counts.len()` — callers bump `rotate` every dispatch so that
+/// under low load (all counts equal) work round-robins instead of piling
+/// onto rank 0. Relaxed loads suffice: counts are advisory routing hints,
+/// not synchronization.
+pub(crate) fn pick_least_loaded(counts: &[AtomicUsize], rotate: usize) -> usize {
+    let n = counts.len();
+    assert!(n > 0, "at least one worker");
+    let start = rotate % n;
+    let mut best = start;
+    let mut best_load = counts[start].load(Ordering::Relaxed);
+    for off in 1..n {
+        let i = (start + off) % n;
+        let load = counts[i].load(Ordering::Relaxed);
+        if load < best_load {
+            best = i;
+            best_load = load;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tie_break_rotates() {
+        let counts: Vec<AtomicUsize> = (0..3).map(|_| AtomicUsize::new(0)).collect();
+        // All-zero counts: the pick must follow the rotation, not rank 0.
+        assert_eq!(pick_least_loaded(&counts, 0), 0);
+        assert_eq!(pick_least_loaded(&counts, 1), 1);
+        assert_eq!(pick_least_loaded(&counts, 2), 2);
+        assert_eq!(pick_least_loaded(&counts, 3), 0);
+    }
+
+    #[test]
+    fn lower_load_beats_rotation() {
+        let counts: Vec<AtomicUsize> = (0..3).map(|_| AtomicUsize::new(5)).collect();
+        counts[2].store(1, Ordering::Relaxed);
+        for rotate in 0..6 {
+            assert_eq!(pick_least_loaded(&counts, rotate), 2);
+        }
+    }
+
+    #[test]
+    fn equal_loads_tie_to_rotation_start() {
+        let counts: Vec<AtomicUsize> = (0..4).map(|_| AtomicUsize::new(7)).collect();
+        assert_eq!(pick_least_loaded(&counts, 6), 2);
+    }
 }

@@ -1,0 +1,754 @@
+//! The serving front door: one TCP listener, N named per-model engine
+//! pools, bounded admission with load shedding, per-request deadlines,
+//! and graceful drain.
+//!
+//! ```text
+//!            ┌────────────────────── IngestServer ──────────────────────┐
+//!  client ──>│ accept ──> reader (per conn) ──> admission ──> pool queue│
+//!            │              │  decode REQ_INFER     │             │     │
+//!            │              │  route by model      full?──BUSY    ▼     │
+//!            │              │  validate shapes                 batcher  │
+//!            │              └── BUSY/ERROR ◄──────────────────> workers │
+//!            │                                   OUTPUT/ERROR ◄──┘      │
+//!            └──────────────────────────────────────────────────────────┘
+//! ```
+//!
+//! **Admission** is token-based: a pool holds at most `queue_depth`
+//! requests anywhere between admission and terminal response. A request
+//! arriving at a full pool is answered [`ingest::RESP_BUSY`] immediately
+//! (with a retry-after hint derived from the pool's smoothed batch time)
+//! and never touches the queue — overload sheds at the door instead of
+//! growing an unbounded backlog. Every admitted request is answered by
+//! exactly one terminal frame, even through drain.
+//!
+//! **Deadlines** are measured from server-side arrival (`deadline_ms` on
+//! the request; 0 = none). Workers re-check just before execution and
+//! answer expired work with a typed error instead of spending an engine
+//! slot on it.
+//!
+//! **Drain** ([`IngestServer::drain`]) stops the listener (new connects
+//! are refused), closes the pool queues so workers finish everything
+//! already admitted, and joins all pool threads before returning.
+
+use std::collections::BTreeMap;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::dist::exec::wire::{read_frame, write_frame};
+use crate::graph::{models, Shape};
+use crate::hw::presets;
+use crate::obs::metrics;
+use crate::ops::params::ParamStore;
+use crate::ops::Tensor;
+use crate::quant::{CalibTable, Precision};
+use crate::runtime::Engine;
+use crate::serve::batcher::{Batcher, BatcherConfig};
+use crate::serve::ingest::{self, ErrorCode};
+
+/// Builds one worker's engine; called once per worker, in that worker's
+/// thread, with the worker index (engines need not be `Send`).
+pub type EngineFactory = Arc<dyn Fn(usize) -> Result<Engine> + Send + Sync>;
+
+struct ModelEntry {
+    factory: EngineFactory,
+    shapes: Vec<Shape>,
+    workers: usize,
+    batcher: BatcherConfig,
+}
+
+/// Named per-model serving configurations sharing one listener. Requests
+/// route by their model field; each model gets its own worker pool,
+/// admission queue, and batching policy.
+#[derive(Default)]
+pub struct ModelRegistry {
+    entries: BTreeMap<String, ModelEntry>,
+}
+
+impl ModelRegistry {
+    /// Empty registry.
+    pub fn new() -> ModelRegistry {
+        ModelRegistry::default()
+    }
+
+    /// Register a model under `name`: expected input shapes (requests are
+    /// validated against them at admission), worker count, batching
+    /// policy, and the per-worker engine factory.
+    pub fn register(
+        &mut self,
+        name: &str,
+        shapes: Vec<Shape>,
+        workers: usize,
+        batcher: BatcherConfig,
+        factory: impl Fn(usize) -> Result<Engine> + Send + Sync + 'static,
+    ) {
+        assert!(workers >= 1, "workers must be >= 1");
+        self.entries.insert(
+            name.to_string(),
+            ModelEntry { factory: Arc::new(factory), shapes, workers, batcher },
+        );
+    }
+
+    /// Register a model-zoo graph under its zoo name (or an alias): F32
+    /// runs the interpreter (parallel when `threads > 1`), INT8 runs the
+    /// quantized engine calibrated on synthetic data — the same matrix
+    /// `xenos serve` exposes for the in-process coordinator.
+    pub fn register_zoo(
+        &mut self,
+        name: &str,
+        zoo: &str,
+        precision: Precision,
+        threads: usize,
+        workers: usize,
+        batcher: BatcherConfig,
+    ) -> Result<()> {
+        let g = models::by_name(zoo).ok_or_else(|| anyhow!("unknown zoo model: {zoo}"))?;
+        let shapes = Engine::interp(Arc::new(g.clone())).input_shapes();
+        let graph = Arc::new(g);
+        match precision {
+            Precision::F32 => {
+                let device = presets::tms320c6678();
+                self.register(name, shapes, workers, batcher, move |_w| {
+                    if threads > 1 {
+                        Ok(Engine::par_interp(graph.clone(), &device, threads))
+                    } else {
+                        Ok(Engine::interp(graph.clone()))
+                    }
+                });
+            }
+            Precision::Int8 => {
+                let calib =
+                    CalibTable::synthetic(&graph, &ParamStore::for_graph(&graph), 8, 42);
+                self.register(name, shapes, workers, batcher, move |_w| {
+                    Engine::quant(graph.clone(), &calib, threads.max(1))
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Register from a CLI spec: `name[=zoo][:precision]` — e.g.
+    /// `mobilenet`, `mn=mobilenet:int8`. Omitted zoo defaults to the
+    /// served name; omitted precision defaults to F32.
+    pub fn register_spec(
+        &mut self,
+        spec: &str,
+        threads: usize,
+        workers: usize,
+        batcher: BatcherConfig,
+    ) -> Result<()> {
+        let (head, precision) = match spec.rsplit_once(':') {
+            Some((h, p)) => {
+                (h, Precision::parse(p).ok_or_else(|| anyhow!("bad precision in {spec:?}"))?)
+            }
+            None => (spec, Precision::F32),
+        };
+        let (name, zoo) = match head.split_once('=') {
+            Some((n, z)) => (n, z),
+            None => (head, head),
+        };
+        if name.is_empty() || zoo.is_empty() {
+            bail!("empty model name in spec {spec:?}");
+        }
+        self.register_zoo(name, zoo, precision, threads, workers, batcher)
+    }
+
+    /// Registered model names (sorted).
+    pub fn names(&self) -> Vec<String> {
+        self.entries.keys().cloned().collect()
+    }
+
+    /// Number of registered models.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// True when nothing is registered.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// Front-door tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct IngestConfig {
+    /// Per-model admission bound: the most requests a pool holds anywhere
+    /// between admission and terminal response. Arrivals beyond it shed.
+    pub queue_depth: usize,
+    /// Per-connection read deadline (à la `JobSpec::ctrl_deadline`): a
+    /// connection that sends nothing for this long is closed so dead
+    /// peers can't pin reader threads forever.
+    pub read_timeout: Duration,
+}
+
+impl Default for IngestConfig {
+    fn default() -> Self {
+        IngestConfig { queue_depth: 64, read_timeout: Duration::from_secs(30) }
+    }
+}
+
+/// Front-door accounting. The admission invariant:
+/// `completed + shed + expired + engine_errors == submitted`.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct IngestStats {
+    /// Well-formed requests that reached admission (admitted or shed).
+    pub submitted: u64,
+    /// Requests answered with outputs.
+    pub completed: u64,
+    /// Requests answered [`ingest::RESP_BUSY`] at a full (or draining) pool.
+    pub shed: u64,
+    /// Admitted requests whose deadline passed before execution.
+    pub expired: u64,
+    /// Admitted requests whose engine batch failed.
+    pub engine_errors: u64,
+    /// Protocol-level rejections (unknown model, bad shapes) — answered
+    /// with a typed error and a closed connection; never admitted.
+    pub rejected: u64,
+    /// Requests that actually entered an engine (`infer_batch`).
+    pub executed: u64,
+    /// Connections accepted over the server's lifetime.
+    pub connections: u64,
+}
+
+#[derive(Default)]
+struct StatsCells {
+    submitted: AtomicU64,
+    completed: AtomicU64,
+    shed: AtomicU64,
+    expired: AtomicU64,
+    engine_errors: AtomicU64,
+    rejected: AtomicU64,
+    executed: AtomicU64,
+    connections: AtomicU64,
+}
+
+/// One admitted request: decoded inputs plus the reply socket, carried
+/// through the pool's batcher to a worker.
+struct IngestJob {
+    id: u64,
+    inputs: Vec<Tensor>,
+    deadline: Option<Instant>,
+    submitted: Instant,
+    conn: ConnHandle,
+}
+
+/// Shared write half of a connection. Terminal frames lock it for the
+/// whole `write_frame`, so replies from different threads never
+/// interleave mid-frame.
+type ConnHandle = Arc<Mutex<TcpStream>>;
+
+struct PoolShared {
+    name: String,
+    shapes: Vec<Shape>,
+    /// Admission gate: `None` once draining — no further sends possible.
+    /// Senders are used only under this lock, so taking it is a barrier.
+    tx: Mutex<Option<Sender<IngestJob>>>,
+    /// Requests in the system (admission → terminal).
+    depth: AtomicUsize,
+    cap: usize,
+    max_batch: usize,
+    /// EWMA of one batch's engine seconds (f64 bits) — the retry-after
+    /// hint's time base.
+    ewma_batch_s: AtomicU64,
+}
+
+impl PoolShared {
+    /// Try to take an admission slot; false means shed.
+    fn acquire(&self) -> bool {
+        self.depth
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |d| {
+                (d < self.cap).then_some(d + 1)
+            })
+            .is_ok()
+    }
+
+    /// Release a slot at terminal response.
+    fn release(&self) {
+        let d = self.depth.fetch_sub(1, Ordering::Relaxed);
+        metrics::gauge_set("serve.ingest.queue_depth", (d.saturating_sub(1)) as f64);
+    }
+
+    /// Milliseconds until a slot plausibly frees: the smoothed batch time
+    /// times the number of batches queued ahead, clamped to [1, 1000].
+    fn retry_after_ms(&self) -> u32 {
+        let ewma = f64::from_bits(self.ewma_batch_s.load(Ordering::Relaxed)).max(0.001);
+        let batches_ahead = (self.depth.load(Ordering::Relaxed) / self.max_batch + 1) as f64;
+        (ewma * batches_ahead * 1e3).clamp(1.0, 1000.0) as u32
+    }
+
+    fn observe_batch_s(&self, s: f64) {
+        let prev = f64::from_bits(self.ewma_batch_s.load(Ordering::Relaxed));
+        let next = if prev == 0.0 { s } else { 0.8 * prev + 0.2 * s };
+        self.ewma_batch_s.store(next.to_bits(), Ordering::Relaxed);
+    }
+}
+
+struct ServerShared {
+    draining: AtomicBool,
+    stats: StatsCells,
+    pools: BTreeMap<String, Arc<PoolShared>>,
+    read_timeout: Duration,
+}
+
+/// The running front door. Dropping it drains.
+pub struct IngestServer {
+    addr: SocketAddr,
+    shared: Arc<ServerShared>,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    drained: bool,
+}
+
+impl IngestServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port), build
+    /// every pool's engines, and start accepting. Fails — with all
+    /// already-started threads cleanly joined — if binding fails or any
+    /// engine factory errors.
+    pub fn start(addr: &str, registry: ModelRegistry, cfg: IngestConfig) -> Result<IngestServer> {
+        assert!(cfg.queue_depth >= 1, "queue_depth must be >= 1");
+        if registry.is_empty() {
+            bail!("refusing to serve an empty model registry");
+        }
+        let listener = TcpListener::bind(addr).with_context(|| format!("bind {addr}"))?;
+        let local = listener.local_addr().context("local_addr")?;
+
+        let mut pools = BTreeMap::new();
+        let mut workers: Vec<JoinHandle<()>> = Vec::new();
+        let (ready_tx, ready_rx) = mpsc::channel::<Result<(), String>>();
+        let mut expected_ready = 0usize;
+
+        struct PoolBuild {
+            shared: Arc<PoolShared>,
+            rx: Arc<Mutex<Receiver<IngestJob>>>,
+            entry: ModelEntry,
+        }
+        let mut builds: Vec<PoolBuild> = Vec::new();
+        for (name, entry) in registry.entries {
+            let (tx, rx) = mpsc::channel::<IngestJob>();
+            let shared = Arc::new(PoolShared {
+                name: name.clone(),
+                shapes: entry.shapes.clone(),
+                tx: Mutex::new(Some(tx)),
+                depth: AtomicUsize::new(0),
+                cap: cfg.queue_depth,
+                max_batch: entry.batcher.max_batch,
+                ewma_batch_s: AtomicU64::new(0),
+            });
+            pools.insert(name, shared.clone());
+            builds.push(PoolBuild { shared, rx: Arc::new(Mutex::new(rx)), entry });
+        }
+
+        let shared = Arc::new(ServerShared {
+            draining: AtomicBool::new(false),
+            stats: StatsCells::default(),
+            pools,
+            read_timeout: cfg.read_timeout,
+        });
+
+        for build in builds {
+            for w in 0..build.entry.workers {
+                expected_ready += 1;
+                let pool = build.shared.clone();
+                let rx = build.rx.clone();
+                let factory = build.entry.factory.clone();
+                let batcher_cfg = build.entry.batcher;
+                let srv = shared.clone();
+                let ready = ready_tx.clone();
+                workers.push(std::thread::spawn(move || {
+                    let engine = match factory(w) {
+                        Ok(e) => {
+                            let _ = ready.send(Ok(()));
+                            e
+                        }
+                        Err(e) => {
+                            let _ = ready
+                                .send(Err(format!("pool {}: worker {w}: {e:#}", pool.name)));
+                            return;
+                        }
+                    };
+                    run_worker(&pool, &rx, &batcher_cfg, &engine, &srv);
+                }));
+            }
+        }
+        drop(ready_tx);
+
+        let mut failures = Vec::new();
+        for _ in 0..expected_ready {
+            match ready_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(msg)) => failures.push(msg),
+                Err(_) => failures.push("worker died before reporting readiness".into()),
+            }
+        }
+        if !failures.is_empty() {
+            // Close the queues so healthy workers exit, then join.
+            for pool in shared.pools.values() {
+                pool.tx.lock().unwrap_or_else(|p| p.into_inner()).take();
+            }
+            for h in workers {
+                let _ = h.join();
+            }
+            bail!("engine startup failed: {}", failures.join("; "));
+        }
+
+        let accept_shared = shared.clone();
+        let accept = std::thread::spawn(move || {
+            // The listener lives (and dies) with this thread: once drain
+            // joins it, the port is closed and new connects are refused.
+            for conn in listener.incoming() {
+                if accept_shared.draining.load(Ordering::Acquire) {
+                    break;
+                }
+                match conn {
+                    Ok(stream) => {
+                        accept_shared.stats.connections.fetch_add(1, Ordering::Relaxed);
+                        let srv = accept_shared.clone();
+                        std::thread::spawn(move || run_connection(stream, &srv));
+                    }
+                    Err(e) => {
+                        crate::xwarn!("ingest accept failed: {e}");
+                    }
+                }
+            }
+        });
+
+        crate::xinfo!(
+            "ingest: serving {} model(s) on {local} (queue depth {})",
+            shared.pools.len(),
+            cfg.queue_depth
+        );
+        Ok(IngestServer { addr: local, shared, accept: Some(accept), workers, drained: false })
+    }
+
+    /// The bound address (resolves `:0` to the real port).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Snapshot the accounting counters.
+    pub fn stats(&self) -> IngestStats {
+        let s = &self.shared.stats;
+        IngestStats {
+            submitted: s.submitted.load(Ordering::Relaxed),
+            completed: s.completed.load(Ordering::Relaxed),
+            shed: s.shed.load(Ordering::Relaxed),
+            expired: s.expired.load(Ordering::Relaxed),
+            engine_errors: s.engine_errors.load(Ordering::Relaxed),
+            rejected: s.rejected.load(Ordering::Relaxed),
+            executed: s.executed.load(Ordering::Relaxed),
+            connections: s.connections.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Graceful shutdown: refuse new connections, answer everything
+    /// already admitted (outputs, expiry, or engine error — never
+    /// silence), join every pool thread, and return the final stats.
+    pub fn drain(&mut self) -> IngestStats {
+        if !self.drained {
+            self.drained = true;
+            self.shared.draining.store(true, Ordering::Release);
+            // Wake the blocking accept so it observes the flag; the
+            // connection itself is dropped unserved.
+            let _ = TcpStream::connect(self.addr);
+            if let Some(h) = self.accept.take() {
+                let _ = h.join();
+            }
+            // Closing the queues lets workers drain what's left and exit.
+            for pool in self.shared.pools.values() {
+                pool.tx.lock().unwrap_or_else(|p| p.into_inner()).take();
+            }
+            for h in self.workers.drain(..) {
+                let _ = h.join();
+            }
+        }
+        self.stats()
+    }
+}
+
+impl Drop for IngestServer {
+    fn drop(&mut self) {
+        self.drain();
+    }
+}
+
+/// Send one terminal frame on a connection; write failures are logged
+/// and swallowed (the client is gone — accounting already happened).
+fn send_terminal(conn: &ConnHandle, tag: u64, payload: &[u8]) {
+    let mut stream = conn.lock().unwrap_or_else(|p| p.into_inner());
+    if let Err(e) = write_frame(&mut *stream, tag, payload) {
+        crate::xdebug!("ingest: reply write failed: {e}");
+    }
+}
+
+/// Per-connection reader: decode pipelined requests, route, admit or
+/// shed. Returns (closing the connection) on read errors, unknown tags,
+/// undecodable payloads, unknown models, or shape mismatches — protocol
+/// errors kill only the offending connection.
+fn run_connection(stream: TcpStream, srv: &Arc<ServerShared>) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(srv.read_timeout));
+    let mut read_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(e) => {
+            crate::xwarn!("ingest: clone failed: {e}");
+            return;
+        }
+    };
+    let conn: ConnHandle = Arc::new(Mutex::new(stream));
+
+    loop {
+        let (tag, payload) = match read_frame(&mut read_half) {
+            Ok(f) => f,
+            Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return,
+            Err(e) => {
+                crate::xdebug!("ingest: read failed, closing connection: {e}");
+                return;
+            }
+        };
+        if tag != ingest::REQ_INFER {
+            crate::xwarn!("ingest: unknown tag {tag:#x}, closing connection");
+            return;
+        }
+        let req = match ingest::decode_request(&payload) {
+            Ok(r) => r,
+            Err(e) => {
+                srv.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                send_terminal(
+                    &conn,
+                    ingest::RESP_ERROR,
+                    &ingest::encode_error(0, ErrorCode::BadRequest, &format!("{e:#}")),
+                );
+                return;
+            }
+        };
+        let arrival = Instant::now();
+
+        let Some(pool) = srv.pools.get(&req.model) else {
+            srv.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            send_terminal(
+                &conn,
+                ingest::RESP_ERROR,
+                &ingest::encode_error(
+                    req.id,
+                    ErrorCode::UnknownModel,
+                    &format!("no such model: {}", req.model),
+                ),
+            );
+            return;
+        };
+        let got: Vec<&Shape> = req.inputs.iter().map(|t| t.shape()).collect();
+        if got.len() != pool.shapes.len() || got.iter().zip(&pool.shapes).any(|(a, b)| **a != *b)
+        {
+            srv.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            send_terminal(
+                &conn,
+                ingest::RESP_ERROR,
+                &ingest::encode_error(
+                    req.id,
+                    ErrorCode::BadRequest,
+                    &format!(
+                        "input shapes {:?} do not match model {} ({:?})",
+                        got, pool.name, pool.shapes
+                    ),
+                ),
+            );
+            return;
+        }
+
+        // Well-formed and routed: from here the request is `submitted`
+        // and gets exactly one terminal — admit or shed.
+        let req_id = req.id;
+        srv.stats.submitted.fetch_add(1, Ordering::Relaxed);
+        let shed = |pool: &PoolShared| {
+            srv.stats.shed.fetch_add(1, Ordering::Relaxed);
+            metrics::counter_add("serve.ingest.shed", 1);
+            send_terminal(
+                &conn,
+                ingest::RESP_BUSY,
+                &ingest::encode_busy(req_id, pool.retry_after_ms()),
+            );
+        };
+        if srv.draining.load(Ordering::Acquire) || !pool.acquire() {
+            shed(pool.as_ref());
+            continue;
+        }
+        metrics::counter_add("serve.ingest.accepted", 1);
+        metrics::gauge_set(
+            "serve.ingest.queue_depth",
+            pool.depth.load(Ordering::Relaxed) as f64,
+        );
+        let deadline = (req.deadline_ms > 0)
+            .then(|| arrival + Duration::from_millis(req.deadline_ms as u64));
+        let job = IngestJob {
+            id: req.id,
+            inputs: req.inputs,
+            deadline,
+            submitted: arrival,
+            conn: conn.clone(),
+        };
+        // Send under the gate lock: after drain takes the sender, nothing
+        // can enqueue, so workers never miss an admitted job.
+        let sent = {
+            let gate = pool.tx.lock().unwrap_or_else(|p| p.into_inner());
+            match gate.as_ref() {
+                Some(tx) => tx.send(job).is_ok(),
+                None => false,
+            }
+        };
+        if !sent {
+            // Raced the drain: give the slot back and shed instead.
+            pool.release();
+            shed(pool.as_ref());
+        }
+    }
+}
+
+/// Pool worker: batch admitted jobs off the shared queue, drop expired
+/// ones with a typed error, run the rest as one engine batch, and answer
+/// every job with exactly one terminal frame.
+fn run_worker(
+    pool: &PoolShared,
+    rx: &Arc<Mutex<Receiver<IngestJob>>>,
+    batcher_cfg: &BatcherConfig,
+    engine: &Engine,
+    srv: &Arc<ServerShared>,
+) {
+    let batcher = Batcher::new(*batcher_cfg);
+    loop {
+        // Hold the queue lock only while forming the batch; inference
+        // runs unlocked so other workers batch concurrently.
+        let batch = {
+            let guard = rx.lock().unwrap_or_else(|p| p.into_inner());
+            match batcher.next_batch(&guard) {
+                Some(b) => b,
+                None => return,
+            }
+        };
+        let now = Instant::now();
+        let mut live: Vec<IngestJob> = Vec::with_capacity(batch.requests.len());
+        for job in batch.requests {
+            if job.deadline.is_some_and(|d| now >= d) {
+                srv.stats.expired.fetch_add(1, Ordering::Relaxed);
+                metrics::counter_add("serve.ingest.expired", 1);
+                send_terminal(
+                    &job.conn,
+                    ingest::RESP_ERROR,
+                    &ingest::encode_error(
+                        job.id,
+                        ErrorCode::Expired,
+                        "deadline passed before execution",
+                    ),
+                );
+                pool.release();
+            } else {
+                live.push(job);
+            }
+        }
+        if live.is_empty() {
+            continue;
+        }
+        srv.stats.executed.fetch_add(live.len() as u64, Ordering::Relaxed);
+        let inputs: Vec<Vec<Tensor>> =
+            live.iter_mut().map(|j| std::mem::take(&mut j.inputs)).collect();
+        match engine.infer_batch(&inputs) {
+            Ok(out) => {
+                pool.observe_batch_s(out.exec_s);
+                let bs = live.len() as u32;
+                for (job, outs) in live.iter().zip(out.outputs) {
+                    let latency = job.submitted.elapsed().as_secs_f64();
+                    metrics::observe("serve.ingest.latency_s", latency);
+                    send_terminal(
+                        &job.conn,
+                        ingest::RESP_OUTPUT,
+                        &ingest::encode_output(job.id, bs, &outs),
+                    );
+                    srv.stats.completed.fetch_add(1, Ordering::Relaxed);
+                    pool.release();
+                }
+            }
+            Err(e) => {
+                crate::xerror!("ingest: pool {}: batch failed: {e:#}", pool.name);
+                for job in &live {
+                    send_terminal(
+                        &job.conn,
+                        ingest::RESP_ERROR,
+                        &ingest::encode_error(job.id, ErrorCode::Engine, &format!("{e:#}")),
+                    );
+                    srv.stats.engine_errors.fetch_add(1, Ordering::Relaxed);
+                    pool.release();
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_specs_parse() {
+        let mut r = ModelRegistry::new();
+        r.register_spec("mobilenet", 1, 1, BatcherConfig::default()).unwrap();
+        r.register_spec("mn8=mobilenet:int8", 1, 1, BatcherConfig::default()).unwrap();
+        r.register_spec("sq=squeezenet", 1, 1, BatcherConfig::default()).unwrap();
+        assert_eq!(r.names(), vec!["mn8".to_string(), "mobilenet".into(), "sq".into()]);
+        assert_eq!(r.len(), 3);
+        assert!(!r.is_empty());
+    }
+
+    #[test]
+    fn bad_specs_rejected() {
+        let mut r = ModelRegistry::new();
+        assert!(r.register_spec("nope", 1, 1, BatcherConfig::default()).is_err());
+        assert!(r.register_spec("x=mobilenet:float64", 1, 1, BatcherConfig::default()).is_err());
+        assert!(r.register_spec("=mobilenet", 1, 1, BatcherConfig::default()).is_err());
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn retry_hint_scales_with_depth() {
+        let pool = PoolShared {
+            name: "t".into(),
+            shapes: Vec::new(),
+            tx: Mutex::new(None),
+            depth: AtomicUsize::new(0),
+            cap: 4,
+            max_batch: 2,
+            ewma_batch_s: AtomicU64::new(0.010f64.to_bits()),
+        };
+        let idle = pool.retry_after_ms();
+        pool.depth.store(4, Ordering::Relaxed);
+        let loaded = pool.retry_after_ms();
+        assert!(idle >= 1);
+        assert!(loaded > idle, "hint must grow with backlog: {idle} vs {loaded}");
+        assert!(loaded <= 1000);
+    }
+
+    #[test]
+    fn empty_registry_refused() {
+        let err = IngestServer::start("127.0.0.1:0", ModelRegistry::new(), IngestConfig::default())
+            .unwrap_err();
+        assert!(err.to_string().contains("empty model registry"));
+    }
+
+    #[test]
+    fn failing_factory_fails_start() {
+        let mut r = ModelRegistry::new();
+        r.register(
+            "broken",
+            Vec::new(),
+            2,
+            BatcherConfig::default(),
+            |_w| anyhow::bail!("no such artifact"),
+        );
+        let err =
+            IngestServer::start("127.0.0.1:0", r, IngestConfig::default()).unwrap_err();
+        assert!(err.to_string().contains("engine startup failed"), "{err}");
+    }
+}

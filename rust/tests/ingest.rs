@@ -1,0 +1,523 @@
+//! Acceptance suite for the serving front door: overload accounting,
+//! deadline expiry, graceful drain, multi-model routing, and the
+//! malformed-frame negative paths. Everything runs over real loopback
+//! sockets against an in-process [`IngestServer`].
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use xenos::graph::{GraphBuilder, Shape};
+use xenos::ops::params::ParamStore;
+use xenos::quant::CalibTable;
+use xenos::runtime::Engine;
+use xenos::serve::client::{synthetic_request_inputs, IngestClient, Terminal};
+use xenos::serve::ingest::{self, ErrorCode, InferRequest};
+use xenos::serve::server::{IngestConfig, IngestServer, ModelRegistry};
+use xenos::serve::BatcherConfig;
+
+/// Fast graph: one small conv + head, ~a millisecond per inference.
+fn tiny_model() -> Arc<xenos::Graph> {
+    let mut b = GraphBuilder::new("ingest_tiny");
+    let x = b.input("x", Shape::nchw(1, 3, 16, 16));
+    let c1 = b.conv_bn_relu("c1", x, 8, 3, 2, 1);
+    let gp = b.global_pool("gp", c1);
+    let fc = b.fc("fc", gp, 4);
+    let sm = b.softmax("sm", fc);
+    b.output(sm);
+    Arc::new(b.finish())
+}
+
+/// Deliberately heavy graph (~tens of milliseconds per inference): stacked
+/// wide convolutions, used to pin an engine busy while tests race it.
+fn slow_model() -> Arc<xenos::Graph> {
+    let mut b = GraphBuilder::new("ingest_slow");
+    let x = b.input("x", Shape::nchw(1, 8, 32, 32));
+    let c1 = b.conv_bn_relu("c1", x, 64, 3, 1, 1);
+    let c2 = b.conv_bn_relu("c2", c1, 64, 3, 1, 1);
+    let c3 = b.conv_bn_relu("c3", c2, 64, 3, 1, 1);
+    let gp = b.global_pool("gp", c3);
+    let fc = b.fc("fc", gp, 4);
+    b.output(fc);
+    Arc::new(b.finish())
+}
+
+fn input_shapes(g: &xenos::Graph) -> Vec<Shape> {
+    g.input_ids().iter().map(|&i| g.node(i).out.shape.clone()).collect()
+}
+
+fn interp_registry(
+    name: &str,
+    g: &Arc<xenos::Graph>,
+    workers: usize,
+    batcher: BatcherConfig,
+) -> ModelRegistry {
+    let mut r = ModelRegistry::new();
+    let graph = g.clone();
+    r.register(name, input_shapes(g), workers, batcher, move |_w| {
+        Ok(Engine::interp(graph.clone()))
+    });
+    r
+}
+
+fn addr_of(server: &IngestServer) -> String {
+    server.local_addr().to_string()
+}
+
+/// Poll the stats until `pred` holds or the timeout trips.
+fn wait_for(server: &IngestServer, pred: impl Fn(&xenos::serve::IngestStats) -> bool) {
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        if pred(&server.stats()) {
+            return;
+        }
+        assert!(Instant::now() < deadline, "stats predicate never held: {:?}", server.stats());
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// The archetype headline: saturate a queue of 4 with 12 pipelined
+/// requests on one connection while the batch window holds every admitted
+/// slot. Deterministically: exactly 4 outputs, exactly 8 busies, every id
+/// answered exactly once — none dropped, none doubled.
+#[test]
+fn overload_sheds_deterministically_with_exact_accounting() {
+    let g = tiny_model();
+    let shapes = input_shapes(&g);
+    // max_wait far above the client's send time: the first batch cannot
+    // close (and release admission slots) until all 12 admission
+    // decisions are made, so exactly queue_depth requests are admitted.
+    let batcher = BatcherConfig { max_batch: 8, max_wait: Duration::from_millis(400) };
+    let mut server = IngestServer::start(
+        "127.0.0.1:0",
+        interp_registry("m", &g, 1, batcher),
+        IngestConfig { queue_depth: 4, read_timeout: Duration::from_secs(10) },
+    )
+    .expect("start");
+
+    let mut client =
+        IngestClient::connect(&addr_of(&server), Some(Duration::from_secs(10))).expect("connect");
+    let n = 12u64;
+    for id in 0..n {
+        let req = InferRequest {
+            id,
+            model: "m".into(),
+            deadline_ms: 0,
+            inputs: synthetic_request_inputs(&shapes, 7, id),
+        };
+        client.send(&req).expect("send");
+    }
+
+    let mut seen = vec![0u32; n as usize];
+    let (mut outputs, mut busies) = (0, 0);
+    for _ in 0..n {
+        match client.recv().expect("terminal") {
+            Terminal::Output { id, batch_size, outputs: outs } => {
+                outputs += 1;
+                seen[id as usize] += 1;
+                assert_eq!(batch_size, 4, "all admitted requests share one batch");
+                assert!(!outs.is_empty());
+            }
+            Terminal::Busy { id, retry_after_ms } => {
+                busies += 1;
+                seen[id as usize] += 1;
+                assert!((1..=1000).contains(&retry_after_ms), "hint {retry_after_ms}");
+            }
+            other => panic!("unexpected terminal {other:?}"),
+        }
+    }
+    assert_eq!(outputs, 4, "queue depth admits exactly 4");
+    assert_eq!(busies, 8, "the rest shed");
+    assert!(seen.iter().all(|&c| c == 1), "every id exactly one terminal: {seen:?}");
+    // The admitted ids are the first 4 — admission is in arrival order on
+    // one connection.
+    let stats = server.drain();
+    assert_eq!(stats.submitted, 12);
+    assert_eq!(stats.completed, 4);
+    assert_eq!(stats.shed, 8);
+    assert_eq!(stats.expired, 0);
+    assert_eq!(
+        stats.completed + stats.shed + stats.expired + stats.engine_errors,
+        stats.submitted,
+        "admission invariant"
+    );
+}
+
+/// Sustained 2× overload through the load driver: 8 closed-loop lanes
+/// against queue depth 4. Every request gets a terminal within the read
+/// deadline (no lane errors), and the server's books balance.
+#[test]
+fn sustained_overload_accounting_balances() {
+    let g = tiny_model();
+    let shapes = input_shapes(&g);
+    let batcher = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) };
+    let mut server = IngestServer::start(
+        "127.0.0.1:0",
+        interp_registry("m", &g, 1, batcher),
+        IngestConfig { queue_depth: 4, read_timeout: Duration::from_secs(10) },
+    )
+    .expect("start");
+
+    let n = 64usize;
+    let report = xenos::serve::client::drive_load(
+        &addr_of(&server),
+        "m",
+        &shapes,
+        n,
+        8,
+        0,
+        Duration::from_secs(10),
+        21,
+    )
+    .expect("drive");
+    assert_eq!(report.submitted, n as u64);
+    assert_eq!(report.errors, 0, "every terminal arrived within the read deadline");
+    assert_eq!(
+        report.completed + report.shed + report.expired,
+        n as u64,
+        "client-side accounting: {report:?}"
+    );
+    assert!(report.completed >= 1);
+
+    let stats = server.drain();
+    assert_eq!(stats.submitted, n as u64);
+    assert_eq!(
+        stats.completed + stats.shed + stats.expired + stats.engine_errors,
+        stats.submitted,
+        "server-side accounting: {stats:?}"
+    );
+    assert_eq!(stats.completed, report.completed);
+    assert_eq!(stats.shed, report.shed);
+}
+
+/// Requests whose deadline passes while an engine is busy are dropped
+/// with a typed error and never reach the engine.
+#[test]
+fn expired_requests_never_reach_an_engine() {
+    let g = slow_model();
+    let shapes = input_shapes(&g);
+    let batcher = BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) };
+    let mut server = IngestServer::start(
+        "127.0.0.1:0",
+        interp_registry("m", &g, 1, batcher),
+        IngestConfig { queue_depth: 8, read_timeout: Duration::from_secs(10) },
+    )
+    .expect("start");
+    let addr = addr_of(&server);
+
+    // Pin the single worker on a no-deadline blocker.
+    let mut blocker =
+        IngestClient::connect(&addr, Some(Duration::from_secs(30))).expect("connect");
+    blocker
+        .send(&InferRequest {
+            id: 100,
+            model: "m".into(),
+            deadline_ms: 0,
+            inputs: synthetic_request_inputs(&shapes, 3, 100),
+        })
+        .expect("send blocker");
+    wait_for(&server, |s| s.executed == 1);
+
+    // While it runs, submit 4 requests that expire after 1 ms.
+    let mut hasty =
+        IngestClient::connect(&addr, Some(Duration::from_secs(30))).expect("connect");
+    for id in 1..=4u64 {
+        hasty
+            .send(&InferRequest {
+                id,
+                model: "m".into(),
+                deadline_ms: 1,
+                inputs: synthetic_request_inputs(&shapes, 3, id),
+            })
+            .expect("send");
+    }
+    for _ in 0..4 {
+        match hasty.recv().expect("terminal") {
+            Terminal::Error { code: ErrorCode::Expired, .. } => {}
+            other => panic!("expected expiry, got {other:?}"),
+        }
+    }
+    match blocker.recv().expect("blocker terminal") {
+        Terminal::Output { id: 100, .. } => {}
+        other => panic!("expected blocker output, got {other:?}"),
+    }
+
+    let stats = server.drain();
+    assert_eq!(stats.submitted, 5);
+    assert_eq!(stats.completed, 1);
+    assert_eq!(stats.expired, 4);
+    assert_eq!(stats.executed, 1, "expired work must not reach the engine");
+}
+
+/// Graceful drain: in-flight work completes and is answered; new
+/// connections are refused once drain returns.
+#[test]
+fn drain_completes_in_flight_and_refuses_new_connects() {
+    let g = slow_model();
+    let shapes = input_shapes(&g);
+    let batcher = BatcherConfig { max_batch: 1, max_wait: Duration::from_millis(1) };
+    let mut server = IngestServer::start(
+        "127.0.0.1:0",
+        interp_registry("m", &g, 1, batcher),
+        IngestConfig { queue_depth: 4, read_timeout: Duration::from_secs(10) },
+    )
+    .expect("start");
+    let addr = addr_of(&server);
+
+    let mut client =
+        IngestClient::connect(&addr, Some(Duration::from_secs(30))).expect("connect");
+    client
+        .send(&InferRequest {
+            id: 7,
+            model: "m".into(),
+            deadline_ms: 0,
+            inputs: synthetic_request_inputs(&shapes, 5, 7),
+        })
+        .expect("send");
+    wait_for(&server, |s| s.executed == 1);
+
+    let stats = server.drain();
+    assert_eq!(stats.completed, 1, "drain answers in-flight work: {stats:?}");
+
+    // The response was written during drain; it is still readable.
+    match client.recv().expect("terminal after drain") {
+        Terminal::Output { id: 7, .. } => {}
+        other => panic!("expected output, got {other:?}"),
+    }
+
+    // The listener is gone: new connections are refused.
+    let err = IngestClient::connect(&addr, Some(Duration::from_secs(1)));
+    assert!(err.is_err(), "post-drain connect must fail");
+}
+
+/// Two models, one listener: interleaved requests route to the right
+/// pools and return outputs bit-identical to direct `Engine::infer` runs
+/// — F32 interpreter and INT8 quantized engine side by side.
+#[test]
+fn multi_model_routing_matches_direct_inference_at_both_precisions() {
+    let ga = tiny_model();
+    let gb = slow_model();
+    let calib = CalibTable::synthetic(&gb, &ParamStore::for_graph(&gb), 4, 9);
+
+    let mut registry = ModelRegistry::new();
+    let batcher = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(2) };
+    {
+        let g = ga.clone();
+        registry.register("alpha", input_shapes(&ga), 1, batcher, move |_w| {
+            Ok(Engine::interp(g.clone()))
+        });
+    }
+    {
+        let g = gb.clone();
+        let c = calib.clone();
+        registry
+            .register("beta", input_shapes(&gb), 1, batcher, move |_w| Engine::quant(g.clone(), &c, 1));
+    }
+    let mut server = IngestServer::start(
+        "127.0.0.1:0",
+        registry,
+        IngestConfig { queue_depth: 32, read_timeout: Duration::from_secs(10) },
+    )
+    .expect("start");
+
+    let ref_a = Engine::interp(ga.clone());
+    let ref_b = Engine::quant(gb.clone(), &calib, 1).expect("quant engine");
+    let shapes_a = input_shapes(&ga);
+    let shapes_b = input_shapes(&gb);
+
+    let mut client =
+        IngestClient::connect(&addr_of(&server), Some(Duration::from_secs(30))).expect("connect");
+    let n = 10u64;
+    let mut expected: Vec<Vec<Vec<f32>>> = Vec::new();
+    for id in 0..n {
+        let (model, shapes, engine): (&str, &[Shape], &Engine) = if id % 2 == 0 {
+            ("alpha", &shapes_a, &ref_a)
+        } else {
+            ("beta", &shapes_b, &ref_b)
+        };
+        let inputs = synthetic_request_inputs(shapes, 13, id);
+        let direct = engine.infer(&inputs).expect("direct infer");
+        expected.push(direct.outputs.iter().map(|t| t.data.clone()).collect());
+        client
+            .send(&InferRequest { id, model: model.into(), deadline_ms: 0, inputs })
+            .expect("send");
+    }
+    let mut got: Vec<Option<Vec<Vec<f32>>>> = vec![None; n as usize];
+    for _ in 0..n {
+        match client.recv().expect("terminal") {
+            Terminal::Output { id, outputs, .. } => {
+                assert!(got[id as usize].is_none(), "double terminal for {id}");
+                got[id as usize] = Some(outputs.iter().map(|t| t.data.clone()).collect());
+            }
+            other => panic!("unexpected terminal {other:?}"),
+        }
+    }
+    for (id, (want, have)) in expected.iter().zip(&got).enumerate() {
+        let have = have.as_ref().expect("terminal for every id");
+        assert_eq!(want, have, "request {id}: served output must be bit-identical");
+    }
+    server.drain();
+}
+
+fn raw_header(tag: u64, len: u32) -> Vec<u8> {
+    let mut h = Vec::with_capacity(12);
+    h.extend_from_slice(&tag.to_le_bytes());
+    h.extend_from_slice(&len.to_le_bytes());
+    h
+}
+
+/// Read until EOF/reset — proof the server closed this connection.
+fn assert_closed(stream: &mut TcpStream) {
+    stream
+        .set_read_timeout(Some(Duration::from_secs(10)))
+        .expect("set_read_timeout");
+    let mut buf = [0u8; 64];
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => return,
+            Ok(_) => continue, // drain any queued reply bytes
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::ConnectionReset | std::io::ErrorKind::BrokenPipe
+                ) =>
+            {
+                return
+            }
+            Err(e) => panic!("expected server-side close, got {e}"),
+        }
+    }
+}
+
+/// A request that proves the server still serves fresh connections.
+fn assert_alive(addr: &str, shapes: &[Shape]) {
+    let mut client = IngestClient::connect(addr, Some(Duration::from_secs(10))).expect("connect");
+    let req = InferRequest {
+        id: 999,
+        model: "m".into(),
+        deadline_ms: 0,
+        inputs: synthetic_request_inputs(shapes, 1, 999),
+    };
+    match client.infer(&req).expect("terminal") {
+        Terminal::Output { id: 999, .. } => {}
+        other => panic!("expected output, got {other:?}"),
+    }
+}
+
+/// Malformed frames kill only the offending connection: oversized length
+/// prefix, truncated frame, unknown model, undecodable payload, unknown
+/// tag — after each, a fresh connection still gets served.
+#[test]
+fn malformed_frames_kill_only_their_connection() {
+    let g = tiny_model();
+    let shapes = input_shapes(&g);
+    let batcher = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) };
+    let mut server = IngestServer::start(
+        "127.0.0.1:0",
+        interp_registry("m", &g, 1, batcher),
+        IngestConfig { queue_depth: 8, read_timeout: Duration::from_secs(2) },
+    )
+    .expect("start");
+    let addr = addr_of(&server);
+
+    // Oversized length prefix: rejected before allocation, connection dies.
+    {
+        let mut s = TcpStream::connect(&addr).expect("connect");
+        s.write_all(&raw_header(ingest::REQ_INFER, 600 << 20)).expect("write");
+        assert_closed(&mut s);
+        assert_alive(&addr, &shapes);
+    }
+
+    // Truncated frame: header promises 100 bytes, 10 arrive, then EOF.
+    {
+        let mut s = TcpStream::connect(&addr).expect("connect");
+        s.write_all(&raw_header(ingest::REQ_INFER, 100)).expect("write");
+        s.write_all(&[0u8; 10]).expect("write");
+        s.shutdown(Shutdown::Write).expect("shutdown");
+        assert_closed(&mut s);
+        assert_alive(&addr, &shapes);
+    }
+
+    // Undecodable payload: valid frame, garbage body → typed BadRequest,
+    // then the connection closes.
+    {
+        let mut s = TcpStream::connect(&addr).expect("connect");
+        s.write_all(&raw_header(ingest::REQ_INFER, 3)).expect("write");
+        s.write_all(&[1, 2, 3]).expect("write");
+        let mut head = [0u8; 12];
+        s.read_exact(&mut head).expect("reply header");
+        let tag = u64::from_le_bytes(head[..8].try_into().unwrap());
+        let len = u32::from_le_bytes(head[8..].try_into().unwrap()) as usize;
+        let mut payload = vec![0u8; len];
+        s.read_exact(&mut payload).expect("reply payload");
+        assert_eq!(tag, ingest::RESP_ERROR);
+        let (_, code, _) = ingest::decode_error(&payload).expect("decode");
+        assert_eq!(code, ErrorCode::BadRequest);
+        assert_closed(&mut s);
+        assert_alive(&addr, &shapes);
+    }
+
+    // Unknown model: typed error, connection closes.
+    {
+        let mut client =
+            IngestClient::connect(&addr, Some(Duration::from_secs(10))).expect("connect");
+        let req = InferRequest {
+            id: 5,
+            model: "no-such-model".into(),
+            deadline_ms: 0,
+            inputs: synthetic_request_inputs(&shapes, 1, 5),
+        };
+        match client.infer(&req).expect("terminal") {
+            Terminal::Error { id: 5, code: ErrorCode::UnknownModel, .. } => {}
+            other => panic!("expected unknown-model error, got {other:?}"),
+        }
+        assert_alive(&addr, &shapes);
+    }
+
+    // Unknown tag: dropped connection, no reply.
+    {
+        let mut s = TcpStream::connect(&addr).expect("connect");
+        s.write_all(&raw_header(0xBAD0_0001, 0)).expect("write");
+        assert_closed(&mut s);
+        assert_alive(&addr, &shapes);
+    }
+
+    let stats = server.drain();
+    assert!(stats.rejected >= 2, "bad payload + unknown model counted: {stats:?}");
+    assert_eq!(
+        stats.completed + stats.shed + stats.expired + stats.engine_errors,
+        stats.submitted,
+        "protocol errors never skew the admission books: {stats:?}"
+    );
+}
+
+/// Wrong input shapes are a typed BadRequest, not an engine crash.
+#[test]
+fn mismatched_shapes_rejected_before_admission() {
+    let g = tiny_model();
+    let batcher = BatcherConfig { max_batch: 4, max_wait: Duration::from_millis(1) };
+    let mut server = IngestServer::start(
+        "127.0.0.1:0",
+        interp_registry("m", &g, 1, batcher),
+        IngestConfig { queue_depth: 8, read_timeout: Duration::from_secs(5) },
+    )
+    .expect("start");
+
+    let bad_shapes = vec![Shape::nchw(1, 1, 4, 4)];
+    let mut client =
+        IngestClient::connect(&addr_of(&server), Some(Duration::from_secs(10))).expect("connect");
+    let req = InferRequest {
+        id: 1,
+        model: "m".into(),
+        deadline_ms: 0,
+        inputs: synthetic_request_inputs(&bad_shapes, 1, 1),
+    };
+    match client.infer(&req).expect("terminal") {
+        Terminal::Error { id: 1, code: ErrorCode::BadRequest, .. } => {}
+        other => panic!("expected bad-request, got {other:?}"),
+    }
+    let stats = server.drain();
+    assert_eq!(stats.rejected, 1);
+    assert_eq!(stats.submitted, 0, "rejected requests never reach admission");
+}

@@ -220,6 +220,89 @@ fn slice_concat_roundtrip_random() {
 }
 
 #[test]
+fn ingest_requests_round_trip_for_arbitrary_payloads() {
+    use xenos::ops::Tensor;
+    use xenos::serve::ingest::{decode_request, encode_request, InferRequest};
+
+    // Arbitrary well-formed requests: random id/model/deadline plus 0-3
+    // tensors of rank 1, 2, or 4 (rank-4 reconstructs as a feature map on
+    // decode, so generate it as one).
+    let gen = FnGen(|rng: &mut Rng| {
+        let id = rng.next_u64();
+        let model: String = (0..rng.usize_range(0, 12))
+            .map(|_| (b'a' + (rng.usize_below(26) as u8)) as char)
+            .collect();
+        let deadline_ms = rng.next_u64() as u32;
+        let tensors: Vec<Tensor> = (0..rng.usize_below(4))
+            .map(|_| match rng.usize_below(3) {
+                0 => {
+                    let n = rng.usize_range(1, 16);
+                    Tensor::new(
+                        xenos::graph::TensorDesc::plain(Shape::new(vec![n])),
+                        rng.vec_uniform(n),
+                    )
+                }
+                1 => {
+                    let r = rng.usize_range(1, 5);
+                    let c = rng.usize_range(1, 5);
+                    Tensor::mat(r, c, rng.vec_uniform(r * c))
+                }
+                _ => {
+                    let c = rng.usize_range(1, 4);
+                    let h = rng.usize_range(1, 6);
+                    let w = rng.usize_range(1, 6);
+                    Tensor::fm(1, c, h, w, rng.vec_uniform(c * h * w))
+                }
+            })
+            .collect();
+        InferRequest { id, model, deadline_ms, inputs: tensors }
+    });
+    forall(49, 200, &gen, |req| {
+        let back = decode_request(&encode_request(&req)).expect("round trip");
+        assert_eq!(back, req);
+    });
+}
+
+#[test]
+fn ingest_decoders_never_panic_on_junk() {
+    use xenos::ops::Tensor;
+    use xenos::serve::ingest::{
+        decode_busy, decode_error, decode_output, decode_request, encode_request, InferRequest,
+    };
+
+    // Arbitrary byte junk, plus truncated/bit-flipped valid payloads —
+    // the decoders must return a typed error (or a valid decode), never
+    // panic and never allocate from a hostile length claim.
+    let gen = FnGen(|rng: &mut Rng| {
+        let junk: Vec<u8> = (0..rng.usize_range(0, 96)).map(|_| rng.next_u64() as u8).collect();
+        let cut = rng.usize_below(64);
+        let flip_at = rng.usize_below(64);
+        let flip_bit = rng.usize_below(8) as u8;
+        (junk, cut, flip_at, flip_bit)
+    });
+    let valid = encode_request(&InferRequest {
+        id: 5,
+        model: "m".into(),
+        deadline_ms: 10,
+        inputs: vec![Tensor::fm(1, 2, 3, 3, (0..18).map(|v| v as f32).collect())],
+    });
+    forall(50, 400, &gen, |(junk, cut, flip_at, flip_bit)| {
+        let _ = decode_request(&junk);
+        let _ = decode_output(&junk);
+        let _ = decode_error(&junk);
+        let _ = decode_busy(&junk);
+
+        let truncated = &valid[..cut.min(valid.len())];
+        let _ = decode_request(truncated);
+
+        let mut flipped = valid.clone();
+        let at = flip_at % flipped.len();
+        flipped[at] ^= 1 << flip_bit;
+        let _ = decode_request(&flipped);
+    });
+}
+
+#[test]
 fn linking_preserves_semantics_on_random_chains() {
     use xenos::ops::Interpreter;
     // Random 3-5 layer conv/pool/activation chains.

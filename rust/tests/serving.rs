@@ -150,6 +150,33 @@ fn pipeline_inference_dominates() {
 }
 
 #[test]
+fn idle_tie_breaks_rotate_across_workers() {
+    // At low load every dispatch sees all outstanding counts at zero; a
+    // fixed lowest-rank tie-break would route every batch to worker 0 and
+    // permanently starve the rest. The rotating tie-break must spread
+    // batches across the whole pool even when nobody is ever loaded.
+    let g = small_model();
+    let report = Coordinator::new(ServeConfig {
+        workers: 3,
+        batcher: BatcherConfig { max_batch: 1, max_wait: std::time::Duration::from_micros(50) },
+        ..Default::default()
+    })
+    .run(
+        {
+            let g = g.clone();
+            move |_| Ok(Engine::interp(g.clone()))
+        },
+        serve::coordinator::synthetic_requests(vec![Shape::nchw(1, 3, 16, 16)], 24, 200.0, 8),
+    )
+    .expect("serve");
+    assert_eq!(report.served, 24);
+    assert_eq!(report.per_worker.iter().sum::<usize>(), 24);
+    for (w, &n) in report.per_worker.iter().enumerate() {
+        assert!(n >= 2, "worker {w} starved at low load: per_worker={:?}", report.per_worker);
+    }
+}
+
+#[test]
 fn single_worker_preserves_fifo() {
     let g = small_model();
     let report = Coordinator::new(ServeConfig {
